@@ -1,0 +1,82 @@
+//! Fig. 3c: `syevd` float64 — JAXMg vs `jnp.linalg.eigh`.
+//!
+//! Measured small-N section + analytic paper-scale section. Key paper
+//! observation asserted: tile size has **negligible** impact on syevd
+//! (the reduction is bandwidth-bound and unblocked), and syevd's
+//! workspace wall is the lowest of the three routines.
+
+use jaxmg::coordinator::{ExecMode, JaxMg, Mesh};
+use jaxmg::costmodel::Predictor;
+use jaxmg::prelude::*;
+use jaxmg::scalar::DType;
+use std::time::Instant;
+
+fn main() {
+    println!("== Fig. 3c: syevd float64, 8 devices ==\n");
+    println!("-- measured (simulator executes; diag(1..N): λᵢ = i+1 exactly) --");
+    println!("{:>6} {:>5} {:>12} {:>12} {:>12}", "N", "T_A", "wall[ms]", "proj[ms]", "max|λ err|");
+    for &n in &[64usize, 128, 192] {
+        for &t in &[8usize, 16, 32] {
+            if n % t != 0 {
+                continue;
+            }
+            let node = SimNode::new_uniform(8, 1 << 30);
+            let ctx = JaxMg::builder()
+                .mesh(Mesh::new_1d(node, "x"))
+                .tile_size(t)
+                .exec_mode(ExecMode::Spmd)
+                .build()
+                .unwrap();
+            let a = Matrix::<f64>::spd_diag(n);
+            ctx.reset_accounting();
+            let t0 = Instant::now();
+            let (vals, _) = ctx.syevd(&a).unwrap();
+            let wall = t0.elapsed().as_secs_f64() * 1e3;
+            let err = (0..n).map(|i| (vals[i] - (i + 1) as f64).abs()).fold(0.0, f64::max);
+            println!(
+                "{n:>6} {t:>5} {wall:>12.2} {:>12.3} {err:>12.3e}",
+                ctx.projected_time() * 1e3
+            );
+        }
+    }
+
+    println!("\n-- paper scale (analytic, 8×H200, float64) --");
+    let p = Predictor::h200(8, DType::F64);
+    let tiles = [64usize, 128, 256, 512];
+    let vram = 143usize * 1000 * 1000 * 1000;
+    let single_wall = p.single_capacity("syevd", vram);
+    let dist_wall = p.dist_capacity("syevd", vram, 8, 512);
+    print!("{:>9}", "N");
+    for t in tiles {
+        print!("  jaxmg T={t:<5}");
+    }
+    println!("  {:>12}", "single[s]");
+    let mut n = 2048usize;
+    while n <= 131072 {
+        print!("{n:>9}");
+        for t in tiles {
+            if n > dist_wall {
+                print!("  {:>12}", "OOM");
+            } else {
+                print!("  {:>12.3}", p.syevd(n, t, 8));
+            }
+        }
+        if n > single_wall {
+            println!("  {:>12}", "OOM");
+        } else {
+            println!("  {:>12.3}", p.single_syevd(n));
+        }
+        n *= 2;
+    }
+    println!("\ncapacity walls: single-GPU N≈{single_wall}, jaxmg N≈{dist_wall}");
+
+    // Shape assertions.
+    let flat = p.syevd(65536, 64, 8) / p.syevd(65536, 512, 8);
+    assert!(
+        (flat - 1.0).abs() < 0.05,
+        "syevd must be nearly tile-size independent (got ratio {flat:.3})"
+    );
+    let dist_potrs = Predictor::h200(8, DType::F64).dist_capacity("potrs", vram, 8, 512);
+    assert!(dist_wall < dist_potrs, "syevd workspace must cut reach below potrs");
+    println!("shape checks: T_A flatness ✓  workspace wall ✓");
+}

@@ -1,0 +1,87 @@
+//! Runtime-layer micro-bench: per-call overhead of the AOT path.
+//!
+//! Measures the PJRT execute round-trip for each tile kernel (load is
+//! cached; the steady-state cost is literal creation + execute +
+//! readback) against the native backend's pure-Rust compute, at the
+//! artifact tile sizes. This is the ratio the §Perf optimization pass
+//! tracks: it determines the tile size at which the AOT path amortizes.
+//!
+//! Requires `make artifacts`.
+
+use jaxmg::linalg::Matrix;
+use jaxmg::runtime::{PjRtRuntime, XlaKernels};
+use jaxmg::solver::{NativeKernels, TileKernels};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn bench<F: FnMut()>(mut f: F, reps: usize) -> f64 {
+    // Warm-up then median of `reps`.
+    f();
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[reps / 2]
+}
+
+fn main() {
+    if !std::path::Path::new("artifacts/.stamp").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let rt = Arc::new(PjRtRuntime::new("artifacts").unwrap());
+    println!("== runtime overhead: AOT XLA kernels vs native (f64) ==\n");
+    println!(
+        "{:>6} {:>12} {:>14} {:>14} {:>8}",
+        "T", "op", "native[µs]", "xla-aot[µs]", "ratio"
+    );
+    for &t in &[8usize, 32, 64] {
+        let xk = match XlaKernels::<f64>::new(rt.clone(), t) {
+            Ok(k) => k,
+            Err(_) => continue, // tile size not lowered
+        };
+        let nk = NativeKernels;
+        let a = Matrix::<f64>::spd_random(t, 1);
+        let c0 = Matrix::<f64>::random(t, t, 2);
+        let b0 = Matrix::<f64>::random(t, t, 3);
+
+        let nat_potf2 = bench(|| { TileKernels::<f64>::potf2(&nk, &a).unwrap(); }, 20);
+        let xla_potf2 = bench(|| { TileKernels::<f64>::potf2(&xk, &a).unwrap(); }, 20);
+        println!(
+            "{t:>6} {:>12} {:>14.1} {:>14.1} {:>8.2}",
+            "potf2",
+            nat_potf2 * 1e6,
+            xla_potf2 * 1e6,
+            xla_potf2 / nat_potf2
+        );
+
+        let nat_gemm = bench(
+            || {
+                let mut c = c0.clone();
+                nk.gemm_nn(&mut c, &b0, &b0, -1.0).unwrap();
+            },
+            20,
+        );
+        let xla_gemm = bench(
+            || {
+                let mut c = c0.clone();
+                xk.gemm_nn(&mut c, &b0, &b0, -1.0).unwrap();
+            },
+            20,
+        );
+        println!(
+            "{t:>6} {:>12} {:>14.1} {:>14.1} {:>8.2}",
+            "gemm_nn",
+            nat_gemm * 1e6,
+            xla_gemm * 1e6,
+            xla_gemm / nat_gemm
+        );
+    }
+    println!(
+        "\nexecutables cached: {} (compile-once is what keeps the AOT path viable)",
+        rt.cached()
+    );
+}

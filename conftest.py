@@ -1,0 +1,8 @@
+"""Repo-root pytest config: make `compile.*` importable when tests are
+invoked as `pytest python/tests/` from the repository root (the Makefile
+invokes them from `python/`; both must work)."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent / "python"))

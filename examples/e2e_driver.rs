@@ -1,0 +1,162 @@
+//! End-to-end driver: the full system on a real workload, all layers.
+//!
+//! Proves the stack composes: Pallas/JAX-authored AOT artifacts loaded
+//! through PJRT (L1/L2), executed by the Rust coordinator (L3) over the
+//! simulated 8-GPU node — SPMD *and* MPMD pointer reconciliation, §2.1
+//! redistribution, all three routines, on the paper's benchmark matrix
+//! `A = diag(1..N)`. Reports, per configuration:
+//!
+//!   * correctness residual (exact solution known),
+//!   * measured simulator wall-clock,
+//!   * projected H200 wall-clock (the cost model),
+//!   * peer-traffic volume,
+//!
+//! then the headline table: largest solvable N, single GPU vs JAXMg
+//! (the paper's §3 claim: N = 524288 potrs float32, >1 TB aggregate).
+//!
+//! Results are recorded in EXPERIMENTS.md.
+//!
+//! Run: `make e2e`  (or `cargo run --release --example e2e_driver`)
+
+use jaxmg::coordinator::{BackendKind, ExecMode, JaxMg, Mesh};
+use jaxmg::costmodel::Predictor;
+use jaxmg::linalg::FrobNorm;
+use jaxmg::prelude::*;
+use jaxmg::scalar::DType;
+use std::time::Instant;
+
+fn ctx(ndev: usize, tile: usize, mode: ExecMode, backend: BackendKind) -> Result<JaxMg> {
+    let node = SimNode::new_uniform(ndev, 1 << 30);
+    JaxMg::builder()
+        .mesh(Mesh::new_1d(node, "x"))
+        .tile_size(tile)
+        .exec_mode(mode)
+        .backend(backend)
+        .build()
+}
+
+fn main() -> Result<()> {
+    let have_artifacts = std::path::Path::new("artifacts/.stamp").exists();
+    let backends: &[(BackendKind, &str)] = if have_artifacts {
+        &[(BackendKind::Native, "native"), (BackendKind::Xla, "xla-aot")]
+    } else {
+        eprintln!("note: artifacts/ missing — run `make artifacts` to exercise the AOT path");
+        &[(BackendKind::Native, "native")]
+    };
+
+    println!("== jaxmg end-to-end driver: 8 simulated GPUs, A = diag(1..N), b = 1 ==\n");
+
+    // ---- potrs over an N sweep, both backends, both exec modes -------
+    println!(
+        "{:<8} {:<8} {:<6} {:>6} {:>12} {:>14} {:>12} {:>10}",
+        "backend", "mode", "T_A", "N", "resid", "wall[s]", "proj[ms]", "peer MiB"
+    );
+    for &(bk, bk_name) in backends {
+        for (mode, mode_name) in [(ExecMode::Spmd, "spmd"), (ExecMode::Mpmd, "mpmd")] {
+            // The XLA path stages every tile through PJRT; keep its N
+            // bounded so the driver stays snappy.
+            let sweep: &[usize] = if bk_name == "xla-aot" { &[64, 128] } else { &[64, 256, 512] };
+            for &n in sweep {
+                let tile = if bk_name == "xla-aot" { 8 } else { 32 };
+                let c = ctx(8, tile, mode, bk)?;
+                let a = Matrix::<f32>::spd_diag(n);
+                let b = Matrix::<f32>::ones(n, 1);
+                c.reset_accounting();
+                let t0 = Instant::now();
+                let x = c.potrs(&a, &b)?;
+                let wall = t0.elapsed().as_secs_f64();
+                // Exact solution known: x_i = 1/(i+1).
+                let mut err = 0.0f64;
+                for i in 0..n {
+                    err = err.max((x[(i, 0)] as f64 - 1.0 / (i + 1) as f64).abs());
+                }
+                let m = c.metrics();
+                println!(
+                    "{:<8} {:<8} {:<6} {:>6} {:>12.3e} {:>14.3} {:>12.3} {:>10.2}",
+                    bk_name,
+                    mode_name,
+                    tile,
+                    n,
+                    err,
+                    wall,
+                    c.projected_time() * 1e3,
+                    m.peer_bytes as f64 / (1 << 20) as f64
+                );
+            }
+        }
+    }
+
+    // ---- potri + syevd spot checks (paper dtypes) ---------------------
+    println!("\n-- potri complex128 / syevd float64 (native backend, spmd) --");
+    {
+        let c = ctx(8, 16, ExecMode::Spmd, BackendKind::Native)?;
+        let n = 192;
+        let a = Matrix::<c64>::spd_diag(n);
+        c.reset_accounting();
+        let t0 = Instant::now();
+        let inv = c.potri(&a)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let resid = a.matmul(&inv).rel_err(&Matrix::eye(n));
+        println!(
+            "potri  c128 N={n}: resid={resid:.3e} wall={wall:.3}s proj={:.3}ms",
+            c.projected_time() * 1e3
+        );
+    }
+    {
+        let c = ctx(8, 16, ExecMode::Spmd, BackendKind::Native)?;
+        let n = 192;
+        let a = Matrix::<f64>::spd_diag(n);
+        c.reset_accounting();
+        let t0 = Instant::now();
+        let (vals, _) = c.syevd(&a)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let mut err = 0.0f64;
+        for i in 0..n {
+            err = err.max((vals[i] - (i + 1) as f64).abs());
+        }
+        println!(
+            "syevd  f64  N={n}: max|λᵢ−i|={err:.3e} wall={wall:.3}s proj={:.3}ms",
+            c.projected_time() * 1e3
+        );
+    }
+
+    // ---- headline: capacity table at paper scale ----------------------
+    println!("\n== headline: largest solvable N (8 × 143 GB H200, T_A=1024) ==");
+    let vram = 143usize * 1000 * 1000 * 1000;
+    println!("{:<8} {:>12} {:>12} {:>12} {:>8}", "routine", "dtype", "single-GPU", "jaxmg", "gain");
+    for (routine, dt) in [
+        ("potrs", DType::F32),
+        ("potri", DType::C128),
+        ("syevd", DType::F64),
+    ] {
+        let p = Predictor::h200(8, dt);
+        let single = p.single_capacity(routine, vram);
+        let dist = p.dist_capacity(routine, vram, 8, 1024);
+        println!(
+            "{:<8} {:>12} {:>12} {:>12} {:>7.1}x",
+            routine,
+            dt.name(),
+            single,
+            dist,
+            dist as f64 / single as f64
+        );
+    }
+    println!("\npaper §3: potrs float32 reaches N = 524288 (>1 TB) — see EXPERIMENTS.md");
+
+    // ---- headline: the Fig. 3a crossover at paper scale ---------------
+    println!("\n== projected Fig. 3a crossover (potrs f32, T_A=1024) ==");
+    let p = Predictor::h200(8, DType::F32);
+    println!("{:>9} {:>12} {:>12} {:>9}", "N", "jaxmg[s]", "single[s]", "winner");
+    let mut n = 4096usize;
+    while n <= 262144 {
+        let mg = p.potrs(n, 1024, 8, 1);
+        let dn = p.single_potrs(n, 1);
+        println!(
+            "{n:>9} {mg:>12.4} {dn:>12.4} {:>9}",
+            if mg < dn { "jaxmg" } else { "single" }
+        );
+        n *= 4;
+    }
+    println!("\nend-to-end driver complete.");
+    Ok(())
+}

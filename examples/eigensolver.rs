@@ -1,0 +1,104 @@
+//! Domain example: spectrum of a quantum spin chain.
+//!
+//! The paper comes out of the Center for Computational Quantum Physics
+//! and motivates JAXMg with exactly this workload: dense Hermitian
+//! eigenproblems that outgrow one GPU. We build the Hamiltonian of a
+//! transverse-field Ising chain (small enough to simulate, same code
+//! path as the large case) and diagonalize it with the distributed
+//! `syevd`, checking the ground-state energy against the exact
+//! free-fermion solution.
+//!
+//! Run: `cargo run --release --example eigensolver`
+
+use jaxmg::prelude::*;
+
+/// Dense H for the open transverse-field Ising chain:
+///   H = −J Σ σᶻᵢσᶻᵢ₊₁ − h Σ σˣᵢ  on `l` sites (dimension 2^l).
+fn tfim_hamiltonian(l: usize, j: f64, h: f64) -> Matrix<f64> {
+    let dim = 1usize << l;
+    let mut ham = Matrix::<f64>::zeros(dim, dim);
+    for s in 0..dim {
+        // σᶻσᶻ bonds: diagonal.
+        let mut diag = 0.0;
+        for i in 0..l - 1 {
+            let zi = if (s >> i) & 1 == 1 { 1.0 } else { -1.0 };
+            let zj = if (s >> (i + 1)) & 1 == 1 { 1.0 } else { -1.0 };
+            diag -= j * zi * zj;
+        }
+        ham[(s, s)] = diag;
+        // σˣ flips: off-diagonal.
+        for i in 0..l {
+            let t = s ^ (1 << i);
+            ham[(t, s)] -= h;
+        }
+    }
+    ham
+}
+
+/// Exact ground-state energy of the open TFIM via free fermions
+/// (Jordan–Wigner; single-particle modes of the tridiagonal form).
+fn exact_ground_energy(l: usize, j: f64, h: f64) -> f64 {
+    // Single-particle Hamiltonian (2l × 2l BdG), solved with our own
+    // host eigensolver — the library eats its own dog food.
+    let n = 2 * l;
+    let mut m = Matrix::<f64>::zeros(n, n);
+    // Basis: (c₁..c_l, c†₁..c†_l). A[i][j] = -h δij + J/2 couplings.
+    for i in 0..l {
+        m[(i, i)] = -h;
+        m[(l + i, l + i)] = h;
+    }
+    for i in 0..l - 1 {
+        // hopping + pairing, symmetrized.
+        m[(i, i + 1)] -= j / 2.0;
+        m[(i + 1, i)] -= j / 2.0;
+        m[(l + i, l + i + 1)] += j / 2.0;
+        m[(l + i + 1, l + i)] += j / 2.0;
+        m[(i, l + i + 1)] += j / 2.0;
+        m[(l + i + 1, i)] += j / 2.0;
+        m[(i + 1, l + i)] -= j / 2.0;
+        m[(l + i, i + 1)] -= j / 2.0;
+    }
+    let eig = jaxmg::linalg::syevd_host(&m).expect("BdG eigensolve");
+    // Ground state fills all negative modes: E0 = Σ_{ε<0} ε / ... each
+    // mode appears ±ε; ground energy is sum of the negative ones.
+    eig.values.iter().filter(|&&e| e < 0.0).sum::<f64>() / 1.0
+}
+
+fn main() -> Result<()> {
+    let l = 8; // 8 spins → 256×256 dense Hamiltonian
+    let (j, h) = (1.0, 0.75);
+
+    let node = SimNode::new_uniform(4, 1 << 30);
+    let ctx = JaxMg::builder().mesh(Mesh::new_1d(node, "x")).tile_size(32).build()?;
+
+    println!("TFIM chain: L={l}, J={j}, h={h}  (dense dim {})", 1 << l);
+    let ham = tfim_hamiltonian(l, j, h);
+
+    let t0 = std::time::Instant::now();
+    let (vals, vecs) = ctx.syevd(&ham)?;
+    println!("distributed syevd: {:.2} s wall (simulator)", t0.elapsed().as_secs_f64());
+
+    let e0 = vals[0];
+    let exact = exact_ground_energy(l, j, h);
+    println!("ground-state energy: {e0:.8}");
+    println!("free-fermion exact : {exact:.8}");
+    assert!((e0 - exact).abs() < 1e-6, "ground energy mismatch");
+
+    // Energy gap and eigenvector sanity.
+    println!("first excited gap  : {:.8}", vals[1] - vals[0]);
+    let dim = 1 << l;
+    let gs = vecs.submatrix(0, 0, dim, 1);
+    let hgs = ham.matmul(&gs);
+    let mut resid = 0.0f64;
+    for i in 0..dim {
+        resid += (hgs[(i, 0)] - e0 * gs[(i, 0)]).powi(2);
+    }
+    println!("‖H|0⟩ − E0|0⟩‖     : {:.3e}", resid.sqrt());
+
+    println!(
+        "\nprojected H200 time {:.3} ms over {} devices",
+        ctx.projected_time() * 1e3,
+        ctx.mesh().num_devices()
+    );
+    Ok(())
+}

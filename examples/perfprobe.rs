@@ -1,0 +1,40 @@
+//! §Perf micro-probe: native GEMM throughput (the FLOP carrier of the
+//! native backend) and the end-to-end potrs wall-clock used as the
+//! before/after anchor in EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo run --release --example perfprobe`
+
+use jaxmg::coordinator::{ExecMode, JaxMg, Mesh};
+use jaxmg::device::SimNode;
+use jaxmg::linalg::{dense_gemm_acc, Matrix};
+use std::time::Instant;
+
+fn main() {
+    // Native GEMM throughput.
+    for n in [128usize, 256, 512] {
+        let a = Matrix::<f64>::random(n, n, 1);
+        let b = Matrix::<f64>::random(n, n, 2);
+        let mut c = Matrix::<f64>::zeros(n, n);
+        let reps = 3;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            dense_gemm_acc(&mut c, &a, &b, 1.0);
+        }
+        let dt = t0.elapsed().as_secs_f64() / reps as f64;
+        println!("gemm n={n}: {:.1} ms, {:.2} GFLOP/s", dt * 1e3, 2.0 * (n as f64).powi(3) / dt / 1e9);
+    }
+
+    // End-to-end potrs anchor.
+    let node = SimNode::new_uniform(8, 1 << 30);
+    let ctx = JaxMg::builder()
+        .mesh(Mesh::new_1d(node, "x"))
+        .tile_size(64)
+        .exec_mode(ExecMode::Spmd)
+        .build()
+        .unwrap();
+    let a = Matrix::<f64>::spd_diag(512);
+    let b = Matrix::<f64>::ones(512, 1);
+    let t0 = Instant::now();
+    ctx.potrs(&a, &b).unwrap();
+    println!("potrs n=512 T=64 8dev: {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+}

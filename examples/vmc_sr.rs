@@ -1,0 +1,123 @@
+//! Domain example: stochastic reconfiguration (natural gradient) for
+//! variational Monte Carlo — the NetKet-style workload the paper's
+//! §1 cites as a driver for multi-GPU linear solves.
+//!
+//! Each optimization step solves the SR linear system
+//!
+//!     (S + λI) δ = g,     S = ⟨O†O⟩ − ⟨O†⟩⟨O⟩
+//!
+//! where `S` is a dense Hermitian PSD quantum geometric tensor over the
+//! variational parameters. The factor-once/solve-many handle maps onto
+//! `JaxMg::factorize`, and the solve runs distributed while the rest of
+//! the toy VMC loop stays ordinary Rust — the composability story.
+//!
+//! Run: `cargo run --release --example vmc_sr`
+
+use jaxmg::prelude::*;
+use jaxmg::rng::Rng;
+
+/// Toy model: mean-field wavefunction ψ_θ(σ) = Π tanh-parameterized
+/// single-site amplitudes over `n_sites` spins; `n_params = n_sites`.
+struct ToyVmc {
+    theta: Vec<f64>,
+    rng: Rng,
+}
+
+impl ToyVmc {
+    fn new(n: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let theta = (0..n).map(|_| 0.2 * rng.next_signed()).collect();
+        ToyVmc { theta, rng }
+    }
+
+    /// Draw `m` spin configurations and their log-derivative rows
+    /// O_k(σ) = ∂ log ψ / ∂θ_k, plus local energies for a toy
+    /// ferromagnetic Ising energy.
+    fn sample(&mut self, m: usize) -> (Matrix<f64>, Vec<f64>) {
+        let n = self.theta.len();
+        let mut o = Matrix::<f64>::zeros(m, n);
+        let mut e_loc = vec![0.0; m];
+        for s in 0..m {
+            let mut energy = 0.0;
+            let mut prev = 1.0f64;
+            for k in 0..n {
+                let p = 0.5 * (1.0 + self.theta[k].tanh());
+                let spin = if self.rng.next_f64() < p { 1.0 } else { -1.0 };
+                // O_k = ∂ log ψ: for this parameterization, spin·sech²-ish.
+                let th = self.theta[k].tanh();
+                o[(s, k)] = spin * (1.0 - th * th) / (1.0 + spin * th).max(1e-9);
+                if k > 0 {
+                    energy -= prev * spin;
+                }
+                prev = spin;
+            }
+            e_loc[s] = energy;
+        }
+        (o, e_loc)
+    }
+}
+
+fn main() -> Result<()> {
+    let n_params = 96;
+    let n_samples = 512;
+    let lambda = 1e-3;
+    let lr = 0.05;
+    let steps = 10;
+
+    let node = SimNode::new_uniform(4, 1 << 30);
+    let ctx = JaxMg::builder().mesh(Mesh::new_1d(node, "x")).tile_size(16).build()?;
+
+    let mut vmc = ToyVmc::new(n_params, 7);
+    println!("VMC + stochastic reconfiguration: {n_params} params, {n_samples} samples/step");
+
+    let mut last_energy = f64::INFINITY;
+    for step in 0..steps {
+        let (o, e_loc) = vmc.sample(n_samples);
+        let e_mean = e_loc.iter().sum::<f64>() / n_samples as f64;
+
+        // Centered log-derivatives and force vector g = ⟨O† ΔE⟩.
+        let mut o_mean = vec![0.0; n_params];
+        for k in 0..n_params {
+            o_mean[k] = (0..n_samples).map(|s| o[(s, k)]).sum::<f64>() / n_samples as f64;
+        }
+        let mut oc = Matrix::<f64>::zeros(n_samples, n_params);
+        for s in 0..n_samples {
+            for k in 0..n_params {
+                oc[(s, k)] = o[(s, k)] - o_mean[k];
+            }
+        }
+        let mut g = Matrix::<f64>::zeros(n_params, 1);
+        for k in 0..n_params {
+            g[(k, 0)] = (0..n_samples)
+                .map(|s| oc[(s, k)] * (e_loc[s] - e_mean))
+                .sum::<f64>()
+                / n_samples as f64;
+        }
+
+        // S = OᵀO/m + λI — dense Hermitian PSD, the distributed part.
+        let mut s_mat = oc.adjoint().matmul(&oc).scale(1.0 / n_samples as f64);
+        for k in 0..n_params {
+            s_mat[(k, k)] += lambda;
+        }
+
+        // Factor once; the same factor could serve multiple solves
+        // (e.g. several observables) — the composability the paper sells.
+        let factor = ctx.factorize(&s_mat)?;
+        let delta = factor.solve(&g)?;
+
+        for k in 0..n_params {
+            vmc.theta[k] -= lr * delta[(k, 0)];
+        }
+        println!("  step {step:2}: ⟨E⟩ = {e_mean:8.4}   ‖δ‖ = {:.3e}", delta.norm_fro());
+        last_energy = e_mean;
+    }
+
+    println!(
+        "\nfinal ⟨E⟩ = {last_energy:.4} — SR loop ran {} distributed solves \
+         ({} tile kernels, projected H200 time {:.2} ms)",
+        steps,
+        ctx.metrics().kernel_launches,
+        ctx.projected_time() * 1e3
+    );
+    Ok(())
+}

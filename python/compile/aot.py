@@ -1,0 +1,94 @@
+"""AOT compile path: lower every tile op × dtype × tile size to HLO text.
+
+Run once by `make artifacts`; the Rust coordinator loads the emitted
+`artifacts/<op>_<dtype>_<T>.hlo.txt` files through the PJRT C API and
+Python never appears on the solve path again.
+
+HLO *text* (not `.serialize()`) is the interchange format: jax ≥ 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out ../artifacts [--tiles 8,32,64]
+"""
+
+import argparse
+import pathlib
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def specs_for(sig: str, dtype, t: int, complex_planes: bool):
+    """Build the ShapeDtypeStruct argument list for an op signature."""
+    tile = jax.ShapeDtypeStruct((t, t), dtype)
+    scalar = jax.ShapeDtypeStruct((), dtype)
+    n_tiles = {"A": 1, "AB": 2, "CABa": 3}[sig]
+    per_tile = 2 if complex_planes else 1
+    args = [tile] * (n_tiles * per_tile)
+    if sig == "CABa":
+        args += [scalar] * per_tile
+    return args
+
+
+def lower_op(name: str, fn, sig: str, dtype, t: int, complex_planes: bool) -> str:
+    args = specs_for(sig, dtype, t, complex_planes)
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--tiles", default="8,32,64", help="comma-separated tile sizes T_A")
+    ap.add_argument("--only", default=None, help="lower only ops containing this substring")
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    tiles = [int(x) for x in args.tiles.split(",") if x]
+
+    jobs = []
+    for t in tiles:
+        for tok, dtype in (("f32", jnp.float32), ("f64", jnp.float64)):
+            for name, (fn, sig) in model.REAL_OPS.items():
+                jobs.append((f"{name}_{tok}_{t}", fn, sig, dtype, t, False))
+            for name, (fn, sig) in model.COMPLEX_OPS.items():
+                jobs.append((f"{name}_{tok}_{t}", fn, sig, dtype, t, True))
+
+    written = skipped = 0
+    for basename, fn, sig, dtype, t, cplx in jobs:
+        if args.only and args.only not in basename:
+            continue
+        path = out / f"{basename}.hlo.txt"
+        if path.exists():
+            skipped += 1
+            continue
+        text = lower_op(basename, fn, sig, dtype, t, cplx)
+        path.write_text(text)
+        written += 1
+        print(f"  lowered {basename}.hlo.txt ({len(text)} chars)")
+
+    # Stamp file lets make skip the whole step when inputs are unchanged.
+    (out / ".stamp").write_text(f"ops={written + skipped}\n")
+    print(f"AOT artifacts: {written} written, {skipped} up to date -> {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,157 @@
+"""Layer-1 Pallas GEMM tile kernels — the FLOP hot spot.
+
+The paper's compute lives in cuSOLVERMg's CUDA GEMM/SYRK kernels. The
+TPU-shaped restatement (DESIGN.md §Hardware-Adaptation): tiles sized for
+VMEM, a `BlockSpec` grid expressing the HBM↔VMEM schedule that CUDA
+expressed with threadblocks, and `jnp.dot` inner ops that map onto the
+MXU systolic array. Three variants cover every contraction the solvers
+need (`nn`, `nh`, `hn`), each with a split-plane complex twin (the
+Rust↔XLA boundary carries complex data as separate re/im arrays).
+
+Kernels run with ``interpret=True``: the CPU PJRT client cannot execute
+Mosaic custom-calls; real-TPU efficiency is *estimated* from the VMEM
+footprint in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned sub-block edge. Tiles of size T are driven by a
+# (T/B) × (T/B) grid; T < B degrades to a single block.
+BLOCK = 128
+
+
+def _grid_and_block(t: int):
+    b = min(t, BLOCK)
+    assert t % b == 0, f"tile size {t} must be a multiple of the block {b}"
+    return (t // b, t // b), b
+
+
+def _gemm_kernel(c_ref, a_ref, b_ref, alpha_ref, o_ref, *, trans):
+    """One (bm × bn) output block: o = c + alpha * contract(a, b).
+
+    `trans` selects the contraction: 'nn' a@b, 'nh' a@b^H, 'hn' a^H@b
+    (conjugation is a no-op for real planes; complex goes through the
+    split-plane kernels below).
+    """
+    a = a_ref[...]
+    b = b_ref[...]
+    if trans == "nn":
+        prod = jnp.dot(a, b, preferred_element_type=a.dtype)
+    elif trans == "nh":
+        prod = jnp.dot(a, b.T, preferred_element_type=a.dtype)
+    else:  # "hn"
+        prod = jnp.dot(a.T, b, preferred_element_type=a.dtype)
+    o_ref[...] = c_ref[...] + alpha_ref[0, 0] * prod
+
+
+def _specs(trans, b, t):
+    """BlockSpecs expressing the HBM→VMEM schedule per output block."""
+    c_spec = pl.BlockSpec((b, b), lambda i, j: (i, j))
+    if trans == "nn":
+        a_spec = pl.BlockSpec((b, t), lambda i, j: (i, 0))
+        b_spec = pl.BlockSpec((t, b), lambda i, j: (0, j))
+    elif trans == "nh":
+        a_spec = pl.BlockSpec((b, t), lambda i, j: (i, 0))
+        b_spec = pl.BlockSpec((b, t), lambda i, j: (j, 0))
+    else:  # "hn"
+        a_spec = pl.BlockSpec((t, b), lambda i, j: (0, i))
+        b_spec = pl.BlockSpec((t, b), lambda i, j: (0, j))
+    alpha_spec = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    return [c_spec, a_spec, b_spec, alpha_spec], c_spec
+
+
+def _pallas_gemm(trans, c, a, b, alpha):
+    t = c.shape[0]
+    grid, blk = _grid_and_block(t)
+    in_specs, out_spec = _specs(trans, blk, t)
+    alpha_arr = jnp.asarray(alpha, dtype=c.dtype).reshape(1, 1)
+    kern = functools.partial(_gemm_kernel, trans=trans)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((t, t), c.dtype),
+        interpret=True,
+    )(c, a, b, alpha_arr)
+
+
+def gemm_nn(c, a, b, alpha):
+    """C + alpha * A @ B over T×T real tiles (Pallas)."""
+    return _pallas_gemm("nn", c, a, b, alpha)
+
+
+def gemm_nh(c, a, b, alpha):
+    """C + alpha * A @ B^T over T×T real tiles (Pallas)."""
+    return _pallas_gemm("nh", c, a, b, alpha)
+
+
+def gemm_hn(c, a, b, alpha):
+    """C + alpha * A^T @ B over T×T real tiles (Pallas)."""
+    return _pallas_gemm("hn", c, a, b, alpha)
+
+
+# ---- split-plane complex variants ---------------------------------------
+#
+# One complex GEMM = 4 real GEMMs on the planes. Rather than four
+# pallas_call round trips we fuse the whole complex block step into one
+# kernel: all six planes stream through VMEM once per output block.
+
+
+def _cgemm_kernel(cr_ref, ci_ref, ar_ref, ai_ref, br_ref, bi_ref, alr_ref, ali_ref,
+                  or_ref, oi_ref, *, trans):
+    ar, ai = ar_ref[...], ai_ref[...]
+    br, bi = br_ref[...], bi_ref[...]
+    dot = lambda x, y: jnp.dot(x, y, preferred_element_type=x.dtype)
+    if trans == "nn":
+        pr = dot(ar, br) - dot(ai, bi)
+        pi = dot(ar, bi) + dot(ai, br)
+    elif trans == "nh":  # A @ B^H, B^H = conj(B).T
+        pr = dot(ar, br.T) + dot(ai, bi.T)
+        pi = dot(ai, br.T) - dot(ar, bi.T)
+    else:  # "hn": A^H @ B
+        pr = dot(ar.T, br) + dot(ai.T, bi)
+        pi = dot(ar.T, bi) - dot(ai.T, br)
+    alr = alr_ref[0, 0]
+    ali = ali_ref[0, 0]
+    or_ref[...] = cr_ref[...] + alr * pr - ali * pi
+    oi_ref[...] = ci_ref[...] + alr * pi + ali * pr
+
+
+def _pallas_cgemm(trans, cr, ci, ar, ai, br, bi, alpha_re, alpha_im):
+    t = cr.shape[0]
+    grid, blk = _grid_and_block(t)
+    [c_spec, a_spec, b_spec, al_spec], out_spec = _specs(trans, blk, t)
+    kern = functools.partial(_cgemm_kernel, trans=trans)
+    alr = jnp.asarray(alpha_re, dtype=cr.dtype).reshape(1, 1)
+    ali = jnp.asarray(alpha_im, dtype=cr.dtype).reshape(1, 1)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[c_spec, c_spec, a_spec, a_spec, b_spec, b_spec, al_spec, al_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, t), cr.dtype),
+            jax.ShapeDtypeStruct((t, t), cr.dtype),
+        ],
+        interpret=True,
+    )(cr, ci, ar, ai, br, bi, alr, ali)
+
+
+def cgemm_nn(cr, ci, ar, ai, br, bi, alpha_re, alpha_im):
+    """Split-plane complex C + alpha * A @ B."""
+    return _pallas_cgemm("nn", cr, ci, ar, ai, br, bi, alpha_re, alpha_im)
+
+
+def cgemm_nh(cr, ci, ar, ai, br, bi, alpha_re, alpha_im):
+    """Split-plane complex C + alpha * A @ B^H."""
+    return _pallas_cgemm("nh", cr, ci, ar, ai, br, bi, alpha_re, alpha_im)
+
+
+def cgemm_hn(cr, ci, ar, ai, br, bi, alpha_re, alpha_im):
+    """Split-plane complex C + alpha * A^H @ B."""
+    return _pallas_cgemm("hn", cr, ci, ar, ai, br, bi, alpha_re, alpha_im)

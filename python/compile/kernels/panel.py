@@ -1,0 +1,111 @@
+"""Layer-2 panel operations: tile Cholesky and triangular solves.
+
+These are O(T³) on a single T×T tile — latency-bound bookkeeping next
+to the O(N³) GEMM stream — so they are written as masked `fori_loop`
+jnp code (static shapes, no data-dependent control flow) rather than
+Pallas kernels, and lowered into the same HLO artifacts.
+
+Complex variants take split re/im planes (the Rust boundary carries no
+complex dtypes), recombine internally, and split the result again.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def potf2(a):
+    """Unblocked lower Cholesky of a T×T tile via a masked fori_loop.
+
+    A non-positive pivot produces NaNs in the affected column (sqrt of
+    a negative), which the Rust caller maps to `NotPositiveDefinite`,
+    mirroring cuSOLVER's `info > 0`.
+    """
+    n = a.shape[0]
+    idx = jnp.arange(n)
+
+    def body(k, m):
+        pivot = jnp.sqrt(m[k, k].real).astype(m.dtype)
+        colk = m[:, k]
+        lk = jnp.where(idx == k, pivot, jnp.where(idx > k, colk / pivot, jnp.zeros((), m.dtype)))
+        # Trailing update on rows/cols > k only.
+        mask = (idx[:, None] > k) & (idx[None, :] > k)
+        m = m - jnp.where(mask, jnp.outer(lk, lk.conj()), jnp.zeros((), m.dtype))
+        return m.at[:, k].set(lk)
+
+    l = lax.fori_loop(0, n, body, a)
+    return jnp.tril(l)
+
+
+def trsm_llnn(l, b):
+    """Solve L X = B by masked forward substitution."""
+    n = l.shape[0]
+    idx = jnp.arange(n)
+
+    def body(i, x):
+        li = jnp.where(idx < i, l[i, :], jnp.zeros((), l.dtype))
+        xi = (b[i, :] - li @ x) / l[i, i]
+        return x.at[i, :].set(xi)
+
+    return lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+def trsm_llhn(l, b):
+    """Solve L^H X = B by masked backward substitution."""
+    n = l.shape[0]
+    idx = jnp.arange(n)
+
+    def body(t, x):
+        i = n - 1 - t
+        # (L^H)[i, j] = conj(L[j, i]); only j > i contributes.
+        col = jnp.where(idx > i, l[:, i].conj(), jnp.zeros((), l.dtype))
+        xi = (b[i, :] - col @ x) / l[i, i].conj()
+        return x.at[i, :].set(xi)
+
+    return lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+def trsm_rlhc(b, l):
+    """Solve X L^H = B (right, lower-adjoint) by column substitution."""
+    n = l.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, x):
+        # X[:, j] = (B[:, j] - X[:, <j] @ conj(L[j, <j])) / conj(L[j, j])
+        row = jnp.where(idx < j, l[j, :].conj(), jnp.zeros((), l.dtype))
+        xj = (b[:, j] - x @ row) / l[j, j].conj()
+        return x.at[:, j].set(xj)
+
+    return lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+# ---- split-plane complex wrappers ---------------------------------------
+
+
+def _join(re, im):
+    cdtype = jnp.complex64 if re.dtype == jnp.float32 else jnp.complex128
+    return re.astype(cdtype) + 1j * im.astype(cdtype)
+
+
+def _split(z):
+    return z.real, z.imag
+
+
+def cpotf2(a_re, a_im):
+    """Split-plane Hermitian tile Cholesky."""
+    return _split(potf2(_join(a_re, a_im)))
+
+
+def ctrsm_llnn(l_re, l_im, b_re, b_im):
+    """Split-plane L X = B."""
+    return _split(trsm_llnn(_join(l_re, l_im), _join(b_re, b_im)))
+
+
+def ctrsm_llhn(l_re, l_im, b_re, b_im):
+    """Split-plane L^H X = B."""
+    return _split(trsm_llhn(_join(l_re, l_im), _join(b_re, b_im)))
+
+
+def ctrsm_rlhc(b_re, b_im, l_re, l_im):
+    """Split-plane X L^H = B."""
+    return _split(trsm_rlhc(_join(b_re, b_im), _join(l_re, l_im)))

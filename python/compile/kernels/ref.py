@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every tile kernel.
+
+These are the correctness currency of the Python test suite: the Pallas
+kernels (gemm.py) and the panel ops (panel.py) must match these within
+dtype tolerance, and the Rust native backend is cross-checked against
+the AOT artifacts built from the same functions.
+
+All functions operate on logical (rows, cols) arrays; the Rust side
+packs its column-major tiles row-major so indices line up.
+"""
+
+import jax.numpy as jnp
+
+
+def gemm_nn(c, a, b, alpha):
+    """C + alpha * A @ B."""
+    return c + alpha * (a @ b)
+
+
+def gemm_nh(c, a, b, alpha):
+    """C + alpha * A @ B^H."""
+    return c + alpha * (a @ b.conj().T)
+
+
+def gemm_hn(c, a, b, alpha):
+    """C + alpha * A^H @ B."""
+    return c + alpha * (a.conj().T @ b)
+
+
+def potf2(a):
+    """Unblocked lower Cholesky of a Hermitian PD tile: A = L L^H.
+
+    jnp.linalg.cholesky is deliberately avoided: the oracle must not
+    share code with the implementation under test, so this is the
+    textbook column recurrence in numpy-style indexing.
+    """
+    n = a.shape[0]
+    l = jnp.zeros_like(a)
+    for j in range(n):
+        d = (a[j, j] - (l[j, :j] * l[j, :j].conj()).sum()).real
+        ljj = jnp.sqrt(d)
+        l = l.at[j, j].set(ljj.astype(a.dtype))
+        if j + 1 < n:
+            below = a[j + 1 :, j] - l[j + 1 :, :j] @ l[j, :j].conj()
+            l = l.at[j + 1 :, j].set(below / ljj.astype(a.dtype))
+    return l
+
+
+def trsm_llnn(l, b):
+    """Solve L X = B (left, lower, no transpose)."""
+    n = l.shape[0]
+    x = jnp.zeros_like(b)
+    for i in range(n):
+        xi = (b[i, :] - l[i, :i] @ x[:i, :]) / l[i, i]
+        x = x.at[i, :].set(xi)
+    return x
+
+
+def trsm_llhn(l, b):
+    """Solve L^H X = B (left, lower-adjoint)."""
+    n = l.shape[0]
+    x = jnp.zeros_like(b)
+    for i in reversed(range(n)):
+        xi = (b[i, :] - l[i + 1 :, i].conj() @ x[i + 1 :, :]) / l[i, i].conj()
+        x = x.at[i, :].set(xi)
+    return x
+
+
+def trsm_rlhc(b, l):
+    """Solve X L^H = B (right, lower-adjoint): the potrf panel update."""
+    n = l.shape[0]
+    x = jnp.zeros_like(b)
+    for j in range(n):
+        xj = (b[:, j] - x[:, :j] @ l[j, :j].conj()) / l[j, j].conj()
+        x = x.at[:, j].set(xj)
+    return x

@@ -1,0 +1,125 @@
+"""Layer-2 model: blocked tile algorithms composed from the L1 kernels.
+
+Two roles:
+
+1. Define the jit-able *tile op* entry points that `aot.py` lowers to
+   the per-op HLO artifacts the Rust coordinator executes (the function
+   table below).
+2. Provide `blocked_potrf` / `blocked_potrs` — whole-matrix blocked
+   algorithms composed of the same kernels, demonstrating (and testing)
+   that the L1 pieces assemble into the paper's factorizations inside a
+   single jitted JAX program. These mirror exactly what the Rust
+   coordinator does across devices, but on one array — they are the
+   single-device "model" of the distributed computation.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import gemm, panel
+
+
+def blocked_potrf(a, t):
+    """Blocked right-looking lower Cholesky of a single array, tile size
+    `t` (must divide n). Composes potf2 + trsm_rlhc + Pallas gemm_nh —
+    the same schedule `solver::potrf_dist` runs across devices.
+    """
+    n = a.shape[0]
+    assert n % t == 0, "blocked_potrf requires t | n"
+    l = jnp.zeros_like(a)
+    work = a
+    for k0 in range(0, n, t):
+        k1 = k0 + t
+        lkk = panel.potf2(work[k0:k1, k0:k1])
+        l = l.at[k0:k1, k0:k1].set(lkk)
+        if k1 < n:
+            pan = panel.trsm_rlhc(work[k1:, k0:k1], lkk)
+            l = l.at[k1:, k0:k1].set(pan)
+            # Trailing update tile-by-tile through the Pallas kernel.
+            for j0 in range(k1, n, t):
+                pj_hat = pan[j0 - k1 : j0 - k1 + t, :]
+                for i0 in range(j0, n, t):
+                    pi = pan[i0 - k1 : i0 - k1 + t, :]
+                    blk = gemm.gemm_nh(
+                        work[i0 : i0 + t, j0 : j0 + t], pi, pj_hat,
+                        jnp.asarray(-1.0, a.dtype),
+                    )
+                    work = work.at[i0 : i0 + t, j0 : j0 + t].set(blk)
+    return l
+
+
+def blocked_potrs(l, b, t):
+    """Blocked forward+backward substitution against the blocked factor."""
+    n = l.shape[0]
+    assert n % t == 0
+    y = b
+    for k0 in range(0, n, t):
+        k1 = k0 + t
+        yk = panel.trsm_llnn(l[k0:k1, k0:k1], y[k0:k1, :])
+        y = y.at[k0:k1, :].set(yk)
+        if k1 < n:
+            upd = l[k1:, k0:k1] @ yk
+            y = y.at[k1:, :].add(-upd)
+    x = y
+    for k0 in reversed(range(0, n, t)):
+        k1 = k0 + t
+        xk = x[k0:k1, :]
+        if k1 < n:
+            xk = xk - l[k1:, k0:k1].conj().T @ x[k1:, :]
+        xk = panel.trsm_llhn(l[k0:k1, k0:k1], xk)
+        x = x.at[k0:k1, :].set(xk)
+    return x
+
+
+def blocked_trtri(l, t):
+    """Blocked lower-triangular inverse X = L^-1, tile size `t` | n.
+
+    Column-block forward substitution against identity blocks — the
+    single-array model of `solver::potri_dist` phase 1.
+    """
+    n = l.shape[0]
+    assert n % t == 0
+    x = jnp.zeros_like(l)
+    for k0 in range(0, n, t):
+        k1 = k0 + t
+        # Running RHS tail: rows k0.., identity block on top.
+        tail = jnp.zeros((n - k0, t), l.dtype).at[:t, :].set(jnp.eye(t, dtype=l.dtype))
+        for j0 in range(k0, n, t):
+            j1 = j0 + t
+            z = panel.trsm_llnn(l[j0:j1, j0:j1], tail[j0 - k0 : j1 - k0, :])
+            x = x.at[j0:j1, k0:k1].set(z)
+            if j1 < n:
+                tail = tail.at[j1 - k0 :, :].add(-(l[j1:, j0:j1] @ z))
+    return x
+
+
+def blocked_potri(l, t):
+    """A^-1 = X^H X from the blocked factor (phase 2 of potri)."""
+    x = blocked_trtri(l, t)
+    return x.conj().T @ x
+
+
+# ---- the artifact table ---------------------------------------------------
+#
+# op name -> (callable, input signature builder). Signatures are built
+# by aot.py from (dtype, T). Real ops take real tiles; complex ops take
+# split planes. GEMM ops additionally take scalar alpha plane(s).
+
+REAL_OPS = {
+    "potf2": (panel.potf2, "A"),
+    "trsm_rlhc": (panel.trsm_rlhc, "AB"),
+    "trsm_llnn": (panel.trsm_llnn, "AB"),
+    "trsm_llhn": (panel.trsm_llhn, "AB"),
+    "gemm_nn": (gemm.gemm_nn, "CABa"),
+    "gemm_nh": (gemm.gemm_nh, "CABa"),
+    "gemm_hn": (gemm.gemm_hn, "CABa"),
+}
+
+COMPLEX_OPS = {
+    "cpotf2": (panel.cpotf2, "A"),
+    "ctrsm_rlhc": (panel.ctrsm_rlhc, "AB"),
+    "ctrsm_llnn": (panel.ctrsm_llnn, "AB"),
+    "ctrsm_llhn": (panel.ctrsm_llhn, "AB"),
+    "cgemm_nn": (gemm.cgemm_nn, "CABa"),
+    "cgemm_nh": (gemm.cgemm_nh, "CABa"),
+    "cgemm_hn": (gemm.cgemm_hn, "CABa"),
+}

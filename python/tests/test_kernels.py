@@ -1,0 +1,115 @@
+"""L1 correctness: Pallas GEMM kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps tile sizes, dtypes and alpha values; every property
+asserts allclose against ref.py at dtype-appropriate tolerance. This is
+the core correctness signal for the AOT artifacts (aot.py lowers the
+same functions these tests exercise).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gemm, ref
+
+TILES = [4, 8, 16]
+REAL_DTYPES = [np.float32, np.float64]
+
+
+def rng_tile(seed, t, dtype):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((t, t))
+    if np.issubdtype(dtype, np.complexfloating):
+        a = a + 1j * rng.standard_normal((t, t))
+    return a.astype(dtype)
+
+
+def tol(dtype):
+    return 5e-5 if np.dtype(dtype).itemsize <= 8 and np.dtype(dtype).kind == "f" and np.dtype(dtype).itemsize == 4 or dtype == np.complex64 else 1e-12
+
+
+@pytest.mark.parametrize("t", TILES)
+@pytest.mark.parametrize("dtype", REAL_DTYPES)
+@pytest.mark.parametrize("trans", ["nn", "nh", "hn"])
+def test_real_gemm_matches_ref(t, dtype, trans):
+    c = rng_tile(1, t, dtype)
+    a = rng_tile(2, t, dtype)
+    b = rng_tile(3, t, dtype)
+    alpha = dtype(-1.0)
+    pal = getattr(gemm, f"gemm_{trans}")(c, a, b, alpha)
+    exp = getattr(ref, f"gemm_{trans}")(c, a, b, alpha)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(exp), rtol=tol(dtype), atol=tol(dtype))
+
+
+@pytest.mark.parametrize("t", TILES)
+@pytest.mark.parametrize("planes,cdtype", [(np.float32, np.complex64), (np.float64, np.complex128)])
+@pytest.mark.parametrize("trans", ["nn", "nh", "hn"])
+def test_complex_gemm_matches_ref(t, planes, cdtype, trans):
+    c = rng_tile(4, t, cdtype)
+    a = rng_tile(5, t, cdtype)
+    b = rng_tile(6, t, cdtype)
+    alpha = cdtype(0.5 - 2.0j)
+    out_re, out_im = getattr(gemm, f"cgemm_{trans}")(
+        c.real.astype(planes), c.imag.astype(planes),
+        a.real.astype(planes), a.imag.astype(planes),
+        b.real.astype(planes), b.imag.astype(planes),
+        planes(alpha.real), planes(alpha.imag),
+    )
+    exp = getattr(ref, f"gemm_{trans}")(c, a, b, alpha)
+    got = np.asarray(out_re) + 1j * np.asarray(out_im)
+    np.testing.assert_allclose(got, np.asarray(exp), rtol=tol(cdtype), atol=tol(cdtype))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+    alpha=st.floats(-3, 3, allow_nan=False),
+    trans=st.sampled_from(["nn", "nh", "hn"]),
+)
+def test_gemm_property_f64(t, seed, alpha, trans):
+    """Property: Pallas == oracle for arbitrary seeds/shapes/alphas."""
+    c = rng_tile(seed, t, np.float64)
+    a = rng_tile(seed + 1, t, np.float64)
+    b = rng_tile(seed + 2, t, np.float64)
+    pal = getattr(gemm, f"gemm_{trans}")(c, a, b, np.float64(alpha))
+    exp = getattr(ref, f"gemm_{trans}")(c, a, b, np.float64(alpha))
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(exp), rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=15, deadline=None)
+@given(t=st.sampled_from([4, 8, 16]), seed=st.integers(0, 2**31 - 1))
+def test_cgemm_property_c128(t, seed):
+    c = rng_tile(seed, t, np.complex128)
+    a = rng_tile(seed + 1, t, np.complex128)
+    b = rng_tile(seed + 2, t, np.complex128)
+    out_re, out_im = gemm.cgemm_nn(
+        c.real, c.imag, a.real, a.imag, b.real, b.imag, np.float64(1.0), np.float64(0.0)
+    )
+    exp = ref.gemm_nn(c, a, b, 1.0)
+    got = np.asarray(out_re) + 1j * np.asarray(out_im)
+    np.testing.assert_allclose(got, np.asarray(exp), rtol=1e-12, atol=1e-12)
+
+
+def test_gemm_zero_alpha_is_identity():
+    c = rng_tile(7, 8, np.float64)
+    a = rng_tile(8, 8, np.float64)
+    b = rng_tile(9, 8, np.float64)
+    out = gemm.gemm_nn(c, a, b, np.float64(0.0))
+    np.testing.assert_allclose(np.asarray(out), c, rtol=0, atol=0)
+
+
+def test_gemm_block_grid_larger_tile():
+    """T > BLOCK exercises the multi-block VMEM grid path."""
+    t = 256
+    c = rng_tile(10, t, np.float32)
+    a = rng_tile(11, t, np.float32)
+    b = rng_tile(12, t, np.float32)
+    out = gemm.gemm_nn(c, a, b, np.float32(1.0))
+    exp = ref.gemm_nn(c, a, b, np.float32(1.0))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=2e-3, atol=2e-3)

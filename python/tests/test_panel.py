@@ -1,0 +1,143 @@
+"""L2 panel ops (potf2 / trsm family) vs the oracle, plus the blocked
+whole-matrix compositions in model.py.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import panel, ref
+
+
+def spd(seed, n, dtype):
+    rng = np.random.default_rng(seed)
+    b = rng.standard_normal((n, n))
+    if np.issubdtype(dtype, np.complexfloating):
+        b = b + 1j * rng.standard_normal((n, n))
+    a = b.conj().T @ b + n * np.eye(n)
+    return a.astype(dtype)
+
+
+def lower_factor(seed, n, dtype):
+    return np.asarray(ref.potf2(jnp.asarray(spd(seed, n, dtype))))
+
+
+@pytest.mark.parametrize("n", [1, 2, 5, 8, 16])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64, np.complex128])
+def test_potf2_matches_ref(n, dtype):
+    a = spd(1, n, dtype)
+    got = np.asarray(panel.potf2(jnp.asarray(a)))
+    exp = np.asarray(ref.potf2(jnp.asarray(a)))
+    tol = 1e-4 if dtype == np.float32 else 1e-11
+    np.testing.assert_allclose(got, exp, rtol=tol, atol=tol)
+    # Reconstruction.
+    np.testing.assert_allclose(got @ got.conj().T, a, rtol=tol * 10, atol=tol * 10)
+
+
+@pytest.mark.parametrize("op", ["trsm_llnn", "trsm_llhn"])
+@pytest.mark.parametrize("dtype", [np.float64, np.complex128])
+def test_left_trsm_matches_ref(op, dtype):
+    l = lower_factor(2, 8, dtype)
+    b = spd(3, 8, dtype)
+    got = np.asarray(getattr(panel, op)(jnp.asarray(l), jnp.asarray(b)))
+    exp = np.asarray(getattr(ref, op)(jnp.asarray(l), jnp.asarray(b)))
+    np.testing.assert_allclose(got, exp, rtol=1e-11, atol=1e-11)
+
+
+@pytest.mark.parametrize("dtype", [np.float64, np.complex128])
+def test_right_trsm_matches_ref(dtype):
+    l = lower_factor(4, 6, dtype)
+    b = spd(5, 6, dtype)
+    got = np.asarray(panel.trsm_rlhc(jnp.asarray(b), jnp.asarray(l)))
+    exp = np.asarray(ref.trsm_rlhc(jnp.asarray(b), jnp.asarray(l)))
+    np.testing.assert_allclose(got, exp, rtol=1e-11, atol=1e-11)
+
+
+def test_cpotf2_split_planes():
+    a = spd(6, 8, np.complex128)
+    lr, li = panel.cpotf2(jnp.asarray(a.real), jnp.asarray(a.imag))
+    l = np.asarray(lr) + 1j * np.asarray(li)
+    np.testing.assert_allclose(l @ l.conj().T, a, rtol=1e-10, atol=1e-10)
+
+
+def test_potf2_nonpd_gives_nan():
+    """Non-PD pivot must surface as NaN (the Rust side's info>0 signal)."""
+    a = np.eye(4)
+    a[2, 2] = -1.0
+    l = np.asarray(panel.potf2(jnp.asarray(a)))
+    assert np.isnan(l[2:, 2:]).any()
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([2, 4, 8, 12]), seed=st.integers(0, 2**31 - 1))
+def test_potf2_property(n, seed):
+    a = spd(seed, n, np.float64)
+    l = np.asarray(panel.potf2(jnp.asarray(a)))
+    assert np.allclose(np.triu(l, 1), 0.0)
+    np.testing.assert_allclose(l @ l.T, a, rtol=1e-10, atol=1e-10)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_trsm_solves_property(seed):
+    l = lower_factor(seed, 8, np.float64)
+    x = np.random.default_rng(seed).standard_normal((8, 3))
+    b = l @ x
+    got = np.asarray(panel.trsm_llnn(jnp.asarray(l), jnp.asarray(b)))
+    np.testing.assert_allclose(got, x, rtol=1e-9, atol=1e-9)
+
+
+# ---- blocked model compositions -------------------------------------------
+
+
+@pytest.mark.parametrize("n,t", [(16, 4), (32, 8), (24, 8)])
+def test_blocked_potrf_matches_unblocked(n, t):
+    if n % t:
+        pytest.skip("t must divide n")
+    a = spd(7, n, np.float64)
+    l = np.asarray(model.blocked_potrf(jnp.asarray(a), t))
+    exp = np.asarray(ref.potf2(jnp.asarray(a)))
+    np.testing.assert_allclose(l, exp, rtol=1e-10, atol=1e-10)
+
+
+def test_blocked_potrs_solves():
+    n, t = 24, 8
+    a = spd(8, n, np.float64)
+    x_true = np.random.default_rng(9).standard_normal((n, 2))
+    b = a @ x_true
+    l = model.blocked_potrf(jnp.asarray(a), t)
+    x = np.asarray(model.blocked_potrs(l, jnp.asarray(b), t))
+    np.testing.assert_allclose(x, x_true, rtol=1e-9, atol=1e-9)
+
+
+def test_blocked_potrf_jits():
+    """The whole blocked factorization must stay inside one jit."""
+    n, t = 16, 8
+    a = spd(10, n, np.float64)
+    f = jax.jit(lambda m: model.blocked_potrf(m, t))
+    l = np.asarray(f(jnp.asarray(a)))
+    np.testing.assert_allclose(l @ l.T, a, rtol=1e-10, atol=1e-10)
+
+
+def test_blocked_trtri_inverts():
+    n, t = 24, 8
+    a = spd(11, n, np.float64)
+    l = np.asarray(ref.potf2(jnp.asarray(a)))
+    x = np.asarray(model.blocked_trtri(jnp.asarray(l), t))
+    np.testing.assert_allclose(x @ l, np.eye(n), rtol=1e-9, atol=1e-9)
+    # Stays lower triangular.
+    assert np.allclose(np.triu(x, 1), 0.0)
+
+
+def test_blocked_potri_matches_inverse():
+    n, t = 16, 4
+    a = spd(12, n, np.complex128)
+    l = ref.potf2(jnp.asarray(a))
+    inv = np.asarray(model.blocked_potri(l, t))
+    np.testing.assert_allclose(a @ inv, np.eye(n), rtol=1e-9, atol=1e-9)

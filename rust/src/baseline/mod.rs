@@ -1,0 +1,184 @@
+//! Single-GPU baseline — the paper's comparator.
+//!
+//! Fig. 3 compares JAXMg against the native single-GPU JAX routines
+//! (which call cuSOLVERDn): `cho_factor`+`cho_solve`, `jnp.linalg.inv`,
+//! `jnp.linalg.eigh`. This module reproduces that baseline on **one**
+//! simulated device: the whole matrix must fit in a single device's
+//! VRAM (hence the baseline's early OOM cutoff in the benches — the
+//! paper's headline motivation), and all FLOPs are charged to that one
+//! timeline (hence the crossover once aggregate multi-GPU throughput
+//! wins).
+
+use crate::costmodel::GpuCostModel;
+use crate::device::SimNode;
+use crate::error::Result;
+use crate::linalg::{self, Matrix};
+use crate::scalar::Scalar;
+
+/// Single-device dense solver, pinned to `dev` on `node`.
+pub struct SingleGpu<'a> {
+    node: &'a SimNode,
+    dev: usize,
+    model: &'a GpuCostModel,
+}
+
+impl<'a> SingleGpu<'a> {
+    /// Baseline bound to one device.
+    pub fn new(node: &'a SimNode, dev: usize, model: &'a GpuCostModel) -> Self {
+        SingleGpu { node, dev, model }
+    }
+
+    /// Allocate the device-resident working set (errors with OOM when
+    /// the matrix no longer fits — the baseline's capacity wall).
+    fn alloc_working_set<S: Scalar>(&self, elems: usize) -> Result<crate::device::DevPtr> {
+        self.node.alloc_scalars::<S>(self.dev, elems)
+    }
+
+    /// `jax.scipy.linalg.cho_factor` + `cho_solve` analogue.
+    pub fn potrs<S: Scalar>(&self, a: &Matrix<S>, b: &Matrix<S>) -> Result<Matrix<S>> {
+        let n = a.require_square()?;
+        let ws = self.alloc_working_set::<S>(n * n + n * b.cols())?;
+        // H2D of the operands.
+        self.node.charge_h2d(self.dev, (n * n + n * b.cols()) * std::mem::size_of::<S>())?;
+        let l = linalg::potrf(a)?;
+        self.node.charge_kernel(
+            self.dev,
+            self.model.panel_time(S::DTYPE, GpuCostModel::flops_potf2(S::DTYPE, n)),
+            GpuCostModel::flops_potf2(S::DTYPE, n),
+        )?;
+        let x = linalg::potrs_from_chol(&l, b)?;
+        let fl = GpuCostModel::flops_trsm(S::DTYPE, n, b.cols(), n);
+        self.node.charge_kernel(self.dev, self.model.panel_time(S::DTYPE, 2 * fl), 2 * fl)?;
+        self.node.free(ws)?;
+        Ok(x)
+    }
+
+    /// `jax.numpy.linalg.inv` analogue (via Cholesky, SPD input).
+    pub fn potri<S: Scalar>(&self, a: &Matrix<S>) -> Result<Matrix<S>> {
+        let n = a.require_square()?;
+        // inv materializes the inverse out of place: 2 full matrices.
+        let ws = self.alloc_working_set::<S>(2 * n * n)?;
+        self.node.charge_h2d(self.dev, n * n * std::mem::size_of::<S>())?;
+        let l = linalg::potrf(a)?;
+        self.node.charge_kernel(
+            self.dev,
+            self.model.panel_time(S::DTYPE, GpuCostModel::flops_potf2(S::DTYPE, n)),
+            GpuCostModel::flops_potf2(S::DTYPE, n),
+        )?;
+        let inv = linalg::potri_from_chol(&l)?;
+        // trtri (n³/3) + lauum (n³/3) at GEMM-ish rate.
+        let fl = 2 * GpuCostModel::flops_potf2(S::DTYPE, n);
+        self.node
+            .charge_kernel(self.dev, self.model.gemm_time(S::DTYPE, n, n, n / 3 + 1), fl)?;
+        self.node.free(ws)?;
+        Ok(inv)
+    }
+
+    /// `jax.numpy.linalg.eigh` analogue.
+    pub fn syevd<S: Scalar>(&self, a: &Matrix<S>) -> Result<(Vec<<S as Scalar>::Real>, Matrix<S>)> {
+        let n = a.require_square()?;
+        // eigh working set: A + V + tridiagonal scratch.
+        let ws = self.alloc_working_set::<S>(3 * n * n)?;
+        self.node.charge_h2d(self.dev, n * n * std::mem::size_of::<S>())?;
+        let eig = linalg::syevd_host(a)?;
+        // Tridiagonalization is BLAS-2/HBM-bound: ~8/3 n³ flops over n² data
+        // passes; QL + back-transform ~6n³.
+        let esize = std::mem::size_of::<S>();
+        let bytes = (n * n * esize) as u64;
+        self.node.charge_kernel(self.dev, self.model.blas2_time(bytes) * n as f64 / 4.0, (8 * n * n * n / 3) as u64)?;
+        self.node.charge_kernel(
+            self.dev,
+            self.model.gemm_time(S::DTYPE, n, n, n),
+            GpuCostModel::flops_gemm(S::DTYPE, n, n, n),
+        )?;
+        self.node.free(ws)?;
+        Ok((eig.values, eig.vectors))
+    }
+
+    /// Largest N fitting this baseline for a routine (capacity wall).
+    pub fn capacity_n<S: Scalar>(&self, routine: &str) -> usize {
+        let vram = self.node.memory_reports()[self.dev].capacity;
+        let e = std::mem::size_of::<S>();
+        let per_n = |n: usize| match routine {
+            "potrs" => (n * n + n) * e,
+            "potri" => 2 * n * n * e,
+            "syevd" => 3 * n * n * e,
+            _ => usize::MAX,
+        };
+        let mut n = 1usize;
+        while per_n(n * 2) <= vram {
+            n *= 2;
+        }
+        let step = (n / 16).max(1);
+        while per_n(n + step) <= vram {
+            n += step;
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Error;
+    use crate::linalg::{tol_for, FrobNorm};
+    use crate::scalar::c64;
+
+    fn setup() -> (SimNode, GpuCostModel) {
+        (SimNode::new_uniform(1, 1 << 24), GpuCostModel::h200())
+    }
+
+    #[test]
+    fn baseline_potrs_correct() {
+        let (node, model) = setup();
+        let bl = SingleGpu::new(&node, 0, &model);
+        let a = Matrix::<f64>::spd_random(16, 1);
+        let xt = Matrix::<f64>::random(16, 2, 2);
+        let b = a.matmul(&xt);
+        let x = bl.potrs(&a, &b).unwrap();
+        assert!(x.rel_err(&xt) < tol_for::<f64>(16));
+        assert!(node.device(0).unwrap().clock().now() > 0.0);
+    }
+
+    #[test]
+    fn baseline_potri_correct() {
+        let (node, model) = setup();
+        let bl = SingleGpu::new(&node, 0, &model);
+        let a = Matrix::<c64>::spd_random(12, 3);
+        let inv = bl.potri(&a).unwrap();
+        assert!(a.matmul(&inv).rel_err(&Matrix::eye(12)) < tol_for::<c64>(12));
+    }
+
+    #[test]
+    fn baseline_syevd_correct() {
+        let (node, model) = setup();
+        let bl = SingleGpu::new(&node, 0, &model);
+        let a = Matrix::<f64>::spd_diag(10);
+        let (vals, _vecs) = bl.syevd(&a).unwrap();
+        for i in 0..10 {
+            assert!((vals[i] - (i + 1) as f64).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn baseline_hits_capacity_wall() {
+        // 1 MiB device: a 512×512 f64 matrix (2 MiB) cannot even hold A.
+        let node = SimNode::new_uniform(1, 1 << 20);
+        let model = GpuCostModel::h200();
+        let bl = SingleGpu::new(&node, 0, &model);
+        let a = Matrix::<f64>::spd_diag(512);
+        let b = Matrix::<f64>::ones(512, 1);
+        assert!(matches!(bl.potrs(&a, &b), Err(Error::DeviceOom { .. })));
+    }
+
+    #[test]
+    fn capacity_ordering_matches_workspace() {
+        let (node, model) = setup();
+        let bl = SingleGpu::new(&node, 0, &model);
+        let potrs = bl.capacity_n::<f64>("potrs");
+        let potri = bl.capacity_n::<f64>("potri");
+        let syevd = bl.capacity_n::<f64>("syevd");
+        assert!(potrs > potri, "{potrs} vs {potri}");
+        assert!(potri > syevd, "{potri} vs {syevd}");
+    }
+}

@@ -1,0 +1,101 @@
+//! CLI option parsing (hand-rolled; the vendored crate set has no clap).
+//!
+//! `--key value` pairs plus bare flags; typed accessors with defaults.
+//! Lives in the library so it is unit-testable and reusable by the
+//! examples.
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Bare flags that take no value.
+const FLAGS: &[&str] = &["random"];
+
+/// Parsed command-line options.
+#[derive(Debug, Default)]
+pub struct Opts {
+    map: HashMap<String, String>,
+}
+
+impl Opts {
+    /// Parse `--key value` pairs (and bare flags) from `args`.
+    pub fn parse(args: &[String]) -> Result<Opts> {
+        let mut map = HashMap::new();
+        let mut it = args.iter();
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| Error::config(format!("expected --option, got {a:?}")))?;
+            if FLAGS.contains(&key) {
+                map.insert(key.to_string(), "true".to_string());
+            } else {
+                let v = it.next().ok_or_else(|| Error::config(format!("--{key} needs a value")))?;
+                map.insert(key.to_string(), v.clone());
+            }
+        }
+        Ok(Opts { map })
+    }
+
+    /// Integer option with default.
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| Error::config(format!("--{key} must be an integer"))),
+        }
+    }
+
+    /// String option with default.
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.map.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Bare-flag presence.
+    pub fn flag(&self, key: &str) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Raw access (e.g. optional seeds).
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_pairs_and_flags() {
+        let o = Opts::parse(&args(&["--n", "512", "--dtype", "c128", "--random"])).unwrap();
+        assert_eq!(o.usize("n", 0).unwrap(), 512);
+        assert_eq!(o.str("dtype", "f32"), "c128");
+        assert!(o.flag("random"));
+        assert!(!o.flag("diag"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let o = Opts::parse(&args(&[])).unwrap();
+        assert_eq!(o.usize("tile", 64).unwrap(), 64);
+        assert_eq!(o.str("mode", "spmd"), "spmd");
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Opts::parse(&args(&["solve"])).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_value() {
+        assert!(Opts::parse(&args(&["--n"])).is_err());
+    }
+
+    #[test]
+    fn rejects_non_integer() {
+        let o = Opts::parse(&args(&["--n", "many"])).unwrap();
+        assert!(o.usize("n", 1).is_err());
+    }
+}

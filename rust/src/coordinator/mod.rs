@@ -1,0 +1,531 @@
+//! The JAXMg front end: mesh + partition specs + the `potrs` / `potri`
+//! / `syevd` entry points, wired through the SPMD/MPMD single-caller
+//! machinery exactly as the paper describes.
+//!
+//! A call like the paper's
+//!
+//! ```python
+//! mesh = jax.make_mesh((jax.device_count(),), ("x",))
+//! out  = potrs(A, b, T_A=T_A, mesh=mesh, in_specs=(P("x", None), P(None, None)))
+//! ```
+//!
+//! maps to
+//!
+//! ```no_run
+//! # use jaxmg::prelude::*;
+//! let node = SimNode::new_uniform(8, 1 << 30);
+//! let mesh = Mesh::new_1d(node, "x");
+//! let ctx  = JaxMg::builder().mesh(mesh).tile_size(256).build().unwrap();
+//! let a = Matrix::<f32>::spd_diag(1024);
+//! let b = Matrix::<f32>::ones(1024, 1);
+//! let x = ctx.potrs(&a, &b).unwrap();
+//! ```
+//!
+//! Internally each entry point follows the pipeline of §2:
+//! 1. `device_put` the operands per the in_specs ([`PartitionSpec`]);
+//! 2. worker-per-device pointer publication and single-caller gather
+//!    (threads + shm table in SPMD, simulated processes + `cudaIpc`
+//!    handles in MPMD — [`ExecMode`]);
+//! 3. in-place redistribution to the 1D block-cyclic layout (§2.1);
+//! 4. the distributed solve (`crate::solver`);
+//! 5. gather of the replicated / distributed outputs.
+
+mod mpmd;
+mod service;
+mod spmd;
+
+pub use mpmd::gather_pointers_mpmd;
+pub use service::{JobQueue, SolveHandle};
+pub use spmd::gather_pointers_spmd;
+
+use crate::costmodel::GpuCostModel;
+use crate::device::SimNode;
+use crate::error::{Error, Result};
+use crate::layout::{BlockCyclic1D, ContiguousBlock};
+use crate::linalg::Matrix;
+use crate::metrics::MetricsSnapshot;
+use crate::runtime::{PjRtRuntime, XlaKernels};
+use crate::scalar::Scalar;
+use crate::solver::{potrf_dist, potri_dist, potrs_dist, syevd_dist, Ctx, SolverBackend};
+use crate::tile::{DistMatrix, Layout1D};
+use std::sync::Arc;
+
+/// 1D device mesh over the node (the paper only needs 1D meshes).
+#[derive(Clone, Debug)]
+pub struct Mesh {
+    node: SimNode,
+    axis: String,
+}
+
+impl Mesh {
+    /// `jax.make_mesh((ndev,), (axis,))` analogue.
+    pub fn new_1d(node: SimNode, axis: impl Into<String>) -> Self {
+        Mesh { node, axis: axis.into() }
+    }
+
+    /// Devices in the mesh.
+    pub fn num_devices(&self) -> usize {
+        self.node.num_devices()
+    }
+
+    /// The mesh axis name.
+    pub fn axis(&self) -> &str {
+        &self.axis
+    }
+
+    /// The underlying simulated node.
+    pub fn node(&self) -> &SimNode {
+        &self.node
+    }
+}
+
+/// `jax.sharding.PartitionSpec` for a 2D operand over a 1D mesh.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PartitionSpec {
+    /// `P(axis, None)` — dimension 0 sharded over the mesh axis
+    /// (the paper's layout for `A`).
+    Sharded(String),
+    /// `P(None, None)` — fully replicated (the paper's layout for `b`).
+    Replicated,
+}
+
+impl PartitionSpec {
+    /// The paper's `P("x", None)`.
+    pub fn sharded(axis: impl Into<String>) -> Self {
+        PartitionSpec::Sharded(axis.into())
+    }
+
+    /// The paper's `P(None, None)`.
+    pub fn replicated() -> Self {
+        PartitionSpec::Replicated
+    }
+}
+
+/// How worker shards reach the single caller (paper §2.2, Fig. 2).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// One thread per GPU; pointers shared via the shm table.
+    Spmd,
+    /// One (simulated) process per GPU; pointers via cudaIpc handles.
+    Mpmd,
+}
+
+/// Which tile-kernel backend executes the FLOPs.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust reference kernels.
+    Native,
+    /// AOT-compiled XLA executables (requires `make artifacts`).
+    Xla,
+}
+
+/// Builder for [`JaxMg`].
+pub struct JaxMgBuilder {
+    mesh: Option<Mesh>,
+    tile: usize,
+    exec_mode: ExecMode,
+    backend: BackendKind,
+    artifacts_dir: Option<std::path::PathBuf>,
+    model: GpuCostModel,
+}
+
+impl Default for JaxMgBuilder {
+    fn default() -> Self {
+        JaxMgBuilder {
+            mesh: None,
+            tile: 128,
+            exec_mode: ExecMode::Spmd,
+            backend: BackendKind::Native,
+            artifacts_dir: None,
+            model: GpuCostModel::h200(),
+        }
+    }
+}
+
+impl JaxMgBuilder {
+    /// Set the device mesh (required).
+    pub fn mesh(mut self, mesh: Mesh) -> Self {
+        self.mesh = Some(mesh);
+        self
+    }
+
+    /// Set the tile size `T_A` (the paper's memory/perf trade-off knob).
+    pub fn tile_size(mut self, t: usize) -> Self {
+        self.tile = t;
+        self
+    }
+
+    /// Choose SPMD (threads) or MPMD (processes) pointer reconciliation.
+    pub fn exec_mode(mut self, m: ExecMode) -> Self {
+        self.exec_mode = m;
+        self
+    }
+
+    /// Choose the tile-kernel backend.
+    pub fn backend(mut self, b: BackendKind) -> Self {
+        self.backend = b;
+        self
+    }
+
+    /// Override the artifact directory (default: `$JAXMG_ARTIFACTS` or `./artifacts`).
+    pub fn artifacts_dir(mut self, d: impl Into<std::path::PathBuf>) -> Self {
+        self.artifacts_dir = Some(d.into());
+        self
+    }
+
+    /// Override the GPU cost model.
+    pub fn cost_model(mut self, m: GpuCostModel) -> Self {
+        self.model = m;
+        self
+    }
+
+    /// Build the context. Fails if the mesh is missing, the tile size is
+    /// zero, or (XLA backend) the PJRT client cannot start.
+    pub fn build(self) -> Result<JaxMg> {
+        let mesh = self.mesh.ok_or_else(|| Error::config("JaxMg requires a mesh"))?;
+        if self.tile == 0 {
+            return Err(Error::config("tile size T_A must be positive"));
+        }
+        let runtime = match self.backend {
+            BackendKind::Native => None,
+            BackendKind::Xla => {
+                let dir = self.artifacts_dir.unwrap_or_else(PjRtRuntime::default_dir);
+                Some(Arc::new(PjRtRuntime::new(dir)?))
+            }
+        };
+        Ok(JaxMg {
+            mesh,
+            tile: self.tile,
+            exec_mode: self.exec_mode,
+            backend: self.backend,
+            runtime,
+            model: self.model,
+        })
+    }
+}
+
+/// The JAXMg context: the library's user-facing API object.
+pub struct JaxMg {
+    mesh: Mesh,
+    tile: usize,
+    exec_mode: ExecMode,
+    backend: BackendKind,
+    runtime: Option<Arc<PjRtRuntime>>,
+    model: GpuCostModel,
+}
+
+impl JaxMg {
+    /// Start building a context.
+    pub fn builder() -> JaxMgBuilder {
+        JaxMgBuilder::default()
+    }
+
+    /// The mesh this context solves over.
+    pub fn mesh(&self) -> &Mesh {
+        &self.mesh
+    }
+
+    /// The configured tile size `T_A`.
+    pub fn tile_size(&self) -> usize {
+        self.tile
+    }
+
+    /// The configured execution mode.
+    pub fn exec_mode(&self) -> ExecMode {
+        self.exec_mode
+    }
+
+    /// Snapshot of the node metrics (copies, kernels, bytes).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.mesh.node().metrics().snapshot()
+    }
+
+    /// Projected wall-clock (simulated H200 time) accumulated so far.
+    pub fn projected_time(&self) -> f64 {
+        self.mesh.node().sim_time()
+    }
+
+    /// Reset simulated clocks + metrics (between benchmark repetitions).
+    pub fn reset_accounting(&self) {
+        self.mesh.node().reset_accounting();
+    }
+
+    fn backend_for<S: Scalar>(&self) -> Result<SolverBackend<S>>
+    where
+        S::Real: xla::NativeType + xla::ArrayElement,
+    {
+        match self.backend {
+            BackendKind::Native => Ok(SolverBackend::Native),
+            BackendKind::Xla => {
+                let rt = self.runtime.as_ref().expect("runtime exists for Xla backend");
+                Ok(SolverBackend::Xla(Arc::new(XlaKernels::<S>::new(rt.clone(), self.tile)?)))
+            }
+        }
+    }
+
+    /// Validate in_specs against the paper's contract:
+    /// `A: P(axis, None)`, `b: P(None, None)`.
+    fn check_specs(&self, a_spec: &PartitionSpec, b_spec: Option<&PartitionSpec>) -> Result<()> {
+        match a_spec {
+            PartitionSpec::Sharded(ax) if ax == self.mesh.axis() => {}
+            PartitionSpec::Sharded(ax) => {
+                return Err(Error::config(format!(
+                    "A sharded over unknown axis {ax:?} (mesh axis is {:?})",
+                    self.mesh.axis()
+                )))
+            }
+            PartitionSpec::Replicated => {
+                return Err(Error::config("A must be sharded over the mesh axis: P(axis, None)"))
+            }
+        }
+        if let Some(PartitionSpec::Sharded(_)) = b_spec {
+            return Err(Error::config("b must be replicated: P(None, None)"));
+        }
+        Ok(())
+    }
+
+    /// `device_put(A, P(axis, None))` + worker pointer publication +
+    /// single-caller gather + §2.1 redistribution → block-cyclic matrix.
+    fn stage_matrix<S: Scalar>(&self, a: &Matrix<S>) -> Result<DistMatrix<S>> {
+        let node = self.mesh.node();
+        let n = a.require_square()?;
+        let ndev = node.num_devices();
+        let contig = Layout1D::Contiguous(ContiguousBlock::new(n, ndev)?);
+        let mut dm = DistMatrix::scatter(node, a, contig)?;
+
+        // §2.2: every worker publishes its shard pointer; the single
+        // caller gathers them all before touching any shard.
+        let gathered = match self.exec_mode {
+            ExecMode::Spmd => gather_pointers_spmd(node, dm.panels().to_vec())?,
+            ExecMode::Mpmd => gather_pointers_mpmd(node, dm.panels().to_vec())?,
+        };
+        debug_assert_eq!(gathered, dm.panels().to_vec(), "single-caller pointer mismatch");
+
+        // §2.1: in-place conversion to the solver layout.
+        let cyclic = Layout1D::BlockCyclic(BlockCyclic1D::new(n, self.tile, ndev)?);
+        crate::layout::Redistributor::convert(&mut dm, cyclic)?;
+        Ok(dm)
+    }
+
+    /// Paper API: solve `A·X = B` (A SPD/HPD sharded, B replicated).
+    /// Full pipeline with explicit in_specs.
+    pub fn potrs_with_specs<S: Scalar>(
+        &self,
+        a: &Matrix<S>,
+        b: &Matrix<S>,
+        a_spec: PartitionSpec,
+        b_spec: PartitionSpec,
+    ) -> Result<Matrix<S>>
+    where
+        S::Real: xla::NativeType + xla::ArrayElement,
+    {
+        self.check_specs(&a_spec, Some(&b_spec))?;
+        let backend = self.backend_for::<S>()?;
+        let ctx = Ctx::new(self.mesh.node(), &self.model, &backend);
+        let mut dm = self.stage_matrix(a)?;
+        potrf_dist(&ctx, &mut dm)?;
+        let x = potrs_dist(&ctx, &dm, b)?;
+        dm.free()?;
+        Ok(x)
+    }
+
+    /// Solve `A·X = B` with the paper's default specs.
+    pub fn potrs<S: Scalar>(&self, a: &Matrix<S>, b: &Matrix<S>) -> Result<Matrix<S>>
+    where
+        S::Real: xla::NativeType + xla::ArrayElement,
+    {
+        let ax = self.mesh.axis().to_string();
+        self.potrs_with_specs(a, b, PartitionSpec::Sharded(ax), PartitionSpec::Replicated)
+    }
+
+    /// Invert an SPD/HPD matrix (`cusolverMgPotri` pipeline).
+    pub fn potri<S: Scalar>(&self, a: &Matrix<S>) -> Result<Matrix<S>>
+    where
+        S::Real: xla::NativeType + xla::ArrayElement,
+    {
+        let backend = self.backend_for::<S>()?;
+        let ctx = Ctx::new(self.mesh.node(), &self.model, &backend);
+        let mut dm = self.stage_matrix(a)?;
+        potrf_dist(&ctx, &mut dm)?;
+        potri_dist(&ctx, &mut dm)?;
+        let inv = dm.gather()?;
+        dm.free()?;
+        Ok(inv)
+    }
+
+    /// Eigendecomposition of a symmetric/Hermitian matrix
+    /// (`cusolverMgSyevd` pipeline): ascending eigenvalues +
+    /// eigenvector columns.
+    pub fn syevd<S: Scalar>(&self, a: &Matrix<S>) -> Result<(Vec<S::Real>, Matrix<S>)>
+    where
+        S::Real: xla::NativeType + xla::ArrayElement,
+    {
+        let backend = self.backend_for::<S>()?;
+        let ctx = Ctx::new(self.mesh.node(), &self.model, &backend);
+        let mut dm = self.stage_matrix(a)?;
+        let vals = syevd_dist(&ctx, &mut dm)?;
+        let vecs = dm.gather()?;
+        dm.free()?;
+        Ok((vals, vecs))
+    }
+
+    /// Factor once, solve many: returns a reusable factorization handle
+    /// (the composable-JAX-workflow story — e.g. repeated solves inside
+    /// an optimization loop).
+    pub fn factorize<S: Scalar>(&self, a: &Matrix<S>) -> Result<Factorized<'_, S>>
+    where
+        S::Real: xla::NativeType + xla::ArrayElement,
+    {
+        let backend = self.backend_for::<S>()?;
+        let mut dm = self.stage_matrix(a)?;
+        {
+            let ctx = Ctx::new(self.mesh.node(), &self.model, &backend);
+            potrf_dist(&ctx, &mut dm)?;
+        }
+        Ok(Factorized { ctx_owner: self, backend, dm })
+    }
+}
+
+impl std::fmt::Debug for JaxMg {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "JaxMg(devices={}, T_A={}, mode={:?}, backend={:?})",
+            self.mesh.num_devices(),
+            self.tile,
+            self.exec_mode,
+            self.backend
+        )
+    }
+}
+
+/// A distributed Cholesky factorization kept on the devices for
+/// repeated solves.
+pub struct Factorized<'a, S: Scalar> {
+    ctx_owner: &'a JaxMg,
+    backend: SolverBackend<S>,
+    dm: DistMatrix<S>,
+}
+
+impl<'a, S: Scalar> Factorized<'a, S> {
+    /// Solve against a replicated RHS using the stored factor.
+    pub fn solve(&self, b: &Matrix<S>) -> Result<Matrix<S>> {
+        let ctx = Ctx::new(self.ctx_owner.mesh.node(), &self.ctx_owner.model, &self.backend);
+        potrs_dist(&ctx, &self.dm, b)
+    }
+
+    /// Consume the factor and produce the inverse.
+    pub fn into_inverse(mut self) -> Result<Matrix<S>> {
+        let ctx = Ctx::new(self.ctx_owner.mesh.node(), &self.ctx_owner.model, &self.backend);
+        potri_dist(&ctx, &mut self.dm)?;
+        self.dm.gather()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{tol_for, FrobNorm};
+    use crate::scalar::c64;
+
+    fn ctx(ndev: usize, tile: usize, mode: ExecMode) -> JaxMg {
+        let node = SimNode::new_uniform(ndev, 1 << 26);
+        JaxMg::builder()
+            .mesh(Mesh::new_1d(node, "x"))
+            .tile_size(tile)
+            .exec_mode(mode)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn potrs_end_to_end_spmd() {
+        let mg = ctx(4, 4, ExecMode::Spmd);
+        let a = Matrix::<f64>::spd_random(32, 1);
+        let xt = Matrix::<f64>::random(32, 2, 2);
+        let b = a.matmul(&xt);
+        let x = mg.potrs(&a, &b).unwrap();
+        assert!(x.rel_err(&xt) < tol_for::<f64>(32) * 10.0);
+    }
+
+    #[test]
+    fn potrs_end_to_end_mpmd() {
+        let mg = ctx(4, 4, ExecMode::Mpmd);
+        let a = Matrix::<f64>::spd_random(32, 3);
+        let xt = Matrix::<f64>::random(32, 1, 4);
+        let b = a.matmul(&xt);
+        let x = mg.potrs(&a, &b).unwrap();
+        assert!(x.rel_err(&xt) < tol_for::<f64>(32) * 10.0);
+    }
+
+    #[test]
+    fn potri_end_to_end() {
+        let mg = ctx(3, 4, ExecMode::Spmd);
+        let a = Matrix::<c64>::spd_random(18, 5);
+        let inv = mg.potri(&a).unwrap();
+        assert!(a.matmul(&inv).rel_err(&Matrix::eye(18)) < tol_for::<c64>(18) * 10.0);
+    }
+
+    #[test]
+    fn syevd_end_to_end() {
+        let mg = ctx(2, 4, ExecMode::Spmd);
+        let a = Matrix::<f64>::spd_diag(16);
+        let (vals, _) = mg.syevd(&a).unwrap();
+        for i in 0..16 {
+            assert!((vals[i] - (i + 1) as f64).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn factorize_reuses_factor() {
+        let mg = ctx(2, 4, ExecMode::Spmd);
+        let a = Matrix::<f64>::spd_random(16, 7);
+        let f = mg.factorize(&a).unwrap();
+        for seed in 0..3 {
+            let xt = Matrix::<f64>::random(16, 1, 100 + seed);
+            let b = a.matmul(&xt);
+            let x = f.solve(&b).unwrap();
+            assert!(x.rel_err(&xt) < tol_for::<f64>(16) * 10.0);
+        }
+    }
+
+    #[test]
+    fn spec_validation() {
+        let mg = ctx(2, 4, ExecMode::Spmd);
+        let a = Matrix::<f64>::spd_random(8, 8);
+        let b = Matrix::<f64>::ones(8, 1);
+        // Wrong axis name.
+        let err = mg
+            .potrs_with_specs(&a, &b, PartitionSpec::sharded("y"), PartitionSpec::replicated())
+            .unwrap_err();
+        assert!(matches!(err, Error::Config(_)));
+        // Replicated A rejected.
+        assert!(mg
+            .potrs_with_specs(&a, &b, PartitionSpec::replicated(), PartitionSpec::replicated())
+            .is_err());
+        // Sharded b rejected.
+        assert!(mg
+            .potrs_with_specs(&a, &b, PartitionSpec::sharded("x"), PartitionSpec::sharded("x"))
+            .is_err());
+    }
+
+    #[test]
+    fn builder_validation() {
+        assert!(JaxMg::builder().build().is_err()); // no mesh
+        let node = SimNode::new_uniform(1, 1 << 20);
+        assert!(JaxMg::builder().mesh(Mesh::new_1d(node, "x")).tile_size(0).build().is_err());
+    }
+
+    #[test]
+    fn no_vram_leak_across_solves() {
+        let mg = ctx(2, 4, ExecMode::Spmd);
+        let a = Matrix::<f64>::spd_random(16, 9);
+        let b = Matrix::<f64>::ones(16, 1);
+        for _ in 0..3 {
+            mg.potrs(&a, &b).unwrap();
+        }
+        for rep in mg.mesh().node().memory_reports() {
+            assert_eq!(rep.used, 0, "solve leaked device memory");
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! MPMD execution driver (Fig. 2, right).
+//!
+//! One (simulated) process per GPU, each with its own virtual address
+//! space — raw device pointers are *undefined* across processes, so
+//! each worker exports its shard through the `cudaIpc` analogue and
+//! ships the opaque handle to process 0 over a message channel.
+//! Process 0 opens every foreign handle in its own space (CUDA forbids
+//! opening one's own export, so worker 0's pointer is used directly)
+//! and only then calls the solver — the single-caller requirement.
+
+use crate::device::{DevPtr, SimNode};
+use crate::error::{Error, Result};
+use crate::ipc::{AddressSpace, IpcHandle, IpcRegistry};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// One worker's message to process 0: its rank and either a raw pointer
+/// (rank 0 only) or an exported IPC handle.
+enum PtrMsg {
+    Own(usize, DevPtr),
+    Exported(usize, IpcHandle),
+}
+
+/// Simulated-process pointer reconciliation: worker `d` runs in
+/// [`AddressSpace`] `d`, exports its panel, and sends the handle to
+/// process 0, which opens all of them and returns the device-ordered
+/// pointer list.
+pub fn gather_pointers_mpmd(node: &SimNode, panels: Vec<DevPtr>) -> Result<Vec<DevPtr>> {
+    let ndev = node.num_devices();
+    assert_eq!(panels.len(), ndev);
+    let registry = Arc::new(IpcRegistry::new());
+    let (tx, rx) = mpsc::channel::<PtrMsg>();
+
+    std::thread::scope(|scope| {
+        for (d, ptr) in panels.iter().enumerate() {
+            let registry = registry.clone();
+            let tx = tx.clone();
+            let ptr = *ptr;
+            scope.spawn(move || {
+                let space = AddressSpace(d);
+                if d == 0 {
+                    // Process 0 uses its own pointer directly (cudaIpc
+                    // forbids re-opening one's own export).
+                    tx.send(PtrMsg::Own(0, ptr)).expect("send");
+                } else {
+                    let handle = registry.export(space, ptr).expect("export");
+                    tx.send(PtrMsg::Exported(d, handle)).expect("send");
+                }
+            });
+        }
+    });
+    drop(tx);
+
+    // Process 0: collect one message per worker, open foreign handles.
+    let caller = AddressSpace(0);
+    let mut out: Vec<Option<DevPtr>> = vec![None; ndev];
+    for msg in rx {
+        match msg {
+            PtrMsg::Own(d, ptr) => out[d] = Some(ptr),
+            PtrMsg::Exported(d, handle) => {
+                let ptr = registry.open(caller, handle)?;
+                out[d] = Some(ptr);
+            }
+        }
+    }
+    out.into_iter()
+        .enumerate()
+        .map(|(d, p)| p.ok_or_else(|| Error::ipc(format!("worker {d} never reported its shard"))))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mpmd_gathers_all_pointers() {
+        let node = SimNode::new_uniform(4, 1 << 20);
+        let panels: Vec<DevPtr> = (0..4).map(|d| node.alloc(d, 64).unwrap()).collect();
+        let gathered = gather_pointers_mpmd(&node, panels.clone()).unwrap();
+        assert_eq!(gathered, panels);
+    }
+
+    #[test]
+    fn mpmd_single_process() {
+        let node = SimNode::new_uniform(1, 1 << 20);
+        let panels = vec![node.alloc(0, 16).unwrap()];
+        let gathered = gather_pointers_mpmd(&node, panels.clone()).unwrap();
+        assert_eq!(gathered, panels);
+    }
+}

@@ -1,0 +1,188 @@
+//! Minimal request-loop service: a queue of solve jobs executed by a
+//! worker thread, with completion handles.
+//!
+//! The real JAXMg lives inside JAX's JIT, so its "request loop" is the
+//! XLA program; for a standalone coordinator binary we provide the
+//! conventional server shape instead (the vendored crate set has no
+//! tokio, so this is a std-thread worker pool — same semantics, no
+//! async syntax). Used by the CLI's `serve` mode and the e2e example.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct QueueInner {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+    in_flight: usize,
+}
+
+/// A FIFO job queue with a fixed worker pool.
+pub struct JobQueue {
+    inner: Arc<(Mutex<QueueInner>, Condvar)>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl JobQueue {
+    /// Start a queue with `n_workers` executor threads.
+    pub fn new(n_workers: usize) -> Self {
+        let inner = Arc::new((
+            Mutex::new(QueueInner { jobs: VecDeque::new(), shutdown: false, in_flight: 0 }),
+            Condvar::new(),
+        ));
+        let workers = (0..n_workers.max(1))
+            .map(|_| {
+                let inner = inner.clone();
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let (lock, cv) = &*inner;
+                        let mut q = lock.lock().unwrap();
+                        loop {
+                            if let Some(job) = q.jobs.pop_front() {
+                                q.in_flight += 1;
+                                break Some(job);
+                            }
+                            if q.shutdown {
+                                break None;
+                            }
+                            q = cv.wait(q).unwrap();
+                        }
+                    };
+                    match job {
+                        Some(job) => {
+                            job();
+                            let (lock, cv) = &*inner;
+                            let mut q = lock.lock().unwrap();
+                            q.in_flight -= 1;
+                            cv.notify_all();
+                        }
+                        None => return,
+                    }
+                })
+            })
+            .collect();
+        JobQueue { inner, workers }
+    }
+
+    /// Submit a job returning `T`; get a [`SolveHandle`] to wait on.
+    pub fn submit<T: Send + 'static>(
+        &self,
+        f: impl FnOnce() -> T + Send + 'static,
+    ) -> SolveHandle<T> {
+        let slot = Arc::new((Mutex::new(None::<T>), Condvar::new()));
+        let slot2 = slot.clone();
+        let job: Job = Box::new(move || {
+            let out = f();
+            let (lock, cv) = &*slot2;
+            *lock.lock().unwrap() = Some(out);
+            cv.notify_all();
+        });
+        let (lock, cv) = &*self.inner;
+        let mut q = lock.lock().unwrap();
+        assert!(!q.shutdown, "queue is shut down");
+        q.jobs.push_back(job);
+        cv.notify_one();
+        drop(q);
+        SolveHandle { slot }
+    }
+
+    /// Number of jobs queued (not yet started).
+    pub fn pending(&self) -> usize {
+        self.inner.0.lock().unwrap().jobs.len()
+    }
+
+    /// Block until the queue is fully drained.
+    pub fn drain(&self) {
+        let (lock, cv) = &*self.inner;
+        let mut q = lock.lock().unwrap();
+        while !q.jobs.is_empty() || q.in_flight > 0 {
+            q = cv.wait(q).unwrap();
+        }
+    }
+}
+
+impl Drop for JobQueue {
+    fn drop(&mut self) {
+        {
+            let (lock, cv) = &*self.inner;
+            lock.lock().unwrap().shutdown = true;
+            cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Completion handle for a submitted job.
+pub struct SolveHandle<T> {
+    slot: Arc<(Mutex<Option<T>>, Condvar)>,
+}
+
+impl<T> SolveHandle<T> {
+    /// Block until the job completes and take its result.
+    pub fn wait(self) -> T {
+        let (lock, cv) = &*self.slot;
+        let mut guard = lock.lock().unwrap();
+        loop {
+            if let Some(v) = guard.take() {
+                return v;
+            }
+            guard = cv.wait(guard).unwrap();
+        }
+    }
+
+    /// Non-blocking readiness check.
+    pub fn is_ready(&self) -> bool {
+        self.slot.0.lock().unwrap().is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jobs_run_and_return() {
+        let q = JobQueue::new(2);
+        let h1 = q.submit(|| 1 + 1);
+        let h2 = q.submit(|| "hello".len());
+        assert_eq!(h1.wait(), 2);
+        assert_eq!(h2.wait(), 5);
+    }
+
+    #[test]
+    fn many_jobs_all_complete() {
+        let q = JobQueue::new(4);
+        let handles: Vec<_> = (0..64).map(|i| q.submit(move || i * i)).collect();
+        let results: Vec<usize> = handles.into_iter().map(|h| h.wait()).collect();
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(*r, i * i);
+        }
+    }
+
+    #[test]
+    fn drain_waits_for_everything() {
+        let q = JobQueue::new(2);
+        let counter = Arc::new(Mutex::new(0));
+        for _ in 0..10 {
+            let c = counter.clone();
+            q.submit(move || {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                *c.lock().unwrap() += 1;
+            });
+        }
+        q.drain();
+        assert_eq!(*counter.lock().unwrap(), 10);
+    }
+
+    #[test]
+    fn is_ready_flips() {
+        let q = JobQueue::new(1);
+        let h = q.submit(|| 42);
+        q.drain();
+        assert!(h.is_ready());
+        assert_eq!(h.wait(), 42);
+    }
+}

@@ -1,0 +1,58 @@
+//! SPMD execution driver (Fig. 2, left).
+//!
+//! `shard_map` launches one thread per GPU; all threads share one
+//! virtual address space, so each worker simply writes its shard's
+//! device pointer into a shared table (the POSIX-shm analogue) and the
+//! single caller (the coordinator thread) gathers all of them.
+
+use crate::device::{DevPtr, SimNode};
+use crate::error::Result;
+use crate::ipc::SharedPtrTable;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Spawn one worker thread per device; worker `d` publishes `panels[d]`
+/// into the shared table; the caller gathers all pointers.
+///
+/// Returns the pointers in device order, as the single caller sees them.
+pub fn gather_pointers_spmd(node: &SimNode, panels: Vec<DevPtr>) -> Result<Vec<DevPtr>> {
+    let ndev = node.num_devices();
+    assert_eq!(panels.len(), ndev);
+    let table = Arc::new(SharedPtrTable::new(ndev));
+
+    std::thread::scope(|scope| -> Result<()> {
+        for (d, ptr) in panels.iter().enumerate() {
+            let table = table.clone();
+            let ptr = *ptr;
+            scope.spawn(move || {
+                // Worker d: "this is my shard" (the shard_map body).
+                table.publish(d, ptr).expect("worker publish");
+            });
+        }
+        Ok(())
+    })?;
+
+    // Single caller: wait for every worker, then proceed with all pointers.
+    table.gather(Duration::from_secs(10))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spmd_gathers_all_pointers_in_order() {
+        let node = SimNode::new_uniform(4, 1 << 20);
+        let panels: Vec<DevPtr> = (0..4).map(|d| node.alloc(d, 64).unwrap()).collect();
+        let gathered = gather_pointers_spmd(&node, panels.clone()).unwrap();
+        assert_eq!(gathered, panels);
+    }
+
+    #[test]
+    fn spmd_single_device() {
+        let node = SimNode::new_uniform(1, 1 << 20);
+        let panels = vec![node.alloc(0, 16).unwrap()];
+        let gathered = gather_pointers_spmd(&node, panels.clone()).unwrap();
+        assert_eq!(gathered, panels);
+    }
+}

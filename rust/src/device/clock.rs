@@ -1,0 +1,80 @@
+//! Per-device simulated timeline.
+//!
+//! Each device accumulates "busy time" in simulated seconds. Copies and
+//! kernels charge their modeled duration; the node-level `sim_time()` is
+//! the max over devices. This gives the *projected* wall-clock column of
+//! the benchmark tables (the real-H200 estimate), measured alongside the
+//! actual CPU wall-clock of the simulation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotone simulated clock, nanosecond resolution, thread-safe.
+#[derive(Debug, Default)]
+pub struct SimClock {
+    nanos: AtomicU64,
+}
+
+impl SimClock {
+    /// New clock at t = 0.
+    pub fn new() -> Self {
+        SimClock { nanos: AtomicU64::new(0) }
+    }
+
+    /// Current time in seconds.
+    pub fn now(&self) -> f64 {
+        self.nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Advance by `seconds` of busy time.
+    pub fn advance(&self, seconds: f64) {
+        debug_assert!(seconds >= 0.0, "cannot advance clock backwards");
+        let ns = (seconds * 1e9).round() as u64;
+        self.nanos.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Synchronize this clock forward to at least `seconds` (barrier
+    /// semantics: a device waiting on a peer's data cannot proceed
+    /// before the peer's timeline).
+    pub fn sync_to(&self, seconds: f64) {
+        let target = (seconds * 1e9).round() as u64;
+        self.nanos.fetch_max(target, Ordering::Relaxed);
+    }
+
+    /// Reset to t = 0.
+    pub fn reset(&self) {
+        self.nanos.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advances_and_reads() {
+        let c = SimClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance(1.5e-3);
+        assert!((c.now() - 1.5e-3).abs() < 1e-12);
+        c.advance(0.5e-3);
+        assert!((c.now() - 2.0e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sync_to_only_moves_forward() {
+        let c = SimClock::new();
+        c.advance(5e-6);
+        c.sync_to(3e-6); // earlier: no-op
+        assert!((c.now() - 5e-6).abs() < 1e-12);
+        c.sync_to(9e-6);
+        assert!((c.now() - 9e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let c = SimClock::new();
+        c.advance(1.0);
+        c.reset();
+        assert_eq!(c.now(), 0.0);
+    }
+}

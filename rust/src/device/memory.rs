@@ -1,0 +1,269 @@
+//! Simulated device memory: allocation table + VRAM accounting.
+//!
+//! Each allocation is a real host `Vec<u8>` addressed by an opaque id,
+//! so data movement in the simulator is byte-accurate. Capacity is
+//! charged per allocation and over-subscription fails exactly like
+//! `cudaMalloc` returning `cudaErrorMemoryAllocation` — this is what
+//! makes the paper's "largest solvable N" tables reproducible.
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Opaque device pointer: (device ordinal, allocation id, byte offset).
+///
+/// Mirrors a raw CUDA device pointer in the ways that matter here: it
+/// is meaningless outside the owning node, it can be offset, and it can
+/// be smuggled across "process" boundaries only via `crate::ipc`.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub struct DevPtr {
+    pub device: usize,
+    pub alloc_id: u64,
+    pub offset: usize,
+}
+
+impl DevPtr {
+    /// A pointer `bytes` further into the same allocation.
+    pub fn add(self, bytes: usize) -> DevPtr {
+        DevPtr { offset: self.offset + bytes, ..self }
+    }
+}
+
+/// Usage summary for one device.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct MemoryReport {
+    pub capacity: usize,
+    pub used: usize,
+    pub allocations: usize,
+    pub peak_used: usize,
+}
+
+/// Allocation table for a single simulated device.
+#[derive(Debug)]
+pub struct DeviceMemory {
+    capacity: usize,
+    used: usize,
+    peak_used: usize,
+    next_id: u64,
+    allocs: HashMap<u64, Vec<u8>>,
+}
+
+impl DeviceMemory {
+    /// Device memory with `capacity` bytes of VRAM.
+    pub fn new(capacity: usize) -> Self {
+        DeviceMemory { capacity, used: 0, peak_used: 0, next_id: 1, allocs: HashMap::new() }
+    }
+
+    /// Allocate `bytes`; fails with OOM when capacity would be exceeded.
+    pub fn alloc(&mut self, device: usize, bytes: usize) -> Result<DevPtr> {
+        if self.used + bytes > self.capacity {
+            return Err(Error::DeviceOom {
+                device,
+                requested: bytes,
+                free: self.capacity - self.used,
+                capacity: self.capacity,
+            });
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.allocs.insert(id, vec![0u8; bytes]);
+        self.used += bytes;
+        self.peak_used = self.peak_used.max(self.used);
+        Ok(DevPtr { device, alloc_id: id, offset: 0 })
+    }
+
+    /// Free an allocation (must address its base or any offset into it).
+    pub fn free(&mut self, ptr: DevPtr) -> Result<()> {
+        match self.allocs.remove(&ptr.alloc_id) {
+            Some(buf) => {
+                self.used -= buf.len();
+                Ok(())
+            }
+            None => Err(Error::InvalidPointer { device: ptr.device, alloc_id: ptr.alloc_id }),
+        }
+    }
+
+    /// Size in bytes of the allocation behind `ptr`.
+    pub fn size_of(&self, ptr: DevPtr) -> Result<usize> {
+        self.allocs
+            .get(&ptr.alloc_id)
+            .map(|b| b.len())
+            .ok_or(Error::InvalidPointer { device: ptr.device, alloc_id: ptr.alloc_id })
+    }
+
+    fn buf(&self, ptr: DevPtr) -> Result<&Vec<u8>> {
+        self.allocs.get(&ptr.alloc_id).ok_or(Error::InvalidPointer { device: ptr.device, alloc_id: ptr.alloc_id })
+    }
+
+    fn buf_mut(&mut self, ptr: DevPtr) -> Result<&mut Vec<u8>> {
+        self.allocs
+            .get_mut(&ptr.alloc_id)
+            .ok_or(Error::InvalidPointer { device: ptr.device, alloc_id: ptr.alloc_id })
+    }
+
+    /// Write raw bytes at `ptr.offset + extra_off`.
+    pub fn write_bytes(&mut self, ptr: DevPtr, extra_off: usize, src: &[u8]) -> Result<()> {
+        let base = ptr.offset + extra_off;
+        let buf = self.buf_mut(ptr)?;
+        if base + src.len() > buf.len() {
+            return Err(Error::OutOfBounds { offset: base, len: src.len(), size: buf.len() });
+        }
+        buf[base..base + src.len()].copy_from_slice(src);
+        Ok(())
+    }
+
+    /// Read raw bytes from `ptr.offset + extra_off`.
+    pub fn read_bytes(&self, ptr: DevPtr, extra_off: usize, dst: &mut [u8]) -> Result<()> {
+        let base = ptr.offset + extra_off;
+        let buf = self.buf(ptr)?;
+        if base + dst.len() > buf.len() {
+            return Err(Error::OutOfBounds { offset: base, len: dst.len(), size: buf.len() });
+        }
+        dst.copy_from_slice(&buf[base..base + dst.len()]);
+        Ok(())
+    }
+
+    /// Copy bytes between two allocations on *this* device
+    /// (or within one allocation; ranges must not overlap).
+    pub fn copy_within_device(
+        &mut self,
+        src: DevPtr,
+        src_off: usize,
+        dst: DevPtr,
+        dst_off: usize,
+        len: usize,
+    ) -> Result<()> {
+        if src.alloc_id == dst.alloc_id {
+            let s = src.offset + src_off;
+            let d = dst.offset + dst_off;
+            let buf = self.buf_mut(src)?;
+            if s + len > buf.len() || d + len > buf.len() {
+                return Err(Error::OutOfBounds { offset: s.max(d), len, size: buf.len() });
+            }
+            assert!(s + len <= d || d + len <= s, "overlapping same-alloc copy");
+            buf.copy_within(s..s + len, d);
+            return Ok(());
+        }
+        // Split-borrow via temporary take; cheap because Vec move.
+        let src_base = src.offset + src_off;
+        let mut sbuf = match self.allocs.remove(&src.alloc_id) {
+            Some(b) => b,
+            None => return Err(Error::InvalidPointer { device: src.device, alloc_id: src.alloc_id }),
+        };
+        let res = (|| {
+            if src_base + len > sbuf.len() {
+                return Err(Error::OutOfBounds { offset: src_base, len, size: sbuf.len() });
+            }
+            let dbuf = self.buf_mut(dst)?;
+            let dst_base = dst.offset + dst_off;
+            if dst_base + len > dbuf.len() {
+                return Err(Error::OutOfBounds { offset: dst_base, len, size: dbuf.len() });
+            }
+            dbuf[dst_base..dst_base + len].copy_from_slice(&sbuf[src_base..src_base + len]);
+            Ok(())
+        })();
+        self.allocs.insert(src.alloc_id, std::mem::take(&mut sbuf));
+        res
+    }
+
+    /// Copy bytes from an allocation on this device into an allocation
+    /// on `other` (a different device's table) without host staging —
+    /// the simulator's peer-DMA fast path.
+    pub fn copy_into(
+        &self,
+        src: DevPtr,
+        src_off: usize,
+        other: &mut DeviceMemory,
+        dst: DevPtr,
+        dst_off: usize,
+        len: usize,
+    ) -> Result<()> {
+        let sbuf = self.buf(src)?;
+        let src_base = src.offset + src_off;
+        if src_base + len > sbuf.len() {
+            return Err(Error::OutOfBounds { offset: src_base, len, size: sbuf.len() });
+        }
+        let dbuf = other.buf_mut(dst)?;
+        let dst_base = dst.offset + dst_off;
+        if dst_base + len > dbuf.len() {
+            return Err(Error::OutOfBounds { offset: dst_base, len, size: dbuf.len() });
+        }
+        dbuf[dst_base..dst_base + len].copy_from_slice(&sbuf[src_base..src_base + len]);
+        Ok(())
+    }
+
+    /// Usage report.
+    pub fn report(&self) -> MemoryReport {
+        MemoryReport {
+            capacity: self.capacity,
+            used: self.used,
+            allocations: self.allocs.len(),
+            peak_used: self.peak_used,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_tracks_usage_and_peak() {
+        let mut m = DeviceMemory::new(100);
+        let a = m.alloc(0, 60).unwrap();
+        assert_eq!(m.report().used, 60);
+        m.free(a).unwrap();
+        let _b = m.alloc(0, 40).unwrap();
+        let r = m.report();
+        assert_eq!(r.used, 40);
+        assert_eq!(r.peak_used, 60);
+        assert_eq!(r.allocations, 1);
+    }
+
+    #[test]
+    fn oob_write_rejected() {
+        let mut m = DeviceMemory::new(100);
+        let a = m.alloc(0, 8).unwrap();
+        assert!(m.write_bytes(a, 4, &[0u8; 8]).is_err());
+        assert!(m.write_bytes(a, 0, &[0u8; 8]).is_ok());
+    }
+
+    #[test]
+    fn stale_pointer_rejected() {
+        let mut m = DeviceMemory::new(100);
+        let a = m.alloc(0, 8).unwrap();
+        m.free(a).unwrap();
+        let mut buf = [0u8; 4];
+        assert!(matches!(m.read_bytes(a, 0, &mut buf), Err(Error::InvalidPointer { .. })));
+    }
+
+    #[test]
+    fn copy_within_device_cross_alloc() {
+        let mut m = DeviceMemory::new(100);
+        let a = m.alloc(0, 8).unwrap();
+        let b = m.alloc(0, 8).unwrap();
+        m.write_bytes(a, 0, &[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+        m.copy_within_device(a, 2, b, 0, 4).unwrap();
+        let mut out = [0u8; 8];
+        m.read_bytes(b, 0, &mut out).unwrap();
+        assert_eq!(out, [3, 4, 5, 6, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn copy_same_alloc_disjoint() {
+        let mut m = DeviceMemory::new(100);
+        let a = m.alloc(0, 8).unwrap();
+        m.write_bytes(a, 0, &[9, 8, 7, 6, 0, 0, 0, 0]).unwrap();
+        m.copy_within_device(a, 0, a, 4, 4).unwrap();
+        let mut out = [0u8; 8];
+        m.read_bytes(a, 0, &mut out).unwrap();
+        assert_eq!(out, [9, 8, 7, 6, 9, 8, 7, 6]);
+    }
+
+    #[test]
+    fn devptr_add_offsets() {
+        let p = DevPtr { device: 1, alloc_id: 7, offset: 16 };
+        let q = p.add(8);
+        assert_eq!(q.offset, 24);
+        assert_eq!(q.alloc_id, 7);
+    }
+}

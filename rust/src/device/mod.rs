@@ -1,0 +1,330 @@
+//! Simulated multi-GPU node.
+//!
+//! The paper runs on a single node with 8 NVIDIA H200 GPUs connected by
+//! NVLink. This environment has no GPUs, so we substitute a *simulated*
+//! node that preserves the behaviours the system exercises (see
+//! DESIGN.md §Hardware substitution):
+//!
+//! * **VRAM accounting** — every allocation is charged against the
+//!   device's capacity and fails with [`crate::Error::DeviceOom`] when
+//!   exceeded, so "largest solvable N" limits reproduce.
+//! * **Device pointers** — allocations are addressed by opaque
+//!   [`DevPtr`]s; honouring them across simulated address spaces is the
+//!   job of `crate::ipc`, exactly as `cudaIpc` is in the real system.
+//! * **Peer-to-peer copies** — `peer_copy_async` is the
+//!   `cudaMemcpyPeerAsync` analogue: byte-accurate data movement plus a
+//!   simulated-time charge from the NVLink cost model.
+//! * **Streams/events** — per-device ordered timelines over a
+//!   [`SimClock`], giving the projected wall-clock that the benchmark
+//!   harness reports next to real (CPU) wall-clock.
+
+mod clock;
+mod memory;
+mod peer;
+mod stream;
+mod topology;
+
+pub use clock::SimClock;
+pub use memory::{DevPtr, DeviceMemory, MemoryReport};
+pub use peer::PeerCopyEngine;
+pub use stream::{Event, Stream};
+pub use topology::{LinkKind, NodeTopology};
+
+use crate::error::{Error, Result};
+use crate::metrics::Metrics;
+use crate::scalar::Scalar;
+use std::sync::{Arc, Mutex};
+
+/// One simulated GPU: VRAM + a timeline.
+#[derive(Debug)]
+pub struct SimGpu {
+    id: usize,
+    mem: Mutex<DeviceMemory>,
+    clock: SimClock,
+}
+
+impl SimGpu {
+    fn new(id: usize, capacity: usize) -> Self {
+        SimGpu { id, mem: Mutex::new(DeviceMemory::new(capacity)), clock: SimClock::new() }
+    }
+
+    /// Device ordinal within the node.
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// This device's simulated timeline.
+    pub fn clock(&self) -> &SimClock {
+        &self.clock
+    }
+
+    /// VRAM usage report.
+    pub fn memory_report(&self) -> MemoryReport {
+        self.mem.lock().unwrap().report()
+    }
+}
+
+/// A simulated multi-GPU node — the substrate everything else runs on.
+///
+/// Cheap to clone (`Arc` inside); all methods take `&self` and are
+/// thread-safe so SPMD worker threads can drive their own devices.
+#[derive(Clone, Debug)]
+pub struct SimNode {
+    inner: Arc<NodeInner>,
+}
+
+#[derive(Debug)]
+struct NodeInner {
+    gpus: Vec<SimGpu>,
+    topology: NodeTopology,
+    metrics: Arc<Metrics>,
+}
+
+impl SimNode {
+    /// A node of `n` identical devices with `vram_bytes` capacity each,
+    /// wired all-to-all with NVLink-class links (the paper's testbed
+    /// shape: 8 × H200 over NVLink).
+    pub fn new_uniform(n: usize, vram_bytes: usize) -> Self {
+        Self::with_topology(n, vram_bytes, NodeTopology::nvlink_all_to_all(n))
+    }
+
+    /// The paper's testbed at full scale: 8 devices × 143 GB.
+    pub fn h200_node() -> Self {
+        Self::new_uniform(8, 143 * 1000 * 1000 * 1000)
+    }
+
+    /// A node with an explicit link topology (e.g. PCIe fallback links).
+    pub fn with_topology(n: usize, vram_bytes: usize, topology: NodeTopology) -> Self {
+        assert!(n > 0, "node needs at least one device");
+        assert_eq!(topology.num_devices(), n, "topology size mismatch");
+        let gpus = (0..n).map(|i| SimGpu::new(i, vram_bytes)).collect();
+        SimNode { inner: Arc::new(NodeInner { gpus, topology, metrics: Arc::new(Metrics::new()) }) }
+    }
+
+    /// Number of devices on the node.
+    pub fn num_devices(&self) -> usize {
+        self.inner.gpus.len()
+    }
+
+    /// Borrow a device.
+    pub fn device(&self, i: usize) -> Result<&SimGpu> {
+        self.inner.gpus.get(i).ok_or(Error::InvalidDevice { device: i, count: self.num_devices() })
+    }
+
+    /// The node's link topology.
+    pub fn topology(&self) -> &NodeTopology {
+        &self.inner.topology
+    }
+
+    /// Shared metrics sink.
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.inner.metrics
+    }
+
+    /// Allocate `bytes` on device `dev`.
+    pub fn alloc(&self, dev: usize, bytes: usize) -> Result<DevPtr> {
+        let gpu = self.device(dev)?;
+        let ptr = gpu.mem.lock().unwrap().alloc(dev, bytes)?;
+        self.inner.metrics.allocs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(ptr)
+    }
+
+    /// Allocate space for `len` scalars of type `S` on device `dev`.
+    pub fn alloc_scalars<S: Scalar>(&self, dev: usize, len: usize) -> Result<DevPtr> {
+        self.alloc(dev, len * std::mem::size_of::<S>())
+    }
+
+    /// Free an allocation.
+    pub fn free(&self, ptr: DevPtr) -> Result<()> {
+        let gpu = self.device(ptr.device)?;
+        gpu.mem.lock().unwrap().free(ptr)?;
+        self.inner.metrics.frees.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Host→device write of typed scalars at `ptr + offset_elems`.
+    ///
+    /// No simulated-time charge: in the simulator host staging is also
+    /// how "on-device" kernels touch data, which the real system does
+    /// without PCIe traffic. True H2D cost is charged explicitly by
+    /// `DistMatrix::scatter`/`gather` (the `jax.device_put` boundary).
+    pub fn write_slice<S: Scalar>(&self, ptr: DevPtr, offset_elems: usize, src: &[S]) -> Result<()> {
+        let gpu = self.device(ptr.device)?;
+        let bytes = std::mem::size_of_val(src);
+        gpu.mem.lock().unwrap().write_bytes(ptr, offset_elems * std::mem::size_of::<S>(), as_bytes(src))?;
+        self.inner.metrics.add_h2d(bytes as u64);
+        Ok(())
+    }
+
+    /// Device→host read of typed scalars from `ptr + offset_elems`.
+    /// (See `write_slice` for why this carries no simulated-time charge.)
+    pub fn read_slice<S: Scalar>(&self, ptr: DevPtr, offset_elems: usize, dst: &mut [S]) -> Result<()> {
+        let gpu = self.device(ptr.device)?;
+        let bytes = std::mem::size_of_val(dst);
+        gpu.mem.lock().unwrap().read_bytes(ptr, offset_elems * std::mem::size_of::<S>(), as_bytes_mut(dst))?;
+        self.inner.metrics.add_d2h(bytes as u64);
+        Ok(())
+    }
+
+    /// Explicitly charge a device timeline with host↔device transfer
+    /// time for `bytes` (used at the scatter/gather boundary).
+    pub fn charge_h2d(&self, dev: usize, bytes: usize) -> Result<()> {
+        let t = self.inner.topology.h2d_time(bytes);
+        self.device(dev)?.clock().advance(t);
+        Ok(())
+    }
+
+    /// Charge a device timeline with `seconds` of kernel time (the cost
+    /// model computes the duration; the device clock owns the timeline).
+    pub fn charge_kernel(&self, dev: usize, seconds: f64, flops: u64) -> Result<()> {
+        self.device(dev)?.clock().advance(seconds);
+        self.inner.metrics.add_kernel(flops);
+        Ok(())
+    }
+
+    /// `cudaMemcpyPeerAsync` analogue: copy `len_bytes` from
+    /// `src + src_off` (device i) to `dst + dst_off` (device j).
+    /// Byte-accurate, and charges both device timelines with the link
+    /// cost. Same-device copies are allowed (charged at local bandwidth).
+    pub fn peer_copy(
+        &self,
+        src: DevPtr,
+        src_off: usize,
+        dst: DevPtr,
+        dst_off: usize,
+        len_bytes: usize,
+    ) -> Result<()> {
+        PeerCopyEngine::copy(self, src, src_off, dst, dst_off, len_bytes)
+    }
+
+    /// Simulated global time: the max over device timelines (a barrier
+    /// "now"). This is what the projected-time column of the benchmark
+    /// tables reads.
+    pub fn sim_time(&self) -> f64 {
+        self.inner.gpus.iter().map(|g| g.clock.now()).fold(0.0, f64::max)
+    }
+
+    /// Reset all device timelines and metrics (between bench reps).
+    pub fn reset_accounting(&self) {
+        for g in &self.inner.gpus {
+            g.clock.reset();
+        }
+        self.inner.metrics.reset();
+    }
+
+    /// Total free VRAM per device.
+    pub fn memory_reports(&self) -> Vec<MemoryReport> {
+        self.inner.gpus.iter().map(|g| g.memory_report()).collect()
+    }
+
+    pub(crate) fn mem_of(&self, dev: usize) -> Result<std::sync::MutexGuard<'_, DeviceMemory>> {
+        Ok(self.device(dev)?.mem.lock().unwrap())
+    }
+}
+
+/// Reinterpret a scalar slice as bytes (scalars are plain-old-data).
+pub(crate) fn as_bytes<S: Scalar>(s: &[S]) -> &[u8] {
+    // Safety: S is Copy + repr-compatible plain data; lifetime tied to input.
+    unsafe { std::slice::from_raw_parts(s.as_ptr() as *const u8, std::mem::size_of_val(s)) }
+}
+
+/// Reinterpret a mutable scalar slice as bytes.
+pub(crate) fn as_bytes_mut<S: Scalar>(s: &mut [S]) -> &mut [u8] {
+    // Safety: as above; all bit patterns of the backing floats are valid.
+    unsafe { std::slice::from_raw_parts_mut(s.as_mut_ptr() as *mut u8, std::mem::size_of_val(s)) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scalar::c64;
+
+    #[test]
+    fn alloc_write_read_roundtrip() {
+        let node = SimNode::new_uniform(2, 1 << 20);
+        let ptr = node.alloc_scalars::<f64>(0, 16).unwrap();
+        let src: Vec<f64> = (0..16).map(|i| i as f64).collect();
+        node.write_slice(ptr, 0, &src).unwrap();
+        let mut dst = vec![0.0f64; 16];
+        node.read_slice(ptr, 0, &mut dst).unwrap();
+        assert_eq!(src, dst);
+    }
+
+    #[test]
+    fn oom_at_capacity() {
+        let node = SimNode::new_uniform(1, 1024);
+        let _a = node.alloc(0, 512).unwrap();
+        let _b = node.alloc(0, 512).unwrap();
+        match node.alloc(0, 1) {
+            Err(Error::DeviceOom { device, .. }) => assert_eq!(device, 0),
+            other => panic!("expected OOM, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn free_releases_capacity() {
+        let node = SimNode::new_uniform(1, 1024);
+        let a = node.alloc(0, 1024).unwrap();
+        node.free(a).unwrap();
+        let _b = node.alloc(0, 1024).unwrap();
+        // Double free is an error.
+        assert!(node.free(a).is_err());
+    }
+
+    #[test]
+    fn peer_copy_moves_data_and_charges_clock() {
+        let node = SimNode::new_uniform(2, 1 << 20);
+        let a = node.alloc_scalars::<c64>(0, 8).unwrap();
+        let b = node.alloc_scalars::<c64>(1, 8).unwrap();
+        let src: Vec<c64> = (0..8).map(|i| c64::new(i as f64, -(i as f64))).collect();
+        node.write_slice(a, 0, &src).unwrap();
+        let t0 = node.sim_time();
+        node.peer_copy(a, 0, b, 0, 8 * 16).unwrap();
+        let mut dst = vec![c64::zero(); 8];
+        node.read_slice(b, 0, &mut dst).unwrap();
+        assert_eq!(src, dst);
+        assert!(node.sim_time() > t0, "peer copy must advance simulated time");
+        assert_eq!(node.metrics().snapshot().peer_bytes, 128);
+    }
+
+    #[test]
+    fn offsets_respected() {
+        let node = SimNode::new_uniform(2, 1 << 16);
+        let a = node.alloc_scalars::<f32>(0, 8).unwrap();
+        let b = node.alloc_scalars::<f32>(1, 8).unwrap();
+        node.write_slice(a, 0, &[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]).unwrap();
+        node.write_slice(b, 0, &[0.0f32; 8]).unwrap();
+        // Copy elements 2..6 of a into positions 1..5 of b.
+        node.peer_copy(a, 2 * 4, b, 1 * 4, 4 * 4).unwrap();
+        let mut out = vec![0.0f32; 8];
+        node.read_slice(b, 0, &mut out).unwrap();
+        assert_eq!(out, vec![0.0, 3.0, 4.0, 5.0, 6.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn invalid_device_rejected() {
+        let node = SimNode::new_uniform(2, 1024);
+        assert!(matches!(node.alloc(5, 16), Err(Error::InvalidDevice { device: 5, count: 2 })));
+    }
+
+    #[test]
+    fn reset_accounting_clears() {
+        let node = SimNode::new_uniform(2, 1 << 16);
+        let a = node.alloc_scalars::<f32>(0, 4).unwrap();
+        let b = node.alloc_scalars::<f32>(1, 4).unwrap();
+        node.write_slice(a, 0, &[1.0f32; 4]).unwrap();
+        node.peer_copy(a, 0, b, 0, 16).unwrap();
+        assert!(node.sim_time() > 0.0);
+        node.reset_accounting();
+        assert_eq!(node.sim_time(), 0.0);
+        assert_eq!(node.metrics().snapshot().peer_bytes, 0);
+    }
+
+    #[test]
+    fn h200_node_shape() {
+        let node = SimNode::h200_node();
+        assert_eq!(node.num_devices(), 8);
+        let rep = node.memory_reports();
+        assert_eq!(rep[0].capacity, 143 * 1000 * 1000 * 1000);
+    }
+}

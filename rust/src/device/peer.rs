@@ -1,0 +1,105 @@
+//! Peer-to-peer copy engine — the `cudaMemcpyPeerAsync` analogue.
+//!
+//! Data is moved byte-accurately between the two devices' allocation
+//! tables; the link cost model charges both timelines (source reads,
+//! destination writes, and the destination cannot observe the data
+//! before the transfer completes on the source side).
+
+use super::{DevPtr, SimNode};
+use crate::error::Result;
+
+/// Stateless engine; lives in its own module to keep the locking
+/// discipline (ordered two-device lock) in one place.
+pub struct PeerCopyEngine;
+
+impl PeerCopyEngine {
+    /// Copy `len` bytes from `src + src_off` to `dst + dst_off`,
+    /// possibly across devices.
+    pub fn copy(
+        node: &SimNode,
+        src: DevPtr,
+        src_off: usize,
+        dst: DevPtr,
+        dst_off: usize,
+        len: usize,
+    ) -> Result<()> {
+        if len == 0 {
+            return Ok(());
+        }
+        if src.device == dst.device {
+            // Device-local copy: no peer traffic, but still charged at
+            // local (HBM) bandwidth.
+            let mut mem = node.mem_of(src.device)?;
+            mem.copy_within_device(src, src_off, dst, dst_off, len)?;
+            drop(mem);
+            node.metrics().add_local(len as u64);
+            let t = node.topology().copy_time(src.device, src.device, len);
+            node.device(src.device)?.clock().advance(t);
+            return Ok(());
+        }
+
+        // Cross-device: copy directly between the two allocation tables
+        // under an ordered two-device lock (no staging allocation — this
+        // is the simulator's DMA path; see EXPERIMENTS.md §Perf L3-1).
+        {
+            let (first, second) = if src.device < dst.device {
+                (src.device, dst.device)
+            } else {
+                (dst.device, src.device)
+            };
+            let mem_a = node.mem_of(first)?;
+            let mem_b = node.mem_of(second)?;
+            let (src_mem, mut dst_mem) =
+                if src.device == first { (mem_a, mem_b) } else { (mem_b, mem_a) };
+            src_mem.copy_into(src, src_off, &mut dst_mem, dst, dst_off, len)?;
+        }
+
+        node.metrics().add_peer(len as u64);
+        let t = node.topology().copy_time(src.device, dst.device, len);
+        let src_clock = node.device(src.device)?.clock();
+        let dst_clock = node.device(dst.device)?.clock();
+        // The transfer occupies the source link; the destination can't
+        // see the bytes before the source-side completion.
+        src_clock.advance(t);
+        dst_clock.sync_to(src_clock.now());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::device::SimNode;
+
+    #[test]
+    fn zero_length_is_noop() {
+        let node = SimNode::new_uniform(2, 1024);
+        let a = node.alloc(0, 16).unwrap();
+        let b = node.alloc(1, 16).unwrap();
+        node.peer_copy(a, 0, b, 0, 0).unwrap();
+        assert_eq!(node.metrics().snapshot().peer_copies, 0);
+        assert_eq!(node.sim_time(), 0.0);
+    }
+
+    #[test]
+    fn dest_clock_synced_past_source() {
+        let node = SimNode::new_uniform(2, 1 << 20);
+        let a = node.alloc(0, 1 << 16).unwrap();
+        let b = node.alloc(1, 1 << 16).unwrap();
+        node.peer_copy(a, 0, b, 0, 1 << 16).unwrap();
+        let t0 = node.device(0).unwrap().clock().now();
+        let t1 = node.device(1).unwrap().clock().now();
+        assert!(t0 > 0.0);
+        assert!(t1 >= t0, "destination must not observe data early");
+    }
+
+    #[test]
+    fn local_copy_charges_local_not_peer() {
+        let node = SimNode::new_uniform(1, 1 << 20);
+        let a = node.alloc(0, 64).unwrap();
+        let b = node.alloc(0, 64).unwrap();
+        node.peer_copy(a, 0, b, 0, 64).unwrap();
+        let s = node.metrics().snapshot();
+        assert_eq!(s.peer_bytes, 0);
+        assert_eq!(s.local_bytes, 64);
+    }
+}

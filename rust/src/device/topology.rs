@@ -1,0 +1,131 @@
+//! Node link topology and transfer cost model.
+//!
+//! Encodes the paper's testbed: 8 GPUs fully connected over NVLink.
+//! Transfer times are `latency + bytes / bandwidth` per link class.
+//! Numbers are H200/NVLink-class defaults; the cost model only needs to
+//! preserve the *relative* structure (NVLink ≫ PCIe ≫ host link) for
+//! the benchmark shapes to match the paper.
+
+/// Link classes between two endpoints.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum LinkKind {
+    /// Same device (device-local bandwidth, e.g. HBM3e on H200).
+    Local,
+    /// NVLink peer connection.
+    NvLink,
+    /// PCIe fallback peer connection.
+    Pcie,
+}
+
+/// All-pairs link map plus bandwidth/latency constants.
+#[derive(Clone, Debug)]
+pub struct NodeTopology {
+    n: usize,
+    /// links[i][j] — link class between devices i and j.
+    links: Vec<Vec<LinkKind>>,
+    /// Effective bandwidths in bytes/second.
+    pub local_bw: f64,
+    pub nvlink_bw: f64,
+    pub pcie_bw: f64,
+    pub h2d_bw: f64,
+    /// Per-operation latencies in seconds.
+    pub copy_latency: f64,
+}
+
+impl NodeTopology {
+    /// Fully connected NVLink topology (the paper's 8×H200 node).
+    pub fn nvlink_all_to_all(n: usize) -> Self {
+        let links = (0..n)
+            .map(|i| (0..n).map(|j| if i == j { LinkKind::Local } else { LinkKind::NvLink }).collect())
+            .collect();
+        NodeTopology {
+            n,
+            links,
+            // H200: ~4.8 TB/s HBM3e; NVLink4: ~450 GB/s effective per pair;
+            // PCIe gen5 x16: ~50 GB/s; host link: ~55 GB/s.
+            local_bw: 4.8e12,
+            nvlink_bw: 450e9,
+            pcie_bw: 50e9,
+            h2d_bw: 55e9,
+            copy_latency: 5e-6,
+        }
+    }
+
+    /// PCIe-only topology (the no-NVLink ablation in the benches).
+    pub fn pcie_all_to_all(n: usize) -> Self {
+        let mut t = Self::nvlink_all_to_all(n);
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    t.links[i][j] = LinkKind::Pcie;
+                }
+            }
+        }
+        t
+    }
+
+    /// Number of devices covered by this topology.
+    pub fn num_devices(&self) -> usize {
+        self.n
+    }
+
+    /// Link class between two devices.
+    pub fn link(&self, i: usize, j: usize) -> LinkKind {
+        self.links[i][j]
+    }
+
+    /// Bandwidth of the link between two devices, bytes/second.
+    pub fn bandwidth(&self, i: usize, j: usize) -> f64 {
+        match self.link(i, j) {
+            LinkKind::Local => self.local_bw,
+            LinkKind::NvLink => self.nvlink_bw,
+            LinkKind::Pcie => self.pcie_bw,
+        }
+    }
+
+    /// Modeled duration of a `bytes`-sized copy between two devices.
+    pub fn copy_time(&self, i: usize, j: usize, bytes: usize) -> f64 {
+        self.copy_latency + bytes as f64 / self.bandwidth(i, j)
+    }
+
+    /// Modeled duration of a host↔device transfer.
+    pub fn h2d_time(&self, bytes: usize) -> f64 {
+        self.copy_latency + bytes as f64 / self.h2d_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_to_all_shape() {
+        let t = NodeTopology::nvlink_all_to_all(4);
+        assert_eq!(t.num_devices(), 4);
+        assert_eq!(t.link(0, 0), LinkKind::Local);
+        assert_eq!(t.link(0, 3), LinkKind::NvLink);
+        assert_eq!(t.link(3, 0), LinkKind::NvLink);
+    }
+
+    #[test]
+    fn local_faster_than_peer() {
+        let t = NodeTopology::nvlink_all_to_all(2);
+        let local = t.copy_time(0, 0, 1 << 30);
+        let peer = t.copy_time(0, 1, 1 << 30);
+        assert!(local < peer);
+    }
+
+    #[test]
+    fn nvlink_faster_than_pcie() {
+        let nv = NodeTopology::nvlink_all_to_all(2);
+        let pc = NodeTopology::pcie_all_to_all(2);
+        assert!(nv.copy_time(0, 1, 1 << 30) < pc.copy_time(0, 1, 1 << 30));
+    }
+
+    #[test]
+    fn latency_dominates_small_copies() {
+        let t = NodeTopology::nvlink_all_to_all(2);
+        let tiny = t.copy_time(0, 1, 8);
+        assert!((tiny - t.copy_latency) / t.copy_latency < 0.01);
+    }
+}

@@ -1,0 +1,133 @@
+//! Error types for the jaxmg crate.
+
+use thiserror::Error;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All failure modes surfaced by the jaxmg stack.
+///
+/// The variants mirror the failure classes of the real system: CUDA
+/// allocation failures (`DeviceOom`), invalid IPC handle use across
+/// process boundaries, cuSOLVERMg status codes (`Solver`), and XLA/PJRT
+/// load or execution errors (`Runtime`).
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Simulated device ran out of VRAM.
+    #[error("device {device} out of memory: requested {requested} B, free {free} B of {capacity} B")]
+    DeviceOom {
+        device: usize,
+        requested: usize,
+        free: usize,
+        capacity: usize,
+    },
+
+    /// An operation referenced a device id outside the node.
+    #[error("invalid device id {device} (node has {count} devices)")]
+    InvalidDevice { device: usize, count: usize },
+
+    /// An operation referenced an allocation that does not exist (or was freed).
+    #[error("invalid device pointer: device {device}, allocation {alloc_id}")]
+    InvalidPointer { device: usize, alloc_id: u64 },
+
+    /// Out-of-bounds access within an allocation.
+    #[error("device buffer access out of bounds: offset {offset} + len {len} > size {size}")]
+    OutOfBounds { offset: usize, len: usize, size: usize },
+
+    /// IPC handle misuse (MPMD mode): opening in the exporting process,
+    /// double-open, or open of a revoked handle.
+    #[error("ipc error: {0}")]
+    Ipc(String),
+
+    /// Layout / sharding mismatch (bad tile size, spec mismatch, ...).
+    #[error("layout error: {0}")]
+    Layout(String),
+
+    /// Numerical failure inside a solver, e.g. a non-positive-definite
+    /// pivot in `potrf` (mirrors `CUSOLVER_STATUS_*` + `info > 0`).
+    #[error("solver error: {0}")]
+    Solver(String),
+
+    /// The matrix was not positive definite: leading minor `minor` failed.
+    #[error("matrix is not positive definite: leading minor {minor} is not positive")]
+    NotPositiveDefinite { minor: usize },
+
+    /// Eigensolver failed to converge within the iteration budget.
+    #[error("eigensolver failed to converge at eigenvalue {index} after {iters} iterations")]
+    NoConvergence { index: usize, iters: usize },
+
+    /// Shape mismatch on a public API boundary.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    /// XLA/PJRT runtime errors (artifact missing, compile failure, ...).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Configuration errors from the builder / CLI.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Underlying XLA crate error.
+    #[error("xla: {0}")]
+    Xla(#[from] xla::Error),
+
+    /// IO errors (artifact files).
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    /// Helper for shape errors.
+    pub fn shape(msg: impl Into<String>) -> Self {
+        Error::Shape(msg.into())
+    }
+
+    /// Helper for layout errors.
+    pub fn layout(msg: impl Into<String>) -> Self {
+        Error::Layout(msg.into())
+    }
+
+    /// Helper for solver errors.
+    pub fn solver(msg: impl Into<String>) -> Self {
+        Error::Solver(msg.into())
+    }
+
+    /// Helper for runtime errors.
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        Error::Runtime(msg.into())
+    }
+
+    /// Helper for config errors.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+
+    /// Helper for ipc errors.
+    pub fn ipc(msg: impl Into<String>) -> Self {
+        Error::Ipc(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_oom() {
+        let e = Error::DeviceOom { device: 3, requested: 100, free: 10, capacity: 50 };
+        let s = format!("{e}");
+        assert!(s.contains("device 3"));
+        assert!(s.contains("requested 100"));
+    }
+
+    #[test]
+    fn helpers_construct_variants() {
+        assert!(matches!(Error::shape("x"), Error::Shape(_)));
+        assert!(matches!(Error::layout("x"), Error::Layout(_)));
+        assert!(matches!(Error::solver("x"), Error::Solver(_)));
+        assert!(matches!(Error::runtime("x"), Error::Runtime(_)));
+        assert!(matches!(Error::config("x"), Error::Config(_)));
+        assert!(matches!(Error::ipc("x"), Error::Ipc(_)));
+    }
+}

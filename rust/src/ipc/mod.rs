@@ -1,0 +1,22 @@
+//! Single-caller pointer reconciliation (paper §2.2, Figure 2).
+//!
+//! cuSOLVERMg must be called from **one** thread/process that can see
+//! every device's shard pointer, but `jax.shard_map` launches one
+//! thread (SPMD) or one process (MPMD) per GPU. JAXMg bridges this two
+//! ways, both reproduced here:
+//!
+//! * **SPMD** — all workers share one virtual address space, so a POSIX
+//!   shared-memory table of raw pointers suffices:
+//!   [`SharedPtrTable`] is that table (a slot per device + rendezvous).
+//! * **MPMD** — separate address spaces; raw pointers are *undefined*
+//!   across processes, so allocations must be exported through the
+//!   `cudaIpc` API and re-opened in the caller's space:
+//!   [`IpcRegistry`] models the export/open/close lifecycle, including
+//!   the failure modes (open in the exporting process, open of a
+//!   revoked handle), over simulated [`AddressSpace`]s.
+
+mod registry;
+mod shared_table;
+
+pub use registry::{AddressSpace, IpcHandle, IpcRegistry};
+pub use shared_table::SharedPtrTable;

@@ -1,0 +1,218 @@
+//! MPMD pointer transport: the `cudaIpc` analogue of Figure 2 (right).
+//!
+//! In MPMD mode every device is driven by its own *process*; raw device
+//! pointers are meaningless across process boundaries. CUDA's answer is
+//! `cudaIpcGetMemHandle` / `cudaIpcOpenMemHandle`: export an allocation
+//! as an opaque handle, ship the handle over any transport (the paper
+//! funnels them to process 0), and re-open it in the consuming process.
+//!
+//! [`IpcRegistry`] reproduces the lifecycle **and its failure modes**:
+//!
+//! * a handle cannot be opened in the process that exported it
+//!   (CUDA returns `cudaErrorDeviceUninitialized`/invalid context);
+//! * a handle opened twice in one process is an error;
+//! * a closed (revoked) handle cannot be opened;
+//! * handles are unguessable opaque tokens, like the 64-byte
+//!   `cudaIpcMemHandle_t` blob.
+
+use crate::device::DevPtr;
+use crate::error::{Error, Result};
+use std::collections::{HashMap, HashSet};
+use std::sync::Mutex;
+
+/// A simulated process (virtual address space) identifier.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AddressSpace(pub usize);
+
+/// Opaque transportable handle to an exported device allocation.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub struct IpcHandle {
+    token: u64,
+}
+
+#[derive(Debug)]
+struct ExportEntry {
+    ptr: DevPtr,
+    exporter: AddressSpace,
+    opened_in: HashSet<AddressSpace>,
+    revoked: bool,
+}
+
+/// Node-wide registry of exported allocations.
+#[derive(Debug, Default)]
+pub struct IpcRegistry {
+    inner: Mutex<RegistryInner>,
+}
+
+#[derive(Debug, Default)]
+struct RegistryInner {
+    next_token: u64,
+    exports: HashMap<u64, ExportEntry>,
+}
+
+impl IpcRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// `cudaIpcGetMemHandle`: export `ptr` from `exporter`'s space.
+    /// Only base pointers (offset 0) are exportable, as in CUDA.
+    pub fn export(&self, exporter: AddressSpace, ptr: DevPtr) -> Result<IpcHandle> {
+        if ptr.offset != 0 {
+            return Err(Error::ipc("only base allocation pointers can be exported"));
+        }
+        let mut inner = self.inner.lock().unwrap();
+        // Token stream is deliberately non-sequential (splitmix) so tests
+        // can't accidentally forge handles from small integers.
+        inner.next_token += 1;
+        let mut z = inner.next_token.wrapping_mul(0x9E3779B97F4A7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        let token = z ^ (z >> 31);
+        inner.exports.insert(
+            token,
+            ExportEntry { ptr, exporter, opened_in: HashSet::new(), revoked: false },
+        );
+        Ok(IpcHandle { token })
+    }
+
+    /// `cudaIpcOpenMemHandle`: map an exported allocation into
+    /// `opener`'s space, yielding a pointer usable there.
+    pub fn open(&self, opener: AddressSpace, handle: IpcHandle) -> Result<DevPtr> {
+        let mut inner = self.inner.lock().unwrap();
+        let entry = inner
+            .exports
+            .get_mut(&handle.token)
+            .ok_or_else(|| Error::ipc(format!("unknown ipc handle {:#x}", handle.token)))?;
+        if entry.revoked {
+            return Err(Error::ipc("handle has been closed by the exporter"));
+        }
+        if entry.exporter == opener {
+            return Err(Error::ipc(
+                "cudaIpcOpenMemHandle cannot be called in the exporting process",
+            ));
+        }
+        if !entry.opened_in.insert(opener) {
+            return Err(Error::ipc(format!("handle already open in process {}", opener.0)));
+        }
+        Ok(entry.ptr)
+    }
+
+    /// `cudaIpcCloseMemHandle` from the consumer side: release the
+    /// mapping in `opener`'s space.
+    pub fn close(&self, opener: AddressSpace, handle: IpcHandle) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let entry = inner
+            .exports
+            .get_mut(&handle.token)
+            .ok_or_else(|| Error::ipc(format!("unknown ipc handle {:#x}", handle.token)))?;
+        if !entry.opened_in.remove(&opener) {
+            return Err(Error::ipc(format!("handle not open in process {}", opener.0)));
+        }
+        Ok(())
+    }
+
+    /// Exporter revokes the handle (e.g. frees the allocation). Any
+    /// subsequent `open` fails.
+    pub fn revoke(&self, exporter: AddressSpace, handle: IpcHandle) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let entry = inner
+            .exports
+            .get_mut(&handle.token)
+            .ok_or_else(|| Error::ipc(format!("unknown ipc handle {:#x}", handle.token)))?;
+        if entry.exporter != exporter {
+            return Err(Error::ipc("only the exporting process may revoke a handle"));
+        }
+        entry.revoked = true;
+        Ok(())
+    }
+
+    /// How many spaces currently have `handle` open (diagnostics).
+    pub fn open_count(&self, handle: IpcHandle) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .exports
+            .get(&handle.token)
+            .map(|e| e.opened_in.len())
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ptr(device: usize, id: u64) -> DevPtr {
+        DevPtr { device, alloc_id: id, offset: 0 }
+    }
+
+    #[test]
+    fn export_open_roundtrip() {
+        let reg = IpcRegistry::new();
+        let h = reg.export(AddressSpace(1), ptr(1, 42)).unwrap();
+        let p = reg.open(AddressSpace(0), h).unwrap();
+        assert_eq!(p.alloc_id, 42);
+        assert_eq!(p.device, 1);
+        assert_eq!(reg.open_count(h), 1);
+    }
+
+    #[test]
+    fn open_in_exporting_process_rejected() {
+        let reg = IpcRegistry::new();
+        let h = reg.export(AddressSpace(2), ptr(2, 1)).unwrap();
+        let err = reg.open(AddressSpace(2), h).unwrap_err();
+        assert!(format!("{err}").contains("exporting process"));
+    }
+
+    #[test]
+    fn double_open_same_space_rejected() {
+        let reg = IpcRegistry::new();
+        let h = reg.export(AddressSpace(1), ptr(1, 1)).unwrap();
+        reg.open(AddressSpace(0), h).unwrap();
+        assert!(reg.open(AddressSpace(0), h).is_err());
+        // A third space may still open it.
+        reg.open(AddressSpace(3), h).unwrap();
+        assert_eq!(reg.open_count(h), 2);
+    }
+
+    #[test]
+    fn revoked_handle_unopenable() {
+        let reg = IpcRegistry::new();
+        let h = reg.export(AddressSpace(1), ptr(1, 1)).unwrap();
+        reg.revoke(AddressSpace(1), h).unwrap();
+        assert!(reg.open(AddressSpace(0), h).is_err());
+    }
+
+    #[test]
+    fn only_exporter_can_revoke() {
+        let reg = IpcRegistry::new();
+        let h = reg.export(AddressSpace(1), ptr(1, 1)).unwrap();
+        assert!(reg.revoke(AddressSpace(0), h).is_err());
+    }
+
+    #[test]
+    fn close_releases_mapping() {
+        let reg = IpcRegistry::new();
+        let h = reg.export(AddressSpace(1), ptr(1, 1)).unwrap();
+        reg.open(AddressSpace(0), h).unwrap();
+        reg.close(AddressSpace(0), h).unwrap();
+        assert_eq!(reg.open_count(h), 0);
+        // Re-open after close is allowed (fresh mapping).
+        reg.open(AddressSpace(0), h).unwrap();
+    }
+
+    #[test]
+    fn offset_pointer_not_exportable() {
+        let reg = IpcRegistry::new();
+        let p = DevPtr { device: 0, alloc_id: 5, offset: 16 };
+        assert!(reg.export(AddressSpace(0), p).is_err());
+    }
+
+    #[test]
+    fn forged_handle_rejected() {
+        let reg = IpcRegistry::new();
+        let _h = reg.export(AddressSpace(1), ptr(1, 1)).unwrap();
+        assert!(reg.open(AddressSpace(0), IpcHandle { token: 1 }).is_err());
+    }
+}

@@ -1,0 +1,155 @@
+//! SPMD pointer rendezvous: the POSIX-shared-memory table of Figure 2
+//! (left). Every worker thread publishes its device's shard pointer
+//! into its slot; the single caller (thread 0) gathers all slots once
+//! every worker has arrived.
+
+use crate::device::DevPtr;
+use crate::error::{Error, Result};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// A fixed-size table of per-device pointers with blocking gather.
+///
+/// Semantics mirror the shm segment in the real system: publishing
+/// twice to a slot is an error (a shard was bound twice), gathering
+/// blocks until all `n` workers have published or the timeout fires.
+#[derive(Debug)]
+pub struct SharedPtrTable {
+    slots: Mutex<Vec<Option<DevPtr>>>,
+    arrived: Condvar,
+}
+
+impl SharedPtrTable {
+    /// Table with one slot per device.
+    pub fn new(n_devices: usize) -> Self {
+        SharedPtrTable { slots: Mutex::new(vec![None; n_devices]), arrived: Condvar::new() }
+    }
+
+    /// Number of slots.
+    pub fn len(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    /// True when no slots exist.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Worker `device` publishes its shard pointer.
+    pub fn publish(&self, device: usize, ptr: DevPtr) -> Result<()> {
+        let mut slots = self.slots.lock().unwrap();
+        let n = slots.len();
+        let slot = slots.get_mut(device).ok_or(Error::InvalidDevice { device, count: n })?;
+        if slot.is_some() {
+            return Err(Error::ipc(format!("slot {device} already published")));
+        }
+        *slot = Some(ptr);
+        drop(slots);
+        self.arrived.notify_all();
+        Ok(())
+    }
+
+    /// Count of already-published slots (non-blocking).
+    pub fn published(&self) -> usize {
+        self.slots.lock().unwrap().iter().filter(|s| s.is_some()).count()
+    }
+
+    /// The single caller gathers every device's pointer, blocking until
+    /// all workers have published (or `timeout`).
+    pub fn gather(&self, timeout: Duration) -> Result<Vec<DevPtr>> {
+        let mut slots = self.slots.lock().unwrap();
+        let deadline = std::time::Instant::now() + timeout;
+        while slots.iter().any(|s| s.is_none()) {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                let missing: Vec<usize> =
+                    slots.iter().enumerate().filter(|(_, s)| s.is_none()).map(|(i, _)| i).collect();
+                return Err(Error::ipc(format!("gather timed out waiting for slots {missing:?}")));
+            }
+            let (guard, _) = self.arrived.wait_timeout(slots, deadline - now).unwrap();
+            slots = guard;
+        }
+        Ok(slots.iter().map(|s| s.unwrap()).collect())
+    }
+
+    /// Clear all slots for reuse in the next solve.
+    pub fn reset(&self) {
+        let mut slots = self.slots.lock().unwrap();
+        for s in slots.iter_mut() {
+            *s = None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn ptr(device: usize, id: u64) -> DevPtr {
+        DevPtr { device, alloc_id: id, offset: 0 }
+    }
+
+    #[test]
+    fn publish_then_gather() {
+        let t = SharedPtrTable::new(3);
+        t.publish(0, ptr(0, 1)).unwrap();
+        t.publish(2, ptr(2, 3)).unwrap();
+        t.publish(1, ptr(1, 2)).unwrap();
+        let all = t.gather(Duration::from_millis(10)).unwrap();
+        assert_eq!(all.len(), 3);
+        assert_eq!(all[2].alloc_id, 3);
+    }
+
+    #[test]
+    fn double_publish_rejected() {
+        let t = SharedPtrTable::new(2);
+        t.publish(0, ptr(0, 1)).unwrap();
+        assert!(t.publish(0, ptr(0, 9)).is_err());
+    }
+
+    #[test]
+    fn gather_times_out_when_worker_missing() {
+        let t = SharedPtrTable::new(2);
+        t.publish(0, ptr(0, 1)).unwrap();
+        let err = t.gather(Duration::from_millis(20)).unwrap_err();
+        assert!(format!("{err}").contains("[1]"), "{err}");
+    }
+
+    #[test]
+    fn gather_blocks_until_concurrent_publish() {
+        let t = Arc::new(SharedPtrTable::new(4));
+        let mut handles = vec![];
+        for d in 0..4 {
+            let t = t.clone();
+            handles.push(std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(5 * d as u64));
+                t.publish(d, ptr(d, d as u64 + 1)).unwrap();
+            }));
+        }
+        let all = t.gather(Duration::from_secs(5)).unwrap();
+        for h in handles {
+            h.join().unwrap();
+        }
+        for (d, p) in all.iter().enumerate() {
+            assert_eq!(p.device, d);
+        }
+    }
+
+    #[test]
+    fn reset_allows_reuse() {
+        let t = SharedPtrTable::new(1);
+        t.publish(0, ptr(0, 1)).unwrap();
+        t.gather(Duration::from_millis(5)).unwrap();
+        t.reset();
+        assert_eq!(t.published(), 0);
+        t.publish(0, ptr(0, 2)).unwrap();
+        assert_eq!(t.gather(Duration::from_millis(5)).unwrap()[0].alloc_id, 2);
+    }
+
+    #[test]
+    fn out_of_range_slot_rejected() {
+        let t = SharedPtrTable::new(2);
+        assert!(t.publish(2, ptr(2, 1)).is_err());
+    }
+}

@@ -1,0 +1,327 @@
+//! The two column layouts and their index arithmetic.
+
+use crate::error::{Error, Result};
+
+/// A 1D distribution of `n` matrix columns over `ndev` devices.
+///
+/// Both layouts implement this; the redistributor and the solvers only
+/// talk to the trait, so further layouts (e.g. 2D block-cyclic from the
+/// paper's future work) can slot in.
+pub trait ColumnLayout {
+    /// Total number of columns.
+    fn n_cols(&self) -> usize;
+    /// Number of devices.
+    fn num_devices(&self) -> usize;
+    /// Owning device of global column `g`.
+    fn owner_of(&self, g: usize) -> usize;
+    /// Local column index of global column `g` on its owner.
+    fn local_index(&self, g: usize) -> usize;
+    /// Number of columns stored on device `d`.
+    fn local_cols(&self, d: usize) -> usize;
+    /// Global column stored at `(d, local)`.
+    fn global_index(&self, d: usize, local: usize) -> usize;
+
+    /// `(owner, local)` pair for a global column.
+    fn place(&self, g: usize) -> (usize, usize) {
+        (self.owner_of(g), self.local_index(g))
+    }
+
+    /// Flat *storage slot* of a `(device, local)` pair: devices
+    /// concatenated in order. The permutation in `cycles.rs` is over
+    /// these slots.
+    fn slot_of(&self, d: usize, local: usize) -> usize {
+        let mut base = 0;
+        for dd in 0..d {
+            base += self.local_cols(dd);
+        }
+        base + local
+    }
+
+    /// Inverse of [`ColumnLayout::slot_of`].
+    fn slot_to_place(&self, slot: usize) -> (usize, usize) {
+        let mut rem = slot;
+        for d in 0..self.num_devices() {
+            let lc = self.local_cols(d);
+            if rem < lc {
+                return (d, rem);
+            }
+            rem -= lc;
+        }
+        panic!("slot {slot} out of range");
+    }
+}
+
+/// cuSOLVERMg's layout: columns grouped into tiles of `tile` columns,
+/// tiles dealt round-robin (tile `t` → device `t mod ndev`). The last
+/// tile may be short.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct BlockCyclic1D {
+    n: usize,
+    tile: usize,
+    ndev: usize,
+}
+
+impl BlockCyclic1D {
+    /// New layout; `tile` is the paper's `T_A`.
+    pub fn new(n: usize, tile: usize, ndev: usize) -> Result<Self> {
+        if tile == 0 {
+            return Err(Error::layout("tile size T_A must be positive"));
+        }
+        if ndev == 0 {
+            return Err(Error::layout("need at least one device"));
+        }
+        Ok(BlockCyclic1D { n, tile, ndev })
+    }
+
+    /// The tile size `T_A`.
+    pub fn tile(&self) -> usize {
+        self.tile
+    }
+
+    /// Number of column tiles (the last may be short).
+    pub fn num_tiles(&self) -> usize {
+        self.n.div_ceil(self.tile)
+    }
+
+    /// Width of tile `t`.
+    pub fn tile_cols(&self, t: usize) -> usize {
+        debug_assert!(t < self.num_tiles());
+        if (t + 1) * self.tile <= self.n {
+            self.tile
+        } else {
+            self.n - t * self.tile
+        }
+    }
+
+    /// First global column of tile `t`.
+    pub fn tile_start(&self, t: usize) -> usize {
+        t * self.tile
+    }
+
+    /// Owning device of tile `t` (round-robin).
+    pub fn owner_of_tile(&self, t: usize) -> usize {
+        t % self.ndev
+    }
+
+    /// Local *tile* ordinal of tile `t` on its owner.
+    pub fn local_tile_index(&self, t: usize) -> usize {
+        t / self.ndev
+    }
+
+    /// Global tile indices owned by device `d`, in storage order.
+    pub fn tiles_of(&self, d: usize) -> impl Iterator<Item = usize> + '_ {
+        (0..self.num_tiles()).filter(move |t| t % self.ndev == d)
+    }
+
+    /// Local column offset of tile `t` within its owner's storage.
+    /// With a uniform tile size this is `(t / ndev) * tile`, and edge
+    /// tiles can only be last so the formula holds generally.
+    pub fn tile_local_offset(&self, t: usize) -> usize {
+        self.local_tile_index(t) * self.tile
+    }
+
+    /// Whether per-device column counts are identical to `other`'s —
+    /// the precondition for in-place redistribution.
+    pub fn balanced_with(&self, other: &dyn ColumnLayout) -> bool {
+        self.num_devices() == other.num_devices()
+            && (0..self.ndev).all(|d| self.local_cols(d) == other.local_cols(d))
+    }
+}
+
+impl ColumnLayout for BlockCyclic1D {
+    fn n_cols(&self) -> usize {
+        self.n
+    }
+    fn num_devices(&self) -> usize {
+        self.ndev
+    }
+    fn owner_of(&self, g: usize) -> usize {
+        debug_assert!(g < self.n);
+        (g / self.tile) % self.ndev
+    }
+    fn local_index(&self, g: usize) -> usize {
+        let t = g / self.tile;
+        self.tile_local_offset(t) + (g % self.tile)
+    }
+    fn local_cols(&self, d: usize) -> usize {
+        // numroc: sum of widths of tiles owned by d.
+        self.tiles_of(d).map(|t| self.tile_cols(t)).sum()
+    }
+    fn global_index(&self, d: usize, local: usize) -> usize {
+        let lt = local / self.tile; // local tile ordinal
+        let t = lt * self.ndev + d; // global tile
+        self.tile_start(t) + (local % self.tile)
+    }
+}
+
+/// JAX's input layout: equal contiguous blocks per device (the shard
+/// produced by `NamedSharding(mesh, P("x", None))` on a row-sharded
+/// array, viewed column-major — see DESIGN.md). Device `d` owns columns
+/// `[start(d), start(d+1))`, sizes differing by at most one.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct ContiguousBlock {
+    n: usize,
+    ndev: usize,
+}
+
+impl ContiguousBlock {
+    /// New contiguous block layout.
+    pub fn new(n: usize, ndev: usize) -> Result<Self> {
+        if ndev == 0 {
+            return Err(Error::layout("need at least one device"));
+        }
+        Ok(ContiguousBlock { n, ndev })
+    }
+
+    /// First global column owned by device `d`.
+    pub fn start(&self, d: usize) -> usize {
+        let base = self.n / self.ndev;
+        let rem = self.n % self.ndev;
+        d * base + d.min(rem)
+    }
+}
+
+impl ColumnLayout for ContiguousBlock {
+    fn n_cols(&self) -> usize {
+        self.n
+    }
+    fn num_devices(&self) -> usize {
+        self.ndev
+    }
+    fn owner_of(&self, g: usize) -> usize {
+        debug_assert!(g < self.n);
+        // Invert `start`: devices 0..rem own (base+1) columns.
+        let base = self.n / self.ndev;
+        let rem = self.n % self.ndev;
+        let big = (base + 1) * rem; // columns owned by the first `rem` devices
+        if g < big {
+            g / (base + 1)
+        } else {
+            rem + (g - big) / base.max(1)
+        }
+    }
+    fn local_index(&self, g: usize) -> usize {
+        g - self.start(self.owner_of(g))
+    }
+    fn local_cols(&self, d: usize) -> usize {
+        self.start(d + 1).min(self.n) - self.start(d)
+    }
+    fn global_index(&self, d: usize, local: usize) -> usize {
+        self.start(d) + local
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_layout_bijection(l: &dyn ColumnLayout) {
+        let n = l.n_cols();
+        let mut seen = vec![false; n];
+        for d in 0..l.num_devices() {
+            for loc in 0..l.local_cols(d) {
+                let g = l.global_index(d, loc);
+                assert!(g < n, "g={g} out of range");
+                assert!(!seen[g], "column {g} mapped twice");
+                seen[g] = true;
+                assert_eq!(l.owner_of(g), d);
+                assert_eq!(l.local_index(g), loc);
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "not all columns mapped");
+        // Sum of local cols is n.
+        let total: usize = (0..l.num_devices()).map(|d| l.local_cols(d)).sum();
+        assert_eq!(total, n);
+    }
+
+    #[test]
+    fn block_cyclic_bijection_even() {
+        let l = BlockCyclic1D::new(64, 4, 4).unwrap();
+        check_layout_bijection(&l);
+    }
+
+    #[test]
+    fn block_cyclic_bijection_ragged() {
+        // n not divisible by tile or ndev.
+        for (n, t, d) in [(10, 4, 2), (17, 3, 4), (5, 8, 3), (33, 5, 7), (1, 1, 1)] {
+            let l = BlockCyclic1D::new(n, t, d).unwrap();
+            check_layout_bijection(&l);
+        }
+    }
+
+    #[test]
+    fn contiguous_bijection() {
+        for (n, d) in [(10, 2), (17, 4), (5, 8), (33, 7), (8, 8), (3, 5)] {
+            let l = ContiguousBlock::new(n, d).unwrap();
+            check_layout_bijection(&l);
+        }
+    }
+
+    #[test]
+    fn round_robin_matches_figure1() {
+        // Figure 1: tiles dealt round-robin. n=8, T=2, 2 devices:
+        // tiles 0,1,2,3 → devices 0,1,0,1; cols 0,1,4,5 on dev0.
+        let l = BlockCyclic1D::new(8, 2, 2).unwrap();
+        assert_eq!(l.owner_of(0), 0);
+        assert_eq!(l.owner_of(1), 0);
+        assert_eq!(l.owner_of(2), 1);
+        assert_eq!(l.owner_of(3), 1);
+        assert_eq!(l.owner_of(4), 0);
+        assert_eq!(l.owner_of(5), 0);
+        assert_eq!(l.local_index(4), 2);
+        assert_eq!(l.local_index(5), 3);
+        assert_eq!(l.global_index(1, 2), 6);
+    }
+
+    #[test]
+    fn tile_arithmetic() {
+        let l = BlockCyclic1D::new(10, 4, 2).unwrap();
+        assert_eq!(l.num_tiles(), 3);
+        assert_eq!(l.tile_cols(0), 4);
+        assert_eq!(l.tile_cols(2), 2); // short edge tile
+        assert_eq!(l.owner_of_tile(2), 0);
+        assert_eq!(l.local_tile_index(2), 1);
+        assert_eq!(l.tiles_of(0).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(l.local_cols(0), 6);
+        assert_eq!(l.local_cols(1), 4);
+    }
+
+    #[test]
+    fn slots_are_flat_and_invertible() {
+        let l = BlockCyclic1D::new(12, 2, 3).unwrap();
+        let total: usize = (0..3).map(|d| l.local_cols(d)).sum();
+        for s in 0..total {
+            let (d, loc) = l.slot_to_place(s);
+            assert_eq!(l.slot_of(d, loc), s);
+        }
+    }
+
+    #[test]
+    fn balanced_when_divisible() {
+        let bc = BlockCyclic1D::new(16, 2, 4).unwrap();
+        let cb = ContiguousBlock::new(16, 4).unwrap();
+        assert!(bc.balanced_with(&cb));
+        let bc2 = BlockCyclic1D::new(10, 4, 2).unwrap();
+        let cb2 = ContiguousBlock::new(10, 2).unwrap();
+        assert!(!bc2.balanced_with(&cb2)); // 6/4 vs 5/5
+    }
+
+    #[test]
+    fn contiguous_start_offsets() {
+        let l = ContiguousBlock::new(10, 3).unwrap();
+        // 4, 3, 3
+        assert_eq!(l.local_cols(0), 4);
+        assert_eq!(l.local_cols(1), 3);
+        assert_eq!(l.start(1), 4);
+        assert_eq!(l.owner_of(3), 0);
+        assert_eq!(l.owner_of(4), 1);
+        assert_eq!(l.owner_of(9), 2);
+    }
+
+    #[test]
+    fn invalid_params_rejected() {
+        assert!(BlockCyclic1D::new(8, 0, 2).is_err());
+        assert!(BlockCyclic1D::new(8, 2, 0).is_err());
+        assert!(ContiguousBlock::new(8, 0).is_err());
+    }
+}

@@ -1,0 +1,186 @@
+//! Permutation-cycle decomposition of a layout conversion.
+//!
+//! "To apply this redistribution efficiently in-place, we decompose the
+//! column-index mapping into disjoint permutation cycles" (paper §2.1).
+//! A cycle `[s₀, s₁, ..., s_{m−1}]` means: the column content in slot
+//! `sᵢ` must move to slot `s_{i+1 mod m}`.
+
+use super::block_cyclic::ColumnLayout;
+use crate::error::{Error, Result};
+
+/// One rotation cycle over storage slots.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Cycle {
+    /// Slots in movement order: content of `slots[i]` goes to
+    /// `slots[(i+1) % len]`.
+    pub slots: Vec<usize>,
+}
+
+impl Cycle {
+    /// Cycle length.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Cycles of length 1 are fixed points (no data movement).
+    pub fn is_trivial(&self) -> bool {
+        self.slots.len() <= 1
+    }
+
+    /// Never empty by construction.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+}
+
+/// The explicit slot permutation taking layout `src` to layout `dst`:
+/// `perm[s]` is the destination slot of the column content currently
+/// stored in slot `s`.
+///
+/// Fails unless the two layouts distribute the same number of columns
+/// to each device (the in-place precondition; callers fall back to
+/// out-of-place redistribution otherwise).
+pub fn permutation_between(src: &dyn ColumnLayout, dst: &dyn ColumnLayout) -> Result<Vec<usize>> {
+    if src.n_cols() != dst.n_cols() {
+        return Err(Error::layout(format!(
+            "layout sizes differ: {} vs {}",
+            src.n_cols(),
+            dst.n_cols()
+        )));
+    }
+    if src.num_devices() != dst.num_devices() {
+        return Err(Error::layout("layouts span different device counts"));
+    }
+    for d in 0..src.num_devices() {
+        if src.local_cols(d) != dst.local_cols(d) {
+            return Err(Error::layout(format!(
+                "in-place redistribution needs matching per-device counts; device {d} holds {} vs {}",
+                src.local_cols(d),
+                dst.local_cols(d)
+            )));
+        }
+    }
+    let n = src.n_cols();
+    let mut perm = vec![usize::MAX; n];
+    for g in 0..n {
+        let (sd, sl) = src.place(g);
+        let (dd, dl) = dst.place(g);
+        perm[src.slot_of(sd, sl)] = dst.slot_of(dd, dl);
+    }
+    debug_assert!(perm.iter().all(|&p| p != usize::MAX));
+    Ok(perm)
+}
+
+/// Decompose a permutation into its disjoint cycles (fixed points are
+/// returned as length-1 cycles so callers can count them, but they
+/// trigger no copies).
+pub fn cycle_decomposition(perm: &[usize]) -> Vec<Cycle> {
+    let n = perm.len();
+    let mut visited = vec![false; n];
+    let mut cycles = Vec::new();
+    for start in 0..n {
+        if visited[start] {
+            continue;
+        }
+        let mut slots = vec![start];
+        visited[start] = true;
+        let mut cur = perm[start];
+        while cur != start {
+            assert!(!visited[cur], "input is not a permutation");
+            visited[cur] = true;
+            slots.push(cur);
+            cur = perm[cur];
+        }
+        cycles.push(Cycle { slots });
+    }
+    cycles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::{BlockCyclic1D, ContiguousBlock};
+
+    #[test]
+    fn identity_permutation_all_trivial() {
+        let perm: Vec<usize> = (0..8).collect();
+        let cycles = cycle_decomposition(&perm);
+        assert_eq!(cycles.len(), 8);
+        assert!(cycles.iter().all(|c| c.is_trivial()));
+    }
+
+    #[test]
+    fn single_swap() {
+        let perm = vec![1, 0, 2];
+        let cycles = cycle_decomposition(&perm);
+        let nontrivial: Vec<_> = cycles.iter().filter(|c| !c.is_trivial()).collect();
+        assert_eq!(nontrivial.len(), 1);
+        assert_eq!(nontrivial[0].slots, vec![0, 1]);
+    }
+
+    #[test]
+    fn rotation_is_one_cycle() {
+        // 0→1→2→3→0
+        let perm = vec![1, 2, 3, 0];
+        let cycles = cycle_decomposition(&perm);
+        assert_eq!(cycles.len(), 1);
+        assert_eq!(cycles[0].len(), 4);
+    }
+
+    #[test]
+    fn cycles_cover_all_slots_exactly_once() {
+        let src = ContiguousBlock::new(24, 3).unwrap();
+        let dst = BlockCyclic1D::new(24, 2, 3).unwrap();
+        let perm = permutation_between(&src, &dst).unwrap();
+        let cycles = cycle_decomposition(&perm);
+        let mut count = vec![0usize; 24];
+        for c in &cycles {
+            for &s in &c.slots {
+                count[s] += 1;
+            }
+        }
+        assert!(count.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn permutation_moves_columns_to_cyclic_owners() {
+        let n = 16;
+        let ndev = 4;
+        let tile = 2;
+        let src = ContiguousBlock::new(n, ndev).unwrap();
+        let dst = BlockCyclic1D::new(n, tile, ndev).unwrap();
+        let perm = permutation_between(&src, &dst).unwrap();
+        // Column g sits in src slot, must land in dst slot.
+        use crate::layout::ColumnLayout;
+        for g in 0..n {
+            let (sd, sl) = src.place(g);
+            let s = src.slot_of(sd, sl);
+            let target = perm[s];
+            let (dd, dl) = dst.slot_to_place(target);
+            assert_eq!(dst.global_index(dd, dl), g);
+        }
+    }
+
+    #[test]
+    fn unbalanced_layouts_rejected() {
+        let src = ContiguousBlock::new(10, 2).unwrap(); // 5/5
+        let dst = BlockCyclic1D::new(10, 4, 2).unwrap(); // 6/4
+        assert!(permutation_between(&src, &dst).is_err());
+    }
+
+    #[test]
+    fn mismatched_sizes_rejected() {
+        let src = ContiguousBlock::new(10, 2).unwrap();
+        let dst = BlockCyclic1D::new(12, 2, 2).unwrap();
+        assert!(permutation_between(&src, &dst).is_err());
+    }
+
+    #[test]
+    fn tile_equals_block_size_is_identity_like() {
+        // When T·ndev == n and T == n/ndev the layouts coincide.
+        let src = ContiguousBlock::new(12, 3).unwrap();
+        let dst = BlockCyclic1D::new(12, 4, 3).unwrap();
+        let perm = permutation_between(&src, &dst).unwrap();
+        assert_eq!(perm, (0..12).collect::<Vec<_>>());
+    }
+}

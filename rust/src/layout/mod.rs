@@ -1,0 +1,27 @@
+//! 1D block-cyclic data distribution (paper §2.1, Figure 1).
+//!
+//! Parallel dense factorizations need a cyclic layout for load balance
+//! (Dongarra, van de Geijn & Walker 1994): with contiguous blocks, the
+//! devices owning leading columns go idle as the factorization sweeps
+//! right; with round-robin tiles every device keeps working until the
+//! end. cuSOLVERMg requires a **1D column block-cyclic** layout, while
+//! JAX hands the backend **contiguous per-device shards** — converting
+//! between the two, in place, is JAXMg's first technical contribution:
+//!
+//! 1. [`BlockCyclic1D`] / [`ContiguousBlock`]: the two layouts as
+//!    explicit global↔local column index maps (ScaLAPACK `numroc`-style
+//!    arithmetic, with variable edge tiles).
+//! 2. [`permutation_between`]: the explicit source-slot → target-slot
+//!    map for a layout conversion.
+//! 3. [`cycle_decomposition`]: disjoint permutation cycles.
+//! 4. [`Redistributor`]: executes the cycles with peer-to-peer copies
+//!    and **two staging buffers**, exactly as the paper describes, or
+//!    out-of-place when the shapes make in-place rotation impossible.
+
+mod block_cyclic;
+mod cycles;
+mod redistribute;
+
+pub use block_cyclic::{BlockCyclic1D, ColumnLayout, ContiguousBlock};
+pub use cycles::{cycle_decomposition, permutation_between, Cycle};
+pub use redistribute::{RedistPlan, Redistributor};

@@ -1,0 +1,278 @@
+//! In-place layout conversion via permutation cycles + two staging
+//! buffers — the execution half of paper §2.1.
+//!
+//! For each non-trivial cycle `s₀ → s₁ → ... → s_{m−1} → s₀` the
+//! rotation runs *forward* with two alternating one-column staging
+//! buffers: before slot `s_{i+1}` is overwritten with the content of
+//! `s_i`, its own content is saved into the staging buffer the previous
+//! step is not using. This is exactly why two buffers suffice "to avoid
+//! overwriting data before it is forwarded": step `i`'s save and step
+//! `i−1`'s write target different buffers, so consecutive async copies
+//! never race on staging storage.
+//!
+//! When the source and target layouts give some device different column
+//! counts (N not divisible by T_A·ndev), in-place rotation is
+//! impossible; [`Redistributor::convert`] then falls back to an
+//! out-of-place pass through freshly allocated panels (still
+//! peer-to-peer copies, just not in place). The paper's benchmarked
+//! configurations are all balanced.
+
+use crate::device::DevPtr;
+use crate::error::Result;
+use crate::layout::{cycle_decomposition, permutation_between};
+use crate::scalar::Scalar;
+use crate::tile::{DistMatrix, Layout1D};
+
+/// Statistics of one redistribution, for tests and the Fig. 1 bench.
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct RedistPlan {
+    /// Total cycles including fixed points.
+    pub cycles: usize,
+    /// Cycles that actually moved data.
+    pub nontrivial_cycles: usize,
+    /// Columns physically moved.
+    pub columns_moved: usize,
+    /// Of which crossed a device boundary.
+    pub columns_cross_device: usize,
+    /// True if executed in place (cycles + staging), false if the
+    /// out-of-place fallback ran.
+    pub in_place: bool,
+}
+
+/// Executes layout conversions on a [`DistMatrix`].
+pub struct Redistributor;
+
+impl Redistributor {
+    /// Convert `m` to `target` layout, physically permuting columns.
+    pub fn convert<S: Scalar>(m: &mut DistMatrix<S>, target: Layout1D) -> Result<RedistPlan> {
+        let src_kind = *m.layout();
+        let src = src_kind.as_layout();
+        let dst = target.as_layout();
+        let balanced = (0..src.num_devices()).all(|d| src.local_cols(d) == dst.local_cols(d));
+        if balanced {
+            Self::convert_in_place(m, target)
+        } else {
+            Self::convert_out_of_place(m, target)
+        }
+    }
+
+    /// The paper's algorithm: explicit permutation → disjoint cycles →
+    /// forward rotation with two staging buffers and peer copies.
+    fn convert_in_place<S: Scalar>(m: &mut DistMatrix<S>, target: Layout1D) -> Result<RedistPlan> {
+        let node = m.node().clone();
+        let col_bytes = m.col_bytes();
+        let col_elems = m.rows();
+        let src_kind = *m.layout();
+        let src = src_kind.as_layout();
+        let dst = target.as_layout();
+
+        let perm = permutation_between(src, dst)?;
+        let cycles = cycle_decomposition(&perm);
+
+        let mut plan = RedistPlan { cycles: cycles.len(), in_place: true, ..Default::default() };
+
+        // Slot → (device, panel ptr, byte offset). Slots are identical
+        // between layouts because per-device counts match.
+        let place = |slot: usize| -> (usize, DevPtr, usize) {
+            let (d, loc) = src.slot_to_place(slot);
+            (d, m.panels()[d], loc * col_bytes)
+        };
+
+        for cycle in &cycles {
+            if cycle.is_trivial() {
+                continue;
+            }
+            plan.nontrivial_cycles += 1;
+            let mlen = cycle.len();
+
+            // Two one-column staging buffers on the cycle-leader device.
+            let (lead_dev, _, _) = place(cycle.slots[0]);
+            let stage =
+                [node.alloc_scalars::<S>(lead_dev, col_elems)?, node.alloc_scalars::<S>(lead_dev, col_elems)?];
+
+            // Forward rotation: content(s_i) → s_{i+1}.
+            //   save  s_1 → stage[0]
+            //   write s_0 → s_1
+            //   save  s_2 → stage[1]      (other buffer: step i−1 still owns stage[0] conceptually)
+            //   write stage[0] → s_2      (old s_1 content)
+            //   ...
+            //   write stage[(m−2)%2] → s_0 (old s_{m−1} content closes the cycle)
+            //
+            // Track statistics per executed copy.
+            let mut charge = |from_dev: usize, to_dev: usize| {
+                plan.columns_moved += 1;
+                if from_dev != to_dev {
+                    plan.columns_cross_device += 1;
+                }
+            };
+
+            // Step 0: save s_1, then write s_0 → s_1 directly.
+            let (d1, p1, o1) = place(cycle.slots[1 % mlen]);
+            node.peer_copy(p1, o1, stage[0], 0, col_bytes)?;
+            let (d0, p0, o0) = place(cycle.slots[0]);
+            node.peer_copy(p0, o0, p1, o1, col_bytes)?;
+            charge(d0, d1);
+
+            // Steps 1..m−1: save s_{i+1} into the free buffer, then
+            // write the previously staged content into s_{i+1}.
+            for i in 1..mlen {
+                let nxt = cycle.slots[(i + 1) % mlen];
+                let (dn, pn, on) = place(nxt);
+                let cur_stage = stage[(i - 1) % 2];
+                if (i + 1) % mlen == 0 {
+                    // Closing step: s_0 receives old content of s_{m−1},
+                    // which sits in cur_stage; nothing left to save.
+                    node.peer_copy(cur_stage, 0, pn, on, col_bytes)?;
+                    let (dprev, _, _) = place(cycle.slots[i]);
+                    charge(dprev, dn);
+                } else {
+                    let next_stage = stage[i % 2];
+                    node.peer_copy(pn, on, next_stage, 0, col_bytes)?;
+                    node.peer_copy(cur_stage, 0, pn, on, col_bytes)?;
+                    let (dprev, _, _) = place(cycle.slots[i]);
+                    charge(dprev, dn);
+                }
+            }
+
+            node.free(stage[0])?;
+            node.free(stage[1])?;
+
+            node.metrics().redist_cycles.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            node.metrics()
+                .redist_columns
+                .fetch_add(mlen as u64, std::sync::atomic::Ordering::Relaxed);
+        }
+
+        m.set_layout(target);
+        Ok(plan)
+    }
+
+    /// Out-of-place fallback for unbalanced shapes: fresh panels in the
+    /// target layout, one peer copy per column, old panels freed.
+    fn convert_out_of_place<S: Scalar>(m: &mut DistMatrix<S>, target: Layout1D) -> Result<RedistPlan> {
+        let node = m.node().clone();
+        let col_bytes = m.col_bytes();
+        let src_kind = *m.layout();
+        let src = src_kind.as_layout();
+        let dst = target.as_layout();
+
+        let mut new_panels = Vec::with_capacity(node.num_devices());
+        for d in 0..node.num_devices() {
+            new_panels.push(node.alloc_scalars::<S>(d, m.rows() * dst.local_cols(d))?);
+        }
+
+        let mut plan = RedistPlan { in_place: false, ..Default::default() };
+        for g in 0..src.n_cols() {
+            let (sd, sl) = src.place(g);
+            let (dd, dl) = dst.place(g);
+            node.peer_copy(m.panels()[sd], sl * col_bytes, new_panels[dd], dl * col_bytes, col_bytes)?;
+            plan.columns_moved += 1;
+            if sd != dd {
+                plan.columns_cross_device += 1;
+            }
+        }
+        m.replace_panels(new_panels, target)?;
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::SimNode;
+    use crate::layout::{BlockCyclic1D, ContiguousBlock};
+    use crate::linalg::Matrix;
+    use crate::scalar::c64;
+
+    fn roundtrip_case<S: Scalar>(n: usize, rows: usize, tile: usize, ndev: usize, seed: u64) {
+        let node = SimNode::new_uniform(ndev, 1 << 26);
+        let a = Matrix::<S>::random(rows, n, seed);
+        let contig = Layout1D::Contiguous(ContiguousBlock::new(n, ndev).unwrap());
+        let cyclic = Layout1D::BlockCyclic(BlockCyclic1D::new(n, tile, ndev).unwrap());
+
+        let mut dm = DistMatrix::scatter(&node, &a, contig).unwrap();
+        let plan = Redistributor::convert(&mut dm, cyclic).unwrap();
+        // Content correct in the new layout.
+        let b = dm.gather().unwrap();
+        assert_eq!(a, b, "content corrupted by redistribution (n={n} T={tile} d={ndev})");
+
+        // Convert back and re-check.
+        let plan2 = Redistributor::convert(&mut dm, contig).unwrap();
+        let c = dm.gather().unwrap();
+        assert_eq!(a, c, "content corrupted by inverse redistribution");
+        assert_eq!(plan.in_place, plan2.in_place);
+    }
+
+    #[test]
+    fn in_place_balanced_roundtrip() {
+        // n divisible by tile*ndev ⇒ balanced ⇒ in-place cycles.
+        roundtrip_case::<f64>(16, 8, 2, 4, 1);
+        roundtrip_case::<f32>(24, 5, 2, 3, 2);
+        roundtrip_case::<c64>(32, 4, 4, 2, 3);
+    }
+
+    #[test]
+    fn out_of_place_unbalanced_roundtrip() {
+        roundtrip_case::<f64>(10, 4, 4, 2, 4); // 6/4 vs 5/5 → fallback
+        roundtrip_case::<f32>(17, 3, 3, 4, 5);
+        roundtrip_case::<c64>(33, 2, 5, 7, 6);
+    }
+
+    #[test]
+    fn in_place_reports_cycles() {
+        let node = SimNode::new_uniform(4, 1 << 24);
+        let n = 16;
+        let a = Matrix::<f64>::random(4, n, 7);
+        let contig = Layout1D::Contiguous(ContiguousBlock::new(n, 4).unwrap());
+        let cyclic = Layout1D::BlockCyclic(BlockCyclic1D::new(n, 2, 4).unwrap());
+        let mut dm = DistMatrix::scatter(&node, &a, contig).unwrap();
+        let plan = Redistributor::convert(&mut dm, cyclic).unwrap();
+        assert!(plan.in_place);
+        assert!(plan.nontrivial_cycles > 0);
+        assert!(plan.columns_moved > 0);
+        assert_eq!(node.metrics().snapshot().redist_cycles, plan.nontrivial_cycles as u64);
+        // Staging buffers must all be freed.
+        for rep in node.memory_reports() {
+            assert_eq!(rep.allocations, 1, "only the panel must remain");
+        }
+    }
+
+    #[test]
+    fn identity_conversion_moves_nothing() {
+        // tile == n/ndev makes block-cyclic equal contiguous.
+        let node = SimNode::new_uniform(4, 1 << 24);
+        let n = 16;
+        let a = Matrix::<f64>::random(4, n, 8);
+        let contig = Layout1D::Contiguous(ContiguousBlock::new(n, 4).unwrap());
+        let cyclic = Layout1D::BlockCyclic(BlockCyclic1D::new(n, 4, 4).unwrap());
+        let mut dm = DistMatrix::scatter(&node, &a, contig).unwrap();
+        let plan = Redistributor::convert(&mut dm, cyclic).unwrap();
+        assert!(plan.in_place);
+        assert_eq!(plan.nontrivial_cycles, 0);
+        assert_eq!(plan.columns_moved, 0);
+    }
+
+    #[test]
+    fn single_device_is_local_only() {
+        let node = SimNode::new_uniform(1, 1 << 24);
+        let n = 12;
+        let a = Matrix::<f64>::random(6, n, 9);
+        let contig = Layout1D::Contiguous(ContiguousBlock::new(n, 1).unwrap());
+        let cyclic = Layout1D::BlockCyclic(BlockCyclic1D::new(n, 4, 1).unwrap());
+        let mut dm = DistMatrix::scatter(&node, &a, contig).unwrap();
+        let plan = Redistributor::convert(&mut dm, cyclic).unwrap();
+        // One device: every tile is owned by device 0 in both layouts ⇒ identity.
+        assert_eq!(plan.columns_cross_device, 0);
+        assert_eq!(dm.gather().unwrap(), a);
+    }
+
+    #[test]
+    fn large_randomized_roundtrips() {
+        // Sweep of shapes; rows kept small to bound test time.
+        for (i, &(n, t, d)) in
+            [(48usize, 2usize, 4usize), (60, 5, 4), (64, 8, 2), (96, 4, 8), (40, 10, 2)].iter().enumerate()
+        {
+            roundtrip_case::<f64>(n, 3, t, d, 100 + i as u64);
+        }
+    }
+}

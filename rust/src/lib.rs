@@ -1,0 +1,65 @@
+//! # jaxmg — a reproduction of *JAXMg: A multi-GPU linear solver in JAX*
+//!
+//! JAXMg exposes NVIDIA cuSOLVERMg's multi-GPU dense solvers (`potrs`,
+//! `potri`, `syevd`) to JAX through an XLA FFI extension. This crate
+//! reproduces the full system as a three-layer Rust + JAX + Pallas stack
+//! on a **simulated multi-GPU node** (this environment has no CUDA
+//! devices — see `DESIGN.md` for the substitution table):
+//!
+//! * **Layer 3 (this crate)** — the coordinator: simulated GPU devices
+//!   with VRAM accounting and peer-to-peer copies, the paper's 1D
+//!   block-cyclic redistribution via permutation cycles (§2.1), the
+//!   SPMD/MPMD single-caller pointer reconciliation (§2.2), and the
+//!   distributed solvers themselves (blocked Cholesky, triangular
+//!   solves, inverse, symmetric/Hermitian eigendecomposition).
+//! * **Layer 2 (`python/compile/model.py`)** — blocked tile algorithms in
+//!   JAX, AOT-lowered to HLO text artifacts.
+//! * **Layer 1 (`python/compile/kernels/`)** — Pallas tile kernels (GEMM
+//!   family) that dominate the FLOP count, lowered into the same HLO.
+//!
+//! At runtime the Rust coordinator loads the AOT artifacts through the
+//! PJRT CPU client (`runtime`); Python is never on the request path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use jaxmg::prelude::*;
+//!
+//! let node = SimNode::new_uniform(4, 1 << 30); // 4 GPUs, 1 GiB VRAM each
+//! let mesh = Mesh::new_1d(node, "x");
+//! let ctx = JaxMg::builder().mesh(mesh).tile_size(64).build().unwrap();
+//!
+//! let n = 512;
+//! let a = jaxmg::linalg::Matrix::<f64>::spd_diag(n); // diag(1..N), as in the paper
+//! let b = jaxmg::linalg::Matrix::<f64>::ones(n, 1);
+//! let x = ctx.potrs(&a, &b).unwrap();
+//! ```
+
+pub mod baseline;
+pub mod cli;
+pub mod coordinator;
+pub mod costmodel;
+pub mod device;
+pub mod error;
+pub mod ipc;
+pub mod layout;
+pub mod linalg;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod scalar;
+pub mod solver;
+pub mod tile;
+
+/// Convenient re-exports for the common API surface.
+pub mod prelude {
+    pub use crate::coordinator::{BackendKind, ExecMode, JaxMg, Mesh, PartitionSpec};
+    pub use crate::device::{SimGpu, SimNode};
+    pub use crate::error::{Error, Result};
+    pub use crate::layout::BlockCyclic1D;
+    pub use crate::linalg::Matrix;
+    pub use crate::scalar::{c32, c64, Complex, Scalar};
+    pub use crate::solver::SolverBackend;
+}
+
+pub use error::{Error, Result};

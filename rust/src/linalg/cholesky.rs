@@ -1,0 +1,141 @@
+//! Reference Cholesky factorization and the solves built on it.
+//!
+//! These are the host-side oracles mirroring LAPACK `potrf` / `potrs` /
+//! `potri` semantics (lower triangular, `A = L·Lᴴ`), used to validate
+//! the distributed solvers and as the single-device baseline's compute.
+
+use crate::error::{Error, Result};
+use crate::linalg::dense::Matrix;
+use crate::linalg::tri::{trsm_left_lower, trsm_left_lower_h, trtri_lower};
+use crate::scalar::{RealScalar, Scalar};
+
+/// Unblocked lower Cholesky: returns `L` with `A = L·Lᴴ`.
+///
+/// Fails with [`Error::NotPositiveDefinite`] on a non-positive pivot —
+/// the analogue of cuSOLVER's `info > 0`.
+pub fn potrf<S: Scalar>(a: &Matrix<S>) -> Result<Matrix<S>> {
+    let n = a.require_square()?;
+    let mut l = a.clone();
+    for j in 0..n {
+        // d = A[j,j] - Σ_{k<j} |L[j,k]|²  (real for Hermitian input)
+        let mut d = l[(j, j)].re();
+        for k in 0..j {
+            d = d - l[(j, k)].abs_sqr();
+        }
+        if !(d.to_f64() > 0.0) || !d.to_f64().is_finite() {
+            return Err(Error::NotPositiveDefinite { minor: j + 1 });
+        }
+        let djj = d.rsqrt_val();
+        l[(j, j)] = S::from_real(djj);
+        let inv = S::from_real(<S::Real as RealScalar>::rone() / djj);
+        for i in (j + 1)..n {
+            let mut v = l[(i, j)];
+            for k in 0..j {
+                v = v - l[(i, k)] * l[(j, k)].conj();
+            }
+            l[(i, j)] = v * inv;
+        }
+    }
+    l.tril_in_place();
+    Ok(l)
+}
+
+/// Solve `A·X = B` given the Cholesky factor `L` (`A = L·Lᴴ`):
+/// forward solve `L·Y = B`, then backward solve `Lᴴ·X = Y`.
+pub fn potrs_from_chol<S: Scalar>(l: &Matrix<S>, b: &Matrix<S>) -> Result<Matrix<S>> {
+    let n = l.require_square()?;
+    if b.rows() != n {
+        return Err(Error::shape(format!("potrs rhs rows {} != n {}", b.rows(), n)));
+    }
+    let y = trsm_left_lower(l, b);
+    Ok(trsm_left_lower_h(l, &y))
+}
+
+/// Inverse of `A` from its Cholesky factor: `A⁻¹ = L⁻ᴴ · L⁻¹`
+/// (LAPACK `potri` semantics, returning the full Hermitian inverse).
+pub fn potri_from_chol<S: Scalar>(l: &Matrix<S>) -> Result<Matrix<S>> {
+    l.require_square()?;
+    let linv = trtri_lower(l)?;
+    let mut inv = linv.adjoint().matmul(&linv);
+    inv.hermitianize();
+    Ok(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::{tol_for, FrobNorm};
+    use crate::scalar::{c32, c64};
+
+    fn check_potrf<S: Scalar>(n: usize, seed: u64) {
+        let a = Matrix::<S>::spd_random(n, seed);
+        let l = potrf(&a).unwrap();
+        let llh = l.matmul(&l.adjoint());
+        assert!(llh.rel_err(&a) < tol_for::<S>(n), "LLᴴ != A for n={n} {:?}", S::DTYPE);
+        // Strict upper triangle must be zero.
+        for j in 1..n {
+            for i in 0..j {
+                assert_eq!(l[(i, j)], S::zero());
+            }
+        }
+    }
+
+    #[test]
+    fn potrf_reconstructs_all_dtypes() {
+        check_potrf::<f32>(20, 1);
+        check_potrf::<f64>(33, 2);
+        check_potrf::<c32>(17, 3);
+        check_potrf::<c64>(40, 4);
+    }
+
+    #[test]
+    fn potrf_rejects_indefinite() {
+        let mut a = Matrix::<f64>::eye(4);
+        a[(2, 2)] = -1.0;
+        match potrf(&a) {
+            Err(Error::NotPositiveDefinite { minor }) => assert_eq!(minor, 3),
+            other => panic!("expected NotPositiveDefinite, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn potrf_diag_matches_sqrt() {
+        // diag(1..n) factorizes to diag(sqrt(1..n)) — the paper's benchmark matrix.
+        let a = Matrix::<f64>::spd_diag(6);
+        let l = potrf(&a).unwrap();
+        for i in 0..6 {
+            assert!((l[(i, i)] - ((i + 1) as f64).sqrt()).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn potrs_solves() {
+        let n = 24;
+        let a = Matrix::<c64>::spd_random(n, 9);
+        let x_true = Matrix::<c64>::random(n, 3, 10);
+        let b = a.matmul(&x_true);
+        let l = potrf(&a).unwrap();
+        let x = potrs_from_chol(&l, &b).unwrap();
+        assert!(x.rel_err(&x_true) < tol_for::<c64>(n));
+    }
+
+    #[test]
+    fn potri_inverts() {
+        let n = 18;
+        let a = Matrix::<f64>::spd_random(n, 11);
+        let l = potrf(&a).unwrap();
+        let ainv = potri_from_chol(&l).unwrap();
+        let prod = a.matmul(&ainv);
+        assert!(prod.rel_err(&Matrix::eye(n)) < tol_for::<f64>(n));
+        // potri result must be Hermitian.
+        assert!(ainv.rel_err(&ainv.adjoint()) < 1e-14);
+    }
+
+    #[test]
+    fn potrs_shape_errors() {
+        let a = Matrix::<f64>::spd_random(4, 1);
+        let l = potrf(&a).unwrap();
+        let b = Matrix::<f64>::ones(5, 1);
+        assert!(potrs_from_chol(&l, &b).is_err());
+    }
+}

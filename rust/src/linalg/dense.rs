@@ -1,0 +1,502 @@
+//! Column-major dense matrix and the BLAS-3 style primitives used by
+//! the reference implementations and the native tile backend.
+
+use crate::error::{Error, Result};
+use crate::rng::Rng;
+use crate::scalar::{RealScalar, Scalar};
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Column-major dense matrix over a [`Scalar`].
+///
+/// Column-major matches cuSOLVERMg / LAPACK conventions and makes
+/// "column panel" the natural contiguous unit for the 1D layout — the
+/// same reason the paper redistributes *columns*.
+#[derive(Clone, PartialEq)]
+pub struct Matrix<S> {
+    rows: usize,
+    cols: usize,
+    data: Vec<S>,
+}
+
+impl<S: Scalar> Matrix<S> {
+    /// Zero matrix of shape `rows × cols`.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![S::zero(); rows * cols] }
+    }
+
+    /// All-ones matrix (the paper's `b = (1, ..., 1)ᵀ`).
+    pub fn ones(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![S::one(); rows * cols] }
+    }
+
+    /// Identity of order `n`.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = S::one();
+        }
+        m
+    }
+
+    /// From a column-major data vector.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<S>) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length must equal rows*cols");
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> S) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// The paper's benchmark matrix `A = diag(1, ..., N)` (footnote 1:
+    /// random SPD matrices give the same timings).
+    pub fn spd_diag(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { S::from_f64((i + 1) as f64) } else { S::zero() })
+    }
+
+    /// Random Hermitian positive-definite matrix: `A = Bᴴ B + n·I`,
+    /// deterministic in `seed`.
+    pub fn spd_random(n: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut b = Self::zeros(n, n);
+        rng.fill(&mut b.data);
+        let mut a = b.hermitian_of(&b); // Bᴴ B, PSD
+        for i in 0..n {
+            a[(i, i)] += S::from_f64(n as f64);
+        }
+        // Force exact Hermitian symmetry (and real diagonal) to kill
+        // rounding asymmetry from the GEMM.
+        a.hermitianize();
+        a
+    }
+
+    /// Random Hermitian (not necessarily definite) matrix.
+    pub fn hermitian_random(n: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut a = Self::zeros(n, n);
+        rng.fill(&mut a.data);
+        a.hermitianize();
+        a
+    }
+
+    /// Random general matrix.
+    pub fn random(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut a = Self::zeros(rows, cols);
+        rng.fill(&mut a.data);
+        a
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `(rows, cols)`.
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Borrow the column-major backing storage.
+    #[inline]
+    pub fn as_slice(&self) -> &[S] {
+        &self.data
+    }
+
+    /// Mutably borrow the column-major backing storage.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [S] {
+        &mut self.data
+    }
+
+    /// Consume into the backing storage.
+    pub fn into_vec(self) -> Vec<S> {
+        self.data
+    }
+
+    /// Contiguous column `j`.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[S] {
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Mutable contiguous column `j`.
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [S] {
+        &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Copy of the submatrix `[r0, r0+nr) × [c0, c0+nc)`.
+    pub fn submatrix(&self, r0: usize, c0: usize, nr: usize, nc: usize) -> Matrix<S> {
+        assert!(r0 + nr <= self.rows && c0 + nc <= self.cols, "submatrix out of bounds");
+        Matrix::from_fn(nr, nc, |i, j| self[(r0 + i, c0 + j)])
+    }
+
+    /// Write `block` into `self` at offset `(r0, c0)`.
+    pub fn set_submatrix(&mut self, r0: usize, c0: usize, block: &Matrix<S>) {
+        assert!(r0 + block.rows <= self.rows && c0 + block.cols <= self.cols);
+        for j in 0..block.cols {
+            for i in 0..block.rows {
+                self[(r0 + i, c0 + j)] = block[(i, j)];
+            }
+        }
+    }
+
+    /// Conjugate transpose.
+    pub fn adjoint(&self) -> Matrix<S> {
+        Matrix::from_fn(self.cols, self.rows, |i, j| self[(j, i)].conj())
+    }
+
+    /// Plain transpose (no conjugation).
+    pub fn transpose(&self) -> Matrix<S> {
+        Matrix::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    /// `self · other`.
+    pub fn matmul(&self, other: &Matrix<S>) -> Matrix<S> {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut c = Matrix::zeros(self.rows, other.cols);
+        gemm_acc(&mut c, self, other, S::one());
+        c
+    }
+
+    /// `Bᴴ · B` for `B = other` (helper for SPD construction).
+    fn hermitian_of(&self, b: &Matrix<S>) -> Matrix<S> {
+        let bh = b.adjoint();
+        bh.matmul(b)
+    }
+
+    /// Force exact Hermitian symmetry: `A ← (A + Aᴴ)/2` with a real diagonal.
+    pub fn hermitianize(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        let half = S::from_f64(0.5);
+        for j in 0..self.cols {
+            for i in 0..j {
+                let v = (self[(i, j)] + self[(j, i)].conj()) * half;
+                self[(i, j)] = v;
+                self[(j, i)] = v.conj();
+            }
+            let d = self[(j, j)];
+            self[(j, j)] = S::from_real(d.re());
+        }
+    }
+
+    /// Elementwise subtraction.
+    pub fn sub(&self, other: &Matrix<S>) -> Matrix<S> {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(&a, &b)| a - b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Elementwise addition.
+    pub fn add(&self, other: &Matrix<S>) -> Matrix<S> {
+        assert_eq!(self.shape(), other.shape());
+        let data = self.data.iter().zip(&other.data).map(|(&a, &b)| a + b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Scale by a scalar.
+    pub fn scale(&self, s: S) -> Matrix<S> {
+        let data = self.data.iter().map(|&a| a * s).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Frobenius norm.
+    pub fn norm_fro(&self) -> f64 {
+        self.data.iter().map(|v| v.abs_sqr().to_f64()).sum::<f64>().sqrt()
+    }
+
+    /// Max-abs entry.
+    pub fn norm_max(&self) -> f64 {
+        self.data.iter().map(|v| v.abs().to_f64()).fold(0.0, f64::max)
+    }
+
+    /// Zero out the strict upper triangle (canonical lower-Cholesky form).
+    pub fn tril_in_place(&mut self) {
+        for j in 0..self.cols {
+            for i in 0..j.min(self.rows) {
+                self[(i, j)] = S::zero();
+            }
+        }
+    }
+
+    /// Validate square shape, returning a crate error.
+    pub fn require_square(&self) -> Result<usize> {
+        if self.rows != self.cols {
+            return Err(Error::shape(format!("expected square matrix, got {}x{}", self.rows, self.cols)));
+        }
+        Ok(self.rows)
+    }
+}
+
+impl<S: Scalar> Index<(usize, usize)> for Matrix<S> {
+    type Output = S;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &S {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[j * self.rows + i]
+    }
+}
+
+impl<S: Scalar> IndexMut<(usize, usize)> for Matrix<S> {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut S {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[j * self.rows + i]
+    }
+}
+
+impl<S: Scalar> fmt::Debug for Matrix<S> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(8);
+        let show_c = self.cols.min(8);
+        for i in 0..show_r {
+            write!(f, "  ")?;
+            for j in 0..show_c {
+                write!(f, "{} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > show_c { "..." } else { "" })?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// `C += alpha · A · B` on raw column-major buffers — the single GEMM
+/// used everywhere host-side. The innermost loop is a contiguous axpy
+/// over a column (autovectorizes); output columns are processed in
+/// blocks of four so every streamed column of `A` is reused four times
+/// before leaving cache — a 1.5–2× win at n ≥ 256 (EXPERIMENTS.md
+/// §Perf L3-2).
+pub fn gemm_acc<S: Scalar>(c: &mut Matrix<S>, a: &Matrix<S>, b: &Matrix<S>, alpha: S) {
+    assert_eq!(a.cols, b.rows, "gemm inner dims");
+    assert_eq!(c.rows, a.rows, "gemm output rows");
+    assert_eq!(c.cols, b.cols, "gemm output cols");
+    let m = a.rows;
+    if m == 0 {
+        return;
+    }
+    let n = b.cols;
+    let mut j = 0;
+    // 4-column blocks: load A's column once, update 4 C columns.
+    while j + 4 <= n {
+        let (c0, rest) = c.data[j * m..].split_at_mut(m);
+        let (c1, rest) = rest.split_at_mut(m);
+        let (c2, rest) = rest.split_at_mut(m);
+        let c3 = &mut rest[..m];
+        for l in 0..a.cols {
+            let b0 = alpha * b[(l, j)];
+            let b1 = alpha * b[(l, j + 1)];
+            let b2 = alpha * b[(l, j + 2)];
+            let b3 = alpha * b[(l, j + 3)];
+            if b0 == S::zero() && b1 == S::zero() && b2 == S::zero() && b3 == S::zero() {
+                continue;
+            }
+            let al = &a.data[l * m..(l + 1) * m];
+            for i in 0..m {
+                let ai = al[i];
+                c0[i] += ai * b0;
+                c1[i] += ai * b1;
+                c2[i] += ai * b2;
+                c3[i] += ai * b3;
+            }
+        }
+        j += 4;
+    }
+    // Remainder columns.
+    while j < n {
+        let cj = &mut c.data[j * m..(j + 1) * m];
+        for l in 0..a.cols {
+            let blj = alpha * b[(l, j)];
+            if blj == S::zero() {
+                continue;
+            }
+            let al = &a.data[l * m..(l + 1) * m];
+            for i in 0..m {
+                cj[i] += al[i] * blj;
+            }
+        }
+        j += 1;
+    }
+}
+
+/// `C += alpha · Aᴴ · B` without materializing `Aᴴ`.
+pub fn gemm_hn_acc<S: Scalar>(c: &mut Matrix<S>, a: &Matrix<S>, b: &Matrix<S>, alpha: S) {
+    assert_eq!(a.rows, b.rows, "gemm_hn inner dims");
+    assert_eq!(c.rows, a.cols, "gemm_hn output rows");
+    assert_eq!(c.cols, b.cols, "gemm_hn output cols");
+    let k = a.rows;
+    for j in 0..b.cols {
+        for i in 0..a.cols {
+            let ai = &a.data[i * k..(i + 1) * k];
+            let bj = &b.data[j * k..(j + 1) * k];
+            let mut acc = S::zero();
+            for l in 0..k {
+                acc += ai[l].conj() * bj[l];
+            }
+            c[(i, j)] += alpha * acc;
+        }
+    }
+}
+
+/// Matrix–vector product `y += alpha · A · x`.
+pub fn gemv_acc<S: Scalar>(y: &mut [S], a: &Matrix<S>, x: &[S], alpha: S) {
+    assert_eq!(a.cols, x.len());
+    assert_eq!(a.rows, y.len());
+    for (l, &xl) in x.iter().enumerate() {
+        let axl = alpha * xl;
+        if axl == S::zero() {
+            continue;
+        }
+        let col = a.col(l);
+        for i in 0..y.len() {
+            y[i] += col[i] * axl;
+        }
+    }
+}
+
+/// Relative Frobenius-norm distance, the assertion currency of the test
+/// suites: `‖a − b‖_F / max(1, ‖b‖_F)`.
+pub trait FrobNorm<S: Scalar> {
+    fn rel_err(&self, other: &Matrix<S>) -> f64;
+}
+
+impl<S: Scalar> FrobNorm<S> for Matrix<S> {
+    fn rel_err(&self, other: &Matrix<S>) -> f64 {
+        self.sub(other).norm_fro() / other.norm_fro().max(1.0)
+    }
+}
+
+/// Dtype-appropriate tolerance for `rel_err` assertions: f32-backed
+/// scalars get a looser bound.
+pub fn tol_for<S: Scalar>(n: usize) -> f64 {
+    let eps = <S::Real as RealScalar>::eps().to_f64();
+    // Scaled by problem size: Cholesky/eig error grows ~ n·eps.
+    (n.max(8) as f64) * eps * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scalar::c64;
+
+    #[test]
+    fn index_is_column_major() {
+        let m = Matrix::<f64>::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m[(0, 0)], 1.0);
+        assert_eq!(m[(1, 0)], 2.0);
+        assert_eq!(m[(0, 1)], 3.0);
+        assert_eq!(m[(1, 1)], 4.0);
+        assert_eq!(m.col(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Matrix::<f64>::from_vec(2, 2, vec![1.0, 3.0, 2.0, 4.0]); // [[1,2],[3,4]]
+        let b = Matrix::<f64>::ones(2, 2);
+        let c = a.matmul(&b);
+        assert_eq!(c[(0, 0)], 3.0);
+        assert_eq!(c[(1, 0)], 7.0);
+        assert_eq!(c[(0, 1)], 3.0);
+        assert_eq!(c[(1, 1)], 7.0);
+    }
+
+    #[test]
+    fn adjoint_conjugates() {
+        let a = Matrix::<c64>::from_fn(2, 3, |i, j| c64::new(i as f64, j as f64));
+        let ah = a.adjoint();
+        assert_eq!(ah.shape(), (3, 2));
+        assert_eq!(ah[(2, 1)], c64::new(1.0, -2.0));
+    }
+
+    #[test]
+    fn spd_random_is_hermitian_pd() {
+        let a = Matrix::<c64>::spd_random(24, 7);
+        let ah = a.adjoint();
+        assert!(a.rel_err(&ah) < 1e-14);
+        // Diagonal dominance by construction ⇒ positive diagonal.
+        for i in 0..24 {
+            assert!(a[(i, i)].re > 0.0);
+            assert_eq!(a[(i, i)].im, 0.0);
+        }
+    }
+
+    #[test]
+    fn gemm_hn_matches_explicit_adjoint() {
+        let a = Matrix::<c64>::random(5, 4, 1);
+        let b = Matrix::<c64>::random(5, 3, 2);
+        let mut c1 = Matrix::<c64>::zeros(4, 3);
+        gemm_hn_acc(&mut c1, &a, &b, c64::new(1.0, 0.0));
+        let c2 = a.adjoint().matmul(&b);
+        assert!(c1.rel_err(&c2) < 1e-14);
+    }
+
+    #[test]
+    fn gemv_matches_matmul() {
+        let a = Matrix::<f64>::random(6, 4, 3);
+        let x = Matrix::<f64>::random(4, 1, 4);
+        let mut y = vec![0.0; 6];
+        gemv_acc(&mut y, &a, x.col(0), 1.0);
+        let c = a.matmul(&x);
+        for i in 0..6 {
+            assert!((y[i] - c[(i, 0)]).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn submatrix_roundtrip() {
+        let a = Matrix::<f64>::random(8, 8, 5);
+        let sub = a.submatrix(2, 3, 4, 5);
+        let mut b = Matrix::<f64>::zeros(8, 8);
+        b.set_submatrix(2, 3, &sub);
+        assert_eq!(b[(2, 3)], a[(2, 3)]);
+        assert_eq!(b[(5, 7)], a[(5, 7)]);
+        assert_eq!(b[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn spd_diag_matches_paper() {
+        let a = Matrix::<f32>::spd_diag(4);
+        for i in 0..4 {
+            assert_eq!(a[(i, i)], (i + 1) as f32);
+        }
+        assert_eq!(a[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn norms() {
+        let a = Matrix::<f64>::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((a.norm_fro() - 5.0).abs() < 1e-15);
+        assert_eq!(a.norm_max(), 4.0);
+    }
+
+    #[test]
+    fn tril_zeroes_upper() {
+        let mut a = Matrix::<f64>::ones(3, 3);
+        a.tril_in_place();
+        assert_eq!(a[(0, 1)], 0.0);
+        assert_eq!(a[(0, 2)], 0.0);
+        assert_eq!(a[(1, 2)], 0.0);
+        assert_eq!(a[(1, 0)], 1.0);
+        assert_eq!(a[(2, 2)], 1.0);
+    }
+}

@@ -1,0 +1,354 @@
+//! Reference symmetric/Hermitian eigensolver (`syevd` semantics).
+//!
+//! Pipeline, mirroring LAPACK `zheevd`/`dsyevd`:
+//!
+//! 1. [`tridiagonalize`]: Householder reduction `Qᴴ A Q = T` with `T`
+//!    real symmetric tridiagonal (complex off-diagonals are rotated real
+//!    by a diagonal phase similarity folded into `Q`).
+//! 2. [`tql2`]: implicit-shift QL on `(d, e)` accumulating the rotations
+//!    into the supplied vector matrix.
+//!
+//! The distributed `solver::syevd` reuses exactly these pieces, but runs
+//! the reduction and back-transformation over tiles spread across the
+//! simulated devices.
+
+use crate::error::{Error, Result};
+use crate::linalg::dense::Matrix;
+use crate::scalar::{RealScalar, Scalar};
+
+/// Real symmetric tridiagonal matrix: diagonal `d` (len n) and
+/// sub-diagonal `e` (len n−1).
+#[derive(Clone, Debug)]
+pub struct Tridiagonal<R> {
+    pub d: Vec<R>,
+    pub e: Vec<R>,
+}
+
+/// Result of a symmetric eigendecomposition: ascending eigenvalues and
+/// the matching orthonormal eigenvector columns (`A = V Λ Vᴴ`).
+#[derive(Clone, Debug)]
+pub struct EigenDecomposition<S: Scalar> {
+    pub values: Vec<S::Real>,
+    pub vectors: Matrix<S>,
+}
+
+/// Householder reduction of a Hermitian matrix to *real* tridiagonal
+/// form. Returns `(T, Q)` with `A = Q · T · Qᴴ` and `Q` unitary.
+pub fn tridiagonalize<S: Scalar>(a: &Matrix<S>) -> Result<(Tridiagonal<S::Real>, Matrix<S>)> {
+    let n = a.require_square()?;
+    let mut w = a.clone();
+    let mut q = Matrix::<S>::eye(n);
+    let mut u = vec![S::zero(); n]; // Householder vector, zero above k+1
+    for k in 0..n.saturating_sub(2) {
+        // x = W[k+1.., k]
+        let mut xnorm_sq = <S::Real as RealScalar>::rzero();
+        for i in (k + 1)..n {
+            xnorm_sq = xnorm_sq + w[(i, k)].abs_sqr();
+        }
+        let xnorm = xnorm_sq.rsqrt_val();
+        if xnorm.to_f64() == 0.0 {
+            continue; // column already reduced
+        }
+        let alpha = w[(k + 1, k)];
+        let aabs = alpha.abs();
+        // β = −phase(α)·‖x‖ (phase = 1 when α = 0).
+        let phase = if aabs.to_f64() == 0.0 { S::one() } else { alpha * S::from_real(<S::Real as RealScalar>::rone() / aabs) };
+        let beta = -phase * S::from_real(xnorm);
+        // u = x − β e₁ ; H = I − τ u uᴴ with real τ = 2/‖u‖².
+        for v in u.iter_mut() {
+            *v = S::zero();
+        }
+        let mut unorm_sq = <S::Real as RealScalar>::rzero();
+        for i in (k + 1)..n {
+            let ui = if i == k + 1 { w[(i, k)] - beta } else { w[(i, k)] };
+            u[i] = ui;
+            unorm_sq = unorm_sq + ui.abs_sqr();
+        }
+        if unorm_sq.to_f64() == 0.0 {
+            continue;
+        }
+        let tau = S::from_real(<S::Real as RealScalar>::from_f64(2.0) / unorm_sq);
+
+        // W ← H W: W -= τ u (uᴴ W)   (rows k+1.. only are touched)
+        let mut uhw = vec![S::zero(); n];
+        for j in 0..n {
+            let mut acc = S::zero();
+            for i in (k + 1)..n {
+                acc += u[i].conj() * w[(i, j)];
+            }
+            uhw[j] = acc;
+        }
+        for j in 0..n {
+            let t = tau * uhw[j];
+            for i in (k + 1)..n {
+                let d = u[i] * t;
+                let v = w[(i, j)] - d;
+                w[(i, j)] = v;
+            }
+        }
+        // W ← W H: W -= τ (W u) uᴴ
+        let mut wu = vec![S::zero(); n];
+        for i in 0..n {
+            let mut acc = S::zero();
+            for j in (k + 1)..n {
+                acc += w[(i, j)] * u[j];
+            }
+            wu[i] = acc;
+        }
+        for i in 0..n {
+            let t = tau * wu[i];
+            for j in (k + 1)..n {
+                let v = w[(i, j)] - t * u[j].conj();
+                w[(i, j)] = v;
+            }
+        }
+        // Q ← Q H: Q -= τ (Q u) uᴴ
+        let mut qu = vec![S::zero(); n];
+        for i in 0..n {
+            let mut acc = S::zero();
+            for j in (k + 1)..n {
+                acc += q[(i, j)] * u[j];
+            }
+            qu[i] = acc;
+        }
+        for i in 0..n {
+            let t = tau * qu[i];
+            for j in (k + 1)..n {
+                let v = q[(i, j)] - t * u[j].conj();
+                q[(i, j)] = v;
+            }
+        }
+    }
+
+    // Extract T; rotate complex sub-diagonals real with a phase
+    // similarity folded into Q (A = Q D T_real Dᴴ Qᴴ = (QD) T_real (QD)ᴴ).
+    let mut d = vec![<S::Real as RealScalar>::rzero(); n];
+    let mut e = vec![<S::Real as RealScalar>::rzero(); n.saturating_sub(1)];
+    let mut p = S::one(); // running phase p[k]
+    let mut phases = vec![S::one(); n];
+    for i in 0..n {
+        d[i] = w[(i, i)].re();
+    }
+    for k in 0..n.saturating_sub(1) {
+        let ek = w[(k + 1, k)];
+        let eabs = ek.abs();
+        e[k] = eabs;
+        let phase = if eabs.to_f64() == 0.0 { S::one() } else { ek * S::from_real(<S::Real as RealScalar>::rone() / eabs) };
+        p = p * phase;
+        phases[k + 1] = p;
+    }
+    // Q ← Q·D
+    let mut qd = q;
+    for j in 0..n {
+        let pj = phases[j];
+        for i in 0..n {
+            let v = qd[(i, j)] * pj;
+            qd[(i, j)] = v;
+        }
+    }
+    Ok((Tridiagonal { d, e }, qd))
+}
+
+/// Implicit-shift QL on a real symmetric tridiagonal `(d, e)`,
+/// accumulating the Givens rotations into the columns of `z`
+/// (pass `Q` from [`tridiagonalize`] to get eigenvectors of `A`,
+/// or the identity to get eigenvectors of `T`).
+///
+/// On success `d` holds ascending eigenvalues and `z`'s columns the
+/// matching eigenvectors. Classic EISPACK `tql2` port.
+pub fn tql2<S: Scalar>(tri: &Tridiagonal<S::Real>, z: &mut Matrix<S>) -> Result<Vec<S::Real>> {
+    let n = tri.d.len();
+    if n == 0 {
+        return Ok(vec![]);
+    }
+    let mut d: Vec<f64> = tri.d.iter().map(|v| v.to_f64()).collect();
+    let mut e: Vec<f64> = tri.e.iter().map(|v| v.to_f64()).collect();
+    e.push(0.0);
+    let zn = z.rows();
+    assert_eq!(z.cols(), n, "z must have n columns");
+
+    const MAX_ITER: usize = 50;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Find small off-diagonal to split.
+            let mut m = l;
+            while m < n - 1 {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > MAX_ITER {
+                return Err(Error::NoConvergence { index: l, iters: MAX_ITER });
+            }
+            // Form implicit shift.
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + if g >= 0.0 { r.abs() } else { -r.abs() });
+            let (mut s, mut c) = (1.0f64, 1.0f64);
+            let mut p = 0.0f64;
+            for i in (l..m).rev() {
+                let f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // Accumulate rotation in z columns i and i+1.
+                let cs = S::from_f64(c);
+                let sn = S::from_f64(s);
+                for k in 0..zn {
+                    let f2 = z[(k, i + 1)];
+                    let zi = z[(k, i)];
+                    z[(k, i + 1)] = sn * zi + cs * f2;
+                    z[(k, i)] = cs * zi - sn * f2;
+                }
+            }
+            if r == 0.0 && m > l + 1 {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+
+    // Sort ascending, permuting eigenvector columns to match.
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| d[i].partial_cmp(&d[j]).unwrap());
+    let sorted_vals: Vec<S::Real> = idx.iter().map(|&i| <S::Real as RealScalar>::from_f64(d[i])).collect();
+    let mut sorted_z = Matrix::<S>::zeros(zn, n);
+    for (new_j, &old_j) in idx.iter().enumerate() {
+        for i in 0..zn {
+            sorted_z[(i, new_j)] = z[(i, old_j)];
+        }
+    }
+    *z = sorted_z;
+    Ok(sorted_vals)
+}
+
+/// Full host `syevd`: eigenvalues (ascending) and eigenvectors of a
+/// Hermitian matrix. The oracle for the distributed eigensolver and the
+/// compute of the single-device baseline.
+pub fn syevd_host<S: Scalar>(a: &Matrix<S>) -> Result<EigenDecomposition<S>> {
+    let (tri, mut q) = tridiagonalize(a)?;
+    let values = tql2(&tri, &mut q)?;
+    Ok(EigenDecomposition { values, vectors: q })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::{tol_for, FrobNorm};
+    use crate::scalar::{c64, Scalar};
+
+    fn check_eigen<S: Scalar>(n: usize, seed: u64) {
+        let a = Matrix::<S>::hermitian_random(n, seed);
+        let eig = syevd_host(&a).unwrap();
+        // A·V = V·Λ
+        let av = a.matmul(&eig.vectors);
+        let mut vl = eig.vectors.clone();
+        for j in 0..n {
+            let lam = S::from_real(eig.values[j]);
+            for i in 0..n {
+                let v = vl[(i, j)] * lam;
+                vl[(i, j)] = v;
+            }
+        }
+        assert!(av.rel_err(&vl) < tol_for::<S>(n) * 10.0, "A·V != V·Λ for {:?} n={n}", S::DTYPE);
+        // Vᴴ·V = I
+        let vhv = eig.vectors.adjoint().matmul(&eig.vectors);
+        assert!(vhv.rel_err(&Matrix::eye(n)) < tol_for::<S>(n) * 10.0);
+        // ascending
+        for k in 1..n {
+            assert!(eig.values[k - 1].to_f64() <= eig.values[k].to_f64() + 1e-12);
+        }
+    }
+
+    #[test]
+    fn eigen_real_f64() {
+        check_eigen::<f64>(30, 1);
+    }
+
+    #[test]
+    fn eigen_complex_c128() {
+        check_eigen::<c64>(25, 2);
+    }
+
+    #[test]
+    fn eigen_real_f32() {
+        check_eigen::<f32>(16, 3);
+    }
+
+    #[test]
+    fn eigen_diag_matches_paper_matrix() {
+        // diag(1..N): eigenvalues are exactly 1..N.
+        let n = 12;
+        let a = Matrix::<f64>::spd_diag(n);
+        let eig = syevd_host(&a).unwrap();
+        for i in 0..n {
+            assert!((eig.values[i] - (i + 1) as f64).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn tridiagonalize_preserves_similarity() {
+        let n = 20;
+        let a = Matrix::<c64>::hermitian_random(n, 5);
+        let (tri, q) = tridiagonalize(&a).unwrap();
+        // Rebuild T as dense real-in-S matrix and check A = Q T Qᴴ.
+        let mut t = Matrix::<c64>::zeros(n, n);
+        for i in 0..n {
+            t[(i, i)] = c64::new(tri.d[i], 0.0);
+        }
+        for k in 0..n - 1 {
+            t[(k + 1, k)] = c64::new(tri.e[k], 0.0);
+            t[(k, k + 1)] = c64::new(tri.e[k], 0.0);
+        }
+        let rebuilt = q.matmul(&t).matmul(&q.adjoint());
+        assert!(rebuilt.rel_err(&a) < 1e-12);
+        // Q unitary.
+        let qhq = q.adjoint().matmul(&q);
+        assert!(qhq.rel_err(&Matrix::eye(n)) < 1e-12);
+        // Sub-diagonal must be real non-negative by construction.
+        for k in 0..n - 1 {
+            assert!(tri.e[k] >= 0.0);
+        }
+    }
+
+    #[test]
+    fn tql2_identity_gives_tridiag_vectors() {
+        // Known 2x2: [[2,1],[1,2]] -> eigenvalues 1, 3.
+        let tri = Tridiagonal { d: vec![2.0f64, 2.0], e: vec![1.0] };
+        let mut z = Matrix::<f64>::eye(2);
+        let vals = tql2(&tri, &mut z).unwrap();
+        assert!((vals[0] - 1.0).abs() < 1e-12);
+        assert!((vals[1] - 3.0).abs() < 1e-12);
+        // Eigenvector for λ=1 is (1,-1)/√2 up to sign.
+        let r = (z[(0, 0)] / z[(1, 0)]).abs();
+        assert!((r - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let a = Matrix::<f64>::from_vec(1, 1, vec![5.0]);
+        let eig = syevd_host(&a).unwrap();
+        assert_eq!(eig.values, vec![5.0]);
+    }
+}

@@ -1,0 +1,24 @@
+//! Host-side dense linear algebra.
+//!
+//! This module is the *reference* layer: a column-major [`Matrix`] type
+//! plus straightforward implementations of the kernels the distributed
+//! solvers are built from (Cholesky, triangular solves, GEMM/HERK,
+//! Householder tridiagonalization, implicit-shift QL). It serves three
+//! roles:
+//!
+//! 1. correctness oracle for the distributed solvers and XLA kernels,
+//! 2. compute backend for `solver::NativeKernels` (tile ops), and
+//! 3. the single-device `baseline` (the paper's cuSOLVERDn comparator).
+
+mod cholesky;
+pub mod dense;
+mod eigen;
+mod tri;
+
+pub use cholesky::{potrf, potri_from_chol, potrs_from_chol};
+pub use dense::{
+    gemm_acc as dense_gemm_acc, gemm_hn_acc as dense_gemm_hn_acc, gemv_acc, tol_for, FrobNorm,
+    Matrix,
+};
+pub use eigen::{syevd_host, tql2, tridiagonalize, EigenDecomposition, Tridiagonal};
+pub use tri::{trsm_left_lower, trsm_left_lower_h, trsm_right_lower_h, trtri_lower};

@@ -1,0 +1,151 @@
+//! Triangular solves and inversion (reference versions).
+//!
+//! Naming follows BLAS `trsm` conventions specialized to the cases the
+//! Cholesky-based solvers need; all take the *lower* factor `L` and do
+//! not require unit diagonals.
+
+use crate::error::{Error, Result};
+use crate::linalg::dense::Matrix;
+use crate::scalar::Scalar;
+
+/// Solve `L · X = B` (left, lower, no transpose) by forward substitution.
+pub fn trsm_left_lower<S: Scalar>(l: &Matrix<S>, b: &Matrix<S>) -> Matrix<S> {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(b.rows(), n);
+    let mut x = b.clone();
+    for j in 0..x.cols() {
+        for i in 0..n {
+            let mut v = x[(i, j)];
+            for k in 0..i {
+                v = v - l[(i, k)] * x[(k, j)];
+            }
+            x[(i, j)] = v / l[(i, i)];
+        }
+    }
+    x
+}
+
+/// Solve `Lᴴ · X = B` (left, lower-adjoint) by backward substitution.
+pub fn trsm_left_lower_h<S: Scalar>(l: &Matrix<S>, b: &Matrix<S>) -> Matrix<S> {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(b.rows(), n);
+    let mut x = b.clone();
+    for j in 0..x.cols() {
+        for i in (0..n).rev() {
+            let mut v = x[(i, j)];
+            for k in (i + 1)..n {
+                // (Lᴴ)[i,k] = conj(L[k,i])
+                v = v - l[(k, i)].conj() * x[(k, j)];
+            }
+            x[(i, j)] = v / l[(i, i)].conj();
+        }
+    }
+    x
+}
+
+/// Solve `X · Lᴴ = B` (right, lower-adjoint): the panel update of
+/// right-looking Cholesky, `L[i,k] = A[i,k] · L[k,k]⁻ᴴ`.
+pub fn trsm_right_lower_h<S: Scalar>(b: &Matrix<S>, l: &Matrix<S>) -> Matrix<S> {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(b.cols(), n);
+    let mut x = b.clone();
+    // X Lᴴ = B  ⇔  column-by-column: (Lᴴ is upper with (Lᴴ)[k,j] = conj(L[j,k]))
+    // X[:,j]·(Lᴴ)[j,j] = B[:,j] - Σ_{k<j} X[:,k]·(Lᴴ)[k,j]
+    for j in 0..n {
+        for i in 0..x.rows() {
+            let mut v = x[(i, j)];
+            for k in 0..j {
+                v = v - x[(i, k)] * l[(j, k)].conj();
+            }
+            x[(i, j)] = v / l[(j, j)].conj();
+        }
+    }
+    x
+}
+
+/// Invert a lower-triangular matrix; the result is lower-triangular.
+pub fn trtri_lower<S: Scalar>(l: &Matrix<S>) -> Result<Matrix<S>> {
+    let n = l.require_square()?;
+    for i in 0..n {
+        if l[(i, i)] == S::zero() {
+            return Err(Error::solver(format!("trtri: zero diagonal at {i}")));
+        }
+    }
+    // Solve L·X = I column by column; X inherits the lower triangle.
+    let mut x = Matrix::<S>::zeros(n, n);
+    for j in 0..n {
+        // Forward substitution starting at row j (entries above are zero).
+        x[(j, j)] = S::one() / l[(j, j)];
+        for i in (j + 1)..n {
+            let mut v = S::zero();
+            for k in j..i {
+                v = v - l[(i, k)] * x[(k, j)];
+            }
+            x[(i, j)] = v / l[(i, i)];
+        }
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::cholesky::potrf;
+    use crate::linalg::dense::{tol_for, FrobNorm};
+    use crate::scalar::c64;
+
+    fn lower_factor<S: Scalar>(n: usize, seed: u64) -> Matrix<S> {
+        potrf(&Matrix::<S>::spd_random(n, seed)).unwrap()
+    }
+
+    #[test]
+    fn left_lower_solve() {
+        let l = lower_factor::<f64>(12, 1);
+        let x_true = Matrix::<f64>::random(12, 3, 2);
+        let b = l.matmul(&x_true);
+        let x = trsm_left_lower(&l, &b);
+        assert!(x.rel_err(&x_true) < tol_for::<f64>(12));
+    }
+
+    #[test]
+    fn left_lower_h_solve() {
+        let l = lower_factor::<c64>(12, 3);
+        let x_true = Matrix::<c64>::random(12, 2, 4);
+        let b = l.adjoint().matmul(&x_true);
+        let x = trsm_left_lower_h(&l, &b);
+        assert!(x.rel_err(&x_true) < tol_for::<c64>(12));
+    }
+
+    #[test]
+    fn right_lower_h_solve() {
+        let l = lower_factor::<c64>(10, 5);
+        let x_true = Matrix::<c64>::random(6, 10, 6);
+        let b = x_true.matmul(&l.adjoint());
+        let x = trsm_right_lower_h(&b, &l);
+        assert!(x.rel_err(&x_true) < tol_for::<c64>(10));
+    }
+
+    #[test]
+    fn trtri_inverts() {
+        let l = lower_factor::<f64>(15, 7);
+        let linv = trtri_lower(&l).unwrap();
+        let prod = l.matmul(&linv);
+        assert!(prod.rel_err(&Matrix::eye(15)) < tol_for::<f64>(15));
+        // Result stays lower triangular.
+        for j in 1..15 {
+            for i in 0..j {
+                assert_eq!(linv[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn trtri_rejects_singular() {
+        let mut l = Matrix::<f64>::eye(3);
+        l[(1, 1)] = 0.0;
+        assert!(trtri_lower(&l).is_err());
+    }
+}

@@ -1,0 +1,197 @@
+//! Lightweight atomic counters for the coordinator hot path.
+//!
+//! Everything the benchmark harness reports — bytes moved over peer
+//! links, kernel launches, redistribution cycle counts — flows through
+//! [`Metrics`]. Counters are lock-free atomics so SPMD worker threads
+//! can bump them concurrently without serializing the hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared counters; cloned cheaply via `Arc` by every subsystem.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Bytes moved device→device (the `cudaMemcpyPeerAsync` analogue).
+    pub peer_bytes: AtomicU64,
+    /// Number of peer-to-peer copy operations.
+    pub peer_copies: AtomicU64,
+    /// Bytes moved host→device.
+    pub h2d_bytes: AtomicU64,
+    /// Bytes moved device→host.
+    pub d2h_bytes: AtomicU64,
+    /// Bytes copied within a single device.
+    pub local_bytes: AtomicU64,
+    /// Tile-kernel launches (potf2/trsm/gemm/...).
+    pub kernel_launches: AtomicU64,
+    /// Floating-point operations charged by kernels.
+    pub flops: AtomicU64,
+    /// Device allocations made.
+    pub allocs: AtomicU64,
+    /// Device allocations released.
+    pub frees: AtomicU64,
+    /// Permutation cycles executed by the redistributor.
+    pub redist_cycles: AtomicU64,
+    /// Columns rotated by the redistributor.
+    pub redist_columns: AtomicU64,
+}
+
+impl Metrics {
+    /// Fresh zeroed metrics.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add_peer(&self, bytes: u64) {
+        self.peer_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.peer_copies.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_h2d(&self, bytes: u64) {
+        self.h2d_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_d2h(&self, bytes: u64) {
+        self.d2h_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_local(&self, bytes: u64) {
+        self.local_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_kernel(&self, flops: u64) {
+        self.kernel_launches.fetch_add(1, Ordering::Relaxed);
+        self.flops.fetch_add(flops, Ordering::Relaxed);
+    }
+
+    /// Snapshot all counters (for reports; not atomic across fields).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            peer_bytes: self.peer_bytes.load(Ordering::Relaxed),
+            peer_copies: self.peer_copies.load(Ordering::Relaxed),
+            h2d_bytes: self.h2d_bytes.load(Ordering::Relaxed),
+            d2h_bytes: self.d2h_bytes.load(Ordering::Relaxed),
+            local_bytes: self.local_bytes.load(Ordering::Relaxed),
+            kernel_launches: self.kernel_launches.load(Ordering::Relaxed),
+            flops: self.flops.load(Ordering::Relaxed),
+            allocs: self.allocs.load(Ordering::Relaxed),
+            frees: self.frees.load(Ordering::Relaxed),
+            redist_cycles: self.redist_cycles.load(Ordering::Relaxed),
+            redist_columns: self.redist_columns.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Reset all counters to zero (between benchmark repetitions).
+    pub fn reset(&self) {
+        for c in [
+            &self.peer_bytes,
+            &self.peer_copies,
+            &self.h2d_bytes,
+            &self.d2h_bytes,
+            &self.local_bytes,
+            &self.kernel_launches,
+            &self.flops,
+            &self.allocs,
+            &self.frees,
+            &self.redist_cycles,
+            &self.redist_columns,
+        ] {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Plain-old-data copy of the counters at one instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct MetricsSnapshot {
+    pub peer_bytes: u64,
+    pub peer_copies: u64,
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+    pub local_bytes: u64,
+    pub kernel_launches: u64,
+    pub flops: u64,
+    pub allocs: u64,
+    pub frees: u64,
+    pub redist_cycles: u64,
+    pub redist_columns: u64,
+}
+
+impl MetricsSnapshot {
+    /// Difference against an earlier snapshot (per-phase accounting).
+    pub fn delta(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+        MetricsSnapshot {
+            peer_bytes: self.peer_bytes - earlier.peer_bytes,
+            peer_copies: self.peer_copies - earlier.peer_copies,
+            h2d_bytes: self.h2d_bytes - earlier.h2d_bytes,
+            d2h_bytes: self.d2h_bytes - earlier.d2h_bytes,
+            local_bytes: self.local_bytes - earlier.local_bytes,
+            kernel_launches: self.kernel_launches - earlier.kernel_launches,
+            flops: self.flops - earlier.flops,
+            allocs: self.allocs - earlier.allocs,
+            frees: self.frees - earlier.frees,
+            redist_cycles: self.redist_cycles - earlier.redist_cycles,
+            redist_columns: self.redist_columns - earlier.redist_columns,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.add_peer(100);
+        m.add_peer(50);
+        m.add_kernel(1000);
+        let s = m.snapshot();
+        assert_eq!(s.peer_bytes, 150);
+        assert_eq!(s.peer_copies, 2);
+        assert_eq!(s.kernel_launches, 1);
+        assert_eq!(s.flops, 1000);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let m = Metrics::new();
+        m.add_h2d(7);
+        m.reset();
+        assert_eq!(m.snapshot(), MetricsSnapshot::default());
+    }
+
+    #[test]
+    fn delta_subtracts() {
+        let m = Metrics::new();
+        m.add_peer(10);
+        let a = m.snapshot();
+        m.add_peer(30);
+        let b = m.snapshot();
+        let d = b.delta(&a);
+        assert_eq!(d.peer_bytes, 30);
+        assert_eq!(d.peer_copies, 1);
+    }
+
+    #[test]
+    fn concurrent_bumps() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    m.add_peer(1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.snapshot().peer_bytes, 8000);
+    }
+}

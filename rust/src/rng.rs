@@ -1,0 +1,172 @@
+//! Deterministic RNG utilities.
+//!
+//! The vendored crate set has no `rand`/`proptest`, so we carry a small
+//! splitmix64-seeded xoshiro256** generator. It backs workload
+//! generation (random SPD matrices), the property-test harness in
+//! `rust/tests/`, and benchmark inputs — all fully reproducible from a
+//! 64-bit seed.
+
+use crate::scalar::{Complex, RealScalar, Scalar};
+
+/// xoshiro256** PRNG, seeded via splitmix64 (Blackman & Vigna).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create from a 64-bit seed. Identical seeds give identical streams.
+    pub fn new(seed: u64) -> Self {
+        // splitmix64 to fill the state; avoids the all-zero state.
+        let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut next = || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng { s: [next(), next(), next(), next()] }
+    }
+
+    /// Next raw 64 bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, bound) (Lemire's method, bound > 0).
+    #[inline]
+    pub fn next_below(&mut self, bound: usize) -> usize {
+        assert!(bound > 0);
+        (self.next_u64() % bound as u64) as usize
+    }
+
+    /// Uniform in [lo, hi] inclusive.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.next_below(hi - lo + 1)
+    }
+
+    /// Uniform in [-1, 1).
+    #[inline]
+    pub fn next_signed(&mut self) -> f64 {
+        2.0 * self.next_f64() - 1.0
+    }
+
+    /// A random scalar with entries uniform in [-1, 1) (per plane for complex).
+    pub fn scalar<S: Scalar>(&mut self) -> S {
+        S::from_parts(
+            <S::Real as RealScalar>::from_f64(self.next_signed()),
+            <S::Real as RealScalar>::from_f64(self.next_signed()),
+        )
+    }
+
+    /// Fill a slice with random scalars.
+    pub fn fill<S: Scalar>(&mut self, buf: &mut [S]) {
+        for v in buf.iter_mut() {
+            *v = self.scalar();
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// A random permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut p);
+        p
+    }
+
+    /// Random complex on the unit circle (used for Hermitian test matrices).
+    pub fn unit_phase<T: RealScalar>(&mut self) -> Complex<T> {
+        let theta = self.next_f64() * std::f64::consts::TAU;
+        Complex::new(T::from_f64(theta.cos()), T::from_f64(theta.sin()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn permutation_is_bijection() {
+        let mut r = Rng::new(3);
+        let p = r.permutation(257);
+        let mut seen = vec![false; 257];
+        for &i in &p {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = Rng::new(9);
+        for _ in 0..500 {
+            let v = r.range(3, 9);
+            assert!((3..=9).contains(&v));
+        }
+        assert_eq!(r.range(5, 5), 5);
+    }
+
+    #[test]
+    fn complex_scalar_has_imag() {
+        let mut r = Rng::new(11);
+        let z: crate::scalar::c64 = r.scalar();
+        // overwhelmingly likely nonzero
+        assert!(z.im != 0.0 || z.re != 0.0);
+        let x: f64 = r.scalar();
+        assert!((-1.0..1.0).contains(&x));
+    }
+
+    #[test]
+    fn unit_phase_on_circle() {
+        let mut r = Rng::new(13);
+        for _ in 0..100 {
+            let z = r.unit_phase::<f64>();
+            assert!((z.norm_sqr() - 1.0).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by the
+//! Python compile path (`python/compile/aot.py`) and executes them from
+//! the Rust hot path. Python never runs at solve time.
+//!
+//! Interchange format is **HLO text**, not serialized protos: jax ≥ 0.5
+//! emits 64-bit instruction ids that the crate's xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example).
+//!
+//! Artifacts are named `<op>_<dtype>_<T>.hlo.txt` with `dtype ∈ {f32,
+//! f64}` — complex kernels take split real/imag planes (`c<op>_...`),
+//! because the crate's `Literal` API only exposes real element types.
+//! [`XlaKernels`] adapts the fixed `T×T` executables to the arbitrary
+//! tile shapes the solvers produce by chunking and zero/identity
+//! padding — the same shape-specialization discipline a real XLA AOT
+//! deployment lives with.
+//!
+//! ## Thread safety
+//!
+//! The `xla` crate's wrappers are `Rc`-based and not `Send`/`Sync`, but
+//! the underlying PJRT CPU client is thread-safe. We keep every XLA
+//! object inside one mutex-guarded state and never let one escape, so
+//! the (documented) `unsafe impl Send/Sync` below is sound: all
+//! refcount traffic and C-API calls are serialized by the lock.
+
+mod xla_kernels;
+
+pub use xla_kernels::XlaKernels;
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+struct XlaState {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// A PJRT CPU client + executable cache keyed by artifact name.
+pub struct PjRtRuntime {
+    state: Mutex<XlaState>,
+    dir: PathBuf,
+}
+
+// Safety: see module docs — all access to the non-Send XLA wrappers is
+// serialized behind `state`; no wrapper object ever leaves the lock.
+unsafe impl Send for PjRtRuntime {}
+unsafe impl Sync for PjRtRuntime {}
+
+impl PjRtRuntime {
+    /// Create a runtime reading artifacts from `dir`.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjRtRuntime {
+            state: Mutex::new(XlaState { client, cache: HashMap::new() }),
+            dir: dir.as_ref().to_path_buf(),
+        })
+    }
+
+    /// Default artifact directory: `$JAXMG_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("JAXMG_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Artifact directory in use.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.state.lock().unwrap().client.platform_name()
+    }
+
+    /// True if the artifact file for `name` exists.
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.state.lock().unwrap().cache.len()
+    }
+
+    /// Pre-compile an artifact into the cache (fails fast on a missing
+    /// or unparsable artifact).
+    pub fn warm(&self, name: &str) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        self.ensure_loaded(&mut st, name)?;
+        Ok(())
+    }
+
+    fn ensure_loaded<'a>(
+        &self,
+        st: &'a mut XlaState,
+        name: &str,
+    ) -> Result<&'a xla::PjRtLoadedExecutable> {
+        if !st.cache.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            if !path.exists() {
+                return Err(Error::runtime(format!(
+                    "missing AOT artifact {path:?} — run `make artifacts` first"
+                )));
+            }
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = st.client.compile(&comp)?;
+            st.cache.insert(name.to_string(), exe);
+        }
+        Ok(st.cache.get(name).unwrap())
+    }
+
+    /// Execute the artifact `name` on real-typed input buffers, each
+    /// given as (flat row-major data, dims; empty dims = scalar).
+    /// Returns the flattened outputs of the result tuple.
+    ///
+    /// Compiles on first use, cached thereafter.
+    pub fn execute<T: xla::NativeType + xla::ArrayElement>(
+        &self,
+        name: &str,
+        inputs: &[(&[T], &[i64])],
+    ) -> Result<Vec<Vec<T>>> {
+        let mut st = self.state.lock().unwrap();
+        // Build literals inside the lock (Literal is not Send either).
+        // Shaped literals go through create_from_shape_and_untyped_data:
+        // one copy instead of vec1 + reshape's two (§Perf RT-1).
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = if dims.is_empty() {
+                xla::Literal::scalar(data[0])
+            } else {
+                let dims_usize: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(
+                        data.as_ptr() as *const u8,
+                        std::mem::size_of_val(*data),
+                    )
+                };
+                xla::Literal::create_from_shape_and_untyped_data(T::TY, &dims_usize, bytes)?
+            };
+            literals.push(lit);
+        }
+        let exe = self.ensure_loaded(&mut st, name)?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<T>()?);
+        }
+        Ok(out)
+    }
+}
+
+impl std::fmt::Debug for PjRtRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PjRtRuntime(dir={:?}, cached={})", self.dir, self.cached())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifact_is_a_clear_error() {
+        let rt = PjRtRuntime::new("/nonexistent-artifacts").unwrap();
+        let err = rt.warm("potf2_f64_64").unwrap_err();
+        assert!(format!("{err}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn platform_is_cpu() {
+        let rt = PjRtRuntime::new("artifacts").unwrap();
+        assert_eq!(rt.platform().to_lowercase(), "cpu");
+        assert_eq!(rt.cached(), 0);
+    }
+
+    #[test]
+    fn runtime_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<PjRtRuntime>();
+    }
+}

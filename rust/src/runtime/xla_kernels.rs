@@ -1,0 +1,346 @@
+//! [`TileKernels`] backend over the AOT-compiled XLA executables.
+//!
+//! Every executable is shape-specialized to `T×T` tiles (AOT has no
+//! dynamic shapes), so this adapter chunks arbitrary solver tiles into
+//! `T`-sized pieces and pads edges — zeros for GEMM operands, the
+//! identity for triangular factors (so padded solves stay well-posed
+//! and padded rows come out zero).
+//!
+//! Complex scalars cross the boundary as split real/imag planes
+//! (`c<op>` artifacts take twice the inputs); the Python kernels
+//! recombine them internally. See DESIGN.md §Complex dtypes.
+
+use super::PjRtRuntime;
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::scalar::{RealScalar, Scalar};
+use crate::solver::TileKernels;
+use std::sync::Arc;
+
+/// XLA-backed tile kernels for scalar type `S` at tile size `tile`.
+pub struct XlaKernels<S: Scalar> {
+    rt: Arc<PjRtRuntime>,
+    tile: usize,
+    _marker: std::marker::PhantomData<fn() -> S>,
+}
+
+/// All ops the solvers need; names match the artifact files.
+const OPS: [&str; 7] =
+    ["potf2", "trsm_rlhc", "trsm_llnn", "trsm_llhn", "gemm_nn", "gemm_nh", "gemm_hn"];
+
+impl<S: Scalar> XlaKernels<S>
+where
+    S::Real: xla::NativeType + xla::ArrayElement,
+{
+    /// Real plane dtype token in artifact names.
+    fn dtype_token() -> &'static str {
+        match S::DTYPE.real_dtype() {
+            crate::scalar::DType::F32 => "f32",
+            _ => "f64",
+        }
+    }
+
+    /// Artifact name for an op at this dtype/tile.
+    fn artifact(&self, op: &str) -> String {
+        let prefix = if S::DTYPE.is_complex() { "c" } else { "" };
+        format!("{prefix}{op}_{}_{}", Self::dtype_token(), self.tile)
+    }
+
+    /// Create a backend, verifying all artifacts exist (compiles lazily).
+    pub fn new(rt: Arc<PjRtRuntime>, tile: usize) -> Result<Self> {
+        let k = XlaKernels { rt, tile, _marker: std::marker::PhantomData };
+        for op in OPS {
+            let name = k.artifact(op);
+            if !k.rt.has_artifact(&name) {
+                return Err(Error::runtime(format!(
+                    "missing AOT artifact {name}.hlo.txt in {:?} — run `make artifacts`",
+                    k.rt.dir()
+                )));
+            }
+        }
+        Ok(k)
+    }
+
+    /// The tile size the executables are specialized to.
+    pub fn tile(&self) -> usize {
+        self.tile
+    }
+
+    // ---- helpers -----------------------------------------------------
+
+    /// Extract a padded `T×T` block from `m` at (r0, c0) as row-major
+    /// real planes (all-re then all-im for complex). `diag_pad` puts
+    /// ones on the padded diagonal (for triangular factors).
+    fn pack(&self, m: &Matrix<S>, r0: usize, c0: usize, diag_pad: bool) -> Vec<S::Real> {
+        let t = self.tile;
+        let nr = m.rows().saturating_sub(r0).min(t);
+        let nc = m.cols().saturating_sub(c0).min(t);
+        let mut tilebuf = vec![S::zero(); t * t]; // row-major scalars
+        for i in 0..t {
+            for j in 0..t {
+                let v = if i < nr && j < nc {
+                    m[(r0 + i, c0 + j)]
+                } else if diag_pad && i == j {
+                    S::one()
+                } else {
+                    S::zero()
+                };
+                tilebuf[i * t + j] = v;
+            }
+        }
+        let mut planes = vec![<S::Real as RealScalar>::rzero(); S::PLANES * t * t];
+        S::split_planes(&tilebuf, &mut planes);
+        planes
+    }
+
+    /// Write a row-major plane buffer back into `m` at (r0, c0),
+    /// clipping padding.
+    fn unpack(&self, planes: &[S::Real], m: &mut Matrix<S>, r0: usize, c0: usize) {
+        let t = self.tile;
+        let mut tilebuf = vec![S::zero(); t * t];
+        S::merge_planes(planes, &mut tilebuf);
+        let nr = m.rows().saturating_sub(r0).min(t);
+        let nc = m.cols().saturating_sub(c0).min(t);
+        for i in 0..nr {
+            for j in 0..nc {
+                m[(r0 + i, c0 + j)] = tilebuf[i * t + j];
+            }
+        }
+    }
+
+    /// Split a plane buffer into per-plane input slices with dims.
+    fn plane_inputs<'a>(&self, buf: &'a [S::Real]) -> Vec<(&'a [S::Real], Vec<i64>)> {
+        let t = self.tile as i64;
+        let n = (self.tile * self.tile) as usize;
+        (0..S::PLANES).map(|p| (&buf[p * n..(p + 1) * n], vec![t, t])).collect()
+    }
+
+    /// Run an artifact with tile-plane inputs plus an optional scalar α.
+    fn run(
+        &self,
+        op: &str,
+        tiles: &[&[S::Real]],
+        alpha: Option<S>,
+    ) -> Result<Vec<Vec<S::Real>>> {
+        let mut inputs: Vec<(&[S::Real], Vec<i64>)> = Vec::new();
+        for buf in tiles {
+            for inp in self.plane_inputs(buf) {
+                inputs.push(inp);
+            }
+        }
+        let alpha_planes;
+        if let Some(a) = alpha {
+            alpha_planes = [a.re(), a.im()];
+            inputs.push((&alpha_planes[0..1], vec![]));
+            if S::PLANES == 2 {
+                inputs.push((&alpha_planes[1..2], vec![]));
+            }
+        }
+        let refs: Vec<(&[S::Real], &[i64])> =
+            inputs.iter().map(|(d, dims)| (*d, dims.as_slice())).collect();
+        self.rt.execute::<S::Real>(&self.artifact(op), &refs)
+    }
+
+    /// Merge multi-plane outputs back into one plane buffer per tile.
+    fn merge_out(&self, out: Vec<Vec<S::Real>>) -> Vec<S::Real> {
+        if S::PLANES == 1 {
+            out.into_iter().next().unwrap()
+        } else {
+            let mut merged = out[0].clone();
+            merged.extend_from_slice(&out[1]);
+            merged
+        }
+    }
+
+    /// Generic chunked GEMM-family driver: `C ← C + α·op_A(A)·op_B(B)`,
+    /// where the artifact computes one `T×T×T` block step.
+    fn gemm_chunked(
+        &self,
+        op: &str,
+        c: &mut Matrix<S>,
+        a: &Matrix<S>,
+        b: &Matrix<S>,
+        alpha: S,
+        // (a_rows_indexed_by, a_cols_indexed_by): which of (i, l) picks
+        // the row/col block of A for output block (i, j) at depth l.
+        a_idx: fn(usize, usize) -> (usize, usize),
+        b_idx: fn(usize, usize, usize) -> (usize, usize),
+        kdim: usize,
+    ) -> Result<()> {
+        let t = self.tile;
+        let mi = c.rows().div_ceil(t);
+        let nj = c.cols().div_ceil(t);
+        let kl = kdim.div_ceil(t);
+        for bi in 0..mi {
+            for bj in 0..nj {
+                let mut acc = self.pack(c, bi * t, bj * t, false);
+                for bl in 0..kl {
+                    let (ar, ac) = a_idx(bi, bl);
+                    let (br, bc) = b_idx(bi, bj, bl);
+                    let at = self.pack(a, ar * t, ac * t, false);
+                    let bt = self.pack(b, br * t, bc * t, false);
+                    let out = self.run(op, &[&acc, &at, &bt], Some(alpha))?;
+                    acc = self.merge_out(out);
+                }
+                self.unpack(&acc, c, bi * t, bj * t);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<S: Scalar> TileKernels<S> for XlaKernels<S>
+where
+    S::Real: xla::NativeType + xla::ArrayElement,
+{
+    fn potf2(&self, a: &Matrix<S>) -> Result<Matrix<S>> {
+        let n = a.require_square()?;
+        let t = self.tile;
+        if n > t {
+            // The solvers only potf2 single tiles; blocked potf2 of a
+            // bigger block falls back to chunked right-looking steps.
+            return Err(Error::runtime(format!(
+                "potf2 artifact specialized to T={t}, got {n}x{n} block"
+            )));
+        }
+        // Identity padding keeps the factorization well posed.
+        let packed = self.pack(a, 0, 0, true);
+        let out = self.run("potf2", &[&packed], None)?;
+        let merged = self.merge_out(out);
+        let mut l = Matrix::<S>::zeros(n, n);
+        self.unpack(&merged, &mut l, 0, 0);
+        // NaN from a non-PD pivot mirrors cuSOLVER's info > 0.
+        for j in 0..n {
+            let d = l[(j, j)].re().to_f64();
+            if !d.is_finite() || d <= 0.0 {
+                return Err(Error::NotPositiveDefinite { minor: j + 1 });
+            }
+        }
+        l.tril_in_place();
+        Ok(l)
+    }
+
+    fn trsm_rlhc(&self, b: &Matrix<S>, l: &Matrix<S>) -> Result<Matrix<S>> {
+        // X = B·L⁻ᴴ, chunked over row blocks of B (each row block is an
+        // independent T×T solve against the same factor tile).
+        let t = self.tile;
+        if l.rows() > t {
+            return Err(Error::runtime(format!("trsm factor exceeds tile T={t}")));
+        }
+        let lt = self.pack(l, 0, 0, true);
+        let mut x = Matrix::<S>::zeros(b.rows(), b.cols());
+        for br in 0..b.rows().div_ceil(t) {
+            let bt = self.pack(b, br * t, 0, false);
+            let out = self.run("trsm_rlhc", &[&bt, &lt], None)?;
+            let merged = self.merge_out(out);
+            self.unpack(&merged, &mut x, br * t, 0);
+        }
+        Ok(x)
+    }
+
+    fn trsm_llnn(&self, l: &Matrix<S>, b: &Matrix<S>) -> Result<Matrix<S>> {
+        let t = self.tile;
+        if l.rows() > t {
+            return Err(Error::runtime(format!("trsm factor exceeds tile T={t}")));
+        }
+        let lt = self.pack(l, 0, 0, true);
+        let mut x = Matrix::<S>::zeros(b.rows(), b.cols());
+        for bc in 0..b.cols().div_ceil(t) {
+            let bt = self.pack(b, 0, bc * t, false);
+            let out = self.run("trsm_llnn", &[&lt, &bt], None)?;
+            let merged = self.merge_out(out);
+            self.unpack(&merged, &mut x, 0, bc * t);
+        }
+        Ok(x)
+    }
+
+    fn trsm_llhn(&self, l: &Matrix<S>, b: &Matrix<S>) -> Result<Matrix<S>> {
+        let t = self.tile;
+        if l.rows() > t {
+            return Err(Error::runtime(format!("trsm factor exceeds tile T={t}")));
+        }
+        let lt = self.pack(l, 0, 0, true);
+        let mut x = Matrix::<S>::zeros(b.rows(), b.cols());
+        for bc in 0..b.cols().div_ceil(t) {
+            let bt = self.pack(b, 0, bc * t, false);
+            let out = self.run("trsm_llhn", &[&lt, &bt], None)?;
+            let merged = self.merge_out(out);
+            self.unpack(&merged, &mut x, 0, bc * t);
+        }
+        Ok(x)
+    }
+
+    fn gemm_nn(&self, c: &mut Matrix<S>, a: &Matrix<S>, b: &Matrix<S>, alpha: S) -> Result<()> {
+        let k = a.cols();
+        self.gemm_chunked("gemm_nn", c, a, b, alpha, |i, l| (i, l), |_i, j, l| (l, j), k)
+    }
+
+    fn gemm_nh(&self, c: &mut Matrix<S>, a: &Matrix<S>, b: &Matrix<S>, alpha: S) -> Result<()> {
+        // C += α·A·Bᴴ: depth over A's cols == B's cols; B block (j, l).
+        let k = a.cols();
+        self.gemm_chunked("gemm_nh", c, a, b, alpha, |i, l| (i, l), |_i, j, l| (j, l), k)
+    }
+
+    fn gemm_hn(&self, c: &mut Matrix<S>, a: &Matrix<S>, b: &Matrix<S>, alpha: S) -> Result<()> {
+        // C += α·Aᴴ·B: depth over A's rows == B's rows; A block (l, i).
+        let k = a.rows();
+        self.gemm_chunked("gemm_hn", c, a, b, alpha, |i, l| (l, i), |_i, j, l| (l, j), k)
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-aot"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Cross-checks against NativeKernels live in `rust/tests/` (they
+    //! need built artifacts); here we only test the packing helpers.
+    use super::*;
+    use crate::scalar::c64;
+
+    fn dummy<S: Scalar>(tile: usize) -> XlaKernels<S>
+    where
+        S::Real: xla::NativeType + xla::ArrayElement,
+    {
+        XlaKernels {
+            rt: Arc::new(PjRtRuntime::new("artifacts").unwrap()),
+            tile,
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    #[test]
+    fn pack_pads_identity() {
+        let k = dummy::<f64>(4);
+        let a = Matrix::<f64>::from_fn(2, 2, |i, j| (i * 2 + j + 1) as f64);
+        let p = k.pack(&a, 0, 0, true);
+        // Row-major 4x4: a00 a01 0 0 / a10 a11 0 0 / 0 0 1 0 / 0 0 0 1
+        assert_eq!(p[0], 1.0);
+        assert_eq!(p[1], 2.0);
+        assert_eq!(p[4], 3.0);
+        assert_eq!(p[5], 4.0);
+        assert_eq!(p[10], 1.0);
+        assert_eq!(p[15], 1.0);
+        assert_eq!(p[2], 0.0);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_complex() {
+        let k = dummy::<c64>(3);
+        let a = Matrix::<c64>::random(3, 3, 5);
+        let p = k.pack(&a, 0, 0, false);
+        assert_eq!(p.len(), 2 * 9);
+        let mut b = Matrix::<c64>::zeros(3, 3);
+        k.unpack(&p, &mut b, 0, 0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn artifact_names() {
+        let k = dummy::<c64>(64);
+        assert_eq!(k.artifact("gemm_nn"), "cgemm_nn_f64_64");
+        let k2 = dummy::<f32>(128);
+        assert_eq!(k2.artifact("potf2"), "potf2_f32_128");
+    }
+}

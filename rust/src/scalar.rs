@@ -1,0 +1,663 @@
+//! Scalar abstraction over the four dtypes the paper supports:
+//! `float32`, `float64`, `complex64`, `complex128`.
+//!
+//! The vendored crate set has no `num-complex`, so we carry our own
+//! minimal [`Complex`] type. The [`Scalar`] trait is what every tile
+//! kernel, layout routine and solver is generic over; it also defines
+//! how each dtype crosses the Rust ↔ XLA boundary (complex values are
+//! **split into real/imag planes**, because the `xla` crate's `Literal`
+//! API only exposes real element types — see DESIGN.md §Complex dtypes).
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// Minimal complex number (we cannot use `num-complex`: not vendored).
+#[derive(Copy, Clone, PartialEq, Default)]
+#[repr(C)]
+pub struct Complex<T> {
+    /// Real part.
+    pub re: T,
+    /// Imaginary part.
+    pub im: T,
+}
+
+/// `complex64` (two f32s), matching JAX's `jnp.complex64`.
+#[allow(non_camel_case_types)]
+pub type c32 = Complex<f32>;
+/// `complex128` (two f64s), matching JAX's `jnp.complex128`.
+#[allow(non_camel_case_types)]
+pub type c64 = Complex<f64>;
+
+impl<T> Complex<T> {
+    /// Construct from real and imaginary parts.
+    pub const fn new(re: T, im: T) -> Self {
+        Complex { re, im }
+    }
+}
+
+impl<T: RealScalar> Complex<T> {
+    /// The complex conjugate.
+    #[inline]
+    pub fn conj(self) -> Self {
+        Complex::new(self.re, -self.im)
+    }
+
+    /// Squared magnitude |z|².
+    #[inline]
+    pub fn norm_sqr(self) -> T {
+        self.re * self.re + self.im * self.im
+    }
+
+    /// Magnitude |z|.
+    #[inline]
+    pub fn abs(self) -> T {
+        // Hypot-style scaling for robustness against overflow.
+        let (a, b) = (self.re.rabs(), self.im.rabs());
+        let (hi, lo) = if a >= b { (a, b) } else { (b, a) };
+        if hi == T::rzero() {
+            return T::rzero();
+        }
+        let r = lo / hi;
+        hi * (T::rone() + r * r).rsqrt_val()
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for Complex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "({:?}+{:?}i)", self.re, self.im)
+    }
+}
+
+impl<T: fmt::Display> fmt::Display for Complex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "({}+{}i)", self.re, self.im)
+    }
+}
+
+impl<T: RealScalar> Add for Complex<T> {
+    type Output = Self;
+    #[inline]
+    fn add(self, o: Self) -> Self {
+        Complex::new(self.re + o.re, self.im + o.im)
+    }
+}
+impl<T: RealScalar> Sub for Complex<T> {
+    type Output = Self;
+    #[inline]
+    fn sub(self, o: Self) -> Self {
+        Complex::new(self.re - o.re, self.im - o.im)
+    }
+}
+impl<T: RealScalar> Mul for Complex<T> {
+    type Output = Self;
+    #[inline]
+    fn mul(self, o: Self) -> Self {
+        Complex::new(self.re * o.re - self.im * o.im, self.re * o.im + self.im * o.re)
+    }
+}
+impl<T: RealScalar> Div for Complex<T> {
+    type Output = Self;
+    #[inline]
+    fn div(self, o: Self) -> Self {
+        // Smith's algorithm for robust complex division.
+        if o.re.rabs() >= o.im.rabs() {
+            if o.re == T::rzero() && o.im == T::rzero() {
+                return Complex::new(self.re / o.re, self.im / o.re); // NaN propagation
+            }
+            let r = o.im / o.re;
+            let d = o.re + o.im * r;
+            Complex::new((self.re + self.im * r) / d, (self.im - self.re * r) / d)
+        } else {
+            let r = o.re / o.im;
+            let d = o.re * r + o.im;
+            Complex::new((self.re * r + self.im) / d, (self.im * r - self.re) / d)
+        }
+    }
+}
+impl<T: RealScalar> Neg for Complex<T> {
+    type Output = Self;
+    #[inline]
+    fn neg(self) -> Self {
+        Complex::new(-self.re, -self.im)
+    }
+}
+impl<T: RealScalar> AddAssign for Complex<T> {
+    #[inline]
+    fn add_assign(&mut self, o: Self) {
+        *self = *self + o;
+    }
+}
+impl<T: RealScalar> SubAssign for Complex<T> {
+    #[inline]
+    fn sub_assign(&mut self, o: Self) {
+        *self = *self - o;
+    }
+}
+impl<T: RealScalar> MulAssign for Complex<T> {
+    #[inline]
+    fn mul_assign(&mut self, o: Self) {
+        *self = *self * o;
+    }
+}
+impl<T: RealScalar> DivAssign for Complex<T> {
+    #[inline]
+    fn div_assign(&mut self, o: Self) {
+        *self = *self / o;
+    }
+}
+impl<T: RealScalar> Sum for Complex<T> {
+    fn sum<I: Iterator<Item = Self>>(iter: I) -> Self {
+        iter.fold(Complex::new(T::rzero(), T::rzero()), |a, b| a + b)
+    }
+}
+
+/// Internal helper trait for the real field underlying a scalar.
+pub trait RealScalar:
+    Copy
+    + Clone
+    + PartialEq
+    + PartialOrd
+    + fmt::Debug
+    + fmt::Display
+    + Default
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + Send
+    + Sync
+    + 'static
+{
+    fn rzero() -> Self;
+    fn rone() -> Self;
+    fn rabs(self) -> Self;
+    fn rsqrt_val(self) -> Self;
+    fn from_f64(v: f64) -> Self;
+    fn to_f64(self) -> f64;
+    /// Machine epsilon.
+    fn eps() -> Self;
+    fn max_val(self, o: Self) -> Self;
+}
+
+impl RealScalar for f32 {
+    #[inline]
+    fn rzero() -> Self {
+        0.0
+    }
+    #[inline]
+    fn rone() -> Self {
+        1.0
+    }
+    #[inline]
+    fn rabs(self) -> Self {
+        self.abs()
+    }
+    #[inline]
+    fn rsqrt_val(self) -> Self {
+        self.sqrt()
+    }
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline]
+    fn eps() -> Self {
+        f32::EPSILON
+    }
+    #[inline]
+    fn max_val(self, o: Self) -> Self {
+        self.max(o)
+    }
+}
+
+impl RealScalar for f64 {
+    #[inline]
+    fn rzero() -> Self {
+        0.0
+    }
+    #[inline]
+    fn rone() -> Self {
+        1.0
+    }
+    #[inline]
+    fn rabs(self) -> Self {
+        self.abs()
+    }
+    #[inline]
+    fn rsqrt_val(self) -> Self {
+        self.sqrt()
+    }
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline]
+    fn eps() -> Self {
+        f64::EPSILON
+    }
+    #[inline]
+    fn max_val(self, o: Self) -> Self {
+        self.max(o)
+    }
+}
+
+/// The dtype tag carried through layouts, artifacts and the cost model.
+#[derive(Copy, Clone, PartialEq, Eq, Hash, Debug)]
+pub enum DType {
+    F32,
+    F64,
+    C64,
+    C128,
+}
+
+impl DType {
+    /// JAX-style dtype name; also the artifact filename component.
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::F64 => "float64",
+            DType::C64 => "complex64",
+            DType::C128 => "complex128",
+        }
+    }
+
+    /// Bytes per element.
+    pub fn size_of(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::F64 => 8,
+            DType::C64 => 8,
+            DType::C128 => 16,
+        }
+    }
+
+    /// Whether this dtype is complex (crosses the XLA boundary as split planes).
+    pub fn is_complex(self) -> bool {
+        matches!(self, DType::C64 | DType::C128)
+    }
+
+    /// The real dtype backing this dtype's planes.
+    pub fn real_dtype(self) -> DType {
+        match self {
+            DType::F32 | DType::C64 => DType::F32,
+            DType::F64 | DType::C128 => DType::F64,
+        }
+    }
+
+    /// Parse a JAX-style dtype name.
+    pub fn parse(s: &str) -> Option<DType> {
+        match s {
+            "float32" | "f32" => Some(DType::F32),
+            "float64" | "f64" => Some(DType::F64),
+            "complex64" | "c64" => Some(DType::C64),
+            "complex128" | "c128" => Some(DType::C128),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The scalar trait every layout / solver / kernel is generic over.
+///
+/// `Real` is the underlying real field (`f32` or `f64`); complex scalars
+/// expose conjugation that actually flips the imaginary sign, real
+/// scalars implement it as the identity, so one generic Hermitian
+/// algorithm covers the symmetric case too (exactly how LAPACK's
+/// `zhetrd`/`dsytrd` pairs relate).
+pub trait Scalar:
+    Copy
+    + Clone
+    + PartialEq
+    + fmt::Debug
+    + fmt::Display
+    + Default
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + Sum
+    + Send
+    + Sync
+    + 'static
+{
+    /// Underlying real field.
+    type Real: RealScalar;
+
+    /// Static dtype tag.
+    const DTYPE: DType;
+
+    fn zero() -> Self;
+    fn one() -> Self;
+    /// Complex conjugate (identity for real scalars).
+    fn conj(self) -> Self;
+    /// Real part.
+    fn re(self) -> Self::Real;
+    /// Imaginary part (zero for real scalars).
+    fn im(self) -> Self::Real;
+    /// |x| as the real field.
+    fn abs(self) -> Self::Real;
+    /// |x|² as the real field (cheaper than `abs` for complex).
+    fn abs_sqr(self) -> Self::Real;
+    /// Lift a real value.
+    fn from_real(r: Self::Real) -> Self;
+    /// Lift from f64 (real part only).
+    fn from_f64(v: f64) -> Self;
+    /// Construct from real/imag planes (imag ignored for real types).
+    fn from_parts(re: Self::Real, im: Self::Real) -> Self;
+    /// Real square root of a (assumed real non-negative) scalar —
+    /// used on Cholesky pivots.
+    fn sqrt_real(self) -> Self;
+    /// 1/x.
+    fn recip(self) -> Self {
+        Self::one() / self
+    }
+
+    /// Number of `Real` words per element when crossing the XLA boundary
+    /// (1 for real dtypes, 2 for complex split planes).
+    const PLANES: usize;
+
+    /// Scatter `src` into `PLANES` real planes (plane-major: all re then all im).
+    fn split_planes(src: &[Self], planes: &mut [Self::Real]);
+    /// Gather from `PLANES` real planes back into scalars.
+    fn merge_planes(planes: &[Self::Real], dst: &mut [Self]);
+}
+
+impl Scalar for f32 {
+    type Real = f32;
+    const DTYPE: DType = DType::F32;
+    const PLANES: usize = 1;
+
+    #[inline]
+    fn zero() -> Self {
+        0.0
+    }
+    #[inline]
+    fn one() -> Self {
+        1.0
+    }
+    #[inline]
+    fn conj(self) -> Self {
+        self
+    }
+    #[inline]
+    fn re(self) -> f32 {
+        self
+    }
+    #[inline]
+    fn im(self) -> f32 {
+        0.0
+    }
+    #[inline]
+    fn abs(self) -> f32 {
+        f32::abs(self)
+    }
+    #[inline]
+    fn abs_sqr(self) -> f32 {
+        self * self
+    }
+    #[inline]
+    fn from_real(r: f32) -> Self {
+        r
+    }
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    #[inline]
+    fn from_parts(re: f32, _im: f32) -> Self {
+        re
+    }
+    #[inline]
+    fn sqrt_real(self) -> Self {
+        self.sqrt()
+    }
+
+    fn split_planes(src: &[Self], planes: &mut [f32]) {
+        planes.copy_from_slice(src);
+    }
+    fn merge_planes(planes: &[f32], dst: &mut [Self]) {
+        dst.copy_from_slice(planes);
+    }
+}
+
+impl Scalar for f64 {
+    type Real = f64;
+    const DTYPE: DType = DType::F64;
+    const PLANES: usize = 1;
+
+    #[inline]
+    fn zero() -> Self {
+        0.0
+    }
+    #[inline]
+    fn one() -> Self {
+        1.0
+    }
+    #[inline]
+    fn conj(self) -> Self {
+        self
+    }
+    #[inline]
+    fn re(self) -> f64 {
+        self
+    }
+    #[inline]
+    fn im(self) -> f64 {
+        0.0
+    }
+    #[inline]
+    fn abs(self) -> f64 {
+        f64::abs(self)
+    }
+    #[inline]
+    fn abs_sqr(self) -> f64 {
+        self * self
+    }
+    #[inline]
+    fn from_real(r: f64) -> Self {
+        r
+    }
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    #[inline]
+    fn from_parts(re: f64, _im: f64) -> Self {
+        re
+    }
+    #[inline]
+    fn sqrt_real(self) -> Self {
+        self.sqrt()
+    }
+
+    fn split_planes(src: &[Self], planes: &mut [f64]) {
+        planes.copy_from_slice(src);
+    }
+    fn merge_planes(planes: &[f64], dst: &mut [Self]) {
+        dst.copy_from_slice(planes);
+    }
+}
+
+macro_rules! impl_scalar_complex {
+    ($real:ty, $dtype:expr) => {
+        impl Scalar for Complex<$real> {
+            type Real = $real;
+            const DTYPE: DType = $dtype;
+            const PLANES: usize = 2;
+
+            #[inline]
+            fn zero() -> Self {
+                Complex::new(0.0, 0.0)
+            }
+            #[inline]
+            fn one() -> Self {
+                Complex::new(1.0, 0.0)
+            }
+            #[inline]
+            fn conj(self) -> Self {
+                Complex::conj(self)
+            }
+            #[inline]
+            fn re(self) -> $real {
+                self.re
+            }
+            #[inline]
+            fn im(self) -> $real {
+                self.im
+            }
+            #[inline]
+            fn abs(self) -> $real {
+                Complex::abs(self)
+            }
+            #[inline]
+            fn abs_sqr(self) -> $real {
+                Complex::norm_sqr(self)
+            }
+            #[inline]
+            fn from_real(r: $real) -> Self {
+                Complex::new(r, 0.0)
+            }
+            #[inline]
+            fn from_f64(v: f64) -> Self {
+                Complex::new(v as $real, 0.0)
+            }
+            #[inline]
+            fn from_parts(re: $real, im: $real) -> Self {
+                Complex::new(re, im)
+            }
+            #[inline]
+            fn sqrt_real(self) -> Self {
+                // Used on Cholesky pivots which must be real positive;
+                // take the real square root of the real part.
+                Complex::new(self.re.sqrt(), 0.0)
+            }
+
+            fn split_planes(src: &[Self], planes: &mut [$real]) {
+                let n = src.len();
+                assert_eq!(planes.len(), 2 * n, "plane buffer must hold 2n reals");
+                let (re, im) = planes.split_at_mut(n);
+                for (i, z) in src.iter().enumerate() {
+                    re[i] = z.re;
+                    im[i] = z.im;
+                }
+            }
+            fn merge_planes(planes: &[$real], dst: &mut [Self]) {
+                let n = dst.len();
+                assert_eq!(planes.len(), 2 * n, "plane buffer must hold 2n reals");
+                let (re, im) = planes.split_at(n);
+                for i in 0..n {
+                    dst[i] = Complex::new(re[i], im[i]);
+                }
+            }
+        }
+    };
+}
+
+impl_scalar_complex!(f32, DType::C64);
+impl_scalar_complex!(f64, DType::C128);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complex_field_ops() {
+        let a = c64::new(1.0, 2.0);
+        let b = c64::new(3.0, -1.0);
+        assert_eq!(a + b, c64::new(4.0, 1.0));
+        assert_eq!(a - b, c64::new(-2.0, 3.0));
+        // (1+2i)(3-i) = 3 - i + 6i - 2i² = 5 + 5i
+        assert_eq!(a * b, c64::new(5.0, 5.0));
+        let q = (a * b) / b;
+        assert!((q.re - a.re).abs() < 1e-12 && (q.im - a.im).abs() < 1e-12);
+    }
+
+    #[test]
+    fn complex_division_robust() {
+        // Denominator with tiny real part exercises both Smith branches.
+        let a = c64::new(1.0, 1.0);
+        let b = c64::new(1e-300, 1.0);
+        let q = a / b;
+        let back = q * b;
+        assert!((back.re - 1.0).abs() < 1e-10);
+        assert!((back.im - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn conj_and_abs() {
+        let z = c32::new(3.0, 4.0);
+        assert_eq!(z.conj(), c32::new(3.0, -4.0));
+        assert!((Scalar::abs(z) - 5.0).abs() < 1e-6);
+        assert_eq!(z.abs_sqr(), 25.0);
+        // Real conj is identity.
+        assert_eq!(2.5f64.conj(), 2.5);
+    }
+
+    #[test]
+    fn abs_avoids_overflow() {
+        let z = c64::new(1e200, 1e200);
+        let a = Scalar::abs(z);
+        assert!(a.is_finite());
+        assert!((a / 1e200 - std::f64::consts::SQRT_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dtype_metadata() {
+        assert_eq!(<f32 as Scalar>::DTYPE.name(), "float32");
+        assert_eq!(<c64 as Scalar>::DTYPE.name(), "complex128");
+        assert_eq!(DType::C128.size_of(), 16);
+        assert_eq!(DType::C64.real_dtype(), DType::F32);
+        assert!(!DType::F64.is_complex());
+        assert_eq!(DType::parse("complex64"), Some(DType::C64));
+        assert_eq!(DType::parse("nope"), None);
+    }
+
+    #[test]
+    fn split_merge_roundtrip_real() {
+        let src = vec![1.0f32, 2.0, 3.0];
+        let mut planes = vec![0.0f32; 3];
+        f32::split_planes(&src, &mut planes);
+        let mut back = vec![0.0f32; 3];
+        f32::merge_planes(&planes, &mut back);
+        assert_eq!(src, back);
+    }
+
+    #[test]
+    fn split_merge_roundtrip_complex() {
+        let src = vec![c64::new(1.0, -1.0), c64::new(2.0, -2.0)];
+        let mut planes = vec![0.0f64; 4];
+        c64::split_planes(&src, &mut planes);
+        assert_eq!(planes, vec![1.0, 2.0, -1.0, -2.0]); // plane-major
+        let mut back = vec![c64::zero(); 2];
+        c64::merge_planes(&planes, &mut back);
+        assert_eq!(src, back);
+    }
+
+    #[test]
+    fn sqrt_real_on_pivot() {
+        let p = c64::new(4.0, 0.0);
+        assert_eq!(p.sqrt_real(), c64::new(2.0, 0.0));
+        assert_eq!(9.0f64.sqrt_real(), 3.0);
+    }
+}

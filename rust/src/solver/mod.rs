@@ -1,0 +1,120 @@
+//! Distributed dense solvers over the 1D block-cyclic layout — the
+//! cuSOLVERMg substrate itself (`potrf`/`potrs`/`potri`/`syevd`).
+//!
+//! Each routine is a *coordinator-scheduled* blocked algorithm: tile
+//! kernels run "on" the simulated device owning the tile (charging that
+//! device's timeline via the cost model), panels move between devices
+//! with peer copies, and the numerical payload of every tile kernel is
+//! delegated to a [`TileKernels`] backend:
+//!
+//! * [`NativeKernels`] — pure-Rust reference compute (`crate::linalg`);
+//! * [`crate::runtime::XlaKernels`] — the AOT-compiled XLA executables
+//!   produced by the Python layers (Pallas GEMM + JAX panel ops), the
+//!   production path: Python authored them, but only Rust runs them.
+//!
+//! The two backends are interchangeable and cross-checked in the test
+//! suite, which is the correctness argument for the AOT path.
+
+mod kernels;
+mod potrf;
+mod potri;
+mod potrs;
+mod syevd;
+
+pub use kernels::{NativeKernels, TileKernels};
+pub use potrf::potrf_dist;
+pub use potri::potri_dist;
+pub use potrs::potrs_dist;
+pub use syevd::syevd_dist;
+
+use crate::costmodel::GpuCostModel;
+use crate::device::SimNode;
+use crate::scalar::Scalar;
+use std::sync::Arc;
+
+/// Which compute backend the solvers use for tile kernels.
+#[derive(Clone)]
+pub enum SolverBackend<S: Scalar> {
+    /// Pure-Rust tile kernels (reference; always available).
+    Native,
+    /// AOT-compiled XLA executables loaded via PJRT.
+    Xla(Arc<dyn TileKernels<S>>),
+}
+
+impl<S: Scalar> SolverBackend<S> {
+    /// Resolve to a concrete kernel set.
+    pub fn kernels(&self) -> Arc<dyn TileKernels<S>> {
+        match self {
+            SolverBackend::Native => Arc::new(NativeKernels),
+            SolverBackend::Xla(k) => k.clone(),
+        }
+    }
+}
+
+impl<S: Scalar> std::fmt::Debug for SolverBackend<S> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SolverBackend::Native => f.write_str("SolverBackend::Native"),
+            SolverBackend::Xla(_) => f.write_str("SolverBackend::Xla"),
+        }
+    }
+}
+
+/// Shared state threaded through the solver routines. Public so
+/// integration tests, benches and examples can drive the distributed
+/// solvers directly (the `JaxMg` front end wraps this for normal use).
+pub struct Ctx<'a, S: Scalar> {
+    pub node: &'a SimNode,
+    pub model: &'a GpuCostModel,
+    pub kernels: Arc<dyn TileKernels<S>>,
+}
+
+impl<'a, S: Scalar> Ctx<'a, S> {
+    pub fn new(node: &'a SimNode, model: &'a GpuCostModel, backend: &SolverBackend<S>) -> Self {
+        Ctx { node, model, kernels: backend.kernels() }
+    }
+
+    /// Charge `dev`'s timeline for a GEMM-class kernel.
+    pub fn charge_gemm(&self, dev: usize, m: usize, n: usize, k: usize) -> crate::Result<()> {
+        let fl = GpuCostModel::flops_gemm(S::DTYPE, m, n, k);
+        self.node.charge_kernel(dev, self.model.gemm_time(S::DTYPE, m, n, k), fl)
+    }
+
+    /// Charge `dev`'s timeline for a panel kernel with `flops` work.
+    pub fn charge_panel(&self, dev: usize, flops: u64) -> crate::Result<()> {
+        self.node.charge_kernel(dev, self.model.panel_time(S::DTYPE, flops), flops)
+    }
+
+    /// Model a point-to-point transfer of replicated/host-mirrored data
+    /// (clock + metrics; the payload is already host-resident in the
+    /// simulator, e.g. the pipelined RHS tail in `potrs`).
+    pub fn charge_p2p(&self, from: usize, to: usize, bytes: usize) -> crate::Result<()> {
+        if from == to || bytes == 0 {
+            return Ok(());
+        }
+        let t = self.node.topology().copy_time(from, to, bytes);
+        let src_clock = self.node.device(from)?.clock();
+        src_clock.advance(t);
+        self.node.metrics().add_peer(bytes as u64);
+        self.node.device(to)?.clock().sync_to(src_clock.now());
+        Ok(())
+    }
+
+    /// Model a replicated-data synchronization: `bytes` flowing from
+    /// `from` to every other device (clock + metrics; the payload is
+    /// already host-resident in the simulator).
+    pub fn charge_broadcast(&self, from: usize, bytes: usize) -> crate::Result<()> {
+        let nd = self.node.num_devices();
+        let src_clock = self.node.device(from)?.clock();
+        for d in 0..nd {
+            if d == from {
+                continue;
+            }
+            let t = self.node.topology().copy_time(from, d, bytes);
+            src_clock.advance(t / (nd.max(2) - 1) as f64); // link shared across fan-out
+            self.node.metrics().add_peer(bytes as u64);
+            self.node.device(d)?.clock().sync_to(src_clock.now());
+        }
+        Ok(())
+    }
+}

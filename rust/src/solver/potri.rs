@@ -1,0 +1,262 @@
+//! Distributed Cholesky-based inverse (the `cusolverMgPotri` analogue):
+//! `A⁻¹ = L⁻ᴴ·L⁻¹` from the distributed factor `L`.
+//!
+//! Two phases, both over the block-cyclic layout:
+//!
+//! 1. **trtri** — `X = L⁻¹` by pipelined forward substitution against
+//!    identity column blocks: the owner of row-tile `j` solves its
+//!    diagonal block, ships the solved block to the column's owner and
+//!    hands the updated running tail down the pipeline (same pattern as
+//!    `potrs`, one pipeline per column tile).
+//! 2. **lauum** — `A⁻¹ = Xᴴ·X` by panel rounds: the owner of column
+//!    tile `ti` broadcasts its packed panel; every device contracts it
+//!    against its own tiles (`GEMM_HN`) and writes the `(I, J)` result
+//!    block in place. Ascending rounds only ever overwrite rows that
+//!    later rounds no longer read, so the product is formed in place.
+//!
+//! The extra full-matrix workspace `X` is exactly why the paper's §3
+//! notes potri "require[s] significantly more workspace memory than
+//! potrs" — the capacity tables in the benches read this allocation.
+
+use super::Ctx;
+use crate::costmodel::GpuCostModel;
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::scalar::Scalar;
+use crate::tile::DistMatrix;
+
+/// Invert in place: on entry `a` holds the distributed factor `L`
+/// (from [`super::potrf_dist`]); on return it holds `A⁻¹` (full
+/// Hermitian, both triangles).
+pub fn potri_dist<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<()> {
+    let lay = *a
+        .layout()
+        .as_block_cyclic()
+        .ok_or_else(|| Error::layout("potri requires the block-cyclic layout — redistribute first"))?;
+    let n = a.rows();
+    let ntiles = lay.num_tiles();
+    let esize = std::mem::size_of::<S>();
+
+    // ---- Phase 1: X = L⁻¹ into a fresh distributed workspace
+    // (the potri workspace highlighted in the paper's §3).
+    let x = DistMatrix::<S>::alloc(ctx.node, n, *a.layout())?;
+
+    for t in 0..ntiles {
+        let t_owner = lay.owner_of_tile(t);
+        let k0 = lay.tile_start(t);
+        let tk = lay.tile_cols(t);
+        let t_loc = lay.tile_local_offset(t);
+
+        // Running RHS tail: rows k0..n, width tk. Starts as the identity
+        // block at rows k0..k1.
+        let mut tail = Matrix::<S>::zeros(n - k0, tk);
+        for c in 0..tk {
+            tail[(c, c)] = S::one();
+        }
+
+        for j in t..ntiles {
+            let j_owner = lay.owner_of_tile(j);
+            let j0 = lay.tile_start(j);
+            let tj = lay.tile_cols(j);
+            let j_loc = lay.tile_local_offset(j);
+            let j1 = j0 + tj;
+
+            // Solve the diagonal block on j's owner.
+            let ljj = a.read_block(j_owner, j0, tj, j_loc, tj)?;
+            let bj = tail.submatrix(j0 - k0, 0, tj, tk);
+            let zj = ctx.kernels.trsm_llnn(&ljj, &bj)?;
+            ctx.charge_panel(j_owner, GpuCostModel::flops_trsm(S::DTYPE, tj, tk, tj))?;
+
+            // Store the solved block at X[j0..j1, tile t] on t's owner.
+            x.write_block(t_owner, j0, t_loc, &zj)?;
+            ctx.charge_p2p(j_owner, t_owner, tj * tk * esize)?;
+
+            // Update the running tail below and pass it on.
+            let below = n - j1;
+            if below > 0 {
+                let panel = a.read_block(j_owner, j1, below, j_loc, tj)?;
+                let mut lower = tail.submatrix(j1 - k0, 0, below, tk);
+                ctx.kernels.gemm_nn(&mut lower, &panel, &zj, -S::one())?;
+                ctx.charge_gemm(j_owner, below, tk, tj)?;
+                tail.set_submatrix(j1 - k0, 0, &lower);
+                let next_owner = lay.owner_of_tile(j + 1);
+                ctx.charge_p2p(j_owner, next_owner, below * tk * esize)?;
+            }
+        }
+        // Zero above-diagonal rows of X's tile column (X is lower).
+        if k0 > 0 {
+            x.write_block(t_owner, 0, t_loc, &Matrix::<S>::zeros(k0, tk))?;
+        }
+    }
+
+    // ---- Phase 2: A⁻¹ = Xᴴ·X in place over `x`, then copy into `a`.
+    let ndev = ctx.node.num_devices();
+    for ti in 0..ntiles {
+        let i_owner = lay.owner_of_tile(ti);
+        let k0i = lay.tile_start(ti);
+        let tki = lay.tile_cols(ti);
+        let i_loc = lay.tile_local_offset(ti);
+        let pi_rows = n - k0i;
+
+        // Read the panel BEFORE any round-ti writes, then broadcast.
+        let pi = x.read_block(i_owner, k0i, pi_rows, i_loc, tki)?;
+        let panel_elems = pi_rows * tki;
+        let src_scratch = ctx.node.alloc_scalars::<S>(i_owner, panel_elems)?;
+        ctx.node.write_slice(src_scratch, 0, pi.as_slice())?;
+        let mut scratch: Vec<Option<crate::device::DevPtr>> = vec![None; ndev];
+        for d in 0..ndev {
+            if d == i_owner {
+                continue;
+            }
+            let dst = ctx.node.alloc_scalars::<S>(d, panel_elems)?;
+            ctx.node.peer_copy(src_scratch, 0, dst, 0, panel_elems * esize)?;
+            scratch[d] = Some(dst);
+        }
+
+        for tj in 0..ntiles {
+            let j_owner = lay.owner_of_tile(tj);
+            let k0j = lay.tile_start(tj);
+            let tkj = lay.tile_cols(tj);
+            let j_loc = lay.tile_local_offset(tj);
+            let kmax = k0i.max(k0j);
+            let height = n - kmax;
+
+            // A-side: panel rows kmax.. (local copy on j's owner).
+            let a_blk = if j_owner == i_owner {
+                pi.submatrix(kmax - k0i, 0, height, tki)
+            } else {
+                let ptr = scratch[j_owner].expect("panel scratch");
+                let mut full = vec![S::zero(); panel_elems];
+                ctx.node.read_slice(ptr, 0, &mut full)?;
+                Matrix::from_vec(pi_rows, tki, full).submatrix(kmax - k0i, 0, height, tki)
+            };
+            // B-side: X rows kmax.. of tile tj (still unoverwritten).
+            let b_blk = x.read_block(j_owner, kmax, height, j_loc, tkj)?;
+            let mut c = Matrix::<S>::zeros(tki, tkj);
+            ctx.kernels.gemm_hn(&mut c, &a_blk, &b_blk, S::one())?;
+            ctx.charge_gemm(j_owner, tki, tkj, height)?;
+            // Write result rows k0i..k1i of tile tj.
+            x.write_block(j_owner, k0i, j_loc, &c)?;
+        }
+
+        ctx.node.free(src_scratch)?;
+        for s in scratch.into_iter().flatten() {
+            ctx.node.free(s)?;
+        }
+    }
+
+    // Copy the inverse into `a`'s panels (local device copies).
+    for d in 0..ndev {
+        let lc = lay_local_cols(&lay, d);
+        if lc == 0 {
+            continue;
+        }
+        ctx.node.peer_copy(x.panels()[d], 0, a.panels()[d], 0, n * lc * esize)?;
+    }
+    x.free()?;
+    Ok(())
+}
+
+fn lay_local_cols(lay: &crate::layout::BlockCyclic1D, d: usize) -> usize {
+    use crate::layout::ColumnLayout;
+    lay.local_cols(d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::GpuCostModel;
+    use crate::device::SimNode;
+    use crate::layout::BlockCyclic1D;
+    use crate::linalg::{tol_for, FrobNorm};
+    use crate::scalar::{c64, Scalar};
+    use crate::solver::{potrf_dist, SolverBackend};
+    use crate::tile::Layout1D;
+
+    fn run_potri<S: Scalar>(n: usize, tile: usize, ndev: usize, seed: u64) {
+        let node = SimNode::new_uniform(ndev, 1 << 26);
+        let model = GpuCostModel::h200();
+        let backend = SolverBackend::<S>::Native;
+        let ctx = Ctx::new(&node, &model, &backend);
+
+        let a = Matrix::<S>::spd_random(n, seed);
+        let lay = Layout1D::BlockCyclic(BlockCyclic1D::new(n, tile, ndev).unwrap());
+        let mut dm = DistMatrix::scatter(&node, &a, lay).unwrap();
+        potrf_dist(&ctx, &mut dm).unwrap();
+        potri_dist(&ctx, &mut dm).unwrap();
+        let inv = dm.gather().unwrap();
+
+        let ident = a.matmul(&inv);
+        assert!(
+            ident.rel_err(&Matrix::eye(n)) < tol_for::<S>(n) * 10.0,
+            "A·A⁻¹ != I (n={n} T={tile} d={ndev} {:?}): {}",
+            S::DTYPE,
+            ident.rel_err(&Matrix::eye(n))
+        );
+        // Result must be Hermitian (full storage).
+        assert!(inv.rel_err(&inv.adjoint()) < tol_for::<S>(n) * 10.0);
+    }
+
+    #[test]
+    fn potri_f64() {
+        run_potri::<f64>(24, 4, 4, 1);
+    }
+
+    #[test]
+    fn potri_f64_ragged() {
+        run_potri::<f64>(27, 5, 3, 2);
+    }
+
+    #[test]
+    fn potri_c128_paper_case() {
+        // Fig. 3b benchmarks potri on complex128.
+        run_potri::<c64>(20, 4, 4, 3);
+    }
+
+    #[test]
+    fn potri_f32() {
+        run_potri::<f32>(16, 4, 2, 4);
+    }
+
+    #[test]
+    fn potri_single_device() {
+        run_potri::<f64>(12, 3, 1, 5);
+    }
+
+    #[test]
+    fn potri_diag_is_reciprocal() {
+        // diag(1..N)⁻¹ = diag(1, 1/2, ..., 1/N) — the paper's matrix.
+        let n = 12;
+        let node = SimNode::new_uniform(2, 1 << 24);
+        let model = GpuCostModel::h200();
+        let backend = SolverBackend::<f64>::Native;
+        let ctx = Ctx::new(&node, &model, &backend);
+        let a = Matrix::<f64>::spd_diag(n);
+        let lay = Layout1D::BlockCyclic(BlockCyclic1D::new(n, 3, 2).unwrap());
+        let mut dm = DistMatrix::scatter(&node, &a, lay).unwrap();
+        potrf_dist(&ctx, &mut dm).unwrap();
+        potri_dist(&ctx, &mut dm).unwrap();
+        let inv = dm.gather().unwrap();
+        for i in 0..n {
+            assert!((inv[(i, i)] - 1.0 / (i + 1) as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn potri_no_leaked_workspace() {
+        let node = SimNode::new_uniform(2, 1 << 24);
+        let model = GpuCostModel::h200();
+        let backend = SolverBackend::<f64>::Native;
+        let ctx = Ctx::new(&node, &model, &backend);
+        let a = Matrix::<f64>::spd_random(16, 6);
+        let lay = Layout1D::BlockCyclic(BlockCyclic1D::new(16, 4, 2).unwrap());
+        let mut dm = DistMatrix::scatter(&node, &a, lay).unwrap();
+        potrf_dist(&ctx, &mut dm).unwrap();
+        potri_dist(&ctx, &mut dm).unwrap();
+        for rep in node.memory_reports() {
+            assert_eq!(rep.allocations, 1, "workspace must be freed");
+        }
+        // Peak usage must reflect the X workspace (≈2× the panel).
+        assert!(node.memory_reports()[0].peak_used >= 2 * node.memory_reports()[0].used);
+    }
+}

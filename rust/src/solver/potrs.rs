@@ -1,0 +1,210 @@
+//! Distributed Cholesky solve (the `cusolverMgPotrs` analogue).
+//!
+//! Solves `A·X = B` given the distributed factor `L` (block-cyclic, as
+//! produced by [`super::potrf_dist`]) and a *replicated* right-hand side
+//! (the paper shards `A` with `P("x", None)` and replicates `b` with
+//! `P(None, None)`).
+//!
+//! Both substitution sweeps are pipelined over tile owners: the owner of
+//! tile `t` updates the running RHS tail with its panel and hands the
+//! tail to the next owner — a software pipeline over the NVLink ring,
+//! which is how a 1D-cyclic triangular solve avoids broadcasting whole
+//! panels. The solved tile blocks (`tk × nrhs`) are broadcast at the
+//! end so every device's replica of `x` is consistent, matching the
+//! replicated output spec.
+
+use super::Ctx;
+use crate::costmodel::GpuCostModel;
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::scalar::Scalar;
+use crate::tile::DistMatrix;
+
+/// Solve `L·Lᴴ·X = B` for replicated `B` (host-mirrored `n × nrhs`).
+pub fn potrs_dist<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    l: &DistMatrix<S>,
+    b: &Matrix<S>,
+) -> Result<Matrix<S>> {
+    let lay = *l
+        .layout()
+        .as_block_cyclic()
+        .ok_or_else(|| Error::layout("potrs requires the block-cyclic layout — redistribute first"))?;
+    let n = l.rows();
+    if b.rows() != n {
+        return Err(Error::shape(format!("rhs has {} rows, matrix is {n}x{n}", b.rows())));
+    }
+    let nrhs = b.cols();
+    let ntiles = lay.num_tiles();
+    let esize = std::mem::size_of::<S>();
+
+    let mut y = b.clone();
+
+    // ---- Forward sweep: L·Y = B, pipelined tile-owner to tile-owner.
+    for t in 0..ntiles {
+        let owner = lay.owner_of_tile(t);
+        let k0 = lay.tile_start(t);
+        let tk = lay.tile_cols(t);
+        let loc0 = lay.tile_local_offset(t);
+        let k1 = k0 + tk;
+
+        let lkk = l.read_block(owner, k0, tk, loc0, tk)?;
+        let yk = y.submatrix(k0, 0, tk, nrhs);
+        let solved = ctx.kernels.trsm_llnn(&lkk, &yk)?;
+        ctx.charge_panel(owner, GpuCostModel::flops_trsm(S::DTYPE, tk, nrhs, tk))?;
+        y.set_submatrix(k0, 0, &solved);
+
+        let below = n - k1;
+        if below > 0 {
+            // Tail update with this owner's panel: y[k1..] -= L[k1.., t]·y_t.
+            let panel = l.read_block(owner, k1, below, loc0, tk)?;
+            let mut tail = y.submatrix(k1, 0, below, nrhs);
+            ctx.kernels.gemm_nn(&mut tail, &panel, &solved, -S::one())?;
+            ctx.charge_gemm(owner, below, nrhs, tk)?;
+            y.set_submatrix(k1, 0, &tail);
+            // Hand the running tail to the next tile's owner.
+            let next_owner = lay.owner_of_tile(t + 1);
+            ctx.charge_p2p(owner, next_owner, below * nrhs * esize)?;
+        }
+    }
+
+    // ---- Backward sweep: Lᴴ·X = Y, pipelined in reverse.
+    let mut x = y;
+    for t in (0..ntiles).rev() {
+        let owner = lay.owner_of_tile(t);
+        let k0 = lay.tile_start(t);
+        let tk = lay.tile_cols(t);
+        let loc0 = lay.tile_local_offset(t);
+        let k1 = k0 + tk;
+        let below = n - k1;
+
+        let mut xk = x.submatrix(k0, 0, tk, nrhs);
+        if below > 0 {
+            // x_t -= L[k1.., t]ᴴ · x[k1..]
+            let panel = l.read_block(owner, k1, below, loc0, tk)?;
+            let xtail = x.submatrix(k1, 0, below, nrhs);
+            ctx.kernels.gemm_hn(&mut xk, &panel, &xtail, -S::one())?;
+            ctx.charge_gemm(owner, tk, nrhs, below)?;
+        }
+        let lkk = l.read_block(owner, k0, tk, loc0, tk)?;
+        let solved = ctx.kernels.trsm_llhn(&lkk, &xk)?;
+        ctx.charge_panel(owner, GpuCostModel::flops_trsm(S::DTYPE, tk, nrhs, tk))?;
+        x.set_submatrix(k0, 0, &solved);
+
+        if t > 0 {
+            // The next (lower-indexed) owner needs the solved tail.
+            let prev_owner = lay.owner_of_tile(t - 1);
+            ctx.charge_p2p(owner, prev_owner, (n - k0) * nrhs * esize)?;
+        }
+        // Replicated output: solved block flows to all devices.
+        ctx.charge_broadcast(owner, tk * nrhs * esize)?;
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::GpuCostModel;
+    use crate::device::SimNode;
+    use crate::layout::BlockCyclic1D;
+    use crate::linalg::{self, tol_for, FrobNorm};
+    use crate::scalar::{c64, Scalar};
+    use crate::solver::{potrf_dist, SolverBackend};
+    use crate::tile::Layout1D;
+
+    fn run_potrs<S: Scalar>(n: usize, nrhs: usize, tile: usize, ndev: usize, seed: u64) {
+        let node = SimNode::new_uniform(ndev, 1 << 26);
+        let model = GpuCostModel::h200();
+        let backend = SolverBackend::<S>::Native;
+        let ctx = Ctx::new(&node, &model, &backend);
+
+        let a = Matrix::<S>::spd_random(n, seed);
+        let x_true = Matrix::<S>::random(n, nrhs, seed + 1);
+        let b = a.matmul(&x_true);
+
+        let lay = Layout1D::BlockCyclic(BlockCyclic1D::new(n, tile, ndev).unwrap());
+        let mut dm = DistMatrix::scatter(&node, &a, lay).unwrap();
+        potrf_dist(&ctx, &mut dm).unwrap();
+        let x = potrs_dist(&ctx, &dm, &b).unwrap();
+
+        assert!(
+            x.rel_err(&x_true) < tol_for::<S>(n) * 10.0,
+            "potrs wrong (n={n} T={tile} d={ndev} {:?}): {}",
+            S::DTYPE,
+            x.rel_err(&x_true)
+        );
+    }
+
+    #[test]
+    fn potrs_f64_multi_rhs() {
+        run_potrs::<f64>(32, 3, 4, 4, 1);
+    }
+
+    #[test]
+    fn potrs_f64_ragged() {
+        run_potrs::<f64>(29, 2, 4, 3, 2);
+    }
+
+    #[test]
+    fn potrs_f32_single_rhs() {
+        run_potrs::<f32>(16, 1, 4, 2, 3);
+    }
+
+    #[test]
+    fn potrs_c128() {
+        run_potrs::<c64>(24, 2, 4, 4, 4);
+    }
+
+    #[test]
+    fn potrs_paper_workload() {
+        // The paper's benchmark: A = diag(1..N), b = ones.
+        let n = 24;
+        let node = SimNode::new_uniform(4, 1 << 26);
+        let model = GpuCostModel::h200();
+        let backend = SolverBackend::<f64>::Native;
+        let ctx = Ctx::new(&node, &model, &backend);
+        let a = Matrix::<f64>::spd_diag(n);
+        let b = Matrix::<f64>::ones(n, 1);
+        let lay = Layout1D::BlockCyclic(BlockCyclic1D::new(n, 2, 4).unwrap());
+        let mut dm = DistMatrix::scatter(&node, &a, lay).unwrap();
+        potrf_dist(&ctx, &mut dm).unwrap();
+        let x = potrs_dist(&ctx, &dm, &b).unwrap();
+        // Exact solution: x_i = 1/(i+1).
+        for i in 0..n {
+            assert!((x[(i, 0)] - 1.0 / (i + 1) as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn potrs_matches_host_reference() {
+        let n = 20;
+        let node = SimNode::new_uniform(2, 1 << 26);
+        let model = GpuCostModel::h200();
+        let backend = SolverBackend::<f64>::Native;
+        let ctx = Ctx::new(&node, &model, &backend);
+        let a = Matrix::<f64>::spd_random(n, 9);
+        let b = Matrix::<f64>::random(n, 4, 10);
+        let lay = Layout1D::BlockCyclic(BlockCyclic1D::new(n, 4, 2).unwrap());
+        let mut dm = DistMatrix::scatter(&node, &a, lay).unwrap();
+        potrf_dist(&ctx, &mut dm).unwrap();
+        let x = potrs_dist(&ctx, &dm, &b).unwrap();
+        let l_ref = linalg::potrf(&a).unwrap();
+        let x_ref = linalg::potrs_from_chol(&l_ref, &b).unwrap();
+        assert!(x.rel_err(&x_ref) < 1e-12);
+    }
+
+    #[test]
+    fn potrs_shape_mismatch() {
+        let node = SimNode::new_uniform(2, 1 << 22);
+        let model = GpuCostModel::h200();
+        let backend = SolverBackend::<f64>::Native;
+        let ctx = Ctx::new(&node, &model, &backend);
+        let a = Matrix::<f64>::spd_random(8, 1);
+        let lay = Layout1D::BlockCyclic(BlockCyclic1D::new(8, 2, 2).unwrap());
+        let mut dm = DistMatrix::scatter(&node, &a, lay).unwrap();
+        potrf_dist(&ctx, &mut dm).unwrap();
+        let b = Matrix::<f64>::ones(9, 1);
+        assert!(potrs_dist(&ctx, &dm, &b).is_err());
+    }
+}

@@ -1,0 +1,304 @@
+//! Distributed matrix storage: one contiguous column panel per device.
+//!
+//! A [`DistMatrix`] is an `rows × n` matrix whose columns are spread
+//! over the node's devices according to a [`ColumnLayout`]. Device `d`
+//! holds a single allocation of `rows × local_cols(d)` scalars in
+//! column-major order — the same storage contract cuSOLVERMg imposes
+//! (`array_d_A`: one pointer per device, columns contiguous).
+
+use crate::device::{DevPtr, SimNode};
+use crate::error::{Error, Result};
+use crate::layout::{BlockCyclic1D, ColumnLayout, ContiguousBlock};
+use crate::linalg::Matrix;
+use crate::scalar::Scalar;
+
+/// The concrete 1D layouts a distributed matrix can be in.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Layout1D {
+    /// JAX shard_map input layout: contiguous per-device blocks.
+    Contiguous(ContiguousBlock),
+    /// cuSOLVERMg compute layout: 1D block-cyclic tiles.
+    BlockCyclic(BlockCyclic1D),
+}
+
+impl Layout1D {
+    /// Borrow as the layout trait object.
+    pub fn as_layout(&self) -> &dyn ColumnLayout {
+        match self {
+            Layout1D::Contiguous(l) => l,
+            Layout1D::BlockCyclic(l) => l,
+        }
+    }
+
+    /// The block-cyclic descriptor, if that is the current layout.
+    pub fn as_block_cyclic(&self) -> Option<&BlockCyclic1D> {
+        match self {
+            Layout1D::BlockCyclic(l) => Some(l),
+            Layout1D::Contiguous(_) => None,
+        }
+    }
+}
+
+/// A matrix distributed column-wise over the simulated node.
+pub struct DistMatrix<S: Scalar> {
+    node: SimNode,
+    rows: usize,
+    layout: Layout1D,
+    panels: Vec<DevPtr>,
+    _marker: std::marker::PhantomData<S>,
+}
+
+impl<S: Scalar> DistMatrix<S> {
+    /// Allocate (zero-initialized) panels for `rows × layout.n_cols()`.
+    pub fn alloc(node: &SimNode, rows: usize, layout: Layout1D) -> Result<Self> {
+        let l = layout.as_layout();
+        if l.num_devices() != node.num_devices() {
+            return Err(Error::layout(format!(
+                "layout spans {} devices but node has {}",
+                l.num_devices(),
+                node.num_devices()
+            )));
+        }
+        let mut panels = Vec::with_capacity(node.num_devices());
+        for d in 0..node.num_devices() {
+            let len = rows * l.local_cols(d);
+            // Always allocate (possibly zero-length) so indices line up.
+            let ptr = node.alloc_scalars::<S>(d, len)?;
+            panels.push(ptr);
+        }
+        Ok(DistMatrix { node: node.clone(), rows, layout, panels, _marker: std::marker::PhantomData })
+    }
+
+    /// Scatter a host matrix onto the devices in the given layout
+    /// (the `jax.device_put` analogue).
+    pub fn scatter(node: &SimNode, host: &Matrix<S>, layout: Layout1D) -> Result<Self> {
+        let l = layout.as_layout();
+        if host.cols() != l.n_cols() {
+            return Err(Error::shape(format!(
+                "matrix has {} cols but layout distributes {}",
+                host.cols(),
+                l.n_cols()
+            )));
+        }
+        let dm = Self::alloc(node, host.rows(), layout)?;
+        // Build each device's panel host-side, then one H2D write per device.
+        for d in 0..node.num_devices() {
+            let lc = l.local_cols(d);
+            if lc == 0 {
+                continue;
+            }
+            let mut panel = Vec::with_capacity(dm.rows * lc);
+            for loc in 0..lc {
+                let g = l.global_index(d, loc);
+                panel.extend_from_slice(host.col(g));
+            }
+            node.write_slice(dm.panels[d], 0, &panel)?;
+            node.charge_h2d(d, panel.len() * std::mem::size_of::<S>())?;
+        }
+        Ok(dm)
+    }
+
+    /// Gather back to a host matrix (the `jax.device_get` analogue).
+    pub fn gather(&self) -> Result<Matrix<S>> {
+        let l = self.layout.as_layout();
+        let mut host = Matrix::<S>::zeros(self.rows, l.n_cols());
+        for d in 0..self.node.num_devices() {
+            let lc = l.local_cols(d);
+            if lc == 0 {
+                continue;
+            }
+            let mut panel = vec![S::zero(); self.rows * lc];
+            self.node.read_slice(self.panels[d], 0, &mut panel)?;
+            self.node.charge_h2d(d, panel.len() * std::mem::size_of::<S>())?;
+            for loc in 0..lc {
+                let g = l.global_index(d, loc);
+                host.col_mut(g).copy_from_slice(&panel[loc * self.rows..(loc + 1) * self.rows]);
+            }
+        }
+        Ok(host)
+    }
+
+    /// Panel height (matrix rows).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Total columns.
+    pub fn cols(&self) -> usize {
+        self.layout.as_layout().n_cols()
+    }
+
+    /// Current layout descriptor.
+    pub fn layout(&self) -> &Layout1D {
+        &self.layout
+    }
+
+    /// The node this matrix lives on.
+    pub fn node(&self) -> &SimNode {
+        &self.node
+    }
+
+    /// Per-device base pointers — what the workers publish through
+    /// `ipc` and the single caller hands to the solver.
+    pub fn panels(&self) -> &[DevPtr] {
+        &self.panels
+    }
+
+    /// Byte offset of local column `loc` within its device panel.
+    #[inline]
+    pub fn col_byte_offset(&self, loc: usize) -> usize {
+        loc * self.rows * std::mem::size_of::<S>()
+    }
+
+    /// Bytes per column.
+    #[inline]
+    pub fn col_bytes(&self) -> usize {
+        self.rows * std::mem::size_of::<S>()
+    }
+
+    /// Replace the layout descriptor (used by the redistributor after
+    /// it has physically permuted the columns).
+    pub(crate) fn set_layout(&mut self, layout: Layout1D) {
+        self.layout = layout;
+    }
+
+    /// Swap the panel pointers (used by out-of-place redistribution).
+    pub(crate) fn replace_panels(&mut self, panels: Vec<DevPtr>, layout: Layout1D) -> Result<()> {
+        for &old in &self.panels {
+            self.node.free(old)?;
+        }
+        self.panels = panels;
+        self.layout = layout;
+        Ok(())
+    }
+
+    /// Read a host copy of a row-range × column-range of one device's
+    /// panel: `rows r0..r0+nr` of local columns `c0..c0+nc`.
+    /// This is the staging path tile kernels use to feed XLA executables.
+    pub fn read_block(&self, dev: usize, r0: usize, nr: usize, c0: usize, nc: usize) -> Result<Matrix<S>> {
+        let mut out = Matrix::<S>::zeros(nr, nc);
+        for j in 0..nc {
+            let off = (c0 + j) * self.rows + r0;
+            let col = &mut out.col_mut(j)[..nr];
+            self.node.read_slice(self.panels[dev], off, col)?;
+        }
+        Ok(out)
+    }
+
+    /// Write a host block back into one device's panel.
+    pub fn write_block(&self, dev: usize, r0: usize, c0: usize, block: &Matrix<S>) -> Result<()> {
+        for j in 0..block.cols() {
+            let off = (c0 + j) * self.rows + r0;
+            self.node.write_slice(self.panels[dev], off, &block.col(j)[..block.rows()])?;
+        }
+        Ok(())
+    }
+
+    /// Free the device allocations. (Also called on drop; explicit form
+    /// propagates errors.)
+    pub fn free(mut self) -> Result<()> {
+        let panels = std::mem::take(&mut self.panels);
+        for p in panels {
+            self.node.free(p)?;
+        }
+        Ok(())
+    }
+}
+
+impl<S: Scalar> Drop for DistMatrix<S> {
+    fn drop(&mut self) {
+        for p in self.panels.drain(..) {
+            let _ = self.node.free(p);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scalar::c64;
+
+    fn node4() -> SimNode {
+        SimNode::new_uniform(4, 1 << 24)
+    }
+
+    #[test]
+    fn scatter_gather_contiguous_roundtrip() {
+        let node = node4();
+        let a = Matrix::<f64>::random(12, 16, 1);
+        let layout = Layout1D::Contiguous(ContiguousBlock::new(16, 4).unwrap());
+        let dm = DistMatrix::scatter(&node, &a, layout).unwrap();
+        let b = dm.gather().unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn scatter_gather_block_cyclic_roundtrip() {
+        let node = node4();
+        let a = Matrix::<c64>::random(10, 14, 2); // ragged: 14 cols, T=3, 4 devs
+        let layout = Layout1D::BlockCyclic(BlockCyclic1D::new(14, 3, 4).unwrap());
+        let dm = DistMatrix::scatter(&node, &a, layout).unwrap();
+        let b = dm.gather().unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn block_read_write() {
+        let node = node4();
+        let a = Matrix::<f32>::random(8, 8, 3);
+        let layout = Layout1D::Contiguous(ContiguousBlock::new(8, 4).unwrap());
+        let dm = DistMatrix::scatter(&node, &a, layout).unwrap();
+        // Device 1 owns global cols 2,3 (8/4 = 2 each).
+        let blk = dm.read_block(1, 2, 4, 0, 2).unwrap();
+        assert_eq!(blk[(0, 0)], a[(2, 2)]);
+        assert_eq!(blk[(3, 1)], a[(5, 3)]);
+        // Overwrite and check.
+        let z = Matrix::<f32>::ones(4, 2);
+        dm.write_block(1, 2, 0, &z).unwrap();
+        let b = dm.gather().unwrap();
+        assert_eq!(b[(2, 2)], 1.0);
+        assert_eq!(b[(5, 3)], 1.0);
+        assert_eq!(b[(1, 2)], a[(1, 2)]); // untouched rows intact
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let node = node4();
+        let a = Matrix::<f64>::zeros(4, 5);
+        let layout = Layout1D::Contiguous(ContiguousBlock::new(6, 4).unwrap());
+        assert!(DistMatrix::scatter(&node, &a, layout).is_err());
+    }
+
+    #[test]
+    fn free_releases_vram() {
+        let node = SimNode::new_uniform(2, 4096);
+        let a = Matrix::<f64>::zeros(16, 16); // 8 cols × 16 rows × 8 B = 1024 B per device
+        let layout = Layout1D::Contiguous(ContiguousBlock::new(16, 2).unwrap());
+        let dm = DistMatrix::scatter(&node, &a, layout).unwrap();
+        assert_eq!(node.memory_reports()[0].used, 1024);
+        dm.free().unwrap();
+        assert_eq!(node.memory_reports()[0].used, 0);
+    }
+
+    #[test]
+    fn drop_also_frees() {
+        let node = SimNode::new_uniform(1, 4096);
+        {
+            let layout = Layout1D::Contiguous(ContiguousBlock::new(4, 1).unwrap());
+            let _dm = DistMatrix::<f64>::alloc(&node, 4, layout).unwrap();
+            assert!(node.memory_reports()[0].used > 0);
+        }
+        assert_eq!(node.memory_reports()[0].used, 0);
+    }
+
+    #[test]
+    fn oom_on_scatter_too_big() {
+        let node = SimNode::new_uniform(1, 64);
+        let a = Matrix::<f64>::zeros(8, 8);
+        let layout = Layout1D::Contiguous(ContiguousBlock::new(8, 1).unwrap());
+        assert!(matches!(
+            DistMatrix::scatter(&node, &a, layout),
+            Err(Error::DeviceOom { .. })
+        ));
+    }
+}

@@ -1,0 +1,278 @@
+//! Property-based tests over randomized configurations.
+//!
+//! The vendored crate set has no proptest, so this file carries a small
+//! deterministic harness: every property runs `CASES` seeded trials and
+//! reports the failing seed, which reproduces the case exactly.
+
+use jaxmg::costmodel::{workspace, GpuCostModel};
+use jaxmg::device::SimNode;
+use jaxmg::ipc::{AddressSpace, IpcRegistry};
+use jaxmg::layout::{
+    cycle_decomposition, permutation_between, BlockCyclic1D, ColumnLayout, ContiguousBlock,
+    Redistributor,
+};
+use jaxmg::linalg::{self, tol_for, FrobNorm, Matrix};
+use jaxmg::rng::Rng;
+use jaxmg::scalar::{c64, DType, Scalar};
+use jaxmg::solver::{potrf_dist, potrs_dist, syevd_dist, Ctx, SolverBackend};
+use jaxmg::tile::{DistMatrix, Layout1D};
+
+const CASES: u64 = 40;
+
+/// Run `f` over `CASES` seeded trials, labelling failures with the seed.
+fn for_all(name: &str, f: impl Fn(&mut Rng)) {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(0xA5A5_0000 + seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property {name:?} failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_block_cyclic_is_bijection() {
+    for_all("block_cyclic_bijection", |rng| {
+        let n = rng.range(1, 200);
+        let t = rng.range(1, 32);
+        let d = rng.range(1, 9);
+        let l = BlockCyclic1D::new(n, t, d).unwrap();
+        let mut seen = vec![false; n];
+        for dev in 0..d {
+            for loc in 0..l.local_cols(dev) {
+                let g = l.global_index(dev, loc);
+                assert!(!seen[g]);
+                seen[g] = true;
+                assert_eq!(l.place(g), (dev, loc));
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    });
+}
+
+#[test]
+fn prop_cycle_decomposition_partitions_slots() {
+    for_all("cycles_partition", |rng| {
+        let n = rng.range(1, 120);
+        let perm = rng.permutation(n);
+        let cycles = cycle_decomposition(&perm);
+        let mut count = vec![0usize; n];
+        for c in &cycles {
+            // Rotating along the cycle must follow the permutation.
+            for w in 0..c.slots.len() {
+                let from = c.slots[w];
+                let to = c.slots[(w + 1) % c.slots.len()];
+                assert_eq!(perm[from], to);
+            }
+            for &s in &c.slots {
+                count[s] += 1;
+            }
+        }
+        assert!(count.iter().all(|&c| c == 1), "cycles must partition the slots");
+    });
+}
+
+#[test]
+fn prop_layout_permutation_sends_columns_home() {
+    for_all("perm_sends_home", |rng| {
+        let d = rng.range(1, 8);
+        let t = rng.range(1, 16);
+        let n = t * d * rng.range(1, 6); // balanced so in-place applies
+        let src = ContiguousBlock::new(n, d).unwrap();
+        let dst = BlockCyclic1D::new(n, t, d).unwrap();
+        let perm = permutation_between(&src, &dst).unwrap();
+        for g in 0..n {
+            let (sd, sl) = src.place(g);
+            let to = perm[src.slot_of(sd, sl)];
+            let (dd, dl) = dst.slot_to_place(to);
+            assert_eq!(dst.global_index(dd, dl), g);
+        }
+    });
+}
+
+#[test]
+fn prop_redistribution_roundtrip_preserves_content() {
+    for_all("redist_roundtrip", |rng| {
+        let d = rng.range(1, 6);
+        let t = rng.range(1, 10);
+        let n = rng.range(1, 12) * t.max(1) * d; // mostly balanced
+        let n = if rng.next_below(4) == 0 { n + rng.range(1, 5) } else { n }; // sometimes ragged
+        let rows = rng.range(1, 12);
+        let node = SimNode::new_uniform(d, 1 << 26);
+        let a = Matrix::<f64>::random(rows, n, rng.next_u64());
+        let contig = Layout1D::Contiguous(ContiguousBlock::new(n, d).unwrap());
+        let cyclic = Layout1D::BlockCyclic(BlockCyclic1D::new(n, t, d).unwrap());
+        let mut dm = DistMatrix::scatter(&node, &a, contig).unwrap();
+        Redistributor::convert(&mut dm, cyclic).unwrap();
+        assert_eq!(dm.gather().unwrap(), a, "forward conversion corrupted data");
+        Redistributor::convert(&mut dm, contig).unwrap();
+        assert_eq!(dm.gather().unwrap(), a, "inverse conversion corrupted data");
+    });
+}
+
+#[test]
+fn prop_redistribution_no_leaks() {
+    for_all("redist_no_leak", |rng| {
+        let d = rng.range(2, 5);
+        let t = rng.range(1, 6);
+        let n = t * d * rng.range(1, 4);
+        let node = SimNode::new_uniform(d, 1 << 24);
+        let a = Matrix::<f32>::random(4, n, rng.next_u64());
+        let contig = Layout1D::Contiguous(ContiguousBlock::new(n, d).unwrap());
+        let cyclic = Layout1D::BlockCyclic(BlockCyclic1D::new(n, t, d).unwrap());
+        let mut dm = DistMatrix::scatter(&node, &a, contig).unwrap();
+        let before: usize = node.memory_reports().iter().map(|r| r.used).sum();
+        Redistributor::convert(&mut dm, cyclic).unwrap();
+        let after: usize = node.memory_reports().iter().map(|r| r.used).sum();
+        assert_eq!(before, after, "staging buffers must be freed");
+    });
+}
+
+#[test]
+fn prop_potrf_potrs_random_configs() {
+    for_all("potrf_potrs", |rng| {
+        let d = rng.range(1, 5);
+        let t = rng.range(1, 8);
+        let n = rng.range(2, 40);
+        let nrhs = rng.range(1, 4);
+        let node = SimNode::new_uniform(d, 1 << 26);
+        let model = GpuCostModel::h200();
+        let backend = SolverBackend::<f64>::Native;
+        let ctx = Ctx::new(&node, &model, &backend);
+        let a = Matrix::<f64>::spd_random(n, rng.next_u64());
+        let x_true = Matrix::<f64>::random(n, nrhs, rng.next_u64());
+        let b = a.matmul(&x_true);
+        let lay = Layout1D::BlockCyclic(BlockCyclic1D::new(n, t, d).unwrap());
+        let mut dm = DistMatrix::scatter(&node, &a, lay).unwrap();
+        potrf_dist(&ctx, &mut dm).unwrap();
+        let x = potrs_dist(&ctx, &dm, &b).unwrap();
+        assert!(
+            x.rel_err(&x_true) < tol_for::<f64>(n) * 20.0,
+            "potrs residual too large: {} (n={n} t={t} d={d})",
+            x.rel_err(&x_true)
+        );
+    });
+}
+
+#[test]
+fn prop_syevd_eigen_identity() {
+    for_all("syevd_identity", |rng| {
+        let d = rng.range(1, 4);
+        let t = rng.range(1, 6);
+        let n = rng.range(2, 24);
+        let node = SimNode::new_uniform(d, 1 << 26);
+        let model = GpuCostModel::h200();
+        let backend = SolverBackend::<c64>::Native;
+        let ctx = Ctx::new(&node, &model, &backend);
+        let a = Matrix::<c64>::hermitian_random(n, rng.next_u64());
+        let lay = Layout1D::BlockCyclic(BlockCyclic1D::new(n, t, d).unwrap());
+        let mut dm = DistMatrix::scatter(&node, &a, lay).unwrap();
+        let vals = syevd_dist(&ctx, &mut dm).unwrap();
+        let v = dm.gather().unwrap();
+        // Residual ‖A·V − V·Λ‖ / ‖V·Λ‖.
+        let av = a.matmul(&v);
+        let mut vl = v.clone();
+        for j in 0..n {
+            let lam = c64::from_real(vals[j]);
+            for i in 0..n {
+                let x = vl[(i, j)] * lam;
+                vl[(i, j)] = x;
+            }
+        }
+        assert!(
+            av.rel_err(&vl) < tol_for::<c64>(n) * 50.0,
+            "eigen residual {} (n={n} t={t} d={d})",
+            av.rel_err(&vl)
+        );
+        // Values must be sorted ascending.
+        for k in 1..n {
+            assert!(vals[k - 1] <= vals[k] + 1e-12);
+        }
+    });
+}
+
+#[test]
+fn prop_potrf_matches_host_reference() {
+    for_all("potrf_vs_host", |rng| {
+        let d = rng.range(1, 5);
+        let t = rng.range(1, 8);
+        let n = rng.range(1, 32);
+        let node = SimNode::new_uniform(d, 1 << 26);
+        let model = GpuCostModel::h200();
+        let backend = SolverBackend::<f32>::Native;
+        let ctx = Ctx::new(&node, &model, &backend);
+        let a = Matrix::<f32>::spd_random(n, rng.next_u64());
+        let lay = Layout1D::BlockCyclic(BlockCyclic1D::new(n, t, d).unwrap());
+        let mut dm = DistMatrix::scatter(&node, &a, lay).unwrap();
+        potrf_dist(&ctx, &mut dm).unwrap();
+        let l = dm.gather().unwrap();
+        let l_ref = linalg::potrf(&a).unwrap();
+        assert!(l.rel_err(&l_ref) < tol_for::<f32>(n) * 10.0);
+    });
+}
+
+#[test]
+fn prop_workspace_monotone() {
+    for_all("workspace_monotone", |rng| {
+        let n = rng.range(64, 1 << 14);
+        let t = rng.range(1, 1024);
+        let d = rng.range(1, 16);
+        for dt in [DType::F32, DType::F64, DType::C64, DType::C128] {
+            // More devices → smaller per-device footprint.
+            assert!(
+                workspace::potrs_bytes(n, 1, t, d, dt) >= workspace::potrs_bytes(n, 1, t, d + 1, dt)
+            );
+            // Bigger matrix → bigger footprint.
+            assert!(workspace::syevd_bytes(n + 64, t, d, dt) >= workspace::syevd_bytes(n, t, d, dt));
+            // potri and syevd always need more than potrs (paper §3).
+            assert!(workspace::potri_bytes(n, t, d, dt) > workspace::potrs_bytes(n, 1, t, d, dt));
+        }
+    });
+}
+
+#[test]
+fn prop_ipc_registry_never_leaks_across_spaces() {
+    for_all("ipc_lifecycle", |rng| {
+        let reg = IpcRegistry::new();
+        let exporter = AddressSpace(rng.range(0, 7));
+        let ptr = jaxmg::device::DevPtr {
+            device: rng.range(0, 7),
+            alloc_id: rng.next_u64().max(1),
+            offset: 0,
+        };
+        let h = reg.export(exporter, ptr).unwrap();
+        // Exporter can never open its own handle.
+        assert!(reg.open(exporter, h).is_err());
+        // Any other space can, exactly once.
+        let other = AddressSpace(exporter.0 + 1);
+        let opened = reg.open(other, h).unwrap();
+        assert_eq!(opened, ptr);
+        assert!(reg.open(other, h).is_err());
+        // After close, reopen succeeds.
+        reg.close(other, h).unwrap();
+        assert!(reg.open(other, h).is_ok());
+        // After revoke, nothing opens.
+        reg.revoke(exporter, h).unwrap();
+        assert!(reg.open(AddressSpace(exporter.0 + 2), h).is_err());
+    });
+}
+
+#[test]
+fn prop_peer_copy_data_integrity() {
+    for_all("peer_copy_integrity", |rng| {
+        let d = rng.range(2, 6);
+        let node = SimNode::new_uniform(d, 1 << 20);
+        let len = rng.range(1, 256);
+        let src_dev = rng.range(0, d - 1);
+        let dst_dev = rng.range(0, d - 1);
+        let a = node.alloc_scalars::<f64>(src_dev, len).unwrap();
+        let b = node.alloc_scalars::<f64>(dst_dev, len).unwrap();
+        let mut data = vec![0.0f64; len];
+        rng.fill(&mut data);
+        node.write_slice(a, 0, &data).unwrap();
+        node.peer_copy(a, 0, b, 0, len * 8).unwrap();
+        let mut out = vec![0.0f64; len];
+        node.read_slice(b, 0, &mut out).unwrap();
+        assert_eq!(data, out);
+    });
+}

@@ -1,0 +1,237 @@
+//! Integration: the AOT-compiled XLA kernels against the native
+//! reference backend, and full solves running end-to-end on the XLA
+//! path. Requires `make artifacts` (the tests fail with a pointed
+//! message otherwise — they are the proof that the three-layer AOT
+//! pipeline works, so silently skipping would defeat the point).
+
+use jaxmg::coordinator::{BackendKind, ExecMode, JaxMg, Mesh};
+use jaxmg::costmodel::GpuCostModel;
+use jaxmg::device::SimNode;
+use jaxmg::linalg::{tol_for, FrobNorm, Matrix};
+use jaxmg::runtime::{PjRtRuntime, XlaKernels};
+use jaxmg::scalar::{c32, c64, Scalar};
+use jaxmg::solver::{NativeKernels, TileKernels};
+use std::sync::Arc;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    // Tests run from the crate root.
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime() -> Arc<PjRtRuntime> {
+    Arc::new(PjRtRuntime::new(artifacts_dir()).expect("PJRT CPU client"))
+}
+
+fn xla_kernels<S: Scalar>(tile: usize) -> XlaKernels<S>
+where
+    S::Real: xla::NativeType + xla::ArrayElement,
+{
+    XlaKernels::<S>::new(runtime(), tile).expect("artifacts present — run `make artifacts`")
+}
+
+fn cross_check_gemms<S: Scalar>(tile: usize, seed: u64)
+where
+    S::Real: xla::NativeType + xla::ArrayElement,
+{
+    let xk = xla_kernels::<S>(tile);
+    let nk = NativeKernels;
+    // Shapes exercise padding (m, n, k not multiples of tile).
+    let (m, n, k) = (tile * 2 - 3, tile + 1, tile * 2 - 1);
+    let a = Matrix::<S>::random(m, k, seed);
+    let b = Matrix::<S>::random(k, n, seed + 1);
+    let c0 = Matrix::<S>::random(m, n, seed + 2);
+    let alpha = S::from_f64(-1.0);
+
+    let mut c_xla = c0.clone();
+    xk.gemm_nn(&mut c_xla, &a, &b, alpha).unwrap();
+    let mut c_nat = c0.clone();
+    nk.gemm_nn(&mut c_nat, &a, &b, alpha).unwrap();
+    assert!(c_xla.rel_err(&c_nat) < tol_for::<S>(m.max(k)), "gemm_nn mismatch {:?}", S::DTYPE);
+
+    let bh = Matrix::<S>::random(n, k, seed + 3);
+    let mut c_xla = c0.clone();
+    xk.gemm_nh(&mut c_xla, &a, &bh, alpha).unwrap();
+    let mut c_nat = c0.clone();
+    nk.gemm_nh(&mut c_nat, &a, &bh, alpha).unwrap();
+    assert!(c_xla.rel_err(&c_nat) < tol_for::<S>(m.max(k)), "gemm_nh mismatch {:?}", S::DTYPE);
+
+    let ah = Matrix::<S>::random(k, m, seed + 4);
+    let mut c_xla = c0.clone();
+    xk.gemm_hn(&mut c_xla, &ah, &b, alpha).unwrap();
+    let mut c_nat = c0.clone();
+    nk.gemm_hn(&mut c_nat, &ah, &b, alpha).unwrap();
+    assert!(c_xla.rel_err(&c_nat) < tol_for::<S>(m.max(k)), "gemm_hn mismatch {:?}", S::DTYPE);
+}
+
+#[test]
+fn xla_gemm_matches_native_f32() {
+    cross_check_gemms::<f32>(8, 1);
+}
+
+#[test]
+fn xla_gemm_matches_native_f64() {
+    cross_check_gemms::<f64>(8, 2);
+}
+
+#[test]
+fn xla_gemm_matches_native_c64() {
+    cross_check_gemms::<c32>(8, 3);
+}
+
+#[test]
+fn xla_gemm_matches_native_c128() {
+    cross_check_gemms::<c64>(8, 4);
+}
+
+fn cross_check_panel<S: Scalar>(tile: usize, seed: u64)
+where
+    S::Real: xla::NativeType + xla::ArrayElement,
+{
+    let xk = xla_kernels::<S>(tile);
+    let nk = NativeKernels;
+    // potf2 on a tile smaller than T exercises identity padding.
+    let n = tile - 2;
+    let a = Matrix::<S>::spd_random(n, seed);
+    let l_xla = TileKernels::<S>::potf2(&xk, &a).unwrap();
+    let l_nat = TileKernels::<S>::potf2(&nk, &a).unwrap();
+    assert!(l_xla.rel_err(&l_nat) < tol_for::<S>(n), "potf2 mismatch {:?}", S::DTYPE);
+
+    // Panel solve with a tall B (chunked rows).
+    let b = Matrix::<S>::random(3 * tile - 1, n, seed + 1);
+    let x_xla = xk.trsm_rlhc(&b, &l_xla).unwrap();
+    let x_nat = nk.trsm_rlhc(&b, &l_nat).unwrap();
+    assert!(x_xla.rel_err(&x_nat) < tol_for::<S>(n) * 10.0, "trsm_rlhc mismatch {:?}", S::DTYPE);
+
+    // Left solves with a wide RHS (chunked cols).
+    let b2 = Matrix::<S>::random(n, 2 * tile + 3, seed + 2);
+    let y_xla = xk.trsm_llnn(&l_xla, &b2).unwrap();
+    let y_nat = nk.trsm_llnn(&l_nat, &b2).unwrap();
+    assert!(y_xla.rel_err(&y_nat) < tol_for::<S>(n) * 10.0, "trsm_llnn mismatch {:?}", S::DTYPE);
+
+    let z_xla = xk.trsm_llhn(&l_xla, &b2).unwrap();
+    let z_nat = nk.trsm_llhn(&l_nat, &b2).unwrap();
+    assert!(z_xla.rel_err(&z_nat) < tol_for::<S>(n) * 10.0, "trsm_llhn mismatch {:?}", S::DTYPE);
+}
+
+#[test]
+fn xla_panel_matches_native_f64() {
+    cross_check_panel::<f64>(8, 10);
+}
+
+#[test]
+fn xla_panel_matches_native_c128() {
+    cross_check_panel::<c64>(8, 11);
+}
+
+#[test]
+fn xla_panel_matches_native_f32() {
+    cross_check_panel::<f32>(8, 12);
+}
+
+#[test]
+fn xla_potf2_rejects_nonpd() {
+    let xk = xla_kernels::<f64>(8);
+    let mut a = Matrix::<f64>::eye(6);
+    a[(3, 3)] = -2.0;
+    match TileKernels::<f64>::potf2(&xk, &a) {
+        Err(jaxmg::Error::NotPositiveDefinite { minor }) => assert!(minor >= 4),
+        other => panic!("expected NotPositiveDefinite, got {other:?}"),
+    }
+}
+
+// ---- end-to-end solves on the XLA backend --------------------------------
+
+fn mg(ndev: usize, tile: usize) -> JaxMg {
+    let node = SimNode::new_uniform(ndev, 1 << 26);
+    JaxMg::builder()
+        .mesh(Mesh::new_1d(node, "x"))
+        .tile_size(tile)
+        .exec_mode(ExecMode::Spmd)
+        .backend(BackendKind::Xla)
+        .artifacts_dir(artifacts_dir())
+        .build()
+        .expect("XLA backend context")
+}
+
+#[test]
+fn e2e_potrs_on_xla_backend() {
+    let ctx = mg(4, 8);
+    let n = 32;
+    let a = Matrix::<f64>::spd_random(n, 20);
+    let x_true = Matrix::<f64>::random(n, 2, 21);
+    let b = a.matmul(&x_true);
+    let x = ctx.potrs(&a, &b).unwrap();
+    assert!(x.rel_err(&x_true) < tol_for::<f64>(n) * 10.0);
+}
+
+#[test]
+fn e2e_potrs_paper_matrix_f32() {
+    // Fig. 3a configuration: float32, diag(1..N), b = ones.
+    let ctx = mg(4, 8);
+    let n = 32;
+    let a = Matrix::<f32>::spd_diag(n);
+    let b = Matrix::<f32>::ones(n, 1);
+    let x = ctx.potrs(&a, &b).unwrap();
+    for i in 0..n {
+        assert!((x[(i, 0)] - 1.0 / (i + 1) as f32).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn e2e_potri_c128_on_xla_backend() {
+    // Fig. 3b configuration: complex128 inverse.
+    let ctx = mg(2, 8);
+    let n = 16;
+    let a = Matrix::<c64>::spd_random(n, 22);
+    let inv = ctx.potri(&a).unwrap();
+    assert!(a.matmul(&inv).rel_err(&Matrix::eye(n)) < tol_for::<c64>(n) * 10.0);
+}
+
+#[test]
+fn e2e_syevd_f64_on_xla_backend() {
+    // Fig. 3c configuration: float64 eigendecomposition.
+    let ctx = mg(2, 8);
+    let n = 16;
+    let a = Matrix::<f64>::spd_diag(n);
+    let (vals, _) = ctx.syevd(&a).unwrap();
+    for i in 0..n {
+        assert!((vals[i] - (i + 1) as f64).abs() < 1e-8);
+    }
+}
+
+#[test]
+fn executable_cache_reused_across_solves() {
+    let rt = runtime();
+    let xk = XlaKernels::<f64>::new(rt.clone(), 8).unwrap();
+    let a = Matrix::<f64>::spd_random(8, 30);
+    let _ = TileKernels::<f64>::potf2(&xk, &a).unwrap();
+    let cached_after_one = rt.cached();
+    let _ = TileKernels::<f64>::potf2(&xk, &a).unwrap();
+    assert_eq!(rt.cached(), cached_after_one, "second call must hit the cache");
+    assert!(cached_after_one >= 1);
+}
+
+#[test]
+fn native_and_xla_agree_on_full_potrf() {
+    // The strongest cross-check: identical factorizations through two
+    // completely different compute stacks (Rust loops vs AOT XLA).
+    let model = GpuCostModel::h200();
+    let n = 24;
+    let a = Matrix::<f64>::spd_random(n, 31);
+
+    let run = |backend: jaxmg::solver::SolverBackend<f64>| -> Matrix<f64> {
+        use jaxmg::layout::BlockCyclic1D;
+        use jaxmg::solver::{potrf_dist, Ctx};
+        use jaxmg::tile::{DistMatrix, Layout1D};
+        let node = SimNode::new_uniform(3, 1 << 26);
+        let ctx = Ctx::new(&node, &model, &backend);
+        let lay = Layout1D::BlockCyclic(BlockCyclic1D::new(n, 8, 3).unwrap());
+        let mut dm = DistMatrix::scatter(&node, &a, lay).unwrap();
+        potrf_dist(&ctx, &mut dm).unwrap();
+        dm.gather().unwrap()
+    };
+
+    let l_native = run(jaxmg::solver::SolverBackend::Native);
+    let l_xla = run(jaxmg::solver::SolverBackend::Xla(Arc::new(xla_kernels::<f64>(8))));
+    assert!(l_native.rel_err(&l_xla) < 1e-12);
+}
