@@ -1,16 +1,27 @@
-//! Runtime-layer micro-bench: per-call overhead of the AOT path.
+//! Runtime-layer micro-bench: per-call overhead of (1) the concurrent
+//! solve service and (2) the AOT XLA path.
 //!
-//! Measures the PJRT execute round-trip for each tile kernel (load is
-//! cached; the steady-state cost is literal creation + execute +
-//! readback) against the native backend's pure-Rust compute, at the
+//! Section 1 needs nothing beyond the crate: it measures the queue +
+//! admission + handle overhead of `SolveService` against calling the
+//! same solve directly — the number that decides how small a solve can
+//! be before the service layer stops being free.
+//!
+//! Section 2 measures the PJRT execute round-trip for each tile kernel
+//! (load is cached; the steady-state cost is literal creation + execute
+//! + readback) against the native backend's pure-Rust compute, at the
 //! artifact tile sizes. This is the ratio the §Perf optimization pass
 //! tracks: it determines the tile size at which the AOT path amortizes.
-//!
-//! Requires `make artifacts`.
+//! It requires `make artifacts` and is skipped otherwise.
 
+use jaxmg::coordinator::{Footprint, SolveService};
+use jaxmg::costmodel::GpuCostModel;
+use jaxmg::device::SimNode;
+use jaxmg::layout::BlockCyclic1D;
 use jaxmg::linalg::Matrix;
 use jaxmg::runtime::{PjRtRuntime, XlaKernels};
-use jaxmg::solver::{NativeKernels, TileKernels};
+use jaxmg::scalar::DType;
+use jaxmg::solver::{potrf_dist, Ctx, NativeKernels, SolverBackend, TileKernels};
+use jaxmg::tile::{DistMatrix, Layout1D};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -27,10 +38,52 @@ fn bench<F: FnMut()>(mut f: F, reps: usize) -> f64 {
     times[reps / 2]
 }
 
-fn main() {
+fn one_potrf(node: &SimNode, n: usize, tile: usize, seed: u64) {
+    let model = GpuCostModel::h200();
+    let backend = SolverBackend::<f64>::Native;
+    let ctx = Ctx::pipelined(node, &model, &backend);
+    let a = Matrix::<f64>::spd_random(n, seed);
+    let lay = Layout1D::BlockCyclic(BlockCyclic1D::new(n, tile, node.num_devices()).unwrap());
+    let mut dm = DistMatrix::scatter(node, &a, lay).unwrap();
+    potrf_dist(&ctx, &mut dm).unwrap();
+    dm.free().unwrap();
+}
+
+fn service_overhead_section() {
+    println!("== solve-service overhead: direct call vs submit+wait (f64 potrf) ==\n");
+    println!("{:>6} {:>14} {:>14} {:>12}", "N", "direct[µs]", "service[µs]", "overhead");
+    let ndev = 4;
+    for &n in &[16usize, 64, 128] {
+        let tile = (n / 8).max(1);
+        let node = SimNode::new_uniform(ndev, 1 << 28);
+        let direct = bench(|| one_potrf(&node, n, tile, 1), 10);
+
+        let svc = SolveService::new(node.clone(), 2);
+        let fp = Footprint::for_routine("potrf", n, 0, tile, ndev, DType::F64).unwrap();
+        let via_service = bench(
+            || {
+                let node2 = node.clone();
+                let h = svc
+                    .submit(fp.clone(), move || one_potrf(&node2, n, tile, 1))
+                    .unwrap();
+                let _ = h.wait();
+            },
+            10,
+        );
+        println!(
+            "{n:>6} {:>14.1} {:>14.1} {:>11.1}%",
+            direct * 1e6,
+            via_service * 1e6,
+            (via_service / direct - 1.0) * 100.0
+        );
+    }
+    println!();
+}
+
+fn aot_section() {
     if !std::path::Path::new("artifacts/.stamp").exists() {
-        eprintln!("artifacts/ missing — run `make artifacts` first");
-        std::process::exit(1);
+        println!("== AOT overhead section skipped: artifacts/ missing (run `make artifacts`) ==");
+        return;
     }
     let rt = Arc::new(PjRtRuntime::new("artifacts").unwrap());
     println!("== runtime overhead: AOT XLA kernels vs native (f64) ==\n");
@@ -84,4 +137,9 @@ fn main() {
         "\nexecutables cached: {} (compile-once is what keeps the AOT path viable)",
         rt.cached()
     );
+}
+
+fn main() {
+    service_overhead_section();
+    aot_section();
 }

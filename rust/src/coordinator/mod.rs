@@ -29,13 +29,35 @@
 //! 3. in-place redistribution to the 1D block-cyclic layout (§2.1);
 //! 4. the distributed solve (`crate::solver`);
 //! 5. gather of the replicated / distributed outputs.
+//!
+//! ## Lookahead pipelining
+//!
+//! [`JaxMgBuilder::pipeline`] (or the [`JaxMgBuilder::lookahead`]
+//! shorthand) selects the solver *timing schedule*:
+//! [`PipelineConfig::barrier`] (the default — every charge lands on the
+//! device clocks, the seed behaviour) or
+//! [`PipelineConfig::lookahead`]`(k)`, which issues kernels and copies
+//! onto per-device compute/panel/copy streams with `k`-step panel
+//! lookahead in `potrf` — the simulated makespans shrink and
+//! [`JaxMg::metrics`]' `overlap_*` counters report the realized
+//! overlap. Numerics are schedule-independent (bitwise).
+//!
+//! ## Concurrent solve service
+//!
+//! [`SolveService`] runs **multiple solves in flight** on one shared
+//! node: strict-FIFO admission gated on a per-device VRAM
+//! [`Footprint`] accountant, a worker pool, and per-solve
+//! [`SolveStats`] (queue wait, execution time) on every
+//! [`ServiceHandle`]. See `examples/e2e_driver.rs` for the end-to-end
+//! serving shape and `rust/tests/properties.rs` for the
+//! concurrent-equals-serial and never-over-admit properties.
 
 mod mpmd;
 mod service;
 mod spmd;
 
 pub use mpmd::gather_pointers_mpmd;
-pub use service::{JobQueue, SolveHandle};
+pub use service::{Footprint, JobQueue, ServiceHandle, SolveHandle, SolveService, SolveStats};
 pub use spmd::gather_pointers_spmd;
 
 use crate::costmodel::GpuCostModel;
@@ -46,7 +68,7 @@ use crate::linalg::Matrix;
 use crate::metrics::MetricsSnapshot;
 use crate::runtime::{PjRtRuntime, XlaKernels};
 use crate::scalar::Scalar;
-use crate::solver::{potrf_dist, potri_dist, potrs_dist, syevd_dist, Ctx, SolverBackend};
+use crate::solver::{potrf_dist, potri_dist, potrs_dist, syevd_dist, Ctx, PipelineConfig, SolverBackend};
 use crate::tile::{DistMatrix, Layout1D};
 use std::sync::Arc;
 
@@ -127,6 +149,7 @@ pub struct JaxMgBuilder {
     backend: BackendKind,
     artifacts_dir: Option<std::path::PathBuf>,
     model: GpuCostModel,
+    pipeline: PipelineConfig,
 }
 
 impl Default for JaxMgBuilder {
@@ -138,6 +161,7 @@ impl Default for JaxMgBuilder {
             backend: BackendKind::Native,
             artifacts_dir: None,
             model: GpuCostModel::h200(),
+            pipeline: PipelineConfig::barrier(),
         }
     }
 }
@@ -179,6 +203,20 @@ impl JaxMgBuilder {
         self
     }
 
+    /// Select the solver timing schedule (barrier vs lookahead
+    /// pipelining). Default: [`PipelineConfig::barrier`].
+    pub fn pipeline(mut self, p: PipelineConfig) -> Self {
+        self.pipeline = p;
+        self
+    }
+
+    /// Shorthand for [`JaxMgBuilder::pipeline`] with `k`-step panel
+    /// lookahead (`k = 0` restores the barrier schedule).
+    pub fn lookahead(mut self, k: usize) -> Self {
+        self.pipeline = PipelineConfig::lookahead(k);
+        self
+    }
+
     /// Build the context. Fails if the mesh is missing, the tile size is
     /// zero, or (XLA backend) the PJRT client cannot start.
     pub fn build(self) -> Result<JaxMg> {
@@ -200,6 +238,7 @@ impl JaxMgBuilder {
             backend: self.backend,
             runtime,
             model: self.model,
+            pipeline: self.pipeline,
         })
     }
 }
@@ -212,6 +251,7 @@ pub struct JaxMg {
     backend: BackendKind,
     runtime: Option<Arc<PjRtRuntime>>,
     model: GpuCostModel,
+    pipeline: PipelineConfig,
 }
 
 impl JaxMg {
@@ -233,6 +273,11 @@ impl JaxMg {
     /// The configured execution mode.
     pub fn exec_mode(&self) -> ExecMode {
         self.exec_mode
+    }
+
+    /// The configured timing schedule.
+    pub fn pipeline(&self) -> PipelineConfig {
+        self.pipeline
     }
 
     /// Snapshot of the node metrics (copies, kernels, bytes).
@@ -321,7 +366,7 @@ impl JaxMg {
     {
         self.check_specs(&a_spec, Some(&b_spec))?;
         let backend = self.backend_for::<S>()?;
-        let ctx = Ctx::new(self.mesh.node(), &self.model, &backend);
+        let ctx = Ctx::with_pipeline(self.mesh.node(), &self.model, &backend, self.pipeline);
         let mut dm = self.stage_matrix(a)?;
         potrf_dist(&ctx, &mut dm)?;
         let x = potrs_dist(&ctx, &dm, b)?;
@@ -344,7 +389,7 @@ impl JaxMg {
         S::Real: xla::NativeType + xla::ArrayElement,
     {
         let backend = self.backend_for::<S>()?;
-        let ctx = Ctx::new(self.mesh.node(), &self.model, &backend);
+        let ctx = Ctx::with_pipeline(self.mesh.node(), &self.model, &backend, self.pipeline);
         let mut dm = self.stage_matrix(a)?;
         potrf_dist(&ctx, &mut dm)?;
         potri_dist(&ctx, &mut dm)?;
@@ -361,7 +406,7 @@ impl JaxMg {
         S::Real: xla::NativeType + xla::ArrayElement,
     {
         let backend = self.backend_for::<S>()?;
-        let ctx = Ctx::new(self.mesh.node(), &self.model, &backend);
+        let ctx = Ctx::with_pipeline(self.mesh.node(), &self.model, &backend, self.pipeline);
         let mut dm = self.stage_matrix(a)?;
         let vals = syevd_dist(&ctx, &mut dm)?;
         let vecs = dm.gather()?;
@@ -379,7 +424,7 @@ impl JaxMg {
         let backend = self.backend_for::<S>()?;
         let mut dm = self.stage_matrix(a)?;
         {
-            let ctx = Ctx::new(self.mesh.node(), &self.model, &backend);
+            let ctx = Ctx::with_pipeline(self.mesh.node(), &self.model, &backend, self.pipeline);
             potrf_dist(&ctx, &mut dm)?;
         }
         Ok(Factorized { ctx_owner: self, backend, dm })
@@ -410,13 +455,23 @@ pub struct Factorized<'a, S: Scalar> {
 impl<'a, S: Scalar> Factorized<'a, S> {
     /// Solve against a replicated RHS using the stored factor.
     pub fn solve(&self, b: &Matrix<S>) -> Result<Matrix<S>> {
-        let ctx = Ctx::new(self.ctx_owner.mesh.node(), &self.ctx_owner.model, &self.backend);
+        let ctx = Ctx::with_pipeline(
+            self.ctx_owner.mesh.node(),
+            &self.ctx_owner.model,
+            &self.backend,
+            self.ctx_owner.pipeline,
+        );
         potrs_dist(&ctx, &self.dm, b)
     }
 
     /// Consume the factor and produce the inverse.
     pub fn into_inverse(mut self) -> Result<Matrix<S>> {
-        let ctx = Ctx::new(self.ctx_owner.mesh.node(), &self.ctx_owner.model, &self.backend);
+        let ctx = Ctx::with_pipeline(
+            self.ctx_owner.mesh.node(),
+            &self.ctx_owner.model,
+            &self.backend,
+            self.ctx_owner.pipeline,
+        );
         potri_dist(&ctx, &mut self.dm)?;
         self.dm.gather()
     }
@@ -514,6 +569,27 @@ mod tests {
         assert!(JaxMg::builder().build().is_err()); // no mesh
         let node = SimNode::new_uniform(1, 1 << 20);
         assert!(JaxMg::builder().mesh(Mesh::new_1d(node, "x")).tile_size(0).build().is_err());
+    }
+
+    #[test]
+    fn pipelined_context_matches_barrier_and_shrinks_projection() {
+        let a = Matrix::<f64>::spd_random(48, 20);
+        let b = Matrix::<f64>::ones(48, 2);
+        let run = |look: usize| {
+            let node = SimNode::new_uniform(4, 1 << 26);
+            let mg = JaxMg::builder()
+                .mesh(Mesh::new_1d(node, "x"))
+                .tile_size(4)
+                .lookahead(look)
+                .build()
+                .unwrap();
+            let x = mg.potrs(&a, &b).unwrap();
+            (x, mg.projected_time())
+        };
+        let (x_barrier, t_barrier) = run(0);
+        let (x_look, t_look) = run(2);
+        assert_eq!(x_barrier.as_slice(), x_look.as_slice(), "schedule changed numerics");
+        assert!(t_look < t_barrier, "lookahead projection {t_look} !< barrier {t_barrier}");
     }
 
     #[test]

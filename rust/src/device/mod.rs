@@ -197,6 +197,21 @@ impl SimNode {
         PeerCopyEngine::copy(self, src, src_off, dst, dst_off, len_bytes)
     }
 
+    /// Peer copy without a clock charge (metrics still count). The
+    /// pipelined solver schedule moves bytes through this and charges
+    /// the transfer time to a dedicated copy [`Stream`] so the device
+    /// clock only advances when the timeline is finalized.
+    pub fn peer_copy_untimed(
+        &self,
+        src: DevPtr,
+        src_off: usize,
+        dst: DevPtr,
+        dst_off: usize,
+        len_bytes: usize,
+    ) -> Result<()> {
+        PeerCopyEngine::copy_untimed(self, src, src_off, dst, dst_off, len_bytes)
+    }
+
     /// Simulated global time: the max over device timelines (a barrier
     /// "now"). This is what the projected-time column of the benchmark
     /// tables reads.

@@ -26,21 +26,44 @@ impl PeerCopyEngine {
         if len == 0 {
             return Ok(());
         }
+        Self::copy_untimed(node, src, src_off, dst, dst_off, len)?;
+        let t = node.topology().copy_time(src.device, dst.device, len);
         if src.device == dst.device {
             // Device-local copy: no peer traffic, but still charged at
             // local (HBM) bandwidth.
+            node.device(src.device)?.clock().advance(t);
+        } else {
+            // The transfer occupies the source link; the destination
+            // can't see the bytes before the source-side completion.
+            let src_clock = node.device(src.device)?.clock();
+            src_clock.advance(t);
+            node.device(dst.device)?.clock().sync_to(src_clock.now());
+        }
+        Ok(())
+    }
+
+    /// Data-plane-only copy: bytes move and the metrics count, but no
+    /// simulated time is charged to either device clock. The lookahead
+    /// scheduler uses this and charges the transfer to an explicit copy
+    /// *stream* instead, so copies overlap compute on the timeline.
+    pub fn copy_untimed(
+        node: &SimNode,
+        src: DevPtr,
+        src_off: usize,
+        dst: DevPtr,
+        dst_off: usize,
+        len: usize,
+    ) -> Result<()> {
+        if len == 0 {
+            return Ok(());
+        }
+        if src.device == dst.device {
             let mut mem = node.mem_of(src.device)?;
             mem.copy_within_device(src, src_off, dst, dst_off, len)?;
             drop(mem);
             node.metrics().add_local(len as u64);
-            let t = node.topology().copy_time(src.device, src.device, len);
-            node.device(src.device)?.clock().advance(t);
             return Ok(());
         }
-
-        // Cross-device: copy directly between the two allocation tables
-        // under an ordered two-device lock (no staging allocation — this
-        // is the simulator's DMA path; see EXPERIMENTS.md §Perf L3-1).
         {
             let (first, second) = if src.device < dst.device {
                 (src.device, dst.device)
@@ -53,15 +76,7 @@ impl PeerCopyEngine {
                 if src.device == first { (mem_a, mem_b) } else { (mem_b, mem_a) };
             src_mem.copy_into(src, src_off, &mut dst_mem, dst, dst_off, len)?;
         }
-
         node.metrics().add_peer(len as u64);
-        let t = node.topology().copy_time(src.device, dst.device, len);
-        let src_clock = node.device(src.device)?.clock();
-        let dst_clock = node.device(dst.device)?.clock();
-        // The transfer occupies the source link; the destination can't
-        // see the bytes before the source-side completion.
-        src_clock.advance(t);
-        dst_clock.sync_to(src_clock.now());
         Ok(())
     }
 }

@@ -101,6 +101,16 @@ impl Event {
     pub fn time(&self) -> f64 {
         self.nanos as f64 * 1e-9
     }
+
+    /// An event at an absolute simulated time. Lets non-stream
+    /// timelines (device clocks, cross-stream completion times carried
+    /// as plain seconds) gate stream work: the lookahead scheduler
+    /// records kernel/copy completion times and replays them as events
+    /// on consumer streams.
+    pub fn at(seconds: f64) -> Event {
+        debug_assert!(seconds >= 0.0, "events cannot precede t = 0");
+        Event { nanos: (seconds * 1e9).round() as u64 }
+    }
 }
 
 #[cfg(test)]
@@ -157,6 +167,17 @@ mod tests {
         let clock = SimClock::new();
         s.synchronize(&clock);
         assert!((clock.now() - 7e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn absolute_events_gate_streams() {
+        let s = Stream::new(0);
+        s.wait_event(Event::at(3e-6));
+        let done = s.issue(1e-6);
+        assert!((done - 4e-6).abs() < 1e-12, "got {done}");
+        // Earlier absolute event is a no-op.
+        s.wait_event(Event::at(1e-6));
+        assert!((s.horizon() - 4e-6).abs() < 1e-12);
     }
 
     #[test]

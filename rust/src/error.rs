@@ -1,6 +1,10 @@
 //! Error types for the jaxmg crate.
+//!
+//! `Display`/`Error`/`From` are hand-implemented (no `thiserror`): the
+//! workspace builds offline from a clean checkout, so the crate carries
+//! no proc-macro dependencies.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
@@ -11,10 +15,9 @@ pub type Result<T> = std::result::Result<T, Error>;
 /// allocation failures (`DeviceOom`), invalid IPC handle use across
 /// process boundaries, cuSOLVERMg status codes (`Solver`), and XLA/PJRT
 /// load or execution errors (`Runtime`).
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Simulated device ran out of VRAM.
-    #[error("device {device} out of memory: requested {requested} B, free {free} B of {capacity} B")]
     DeviceOom {
         device: usize,
         requested: usize,
@@ -23,58 +26,104 @@ pub enum Error {
     },
 
     /// An operation referenced a device id outside the node.
-    #[error("invalid device id {device} (node has {count} devices)")]
     InvalidDevice { device: usize, count: usize },
 
     /// An operation referenced an allocation that does not exist (or was freed).
-    #[error("invalid device pointer: device {device}, allocation {alloc_id}")]
     InvalidPointer { device: usize, alloc_id: u64 },
 
     /// Out-of-bounds access within an allocation.
-    #[error("device buffer access out of bounds: offset {offset} + len {len} > size {size}")]
     OutOfBounds { offset: usize, len: usize, size: usize },
 
     /// IPC handle misuse (MPMD mode): opening in the exporting process,
     /// double-open, or open of a revoked handle.
-    #[error("ipc error: {0}")]
     Ipc(String),
 
     /// Layout / sharding mismatch (bad tile size, spec mismatch, ...).
-    #[error("layout error: {0}")]
     Layout(String),
 
     /// Numerical failure inside a solver, e.g. a non-positive-definite
     /// pivot in `potrf` (mirrors `CUSOLVER_STATUS_*` + `info > 0`).
-    #[error("solver error: {0}")]
     Solver(String),
 
     /// The matrix was not positive definite: leading minor `minor` failed.
-    #[error("matrix is not positive definite: leading minor {minor} is not positive")]
     NotPositiveDefinite { minor: usize },
 
     /// Eigensolver failed to converge within the iteration budget.
-    #[error("eigensolver failed to converge at eigenvalue {index} after {iters} iterations")]
     NoConvergence { index: usize, iters: usize },
 
     /// Shape mismatch on a public API boundary.
-    #[error("shape mismatch: {0}")]
     Shape(String),
 
     /// XLA/PJRT runtime errors (artifact missing, compile failure, ...).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Configuration errors from the builder / CLI.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Underlying XLA crate error.
-    #[error("xla: {0}")]
-    Xla(#[from] xla::Error),
+    Xla(xla::Error),
 
     /// IO errors (artifact files).
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::DeviceOom { device, requested, free, capacity } => write!(
+                f,
+                "device {device} out of memory: requested {requested} B, free {free} B of {capacity} B"
+            ),
+            Error::InvalidDevice { device, count } => {
+                write!(f, "invalid device id {device} (node has {count} devices)")
+            }
+            Error::InvalidPointer { device, alloc_id } => {
+                write!(f, "invalid device pointer: device {device}, allocation {alloc_id}")
+            }
+            Error::OutOfBounds { offset, len, size } => write!(
+                f,
+                "device buffer access out of bounds: offset {offset} + len {len} > size {size}"
+            ),
+            Error::Ipc(msg) => write!(f, "ipc error: {msg}"),
+            Error::Layout(msg) => write!(f, "layout error: {msg}"),
+            Error::Solver(msg) => write!(f, "solver error: {msg}"),
+            Error::NotPositiveDefinite { minor } => write!(
+                f,
+                "matrix is not positive definite: leading minor {minor} is not positive"
+            ),
+            Error::NoConvergence { index, iters } => write!(
+                f,
+                "eigensolver failed to converge at eigenvalue {index} after {iters} iterations"
+            ),
+            Error::Shape(msg) => write!(f, "shape mismatch: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Xla(e) => write!(f, "xla: {e}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Xla(e) => Some(e),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {
@@ -129,5 +178,13 @@ mod tests {
         assert!(matches!(Error::runtime("x"), Error::Runtime(_)));
         assert!(matches!(Error::config("x"), Error::Config(_)));
         assert!(matches!(Error::ipc("x"), Error::Ipc(_)));
+    }
+
+    #[test]
+    fn io_and_xla_errors_convert() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(format!("{e}").contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

@@ -53,13 +53,15 @@ pub mod tile;
 
 /// Convenient re-exports for the common API surface.
 pub mod prelude {
-    pub use crate::coordinator::{BackendKind, ExecMode, JaxMg, Mesh, PartitionSpec};
+    pub use crate::coordinator::{
+        BackendKind, ExecMode, Footprint, JaxMg, Mesh, PartitionSpec, SolveService,
+    };
     pub use crate::device::{SimGpu, SimNode};
     pub use crate::error::{Error, Result};
     pub use crate::layout::BlockCyclic1D;
     pub use crate::linalg::Matrix;
     pub use crate::scalar::{c32, c64, Complex, Scalar};
-    pub use crate::solver::SolverBackend;
+    pub use crate::solver::{PipelineConfig, SolverBackend};
 }
 
 pub use error::{Error, Result};

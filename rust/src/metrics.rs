@@ -32,6 +32,20 @@ pub struct Metrics {
     pub redist_cycles: AtomicU64,
     /// Columns rotated by the redistributor.
     pub redist_columns: AtomicU64,
+    /// Solve requests submitted to the concurrent solve service.
+    pub service_submitted: AtomicU64,
+    /// Solve requests completed by the concurrent solve service.
+    pub service_completed: AtomicU64,
+    /// Total real time solves spent queued before admission, ns.
+    pub service_queue_wait_ns: AtomicU64,
+    /// Total real execution time of admitted solves, ns.
+    pub service_exec_ns: AtomicU64,
+    /// Busy stream-seconds issued by pipelined phases, ns
+    /// (overlap-efficiency numerator).
+    pub overlap_busy_ns: AtomicU64,
+    /// Device-seconds spanned by pipelined phases (`ndev × span`), ns
+    /// (overlap-efficiency denominator).
+    pub overlap_span_ns: AtomicU64,
 }
 
 impl Metrics {
@@ -67,6 +81,24 @@ impl Metrics {
         self.flops.fetch_add(flops, Ordering::Relaxed);
     }
 
+    #[inline]
+    pub fn add_service_submission(&self) {
+        self.service_submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_service_completion(&self, queue_wait_ns: u64, exec_ns: u64) {
+        self.service_completed.fetch_add(1, Ordering::Relaxed);
+        self.service_queue_wait_ns.fetch_add(queue_wait_ns, Ordering::Relaxed);
+        self.service_exec_ns.fetch_add(exec_ns, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_overlap(&self, busy_ns: u64, span_ns: u64) {
+        self.overlap_busy_ns.fetch_add(busy_ns, Ordering::Relaxed);
+        self.overlap_span_ns.fetch_add(span_ns, Ordering::Relaxed);
+    }
+
     /// Snapshot all counters (for reports; not atomic across fields).
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
@@ -81,6 +113,12 @@ impl Metrics {
             frees: self.frees.load(Ordering::Relaxed),
             redist_cycles: self.redist_cycles.load(Ordering::Relaxed),
             redist_columns: self.redist_columns.load(Ordering::Relaxed),
+            service_submitted: self.service_submitted.load(Ordering::Relaxed),
+            service_completed: self.service_completed.load(Ordering::Relaxed),
+            service_queue_wait_ns: self.service_queue_wait_ns.load(Ordering::Relaxed),
+            service_exec_ns: self.service_exec_ns.load(Ordering::Relaxed),
+            overlap_busy_ns: self.overlap_busy_ns.load(Ordering::Relaxed),
+            overlap_span_ns: self.overlap_span_ns.load(Ordering::Relaxed),
         }
     }
 
@@ -98,6 +136,12 @@ impl Metrics {
             &self.frees,
             &self.redist_cycles,
             &self.redist_columns,
+            &self.service_submitted,
+            &self.service_completed,
+            &self.service_queue_wait_ns,
+            &self.service_exec_ns,
+            &self.overlap_busy_ns,
+            &self.overlap_span_ns,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -118,9 +162,35 @@ pub struct MetricsSnapshot {
     pub frees: u64,
     pub redist_cycles: u64,
     pub redist_columns: u64,
+    pub service_submitted: u64,
+    pub service_completed: u64,
+    pub service_queue_wait_ns: u64,
+    pub service_exec_ns: u64,
+    pub overlap_busy_ns: u64,
+    pub overlap_span_ns: u64,
 }
 
 impl MetricsSnapshot {
+    /// Mean device utilization across pipelined phases: busy stream
+    /// time over `ndev × span` device-seconds. Above the barrier
+    /// schedule's value means compute/copy/panel overlap happened.
+    pub fn overlap_efficiency(&self) -> f64 {
+        if self.overlap_span_ns == 0 {
+            0.0
+        } else {
+            self.overlap_busy_ns as f64 / self.overlap_span_ns as f64
+        }
+    }
+
+    /// Mean queue wait of completed service solves, seconds.
+    pub fn avg_queue_wait(&self) -> f64 {
+        if self.service_completed == 0 {
+            0.0
+        } else {
+            self.service_queue_wait_ns as f64 / self.service_completed as f64 * 1e-9
+        }
+    }
+
     /// Difference against an earlier snapshot (per-phase accounting).
     pub fn delta(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
         MetricsSnapshot {
@@ -135,6 +205,12 @@ impl MetricsSnapshot {
             frees: self.frees - earlier.frees,
             redist_cycles: self.redist_cycles - earlier.redist_cycles,
             redist_columns: self.redist_columns - earlier.redist_columns,
+            service_submitted: self.service_submitted - earlier.service_submitted,
+            service_completed: self.service_completed - earlier.service_completed,
+            service_queue_wait_ns: self.service_queue_wait_ns - earlier.service_queue_wait_ns,
+            service_exec_ns: self.service_exec_ns - earlier.service_exec_ns,
+            overlap_busy_ns: self.overlap_busy_ns - earlier.overlap_busy_ns,
+            overlap_span_ns: self.overlap_span_ns - earlier.overlap_span_ns,
         }
     }
 }
@@ -174,6 +250,23 @@ mod tests {
         let d = b.delta(&a);
         assert_eq!(d.peer_bytes, 30);
         assert_eq!(d.peer_copies, 1);
+    }
+
+    #[test]
+    fn service_and_overlap_counters() {
+        let m = Metrics::new();
+        m.add_service_submission();
+        m.add_service_completion(500, 1500);
+        m.add_overlap(100, 400);
+        let s = m.snapshot();
+        assert_eq!(s.service_submitted, 1);
+        assert_eq!(s.service_completed, 1);
+        assert_eq!(s.service_exec_ns, 1500);
+        assert!((s.overlap_efficiency() - 0.25).abs() < 1e-12);
+        assert!((s.avg_queue_wait() - 500e-9).abs() < 1e-15);
+        // Empty snapshots report zero, not NaN.
+        assert_eq!(MetricsSnapshot::default().overlap_efficiency(), 0.0);
+        assert_eq!(MetricsSnapshot::default().avg_queue_wait(), 0.0);
     }
 
     #[test]

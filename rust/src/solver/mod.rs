@@ -14,21 +14,55 @@
 //!
 //! The two backends are interchangeable and cross-checked in the test
 //! suite, which is the correctness argument for the AOT path.
+//!
+//! ## Scheduling: barrier vs lookahead pipelining
+//!
+//! Every routine supports two *timing* schedules over identical
+//! numerics (results are bitwise independent of the schedule):
+//!
+//! * **Barrier** ([`PipelineConfig::barrier`], the [`Ctx::new`]
+//!   default): each kernel/copy charge lands directly on the owning
+//!   device's clock, serializing panel work, broadcasts and trailing
+//!   updates per device — the seed behaviour, kept as the regression
+//!   baseline.
+//! * **Lookahead** ([`PipelineConfig::lookahead`], built by
+//!   [`Ctx::pipelined`] / [`Ctx::with_pipeline`]): charges are issued
+//!   onto per-device compute/panel/copy [`crate::device::Stream`]s with
+//!   event dependencies. In `potrf_dist` the panel for step `k+1` is
+//!   factored on the priority stream as soon as its tile column has
+//!   absorbed step `k`'s update — up to `lookahead` steps ahead of the
+//!   trailing-update frontier — while broadcasts ride the copy streams.
+//!   `potrs`/`potri`/`syevd` reuse the same machinery through the
+//!   [`Ctx::charge_gemm`]-family helpers, so their copies and kernels
+//!   overlap too. Makespans shrink accordingly; the golden-timeline
+//!   tests in `rust/tests/golden_timeline.rs` pin the win.
+//!
+//! ### Knobs
+//!
+//! * `PipelineConfig::lookahead(k)` — panel depth `k` (default
+//!   [`DEFAULT_LOOKAHEAD`]); `k = 0` is the barrier schedule.
+//! * [`Ctx::end_phase`] returns a [`PhaseReport`] with the phase's
+//!   busy/span/utilization; aggregates flow into
+//!   [`crate::metrics::Metrics`] (`overlap_busy_ns`/`overlap_span_ns`).
 
 mod kernels;
 mod potrf;
 mod potri;
 mod potrs;
+mod schedule;
 mod syevd;
 
 pub use kernels::{NativeKernels, TileKernels};
 pub use potrf::potrf_dist;
 pub use potri::potri_dist;
 pub use potrs::potrs_dist;
+pub use schedule::{
+    DeviceTimeline, PhaseReport, PipelineConfig, PipelineTimeline, DEFAULT_LOOKAHEAD,
+};
 pub use syevd::syevd_dist;
 
 use crate::costmodel::GpuCostModel;
-use crate::device::SimNode;
+use crate::device::{DevPtr, Event, SimNode};
 use crate::scalar::Scalar;
 use std::sync::Arc;
 
@@ -67,54 +101,198 @@ pub struct Ctx<'a, S: Scalar> {
     pub node: &'a SimNode,
     pub model: &'a GpuCostModel,
     pub kernels: Arc<dyn TileKernels<S>>,
+    /// The timing schedule (barrier or lookahead pipelining).
+    pub pipeline: PipelineConfig,
+    timeline: Option<Arc<PipelineTimeline>>,
 }
 
 impl<'a, S: Scalar> Ctx<'a, S> {
+    /// Barrier-scheduled context (the seed behaviour).
     pub fn new(node: &'a SimNode, model: &'a GpuCostModel, backend: &SolverBackend<S>) -> Self {
-        Ctx { node, model, kernels: backend.kernels() }
+        Self::with_pipeline(node, model, backend, PipelineConfig::barrier())
+    }
+
+    /// Lookahead-pipelined context at the default depth.
+    pub fn pipelined(
+        node: &'a SimNode,
+        model: &'a GpuCostModel,
+        backend: &SolverBackend<S>,
+    ) -> Self {
+        Self::with_pipeline(node, model, backend, PipelineConfig::default())
+    }
+
+    /// Context with an explicit schedule.
+    pub fn with_pipeline(
+        node: &'a SimNode,
+        model: &'a GpuCostModel,
+        backend: &SolverBackend<S>,
+        pipeline: PipelineConfig,
+    ) -> Self {
+        let timeline = if pipeline.is_pipelined() {
+            Some(Arc::new(PipelineTimeline::new(node, pipeline.lookahead)))
+        } else {
+            None
+        };
+        Ctx { node, model, kernels: backend.kernels(), pipeline, timeline }
+    }
+
+    /// The stream timeline, when pipelining is enabled.
+    pub fn timeline(&self) -> Option<&PipelineTimeline> {
+        self.timeline.as_deref()
+    }
+
+    /// Per-device stream snapshot (pipelined contexts only).
+    pub fn timeline_snapshot(&self) -> Option<Vec<DeviceTimeline>> {
+        self.timeline.as_ref().map(|tl| tl.snapshot())
+    }
+
+    /// Bracket a distributed routine: pull streams up to the device
+    /// clocks. No-op for barrier contexts.
+    pub fn begin_phase(&self) {
+        if let Some(tl) = &self.timeline {
+            tl.align(self.node);
+        }
+    }
+
+    /// Close a routine's phase: device clocks jump to the stream
+    /// horizons; returns the busy/span report. No-op (`None`) for
+    /// barrier contexts.
+    pub fn end_phase(&self) -> Option<PhaseReport> {
+        self.timeline.as_ref().map(|tl| tl.finish(self.node))
+    }
+
+    /// Current compute-stream horizon of `dev` (pipelined), or `0.0`
+    /// for barrier contexts where the clocks already carry ordering.
+    pub fn device_ready(&self, dev: usize) -> f64 {
+        self.timeline.as_ref().map(|tl| tl.compute(dev).horizon()).unwrap_or(0.0)
+    }
+
+    /// Charge `dev` with `seconds` of compute-class kernel time.
+    /// Barrier: straight onto the device clock. Pipelined: onto the
+    /// compute stream (serialized with that device's other updates,
+    /// overlapping its panel and copy streams).
+    pub fn charge_device_time(&self, dev: usize, seconds: f64, flops: u64) -> crate::Result<()> {
+        match &self.timeline {
+            Some(tl) => {
+                self.node.device(dev)?; // validate the ordinal
+                tl.compute(dev).issue(seconds);
+                tl.note_busy(dev, seconds);
+                self.node.metrics().add_kernel(flops);
+                Ok(())
+            }
+            None => self.node.charge_kernel(dev, seconds, flops),
+        }
     }
 
     /// Charge `dev`'s timeline for a GEMM-class kernel.
     pub fn charge_gemm(&self, dev: usize, m: usize, n: usize, k: usize) -> crate::Result<()> {
         let fl = GpuCostModel::flops_gemm(S::DTYPE, m, n, k);
-        self.node.charge_kernel(dev, self.model.gemm_time(S::DTYPE, m, n, k), fl)
+        self.charge_device_time(dev, self.model.gemm_time(S::DTYPE, m, n, k), fl)
     }
 
     /// Charge `dev`'s timeline for a panel kernel with `flops` work.
     pub fn charge_panel(&self, dev: usize, flops: u64) -> crate::Result<()> {
-        self.node.charge_kernel(dev, self.model.panel_time(S::DTYPE, flops), flops)
+        self.charge_device_time(dev, self.model.panel_time(S::DTYPE, flops), flops)
     }
 
     /// Model a point-to-point transfer of replicated/host-mirrored data
     /// (clock + metrics; the payload is already host-resident in the
-    /// simulator, e.g. the pipelined RHS tail in `potrs`).
+    /// simulator, e.g. the pipelined RHS tail in `potrs`). Pipelined
+    /// contexts ride the sender's copy stream, gated on its compute
+    /// horizon, and the receiver's compute stream waits for completion.
     pub fn charge_p2p(&self, from: usize, to: usize, bytes: usize) -> crate::Result<()> {
         if from == to || bytes == 0 {
             return Ok(());
         }
         let t = self.node.topology().copy_time(from, to, bytes);
-        let src_clock = self.node.device(from)?.clock();
-        src_clock.advance(t);
-        self.node.metrics().add_peer(bytes as u64);
-        self.node.device(to)?.clock().sync_to(src_clock.now());
-        Ok(())
+        match &self.timeline {
+            Some(tl) => {
+                self.node.device(from)?;
+                self.node.device(to)?;
+                let done = tl.copy(from).issue_after(tl.compute(from).horizon(), t);
+                tl.compute(to).wait_event(Event::at(done));
+                tl.note_busy(from, t);
+                self.node.metrics().add_peer(bytes as u64);
+                Ok(())
+            }
+            None => {
+                let src_clock = self.node.device(from)?.clock();
+                src_clock.advance(t);
+                self.node.metrics().add_peer(bytes as u64);
+                self.node.device(to)?.clock().sync_to(src_clock.now());
+                Ok(())
+            }
+        }
     }
 
     /// Model a replicated-data synchronization: `bytes` flowing from
     /// `from` to every other device (clock + metrics; the payload is
-    /// already host-resident in the simulator).
+    /// already host-resident in the simulator). Pipelined contexts use
+    /// the sender's copy stream with the same shared-link arithmetic.
     pub fn charge_broadcast(&self, from: usize, bytes: usize) -> crate::Result<()> {
         let nd = self.node.num_devices();
-        let src_clock = self.node.device(from)?.clock();
-        for d in 0..nd {
-            if d == from {
-                continue;
+        match &self.timeline {
+            Some(tl) => {
+                self.node.device(from)?;
+                let nb = tl.compute(from).horizon();
+                for d in 0..nd {
+                    if d == from {
+                        continue;
+                    }
+                    let t = self.node.topology().copy_time(from, d, bytes)
+                        / (nd.max(2) - 1) as f64; // link shared across fan-out
+                    let done = tl.copy(from).issue_after(nb, t);
+                    tl.note_busy(from, t);
+                    self.node.metrics().add_peer(bytes as u64);
+                    tl.compute(d).wait_event(Event::at(done));
+                }
+                Ok(())
             }
-            let t = self.node.topology().copy_time(from, d, bytes);
-            src_clock.advance(t / (nd.max(2) - 1) as f64); // link shared across fan-out
-            self.node.metrics().add_peer(bytes as u64);
-            self.node.device(d)?.clock().sync_to(src_clock.now());
+            None => {
+                let src_clock = self.node.device(from)?.clock();
+                for d in 0..nd {
+                    if d == from {
+                        continue;
+                    }
+                    let t = self.node.topology().copy_time(from, d, bytes);
+                    src_clock.advance(t / (nd.max(2) - 1) as f64); // link shared across fan-out
+                    self.node.metrics().add_peer(bytes as u64);
+                    self.node.device(d)?.clock().sync_to(src_clock.now());
+                }
+                Ok(())
+            }
         }
-        Ok(())
+    }
+
+    /// Move a packed panel buffer between two device scratch
+    /// allocations (base pointers) and charge the transfer.
+    ///
+    /// Barrier: the exact seed behaviour (`SimNode::peer_copy`, clocks
+    /// carry the dependency; returns `0.0`). Pipelined: bytes move via
+    /// the untimed DMA path, the transfer rides the *sender's copy
+    /// stream* gated on `not_before`, the receiver's compute stream is
+    /// fenced on completion, and the completion time is returned so
+    /// callers (potrf's trailing updates) can gate finer-grained work.
+    pub fn panel_copy(
+        &self,
+        src: DevPtr,
+        dst: DevPtr,
+        bytes: usize,
+        not_before: f64,
+    ) -> crate::Result<f64> {
+        match &self.timeline {
+            Some(tl) => {
+                self.node.peer_copy_untimed(src, 0, dst, 0, bytes)?;
+                let t = self.node.topology().copy_time(src.device, dst.device, bytes);
+                let done = tl.copy(src.device).issue_after(not_before, t);
+                tl.note_busy(src.device, t);
+                tl.compute(dst.device).wait_event(Event::at(done));
+                Ok(done)
+            }
+            None => {
+                self.node.peer_copy(src, 0, dst, 0, bytes)?;
+                Ok(0.0)
+            }
+        }
     }
 }

@@ -38,6 +38,11 @@ pub fn potrs_dist<S: Scalar>(
     let ntiles = lay.num_tiles();
     let esize = std::mem::size_of::<S>();
 
+    // Pipelined contexts route the per-tile trsm/gemm charges onto the
+    // compute streams and the tail hand-offs onto the copy streams (see
+    // `Ctx::charge_p2p`), overlapping the two sweeps' communication
+    // with compute; barrier contexts keep the seed clock behaviour.
+    ctx.begin_phase();
     let mut y = b.clone();
 
     // ---- Forward sweep: L·Y = B, pipelined tile-owner to tile-owner.
@@ -99,6 +104,7 @@ pub fn potrs_dist<S: Scalar>(
         // Replicated output: solved block flows to all devices.
         ctx.charge_broadcast(owner, tk * nrhs * esize)?;
     }
+    let _ = ctx.end_phase();
     Ok(x)
 }
 
@@ -192,6 +198,29 @@ mod tests {
         let l_ref = linalg::potrf(&a).unwrap();
         let x_ref = linalg::potrs_from_chol(&l_ref, &b).unwrap();
         assert!(x.rel_err(&x_ref) < 1e-12);
+    }
+
+    #[test]
+    fn potrs_pipelined_matches_barrier_and_shrinks_timeline() {
+        use crate::solver::PipelineConfig;
+        let run = |cfg: PipelineConfig| -> (Matrix<f64>, f64) {
+            let node = SimNode::new_uniform(4, 1 << 26);
+            let model = GpuCostModel::h200();
+            let backend = SolverBackend::<f64>::Native;
+            let a = Matrix::<f64>::spd_random(48, 21);
+            let b = Matrix::<f64>::random(48, 2, 22);
+            let lay = Layout1D::BlockCyclic(BlockCyclic1D::new(48, 4, 4).unwrap());
+            let mut dm = DistMatrix::scatter(&node, &a, lay).unwrap();
+            node.reset_accounting();
+            let ctx = Ctx::with_pipeline(&node, &model, &backend, cfg);
+            potrf_dist(&ctx, &mut dm).unwrap();
+            let x = potrs_dist(&ctx, &dm, &b).unwrap();
+            (x, node.sim_time())
+        };
+        let (x_barrier, t_barrier) = run(PipelineConfig::barrier());
+        let (x_look, t_look) = run(PipelineConfig::lookahead(2));
+        assert_eq!(x_barrier.as_slice(), x_look.as_slice(), "schedule changed numerics");
+        assert!(t_look < t_barrier, "pipelined potrf+potrs {t_look} !< barrier {t_barrier}");
     }
 
     #[test]

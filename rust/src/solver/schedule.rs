@@ -1,0 +1,302 @@
+//! Lookahead pipeline timelines: per-device compute / panel / copy
+//! streams over the simulated clock.
+//!
+//! The barrier scheduler charges every kernel and copy straight to the
+//! owning device's [`crate::device::SimClock`], which serializes panel
+//! factorization, peer copies and trailing updates on one timeline per
+//! device. The real cuSOLVERMg overlaps them: the panel for step `k+1`
+//! is factored on a high-priority stream while step `k`'s trailing
+//! GEMMs are still in flight, and workspace broadcasts ride dedicated
+//! copy streams (`cudaMemcpyPeerAsync`). This module models exactly
+//! that:
+//!
+//! * three [`Stream`]s per device — `compute` (trailing GEMMs),
+//!   `panel` (potf2/trsm, the priority stream) and `copy` (peer
+//!   transfers);
+//! * event dependencies carried as completion times and replayed with
+//!   [`Event::at`] on consumer streams;
+//! * a bounded **lookahead depth**: at most `lookahead` panel steps may
+//!   run ahead of the trailing-update frontier (the classic right-
+//!   looking lookahead parameter; depth 0 degenerates to the barrier
+//!   schedule and is represented by *not* building a timeline at all).
+//!
+//! A timeline is created per [`super::Ctx`]; each distributed routine
+//! brackets its work in [`PipelineTimeline::align`] (streams start no
+//! earlier than the current device clocks) and
+//! [`PipelineTimeline::finish`] (device clocks jump to the stream
+//! horizons, and per-phase busy/span counters flow into
+//! [`crate::metrics::Metrics`] as the overlap-efficiency numerator and
+//! denominator).
+
+use crate::device::{Event, SimNode, Stream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Default panel lookahead depth used by the pipelined solvers.
+pub const DEFAULT_LOOKAHEAD: usize = 2;
+
+/// How a solver run is scheduled onto the simulated device timelines.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct PipelineConfig {
+    /// Number of panel steps allowed to run ahead of the trailing-
+    /// update frontier. `0` selects the barrier schedule (every charge
+    /// lands directly on the device clock, as the seed solvers did);
+    /// `k >= 1` builds a [`PipelineTimeline`] with depth `k`.
+    pub lookahead: usize,
+}
+
+impl PipelineConfig {
+    /// The strict-barrier schedule (the pre-pipelining behaviour).
+    pub fn barrier() -> Self {
+        PipelineConfig { lookahead: 0 }
+    }
+
+    /// Lookahead pipelining with the given panel depth.
+    pub fn lookahead(depth: usize) -> Self {
+        PipelineConfig { lookahead: depth }
+    }
+
+    /// Whether this configuration builds a stream timeline.
+    pub fn is_pipelined(self) -> bool {
+        self.lookahead > 0
+    }
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self::lookahead(DEFAULT_LOOKAHEAD)
+    }
+}
+
+#[derive(Debug)]
+struct DeviceStreams {
+    compute: Stream,
+    panel: Stream,
+    copy: Stream,
+}
+
+/// Per-device view of a finished (or in-flight) pipelined schedule —
+/// the golden-timeline tests snapshot these.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceTimeline {
+    /// Device ordinal.
+    pub device: usize,
+    /// Completion horizon of the trailing-update stream, seconds.
+    pub compute_horizon: f64,
+    /// Completion horizon of the panel (priority) stream, seconds.
+    pub panel_horizon: f64,
+    /// Completion horizon of the copy stream, seconds.
+    pub copy_horizon: f64,
+    /// Total busy seconds issued onto this device's streams.
+    pub busy: f64,
+}
+
+/// Busy/span summary of one pipelined phase (one distributed routine).
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub struct PhaseReport {
+    /// Wall span of the phase on the simulated timeline, seconds.
+    pub span: f64,
+    /// Total busy seconds across all streams of all devices.
+    pub busy: f64,
+    /// `busy / (ndev * span)` — mean device utilization. Values above
+    /// the barrier schedule's utilization are the overlap win.
+    pub utilization: f64,
+}
+
+/// Stream timelines for one pipelined solver context.
+#[derive(Debug)]
+pub struct PipelineTimeline {
+    devs: Vec<DeviceStreams>,
+    busy_ns: Vec<AtomicU64>,
+    /// `(phase start seconds, busy_ns total at phase start)`.
+    phase: Mutex<(f64, u64)>,
+    lookahead: usize,
+}
+
+impl PipelineTimeline {
+    /// Build a timeline over `node`'s devices, streams seeded at each
+    /// device's current clock.
+    pub fn new(node: &SimNode, lookahead: usize) -> Self {
+        let n = node.num_devices();
+        let mut devs = Vec::with_capacity(n);
+        for d in 0..n {
+            let now = node.device(d).map(|g| g.clock().now()).unwrap_or(0.0);
+            let seeded = |dev: usize| {
+                let s = Stream::new(dev);
+                s.wait_event(Event::at(now));
+                s
+            };
+            devs.push(DeviceStreams { compute: seeded(d), panel: seeded(d), copy: seeded(d) });
+        }
+        let busy_ns = (0..n).map(|_| AtomicU64::new(0)).collect();
+        PipelineTimeline { devs, busy_ns, phase: Mutex::new((0.0, 0)), lookahead }
+    }
+
+    /// The configured lookahead depth.
+    pub fn lookahead(&self) -> usize {
+        self.lookahead
+    }
+
+    /// Number of devices covered.
+    pub fn num_devices(&self) -> usize {
+        self.devs.len()
+    }
+
+    /// The trailing-update stream of device `d`.
+    pub fn compute(&self, d: usize) -> &Stream {
+        &self.devs[d].compute
+    }
+
+    /// The panel (priority) stream of device `d`.
+    pub fn panel(&self, d: usize) -> &Stream {
+        &self.devs[d].panel
+    }
+
+    /// The copy stream of device `d`.
+    pub fn copy(&self, d: usize) -> &Stream {
+        &self.devs[d].copy
+    }
+
+    /// Record `seconds` of issued work on device `d` (for utilization).
+    pub fn note_busy(&self, d: usize, seconds: f64) {
+        self.busy_ns[d].fetch_add((seconds * 1e9).round() as u64, Ordering::Relaxed);
+    }
+
+    /// Completion horizon of device `d`: max over its three streams.
+    pub fn horizon(&self, d: usize) -> f64 {
+        let ds = &self.devs[d];
+        ds.compute.horizon().max(ds.panel.horizon()).max(ds.copy.horizon())
+    }
+
+    fn busy_total_ns(&self) -> u64 {
+        self.busy_ns.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Start a phase: pull every stream forward to its device's current
+    /// clock (work already charged to the clocks — scatter, prior
+    /// phases, redistribution — cannot be overlapped retroactively) and
+    /// mark the phase origin for [`PipelineTimeline::finish`].
+    pub fn align(&self, node: &SimNode) {
+        let mut t0 = f64::INFINITY;
+        for (d, ds) in self.devs.iter().enumerate() {
+            let now = node.device(d).map(|g| g.clock().now()).unwrap_or(0.0);
+            // A previous phase may have pushed the streams past the
+            // clock already; the phase starts at the later of the two.
+            let start = now.max(self.horizon(d));
+            if start < t0 {
+                t0 = start;
+            }
+            let ev = Event::at(now);
+            ds.compute.wait_event(ev);
+            ds.panel.wait_event(ev);
+            ds.copy.wait_event(ev);
+        }
+        if !t0.is_finite() {
+            t0 = 0.0;
+        }
+        *self.phase.lock().unwrap() = (t0, self.busy_total_ns());
+    }
+
+    /// End a phase: push every device clock to its stream horizon (so
+    /// `SimNode::sim_time` reports the pipelined makespan), publish the
+    /// phase's busy/span into the node metrics, and return the report.
+    pub fn finish(&self, node: &SimNode) -> PhaseReport {
+        let n = self.devs.len();
+        let mut end = 0.0f64;
+        for d in 0..n {
+            let h = self.horizon(d);
+            if let Ok(g) = node.device(d) {
+                g.clock().sync_to(h);
+            }
+            end = end.max(h);
+        }
+        let (t0, busy0) = *self.phase.lock().unwrap();
+        let busy = self.busy_total_ns().saturating_sub(busy0) as f64 * 1e-9;
+        let span = (end - t0).max(0.0);
+        let denom = n as f64 * span;
+        let utilization = if denom > 0.0 { busy / denom } else { 0.0 };
+        node.metrics().add_overlap((busy * 1e9).round() as u64, (denom * 1e9).round() as u64);
+        PhaseReport { span, busy, utilization }
+    }
+
+    /// Per-device snapshot of the current stream horizons and busy time.
+    pub fn snapshot(&self) -> Vec<DeviceTimeline> {
+        self.devs
+            .iter()
+            .enumerate()
+            .map(|(d, ds)| DeviceTimeline {
+                device: d,
+                compute_horizon: ds.compute.horizon(),
+                panel_horizon: ds.panel.horizon(),
+                copy_horizon: ds.copy.horizon(),
+                busy: self.busy_ns[d].load(Ordering::Relaxed) as f64 * 1e-9,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_and_modes() {
+        assert!(!PipelineConfig::barrier().is_pipelined());
+        assert!(PipelineConfig::lookahead(1).is_pipelined());
+        assert_eq!(PipelineConfig::default().lookahead, DEFAULT_LOOKAHEAD);
+    }
+
+    #[test]
+    fn streams_seed_from_device_clocks() {
+        let node = SimNode::new_uniform(2, 1 << 20);
+        node.device(1).unwrap().clock().advance(5e-6);
+        let tl = PipelineTimeline::new(&node, 1);
+        assert_eq!(tl.horizon(0), 0.0);
+        assert!((tl.horizon(1) - 5e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn finish_pushes_clocks_and_reports_utilization() {
+        let node = SimNode::new_uniform(2, 1 << 20);
+        let tl = PipelineTimeline::new(&node, 2);
+        tl.align(&node);
+        tl.compute(0).issue(10e-6);
+        tl.note_busy(0, 10e-6);
+        tl.panel(0).issue(10e-6); // overlaps on the same device
+        tl.note_busy(0, 10e-6);
+        tl.compute(1).issue(4e-6);
+        tl.note_busy(1, 4e-6);
+        let rep = tl.finish(&node);
+        assert!((node.device(0).unwrap().clock().now() - 10e-6).abs() < 1e-12);
+        assert!((rep.span - 10e-6).abs() < 1e-12);
+        assert!((rep.busy - 24e-6).abs() < 1e-12);
+        // 24 µs of work in a 2-device × 10 µs window.
+        assert!((rep.utilization - 1.2).abs() < 1e-9);
+        let m = node.metrics().snapshot();
+        assert!(m.overlap_busy_ns > 0 && m.overlap_span_ns > 0);
+    }
+
+    #[test]
+    fn align_is_monotone_across_phases() {
+        let node = SimNode::new_uniform(1, 1 << 20);
+        let tl = PipelineTimeline::new(&node, 1);
+        tl.align(&node);
+        tl.compute(0).issue(3e-6);
+        tl.finish(&node);
+        // The clock moved; a second phase must start no earlier.
+        tl.align(&node);
+        let done = tl.compute(0).issue(1e-6);
+        assert!((done - 4e-6).abs() < 1e-12, "got {done}");
+    }
+
+    #[test]
+    fn snapshot_reports_all_devices() {
+        let node = SimNode::new_uniform(3, 1 << 20);
+        let tl = PipelineTimeline::new(&node, 1);
+        tl.copy(2).issue(1e-6);
+        let snap = tl.snapshot();
+        assert_eq!(snap.len(), 3);
+        assert!(snap[2].copy_horizon > 0.0);
+        assert_eq!(snap[0].device, 0);
+    }
+}

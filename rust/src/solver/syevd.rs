@@ -48,6 +48,12 @@ pub fn syevd_dist<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
     let ndev = ctx.node.num_devices();
     let esize = std::mem::size_of::<S>();
 
+    // Pipelined contexts route every charge below onto the per-device
+    // compute/copy streams (`Ctx::charge_device_time` and friends), so
+    // reflector broadcasts overlap the rank-2 updates; barrier contexts
+    // keep the seed clock behaviour.
+    ctx.begin_phase();
+
     // Host mirror of each device panel (read once; see module docs).
     let mut panels: Vec<Matrix<S>> = Vec::with_capacity(ndev);
     for d in 0..ndev {
@@ -70,7 +76,7 @@ pub fn syevd_dist<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
         for i in (k + 1)..n {
             xnorm_sq = xnorm_sq + ak[i].abs_sqr();
         }
-        ctx.node.charge_kernel(owner, ctx.model.blas2_time((2 * (n - k) * esize) as u64), 0)?;
+        ctx.charge_device_time(owner, ctx.model.blas2_time((2 * (n - k) * esize) as u64), 0)?;
         let xnorm = xnorm_sq.rsqrt_val();
         if xnorm.to_f64() == 0.0 {
             reflectors.push((vec![S::zero(); n], S::zero()));
@@ -120,7 +126,7 @@ pub fn syevd_dist<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
                 }
             }
             // gemv flops: 2·n·lc, bandwidth-bound.
-            ctx.node.charge_kernel(d, ctx.model.blas2_time((n * lc * esize) as u64), (2 * n * lc) as u64)?;
+            ctx.charge_device_time(d, ctx.model.blas2_time((n * lc * esize) as u64), (2 * n * lc) as u64)?;
             ctx.charge_p2p(d, owner, n * esize)?; // reduce to owner
             for i in 0..n {
                 au[i] += partial[i];
@@ -154,7 +160,7 @@ pub fn syevd_dist<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
                     }
                 }
             }
-            ctx.node.charge_kernel(d, ctx.model.blas2_time((2 * n * lc * esize) as u64), (4 * n * lc) as u64)?;
+            ctx.charge_device_time(d, ctx.model.blas2_time((2 * n * lc * esize) as u64), (4 * n * lc) as u64)?;
         }
 
         reflectors.push((u, tau));
@@ -190,7 +196,7 @@ pub fn syevd_dist<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
     let values = tql2(&tri, &mut z)?;
     // QL with eigenvectors is ~6n³ HBM-bound flops on one device; this
     // T_A-independent term dominates syevd (paper Fig. 3c).
-    ctx.node.charge_kernel(0, ctx.model.blas2_time((6 * n * n * esize) as u64), (6 * n * n * n) as u64)?;
+    ctx.charge_device_time(0, ctx.model.blas2_time((6 * n * n * esize) as u64), (6 * n * n * n) as u64)?;
     // Scatter the tridiagonal eigenvectors column-cyclically.
     ctx.charge_broadcast(0, n * n.div_ceil(ndev) * esize)?;
 
@@ -220,7 +226,7 @@ pub fn syevd_dist<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
                 }
             }
         }
-        ctx.node.charge_kernel(
+        ctx.charge_device_time(
             d,
             ctx.model.blas2_time((4 * n * lc * esize) as u64) * reflectors.len().max(1) as f64,
             (4 * n * lc * reflectors.len()) as u64,
@@ -231,6 +237,7 @@ pub fn syevd_dist<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
     for d in 0..ndev {
         a.write_block(d, 0, 0, &panels[d])?;
     }
+    let _ = ctx.end_phase();
     Ok(values)
 }
 
@@ -340,6 +347,28 @@ mod tests {
             assert!(node.device(d).unwrap().clock().now() > 0.0, "device {d} idle");
         }
         assert!(node.metrics().snapshot().peer_bytes > 0);
+    }
+
+    #[test]
+    fn syevd_pipelined_matches_barrier_and_shrinks_timeline() {
+        use crate::solver::PipelineConfig;
+        let run = |cfg: PipelineConfig| -> (Vec<f64>, Matrix<f64>, f64) {
+            let node = SimNode::new_uniform(4, 1 << 26);
+            let model = GpuCostModel::h200();
+            let backend = SolverBackend::<f64>::Native;
+            let a = Matrix::<f64>::hermitian_random(32, 31);
+            let lay = Layout1D::BlockCyclic(BlockCyclic1D::new(32, 4, 4).unwrap());
+            let mut dm = DistMatrix::scatter(&node, &a, lay).unwrap();
+            node.reset_accounting();
+            let ctx = Ctx::with_pipeline(&node, &model, &backend, cfg);
+            let vals = syevd_dist(&ctx, &mut dm).unwrap();
+            (vals, dm.gather().unwrap(), node.sim_time())
+        };
+        let (v_barrier, z_barrier, t_barrier) = run(PipelineConfig::barrier());
+        let (v_look, z_look, t_look) = run(PipelineConfig::lookahead(2));
+        assert_eq!(v_barrier, v_look, "schedule changed eigenvalues");
+        assert_eq!(z_barrier.as_slice(), z_look.as_slice(), "schedule changed eigenvectors");
+        assert!(t_look < t_barrier, "pipelined syevd {t_look} !< barrier {t_barrier}");
     }
 
     #[test]

@@ -1,0 +1,124 @@
+//! Golden-timeline regression tests for the lookahead scheduler.
+//!
+//! For a fixed grid of `(ndev >= 4, tile, n >= 4*tile)` configurations
+//! this suite:
+//!
+//! 1. asserts the lookahead schedule's simulated potrf makespan is
+//!    **strictly** smaller than the barrier schedule's (the tentpole
+//!    claim — devices stop idling between panel steps);
+//! 2. asserts both schedules produce bitwise-identical factors;
+//! 3. snapshots the per-device stream timelines (compute/panel/copy
+//!    horizons + busy time, µs) into `tests/golden/potrf_timelines.txt`
+//!    and compares against the checked-in snapshot on later runs, so
+//!    any cost-model or scheduler drift fails loudly. The snapshot
+//!    bootstraps itself on first run; regenerate intentionally with
+//!    `UPDATE_GOLDEN=1 cargo test --test golden_timeline`.
+//!
+//! Everything here is deterministic: seeded matrices, an analytic cost
+//! model, and single-threaded scheduling.
+
+use jaxmg::costmodel::GpuCostModel;
+use jaxmg::device::SimNode;
+use jaxmg::layout::BlockCyclic1D;
+use jaxmg::linalg::Matrix;
+use jaxmg::solver::{potrf_dist, Ctx, DeviceTimeline, PipelineConfig, SolverBackend};
+use jaxmg::tile::{DistMatrix, Layout1D};
+use std::fmt::Write as _;
+
+/// `(ndev, tile, n)` — every entry satisfies ndev >= 4 and n >= 4*tile.
+const GRID: &[(usize, usize, usize)] = &[(4, 4, 32), (4, 8, 64), (8, 8, 128)];
+
+fn run_potrf(
+    ndev: usize,
+    tile: usize,
+    n: usize,
+    cfg: PipelineConfig,
+) -> (Matrix<f64>, f64, Option<Vec<DeviceTimeline>>) {
+    let node = SimNode::new_uniform(ndev, 1 << 27);
+    let model = GpuCostModel::h200();
+    let backend = SolverBackend::<f64>::Native;
+    let a = Matrix::<f64>::spd_random(n, 0xD15C0 + n as u64);
+    let lay = Layout1D::BlockCyclic(BlockCyclic1D::new(n, tile, ndev).unwrap());
+    let mut dm = DistMatrix::scatter(&node, &a, lay).unwrap();
+    node.reset_accounting();
+    let ctx = Ctx::with_pipeline(&node, &model, &backend, cfg);
+    potrf_dist(&ctx, &mut dm).unwrap();
+    let snap = ctx.timeline_snapshot();
+    (dm.gather().unwrap(), node.sim_time(), snap)
+}
+
+#[test]
+fn lookahead_beats_barrier_on_every_grid_config() {
+    for &(ndev, tile, n) in GRID {
+        let (l_barrier, t_barrier, _) = run_potrf(ndev, tile, n, PipelineConfig::barrier());
+        let (l_look, t_look, _) = run_potrf(ndev, tile, n, PipelineConfig::lookahead(2));
+        assert_eq!(
+            l_barrier.as_slice(),
+            l_look.as_slice(),
+            "schedule changed numerics (ndev={ndev} tile={tile} n={n})"
+        );
+        assert!(
+            t_look < t_barrier,
+            "lookahead {t_look} !< barrier {t_barrier} (ndev={ndev} tile={tile} n={n})"
+        );
+    }
+}
+
+#[test]
+fn deeper_lookahead_never_slower_than_depth_one() {
+    for &(ndev, tile, n) in GRID {
+        let (_, t1, _) = run_potrf(ndev, tile, n, PipelineConfig::lookahead(1));
+        let (_, t4, _) = run_potrf(ndev, tile, n, PipelineConfig::lookahead(4));
+        // Relaxing the depth bound only removes constraints.
+        assert!(
+            t4 <= t1 + 1e-12,
+            "depth-4 {t4} slower than depth-1 {t1} (ndev={ndev} tile={tile} n={n})"
+        );
+    }
+}
+
+fn render_snapshot() -> String {
+    let mut out = String::new();
+    out.push_str("# golden potrf timelines (µs) — regenerate with UPDATE_GOLDEN=1\n");
+    for &(ndev, tile, n) in GRID {
+        let (_, t_barrier, _) = run_potrf(ndev, tile, n, PipelineConfig::barrier());
+        let (_, t_look, snap) = run_potrf(ndev, tile, n, PipelineConfig::lookahead(2));
+        let snap = snap.expect("pipelined run has a timeline");
+        writeln!(out, "config ndev={ndev} tile={tile} n={n}").unwrap();
+        writeln!(out, "  barrier_makespan_us   {:.3}", t_barrier * 1e6).unwrap();
+        writeln!(out, "  lookahead_makespan_us {:.3}", t_look * 1e6).unwrap();
+        for d in &snap {
+            writeln!(
+                out,
+                "  dev {} compute {:.3} panel {:.3} copy {:.3} busy {:.3}",
+                d.device,
+                d.compute_horizon * 1e6,
+                d.panel_horizon * 1e6,
+                d.copy_horizon * 1e6,
+                d.busy * 1e6
+            )
+            .unwrap();
+        }
+    }
+    out
+}
+
+#[test]
+fn per_device_timelines_match_golden_snapshot() {
+    let golden_dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden");
+    let golden_path = golden_dir.join("potrf_timelines.txt");
+    let rendered = render_snapshot();
+    let update = std::env::var_os("UPDATE_GOLDEN").is_some();
+    if update || !golden_path.exists() {
+        std::fs::create_dir_all(&golden_dir).unwrap();
+        std::fs::write(&golden_path, &rendered).unwrap();
+        eprintln!("golden timeline snapshot written to {golden_path:?}");
+        return;
+    }
+    let golden = std::fs::read_to_string(&golden_path).unwrap();
+    assert_eq!(
+        golden, rendered,
+        "per-device timelines drifted from {golden_path:?} — a perf regression (or an \
+         intentional scheduler/cost-model change: rerun with UPDATE_GOLDEN=1 and review the diff)"
+    );
+}

@@ -4,6 +4,7 @@
 //! deterministic harness: every property runs `CASES` seeded trials and
 //! reports the failing seed, which reproduces the case exactly.
 
+use jaxmg::coordinator::{Footprint, SolveService};
 use jaxmg::costmodel::{workspace, GpuCostModel};
 use jaxmg::device::SimNode;
 use jaxmg::ipc::{AddressSpace, IpcRegistry};
@@ -16,6 +17,9 @@ use jaxmg::rng::Rng;
 use jaxmg::scalar::{c64, DType, Scalar};
 use jaxmg::solver::{potrf_dist, potrs_dist, syevd_dist, Ctx, SolverBackend};
 use jaxmg::tile::{DistMatrix, Layout1D};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
 const CASES: u64 = 40;
 
@@ -255,6 +259,193 @@ fn prop_ipc_registry_never_leaks_across_spaces() {
         reg.revoke(exporter, h).unwrap();
         assert!(reg.open(AddressSpace(exporter.0 + 2), h).is_err());
     });
+}
+
+/// One pipelined potrs solve on `node` (shared or fresh): returns the
+/// gathered factor and the solution, both bitwise-deterministic in
+/// `(n, tile, nrhs, seed)` and independent of node state.
+fn one_solve<S: Scalar>(
+    node: &SimNode,
+    n: usize,
+    tile: usize,
+    nrhs: usize,
+    seed: u64,
+) -> (Matrix<S>, Matrix<S>) {
+    let ndev = node.num_devices();
+    let model = GpuCostModel::h200();
+    let backend = SolverBackend::<S>::Native;
+    let ctx = Ctx::pipelined(node, &model, &backend);
+    let a = Matrix::<S>::spd_random(n, seed);
+    let x_true = Matrix::<S>::random(n, nrhs, seed + 1);
+    let b = a.matmul(&x_true);
+    let lay = Layout1D::BlockCyclic(BlockCyclic1D::new(n, tile, ndev).unwrap());
+    let mut dm = DistMatrix::scatter(node, &a, lay).unwrap();
+    potrf_dist(&ctx, &mut dm).unwrap();
+    let x = potrs_dist(&ctx, &dm, &b).unwrap();
+    let l = dm.gather().unwrap();
+    dm.free().unwrap();
+    (l, x)
+}
+
+#[test]
+fn prop_concurrent_service_solves_match_serial_bitwise() {
+    // Random mixes of solve sizes/dtypes admitted concurrently must
+    // produce results identical to the same solves run serially.
+    for_all("service_concurrent_vs_serial", |rng| {
+        let ndev = rng.range(2, 4);
+        let vram = 1usize << 26;
+        let node = SimNode::new_uniform(ndev, vram);
+        let svc = SolveService::new(node.clone(), 3);
+        let k = rng.range(3, 5);
+        let configs: Vec<(usize, usize, usize, u64, bool)> = (0..k)
+            .map(|_| {
+                (
+                    rng.range(4, 28),
+                    rng.range(1, 6),
+                    rng.range(1, 3),
+                    rng.next_u64() >> 1, // headroom for seed+1
+                    rng.next_below(2) == 0,
+                )
+            })
+            .collect();
+        let mut f64_handles = Vec::new();
+        let mut c64_handles = Vec::new();
+        for &(n, tile, nrhs, seed, is_f64) in &configs {
+            let dtype = if is_f64 { DType::F64 } else { DType::C128 };
+            let fp = Footprint::for_routine("potrs", n, nrhs, tile, ndev, dtype).unwrap();
+            let node2 = node.clone();
+            if is_f64 {
+                f64_handles.push((
+                    n,
+                    svc.submit(fp, move || one_solve::<f64>(&node2, n, tile, nrhs, seed)).unwrap(),
+                ));
+            } else {
+                c64_handles.push((
+                    n,
+                    svc.submit(fp, move || one_solve::<c64>(&node2, n, tile, nrhs, seed)).unwrap(),
+                ));
+            }
+        }
+        svc.drain();
+        // Serial reference on a fresh node, same configs in order.
+        let serial = SimNode::new_uniform(ndev, vram);
+        let mut f64_it = f64_handles.into_iter();
+        let mut c64_it = c64_handles.into_iter();
+        for &(n, tile, nrhs, seed, is_f64) in &configs {
+            if is_f64 {
+                let (_, h) = f64_it.next().unwrap();
+                let ((l, x), _stats) = h.wait();
+                let (l_ref, x_ref) = one_solve::<f64>(&serial, n, tile, nrhs, seed);
+                assert_eq!(l.as_slice(), l_ref.as_slice(), "factor diverged (n={n})");
+                assert_eq!(x.as_slice(), x_ref.as_slice(), "solution diverged (n={n})");
+            } else {
+                let (_, h) = c64_it.next().unwrap();
+                let ((l, x), _stats) = h.wait();
+                let (l_ref, x_ref) = one_solve::<c64>(&serial, n, tile, nrhs, seed);
+                assert_eq!(l.as_slice(), l_ref.as_slice(), "c128 factor diverged (n={n})");
+                assert_eq!(x.as_slice(), x_ref.as_slice(), "c128 solution diverged (n={n})");
+            }
+        }
+        // Nothing leaked on the shared node.
+        for rep in node.memory_reports() {
+            assert_eq!(rep.used, 0, "service solves leaked device memory");
+        }
+    });
+}
+
+#[test]
+fn prop_service_capacity_accountant_never_overadmits() {
+    // The admission accountant must never reserve past SimNode
+    // capacity, whatever the random footprint mix, and every
+    // admissible solve must complete.
+    for_all("service_capacity_accountant", |rng| {
+        let ndev = rng.range(1, 4);
+        let cap = rng.range(1024, 8192);
+        let node = SimNode::new_uniform(ndev, cap);
+        let svc = SolveService::new(node, rng.range(1, 4));
+        let jobs = rng.range(2, 8);
+        let cur = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        let mut max_fp = 0usize;
+        for _ in 0..jobs {
+            let bytes = rng.range(1, cap);
+            max_fp = max_fp.max(bytes);
+            let cur = cur.clone();
+            handles.push((
+                bytes,
+                svc.submit(Footprint::uniform(ndev, bytes), move || {
+                    cur.fetch_add(1, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(1));
+                    cur.fetch_sub(1, Ordering::SeqCst);
+                })
+                .unwrap(),
+            ));
+        }
+        for (_, h) in handles {
+            h.wait();
+        }
+        for (d, &pk) in svc.peak_reserved().iter().enumerate() {
+            assert!(pk <= cap, "device {d} over-admitted: reserved {pk} of {cap}");
+            assert!(pk >= max_fp, "largest admitted footprint must show in the peak");
+        }
+        assert_eq!(svc.pending(), 0);
+        assert_eq!(svc.in_flight(), 0);
+        assert_eq!(svc.reserved(), vec![0; ndev]);
+    });
+}
+
+#[test]
+fn service_runs_two_solves_in_flight_with_serial_identical_results() {
+    // Acceptance: >= 2 simultaneous in-flight solves, results bitwise
+    // equal to serial execution.
+    let ndev = 4;
+    let vram = 1usize << 26;
+    let node = SimNode::new_uniform(ndev, vram);
+    let svc = SolveService::new(node.clone(), 4);
+    let cur = Arc::new(AtomicUsize::new(0));
+    let peak = Arc::new(AtomicUsize::new(0));
+    let configs = [(24usize, 4usize, 1usize, 900u64), (28, 4, 2, 901), (20, 2, 1, 902), (24, 3, 2, 903)];
+    let handles: Vec<_> = configs
+        .iter()
+        .map(|&(n, tile, nrhs, seed)| {
+            let node2 = node.clone();
+            let cur = cur.clone();
+            let peak = peak.clone();
+            let fp = Footprint::for_routine("potrs", n, nrhs, tile, ndev, DType::F64).unwrap();
+            svc.submit(fp, move || {
+                let now = cur.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                // Hold the in-flight window open long enough for the
+                // other workers to join it.
+                std::thread::sleep(Duration::from_millis(30));
+                let out = one_solve::<f64>(&node2, n, tile, nrhs, seed);
+                cur.fetch_sub(1, Ordering::SeqCst);
+                out
+            })
+            .unwrap()
+        })
+        .collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.wait()).collect();
+    assert!(
+        peak.load(Ordering::SeqCst) >= 2,
+        "expected >= 2 simultaneous in-flight solves, saw {}",
+        peak.load(Ordering::SeqCst)
+    );
+    // Per-solve metrics came back, and the aggregate counters moved.
+    for (_, stats) in &results {
+        assert!(stats.exec >= Duration::from_millis(30));
+    }
+    let m = node.metrics().snapshot();
+    assert_eq!(m.service_completed, configs.len() as u64);
+    assert!(m.service_exec_ns > 0);
+    // Bitwise-identical to the same solves run serially on a fresh node.
+    let serial = SimNode::new_uniform(ndev, vram);
+    for (i, &(n, tile, nrhs, seed)) in configs.iter().enumerate() {
+        let (l_ref, x_ref) = one_solve::<f64>(&serial, n, tile, nrhs, seed);
+        let ((l, x), _) = &results[i];
+        assert_eq!(l.as_slice(), l_ref.as_slice(), "factor {i} diverged");
+        assert_eq!(x.as_slice(), x_ref.as_slice(), "solution {i} diverged");
+    }
 }
 
 #[test]
