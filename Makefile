@@ -7,11 +7,13 @@
 #   make test-xla   the artifact-gated XLA integration suite
 #   make artifacts  AOT-lower the Python kernels to HLO artifacts
 #   make bench      all benches   |   make e2e  end-to-end driver
+#   make bench-redist  redistribution bench in smoke/test mode (small
+#                      shapes, same asserted invariants — CI-friendly)
 
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test check clippy fmt python-tests test-xla bench e2e artifacts clean
+.PHONY: build test check clippy fmt python-tests test-xla bench bench-redist e2e artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -52,6 +54,11 @@ artifacts:
 
 bench:
 	$(CARGO) bench
+
+# The redistribution bench doubles as an integration test: smoke mode
+# shrinks the shapes but keeps every content/path assertion.
+bench-redist:
+	REDIST_BENCH_SMOKE=1 $(CARGO) bench --bench redistribution
 
 e2e:
 	$(CARGO) run --release --example e2e_driver

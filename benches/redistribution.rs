@@ -1,18 +1,27 @@
-//! Fig. 1 / §2.1: the 1D-cyclic redistribution itself.
+//! Fig. 1 / §2.1: the 1D-cyclic redistribution itself, plus the 2D
+//! tile-grid extension (§5 future work).
 //!
 //! Reports, per (N, T_A, devices): the permutation-cycle structure
 //! (count, longest cycle, columns moved, cross-device fraction), the
 //! measured in-place rotation throughput, and the projected NVLink
-//! time. The ablation at the bottom compares in-place cycles against
-//! the out-of-place fallback — the design choice §2.1 motivates.
+//! time. The ablation compares in-place cycles against the
+//! out-of-place fallback — the design choice §2.1 motivates. The 2D
+//! section at the bottom exercises the tile cycle walk (uniform regrid
+//! and 2D shard → 2D cyclic) and the generic 1D↔2D re-tiling path.
+//!
+//! `REDIST_BENCH_SMOKE=1` shrinks the shapes for `make bench-redist`
+//! (CI test mode); the asserted invariants are identical.
 
-use jaxmg::layout::{BlockCyclic1D, ContiguousBlock, Redistributor};
+use jaxmg::layout::{
+    BlockCyclic1D, BlockCyclic2D, ContiguousBlock, ContiguousGrid2D, Redistributor,
+};
 use jaxmg::linalg::Matrix;
 use jaxmg::prelude::*;
-use jaxmg::tile::{DistMatrix, Layout1D};
+use jaxmg::tile::{DistMatrix, Layout1D, LayoutKind};
 use std::time::Instant;
 
 fn main() {
+    let smoke = std::env::var_os("REDIST_BENCH_SMOKE").is_some();
     println!("== §2.1 redistribution: contiguous → 1D block-cyclic ==\n");
     println!(
         "{:>6} {:>5} {:>4} {:>8} {:>8} {:>8} {:>9} {:>11} {:>10}",
@@ -20,11 +29,11 @@ fn main() {
     );
     for &ndev in &[2usize, 4, 8] {
         for &t in &[16usize, 64, 128] {
-            let n = 1024;
+            let n = if smoke { 256 } else { 1024 };
             if n % (t * ndev) != 0 {
                 continue;
             }
-            let rows = 1024; // one square matrix worth of columns
+            let rows = if smoke { 256 } else { 1024 }; // one square matrix worth of columns
             let node = SimNode::new_uniform(ndev, 1 << 30);
             let a = Matrix::<f32>::random(rows, n, 42);
             let contig = Layout1D::Contiguous(ContiguousBlock::new(n, ndev).unwrap());
@@ -75,4 +84,47 @@ fn main() {
         assert_eq!(dm.gather().unwrap(), a);
     }
     println!("\n(in-place peak overhead = 2 staging columns; out-of-place = a full second panel set)");
+
+    // ---- 2D tile-grid redistribution (§5 future work) ----------------
+    println!("\n== 2D tile grid: tile cycles + 1D↔2D re-tiling ==\n");
+    println!(
+        "{:>22} {:>6} {:>6} {:>8} {:>8} {:>8} {:>12} {:>9}",
+        "conversion", "N", "tile", "cycles", "tiles", "x-dev", "path", "wall[ms]"
+    );
+    let n2 = if smoke { 256 } else { 1024 };
+    let tile = if smoke { 32 } else { 64 };
+    let node = SimNode::new_uniform(4, 1 << 30);
+    let a = Matrix::<f32>::random(n2, n2, 99);
+
+    let shard2d = LayoutKind::GridContig(ContiguousGrid2D::new(n2, n2, tile, tile, 2, 2).unwrap());
+    let grid22 = LayoutKind::Grid(BlockCyclic2D::new(n2, n2, tile, tile, 2, 2).unwrap());
+    let grid41 = LayoutKind::Grid(BlockCyclic2D::new(n2, n2, tile, tile, 4, 1).unwrap());
+    let cyc1d = LayoutKind::BlockCyclic(BlockCyclic1D::new(n2, tile, 4).unwrap());
+
+    let mut dm = DistMatrix::scatter(&node, &a, shard2d).unwrap();
+    for (label, target, expect_in_place) in [
+        ("2D shard → 2D cyclic", grid22, true),
+        ("2×2 → 4×1 regrid", grid41, true),
+        ("4×1 → 2×2 regrid", grid22, true),
+        ("2D → 1D re-tiling", cyc1d, false),
+        ("1D → 2D re-tiling", grid22, false),
+    ] {
+        let t0 = Instant::now();
+        let plan = Redistributor::convert(&mut dm, target).unwrap();
+        let wall = t0.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "{label:>22} {n2:>6} {tile:>6} {:>8} {:>8} {:>8} {:>12} {wall:>9.2}",
+            plan.nontrivial_cycles,
+            plan.tiles_moved,
+            plan.tiles_cross_device,
+            if plan.in_place { "in-place" } else { "out-of-place" },
+        );
+        assert_eq!(
+            plan.in_place, expect_in_place,
+            "{label}: expected in_place={expect_in_place}"
+        );
+        assert_eq!(dm.gather().unwrap(), a, "{label} corrupted content");
+    }
+    println!("\n(tile cycles rotate whole contiguous tiles through 2 tile-sized staging buffers;");
+    println!(" re-tilings move per-column tile-row segments out of place)");
 }

@@ -212,6 +212,38 @@ impl Footprint {
         Ok(Self::uniform(ndev, bytes + slack))
     }
 
+    /// Workspace-model footprint for a routine over a **2D tile grid**
+    /// ([`crate::layout::BlockCyclic2D`]): the matrix term uses each
+    /// device's *exact* `local_rows × local_cols` shard (ragged edge
+    /// tiles included), so per-device reservations differ across the
+    /// grid instead of assuming the flat `n·ceil(n/ndev)` column shard.
+    /// Scratch terms mirror [`Footprint::for_routine`]: `panel_terms`
+    /// broadcast panels of `n × tile_c` plus the replicated RHS.
+    pub fn for_grid(
+        routine: &str,
+        lay: &crate::layout::BlockCyclic2D,
+        nrhs: usize,
+        dtype: DType,
+    ) -> Result<Self> {
+        use crate::layout::MatrixLayout;
+        let (matrix_copies, panel_terms) = match routine {
+            "potrf" => (1usize, 1usize),
+            "potrs" => (1, 1),
+            "potri" => (2, 2),
+            // matrix + eigenvector matrix + 2× back-transform scratch.
+            "syevd" => (4, 4),
+            other => return Err(Error::config(format!("unknown routine {other:?}"))),
+        };
+        let e = dtype.size_of();
+        let (_, n) = lay.shape();
+        let panel = panel_terms * n * lay.tile_c() * e;
+        let rhs = if routine == "potrs" { n * nrhs * e } else { 0 };
+        let per_device = (0..lay.num_devices())
+            .map(|d| matrix_copies * lay.local_elems(d) * e + panel + rhs)
+            .collect();
+        Ok(Self::per_device(per_device))
+    }
+
     /// Number of devices covered.
     pub fn devices(&self) -> usize {
         self.per_device.len()
@@ -667,5 +699,44 @@ mod tests {
         let real_peak = 26 * 15 * 8 + 26 * 5 * 8; // matrix panel + broadcast scratch
         assert!(ragged.bytes(0) >= real_peak, "{} < {real_peak}", ragged.bytes(0));
         assert!(Footprint::for_routine("getrf", 8, 1, 2, 2, DType::F32).is_err());
+    }
+
+    #[test]
+    fn footprint_for_grid_uses_exact_shards() {
+        use crate::layout::{BlockCyclic2D, MatrixLayout};
+        // 10×10 in 4×4 tiles on a 2×2 grid: shard shapes differ across
+        // the grid (6×6, 6×4, 4×6, 4×4 local blocks).
+        let lay = BlockCyclic2D::new(10, 10, 4, 4, 2, 2).unwrap();
+        let fp = Footprint::for_grid("syevd", &lay, 0, DType::F64).unwrap();
+        assert_eq!(fp.devices(), 4);
+        let panel = 4 * 10 * 4 * 8; // panel_terms · n · tile_c · e
+        for d in 0..4 {
+            assert_eq!(fp.bytes(d), 4 * lay.local_elems(d) * 8 + panel);
+        }
+        assert!(fp.bytes(0) > fp.bytes(3), "corner shards must dominate");
+        // potrs adds the replicated RHS; potrf does not.
+        let fs = Footprint::for_grid("potrs", &lay, 3, DType::F64).unwrap();
+        let ff = Footprint::for_grid("potrf", &lay, 3, DType::F64).unwrap();
+        assert_eq!(fs.bytes(0), ff.bytes(0) + 10 * 3 * 8);
+        assert!(Footprint::for_grid("getrf", &lay, 0, DType::F64).is_err());
+    }
+
+    #[test]
+    fn grid_footprint_admits_real_grid_solve() {
+        // The declared 2D footprint must dominate the actual panel
+        // allocation of a grid-scattered matrix.
+        use crate::layout::BlockCyclic2D;
+        use crate::linalg::Matrix;
+        use crate::tile::{DistMatrix, LayoutKind};
+        let n = 12;
+        let lay = BlockCyclic2D::new(n, n, 4, 4, 2, 2).unwrap();
+        let fp = Footprint::for_grid("potrf", &lay, 0, DType::F64).unwrap();
+        let node = SimNode::new_uniform(4, 1 << 22);
+        let a = Matrix::<f64>::spd_random(n, 77);
+        let dm = DistMatrix::scatter(&node, &a, LayoutKind::Grid(lay)).unwrap();
+        for (d, rep) in node.memory_reports().iter().enumerate() {
+            assert!(fp.bytes(d) >= rep.used, "footprint under-declares device {d}");
+        }
+        drop(dm);
     }
 }

@@ -29,6 +29,11 @@ pub trait ColumnLayout {
     /// Flat *storage slot* of a `(device, local)` pair: devices
     /// concatenated in order. The permutation in `cycles.rs` is over
     /// these slots.
+    ///
+    /// This default is an `O(ndev)` scan kept for one-off queries; the
+    /// redistribution planning hot path precomputes a
+    /// [`super::SlotMap`] (per-device prefix sums + dense inverse) so
+    /// every slot lookup is `O(1)`.
     fn slot_of(&self, d: usize, local: usize) -> usize {
         let mut base = 0;
         for dd in 0..d {

@@ -2,10 +2,25 @@
 //!
 //! "To apply this redistribution efficiently in-place, we decompose the
 //! column-index mapping into disjoint permutation cycles" (paper §2.1).
-//! A cycle `[s₀, s₁, ..., s_{m−1}]` means: the column content in slot
-//! `sᵢ` must move to slot `s_{i+1 mod m}`.
+//! A cycle `[s₀, s₁, ..., s_{m−1}]` means: the content in slot `sᵢ`
+//! must move to slot `s_{i+1 mod m}`.
+//!
+//! Two slot granularities share the machinery:
+//!
+//! * **column slots** over a [`ColumnLayout`] (the original 1D path),
+//!   via [`permutation_between`];
+//! * **tile slots** over a [`MatrixLayout`] 2D tile grid, via
+//!   [`tile_permutation_between`] — one slot per `tile_r × tile_c`
+//!   tile, devices concatenated in order, tiles in storage order.
+//!
+//! Both build a precomputed [`SlotMap`] / [`TileSlotMap`] first: slot
+//! arithmetic via per-device prefix sums and a dense inverse table, so
+//! permutation construction is `O(1)` per slot instead of the old
+//! `O(ndev)` trait-default scan — this is on the redistribution
+//! planning hot path.
 
 use super::block_cyclic::ColumnLayout;
+use super::grid::MatrixLayout;
 use crate::error::{Error, Result};
 
 /// One rotation cycle over storage slots.
@@ -30,6 +45,56 @@ impl Cycle {
     /// Never empty by construction.
     pub fn is_empty(&self) -> bool {
         self.slots.is_empty()
+    }
+}
+
+/// Precomputed column-slot arithmetic for one [`ColumnLayout`].
+///
+/// The trait's default `slot_of`/`slot_to_place` scan the per-device
+/// column counts on every call (`O(ndev)` each). Building this map once
+/// per layout (`O(n)`) makes both directions `O(1)` per slot, which is
+/// what permutation construction and the cycle walk want.
+pub struct SlotMap {
+    /// `prefix[d]` = total columns on devices `< d`; `prefix[ndev]` = n.
+    prefix: Vec<usize>,
+    /// Dense inverse: `place[slot] = (device, local)`.
+    place: Vec<(usize, usize)>,
+}
+
+impl SlotMap {
+    /// Build the map for `layout`.
+    pub fn new(layout: &dyn ColumnLayout) -> Self {
+        let ndev = layout.num_devices();
+        let mut prefix = Vec::with_capacity(ndev + 1);
+        prefix.push(0);
+        for d in 0..ndev {
+            prefix.push(prefix[d] + layout.local_cols(d));
+        }
+        let total = prefix[ndev];
+        let mut place = Vec::with_capacity(total);
+        for d in 0..ndev {
+            for loc in 0..(prefix[d + 1] - prefix[d]) {
+                place.push((d, loc));
+            }
+        }
+        SlotMap { prefix, place }
+    }
+
+    /// Total slots (columns) covered.
+    pub fn total(&self) -> usize {
+        self.place.len()
+    }
+
+    /// Flat storage slot of `(device, local)` — `O(1)`.
+    #[inline]
+    pub fn slot_of(&self, d: usize, local: usize) -> usize {
+        self.prefix[d] + local
+    }
+
+    /// Inverse of [`SlotMap::slot_of`] — `O(1)`.
+    #[inline]
+    pub fn place_of(&self, slot: usize) -> (usize, usize) {
+        self.place[slot]
     }
 }
 
@@ -60,12 +125,125 @@ pub fn permutation_between(src: &dyn ColumnLayout, dst: &dyn ColumnLayout) -> Re
             )));
         }
     }
+    let smap = SlotMap::new(src);
+    let dmap = SlotMap::new(dst);
     let n = src.n_cols();
     let mut perm = vec![usize::MAX; n];
     for g in 0..n {
         let (sd, sl) = src.place(g);
         let (dd, dl) = dst.place(g);
-        perm[src.slot_of(sd, sl)] = dst.slot_of(dd, dl);
+        perm[smap.slot_of(sd, sl)] = dmap.slot_of(dd, dl);
+    }
+    debug_assert!(perm.iter().all(|&p| p != usize::MAX));
+    Ok(perm)
+}
+
+/// Precomputed tile-slot arithmetic for one [`MatrixLayout`]: one slot
+/// per tile, devices concatenated in ordinal order, tiles in each
+/// device's storage order. The 2D analogue of [`SlotMap`].
+pub struct TileSlotMap {
+    /// `prefix[d]` = tiles on devices `< d`; `prefix[ndev]` = total.
+    prefix: Vec<usize>,
+    /// Dense inverse: `tile[slot] = (device, local ordinal, tr, tc)`.
+    tiles: Vec<(usize, usize, usize, usize)>,
+}
+
+impl TileSlotMap {
+    /// Build the map for `layout`.
+    pub fn new(layout: &dyn MatrixLayout) -> Self {
+        let ndev = layout.num_devices();
+        let mut prefix = Vec::with_capacity(ndev + 1);
+        prefix.push(0);
+        for d in 0..ndev {
+            prefix.push(prefix[d] + layout.tiles_on(d));
+        }
+        let mut tiles = Vec::with_capacity(prefix[ndev]);
+        for d in 0..ndev {
+            for ord in 0..(prefix[d + 1] - prefix[d]) {
+                let (tr, tc) = layout.tile_at(d, ord);
+                tiles.push((d, ord, tr, tc));
+            }
+        }
+        TileSlotMap { prefix, tiles }
+    }
+
+    /// Total tile slots covered.
+    pub fn total(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// Flat tile slot of `(device, local ordinal)` — `O(1)`.
+    #[inline]
+    pub fn slot_of(&self, d: usize, ordinal: usize) -> usize {
+        self.prefix[d] + ordinal
+    }
+
+    /// `(device, local ordinal)` stored at `slot` — `O(1)`.
+    #[inline]
+    pub fn place_of(&self, slot: usize) -> (usize, usize) {
+        let (d, ord, _, _) = self.tiles[slot];
+        (d, ord)
+    }
+
+    /// Global `(tile row, tile col)` stored at `slot` — `O(1)`.
+    #[inline]
+    pub fn tile_of(&self, slot: usize) -> (usize, usize) {
+        let (_, _, tr, tc) = self.tiles[slot];
+        (tr, tc)
+    }
+}
+
+/// The tile-slot permutation taking tile layout `src` to `dst`:
+/// `perm[s]` is the destination tile slot of the tile currently stored
+/// in slot `s` — the 2D generalization of [`permutation_between`],
+/// with tiles instead of columns as the movement unit.
+///
+/// Fails unless the two layouts share the matrix shape, the tile shape
+/// and the device count, and give every device the same number of
+/// tiles (the in-place precondition; callers fall back to the generic
+/// out-of-place conversion otherwise — in particular for 1D↔2D
+/// re-tilings where the movement units differ).
+pub fn tile_permutation_between(
+    src: &dyn MatrixLayout,
+    dst: &dyn MatrixLayout,
+) -> Result<Vec<usize>> {
+    if src.shape() != dst.shape() {
+        return Err(Error::layout(format!(
+            "layout shapes differ: {:?} vs {:?}",
+            src.shape(),
+            dst.shape()
+        )));
+    }
+    if src.tile_shape() != dst.tile_shape() {
+        return Err(Error::layout(format!(
+            "tile shapes differ: {:?} vs {:?} — re-tiling cannot be a tile permutation",
+            src.tile_shape(),
+            dst.tile_shape()
+        )));
+    }
+    if src.num_devices() != dst.num_devices() {
+        return Err(Error::layout("layouts span different device counts"));
+    }
+    for d in 0..src.num_devices() {
+        if src.tiles_on(d) != dst.tiles_on(d) {
+            return Err(Error::layout(format!(
+                "in-place tile redistribution needs matching per-device tile counts; \
+                 device {d} holds {} vs {}",
+                src.tiles_on(d),
+                dst.tiles_on(d)
+            )));
+        }
+    }
+    let smap = TileSlotMap::new(src);
+    let dmap = TileSlotMap::new(dst);
+    let (tr_n, tc_n) = src.tile_grid();
+    let mut perm = vec![usize::MAX; smap.total()];
+    for tr in 0..tr_n {
+        for tc in 0..tc_n {
+            let s = smap.slot_of(src.owner_of_tile(tr, tc), src.local_tile_ordinal(tr, tc));
+            let t = dmap.slot_of(dst.owner_of_tile(tr, tc), dst.local_tile_ordinal(tr, tc));
+            perm[s] = t;
+        }
     }
     debug_assert!(perm.iter().all(|&p| p != usize::MAX));
     Ok(perm)
@@ -182,5 +360,64 @@ mod tests {
         let dst = BlockCyclic1D::new(12, 4, 3).unwrap();
         let perm = permutation_between(&src, &dst).unwrap();
         assert_eq!(perm, (0..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn slot_map_matches_trait_defaults() {
+        let l = BlockCyclic1D::new(17, 3, 4).unwrap();
+        let map = SlotMap::new(&l);
+        assert_eq!(map.total(), 17);
+        for s in 0..map.total() {
+            let (d, loc) = map.place_of(s);
+            assert_eq!((d, loc), l.slot_to_place(s));
+            assert_eq!(map.slot_of(d, loc), l.slot_of(d, loc));
+        }
+    }
+
+    #[test]
+    fn tile_permutation_covers_all_tile_slots_once() {
+        use crate::layout::{BlockCyclic2D, ContiguousGrid2D};
+        let src = ContiguousGrid2D::new(16, 24, 4, 4, 2, 2).unwrap();
+        let dst = BlockCyclic2D::new(16, 24, 4, 4, 2, 2).unwrap();
+        let perm = tile_permutation_between(&src, &dst).unwrap();
+        assert_eq!(perm.len(), 4 * 6);
+        let cycles = cycle_decomposition(&perm);
+        let mut count = vec![0usize; perm.len()];
+        for c in &cycles {
+            for &s in &c.slots {
+                count[s] += 1;
+            }
+        }
+        assert!(count.iter().all(|&c| c == 1), "cycles must partition the tile slots");
+    }
+
+    #[test]
+    fn tile_permutation_sends_tiles_home() {
+        use crate::layout::BlockCyclic2D;
+        // Regrid 2×2 ↔ 4×1 over the same tiling: a genuine 2D shuffle.
+        let src = BlockCyclic2D::new(16, 16, 4, 4, 2, 2).unwrap();
+        let dst = BlockCyclic2D::new(16, 16, 4, 4, 4, 1).unwrap();
+        let perm = tile_permutation_between(&src, &dst).unwrap();
+        let smap = TileSlotMap::new(&src);
+        let dmap = TileSlotMap::new(&dst);
+        for s in 0..perm.len() {
+            let (tr, tc) = smap.tile_of(s);
+            let (dd, dord) = dmap.place_of(perm[s]);
+            assert_eq!(dst.owner_of_tile(tr, tc), dd);
+            assert_eq!(dst.local_tile_ordinal(tr, tc), dord);
+        }
+    }
+
+    #[test]
+    fn tile_permutation_rejects_incompatible_layouts() {
+        use crate::layout::BlockCyclic2D;
+        let a = BlockCyclic2D::new(16, 16, 4, 4, 2, 2).unwrap();
+        let b = BlockCyclic2D::new(16, 16, 2, 4, 2, 2).unwrap(); // different tiling
+        assert!(tile_permutation_between(&a, &b).is_err());
+        let c = BlockCyclic2D::new(16, 12, 4, 4, 2, 2).unwrap(); // different shape
+        assert!(tile_permutation_between(&a, &c).is_err());
+        let d = BlockCyclic2D::new(16, 16, 4, 4, 4, 1).unwrap();
+        // 2×2 vs 4×1 over a 4×4 tile grid: counts match → Ok.
+        assert!(tile_permutation_between(&a, &d).is_ok());
     }
 }

@@ -1,0 +1,565 @@
+//! 2D tile-grid layouts: a matrix dealt as `tile_r × tile_c` tiles onto
+//! a `P × Q` device grid.
+//!
+//! The paper names the 2D block-cyclic distribution as the key piece of
+//! future work (§5): cuSOLVERMg's 1D column layout leaves `syevd`'s
+//! tridiagonal reduction row-bound — every device owns *whole rows* of
+//! its columns, so the per-step Householder collectives carry full
+//! length-`n` vectors through one owner. On a `P × Q` grid each vector
+//! is born distributed across `P` row blocks and the collectives run as
+//! `P` parallel row-group transfers of `n/P` words (ScaLAPACK's classic
+//! argument; Dongarra, van de Geijn & Walker 1994).
+//!
+//! The model is a Cartesian product of two 1D *tile deals*
+//! ([`TileDim`]): rows grouped into `tile_r`-high tiles dealt to `P`
+//! grid rows, columns into `tile_c`-wide tiles dealt to `Q` grid
+//! columns; tile `(tr, tc)` lives on device `(row_owner(tr),
+//! col_owner(tc))`. Two deals per dimension cover the system's needs:
+//!
+//! * **cyclic** — round-robin tiles, the load-balanced compute layout
+//!   ([`BlockCyclic2D`], the `cusolverMg` future-work analogue);
+//! * **blocked** — contiguous runs of tiles, the JAX 2D-mesh shard
+//!   input layout ([`ContiguousGrid2D`]).
+//!
+//! **Storage contract.** Device `(r, c)` holds one allocation of
+//! `local_rows × local_cols` scalars in *tile-major* order: local tile
+//! columns left to right, tiles within a tile column top to bottom,
+//! each tile itself column-major and contiguous. With `P = 1` and
+//! `tile_r ≥ m` every tile is a full-height group of `tile_c` columns,
+//! so the storage degenerates **bitwise** to the 1D column-panel
+//! contract of [`super::ColumnLayout`] — which is how the existing 1D
+//! layouts are subsumed as the `P = 1` special case and the 1D solvers
+//! keep running unchanged on 2D handles (see
+//! [`crate::tile::LayoutKind::compat_1d`]).
+
+use super::block_cyclic::BlockCyclic1D;
+use crate::error::{Error, Result};
+
+/// How tiles along one dimension are dealt to that dimension's devices.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+enum Deal {
+    /// Round-robin: tile `t` → device `t mod nd`.
+    Cyclic,
+    /// Contiguous blocks of tiles, sizes differing by at most one.
+    Blocked,
+}
+
+/// One dimension of a tile-grid distribution: `extent` indices grouped
+/// into tiles of `tile`, dealt to `nd` devices. All 2D layout
+/// arithmetic factors through two of these (rows × columns).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct TileDim {
+    extent: usize,
+    tile: usize,
+    nd: usize,
+    deal: Deal,
+}
+
+impl TileDim {
+    fn new(extent: usize, tile: usize, nd: usize, deal: Deal) -> Result<Self> {
+        if tile == 0 {
+            return Err(Error::layout("tile size must be positive"));
+        }
+        if nd == 0 {
+            return Err(Error::layout("need at least one device along each grid dimension"));
+        }
+        Ok(TileDim { extent, tile, nd, deal })
+    }
+
+    /// Round-robin tile deal.
+    pub fn cyclic(extent: usize, tile: usize, nd: usize) -> Result<Self> {
+        Self::new(extent, tile, nd, Deal::Cyclic)
+    }
+
+    /// Contiguous-block tile deal.
+    pub fn blocked(extent: usize, tile: usize, nd: usize) -> Result<Self> {
+        Self::new(extent, tile, nd, Deal::Blocked)
+    }
+
+    /// Total indices along this dimension.
+    pub fn extent(&self) -> usize {
+        self.extent
+    }
+
+    /// Tile length (the last tile may be short).
+    pub fn tile(&self) -> usize {
+        self.tile
+    }
+
+    /// Devices along this dimension.
+    pub fn devices(&self) -> usize {
+        self.nd
+    }
+
+    /// Number of tiles (the last may be short).
+    pub fn num_tiles(&self) -> usize {
+        self.extent.div_ceil(self.tile)
+    }
+
+    /// Length of tile `t`.
+    pub fn tile_len(&self, t: usize) -> usize {
+        debug_assert!(t < self.num_tiles());
+        if (t + 1) * self.tile <= self.extent {
+            self.tile
+        } else {
+            self.extent - t * self.tile
+        }
+    }
+
+    /// First index of tile `t`.
+    pub fn tile_start(&self, t: usize) -> usize {
+        t * self.tile
+    }
+
+    /// First tile of device `d`'s block (blocked deal arithmetic).
+    fn block_start(&self, d: usize) -> usize {
+        let nt = self.num_tiles();
+        let base = nt / self.nd;
+        let rem = nt % self.nd;
+        d * base + d.min(rem)
+    }
+
+    /// Owning device of tile `t`.
+    pub fn owner(&self, t: usize) -> usize {
+        debug_assert!(t < self.num_tiles());
+        match self.deal {
+            Deal::Cyclic => t % self.nd,
+            Deal::Blocked => {
+                let nt = self.num_tiles();
+                let base = nt / self.nd;
+                let rem = nt % self.nd;
+                let big = (base + 1) * rem;
+                if t < big {
+                    t / (base + 1)
+                } else {
+                    rem + (t - big) / base.max(1)
+                }
+            }
+        }
+    }
+
+    /// Local tile ordinal of tile `t` on its owner (ascending in `t`).
+    pub fn local(&self, t: usize) -> usize {
+        match self.deal {
+            Deal::Cyclic => t / self.nd,
+            Deal::Blocked => t - self.block_start(self.owner(t)),
+        }
+    }
+
+    /// Number of tiles owned by device `d`.
+    pub fn count(&self, d: usize) -> usize {
+        debug_assert!(d < self.nd);
+        let nt = self.num_tiles();
+        match self.deal {
+            Deal::Cyclic => (nt + self.nd - 1 - d) / self.nd,
+            Deal::Blocked => self.block_start(d + 1).min(nt) - self.block_start(d),
+        }
+    }
+
+    /// Inverse of [`TileDim::local`]: the `l`-th tile of device `d`.
+    pub fn at(&self, d: usize, l: usize) -> usize {
+        debug_assert!(l < self.count(d));
+        match self.deal {
+            Deal::Cyclic => l * self.nd + d,
+            Deal::Blocked => self.block_start(d) + l,
+        }
+    }
+
+    /// Total indices stored on device `d` (`numroc` along one axis).
+    /// Only the global last tile can be short, and it is always its
+    /// owner's local last, so the closed form needs no loop.
+    pub fn local_extent(&self, d: usize) -> usize {
+        let c = self.count(d);
+        if c == 0 {
+            return 0;
+        }
+        let last = self.num_tiles() - 1;
+        if self.owner(last) == d {
+            (c - 1) * self.tile + self.tile_len(last)
+        } else {
+            c * self.tile
+        }
+    }
+}
+
+/// A 2D tile placement: `(row, col) → (device, local storage offset)`.
+///
+/// Everything is derived from the two [`TileDim`] deals; implementors
+/// only supply those. The device grid is row-major: grid coordinate
+/// `(r, c)` is device ordinal `r·Q + c`.
+pub trait MatrixLayout {
+    /// The row-dimension tile deal.
+    fn row_dim(&self) -> TileDim;
+    /// The column-dimension tile deal.
+    fn col_dim(&self) -> TileDim;
+
+    /// `(m, n)` matrix shape.
+    fn shape(&self) -> (usize, usize) {
+        (self.row_dim().extent(), self.col_dim().extent())
+    }
+
+    /// `(tile_r, tile_c)` tile shape.
+    fn tile_shape(&self) -> (usize, usize) {
+        (self.row_dim().tile(), self.col_dim().tile())
+    }
+
+    /// `(P, Q)` device grid shape.
+    fn grid(&self) -> (usize, usize) {
+        (self.row_dim().devices(), self.col_dim().devices())
+    }
+
+    /// Total devices (`P·Q`).
+    fn num_devices(&self) -> usize {
+        let (p, q) = self.grid();
+        p * q
+    }
+
+    /// Device ordinal of grid coordinate `(r, c)`.
+    fn device_of(&self, r: usize, c: usize) -> usize {
+        r * self.grid().1 + c
+    }
+
+    /// Grid coordinate of device ordinal `d`.
+    fn device_coords(&self, d: usize) -> (usize, usize) {
+        let q = self.grid().1;
+        (d / q, d % q)
+    }
+
+    /// `(tile rows, tile cols)` of the global tile grid.
+    fn tile_grid(&self) -> (usize, usize) {
+        (self.row_dim().num_tiles(), self.col_dim().num_tiles())
+    }
+
+    /// Actual `(height, width)` of tile `(tr, tc)` (edges may be short).
+    fn tile_dims(&self, tr: usize, tc: usize) -> (usize, usize) {
+        (self.row_dim().tile_len(tr), self.col_dim().tile_len(tc))
+    }
+
+    /// Owning device of tile `(tr, tc)`.
+    fn owner_of_tile(&self, tr: usize, tc: usize) -> usize {
+        self.device_of(self.row_dim().owner(tr), self.col_dim().owner(tc))
+    }
+
+    /// Storage ordinal of tile `(tr, tc)` on its owner: local tile
+    /// columns left to right, top to bottom within a tile column.
+    fn local_tile_ordinal(&self, tr: usize, tc: usize) -> usize {
+        let rd = self.row_dim();
+        let cd = self.col_dim();
+        cd.local(tc) * rd.count(rd.owner(tr)) + rd.local(tr)
+    }
+
+    /// Inverse of [`MatrixLayout::local_tile_ordinal`] for device `d`.
+    fn tile_at(&self, d: usize, ordinal: usize) -> (usize, usize) {
+        let (r, c) = self.device_coords(d);
+        let rd = self.row_dim();
+        let cd = self.col_dim();
+        let ltr = rd.count(r);
+        debug_assert!(ltr > 0, "device owns no tile rows");
+        (rd.at(r, ordinal % ltr), cd.at(c, ordinal / ltr))
+    }
+
+    /// Number of tiles stored on device `d`.
+    fn tiles_on(&self, d: usize) -> usize {
+        let (r, c) = self.device_coords(d);
+        self.row_dim().count(r) * self.col_dim().count(c)
+    }
+
+    /// `(local_rows, local_cols)` stored on device `d`.
+    fn local_shape(&self, d: usize) -> (usize, usize) {
+        let (r, c) = self.device_coords(d);
+        (self.row_dim().local_extent(r), self.col_dim().local_extent(c))
+    }
+
+    /// Scalars stored on device `d`.
+    fn local_elems(&self, d: usize) -> usize {
+        let (lr, lc) = self.local_shape(d);
+        lr * lc
+    }
+
+    /// Whether every tile is full-sized (no ragged edge tiles) — the
+    /// precondition for the in-place tile cycle walk.
+    fn uniform_tiles(&self) -> bool {
+        let (m, n) = self.shape();
+        let (tr, tc) = self.tile_shape();
+        m % tr == 0 && n % tc == 0
+    }
+
+    /// Storage offset (in scalars) of the first element of tile
+    /// `(tr, tc)` within its owner's allocation. Tiles above it in the
+    /// same local tile column are all full-height (a short tile row is
+    /// globally last, hence locally last), so the prefix is closed-form.
+    fn tile_elem_offset(&self, tr: usize, tc: usize) -> usize {
+        let rd = self.row_dim();
+        let cd = self.col_dim();
+        let r = rd.owner(tr);
+        rd.local_extent(r) * (cd.local(tc) * cd.tile())
+            + rd.local(tr) * rd.tile() * cd.tile_len(tc)
+    }
+
+    /// `(device, storage offset in scalars)` of element `(i, j)`.
+    fn place_elem(&self, i: usize, j: usize) -> (usize, usize) {
+        let rd = self.row_dim();
+        let cd = self.col_dim();
+        let (tr, ii) = (i / rd.tile(), i % rd.tile());
+        let (tc, jj) = (j / cd.tile(), j % cd.tile());
+        let d = self.owner_of_tile(tr, tc);
+        let off = self.tile_elem_offset(tr, tc) + jj * rd.tile_len(tr) + ii;
+        (d, off)
+    }
+}
+
+/// The ScaLAPACK-style 2D block-cyclic deal — the compute layout the
+/// paper lists as future work. `P = 1` with `tile_r ≥ m` reduces to
+/// [`BlockCyclic1D`] with bitwise-identical storage.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct BlockCyclic2D {
+    rows: TileDim,
+    cols: TileDim,
+}
+
+impl BlockCyclic2D {
+    /// New `m × n` matrix in `tile_r × tile_c` tiles on a `p × q` grid.
+    pub fn new(m: usize, n: usize, tile_r: usize, tile_c: usize, p: usize, q: usize) -> Result<Self> {
+        Ok(BlockCyclic2D {
+            rows: TileDim::cyclic(m, tile_r, p)?,
+            cols: TileDim::cyclic(n, tile_c, q)?,
+        })
+    }
+
+    /// Matrix rows.
+    pub fn rows(&self) -> usize {
+        self.rows.extent()
+    }
+
+    /// Matrix columns.
+    pub fn cols(&self) -> usize {
+        self.cols.extent()
+    }
+
+    /// Tile height.
+    pub fn tile_r(&self) -> usize {
+        self.rows.tile()
+    }
+
+    /// Tile width.
+    pub fn tile_c(&self) -> usize {
+        self.cols.tile()
+    }
+
+    /// Grid rows `P`.
+    pub fn p(&self) -> usize {
+        self.rows.devices()
+    }
+
+    /// Grid columns `Q`.
+    pub fn q(&self) -> usize {
+        self.cols.devices()
+    }
+
+    /// The equivalent 1D column layout when this grid has a single row
+    /// of full-height tiles (`P = 1`, `tile_r ≥ m`) — the compatibility
+    /// path the 1D solvers run on.
+    pub fn as_column_layout(&self) -> Option<BlockCyclic1D> {
+        if self.p() == 1 && self.tile_r() >= self.rows().max(1) {
+            BlockCyclic1D::new(self.cols(), self.tile_c(), self.q()).ok()
+        } else {
+            None
+        }
+    }
+}
+
+impl MatrixLayout for BlockCyclic2D {
+    fn row_dim(&self) -> TileDim {
+        self.rows
+    }
+    fn col_dim(&self) -> TileDim {
+        self.cols
+    }
+}
+
+/// The 2D-mesh shard input layout: contiguous blocks of tiles per grid
+/// row/column — what `NamedSharding(mesh2d, P("x", "y"))` hands the
+/// backend, tile-granular.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct ContiguousGrid2D {
+    rows: TileDim,
+    cols: TileDim,
+}
+
+impl ContiguousGrid2D {
+    /// New `m × n` matrix in `tile_r × tile_c` tiles, blocked onto a
+    /// `p × q` grid.
+    pub fn new(m: usize, n: usize, tile_r: usize, tile_c: usize, p: usize, q: usize) -> Result<Self> {
+        Ok(ContiguousGrid2D {
+            rows: TileDim::blocked(m, tile_r, p)?,
+            cols: TileDim::blocked(n, tile_c, q)?,
+        })
+    }
+}
+
+impl MatrixLayout for ContiguousGrid2D {
+    fn row_dim(&self) -> TileDim {
+        self.rows
+    }
+    fn col_dim(&self) -> TileDim {
+        self.cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::ColumnLayout;
+
+    /// Every element maps to exactly one (device, offset) pair, offsets
+    /// tile the local allocations exactly, and tile ordinals invert.
+    fn check_grid_bijection(l: &dyn MatrixLayout) {
+        let (m, n) = l.shape();
+        let nd = l.num_devices();
+        let mut seen: Vec<Vec<bool>> = (0..nd).map(|d| vec![false; l.local_elems(d)]).collect();
+        for j in 0..n {
+            for i in 0..m {
+                let (d, off) = l.place_elem(i, j);
+                assert!(d < nd, "device {d} out of range");
+                assert!(off < seen[d].len(), "offset {off} past local_elems on dev {d}");
+                assert!(!seen[d][off], "element ({i},{j}) collides on dev {d} at {off}");
+                seen[d][off] = true;
+            }
+        }
+        for (d, s) in seen.iter().enumerate() {
+            assert!(s.iter().all(|&b| b), "holes in device {d}'s storage");
+        }
+        // Tile ordinals are a bijection per device.
+        let (tr_n, tc_n) = l.tile_grid();
+        let mut counts = vec![0usize; nd];
+        for tr in 0..tr_n {
+            for tc in 0..tc_n {
+                let d = l.owner_of_tile(tr, tc);
+                let ord = l.local_tile_ordinal(tr, tc);
+                assert_eq!(l.tile_at(d, ord), (tr, tc));
+                counts[d] += 1;
+            }
+        }
+        for d in 0..nd {
+            assert_eq!(counts[d], l.tiles_on(d), "tiles_on mismatch on dev {d}");
+        }
+        let total: usize = (0..nd).map(|d| l.local_elems(d)).sum();
+        assert_eq!(total, m * n);
+    }
+
+    #[test]
+    fn block_cyclic_2d_bijection_even() {
+        let l = BlockCyclic2D::new(16, 16, 4, 4, 2, 2).unwrap();
+        check_grid_bijection(&l);
+    }
+
+    #[test]
+    fn block_cyclic_2d_bijection_ragged() {
+        for (m, n, tr, tc, p, q) in [
+            (10, 14, 4, 3, 2, 2),
+            (7, 5, 3, 2, 3, 2),
+            (9, 9, 2, 5, 2, 3),
+            (1, 1, 1, 1, 1, 1),
+            (5, 8, 8, 2, 1, 4),
+            (12, 6, 5, 7, 4, 1),
+        ] {
+            let l = BlockCyclic2D::new(m, n, tr, tc, p, q).unwrap();
+            check_grid_bijection(&l);
+        }
+    }
+
+    #[test]
+    fn contiguous_grid_bijection() {
+        for (m, n, tr, tc, p, q) in [(12, 12, 2, 2, 2, 3), (10, 9, 3, 4, 2, 2), (6, 6, 2, 2, 4, 4)] {
+            let l = ContiguousGrid2D::new(m, n, tr, tc, p, q).unwrap();
+            check_grid_bijection(&l);
+        }
+    }
+
+    #[test]
+    fn p1_matches_1d_block_cyclic_storage_bitwise() {
+        // P = 1 with full-height tiles: (device, offset) must equal the
+        // 1D column layout's (owner, local*m + i) for every element.
+        for (m, n, t, q) in [(8, 12, 2, 3), (5, 14, 3, 4), (6, 10, 4, 2)] {
+            let g = BlockCyclic2D::new(m, n, m, t, 1, q).unwrap();
+            let l1 = g.as_column_layout().expect("P=1 grid has a column view");
+            for j in 0..n {
+                for i in 0..m {
+                    let (d, off) = g.place_elem(i, j);
+                    assert_eq!(d, l1.owner_of(j), "owner mismatch at ({i},{j})");
+                    assert_eq!(off, l1.local_index(j) * m + i, "offset mismatch at ({i},{j})");
+                }
+            }
+            for d in 0..q {
+                assert_eq!(g.local_shape(d), (m, l1.local_cols(d)));
+            }
+        }
+    }
+
+    #[test]
+    fn p_greater_one_has_no_column_view() {
+        let g = BlockCyclic2D::new(8, 8, 4, 4, 2, 2).unwrap();
+        assert!(g.as_column_layout().is_none());
+        let g2 = BlockCyclic2D::new(8, 8, 4, 4, 1, 4).unwrap(); // tile_r < m
+        assert!(g2.as_column_layout().is_none());
+    }
+
+    #[test]
+    fn round_robin_tile_owners() {
+        // 4×4 tiles on a 2×2 grid: owner (tr%2, tc%2).
+        let l = BlockCyclic2D::new(16, 16, 4, 4, 2, 2).unwrap();
+        assert_eq!(l.owner_of_tile(0, 0), 0);
+        assert_eq!(l.owner_of_tile(0, 1), 1);
+        assert_eq!(l.owner_of_tile(1, 0), 2);
+        assert_eq!(l.owner_of_tile(3, 3), 3);
+        assert_eq!(l.owner_of_tile(2, 2), 0);
+        assert_eq!(l.local_shape(0), (8, 8));
+    }
+
+    #[test]
+    fn ragged_edge_tile_dims() {
+        let l = BlockCyclic2D::new(10, 14, 4, 3, 2, 2).unwrap();
+        assert_eq!(l.tile_grid(), (3, 5));
+        assert_eq!(l.tile_dims(2, 4), (2, 2)); // both edges short
+        assert_eq!(l.tile_dims(0, 0), (4, 3));
+        assert!(!l.uniform_tiles());
+        let u = BlockCyclic2D::new(12, 12, 4, 3, 2, 2).unwrap();
+        assert!(u.uniform_tiles());
+    }
+
+    #[test]
+    fn tile_dim_invariants() {
+        for dim in [
+            TileDim::cyclic(17, 3, 4).unwrap(),
+            TileDim::blocked(17, 3, 4).unwrap(),
+            TileDim::cyclic(4, 8, 3).unwrap(), // fewer tiles than devices
+            TileDim::blocked(4, 8, 3).unwrap(),
+        ] {
+            let nt = dim.num_tiles();
+            let mut total_tiles = 0;
+            let mut total_extent = 0;
+            for d in 0..dim.devices() {
+                let c = dim.count(d);
+                total_tiles += c;
+                total_extent += dim.local_extent(d);
+                for l in 0..c {
+                    let t = dim.at(d, l);
+                    assert_eq!(dim.owner(t), d);
+                    assert_eq!(dim.local(t), l);
+                }
+            }
+            assert_eq!(total_tiles, nt);
+            assert_eq!(total_extent, dim.extent());
+            let len_sum: usize = (0..nt).map(|t| dim.tile_len(t)).sum();
+            assert_eq!(len_sum, dim.extent());
+        }
+    }
+
+    #[test]
+    fn invalid_params_rejected() {
+        assert!(BlockCyclic2D::new(8, 8, 0, 2, 2, 2).is_err());
+        assert!(BlockCyclic2D::new(8, 8, 2, 0, 2, 2).is_err());
+        assert!(BlockCyclic2D::new(8, 8, 2, 2, 0, 2).is_err());
+        assert!(ContiguousGrid2D::new(8, 8, 2, 2, 2, 0).is_err());
+    }
+}

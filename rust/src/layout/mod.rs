@@ -1,27 +1,54 @@
-//! 1D block-cyclic data distribution (paper §2.1, Figure 1).
+//! Data distribution layer: how a matrix is dealt to the node's
+//! devices, and how to convert between deals in place.
 //!
 //! Parallel dense factorizations need a cyclic layout for load balance
 //! (Dongarra, van de Geijn & Walker 1994): with contiguous blocks, the
-//! devices owning leading columns go idle as the factorization sweeps
+//! devices owning leading tiles go idle as the factorization sweeps
 //! right; with round-robin tiles every device keeps working until the
-//! end. cuSOLVERMg requires a **1D column block-cyclic** layout, while
-//! JAX hands the backend **contiguous per-device shards** — converting
-//! between the two, in place, is JAXMg's first technical contribution:
+//! end. The layer is organized around the **tile-grid model**: a matrix
+//! is a grid of `tile_r × tile_c` tiles dealt onto a `P × Q` device
+//! grid, and every distribution is a pair of 1D tile deals (rows ×
+//! columns — see [`TileDim`]).
 //!
-//! 1. [`BlockCyclic1D`] / [`ContiguousBlock`]: the two layouts as
-//!    explicit global↔local column index maps (ScaLAPACK `numroc`-style
-//!    arithmetic, with variable edge tiles).
-//! 2. [`permutation_between`]: the explicit source-slot → target-slot
-//!    map for a layout conversion.
-//! 3. [`cycle_decomposition`]: disjoint permutation cycles.
-//! 4. [`Redistributor`]: executes the cycles with peer-to-peer copies
-//!    and **two staging buffers**, exactly as the paper describes, or
-//!    out-of-place when the shapes make in-place rotation impossible.
+//! * **1D column layouts** (`P = 1`, full-height tiles) — what
+//!   cuSOLVERMg requires (`1 × Q` block-cyclic, [`BlockCyclic1D`]) and
+//!   what JAX hands the backend (contiguous per-device shards,
+//!   [`ContiguousBlock`]). Converting between the two in place is
+//!   JAXMg's first technical contribution (paper §2.1, Figure 1). These
+//!   keep their original [`ColumnLayout`] trait: explicit global↔local
+//!   *column* index maps (ScaLAPACK `numroc`-style arithmetic).
+//! * **2D tile-grid layouts** — the paper's named future work (§5):
+//!   [`BlockCyclic2D`] (cyclic × cyclic, the compute layout that
+//!   un-row-binds `syevd`'s tridiagonal reduction) and
+//!   [`ContiguousGrid2D`] (blocked × blocked, the 2D-mesh shard input),
+//!   both behind the [`MatrixLayout`] trait: `(row, col) → (device,
+//!   local)` tile placement. A `P = 1` grid of full-height tiles has
+//!   **bitwise-identical storage** to the 1D column layouts, which is
+//!   how the existing solvers keep running on 2D handles.
+//!
+//! Conversions:
+//!
+//! 1. [`permutation_between`] / [`tile_permutation_between`]: the
+//!    explicit source-slot → target-slot map of a layout conversion, at
+//!    column or tile granularity, built through the `O(1)`-per-slot
+//!    [`SlotMap`] / [`TileSlotMap`] precomputations.
+//! 2. [`cycle_decomposition`]: disjoint permutation cycles.
+//! 3. [`Redistributor`]: executes the cycles with peer-to-peer copies
+//!    and **two staging buffers**, exactly as the paper describes —
+//!    in place when the slot structures match (balanced 1D↔1D, or
+//!    tile-compatible uniform 2D↔2D), and out of place otherwise
+//!    (including the 1D↔2D re-tilings, which move per-column tile-row
+//!    segments instead of whole slots).
 
 mod block_cyclic;
 mod cycles;
+mod grid;
 mod redistribute;
 
 pub use block_cyclic::{BlockCyclic1D, ColumnLayout, ContiguousBlock};
-pub use cycles::{cycle_decomposition, permutation_between, Cycle};
+pub use cycles::{
+    cycle_decomposition, permutation_between, tile_permutation_between, Cycle, SlotMap,
+    TileSlotMap,
+};
+pub use grid::{BlockCyclic2D, ContiguousGrid2D, MatrixLayout, TileDim};
 pub use redistribute::{RedistPlan, Redistributor};

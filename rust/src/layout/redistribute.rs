@@ -1,27 +1,43 @@
 //! In-place layout conversion via permutation cycles + two staging
-//! buffers — the execution half of paper §2.1.
+//! buffers — the execution half of paper §2.1, generalized from column
+//! slots to tile slots.
 //!
 //! For each non-trivial cycle `s₀ → s₁ → ... → s_{m−1} → s₀` the
-//! rotation runs *forward* with two alternating one-column staging
-//! buffers: before slot `s_{i+1}` is overwritten with the content of
-//! `s_i`, its own content is saved into the staging buffer the previous
-//! step is not using. This is exactly why two buffers suffice "to avoid
-//! overwriting data before it is forwarded": step `i`'s save and step
-//! `i−1`'s write target different buffers, so consecutive async copies
-//! never race on staging storage.
+//! rotation runs *forward* with two alternating staging buffers: before
+//! slot `s_{i+1}` is overwritten with the content of `s_i`, its own
+//! content is saved into the staging buffer the previous step is not
+//! using. This is exactly why two buffers suffice "to avoid overwriting
+//! data before it is forwarded": step `i`'s save and step `i−1`'s write
+//! target different buffers, so consecutive async copies never race on
+//! staging storage.
 //!
-//! When the source and target layouts give some device different column
-//! counts (N not divisible by T_A·ndev), in-place rotation is
-//! impossible; [`Redistributor::convert`] then falls back to an
-//! out-of-place pass through freshly allocated panels (still
-//! peer-to-peer copies, just not in place). The paper's benchmarked
-//! configurations are all balanced.
+//! Three execution paths, chosen by the slot structure of the two
+//! layouts:
+//!
+//! * **column cycles** — both layouts columnar (the original 1D path,
+//!   including `P = 1` grids whose storage is bitwise columnar) with
+//!   matching per-device column counts: one-column slots, one-column
+//!   staging buffers. Byte-for-byte the seed behaviour, so plans and
+//!   data movement are identical whether the handle is a 1D descriptor
+//!   or its `P = 1` 2D re-expression.
+//! * **tile cycles** — both layouts on the *same* uniform tile grid
+//!   (`m % tile_r == 0`, `n % tile_c == 0`) with matching per-device
+//!   tile counts, e.g. regridding `2×2 ↔ 4×1` or blocked → cyclic tile
+//!   deals: whole contiguous tiles rotate through two tile-sized
+//!   staging buffers.
+//! * **generic out-of-place** — everything else (ragged tiles,
+//!   mismatched per-device counts, and the 1D↔2D re-tilings where the
+//!   movement units differ): fresh panels in the target layout, one
+//!   peer copy per overlapping tile-row segment of each column.
 
 use crate::device::DevPtr;
-use crate::error::Result;
-use crate::layout::{cycle_decomposition, permutation_between};
+use crate::error::{Error, Result};
+use crate::layout::{
+    cycle_decomposition, permutation_between, tile_permutation_between, BlockCyclic1D,
+    ColumnLayout, ContiguousBlock, SlotMap, TileSlotMap,
+};
 use crate::scalar::Scalar;
-use crate::tile::{DistMatrix, Layout1D};
+use crate::tile::{DistMatrix, LayoutKind};
 
 /// Statistics of one redistribution, for tests and the Fig. 1 bench.
 #[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
@@ -30,145 +46,345 @@ pub struct RedistPlan {
     pub cycles: usize,
     /// Cycles that actually moved data.
     pub nontrivial_cycles: usize,
-    /// Columns physically moved.
+    /// Columns physically moved (column path and generic path).
     pub columns_moved: usize,
     /// Of which crossed a device boundary.
     pub columns_cross_device: usize,
+    /// Tiles physically moved (tile path; 0 on the column path).
+    pub tiles_moved: usize,
+    /// Of which crossed a device boundary.
+    pub tiles_cross_device: usize,
     /// True if executed in place (cycles + staging), false if the
     /// out-of-place fallback ran.
     pub in_place: bool,
+}
+
+/// A column-layout view of a [`LayoutKind`], owned so that `P = 1`
+/// grids can synthesize their equivalent 1D descriptor.
+enum ColView {
+    Contig(ContiguousBlock),
+    Cyclic(BlockCyclic1D),
+}
+
+impl ColView {
+    fn as_dyn(&self) -> &dyn ColumnLayout {
+        match self {
+            ColView::Contig(l) => l,
+            ColView::Cyclic(l) => l,
+        }
+    }
+}
+
+/// The columnar view of `kind` for a `rows`-high matrix, if its storage
+/// follows the full-height column-panel contract.
+fn column_view(kind: &LayoutKind, rows: usize) -> Option<ColView> {
+    match kind {
+        LayoutKind::Contiguous(l) => Some(ColView::Contig(*l)),
+        LayoutKind::BlockCyclic(l) => Some(ColView::Cyclic(*l)),
+        LayoutKind::Grid(_) => kind.compat_1d(rows).map(ColView::Cyclic),
+        LayoutKind::GridContig(_) => None,
+    }
+}
+
+/// The shared forward-rotation executor behind both in-place paths:
+/// runs every non-trivial cycle through two `slot_elems`-sized staging
+/// buffers on the cycle-leader device (the paper's two-buffer
+/// argument: step `i`'s save and step `i−1`'s write target different
+/// buffers, so consecutive async copies never race on staging).
+///
+/// `place` resolves a slot to `(device, panel ptr, byte offset)`;
+/// `moved(from, to)` is called once per executed slot move;
+/// `cycle_done(len)` once per completed non-trivial cycle (after its
+/// staging is freed), for metrics. Returns the non-trivial cycle count.
+fn rotate_cycles<S, P, M, C>(
+    node: &crate::device::SimNode,
+    cycles: &[crate::layout::Cycle],
+    slot_elems: usize,
+    slot_bytes: usize,
+    place: P,
+    mut moved: M,
+    mut cycle_done: C,
+) -> Result<usize>
+where
+    S: Scalar,
+    P: Fn(usize) -> (usize, DevPtr, usize),
+    M: FnMut(usize, usize),
+    C: FnMut(usize),
+{
+    let mut nontrivial = 0;
+    for cycle in cycles {
+        if cycle.is_trivial() {
+            continue;
+        }
+        nontrivial += 1;
+        let mlen = cycle.len();
+
+        // Two staging buffers on the cycle-leader device.
+        let (lead_dev, _, _) = place(cycle.slots[0]);
+        let stage = [
+            node.alloc_scalars::<S>(lead_dev, slot_elems)?,
+            node.alloc_scalars::<S>(lead_dev, slot_elems)?,
+        ];
+
+        // Forward rotation: content(s_i) → s_{i+1}.
+        //   save  s_1 → stage[0]
+        //   write s_0 → s_1
+        //   save  s_2 → stage[1]      (other buffer: step i−1 still owns stage[0] conceptually)
+        //   write stage[0] → s_2      (old s_1 content)
+        //   ...
+        //   write stage[(m−2)%2] → s_0 (old s_{m−1} content closes the cycle)
+        let (d1, p1, o1) = place(cycle.slots[1 % mlen]);
+        node.peer_copy(p1, o1, stage[0], 0, slot_bytes)?;
+        let (d0, p0, o0) = place(cycle.slots[0]);
+        node.peer_copy(p0, o0, p1, o1, slot_bytes)?;
+        moved(d0, d1);
+
+        // Steps 1..m−1: save s_{i+1} into the free buffer, then write
+        // the previously staged content into s_{i+1}.
+        for i in 1..mlen {
+            let nxt = cycle.slots[(i + 1) % mlen];
+            let (dn, pn, on) = place(nxt);
+            let cur_stage = stage[(i - 1) % 2];
+            if (i + 1) % mlen == 0 {
+                // Closing step: s_0 receives old content of s_{m−1},
+                // which sits in cur_stage; nothing left to save.
+                node.peer_copy(cur_stage, 0, pn, on, slot_bytes)?;
+                let (dprev, _, _) = place(cycle.slots[i]);
+                moved(dprev, dn);
+            } else {
+                let next_stage = stage[i % 2];
+                node.peer_copy(pn, on, next_stage, 0, slot_bytes)?;
+                node.peer_copy(cur_stage, 0, pn, on, slot_bytes)?;
+                let (dprev, _, _) = place(cycle.slots[i]);
+                moved(dprev, dn);
+            }
+        }
+
+        node.free(stage[0])?;
+        node.free(stage[1])?;
+        cycle_done(mlen);
+    }
+    Ok(nontrivial)
 }
 
 /// Executes layout conversions on a [`DistMatrix`].
 pub struct Redistributor;
 
 impl Redistributor {
-    /// Convert `m` to `target` layout, physically permuting columns.
-    pub fn convert<S: Scalar>(m: &mut DistMatrix<S>, target: Layout1D) -> Result<RedistPlan> {
+    /// Convert `m` to `target` layout, physically permuting its storage.
+    pub fn convert<S: Scalar>(m: &mut DistMatrix<S>, target: LayoutKind) -> Result<RedistPlan> {
         let src_kind = *m.layout();
-        let src = src_kind.as_layout();
-        let dst = target.as_layout();
-        let balanced = (0..src.num_devices()).all(|d| src.local_cols(d) == dst.local_cols(d));
-        if balanced {
-            Self::convert_in_place(m, target)
-        } else {
-            Self::convert_out_of_place(m, target)
+        if src_kind.n_cols() != target.n_cols() {
+            return Err(Error::layout(format!(
+                "layout sizes differ: {} vs {}",
+                src_kind.n_cols(),
+                target.n_cols()
+            )));
         }
+        if src_kind.num_devices() != target.num_devices() {
+            return Err(Error::layout("layouts span different device counts"));
+        }
+        if !target.rows_match(m.rows()) {
+            return Err(Error::shape(format!(
+                "target grid layout does not distribute {} rows",
+                m.rows()
+            )));
+        }
+
+        // Columnar fast path (1D↔1D, and P=1 grids re-expressed as 1D).
+        if let (Some(s), Some(t)) = (column_view(&src_kind, m.rows()), column_view(&target, m.rows()))
+        {
+            let (s, t) = (s.as_dyn(), t.as_dyn());
+            let balanced = (0..s.num_devices()).all(|d| s.local_cols(d) == t.local_cols(d));
+            if balanced {
+                return Self::convert_in_place_columns(m, target, s, t);
+            }
+            return Self::convert_generic(m, target);
+        }
+
+        // Tile cycle walk: same uniform tiling, matching per-device
+        // tile counts ⇒ tile slots are interchangeable storage units.
+        if let (Some(sg), Some(tg)) = (src_kind.matrix_layout(), target.matrix_layout()) {
+            let compatible = sg.tile_shape() == tg.tile_shape()
+                && sg.uniform_tiles()
+                && (0..sg.num_devices()).all(|d| sg.tiles_on(d) == tg.tiles_on(d));
+            if compatible {
+                return Self::convert_in_place_tiles(m, target);
+            }
+        }
+
+        Self::convert_generic(m, target)
     }
 
-    /// The paper's algorithm: explicit permutation → disjoint cycles →
-    /// forward rotation with two staging buffers and peer copies.
-    fn convert_in_place<S: Scalar>(m: &mut DistMatrix<S>, target: Layout1D) -> Result<RedistPlan> {
+    /// The paper's algorithm at column granularity: explicit permutation
+    /// → disjoint cycles → forward rotation with two staging buffers and
+    /// peer copies.
+    fn convert_in_place_columns<S: Scalar>(
+        m: &mut DistMatrix<S>,
+        target: LayoutKind,
+        src: &dyn ColumnLayout,
+        dst: &dyn ColumnLayout,
+    ) -> Result<RedistPlan> {
         let node = m.node().clone();
         let col_bytes = m.col_bytes();
         let col_elems = m.rows();
-        let src_kind = *m.layout();
-        let src = src_kind.as_layout();
-        let dst = target.as_layout();
 
         let perm = permutation_between(src, dst)?;
         let cycles = cycle_decomposition(&perm);
+        // O(1) slot lookups on the cycle walk (satellite fix: the trait
+        // defaults scan per-device counts on every call).
+        let smap = SlotMap::new(src);
 
         let mut plan = RedistPlan { cycles: cycles.len(), in_place: true, ..Default::default() };
+        let mut columns_moved = 0usize;
+        let mut columns_cross = 0usize;
 
         // Slot → (device, panel ptr, byte offset). Slots are identical
         // between layouts because per-device counts match.
         let place = |slot: usize| -> (usize, DevPtr, usize) {
-            let (d, loc) = src.slot_to_place(slot);
+            let (d, loc) = smap.place_of(slot);
             (d, m.panels()[d], loc * col_bytes)
         };
 
-        for cycle in &cycles {
-            if cycle.is_trivial() {
-                continue;
-            }
-            plan.nontrivial_cycles += 1;
-            let mlen = cycle.len();
-
-            // Two one-column staging buffers on the cycle-leader device.
-            let (lead_dev, _, _) = place(cycle.slots[0]);
-            let stage =
-                [node.alloc_scalars::<S>(lead_dev, col_elems)?, node.alloc_scalars::<S>(lead_dev, col_elems)?];
-
-            // Forward rotation: content(s_i) → s_{i+1}.
-            //   save  s_1 → stage[0]
-            //   write s_0 → s_1
-            //   save  s_2 → stage[1]      (other buffer: step i−1 still owns stage[0] conceptually)
-            //   write stage[0] → s_2      (old s_1 content)
-            //   ...
-            //   write stage[(m−2)%2] → s_0 (old s_{m−1} content closes the cycle)
-            //
-            // Track statistics per executed copy.
-            let mut charge = |from_dev: usize, to_dev: usize| {
-                plan.columns_moved += 1;
-                if from_dev != to_dev {
-                    plan.columns_cross_device += 1;
+        plan.nontrivial_cycles = rotate_cycles::<S, _, _, _>(
+            &node,
+            &cycles,
+            col_elems,
+            col_bytes,
+            place,
+            |from, to| {
+                columns_moved += 1;
+                if from != to {
+                    columns_cross += 1;
                 }
-            };
+            },
+            |mlen| {
+                node.metrics().redist_cycles.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                node.metrics()
+                    .redist_columns
+                    .fetch_add(mlen as u64, std::sync::atomic::Ordering::Relaxed);
+            },
+        )?;
+        plan.columns_moved = columns_moved;
+        plan.columns_cross_device = columns_cross;
 
-            // Step 0: save s_1, then write s_0 → s_1 directly.
-            let (d1, p1, o1) = place(cycle.slots[1 % mlen]);
-            node.peer_copy(p1, o1, stage[0], 0, col_bytes)?;
-            let (d0, p0, o0) = place(cycle.slots[0]);
-            node.peer_copy(p0, o0, p1, o1, col_bytes)?;
-            charge(d0, d1);
+        m.set_layout(target);
+        Ok(plan)
+    }
 
-            // Steps 1..m−1: save s_{i+1} into the free buffer, then
-            // write the previously staged content into s_{i+1}.
-            for i in 1..mlen {
-                let nxt = cycle.slots[(i + 1) % mlen];
-                let (dn, pn, on) = place(nxt);
-                let cur_stage = stage[(i - 1) % 2];
-                if (i + 1) % mlen == 0 {
-                    // Closing step: s_0 receives old content of s_{m−1},
-                    // which sits in cur_stage; nothing left to save.
-                    node.peer_copy(cur_stage, 0, pn, on, col_bytes)?;
-                    let (dprev, _, _) = place(cycle.slots[i]);
-                    charge(dprev, dn);
-                } else {
-                    let next_stage = stage[i % 2];
-                    node.peer_copy(pn, on, next_stage, 0, col_bytes)?;
-                    node.peer_copy(cur_stage, 0, pn, on, col_bytes)?;
-                    let (dprev, _, _) = place(cycle.slots[i]);
-                    charge(dprev, dn);
+    /// The same rotation at tile granularity: whole contiguous
+    /// `tile_r × tile_c` tiles move through two tile-sized staging
+    /// buffers (requires the uniform-tiling/matching-counts
+    /// precondition checked by [`Redistributor::convert`]).
+    fn convert_in_place_tiles<S: Scalar>(
+        m: &mut DistMatrix<S>,
+        target: LayoutKind,
+    ) -> Result<RedistPlan> {
+        let node = m.node().clone();
+        let src_kind = *m.layout();
+        let sg = src_kind.matrix_layout().expect("tile path needs a grid source");
+        let tg = target.matrix_layout().expect("tile path needs a grid target");
+        let (th, tw) = sg.tile_shape();
+        let tile_elems = th * tw;
+        let tile_bytes = tile_elems * std::mem::size_of::<S>();
+
+        let perm = tile_permutation_between(sg, tg)?;
+        let cycles = cycle_decomposition(&perm);
+        let smap = TileSlotMap::new(sg);
+
+        let mut plan = RedistPlan { cycles: cycles.len(), in_place: true, ..Default::default() };
+        let mut tiles_moved = 0usize;
+        let mut tiles_cross = 0usize;
+
+        // With uniform tiles, local tile `ord` sits at byte offset
+        // `ord · tile_bytes` — slots are interchangeable storage units.
+        let place = |slot: usize| -> (usize, DevPtr, usize) {
+            let (d, ord) = smap.place_of(slot);
+            (d, m.panels()[d], ord * tile_bytes)
+        };
+
+        plan.nontrivial_cycles = rotate_cycles::<S, _, _, _>(
+            &node,
+            &cycles,
+            tile_elems,
+            tile_bytes,
+            place,
+            |from, to| {
+                tiles_moved += 1;
+                if from != to {
+                    tiles_cross += 1;
                 }
-            }
-
-            node.free(stage[0])?;
-            node.free(stage[1])?;
-
-            node.metrics().redist_cycles.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            },
+            |_mlen| {
+                node.metrics().redist_cycles.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            },
+        )?;
+        plan.tiles_moved = tiles_moved;
+        plan.tiles_cross_device = tiles_cross;
+        // Column-equivalents for the shared volume counter: a tile
+        // holds a `tile_r`-high slice of `tile_c` columns, i.e.
+        // `th·tw/rows` of a full column — not `tw` whole columns.
+        // (Rounded down; exact when whole tile columns move.)
+        if m.rows() > 0 {
+            let equiv = (tiles_moved * th * tw) / m.rows();
             node.metrics()
                 .redist_columns
-                .fetch_add(mlen as u64, std::sync::atomic::Ordering::Relaxed);
+                .fetch_add(equiv as u64, std::sync::atomic::Ordering::Relaxed);
         }
 
         m.set_layout(target);
         Ok(plan)
     }
 
-    /// Out-of-place fallback for unbalanced shapes: fresh panels in the
-    /// target layout, one peer copy per column, old panels freed.
-    fn convert_out_of_place<S: Scalar>(m: &mut DistMatrix<S>, target: Layout1D) -> Result<RedistPlan> {
+    /// Out-of-place fallback for every remaining pair (unbalanced
+    /// columnar shapes, ragged tile grids, 1D↔2D re-tilings): fresh
+    /// panels in the target layout, one peer copy per overlapping
+    /// tile-row segment of each column, old panels freed.
+    fn convert_generic<S: Scalar>(m: &mut DistMatrix<S>, target: LayoutKind) -> Result<RedistPlan> {
         let node = m.node().clone();
-        let col_bytes = m.col_bytes();
+        let rows = m.rows();
+        let esize = std::mem::size_of::<S>();
         let src_kind = *m.layout();
-        let src = src_kind.as_layout();
-        let dst = target.as_layout();
 
         let mut new_panels = Vec::with_capacity(node.num_devices());
         for d in 0..node.num_devices() {
-            new_panels.push(node.alloc_scalars::<S>(d, m.rows() * dst.local_cols(d))?);
+            new_panels.push(node.alloc_scalars::<S>(d, target.local_elems(rows, d))?);
         }
 
         let mut plan = RedistPlan { in_place: false, ..Default::default() };
-        for g in 0..src.n_cols() {
-            let (sd, sl) = src.place(g);
-            let (dd, dl) = dst.place(g);
-            node.peer_copy(m.panels()[sd], sl * col_bytes, new_panels[dd], dl * col_bytes, col_bytes)?;
-            plan.columns_moved += 1;
-            if sd != dd {
-                plan.columns_cross_device += 1;
+        if rows > 0 {
+            for j in 0..src_kind.n_cols() {
+                let src_segs = src_kind.col_segments(rows, j);
+                let dst_segs = target.col_segments(rows, j);
+                let mut crossed = false;
+                let (mut si, mut di) = (0usize, 0usize);
+                while si < src_segs.len() && di < dst_segs.len() {
+                    let s = src_segs[si];
+                    let t = dst_segs[di];
+                    let lo = s.r0.max(t.r0);
+                    let hi = (s.r0 + s.len).min(t.r0 + t.len);
+                    debug_assert!(lo < hi, "column segments must tile the rows");
+                    node.peer_copy(
+                        m.panels()[s.dev],
+                        (s.elem_off + (lo - s.r0)) * esize,
+                        new_panels[t.dev],
+                        (t.elem_off + (lo - t.r0)) * esize,
+                        (hi - lo) * esize,
+                    )?;
+                    if s.dev != t.dev {
+                        crossed = true;
+                    }
+                    if s.r0 + s.len == hi {
+                        si += 1;
+                    }
+                    if t.r0 + t.len == hi {
+                        di += 1;
+                    }
+                }
+                plan.columns_moved += 1;
+                if crossed {
+                    plan.columns_cross_device += 1;
+                }
             }
         }
         m.replace_panels(new_panels, target)?;
@@ -180,9 +396,10 @@ impl Redistributor {
 mod tests {
     use super::*;
     use crate::device::SimNode;
-    use crate::layout::{BlockCyclic1D, ContiguousBlock};
+    use crate::layout::{BlockCyclic2D, ContiguousGrid2D};
     use crate::linalg::Matrix;
     use crate::scalar::c64;
+    use crate::tile::Layout1D;
 
     fn roundtrip_case<S: Scalar>(n: usize, rows: usize, tile: usize, ndev: usize, seed: u64) {
         let node = SimNode::new_uniform(ndev, 1 << 26);
@@ -274,5 +491,109 @@ mod tests {
         {
             roundtrip_case::<f64>(n, 3, t, d, 100 + i as u64);
         }
+    }
+
+    // ---- 2D tile-grid conversions ------------------------------------
+
+    #[test]
+    fn tile_regrid_in_place_roundtrip() {
+        // Same uniform 4×4 tiling, 2×2 ↔ 4×1 grids: whole tiles rotate
+        // in place through the two staging buffers.
+        let node = SimNode::new_uniform(4, 1 << 24);
+        let a = Matrix::<f64>::random(16, 16, 11);
+        let g22 = LayoutKind::Grid(BlockCyclic2D::new(16, 16, 4, 4, 2, 2).unwrap());
+        let g41 = LayoutKind::Grid(BlockCyclic2D::new(16, 16, 4, 4, 4, 1).unwrap());
+        let mut dm = DistMatrix::scatter(&node, &a, g22).unwrap();
+        let plan = Redistributor::convert(&mut dm, g41).unwrap();
+        assert!(plan.in_place, "uniform regrid must run in place");
+        assert!(plan.tiles_moved > 0);
+        assert_eq!(dm.gather().unwrap(), a);
+        let plan2 = Redistributor::convert(&mut dm, g22).unwrap();
+        assert!(plan2.in_place);
+        assert_eq!(dm.gather().unwrap(), a);
+        // Staging tiles all freed: one panel allocation per device.
+        for rep in node.memory_reports() {
+            assert_eq!(rep.allocations, 1, "staging tiles must be freed");
+        }
+    }
+
+    #[test]
+    fn blocked_to_cyclic_tiles_in_place() {
+        // The 2D analogue of Fig. 1: 2D-mesh shard input → 2D cyclic
+        // compute layout, same tiling ⇒ in-place tile cycles.
+        let node = SimNode::new_uniform(4, 1 << 24);
+        let a = Matrix::<f32>::random(16, 24, 12);
+        let shard = LayoutKind::GridContig(ContiguousGrid2D::new(16, 24, 4, 4, 2, 2).unwrap());
+        let cyclic = LayoutKind::Grid(BlockCyclic2D::new(16, 24, 4, 4, 2, 2).unwrap());
+        let mut dm = DistMatrix::scatter(&node, &a, shard).unwrap();
+        let plan = Redistributor::convert(&mut dm, cyclic).unwrap();
+        assert!(plan.in_place);
+        assert!(plan.tiles_cross_device > 0, "a 2×2 redeal must cross devices");
+        assert_eq!(dm.gather().unwrap(), a);
+    }
+
+    #[test]
+    fn one_d_to_two_d_retiling_is_out_of_place() {
+        // Different movement units (full columns vs 4×4 tiles): the
+        // generic segment path must run, and content must survive.
+        let node = SimNode::new_uniform(4, 1 << 24);
+        let a = Matrix::<f64>::random(16, 16, 13);
+        let contig = LayoutKind::Contiguous(ContiguousBlock::new(16, 4).unwrap());
+        let grid = LayoutKind::Grid(BlockCyclic2D::new(16, 16, 4, 4, 2, 2).unwrap());
+        let mut dm = DistMatrix::scatter(&node, &a, contig).unwrap();
+        let plan = Redistributor::convert(&mut dm, grid).unwrap();
+        assert!(!plan.in_place);
+        assert_eq!(plan.columns_moved, 16);
+        assert_eq!(dm.gather().unwrap(), a);
+        // And back to the 1D cyclic compute layout.
+        let cyc = LayoutKind::BlockCyclic(BlockCyclic1D::new(16, 4, 4).unwrap());
+        Redistributor::convert(&mut dm, cyc).unwrap();
+        assert_eq!(dm.gather().unwrap(), a);
+    }
+
+    #[test]
+    fn ragged_tiles_fall_back_out_of_place() {
+        // 10×14 in 4×3 tiles is ragged ⇒ no tile cycle walk.
+        let node = SimNode::new_uniform(4, 1 << 24);
+        let a = Matrix::<c64>::random(10, 14, 14);
+        let shard = LayoutKind::GridContig(ContiguousGrid2D::new(10, 14, 4, 3, 2, 2).unwrap());
+        let cyclic = LayoutKind::Grid(BlockCyclic2D::new(10, 14, 4, 3, 2, 2).unwrap());
+        let mut dm = DistMatrix::scatter(&node, &a, shard).unwrap();
+        let plan = Redistributor::convert(&mut dm, cyclic).unwrap();
+        assert!(!plan.in_place);
+        assert_eq!(dm.gather().unwrap(), a);
+    }
+
+    #[test]
+    fn p1_grid_conversion_plan_matches_1d_plan_bitwise() {
+        // Acceptance: converting contiguous → P=1 grid must produce the
+        // exact same RedistPlan (and data movement) as contiguous → the
+        // equivalent 1D block-cyclic layout.
+        let (rows, n, t, ndev) = (8, 24, 2, 4);
+        let a = Matrix::<f64>::random(rows, n, 15);
+        let contig = LayoutKind::Contiguous(ContiguousBlock::new(n, ndev).unwrap());
+
+        let node1 = SimNode::new_uniform(ndev, 1 << 24);
+        let mut d1 = DistMatrix::scatter(&node1, &a, contig).unwrap();
+        let plan1 =
+            Redistributor::convert(&mut d1, LayoutKind::BlockCyclic(BlockCyclic1D::new(n, t, ndev).unwrap()))
+                .unwrap();
+
+        let node2 = SimNode::new_uniform(ndev, 1 << 24);
+        let mut d2 = DistMatrix::scatter(&node2, &a, contig).unwrap();
+        let plan2 = Redistributor::convert(
+            &mut d2,
+            LayoutKind::Grid(BlockCyclic2D::new(rows, n, rows, t, 1, ndev).unwrap()),
+        )
+        .unwrap();
+
+        assert_eq!(plan1, plan2, "P=1 grid must redistribute exactly like the 1D path");
+        // The per-device panels are bitwise identical afterwards.
+        for d in 0..ndev {
+            let p1 = d1.read_block(d, 0, rows, 0, 6).unwrap();
+            let p2 = d2.read_block(d, 0, rows, 0, 6).unwrap();
+            assert_eq!(p1.as_slice(), p2.as_slice(), "panel {d} diverged");
+        }
+        assert_eq!(d1.gather().unwrap(), d2.gather().unwrap());
     }
 }

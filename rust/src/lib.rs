@@ -8,10 +8,13 @@
 //!
 //! * **Layer 3 (this crate)** — the coordinator: simulated GPU devices
 //!   with VRAM accounting and peer-to-peer copies, the paper's 1D
-//!   block-cyclic redistribution via permutation cycles (§2.1), the
-//!   SPMD/MPMD single-caller pointer reconciliation (§2.2), and the
-//!   distributed solvers themselves (blocked Cholesky, triangular
-//!   solves, inverse, symmetric/Hermitian eigendecomposition).
+//!   block-cyclic redistribution via permutation cycles (§2.1) —
+//!   generalized to the 2D tile-grid model of §5's future work
+//!   (`layout::BlockCyclic2D`, tile-slot cycles, row-parallel `syevd`
+//!   collectives) — the SPMD/MPMD single-caller pointer reconciliation
+//!   (§2.2), and the distributed solvers themselves (blocked Cholesky,
+//!   triangular solves, inverse, symmetric/Hermitian
+//!   eigendecomposition).
 //! * **Layer 2 (`python/compile/model.py`)** — blocked tile algorithms in
 //!   JAX, AOT-lowered to HLO text artifacts.
 //! * **Layer 1 (`python/compile/kernels/`)** — Pallas tile kernels (GEMM
@@ -58,7 +61,7 @@ pub mod prelude {
     };
     pub use crate::device::{SimGpu, SimNode};
     pub use crate::error::{Error, Result};
-    pub use crate::layout::BlockCyclic1D;
+    pub use crate::layout::{BlockCyclic1D, BlockCyclic2D};
     pub use crate::linalg::Matrix;
     pub use crate::scalar::{c32, c64, Complex, Scalar};
     pub use crate::solver::{PipelineConfig, SolverBackend};

@@ -264,6 +264,51 @@ impl<'a, S: Scalar> Ctx<'a, S> {
         }
     }
 
+    /// Model a replicated-data synchronization scoped to a device
+    /// *group* (a 2D grid row or column): `bytes` flowing from `from`
+    /// to every other member of `members`. Same shared-link arithmetic
+    /// as [`Ctx::charge_broadcast`], but disjoint groups ride disjoint
+    /// source links, so grid-parallel collectives overlap — the 2D
+    /// `syevd` path's win. Members not containing `from`, duplicates,
+    /// or a singleton group charge nothing extra beyond the listed
+    /// receivers.
+    pub fn charge_group_broadcast(&self, from: usize, members: &[usize], bytes: usize) -> crate::Result<()> {
+        let receivers = members.iter().filter(|&&d| d != from).count();
+        if receivers == 0 || bytes == 0 {
+            return Ok(());
+        }
+        match &self.timeline {
+            Some(tl) => {
+                self.node.device(from)?;
+                let nb = tl.compute(from).horizon();
+                for &d in members {
+                    if d == from {
+                        continue;
+                    }
+                    let t = self.node.topology().copy_time(from, d, bytes) / receivers as f64;
+                    let done = tl.copy(from).issue_after(nb, t);
+                    tl.note_busy(from, t);
+                    self.node.metrics().add_peer(bytes as u64);
+                    tl.compute(d).wait_event(Event::at(done));
+                }
+                Ok(())
+            }
+            None => {
+                let src_clock = self.node.device(from)?.clock();
+                for &d in members {
+                    if d == from {
+                        continue;
+                    }
+                    let t = self.node.topology().copy_time(from, d, bytes) / receivers as f64;
+                    src_clock.advance(t);
+                    self.node.metrics().add_peer(bytes as u64);
+                    self.node.device(d)?.clock().sync_to(src_clock.now());
+                }
+                Ok(())
+            }
+        }
+    }
+
     /// Move a packed panel buffer between two device scratch
     /// allocations (base pointers) and charge the transfer.
     ///

@@ -46,10 +46,12 @@ use crate::tile::DistMatrix;
 /// Factor a Hermitian positive-definite `DistMatrix` (block-cyclic
 /// layout) in place into its lower Cholesky factor.
 pub fn potrf_dist<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<()> {
-    let lay = *a
+    // Compatibility path: a 1D block-cyclic handle, or a P=1 grid whose
+    // storage is bitwise columnar (see `LayoutKind::compat_1d`).
+    let lay = a
         .layout()
-        .as_block_cyclic()
-        .ok_or_else(|| Error::layout("potrf requires the block-cyclic layout — redistribute first"))?;
+        .compat_1d(a.rows())
+        .ok_or_else(|| Error::layout("potrf requires a block-cyclic column layout — redistribute first"))?;
     let n = a.rows();
     if n != a.cols() {
         return Err(Error::shape(format!("potrf needs square matrix, got {}x{}", n, a.cols())));

@@ -29,10 +29,12 @@ use crate::tile::DistMatrix;
 /// (from [`super::potrf_dist`]); on return it holds `A⁻¹` (full
 /// Hermitian, both triangles).
 pub fn potri_dist<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<()> {
-    let lay = *a
+    // Compatibility path: a 1D block-cyclic handle, or a P=1 grid whose
+    // storage is bitwise columnar (see `LayoutKind::compat_1d`).
+    let lay = a
         .layout()
-        .as_block_cyclic()
-        .ok_or_else(|| Error::layout("potri requires the block-cyclic layout — redistribute first"))?;
+        .compat_1d(a.rows())
+        .ok_or_else(|| Error::layout("potri requires a block-cyclic column layout — redistribute first"))?;
     let n = a.rows();
     let ntiles = lay.num_tiles();
     let esize = std::mem::size_of::<S>();

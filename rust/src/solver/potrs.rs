@@ -26,10 +26,12 @@ pub fn potrs_dist<S: Scalar>(
     l: &DistMatrix<S>,
     b: &Matrix<S>,
 ) -> Result<Matrix<S>> {
-    let lay = *l
+    // Compatibility path: a 1D block-cyclic handle, or a P=1 grid whose
+    // storage is bitwise columnar (see `LayoutKind::compat_1d`).
+    let lay = l
         .layout()
-        .as_block_cyclic()
-        .ok_or_else(|| Error::layout("potrs requires the block-cyclic layout — redistribute first"))?;
+        .compat_1d(l.rows())
+        .ok_or_else(|| Error::layout("potrs requires a block-cyclic column layout — redistribute first"))?;
     let n = l.rows();
     if b.rows() != n {
         return Err(Error::shape(format!("rhs has {} rows, matrix is {n}x{n}", b.rows())));

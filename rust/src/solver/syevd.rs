@@ -18,26 +18,55 @@
 //!    reflectors (and the realifying phase diagonal) to its local
 //!    columns — embarrassingly parallel rank-1 updates.
 //!
-//! During the solve each device's panel is mirrored host-side (one read
-//! per panel, not per step); all compute is still *charged* to the
-//! owning device's timeline, and reflector broadcasts / all-reduces are
+//! ## 1D vs 2D layouts
+//!
+//! On the **1D column layout** every device owns whole rows of its
+//! columns, so each step's reflector collectives carry full length-`n`
+//! vectors through one owner — the row-bound behaviour the paper calls
+//! out (§5). On a **`P × Q` grid** ([`crate::layout::BlockCyclic2D`])
+//! the reflector is born distributed over `P` row blocks: its
+//! broadcasts, the partial-`A·u` reductions and the `w` fan-out run as
+//! `P` parallel row-group collectives of `≈ n/P` words on disjoint
+//! source links, and the rank-2/back-transform updates are charged per
+//! `local_rows × local_cols` block. `P = 1` grids take the 1D code path
+//! (their storage is bitwise columnar), so a `1 × Q` grid is
+//! bitwise-identical to the native 1D layout — results *and* schedule.
+//!
+//! During the solve the matrix is mirrored host-side (one read per
+//! panel, not per step); all compute is still *charged* to the owning
+//! device's timeline, and reflector broadcasts / all-reduces are
 //! charged to the NVLink model. See DESIGN.md §Hardware substitution.
 
 use super::Ctx;
 use crate::error::{Error, Result};
+use crate::layout::{BlockCyclic2D, MatrixLayout};
 use crate::linalg::{tql2, Matrix, Tridiagonal};
 use crate::scalar::{RealScalar, Scalar};
 use crate::tile::DistMatrix;
 
 /// Eigendecomposition in place: on return `a`'s panels hold the
-/// eigenvector columns (same block-cyclic layout) and the ascending
-/// eigenvalues are returned.
+/// eigenvector columns (same layout) and the ascending eigenvalues are
+/// returned. Accepts the 1D block-cyclic layout (and `P = 1` grids,
+/// which share its storage bitwise) or a 2D [`BlockCyclic2D`] grid.
 pub fn syevd_dist<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<Vec<S::Real>> {
+    if let Some(lay) = a.layout().compat_1d(a.rows()) {
+        return syevd_dist_1d(ctx, a, lay);
+    }
+    if let Some(grid) = a.layout().grid2d().copied() {
+        return syevd_dist_grid(ctx, a, grid);
+    }
+    Err(Error::layout(
+        "syevd requires a block-cyclic layout (1D columns or 2D grid) — redistribute first",
+    ))
+}
+
+/// The original 1D path: whole-column ownership per device.
+fn syevd_dist_1d<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a: &mut DistMatrix<S>,
+    lay: crate::layout::BlockCyclic1D,
+) -> Result<Vec<S::Real>> {
     use crate::layout::ColumnLayout;
-    let lay = *a
-        .layout()
-        .as_block_cyclic()
-        .ok_or_else(|| Error::layout("syevd requires the block-cyclic layout — redistribute first"))?;
     let n = a.rows();
     if n != a.cols() {
         return Err(Error::shape(format!("syevd needs square matrix, got {}x{}", n, a.cols())));
@@ -241,6 +270,260 @@ pub fn syevd_dist<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
     Ok(values)
 }
 
+/// The 2D grid path (`P > 1`): identical numerics computed from a host
+/// mirror, with compute charged per `local_rows × local_cols` block and
+/// the reflector collectives charged as `P` parallel row-group
+/// transfers of row segments — the un-row-binding the paper's §5 asks
+/// for. The back-transform's column-group reductions are charged per
+/// `tile_c`-wide reflector block (blocked WY application), so their
+/// latency amortizes.
+fn syevd_dist_grid<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a: &mut DistMatrix<S>,
+    grid: BlockCyclic2D,
+) -> Result<Vec<S::Real>> {
+    let n = a.rows();
+    if n != a.cols() {
+        return Err(Error::shape(format!("syevd needs square matrix, got {}x{}", n, a.cols())));
+    }
+    if n == 0 {
+        return Ok(vec![]);
+    }
+    let (p, q) = grid.grid();
+    let ndev = ctx.node.num_devices();
+    let esize = std::mem::size_of::<S>();
+
+    ctx.begin_phase();
+
+    // Host mirror of the whole matrix (one read per panel; charges are
+    // issued explicitly below, as in the 1D path's per-panel mirror).
+    let mut host = a.mirror_host()?;
+
+    let dev = |r: usize, c: usize| grid.device_of(r, c);
+    let row_members: Vec<Vec<usize>> =
+        (0..p).map(|r| (0..q).map(|c| dev(r, c)).collect()).collect();
+    // Per grid-row/-column local extents (the 2D shard shape).
+    let seg_rows: Vec<usize> = (0..p).map(|r| grid.row_dim().local_extent(r)).collect();
+    let loc_cols: Vec<usize> = (0..q).map(|c| grid.col_dim().local_extent(c)).collect();
+    let cd = grid.col_dim();
+    // Columns of each grid column group, in local storage order.
+    let group_cols: Vec<Vec<usize>> = (0..q)
+        .map(|c| {
+            let mut v = Vec::new();
+            for lj in 0..cd.count(c) {
+                let tc = cd.at(c, lj);
+                for jj in 0..cd.tile_len(tc) {
+                    v.push(cd.tile_start(tc) + jj);
+                }
+            }
+            v
+        })
+        .collect();
+
+    // ---- Stage 1: Householder tridiagonalization on the grid.
+    let mut reflectors: Vec<(Vec<S>, S)> = Vec::new();
+    for k in 0..n.saturating_sub(2) {
+        // Column k lives on the P devices of grid column `ck`.
+        let ck = cd.owner(k / cd.tile());
+        let ak = host.col(k).to_vec();
+
+        let mut xnorm_sq = <S::Real as RealScalar>::rzero();
+        for i in (k + 1)..n {
+            xnorm_sq = xnorm_sq + ak[i].abs_sqr();
+        }
+        // Reflector formation: each column-group member scans its row
+        // segment; the scalar norm allreduce rides the u broadcast.
+        for r in 0..p {
+            ctx.charge_device_time(
+                dev(r, ck),
+                ctx.model.blas2_time(((2 * (n - k) * esize).div_ceil(p)) as u64),
+                0,
+            )?;
+        }
+        let xnorm = xnorm_sq.rsqrt_val();
+        if xnorm.to_f64() == 0.0 {
+            reflectors.push((vec![S::zero(); n], S::zero()));
+            continue;
+        }
+        let alpha = ak[k + 1];
+        let aabs = alpha.abs();
+        let phase = if aabs.to_f64() == 0.0 {
+            S::one()
+        } else {
+            alpha * S::from_real(<S::Real as RealScalar>::rone() / aabs)
+        };
+        let beta = -phase * S::from_real(xnorm);
+        let mut u = vec![S::zero(); n];
+        let mut unorm_sq = <S::Real as RealScalar>::rzero();
+        for i in (k + 1)..n {
+            let ui = if i == k + 1 { ak[i] - beta } else { ak[i] };
+            u[i] = ui;
+            unorm_sq = unorm_sq + ui.abs_sqr();
+        }
+        if unorm_sq.to_f64() == 0.0 {
+            reflectors.push((u, S::zero()));
+            continue;
+        }
+        let tau = S::from_real(<S::Real as RealScalar>::from_f64(2.0) / unorm_sq);
+
+        // u is born row-distributed: each of the P column-group members
+        // broadcasts its row segment along its own grid row — P
+        // parallel group collectives of ≈ n/P words (vs one owner
+        // pushing n words in 1D).
+        for r in 0..p {
+            ctx.charge_group_broadcast(dev(r, ck), &row_members[r], seg_rows[r] * esize)?;
+        }
+
+        // Distributed matvec A·u: each device contracts its block;
+        // partial row segments reduce along grid rows to the owner
+        // column group.
+        let mut au = vec![S::zero(); n];
+        for c in 0..q {
+            let mut partial = vec![S::zero(); n];
+            for &g in &group_cols[c] {
+                let ug = u[g];
+                if ug == S::zero() {
+                    continue;
+                }
+                let colg = host.col(g);
+                for i in 0..n {
+                    partial[i] += colg[i] * ug;
+                }
+            }
+            for r in 0..p {
+                let blk = seg_rows[r] * loc_cols[c];
+                ctx.charge_device_time(
+                    dev(r, c),
+                    ctx.model.blas2_time((blk * esize) as u64),
+                    (2 * blk) as u64,
+                )?;
+                if c != ck {
+                    ctx.charge_p2p(dev(r, c), dev(r, ck), seg_rows[r] * esize)?;
+                }
+            }
+            for i in 0..n {
+                au[i] += partial[i];
+            }
+        }
+        // w fans back out the same way: P parallel row-group segments.
+        for r in 0..p {
+            ctx.charge_group_broadcast(dev(r, ck), &row_members[r], seg_rows[r] * esize)?;
+        }
+
+        let mut uhau = S::zero();
+        for i in (k + 1)..n {
+            uhau += u[i].conj() * au[i];
+        }
+        let half = S::from_f64(0.5);
+        let mut w = vec![S::zero(); n];
+        for i in 0..n {
+            w[i] = tau * au[i] - half * tau * tau * uhau * u[i];
+        }
+
+        // Rank-2 update, charged per device block.
+        for c in 0..q {
+            for &g in &group_cols[c] {
+                let wg = w[g].conj();
+                let ug = u[g].conj();
+                let colg = host.col_mut(g);
+                if wg != S::zero() || ug != S::zero() {
+                    for i in 0..n {
+                        colg[i] -= u[i] * wg + w[i] * ug;
+                    }
+                }
+            }
+            for r in 0..p {
+                let blk = seg_rows[r] * loc_cols[c];
+                ctx.charge_device_time(
+                    dev(r, c),
+                    ctx.model.blas2_time((2 * blk * esize) as u64),
+                    (4 * blk) as u64,
+                )?;
+            }
+        }
+
+        reflectors.push((u, tau));
+    }
+
+    // Tridiagonal extraction + realifying phase diagonal.
+    let mut d_diag = vec![<S::Real as RealScalar>::rzero(); n];
+    let mut e_sub = vec![<S::Real as RealScalar>::rzero(); n.saturating_sub(1)];
+    let mut phases = vec![S::one(); n];
+    {
+        let mut ph = S::one();
+        for i in 0..n {
+            d_diag[i] = host[(i, i)].re();
+        }
+        for k in 0..n.saturating_sub(1) {
+            let ek = host[(k + 1, k)];
+            let eabs = ek.abs();
+            e_sub[k] = eabs;
+            let phase = if eabs.to_f64() == 0.0 {
+                S::one()
+            } else {
+                ek * S::from_real(<S::Real as RealScalar>::rone() / eabs)
+            };
+            ph = ph * phase;
+            phases[k + 1] = ph;
+        }
+    }
+
+    // ---- Stage 2: tridiagonal QL on the lead device (unchanged).
+    let tri = Tridiagonal { d: d_diag, e: e_sub };
+    let mut z = Matrix::<S>::eye(n);
+    let values = tql2(&tri, &mut z)?;
+    ctx.charge_device_time(0, ctx.model.blas2_time((6 * n * n * esize) as u64), (6 * n * n * n) as u64)?;
+    ctx.charge_broadcast(0, n * n.div_ceil(ndev) * esize)?;
+
+    // ---- Stage 3: back-transform V = (H₀···H_{n-3})·D·Z.
+    let nrefl = reflectors.len();
+    for (c, cols) in group_cols.iter().enumerate() {
+        for &g in cols {
+            let dst = host.col_mut(g);
+            for i in 0..n {
+                dst[i] = phases[i] * z[(i, g)];
+            }
+            for (u, tau) in reflectors.iter().rev() {
+                if *tau == S::zero() {
+                    continue;
+                }
+                let mut uhv = S::zero();
+                for i in 0..n {
+                    uhv += u[i].conj() * dst[i];
+                }
+                let t = *tau * uhv;
+                for i in 0..n {
+                    dst[i] -= u[i] * t;
+                }
+            }
+        }
+        for r in 0..p {
+            let blk = seg_rows[r] * loc_cols[c];
+            ctx.charge_device_time(
+                dev(r, c),
+                ctx.model.blas2_time((4 * blk * esize) as u64) * nrefl.max(1) as f64,
+                (4 * blk * nrefl) as u64,
+            )?;
+        }
+        // Column-split reflector applications need their uᴴv partial
+        // dot products reduced along the grid column; charged per
+        // blocked group of tile_c reflectors (WY accumulation), so the
+        // per-reflector latency amortizes.
+        if p > 1 && nrefl > 0 {
+            let blocks = nrefl.div_ceil(grid.tile_c().max(1));
+            for r in 1..p {
+                for _ in 0..blocks {
+                    ctx.charge_p2p(dev(r, c), dev(0, c), loc_cols[c] * esize)?;
+                }
+            }
+        }
+    }
+
+    a.write_back_host(&host)?;
+    let _ = ctx.end_phase();
+    Ok(values)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -250,7 +533,7 @@ mod tests {
     use crate::linalg::{syevd_host, tol_for, FrobNorm};
     use crate::scalar::{c64, Scalar};
     use crate::solver::{Ctx, SolverBackend};
-    use crate::tile::Layout1D;
+    use crate::tile::{Layout1D, LayoutKind};
 
     fn run_syevd<S: Scalar>(n: usize, tile: usize, ndev: usize, seed: u64) {
         let node = SimNode::new_uniform(ndev, 1 << 26);
@@ -263,9 +546,12 @@ mod tests {
         let mut dm = DistMatrix::scatter(&node, &a, lay).unwrap();
         let vals = syevd_dist(&ctx, &mut dm).unwrap();
         let vecs = dm.gather().unwrap();
+        check_eigen(&a, &vals, &vecs, n, &format!("n={n} T={tile} d={ndev}"));
+    }
 
+    fn check_eigen<S: Scalar>(a: &Matrix<S>, vals: &[S::Real], vecs: &Matrix<S>, n: usize, what: &str) {
         // A·V = V·Λ
-        let av = a.matmul(&vecs);
+        let av = a.matmul(vecs);
         let mut vl = vecs.clone();
         for j in 0..n {
             let lam = S::from_real(vals[j]);
@@ -275,19 +561,32 @@ mod tests {
             }
         }
         let tol = tol_for::<S>(n) * 20.0;
-        assert!(av.rel_err(&vl) < tol, "A·V != V·Λ (n={n} T={tile} d={ndev} {:?}): {}", S::DTYPE, av.rel_err(&vl));
+        assert!(av.rel_err(&vl) < tol, "A·V != V·Λ ({what} {:?}): {}", S::DTYPE, av.rel_err(&vl));
         // Orthonormal columns.
-        let vhv = vecs.adjoint().matmul(&vecs);
+        let vhv = vecs.adjoint().matmul(vecs);
         assert!(vhv.rel_err(&Matrix::eye(n)) < tol);
         // Ascending and matching the host oracle.
-        let host = syevd_host(&a).unwrap();
+        let host = syevd_host(a).unwrap();
         for i in 0..n {
             assert!(
                 (vals[i].to_f64() - host.values[i].to_f64()).abs()
                     < tol * host.values[n - 1].to_f64().abs().max(1.0),
-                "eigenvalue {i} mismatch"
+                "eigenvalue {i} mismatch ({what})"
             );
         }
+    }
+
+    fn run_syevd_grid<S: Scalar>(n: usize, tr: usize, tc: usize, p: usize, q: usize, seed: u64) {
+        let node = SimNode::new_uniform(p * q, 1 << 26);
+        let model = GpuCostModel::h200();
+        let backend = SolverBackend::<S>::Native;
+        let ctx = Ctx::new(&node, &model, &backend);
+        let a = Matrix::<S>::hermitian_random(n, seed);
+        let lay = LayoutKind::Grid(crate::layout::BlockCyclic2D::new(n, n, tr, tc, p, q).unwrap());
+        let mut dm = DistMatrix::scatter(&node, &a, lay).unwrap();
+        let vals = syevd_dist(&ctx, &mut dm).unwrap();
+        let vecs = dm.gather().unwrap();
+        check_eigen(&a, &vals, &vecs, n, &format!("grid n={n} {tr}x{tc} {p}x{q}"));
     }
 
     #[test]
@@ -313,6 +612,55 @@ mod tests {
     #[test]
     fn syevd_single_device() {
         run_syevd::<f64>(16, 4, 1, 5);
+    }
+
+    #[test]
+    fn syevd_grid_2x2() {
+        run_syevd_grid::<f64>(16, 4, 4, 2, 2, 21);
+    }
+
+    #[test]
+    fn syevd_grid_ragged_and_complex() {
+        run_syevd_grid::<f64>(18, 4, 3, 2, 2, 22); // ragged edge tiles
+        run_syevd_grid::<c64>(12, 3, 3, 2, 2, 23);
+        run_syevd_grid::<f32>(10, 2, 2, 2, 2, 24);
+    }
+
+    #[test]
+    fn syevd_grid_3x2() {
+        run_syevd_grid::<f64>(18, 3, 3, 3, 2, 25);
+    }
+
+    #[test]
+    fn syevd_p1_grid_bitwise_matches_1d() {
+        // Acceptance: a 1×Q grid of full-height tiles must produce
+        // bitwise-identical eigenvalues and eigenvectors to the native
+        // 1D layout (it runs the same code path on the same storage).
+        let (n, t, ndev) = (20usize, 3usize, 4usize);
+        let a = Matrix::<f64>::hermitian_random(n, 26);
+        let model = GpuCostModel::h200();
+        let backend = SolverBackend::<f64>::Native;
+
+        let node1 = SimNode::new_uniform(ndev, 1 << 26);
+        let ctx1 = Ctx::new(&node1, &model, &backend);
+        let l1 = Layout1D::BlockCyclic(BlockCyclic1D::new(n, t, ndev).unwrap());
+        let mut d1 = DistMatrix::scatter(&node1, &a, l1).unwrap();
+        let v1 = syevd_dist(&ctx1, &mut d1).unwrap();
+
+        let node2 = SimNode::new_uniform(ndev, 1 << 26);
+        let ctx2 = Ctx::new(&node2, &model, &backend);
+        let l2 = LayoutKind::Grid(crate::layout::BlockCyclic2D::new(n, n, n, t, 1, ndev).unwrap());
+        let mut d2 = DistMatrix::scatter(&node2, &a, l2).unwrap();
+        let v2 = syevd_dist(&ctx2, &mut d2).unwrap();
+
+        assert_eq!(v1, v2, "P=1 grid changed eigenvalues");
+        assert_eq!(
+            d1.gather().unwrap().as_slice(),
+            d2.gather().unwrap().as_slice(),
+            "P=1 grid changed eigenvectors"
+        );
+        // Same schedule too: identical simulated makespans.
+        assert_eq!(node1.sim_time(), node2.sim_time());
     }
 
     #[test]
@@ -350,6 +698,23 @@ mod tests {
     }
 
     #[test]
+    fn syevd_grid_charges_all_devices() {
+        let node = SimNode::new_uniform(4, 1 << 26);
+        let model = GpuCostModel::h200();
+        let backend = SolverBackend::<f64>::Native;
+        let ctx = Ctx::new(&node, &model, &backend);
+        let a = Matrix::<f64>::hermitian_random(16, 27);
+        let lay = LayoutKind::Grid(crate::layout::BlockCyclic2D::new(16, 16, 4, 4, 2, 2).unwrap());
+        let mut dm = DistMatrix::scatter(&node, &a, lay).unwrap();
+        node.reset_accounting();
+        syevd_dist(&ctx, &mut dm).unwrap();
+        for d in 0..4 {
+            assert!(node.device(d).unwrap().clock().now() > 0.0, "device {d} idle");
+        }
+        assert!(node.metrics().snapshot().peer_bytes > 0);
+    }
+
+    #[test]
     fn syevd_pipelined_matches_barrier_and_shrinks_timeline() {
         use crate::solver::PipelineConfig;
         let run = |cfg: PipelineConfig| -> (Vec<f64>, Matrix<f64>, f64) {
@@ -369,6 +734,26 @@ mod tests {
         assert_eq!(v_barrier, v_look, "schedule changed eigenvalues");
         assert_eq!(z_barrier.as_slice(), z_look.as_slice(), "schedule changed eigenvectors");
         assert!(t_look < t_barrier, "pipelined syevd {t_look} !< barrier {t_barrier}");
+    }
+
+    #[test]
+    fn syevd_grid_pipelined_matches_barrier() {
+        use crate::solver::PipelineConfig;
+        let run = |cfg: PipelineConfig| -> (Vec<f64>, Matrix<f64>) {
+            let node = SimNode::new_uniform(4, 1 << 26);
+            let model = GpuCostModel::h200();
+            let backend = SolverBackend::<f64>::Native;
+            let a = Matrix::<f64>::hermitian_random(16, 33);
+            let lay = LayoutKind::Grid(crate::layout::BlockCyclic2D::new(16, 16, 4, 4, 2, 2).unwrap());
+            let mut dm = DistMatrix::scatter(&node, &a, lay).unwrap();
+            let ctx = Ctx::with_pipeline(&node, &model, &backend, cfg);
+            let vals = syevd_dist(&ctx, &mut dm).unwrap();
+            (vals, dm.gather().unwrap())
+        };
+        let (v_barrier, z_barrier) = run(PipelineConfig::barrier());
+        let (v_look, z_look) = run(PipelineConfig::lookahead(2));
+        assert_eq!(v_barrier, v_look, "schedule changed grid eigenvalues");
+        assert_eq!(z_barrier.as_slice(), z_look.as_slice(), "schedule changed grid eigenvectors");
     }
 
     #[test]

@@ -1,67 +1,205 @@
-//! Distributed matrix storage: one contiguous column panel per device.
+//! Distributed matrix storage: one contiguous panel per device.
 //!
-//! A [`DistMatrix`] is an `rows × n` matrix whose columns are spread
-//! over the node's devices according to a [`ColumnLayout`]. Device `d`
-//! holds a single allocation of `rows × local_cols(d)` scalars in
-//! column-major order — the same storage contract cuSOLVERMg imposes
-//! (`array_d_A`: one pointer per device, columns contiguous).
+//! A [`DistMatrix`] is an `rows × n` matrix spread over the node's
+//! devices according to a [`LayoutKind`] handle:
+//!
+//! * **columnar** kinds ([`ContiguousBlock`], [`BlockCyclic1D`]):
+//!   device `d` holds `rows × local_cols(d)` scalars in column-major
+//!   order — the storage contract cuSOLVERMg imposes (`array_d_A`: one
+//!   pointer per device, columns contiguous);
+//! * **tile-grid** kinds ([`BlockCyclic2D`], [`ContiguousGrid2D`]):
+//!   device `(r, c)` holds `local_rows × local_cols` scalars in
+//!   tile-major order (tile columns left to right, tiles top to bottom
+//!   within a tile column, each tile contiguous column-major). A
+//!   `P = 1` grid of full-height tiles stores **bitwise identically**
+//!   to the columnar contract, which is what lets the 1D solvers run
+//!   unchanged on such handles via [`LayoutKind::compat_1d`].
 
 use crate::device::{DevPtr, SimNode};
 use crate::error::{Error, Result};
-use crate::layout::{BlockCyclic1D, ColumnLayout, ContiguousBlock};
+use crate::layout::{
+    BlockCyclic1D, BlockCyclic2D, ColumnLayout, ContiguousBlock, ContiguousGrid2D, MatrixLayout,
+};
 use crate::linalg::Matrix;
 use crate::scalar::Scalar;
 
-/// The concrete 1D layouts a distributed matrix can be in.
+/// The concrete layouts a distributed matrix can be in.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
-pub enum Layout1D {
-    /// JAX shard_map input layout: contiguous per-device blocks.
+pub enum LayoutKind {
+    /// JAX shard_map input layout: contiguous per-device column blocks.
     Contiguous(ContiguousBlock),
-    /// cuSOLVERMg compute layout: 1D block-cyclic tiles.
+    /// cuSOLVERMg compute layout: 1D block-cyclic column tiles.
     BlockCyclic(BlockCyclic1D),
+    /// 2D block-cyclic tile grid (the paper's future-work layout).
+    Grid(BlockCyclic2D),
+    /// 2D-mesh shard input layout: blocked tile grid.
+    GridContig(ContiguousGrid2D),
 }
 
-impl Layout1D {
-    /// Borrow as the layout trait object.
-    pub fn as_layout(&self) -> &dyn ColumnLayout {
+/// Historical name of [`LayoutKind`] from before the 2D generalization;
+/// existing callers construct `Layout1D::Contiguous(..)` etc. through
+/// this alias.
+pub type Layout1D = LayoutKind;
+
+/// One contiguous piece of a global column inside a device panel (a
+/// tile-row segment; columnar layouts have exactly one per column).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct ColSeg {
+    /// First global row covered.
+    pub r0: usize,
+    /// Rows covered.
+    pub len: usize,
+    /// Owning device.
+    pub dev: usize,
+    /// Offset (in scalars) of the segment start within the panel.
+    pub elem_off: usize,
+}
+
+impl LayoutKind {
+    /// Total columns distributed.
+    pub fn n_cols(&self) -> usize {
         match self {
-            Layout1D::Contiguous(l) => l,
-            Layout1D::BlockCyclic(l) => l,
+            LayoutKind::Contiguous(l) => l.n_cols(),
+            LayoutKind::BlockCyclic(l) => l.n_cols(),
+            LayoutKind::Grid(l) => l.shape().1,
+            LayoutKind::GridContig(l) => l.shape().1,
         }
     }
 
-    /// The block-cyclic descriptor, if that is the current layout.
+    /// Devices spanned by the layout.
+    pub fn num_devices(&self) -> usize {
+        match self {
+            LayoutKind::Contiguous(l) => ColumnLayout::num_devices(l),
+            LayoutKind::BlockCyclic(l) => ColumnLayout::num_devices(l),
+            LayoutKind::Grid(l) => MatrixLayout::num_devices(l),
+            LayoutKind::GridContig(l) => MatrixLayout::num_devices(l),
+        }
+    }
+
+    /// Borrow the 1D column-layout view, for columnar kinds only.
+    pub fn column(&self) -> Option<&dyn ColumnLayout> {
+        match self {
+            LayoutKind::Contiguous(l) => Some(l),
+            LayoutKind::BlockCyclic(l) => Some(l),
+            _ => None,
+        }
+    }
+
+    /// Borrow the tile-grid view, for grid kinds only.
+    pub fn matrix_layout(&self) -> Option<&dyn MatrixLayout> {
+        match self {
+            LayoutKind::Grid(l) => Some(l),
+            LayoutKind::GridContig(l) => Some(l),
+            _ => None,
+        }
+    }
+
+    /// The 1D block-cyclic descriptor, if that is the current layout.
     pub fn as_block_cyclic(&self) -> Option<&BlockCyclic1D> {
         match self {
-            Layout1D::BlockCyclic(l) => Some(l),
-            Layout1D::Contiguous(_) => None,
+            LayoutKind::BlockCyclic(l) => Some(l),
+            _ => None,
+        }
+    }
+
+    /// The 2D block-cyclic descriptor, if that is the current layout.
+    pub fn grid2d(&self) -> Option<&BlockCyclic2D> {
+        match self {
+            LayoutKind::Grid(l) => Some(l),
+            _ => None,
+        }
+    }
+
+    /// The 1D block-cyclic *compatibility view* for a matrix with
+    /// `rows` rows: the layout the 1D solvers (`potrf`/`potrs`/`potri`
+    /// and `syevd`'s 1D path) run on. Covers the native 1D kind and any
+    /// `P = 1` grid of full-height tiles — whose storage is bitwise
+    /// identical, so the solvers need no code changes.
+    pub fn compat_1d(&self, rows: usize) -> Option<BlockCyclic1D> {
+        match self {
+            LayoutKind::BlockCyclic(l) => Some(*l),
+            LayoutKind::Grid(g) if g.rows() == rows => g.as_column_layout(),
+            _ => None,
+        }
+    }
+
+    /// Scalars stored on device `d` for a matrix with `rows` rows.
+    pub fn local_elems(&self, rows: usize, d: usize) -> usize {
+        match self {
+            LayoutKind::Contiguous(l) => rows * l.local_cols(d),
+            LayoutKind::BlockCyclic(l) => rows * l.local_cols(d),
+            LayoutKind::Grid(l) => l.local_elems(d),
+            LayoutKind::GridContig(l) => l.local_elems(d),
+        }
+    }
+
+    /// The contiguous panel segments of global column `j`, in ascending
+    /// row order. Columnar layouts yield one full-height segment; grid
+    /// layouts one segment per tile row (a tile's column is contiguous
+    /// inside the tile block).
+    pub fn col_segments(&self, rows: usize, j: usize) -> Vec<ColSeg> {
+        match self {
+            LayoutKind::Contiguous(_) | LayoutKind::BlockCyclic(_) => {
+                let l = self.column().expect("columnar kind");
+                let (dev, loc) = l.place(j);
+                vec![ColSeg { r0: 0, len: rows, dev, elem_off: loc * rows }]
+            }
+            LayoutKind::Grid(_) | LayoutKind::GridContig(_) => {
+                let g = self.matrix_layout().expect("grid kind");
+                let rd = g.row_dim();
+                let mut segs = Vec::with_capacity(rd.num_tiles());
+                for tr in 0..rd.num_tiles() {
+                    let (dev, off) = g.place_elem(rd.tile_start(tr), j);
+                    segs.push(ColSeg {
+                        r0: rd.tile_start(tr),
+                        len: rd.tile_len(tr),
+                        dev,
+                        elem_off: off,
+                    });
+                }
+                segs
+            }
+        }
+    }
+
+    /// Whether the layout's row extent matches a `rows`-high matrix
+    /// (columnar kinds carry no row extent and always match).
+    pub fn rows_match(&self, rows: usize) -> bool {
+        match self {
+            LayoutKind::Contiguous(_) | LayoutKind::BlockCyclic(_) => true,
+            LayoutKind::Grid(l) => l.shape().0 == rows,
+            LayoutKind::GridContig(l) => l.shape().0 == rows,
         }
     }
 }
 
-/// A matrix distributed column-wise over the simulated node.
+/// A matrix distributed over the simulated node.
 pub struct DistMatrix<S: Scalar> {
     node: SimNode,
     rows: usize,
-    layout: Layout1D,
+    layout: LayoutKind,
     panels: Vec<DevPtr>,
     _marker: std::marker::PhantomData<S>,
 }
 
 impl<S: Scalar> DistMatrix<S> {
     /// Allocate (zero-initialized) panels for `rows × layout.n_cols()`.
-    pub fn alloc(node: &SimNode, rows: usize, layout: Layout1D) -> Result<Self> {
-        let l = layout.as_layout();
-        if l.num_devices() != node.num_devices() {
+    pub fn alloc(node: &SimNode, rows: usize, layout: LayoutKind) -> Result<Self> {
+        if layout.num_devices() != node.num_devices() {
             return Err(Error::layout(format!(
                 "layout spans {} devices but node has {}",
-                l.num_devices(),
+                layout.num_devices(),
                 node.num_devices()
+            )));
+        }
+        if !layout.rows_match(rows) {
+            return Err(Error::shape(format!(
+                "grid layout distributes a different row count than the matrix's {rows}"
             )));
         }
         let mut panels = Vec::with_capacity(node.num_devices());
         for d in 0..node.num_devices() {
-            let len = rows * l.local_cols(d);
+            let len = layout.local_elems(rows, d);
             // Always allocate (possibly zero-length) so indices line up.
             let ptr = node.alloc_scalars::<S>(d, len)?;
             panels.push(ptr);
@@ -71,51 +209,136 @@ impl<S: Scalar> DistMatrix<S> {
 
     /// Scatter a host matrix onto the devices in the given layout
     /// (the `jax.device_put` analogue).
-    pub fn scatter(node: &SimNode, host: &Matrix<S>, layout: Layout1D) -> Result<Self> {
-        let l = layout.as_layout();
-        if host.cols() != l.n_cols() {
+    pub fn scatter(node: &SimNode, host: &Matrix<S>, layout: LayoutKind) -> Result<Self> {
+        if host.cols() != layout.n_cols() {
             return Err(Error::shape(format!(
                 "matrix has {} cols but layout distributes {}",
                 host.cols(),
-                l.n_cols()
+                layout.n_cols()
             )));
         }
         let dm = Self::alloc(node, host.rows(), layout)?;
         // Build each device's panel host-side, then one H2D write per device.
         for d in 0..node.num_devices() {
-            let lc = l.local_cols(d);
-            if lc == 0 {
+            let panel = dm.build_panel_from(host, d);
+            if panel.is_empty() {
                 continue;
             }
-            let mut panel = Vec::with_capacity(dm.rows * lc);
-            for loc in 0..lc {
-                let g = l.global_index(d, loc);
-                panel.extend_from_slice(host.col(g));
-            }
             node.write_slice(dm.panels[d], 0, &panel)?;
-            node.charge_h2d(d, panel.len() * std::mem::size_of::<S>())?;
+            node.charge_h2d(d, std::mem::size_of_val(panel.as_slice()))?;
         }
         Ok(dm)
     }
 
     /// Gather back to a host matrix (the `jax.device_get` analogue).
     pub fn gather(&self) -> Result<Matrix<S>> {
-        let l = self.layout.as_layout();
-        let mut host = Matrix::<S>::zeros(self.rows, l.n_cols());
+        let mut host = Matrix::<S>::zeros(self.rows, self.layout.n_cols());
         for d in 0..self.node.num_devices() {
-            let lc = l.local_cols(d);
-            if lc == 0 {
+            let len = self.layout.local_elems(self.rows, d);
+            if len == 0 {
                 continue;
             }
-            let mut panel = vec![S::zero(); self.rows * lc];
+            let mut panel = vec![S::zero(); len];
             self.node.read_slice(self.panels[d], 0, &mut panel)?;
-            self.node.charge_h2d(d, panel.len() * std::mem::size_of::<S>())?;
-            for loc in 0..lc {
-                let g = l.global_index(d, loc);
-                host.col_mut(g).copy_from_slice(&panel[loc * self.rows..(loc + 1) * self.rows]);
-            }
+            self.node.charge_h2d(d, std::mem::size_of_val(panel.as_slice()))?;
+            self.spread_panel_into(&mut host, d, &panel);
         }
         Ok(host)
+    }
+
+    /// Device `d`'s panel contents for `host`, in storage order.
+    fn build_panel_from(&self, host: &Matrix<S>, d: usize) -> Vec<S> {
+        let len = self.layout.local_elems(self.rows, d);
+        let mut panel = Vec::with_capacity(len);
+        match &self.layout {
+            LayoutKind::Contiguous(_) | LayoutKind::BlockCyclic(_) => {
+                let l = self.layout.column().expect("columnar kind");
+                for loc in 0..l.local_cols(d) {
+                    panel.extend_from_slice(host.col(l.global_index(d, loc)));
+                }
+            }
+            LayoutKind::Grid(_) | LayoutKind::GridContig(_) => {
+                let g = self.layout.matrix_layout().expect("grid kind");
+                for ord in 0..g.tiles_on(d) {
+                    let (tr, tc) = g.tile_at(d, ord);
+                    let (h, w) = g.tile_dims(tr, tc);
+                    let (r0, c0) = (g.row_dim().tile_start(tr), g.col_dim().tile_start(tc));
+                    for jj in 0..w {
+                        let col = host.col(c0 + jj);
+                        panel.extend_from_slice(&col[r0..r0 + h]);
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(panel.len(), len);
+        panel
+    }
+
+    /// Inverse of [`DistMatrix::build_panel_from`].
+    fn spread_panel_into(&self, host: &mut Matrix<S>, d: usize, panel: &[S]) {
+        match &self.layout {
+            LayoutKind::Contiguous(_) | LayoutKind::BlockCyclic(_) => {
+                let l = self.layout.column().expect("columnar kind");
+                for loc in 0..l.local_cols(d) {
+                    let g = l.global_index(d, loc);
+                    host.col_mut(g)
+                        .copy_from_slice(&panel[loc * self.rows..(loc + 1) * self.rows]);
+                }
+            }
+            LayoutKind::Grid(_) | LayoutKind::GridContig(_) => {
+                let g = self.layout.matrix_layout().expect("grid kind");
+                let mut off = 0usize;
+                for ord in 0..g.tiles_on(d) {
+                    let (tr, tc) = g.tile_at(d, ord);
+                    let (h, w) = g.tile_dims(tr, tc);
+                    let (r0, c0) = (g.row_dim().tile_start(tr), g.col_dim().tile_start(tc));
+                    for jj in 0..w {
+                        host.col_mut(c0 + jj)[r0..r0 + h].copy_from_slice(&panel[off..off + h]);
+                        off += h;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Host mirror of the whole matrix *without* the H2D timing charge —
+    /// the staging path distributed kernels use (like
+    /// [`DistMatrix::read_block`], charges are issued explicitly by the
+    /// solver's cost accounting; see `device::SimNode::write_slice`).
+    pub fn mirror_host(&self) -> Result<Matrix<S>> {
+        let mut host = Matrix::<S>::zeros(self.rows, self.layout.n_cols());
+        for d in 0..self.node.num_devices() {
+            let len = self.layout.local_elems(self.rows, d);
+            if len == 0 {
+                continue;
+            }
+            let mut panel = vec![S::zero(); len];
+            self.node.read_slice(self.panels[d], 0, &mut panel)?;
+            self.spread_panel_into(&mut host, d, &panel);
+        }
+        Ok(host)
+    }
+
+    /// Write a full host mirror back to the device panels (the inverse
+    /// of [`DistMatrix::mirror_host`]; no timing charge).
+    pub fn write_back_host(&self, host: &Matrix<S>) -> Result<()> {
+        if host.rows() != self.rows || host.cols() != self.layout.n_cols() {
+            return Err(Error::shape(format!(
+                "mirror is {}x{} but the distributed matrix is {}x{}",
+                host.rows(),
+                host.cols(),
+                self.rows,
+                self.layout.n_cols()
+            )));
+        }
+        for d in 0..self.node.num_devices() {
+            let panel = self.build_panel_from(host, d);
+            if panel.is_empty() {
+                continue;
+            }
+            self.node.write_slice(self.panels[d], 0, &panel)?;
+        }
+        Ok(())
     }
 
     /// Panel height (matrix rows).
@@ -125,11 +348,11 @@ impl<S: Scalar> DistMatrix<S> {
 
     /// Total columns.
     pub fn cols(&self) -> usize {
-        self.layout.as_layout().n_cols()
+        self.layout.n_cols()
     }
 
     /// Current layout descriptor.
-    pub fn layout(&self) -> &Layout1D {
+    pub fn layout(&self) -> &LayoutKind {
         &self.layout
     }
 
@@ -144,26 +367,27 @@ impl<S: Scalar> DistMatrix<S> {
         &self.panels
     }
 
-    /// Byte offset of local column `loc` within its device panel.
+    /// Byte offset of local column `loc` within its device panel
+    /// (columnar storage).
     #[inline]
     pub fn col_byte_offset(&self, loc: usize) -> usize {
         loc * self.rows * std::mem::size_of::<S>()
     }
 
-    /// Bytes per column.
+    /// Bytes per full-height column.
     #[inline]
     pub fn col_bytes(&self) -> usize {
         self.rows * std::mem::size_of::<S>()
     }
 
     /// Replace the layout descriptor (used by the redistributor after
-    /// it has physically permuted the columns).
-    pub(crate) fn set_layout(&mut self, layout: Layout1D) {
+    /// it has physically permuted the storage).
+    pub(crate) fn set_layout(&mut self, layout: LayoutKind) {
         self.layout = layout;
     }
 
     /// Swap the panel pointers (used by out-of-place redistribution).
-    pub(crate) fn replace_panels(&mut self, panels: Vec<DevPtr>, layout: Layout1D) -> Result<()> {
+    pub(crate) fn replace_panels(&mut self, panels: Vec<DevPtr>, layout: LayoutKind) -> Result<()> {
         for &old in &self.panels {
             self.node.free(old)?;
         }
@@ -174,7 +398,9 @@ impl<S: Scalar> DistMatrix<S> {
 
     /// Read a host copy of a row-range × column-range of one device's
     /// panel: `rows r0..r0+nr` of local columns `c0..c0+nc`.
-    /// This is the staging path tile kernels use to feed XLA executables.
+    /// This is the staging path tile kernels use to feed XLA
+    /// executables. Valid for columnar storage (including `P = 1` grids,
+    /// whose storage is bitwise columnar).
     pub fn read_block(&self, dev: usize, r0: usize, nr: usize, c0: usize, nc: usize) -> Result<Matrix<S>> {
         let mut out = Matrix::<S>::zeros(nr, nc);
         for j in 0..nc {
@@ -185,7 +411,8 @@ impl<S: Scalar> DistMatrix<S> {
         Ok(out)
     }
 
-    /// Write a host block back into one device's panel.
+    /// Write a host block back into one device's panel (columnar
+    /// storage; see [`DistMatrix::read_block`]).
     pub fn write_block(&self, dev: usize, r0: usize, c0: usize, block: &Matrix<S>) -> Result<()> {
         for j in 0..block.cols() {
             let off = (c0 + j) * self.rows + r0;
@@ -243,6 +470,80 @@ mod tests {
     }
 
     #[test]
+    fn scatter_gather_grid_roundtrip() {
+        let node = node4();
+        // Ragged both ways: 10×14 in 4×3 tiles on a 2×2 grid.
+        let a = Matrix::<f64>::random(10, 14, 3);
+        let layout = LayoutKind::Grid(BlockCyclic2D::new(10, 14, 4, 3, 2, 2).unwrap());
+        let dm = DistMatrix::scatter(&node, &a, layout).unwrap();
+        assert_eq!(dm.gather().unwrap(), a);
+        // And the blocked grid deal.
+        let layout2 = LayoutKind::GridContig(ContiguousGrid2D::new(10, 14, 4, 3, 2, 2).unwrap());
+        let dm2 = DistMatrix::scatter(&node, &a, layout2).unwrap();
+        assert_eq!(dm2.gather().unwrap(), a);
+    }
+
+    #[test]
+    fn grid_p1_storage_is_bitwise_columnar() {
+        // A P=1 grid of full-height tiles must produce panels bitwise
+        // identical to the 1D block-cyclic layout's.
+        let node = node4();
+        let (m, n, t) = (6, 12, 2);
+        let a = Matrix::<f32>::random(m, n, 4);
+        let l1 = LayoutKind::BlockCyclic(BlockCyclic1D::new(n, t, 4).unwrap());
+        let l2 = LayoutKind::Grid(BlockCyclic2D::new(m, n, m, t, 1, 4).unwrap());
+        let d1 = DistMatrix::scatter(&node, &a, l1).unwrap();
+        let d2 = DistMatrix::scatter(&node, &a, l2).unwrap();
+        for d in 0..4 {
+            let len = l1.local_elems(m, d);
+            assert_eq!(len, l2.local_elems(m, d));
+            let mut p1 = vec![0.0f32; len];
+            let mut p2 = vec![0.0f32; len];
+            node.read_slice(d1.panels()[d], 0, &mut p1).unwrap();
+            node.read_slice(d2.panels()[d], 0, &mut p2).unwrap();
+            assert_eq!(p1, p2, "panel {d} differs between 1D and P=1 grid storage");
+        }
+        // And the compatibility view reproduces the 1D descriptor.
+        assert_eq!(l2.compat_1d(m), Some(BlockCyclic1D::new(n, t, 4).unwrap()));
+    }
+
+    #[test]
+    fn mirror_and_write_back_roundtrip() {
+        let node = node4();
+        let a = Matrix::<f64>::random(9, 9, 5);
+        let layout = LayoutKind::Grid(BlockCyclic2D::new(9, 9, 2, 3, 2, 2).unwrap());
+        let dm = DistMatrix::scatter(&node, &a, layout).unwrap();
+        let m = dm.mirror_host().unwrap();
+        assert_eq!(m, a);
+        let b = Matrix::<f64>::random(9, 9, 6);
+        dm.write_back_host(&b).unwrap();
+        assert_eq!(dm.gather().unwrap(), b);
+        assert!(dm.write_back_host(&Matrix::<f64>::zeros(3, 3)).is_err());
+    }
+
+    #[test]
+    fn col_segments_cover_each_column() {
+        let rows = 10;
+        let lays = [
+            LayoutKind::BlockCyclic(BlockCyclic1D::new(14, 3, 4).unwrap()),
+            LayoutKind::Grid(BlockCyclic2D::new(rows, 14, 4, 3, 2, 2).unwrap()),
+            LayoutKind::GridContig(ContiguousGrid2D::new(rows, 14, 4, 3, 2, 2).unwrap()),
+        ];
+        for lay in &lays {
+            for j in 0..14 {
+                let segs = lay.col_segments(rows, j);
+                let mut next = 0usize;
+                for s in &segs {
+                    assert_eq!(s.r0, next, "segments must tile the column in order");
+                    assert!(s.len > 0);
+                    next += s.len;
+                }
+                assert_eq!(next, rows);
+            }
+        }
+    }
+
+    #[test]
     fn block_read_write() {
         let node = node4();
         let a = Matrix::<f32>::random(8, 8, 3);
@@ -267,6 +568,9 @@ mod tests {
         let a = Matrix::<f64>::zeros(4, 5);
         let layout = Layout1D::Contiguous(ContiguousBlock::new(6, 4).unwrap());
         assert!(DistMatrix::scatter(&node, &a, layout).is_err());
+        // Grid row extent must match the matrix height.
+        let g = LayoutKind::Grid(BlockCyclic2D::new(8, 5, 2, 2, 2, 2).unwrap());
+        assert!(DistMatrix::scatter(&node, &a, g).is_err());
     }
 
     #[test]
