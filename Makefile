@@ -9,11 +9,14 @@
 #   make bench      all benches   |   make e2e  end-to-end driver
 #   make bench-redist  redistribution bench in smoke/test mode (small
 #                      shapes, same asserted invariants — CI-friendly)
+#   make bench-batch   batched small-solve bench in smoke/test mode:
+#                      coalesced pod sweeps vs serial distributed path
+#                      (asserts the batched makespan win — CI-friendly)
 
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test check clippy fmt python-tests test-xla bench bench-redist e2e artifacts clean
+.PHONY: build test check clippy fmt python-tests test-xla bench bench-redist bench-batch e2e artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -59,6 +62,11 @@ bench:
 # shrinks the shapes but keeps every content/path assertion.
 bench-redist:
 	REDIST_BENCH_SMOKE=1 $(CARGO) bench --bench redistribution
+
+# The batching bench doubles as an integration test too: smoke mode
+# shrinks the workload but keeps the batched-beats-serial assertions.
+bench-batch:
+	BATCH_BENCH_SMOKE=1 $(CARGO) bench --bench batching
 
 e2e:
 	$(CARGO) run --release --example e2e_driver

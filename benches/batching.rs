@@ -1,0 +1,162 @@
+//! Batched small-solve throughput: the coalesced pod sweep against the
+//! serial one-at-a-time distributed path.
+//!
+//! Three sections, each printing measured (CPU) and projected
+//! (cost-model) numbers:
+//!
+//! 1. **sweep vs serial** — a B-solve small-matrix workload through the
+//!    fused pod sweeps vs B back-to-back distributed solves; asserts
+//!    the batched projected makespan is *strictly* smaller (the
+//!    acceptance claim) and that both paths agree numerically.
+//! 2. **service** — the same stream end-to-end through
+//!    `SolveService::submit_small`, coalescing on vs forced
+//!    distributed; reports bucket occupancy and coalesce waits.
+//! 3. **cost model** — the `Predictor::batched_crossover` ladder: the
+//!    per-size-class batched/serial makespans and the class where
+//!    batching stops winning.
+//!
+//! `BATCH_BENCH_SMOKE=1` shrinks the workload for `make bench-batch`
+//! (CI test mode); every asserted invariant is identical.
+
+use jaxmg::batch::{potrf_batched, potrs_batched, PackedPod, SmallRoutine};
+use jaxmg::coordinator::SmallConfig;
+use jaxmg::costmodel::{GpuCostModel, Predictor};
+use jaxmg::layout::BlockCyclic1D;
+use jaxmg::linalg::Matrix;
+use jaxmg::prelude::*;
+use jaxmg::scalar::DType;
+use jaxmg::solver::{potrf_dist, potrs_dist, Ctx};
+use jaxmg::tile::{DistMatrix, Layout1D};
+use std::time::Instant;
+
+fn main() {
+    let smoke = std::env::var_os("BATCH_BENCH_SMOKE").is_some();
+    let b = if smoke { 64 } else { 256 };
+    let ndev = 8usize;
+    let model = GpuCostModel::h200();
+    let backend = SolverBackend::<f64>::Native;
+
+    println!("== batched pod sweep vs serial distributed ({b} solves, 8 devices, f64) ==\n");
+    println!(
+        "{:>4} {:>9} {:>12} {:>12} {:>8} {:>10} {:>10}",
+        "n", "wall[ms]", "batch[ms]", "serial[ms]", "speedup", "launches", "peerB"
+    );
+    for &n in &[16usize, 32, 64] {
+        let systems: Vec<Matrix<f64>> =
+            (0..b).map(|i| Matrix::spd_random(n, i as u64)).collect();
+        let rhss: Vec<Matrix<f64>> =
+            (0..b).map(|i| Matrix::random(n, 1, 4000 + i as u64)).collect();
+
+        // Batched: pack → fused potrf/potrs sweeps → gather.
+        let node_b = SimNode::new_uniform(ndev, 1 << 28);
+        let ctx_b = Ctx::new(&node_b, &model, &backend);
+        let t0 = Instant::now();
+        let mut pod = PackedPod::pack(&node_b, &systems).unwrap();
+        let mut pod_rhs = PackedPod::pack(&node_b, &rhss).unwrap();
+        potrf_batched(&ctx_b, &mut pod).unwrap();
+        potrs_batched(&ctx_b, &pod, &mut pod_rhs).unwrap();
+        let batched = pod_rhs.gather().unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let t_batched = node_b.sim_time();
+        let mb = node_b.metrics().snapshot();
+
+        // Serial: B full distributed solves back to back.
+        let node_s = SimNode::new_uniform(ndev, 1 << 28);
+        let ctx_s = Ctx::new(&node_s, &model, &backend);
+        let lay = Layout1D::BlockCyclic(BlockCyclic1D::new(n, (n / 2).max(1), ndev).unwrap());
+        let mut serial = Vec::with_capacity(b);
+        for i in 0..b {
+            let mut dm = DistMatrix::scatter(&node_s, &systems[i], lay).unwrap();
+            potrf_dist(&ctx_s, &mut dm).unwrap();
+            serial.push(potrs_dist(&ctx_s, &dm, &rhss[i]).unwrap());
+            dm.free().unwrap();
+        }
+        let t_serial = node_s.sim_time();
+
+        println!(
+            "{n:>4} {:>9.2} {:>12.4} {:>12.4} {:>7.0}x {:>10} {:>10}",
+            wall * 1e3,
+            t_batched * 1e3,
+            t_serial * 1e3,
+            t_serial / t_batched,
+            mb.kernel_launches,
+            mb.peer_bytes,
+        );
+        assert!(
+            t_batched < t_serial,
+            "batched {t_batched} !< serial {t_serial} at n={n}"
+        );
+        assert_eq!(mb.peer_bytes, 0, "pod sweeps must move no peer bytes");
+        for i in 0..b {
+            let diff = batched[i].sub(&serial[i]).norm_fro() / serial[i].norm_fro().max(1e-300);
+            assert!(diff < 1e-9, "paths disagree at n={n}, solve {i}: {diff}");
+        }
+    }
+
+    // ---- end-to-end through the service ------------------------------
+    println!("\n== SolveService::submit_small: coalescing on vs forced distributed ==\n");
+    println!(
+        "{:>4} {:>12} {:>12} {:>8} {:>9} {:>12}",
+        "n", "batch[ms]", "serial[ms]", "speedup", "buckets", "occupancy"
+    );
+    for &n in &[12usize, 24] {
+        let systems: Vec<Matrix<f64>> =
+            (0..b).map(|i| Matrix::spd_random(n, 77 + i as u64)).collect();
+        let rhss: Vec<Matrix<f64>> =
+            (0..b).map(|i| Matrix::random(n, 1, 7000 + i as u64)).collect();
+        let run = |small_dim: usize| {
+            let node = SimNode::new_uniform(4, 1 << 28);
+            let mut cfg = SmallConfig::with_tile(16);
+            cfg.policy.max_batch = 32;
+            cfg.policy.small_dim = small_dim;
+            let svc = SolveService::with_small_config(node.clone(), 2, cfg);
+            let handles: Vec<_> = systems
+                .iter()
+                .zip(&rhss)
+                .map(|(a, rhs)| {
+                    svc.submit_small(SmallRoutine::Potrs, a.clone(), Some(rhs.clone())).unwrap()
+                })
+                .collect();
+            svc.flush_small();
+            for h in handles {
+                let _ = h.wait();
+            }
+            svc.drain();
+            (node.sim_time(), node.metrics().snapshot())
+        };
+        let (t_on, m_on) = run(4 * 16);
+        let (t_off, m_off) = run(0);
+        println!(
+            "{n:>4} {:>12.4} {:>12.4} {:>7.1}x {:>9} {:>12.1}",
+            t_on * 1e3,
+            t_off * 1e3,
+            t_off / t_on,
+            m_on.batch_buckets,
+            m_on.avg_batch_occupancy(),
+        );
+        assert!(t_on < t_off, "service batched {t_on} !< distributed {t_off} at n={n}");
+        assert_eq!(m_on.batch_solves, b as u64);
+        assert_eq!(m_off.batch_solves, 0);
+    }
+
+    // ---- the cost-model ladder ---------------------------------------
+    println!("\n== Predictor: batched vs serial by size-class (T_A=256, 8 dev, 32-way) ==\n");
+    println!("{:>8} {:>14} {:>14} {:>8}", "class", "batched[ms]", "serial[ms]", "wins");
+    let p = Predictor::h200(8, DType::F64);
+    let mut n = 16usize;
+    while n <= 65536 {
+        let pod = p.pod_sweep("potrs", n, 1, 8, 32);
+        let serial = p.small_serial("potrs", n, 1, 256, 8, 32);
+        println!(
+            "{n:>8} {:>14.4} {:>14.4} {:>8}",
+            pod * 1e3,
+            serial * 1e3,
+            if pod < serial { "yes" } else { "no" }
+        );
+        n *= 4;
+    }
+    let crossover = p.batched_crossover("potrs", 1, 256, 8, 32);
+    println!("\ncrossover class (batching stops winning): {crossover}");
+    assert_eq!(crossover, 32768);
+    println!("\nbatching bench OK");
+}

@@ -1,0 +1,294 @@
+//! Request coalescing: buckets of queued small solves, flushed into
+//! batched sweeps under a latency bound.
+//!
+//! The planner is pure bookkeeping — it never touches matrices, so the
+//! service layer can keep per-request payloads type-erased and the
+//! planner stays trivially unit-testable. Requests are keyed by
+//! [`BucketKey`] (routine × dtype × power-of-two [`size_class`]); a
+//! bucket flushes when
+//!
+//! * it reaches [`BatchPolicy::max_batch`] requests (flushed by the
+//!   submit that filled it), or
+//! * its **oldest** request has dwelled longer than
+//!   [`BatchPolicy::max_dwell_ns`] in *cost-model nanoseconds* (the
+//!   simulated clock — the latency bound is a promise about the
+//!   modeled system) **or** longer than [`BatchPolicy::max_wall_dwell`]
+//!   of real time (the liveness backstop: purely coalesced traffic
+//!   charges nothing, so the simulated clock alone could freeze and
+//!   strand a bucket forever), checked by [`BatchPlanner::due`] on
+//!   every subsequent submit and on drain. With no timer thread, a
+//!   bucket on an otherwise idle service still needs an explicit
+//!   `flush_small`/drain.
+//!
+//! Whether a request should be coalesced at all — batched-vs-
+//! distributed — is the cost model's call:
+//! [`crate::costmodel::Predictor::batched_wins`] compares the fused
+//! pod-sweep makespan against the one-at-a-time distributed path, and
+//! [`BatchPolicy::small_dim`] caps the size the coalescer will even
+//! consider (the `n ≲ 4·T_A` rule of thumb).
+
+use crate::scalar::DType;
+use std::collections::HashMap;
+
+/// The three routines the batched small-solve path serves.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum SmallRoutine {
+    /// Cholesky factorization only.
+    Potrf,
+    /// Factor + two-sweep solve against a per-system RHS.
+    Potrs,
+    /// Factor + Cholesky-based inverse.
+    Potri,
+}
+
+impl SmallRoutine {
+    /// The cost-model / workspace-table name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SmallRoutine::Potrf => "potrf",
+            SmallRoutine::Potrs => "potrs",
+            SmallRoutine::Potri => "potri",
+        }
+    }
+}
+
+/// Power-of-two size class of an `n × n` system (minimum class 4):
+/// requests within a class share a bucket, so one fused sweep serves
+/// systems of slightly different sizes without padding.
+pub fn size_class(n: usize) -> u32 {
+    n.max(4).next_power_of_two() as u32
+}
+
+/// What a queued small solve is grouped by.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub struct BucketKey {
+    pub routine: SmallRoutine,
+    pub dtype: DType,
+    pub size_class: u32,
+}
+
+impl BucketKey {
+    /// Key for an `n × n` request.
+    pub fn new(routine: SmallRoutine, dtype: DType, n: usize) -> Self {
+        BucketKey { routine, dtype, size_class: size_class(n) }
+    }
+}
+
+/// Coalescing knobs.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// Flush a bucket as soon as it holds this many requests.
+    pub max_batch: usize,
+    /// Flush a bucket once its oldest request has waited this long on
+    /// the simulated clock (cost-model nanoseconds).
+    pub max_dwell_ns: u64,
+    /// Wall-clock liveness backstop: flush a bucket once its oldest
+    /// request has waited this long in real time, whether or not the
+    /// simulated clock moved (coalesced-only traffic charges nothing,
+    /// so the modeled dwell alone could never fire).
+    pub max_wall_dwell: std::time::Duration,
+    /// Largest `n` the coalescer considers small (the `4·T_A` rule);
+    /// larger requests take the distributed path unconditionally.
+    pub small_dim: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        // 32-way fusion, a 50 µs modeled dwell bound (≈ ten NVLink
+        // latencies), a half-second real-time backstop, and the 4·T_A
+        // smallness cut at the default tile.
+        BatchPolicy {
+            max_batch: 32,
+            max_dwell_ns: 50_000,
+            max_wall_dwell: std::time::Duration::from_millis(500),
+            small_dim: 4 * 64,
+        }
+    }
+}
+
+/// One bucket ready to sweep: the request ids in FIFO order and each
+/// request's coalesce wait (cost-model ns) at flush time.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FlushedBucket {
+    pub key: BucketKey,
+    pub ids: Vec<u64>,
+    pub waits_ns: Vec<u64>,
+}
+
+struct Bucket {
+    ids: Vec<u64>,
+    enqueued_ns: Vec<u64>,
+    /// Real time the bucket opened (the wall-dwell backstop's anchor).
+    opened: std::time::Instant,
+}
+
+/// FIFO bucket planner for the batched small-solve path.
+pub struct BatchPlanner {
+    policy: BatchPolicy,
+    buckets: HashMap<BucketKey, Bucket>,
+    next_id: u64,
+}
+
+impl BatchPlanner {
+    /// New planner under `policy`.
+    pub fn new(policy: BatchPolicy) -> Self {
+        BatchPlanner { policy, buckets: HashMap::new(), next_id: 0 }
+    }
+
+    /// The active policy.
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+
+    /// Enqueue a request into its bucket at simulated time `now_ns`.
+    /// Returns the request id and, when this push filled the bucket to
+    /// `max_batch`, the flushed bucket.
+    pub fn push(&mut self, key: BucketKey, now_ns: u64) -> (u64, Option<FlushedBucket>) {
+        let id = self.next_id;
+        self.next_id += 1;
+        let bucket = self.buckets.entry(key).or_insert_with(|| Bucket {
+            ids: Vec::new(),
+            enqueued_ns: Vec::new(),
+            opened: std::time::Instant::now(),
+        });
+        bucket.ids.push(id);
+        bucket.enqueued_ns.push(now_ns);
+        let flushed = if bucket.ids.len() >= self.policy.max_batch {
+            self.flush(key, now_ns)
+        } else {
+            None
+        };
+        (id, flushed)
+    }
+
+    /// Buckets whose oldest request has dwelled past the policy bound
+    /// — on the simulated clock, or (the liveness backstop) in real
+    /// time.
+    pub fn due(&self, now_ns: u64) -> Vec<BucketKey> {
+        self.buckets
+            .iter()
+            .filter(|(_, b)| {
+                let sim_due = b
+                    .enqueued_ns
+                    .first()
+                    .is_some_and(|&t0| now_ns.saturating_sub(t0) >= self.policy.max_dwell_ns);
+                sim_due || b.opened.elapsed() >= self.policy.max_wall_dwell
+            })
+            .map(|(k, _)| *k)
+            .collect()
+    }
+
+    /// Flush one bucket (requests in FIFO order), recording each
+    /// request's coalesce wait as of `now_ns`.
+    pub fn flush(&mut self, key: BucketKey, now_ns: u64) -> Option<FlushedBucket> {
+        let bucket = self.buckets.remove(&key)?;
+        if bucket.ids.is_empty() {
+            return None;
+        }
+        let waits_ns =
+            bucket.enqueued_ns.iter().map(|&t| now_ns.saturating_sub(t)).collect();
+        Some(FlushedBucket { key, ids: bucket.ids, waits_ns })
+    }
+
+    /// Flush every non-empty bucket (drain path).
+    pub fn flush_all(&mut self, now_ns: u64) -> Vec<FlushedBucket> {
+        let keys: Vec<BucketKey> = self.buckets.keys().copied().collect();
+        keys.into_iter().filter_map(|k| self.flush(k, now_ns)).collect()
+    }
+
+    /// Requests currently waiting across all buckets.
+    pub fn pending(&self) -> usize {
+        self.buckets.values().map(|b| b.ids.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(n: usize) -> BucketKey {
+        BucketKey::new(SmallRoutine::Potrs, DType::F64, n)
+    }
+
+    #[test]
+    fn size_classes_are_powers_of_two() {
+        assert_eq!(size_class(1), 4);
+        assert_eq!(size_class(4), 4);
+        assert_eq!(size_class(5), 8);
+        assert_eq!(size_class(64), 64);
+        assert_eq!(size_class(65), 128);
+        // Neighbouring sizes within a class share a bucket.
+        assert_eq!(key(33), key(64));
+        assert_ne!(key(64), key(65));
+    }
+
+    #[test]
+    fn bucket_flushes_at_max_batch() {
+        let mut p = BatchPlanner::new(BatchPolicy { max_batch: 3, ..Default::default() });
+        let (a, f) = p.push(key(16), 0);
+        assert!(f.is_none());
+        let (b, f) = p.push(key(16), 10);
+        assert!(f.is_none());
+        assert_eq!(p.pending(), 2);
+        let (c, f) = p.push(key(16), 20);
+        let f = f.expect("third push fills the bucket");
+        assert_eq!(f.ids, vec![a, b, c]);
+        assert_eq!(f.waits_ns, vec![20, 10, 0]);
+        assert_eq!(p.pending(), 0);
+    }
+
+    #[test]
+    fn distinct_keys_do_not_share_buckets() {
+        let mut p = BatchPlanner::new(BatchPolicy { max_batch: 2, ..Default::default() });
+        let k1 = key(16);
+        let k2 = BucketKey::new(SmallRoutine::Potrf, DType::F64, 16);
+        let k3 = BucketKey::new(SmallRoutine::Potrs, DType::F32, 16);
+        p.push(k1, 0);
+        p.push(k2, 0);
+        p.push(k3, 0);
+        assert_eq!(p.pending(), 3);
+        let (_, f) = p.push(k1, 5);
+        assert_eq!(f.unwrap().key, k1);
+        assert_eq!(p.pending(), 2);
+    }
+
+    #[test]
+    fn dwell_bound_marks_buckets_due() {
+        let policy = BatchPolicy { max_batch: 100, max_dwell_ns: 1_000, ..Default::default() };
+        let mut p = BatchPlanner::new(policy);
+        p.push(key(8), 500);
+        assert!(p.due(600).is_empty());
+        assert_eq!(p.due(1_500), vec![key(8)]);
+        let f = p.flush(key(8), 1_500).unwrap();
+        assert_eq!(f.waits_ns, vec![1_000]);
+        assert!(p.flush(key(8), 2_000).is_none(), "bucket already flushed");
+    }
+
+    #[test]
+    fn wall_clock_backstop_marks_buckets_due() {
+        // A frozen simulated clock cannot strand a bucket: the wall
+        // backstop fires independently of now_ns.
+        let policy = BatchPolicy {
+            max_batch: 100,
+            max_dwell_ns: u64::MAX,
+            max_wall_dwell: std::time::Duration::ZERO,
+            ..Default::default()
+        };
+        let mut p = BatchPlanner::new(policy);
+        p.push(key(8), 0);
+        assert_eq!(p.due(0), vec![key(8)], "zero wall bound is due immediately");
+    }
+
+    #[test]
+    fn flush_all_drains_everything() {
+        let mut p = BatchPlanner::new(BatchPolicy { max_batch: 100, ..Default::default() });
+        p.push(key(8), 0);
+        p.push(key(16), 0);
+        p.push(key(16), 1);
+        let flushed = p.flush_all(10);
+        assert_eq!(flushed.len(), 2);
+        assert_eq!(flushed.iter().map(|f| f.ids.len()).sum::<usize>(), 3);
+        assert_eq!(p.pending(), 0);
+        assert!(p.flush_all(20).is_empty());
+    }
+}

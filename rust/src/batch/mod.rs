@@ -1,0 +1,53 @@
+//! Batched small-solve subsystem: request coalescing, packed pod
+//! layouts, and fused per-device kernel sweeps.
+//!
+//! The distributed solvers exist for matrices that exceed one device;
+//! service traffic at the millions-of-users scale is dominated by the
+//! opposite shape — *tiny* solves (`n ≲ 4·T_A`) where per-solve
+//! scatter/redistribution and per-panel collectives swamp the actual
+//! flops. This module is the throughput path for that traffic. A small
+//! request admitted by [`SolveService::submit_small`] flows through
+//! three stages:
+//!
+//! 1. **Admission** (`coordinator::service`) — the cost-model cut:
+//!    [`Predictor::batched_wins`] compares the fused pod-sweep makespan
+//!    against the one-at-a-time distributed path; requests that are too
+//!    large (or that the model says should run distributed) fall back
+//!    to the ordinary scatter → `potrf_dist`/`potrs_dist`/`potri_dist`
+//!    → gather route. Whole pods are admitted against per-device VRAM
+//!    via [`Footprint::for_pod`], the same capacity accounting every
+//!    other service solve obeys.
+//! 2. **Coalescing** ([`coalesce`]) — admitted small requests queue in
+//!    a [`BatchPlanner`] bucket keyed by (routine, dtype, power-of-two
+//!    size-class), and flush as one batch when the bucket reaches
+//!    [`BatchPolicy::max_batch`] or its oldest request has dwelled past
+//!    [`BatchPolicy::max_dwell_ns`] **cost-model nanoseconds** — the
+//!    latency bound that keeps coalescing from trading unbounded tail
+//!    latency for throughput.
+//! 3. **Sweep** ([`pod`] + [`sweep`]) — the flushed bucket's systems
+//!    are packed into a [`PackedPod`] (round-robin over the node via
+//!    the [`TileDim`](crate::layout::TileDim) deal arithmetic, one
+//!    staged copy per device) and solved by
+//!    [`potrf_batched`]/[`potrs_batched`]/[`potri_batched`]: one fused
+//!    kernel charge per device per stage on the existing device
+//!    timelines, zero peer traffic, numerics bitwise-identical to the
+//!    systems run one at a time.
+//!
+//! The Lineax front-end (uniform solve entry dispatching to
+//! structure-specialized paths) and MPAX's batched operator evaluation
+//! are the JAX-side precedents (see PAPERS.md); this is the Rust
+//! coordinator's analogue, with the cost model deciding the dispatch.
+//!
+//! [`SolveService::submit_small`]: crate::coordinator::SolveService::submit_small
+//! [`Footprint::for_pod`]: crate::coordinator::Footprint::for_pod
+//! [`Predictor::batched_wins`]: crate::costmodel::Predictor::batched_wins
+
+mod coalesce;
+mod pod;
+pub mod sweep;
+
+pub use coalesce::{
+    size_class, BatchPlanner, BatchPolicy, BucketKey, FlushedBucket, SmallRoutine,
+};
+pub use pod::PackedPod;
+pub use sweep::{potrf_batched, potri_batched, potrs_batched, SweepReport};

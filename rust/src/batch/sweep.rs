@@ -1,0 +1,277 @@
+//! Batched kernel sweeps over a [`PackedPod`]: one fused per-device
+//! kernel charge per bucket, numerics bitwise-identical to solving
+//! each system individually.
+//!
+//! The numerical payload of every system still flows through the same
+//! [`TileKernels`](crate::solver::TileKernels) calls a one-system solve
+//! makes (`potf2`, the two `trsm` sweeps, the `trsm` + `gemm_hn`
+//! inverse), so a coalesced batch reproduces the individual results
+//! **bitwise** — the property tests in `rust/tests/batch.rs` pin this
+//! for all four dtypes. What the sweep fuses is the *cost*: where the
+//! one-at-a-time path charges one launch overhead per kernel per
+//! system (plus per-solve redistribution and per-panel collectives),
+//! the sweep charges each device **one** fused kernel per stage —
+//! `launch_overhead + Σ per-system kernel time` — on the existing
+//! per-device timelines (barrier clocks, or the compute [`Stream`]s
+//! when the [`Ctx`] is pipelined; see [`Ctx::charge_device_time`]).
+//! Systems never leave their device, so a sweep moves zero peer bytes.
+//!
+//! [`Stream`]: crate::device::Stream
+
+use super::pod::PackedPod;
+use crate::costmodel::GpuCostModel;
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::scalar::Scalar;
+use crate::solver::Ctx;
+
+/// What one sweep did — per-bucket accounting for the metrics layer.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct SweepReport {
+    /// Systems the sweep processed.
+    pub systems: usize,
+    /// Fused kernel launches charged (at most one per device).
+    pub fused_launches: usize,
+    /// The sweep's charged critical path in integer nanoseconds: the
+    /// *largest* per-device fused-kernel charge. Devices run their
+    /// fused kernels in parallel, so this is the sweep's own makespan
+    /// contribution — well-defined even when other tenants share the
+    /// node's clocks.
+    pub charged_ns: u64,
+}
+
+/// Accumulates one fused per-device kernel charge: per-system kernel
+/// durations (each modeled with its own launch overhead by the cost
+/// model) collapse into `overhead + Σ (duration − overhead)`.
+struct FusedCharge {
+    seconds: f64,
+    flops: u64,
+    kernels: usize,
+}
+
+impl FusedCharge {
+    fn new() -> Self {
+        FusedCharge { seconds: 0.0, flops: 0, kernels: 0 }
+    }
+
+    fn add(&mut self, one_at_a_time_seconds: f64, overhead: f64, flops: u64) {
+        self.seconds += one_at_a_time_seconds - overhead;
+        self.flops += flops;
+        self.kernels += 1;
+    }
+
+    /// Issue the fused charge; returns the charged duration (`None`
+    /// when the device had no systems and nothing was launched).
+    fn charge<S: Scalar>(self, ctx: &Ctx<'_, S>, dev: usize) -> Result<Option<f64>> {
+        if self.kernels == 0 {
+            return Ok(None);
+        }
+        let secs = ctx.model.launch_overhead + self.seconds;
+        ctx.charge_device_time(dev, secs, self.flops)?;
+        Ok(Some(secs))
+    }
+}
+
+/// Fold one device's fused-charge outcome into the sweep totals.
+fn tally(charged: Option<f64>, launches: &mut usize, crit: &mut f64) {
+    if let Some(secs) = charged {
+        *launches += 1;
+        if secs > *crit {
+            *crit = secs;
+        }
+    }
+}
+
+/// Factor every system of the pod in place (`A_i → L_i`), one fused
+/// kernel charge per device.
+pub fn potrf_batched<S: Scalar>(ctx: &Ctx<'_, S>, pod: &mut PackedPod<S>) -> Result<SweepReport> {
+    let ov = ctx.model.launch_overhead;
+    let mut launches = 0;
+    let mut crit = 0.0f64;
+    for d in 0..ctx.node.num_devices() {
+        let ids: Vec<usize> = pod.systems_on(d).collect();
+        if ids.is_empty() {
+            continue;
+        }
+        let mut tiles = Vec::with_capacity(ids.len());
+        let mut fused = FusedCharge::new();
+        for &i in &ids {
+            let (r, c) = pod.dims(i);
+            if r != c {
+                return Err(Error::shape(format!("potrf pod system {i} is {r}x{c}, not square")));
+            }
+            tiles.push(pod.read_system(i)?);
+            let fl = GpuCostModel::flops_potf2(S::DTYPE, r);
+            fused.add(ctx.model.panel_time(S::DTYPE, fl), ov, fl);
+        }
+        let factors = ctx.kernels.potf2_batch(&tiles)?;
+        for (&i, l) in ids.iter().zip(factors.iter()) {
+            pod.write_system(i, l)?;
+        }
+        tally(fused.charge(ctx, d)?, &mut launches, &mut crit);
+    }
+    Ok(SweepReport {
+        systems: pod.batch(),
+        fused_launches: launches,
+        charged_ns: (crit * 1e9).round() as u64,
+    })
+}
+
+/// Solve `L_i·L_iᴴ·X_i = B_i` for every aligned pair of pod systems,
+/// in place over the RHS pod; one fused kernel charge per device.
+pub fn potrs_batched<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    factors: &PackedPod<S>,
+    rhs: &mut PackedPod<S>,
+) -> Result<SweepReport> {
+    if !factors.aligned_with(rhs) {
+        return Err(Error::shape("factor and RHS pods must pack the same batch"));
+    }
+    let ov = ctx.model.launch_overhead;
+    let mut launches = 0;
+    let mut crit = 0.0f64;
+    for d in 0..ctx.node.num_devices() {
+        let mut fused = FusedCharge::new();
+        for i in factors.systems_on(d) {
+            let (n, _) = factors.dims(i);
+            let (br, nrhs) = rhs.dims(i);
+            if br != n {
+                return Err(Error::shape(format!(
+                    "pod system {i}: factor is {n}x{n} but RHS has {br} rows"
+                )));
+            }
+            let l = factors.read_system(i)?;
+            let b = rhs.read_system(i)?;
+            // The exact single-tile potrs kernel sequence: forward then
+            // backward triangular solve over the whole small system.
+            let y = ctx.kernels.trsm_llnn(&l, &b)?;
+            let x = ctx.kernels.trsm_llhn(&l, &y)?;
+            rhs.write_system(i, &x)?;
+            let fl = GpuCostModel::flops_trsm(S::DTYPE, n, nrhs, n);
+            fused.add(ctx.model.panel_time(S::DTYPE, fl), ov, fl);
+            fused.add(ctx.model.panel_time(S::DTYPE, fl), ov, fl);
+        }
+        tally(fused.charge(ctx, d)?, &mut launches, &mut crit);
+    }
+    Ok(SweepReport {
+        systems: factors.batch(),
+        fused_launches: launches,
+        charged_ns: (crit * 1e9).round() as u64,
+    })
+}
+
+/// Invert every factored system in place (`L_i → A_i⁻¹ = L_i⁻ᴴ·L_i⁻¹`),
+/// one fused kernel charge per device.
+pub fn potri_batched<S: Scalar>(ctx: &Ctx<'_, S>, pod: &mut PackedPod<S>) -> Result<SweepReport> {
+    let ov = ctx.model.launch_overhead;
+    let mut launches = 0;
+    let mut crit = 0.0f64;
+    for d in 0..ctx.node.num_devices() {
+        let mut fused = FusedCharge::new();
+        for i in pod.systems_on(d) {
+            let (n, c) = pod.dims(i);
+            if n != c {
+                return Err(Error::shape(format!("potri pod system {i} is {n}x{c}, not square")));
+            }
+            let l = pod.read_system(i)?;
+            // The exact single-tile potri kernel sequence: Z = L⁻¹ by a
+            // triangular solve against the identity, then A⁻¹ = Zᴴ·Z.
+            let z = ctx.kernels.trsm_llnn(&l, &Matrix::<S>::eye(n))?;
+            let mut inv = Matrix::<S>::zeros(n, n);
+            ctx.kernels.gemm_hn(&mut inv, &z, &z, S::one())?;
+            pod.write_system(i, &inv)?;
+            let trsm_fl = GpuCostModel::flops_trsm(S::DTYPE, n, n, n);
+            fused.add(ctx.model.panel_time(S::DTYPE, trsm_fl), ov, trsm_fl);
+            let gemm_fl = GpuCostModel::flops_gemm(S::DTYPE, n, n, n);
+            fused.add(ctx.model.gemm_time(S::DTYPE, n, n, n), ov, gemm_fl);
+        }
+        tally(fused.charge(ctx, d)?, &mut launches, &mut crit);
+    }
+    Ok(SweepReport {
+        systems: pod.batch(),
+        fused_launches: launches,
+        charged_ns: (crit * 1e9).round() as u64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::GpuCostModel;
+    use crate::device::SimNode;
+    use crate::linalg::{self, tol_for, FrobNorm};
+    use crate::solver::SolverBackend;
+
+    fn model_backend() -> (GpuCostModel, SolverBackend<f64>) {
+        (GpuCostModel::h200(), SolverBackend::Native)
+    }
+
+    #[test]
+    fn batched_factor_solve_correct() {
+        let node = SimNode::new_uniform(4, 1 << 22);
+        let (model, backend) = model_backend();
+        let ctx = Ctx::new(&node, &model, &backend);
+        let systems: Vec<Matrix<f64>> =
+            (0..6).map(|i| Matrix::spd_random(8 + i, 40 + i as u64)).collect();
+        let rhs: Vec<Matrix<f64>> =
+            (0..6).map(|i| Matrix::random(8 + i, 2, 50 + i as u64)).collect();
+        let mut pod_a = PackedPod::pack(&node, &systems).unwrap();
+        let mut pod_b = PackedPod::pack(&node, &rhs).unwrap();
+        let rep = potrf_batched(&ctx, &mut pod_a).unwrap();
+        assert_eq!(rep.systems, 6);
+        assert!(rep.fused_launches <= 4);
+        potrs_batched(&ctx, &pod_a, &mut pod_b).unwrap();
+        for (i, x) in pod_b.gather().unwrap().into_iter().enumerate() {
+            let l = linalg::potrf(&systems[i]).unwrap();
+            let x_ref = linalg::potrs_from_chol(&l, &rhs[i]).unwrap();
+            assert!(x.rel_err(&x_ref) < tol_for::<f64>(16), "system {i} wrong");
+        }
+    }
+
+    #[test]
+    fn batched_inverse_correct() {
+        let node = SimNode::new_uniform(2, 1 << 22);
+        let (model, backend) = model_backend();
+        let ctx = Ctx::new(&node, &model, &backend);
+        let systems: Vec<Matrix<f64>> = (0..3).map(|i| Matrix::spd_random(7, 60 + i)).collect();
+        let mut pod = PackedPod::pack(&node, &systems).unwrap();
+        potrf_batched(&ctx, &mut pod).unwrap();
+        potri_batched(&ctx, &mut pod).unwrap();
+        for (i, inv) in pod.gather().unwrap().into_iter().enumerate() {
+            let prod = systems[i].matmul(&inv);
+            assert!(prod.rel_err(&Matrix::eye(7)) < tol_for::<f64>(7) * 10.0, "system {i}");
+        }
+    }
+
+    #[test]
+    fn one_fused_launch_per_device() {
+        let node = SimNode::new_uniform(4, 1 << 22);
+        let (model, backend) = model_backend();
+        let ctx = Ctx::new(&node, &model, &backend);
+        let systems: Vec<Matrix<f64>> = (0..8).map(|i| Matrix::spd_random(6, i)).collect();
+        let mut pod = PackedPod::pack(&node, &systems).unwrap();
+        node.metrics().reset();
+        let rep = potrf_batched(&ctx, &mut pod).unwrap();
+        assert_eq!(rep.fused_launches, 4);
+        // Critical path ≥ one launch overhead, well under two.
+        assert!(rep.charged_ns >= 8_000 && rep.charged_ns < 16_000, "{}", rep.charged_ns);
+        let m = node.metrics().snapshot();
+        // 8 systems, but only 4 kernel launches — and zero peer traffic.
+        assert_eq!(m.kernel_launches, 4);
+        assert_eq!(m.peer_bytes, 0);
+    }
+
+    #[test]
+    fn shape_mismatches_rejected() {
+        let node = SimNode::new_uniform(2, 1 << 22);
+        let (model, backend) = model_backend();
+        let ctx = Ctx::new(&node, &model, &backend);
+        let rect = vec![Matrix::<f64>::random(4, 3, 1)];
+        let mut pod = PackedPod::pack(&node, &rect).unwrap();
+        assert!(potrf_batched(&ctx, &mut pod).is_err());
+        let spd = vec![Matrix::<f64>::spd_random(4, 2); 2];
+        let factors = PackedPod::pack(&node, &spd).unwrap();
+        let mut short = PackedPod::pack(&node, &[Matrix::<f64>::random(4, 1, 3)]).unwrap();
+        assert!(potrs_batched(&ctx, &factors, &mut short).is_err());
+    }
+}

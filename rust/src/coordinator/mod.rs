@@ -50,14 +50,19 @@
 //! [`SolveStats`] (queue wait, execution time) on every
 //! [`ServiceHandle`]. See `examples/e2e_driver.rs` for the end-to-end
 //! serving shape and `rust/tests/properties.rs` for the
-//! concurrent-equals-serial and never-over-admit properties.
+//! concurrent-equals-serial and never-over-admit properties. Small
+//! solves take [`SolveService::submit_small`], which coalesces them
+//! into fused batched sweeps (`crate::batch`) when the cost model says
+//! batching wins — see `examples/batch_serve.rs`.
 
 mod mpmd;
 mod service;
 mod spmd;
 
 pub use mpmd::gather_pointers_mpmd;
-pub use service::{Footprint, JobQueue, ServiceHandle, SolveHandle, SolveService, SolveStats};
+pub use service::{
+    Footprint, JobQueue, ServiceHandle, SmallConfig, SolveHandle, SolveService, SolveStats,
+};
 pub use spmd::gather_pointers_spmd;
 
 use crate::costmodel::GpuCostModel;

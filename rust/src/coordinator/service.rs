@@ -22,11 +22,51 @@
 //! additionally feed the overlap-efficiency counters through their
 //! [`crate::solver::Ctx`] phases).
 
-use crate::costmodel::workspace;
+//! ## The batched small-solve path: admission → coalesce → sweep
+//!
+//! [`SolveService::submit_small`] is the front door for tiny solves
+//! (`n ≲ 4·T_A`), where the distributed path's per-solve
+//! redistribution and per-panel collectives dwarf the flops:
+//!
+//! 1. **Admission** — the request is sized against
+//!    [`SmallConfig::policy`]'s smallness cut and the cost model's
+//!    [`Predictor::batched_wins`] dispatch decision. Requests the
+//!    model sends distributed run the ordinary scatter →
+//!    `potrf_dist`/`potrs_dist`/`potri_dist` → gather route under a
+//!    [`Footprint::for_routine`] reservation.
+//! 2. **Coalesce** — batched requests queue in the internal
+//!    [`BatchPlanner`] keyed by (routine, dtype, size-class), flushing
+//!    at [`BatchPolicy::max_batch`] occupancy or after the policy's
+//!    queue-dwell bound in cost-model nanoseconds (checked on every
+//!    submit and on [`SolveService::drain`] /
+//!    [`SolveService::flush_small`]).
+//! 3. **Sweep** — a flushed bucket is admitted as *one* capacity
+//!    reservation ([`Footprint::for_pod`], the exact per-device pod
+//!    arena bytes) and swept by the fused batched kernels
+//!    ([`crate::batch::sweep`]); every request's [`ServiceHandle`]
+//!    resolves individually with its bucket occupancy and coalesce
+//!    wait in [`SolveStats`], and per-bucket occupancy / wait /
+//!    makespan aggregates land in the `batch_*` metrics counters.
+//!
+//! A failed or panicking small solve re-raises at
+//! [`ServiceHandle::wait`], exactly like any other service solve.
+//!
+//! [`Predictor::batched_wins`]: crate::costmodel::Predictor::batched_wins
+
+use crate::batch::{
+    potrf_batched, potri_batched, potrs_batched, BatchPlanner, BatchPolicy, BucketKey,
+    FlushedBucket, PackedPod, SmallRoutine,
+};
+use crate::costmodel::{workspace, GpuCostModel, Predictor};
 use crate::device::SimNode;
 use crate::error::{Error, Result};
-use crate::scalar::DType;
-use std::collections::VecDeque;
+use crate::layout::{BlockCyclic1D, TileDim};
+use crate::linalg::Matrix;
+use crate::scalar::{DType, Scalar};
+use crate::solver::{potrf_dist, potri_dist, potrs_dist, Ctx, SolverBackend};
+use crate::tile::{DistMatrix, LayoutKind};
+use std::any::Any;
+use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -244,6 +284,33 @@ impl Footprint {
         Ok(Self::per_device(per_device))
     }
 
+    /// Footprint of one coalesced **pod** of small solves: `dims[i]`
+    /// is system `i`'s `(n, nrhs)`, placed by the same
+    /// [`TileDim::round_robin`] deal [`crate::batch::PackedPod`] uses
+    /// for the actual arenas. Per-device bytes are the *exact* arena
+    /// sizes — each system's matrix plus, for `potrs`, its RHS pod
+    /// entry; the sweeps run in place, so there is no broadcast-panel
+    /// or workspace term to pad for.
+    pub fn for_pod(
+        routine: &str,
+        dims: &[(usize, usize)],
+        ndev: usize,
+        dtype: DType,
+    ) -> Result<Self> {
+        let with_rhs = match routine {
+            "potrf" | "potri" => false,
+            "potrs" => true,
+            other => return Err(Error::config(format!("unknown routine {other:?}"))),
+        };
+        let deal = TileDim::round_robin(dims.len(), ndev)?;
+        let e = dtype.size_of();
+        let mut per_device = vec![0usize; ndev];
+        for (i, &(n, nrhs)) in dims.iter().enumerate() {
+            per_device[deal.owner(i)] += n * n * e + if with_rhs { n * nrhs * e } else { 0 };
+        }
+        Ok(Self::per_device(per_device))
+    }
+
     /// Number of devices covered.
     pub fn devices(&self) -> usize {
         self.per_device.len()
@@ -267,6 +334,12 @@ pub struct SolveStats {
     pub queue_wait: Duration,
     /// Real execution time after admission.
     pub exec: Duration,
+    /// Solves that shared this solve's admitted job — the coalesced
+    /// bucket occupancy on the batched small-solve path, `1` otherwise.
+    pub batch_size: usize,
+    /// Cost-model (simulated) nanoseconds this solve dwelled in the
+    /// coalescer before its bucket flushed; `0` off the batched path.
+    pub coalesce_wait_ns: u64,
 }
 
 /// Deferred result publication: runs *after* the worker has released
@@ -296,6 +369,62 @@ struct ServiceInner {
     cv: Condvar,
 }
 
+/// Configuration of the batched small-solve path.
+#[derive(Clone, Debug)]
+pub struct SmallConfig {
+    /// `T_A` of the distributed fallback layout; also anchors the
+    /// default smallness cut (`small_dim = 4·tile`).
+    pub tile: usize,
+    /// Coalescing knobs (bucket occupancy, dwell bound, smallness cut).
+    pub policy: BatchPolicy,
+    /// Cost model behind the batched-vs-distributed dispatch decision
+    /// and the sweeps' timeline charges.
+    pub model: GpuCostModel,
+}
+
+impl SmallConfig {
+    /// Defaults anchored at tile size `tile` (`small_dim = 4·tile`).
+    pub fn with_tile(tile: usize) -> Self {
+        let policy = BatchPolicy { small_dim: 4 * tile, ..BatchPolicy::default() };
+        SmallConfig { tile, policy, model: GpuCostModel::h200() }
+    }
+}
+
+impl Default for SmallConfig {
+    fn default() -> Self {
+        Self::with_tile(64)
+    }
+}
+
+/// One queued small request, type-erased so the planner state can hold
+/// every dtype at once; the bucket's flusher (installed by the first
+/// `submit_small::<S>` for its key) downcasts back to `SmallJob<S>`.
+type SmallPayload = Box<dyn Any + Send>;
+
+/// Executes one flushed bucket: downcast, pack, admit, sweep, publish.
+type SmallFlusher =
+    dyn Fn(&SolveService, FlushedBucket, Vec<SmallPayload>) + Send + Sync;
+
+struct SmallJob<S: Scalar> {
+    a: Matrix<S>,
+    rhs: Option<Matrix<S>>,
+    slot: Arc<(Mutex<Option<SolveOutcome<Matrix<S>>>>, Condvar)>,
+}
+
+struct SmallState {
+    planner: BatchPlanner,
+    payloads: HashMap<u64, SmallPayload>,
+    flushers: HashMap<BucketKey, Arc<SmallFlusher>>,
+    /// Memoized `Predictor::batched_wins` cut per (routine, dtype,
+    /// size-class) — the decision has bucket granularity, so the hot
+    /// submit path pays a map lookup, not a topology clone.
+    decisions: HashMap<(SmallRoutine, DType, u32), bool>,
+}
+
+/// A bucket flush ready to execute once the small-state lock is
+/// released (the flusher re-enters the service through `submit`).
+type PendingFlush = (Arc<SmallFlusher>, FlushedBucket, Vec<SmallPayload>);
+
 /// Concurrent solve service over one shared [`SimNode`]: FIFO +
 /// capacity-aware admission, a fixed worker pool, per-solve stats.
 ///
@@ -305,12 +434,20 @@ struct ServiceInner {
 /// reservation and wakes the queue.
 pub struct SolveService {
     inner: Arc<ServiceInner>,
+    cfg: SmallConfig,
+    small: Mutex<SmallState>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl SolveService {
-    /// Start a service over `node` with `n_workers` executor threads.
+    /// Start a service over `node` with `n_workers` executor threads
+    /// and the default batched small-solve configuration.
     pub fn new(node: SimNode, n_workers: usize) -> Self {
+        Self::with_small_config(node, n_workers, SmallConfig::default())
+    }
+
+    /// Start a service with an explicit small-solve configuration.
+    pub fn with_small_config(node: SimNode, n_workers: usize, cfg: SmallConfig) -> Self {
         let capacity: Vec<usize> = node.memory_reports().iter().map(|r| r.capacity).collect();
         let ndev = capacity.len();
         let inner = Arc::new(ServiceInner {
@@ -376,7 +513,13 @@ impl SolveService {
                 })
             })
             .collect();
-        SolveService { inner, workers }
+        let small = Mutex::new(SmallState {
+            planner: BatchPlanner::new(cfg.policy),
+            payloads: HashMap::new(),
+            flushers: HashMap::new(),
+            decisions: HashMap::new(),
+        });
+        SolveService { inner, cfg, small, workers }
     }
 
     /// Submit a solve with its declared workspace footprint. Fails fast
@@ -387,6 +530,40 @@ impl SolveService {
         footprint: Footprint,
         f: impl FnOnce() -> T + Send + 'static,
     ) -> Result<ServiceHandle<T>> {
+        let slot = Arc::new((Mutex::new(None::<SolveOutcome<T>>), Condvar::new()));
+        let slot2 = slot.clone();
+        let metrics = self.inner.node.metrics().clone();
+        let job: AdmittedJob = Box::new(move |queue_wait| {
+            let t0 = Instant::now();
+            // A panicking solve must not kill the worker: the unwinding
+            // is contained here so the reservation release in the worker
+            // loop always runs, and the panic is re-raised on the waiter
+            // (JoinHandle semantics).
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+            let exec = t0.elapsed();
+            metrics.add_service_completion(queue_wait.as_nanos() as u64, exec.as_nanos() as u64);
+            let stats = SolveStats { queue_wait, exec, batch_size: 1, coalesce_wait_ns: 0 };
+            let outcome = match out {
+                Ok(v) => Ok((v, stats)),
+                Err(p) => Err(panic_message(p)),
+            };
+            let publish: PublishFn = Box::new(move || {
+                let (lock, cv) = &*slot2;
+                *lock.lock().unwrap() = Some(outcome);
+                cv.notify_all();
+            });
+            publish
+        });
+        self.enqueue_job(footprint, job)?;
+        Ok(ServiceHandle { slot })
+    }
+
+    /// Shared enqueue path behind [`SolveService::submit`] and the
+    /// batched-bucket flusher: fail-fast footprint checks, the FIFO
+    /// push, and submission metrics. The job's returned [`PublishFn`]
+    /// runs only after the worker has released the reservation, so
+    /// result publication always implies the capacity is free again.
+    fn enqueue_job(&self, footprint: Footprint, job: AdmittedJob) -> Result<()> {
         if footprint.devices() != self.inner.capacity.len() {
             return Err(Error::config(format!(
                 "footprint spans {} devices but the service node has {}",
@@ -401,30 +578,6 @@ impl SolveService {
                 return Err(Error::DeviceOom { device: d, requested: need, free: cap, capacity: cap });
             }
         }
-        let slot = Arc::new((Mutex::new(None::<SolveOutcome<T>>), Condvar::new()));
-        let slot2 = slot.clone();
-        let metrics = self.inner.node.metrics().clone();
-        let job: AdmittedJob = Box::new(move |queue_wait| {
-            let t0 = Instant::now();
-            // A panicking solve must not kill the worker: the unwinding
-            // is contained here so the reservation release in the worker
-            // loop always runs, and the panic is re-raised on the waiter
-            // (JoinHandle semantics).
-            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
-            let exec = t0.elapsed();
-            metrics.add_service_completion(queue_wait.as_nanos() as u64, exec.as_nanos() as u64);
-            let stats = SolveStats { queue_wait, exec };
-            let outcome = match out {
-                Ok(v) => Ok((v, stats)),
-                Err(p) => Err(panic_message(p)),
-            };
-            let publish: PublishFn = Box::new(move || {
-                let (lock, cv) = &*slot2;
-                *lock.lock().unwrap() = Some(outcome);
-                cv.notify_all();
-            });
-            publish
-        });
         {
             let mut st = self.inner.state.lock().unwrap();
             assert!(!st.shutdown, "service is shut down");
@@ -436,7 +589,220 @@ impl SolveService {
         }
         self.inner.node.metrics().add_service_submission();
         self.inner.cv.notify_all();
-        Ok(ServiceHandle { slot })
+        Ok(())
+    }
+
+    /// Submit a **small** solve through the admission → coalesce →
+    /// sweep path (see the module docs). The cost model dispatches:
+    /// requests under the smallness cut for which
+    /// [`Predictor::batched_wins`] holds are coalesced into a fused
+    /// per-device batched sweep with their bucket-mates; everything
+    /// else runs the ordinary distributed route. Either way the
+    /// returned handle resolves with this request's own result and
+    /// [`SolveStats`] (bucket occupancy and coalesce wait included).
+    /// A solve that fails numerically (e.g. a non-positive-definite
+    /// input) re-raises at [`ServiceHandle::wait`] — and only on its
+    /// own handle: a failed bucket sweep reruns its requests one at a
+    /// time, so bucket-mates of a bad input still succeed.
+    ///
+    /// A bucket below its occupancy target flushes when a later submit
+    /// — on either path — finds it past the policy's queue-dwell bound
+    /// (cost-model nanoseconds, with [`BatchPolicy::max_wall_dwell`]
+    /// of real time as the liveness backstop for traffic that never
+    /// advances the simulated clock), or on
+    /// [`SolveService::flush_small`] / [`SolveService::drain`]. There
+    /// is no timer thread: a bucket on an otherwise idle service waits
+    /// until one of those calls.
+    ///
+    /// [`Predictor::batched_wins`]: crate::costmodel::Predictor::batched_wins
+    pub fn submit_small<S: Scalar>(
+        &self,
+        routine: SmallRoutine,
+        a: Matrix<S>,
+        rhs: Option<Matrix<S>>,
+    ) -> Result<ServiceHandle<Matrix<S>>> {
+        let n = a.require_square()?;
+        if n == 0 {
+            return Err(Error::shape("cannot solve an empty system"));
+        }
+        match (routine, &rhs) {
+            (SmallRoutine::Potrs, None) => {
+                return Err(Error::config("potrs needs a right-hand side"));
+            }
+            (SmallRoutine::Potrs, Some(b)) if b.rows() != n => {
+                return Err(Error::shape(format!(
+                    "rhs has {} rows, matrix is {n}x{n}",
+                    b.rows()
+                )));
+            }
+            (SmallRoutine::Potrf | SmallRoutine::Potri, Some(_)) => {
+                return Err(Error::config("only potrs takes a right-hand side"));
+            }
+            _ => {}
+        }
+        let ndev = self.inner.capacity.len();
+        let nrhs = rhs.as_ref().map(|b| b.cols()).unwrap_or(1);
+        // Capacity gate: the worst-case bucket this request could join
+        // (a full `max_batch` of its size-class, round-robin over the
+        // node) must itself be admittable as one pod — coalescing must
+        // never turn individually-feasible solves into a bucket that
+        // can never be reserved. Oversize traffic runs distributed,
+        // under its own per-solve reservation.
+        let e = S::DTYPE.size_of();
+        let class = crate::batch::size_class(n) as usize;
+        let per_system = class * class * e
+            + if matches!(routine, SmallRoutine::Potrs) { class * nrhs * e } else { 0 };
+        let worst_bucket = self.cfg.policy.max_batch.div_ceil(ndev.max(1)) * per_system;
+        let bucket_fits = self.inner.capacity.iter().all(|&cap| worst_bucket <= cap);
+        let coalesce = bucket_fits
+            && n <= self.cfg.policy.small_dim
+            && self.batched_decision::<S>(routine, class);
+        if !coalesce {
+            // The latency bound holds on *every* submit: buckets other
+            // requests left behind flush here even though this request
+            // never touches the coalescer.
+            self.flush_due_small();
+            return self.submit_small_distributed(routine, a, rhs);
+        }
+
+        let slot = Arc::new((Mutex::new(None::<SolveOutcome<Matrix<S>>>), Condvar::new()));
+        let handle = ServiceHandle { slot: slot.clone() };
+        let key = BucketKey::new(routine, S::DTYPE, n);
+        let now_ns = self.sim_now_ns();
+        let job = SmallJob { a, rhs, slot };
+        self.run_flushes(|st, ready| {
+            st.flushers.entry(key).or_insert_with(|| small_flusher::<S>(routine));
+            let (id, flushed) = st.planner.push(key, now_ns);
+            st.payloads.insert(id, Box::new(job));
+            if let Some(bucket) = flushed {
+                collect_flush(st, bucket, ready);
+            }
+            // Latency bound: any bucket whose oldest request has
+            // dwelled past the policy bound flushes now, whatever its
+            // dtype — the stored flusher knows how to downcast it.
+            flush_due_into(st, now_ns, ready);
+        });
+        Ok(handle)
+    }
+
+    /// The simulated clock in integer nanoseconds — the timebase of
+    /// the coalescer's dwell bound.
+    fn sim_now_ns(&self) -> u64 {
+        (self.inner.node.sim_time() * 1e9).round() as u64
+    }
+
+    /// The one lock-collect-execute choreography every flush path
+    /// shares: `select` picks buckets under the small-state lock, and
+    /// the flushers run only after it is released (they re-enter the
+    /// service through `enqueue_job`, so running them under the lock
+    /// would deadlock against concurrent submits).
+    fn run_flushes(&self, select: impl FnOnce(&mut SmallState, &mut Vec<PendingFlush>)) {
+        let mut ready: Vec<PendingFlush> = Vec::new();
+        {
+            let mut st = self.small.lock().unwrap();
+            select(&mut st, &mut ready);
+        }
+        for (flusher, bucket, payloads) in ready {
+            flusher(self, bucket, payloads);
+        }
+    }
+
+    /// Memoized batched-vs-distributed cut: evaluated once per
+    /// (routine, dtype, size-class) at the class size (the bucket
+    /// granularity; `nrhs = 1`, whose triangular-solve term scales the
+    /// two paths alike), then served from the map — the hot submit
+    /// path never clones the topology.
+    fn batched_decision<S: Scalar>(&self, routine: SmallRoutine, class: usize) -> bool {
+        let key = (routine, S::DTYPE, class as u32);
+        let mut st = self.small.lock().unwrap();
+        if let Some(&win) = st.decisions.get(&key) {
+            return win;
+        }
+        let predictor = Predictor {
+            model: self.cfg.model.clone(),
+            topo: self.inner.node.topology().clone(),
+            dtype: S::DTYPE,
+        };
+        let win = predictor.batched_wins(
+            routine.name(),
+            class,
+            1,
+            self.cfg.tile,
+            self.inner.capacity.len(),
+            self.cfg.policy.max_batch,
+        );
+        st.decisions.insert(key, win);
+        win
+    }
+
+    /// The one-at-a-time fallback of [`SolveService::submit_small`]:
+    /// scatter → distributed solve → gather under an ordinary
+    /// [`Footprint::for_routine`] reservation.
+    fn submit_small_distributed<S: Scalar>(
+        &self,
+        routine: SmallRoutine,
+        a: Matrix<S>,
+        rhs: Option<Matrix<S>>,
+    ) -> Result<ServiceHandle<Matrix<S>>> {
+        let n = a.rows();
+        let ndev = self.inner.capacity.len();
+        let nrhs = rhs.as_ref().map(|b| b.cols()).unwrap_or(0);
+        let fp = Footprint::for_routine(routine.name(), n, nrhs, self.cfg.tile, ndev, S::DTYPE)?;
+        let lay = LayoutKind::BlockCyclic(BlockCyclic1D::new(n, self.cfg.tile, ndev)?);
+        let node = self.inner.node.clone();
+        let model = self.cfg.model.clone();
+        self.submit(fp, move || -> Matrix<S> {
+            let run = || -> Result<Matrix<S>> {
+                let backend = SolverBackend::<S>::Native;
+                let ctx = Ctx::new(&node, &model, &backend);
+                let mut dm = DistMatrix::scatter(&node, &a, lay)?;
+                potrf_dist(&ctx, &mut dm)?;
+                match routine {
+                    SmallRoutine::Potrf => dm.gather(),
+                    SmallRoutine::Potrs => {
+                        potrs_dist(&ctx, &dm, rhs.as_ref().expect("validated above"))
+                    }
+                    SmallRoutine::Potri => {
+                        potri_dist(&ctx, &mut dm)?;
+                        dm.gather()
+                    }
+                }
+            };
+            match run() {
+                Ok(x) => x,
+                // Surfaces on the waiter, like any panicking solve.
+                Err(e) => panic!("small distributed solve failed: {e}"),
+            }
+        })
+    }
+
+    /// Flush the buckets whose oldest request has dwelled past the
+    /// policy bound (cost-model nanoseconds). Runs on every
+    /// `submit_small`, whichever path the new request takes.
+    pub fn flush_due_small(&self) {
+        let now_ns = self.sim_now_ns();
+        self.run_flushes(|st, ready| flush_due_into(st, now_ns, ready));
+    }
+
+    /// Force-flush every pending coalescer bucket — the drain path,
+    /// and the lever for bounding tail latency once traffic stops.
+    pub fn flush_small(&self) {
+        let now_ns = self.sim_now_ns();
+        self.run_flushes(|st, ready| {
+            for bucket in st.planner.flush_all(now_ns) {
+                collect_flush(st, bucket, ready);
+            }
+        });
+    }
+
+    /// Small solves waiting in the coalescer (not yet flushed).
+    pub fn pending_small(&self) -> usize {
+        self.small.lock().unwrap().planner.pending()
+    }
+
+    /// The batched small-solve configuration.
+    pub fn small_config(&self) -> &SmallConfig {
+        &self.cfg
     }
 
     /// The shared node solves run on.
@@ -477,6 +843,9 @@ impl SolveService {
     /// later — [`ServiceHandle::wait`] is the synchronization point
     /// for result availability.
     pub fn drain(&self) {
+        // Partial coalescer buckets would otherwise wait forever for
+        // bucket-mates that are not coming.
+        self.flush_small();
         let mut st = self.inner.state.lock().unwrap();
         while !st.queue.is_empty() || st.in_flight > 0 {
             st = self.inner.cv.wait(st).unwrap();
@@ -486,6 +855,9 @@ impl SolveService {
 
 impl Drop for SolveService {
     fn drop(&mut self) {
+        // Push any still-coalescing smalls into the queue so their
+        // waiters resolve before the workers exit.
+        self.flush_small();
         {
             let mut st = self.inner.state.lock().unwrap();
             st.shutdown = true;
@@ -500,6 +872,204 @@ impl Drop for SolveService {
 /// `Ok((result, stats))`, or the panic message of a solve that
 /// unwound inside a worker.
 type SolveOutcome<T> = std::result::Result<(T, SolveStats), String>;
+
+type SmallSlot<S> = Arc<(Mutex<Option<SolveOutcome<Matrix<S>>>>, Condvar)>;
+
+/// Move every dwell-expired bucket into `ready` (the shared half of
+/// `flush_due_small` and the coalesced-submit path).
+fn flush_due_into(st: &mut SmallState, now_ns: u64, ready: &mut Vec<PendingFlush>) {
+    for due_key in st.planner.due(now_ns) {
+        if let Some(bucket) = st.planner.flush(due_key, now_ns) {
+            collect_flush(st, bucket, ready);
+        }
+    }
+}
+
+/// Pull a flushed bucket's payloads and flusher out of the planner
+/// state; the caller executes the flush after releasing the lock.
+fn collect_flush(st: &mut SmallState, bucket: FlushedBucket, out: &mut Vec<PendingFlush>) {
+    let flusher =
+        st.flushers.get(&bucket.key).expect("flusher installed on first push").clone();
+    let payloads = bucket
+        .ids
+        .iter()
+        .map(|id| st.payloads.remove(id).expect("payload stored with its id"))
+        .collect();
+    out.push((flusher, bucket, payloads));
+}
+
+fn publish_one<S: Scalar>(slot: &SmallSlot<S>, outcome: SolveOutcome<Matrix<S>>) {
+    let (lock, cv) = &**slot;
+    *lock.lock().unwrap() = Some(outcome);
+    cv.notify_all();
+}
+
+fn publish_failure<S: Scalar>(slots: &[SmallSlot<S>], msg: String) {
+    for slot in slots {
+        publish_one(slot, Err(msg.clone()));
+    }
+}
+
+/// The type-erasure bridge for one bucket key: downcast the payloads
+/// back to `SmallJob<S>`, admit the pod against per-device VRAM, run
+/// the fused sweep, and publish every request's individual outcome.
+fn small_flusher<S: Scalar>(routine: SmallRoutine) -> Arc<SmallFlusher> {
+    Arc::new(move |svc: &SolveService, bucket: FlushedBucket, payloads: Vec<SmallPayload>| {
+        let mut systems = Vec::with_capacity(payloads.len());
+        let mut rhss = Vec::with_capacity(payloads.len());
+        let mut slots = Vec::with_capacity(payloads.len());
+        for p in payloads {
+            let job = *p.downcast::<SmallJob<S>>().expect("bucket key pins the dtype");
+            systems.push(job.a);
+            rhss.push(job.rhs);
+            slots.push(job.slot);
+        }
+        let occupancy = systems.len();
+        let dims: Vec<(usize, usize)> = systems
+            .iter()
+            .zip(&rhss)
+            .map(|(a, b)| (a.rows(), b.as_ref().map(|m| m.cols()).unwrap_or(0)))
+            .collect();
+        let ndev = svc.inner.capacity.len();
+        let fp = match Footprint::for_pod(routine.name(), &dims, ndev, S::DTYPE) {
+            Ok(fp) => fp,
+            Err(e) => return publish_failure(&slots, format!("pod footprint failed: {e}")),
+        };
+        let node = svc.inner.node.clone();
+        let model = svc.cfg.model.clone();
+        let total_wait: u64 = bucket.waits_ns.iter().sum();
+        let waits = bucket.waits_ns.clone();
+        let job_slots = slots.clone();
+        // An AdmittedJob rather than a plain submit closure: the
+        // per-request publications ride the deferred PublishFn, so —
+        // exactly like a non-batched solve — a resolved handle implies
+        // the pod's reservation is already released.
+        let job: AdmittedJob = Box::new(move |queue_wait| {
+            let t0 = Instant::now();
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                run_small_bucket::<S>(routine, &node, &model, &systems, &rhss, None)
+            }));
+            let publish: PublishFn = match out {
+                Ok(Ok((results, makespan_ns))) => {
+                    node.metrics().add_batch_bucket(occupancy as u64, total_wait, makespan_ns);
+                    let exec = t0.elapsed();
+                    Box::new(move || {
+                        for ((slot, x), wait_ns) in
+                            job_slots.iter().zip(results).zip(waits.iter().copied())
+                        {
+                            let stats = SolveStats {
+                                queue_wait,
+                                exec,
+                                batch_size: occupancy,
+                                coalesce_wait_ns: wait_ns,
+                            };
+                            publish_one(slot, Ok((x, stats)));
+                        }
+                    })
+                }
+                // A sweep aborts at its first failing system; rerun the
+                // bucket one system at a time so only the culprit's
+                // waiter sees the failure. Each retry is a batch of
+                // one *pinned to the device the bucket's round-robin
+                // reservation placed that system on*, so the rerun
+                // allocates strictly inside the admitted footprint.
+                _ => {
+                    let deal = TileDim::round_robin(occupancy, ndev)
+                        .expect("service nodes have at least one device");
+                    let outcomes: Vec<std::result::Result<Matrix<S>, String>> = (0..occupancy)
+                        .map(|i| {
+                            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                run_small_bucket::<S>(
+                                    routine,
+                                    &node,
+                                    &model,
+                                    &systems[i..i + 1],
+                                    &rhss[i..i + 1],
+                                    Some(deal.owner(i)),
+                                )
+                            }))
+                            .map_err(panic_message)
+                            .and_then(|r| {
+                                r.map(|(mut v, _)| v.pop().expect("batch of one"))
+                                    .map_err(|e| format!("small solve failed: {e}"))
+                            })
+                        })
+                        .collect();
+                    let exec = t0.elapsed();
+                    Box::new(move || {
+                        for ((slot, out), wait_ns) in
+                            job_slots.iter().zip(outcomes).zip(waits.iter().copied())
+                        {
+                            match out {
+                                Ok(x) => {
+                                    let stats = SolveStats {
+                                        queue_wait,
+                                        exec,
+                                        batch_size: 1,
+                                        coalesce_wait_ns: wait_ns,
+                                    };
+                                    publish_one(slot, Ok((x, stats)));
+                                }
+                                Err(msg) => publish_one(slot, Err(msg)),
+                            }
+                        }
+                    })
+                }
+            };
+            node.metrics()
+                .add_service_completion(queue_wait.as_nanos() as u64, t0.elapsed().as_nanos() as u64);
+            publish
+        });
+        if let Err(e) = svc.enqueue_job(fp, job) {
+            publish_failure(&slots, format!("pod admission failed: {e}"));
+        }
+    })
+}
+
+/// Pack → sweep → gather for one flushed bucket; returns the
+/// per-request results and the bucket's charged sweep makespan in
+/// integer nanoseconds (the sum of each sweep's per-device critical
+/// path — see [`crate::batch::SweepReport::charged_ns`] — which stays
+/// correct when other tenants advance the shared node's clocks
+/// concurrently).
+fn run_small_bucket<S: Scalar>(
+    routine: SmallRoutine,
+    node: &SimNode,
+    model: &GpuCostModel,
+    systems: &[Matrix<S>],
+    rhss: &[Option<Matrix<S>>],
+    pin: Option<usize>,
+) -> Result<(Vec<Matrix<S>>, u64)> {
+    let pack = |mats: &[Matrix<S>]| match pin {
+        Some(dev) => PackedPod::pack_on(node, mats, dev),
+        None => PackedPod::pack(node, mats),
+    };
+    let backend = SolverBackend::<S>::Native;
+    let ctx = Ctx::new(node, model, &backend);
+    let mut pod = pack(systems)?;
+    let factor = potrf_batched(&ctx, &mut pod)?;
+    let mut makespan_ns = factor.charged_ns;
+    let results = match routine {
+        SmallRoutine::Potrf => pod.gather()?,
+        SmallRoutine::Potrs => {
+            let rhs_mats: Vec<Matrix<S>> = rhss
+                .iter()
+                .map(|b| b.as_ref().expect("potrs request carries a rhs").clone())
+                .collect();
+            let mut pod_b = pack(&rhs_mats)?;
+            makespan_ns += potrs_batched(&ctx, &pod, &mut pod_b)?.charged_ns;
+            let out = pod_b.gather()?;
+            pod_b.free()?;
+            out
+        }
+        SmallRoutine::Potri => {
+            makespan_ns += potri_batched(&ctx, &mut pod)?.charged_ns;
+            pod.gather()?
+        }
+    };
+    pod.free()?;
+    Ok((results, makespan_ns))
+}
 
 fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
     if let Some(s) = p.downcast_ref::<&str>() {
@@ -719,6 +1289,249 @@ mod tests {
         let ff = Footprint::for_grid("potrf", &lay, 3, DType::F64).unwrap();
         assert_eq!(fs.bytes(0), ff.bytes(0) + 10 * 3 * 8);
         assert!(Footprint::for_grid("getrf", &lay, 0, DType::F64).is_err());
+    }
+
+    #[test]
+    fn footprint_for_pod_is_exact_arena_bytes() {
+        // Three systems round-robin on 2 devices: dev0 gets systems 0
+        // and 2, dev1 gets system 1; potrs adds the RHS entries.
+        let dims = [(8usize, 1usize), (4, 2), (6, 1)];
+        let fp = Footprint::for_pod("potrs", &dims, 2, DType::F64).unwrap();
+        assert_eq!(fp.bytes(0), (8 * 8 + 8 * 1 + 6 * 6 + 6 * 1) * 8);
+        assert_eq!(fp.bytes(1), (4 * 4 + 4 * 2) * 8);
+        let ff = Footprint::for_pod("potrf", &dims, 2, DType::F64).unwrap();
+        assert_eq!(ff.bytes(0), (8 * 8 + 6 * 6) * 8);
+        assert!(Footprint::for_pod("getrf", &dims, 2, DType::F64).is_err());
+        // And it dominates (equals) a real pod's allocation.
+        use crate::batch::PackedPod;
+        let node = SimNode::new_uniform(2, 1 << 20);
+        let systems: Vec<crate::linalg::Matrix<f64>> =
+            dims.iter().map(|&(n, _)| crate::linalg::Matrix::spd_random(n, n as u64)).collect();
+        let pod = PackedPod::pack(&node, &systems).unwrap();
+        for (d, rep) in node.memory_reports().iter().enumerate() {
+            assert!(ff.bytes(d) >= rep.used, "pod footprint under-declares device {d}");
+        }
+        drop(pod);
+    }
+
+    #[test]
+    fn submit_small_coalesces_and_solves() {
+        use crate::linalg::{self, tol_for, FrobNorm};
+        let node = SimNode::new_uniform(4, 1 << 22);
+        let mut cfg = SmallConfig::with_tile(64);
+        cfg.policy.max_batch = 4;
+        cfg.policy.max_dwell_ns = u64::MAX; // occupancy-only flushing
+        let svc = SolveService::with_small_config(node.clone(), 2, cfg);
+        let systems: Vec<Matrix<f64>> =
+            (0..4).map(|i| Matrix::spd_random(10 + i, 70 + i as u64)).collect();
+        let rhss: Vec<Matrix<f64>> =
+            (0..4).map(|i| Matrix::random(10 + i, 2, 80 + i as u64)).collect();
+        let handles: Vec<_> = systems
+            .iter()
+            .zip(&rhss)
+            .map(|(a, b)| {
+                svc.submit_small(SmallRoutine::Potrs, a.clone(), Some(b.clone())).unwrap()
+            })
+            .collect();
+        // The fourth submit filled the bucket; nothing should linger.
+        assert_eq!(svc.pending_small(), 0);
+        for (i, h) in handles.into_iter().enumerate() {
+            let (x, stats) = h.wait();
+            let l = linalg::potrf(&systems[i]).unwrap();
+            let x_ref = linalg::potrs_from_chol(&l, &rhss[i]).unwrap();
+            assert!(x.rel_err(&x_ref) < tol_for::<f64>(16), "request {i} wrong");
+            assert_eq!(stats.batch_size, 4, "request {i} missed the bucket");
+        }
+        svc.drain();
+        let m = node.metrics().snapshot();
+        assert_eq!(m.batch_buckets, 1);
+        assert_eq!(m.batch_solves, 4);
+        assert_eq!(m.batch_peak_occupancy, 4);
+        assert!(m.batch_makespan_ns > 0);
+        assert_eq!(svc.reserved(), vec![0; 4]);
+        let caps = svc.capacity().to_vec();
+        for (d, pk) in svc.peak_reserved().into_iter().enumerate() {
+            assert!(pk <= caps[d], "over-admitted device {d}");
+        }
+    }
+
+    #[test]
+    fn drain_flushes_partial_buckets() {
+        use crate::linalg::{tol_for, FrobNorm};
+        let node = SimNode::new_uniform(2, 1 << 22);
+        let mut cfg = SmallConfig::with_tile(64);
+        cfg.policy.max_batch = 8;
+        cfg.policy.max_dwell_ns = u64::MAX;
+        let svc = SolveService::with_small_config(node, 1, cfg);
+        let a = Matrix::<f64>::spd_random(12, 5);
+        let handles: Vec<_> = (0..3)
+            .map(|_| svc.submit_small(SmallRoutine::Potri, a.clone(), None).unwrap())
+            .collect();
+        assert_eq!(svc.pending_small(), 3);
+        svc.drain();
+        assert_eq!(svc.pending_small(), 0);
+        for h in handles {
+            let (inv, stats) = h.wait();
+            let prod = a.matmul(&inv);
+            assert!(prod.rel_err(&Matrix::eye(12)) < tol_for::<f64>(12) * 10.0);
+            assert_eq!(stats.batch_size, 3);
+        }
+    }
+
+    #[test]
+    fn oversized_small_requests_run_distributed() {
+        use crate::linalg::{self, tol_for, FrobNorm};
+        let node = SimNode::new_uniform(2, 1 << 23);
+        let svc = SolveService::new(node, 1); // small_dim = 256
+        let n = 300;
+        let a = Matrix::<f64>::spd_random(n, 9);
+        let b = Matrix::<f64>::random(n, 1, 10);
+        let h = svc.submit_small(SmallRoutine::Potrs, a.clone(), Some(b.clone())).unwrap();
+        assert_eq!(svc.pending_small(), 0, "oversized request must bypass the coalescer");
+        let (x, stats) = h.wait();
+        assert_eq!(stats.batch_size, 1);
+        assert_eq!(stats.coalesce_wait_ns, 0);
+        let l = linalg::potrf(&a).unwrap();
+        let x_ref = linalg::potrs_from_chol(&l, &b).unwrap();
+        assert!(x.rel_err(&x_ref) < tol_for::<f64>(n) * 10.0);
+    }
+
+    #[test]
+    fn distributed_submits_flush_expired_buckets() {
+        let node = SimNode::new_uniform(2, 1 << 23);
+        let mut cfg = SmallConfig::with_tile(64);
+        cfg.policy.max_batch = 32;
+        cfg.policy.max_dwell_ns = 1_000; // 1 µs of simulated time
+        let svc = SolveService::with_small_config(node, 1, cfg);
+        let small = svc
+            .submit_small(SmallRoutine::Potrf, Matrix::<f64>::spd_random(8, 1), None)
+            .unwrap();
+        assert_eq!(svc.pending_small(), 1);
+        // An oversized request runs distributed and advances the
+        // simulated clock well past the dwell bound...
+        let big1 = svc
+            .submit_small(SmallRoutine::Potrf, Matrix::<f64>::spd_random(300, 2), None)
+            .unwrap();
+        big1.wait();
+        // ...so the next submit — also distributed, never touching the
+        // coalescer — must still flush the expired bucket.
+        let big2 = svc
+            .submit_small(SmallRoutine::Potrf, Matrix::<f64>::spd_random(300, 3), None)
+            .unwrap();
+        assert_eq!(svc.pending_small(), 0, "expired bucket must flush on a distributed submit");
+        let (_, stats) = small.wait();
+        assert_eq!(stats.batch_size, 1, "the lone request swept as a bucket of one");
+        big2.wait();
+        svc.drain();
+    }
+
+    #[test]
+    fn infeasible_buckets_fall_back_to_distributed() {
+        // 1 device × 1 MiB: each n=128 f64 factor fits individually
+        // (~192 KiB with workspace) but a full 32-way bucket pod
+        // (4 MiB of arenas) never would. Coalescing must step aside,
+        // not fail the whole bucket at admission.
+        let node = SimNode::new_uniform(1, 1 << 20);
+        let svc = SolveService::new(node, 1); // small_dim = 256, max_batch = 32
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                svc.submit_small(SmallRoutine::Potrf, Matrix::<f64>::spd_random(128, i), None)
+                    .unwrap()
+            })
+            .collect();
+        assert_eq!(svc.pending_small(), 0, "infeasible buckets must not coalesce");
+        for h in handles {
+            let (l, stats) = h.wait();
+            assert_eq!(l.rows(), 128);
+            assert_eq!(stats.batch_size, 1, "must have run distributed");
+        }
+        svc.drain();
+    }
+
+    #[test]
+    fn submit_small_validates_requests() {
+        let node = SimNode::new_uniform(2, 1 << 20);
+        let svc = SolveService::new(node, 1);
+        let a = Matrix::<f64>::spd_random(8, 1);
+        assert!(svc.submit_small(SmallRoutine::Potrs, a.clone(), None).is_err());
+        assert!(svc
+            .submit_small(SmallRoutine::Potrf, a.clone(), Some(Matrix::ones(8, 1)))
+            .is_err());
+        assert!(svc
+            .submit_small(SmallRoutine::Potrs, a.clone(), Some(Matrix::ones(9, 1)))
+            .is_err());
+        assert!(svc
+            .submit_small(SmallRoutine::Potrf, Matrix::<f64>::zeros(4, 5), None)
+            .is_err());
+        svc.drain();
+    }
+
+    #[test]
+    fn wall_clock_dwell_flushes_frozen_sim_buckets() {
+        // Purely coalesced traffic charges nothing, so the simulated
+        // clock freezes; the wall backstop keeps the latency promise.
+        let node = SimNode::new_uniform(2, 1 << 22);
+        let mut cfg = SmallConfig::with_tile(64);
+        cfg.policy.max_batch = 32;
+        cfg.policy.max_dwell_ns = u64::MAX;
+        cfg.policy.max_wall_dwell = Duration::ZERO;
+        let svc = SolveService::with_small_config(node, 1, cfg);
+        let h1 = svc
+            .submit_small(SmallRoutine::Potrf, Matrix::<f64>::spd_random(8, 1), None)
+            .unwrap();
+        // A later coalesced submit — a different size-class, so it
+        // cannot fill h1's bucket — finds it wall-expired and flushes.
+        let h2 = svc
+            .submit_small(SmallRoutine::Potrf, Matrix::<f64>::spd_random(24, 2), None)
+            .unwrap();
+        let (l1, s1) = h1.wait();
+        assert_eq!(l1.rows(), 8);
+        assert_eq!(s1.batch_size, 1);
+        svc.drain();
+        let (l2, _) = h2.wait();
+        assert_eq!(l2.rows(), 24);
+    }
+
+    #[test]
+    fn failing_system_does_not_take_down_its_bucket() {
+        use crate::linalg;
+        let node = SimNode::new_uniform(2, 1 << 22);
+        let mut cfg = SmallConfig::with_tile(64);
+        cfg.policy.max_batch = 3;
+        cfg.policy.max_dwell_ns = u64::MAX;
+        let svc = SolveService::with_small_config(node, 1, cfg);
+        let good1 = Matrix::<f64>::spd_random(8, 1);
+        let mut bad = Matrix::<f64>::spd_random(8, 2);
+        bad[(5, 5)] = -40.0; // not positive definite
+        let good2 = Matrix::<f64>::spd_random(8, 3);
+        let h1 = svc.submit_small(SmallRoutine::Potrf, good1.clone(), None).unwrap();
+        let hb = svc.submit_small(SmallRoutine::Potrf, bad, None).unwrap();
+        let h2 = svc.submit_small(SmallRoutine::Potrf, good2.clone(), None).unwrap();
+        let (l1, s1) = h1.wait();
+        assert_eq!(s1.batch_size, 1, "degraded buckets rerun one system at a time");
+        assert_eq!(l1.as_slice(), linalg::potrf(&good1).unwrap().as_slice());
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| hb.wait()));
+        assert!(res.is_err(), "the culprit must still fail on its own handle");
+        let (l2, _) = h2.wait();
+        assert_eq!(l2.as_slice(), linalg::potrf(&good2).unwrap().as_slice());
+        svc.drain();
+    }
+
+    #[test]
+    fn failed_small_solve_reraises_on_wait() {
+        let node = SimNode::new_uniform(2, 1 << 22);
+        let mut cfg = SmallConfig::with_tile(64);
+        cfg.policy.max_batch = 1; // immediate flush
+        let svc = SolveService::with_small_config(node, 1, cfg);
+        let mut a = Matrix::<f64>::spd_random(8, 3);
+        a[(5, 5)] = -40.0; // not positive definite
+        let h = svc.submit_small(SmallRoutine::Potrf, a, None).unwrap();
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| h.wait()));
+        assert!(res.is_err(), "numerical failure must re-raise on the waiter");
+        // The service survives and keeps serving.
+        let ok = svc.submit_small(SmallRoutine::Potrf, Matrix::<f64>::spd_random(8, 4), None);
+        let (_, stats) = ok.unwrap().wait();
+        assert_eq!(stats.batch_size, 1);
     }
 
     #[test]

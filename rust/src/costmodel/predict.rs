@@ -348,6 +348,119 @@ impl Predictor {
         self.redistribute(n, ndev) + stage1 + stage2 + stage3
     }
 
+    // ---- batched small-solve path (the coalescer's cost cut) -----------
+
+    /// Makespan of one **batched pod sweep**: `batch` independent
+    /// `n × n` systems (each with `nrhs` RHS columns where the routine
+    /// takes one) dealt round-robin onto `ndev` devices and swept with
+    /// one fused kernel per device per stage — the analytic replay of
+    /// [`crate::batch::sweep`]. Systems never leave their device, so
+    /// there is no communication term; the makespan is the most-loaded
+    /// device (`⌈batch/ndev⌉` systems), each stage paying a single
+    /// launch overhead plus the summed per-system kernel time.
+    ///
+    /// Host staging is excluded here **and** in
+    /// [`Predictor::small_serial`], keeping the comparison symmetric:
+    /// the pod stages the same matrix bytes the serial path's
+    /// per-solve scatters do, just in `ndev` copies instead of
+    /// `batch·ndev` — so including staging on both sides only widens
+    /// the batched win. The serial side's `redistribute` term is the
+    /// §2.1 *device-side* layout conversion, which the pod genuinely
+    /// skips.
+    pub fn pod_sweep(&self, routine: &str, n: usize, nrhs: usize, ndev: usize, batch: usize) -> f64 {
+        if batch == 0 {
+            return 0.0;
+        }
+        let ov = self.model.launch_overhead;
+        let c0 = batch.div_ceil(ndev.max(1)) as f64;
+        let potf2 =
+            self.model.panel_time(self.dtype, GpuCostModel::flops_potf2(self.dtype, n)) - ov;
+        let factor = ov + c0 * potf2;
+        match routine {
+            "potrf" => factor,
+            "potrs" => {
+                let trsm = self
+                    .model
+                    .panel_time(self.dtype, GpuCostModel::flops_trsm(self.dtype, n, nrhs, n))
+                    - ov;
+                factor + ov + c0 * (2.0 * trsm)
+            }
+            "potri" => {
+                let trsm = self
+                    .model
+                    .panel_time(self.dtype, GpuCostModel::flops_trsm(self.dtype, n, n, n))
+                    - ov;
+                let gemm = self.model.gemm_time(self.dtype, n, n, n) - ov;
+                factor + ov + c0 * (trsm + gemm)
+            }
+            _ => f64::INFINITY,
+        }
+    }
+
+    /// Makespan of the **serial one-at-a-time** alternative: `batch`
+    /// distributed solves back to back, each paying the full §2.1
+    /// redistribution and per-panel collectives. With `batch = 1` this
+    /// *is* the distributed path's formula
+    /// ([`Predictor::potrs`]/[`Predictor::potri`]/redistribute+potrf),
+    /// exactly — the degeneracy the unit tests pin.
+    pub fn small_serial(
+        &self,
+        routine: &str,
+        n: usize,
+        nrhs: usize,
+        t: usize,
+        ndev: usize,
+        batch: usize,
+    ) -> f64 {
+        let per = match routine {
+            "potrf" => self.redistribute(n, ndev) + self.potrf(n, t, ndev),
+            "potrs" => self.potrs(n, t, ndev, nrhs),
+            "potri" => self.potri(n, t, ndev),
+            _ => f64::INFINITY,
+        };
+        batch as f64 * per
+    }
+
+    /// The coalescer's dispatch cut: should `batch` size-`n` requests
+    /// run as one fused pod sweep rather than one-at-a-time
+    /// distributed solves?
+    pub fn batched_wins(
+        &self,
+        routine: &str,
+        n: usize,
+        nrhs: usize,
+        t: usize,
+        ndev: usize,
+        batch: usize,
+    ) -> bool {
+        self.pod_sweep(routine, n, nrhs, ndev, batch)
+            < self.small_serial(routine, n, nrhs, t, ndev, batch)
+    }
+
+    /// Smallest power-of-two size-class at which batching **stops**
+    /// winning for the given shape (batched wins strictly below the
+    /// returned class). Scans the coalescer's size-class ladder up to
+    /// `2^17` — far beyond any "small" solve, and the cap keeps the
+    /// `O(ntiles²)` serial replays cheap; returns `usize::MAX` when
+    /// batching wins across the whole scanned ladder.
+    pub fn batched_crossover(
+        &self,
+        routine: &str,
+        nrhs: usize,
+        t: usize,
+        ndev: usize,
+        batch: usize,
+    ) -> usize {
+        let mut n = 4usize;
+        while n <= (1 << 17) {
+            if !self.batched_wins(routine, n, nrhs, t, ndev, batch) {
+                return n;
+            }
+            n *= 2;
+        }
+        usize::MAX
+    }
+
     // ---- single-GPU baselines (cuSOLVERDn / native JAX) -----------------
 
     /// `cho_factor` + `cho_solve` on one device.
@@ -498,6 +611,71 @@ mod tests {
         assert_eq!(p.syevd2d(16384, 256, 1, 4), p.syevd(16384, 256, 4));
         let pc = Predictor::h200(8, DType::C128);
         assert_eq!(pc.syevd2d(8192, 128, 1, 8), pc.syevd(8192, 128, 8));
+    }
+
+    #[test]
+    fn batched_crossover_pins_the_size_class() {
+        // The coalescer's cut: batching wins below a size-class and
+        // stops winning at it. For f64 potrs/potrf on the paper node
+        // (T_A = 256, 8 devices, 32-way buckets) the crossover class is
+        // 32768; f32's faster serial GEMM rate pushes it to 65536.
+        let p = Predictor::h200(8, DType::F64);
+        assert_eq!(p.batched_crossover("potrs", 1, 256, 8, 32), 32768);
+        assert_eq!(p.batched_crossover("potrf", 1, 256, 8, 32), 32768);
+        assert!(p.batched_wins("potrs", 64, 1, 256, 8, 32));
+        assert!(p.batched_wins("potrs", 16384, 1, 256, 8, 32));
+        assert!(!p.batched_wins("potrs", 65536, 1, 256, 8, 32));
+        let p32 = Predictor::h200(8, DType::F32);
+        assert_eq!(p32.batched_crossover("potrs", 1, 256, 8, 32), 65536);
+        let pc = Predictor::h200(8, DType::C128);
+        assert_eq!(pc.batched_crossover("potrs", 1, 256, 8, 32), 32768);
+        // potri's serial path carries per-round panel broadcasts on top
+        // of the factor: batching wins across the whole scanned ladder.
+        assert_eq!(p.batched_crossover("potri", 0, 256, 8, 32), usize::MAX);
+        // Unknown routines never win.
+        assert!(!p.batched_wins("getrf", 64, 1, 256, 8, 32));
+    }
+
+    #[test]
+    fn small_serial_degenerates_to_distributed_formula_at_b1() {
+        // B = 1 must reproduce the distributed path's formula *exactly*
+        // (bitwise f64 equality, not approximately).
+        let p = Predictor::h200(8, DType::F64);
+        for &(n, t) in &[(64usize, 256usize), (1024, 256), (4096, 128)] {
+            assert_eq!(p.small_serial("potrs", n, 1, t, 8, 1), p.potrs(n, t, 8, 1));
+            assert_eq!(p.small_serial("potri", n, 0, t, 8, 1), p.potri(n, t, 8));
+            assert_eq!(
+                p.small_serial("potrf", n, 0, t, 8, 1),
+                p.redistribute(n, 8) + p.potrf(n, t, 8)
+            );
+        }
+        // Even a single tiny solve is better off batched: the serial
+        // path's redistribution latency alone dwarfs the fused kernels.
+        assert!(p.batched_wins("potrs", 64, 1, 256, 8, 1));
+    }
+
+    #[test]
+    fn batched_sweep_beats_serial_for_256_small_solves() {
+        // The acceptance workload: 256 small solves (n = 64). The fused
+        // pod sweep must be strictly below the serial one-at-a-time
+        // distributed path — for every routine and dtype.
+        for dtype in [DType::F32, DType::F64, DType::C64, DType::C128] {
+            let p = Predictor::h200(8, dtype);
+            for routine in ["potrf", "potrs", "potri"] {
+                let pod = p.pod_sweep(routine, 64, 1, 8, 256);
+                let serial = p.small_serial(routine, 64, 1, 256, 8, 256);
+                assert!(
+                    pod < serial,
+                    "{routine} {dtype:?}: pod {pod} !< serial {serial}"
+                );
+                // The modeled win is orders of magnitude, not noise.
+                assert!(serial / pod > 100.0, "{routine} {dtype:?} win too thin");
+                assert!(pod.is_finite() && pod > 0.0);
+            }
+        }
+        // An empty batch costs nothing.
+        let p = Predictor::h200(8, DType::F64);
+        assert_eq!(p.pod_sweep("potrs", 64, 1, 8, 0), 0.0);
     }
 
     #[test]

@@ -76,6 +76,15 @@ impl TileDim {
         Self::new(extent, tile, nd, Deal::Blocked)
     }
 
+    /// One-item-per-tile round-robin deal: item `i` → device `i mod nd`,
+    /// local ordinal `i / nd`. This is the degenerate cyclic deal the
+    /// batched small-solve pods ([`crate::batch::PackedPod`]) use to
+    /// spread `count` independent systems over the node — the same
+    /// `numroc` arithmetic as the tile grids, at tile size 1.
+    pub fn round_robin(count: usize, nd: usize) -> Result<Self> {
+        Self::cyclic(count, 1, nd)
+    }
+
     /// Total indices along this dimension.
     pub fn extent(&self) -> usize {
         self.extent

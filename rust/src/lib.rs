@@ -39,6 +39,7 @@
 //! ```
 
 pub mod baseline;
+pub mod batch;
 pub mod cli;
 pub mod coordinator;
 pub mod costmodel;
@@ -56,6 +57,7 @@ pub mod tile;
 
 /// Convenient re-exports for the common API surface.
 pub mod prelude {
+    pub use crate::batch::{BatchPolicy, PackedPod, SmallRoutine};
     pub use crate::coordinator::{
         BackendKind, ExecMode, Footprint, JaxMg, Mesh, PartitionSpec, SolveService,
     };

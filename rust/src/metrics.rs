@@ -46,6 +46,23 @@ pub struct Metrics {
     /// Device-seconds spanned by pipelined phases (`ndev × span`), ns
     /// (overlap-efficiency denominator).
     pub overlap_span_ns: AtomicU64,
+    /// Coalesced buckets swept by the batched small-solve path.
+    pub batch_buckets: AtomicU64,
+    /// Small solves served through a batched sweep (occupancy
+    /// numerator; `batch_solves / batch_buckets` is the mean bucket
+    /// occupancy).
+    pub batch_solves: AtomicU64,
+    /// Largest bucket occupancy seen.
+    pub batch_peak_occupancy: AtomicU64,
+    /// Total cost-model ns small solves dwelled in the coalescer
+    /// before their bucket flushed.
+    pub batch_coalesce_wait_ns: AtomicU64,
+    /// Total charged makespan of the batched sweeps, ns (one entry per
+    /// bucket: the sum over the bucket's sweeps of each sweep's
+    /// largest per-device fused-kernel charge — measured from the
+    /// charges themselves, so concurrent tenants on the shared node
+    /// cannot skew it).
+    pub batch_makespan_ns: AtomicU64,
 }
 
 impl Metrics {
@@ -99,6 +116,16 @@ impl Metrics {
         self.overlap_span_ns.fetch_add(span_ns, Ordering::Relaxed);
     }
 
+    /// Record one swept bucket of the batched small-solve path.
+    #[inline]
+    pub fn add_batch_bucket(&self, occupancy: u64, coalesce_wait_ns: u64, makespan_ns: u64) {
+        self.batch_buckets.fetch_add(1, Ordering::Relaxed);
+        self.batch_solves.fetch_add(occupancy, Ordering::Relaxed);
+        self.batch_peak_occupancy.fetch_max(occupancy, Ordering::Relaxed);
+        self.batch_coalesce_wait_ns.fetch_add(coalesce_wait_ns, Ordering::Relaxed);
+        self.batch_makespan_ns.fetch_add(makespan_ns, Ordering::Relaxed);
+    }
+
     /// Snapshot all counters (for reports; not atomic across fields).
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
@@ -119,6 +146,11 @@ impl Metrics {
             service_exec_ns: self.service_exec_ns.load(Ordering::Relaxed),
             overlap_busy_ns: self.overlap_busy_ns.load(Ordering::Relaxed),
             overlap_span_ns: self.overlap_span_ns.load(Ordering::Relaxed),
+            batch_buckets: self.batch_buckets.load(Ordering::Relaxed),
+            batch_solves: self.batch_solves.load(Ordering::Relaxed),
+            batch_peak_occupancy: self.batch_peak_occupancy.load(Ordering::Relaxed),
+            batch_coalesce_wait_ns: self.batch_coalesce_wait_ns.load(Ordering::Relaxed),
+            batch_makespan_ns: self.batch_makespan_ns.load(Ordering::Relaxed),
         }
     }
 
@@ -142,6 +174,11 @@ impl Metrics {
             &self.service_exec_ns,
             &self.overlap_busy_ns,
             &self.overlap_span_ns,
+            &self.batch_buckets,
+            &self.batch_solves,
+            &self.batch_peak_occupancy,
+            &self.batch_coalesce_wait_ns,
+            &self.batch_makespan_ns,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -168,6 +205,11 @@ pub struct MetricsSnapshot {
     pub service_exec_ns: u64,
     pub overlap_busy_ns: u64,
     pub overlap_span_ns: u64,
+    pub batch_buckets: u64,
+    pub batch_solves: u64,
+    pub batch_peak_occupancy: u64,
+    pub batch_coalesce_wait_ns: u64,
+    pub batch_makespan_ns: u64,
 }
 
 impl MetricsSnapshot {
@@ -191,6 +233,25 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Mean bucket occupancy of the batched small-solve path — how
+    /// many solves each fused sweep amortized its launches over.
+    pub fn avg_batch_occupancy(&self) -> f64 {
+        if self.batch_buckets == 0 {
+            0.0
+        } else {
+            self.batch_solves as f64 / self.batch_buckets as f64
+        }
+    }
+
+    /// Mean cost-model coalesce wait of batched solves, seconds.
+    pub fn avg_coalesce_wait(&self) -> f64 {
+        if self.batch_solves == 0 {
+            0.0
+        } else {
+            self.batch_coalesce_wait_ns as f64 / self.batch_solves as f64 * 1e-9
+        }
+    }
+
     /// Difference against an earlier snapshot (per-phase accounting).
     pub fn delta(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
         MetricsSnapshot {
@@ -211,6 +272,12 @@ impl MetricsSnapshot {
             service_exec_ns: self.service_exec_ns - earlier.service_exec_ns,
             overlap_busy_ns: self.overlap_busy_ns - earlier.overlap_busy_ns,
             overlap_span_ns: self.overlap_span_ns - earlier.overlap_span_ns,
+            batch_buckets: self.batch_buckets - earlier.batch_buckets,
+            batch_solves: self.batch_solves - earlier.batch_solves,
+            // A high-water mark, not a flow: the later peak stands.
+            batch_peak_occupancy: self.batch_peak_occupancy,
+            batch_coalesce_wait_ns: self.batch_coalesce_wait_ns - earlier.batch_coalesce_wait_ns,
+            batch_makespan_ns: self.batch_makespan_ns - earlier.batch_makespan_ns,
         }
     }
 }
@@ -267,6 +334,25 @@ mod tests {
         // Empty snapshots report zero, not NaN.
         assert_eq!(MetricsSnapshot::default().overlap_efficiency(), 0.0);
         assert_eq!(MetricsSnapshot::default().avg_queue_wait(), 0.0);
+    }
+
+    #[test]
+    fn batch_counters() {
+        let m = Metrics::new();
+        m.add_batch_bucket(8, 4_000, 100_000);
+        m.add_batch_bucket(4, 2_000, 60_000);
+        let s = m.snapshot();
+        assert_eq!(s.batch_buckets, 2);
+        assert_eq!(s.batch_solves, 12);
+        assert_eq!(s.batch_peak_occupancy, 8);
+        assert_eq!(s.batch_coalesce_wait_ns, 6_000);
+        assert_eq!(s.batch_makespan_ns, 160_000);
+        assert!((s.avg_batch_occupancy() - 6.0).abs() < 1e-12);
+        assert!((s.avg_coalesce_wait() - 500e-9).abs() < 1e-15);
+        assert_eq!(MetricsSnapshot::default().avg_batch_occupancy(), 0.0);
+        assert_eq!(MetricsSnapshot::default().avg_coalesce_wait(), 0.0);
+        m.reset();
+        assert_eq!(m.snapshot(), MetricsSnapshot::default());
     }
 
     #[test]

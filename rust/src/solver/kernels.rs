@@ -35,6 +35,18 @@ pub trait TileKernels<S: Scalar>: Send + Sync {
     /// `C ← C + α·Aᴴ·B` (LAUUM / backward-solve updates).
     fn gemm_hn(&self, c: &mut Matrix<S>, a: &Matrix<S>, b: &Matrix<S>, alpha: S) -> Result<()>;
 
+    /// Unblocked Cholesky of many independent tiles — the seam where a
+    /// real backend installs a true batched kernel (cuBLAS
+    /// `potrfBatched` / a vmapped Pallas tile kernel). The default
+    /// loops [`TileKernels::potf2`] per tile, which keeps the batched
+    /// small-solve sweeps ([`crate::batch::sweep`]) bitwise-identical
+    /// to solving each system individually; the *timing* fusion (one
+    /// launch per device per bucket) is charged by the sweep itself.
+    /// The first failing tile aborts the batch with its error.
+    fn potf2_batch(&self, tiles: &[Matrix<S>]) -> Result<Vec<Matrix<S>>> {
+        tiles.iter().map(|a| self.potf2(a)).collect()
+    }
+
     /// Backend name for logs/benches.
     fn name(&self) -> &'static str;
 }

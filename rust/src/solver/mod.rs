@@ -225,6 +225,39 @@ impl<'a, S: Scalar> Ctx<'a, S> {
         }
     }
 
+    /// The shared pipelined fan-out arithmetic behind
+    /// [`Ctx::charge_broadcast`] and [`Ctx::charge_fanout`]: per-
+    /// receiver link shares serialize on the sender's copy stream,
+    /// gated on its compute horizon. `fence_receivers` is the only
+    /// difference between the two callers — a *data* broadcast fences
+    /// each receiver's compute stream on delivery, an *output* fan-out
+    /// fences nothing.
+    fn pipelined_fanout(
+        &self,
+        tl: &PipelineTimeline,
+        from: usize,
+        bytes: usize,
+        fence_receivers: bool,
+    ) -> crate::Result<()> {
+        self.node.device(from)?;
+        let nd = self.node.num_devices();
+        let nb = tl.compute(from).horizon();
+        for d in 0..nd {
+            if d == from {
+                continue;
+            }
+            let t = self.node.topology().copy_time(from, d, bytes)
+                / (nd.max(2) - 1) as f64; // link shared across fan-out
+            let done = tl.copy(from).issue_after(nb, t);
+            tl.note_busy(from, t);
+            self.node.metrics().add_peer(bytes as u64);
+            if fence_receivers {
+                tl.compute(d).wait_event(Event::at(done));
+            }
+        }
+        Ok(())
+    }
+
     /// Model a replicated-data synchronization: `bytes` flowing from
     /// `from` to every other device (clock + metrics; the payload is
     /// already host-resident in the simulator). Pipelined contexts use
@@ -232,22 +265,7 @@ impl<'a, S: Scalar> Ctx<'a, S> {
     pub fn charge_broadcast(&self, from: usize, bytes: usize) -> crate::Result<()> {
         let nd = self.node.num_devices();
         match &self.timeline {
-            Some(tl) => {
-                self.node.device(from)?;
-                let nb = tl.compute(from).horizon();
-                for d in 0..nd {
-                    if d == from {
-                        continue;
-                    }
-                    let t = self.node.topology().copy_time(from, d, bytes)
-                        / (nd.max(2) - 1) as f64; // link shared across fan-out
-                    let done = tl.copy(from).issue_after(nb, t);
-                    tl.note_busy(from, t);
-                    self.node.metrics().add_peer(bytes as u64);
-                    tl.compute(d).wait_event(Event::at(done));
-                }
-                Ok(())
-            }
+            Some(tl) => self.pipelined_fanout(tl, from, bytes, true),
             None => {
                 let src_clock = self.node.device(from)?.clock();
                 for d in 0..nd {
@@ -261,6 +279,27 @@ impl<'a, S: Scalar> Ctx<'a, S> {
                 }
                 Ok(())
             }
+        }
+    }
+
+    /// Model a replicated-***output*** fan-out: `bytes` of
+    /// already-computed results flowing from `from` to every other
+    /// device. Barrier contexts charge exactly like
+    /// [`Ctx::charge_broadcast`] (the seed clock behaviour). Pipelined
+    /// contexts put the shares on the sender's copy stream, gated on
+    /// its compute horizon, but fence **nothing** on the receivers:
+    /// a `cudaMemcpyPeerAsync` push lands in the receiver's memory
+    /// without occupying its streams, and no downstream kernel
+    /// consumes a replicated result — so an output fan-out must not
+    /// stall the pipeline. Delivery completion is carried by the
+    /// sender's copy-stream horizon (and thus still bounds the
+    /// makespan when it is the true tail). This is what lets the
+    /// `potrs` backward sweep's per-tile result broadcasts overlap
+    /// with the substitution chain.
+    pub fn charge_fanout(&self, from: usize, bytes: usize) -> crate::Result<()> {
+        match &self.timeline {
+            Some(tl) => self.pipelined_fanout(tl, from, bytes, false),
+            None => self.charge_broadcast(from, bytes),
         }
     }
 

@@ -103,8 +103,11 @@ pub fn potrs_dist<S: Scalar>(
             let prev_owner = lay.owner_of_tile(t - 1);
             ctx.charge_p2p(owner, prev_owner, (n - k0) * nrhs * esize)?;
         }
-        // Replicated output: solved block flows to all devices.
-        ctx.charge_broadcast(owner, tk * nrhs * esize)?;
+        // Replicated output: solved block flows to all devices. A pure
+        // fan-out — the backward chain's data dependency rides the
+        // tail hand-off above — so pipelined contexts keep it off the
+        // critical path (see `Ctx::charge_fanout`).
+        ctx.charge_fanout(owner, tk * nrhs * esize)?;
     }
     let _ = ctx.end_phase();
     Ok(x)

@@ -14,6 +14,12 @@
 //!    bootstraps itself on first run; regenerate intentionally with
 //!    `UPDATE_GOLDEN=1 cargo test --test golden_timeline`.
 //!
+//! The same discipline covers the **potrs** solve schedule
+//! (`tests/golden/potrs_timelines.txt`): the factor is produced under a
+//! barrier context and the accounting reset, so the snapshot isolates
+//! the two substitution sweeps — whose tail hand-offs and result
+//! broadcasts ride the copy streams under the pipelined schedule.
+//!
 //! Everything here is deterministic: seeded matrices, an analytic cost
 //! model, and single-threaded scheduling.
 
@@ -21,7 +27,7 @@ use jaxmg::costmodel::GpuCostModel;
 use jaxmg::device::SimNode;
 use jaxmg::layout::BlockCyclic1D;
 use jaxmg::linalg::Matrix;
-use jaxmg::solver::{potrf_dist, Ctx, DeviceTimeline, PipelineConfig, SolverBackend};
+use jaxmg::solver::{potrf_dist, potrs_dist, Ctx, DeviceTimeline, PipelineConfig, SolverBackend};
 use jaxmg::tile::{DistMatrix, Layout1D};
 use std::fmt::Write as _;
 
@@ -103,11 +109,11 @@ fn render_snapshot() -> String {
     out
 }
 
-#[test]
-fn per_device_timelines_match_golden_snapshot() {
+/// Exact-compare a rendered snapshot against its checked-in golden
+/// file, bootstrapping (or regenerating under `UPDATE_GOLDEN=1`) it.
+fn check_golden(file: &str, rendered: String) {
     let golden_dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden");
-    let golden_path = golden_dir.join("potrf_timelines.txt");
-    let rendered = render_snapshot();
+    let golden_path = golden_dir.join(file);
     let update = std::env::var_os("UPDATE_GOLDEN").is_some();
     if update || !golden_path.exists() {
         std::fs::create_dir_all(&golden_dir).unwrap();
@@ -121,4 +127,88 @@ fn per_device_timelines_match_golden_snapshot() {
         "per-device timelines drifted from {golden_path:?} — a perf regression (or an \
          intentional scheduler/cost-model change: rerun with UPDATE_GOLDEN=1 and review the diff)"
     );
+}
+
+#[test]
+fn per_device_timelines_match_golden_snapshot() {
+    check_golden("potrf_timelines.txt", render_snapshot());
+}
+
+// ---------------------------------------------------------------------------
+// potrs: the solve schedule, isolated from the factorization
+// ---------------------------------------------------------------------------
+
+/// Factor under a barrier context, reset the accounting, then run the
+/// `potrs` solve alone under `cfg` — the snapshot captures the two
+/// substitution sweeps, not the factorization.
+fn run_potrs(
+    ndev: usize,
+    tile: usize,
+    n: usize,
+    cfg: PipelineConfig,
+) -> (Matrix<f64>, f64, Option<Vec<DeviceTimeline>>) {
+    let node = SimNode::new_uniform(ndev, 1 << 27);
+    let model = GpuCostModel::h200();
+    let backend = SolverBackend::<f64>::Native;
+    let a = Matrix::<f64>::spd_random(n, 0xD15C0 + n as u64);
+    let b = Matrix::<f64>::ones(n, 1);
+    let lay = Layout1D::BlockCyclic(BlockCyclic1D::new(n, tile, ndev).unwrap());
+    let mut dm = DistMatrix::scatter(&node, &a, lay).unwrap();
+    {
+        let fctx = Ctx::new(&node, &model, &backend);
+        potrf_dist(&fctx, &mut dm).unwrap();
+    }
+    node.reset_accounting();
+    let ctx = Ctx::with_pipeline(&node, &model, &backend, cfg);
+    let x = potrs_dist(&ctx, &dm, &b).unwrap();
+    let snap = ctx.timeline_snapshot();
+    (x, node.sim_time(), snap)
+}
+
+#[test]
+fn potrs_lookahead_beats_barrier_on_every_grid_config() {
+    for &(ndev, tile, n) in GRID {
+        let (x_barrier, t_barrier, _) = run_potrs(ndev, tile, n, PipelineConfig::barrier());
+        let (x_look, t_look, _) = run_potrs(ndev, tile, n, PipelineConfig::lookahead(2));
+        assert_eq!(
+            x_barrier.as_slice(),
+            x_look.as_slice(),
+            "schedule changed potrs numerics (ndev={ndev} tile={tile} n={n})"
+        );
+        assert!(
+            t_look < t_barrier,
+            "potrs lookahead {t_look} !< barrier {t_barrier} (ndev={ndev} tile={tile} n={n})"
+        );
+    }
+}
+
+fn render_potrs_snapshot() -> String {
+    let mut out = String::new();
+    out.push_str("# golden potrs timelines (µs) — regenerate with UPDATE_GOLDEN=1\n");
+    for &(ndev, tile, n) in GRID {
+        let (_, t_barrier, _) = run_potrs(ndev, tile, n, PipelineConfig::barrier());
+        let (_, t_look, snap) = run_potrs(ndev, tile, n, PipelineConfig::lookahead(2));
+        let snap = snap.expect("pipelined run has a timeline");
+        writeln!(out, "config ndev={ndev} tile={tile} n={n} nrhs=1").unwrap();
+        writeln!(out, "  barrier_makespan_us   {:.3}", t_barrier * 1e6).unwrap();
+        writeln!(out, "  lookahead_makespan_us {:.3}", t_look * 1e6).unwrap();
+        for d in &snap {
+            writeln!(
+                out,
+                "  dev {} compute {:.3} panel {:.3} copy {:.3} busy {:.3}",
+                d.device,
+                d.compute_horizon * 1e6,
+                d.panel_horizon * 1e6,
+                d.copy_horizon * 1e6,
+                d.busy * 1e6
+            )
+            .unwrap();
+        }
+    }
+    out
+}
+
+#[test]
+fn potrs_timelines_match_golden_snapshot() {
+    check_golden("potrs_timelines.txt", render_potrs_snapshot());
 }
