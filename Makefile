@@ -12,11 +12,14 @@
 #   make bench-batch   batched small-solve bench in smoke/test mode:
 #                      coalesced pod sweeps vs serial distributed path
 #                      (asserts the batched makespan win — CI-friendly)
+#   make bench-serve   serving-front bench in smoke/test mode: SPMD vs
+#                      MPMD parity + worker-kill drill (CI-friendly,
+#                      part of `make check`)
 
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test check clippy fmt python-tests test-xla bench bench-redist bench-batch e2e artifacts clean
+.PHONY: build test check clippy fmt python-tests test-xla bench bench-redist bench-batch bench-serve e2e artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -39,7 +42,7 @@ python-tests:
 		echo "skipping python tests (pytest/jax/hypothesis not importable)"; \
 	fi
 
-check: build test clippy fmt python-tests
+check: build test clippy fmt python-tests bench-serve
 
 # Artifact-gated XLA integration tests (fail with a pointed message
 # when artifacts are absent — that failure mode is itself under test).
@@ -67,6 +70,12 @@ bench-redist:
 # shrinks the workload but keeps the batched-beats-serial assertions.
 bench-batch:
 	BATCH_BENCH_SMOKE=1 $(CARGO) bench --bench batching
+
+# The serving bench is the MPMD acceptance harness: SPMD-vs-MPMD
+# bitwise parity, the exact cudaIpc overhead charge, and the
+# worker-kill drill. Smoke mode shrinks shapes, keeps every assertion.
+bench-serve:
+	SERVE_BENCH_SMOKE=1 $(CARGO) bench --bench serving
 
 e2e:
 	$(CARGO) run --release --example e2e_driver

@@ -1,0 +1,165 @@
+//! Serving-front comparison: the SPMD `SolveService` vs the MPMD
+//! one-process-per-GPU subsystem on identical workloads.
+//!
+//! Three sections, each printing measured (CPU) and projected
+//! (cost-model) numbers:
+//!
+//! 1. **front parity** — the same distributed potrs stream through
+//!    both fronts; asserts bitwise-identical results and that the MPMD
+//!    projection carries exactly the modeled per-solve `cudaIpc`
+//!    round-trip (`Predictor::mpmd_overhead`), nothing more.
+//! 2. **failure drill** — a stream with a worker killed mid-workload;
+//!    asserts zero lost requests and drained reservations.
+//! 3. **cost model** — the `mpmd_overhead` ladder by device count next
+//!    to a paper-scale solve, showing the overhead is control-plane
+//!    noise at scale.
+//!
+//! `SERVE_BENCH_SMOKE=1` shrinks the workload for `make bench-serve`
+//! (CI test mode); every asserted invariant is identical.
+
+use jaxmg::batch::SmallRoutine;
+use jaxmg::coordinator::{SmallConfig, SolveService};
+use jaxmg::costmodel::{GpuCostModel, Predictor};
+use jaxmg::linalg::{tol_for, FrobNorm, Matrix};
+use jaxmg::prelude::*;
+use jaxmg::scalar::DType;
+use std::time::Instant;
+
+fn main() {
+    let smoke = std::env::var_os("SERVE_BENCH_SMOKE").is_some();
+    let ndev = 4usize;
+    let tile = if smoke { 8 } else { 32 };
+    let n = if smoke { 48 } else { 192 };
+    let solves = if smoke { 4 } else { 16 };
+
+    // ---- 1. front parity ---------------------------------------------
+    println!("== serving fronts: SPMD SolveService vs MPMD ({solves} × potrs n={n}, {ndev} devices, f64) ==\n");
+    let systems: Vec<(Matrix<f64>, Matrix<f64>, Matrix<f64>)> = (0..solves)
+        .map(|i| {
+            let a = Matrix::<f64>::spd_random(n, i as u64);
+            let xt = Matrix::<f64>::random(n, 1, 1000 + i as u64);
+            let b = a.matmul(&xt);
+            (a, xt, b)
+        })
+        .collect();
+
+    // Serial submission (wait each solve out) keeps the projected
+    // clocks deterministic: concurrent tenants interleave their sync
+    // charges, which would blur the exact overhead comparison below.
+    let spmd_node = SimNode::new_uniform(ndev, 1 << 30);
+    let t0 = Instant::now();
+    let spmd_results: Vec<Matrix<f64>> = {
+        let mut cfg = SmallConfig::with_tile(tile);
+        cfg.policy.small_dim = 0;
+        let svc = SolveService::with_small_config(spmd_node.clone(), 1, cfg);
+        let out = systems
+            .iter()
+            .map(|(a, _, b)| {
+                svc.submit_small(SmallRoutine::Potrs, a.clone(), Some(b.clone()))
+                    .unwrap()
+                    .wait()
+                    .0
+            })
+            .collect();
+        svc.drain();
+        out
+    };
+    let spmd_wall = t0.elapsed().as_secs_f64();
+
+    let mpmd_node = SimNode::new_uniform(ndev, 1 << 30);
+    let t0 = Instant::now();
+    let (mpmd_results, mpmd_metrics): (Vec<Matrix<f64>>, _) = {
+        let svc = MpmdService::with_config(mpmd_node.clone(), MpmdConfig::with_tile(tile));
+        let out: Vec<Matrix<f64>> = systems
+            .iter()
+            .map(|(a, _, b)| svc.submit_potrs(a.clone(), b.clone()).unwrap().wait().0)
+            .collect();
+        svc.drain();
+        (out, mpmd_node.metrics().snapshot())
+    };
+    let mpmd_wall = t0.elapsed().as_secs_f64();
+
+    for (i, (s, m)) in spmd_results.iter().zip(&mpmd_results).enumerate() {
+        assert_eq!(s.as_slice(), m.as_slice(), "solve {i}: MPMD diverges from SPMD");
+    }
+    let p = Predictor {
+        model: GpuCostModel::h200(),
+        topo: mpmd_node.topology().clone(),
+        dtype: DType::F64,
+    };
+    let overhead = p.mpmd_overhead(ndev) * solves as f64;
+    let gap = mpmd_node.sim_time() - spmd_node.sim_time();
+    println!(
+        "{:>8} {:>12} {:>14} {:>14} {:>12}",
+        "front", "wall[ms]", "projected[ms]", "ipc opens", "requeues"
+    );
+    println!(
+        "{:>8} {:>12.2} {:>14.4} {:>14} {:>12}",
+        "SPMD",
+        spmd_wall * 1e3,
+        spmd_node.sim_time() * 1e3,
+        "-",
+        "-"
+    );
+    println!(
+        "{:>8} {:>12.2} {:>14.4} {:>14} {:>12}",
+        "MPMD",
+        mpmd_wall * 1e3,
+        mpmd_node.sim_time() * 1e3,
+        mpmd_metrics.ipc_opens,
+        mpmd_metrics.mpmd_requeues
+    );
+    println!(
+        "\nprojection gap {:.1} µs vs modeled {solves} × mpmd_overhead = {:.1} µs",
+        gap * 1e6,
+        overhead * 1e6
+    );
+    assert!(gap > 0.0, "MPMD must pay a positive control-plane overhead");
+    assert!(
+        (gap - overhead).abs() <= overhead * 1e-6 + 1e-12,
+        "charged overhead {gap} != modeled {overhead}"
+    );
+    assert_eq!(mpmd_metrics.ipc_exports, ((ndev - 1) * solves) as u64);
+    assert_eq!(mpmd_metrics.ipc_open_balance(), 0, "caller leaked ipc mappings");
+    println!(
+        "mean frontend routing latency: {:.1} µs",
+        mpmd_metrics.avg_routing_latency() * 1e6
+    );
+
+    // ---- 2. failure drill --------------------------------------------
+    println!("\n== failure drill: worker 1 killed mid-stream ==\n");
+    let node = SimNode::new_uniform(ndev, 1 << 30);
+    let svc = MpmdService::with_config(node.clone(), MpmdConfig::with_tile(tile));
+    let handles: Vec<_> = systems
+        .iter()
+        .map(|(a, _, b)| svc.submit_potrs(a.clone(), b.clone()).unwrap())
+        .collect();
+    svc.kill_worker(1).unwrap();
+    let mut done = 0usize;
+    for (h, (_, xt, _)) in handles.into_iter().zip(&systems) {
+        let (x, _) = h.wait();
+        assert!(x.rel_err(xt) < tol_for::<f64>(n) * 10.0, "request lost in the kill drill");
+        done += 1;
+    }
+    svc.drain();
+    let m = node.metrics().snapshot();
+    println!(
+        "{done}/{solves} completed on {:?} (re-queues: {}, peak mailbox: {})",
+        svc.alive_workers(),
+        m.mpmd_requeues,
+        m.mpmd_peak_worker_queue
+    );
+    assert_eq!(done, solves);
+    assert_eq!(svc.reserved(), vec![0; ndev], "kill drill leaked reservations");
+
+    // ---- 3. the overhead ladder --------------------------------------
+    println!("\n== Predictor::mpmd_overhead by device count (f32 potrs reference) ==\n");
+    println!("{:>6} {:>16} {:>22}", "ndev", "overhead [µs]", "vs potrs n=131072 [%]");
+    for nd in [2usize, 4, 8] {
+        let pd = Predictor::h200(nd, DType::F32);
+        let ov = pd.mpmd_overhead(nd);
+        let solve = pd.potrs(131_072, 1024, nd, 1);
+        println!("{nd:>6} {:>16.2} {:>21.5}%", ov * 1e6, ov / solve * 100.0);
+    }
+    println!("\nserving bench OK");
+}

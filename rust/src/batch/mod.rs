@@ -50,4 +50,4 @@ pub use coalesce::{
     size_class, BatchPlanner, BatchPolicy, BucketKey, FlushedBucket, SmallRoutine,
 };
 pub use pod::PackedPod;
-pub use sweep::{potrf_batched, potri_batched, potrs_batched, SweepReport};
+pub use sweep::{potrf_batched, potri_batched, potrs_batched, run_bucket, SweepReport};

@@ -18,12 +18,14 @@
 //!
 //! [`Stream`]: crate::device::Stream
 
+use super::coalesce::SmallRoutine;
 use super::pod::PackedPod;
 use crate::costmodel::GpuCostModel;
+use crate::device::SimNode;
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
 use crate::scalar::Scalar;
-use crate::solver::Ctx;
+use crate::solver::{Ctx, SolverBackend};
 
 /// What one sweep did — per-bucket accounting for the metrics layer.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
@@ -194,13 +196,59 @@ pub fn potri_batched<S: Scalar>(ctx: &Ctx<'_, S>, pod: &mut PackedPod<S>) -> Res
     })
 }
 
+/// Pack → sweep → gather for one flushed bucket; returns the
+/// per-request results and the bucket's charged sweep makespan in
+/// integer nanoseconds (the sum of each sweep's per-device critical
+/// path — see [`SweepReport::charged_ns`] — which stays correct when
+/// other tenants advance the shared node's clocks concurrently).
+///
+/// `pin` packs every system onto one explicit device instead of the
+/// round-robin deal — the degraded-retry placement (SPMD service) and
+/// the per-worker pod pinning of the MPMD serve layer (`crate::serve`),
+/// which both execute whole buckets on a single device.
+pub fn run_bucket<S: Scalar>(
+    routine: SmallRoutine,
+    node: &SimNode,
+    model: &GpuCostModel,
+    systems: &[Matrix<S>],
+    rhss: &[Option<Matrix<S>>],
+    pin: Option<usize>,
+) -> Result<(Vec<Matrix<S>>, u64)> {
+    let pack = |mats: &[Matrix<S>]| match pin {
+        Some(dev) => PackedPod::pack_on(node, mats, dev),
+        None => PackedPod::pack(node, mats),
+    };
+    let backend = SolverBackend::<S>::Native;
+    let ctx = Ctx::new(node, model, &backend);
+    let mut pod = pack(systems)?;
+    let factor = potrf_batched(&ctx, &mut pod)?;
+    let mut makespan_ns = factor.charged_ns;
+    let results = match routine {
+        SmallRoutine::Potrf => pod.gather()?,
+        SmallRoutine::Potrs => {
+            let rhs_mats: Vec<Matrix<S>> = rhss
+                .iter()
+                .map(|b| b.as_ref().expect("potrs request carries a rhs").clone())
+                .collect();
+            let mut pod_b = pack(&rhs_mats)?;
+            makespan_ns += potrs_batched(&ctx, &pod, &mut pod_b)?.charged_ns;
+            let out = pod_b.gather()?;
+            pod_b.free()?;
+            out
+        }
+        SmallRoutine::Potri => {
+            makespan_ns += potri_batched(&ctx, &mut pod)?.charged_ns;
+            pod.gather()?
+        }
+    };
+    pod.free()?;
+    Ok((results, makespan_ns))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::costmodel::GpuCostModel;
-    use crate::device::SimNode;
     use crate::linalg::{self, tol_for, FrobNorm};
-    use crate::solver::SolverBackend;
 
     fn model_backend() -> (GpuCostModel, SolverBackend<f64>) {
         (GpuCostModel::h200(), SolverBackend::Native)

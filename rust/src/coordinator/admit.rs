@@ -1,0 +1,353 @@
+//! Admission accounting and completion plumbing shared by the solve
+//! fronts.
+//!
+//! Both serving fronts — the SPMD [`super::SolveService`] (one shared
+//! address space, a central accountant over every device) and the MPMD
+//! [`crate::serve::MpmdService`] (one process per GPU, each worker
+//! admitting against **its own** device) — obey the same cuSOLVERMg
+//! workspace-query-then-reserve discipline and resolve requests through
+//! the same handle/stats types. This module is that shared layer:
+//!
+//! * [`Footprint`] — the declared per-device workspace bytes of one
+//!   solve (routine formulas, exact 2D shards, pod arenas);
+//! * [`DeviceAdmission`] — a single device's reservation accountant
+//!   (the per-worker half of admission; the SPMD service keeps its
+//!   all-devices FIFO variant in `service.rs`);
+//! * [`ServiceHandle`] / [`SolveStats`] — completion handle and
+//!   per-solve metrics, identical across fronts so callers can swap
+//!   SPMD for MPMD without touching their wait loops.
+
+use crate::costmodel::workspace;
+use crate::error::{Error, Result};
+use crate::layout::TileDim;
+use crate::scalar::DType;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Declared per-device workspace footprint of one solve, in bytes —
+/// what the admission accountant reserves against each device's VRAM.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Footprint {
+    per_device: Vec<usize>,
+}
+
+impl Footprint {
+    /// The same `bytes` on every one of `ndev` devices.
+    pub fn uniform(ndev: usize, bytes: usize) -> Self {
+        Footprint { per_device: vec![bytes; ndev] }
+    }
+
+    /// Explicit per-device byte counts.
+    pub fn per_device(bytes: Vec<usize>) -> Self {
+        Footprint { per_device: bytes }
+    }
+
+    /// Workspace-model footprint for a routine, mirroring the
+    /// cuSOLVERMg workspace-size queries in [`workspace`], plus the
+    /// block-cyclic tile-rounding slack: the layout stores whole tiles
+    /// per device (up to `ceil(ntiles/ndev)·tile` columns), while the
+    /// workspace formulas model `ceil(n/ndev)` flat columns, so each
+    /// panel-shaped term is padded to dominate the real allocation.
+    pub fn for_routine(
+        routine: &str,
+        n: usize,
+        nrhs: usize,
+        tile: usize,
+        ndev: usize,
+        dtype: DType,
+    ) -> Result<Self> {
+        let (bytes, panel_terms) = match routine {
+            // Factor-only: the potrs working set minus the replicated
+            // RHS (`nrhs` is ignored).
+            "potrf" => (workspace::potrs_bytes(n, 0, tile, ndev, dtype), 1),
+            "potrs" => (workspace::potrs_bytes(n, nrhs, tile, ndev, dtype), 1),
+            "potri" => (workspace::potri_bytes(n, tile, ndev, dtype), 2),
+            "syevd" => (workspace::syevd_bytes(n, tile, ndev, dtype), 4),
+            other => return Err(Error::config(format!("unknown routine {other:?}"))),
+        };
+        let t = tile.max(1);
+        let d = ndev.max(1);
+        let cols_flat = n.div_ceil(d);
+        let cols_tiled = n.div_ceil(t).div_ceil(d) * t;
+        let slack = panel_terms * n * cols_tiled.saturating_sub(cols_flat) * dtype.size_of();
+        Ok(Self::uniform(ndev, bytes + slack))
+    }
+
+    /// Workspace-model footprint for a routine over a **2D tile grid**
+    /// ([`crate::layout::BlockCyclic2D`]): the matrix term uses each
+    /// device's *exact* `local_rows × local_cols` shard (ragged edge
+    /// tiles included), so per-device reservations differ across the
+    /// grid instead of assuming the flat `n·ceil(n/ndev)` column shard.
+    /// Scratch terms mirror [`Footprint::for_routine`]: `panel_terms`
+    /// broadcast panels of `n × tile_c` plus the replicated RHS.
+    pub fn for_grid(
+        routine: &str,
+        lay: &crate::layout::BlockCyclic2D,
+        nrhs: usize,
+        dtype: DType,
+    ) -> Result<Self> {
+        use crate::layout::MatrixLayout;
+        let (matrix_copies, panel_terms) = match routine {
+            "potrf" => (1usize, 1usize),
+            "potrs" => (1, 1),
+            "potri" => (2, 2),
+            // matrix + eigenvector matrix + 2× back-transform scratch.
+            "syevd" => (4, 4),
+            other => return Err(Error::config(format!("unknown routine {other:?}"))),
+        };
+        let e = dtype.size_of();
+        let (_, n) = lay.shape();
+        let panel = panel_terms * n * lay.tile_c() * e;
+        let rhs = if routine == "potrs" { n * nrhs * e } else { 0 };
+        let per_device = (0..lay.num_devices())
+            .map(|d| matrix_copies * lay.local_elems(d) * e + panel + rhs)
+            .collect();
+        Ok(Self::per_device(per_device))
+    }
+
+    /// Footprint of one coalesced **pod** of small solves: `dims[i]`
+    /// is system `i`'s `(n, nrhs)`, placed by the same
+    /// [`TileDim::round_robin`] deal [`crate::batch::PackedPod`] uses
+    /// for the actual arenas. Per-device bytes are the *exact* arena
+    /// sizes — each system's matrix plus, for `potrs`, its RHS pod
+    /// entry; the sweeps run in place, so there is no broadcast-panel
+    /// or workspace term to pad for.
+    pub fn for_pod(
+        routine: &str,
+        dims: &[(usize, usize)],
+        ndev: usize,
+        dtype: DType,
+    ) -> Result<Self> {
+        let with_rhs = match routine {
+            "potrf" | "potri" => false,
+            "potrs" => true,
+            other => return Err(Error::config(format!("unknown routine {other:?}"))),
+        };
+        let deal = TileDim::round_robin(dims.len(), ndev)?;
+        let e = dtype.size_of();
+        let mut per_device = vec![0usize; ndev];
+        for (i, &(n, nrhs)) in dims.iter().enumerate() {
+            per_device[deal.owner(i)] += n * n * e + if with_rhs { n * nrhs * e } else { 0 };
+        }
+        Ok(Self::per_device(per_device))
+    }
+
+    /// Number of devices covered.
+    pub fn devices(&self) -> usize {
+        self.per_device.len()
+    }
+
+    /// Bytes reserved on device `d`.
+    pub fn bytes(&self, d: usize) -> usize {
+        self.per_device[d]
+    }
+
+    /// All per-device byte counts.
+    pub fn as_slice(&self) -> &[usize] {
+        &self.per_device
+    }
+
+    /// Consume into the raw per-device byte vector.
+    pub(crate) fn into_per_device(self) -> Vec<usize> {
+        self.per_device
+    }
+}
+
+/// A single device's reservation accountant — the per-worker half of
+/// admission in MPMD mode, where each one-process-per-GPU worker admits
+/// solves against **its own** device's VRAM capacity instead of a
+/// central accountant seeing the whole node.
+#[derive(Debug)]
+pub struct DeviceAdmission {
+    device: usize,
+    capacity: usize,
+    state: Mutex<AdmissionState>,
+}
+
+#[derive(Debug, Default)]
+struct AdmissionState {
+    reserved: usize,
+    peak: usize,
+}
+
+impl DeviceAdmission {
+    /// Accountant for device `device` with `capacity` bytes of VRAM.
+    pub fn new(device: usize, capacity: usize) -> Self {
+        DeviceAdmission { device, capacity, state: Mutex::new(AdmissionState::default()) }
+    }
+
+    /// The device this accountant guards.
+    pub fn device(&self) -> usize {
+        self.device
+    }
+
+    /// Total VRAM capacity admitted against.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Reserve `bytes`, failing with [`Error::DeviceOom`] when the
+    /// reservation would exceed capacity (non-blocking; the caller owns
+    /// the retry policy).
+    pub fn try_reserve(&self, bytes: usize) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if st.reserved + bytes > self.capacity {
+            return Err(Error::DeviceOom {
+                device: self.device,
+                requested: bytes,
+                free: self.capacity - st.reserved,
+                capacity: self.capacity,
+            });
+        }
+        st.reserved += bytes;
+        if st.reserved > st.peak {
+            st.peak = st.reserved;
+        }
+        Ok(())
+    }
+
+    /// Release a prior reservation.
+    pub fn release(&self, bytes: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.reserved = st.reserved.saturating_sub(bytes);
+    }
+
+    /// Currently reserved bytes.
+    pub fn reserved(&self) -> usize {
+        self.state.lock().unwrap().reserved
+    }
+
+    /// High-water mark of reserved bytes — the proof the worker never
+    /// over-admitted its device.
+    pub fn peak_reserved(&self) -> usize {
+        self.state.lock().unwrap().peak
+    }
+}
+
+/// Per-solve service metrics, returned with the result.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct SolveStats {
+    /// Real time spent queued before the accountant admitted the solve.
+    pub queue_wait: Duration,
+    /// Real execution time after admission.
+    pub exec: Duration,
+    /// Solves that shared this solve's admitted job — the coalesced
+    /// bucket occupancy on the batched small-solve path, `1` otherwise.
+    pub batch_size: usize,
+    /// Cost-model (simulated) nanoseconds this solve dwelled in the
+    /// coalescer before its bucket flushed; `0` off the batched path.
+    pub coalesce_wait_ns: u64,
+}
+
+/// `Ok((result, stats))`, or the panic message of a solve that
+/// unwound inside a worker.
+pub(crate) type SolveOutcome<T> = std::result::Result<(T, SolveStats), String>;
+
+/// The shared completion slot a [`ServiceHandle`] waits on.
+pub(crate) type Slot<T> = Arc<(Mutex<Option<SolveOutcome<T>>>, Condvar)>;
+
+/// A fresh handle plus the slot its producer publishes into.
+pub(crate) fn handle_pair<T>() -> (ServiceHandle<T>, Slot<T>) {
+    let slot: Slot<T> = Arc::new((Mutex::new(None), Condvar::new()));
+    (ServiceHandle { slot: slot.clone() }, slot)
+}
+
+/// Publish one solve's outcome and wake its waiter.
+pub(crate) fn publish_one<T>(slot: &Slot<T>, outcome: SolveOutcome<T>) {
+    let (lock, cv) = &**slot;
+    *lock.lock().unwrap() = Some(outcome);
+    cv.notify_all();
+}
+
+/// Publish the same failure to a whole batch of waiters.
+pub(crate) fn publish_failure<T>(slots: &[Slot<T>], msg: String) {
+    for slot in slots {
+        publish_one(slot, Err(msg.clone()));
+    }
+}
+
+/// Render a caught panic payload as the message re-raised on waiters.
+pub(crate) fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Completion handle for a service solve: the result plus its stats.
+pub struct ServiceHandle<T> {
+    pub(crate) slot: Slot<T>,
+}
+
+impl<T> ServiceHandle<T> {
+    /// Block until the solve completes; returns `(result, stats)`.
+    /// Re-raises the solve's panic if it unwound inside a worker
+    /// (the worker itself survives and the reservation is released).
+    pub fn wait(self) -> (T, SolveStats) {
+        let (lock, cv) = &*self.slot;
+        let mut guard = lock.lock().unwrap();
+        loop {
+            if let Some(v) = guard.take() {
+                drop(guard);
+                match v {
+                    Ok(out) => return out,
+                    Err(msg) => panic!("service solve panicked: {msg}"),
+                }
+            }
+            guard = cv.wait(guard).unwrap();
+        }
+    }
+
+    /// Non-blocking readiness check.
+    pub fn is_ready(&self) -> bool {
+        self.slot.0.lock().unwrap().is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_admission_reserves_and_releases() {
+        let adm = DeviceAdmission::new(3, 1000);
+        assert_eq!(adm.capacity(), 1000);
+        assert_eq!(adm.device(), 3);
+        adm.try_reserve(600).unwrap();
+        match adm.try_reserve(500) {
+            Err(Error::DeviceOom { device, requested, free, capacity }) => {
+                assert_eq!(device, 3);
+                assert_eq!(requested, 500);
+                assert_eq!(free, 400);
+                assert_eq!(capacity, 1000);
+            }
+            other => panic!("expected OOM, got {other:?}"),
+        }
+        adm.try_reserve(400).unwrap();
+        assert_eq!(adm.reserved(), 1000);
+        adm.release(600);
+        assert_eq!(adm.reserved(), 400);
+        assert_eq!(adm.peak_reserved(), 1000);
+        // Releasing more than reserved saturates instead of wrapping.
+        adm.release(10_000);
+        assert_eq!(adm.reserved(), 0);
+    }
+
+    #[test]
+    fn handle_pair_roundtrip() {
+        let (h, slot) = handle_pair::<u32>();
+        assert!(!h.is_ready());
+        let stats = SolveStats {
+            queue_wait: Duration::ZERO,
+            exec: Duration::ZERO,
+            batch_size: 1,
+            coalesce_wait_ns: 0,
+        };
+        publish_one(&slot, Ok((7, stats)));
+        assert!(h.is_ready());
+        assert_eq!(h.wait().0, 7);
+    }
+}

@@ -53,17 +53,42 @@
 //! concurrent-equals-serial and never-over-admit properties. Small
 //! solves take [`SolveService::submit_small`], which coalesces them
 //! into fused batched sweeps (`crate::batch`) when the cost model says
-//! batching wins — see `examples/batch_serve.rs`.
+//! batching wins — see `examples/batch_serve.rs`. A background dwell
+//! flusher guarantees coalescer buckets honour their latency bound
+//! even when traffic stops entirely.
+//!
+//! ## SPMD vs MPMD: which front to serve from
+//!
+//! Figure 2 of the paper describes both deployment shapes; this crate
+//! implements each as a serving front sharing the admission/stats layer
+//! (`admit`):
+//!
+//! | | **SPMD — [`SolveService`]** | **MPMD — [`crate::serve::MpmdService`]** |
+//! |---|---|---|
+//! | Fig. 2 mapping | left: threads + shm pointer table | right: processes + `cudaIpc` handles |
+//! | worker granularity | one thread per GPU, shared address space | one (simulated) process per GPU, own [`crate::ipc::AddressSpace`] |
+//! | pointer reconciliation | raw pointers via [`crate::ipc::SharedPtrTable`] | export/open via [`crate::ipc::IpcRegistry`] (bound handles, revoke-on-free) |
+//! | admission | central FIFO accountant over all devices | each worker admits against **its own** device ([`DeviceAdmission`]) |
+//! | per-solve overhead | none beyond staging | `Predictor::mpmd_overhead`: one export + handle ship + open per non-caller worker |
+//! | worker failure | process-fatal (shared address space) | contained: dead worker's solves re-queued with its device excluded |
+//! | choose it when | single-tenant node, lowest latency | production serving: isolation, partial-failure tolerance, per-GPU ownership |
+//!
+//! Numerics are **bitwise identical** between the two fronts (pinned in
+//! `rust/tests/mpmd_serve.rs` for all four dtypes): the mode only
+//! changes who stages shards and how pointers reach the single caller,
+//! never the solve schedule.
 
+mod admit;
 mod mpmd;
 mod service;
 mod spmd;
 
+pub use admit::{DeviceAdmission, Footprint, ServiceHandle, SolveStats};
 pub use mpmd::gather_pointers_mpmd;
-pub use service::{
-    Footprint, JobQueue, ServiceHandle, SmallConfig, SolveHandle, SolveService, SolveStats,
-};
+pub use service::{JobQueue, SmallConfig, SolveHandle, SolveService};
 pub use spmd::gather_pointers_spmd;
+
+pub(crate) use admit::{handle_pair, panic_message, publish_failure, publish_one, Slot};
 
 use crate::costmodel::GpuCostModel;
 use crate::device::SimNode;

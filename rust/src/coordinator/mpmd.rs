@@ -1,4 +1,4 @@
-//! MPMD execution driver (Fig. 2, right).
+//! MPMD pointer-gather (Fig. 2, right) — the one-shot demo.
 //!
 //! One (simulated) process per GPU, each with its own virtual address
 //! space — raw device pointers are *undefined* across processes, so
@@ -7,6 +7,12 @@
 //! Process 0 opens every foreign handle in its own space (CUDA forbids
 //! opening one's own export, so worker 0's pointer is used directly)
 //! and only then calls the solver — the single-caller requirement.
+//!
+//! This module is the minimal, per-call form of that choreography (it
+//! spawns throwaway workers for a single gather). The *serving* shape —
+//! persistent one-process-per-GPU workers with their own admission,
+//! shard staging, and failure-aware re-routing behind a rank-0
+//! frontend — lives in [`crate::serve`].
 
 use crate::device::{DevPtr, SimNode};
 use crate::error::{Error, Result};
@@ -43,7 +49,9 @@ pub fn gather_pointers_mpmd(node: &SimNode, panels: Vec<DevPtr>) -> Result<Vec<D
                     // forbids re-opening one's own export).
                     tx.send(PtrMsg::Own(0, ptr)).expect("send");
                 } else {
-                    let handle = registry.export(space, ptr).expect("export");
+                    // Bound export: freeing the shard later implicitly
+                    // revokes the handle (see `ipc::IpcRegistry`).
+                    let handle = registry.export_bound(space, node, ptr).expect("export");
                     tx.send(PtrMsg::Exported(d, handle)).expect("send");
                 }
             });

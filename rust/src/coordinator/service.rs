@@ -53,11 +53,12 @@
 //!
 //! [`Predictor::batched_wins`]: crate::costmodel::Predictor::batched_wins
 
+use super::admit::{handle_pair, panic_message, publish_failure, publish_one, Slot};
+pub use super::admit::{Footprint, ServiceHandle, SolveStats};
 use crate::batch::{
-    potrf_batched, potri_batched, potrs_batched, BatchPlanner, BatchPolicy, BucketKey,
-    FlushedBucket, PackedPod, SmallRoutine,
+    run_bucket, BatchPlanner, BatchPolicy, BucketKey, FlushedBucket, SmallRoutine,
 };
-use crate::costmodel::{workspace, GpuCostModel, Predictor};
+use crate::costmodel::{GpuCostModel, Predictor};
 use crate::device::SimNode;
 use crate::error::{Error, Result};
 use crate::layout::{BlockCyclic1D, TileDim};
@@ -203,144 +204,9 @@ impl<T> SolveHandle<T> {
 // Capacity-aware concurrent solve service
 // ---------------------------------------------------------------------------
 
-/// Declared per-device workspace footprint of one solve, in bytes —
-/// what the admission accountant reserves against each device's VRAM.
-#[derive(Clone, Debug, PartialEq, Eq)]
-pub struct Footprint {
-    per_device: Vec<usize>,
-}
-
-impl Footprint {
-    /// The same `bytes` on every one of `ndev` devices.
-    pub fn uniform(ndev: usize, bytes: usize) -> Self {
-        Footprint { per_device: vec![bytes; ndev] }
-    }
-
-    /// Explicit per-device byte counts.
-    pub fn per_device(bytes: Vec<usize>) -> Self {
-        Footprint { per_device: bytes }
-    }
-
-    /// Workspace-model footprint for a routine, mirroring the
-    /// cuSOLVERMg workspace-size queries in [`workspace`], plus the
-    /// block-cyclic tile-rounding slack: the layout stores whole tiles
-    /// per device (up to `ceil(ntiles/ndev)·tile` columns), while the
-    /// workspace formulas model `ceil(n/ndev)` flat columns, so each
-    /// panel-shaped term is padded to dominate the real allocation.
-    pub fn for_routine(
-        routine: &str,
-        n: usize,
-        nrhs: usize,
-        tile: usize,
-        ndev: usize,
-        dtype: DType,
-    ) -> Result<Self> {
-        let (bytes, panel_terms) = match routine {
-            // Factor-only: the potrs working set minus the replicated
-            // RHS (`nrhs` is ignored).
-            "potrf" => (workspace::potrs_bytes(n, 0, tile, ndev, dtype), 1),
-            "potrs" => (workspace::potrs_bytes(n, nrhs, tile, ndev, dtype), 1),
-            "potri" => (workspace::potri_bytes(n, tile, ndev, dtype), 2),
-            "syevd" => (workspace::syevd_bytes(n, tile, ndev, dtype), 4),
-            other => return Err(Error::config(format!("unknown routine {other:?}"))),
-        };
-        let t = tile.max(1);
-        let d = ndev.max(1);
-        let cols_flat = n.div_ceil(d);
-        let cols_tiled = n.div_ceil(t).div_ceil(d) * t;
-        let slack = panel_terms * n * cols_tiled.saturating_sub(cols_flat) * dtype.size_of();
-        Ok(Self::uniform(ndev, bytes + slack))
-    }
-
-    /// Workspace-model footprint for a routine over a **2D tile grid**
-    /// ([`crate::layout::BlockCyclic2D`]): the matrix term uses each
-    /// device's *exact* `local_rows × local_cols` shard (ragged edge
-    /// tiles included), so per-device reservations differ across the
-    /// grid instead of assuming the flat `n·ceil(n/ndev)` column shard.
-    /// Scratch terms mirror [`Footprint::for_routine`]: `panel_terms`
-    /// broadcast panels of `n × tile_c` plus the replicated RHS.
-    pub fn for_grid(
-        routine: &str,
-        lay: &crate::layout::BlockCyclic2D,
-        nrhs: usize,
-        dtype: DType,
-    ) -> Result<Self> {
-        use crate::layout::MatrixLayout;
-        let (matrix_copies, panel_terms) = match routine {
-            "potrf" => (1usize, 1usize),
-            "potrs" => (1, 1),
-            "potri" => (2, 2),
-            // matrix + eigenvector matrix + 2× back-transform scratch.
-            "syevd" => (4, 4),
-            other => return Err(Error::config(format!("unknown routine {other:?}"))),
-        };
-        let e = dtype.size_of();
-        let (_, n) = lay.shape();
-        let panel = panel_terms * n * lay.tile_c() * e;
-        let rhs = if routine == "potrs" { n * nrhs * e } else { 0 };
-        let per_device = (0..lay.num_devices())
-            .map(|d| matrix_copies * lay.local_elems(d) * e + panel + rhs)
-            .collect();
-        Ok(Self::per_device(per_device))
-    }
-
-    /// Footprint of one coalesced **pod** of small solves: `dims[i]`
-    /// is system `i`'s `(n, nrhs)`, placed by the same
-    /// [`TileDim::round_robin`] deal [`crate::batch::PackedPod`] uses
-    /// for the actual arenas. Per-device bytes are the *exact* arena
-    /// sizes — each system's matrix plus, for `potrs`, its RHS pod
-    /// entry; the sweeps run in place, so there is no broadcast-panel
-    /// or workspace term to pad for.
-    pub fn for_pod(
-        routine: &str,
-        dims: &[(usize, usize)],
-        ndev: usize,
-        dtype: DType,
-    ) -> Result<Self> {
-        let with_rhs = match routine {
-            "potrf" | "potri" => false,
-            "potrs" => true,
-            other => return Err(Error::config(format!("unknown routine {other:?}"))),
-        };
-        let deal = TileDim::round_robin(dims.len(), ndev)?;
-        let e = dtype.size_of();
-        let mut per_device = vec![0usize; ndev];
-        for (i, &(n, nrhs)) in dims.iter().enumerate() {
-            per_device[deal.owner(i)] += n * n * e + if with_rhs { n * nrhs * e } else { 0 };
-        }
-        Ok(Self::per_device(per_device))
-    }
-
-    /// Number of devices covered.
-    pub fn devices(&self) -> usize {
-        self.per_device.len()
-    }
-
-    /// Bytes reserved on device `d`.
-    pub fn bytes(&self, d: usize) -> usize {
-        self.per_device[d]
-    }
-
-    /// All per-device byte counts.
-    pub fn as_slice(&self) -> &[usize] {
-        &self.per_device
-    }
-}
-
-/// Per-solve service metrics, returned with the result.
-#[derive(Copy, Clone, Debug, PartialEq, Eq)]
-pub struct SolveStats {
-    /// Real time spent queued before the accountant admitted the solve.
-    pub queue_wait: Duration,
-    /// Real execution time after admission.
-    pub exec: Duration,
-    /// Solves that shared this solve's admitted job — the coalesced
-    /// bucket occupancy on the batched small-solve path, `1` otherwise.
-    pub batch_size: usize,
-    /// Cost-model (simulated) nanoseconds this solve dwelled in the
-    /// coalescer before its bucket flushed; `0` off the batched path.
-    pub coalesce_wait_ns: u64,
-}
+// `Footprint`, `SolveStats`, and `ServiceHandle` live in
+// `coordinator::admit` (shared with the MPMD front in `crate::serve`)
+// and are re-exported above.
 
 /// Deferred result publication: runs *after* the worker has released
 /// the solve's reservation, so a resolved [`ServiceHandle`] implies
@@ -367,6 +233,48 @@ struct ServiceInner {
     capacity: Vec<usize>,
     state: Mutex<ServiceState>,
     cv: Condvar,
+}
+
+impl ServiceInner {
+    /// Shared enqueue path behind [`SolveService::submit`] and the
+    /// batched-bucket flusher: fail-fast footprint checks, the FIFO
+    /// push, and submission metrics. The job's returned [`PublishFn`]
+    /// runs only after the worker has released the reservation, so
+    /// result publication always implies the capacity is free again.
+    fn enqueue_job(&self, footprint: Footprint, job: AdmittedJob) -> Result<()> {
+        if footprint.devices() != self.capacity.len() {
+            return Err(Error::config(format!(
+                "footprint spans {} devices but the service node has {}",
+                footprint.devices(),
+                self.capacity.len()
+            )));
+        }
+        for (d, (&need, &cap)) in
+            footprint.as_slice().iter().zip(self.capacity.iter()).enumerate()
+        {
+            if need > cap {
+                return Err(Error::DeviceOom { device: d, requested: need, free: cap, capacity: cap });
+            }
+        }
+        {
+            let mut st = self.state.lock().unwrap();
+            assert!(!st.shutdown, "service is shut down");
+            st.queue.push_back(QueuedSolve {
+                footprint: footprint.into_per_device(),
+                job,
+                enqueued: Instant::now(),
+            });
+        }
+        self.node.metrics().add_service_submission();
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// The simulated clock in integer nanoseconds — the timebase of
+    /// the coalescer's dwell bound.
+    fn sim_now_ns(&self) -> u64 {
+        (self.node.sim_time() * 1e9).round() as u64
+    }
 }
 
 /// Configuration of the batched small-solve path.
@@ -402,13 +310,15 @@ impl Default for SmallConfig {
 type SmallPayload = Box<dyn Any + Send>;
 
 /// Executes one flushed bucket: downcast, pack, admit, sweep, publish.
+/// Takes the [`ServiceInner`] (not the service) so the background
+/// dwell-flusher thread can execute flushes too.
 type SmallFlusher =
-    dyn Fn(&SolveService, FlushedBucket, Vec<SmallPayload>) + Send + Sync;
+    dyn Fn(&Arc<ServiceInner>, FlushedBucket, Vec<SmallPayload>) + Send + Sync;
 
 struct SmallJob<S: Scalar> {
     a: Matrix<S>,
     rhs: Option<Matrix<S>>,
-    slot: Arc<(Mutex<Option<SolveOutcome<Matrix<S>>>>, Condvar)>,
+    slot: SmallSlot<S>,
 }
 
 struct SmallState {
@@ -435,8 +345,12 @@ type PendingFlush = (Arc<SmallFlusher>, FlushedBucket, Vec<SmallPayload>);
 pub struct SolveService {
     inner: Arc<ServiceInner>,
     cfg: SmallConfig,
-    small: Mutex<SmallState>,
+    small: Arc<Mutex<SmallState>>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    /// Background dwell flusher: ticks the coalescer so dwell-expired
+    /// buckets flush even when no further submit/drain ever arrives.
+    flusher: Option<std::thread::JoinHandle<()>>,
+    flusher_stop: Arc<(Mutex<bool>, Condvar)>,
 }
 
 impl SolveService {
@@ -513,13 +427,45 @@ impl SolveService {
                 })
             })
             .collect();
-        let small = Mutex::new(SmallState {
+        let small = Arc::new(Mutex::new(SmallState {
             planner: BatchPlanner::new(cfg.policy),
             payloads: HashMap::new(),
             flushers: HashMap::new(),
             decisions: HashMap::new(),
-        });
-        SolveService { inner, cfg, small, workers }
+        }));
+        // The background dwell flusher (ROADMAP PR 3 follow-up): without
+        // it a dwell-expired bucket only flushes on the *next* submit or
+        // drain — traffic that simply stops would strand its tail. The
+        // tick interval tracks the wall backstop; the tick itself also
+        // fires buckets whose *simulated* dwell expired (traffic moved
+        // the sim clock, then went quiet).
+        let flusher_stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let flusher = {
+            let inner = inner.clone();
+            let small = small.clone();
+            let stop = flusher_stop.clone();
+            let tick = (cfg.policy.max_wall_dwell / 2)
+                .clamp(Duration::from_millis(5), Duration::from_millis(250));
+            Some(std::thread::spawn(move || loop {
+                {
+                    let (lock, cv) = &*stop;
+                    let mut stopped = lock.lock().unwrap();
+                    while !*stopped {
+                        let (guard, timeout) = cv.wait_timeout(stopped, tick).unwrap();
+                        stopped = guard;
+                        if timeout.timed_out() {
+                            break;
+                        }
+                    }
+                    if *stopped {
+                        return;
+                    }
+                }
+                let now_ns = inner.sim_now_ns();
+                run_flushes(&inner, &small, |st, ready| flush_due_into(st, now_ns, ready));
+            }))
+        };
+        SolveService { inner, cfg, small, workers, flusher, flusher_stop }
     }
 
     /// Submit a solve with its declared workspace footprint. Fails fast
@@ -530,8 +476,7 @@ impl SolveService {
         footprint: Footprint,
         f: impl FnOnce() -> T + Send + 'static,
     ) -> Result<ServiceHandle<T>> {
-        let slot = Arc::new((Mutex::new(None::<SolveOutcome<T>>), Condvar::new()));
-        let slot2 = slot.clone();
+        let (handle, slot2) = handle_pair::<T>();
         let metrics = self.inner.node.metrics().clone();
         let job: AdmittedJob = Box::new(move |queue_wait| {
             let t0 = Instant::now();
@@ -548,48 +493,12 @@ impl SolveService {
                 Err(p) => Err(panic_message(p)),
             };
             let publish: PublishFn = Box::new(move || {
-                let (lock, cv) = &*slot2;
-                *lock.lock().unwrap() = Some(outcome);
-                cv.notify_all();
+                publish_one(&slot2, outcome);
             });
             publish
         });
-        self.enqueue_job(footprint, job)?;
-        Ok(ServiceHandle { slot })
-    }
-
-    /// Shared enqueue path behind [`SolveService::submit`] and the
-    /// batched-bucket flusher: fail-fast footprint checks, the FIFO
-    /// push, and submission metrics. The job's returned [`PublishFn`]
-    /// runs only after the worker has released the reservation, so
-    /// result publication always implies the capacity is free again.
-    fn enqueue_job(&self, footprint: Footprint, job: AdmittedJob) -> Result<()> {
-        if footprint.devices() != self.inner.capacity.len() {
-            return Err(Error::config(format!(
-                "footprint spans {} devices but the service node has {}",
-                footprint.devices(),
-                self.inner.capacity.len()
-            )));
-        }
-        for (d, (&need, &cap)) in
-            footprint.as_slice().iter().zip(self.inner.capacity.iter()).enumerate()
-        {
-            if need > cap {
-                return Err(Error::DeviceOom { device: d, requested: need, free: cap, capacity: cap });
-            }
-        }
-        {
-            let mut st = self.inner.state.lock().unwrap();
-            assert!(!st.shutdown, "service is shut down");
-            st.queue.push_back(QueuedSolve {
-                footprint: footprint.per_device,
-                job,
-                enqueued: Instant::now(),
-            });
-        }
-        self.inner.node.metrics().add_service_submission();
-        self.inner.cv.notify_all();
-        Ok(())
+        self.inner.enqueue_job(footprint, job)?;
+        Ok(handle)
     }
 
     /// Submit a **small** solve through the admission → coalesce →
@@ -609,10 +518,11 @@ impl SolveService {
     /// — on either path — finds it past the policy's queue-dwell bound
     /// (cost-model nanoseconds, with [`BatchPolicy::max_wall_dwell`]
     /// of real time as the liveness backstop for traffic that never
-    /// advances the simulated clock), or on
-    /// [`SolveService::flush_small`] / [`SolveService::drain`]. There
-    /// is no timer thread: a bucket on an otherwise idle service waits
-    /// until one of those calls.
+    /// advances the simulated clock), on
+    /// [`SolveService::flush_small`] / [`SolveService::drain`], or —
+    /// when traffic stops entirely — by the service's background
+    /// dwell-flusher tick, so the latency bound holds without any
+    /// follow-up call.
     ///
     /// [`Predictor::batched_wins`]: crate::costmodel::Predictor::batched_wins
     pub fn submit_small<S: Scalar>(
@@ -665,13 +575,13 @@ impl SolveService {
             return self.submit_small_distributed(routine, a, rhs);
         }
 
-        let slot = Arc::new((Mutex::new(None::<SolveOutcome<Matrix<S>>>), Condvar::new()));
-        let handle = ServiceHandle { slot: slot.clone() };
+        let (handle, slot) = handle_pair::<Matrix<S>>();
         let key = BucketKey::new(routine, S::DTYPE, n);
         let now_ns = self.sim_now_ns();
         let job = SmallJob { a, rhs, slot };
-        self.run_flushes(|st, ready| {
-            st.flushers.entry(key).or_insert_with(|| small_flusher::<S>(routine));
+        let model = self.cfg.model.clone();
+        run_flushes(&self.inner, &self.small, |st, ready| {
+            st.flushers.entry(key).or_insert_with(|| small_flusher::<S>(routine, model));
             let (id, flushed) = st.planner.push(key, now_ns);
             st.payloads.insert(id, Box::new(job));
             if let Some(bucket) = flushed {
@@ -688,23 +598,7 @@ impl SolveService {
     /// The simulated clock in integer nanoseconds — the timebase of
     /// the coalescer's dwell bound.
     fn sim_now_ns(&self) -> u64 {
-        (self.inner.node.sim_time() * 1e9).round() as u64
-    }
-
-    /// The one lock-collect-execute choreography every flush path
-    /// shares: `select` picks buckets under the small-state lock, and
-    /// the flushers run only after it is released (they re-enter the
-    /// service through `enqueue_job`, so running them under the lock
-    /// would deadlock against concurrent submits).
-    fn run_flushes(&self, select: impl FnOnce(&mut SmallState, &mut Vec<PendingFlush>)) {
-        let mut ready: Vec<PendingFlush> = Vec::new();
-        {
-            let mut st = self.small.lock().unwrap();
-            select(&mut st, &mut ready);
-        }
-        for (flusher, bucket, payloads) in ready {
-            flusher(self, bucket, payloads);
-        }
+        self.inner.sim_now_ns()
     }
 
     /// Memoized batched-vs-distributed cut: evaluated once per
@@ -781,14 +675,14 @@ impl SolveService {
     /// `submit_small`, whichever path the new request takes.
     pub fn flush_due_small(&self) {
         let now_ns = self.sim_now_ns();
-        self.run_flushes(|st, ready| flush_due_into(st, now_ns, ready));
+        run_flushes(&self.inner, &self.small, |st, ready| flush_due_into(st, now_ns, ready));
     }
 
     /// Force-flush every pending coalescer bucket — the drain path,
     /// and the lever for bounding tail latency once traffic stops.
     pub fn flush_small(&self) {
         let now_ns = self.sim_now_ns();
-        self.run_flushes(|st, ready| {
+        run_flushes(&self.inner, &self.small, |st, ready| {
             for bucket in st.planner.flush_all(now_ns) {
                 collect_flush(st, bucket, ready);
             }
@@ -855,6 +749,16 @@ impl SolveService {
 
 impl Drop for SolveService {
     fn drop(&mut self) {
+        // Stop the background flusher first: a tick racing the shutdown
+        // below would enqueue into a closed queue.
+        {
+            let (lock, cv) = &*self.flusher_stop;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        if let Some(f) = self.flusher.take() {
+            let _ = f.join();
+        }
         // Push any still-coalescing smalls into the queue so their
         // waiters resolve before the workers exit.
         self.flush_small();
@@ -869,11 +773,28 @@ impl Drop for SolveService {
     }
 }
 
-/// `Ok((result, stats))`, or the panic message of a solve that
-/// unwound inside a worker.
-type SolveOutcome<T> = std::result::Result<(T, SolveStats), String>;
+type SmallSlot<S> = Slot<Matrix<S>>;
 
-type SmallSlot<S> = Arc<(Mutex<Option<SolveOutcome<Matrix<S>>>>, Condvar)>;
+/// The one lock-collect-execute choreography every flush path shares:
+/// `select` picks buckets under the small-state lock, and the flushers
+/// run only after it is released (they re-enter the service through
+/// `ServiceInner::enqueue_job`, so running them under the lock would
+/// deadlock against concurrent submits). A free function so the
+/// background flusher thread can tick without a `&SolveService`.
+fn run_flushes(
+    inner: &Arc<ServiceInner>,
+    small: &Mutex<SmallState>,
+    select: impl FnOnce(&mut SmallState, &mut Vec<PendingFlush>),
+) {
+    let mut ready: Vec<PendingFlush> = Vec::new();
+    {
+        let mut st = small.lock().unwrap();
+        select(&mut st, &mut ready);
+    }
+    for (flusher, bucket, payloads) in ready {
+        flusher(inner, bucket, payloads);
+    }
+}
 
 /// Move every dwell-expired bucket into `ready` (the shared half of
 /// `flush_due_small` and the coalesced-submit path).
@@ -898,23 +819,11 @@ fn collect_flush(st: &mut SmallState, bucket: FlushedBucket, out: &mut Vec<Pendi
     out.push((flusher, bucket, payloads));
 }
 
-fn publish_one<S: Scalar>(slot: &SmallSlot<S>, outcome: SolveOutcome<Matrix<S>>) {
-    let (lock, cv) = &**slot;
-    *lock.lock().unwrap() = Some(outcome);
-    cv.notify_all();
-}
-
-fn publish_failure<S: Scalar>(slots: &[SmallSlot<S>], msg: String) {
-    for slot in slots {
-        publish_one(slot, Err(msg.clone()));
-    }
-}
-
 /// The type-erasure bridge for one bucket key: downcast the payloads
 /// back to `SmallJob<S>`, admit the pod against per-device VRAM, run
 /// the fused sweep, and publish every request's individual outcome.
-fn small_flusher<S: Scalar>(routine: SmallRoutine) -> Arc<SmallFlusher> {
-    Arc::new(move |svc: &SolveService, bucket: FlushedBucket, payloads: Vec<SmallPayload>| {
+fn small_flusher<S: Scalar>(routine: SmallRoutine, model: GpuCostModel) -> Arc<SmallFlusher> {
+    Arc::new(move |inner: &Arc<ServiceInner>, bucket: FlushedBucket, payloads: Vec<SmallPayload>| {
         let mut systems = Vec::with_capacity(payloads.len());
         let mut rhss = Vec::with_capacity(payloads.len());
         let mut slots = Vec::with_capacity(payloads.len());
@@ -930,13 +839,13 @@ fn small_flusher<S: Scalar>(routine: SmallRoutine) -> Arc<SmallFlusher> {
             .zip(&rhss)
             .map(|(a, b)| (a.rows(), b.as_ref().map(|m| m.cols()).unwrap_or(0)))
             .collect();
-        let ndev = svc.inner.capacity.len();
+        let ndev = inner.capacity.len();
         let fp = match Footprint::for_pod(routine.name(), &dims, ndev, S::DTYPE) {
             Ok(fp) => fp,
             Err(e) => return publish_failure(&slots, format!("pod footprint failed: {e}")),
         };
-        let node = svc.inner.node.clone();
-        let model = svc.cfg.model.clone();
+        let node = inner.node.clone();
+        let model = model.clone();
         let total_wait: u64 = bucket.waits_ns.iter().sum();
         let waits = bucket.waits_ns.clone();
         let job_slots = slots.clone();
@@ -947,7 +856,7 @@ fn small_flusher<S: Scalar>(routine: SmallRoutine) -> Arc<SmallFlusher> {
         let job: AdmittedJob = Box::new(move |queue_wait| {
             let t0 = Instant::now();
             let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                run_small_bucket::<S>(routine, &node, &model, &systems, &rhss, None)
+                run_bucket::<S>(routine, &node, &model, &systems, &rhss, None)
             }));
             let publish: PublishFn = match out {
                 Ok(Ok((results, makespan_ns))) => {
@@ -979,7 +888,7 @@ fn small_flusher<S: Scalar>(routine: SmallRoutine) -> Arc<SmallFlusher> {
                     let outcomes: Vec<std::result::Result<Matrix<S>, String>> = (0..occupancy)
                         .map(|i| {
                             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                                run_small_bucket::<S>(
+                                run_bucket::<S>(
                                     routine,
                                     &node,
                                     &model,
@@ -1020,100 +929,16 @@ fn small_flusher<S: Scalar>(routine: SmallRoutine) -> Arc<SmallFlusher> {
                 .add_service_completion(queue_wait.as_nanos() as u64, t0.elapsed().as_nanos() as u64);
             publish
         });
-        if let Err(e) = svc.enqueue_job(fp, job) {
+        if let Err(e) = inner.enqueue_job(fp, job) {
             publish_failure(&slots, format!("pod admission failed: {e}"));
         }
     })
 }
 
-/// Pack → sweep → gather for one flushed bucket; returns the
-/// per-request results and the bucket's charged sweep makespan in
-/// integer nanoseconds (the sum of each sweep's per-device critical
-/// path — see [`crate::batch::SweepReport::charged_ns`] — which stays
-/// correct when other tenants advance the shared node's clocks
-/// concurrently).
-fn run_small_bucket<S: Scalar>(
-    routine: SmallRoutine,
-    node: &SimNode,
-    model: &GpuCostModel,
-    systems: &[Matrix<S>],
-    rhss: &[Option<Matrix<S>>],
-    pin: Option<usize>,
-) -> Result<(Vec<Matrix<S>>, u64)> {
-    let pack = |mats: &[Matrix<S>]| match pin {
-        Some(dev) => PackedPod::pack_on(node, mats, dev),
-        None => PackedPod::pack(node, mats),
-    };
-    let backend = SolverBackend::<S>::Native;
-    let ctx = Ctx::new(node, model, &backend);
-    let mut pod = pack(systems)?;
-    let factor = potrf_batched(&ctx, &mut pod)?;
-    let mut makespan_ns = factor.charged_ns;
-    let results = match routine {
-        SmallRoutine::Potrf => pod.gather()?,
-        SmallRoutine::Potrs => {
-            let rhs_mats: Vec<Matrix<S>> = rhss
-                .iter()
-                .map(|b| b.as_ref().expect("potrs request carries a rhs").clone())
-                .collect();
-            let mut pod_b = pack(&rhs_mats)?;
-            makespan_ns += potrs_batched(&ctx, &pod, &mut pod_b)?.charged_ns;
-            let out = pod_b.gather()?;
-            pod_b.free()?;
-            out
-        }
-        SmallRoutine::Potri => {
-            makespan_ns += potri_batched(&ctx, &mut pod)?.charged_ns;
-            pod.gather()?
-        }
-    };
-    pod.free()?;
-    Ok((results, makespan_ns))
-}
-
-fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
-    if let Some(s) = p.downcast_ref::<&str>() {
-        (*s).to_string()
-    } else if let Some(s) = p.downcast_ref::<String>() {
-        s.clone()
-    } else {
-        "non-string panic payload".to_string()
-    }
-}
-
-/// Completion handle for a service solve: the result plus its stats.
-pub struct ServiceHandle<T> {
-    slot: Arc<(Mutex<Option<SolveOutcome<T>>>, Condvar)>,
-}
-
-impl<T> ServiceHandle<T> {
-    /// Block until the solve completes; returns `(result, stats)`.
-    /// Re-raises the solve's panic if it unwound inside a worker
-    /// (the worker itself survives and the reservation is released).
-    pub fn wait(self) -> (T, SolveStats) {
-        let (lock, cv) = &*self.slot;
-        let mut guard = lock.lock().unwrap();
-        loop {
-            if let Some(v) = guard.take() {
-                drop(guard);
-                match v {
-                    Ok(out) => return out,
-                    Err(msg) => panic!("service solve panicked: {msg}"),
-                }
-            }
-            guard = cv.wait(guard).unwrap();
-        }
-    }
-
-    /// Non-blocking readiness check.
-    pub fn is_ready(&self) -> bool {
-        self.slot.0.lock().unwrap().is_some()
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::costmodel::workspace;
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
@@ -1464,6 +1289,29 @@ mod tests {
             .submit_small(SmallRoutine::Potrf, Matrix::<f64>::zeros(4, 5), None)
             .is_err());
         svc.drain();
+    }
+
+    #[test]
+    fn background_flusher_drains_idle_buckets() {
+        // The PR-3 follow-up: a dwell-expired bucket must flush even
+        // when NO further submit/drain/flush call ever arrives. The
+        // only live reference here is the pending handle — waiting on
+        // it can only resolve if the background tick fires the bucket.
+        let node = SimNode::new_uniform(2, 1 << 22);
+        let mut cfg = SmallConfig::with_tile(64);
+        cfg.policy.max_batch = 32; // never fills
+        cfg.policy.max_dwell_ns = u64::MAX; // sim clock never expires it
+        cfg.policy.max_wall_dwell = Duration::from_millis(10);
+        let svc = SolveService::with_small_config(node, 1, cfg);
+        let h = svc
+            .submit_small(SmallRoutine::Potrf, Matrix::<f64>::spd_random(8, 1), None)
+            .unwrap();
+        assert_eq!(svc.pending_small(), 1);
+        // No further service calls: the timer must flush it.
+        let (l, stats) = h.wait();
+        assert_eq!(l.rows(), 8);
+        assert_eq!(stats.batch_size, 1);
+        assert_eq!(svc.pending_small(), 0);
     }
 
     #[test]

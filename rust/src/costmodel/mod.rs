@@ -38,6 +38,13 @@ pub struct GpuCostModel {
     pub blas2_bytes_per_s: f64,
     /// Kernel launch + cuSOLVERMg bookkeeping overhead per call, s.
     pub launch_overhead: f64,
+    /// `cudaIpcGetMemHandle` cost per export, s (MPMD mode only —
+    /// driver bookkeeping in the exporting process).
+    pub ipc_export_s: f64,
+    /// `cudaIpcOpenMemHandle` cost per open, s (MPMD mode only — the
+    /// dominant term: the opening process maps the foreign allocation
+    /// into its virtual address space).
+    pub ipc_open_s: f64,
 }
 
 impl Default for GpuCostModel {
@@ -55,6 +62,8 @@ impl GpuCostModel {
             panel_efficiency: 0.25,
             blas2_bytes_per_s: 4.0e12, // ~83% of 4.8 TB/s HBM3e
             launch_overhead: 8e-6,
+            ipc_export_s: 5e-6,
+            ipc_open_s: 15e-6,
         }
     }
 

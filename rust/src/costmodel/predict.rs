@@ -348,6 +348,31 @@ impl Predictor {
         self.redistribute(n, ndev) + stage1 + stage2 + stage3
     }
 
+    // ---- MPMD control-plane overhead ------------------------------------
+
+    /// Per-solve control-plane cost MPMD serving adds over the SPMD
+    /// shared-address-space path (Fig. 2 right vs left): each of the
+    /// `ndev - 1` non-caller workers exports its shard
+    /// (`cudaIpcGetMemHandle`), ships the 64-byte opaque handle to the
+    /// rank-0 caller over the host, and the caller opens it
+    /// (`cudaIpcOpenMemHandle`). Data-plane charges — staging, the
+    /// solve schedule, gathers — are identical between the modes, so
+    /// this handle round-trip is the *entire* modeled gap; the serve
+    /// layer charges exactly this quantity onto the caller's timeline
+    /// per opened handle, so the projection and the live path agree by
+    /// construction. The cost is per *solve* and O(ndev), independent
+    /// of N — negligible against any paper-scale solve, visible only
+    /// for tiny ones (which the coalesced pod path keeps off the
+    /// distributed route anyway).
+    pub fn mpmd_overhead(&self, ndev: usize) -> f64 {
+        if ndev <= 1 {
+            return 0.0;
+        }
+        let per_handle =
+            self.model.ipc_export_s + self.model.ipc_open_s + self.topo.h2d_time(64);
+        (ndev - 1) as f64 * per_handle
+    }
+
     // ---- batched small-solve path (the coalescer's cost cut) -----------
 
     /// Makespan of one **batched pod sweep**: `batch` independent
@@ -676,6 +701,28 @@ mod tests {
         // An empty batch costs nothing.
         let p = Predictor::h200(8, DType::F64);
         assert_eq!(p.pod_sweep("potrs", 64, 1, 8, 0), 0.0);
+    }
+
+    #[test]
+    fn mpmd_overhead_pins_the_handle_round_trip() {
+        let p = Predictor::h200(8, DType::F64);
+        // Single process: no handles, no overhead.
+        assert_eq!(p.mpmd_overhead(1), 0.0);
+        // Linear in the non-caller worker count, dtype-independent.
+        let per = p.mpmd_overhead(2);
+        assert!(per > 0.0);
+        assert!((p.mpmd_overhead(8) - 7.0 * per).abs() < 1e-15);
+        assert_eq!(Predictor::h200(8, DType::C128).mpmd_overhead(8), p.mpmd_overhead(8));
+        // H200 constants: ~25 µs per handle (5 export + 15 open + ~5 µs
+        // host-link latency for the 64-byte blob), ~175 µs at 8 devices.
+        assert!(per > 20e-6 && per < 30e-6, "{per}");
+        let eight = p.mpmd_overhead(8);
+        assert!(eight > 140e-6 && eight < 210e-6, "{eight}");
+        // Context: invisible against a paper-scale solve, dominant
+        // against a tiny one — the regime split the serve layer's
+        // batched-vs-distributed routing already encodes.
+        assert!(eight < p.potrs(131072, 1024, 8, 1) * 1e-3);
+        assert!(eight > p.pod_sweep("potrs", 64, 1, 8, 32));
     }
 
     #[test]

@@ -75,7 +75,9 @@ pub struct SimNode {
 
 #[derive(Debug)]
 struct NodeInner {
-    gpus: Vec<SimGpu>,
+    /// `Arc` so a [`SimNode::subset`] view can share the *same* devices
+    /// (VRAM tables, clocks) as its parent node.
+    gpus: Vec<Arc<SimGpu>>,
     topology: NodeTopology,
     metrics: Arc<Metrics>,
 }
@@ -97,8 +99,35 @@ impl SimNode {
     pub fn with_topology(n: usize, vram_bytes: usize, topology: NodeTopology) -> Self {
         assert!(n > 0, "node needs at least one device");
         assert_eq!(topology.num_devices(), n, "topology size mismatch");
-        let gpus = (0..n).map(|i| SimGpu::new(i, vram_bytes)).collect();
+        let gpus = (0..n).map(|i| Arc::new(SimGpu::new(i, vram_bytes))).collect();
         SimNode { inner: Arc::new(NodeInner { gpus, topology, metrics: Arc::new(Metrics::new()) }) }
+    }
+
+    /// A node view over a subset of this node's devices, **sharing**
+    /// their VRAM tables, clocks, and metrics sink: allocations made
+    /// through the view land on (and are accounted against) the same
+    /// physical devices. Device `i` of the view is `devices[i]` of the
+    /// parent; [`DevPtr`]s are view-relative, so a pointer must be used
+    /// with the node it was allocated through. This is the MPMD serve
+    /// layer's degraded-mode substrate: after a worker dies, re-queued
+    /// solves run on a subset view that excludes its device.
+    pub fn subset(&self, devices: &[usize]) -> Result<SimNode> {
+        if devices.is_empty() {
+            return Err(Error::config("a node subset needs at least one device"));
+        }
+        let mut gpus = Vec::with_capacity(devices.len());
+        for &d in devices {
+            let gpu = self
+                .inner
+                .gpus
+                .get(d)
+                .ok_or(Error::InvalidDevice { device: d, count: self.num_devices() })?;
+            gpus.push(gpu.clone());
+        }
+        let topology = self.inner.topology.subset(devices)?;
+        Ok(SimNode {
+            inner: Arc::new(NodeInner { gpus, topology, metrics: self.inner.metrics.clone() }),
+        })
     }
 
     /// Number of devices on the node.
@@ -108,7 +137,21 @@ impl SimNode {
 
     /// Borrow a device.
     pub fn device(&self, i: usize) -> Result<&SimGpu> {
-        self.inner.gpus.get(i).ok_or(Error::InvalidDevice { device: i, count: self.num_devices() })
+        self.inner
+            .gpus
+            .get(i)
+            .map(|g| &**g)
+            .ok_or(Error::InvalidDevice { device: i, count: self.num_devices() })
+    }
+
+    /// Whether `ptr` still addresses a live allocation on this node —
+    /// the liveness check behind the IPC registry's stale-handle
+    /// rejection (`crate::ipc`): a freed export must not be re-openable.
+    pub fn ptr_exists(&self, ptr: DevPtr) -> bool {
+        match self.device(ptr.device) {
+            Ok(gpu) => gpu.mem.lock().unwrap().size_of(ptr).is_ok(),
+            Err(_) => false,
+        }
     }
 
     /// The node's link topology.
@@ -333,6 +376,28 @@ mod tests {
         node.reset_accounting();
         assert_eq!(node.sim_time(), 0.0);
         assert_eq!(node.metrics().snapshot().peer_bytes, 0);
+    }
+
+    #[test]
+    fn subset_shares_devices_and_accounting() {
+        let node = SimNode::new_uniform(4, 1024);
+        let sub = node.subset(&[1, 3]).unwrap();
+        assert_eq!(sub.num_devices(), 2);
+        // Sub-device 0 is physical device 1: the parent sees the bytes.
+        let p = sub.alloc(0, 256).unwrap();
+        assert_eq!(node.memory_reports()[1].used, 256);
+        assert!(sub.ptr_exists(p));
+        // Clocks are shared too.
+        sub.charge_kernel(1, 1e-3, 10).unwrap(); // physical device 3
+        assert!(node.sim_time() >= 1e-3);
+        sub.free(p).unwrap();
+        assert_eq!(node.memory_reports()[1].used, 0);
+        assert!(!sub.ptr_exists(p));
+        // Metrics sink is the parent's.
+        assert_eq!(node.metrics().snapshot().allocs, 1);
+        // Invalid subsets are rejected.
+        assert!(node.subset(&[]).is_err());
+        assert!(node.subset(&[0, 7]).is_err());
     }
 
     #[test]

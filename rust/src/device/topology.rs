@@ -92,6 +92,30 @@ impl NodeTopology {
     pub fn h2d_time(&self, bytes: usize) -> f64 {
         self.copy_latency + bytes as f64 / self.h2d_bw
     }
+
+    /// Topology restricted to a device subset (the MPMD serve layer's
+    /// degraded-mode view after a worker dies): device `i` of the
+    /// subset is `devices[i]` here, links and constants are inherited.
+    pub fn subset(&self, devices: &[usize]) -> crate::error::Result<Self> {
+        for &d in devices {
+            if d >= self.n {
+                return Err(crate::error::Error::InvalidDevice { device: d, count: self.n });
+            }
+        }
+        let links = devices
+            .iter()
+            .map(|&i| devices.iter().map(|&j| self.links[i][j]).collect())
+            .collect();
+        Ok(NodeTopology {
+            n: devices.len(),
+            links,
+            local_bw: self.local_bw,
+            nvlink_bw: self.nvlink_bw,
+            pcie_bw: self.pcie_bw,
+            h2d_bw: self.h2d_bw,
+            copy_latency: self.copy_latency,
+        })
+    }
 }
 
 #[cfg(test)]

@@ -5,15 +5,38 @@
 //! thread (SPMD) or one process (MPMD) per GPU. JAXMg bridges this two
 //! ways, both reproduced here:
 //!
-//! * **SPMD** — all workers share one virtual address space, so a POSIX
-//!   shared-memory table of raw pointers suffices:
+//! * **SPMD** (Fig. 2, left) — all workers share one virtual address
+//!   space, so a POSIX shared-memory table of raw pointers suffices:
 //!   [`SharedPtrTable`] is that table (a slot per device + rendezvous).
-//! * **MPMD** — separate address spaces; raw pointers are *undefined*
-//!   across processes, so allocations must be exported through the
-//!   `cudaIpc` API and re-opened in the caller's space:
-//!   [`IpcRegistry`] models the export/open/close lifecycle, including
-//!   the failure modes (open in the exporting process, open of a
-//!   revoked handle), over simulated [`AddressSpace`]s.
+//! * **MPMD** (Fig. 2, right) — separate address spaces; raw pointers
+//!   are *undefined* across processes, so allocations must be exported
+//!   through the `cudaIpc` API and re-opened in the caller's space:
+//!   [`IpcRegistry`] models the export/open/close lifecycle over
+//!   simulated [`AddressSpace`]s.
+//!
+//! ## Handle lifecycle (and its failure modes)
+//!
+//! The registry reproduces the full `cudaIpcMemHandle_t` life cycle the
+//! MPMD serve layer (`crate::serve`) leans on:
+//!
+//! | event                                   | result                        |
+//! |-----------------------------------------|-------------------------------|
+//! | `export` / `export_bound`               | opaque unguessable handle     |
+//! | `open` in a foreign space               | the exporter's [`crate::device::DevPtr`] |
+//! | `open` in the **exporting** space       | `Error::Ipc` (CUDA forbids it)|
+//! | second `open` in one space              | `Error::Ipc` (double-open)    |
+//! | `open` after `revoke`                   | `Error::Ipc`                  |
+//! | `open` after the allocation was *freed* | `Error::Ipc` — a **bound** export ([`IpcRegistry::export_bound`]) checks liveness and marks the handle revoked, so a stale handle can never map dead memory |
+//! | worker frees an exported shard          | [`IpcRegistry::revoke_all_for`] revokes every handle over the pointer first |
+//!
+//! Per-process accounting ([`IpcRegistry::open_count_in`],
+//! [`IpcRegistry::exports_by`]) gives the serve layer's leak checks and
+//! the `ipc_*` metrics counters their ground truth.
+//!
+//! `coordinator::mpmd::gather_pointers_mpmd` is the minimal
+//! one-shot demo of this machinery; `crate::serve` is the production
+//! shape — persistent one-process-per-GPU workers exporting shards to a
+//! rank-0 frontend with failure-aware routing.
 
 mod registry;
 mod shared_table;

@@ -15,7 +15,7 @@
 //! * handles are unguessable opaque tokens, like the 64-byte
 //!   `cudaIpcMemHandle_t` blob.
 
-use crate::device::DevPtr;
+use crate::device::{DevPtr, SimNode};
 use crate::error::{Error, Result};
 use std::collections::{HashMap, HashSet};
 use std::sync::Mutex;
@@ -36,6 +36,11 @@ struct ExportEntry {
     exporter: AddressSpace,
     opened_in: HashSet<AddressSpace>,
     revoked: bool,
+    /// Node the allocation lives on, for **bound** exports
+    /// ([`IpcRegistry::export_bound`]): `open` checks the allocation is
+    /// still live, so a handle whose backing memory was freed behaves
+    /// as revoked instead of yielding a dangling pointer.
+    node: Option<SimNode>,
 }
 
 /// Node-wide registry of exported allocations.
@@ -59,6 +64,33 @@ impl IpcRegistry {
     /// `cudaIpcGetMemHandle`: export `ptr` from `exporter`'s space.
     /// Only base pointers (offset 0) are exportable, as in CUDA.
     pub fn export(&self, exporter: AddressSpace, ptr: DevPtr) -> Result<IpcHandle> {
+        self.export_inner(exporter, ptr, None)
+    }
+
+    /// [`IpcRegistry::export`] **bound to the allocation's node**: every
+    /// subsequent `open` verifies the backing allocation is still live,
+    /// so freeing the memory implicitly revokes the handle (the
+    /// lifecycle CUDA enforces — `cudaIpcOpenMemHandle` on a freed
+    /// export fails rather than mapping dead memory). The MPMD serve
+    /// workers export through this path.
+    pub fn export_bound(
+        &self,
+        exporter: AddressSpace,
+        node: &SimNode,
+        ptr: DevPtr,
+    ) -> Result<IpcHandle> {
+        if !node.ptr_exists(ptr) {
+            return Err(Error::ipc("cannot export a freed allocation"));
+        }
+        self.export_inner(exporter, ptr, Some(node.clone()))
+    }
+
+    fn export_inner(
+        &self,
+        exporter: AddressSpace,
+        ptr: DevPtr,
+        node: Option<SimNode>,
+    ) -> Result<IpcHandle> {
         if ptr.offset != 0 {
             return Err(Error::ipc("only base allocation pointers can be exported"));
         }
@@ -71,7 +103,7 @@ impl IpcRegistry {
         let token = z ^ (z >> 31);
         inner.exports.insert(
             token,
-            ExportEntry { ptr, exporter, opened_in: HashSet::new(), revoked: false },
+            ExportEntry { ptr, exporter, opened_in: HashSet::new(), revoked: false, node },
         );
         Ok(IpcHandle { token })
     }
@@ -86,6 +118,13 @@ impl IpcRegistry {
             .ok_or_else(|| Error::ipc(format!("unknown ipc handle {:#x}", handle.token)))?;
         if entry.revoked {
             return Err(Error::ipc("handle has been closed by the exporter"));
+        }
+        // Bound exports: freeing the allocation implicitly revokes every
+        // handle over it — a stale handle must not map dead memory.
+        let stale = entry.node.as_ref().is_some_and(|n| !n.ptr_exists(entry.ptr));
+        if stale {
+            entry.revoked = true;
+            return Err(Error::ipc("stale ipc handle: the exported allocation was freed"));
         }
         if entry.exporter == opener {
             return Err(Error::ipc(
@@ -127,6 +166,26 @@ impl IpcRegistry {
         Ok(())
     }
 
+    /// Revoke **every** live handle `exporter` holds over `ptr` — the
+    /// free-path hook: a worker deallocating an exported shard calls
+    /// this first, so no stale handle survives the free. Returns how
+    /// many handles were revoked.
+    pub fn revoke_all_for(&self, exporter: AddressSpace, ptr: DevPtr) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let mut n = 0;
+        for entry in inner.exports.values_mut() {
+            if entry.exporter == exporter
+                && entry.ptr.device == ptr.device
+                && entry.ptr.alloc_id == ptr.alloc_id
+                && !entry.revoked
+            {
+                entry.revoked = true;
+                n += 1;
+            }
+        }
+        n
+    }
+
     /// How many spaces currently have `handle` open (diagnostics).
     pub fn open_count(&self, handle: IpcHandle) -> usize {
         self.inner
@@ -136,6 +195,31 @@ impl IpcRegistry {
             .get(&handle.token)
             .map(|e| e.opened_in.len())
             .unwrap_or(0)
+    }
+
+    /// Per-process open accounting: how many handles `space` currently
+    /// has mapped (the `cudaIpcOpenMemHandle` minus `Close` balance a
+    /// leak checker watches per process).
+    pub fn open_count_in(&self, space: AddressSpace) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .exports
+            .values()
+            .filter(|e| e.opened_in.contains(&space))
+            .count()
+    }
+
+    /// Per-process export accounting: how many live (un-revoked)
+    /// exports `space` currently owns.
+    pub fn exports_by(&self, space: AddressSpace) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .exports
+            .values()
+            .filter(|e| e.exporter == space && !e.revoked)
+            .count()
     }
 }
 
@@ -207,6 +291,73 @@ mod tests {
         let reg = IpcRegistry::new();
         let p = DevPtr { device: 0, alloc_id: 5, offset: 16 };
         assert!(reg.export(AddressSpace(0), p).is_err());
+    }
+
+    #[test]
+    fn freed_allocation_implicitly_revokes_bound_handle() {
+        // The hardening bugfix: an exported allocation that is freed
+        // must not be openable through a stale handle.
+        let node = SimNode::new_uniform(2, 1 << 16);
+        let reg = IpcRegistry::new();
+        let p = node.alloc(1, 128).unwrap();
+        let h = reg.export_bound(AddressSpace(1), &node, p).unwrap();
+        // Live: opens fine.
+        assert_eq!(reg.open(AddressSpace(0), h).unwrap(), p);
+        reg.close(AddressSpace(0), h).unwrap();
+        // Freed: the open fails with a typed ipc error and the handle
+        // is permanently revoked.
+        node.free(p).unwrap();
+        let err = reg.open(AddressSpace(0), h).unwrap_err();
+        assert!(matches!(err, Error::Ipc(_)), "{err}");
+        assert!(format!("{err}").contains("stale"), "{err}");
+        // Even if the alloc id is recycled later, the handle stays dead.
+        let err2 = reg.open(AddressSpace(0), h).unwrap_err();
+        assert!(format!("{err2}").contains("closed") || format!("{err2}").contains("stale"));
+    }
+
+    #[test]
+    fn export_bound_rejects_freed_ptr() {
+        let node = SimNode::new_uniform(1, 1 << 10);
+        let reg = IpcRegistry::new();
+        let p = node.alloc(0, 64).unwrap();
+        node.free(p).unwrap();
+        assert!(reg.export_bound(AddressSpace(0), &node, p).is_err());
+    }
+
+    #[test]
+    fn revoke_all_for_kills_every_handle_over_a_ptr() {
+        let reg = IpcRegistry::new();
+        let p = ptr(1, 9);
+        let h1 = reg.export(AddressSpace(1), p).unwrap();
+        let h2 = reg.export(AddressSpace(1), p).unwrap();
+        let other = reg.export(AddressSpace(1), ptr(1, 10)).unwrap();
+        // A different exporter's handle over the "same" ptr is not ours.
+        let foreign = reg.export(AddressSpace(2), p).unwrap();
+        assert_eq!(reg.revoke_all_for(AddressSpace(1), p), 2);
+        assert!(reg.open(AddressSpace(0), h1).is_err());
+        assert!(reg.open(AddressSpace(0), h2).is_err());
+        reg.open(AddressSpace(0), other).unwrap();
+        reg.open(AddressSpace(0), foreign).unwrap();
+        // Idempotent: nothing left to revoke.
+        assert_eq!(reg.revoke_all_for(AddressSpace(1), p), 0);
+    }
+
+    #[test]
+    fn per_process_accounting() {
+        let reg = IpcRegistry::new();
+        let h1 = reg.export(AddressSpace(1), ptr(1, 1)).unwrap();
+        let h2 = reg.export(AddressSpace(2), ptr(2, 1)).unwrap();
+        assert_eq!(reg.exports_by(AddressSpace(1)), 1);
+        reg.open(AddressSpace(0), h1).unwrap();
+        reg.open(AddressSpace(0), h2).unwrap();
+        reg.open(AddressSpace(3), h1).unwrap();
+        assert_eq!(reg.open_count_in(AddressSpace(0)), 2);
+        assert_eq!(reg.open_count_in(AddressSpace(3)), 1);
+        reg.close(AddressSpace(0), h1).unwrap();
+        assert_eq!(reg.open_count_in(AddressSpace(0)), 1);
+        reg.revoke(AddressSpace(1), h1).unwrap();
+        assert_eq!(reg.exports_by(AddressSpace(1)), 0);
+        assert_eq!(reg.exports_by(AddressSpace(2)), 1);
     }
 
     #[test]

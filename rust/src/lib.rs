@@ -52,6 +52,7 @@ pub mod metrics;
 pub mod rng;
 pub mod runtime;
 pub mod scalar;
+pub mod serve;
 pub mod solver;
 pub mod tile;
 
@@ -66,6 +67,7 @@ pub mod prelude {
     pub use crate::layout::{BlockCyclic1D, BlockCyclic2D};
     pub use crate::linalg::Matrix;
     pub use crate::scalar::{c32, c64, Complex, Scalar};
+    pub use crate::serve::{MpmdConfig, MpmdService};
     pub use crate::solver::{PipelineConfig, SolverBackend};
 }
 

@@ -63,6 +63,24 @@ pub struct Metrics {
     /// charges themselves, so concurrent tenants on the shared node
     /// cannot skew it).
     pub batch_makespan_ns: AtomicU64,
+    /// `cudaIpcGetMemHandle` analogues issued (MPMD shard exports).
+    pub ipc_exports: AtomicU64,
+    /// `cudaIpcOpenMemHandle` analogues issued by the single caller.
+    pub ipc_opens: AtomicU64,
+    /// `cudaIpcCloseMemHandle` analogues issued by the single caller.
+    pub ipc_closes: AtomicU64,
+    /// Handles revoked (explicitly, or by freeing an exported shard).
+    pub ipc_revokes: AtomicU64,
+    /// Requests the MPMD frontend routed (dispatched to workers).
+    pub mpmd_routed: AtomicU64,
+    /// Total frontend routing latency, ns: submit → dispatch handoff
+    /// (queueing + admission across the live worker set).
+    pub mpmd_routing_ns: AtomicU64,
+    /// Requests re-queued after a worker panic/kill, with the dead
+    /// device excluded from the retry.
+    pub mpmd_requeues: AtomicU64,
+    /// Deepest per-worker mailbox observed at enqueue time.
+    pub mpmd_peak_worker_queue: AtomicU64,
 }
 
 impl Metrics {
@@ -126,6 +144,45 @@ impl Metrics {
         self.batch_makespan_ns.fetch_add(makespan_ns, Ordering::Relaxed);
     }
 
+    #[inline]
+    pub fn add_ipc_export(&self) {
+        self.ipc_exports.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_ipc_open(&self) {
+        self.ipc_opens.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_ipc_close(&self) {
+        self.ipc_closes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_ipc_revokes(&self, n: u64) {
+        self.ipc_revokes.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record one MPMD frontend routing decision (submit → dispatch).
+    #[inline]
+    pub fn add_mpmd_routed(&self, routing_ns: u64) {
+        self.mpmd_routed.fetch_add(1, Ordering::Relaxed);
+        self.mpmd_routing_ns.fetch_add(routing_ns, Ordering::Relaxed);
+    }
+
+    /// Record one failure-driven re-queue (device excluded on retry).
+    #[inline]
+    pub fn add_mpmd_requeue(&self) {
+        self.mpmd_requeues.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Track the deepest worker mailbox seen at enqueue time.
+    #[inline]
+    pub fn note_worker_queue_depth(&self, depth: u64) {
+        self.mpmd_peak_worker_queue.fetch_max(depth, Ordering::Relaxed);
+    }
+
     /// Snapshot all counters (for reports; not atomic across fields).
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
@@ -151,6 +208,14 @@ impl Metrics {
             batch_peak_occupancy: self.batch_peak_occupancy.load(Ordering::Relaxed),
             batch_coalesce_wait_ns: self.batch_coalesce_wait_ns.load(Ordering::Relaxed),
             batch_makespan_ns: self.batch_makespan_ns.load(Ordering::Relaxed),
+            ipc_exports: self.ipc_exports.load(Ordering::Relaxed),
+            ipc_opens: self.ipc_opens.load(Ordering::Relaxed),
+            ipc_closes: self.ipc_closes.load(Ordering::Relaxed),
+            ipc_revokes: self.ipc_revokes.load(Ordering::Relaxed),
+            mpmd_routed: self.mpmd_routed.load(Ordering::Relaxed),
+            mpmd_routing_ns: self.mpmd_routing_ns.load(Ordering::Relaxed),
+            mpmd_requeues: self.mpmd_requeues.load(Ordering::Relaxed),
+            mpmd_peak_worker_queue: self.mpmd_peak_worker_queue.load(Ordering::Relaxed),
         }
     }
 
@@ -179,6 +244,14 @@ impl Metrics {
             &self.batch_peak_occupancy,
             &self.batch_coalesce_wait_ns,
             &self.batch_makespan_ns,
+            &self.ipc_exports,
+            &self.ipc_opens,
+            &self.ipc_closes,
+            &self.ipc_revokes,
+            &self.mpmd_routed,
+            &self.mpmd_routing_ns,
+            &self.mpmd_requeues,
+            &self.mpmd_peak_worker_queue,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -210,6 +283,14 @@ pub struct MetricsSnapshot {
     pub batch_peak_occupancy: u64,
     pub batch_coalesce_wait_ns: u64,
     pub batch_makespan_ns: u64,
+    pub ipc_exports: u64,
+    pub ipc_opens: u64,
+    pub ipc_closes: u64,
+    pub ipc_revokes: u64,
+    pub mpmd_routed: u64,
+    pub mpmd_routing_ns: u64,
+    pub mpmd_requeues: u64,
+    pub mpmd_peak_worker_queue: u64,
 }
 
 impl MetricsSnapshot {
@@ -252,6 +333,21 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Mean MPMD frontend routing latency (submit → dispatch), seconds.
+    pub fn avg_routing_latency(&self) -> f64 {
+        if self.mpmd_routed == 0 {
+            0.0
+        } else {
+            self.mpmd_routing_ns as f64 / self.mpmd_routed as f64 * 1e-9
+        }
+    }
+
+    /// IPC handles currently open according to the counters
+    /// (opens minus closes) — the caller-side leak balance.
+    pub fn ipc_open_balance(&self) -> i64 {
+        self.ipc_opens as i64 - self.ipc_closes as i64
+    }
+
     /// Difference against an earlier snapshot (per-phase accounting).
     pub fn delta(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
         MetricsSnapshot {
@@ -278,6 +374,15 @@ impl MetricsSnapshot {
             batch_peak_occupancy: self.batch_peak_occupancy,
             batch_coalesce_wait_ns: self.batch_coalesce_wait_ns - earlier.batch_coalesce_wait_ns,
             batch_makespan_ns: self.batch_makespan_ns - earlier.batch_makespan_ns,
+            ipc_exports: self.ipc_exports - earlier.ipc_exports,
+            ipc_opens: self.ipc_opens - earlier.ipc_opens,
+            ipc_closes: self.ipc_closes - earlier.ipc_closes,
+            ipc_revokes: self.ipc_revokes - earlier.ipc_revokes,
+            mpmd_routed: self.mpmd_routed - earlier.mpmd_routed,
+            mpmd_routing_ns: self.mpmd_routing_ns - earlier.mpmd_routing_ns,
+            mpmd_requeues: self.mpmd_requeues - earlier.mpmd_requeues,
+            // A high-water mark, like batch_peak_occupancy.
+            mpmd_peak_worker_queue: self.mpmd_peak_worker_queue,
         }
     }
 }
@@ -351,6 +456,34 @@ mod tests {
         assert!((s.avg_coalesce_wait() - 500e-9).abs() < 1e-15);
         assert_eq!(MetricsSnapshot::default().avg_batch_occupancy(), 0.0);
         assert_eq!(MetricsSnapshot::default().avg_coalesce_wait(), 0.0);
+        m.reset();
+        assert_eq!(m.snapshot(), MetricsSnapshot::default());
+    }
+
+    #[test]
+    fn ipc_and_mpmd_counters() {
+        let m = Metrics::new();
+        m.add_ipc_export();
+        m.add_ipc_export();
+        m.add_ipc_open();
+        m.add_ipc_close();
+        m.add_ipc_revokes(2);
+        m.add_mpmd_routed(1_000);
+        m.add_mpmd_routed(3_000);
+        m.add_mpmd_requeue();
+        m.note_worker_queue_depth(3);
+        m.note_worker_queue_depth(1);
+        let s = m.snapshot();
+        assert_eq!(s.ipc_exports, 2);
+        assert_eq!(s.ipc_opens, 1);
+        assert_eq!(s.ipc_closes, 1);
+        assert_eq!(s.ipc_revokes, 2);
+        assert_eq!(s.ipc_open_balance(), 0);
+        assert_eq!(s.mpmd_routed, 2);
+        assert_eq!(s.mpmd_requeues, 1);
+        assert_eq!(s.mpmd_peak_worker_queue, 3);
+        assert!((s.avg_routing_latency() - 2e-6).abs() < 1e-15);
+        assert_eq!(MetricsSnapshot::default().avg_routing_latency(), 0.0);
         m.reset();
         assert_eq!(m.snapshot(), MetricsSnapshot::default());
     }

@@ -1,0 +1,1349 @@
+//! The rank-0 frontend: request queue, failure-aware routing, and the
+//! single-caller solve path.
+//!
+//! [`MpmdService`] owns the FIFO request queue. A dispatcher thread
+//! admits the queue head against the **workers' own** per-device
+//! accountants (all-or-rollback across the live set for distributed
+//! solves, a single least-loaded worker for pinned pods), then hands
+//! execution off:
+//!
+//! * **distributed solves** run on a router pool as the single caller —
+//!   live workers stage their shards locally and export them, rank 0
+//!   opens the foreign handles (charging the modeled `cudaIpc`
+//!   round-trip, [`Predictor::mpmd_overhead`]'s exact terms), assembles
+//!   the pointers into a [`DistMatrix`] view, and invokes
+//!   `potrf/potrs/potri/syevd_dist`;
+//! * **small solves** coalesce in a [`BatchPlanner`] exactly as in the
+//!   SPMD service; a flushed bucket becomes one pod **pinned to one
+//!   worker**, swept on that worker's thread.
+//!
+//! ## Failure-aware routing
+//!
+//! Worker death (panic or [`MpmdService::kill_worker`]) never loses a
+//! request. Every dispatched work item is accounted in-flight until it
+//! either publishes or re-enters the queue; the re-entry paths are:
+//!
+//! * a staging reply never arrives (dead worker's mailbox dropped the
+//!   job) — the router sees the disconnect;
+//! * the solve fails and some participant is no longer alive (its
+//!   freed shards poisoned the solve) — re-queued with the dead
+//!   devices excluded;
+//! * a pod job lands on (or is draining from) a dead worker — it hands
+//!   itself back for re-routing, excluding that device;
+//! * a degraded pod rerun dies mid-loop — the unpublished tail
+//!   re-enters as a fresh pod on the remaining devices.
+//!
+//! Retries shrink the live set monotonically (excluded devices
+//! accumulate), so routing terminates: either a retry completes on the
+//! remaining devices or the request fails with "no live workers".
+//!
+//! [`Predictor::mpmd_overhead`]: crate::costmodel::Predictor::mpmd_overhead
+//! [`BatchPlanner`]: crate::batch::BatchPlanner
+
+use super::worker::{spawn_worker, StagedAlloc, WorkerCtx, WorkerJob, WorkerLink};
+use crate::batch::{
+    run_bucket, size_class, BatchPlanner, BatchPolicy, BucketKey, FlushedBucket, SmallRoutine,
+};
+use crate::coordinator::{
+    handle_pair, panic_message, publish_failure, publish_one, Footprint, JobQueue, ServiceHandle,
+    Slot, SolveStats,
+};
+use crate::costmodel::{GpuCostModel, Predictor};
+use crate::device::{DevPtr, SimNode};
+use crate::error::{Error, Result};
+use crate::ipc::{AddressSpace, IpcHandle, IpcRegistry};
+use crate::layout::BlockCyclic1D;
+use crate::linalg::Matrix;
+use crate::scalar::{DType, Scalar};
+use crate::solver::{
+    potrf_dist, potri_dist, potrs_dist, syevd_dist, Ctx, PipelineConfig, SolverBackend,
+};
+use crate::tile::{build_panel, DistMatrix, LayoutKind};
+use std::any::Any;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Configuration of the MPMD serving subsystem.
+#[derive(Clone, Debug)]
+pub struct MpmdConfig {
+    /// `T_A` of the distributed solve layout; also anchors the default
+    /// smallness cut (`small_dim = 4·tile`).
+    pub tile: usize,
+    /// Cost model for solve charges, the batched-vs-distributed
+    /// dispatch decision, and the `cudaIpc` round-trip charge.
+    pub model: GpuCostModel,
+    /// Timing schedule of the distributed solves (barrier by default,
+    /// so MPMD results are bitwise-comparable to the seed schedule).
+    pub pipeline: PipelineConfig,
+    /// Coalescing knobs of the small-solve path.
+    pub policy: BatchPolicy,
+    /// Router threads executing distributed solves as the single
+    /// caller (bounds distributed solves in flight).
+    pub routers: usize,
+}
+
+impl MpmdConfig {
+    /// Defaults anchored at tile size `tile` (`small_dim = 4·tile`).
+    pub fn with_tile(tile: usize) -> Self {
+        let policy = BatchPolicy { small_dim: 4 * tile, ..BatchPolicy::default() };
+        MpmdConfig {
+            tile,
+            model: GpuCostModel::h200(),
+            pipeline: PipelineConfig::barrier(),
+            policy,
+            routers: 2,
+        }
+    }
+}
+
+impl Default for MpmdConfig {
+    fn default() -> Self {
+        Self::with_tile(64)
+    }
+}
+
+/// The distributed routines the MPMD frontend routes.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum DistRoutine {
+    /// Cholesky factor (returns the factored matrix).
+    Potrf,
+    /// Factor + solve against a replicated RHS.
+    Potrs,
+    /// Factor + Cholesky-based inverse.
+    Potri,
+    /// Symmetric/Hermitian eigendecomposition.
+    Syevd,
+}
+
+impl DistRoutine {
+    fn name(self) -> &'static str {
+        match self {
+            DistRoutine::Potrf => "potrf",
+            DistRoutine::Potrs => "potrs",
+            DistRoutine::Potri => "potri",
+            DistRoutine::Syevd => "syevd",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frontend shared state (queue + wake-ups)
+// ---------------------------------------------------------------------------
+
+struct FrontState {
+    queue: VecDeque<QueuedWork>,
+    in_flight: usize,
+    shutdown: bool,
+}
+
+/// The rank-0 frontend state workers and routers wake each other
+/// through: the FIFO request queue, the in-flight count, and the one
+/// condvar behind every release/completion/death notification.
+pub(crate) struct FrontShared {
+    state: Mutex<FrontState>,
+    cv: Condvar,
+}
+
+impl FrontShared {
+    fn new() -> Self {
+        FrontShared {
+            state: Mutex::new(FrontState {
+                queue: VecDeque::new(),
+                in_flight: 0,
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Wake the dispatcher (capacity released, worker died, ...).
+    pub(crate) fn notify(&self) {
+        self.cv.notify_all();
+    }
+
+    /// One dispatched work item finished (published its outcome).
+    pub(crate) fn complete(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.in_flight -= 1;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// A dispatched work item failed on dead devices: exclude them and
+    /// put it back at the queue head for re-routing.
+    pub(crate) fn requeue(&self, mut work: QueuedWork, dead: &[usize]) {
+        for &d in dead {
+            if !work.excluded.contains(&d) {
+                work.excluded.push(d);
+            }
+        }
+        work.attempts += 1;
+        let mut st = self.state.lock().unwrap();
+        st.queue.push_front(work);
+        st.in_flight -= 1;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Enqueue new work; hands the work back when the service is
+    /// already shut down (the caller fails its waiters).
+    pub(crate) fn enqueue(&self, work: QueuedWork) -> std::result::Result<(), QueuedWork> {
+        let mut st = self.state.lock().unwrap();
+        if st.shutdown {
+            return Err(work);
+        }
+        st.queue.push_back(work);
+        drop(st);
+        self.cv.notify_all();
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Work items
+// ---------------------------------------------------------------------------
+
+/// How a distributed work item ended.
+pub(crate) enum ExecResult {
+    /// Outcome published to the waiters (success or terminal failure).
+    Published,
+    /// Worker death poisoned the attempt: re-queue excluding the dead.
+    Requeue(Vec<usize>),
+}
+
+/// How a worker-executed pod ended.
+pub(crate) enum PodOutcome {
+    Published,
+    WorkerDead,
+}
+
+/// A distributed solve routed by the frontend (type-erased over dtype).
+pub(crate) trait DistWork: Send + Sync {
+    fn footprint(&self, tile: usize, ndev: usize) -> Result<Footprint>;
+    fn execute(
+        &self,
+        shared: &Shared,
+        live: &[usize],
+        fp: &Footprint,
+        queue_wait: Duration,
+    ) -> ExecResult;
+    fn fail(&self, msg: String);
+}
+
+/// A coalesced pod pinned to one worker (type-erased over dtype).
+pub(crate) trait PodWork: Send + Sync {
+    /// Arena bytes the pod needs on its single target device.
+    fn bytes(&self) -> usize;
+    fn run(&self, ctx: &WorkerCtx, queue_wait: Duration) -> PodOutcome;
+    fn fail(&self, msg: String);
+}
+
+pub(crate) enum WorkKind {
+    Dist(Arc<dyn DistWork>),
+    Pod(Arc<dyn PodWork>),
+}
+
+/// One queued request plus its routing state.
+pub(crate) struct QueuedWork {
+    kind: WorkKind,
+    /// Devices excluded by prior failures (grows monotonically).
+    excluded: Vec<usize>,
+    /// Dispatch attempts so far (diagnostics in terminal failures).
+    attempts: u32,
+    enqueued: Instant,
+}
+
+impl QueuedWork {
+    fn fresh(kind: WorkKind) -> Self {
+        QueuedWork { kind, excluded: Vec::new(), attempts: 0, enqueued: Instant::now() }
+    }
+}
+
+/// Fail every waiter of a work item that can no longer be routed.
+fn fail_work(work: QueuedWork, msg: String) {
+    match work.kind {
+        WorkKind::Dist(req) => req.fail(msg),
+        WorkKind::Pod(pod) => pod.fail(msg),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared service state
+// ---------------------------------------------------------------------------
+
+/// Everything the dispatcher, routers, and worker jobs share.
+pub(crate) struct Shared {
+    node: SimNode,
+    registry: Arc<IpcRegistry>,
+    cfg: MpmdConfig,
+    workers: Vec<WorkerLink>,
+    front: Arc<FrontShared>,
+    /// The frontend's (rank 0's) address space: worker 0 is a thread of
+    /// this process, so its shard needs no IPC export.
+    caller: AddressSpace,
+}
+
+impl Shared {
+    fn live_workers(&self, excluded: &[usize]) -> Vec<usize> {
+        (0..self.workers.len())
+            .filter(|d| self.workers[*d].alive() && !excluded.contains(d))
+            .collect()
+    }
+
+    fn sim_now_ns(&self) -> u64 {
+        (self.node.sim_time() * 1e9).round() as u64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Distributed solve requests
+// ---------------------------------------------------------------------------
+
+enum DistSlot<S: Scalar> {
+    Mat(Slot<Matrix<S>>),
+    Eig(Slot<(Vec<S::Real>, Matrix<S>)>),
+}
+
+enum DistOut<S: Scalar> {
+    Mat(Matrix<S>),
+    Eig(Vec<S::Real>, Matrix<S>),
+}
+
+struct DistReq<S: Scalar> {
+    routine: DistRoutine,
+    a: Arc<Matrix<S>>,
+    rhs: Option<Matrix<S>>,
+    slot: DistSlot<S>,
+}
+
+impl<S: Scalar> DistReq<S> {
+    fn publish_ok(&self, out: DistOut<S>, stats: SolveStats) {
+        match (&self.slot, out) {
+            (DistSlot::Mat(slot), DistOut::Mat(x)) => publish_one(slot, Ok((x, stats))),
+            (DistSlot::Eig(slot), DistOut::Eig(vals, vecs)) => {
+                publish_one(slot, Ok(((vals, vecs), stats)))
+            }
+            _ => unreachable!("routine determines the output shape"),
+        }
+    }
+}
+
+/// One worker's staged shard as reported back to rank 0.
+struct StagedShard {
+    ptr: DevPtr,
+    handle: Option<IpcHandle>,
+}
+
+/// Worker-side shard staging: build the panel for `sub_idx` of the
+/// layout, allocate + upload it on this worker's device (through the
+/// possibly-degraded node view), and export it unless this *is* the
+/// caller's process.
+fn stage_shard<S: Scalar>(
+    ctx: &WorkerCtx,
+    sub: &SimNode,
+    sub_idx: usize,
+    kind: LayoutKind,
+    host: &Matrix<S>,
+    caller: AddressSpace,
+) -> Result<StagedShard> {
+    let panel = build_panel::<S>(&kind, host.rows(), host, sub_idx);
+    let ptr = sub.alloc_scalars::<S>(sub_idx, panel.len())?;
+    let staged = (|| -> Result<Option<IpcHandle>> {
+        if !panel.is_empty() {
+            sub.write_slice(ptr, 0, &panel)?;
+            sub.charge_h2d(sub_idx, std::mem::size_of_val(panel.as_slice()))?;
+        }
+        if ctx.space != caller {
+            let h = ctx.registry.export_bound(ctx.space, sub, ptr)?;
+            ctx.node.metrics().add_ipc_export();
+            Ok(Some(h))
+        } else {
+            Ok(None)
+        }
+    })();
+    match staged {
+        Ok(handle) => {
+            ctx.record_staged(StagedAlloc { node: sub.clone(), ptr });
+            Ok(StagedShard { ptr, handle })
+        }
+        Err(e) => {
+            let _ = sub.free(ptr);
+            Err(e)
+        }
+    }
+}
+
+impl<S: Scalar> DistWork for DistReq<S> {
+    fn footprint(&self, tile: usize, ndev: usize) -> Result<Footprint> {
+        let n = self.a.rows();
+        let nrhs = self.rhs.as_ref().map(|b| b.cols()).unwrap_or(0);
+        Footprint::for_routine(self.routine.name(), n, nrhs, tile, ndev, S::DTYPE)
+    }
+
+    fn execute(
+        &self,
+        shared: &Shared,
+        live: &[usize],
+        fp: &Footprint,
+        queue_wait: Duration,
+    ) -> ExecResult {
+        let t0 = Instant::now();
+        let caller = shared.caller;
+        let metrics = shared.node.metrics().clone();
+        let mut opened: Vec<IpcHandle> = Vec::new();
+        // (`StagedShard` is not `Clone`, hence no `vec![None; n]`.)
+        let mut staged: Vec<Option<StagedShard>> = (0..live.len()).map(|_| None).collect();
+        let attempt = (|| -> Result<DistOut<S>> {
+            let n = self.a.rows();
+            let ndev = live.len();
+            // Degraded mode runs on a subset view that shares the live
+            // devices' VRAM/clocks but excludes the dead ones.
+            let sub = shared.node.subset(live)?;
+            let lay = BlockCyclic1D::new(n, shared.cfg.tile, ndev)?;
+            let kind = LayoutKind::BlockCyclic(lay);
+
+            // 1. Every live worker stages its own shard in its own
+            // process and ships a pointer (rank 0) or handle (others).
+            let (tx, rx) = mpsc::channel::<(usize, Result<StagedShard>)>();
+            for (i, &dev) in live.iter().enumerate() {
+                let tx = tx.clone();
+                let a = self.a.clone();
+                let sub = sub.clone();
+                let job: WorkerJob = Box::new(move |ctx| {
+                    if !ctx.alive() {
+                        // Dead process: dropping `tx` is the disconnect
+                        // rank 0 observes.
+                        return;
+                    }
+                    let res = stage_shard::<S>(ctx, &sub, i, kind, &a, caller);
+                    let _ = tx.send((i, res));
+                });
+                // A closed mailbox drops the job (and its `tx`): the
+                // missing reply is detected below.
+                let _ = shared.workers[dev].send(job);
+            }
+            drop(tx);
+
+            // Drain EVERY reply before acting on errors: a successfully
+            // staged shard must land in `staged` so the teardown below
+            // can hand it back to its worker even when a sibling failed.
+            let mut stage_err: Option<Error> = None;
+            for (i, res) in rx {
+                match res {
+                    Ok(sh) => staged[i] = Some(sh),
+                    Err(e) => {
+                        if stage_err.is_none() {
+                            stage_err = Some(e);
+                        }
+                    }
+                }
+            }
+            if let Some(e) = stage_err {
+                return Err(e);
+            }
+
+            // 2. Rank 0 opens every foreign handle in its own space,
+            // paying the modeled cudaIpc round-trip per handle — the
+            // exact terms `Predictor::mpmd_overhead` projects.
+            let per_handle = shared.cfg.model.ipc_export_s
+                + shared.cfg.model.ipc_open_s
+                + shared.node.topology().h2d_time(64);
+            let mut panels = Vec::with_capacity(ndev);
+            for (i, sh) in staged.iter().enumerate() {
+                let sh = sh.as_ref().ok_or_else(|| {
+                    Error::ipc(format!("worker {} died before publishing its shard", live[i]))
+                })?;
+                match sh.handle {
+                    Some(h) => {
+                        let ptr = shared.registry.open(caller, h)?;
+                        opened.push(h);
+                        metrics.add_ipc_open();
+                        // The caller's process runs next to device 0.
+                        shared.node.device(0)?.clock().advance(per_handle);
+                        panels.push(ptr);
+                    }
+                    None => panels.push(sh.ptr),
+                }
+            }
+
+            // 3. The single caller assembles the view and solves.
+            let backend = SolverBackend::<S>::Native;
+            let ctx =
+                Ctx::with_pipeline(&sub, &shared.cfg.model, &backend, shared.cfg.pipeline);
+            let mut dm = DistMatrix::<S>::from_panels(&sub, n, kind, panels)?;
+            let solved = (|| -> Result<DistOut<S>> {
+                potrf_dist(&ctx, &mut dm)?;
+                match self.routine {
+                    DistRoutine::Potrf => Ok(DistOut::Mat(dm.gather()?)),
+                    DistRoutine::Potrs => {
+                        let b = self.rhs.as_ref().expect("validated at submit");
+                        Ok(DistOut::Mat(potrs_dist(&ctx, &dm, b)?))
+                    }
+                    DistRoutine::Potri => {
+                        potri_dist(&ctx, &mut dm)?;
+                        Ok(DistOut::Mat(dm.gather()?))
+                    }
+                    DistRoutine::Syevd => {
+                        let vals = syevd_dist(&ctx, &mut dm)?;
+                        Ok(DistOut::Eig(vals, dm.gather()?))
+                    }
+                }
+            })();
+            // The workers own the panels — never free them here.
+            let _ = dm.into_panels();
+            solved
+        });
+        // A router thread must survive anything a degraded solve can
+        // throw (a killed worker's shards vanish mid-read): contain
+        // unwinds here so teardown and in-flight accounting always run.
+        let result: Result<DistOut<S>> =
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(attempt)) {
+                Ok(r) => r,
+                Err(p) => {
+                    Err(Error::solver(format!("mpmd solve panicked: {}", panic_message(p))))
+                }
+            };
+
+        // 4. Teardown on every path: close the caller's mappings, tear
+        // down staged shards (revoke-on-free), release reservations.
+        for h in &opened {
+            if shared.registry.close(caller, *h).is_ok() {
+                metrics.add_ipc_close();
+            }
+        }
+        for (i, &dev) in live.iter().enumerate() {
+            let wctx = &shared.workers[dev].ctx;
+            if let Some(sh) = &staged[i] {
+                wctx.release_staged(sh.ptr);
+            }
+            wctx.admission.release(fp.bytes(i));
+        }
+        shared.front.notify();
+
+        match result {
+            Ok(out) => {
+                let exec = t0.elapsed();
+                metrics
+                    .add_service_completion(queue_wait.as_nanos() as u64, exec.as_nanos() as u64);
+                let stats =
+                    SolveStats { queue_wait, exec, batch_size: 1, coalesce_wait_ns: 0 };
+                self.publish_ok(out, stats);
+                ExecResult::Published
+            }
+            Err(e) => {
+                let dead: Vec<usize> =
+                    live.iter().copied().filter(|&d| !shared.workers[d].alive()).collect();
+                if dead.is_empty() {
+                    // Terminal failure: counts as a completion, exactly
+                    // like a failed solve on the SPMD front.
+                    metrics.add_service_completion(
+                        queue_wait.as_nanos() as u64,
+                        t0.elapsed().as_nanos() as u64,
+                    );
+                    self.fail(format!("mpmd {} failed: {e}", self.routine.name()));
+                    ExecResult::Published
+                } else {
+                    ExecResult::Requeue(dead)
+                }
+            }
+        }
+    }
+
+    fn fail(&self, msg: String) {
+        match &self.slot {
+            DistSlot::Mat(slot) => publish_one(slot, Err(msg)),
+            DistSlot::Eig(slot) => publish_one(slot, Err(msg)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pinned pod requests (the coalesced small-solve path)
+// ---------------------------------------------------------------------------
+
+struct PodReq<S: Scalar> {
+    routine: SmallRoutine,
+    systems: Vec<Matrix<S>>,
+    rhss: Vec<Option<Matrix<S>>>,
+    slots: Vec<Slot<Matrix<S>>>,
+    waits: Vec<u64>,
+}
+
+impl<S: Scalar> PodWork for PodReq<S> {
+    fn bytes(&self) -> usize {
+        // The pod is pinned to one device, so its reservation is the
+        // whole-bucket arena: `Footprint::for_pod` over a single
+        // "device" — one sizing formula for both fronts.
+        let dims: Vec<(usize, usize)> = self
+            .systems
+            .iter()
+            .zip(&self.rhss)
+            .map(|(a, b)| (a.rows(), b.as_ref().map(|m| m.cols()).unwrap_or(0)))
+            .collect();
+        Footprint::for_pod(self.routine.name(), &dims, 1, S::DTYPE)
+            .expect("SmallRoutine names are known to the workspace model")
+            .bytes(0)
+    }
+
+    fn run(&self, ctx: &WorkerCtx, queue_wait: Duration) -> PodOutcome {
+        let t0 = Instant::now();
+        let occupancy = self.systems.len();
+        let swept = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_bucket::<S>(
+                self.routine,
+                &ctx.node,
+                &ctx.model,
+                &self.systems,
+                &self.rhss,
+                Some(ctx.device),
+            )
+        }));
+        match swept {
+            Ok(Ok((results, makespan_ns))) => {
+                let exec = t0.elapsed();
+                let total_wait: u64 = self.waits.iter().sum();
+                ctx.node.metrics().add_batch_bucket(occupancy as u64, total_wait, makespan_ns);
+                ctx.node
+                    .metrics()
+                    .add_service_completion(queue_wait.as_nanos() as u64, exec.as_nanos() as u64);
+                for ((slot, x), wait_ns) in
+                    self.slots.iter().zip(results).zip(self.waits.iter().copied())
+                {
+                    let stats = SolveStats {
+                        queue_wait,
+                        exec,
+                        batch_size: occupancy,
+                        coalesce_wait_ns: wait_ns,
+                    };
+                    publish_one(slot, Ok((x, stats)));
+                }
+                PodOutcome::Published
+            }
+            _ => {
+                if !ctx.alive() {
+                    return PodOutcome::WorkerDead;
+                }
+                // A sweep aborts at its first failing system; rerun one
+                // at a time, pinned to this device, so only the
+                // culprit's waiter sees the failure. If the process
+                // dies mid-loop, the unpublished tail re-enters the
+                // frontend queue as a fresh pod on the other devices.
+                for i in 0..occupancy {
+                    if !ctx.alive() {
+                        let tail = PodReq::<S> {
+                            routine: self.routine,
+                            systems: self.systems[i..].to_vec(),
+                            rhss: self.rhss[i..].to_vec(),
+                            slots: self.slots[i..].to_vec(),
+                            waits: self.waits[i..].to_vec(),
+                        };
+                        ctx.node.metrics().add_mpmd_requeue();
+                        let mut work = QueuedWork::fresh(WorkKind::Pod(Arc::new(tail)));
+                        work.excluded.push(ctx.device);
+                        work.attempts = 1;
+                        if let Err(w) = ctx.front.enqueue(work) {
+                            fail_work(w, "mpmd service shut down during retry".to_string());
+                        } else {
+                            ctx.node.metrics().add_service_submission();
+                        }
+                        break;
+                    }
+                    let one = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        run_bucket::<S>(
+                            self.routine,
+                            &ctx.node,
+                            &ctx.model,
+                            &self.systems[i..i + 1],
+                            &self.rhss[i..i + 1],
+                            Some(ctx.device),
+                        )
+                    }));
+                    let exec = t0.elapsed();
+                    let outcome = match one {
+                        Ok(Ok((mut v, _))) => Ok((
+                            v.pop().expect("batch of one"),
+                            SolveStats {
+                                queue_wait,
+                                exec,
+                                batch_size: 1,
+                                coalesce_wait_ns: self.waits[i],
+                            },
+                        )),
+                        Ok(Err(e)) => Err(format!("small solve failed: {e}")),
+                        Err(p) => Err(panic_message(p)),
+                    };
+                    publish_one(&self.slots[i], outcome);
+                }
+                // One admitted pod, one completion — whichever path
+                // resolved it (parity with the SPMD bucket flusher).
+                ctx.node
+                    .metrics()
+                    .add_service_completion(queue_wait.as_nanos() as u64, t0.elapsed().as_nanos() as u64);
+                PodOutcome::Published
+            }
+        }
+    }
+
+    fn fail(&self, msg: String) {
+        publish_failure(&self.slots, msg);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatcher
+// ---------------------------------------------------------------------------
+
+fn reserve_all(shared: &Shared, live: &[usize], fp: &Footprint) -> bool {
+    for (i, &dev) in live.iter().enumerate() {
+        if shared.workers[dev].ctx.admission.try_reserve(fp.bytes(i)).is_err() {
+            for (j, &dj) in live.iter().enumerate().take(i) {
+                shared.workers[dj].ctx.admission.release(fp.bytes(j));
+            }
+            return false;
+        }
+    }
+    true
+}
+
+/// Route one popped work item. Returns `false` when the head could not
+/// be admitted yet (it is back at the head; the dispatcher waits for a
+/// release before retrying — strict FIFO, no starvation).
+fn dispatch(shared: &Arc<Shared>, routers: &Arc<JobQueue>, work: QueuedWork) -> bool {
+    let live = shared.live_workers(&work.excluded);
+    let metrics = shared.node.metrics().clone();
+    if live.is_empty() {
+        let msg = format!(
+            "no live workers left after {} attempt(s) (excluded: {:?})",
+            work.attempts + 1,
+            work.excluded
+        );
+        fail_work(work, msg);
+        shared.front.complete();
+        return true;
+    }
+    // Clone the routed payload out first so `work` can move into the
+    // execution closures below.
+    enum Routed {
+        Dist(Arc<dyn DistWork>),
+        Pod(Arc<dyn PodWork>),
+    }
+    let routed = match &work.kind {
+        WorkKind::Dist(req) => Routed::Dist(req.clone()),
+        WorkKind::Pod(pod) => Routed::Pod(pod.clone()),
+    };
+    match routed {
+        Routed::Dist(req) => {
+            let fp = match req.footprint(shared.cfg.tile, live.len()) {
+                Ok(fp) => fp,
+                Err(e) => {
+                    req.fail(format!("footprint failed: {e}"));
+                    shared.front.complete();
+                    return true;
+                }
+            };
+            // Fail fast when a live device could never hold its share —
+            // waiting for releases would deadlock the queue head.
+            for (i, &dev) in live.iter().enumerate() {
+                if fp.bytes(i) > shared.workers[dev].ctx.admission.capacity() {
+                    req.fail(format!(
+                        "declared footprint ({} B) exceeds device {dev}'s capacity",
+                        fp.bytes(i)
+                    ));
+                    shared.front.complete();
+                    return true;
+                }
+            }
+            if !reserve_all(shared, &live, &fp) {
+                let mut st = shared.front.state.lock().unwrap();
+                st.queue.push_front(work);
+                st.in_flight -= 1;
+                return false;
+            }
+            metrics.add_mpmd_routed(work.enqueued.elapsed().as_nanos() as u64);
+            let shared2 = shared.clone();
+            let _ = routers.submit(move || {
+                let queue_wait = work.enqueued.elapsed();
+                match req.execute(&shared2, &live, &fp, queue_wait) {
+                    ExecResult::Published => shared2.front.complete(),
+                    ExecResult::Requeue(dead) => {
+                        shared2.node.metrics().add_mpmd_requeue();
+                        shared2.front.requeue(work, &dead);
+                    }
+                }
+            });
+            true
+        }
+        Routed::Pod(pod) => {
+            let bytes = pod.bytes();
+            let mut cands: Vec<usize> = live
+                .iter()
+                .copied()
+                .filter(|&d| bytes <= shared.workers[d].ctx.admission.capacity())
+                .collect();
+            if cands.is_empty() {
+                pod.fail(format!("pod of {bytes} B exceeds every live device's capacity"));
+                shared.front.complete();
+                return true;
+            }
+            // Pin to the least-loaded live worker that admits the pod.
+            cands.sort_by_key(|&d| (shared.workers[d].queue_depth(), d));
+            let mut target = None;
+            for &d in &cands {
+                if shared.workers[d].ctx.admission.try_reserve(bytes).is_ok() {
+                    target = Some(d);
+                    break;
+                }
+            }
+            let Some(dev) = target else {
+                let mut st = shared.front.state.lock().unwrap();
+                st.queue.push_front(work);
+                st.in_flight -= 1;
+                return false;
+            };
+            metrics.add_mpmd_routed(work.enqueued.elapsed().as_nanos() as u64);
+            let job: WorkerJob = Box::new(move |ctx| {
+                if !ctx.alive() {
+                    // Draining a dead worker: hand the pod back.
+                    ctx.admission.release(bytes);
+                    ctx.node.metrics().add_mpmd_requeue();
+                    ctx.front.requeue(work, &[ctx.device]);
+                    return;
+                }
+                let queue_wait = work.enqueued.elapsed();
+                match pod.run(ctx, queue_wait) {
+                    PodOutcome::Published => {
+                        ctx.admission.release(bytes);
+                        ctx.front.complete();
+                    }
+                    PodOutcome::WorkerDead => {
+                        ctx.admission.release(bytes);
+                        ctx.node.metrics().add_mpmd_requeue();
+                        ctx.front.requeue(work, &[ctx.device]);
+                    }
+                }
+            });
+            if let Err(job) = shared.workers[dev].send(job) {
+                // Raced a death between admission and send: run the job
+                // in dead mode right here — it releases the reservation
+                // and re-queues the pod with this device excluded.
+                job(&shared.workers[dev].ctx);
+            }
+            true
+        }
+    }
+}
+
+fn dispatcher_loop(shared: Arc<Shared>, small: Arc<Mutex<MpmdSmall>>, routers: Arc<JobQueue>) {
+    loop {
+        // Frontend-driven coalescer tick: dwell-expired buckets flush
+        // even when no further submit arrives (the serve-loop twin of
+        // the SPMD service's background flusher thread).
+        flush_due_buckets(&shared, &small);
+        let popped = {
+            let mut st = shared.front.state.lock().unwrap();
+            if st.shutdown && st.queue.is_empty() && st.in_flight == 0 {
+                return;
+            }
+            match st.queue.pop_front() {
+                Some(w) => {
+                    st.in_flight += 1;
+                    Some(w)
+                }
+                None => {
+                    let _unused =
+                        shared.front.cv.wait_timeout(st, Duration::from_millis(10)).unwrap();
+                    None
+                }
+            }
+        };
+        let Some(work) = popped else { continue };
+        if !dispatch(&shared, &routers, work) {
+            // Head-of-line wait: capacity frees when something
+            // completes; the release paths notify this condvar.
+            let st = shared.front.state.lock().unwrap();
+            let _unused = shared.front.cv.wait_timeout(st, Duration::from_millis(5)).unwrap();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Small-solve coalescing state
+// ---------------------------------------------------------------------------
+
+/// One queued small request, type-erased so one planner holds every
+/// dtype (the builder installed by the first push downcasts back).
+type SmallPayload = Box<dyn Any + Send>;
+
+/// Turns a flushed bucket + its payloads into a routable pod.
+type PodBuilder = dyn Fn(FlushedBucket, Vec<SmallPayload>) -> QueuedWork + Send + Sync;
+
+struct MpmdSmallJob<S: Scalar> {
+    a: Matrix<S>,
+    rhs: Option<Matrix<S>>,
+    slot: Slot<Matrix<S>>,
+}
+
+struct MpmdSmall {
+    planner: BatchPlanner,
+    payloads: HashMap<u64, SmallPayload>,
+    builders: HashMap<BucketKey, Arc<PodBuilder>>,
+    /// Memoized `Predictor::batched_wins` per (routine, dtype, class).
+    decisions: HashMap<(SmallRoutine, DType, u32), bool>,
+}
+
+fn pod_builder<S: Scalar>(routine: SmallRoutine) -> Arc<PodBuilder> {
+    Arc::new(move |bucket: FlushedBucket, payloads: Vec<SmallPayload>| {
+        let mut systems = Vec::with_capacity(payloads.len());
+        let mut rhss = Vec::with_capacity(payloads.len());
+        let mut slots = Vec::with_capacity(payloads.len());
+        for p in payloads {
+            let job = *p.downcast::<MpmdSmallJob<S>>().expect("bucket key pins the dtype");
+            systems.push(job.a);
+            rhss.push(job.rhs);
+            slots.push(job.slot);
+        }
+        QueuedWork::fresh(WorkKind::Pod(Arc::new(PodReq::<S> {
+            routine,
+            systems,
+            rhss,
+            slots,
+            waits: bucket.waits_ns,
+        })))
+    })
+}
+
+fn collect_ready(st: &mut MpmdSmall, bucket: FlushedBucket, out: &mut Vec<QueuedWork>) {
+    let builder = st.builders.get(&bucket.key).expect("builder installed on first push").clone();
+    let payloads: Vec<SmallPayload> =
+        bucket.ids.iter().map(|id| st.payloads.remove(id).expect("payload stored")).collect();
+    out.push(builder(bucket, payloads));
+}
+
+fn flush_due_buckets(shared: &Shared, small: &Mutex<MpmdSmall>) {
+    let now_ns = shared.sim_now_ns();
+    let mut ready = Vec::new();
+    {
+        let mut st = small.lock().unwrap();
+        for key in st.planner.due(now_ns) {
+            if let Some(bucket) = st.planner.flush(key, now_ns) {
+                collect_ready(&mut st, bucket, &mut ready);
+            }
+        }
+    }
+    for w in ready {
+        if let Err(w) = shared.front.enqueue(w) {
+            fail_work(w, "mpmd service is shut down".to_string());
+        } else {
+            shared.node.metrics().add_service_submission();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The service
+// ---------------------------------------------------------------------------
+
+/// The MPMD serving subsystem: one simulated process per GPU behind a
+/// rank-0 frontend (see the module docs and `crate::serve`).
+pub struct MpmdService {
+    shared: Arc<Shared>,
+    small: Arc<Mutex<MpmdSmall>>,
+    routers: Option<Arc<JobQueue>>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+    worker_threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl MpmdService {
+    /// Serve `node` with the default configuration.
+    pub fn new(node: SimNode) -> Self {
+        Self::with_config(node, MpmdConfig::default())
+    }
+
+    /// Serve `node`: spawns one worker process per device, the router
+    /// pool, and the rank-0 dispatcher.
+    pub fn with_config(node: SimNode, cfg: MpmdConfig) -> Self {
+        let registry = Arc::new(IpcRegistry::new());
+        let front = Arc::new(FrontShared::new());
+        let mut workers = Vec::new();
+        let mut worker_threads = Vec::new();
+        for d in 0..node.num_devices() {
+            let ctx = WorkerCtx::new(
+                d,
+                node.clone(),
+                registry.clone(),
+                cfg.model.clone(),
+                front.clone(),
+            );
+            let (link, thread) = spawn_worker(ctx);
+            workers.push(link);
+            worker_threads.push(thread);
+        }
+        let policy = cfg.policy;
+        let routers_n = cfg.routers.max(1);
+        let shared = Arc::new(Shared {
+            node,
+            registry,
+            cfg,
+            workers,
+            front,
+            caller: AddressSpace(0),
+        });
+        let small = Arc::new(Mutex::new(MpmdSmall {
+            planner: BatchPlanner::new(policy),
+            payloads: HashMap::new(),
+            builders: HashMap::new(),
+            decisions: HashMap::new(),
+        }));
+        let routers = Arc::new(JobQueue::new(routers_n));
+        let dispatcher = {
+            let shared = shared.clone();
+            let small = small.clone();
+            let routers = routers.clone();
+            std::thread::spawn(move || dispatcher_loop(shared, small, routers))
+        };
+        MpmdService {
+            shared,
+            small,
+            routers: Some(routers),
+            dispatcher: Some(dispatcher),
+            worker_threads,
+        }
+    }
+
+    fn enqueue_dist<S: Scalar>(&self, req: DistReq<S>) -> Result<()> {
+        let work = QueuedWork::fresh(WorkKind::Dist(Arc::new(req)));
+        if let Err(w) = self.shared.front.enqueue(work) {
+            fail_work(w, "mpmd service is shut down".to_string());
+            return Err(Error::config("mpmd service is shut down"));
+        }
+        self.shared.node.metrics().add_service_submission();
+        Ok(())
+    }
+
+    fn validate_square<S: Scalar>(a: &Matrix<S>) -> Result<usize> {
+        let n = a.require_square()?;
+        if n == 0 {
+            return Err(Error::shape("cannot solve an empty system"));
+        }
+        Ok(n)
+    }
+
+    /// Distributed Cholesky factor: returns the factored matrix.
+    pub fn submit_potrf<S: Scalar>(&self, a: Matrix<S>) -> Result<ServiceHandle<Matrix<S>>> {
+        Self::validate_square(&a)?;
+        let (handle, slot) = handle_pair::<Matrix<S>>();
+        self.enqueue_dist(DistReq {
+            routine: DistRoutine::Potrf,
+            a: Arc::new(a),
+            rhs: None,
+            slot: DistSlot::Mat(slot),
+        })?;
+        Ok(handle)
+    }
+
+    /// Distributed solve `A·X = B` (factor + two-sweep solve).
+    pub fn submit_potrs<S: Scalar>(
+        &self,
+        a: Matrix<S>,
+        b: Matrix<S>,
+    ) -> Result<ServiceHandle<Matrix<S>>> {
+        let n = Self::validate_square(&a)?;
+        if b.rows() != n {
+            return Err(Error::shape(format!("rhs has {} rows, matrix is {n}x{n}", b.rows())));
+        }
+        let (handle, slot) = handle_pair::<Matrix<S>>();
+        self.enqueue_dist(DistReq {
+            routine: DistRoutine::Potrs,
+            a: Arc::new(a),
+            rhs: Some(b),
+            slot: DistSlot::Mat(slot),
+        })?;
+        Ok(handle)
+    }
+
+    /// Distributed SPD/HPD inverse.
+    pub fn submit_potri<S: Scalar>(&self, a: Matrix<S>) -> Result<ServiceHandle<Matrix<S>>> {
+        Self::validate_square(&a)?;
+        let (handle, slot) = handle_pair::<Matrix<S>>();
+        self.enqueue_dist(DistReq {
+            routine: DistRoutine::Potri,
+            a: Arc::new(a),
+            rhs: None,
+            slot: DistSlot::Mat(slot),
+        })?;
+        Ok(handle)
+    }
+
+    /// Distributed eigendecomposition: ascending eigenvalues +
+    /// eigenvector columns.
+    pub fn submit_syevd<S: Scalar>(
+        &self,
+        a: Matrix<S>,
+    ) -> Result<ServiceHandle<(Vec<S::Real>, Matrix<S>)>> {
+        Self::validate_square(&a)?;
+        let (handle, slot) = handle_pair::<(Vec<S::Real>, Matrix<S>)>();
+        self.enqueue_dist(DistReq {
+            routine: DistRoutine::Syevd,
+            a: Arc::new(a),
+            rhs: None,
+            slot: DistSlot::Eig(slot),
+        })?;
+        Ok(handle)
+    }
+
+    /// Submit a small solve: coalesced into a worker-pinned pod when
+    /// the cost model says batching wins, routed distributed otherwise
+    /// — the MPMD twin of `SolveService::submit_small`.
+    pub fn submit_small<S: Scalar>(
+        &self,
+        routine: SmallRoutine,
+        a: Matrix<S>,
+        rhs: Option<Matrix<S>>,
+    ) -> Result<ServiceHandle<Matrix<S>>> {
+        let n = Self::validate_square(&a)?;
+        match (routine, &rhs) {
+            (SmallRoutine::Potrs, None) => {
+                return Err(Error::config("potrs needs a right-hand side"));
+            }
+            (SmallRoutine::Potrs, Some(b)) if b.rows() != n => {
+                return Err(Error::shape(format!(
+                    "rhs has {} rows, matrix is {n}x{n}",
+                    b.rows()
+                )));
+            }
+            (SmallRoutine::Potrf | SmallRoutine::Potri, Some(_)) => {
+                return Err(Error::config("only potrs takes a right-hand side"));
+            }
+            _ => {}
+        }
+        // Capacity gate: a pinned pod concentrates the whole bucket on
+        // ONE device (unlike the SPMD round-robin pod), so the
+        // worst-case bucket is `max_batch` systems of this size-class
+        // on a single device's VRAM.
+        let nrhs = rhs.as_ref().map(|b| b.cols()).unwrap_or(1);
+        let e = S::DTYPE.size_of();
+        let class = size_class(n) as usize;
+        let per_system = class * class * e
+            + if matches!(routine, SmallRoutine::Potrs) { class * nrhs * e } else { 0 };
+        let worst_bucket = self.shared.cfg.policy.max_batch * per_system;
+        let max_cap = self
+            .shared
+            .workers
+            .iter()
+            .map(|w| w.ctx.admission.capacity())
+            .max()
+            .unwrap_or(0);
+        let coalesce = worst_bucket <= max_cap
+            && n <= self.shared.cfg.policy.small_dim
+            && self.batched_decision::<S>(routine, class);
+        if !coalesce {
+            // The latency bound holds on every submit, whichever path
+            // this request takes.
+            self.flush_due_small();
+            let dist = match routine {
+                SmallRoutine::Potrf => DistRoutine::Potrf,
+                SmallRoutine::Potrs => DistRoutine::Potrs,
+                SmallRoutine::Potri => DistRoutine::Potri,
+            };
+            let (handle, slot) = handle_pair::<Matrix<S>>();
+            self.enqueue_dist(DistReq {
+                routine: dist,
+                a: Arc::new(a),
+                rhs,
+                slot: DistSlot::Mat(slot),
+            })?;
+            return Ok(handle);
+        }
+
+        let (handle, slot) = handle_pair::<Matrix<S>>();
+        let key = BucketKey::new(routine, S::DTYPE, n);
+        let now_ns = self.shared.sim_now_ns();
+        let mut ready = Vec::new();
+        {
+            let mut st = self.small.lock().unwrap();
+            st.builders.entry(key).or_insert_with(|| pod_builder::<S>(routine));
+            let (id, flushed) = st.planner.push(key, now_ns);
+            st.payloads.insert(id, Box::new(MpmdSmallJob::<S> { a, rhs, slot }));
+            if let Some(bucket) = flushed {
+                collect_ready(&mut st, bucket, &mut ready);
+            }
+            for k in st.planner.due(now_ns) {
+                if let Some(bucket) = st.planner.flush(k, now_ns) {
+                    collect_ready(&mut st, bucket, &mut ready);
+                }
+            }
+        }
+        for w in ready {
+            // Submission accounting is pod-granular, matching the SPMD
+            // flusher's one-enqueue-per-bucket semantics.
+            if let Err(w) = self.shared.front.enqueue(w) {
+                fail_work(w, "mpmd service is shut down".to_string());
+            } else {
+                self.shared.node.metrics().add_service_submission();
+            }
+        }
+        Ok(handle)
+    }
+
+    fn batched_decision<S: Scalar>(&self, routine: SmallRoutine, class: usize) -> bool {
+        let key = (routine, S::DTYPE, class as u32);
+        let mut st = self.small.lock().unwrap();
+        if let Some(&win) = st.decisions.get(&key) {
+            return win;
+        }
+        let predictor = Predictor {
+            model: self.shared.cfg.model.clone(),
+            topo: self.shared.node.topology().clone(),
+            dtype: S::DTYPE,
+        };
+        let win = predictor.batched_wins(
+            routine.name(),
+            class,
+            1,
+            self.shared.cfg.tile,
+            self.shared.workers.len(),
+            self.shared.cfg.policy.max_batch,
+        );
+        st.decisions.insert(key, win);
+        win
+    }
+
+    /// Flush buckets whose oldest request dwelled past the bound.
+    pub fn flush_due_small(&self) {
+        flush_due_buckets(&self.shared, &self.small);
+    }
+
+    /// Force-flush every pending coalescer bucket.
+    pub fn flush_small(&self) {
+        let now_ns = self.shared.sim_now_ns();
+        let mut ready = Vec::new();
+        {
+            let mut st = self.small.lock().unwrap();
+            for bucket in st.planner.flush_all(now_ns) {
+                collect_ready(&mut st, bucket, &mut ready);
+            }
+        }
+        for w in ready {
+            if let Err(w) = self.shared.front.enqueue(w) {
+                fail_work(w, "mpmd service is shut down".to_string());
+            } else {
+                self.shared.node.metrics().add_service_submission();
+            }
+        }
+    }
+
+    /// Small solves waiting in the coalescer (not yet flushed).
+    pub fn pending_small(&self) -> usize {
+        self.small.lock().unwrap().planner.pending()
+    }
+
+    /// Simulate worker `d`'s process dying right now: its staged
+    /// shards vanish (exports revoked), pending mailbox work re-routes,
+    /// and in-flight solves that touched its shards re-queue with the
+    /// device excluded.
+    pub fn kill_worker(&self, d: usize) -> Result<()> {
+        let link = self
+            .shared
+            .workers
+            .get(d)
+            .ok_or(Error::InvalidDevice { device: d, count: self.shared.workers.len() })?;
+        link.kill();
+        Ok(())
+    }
+
+    /// Arm the chaos fault injector: the next job worker `d` processes
+    /// panics, exercising the panic-death path end to end.
+    pub fn inject_worker_fault(&self, d: usize) -> Result<()> {
+        let link = self
+            .shared
+            .workers
+            .get(d)
+            .ok_or(Error::InvalidDevice { device: d, count: self.shared.workers.len() })?;
+        link.ctx.arm_fault();
+        Ok(())
+    }
+
+    /// Devices whose worker process is alive.
+    pub fn alive_workers(&self) -> Vec<usize> {
+        self.shared.live_workers(&[])
+    }
+
+    /// Per-worker mailbox depths (the queue-depth gauge behind the
+    /// `mpmd_peak_worker_queue` metric).
+    pub fn worker_queue_depths(&self) -> Vec<usize> {
+        self.shared.workers.iter().map(|w| w.queue_depth()).collect()
+    }
+
+    /// Per-worker reserved bytes (each worker's own accountant).
+    pub fn reserved(&self) -> Vec<usize> {
+        self.shared.workers.iter().map(|w| w.ctx.admission.reserved()).collect()
+    }
+
+    /// Per-worker reservation high-water marks.
+    pub fn peak_reserved(&self) -> Vec<usize> {
+        self.shared.workers.iter().map(|w| w.ctx.admission.peak_reserved()).collect()
+    }
+
+    /// Requests queued at the frontend (not yet dispatched).
+    pub fn pending(&self) -> usize {
+        self.shared.front.state.lock().unwrap().queue.len()
+    }
+
+    /// Requests dispatched and not yet resolved.
+    pub fn in_flight(&self) -> usize {
+        self.shared.front.state.lock().unwrap().in_flight
+    }
+
+    /// The node this service serves.
+    pub fn node(&self) -> &SimNode {
+        &self.shared.node
+    }
+
+    /// The active configuration.
+    pub fn config(&self) -> &MpmdConfig {
+        &self.shared.cfg
+    }
+
+    /// The IPC registry (per-process open/export accounting lives
+    /// here; see `crate::ipc`).
+    pub fn registry(&self) -> &Arc<IpcRegistry> {
+        &self.shared.registry
+    }
+
+    /// Block until every submitted request has resolved (published to
+    /// its handle) — partial coalescer buckets are force-flushed first.
+    pub fn drain(&self) {
+        self.flush_small();
+        let mut st = self.shared.front.state.lock().unwrap();
+        while !st.queue.is_empty() || st.in_flight > 0 {
+            let (guard, _) =
+                self.shared.front.cv.wait_timeout(st, Duration::from_millis(20)).unwrap();
+            st = guard;
+        }
+    }
+}
+
+impl Drop for MpmdService {
+    fn drop(&mut self) {
+        // Flush stragglers so their waiters resolve, then let the
+        // dispatcher drain the queue to zero before stopping anything.
+        self.flush_small();
+        {
+            let mut st = self.shared.front.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.front.cv.notify_all();
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        // Routers next (their jobs need live workers), workers last.
+        self.routers = None;
+        for w in &self.shared.workers {
+            w.close();
+        }
+        for t in self.worker_threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}

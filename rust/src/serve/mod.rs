@@ -1,0 +1,40 @@
+//! MPMD serving subsystem: one (simulated) process per GPU, shards
+//! published over IPC, a rank-0 frontend with failure-aware routing —
+//! the paper's Figure 2 (right) as a *production* serving shape.
+//!
+//! `coordinator::mpmd::gather_pointers_mpmd` demonstrates the
+//! single-caller pointer gather once; this module runs the whole
+//! deployment persistently:
+//!
+//! * **Workers** ([`worker`]) — one per device, each a simulated
+//!   process: its own [`crate::ipc::AddressSpace`], its own mailbox
+//!   thread, its own [`crate::coordinator::DeviceAdmission`] accountant
+//!   over exactly its device's VRAM. A worker stages its shard of every
+//!   distributed solve locally (building the very panel bytes a
+//!   single-caller scatter would — bitwise), exports it through the
+//!   **bound** [`crate::ipc::IpcRegistry`] lifecycle (freeing a shard
+//!   revokes its handles), and sweeps coalesced pods pinned to its
+//!   device.
+//! * **Frontend** ([`frontend`]) — rank 0 owns the FIFO request queue
+//!   and routes: distributed solves open the workers' handles and run
+//!   `potrf/potrs/potri/syevd_dist` as the single caller (paying the
+//!   modeled `cudaIpc` round-trip that
+//!   [`Predictor::mpmd_overhead`](crate::costmodel::Predictor::mpmd_overhead)
+//!   projects); small solves coalesce and pin one pod per worker.
+//!   Worker death — panic or [`MpmdService::kill_worker`] — loses no
+//!   requests: in-flight work re-queues with the dead device excluded
+//!   and completes on the remaining ones, over a degraded
+//!   [`crate::device::SimNode::subset`] view.
+//!
+//! Numerics are bitwise-identical to the SPMD
+//! [`crate::coordinator::SolveService`] path (same layouts, same
+//! solver schedule — pinned in `rust/tests/mpmd_serve.rs` for all four
+//! dtypes); see the SPMD-vs-MPMD decision table in
+//! [`crate::coordinator`]. `examples/mpmd_serve.rs` drives the full
+//! story, `benches/serving.rs` measures the two fronts side by side,
+//! and EXPERIMENTS.md records the overhead table.
+
+mod frontend;
+mod worker;
+
+pub use frontend::{DistRoutine, MpmdConfig, MpmdService};

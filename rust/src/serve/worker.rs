@@ -1,0 +1,340 @@
+//! The simulated one-process-per-GPU worker.
+//!
+//! Each worker models one MPMD rank: its own [`AddressSpace`] (raw
+//! pointers from other ranks are meaningless to it), its own thread
+//! draining a FIFO **mailbox** of jobs, its own [`DeviceAdmission`]
+//! accountant over exactly one device's VRAM, and a ledger of the
+//! shard allocations it has staged and exported. The rank-0 frontend
+//! (`super::frontend`) talks to workers two ways, mirroring the real
+//! split:
+//!
+//! * **data-plane work** — shard staging and pinned pod sweeps — goes
+//!   through the mailbox and executes on the worker's thread, as it
+//!   would in the worker's process;
+//! * **control-plane bookkeeping** — reserve/release on the admission
+//!   accountant, teardown of staged shards — is invoked directly on
+//!   the shared [`WorkerCtx`] (the RPC the real frontend would issue),
+//!   which keeps the lock graph trivially acyclic.
+//!
+//! ## Death
+//!
+//! A worker dies two ways: a **panic** inside a mailbox job (including
+//! the injected fault used by the chaos tests), or an explicit
+//! [`WorkerLink::kill`] from the frontend. Both paths converge on the
+//! same simulation of process death: the alive flag drops, every
+//! staged allocation is freed (its exported handles revoked first —
+//! the revoke-on-free discipline), and the mailbox is drained with
+//! each pending job run in **dead mode**. The job contract makes dead
+//! mode safe: every job checks [`WorkerCtx::alive`] first and behaves
+//! as the dead process would — staging jobs simply drop their reply
+//! channel (the frontend sees the disconnect), pod jobs hand their
+//! request back to the frontend for re-queueing on another device.
+//! In-flight distributed solves that were reading this worker's shards
+//! start failing on the freed allocations; the router classifies the
+//! error against the live set and re-queues with this device excluded.
+
+use super::frontend::FrontShared;
+use crate::coordinator::DeviceAdmission;
+use crate::costmodel::GpuCostModel;
+use crate::device::{DevPtr, SimNode};
+use crate::ipc::{AddressSpace, IpcRegistry};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A job executed on the worker's thread (its simulated process).
+/// Contract: the job MUST check [`WorkerCtx::alive`] first and take its
+/// dead-mode path when the worker has died (see the module docs).
+pub(crate) type WorkerJob = Box<dyn FnOnce(&WorkerCtx) + Send + 'static>;
+
+/// One shard allocation this worker has staged (and possibly exported;
+/// reclaim revokes **every** handle over the pointer, so none is
+/// recorded here).
+pub(crate) struct StagedAlloc {
+    /// The node view the allocation was made through (a subset view in
+    /// degraded mode) — pointers are node-relative, so frees must go
+    /// through the same view.
+    pub(crate) node: SimNode,
+    pub(crate) ptr: DevPtr,
+}
+
+/// The worker's shared state: everything both its own thread and the
+/// frontend (admission RPCs, teardown, kill) may touch.
+pub(crate) struct WorkerCtx {
+    /// Physical device ordinal this worker owns (its rank).
+    pub(crate) device: usize,
+    /// The worker's virtual address space.
+    pub(crate) space: AddressSpace,
+    /// The full node (pods run here, pinned to `device`).
+    pub(crate) node: SimNode,
+    pub(crate) registry: Arc<IpcRegistry>,
+    /// This worker's own Footprint admission over its device's VRAM.
+    pub(crate) admission: DeviceAdmission,
+    /// Cost model for worker-executed sweeps.
+    pub(crate) model: GpuCostModel,
+    alive: AtomicBool,
+    /// Fault injection: the next mailbox job panics (chaos testing).
+    fault: AtomicBool,
+    /// Shards staged by this worker, freed wholesale on death.
+    staged: Mutex<Vec<StagedAlloc>>,
+    /// Wake-ups back to the rank-0 frontend (releases, death, requeues).
+    pub(crate) front: Arc<FrontShared>,
+}
+
+impl WorkerCtx {
+    pub(crate) fn new(
+        device: usize,
+        node: SimNode,
+        registry: Arc<IpcRegistry>,
+        model: GpuCostModel,
+        front: Arc<FrontShared>,
+    ) -> Self {
+        let capacity = node
+            .memory_reports()
+            .get(device)
+            .map(|r| r.capacity)
+            .expect("worker device exists");
+        WorkerCtx {
+            device,
+            space: AddressSpace(device),
+            admission: DeviceAdmission::new(device, capacity),
+            node,
+            registry,
+            model,
+            alive: AtomicBool::new(true),
+            fault: AtomicBool::new(false),
+            staged: Mutex::new(Vec::new()),
+            front,
+        }
+    }
+
+    /// Whether the worker process is still alive.
+    pub(crate) fn alive(&self) -> bool {
+        self.alive.load(Ordering::SeqCst)
+    }
+
+    /// Arm the fault injector: the next mailbox job panics.
+    pub(crate) fn arm_fault(&self) {
+        self.fault.store(true, Ordering::SeqCst);
+    }
+
+    fn take_fault(&self) -> bool {
+        self.fault.swap(false, Ordering::SeqCst)
+    }
+
+    /// Record a staged (and possibly exported) shard allocation. If
+    /// the process died while the staging job was mid-flight (a kill
+    /// racing the job's entry alive-check), the ledger may already have
+    /// been drained — reclaim immediately so a dead worker never holds
+    /// a live shard, whatever the interleaving.
+    pub(crate) fn record_staged(&self, alloc: StagedAlloc) {
+        self.staged.lock().unwrap().push(alloc);
+        if !self.alive() {
+            self.free_all_staged();
+        }
+    }
+
+    /// Tear down one staged shard: revoke its export (revoke-on-free),
+    /// free the allocation, and wake the frontend. Idempotent — a shard
+    /// already reclaimed by death is skipped.
+    pub(crate) fn release_staged(&self, ptr: DevPtr) {
+        let entry = {
+            let mut staged = self.staged.lock().unwrap();
+            let idx = staged.iter().position(|s| s.ptr == ptr);
+            idx.map(|i| staged.swap_remove(i))
+        };
+        if let Some(s) = entry {
+            self.reclaim(s);
+        }
+        self.front.notify();
+    }
+
+    /// Free every staged shard — the process-death path (also the
+    /// clean-shutdown sweep; by then the list is normally empty).
+    pub(crate) fn free_all_staged(&self) {
+        let drained: Vec<StagedAlloc> = std::mem::take(&mut *self.staged.lock().unwrap());
+        for s in drained {
+            self.reclaim(s);
+        }
+    }
+
+    fn reclaim(&self, s: StagedAlloc) {
+        // Revoke-on-free: every handle this worker exported over the
+        // pointer dies before the memory does (the bound-export
+        // liveness check would only catch *subsequent* opens lazily,
+        // and without the accounting below).
+        let revoked = self.registry.revoke_all_for(self.space, s.ptr);
+        if revoked > 0 {
+            self.node.metrics().add_ipc_revokes(revoked as u64);
+        }
+        let _ = s.node.free(s.ptr);
+    }
+
+    fn mark_dead(&self) {
+        self.alive.store(false, Ordering::SeqCst);
+    }
+}
+
+struct MailboxState {
+    jobs: VecDeque<WorkerJob>,
+    closed: bool,
+}
+
+/// The worker's FIFO mailbox (the message channel into its process).
+pub(crate) struct Mailbox {
+    state: Mutex<MailboxState>,
+    cv: Condvar,
+}
+
+impl Mailbox {
+    fn new() -> Self {
+        Mailbox {
+            state: Mutex::new(MailboxState { jobs: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a job; returns the resulting depth, or `Err(job)` when
+    /// the mailbox is closed (worker dead/shut down).
+    fn push(&self, job: WorkerJob) -> Result<usize, WorkerJob> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(job);
+        }
+        st.jobs.push_back(job);
+        let depth = st.jobs.len();
+        drop(st);
+        self.cv.notify_one();
+        Ok(depth)
+    }
+
+    /// Blocking pop; `None` once the mailbox is closed and empty.
+    fn pop(&self) -> Option<WorkerJob> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(job) = st.jobs.pop_front() {
+                return Some(job);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Close the mailbox and take every pending job.
+    fn close_and_drain(&self) -> Vec<WorkerJob> {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        let jobs = st.jobs.drain(..).collect();
+        drop(st);
+        self.cv.notify_all();
+        jobs
+    }
+
+    fn depth(&self) -> usize {
+        self.state.lock().unwrap().jobs.len()
+    }
+}
+
+/// The frontend's handle to one worker.
+pub(crate) struct WorkerLink {
+    pub(crate) ctx: Arc<WorkerCtx>,
+    mailbox: Arc<Mailbox>,
+}
+
+impl WorkerLink {
+    /// Send a job to the worker's mailbox. `Err(job)` when the worker
+    /// is dead or shut down (the caller re-routes).
+    pub(crate) fn send(&self, job: WorkerJob) -> Result<(), WorkerJob> {
+        if !self.ctx.alive() {
+            return Err(job);
+        }
+        let depth = self.mailbox.push(job)?;
+        self.ctx.node.metrics().note_worker_queue_depth(depth as u64);
+        Ok(())
+    }
+
+    /// Jobs waiting in the mailbox (the per-worker queue depth gauge).
+    pub(crate) fn queue_depth(&self) -> usize {
+        self.mailbox.depth()
+    }
+
+    /// Whether the worker process is alive.
+    pub(crate) fn alive(&self) -> bool {
+        self.ctx.alive()
+    }
+
+    /// Simulate the worker process dying *now*: the alive flag drops,
+    /// its staged shards vanish (handles revoked, memory freed — any
+    /// in-flight solve reading them starts failing), and every pending
+    /// mailbox job runs in dead mode on the calling thread (staging
+    /// jobs drop their reply channels, pod jobs re-queue themselves).
+    pub(crate) fn kill(&self) {
+        self.ctx.mark_dead();
+        let drained = self.mailbox.close_and_drain();
+        self.ctx.free_all_staged();
+        for job in drained {
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(&self.ctx)));
+        }
+        self.ctx.front.notify();
+    }
+
+    /// Clean shutdown: close the mailbox so the worker thread exits
+    /// once it has drained (used by the service's `Drop`, after the
+    /// request queue is empty).
+    pub(crate) fn close(&self) {
+        let drained = self.mailbox.close_and_drain();
+        for job in drained {
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(&self.ctx)));
+        }
+    }
+}
+
+/// Spawn a worker: its context, link, and process thread.
+pub(crate) fn spawn_worker(ctx: WorkerCtx) -> (WorkerLink, std::thread::JoinHandle<()>) {
+    let ctx = Arc::new(ctx);
+    let mailbox = Arc::new(Mailbox::new());
+    let thread = {
+        let ctx = ctx.clone();
+        let mailbox = mailbox.clone();
+        std::thread::spawn(move || worker_loop(&ctx, &mailbox))
+    };
+    (WorkerLink { ctx, mailbox }, thread)
+}
+
+fn worker_loop(ctx: &Arc<WorkerCtx>, mailbox: &Arc<Mailbox>) {
+    while let Some(job) = mailbox.pop() {
+        if ctx.take_fault() {
+            // Injected crash (chaos testing): the process dies *before*
+            // touching this job. Die first, then run the job — and the
+            // backlog — in dead mode so nothing is silently dropped
+            // (staging jobs drop their reply channels, pods re-queue).
+            die(ctx, mailbox, Some(job));
+            return;
+        }
+        let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(ctx)));
+        if ran.is_err() {
+            // The process died mid-job (the job itself unwound, so its
+            // waiters are handled by the disconnect/requeue contract);
+            // tear down and drain the backlog in dead mode.
+            die(ctx, mailbox, None);
+            return;
+        }
+    }
+}
+
+/// The one death sequence (panic, injected fault): mark dead, free the
+/// staged shards (revoking their exports — any in-flight solve reading
+/// them starts failing), run the pending jobs in dead mode, wake rank 0.
+fn die(ctx: &Arc<WorkerCtx>, mailbox: &Arc<Mailbox>, current: Option<WorkerJob>) {
+    ctx.mark_dead();
+    ctx.free_all_staged();
+    if let Some(job) = current {
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(ctx)));
+    }
+    for j in mailbox.close_and_drain() {
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| j(ctx)));
+    }
+    ctx.front.notify();
+}

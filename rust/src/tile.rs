@@ -173,6 +173,44 @@ impl LayoutKind {
     }
 }
 
+/// Device `d`'s panel contents for `host` under `layout`, in storage
+/// order — the shard a worker process stages **locally** in MPMD mode
+/// (each worker builds and uploads only its own panel; the single
+/// caller assembles the pointers via [`DistMatrix::from_panels`]).
+/// [`DistMatrix::scatter`] uses the same function, so worker-staged
+/// panels are bitwise identical to single-caller scatters.
+pub fn build_panel<S: Scalar>(
+    layout: &LayoutKind,
+    rows: usize,
+    host: &Matrix<S>,
+    d: usize,
+) -> Vec<S> {
+    let len = layout.local_elems(rows, d);
+    let mut panel = Vec::with_capacity(len);
+    match layout {
+        LayoutKind::Contiguous(_) | LayoutKind::BlockCyclic(_) => {
+            let l = layout.column().expect("columnar kind");
+            for loc in 0..l.local_cols(d) {
+                panel.extend_from_slice(host.col(l.global_index(d, loc)));
+            }
+        }
+        LayoutKind::Grid(_) | LayoutKind::GridContig(_) => {
+            let g = layout.matrix_layout().expect("grid kind");
+            for ord in 0..g.tiles_on(d) {
+                let (tr, tc) = g.tile_at(d, ord);
+                let (h, w) = g.tile_dims(tr, tc);
+                let (r0, c0) = (g.row_dim().tile_start(tr), g.col_dim().tile_start(tc));
+                for jj in 0..w {
+                    let col = host.col(c0 + jj);
+                    panel.extend_from_slice(&col[r0..r0 + h]);
+                }
+            }
+        }
+    }
+    debug_assert_eq!(panel.len(), len);
+    panel
+}
+
 /// A matrix distributed over the simulated node.
 pub struct DistMatrix<S: Scalar> {
     node: SimNode,
@@ -205,6 +243,58 @@ impl<S: Scalar> DistMatrix<S> {
             panels.push(ptr);
         }
         Ok(DistMatrix { node: node.clone(), rows, layout, panels, _marker: std::marker::PhantomData })
+    }
+
+    /// Assemble a distributed matrix over panels that were allocated
+    /// and staged **elsewhere** — the single-caller step of the MPMD
+    /// pipeline: each worker process stages its own shard
+    /// ([`build_panel`]) and exports its pointer; the caller opens the
+    /// foreign handles and views them as one matrix. The caller does
+    /// **not** own the panels: drop them back to their owners with
+    /// [`DistMatrix::into_panels`] instead of letting `Drop` free
+    /// worker-owned memory.
+    pub fn from_panels(
+        node: &SimNode,
+        rows: usize,
+        layout: LayoutKind,
+        panels: Vec<DevPtr>,
+    ) -> Result<Self> {
+        if layout.num_devices() != node.num_devices() {
+            return Err(Error::layout(format!(
+                "layout spans {} devices but node has {}",
+                layout.num_devices(),
+                node.num_devices()
+            )));
+        }
+        if panels.len() != node.num_devices() {
+            return Err(Error::layout(format!(
+                "{} panels for a {}-device node",
+                panels.len(),
+                node.num_devices()
+            )));
+        }
+        if !layout.rows_match(rows) {
+            return Err(Error::shape(format!(
+                "grid layout distributes a different row count than the matrix's {rows}"
+            )));
+        }
+        for (d, p) in panels.iter().enumerate() {
+            if p.device != d {
+                return Err(Error::layout(format!(
+                    "panel {d} points at device {} — pointers must be device-ordered",
+                    p.device
+                )));
+            }
+        }
+        Ok(DistMatrix { node: node.clone(), rows, layout, panels, _marker: std::marker::PhantomData })
+    }
+
+    /// Release the panel pointers **without freeing them** — the
+    /// counterpart of [`DistMatrix::from_panels`] for panels owned by
+    /// worker processes. After this the matrix is empty and its `Drop`
+    /// is a no-op.
+    pub fn into_panels(mut self) -> Vec<DevPtr> {
+        std::mem::take(&mut self.panels)
     }
 
     /// Scatter a host matrix onto the devices in the given layout
@@ -248,30 +338,7 @@ impl<S: Scalar> DistMatrix<S> {
 
     /// Device `d`'s panel contents for `host`, in storage order.
     fn build_panel_from(&self, host: &Matrix<S>, d: usize) -> Vec<S> {
-        let len = self.layout.local_elems(self.rows, d);
-        let mut panel = Vec::with_capacity(len);
-        match &self.layout {
-            LayoutKind::Contiguous(_) | LayoutKind::BlockCyclic(_) => {
-                let l = self.layout.column().expect("columnar kind");
-                for loc in 0..l.local_cols(d) {
-                    panel.extend_from_slice(host.col(l.global_index(d, loc)));
-                }
-            }
-            LayoutKind::Grid(_) | LayoutKind::GridContig(_) => {
-                let g = self.layout.matrix_layout().expect("grid kind");
-                for ord in 0..g.tiles_on(d) {
-                    let (tr, tc) = g.tile_at(d, ord);
-                    let (h, w) = g.tile_dims(tr, tc);
-                    let (r0, c0) = (g.row_dim().tile_start(tr), g.col_dim().tile_start(tc));
-                    for jj in 0..w {
-                        let col = host.col(c0 + jj);
-                        panel.extend_from_slice(&col[r0..r0 + h]);
-                    }
-                }
-            }
-        }
-        debug_assert_eq!(panel.len(), len);
-        panel
+        build_panel(&self.layout, self.rows, host, d)
     }
 
     /// Inverse of [`DistMatrix::build_panel_from`].
@@ -560,6 +627,37 @@ mod tests {
         assert_eq!(b[(2, 2)], 1.0);
         assert_eq!(b[(5, 3)], 1.0);
         assert_eq!(b[(1, 2)], a[(1, 2)]); // untouched rows intact
+    }
+
+    #[test]
+    fn from_panels_assembles_worker_staged_shards() {
+        // The MPMD staging pipeline: each "worker" builds + uploads its
+        // own panel; the assembled view gathers bitwise identically to
+        // a single-caller scatter, and into_panels leaves ownership
+        // with the workers (nothing freed).
+        let node = node4();
+        let a = Matrix::<f64>::random(10, 14, 7);
+        let layout = Layout1D::BlockCyclic(BlockCyclic1D::new(14, 3, 4).unwrap());
+        let mut ptrs = Vec::new();
+        for d in 0..4 {
+            let panel = build_panel(&layout, 10, &a, d);
+            let ptr = node.alloc_scalars::<f64>(d, panel.len()).unwrap();
+            if !panel.is_empty() {
+                node.write_slice(ptr, 0, &panel).unwrap();
+            }
+            ptrs.push(ptr);
+        }
+        let dm = DistMatrix::<f64>::from_panels(&node, 10, layout, ptrs.clone()).unwrap();
+        assert_eq!(dm.gather().unwrap(), a);
+        let back = dm.into_panels();
+        assert_eq!(back, ptrs);
+        // Nothing was freed: the allocations are still live.
+        for p in &back {
+            assert!(node.ptr_exists(*p));
+            node.free(*p).unwrap();
+        }
+        // Validation: panel count and device order are enforced.
+        assert!(DistMatrix::<f64>::from_panels(&node, 10, layout, vec![]).is_err());
     }
 
     #[test]

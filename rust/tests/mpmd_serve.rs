@@ -1,0 +1,323 @@
+//! MPMD serving subsystem: end-to-end, failure-mode, and parity tests.
+//!
+//! Pins the acceptance criteria of the serve layer:
+//! * an MPMD end-to-end solve (worker-staged shards → IPC export/open →
+//!   single-caller dist solve → publish → gather) is **bitwise
+//!   identical** to the SPMD `SolveService` path for all four dtypes;
+//! * ≥2 solves run in flight across the workers;
+//! * killing a worker mid-workload loses no requests — its solves
+//!   re-queue with the device excluded and complete on the rest;
+//! * a worker panic (injected fault) re-queues the in-flight solve the
+//!   same way;
+//! * IPC misuse (self-open, double-open, stale-after-free) surfaces as
+//!   typed `Error::Ipc`.
+
+use jaxmg::batch::SmallRoutine;
+use jaxmg::coordinator::{SmallConfig, SolveService};
+use jaxmg::ipc::{AddressSpace, IpcRegistry};
+use jaxmg::linalg::{tol_for, FrobNorm, Matrix};
+use jaxmg::prelude::*;
+use jaxmg::scalar::{c32, c64};
+use jaxmg::serve::{MpmdConfig, MpmdService};
+use std::time::{Duration, Instant};
+
+const TILE: usize = 8;
+const NDEV: usize = 4;
+
+/// The SPMD reference: the same solve through `SolveService`'s
+/// distributed route (small_dim = 0 forces every request down it).
+fn spmd_potrs<S: Scalar>(a: &Matrix<S>, b: &Matrix<S>) -> Matrix<S> {
+    let node = SimNode::new_uniform(NDEV, 1 << 24);
+    let mut cfg = SmallConfig::with_tile(TILE);
+    cfg.policy.small_dim = 0;
+    let svc = SolveService::with_small_config(node, 2, cfg);
+    let h = svc.submit_small(SmallRoutine::Potrs, a.clone(), Some(b.clone())).unwrap();
+    let (x, _) = h.wait();
+    svc.drain();
+    x
+}
+
+fn mpmd_potrs<S: Scalar>(a: &Matrix<S>, b: &Matrix<S>) -> Matrix<S> {
+    let node = SimNode::new_uniform(NDEV, 1 << 24);
+    let svc = MpmdService::with_config(node.clone(), MpmdConfig::with_tile(TILE));
+    let h = svc.submit_potrs(a.clone(), b.clone()).unwrap();
+    let (x, stats) = h.wait();
+    assert_eq!(stats.batch_size, 1);
+    svc.drain();
+    // The full IPC choreography actually ran: ndev-1 exports, each
+    // opened and closed by rank 0, nothing leaked.
+    let m = node.metrics().snapshot();
+    assert_eq!(m.ipc_exports, (NDEV - 1) as u64);
+    assert_eq!(m.ipc_opens, (NDEV - 1) as u64);
+    assert_eq!(m.ipc_open_balance(), 0, "caller leaked ipc mappings");
+    assert_eq!(m.ipc_revokes, (NDEV - 1) as u64, "shard frees must revoke exports");
+    assert_eq!(svc.reserved(), vec![0; NDEV], "reservations must drain to zero");
+    for rep in node.memory_reports() {
+        assert_eq!(rep.used, 0, "worker leaked device memory");
+    }
+    x
+}
+
+fn mpmd_matches_spmd_bitwise<S: Scalar>(seed: u64) {
+    let n = 24;
+    let a = Matrix::<S>::spd_random(n, seed);
+    let b = Matrix::<S>::random(n, 2, seed + 100);
+    let spmd = spmd_potrs(&a, &b);
+    let mpmd = mpmd_potrs(&a, &b);
+    assert_eq!(spmd.as_slice(), mpmd.as_slice(), "MPMD numerics diverge from SPMD");
+}
+
+#[test]
+fn mpmd_matches_spmd_bitwise_f32() {
+    mpmd_matches_spmd_bitwise::<f32>(11);
+}
+
+#[test]
+fn mpmd_matches_spmd_bitwise_f64() {
+    mpmd_matches_spmd_bitwise::<f64>(12);
+}
+
+#[test]
+fn mpmd_matches_spmd_bitwise_c64() {
+    mpmd_matches_spmd_bitwise::<c32>(13);
+}
+
+#[test]
+fn mpmd_matches_spmd_bitwise_c128() {
+    mpmd_matches_spmd_bitwise::<c64>(14);
+}
+
+#[test]
+fn mpmd_potri_and_syevd_end_to_end() {
+    let node = SimNode::new_uniform(3, 1 << 24);
+    let svc = MpmdService::with_config(node, MpmdConfig::with_tile(4));
+    let a = Matrix::<f64>::spd_random(18, 5);
+    let inv_h = svc.submit_potri(a.clone()).unwrap();
+    let eig_h = svc.submit_syevd(Matrix::<f64>::spd_diag(16)).unwrap();
+    let (inv, _) = inv_h.wait();
+    assert!(a.matmul(&inv).rel_err(&Matrix::eye(18)) < tol_for::<f64>(18) * 10.0);
+    let ((vals, _vecs), _) = eig_h.wait();
+    for (i, v) in vals.iter().enumerate() {
+        assert!((v - (i + 1) as f64).abs() < 1e-10, "eigenvalue {i} wrong: {v}");
+    }
+    svc.drain();
+}
+
+#[test]
+fn concurrent_solves_share_the_workers() {
+    // ≥2 solves in flight across workers (acceptance criterion).
+    let node = SimNode::new_uniform(NDEV, 1 << 26);
+    let svc = MpmdService::with_config(node, MpmdConfig::with_tile(TILE));
+    let n = 96;
+    let a = Matrix::<f64>::spd_random(n, 3);
+    let xt = Matrix::<f64>::random(n, 1, 4);
+    let b = a.matmul(&xt);
+    let handles: Vec<_> =
+        (0..8).map(|_| svc.submit_potrs(a.clone(), b.clone()).unwrap()).collect();
+    // Two router threads drain the queue concurrently; with 8 solves of
+    // this size the 2-in-flight window is wide. Poll until observed.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut peak = 0;
+    while Instant::now() < deadline {
+        peak = peak.max(svc.in_flight());
+        if peak >= 2 {
+            break;
+        }
+        std::thread::yield_now();
+    }
+    assert!(peak >= 2, "never saw 2 solves in flight (peak {peak})");
+    for h in handles {
+        let (x, _) = h.wait();
+        assert!(x.rel_err(&xt) < tol_for::<f64>(n) * 10.0);
+    }
+    svc.drain();
+    assert_eq!(svc.reserved(), vec![0; NDEV]);
+}
+
+#[test]
+fn killing_a_worker_loses_no_requests() {
+    let node = SimNode::new_uniform(NDEV, 1 << 26);
+    let svc = MpmdService::with_config(node.clone(), MpmdConfig::with_tile(TILE));
+    let n = 64;
+    let systems: Vec<(Matrix<f64>, Matrix<f64>, Matrix<f64>)> = (0..6)
+        .map(|i| {
+            let a = Matrix::<f64>::spd_random(n, 40 + i);
+            let xt = Matrix::<f64>::random(n, 1, 50 + i);
+            let b = a.matmul(&xt);
+            (a, xt, b)
+        })
+        .collect();
+    let handles: Vec<_> = systems
+        .iter()
+        .map(|(a, _, b)| svc.submit_potrs(a.clone(), b.clone()).unwrap())
+        .collect();
+    // Kill a worker mid-workload: its staged shards vanish, its pending
+    // mailbox drains dead, in-flight solves touching it re-queue.
+    svc.kill_worker(2).unwrap();
+    assert_eq!(svc.alive_workers(), vec![0, 1, 3]);
+    for (h, (_, xt, _)) in handles.into_iter().zip(&systems) {
+        let (x, _) = h.wait();
+        assert!(x.rel_err(xt) < tol_for::<f64>(n) * 10.0, "request lost/corrupted by the kill");
+    }
+    svc.drain();
+    assert_eq!(svc.reserved(), vec![0; NDEV], "kill leaked reservations");
+    // Post-kill traffic keeps flowing on the remaining devices.
+    let (a, xt, b) = &systems[0];
+    let (x, _) = svc.submit_potrs(a.clone(), b.clone()).unwrap().wait();
+    assert!(x.rel_err(xt) < tol_for::<f64>(n) * 10.0);
+    svc.drain();
+}
+
+#[test]
+fn worker_panic_mid_solve_requeues_with_device_excluded() {
+    let node = SimNode::new_uniform(3, 1 << 26);
+    let svc = MpmdService::with_config(node.clone(), MpmdConfig::with_tile(TILE));
+    // Arm the chaos fault: worker 1's process dies on its next job —
+    // which is this solve's shard staging, i.e. mid-solve.
+    svc.inject_worker_fault(1).unwrap();
+    let n = 48;
+    let a = Matrix::<f64>::spd_random(n, 7);
+    let xt = Matrix::<f64>::random(n, 2, 8);
+    let b = a.matmul(&xt);
+    let (x, _) = svc.submit_potrs(a, b).unwrap().wait();
+    assert!(x.rel_err(&xt) < tol_for::<f64>(n) * 10.0, "re-queued solve wrong");
+    assert_eq!(svc.alive_workers(), vec![0, 2], "worker 1 must be dead");
+    let m = node.metrics().snapshot();
+    assert!(m.mpmd_requeues >= 1, "the failure must be visible as a re-queue");
+    svc.drain();
+    assert_eq!(svc.reserved(), vec![0; 3]);
+}
+
+#[test]
+fn killed_worker_requeues_pinned_pods() {
+    let node = SimNode::new_uniform(2, 1 << 24);
+    let mut cfg = MpmdConfig::with_tile(16);
+    cfg.policy.max_batch = 2;
+    cfg.policy.max_dwell_ns = u64::MAX;
+    let svc = MpmdService::with_config(node, cfg);
+    // Worker 0 dies on its next job; the flushed pod (pinned to the
+    // least-loaded live worker = 0) runs in dead mode and re-queues
+    // onto worker 1.
+    svc.inject_worker_fault(0).unwrap();
+    let a1 = Matrix::<f64>::spd_random(10, 1);
+    let a2 = Matrix::<f64>::spd_random(12, 2);
+    let h1 = svc.submit_small(SmallRoutine::Potrf, a1.clone(), None).unwrap();
+    let h2 = svc.submit_small(SmallRoutine::Potrf, a2.clone(), None).unwrap();
+    let (l1, _) = h1.wait();
+    let (l2, _) = h2.wait();
+    assert_eq!(l1.as_slice(), jaxmg::linalg::potrf(&a1).unwrap().as_slice());
+    assert_eq!(l2.as_slice(), jaxmg::linalg::potrf(&a2).unwrap().as_slice());
+    assert_eq!(svc.alive_workers(), vec![1]);
+    svc.drain();
+    assert_eq!(svc.reserved(), vec![0, 0]);
+}
+
+#[test]
+fn mpmd_small_solves_coalesce_into_pinned_pods() {
+    let node = SimNode::new_uniform(NDEV, 1 << 24);
+    let mut cfg = MpmdConfig::with_tile(16);
+    cfg.policy.max_batch = 4;
+    cfg.policy.max_dwell_ns = u64::MAX;
+    let svc = MpmdService::with_config(node.clone(), cfg);
+    let systems: Vec<Matrix<f64>> =
+        (0..4).map(|i| Matrix::spd_random(10 + i, 70 + i as u64)).collect();
+    let rhss: Vec<Matrix<f64>> =
+        (0..4).map(|i| Matrix::random(10 + i, 2, 80 + i as u64)).collect();
+    let handles: Vec<_> = systems
+        .iter()
+        .zip(&rhss)
+        .map(|(a, b)| svc.submit_small(SmallRoutine::Potrs, a.clone(), Some(b.clone())).unwrap())
+        .collect();
+    assert_eq!(svc.pending_small(), 0, "the fourth submit fills the bucket");
+    for (i, h) in handles.into_iter().enumerate() {
+        let (x, stats) = h.wait();
+        let l = jaxmg::linalg::potrf(&systems[i]).unwrap();
+        let x_ref = jaxmg::linalg::potrs_from_chol(&l, &rhss[i]).unwrap();
+        assert!(x.rel_err(&x_ref) < tol_for::<f64>(16), "request {i} wrong");
+        assert_eq!(stats.batch_size, 4, "request {i} missed its bucket");
+    }
+    svc.drain();
+    let m = node.metrics().snapshot();
+    assert_eq!(m.batch_buckets, 1);
+    assert_eq!(m.batch_solves, 4);
+    assert!(m.mpmd_routed >= 1);
+    assert_eq!(svc.reserved(), vec![0; NDEV]);
+}
+
+#[test]
+fn frontend_tick_flushes_idle_mpmd_buckets() {
+    // The serve-loop twin of the SPMD background flusher: a lone
+    // small request must resolve with no further service calls.
+    let node = SimNode::new_uniform(2, 1 << 22);
+    let mut cfg = MpmdConfig::with_tile(16);
+    cfg.policy.max_batch = 32;
+    cfg.policy.max_dwell_ns = u64::MAX;
+    cfg.policy.max_wall_dwell = Duration::from_millis(10);
+    let svc = MpmdService::with_config(node, cfg);
+    let h = svc.submit_small(SmallRoutine::Potrf, Matrix::<f64>::spd_random(8, 1), None).unwrap();
+    let (l, stats) = h.wait();
+    assert_eq!(l.rows(), 8);
+    assert_eq!(stats.batch_size, 1);
+    assert_eq!(svc.pending_small(), 0);
+}
+
+#[test]
+fn ipc_misuse_is_typed_error_ipc() {
+    let node = SimNode::new_uniform(2, 1 << 20);
+    let reg = IpcRegistry::new();
+    let ptr = node.alloc(1, 128).unwrap();
+    let h = reg.export_bound(AddressSpace(1), &node, ptr).unwrap();
+    // Self-open: CUDA forbids opening one's own export.
+    match reg.open(AddressSpace(1), h) {
+        Err(Error::Ipc(msg)) => assert!(msg.contains("exporting process"), "{msg}"),
+        other => panic!("self-open must be Error::Ipc, got {other:?}"),
+    }
+    // Double-open in one space.
+    reg.open(AddressSpace(0), h).unwrap();
+    match reg.open(AddressSpace(0), h) {
+        Err(Error::Ipc(msg)) => assert!(msg.contains("already open"), "{msg}"),
+        other => panic!("double-open must be Error::Ipc, got {other:?}"),
+    }
+    reg.close(AddressSpace(0), h).unwrap();
+    // Stale-after-free: the hardening bugfix.
+    node.free(ptr).unwrap();
+    match reg.open(AddressSpace(0), h) {
+        Err(Error::Ipc(msg)) => assert!(msg.contains("stale"), "{msg}"),
+        other => panic!("stale open must be Error::Ipc, got {other:?}"),
+    }
+}
+
+#[test]
+fn mpmd_overhead_is_charged_onto_the_timeline() {
+    // The same potrs through both fronts: the MPMD projection carries
+    // the cudaIpc round-trip the predictor pins, the SPMD one does not.
+    let n = 32;
+    let a = Matrix::<f64>::spd_random(n, 21);
+    let b = Matrix::<f64>::ones(n, 1);
+
+    let spmd_node = SimNode::new_uniform(NDEV, 1 << 24);
+    {
+        let mut cfg = SmallConfig::with_tile(TILE);
+        cfg.policy.small_dim = 0;
+        let svc = SolveService::with_small_config(spmd_node.clone(), 1, cfg);
+        svc.submit_small(SmallRoutine::Potrs, a.clone(), Some(b.clone())).unwrap().wait();
+        svc.drain();
+    }
+    let mpmd_node = SimNode::new_uniform(NDEV, 1 << 24);
+    {
+        let svc = MpmdService::with_config(mpmd_node.clone(), MpmdConfig::with_tile(TILE));
+        svc.submit_potrs(a, b).unwrap().wait();
+        svc.drain();
+    }
+    let gap = mpmd_node.sim_time() - spmd_node.sim_time();
+    let model = jaxmg::costmodel::Predictor {
+        model: jaxmg::costmodel::GpuCostModel::h200(),
+        topo: mpmd_node.topology().clone(),
+        dtype: jaxmg::scalar::DType::F64,
+    };
+    let predicted = model.mpmd_overhead(NDEV);
+    assert!(
+        (gap - predicted).abs() < 1e-12,
+        "charged MPMD overhead {gap} != predicted {predicted}"
+    );
+}
