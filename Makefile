@@ -15,11 +15,17 @@
 #   make bench-serve   serving-front bench in smoke/test mode: SPMD vs
 #                      MPMD parity + worker-kill drill (CI-friendly,
 #                      part of `make check`)
+#   make bench-grid    grid-stack bench in smoke/test mode: 2D
+#                      conversion hops, grid-native potrf (bitwise vs
+#                      1D + strict lookahead win), the 1D-vs-2D
+#                      analytic ladder, and 2D-aware serving — then
+#                      drives examples/syevd_grid (CI-friendly, part
+#                      of `make check`)
 
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test check clippy fmt python-tests test-xla bench bench-redist bench-batch bench-serve e2e artifacts clean
+.PHONY: build test check clippy fmt python-tests test-xla bench bench-redist bench-batch bench-serve bench-grid e2e artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -42,7 +48,7 @@ python-tests:
 		echo "skipping python tests (pytest/jax/hypothesis not importable)"; \
 	fi
 
-check: build test clippy fmt python-tests bench-serve
+check: build test clippy fmt python-tests bench-serve bench-grid
 
 # Artifact-gated XLA integration tests (fail with a pointed message
 # when artifacts are absent — that failure mode is itself under test).
@@ -76,6 +82,13 @@ bench-batch:
 # worker-kill drill. Smoke mode shrinks shapes, keeps every assertion.
 bench-serve:
 	SERVE_BENCH_SMOKE=1 $(CARGO) bench --bench serving
+
+# The grid bench is the 2D acceptance harness: grid-native potrf
+# bitwise vs 1D, the strict grid lookahead win, the analytic 1D-vs-2D
+# ladder, and 2D-aware serving; it then drives the syevd grid example.
+bench-grid:
+	GRID_BENCH_SMOKE=1 $(CARGO) bench --bench grid
+	$(CARGO) run --release --example syevd_grid
 
 e2e:
 	$(CARGO) run --release --example e2e_driver

@@ -1,0 +1,183 @@
+//! The grid stack bench: 2D redistribution hops, grid-native potrf
+//! (the §5 execution model), and the 1D-vs-2D analytic ladder.
+//!
+//! Four sections, each asserting the invariants it prints:
+//!
+//! 1. **2D redistribution** — the tile-cycle / re-tiling hops from
+//!    `benches/redistribution.rs`'s grid section, kept as a conversion
+//!    smoke matrix for the grid compute layouts the solvers now run on.
+//! 2. **grid-native potrf** (simulated) — the same factor on the 1D
+//!    layout and a 2×2 grid: bitwise-identical numerics, the row/column
+//!    ring traffic split, and the strict lookahead-beats-barrier win on
+//!    the grid schedule.
+//! 3. **analytic ladder** — `Predictor::{potrf2d, potrs2d}` vs the 1D
+//!    formulas at paper scale: where 2D starts winning, and what
+//!    `Predictor::best_grid` selects per shape.
+//! 4. **grid serving** — a `SolveService` pinned to a 2×2 grid serving
+//!    requests bitwise-identically to the 1D service.
+//!
+//! `GRID_BENCH_SMOKE=1` shrinks the shapes for `make bench-grid` (CI
+//! test mode); every asserted invariant is identical.
+
+use jaxmg::coordinator::{DistRoutine, SmallConfig, SolveService};
+use jaxmg::costmodel::{GpuCostModel, Predictor};
+use jaxmg::layout::{BlockCyclic1D, BlockCyclic2D, ContiguousGrid2D, Redistributor};
+use jaxmg::linalg::Matrix;
+use jaxmg::prelude::*;
+use jaxmg::scalar::DType;
+use jaxmg::solver::{potrf_dist, Ctx};
+use jaxmg::tile::{DistMatrix, LayoutKind};
+use std::time::Instant;
+
+fn main() {
+    let smoke = std::env::var_os("GRID_BENCH_SMOKE").is_some();
+
+    // ---- 1. 2D redistribution hops -----------------------------------
+    println!("== 2D tile grid: conversion hops into the compute layouts ==\n");
+    println!(
+        "{:>22} {:>6} {:>6} {:>8} {:>8} {:>12} {:>9}",
+        "conversion", "N", "tile", "cycles", "tiles", "path", "wall[ms]"
+    );
+    let n2 = if smoke { 256 } else { 1024 };
+    let tile = if smoke { 32 } else { 64 };
+    let node = SimNode::new_uniform(4, 1 << 30);
+    let a = Matrix::<f32>::random(n2, n2, 99);
+    let shard2d = LayoutKind::GridContig(ContiguousGrid2D::new(n2, n2, tile, tile, 2, 2).unwrap());
+    let grid22 = LayoutKind::Grid(BlockCyclic2D::new(n2, n2, tile, tile, 2, 2).unwrap());
+    let grid41 = LayoutKind::Grid(BlockCyclic2D::new(n2, n2, tile, tile, 4, 1).unwrap());
+    let cyc1d = LayoutKind::BlockCyclic(BlockCyclic1D::new(n2, tile, 4).unwrap());
+    let mut dm = DistMatrix::scatter(&node, &a, shard2d).unwrap();
+    for (label, target, expect_in_place) in [
+        ("2D shard → 2D cyclic", grid22, true),
+        ("2×2 → 4×1 regrid", grid41, true),
+        ("4×1 → 1D re-tiling", cyc1d, false),
+        ("1D → 2×2 re-tiling", grid22, false),
+    ] {
+        let t0 = Instant::now();
+        let plan = Redistributor::convert(&mut dm, target).unwrap();
+        let wall = t0.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "{label:>22} {n2:>6} {tile:>6} {:>8} {:>8} {:>12} {wall:>9.2}",
+            plan.nontrivial_cycles,
+            plan.tiles_moved,
+            if plan.in_place { "in-place" } else { "out-of-place" },
+        );
+        assert_eq!(plan.in_place, expect_in_place, "{label}: wrong path");
+        assert_eq!(dm.gather().unwrap(), a, "{label} corrupted content");
+    }
+    drop(dm);
+
+    // ---- 2. grid-native potrf (simulated) -----------------------------
+    println!("\n== grid-native potrf: 1D (1x4) vs 2x2, 4 devices, f64 ==\n");
+    println!(
+        "{:>6} {:>6} {:>8} {:>9} {:>14} {:>12} {:>12}",
+        "N", "tile", "layout", "schedule", "makespan[µs]", "row[KiB]", "col[KiB]"
+    );
+    let (gn, gt) = if smoke { (32usize, 4usize) } else { (64, 8) };
+    let model = GpuCostModel::h200();
+    let am = Matrix::<f64>::spd_random(gn, 0xD15C0 + gn as u64);
+    let mut factors: Vec<Matrix<f64>> = Vec::new();
+    let mut makespans = [[0.0f64; 2]; 2]; // [layout][schedule]
+    for (li, grid) in [false, true].into_iter().enumerate() {
+        for (si, look) in [0usize, 2].into_iter().enumerate() {
+            let node = SimNode::new_uniform(4, 1 << 28);
+            let backend = SolverBackend::<f64>::Native;
+            let ctx = Ctx::with_pipeline(&node, &model, &backend, PipelineConfig::lookahead(look));
+            let lay = if grid {
+                LayoutKind::Grid(BlockCyclic2D::new(gn, gn, gt, gt, 2, 2).unwrap())
+            } else {
+                LayoutKind::BlockCyclic(BlockCyclic1D::new(gn, gt, 4).unwrap())
+            };
+            let mut dm = DistMatrix::scatter(&node, &am, lay).unwrap();
+            node.reset_accounting();
+            potrf_dist(&ctx, &mut dm).unwrap();
+            let m = node.metrics().snapshot();
+            makespans[li][si] = node.sim_time();
+            println!(
+                "{gn:>6} {gt:>6} {:>8} {:>9} {:>14.3} {:>12.1} {:>12.1}",
+                if grid { "2x2" } else { "1x4" },
+                if look == 0 { "barrier" } else { "look(2)" },
+                node.sim_time() * 1e6,
+                m.grid_row_bytes as f64 / 1024.0,
+                m.grid_col_bytes as f64 / 1024.0,
+            );
+            if grid {
+                assert!(m.grid_row_bytes > 0 && m.grid_col_bytes > 0);
+                assert_eq!(m.grid_solves, 1);
+            } else {
+                assert_eq!(m.grid_solves, 0);
+            }
+            factors.push(dm.gather().unwrap());
+        }
+    }
+    for f in &factors[1..] {
+        assert_eq!(
+            factors[0].as_slice(),
+            f.as_slice(),
+            "layouts/schedules must agree bitwise on the factor"
+        );
+    }
+    assert!(
+        makespans[1][1] < makespans[1][0],
+        "grid lookahead {} must strictly beat grid barrier {}",
+        makespans[1][1],
+        makespans[1][0]
+    );
+
+    // ---- 3. analytic ladder -------------------------------------------
+    println!("\n== projected potrf/potrs makespans (f64, T_A=1024, 4 devices) ==\n");
+    println!(
+        "{:>8} {:>12} {:>12} {:>12} {:>12} {:>10}",
+        "N", "potrf 1D[s]", "potrf 2x2", "potrs 1D[s]", "potrs 2x2", "best_grid"
+    );
+    let p4 = Predictor::h200(4, DType::F64);
+    let ladder: &[usize] =
+        if smoke { &[4096, 16384, 65536] } else { &[4096, 16384, 65536, 131072] };
+    for &n in ladder {
+        let t = 1024;
+        let pf1 = p4.potrf(n, t, 4);
+        let pf2 = p4.potrf2d(n, t, 2, 2);
+        let ps1 = p4.potrs(n, t, 4, 1);
+        let ps2 = p4.potrs2d(n, t, 2, 2, 1);
+        let bg = p4.best_grid("potrf", n, 0, t, 4);
+        println!(
+            "{n:>8} {pf1:>12.4} {pf2:>12.4} {ps1:>12.4} {ps2:>12.4} {:>7}x{}",
+            bg.0, bg.1
+        );
+        if n >= 16384 {
+            assert!(pf2 < pf1, "2x2 potrf must beat 1D at n={n}");
+            assert!(ps2 < ps1, "2x2 potrs must beat 1D at n={n}");
+            assert!(bg.0 > 1, "the selector must go 2D at n={n}");
+        }
+        // p = 1 degenerates bitwise to the 1D formulas.
+        assert_eq!(p4.potrf2d(n, t, 1, 4), p4.potrf(n, t, 4));
+        assert_eq!(p4.potrs2d(n, t, 1, 4, 1), p4.potrs(n, t, 4, 1));
+    }
+    println!("\n(small N keeps (1,ndev): ring latency dominates; the selector flips 2D");
+    println!(" once the row-split panel trsm pays — the 2D-aware services inherit this)");
+
+    // ---- 4. grid serving ----------------------------------------------
+    println!("\n== 2D-aware serving: SolveService pinned to 2x2 vs 1D ==\n");
+    let sn = if smoke { 24 } else { 48 };
+    let stile = 8;
+    let sa = Matrix::<f64>::spd_random(sn, 7);
+    let sb = Matrix::<f64>::random(sn, 1, 8);
+    let run = |grid: Option<(usize, usize)>| -> (Matrix<f64>, (usize, usize)) {
+        let node = SimNode::new_uniform(4, 1 << 26);
+        let mut cfg = SmallConfig::with_tile(stile);
+        cfg.grid = grid;
+        let svc = SolveService::with_small_config(node, 2, cfg);
+        let (x, stats) =
+            svc.submit_dist(DistRoutine::Potrs, sa.clone(), Some(sb.clone())).unwrap().wait();
+        svc.drain();
+        (x, stats.grid)
+    };
+    let (x1, g1) = run(None);
+    let (x2, g2) = run(Some((2, 2)));
+    println!("autotuned grid {g1:?}   pinned grid {g2:?}   bitwise-equal results: true");
+    assert_eq!(g1, (1, 4), "small serving shapes stay 1D");
+    assert_eq!(g2, (2, 2));
+    assert_eq!(x1.as_slice(), x2.as_slice(), "grid serving changed numerics");
+
+    println!("\ngrid bench OK");
+}

@@ -15,14 +15,115 @@
 //!   all-devices FIFO variant in `service.rs`);
 //! * [`ServiceHandle`] / [`SolveStats`] — completion handle and
 //!   per-solve metrics, identical across fronts so callers can swap
-//!   SPMD for MPMD without touching their wait loops.
+//!   SPMD for MPMD without touching their wait loops;
+//! * [`plan_dist`] / [`DistPlan`] — the **grid-shape planner** both
+//!   fronts route distributed solves through: per request,
+//!   [`crate::costmodel::Predictor::best_grid`] picks the `P × Q`
+//!   factorization of the (live) device count with the smallest
+//!   replayed makespan (1D for small problems, 2D grids at scale), the
+//!   matching [`crate::tile::LayoutKind`] is built, and admission is
+//!   against the **exact per-device shards of the chosen shape**
+//!   ([`Footprint::for_grid`] for 2D, the routine formulas for 1D).
+//!   Sharing the planner is what keeps the SPMD and MPMD fronts
+//!   bitwise-identical: same inputs → same grid → same layout → same
+//!   solver schedule.
 
-use crate::costmodel::workspace;
+use crate::costmodel::{workspace, GpuCostModel, Predictor};
+use crate::device::NodeTopology;
 use crate::error::{Error, Result};
-use crate::layout::TileDim;
+use crate::layout::{BlockCyclic1D, BlockCyclic2D, TileDim};
 use crate::scalar::DType;
+use crate::tile::LayoutKind;
+use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
+
+/// The distributed routines the serving fronts route.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum DistRoutine {
+    /// Cholesky factor (returns the factored matrix).
+    Potrf,
+    /// Factor + solve against a replicated RHS.
+    Potrs,
+    /// Factor + Cholesky-based inverse.
+    Potri,
+    /// Symmetric/Hermitian eigendecomposition.
+    Syevd,
+}
+
+impl DistRoutine {
+    /// The cost-model / workspace-formula name of the routine.
+    pub fn name(self) -> &'static str {
+        match self {
+            DistRoutine::Potrf => "potrf",
+            DistRoutine::Potrs => "potrs",
+            DistRoutine::Potri => "potri",
+            DistRoutine::Syevd => "syevd",
+        }
+    }
+}
+
+/// One planned distributed solve: the process-grid shape the selector
+/// chose, the concrete layout on it, and the per-device admission
+/// footprint against that exact shape.
+#[derive(Clone, Debug)]
+pub struct DistPlan {
+    /// The chosen `(P, Q)` grid ( `(1, ndev)` is the 1D path).
+    pub grid: (usize, usize),
+    /// The layout solves scatter/stage into.
+    pub kind: LayoutKind,
+    /// Exact per-device workspace bytes on that layout.
+    pub footprint: Footprint,
+}
+
+/// Plan a distributed solve over `ndev` devices: pick the grid shape
+/// (`force` overrides the autotuner — `None` asks
+/// [`Predictor::best_grid`]), build the layout, and size the exact
+/// per-device footprint. `P = 1` maps to the native 1D block-cyclic
+/// layout, keeping small solves bitwise on the seed path; `P > 1`
+/// builds a square-tiled [`BlockCyclic2D`] grid admitted via
+/// [`Footprint::for_grid`].
+#[allow(clippy::too_many_arguments)]
+pub fn plan_dist(
+    routine: &str,
+    n: usize,
+    nrhs: usize,
+    tile: usize,
+    ndev: usize,
+    dtype: DType,
+    model: &GpuCostModel,
+    topo: &NodeTopology,
+    force: Option<(usize, usize)>,
+) -> Result<DistPlan> {
+    let (p, q) = match force {
+        Some((p, q)) => {
+            if p == 0 || q == 0 || p * q != ndev {
+                return Err(Error::config(format!(
+                    "forced grid {p}x{q} does not cover the {ndev} live devices"
+                )));
+            }
+            (p, q)
+        }
+        None => {
+            let predictor = Predictor { model: model.clone(), topo: topo.clone(), dtype };
+            predictor.best_grid(routine, n, nrhs, tile, ndev)
+        }
+    };
+    if p > 1 {
+        let g = BlockCyclic2D::new(n, n, tile, tile, p, q)?;
+        Ok(DistPlan {
+            grid: (p, q),
+            kind: LayoutKind::Grid(g),
+            footprint: Footprint::for_grid(routine, &g, nrhs, dtype)?,
+        })
+    } else {
+        Ok(DistPlan {
+            grid: (1, ndev),
+            kind: LayoutKind::BlockCyclic(BlockCyclic1D::new(n, tile, ndev)?),
+            footprint: Footprint::for_routine(routine, n, nrhs, tile, ndev, dtype)?,
+        })
+    }
+}
 
 /// Declared per-device workspace footprint of one solve, in bytes —
 /// what the admission accountant reserves against each device's VRAM.
@@ -153,6 +254,53 @@ impl Footprint {
     }
 }
 
+/// Memoized grid-shape selections. [`Predictor::best_grid`] replays
+/// full `O(nt²)`–`O(nt³)` schedules per candidate factorization, so
+/// the serving fronts cache the chosen shape per
+/// `(routine, dtype, n, nrhs, tile, ndev)` — repeat traffic (the
+/// serving common case) pays one map lookup on the dispatch path
+/// instead of re-running the replays. Forced grids bypass the cache
+/// (they cost nothing to "select"), and `ndev` is part of the key so a
+/// shrunk MPMD live set re-plans correctly.
+#[derive(Debug, Default)]
+pub struct GridPlanCache {
+    shapes: Mutex<HashMap<(&'static str, DType, usize, usize, usize, usize), (usize, usize)>>,
+}
+
+impl GridPlanCache {
+    /// Fresh empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// [`plan_dist`] with the selector memoized.
+    #[allow(clippy::too_many_arguments)]
+    pub fn plan(
+        &self,
+        routine: &'static str,
+        n: usize,
+        nrhs: usize,
+        tile: usize,
+        ndev: usize,
+        dtype: DType,
+        model: &GpuCostModel,
+        topo: &NodeTopology,
+        force: Option<(usize, usize)>,
+    ) -> Result<DistPlan> {
+        if force.is_some() {
+            return plan_dist(routine, n, nrhs, tile, ndev, dtype, model, topo, force);
+        }
+        let key = (routine, dtype, n, nrhs, tile, ndev);
+        let cached = self.shapes.lock().unwrap().get(&key).copied();
+        if let Some(g) = cached {
+            return plan_dist(routine, n, nrhs, tile, ndev, dtype, model, topo, Some(g));
+        }
+        let plan = plan_dist(routine, n, nrhs, tile, ndev, dtype, model, topo, None)?;
+        self.shapes.lock().unwrap().insert(key, plan.grid);
+        Ok(plan)
+    }
+}
+
 /// A single device's reservation accountant — the per-worker half of
 /// admission in MPMD mode, where each one-process-per-GPU worker admits
 /// solves against **its own** device's VRAM capacity instead of a
@@ -237,6 +385,10 @@ pub struct SolveStats {
     /// Cost-model (simulated) nanoseconds this solve dwelled in the
     /// coalescer before its bucket flushed; `0` off the batched path.
     pub coalesce_wait_ns: u64,
+    /// The `(P, Q)` process grid the solve executed on: `(1, ndev)`
+    /// for 1D distributed solves, the selector's shape for grid-native
+    /// ones, `(1, 1)` for single-device / batched-pod work.
+    pub grid: (usize, usize),
 }
 
 /// `Ok((result, stats))`, or the panic message of a solve that
@@ -337,6 +489,59 @@ mod tests {
     }
 
     #[test]
+    fn plan_dist_respects_force_and_small_shapes_stay_1d() {
+        use crate::layout::MatrixLayout;
+        let model = GpuCostModel::h200();
+        let topo = NodeTopology::nvlink_all_to_all(4);
+        // Small solve: autotuner keeps the 1D layout.
+        let p1 = plan_dist("potrs", 192, 1, 32, 4, DType::F64, &model, &topo, None).unwrap();
+        assert_eq!(p1.grid, (1, 4));
+        assert!(matches!(p1.kind, LayoutKind::BlockCyclic(_)));
+        // Forced 2x2: grid layout + exact 2D shard footprint.
+        let p2 = plan_dist("potrs", 192, 1, 32, 4, DType::F64, &model, &topo, Some((2, 2))).unwrap();
+        assert_eq!(p2.grid, (2, 2));
+        match p2.kind {
+            LayoutKind::Grid(g) => {
+                assert_eq!(g.grid(), (2, 2));
+                assert_eq!(g.tile_shape(), (32, 32));
+                assert_eq!(
+                    p2.footprint,
+                    Footprint::for_grid("potrs", &g, 1, DType::F64).unwrap()
+                );
+            }
+            other => panic!("expected a grid layout, got {other:?}"),
+        }
+        // Paper scale: the autotuner goes 2D on its own.
+        let p3 = plan_dist("potrf", 16384, 0, 256, 4, DType::F64, &model, &topo, None).unwrap();
+        assert!(p3.grid.0 > 1, "paper-scale plan stayed 1D: {:?}", p3.grid);
+        // A grid that does not cover the device count is rejected.
+        assert!(plan_dist("potrf", 64, 0, 8, 4, DType::F64, &model, &topo, Some((3, 2))).is_err());
+        assert_eq!(DistRoutine::Syevd.name(), "syevd");
+    }
+
+    #[test]
+    fn grid_plan_cache_memoizes_the_selector() {
+        let model = GpuCostModel::h200();
+        let topo = NodeTopology::nvlink_all_to_all(4);
+        let cache = GridPlanCache::new();
+        let a = cache.plan("potrs", 192, 1, 32, 4, DType::F64, &model, &topo, None).unwrap();
+        let b = cache.plan("potrs", 192, 1, 32, 4, DType::F64, &model, &topo, None).unwrap();
+        assert_eq!(a.grid, b.grid);
+        assert_eq!(a.kind, b.kind);
+        assert_eq!(a.footprint, b.footprint);
+        // The memo matches the uncached planner exactly.
+        let fresh = plan_dist("potrs", 192, 1, 32, 4, DType::F64, &model, &topo, None).unwrap();
+        assert_eq!(b.grid, fresh.grid);
+        // A different live-set size is a different key.
+        let topo3 = NodeTopology::nvlink_all_to_all(3);
+        let c = cache.plan("potrs", 192, 1, 32, 3, DType::F64, &model, &topo3, None).unwrap();
+        assert_eq!(c.grid.0 * c.grid.1, 3);
+        // Forced grids bypass the memo.
+        let f = cache.plan("potrs", 192, 1, 32, 4, DType::F64, &model, &topo, Some((2, 2))).unwrap();
+        assert_eq!(f.grid, (2, 2));
+    }
+
+    #[test]
     fn handle_pair_roundtrip() {
         let (h, slot) = handle_pair::<u32>();
         assert!(!h.is_ready());
@@ -345,6 +550,7 @@ mod tests {
             exec: Duration::ZERO,
             batch_size: 1,
             coalesce_wait_ns: 0,
+            grid: (1, 1),
         };
         publish_one(&slot, Ok((7, stats)));
         assert!(h.is_ready());

@@ -47,15 +47,38 @@
 //! [`SolveService`] runs **multiple solves in flight** on one shared
 //! node: strict-FIFO admission gated on a per-device VRAM
 //! [`Footprint`] accountant, a worker pool, and per-solve
-//! [`SolveStats`] (queue wait, execution time) on every
-//! [`ServiceHandle`]. See `examples/e2e_driver.rs` for the end-to-end
-//! serving shape and `rust/tests/properties.rs` for the
+//! [`SolveStats`] (queue wait, execution time, chosen process grid) on
+//! every [`ServiceHandle`]. See `examples/e2e_driver.rs` for the
+//! end-to-end serving shape and `rust/tests/properties.rs` for the
 //! concurrent-equals-serial and never-over-admit properties. Small
 //! solves take [`SolveService::submit_small`], which coalesces them
 //! into fused batched sweeps (`crate::batch`) when the cost model says
 //! batching wins — see `examples/batch_serve.rs`. A background dwell
 //! flusher guarantees coalescer buckets honour their latency bound
 //! even when traffic stops entirely.
+//!
+//! ## 2D-aware scheduling: how a solve picks its process grid
+//!
+//! Every distributed solve on either front flows through the shared
+//! planner ([`plan_dist`]): per request,
+//! [`crate::costmodel::Predictor::best_grid`] replays the routine's
+//! schedule on every `P × Q` factorization of the (live) device count
+//! and picks the smallest makespan — the way Lineax dispatches solvers
+//! by operator structure, with the node as the operator. The decision
+//! table the selector encodes:
+//!
+//! | regime | chosen shape | why | execution |
+//! |---|---|---|---|
+//! | small `n` (ring latency ≳ per-step work) | `(1, ndev)` — 1D | per-step ring latencies dwarf the split-panel win | the seed columnar path, **bitwise untouched** |
+//! | paper-scale `potrf/potrs/potri` | `P > 1` (tall grids as `n` grows) | the per-step panel `trsm` is the serial term and splits across `P`; panel broadcasts shrink to `O(n·T/P)` rings | grid-native solvers (`crate::solver`), admission against [`Footprint::for_grid`]'s exact 2D shards |
+//! | paper-scale `syevd` | `P > 1` | reflector collectives un-row-bind into `P` parallel row rings (§5) | the grid `syevd` path |
+//! | operator override | [`SmallConfig::grid`] / `MpmdConfig::grid` | pin a shape for A/B or regression runs | as forced (`p·q` must equal the live device count) |
+//!
+//! Grid-native numerics are **bitwise identical** to the 1D path (the
+//! host executes the same kernel sequence; only ownership and the
+//! timeline change), so the selector can flip shapes per request
+//! without changing results. The chosen shape is reported in
+//! [`SolveStats::grid`] and in the `grid_*` metrics counters.
 //!
 //! ## SPMD vs MPMD: which front to serve from
 //!
@@ -74,16 +97,22 @@
 //! | choose it when | single-tenant node, lowest latency | production serving: isolation, partial-failure tolerance, per-GPU ownership |
 //!
 //! Numerics are **bitwise identical** between the two fronts (pinned in
-//! `rust/tests/mpmd_serve.rs` for all four dtypes): the mode only
-//! changes who stages shards and how pointers reach the single caller,
-//! never the solve schedule.
+//! `rust/tests/mpmd_serve.rs` for all four dtypes, 1D and 2D-grid
+//! plans alike): both route through the same [`plan_dist`] planner —
+//! same inputs → same grid → same layout → same solve schedule; the
+//! mode only changes who stages shards (MPMD workers build and
+//! IPC-export 1D panels or 2D tile shards with the same
+//! `tile::build_panel` path) and how pointers reach the single caller.
 
 mod admit;
 mod mpmd;
 mod service;
 mod spmd;
 
-pub use admit::{DeviceAdmission, Footprint, ServiceHandle, SolveStats};
+pub use admit::{
+    plan_dist, DeviceAdmission, DistPlan, DistRoutine, Footprint, GridPlanCache, ServiceHandle,
+    SolveStats,
+};
 pub use mpmd::gather_pointers_mpmd;
 pub use service::{JobQueue, SmallConfig, SolveHandle, SolveService};
 pub use spmd::gather_pointers_spmd;

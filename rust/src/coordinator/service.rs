@@ -53,7 +53,9 @@
 //!
 //! [`Predictor::batched_wins`]: crate::costmodel::Predictor::batched_wins
 
-use super::admit::{handle_pair, panic_message, publish_failure, publish_one, Slot};
+use super::admit::{
+    handle_pair, panic_message, publish_failure, publish_one, DistRoutine, GridPlanCache, Slot,
+};
 pub use super::admit::{Footprint, ServiceHandle, SolveStats};
 use crate::batch::{
     run_bucket, BatchPlanner, BatchPolicy, BucketKey, FlushedBucket, SmallRoutine,
@@ -61,11 +63,11 @@ use crate::batch::{
 use crate::costmodel::{GpuCostModel, Predictor};
 use crate::device::SimNode;
 use crate::error::{Error, Result};
-use crate::layout::{BlockCyclic1D, TileDim};
+use crate::layout::TileDim;
 use crate::linalg::Matrix;
 use crate::scalar::{DType, Scalar};
-use crate::solver::{potrf_dist, potri_dist, potrs_dist, Ctx, SolverBackend};
-use crate::tile::{DistMatrix, LayoutKind};
+use crate::solver::{potrf_dist, potri_dist, potrs_dist, syevd_dist, Ctx, SolverBackend};
+use crate::tile::DistMatrix;
 use std::any::Any;
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
@@ -288,13 +290,20 @@ pub struct SmallConfig {
     /// Cost model behind the batched-vs-distributed dispatch decision
     /// and the sweeps' timeline charges.
     pub model: GpuCostModel,
+    /// Process-grid override for distributed solves: `None` lets
+    /// [`Predictor::best_grid`] pick the `P × Q` shape per request
+    /// (1D for small problems, 2D grids at scale); `Some((p, q))` pins
+    /// it (p·q must equal the device count).
+    ///
+    /// [`Predictor::best_grid`]: crate::costmodel::Predictor::best_grid
+    pub grid: Option<(usize, usize)>,
 }
 
 impl SmallConfig {
     /// Defaults anchored at tile size `tile` (`small_dim = 4·tile`).
     pub fn with_tile(tile: usize) -> Self {
         let policy = BatchPolicy { small_dim: 4 * tile, ..BatchPolicy::default() };
-        SmallConfig { tile, policy, model: GpuCostModel::h200() }
+        SmallConfig { tile, policy, model: GpuCostModel::h200(), grid: None }
     }
 }
 
@@ -345,6 +354,8 @@ type PendingFlush = (Arc<SmallFlusher>, FlushedBucket, Vec<SmallPayload>);
 pub struct SolveService {
     inner: Arc<ServiceInner>,
     cfg: SmallConfig,
+    /// Memoized grid-shape selections for the distributed planner.
+    plans: GridPlanCache,
     small: Arc<Mutex<SmallState>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     /// Background dwell flusher: ticks the coalescer so dwell-expired
@@ -465,7 +476,7 @@ impl SolveService {
                 run_flushes(&inner, &small, |st, ready| flush_due_into(st, now_ns, ready));
             }))
         };
-        SolveService { inner, cfg, small, workers, flusher, flusher_stop }
+        SolveService { inner, cfg, plans: GridPlanCache::new(), small, workers, flusher, flusher_stop }
     }
 
     /// Submit a solve with its declared workspace footprint. Fails fast
@@ -474,6 +485,18 @@ impl SolveService {
     pub fn submit<T: Send + 'static>(
         &self,
         footprint: Footprint,
+        f: impl FnOnce() -> T + Send + 'static,
+    ) -> Result<ServiceHandle<T>> {
+        self.submit_with_grid(footprint, (1, 1), f)
+    }
+
+    /// [`SolveService::submit`] with an explicit process-grid stamp for
+    /// the returned [`SolveStats`] — the planned-distributed paths pass
+    /// their selector's `(P, Q)` through here.
+    fn submit_with_grid<T: Send + 'static>(
+        &self,
+        footprint: Footprint,
+        grid: (usize, usize),
         f: impl FnOnce() -> T + Send + 'static,
     ) -> Result<ServiceHandle<T>> {
         let (handle, slot2) = handle_pair::<T>();
@@ -487,7 +510,7 @@ impl SolveService {
             let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
             let exec = t0.elapsed();
             metrics.add_service_completion(queue_wait.as_nanos() as u64, exec.as_nanos() as u64);
-            let stats = SolveStats { queue_wait, exec, batch_size: 1, coalesce_wait_ns: 0 };
+            let stats = SolveStats { queue_wait, exec, batch_size: 1, coalesce_wait_ns: 0, grid };
             let outcome = match out {
                 Ok(v) => Ok((v, stats)),
                 Err(p) => Err(panic_message(p)),
@@ -499,6 +522,128 @@ impl SolveService {
         });
         self.inner.enqueue_job(footprint, job)?;
         Ok(handle)
+    }
+
+    /// Submit a **distributed** solve through the grid planner: the
+    /// per-request [`Predictor::best_grid`] selector (or the
+    /// [`SmallConfig::grid`] override) picks the `P × Q` shape, the
+    /// solve is admitted against the exact per-device shards of that
+    /// shape, and runs scatter → `potrf`/`potrs`/`potri_dist` → gather
+    /// on the chosen layout — 1D for small problems (bitwise the seed
+    /// path), grid-native at scale. The chosen shape is reported in
+    /// [`SolveStats::grid`]. Eigendecompositions go through
+    /// [`SolveService::submit_syevd`] instead (their result shape
+    /// differs).
+    ///
+    /// [`Predictor::best_grid`]: crate::costmodel::Predictor::best_grid
+    pub fn submit_dist<S: Scalar>(
+        &self,
+        routine: DistRoutine,
+        a: Matrix<S>,
+        rhs: Option<Matrix<S>>,
+    ) -> Result<ServiceHandle<Matrix<S>>> {
+        let n = a.require_square()?;
+        if n == 0 {
+            return Err(Error::shape("cannot solve an empty system"));
+        }
+        match (routine, &rhs) {
+            (DistRoutine::Syevd, _) => {
+                return Err(Error::config("use submit_syevd for eigendecompositions"));
+            }
+            (DistRoutine::Potrs, None) => {
+                return Err(Error::config("potrs needs a right-hand side"));
+            }
+            (DistRoutine::Potrs, Some(b)) if b.rows() != n => {
+                return Err(Error::shape(format!(
+                    "rhs has {} rows, matrix is {n}x{n}",
+                    b.rows()
+                )));
+            }
+            (DistRoutine::Potrf | DistRoutine::Potri, Some(_)) => {
+                return Err(Error::config("only potrs takes a right-hand side"));
+            }
+            _ => {}
+        }
+        let ndev = self.inner.capacity.len();
+        let nrhs = rhs.as_ref().map(|b| b.cols()).unwrap_or(0);
+        let plan = self.plans.plan(
+            routine.name(),
+            n,
+            nrhs,
+            self.cfg.tile,
+            ndev,
+            S::DTYPE,
+            &self.cfg.model,
+            self.inner.node.topology(),
+            self.cfg.grid,
+        )?;
+        let node = self.inner.node.clone();
+        let model = self.cfg.model.clone();
+        let kind = plan.kind;
+        self.submit_with_grid(plan.footprint, plan.grid, move || -> Matrix<S> {
+            let run = || -> Result<Matrix<S>> {
+                let backend = SolverBackend::<S>::Native;
+                let ctx = Ctx::new(&node, &model, &backend);
+                let mut dm = DistMatrix::scatter(&node, &a, kind)?;
+                potrf_dist(&ctx, &mut dm)?;
+                match routine {
+                    DistRoutine::Potrf => dm.gather(),
+                    DistRoutine::Potrs => {
+                        potrs_dist(&ctx, &dm, rhs.as_ref().expect("validated above"))
+                    }
+                    DistRoutine::Potri => {
+                        potri_dist(&ctx, &mut dm)?;
+                        dm.gather()
+                    }
+                    DistRoutine::Syevd => unreachable!("rejected at submit"),
+                }
+            };
+            match run() {
+                Ok(x) => x,
+                // Surfaces on the waiter, like any panicking solve.
+                Err(e) => panic!("distributed solve failed: {e}"),
+            }
+        })
+    }
+
+    /// Distributed eigendecomposition through the same grid planner:
+    /// ascending eigenvalues + eigenvector columns.
+    pub fn submit_syevd<S: Scalar>(
+        &self,
+        a: Matrix<S>,
+    ) -> Result<ServiceHandle<(Vec<S::Real>, Matrix<S>)>> {
+        let n = a.require_square()?;
+        if n == 0 {
+            return Err(Error::shape("cannot solve an empty system"));
+        }
+        let ndev = self.inner.capacity.len();
+        let plan = self.plans.plan(
+            "syevd",
+            n,
+            0,
+            self.cfg.tile,
+            ndev,
+            S::DTYPE,
+            &self.cfg.model,
+            self.inner.node.topology(),
+            self.cfg.grid,
+        )?;
+        let node = self.inner.node.clone();
+        let model = self.cfg.model.clone();
+        let kind = plan.kind;
+        self.submit_with_grid(plan.footprint, plan.grid, move || -> (Vec<S::Real>, Matrix<S>) {
+            let run = || -> Result<(Vec<S::Real>, Matrix<S>)> {
+                let backend = SolverBackend::<S>::Native;
+                let ctx = Ctx::new(&node, &model, &backend);
+                let mut dm = DistMatrix::scatter(&node, &a, kind)?;
+                let vals = syevd_dist(&ctx, &mut dm)?;
+                Ok((vals, dm.gather()?))
+            };
+            match run() {
+                Ok(out) => out,
+                Err(e) => panic!("distributed syevd failed: {e}"),
+            }
+        })
     }
 
     /// Submit a **small** solve through the admission → coalesce →
@@ -630,44 +775,21 @@ impl SolveService {
     }
 
     /// The one-at-a-time fallback of [`SolveService::submit_small`]:
-    /// scatter → distributed solve → gather under an ordinary
-    /// [`Footprint::for_routine`] reservation.
+    /// the planner-routed distributed path ([`SolveService::submit_dist`]
+    /// — for small shapes the selector keeps the 1D layout, so this is
+    /// bitwise the seed route).
     fn submit_small_distributed<S: Scalar>(
         &self,
         routine: SmallRoutine,
         a: Matrix<S>,
         rhs: Option<Matrix<S>>,
     ) -> Result<ServiceHandle<Matrix<S>>> {
-        let n = a.rows();
-        let ndev = self.inner.capacity.len();
-        let nrhs = rhs.as_ref().map(|b| b.cols()).unwrap_or(0);
-        let fp = Footprint::for_routine(routine.name(), n, nrhs, self.cfg.tile, ndev, S::DTYPE)?;
-        let lay = LayoutKind::BlockCyclic(BlockCyclic1D::new(n, self.cfg.tile, ndev)?);
-        let node = self.inner.node.clone();
-        let model = self.cfg.model.clone();
-        self.submit(fp, move || -> Matrix<S> {
-            let run = || -> Result<Matrix<S>> {
-                let backend = SolverBackend::<S>::Native;
-                let ctx = Ctx::new(&node, &model, &backend);
-                let mut dm = DistMatrix::scatter(&node, &a, lay)?;
-                potrf_dist(&ctx, &mut dm)?;
-                match routine {
-                    SmallRoutine::Potrf => dm.gather(),
-                    SmallRoutine::Potrs => {
-                        potrs_dist(&ctx, &dm, rhs.as_ref().expect("validated above"))
-                    }
-                    SmallRoutine::Potri => {
-                        potri_dist(&ctx, &mut dm)?;
-                        dm.gather()
-                    }
-                }
-            };
-            match run() {
-                Ok(x) => x,
-                // Surfaces on the waiter, like any panicking solve.
-                Err(e) => panic!("small distributed solve failed: {e}"),
-            }
-        })
+        let dist = match routine {
+            SmallRoutine::Potrf => DistRoutine::Potrf,
+            SmallRoutine::Potrs => DistRoutine::Potrs,
+            SmallRoutine::Potri => DistRoutine::Potri,
+        };
+        self.submit_dist(dist, a, rhs)
     }
 
     /// Flush the buckets whose oldest request has dwelled past the
@@ -871,6 +993,7 @@ fn small_flusher<S: Scalar>(routine: SmallRoutine, model: GpuCostModel) -> Arc<S
                                 exec,
                                 batch_size: occupancy,
                                 coalesce_wait_ns: wait_ns,
+                                grid: (1, 1),
                             };
                             publish_one(slot, Ok((x, stats)));
                         }
@@ -916,6 +1039,7 @@ fn small_flusher<S: Scalar>(routine: SmallRoutine, model: GpuCostModel) -> Arc<S
                                         exec,
                                         batch_size: 1,
                                         coalesce_wait_ns: wait_ns,
+                                        grid: (1, 1),
                                     };
                                     publish_one(slot, Ok((x, stats)));
                                 }
@@ -1380,6 +1504,57 @@ mod tests {
         let ok = svc.submit_small(SmallRoutine::Potrf, Matrix::<f64>::spd_random(8, 4), None);
         let (_, stats) = ok.unwrap().wait();
         assert_eq!(stats.batch_size, 1);
+    }
+
+    #[test]
+    fn submit_dist_routes_through_the_grid_planner() {
+        use crate::linalg::{self, tol_for, FrobNorm};
+        let node = SimNode::new_uniform(4, 1 << 24);
+        // Pin a 2×2 grid so the grid-native path runs at a simulatable n.
+        let mut cfg = SmallConfig::with_tile(8);
+        cfg.grid = Some((2, 2));
+        let svc = SolveService::with_small_config(node.clone(), 2, cfg);
+        let a = Matrix::<f64>::spd_random(24, 91);
+        let b = Matrix::<f64>::random(24, 2, 92);
+        let h = svc.submit_dist(DistRoutine::Potrs, a.clone(), Some(b.clone())).unwrap();
+        let (x, stats) = h.wait();
+        assert_eq!(stats.grid, (2, 2));
+        let l = linalg::potrf(&a).unwrap();
+        let x_ref = linalg::potrs_from_chol(&l, &b).unwrap();
+        assert!(x.rel_err(&x_ref) < tol_for::<f64>(24) * 10.0);
+        svc.drain();
+        let m = node.metrics().snapshot();
+        assert_eq!(m.grid_solves, 2, "potrf + potrs must both run grid-native");
+        assert_eq!(m.grid_peak_p, 2);
+        assert_eq!(m.grid_peak_q, 2);
+        assert!(m.grid_row_bytes > 0 && m.grid_col_bytes > 0, "ring traffic must be tallied");
+        assert_eq!(svc.reserved(), vec![0; 4]);
+
+        // Autotuned small solves keep the 1D plan — and the grid-native
+        // result above is bitwise identical to the 1D one.
+        let node1 = SimNode::new_uniform(4, 1 << 24);
+        let mut cfg1 = SmallConfig::with_tile(8);
+        cfg1.policy.small_dim = 0;
+        let svc1 = SolveService::with_small_config(node1.clone(), 1, cfg1);
+        let (x1, s1) =
+            svc1.submit_small(SmallRoutine::Potrs, a.clone(), Some(b.clone())).unwrap().wait();
+        assert_eq!(s1.grid, (1, 4));
+        assert_eq!(node1.metrics().snapshot().grid_solves, 0);
+        assert_eq!(x.as_slice(), x1.as_slice(), "2x2 grid numerics diverge from 1D");
+
+        // submit_syevd rides the same planner; submit_dist rejects it.
+        let ((vals, _vecs), st) = svc1.submit_syevd(Matrix::<f64>::spd_diag(16)).unwrap().wait();
+        assert_eq!(st.grid, (1, 4));
+        for (i, v) in vals.iter().enumerate() {
+            assert!((v - (i + 1) as f64).abs() < 1e-10);
+        }
+        assert!(svc1.submit_dist(DistRoutine::Syevd, Matrix::<f64>::spd_diag(8), None).is_err());
+
+        // A grid override that does not cover the node is rejected.
+        let mut bad = SmallConfig::with_tile(8);
+        bad.grid = Some((3, 2));
+        let svc_bad = SolveService::with_small_config(SimNode::new_uniform(4, 1 << 22), 1, bad);
+        assert!(svc_bad.submit_dist(DistRoutine::Potrf, Matrix::<f64>::spd_random(16, 1), None).is_err());
     }
 
     #[test]

@@ -348,6 +348,404 @@ impl Predictor {
         self.redistribute(n, ndev) + stage1 + stage2 + stage3
     }
 
+    // ---- 2D grid replays (the grid-native Cholesky stack) ---------------
+
+    /// Distributed right-looking Cholesky on a `p × q` block-cyclic
+    /// grid — the analytic replay of the grid-native
+    /// `solver::potrf_dist` barrier schedule (same step structure:
+    /// diagonal potf2, `L_tt` column ring, per-grid-row panel trsm,
+    /// row/column panel rings, one fused local trailing GEMM per
+    /// device per step). `p = 1` degenerates to the 1D formula
+    /// [`Predictor::potrf`] **bitwise** (it returns it directly).
+    pub fn potrf2d(&self, n: usize, t: usize, p: usize, q: usize) -> f64 {
+        if p == 1 {
+            return self.potrf(n, t, q);
+        }
+        let nt = n.div_ceil(t);
+        let tile_len = |tt: usize| -> usize { t.min(n - tt * t) };
+        let e = self.esize();
+        let mut clk = Clocks::new(p * q);
+        let dev = |r: usize, c: usize| r * q + c;
+        for tt in 0..nt {
+            let tk = tile_len(tt);
+            let k1 = tt * t + tk;
+            let rt = tt % p;
+            let ct = tt % q;
+            let diag = dev(rt, ct);
+            clk.advance(diag, self.model.panel_time(self.dtype, GpuCostModel::flops_potf2(self.dtype, tk)));
+            let below = n - k1;
+            if below == 0 {
+                continue;
+            }
+            let mut seg = vec![0usize; p];
+            for j in (tt + 1)..nt {
+                seg[j % p] += tile_len(j);
+            }
+            let mut cols_of = vec![0usize; q];
+            for k in (tt + 1)..nt {
+                cols_of[k % q] += tile_len(k);
+            }
+            // L_tt column ring to the panel's row owners.
+            let members: Vec<usize> =
+                (0..p).filter(|&r| r != rt && seg[r] > 0).map(|r| dev(r, ct)).collect();
+            if !members.is_empty() {
+                let recv = members.len();
+                for &m in &members {
+                    clk.advance(diag, self.topo.copy_time(diag, m, tk * tk * e) / recv as f64);
+                    clk.sync(m, diag);
+                }
+            }
+            // Panel trsm split across the P row owners.
+            for r in 0..p {
+                if seg[r] > 0 {
+                    clk.advance(
+                        dev(r, ct),
+                        self.model
+                            .panel_time(self.dtype, GpuCostModel::flops_trsm(self.dtype, seg[r], tk, tk)),
+                    );
+                }
+            }
+            // Row rings: solved segments move sideways.
+            for r in 0..p {
+                if seg[r] == 0 {
+                    continue;
+                }
+                let src = dev(r, ct);
+                let members: Vec<usize> =
+                    (0..q).filter(|&c| c != ct && cols_of[c] > 0).map(|c| dev(r, c)).collect();
+                if members.is_empty() {
+                    continue;
+                }
+                let bytes = seg[r] * tk * e;
+                let recv = members.len();
+                for &m in &members {
+                    clk.advance(src, self.topo.copy_time(src, m, bytes) / recv as f64);
+                    clk.sync(m, src);
+                }
+            }
+            // Column rings: transposed panel blocks move down.
+            for c in 0..q {
+                if cols_of[c] == 0 {
+                    continue;
+                }
+                let mut blk = vec![0usize; p];
+                for k in (tt + 1)..nt {
+                    if k % q == c {
+                        blk[k % p] += tile_len(k);
+                    }
+                }
+                for (rs, &b) in blk.iter().enumerate() {
+                    if b == 0 {
+                        continue;
+                    }
+                    let src = dev(rs, c);
+                    let members: Vec<usize> =
+                        (0..p).filter(|&r| r != rs && seg[r] > 0).map(|r| dev(r, c)).collect();
+                    if members.is_empty() {
+                        continue;
+                    }
+                    let bytes = b * tk * e;
+                    let recv = members.len();
+                    for &m in &members {
+                        clk.advance(src, self.topo.copy_time(src, m, bytes) / recv as f64);
+                        clk.sync(m, src);
+                    }
+                }
+            }
+            // Fused local trailing GEMMs, split lookahead-first (the
+            // next panel column as its own launch) — mirroring the
+            // grid-native solver's charge structure.
+            let mut fl_next = vec![0u64; p * q];
+            let mut fl_rest = vec![0u64; p * q];
+            for j in (tt + 1)..nt {
+                let r = j % p;
+                for k in (tt + 1)..=j {
+                    let f = GpuCostModel::flops_gemm(self.dtype, tile_len(j), tile_len(k), tk);
+                    if k == tt + 1 {
+                        fl_next[dev(r, k % q)] += f;
+                    } else {
+                        fl_rest[dev(r, k % q)] += f;
+                    }
+                }
+            }
+            let next_w = tile_len(tt + 1);
+            let cnext = (tt + 1) % q;
+            for r in 0..p {
+                for c in 0..q {
+                    let d = dev(r, c);
+                    if fl_next[d] > 0 {
+                        let util = GpuCostModel::gemm_utilization(tk.min(seg[r]).min(next_w));
+                        clk.advance(d, self.model.launch_overhead + fl_next[d] as f64 / (self.model.rate(self.dtype) * util));
+                    }
+                    if fl_rest[d] > 0 {
+                        let rest_w = cols_of[c] - if c == cnext { next_w } else { 0 };
+                        let util = GpuCostModel::gemm_utilization(tk.min(seg[r]).min(rest_w));
+                        clk.advance(d, self.model.launch_overhead + fl_rest[d] as f64 / (self.model.rate(self.dtype) * util));
+                    }
+                }
+            }
+        }
+        clk.max()
+    }
+
+    /// Full potrs on a `p × q` grid (§2.1 redistribution + grid-native
+    /// factor + grid-native two-sweep solve). `p = 1` degenerates to
+    /// [`Predictor::potrs`] bitwise.
+    pub fn potrs2d(&self, n: usize, t: usize, p: usize, q: usize, nrhs: usize) -> f64 {
+        if p == 1 {
+            return self.potrs(n, t, q, nrhs);
+        }
+        self.redistribute(n, p * q) + self.potrf2d(n, t, p, q) + self.potrs2d_solve(n, t, p, q, nrhs)
+    }
+
+    /// The grid-native two-sweep solve replay (row-split tail updates,
+    /// column-ring solved-block broadcasts and partial reductions, row
+    /// tail hand-offs).
+    fn potrs2d_solve(&self, n: usize, t: usize, p: usize, q: usize, nrhs: usize) -> f64 {
+        let nt = n.div_ceil(t);
+        let tile_len = |tt: usize| -> usize { t.min(n - tt * t) };
+        let e = self.esize();
+        let mut clk = Clocks::new(p * q);
+        let dev = |r: usize, c: usize| r * q + c;
+        let seg_below = |tt: usize| -> Vec<usize> {
+            let mut seg = vec![0usize; p];
+            for j in (tt + 1)..nt {
+                seg[j % p] += tile_len(j);
+            }
+            seg
+        };
+        // Forward sweep.
+        for tt in 0..nt {
+            let tk = tile_len(tt);
+            let k1 = tt * t + tk;
+            let rt = tt % p;
+            let ct = tt % q;
+            let diag = dev(rt, ct);
+            clk.advance(diag, self.model.panel_time(self.dtype, GpuCostModel::flops_trsm(self.dtype, tk, nrhs, tk)));
+            let below = n - k1;
+            if below == 0 {
+                continue;
+            }
+            let seg = seg_below(tt);
+            let members: Vec<usize> =
+                (0..p).filter(|&r| r != rt && seg[r] > 0).map(|r| dev(r, ct)).collect();
+            if !members.is_empty() {
+                let recv = members.len();
+                for &m in &members {
+                    clk.advance(diag, self.topo.copy_time(diag, m, tk * nrhs * e) / recv as f64);
+                    clk.sync(m, diag);
+                }
+            }
+            for r in 0..p {
+                if seg[r] > 0 {
+                    clk.advance(dev(r, ct), self.model.gemm_time(self.dtype, seg[r], nrhs, tk));
+                }
+            }
+            let cn = (tt + 1) % q;
+            if cn != ct {
+                for r in 0..p {
+                    if seg[r] > 0 {
+                        clk.advance(dev(r, ct), self.topo.copy_time(dev(r, ct), dev(r, cn), seg[r] * nrhs * e));
+                        clk.sync(dev(r, cn), dev(r, ct));
+                    }
+                }
+            }
+        }
+        // Backward sweep.
+        for tt in (0..nt).rev() {
+            let tk = tile_len(tt);
+            let k1 = tt * t + tk;
+            let rt = tt % p;
+            let ct = tt % q;
+            let diag = dev(rt, ct);
+            let below = n - k1;
+            if below > 0 {
+                let seg = seg_below(tt);
+                for r in 0..p {
+                    if seg[r] > 0 {
+                        clk.advance(dev(r, ct), self.model.gemm_time(self.dtype, tk, nrhs, seg[r]));
+                    }
+                }
+                for r in 0..p {
+                    if r != rt && seg[r] > 0 {
+                        clk.advance(dev(r, ct), self.topo.copy_time(dev(r, ct), diag, tk * nrhs * e));
+                        clk.sync(diag, dev(r, ct));
+                    }
+                }
+            }
+            clk.advance(diag, self.model.panel_time(self.dtype, GpuCostModel::flops_trsm(self.dtype, tk, nrhs, tk)));
+            if tt > 0 {
+                let cprev = (tt - 1) % q;
+                if cprev != ct {
+                    let mut rows_ge = vec![0usize; p];
+                    for j in tt..nt {
+                        rows_ge[j % p] += tile_len(j);
+                    }
+                    for r in 0..p {
+                        if rows_ge[r] > 0 {
+                            clk.advance(dev(r, ct), self.topo.copy_time(dev(r, ct), dev(r, cprev), rows_ge[r] * nrhs * e));
+                            clk.sync(dev(r, cprev), dev(r, ct));
+                        }
+                    }
+                }
+            }
+        }
+        clk.max()
+    }
+
+    /// Full potri on a `p × q` grid (§2.1 redistribution + grid-native
+    /// factor + grid-native trtri/lauum replay: row-split column
+    /// pipelines, row-ring lauum panel segments, column-ring partial
+    /// reductions). `p = 1` degenerates to [`Predictor::potri`]
+    /// bitwise.
+    pub fn potri2d(&self, n: usize, t: usize, p: usize, q: usize) -> f64 {
+        if p == 1 {
+            return self.potri(n, t, q);
+        }
+        let nt = n.div_ceil(t);
+        let tile_len = |tt: usize| -> usize { t.min(n - tt * t) };
+        let e = self.esize();
+        let mut clk = Clocks::new(p * q);
+        let dev = |r: usize, c: usize| r * q + c;
+        // Phase 1: trtri column pipelines.
+        for tt in 0..nt {
+            let tk = tile_len(tt);
+            let ct = tt % q;
+            for j in tt..nt {
+                let tj = tile_len(j);
+                let j1 = j * t + tj;
+                let rj = j % p;
+                let cj = j % q;
+                let djj = dev(rj, cj);
+                clk.advance(djj, self.model.panel_time(self.dtype, GpuCostModel::flops_trsm(self.dtype, tj, tk, tj)));
+                let x_owner = dev(rj, ct);
+                if x_owner != djj {
+                    clk.advance(djj, self.topo.copy_time(djj, x_owner, tj * tk * e));
+                    clk.sync(x_owner, djj);
+                }
+                let below = n - j1;
+                if below > 0 {
+                    let mut segb = vec![0usize; p];
+                    for jj in (j + 1)..nt {
+                        segb[jj % p] += tile_len(jj);
+                    }
+                    let members: Vec<usize> =
+                        (0..p).filter(|&r| r != rj && segb[r] > 0).map(|r| dev(r, cj)).collect();
+                    if !members.is_empty() {
+                        let recv = members.len();
+                        for &m in &members {
+                            clk.advance(djj, self.topo.copy_time(djj, m, tj * tk * e) / recv as f64);
+                            clk.sync(m, djj);
+                        }
+                    }
+                    for r in 0..p {
+                        if segb[r] > 0 {
+                            clk.advance(dev(r, cj), self.model.gemm_time(self.dtype, segb[r], tk, tj));
+                        }
+                    }
+                    let cnext = (j + 1) % q;
+                    if cnext != cj {
+                        for r in 0..p {
+                            if segb[r] > 0 {
+                                clk.advance(dev(r, cj), self.topo.copy_time(dev(r, cj), dev(r, cnext), segb[r] * tk * e));
+                                clk.sync(dev(r, cnext), dev(r, cj));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // Phase 2: lauum rounds.
+        for ti in 0..nt {
+            let tki = tile_len(ti);
+            let ri = ti % p;
+            let ci = ti % q;
+            let mut segi = vec![0usize; p];
+            for j in ti..nt {
+                segi[j % p] += tile_len(j);
+            }
+            for r in 0..p {
+                if segi[r] == 0 {
+                    continue;
+                }
+                let members: Vec<usize> = (0..q).filter(|&c| c != ci).map(|c| dev(r, c)).collect();
+                if members.is_empty() {
+                    continue;
+                }
+                let recv = members.len();
+                for &m in &members {
+                    clk.advance(dev(r, ci), self.topo.copy_time(dev(r, ci), m, segi[r] * tki * e) / recv as f64);
+                    clk.sync(m, dev(r, ci));
+                }
+            }
+            for tj in 0..nt {
+                let tkj = tile_len(tj);
+                let cj = tj % q;
+                let tmax = ti.max(tj);
+                let mut segm = vec![0usize; p];
+                for jj in tmax..nt {
+                    segm[jj % p] += tile_len(jj);
+                }
+                for r in 0..p {
+                    if segm[r] > 0 {
+                        clk.advance(dev(r, cj), self.model.gemm_time(self.dtype, tki, tkj, segm[r]));
+                    }
+                }
+                for r in 0..p {
+                    if r != ri && segm[r] > 0 {
+                        clk.advance(dev(r, cj), self.topo.copy_time(dev(r, cj), dev(ri, cj), tki * tkj * e));
+                        clk.sync(dev(ri, cj), dev(r, cj));
+                    }
+                }
+            }
+        }
+        self.redistribute(n, p * q) + self.potrf2d(n, t, p, q) + clk.max()
+    }
+
+    /// The grid-shape selector: the `(P, Q)` factorization of `ndev`
+    /// with the smallest replayed end-to-end makespan for this routine
+    /// and shape (the way Lineax dispatches solvers by operator
+    /// structure — here the operator structure is the node itself).
+    /// Ties, unknown routines, and small problems (where ring latency
+    /// dominates) keep the 1D `(1, ndev)` shape, which the services
+    /// map to the native 1D layout so existing paths are bitwise
+    /// untouched. At paper scale the selector favors tall grids: the
+    /// per-step panel trsm is the serial term and splits across `P`.
+    pub fn best_grid(&self, routine: &str, n: usize, nrhs: usize, t: usize, ndev: usize) -> (usize, usize) {
+        if ndev <= 1 {
+            return (1, ndev.max(1));
+        }
+        let cost = |p: usize, q: usize| -> f64 {
+            match routine {
+                "potrf" => self.redistribute(n, ndev) + self.potrf2d(n, t, p, q),
+                "potrs" => self.potrs2d(n, t, p, q, nrhs.max(1)),
+                "potri" => self.potri2d(n, t, p, q),
+                "syevd" => {
+                    if p == 1 {
+                        self.syevd(n, t, ndev)
+                    } else {
+                        self.syevd2d(n, t, p, q)
+                    }
+                }
+                _ => f64::INFINITY,
+            }
+        };
+        let mut best = (1usize, ndev);
+        let mut best_cost = cost(1, ndev);
+        for p in 2..=ndev {
+            if ndev % p != 0 {
+                continue;
+            }
+            let q = ndev / p;
+            let c = cost(p, q);
+            if c < best_cost {
+                best_cost = c;
+                best = (p, q);
+            }
+        }
+        best
+    }
+
     // ---- MPMD control-plane overhead ------------------------------------
 
     /// Per-solve control-plane cost MPMD serving adds over the SPMD
@@ -636,6 +1034,64 @@ mod tests {
         assert_eq!(p.syevd2d(16384, 256, 1, 4), p.syevd(16384, 256, 4));
         let pc = Predictor::h200(8, DType::C128);
         assert_eq!(pc.syevd2d(8192, 128, 1, 8), pc.syevd(8192, 128, 8));
+    }
+
+    #[test]
+    fn potrf2d_2x2_beats_1d_at_paper_scale() {
+        // Acceptance: the grid-native potrf replay strictly beats the
+        // 1D layout at paper-scale shapes — same device count, same
+        // flops; the row-split panel trsm and ring collectives are the
+        // win — and p = 1 degenerates to the 1D formula bitwise.
+        let p = Predictor::h200(4, DType::F64);
+        for &n in &[16384usize, 65536, 131072] {
+            let one_d = p.potrf(n, 1024, 4);
+            let grid = p.potrf2d(n, 1024, 2, 2);
+            assert!(grid < one_d, "2x2 potrf {grid} must beat 1D {one_d} at n={n}");
+        }
+        assert_eq!(p.potrf2d(16384, 1024, 1, 4), p.potrf(16384, 1024, 4));
+        let p8 = Predictor::h200(8, DType::F64);
+        assert!(p8.potrf2d(65536, 1024, 2, 4) < p8.potrf(65536, 1024, 8));
+        let p32 = Predictor::h200(4, DType::F32);
+        assert!(p32.potrf2d(131072, 1024, 2, 2) < p32.potrf(131072, 1024, 4));
+    }
+
+    #[test]
+    fn potrs2d_and_potri2d_beat_1d_and_degenerate_at_p1() {
+        let p = Predictor::h200(4, DType::F64);
+        for &n in &[16384usize, 65536, 131072] {
+            assert!(p.potrs2d(n, 1024, 2, 2, 1) < p.potrs(n, 1024, 4, 1), "potrs2d at n={n}");
+        }
+        assert_eq!(p.potrs2d(8192, 1024, 1, 4, 1), p.potrs(8192, 1024, 4, 1));
+        let pc = Predictor::h200(4, DType::C128);
+        for &n in &[8192usize, 32768] {
+            assert!(pc.potri2d(n, 256, 2, 2) < pc.potri(n, 256, 4), "potri2d at n={n}");
+        }
+        assert_eq!(pc.potri2d(4096, 256, 1, 4), pc.potri(4096, 256, 4));
+    }
+
+    #[test]
+    fn best_grid_keeps_small_solves_1d_and_goes_2d_at_scale() {
+        let p = Predictor::h200(4, DType::F64);
+        // Service-scale shapes (the serving tests/benches) stay 1D —
+        // ring latency dominates, and (1, ndev) maps to the bitwise
+        // seed path.
+        assert_eq!(p.best_grid("potrs", 192, 1, 32, 4), (1, 4));
+        assert_eq!(p.best_grid("potrs", 24, 2, 8, 4), (1, 4));
+        assert_eq!(p.best_grid("potrf", 1024, 0, 256, 4), (1, 4));
+        // Paper scale flips 2D; the selector favors tall grids (the
+        // panel trsm is the serial term and splits across P).
+        let big = p.best_grid("potrf", 16384, 0, 256, 4);
+        assert_eq!(big.0 * big.1, 4);
+        assert!(big.0 > 1, "paper-scale potrf must select a 2D grid, got {big:?}");
+        assert_eq!(big, (4, 1));
+        let bs = p.best_grid("potrs", 65536, 1, 1024, 4);
+        assert!(bs.0 > 1);
+        // syevd's selector rides the existing replay pair.
+        let se = p.best_grid("syevd", 65536, 0, 256, 4);
+        assert!(se.0 > 1);
+        // Unknown routines and single-device nodes stay 1D.
+        assert_eq!(p.best_grid("getrf", 65536, 0, 256, 4), (1, 4));
+        assert_eq!(Predictor::h200(1, DType::F64).best_grid("potrf", 65536, 0, 256, 1), (1, 1));
     }
 
     #[test]

@@ -60,7 +60,7 @@ pub mod tile;
 pub mod prelude {
     pub use crate::batch::{BatchPolicy, PackedPod, SmallRoutine};
     pub use crate::coordinator::{
-        BackendKind, ExecMode, Footprint, JaxMg, Mesh, PartitionSpec, SolveService,
+        BackendKind, DistRoutine, ExecMode, Footprint, JaxMg, Mesh, PartitionSpec, SolveService,
     };
     pub use crate::device::{SimGpu, SimNode};
     pub use crate::error::{Error, Result};

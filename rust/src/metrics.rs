@@ -81,6 +81,21 @@ pub struct Metrics {
     pub mpmd_requeues: AtomicU64,
     /// Deepest per-worker mailbox observed at enqueue time.
     pub mpmd_peak_worker_queue: AtomicU64,
+    /// Distributed solves executed grid-natively on a `P > 1` grid
+    /// (the 2D execution path; 1D solves do not count here).
+    pub grid_solves: AtomicU64,
+    /// Largest grid-row count `P` chosen for any grid-native solve.
+    pub grid_peak_p: AtomicU64,
+    /// Largest grid-column count `Q` chosen for any grid-native solve.
+    pub grid_peak_q: AtomicU64,
+    /// Bytes carried by **row-ring** collectives (panel segments moving
+    /// along grid rows — the 2D replacement for devices-wide panel
+    /// broadcasts).
+    pub grid_row_bytes: AtomicU64,
+    /// Bytes carried by **column-ring** collectives (diagonal blocks,
+    /// transposed panels and partial-result reductions moving along
+    /// grid columns).
+    pub grid_col_bytes: AtomicU64,
 }
 
 impl Metrics {
@@ -183,6 +198,27 @@ impl Metrics {
         self.mpmd_peak_worker_queue.fetch_max(depth, Ordering::Relaxed);
     }
 
+    /// Record one grid-native (`P > 1`) distributed solve and the grid
+    /// shape it executed on.
+    #[inline]
+    pub fn note_grid_solve(&self, p: u64, q: u64) {
+        self.grid_solves.fetch_add(1, Ordering::Relaxed);
+        self.grid_peak_p.fetch_max(p, Ordering::Relaxed);
+        self.grid_peak_q.fetch_max(q, Ordering::Relaxed);
+    }
+
+    /// Count bytes carried by a row-ring collective.
+    #[inline]
+    pub fn add_grid_row_bytes(&self, bytes: u64) {
+        self.grid_row_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Count bytes carried by a column-ring collective.
+    #[inline]
+    pub fn add_grid_col_bytes(&self, bytes: u64) {
+        self.grid_col_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
     /// Snapshot all counters (for reports; not atomic across fields).
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
@@ -216,6 +252,11 @@ impl Metrics {
             mpmd_routing_ns: self.mpmd_routing_ns.load(Ordering::Relaxed),
             mpmd_requeues: self.mpmd_requeues.load(Ordering::Relaxed),
             mpmd_peak_worker_queue: self.mpmd_peak_worker_queue.load(Ordering::Relaxed),
+            grid_solves: self.grid_solves.load(Ordering::Relaxed),
+            grid_peak_p: self.grid_peak_p.load(Ordering::Relaxed),
+            grid_peak_q: self.grid_peak_q.load(Ordering::Relaxed),
+            grid_row_bytes: self.grid_row_bytes.load(Ordering::Relaxed),
+            grid_col_bytes: self.grid_col_bytes.load(Ordering::Relaxed),
         }
     }
 
@@ -252,6 +293,11 @@ impl Metrics {
             &self.mpmd_routing_ns,
             &self.mpmd_requeues,
             &self.mpmd_peak_worker_queue,
+            &self.grid_solves,
+            &self.grid_peak_p,
+            &self.grid_peak_q,
+            &self.grid_row_bytes,
+            &self.grid_col_bytes,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -291,6 +337,11 @@ pub struct MetricsSnapshot {
     pub mpmd_routing_ns: u64,
     pub mpmd_requeues: u64,
     pub mpmd_peak_worker_queue: u64,
+    pub grid_solves: u64,
+    pub grid_peak_p: u64,
+    pub grid_peak_q: u64,
+    pub grid_row_bytes: u64,
+    pub grid_col_bytes: u64,
 }
 
 impl MetricsSnapshot {
@@ -383,6 +434,12 @@ impl MetricsSnapshot {
             mpmd_requeues: self.mpmd_requeues - earlier.mpmd_requeues,
             // A high-water mark, like batch_peak_occupancy.
             mpmd_peak_worker_queue: self.mpmd_peak_worker_queue,
+            grid_solves: self.grid_solves - earlier.grid_solves,
+            // High-water marks: the later peaks stand.
+            grid_peak_p: self.grid_peak_p,
+            grid_peak_q: self.grid_peak_q,
+            grid_row_bytes: self.grid_row_bytes - earlier.grid_row_bytes,
+            grid_col_bytes: self.grid_col_bytes - earlier.grid_col_bytes,
         }
     }
 }
@@ -484,6 +541,24 @@ mod tests {
         assert_eq!(s.mpmd_peak_worker_queue, 3);
         assert!((s.avg_routing_latency() - 2e-6).abs() < 1e-15);
         assert_eq!(MetricsSnapshot::default().avg_routing_latency(), 0.0);
+        m.reset();
+        assert_eq!(m.snapshot(), MetricsSnapshot::default());
+    }
+
+    #[test]
+    fn grid_counters() {
+        let m = Metrics::new();
+        m.note_grid_solve(2, 2);
+        m.note_grid_solve(2, 4);
+        m.add_grid_row_bytes(1000);
+        m.add_grid_col_bytes(300);
+        m.add_grid_col_bytes(200);
+        let s = m.snapshot();
+        assert_eq!(s.grid_solves, 2);
+        assert_eq!(s.grid_peak_p, 2);
+        assert_eq!(s.grid_peak_q, 4);
+        assert_eq!(s.grid_row_bytes, 1000);
+        assert_eq!(s.grid_col_bytes, 500);
         m.reset();
         assert_eq!(m.snapshot(), MetricsSnapshot::default());
     }

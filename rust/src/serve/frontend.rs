@@ -45,14 +45,14 @@ use crate::batch::{
     run_bucket, size_class, BatchPlanner, BatchPolicy, BucketKey, FlushedBucket, SmallRoutine,
 };
 use crate::coordinator::{
-    handle_pair, panic_message, publish_failure, publish_one, Footprint, JobQueue, ServiceHandle,
-    Slot, SolveStats,
+    handle_pair, panic_message, publish_failure, publish_one, DistPlan, Footprint, GridPlanCache,
+    JobQueue, ServiceHandle, Slot, SolveStats,
 };
+pub use crate::coordinator::DistRoutine;
 use crate::costmodel::{GpuCostModel, Predictor};
 use crate::device::{DevPtr, SimNode};
 use crate::error::{Error, Result};
 use crate::ipc::{AddressSpace, IpcHandle, IpcRegistry};
-use crate::layout::BlockCyclic1D;
 use crate::linalg::Matrix;
 use crate::scalar::{DType, Scalar};
 use crate::solver::{
@@ -81,6 +81,11 @@ pub struct MpmdConfig {
     /// Router threads executing distributed solves as the single
     /// caller (bounds distributed solves in flight).
     pub routers: usize,
+    /// Process-grid override for distributed solves: `None` lets the
+    /// shared planner pick `P × Q` per request (over the **live**
+    /// worker set — a shrunk set is re-planned); `Some((p, q))` pins
+    /// it (p·q must equal the live worker count at dispatch).
+    pub grid: Option<(usize, usize)>,
 }
 
 impl MpmdConfig {
@@ -93,6 +98,7 @@ impl MpmdConfig {
             pipeline: PipelineConfig::barrier(),
             policy,
             routers: 2,
+            grid: None,
         }
     }
 }
@@ -103,29 +109,8 @@ impl Default for MpmdConfig {
     }
 }
 
-/// The distributed routines the MPMD frontend routes.
-#[derive(Copy, Clone, Debug, PartialEq, Eq)]
-pub enum DistRoutine {
-    /// Cholesky factor (returns the factored matrix).
-    Potrf,
-    /// Factor + solve against a replicated RHS.
-    Potrs,
-    /// Factor + Cholesky-based inverse.
-    Potri,
-    /// Symmetric/Hermitian eigendecomposition.
-    Syevd,
-}
-
-impl DistRoutine {
-    fn name(self) -> &'static str {
-        match self {
-            DistRoutine::Potrf => "potrf",
-            DistRoutine::Potrs => "potrs",
-            DistRoutine::Potri => "potri",
-            DistRoutine::Syevd => "syevd",
-        }
-    }
-}
+// `DistRoutine` lives in `coordinator::admit` (shared with the SPMD
+// front's `SolveService::submit_dist`) and is re-exported above.
 
 // ---------------------------------------------------------------------------
 // Frontend shared state (queue + wake-ups)
@@ -220,12 +205,14 @@ pub(crate) enum PodOutcome {
 
 /// A distributed solve routed by the frontend (type-erased over dtype).
 pub(crate) trait DistWork: Send + Sync {
-    fn footprint(&self, tile: usize, ndev: usize) -> Result<Footprint>;
+    /// Plan the solve over the current live set: grid shape (selector
+    /// or [`MpmdConfig::grid`] override), layout, exact footprint.
+    fn plan(&self, shared: &Shared, ndev: usize) -> Result<DistPlan>;
     fn execute(
         &self,
         shared: &Shared,
         live: &[usize],
-        fp: &Footprint,
+        plan: &DistPlan,
         queue_wait: Duration,
     ) -> ExecResult;
     fn fail(&self, msg: String);
@@ -279,6 +266,9 @@ pub(crate) struct Shared {
     cfg: MpmdConfig,
     workers: Vec<WorkerLink>,
     front: Arc<FrontShared>,
+    /// Memoized grid-shape selections for the distributed planner
+    /// (keyed per live-set size, so degraded-mode retries re-plan).
+    plans: GridPlanCache,
     /// The frontend's (rank 0's) address space: worker 0 is a thread of
     /// this process, so its shard needs no IPC export.
     caller: AddressSpace,
@@ -375,21 +365,32 @@ fn stage_shard<S: Scalar>(
 }
 
 impl<S: Scalar> DistWork for DistReq<S> {
-    fn footprint(&self, tile: usize, ndev: usize) -> Result<Footprint> {
+    fn plan(&self, shared: &Shared, ndev: usize) -> Result<DistPlan> {
         let n = self.a.rows();
         let nrhs = self.rhs.as_ref().map(|b| b.cols()).unwrap_or(0);
-        Footprint::for_routine(self.routine.name(), n, nrhs, tile, ndev, S::DTYPE)
+        shared.plans.plan(
+            self.routine.name(),
+            n,
+            nrhs,
+            shared.cfg.tile,
+            ndev,
+            S::DTYPE,
+            &shared.cfg.model,
+            shared.node.topology(),
+            shared.cfg.grid,
+        )
     }
 
     fn execute(
         &self,
         shared: &Shared,
         live: &[usize],
-        fp: &Footprint,
+        plan: &DistPlan,
         queue_wait: Duration,
     ) -> ExecResult {
         let t0 = Instant::now();
         let caller = shared.caller;
+        let fp = &plan.footprint;
         let metrics = shared.node.metrics().clone();
         let mut opened: Vec<IpcHandle> = Vec::new();
         // (`StagedShard` is not `Clone`, hence no `vec![None; n]`.)
@@ -398,10 +399,12 @@ impl<S: Scalar> DistWork for DistReq<S> {
             let n = self.a.rows();
             let ndev = live.len();
             // Degraded mode runs on a subset view that shares the live
-            // devices' VRAM/clocks but excludes the dead ones.
+            // devices' VRAM/clocks but excludes the dead ones. The
+            // planned layout — 1D or a P×Q grid — spans exactly the
+            // live set; workers stage (and IPC-export) its 1D panels
+            // or 2D tile shards alike through `build_panel`.
             let sub = shared.node.subset(live)?;
-            let lay = BlockCyclic1D::new(n, shared.cfg.tile, ndev)?;
-            let kind = LayoutKind::BlockCyclic(lay);
+            let kind = plan.kind;
 
             // 1. Every live worker stages its own shard in its own
             // process and ships a pointer (rank 0) or handle (others).
@@ -473,6 +476,13 @@ impl<S: Scalar> DistWork for DistReq<S> {
                 Ctx::with_pipeline(&sub, &shared.cfg.model, &backend, shared.cfg.pipeline);
             let mut dm = DistMatrix::<S>::from_panels(&sub, n, kind, panels)?;
             let solved = (|| -> Result<DistOut<S>> {
+                // syevd runs on A directly — only the Cholesky family
+                // factors first (parity with `SolveService::submit_syevd`
+                // and the `JaxMg::syevd` entry point).
+                if self.routine == DistRoutine::Syevd {
+                    let vals = syevd_dist(&ctx, &mut dm)?;
+                    return Ok(DistOut::Eig(vals, dm.gather()?));
+                }
                 potrf_dist(&ctx, &mut dm)?;
                 match self.routine {
                     DistRoutine::Potrf => Ok(DistOut::Mat(dm.gather()?)),
@@ -484,10 +494,7 @@ impl<S: Scalar> DistWork for DistReq<S> {
                         potri_dist(&ctx, &mut dm)?;
                         Ok(DistOut::Mat(dm.gather()?))
                     }
-                    DistRoutine::Syevd => {
-                        let vals = syevd_dist(&ctx, &mut dm)?;
-                        Ok(DistOut::Eig(vals, dm.gather()?))
-                    }
+                    DistRoutine::Syevd => unreachable!("handled above"),
                 }
             })();
             // The workers own the panels — never free them here.
@@ -526,8 +533,13 @@ impl<S: Scalar> DistWork for DistReq<S> {
                 let exec = t0.elapsed();
                 metrics
                     .add_service_completion(queue_wait.as_nanos() as u64, exec.as_nanos() as u64);
-                let stats =
-                    SolveStats { queue_wait, exec, batch_size: 1, coalesce_wait_ns: 0 };
+                let stats = SolveStats {
+                    queue_wait,
+                    exec,
+                    batch_size: 1,
+                    coalesce_wait_ns: 0,
+                    grid: plan.grid,
+                };
                 self.publish_ok(out, stats);
                 ExecResult::Published
             }
@@ -615,6 +627,7 @@ impl<S: Scalar> PodWork for PodReq<S> {
                         exec,
                         batch_size: occupancy,
                         coalesce_wait_ns: wait_ns,
+                        grid: (1, 1),
                     };
                     publish_one(slot, Ok((x, stats)));
                 }
@@ -668,6 +681,7 @@ impl<S: Scalar> PodWork for PodReq<S> {
                                 exec,
                                 batch_size: 1,
                                 coalesce_wait_ns: self.waits[i],
+                                grid: (1, 1),
                             },
                         )),
                         Ok(Err(e)) => Err(format!("small solve failed: {e}")),
@@ -734,10 +748,13 @@ fn dispatch(shared: &Arc<Shared>, routers: &Arc<JobQueue>, work: QueuedWork) -> 
     };
     match routed {
         Routed::Dist(req) => {
-            let fp = match req.footprint(shared.cfg.tile, live.len()) {
-                Ok(fp) => fp,
+            // Plan over the live set: the selector (or the configured
+            // override) picks the grid shape, and admission is against
+            // the exact per-device shards of the planned layout.
+            let plan = match req.plan(shared, live.len()) {
+                Ok(plan) => plan,
                 Err(e) => {
-                    req.fail(format!("footprint failed: {e}"));
+                    req.fail(format!("solve planning failed: {e}"));
                     shared.front.complete();
                     return true;
                 }
@@ -745,16 +762,16 @@ fn dispatch(shared: &Arc<Shared>, routers: &Arc<JobQueue>, work: QueuedWork) -> 
             // Fail fast when a live device could never hold its share —
             // waiting for releases would deadlock the queue head.
             for (i, &dev) in live.iter().enumerate() {
-                if fp.bytes(i) > shared.workers[dev].ctx.admission.capacity() {
+                if plan.footprint.bytes(i) > shared.workers[dev].ctx.admission.capacity() {
                     req.fail(format!(
                         "declared footprint ({} B) exceeds device {dev}'s capacity",
-                        fp.bytes(i)
+                        plan.footprint.bytes(i)
                     ));
                     shared.front.complete();
                     return true;
                 }
             }
-            if !reserve_all(shared, &live, &fp) {
+            if !reserve_all(shared, &live, &plan.footprint) {
                 let mut st = shared.front.state.lock().unwrap();
                 st.queue.push_front(work);
                 st.in_flight -= 1;
@@ -764,7 +781,7 @@ fn dispatch(shared: &Arc<Shared>, routers: &Arc<JobQueue>, work: QueuedWork) -> 
             let shared2 = shared.clone();
             let _ = routers.submit(move || {
                 let queue_wait = work.enqueued.elapsed();
-                match req.execute(&shared2, &live, &fp, queue_wait) {
+                match req.execute(&shared2, &live, &plan, queue_wait) {
                     ExecResult::Published => shared2.front.complete(),
                     ExecResult::Requeue(dead) => {
                         shared2.node.metrics().add_mpmd_requeue();
@@ -987,6 +1004,7 @@ impl MpmdService {
             cfg,
             workers,
             front,
+            plans: GridPlanCache::new(),
             caller: AddressSpace(0),
         });
         let small = Arc::new(Mutex::new(MpmdSmall {

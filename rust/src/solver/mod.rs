@@ -1,5 +1,7 @@
-//! Distributed dense solvers over the 1D block-cyclic layout — the
-//! cuSOLVERMg substrate itself (`potrf`/`potrs`/`potri`/`syevd`).
+//! Distributed dense solvers over the block-cyclic layouts — the
+//! cuSOLVERMg substrate itself (`potrf`/`potrs`/`potri`/`syevd`),
+//! executing natively on **1D column** layouts *and* **2D `P × Q`
+//! tile grids**.
 //!
 //! Each routine is a *coordinator-scheduled* blocked algorithm: tile
 //! kernels run "on" the simulated device owning the tile (charging that
@@ -14,6 +16,25 @@
 //!
 //! The two backends are interchangeable and cross-checked in the test
 //! suite, which is the correctness argument for the AOT path.
+//!
+//! ## 1D vs 2D execution
+//!
+//! Every solver dispatches on the handle's [`crate::tile::LayoutKind`]:
+//!
+//! | layout | path | collectives | numerics |
+//! |---|---|---|---|
+//! | 1D block-cyclic | columnar (the seed path) | devices-wide panel broadcasts (`O(n·T)` bytes from one owner per step) | reference |
+//! | `P = 1` grid, full-height tiles | **same columnar path** via [`crate::tile::LayoutKind::compat_1d`] (storage is bitwise identical) | identical | bitwise = 1D, schedule included |
+//! | `P > 1` grid | **grid-native**: panels split over `P` row blocks | per-row / per-column **ring collectives** ([`Ctx::charge_row_ring_broadcast`] / [`Ctx::charge_col_ring_broadcast`]): `O(n·T/P)` bytes per disjoint ring | bitwise = 1D (same kernel sequence; only ownership and the timeline change) |
+//!
+//! The grid-native paths are the execution model for the PR-2 layout
+//! model: `potrf`'s trailing update becomes one fused local GEMM per
+//! device per step (the ScaLAPACK shape), its panel `trsm` splits
+//! across the `P` row owners of the diagonal's grid column, and the
+//! broadcast volume drops from `O(n)` devices-wide to row/column
+//! rings. Communication is tallied per axis in the `grid_row_bytes` /
+//! `grid_col_bytes` metrics; [`GridComm`] holds the row/column
+//! membership arithmetic.
 //!
 //! ## Scheduling: barrier vs lookahead pipelining
 //!
@@ -34,8 +55,13 @@
 //!   trailing-update frontier — while broadcasts ride the copy streams.
 //!   `potrs`/`potri`/`syevd` reuse the same machinery through the
 //!   [`Ctx::charge_gemm`]-family helpers, so their copies and kernels
-//!   overlap too. Makespans shrink accordingly; the golden-timeline
-//!   tests in `rust/tests/golden_timeline.rs` pin the win.
+//!   overlap too. The grid-native paths keep the same k-step panel
+//!   lookahead (the panel frontier is gated per tile column, rings ride
+//!   the copy streams) and lookahead still strictly beats barrier on
+//!   `P > 1` grids. Makespans shrink accordingly; the golden-timeline
+//!   tests in `rust/tests/golden_timeline.rs` pin the win — 1D
+//!   (`potrf_timelines.txt`, `potrs_timelines.txt`) and 2×2-grid
+//!   (`potrf2d_timelines.txt`) alike.
 //!
 //! ### Knobs
 //!
@@ -57,7 +83,8 @@ pub use potrf::potrf_dist;
 pub use potri::potri_dist;
 pub use potrs::potrs_dist;
 pub use schedule::{
-    DeviceTimeline, PhaseReport, PipelineConfig, PipelineTimeline, DEFAULT_LOOKAHEAD,
+    DeviceTimeline, GridComm, PhaseReport, PipelineConfig, PipelineTimeline, RingAxis,
+    DEFAULT_LOOKAHEAD,
 };
 pub use syevd::syevd_dist;
 
@@ -346,6 +373,76 @@ impl<'a, S: Scalar> Ctx<'a, S> {
                 Ok(())
             }
         }
+    }
+
+    /// Tally `bytes` onto the per-axis grid collective counter.
+    fn note_ring_bytes(&self, axis: RingAxis, bytes: u64) {
+        match axis {
+            RingAxis::Row => self.node.metrics().add_grid_row_bytes(bytes),
+            RingAxis::Col => self.node.metrics().add_grid_col_bytes(bytes),
+        }
+    }
+
+    /// A **ring collective** along one grid axis: the generalization of
+    /// [`Ctx::charge_group_broadcast`] the grid-native solvers schedule
+    /// with. Timing is identical to a group broadcast of `bytes` from
+    /// `from` to `members` (per-receiver shares serialize on the
+    /// sender's copy stream when pipelined, on its clock when
+    /// barrier-scheduled; receivers' compute streams fence on
+    /// delivery), but the carried bytes are additionally tallied per
+    /// axis (`grid_row_bytes` / `grid_col_bytes`) — the counters that
+    /// expose the 2D layouts' broadcast-volume win over the 1D
+    /// devices-wide pattern.
+    pub fn charge_ring_broadcast(
+        &self,
+        axis: RingAxis,
+        from: usize,
+        members: &[usize],
+        bytes: usize,
+    ) -> crate::Result<()> {
+        let receivers = members.iter().filter(|&&d| d != from).count();
+        if receivers > 0 && bytes > 0 {
+            self.note_ring_bytes(axis, (bytes * receivers) as u64);
+        }
+        self.charge_group_broadcast(from, members, bytes)
+    }
+
+    /// Row-ring broadcast: `bytes` from `from` to its grid-row peers.
+    pub fn charge_row_ring_broadcast(
+        &self,
+        from: usize,
+        members: &[usize],
+        bytes: usize,
+    ) -> crate::Result<()> {
+        self.charge_ring_broadcast(RingAxis::Row, from, members, bytes)
+    }
+
+    /// Column-ring broadcast: `bytes` from `from` to its grid-column
+    /// peers.
+    pub fn charge_col_ring_broadcast(
+        &self,
+        from: usize,
+        members: &[usize],
+        bytes: usize,
+    ) -> crate::Result<()> {
+        self.charge_ring_broadcast(RingAxis::Col, from, members, bytes)
+    }
+
+    /// A point-to-point hop along one grid axis (a tail hand-off within
+    /// a grid row, a partial-result reduction up a grid column):
+    /// timing-identical to [`Ctx::charge_p2p`], plus the per-axis byte
+    /// tally.
+    pub fn charge_ring_p2p(
+        &self,
+        axis: RingAxis,
+        from: usize,
+        to: usize,
+        bytes: usize,
+    ) -> crate::Result<()> {
+        if from != to && bytes > 0 {
+            self.note_ring_bytes(axis, bytes as u64);
+        }
+        self.charge_p2p(from, to, bytes)
     }
 
     /// Move a packed panel buffer between two device scratch

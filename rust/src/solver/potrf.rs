@@ -35,17 +35,45 @@
 //! Numerics are identical under both schedules (the host executes the
 //! same kernels in the same order); only the simulated timeline — and
 //! therefore the projected makespan — changes.
+//!
+//! ## Grid-native execution (`P > 1`)
+//!
+//! On a [`BlockCyclic2D`] grid with square tiles the same factorization
+//! executes **2D-parallel** ([`potrf_dist_grid`]): the diagonal block
+//! factors on its owner, `L_tt` rides a **column ring** to the `P` row
+//! owners of the panel, each of which `trsm`s only its own `below/P`
+//! rows; the solved row segments ride **row rings** sideways and the
+//! transposed blocks ride column rings down, so per-step broadcast
+//! volume is `O(below·T/P)` per disjoint ring instead of `O(below·T)`
+//! devices-wide; and every device's trailing update is **one fused
+//! local GEMM** over its `local_rows × local_cols` trailing block (the
+//! ScaLAPACK shape — one launch per device per step). The k-step panel
+//! lookahead is preserved: the panel frontier is gated per tile column
+//! exactly as in 1D, and lookahead strictly beats barrier on grids
+//! (pinned in `tests/golden/potrf2d_timelines.txt`). Numerics are
+//! **bitwise identical** to the 1D path — the host executes the exact
+//! same kernel sequence (full-panel `trsm`, per-tile-column trailing
+//! GEMMs); only ownership, and therefore the timeline, changes.
 
-use super::Ctx;
+use super::{Ctx, GridComm};
 use crate::costmodel::GpuCostModel;
 use crate::error::{Error, Result};
+use crate::layout::{BlockCyclic2D, MatrixLayout};
 use crate::linalg::Matrix;
 use crate::scalar::Scalar;
 use crate::tile::DistMatrix;
 
 /// Factor a Hermitian positive-definite `DistMatrix` (block-cyclic
-/// layout) in place into its lower Cholesky factor.
+/// layout) in place into its lower Cholesky factor. Dispatches on the
+/// handle: 1D column layouts (and `P = 1` grids of full-height tiles,
+/// whose storage is bitwise columnar) run the columnar path; `P × Q`
+/// grids with square tiles run grid-native.
 pub fn potrf_dist<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<()> {
+    if a.layout().compat_1d(a.rows()).is_none() {
+        if let Some(grid) = a.layout().grid2d().copied() {
+            return potrf_dist_grid(ctx, a, grid);
+        }
+    }
     // Compatibility path: a 1D block-cyclic handle, or a P=1 grid whose
     // storage is bitwise columnar (see `LayoutKind::compat_1d`).
     let lay = a
@@ -207,6 +235,327 @@ pub fn potrf_dist<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
             ctx.node.free(s)?;
         }
     }
+    let _ = ctx.end_phase();
+    Ok(())
+}
+
+/// The grid-native factorization (see the module docs): identical
+/// numerics to the 1D path computed on a host mirror, with the
+/// schedule — panel ops, ring collectives, fused local trailing
+/// updates — charged onto the `P × Q` device grid under both the
+/// barrier and lookahead disciplines.
+fn potrf_dist_grid<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a: &mut DistMatrix<S>,
+    grid: BlockCyclic2D,
+) -> Result<()> {
+    let n = a.rows();
+    if n != a.cols() {
+        return Err(Error::shape(format!("potrf needs square matrix, got {}x{}", n, a.cols())));
+    }
+    if grid.tile_r() != grid.tile_c() {
+        return Err(Error::layout(
+            "grid-native potrf needs square tiles (tile_r == tile_c) — redistribute first",
+        ));
+    }
+    let (p, q) = grid.grid();
+    let comm = GridComm::new(p, q);
+    let rd = grid.row_dim();
+    let cd = grid.col_dim();
+    let nt = cd.num_tiles();
+    let ndev = ctx.node.num_devices();
+    let esize = std::mem::size_of::<S>();
+    ctx.node.metrics().note_grid_solve(p as u64, q as u64);
+
+    ctx.begin_phase();
+    let tl = ctx.timeline();
+    let lookahead = ctx.pipeline.lookahead;
+    // Pipelined charge helper, identical to the 1D path's.
+    let issue = |stream: &crate::device::Stream, dev: usize, not_before: f64, secs: f64, flops: u64| -> f64 {
+        let done = stream.issue_after(not_before, secs);
+        if let Some(tl) = tl {
+            tl.note_busy(dev, secs);
+        }
+        ctx.node.metrics().add_kernel(flops);
+        done
+    };
+
+    // Numerics evolve on a host mirror (read once, written back once;
+    // every kernel/copy is charged explicitly below — the same
+    // discipline as `syevd_dist_grid`).
+    let mut host = a.mirror_host()?;
+
+    // Pipelined gating state, in simulated seconds:
+    //   colgate[k]   — completion of the latest trailing update applied
+    //                  to tile column k (gates its panel factorization);
+    //   step_done[t] — completion of step t's trailing updates (bounds
+    //                  the lookahead depth).
+    let mut colgate = vec![0.0f64; nt];
+    let mut step_done = vec![0.0f64; nt];
+
+    for t in 0..nt {
+        let tk = cd.tile_len(t);
+        let k0 = cd.tile_start(t);
+        let k1 = k0 + tk;
+        let rt = rd.owner(t);
+        let ct = cd.owner(t);
+        let diag = comm.device(rt, ct);
+
+        // 1. Diagonal block factorization on tile (t, t)'s owner.
+        let dblk = host.submatrix(k0, k0, tk, tk);
+        let lkk = ctx.kernels.potf2(&dblk).map_err(|e| match e {
+            Error::NotPositiveDefinite { minor } => Error::NotPositiveDefinite { minor: k0 + minor },
+            other => other,
+        })?;
+        let potf2_flops = GpuCostModel::flops_potf2(S::DTYPE, tk);
+        // Panel-frontier gate: the tile column must have absorbed every
+        // prior update, and the frontier may run at most `lookahead`
+        // steps ahead of the trailing-update frontier.
+        let mut nb = colgate[t];
+        if t > lookahead {
+            nb = nb.max(step_done[t - 1 - lookahead]);
+        }
+        let mut potf2_done = 0.0f64;
+        if let Some(tl) = tl {
+            let secs = ctx.model.panel_time(S::DTYPE, potf2_flops);
+            potf2_done = issue(tl.panel(diag), diag, nb, secs, potf2_flops);
+        } else {
+            ctx.charge_panel(diag, potf2_flops)?;
+        }
+        host.set_submatrix(k0, k0, &lkk);
+        // Canonical lower factor: zero this tile column above the diagonal.
+        if k0 > 0 {
+            host.set_submatrix(0, k0, &Matrix::<S>::zeros(k0, tk));
+        }
+
+        let below = n - k1;
+        if below == 0 {
+            continue;
+        }
+
+        // Trailing ownership extents: seg[r] = panel rows owned by grid
+        // row r; cols_of[c] = trailing columns owned by grid column c.
+        let mut seg = vec![0usize; p];
+        for j in (t + 1)..nt {
+            seg[rd.owner(j)] += rd.tile_len(j);
+        }
+        let mut cols_of = vec![0usize; q];
+        for k in (t + 1)..nt {
+            cols_of[cd.owner(k)] += cd.tile_len(k);
+        }
+
+        // 2. L_tt column ring: the factored diagonal block flows down
+        // grid column ct to the panel's row owners (who trsm their own
+        // row segments against it).
+        let ltt_members: Vec<usize> =
+            (0..p).filter(|&r| r != rt && seg[r] > 0).map(|r| comm.device(r, ct)).collect();
+        let mut ltt_arrival = vec![0.0f64; ndev];
+        let ltt_bytes = tk * tk * esize;
+        if !ltt_members.is_empty() {
+            if let Some(tl) = tl {
+                // The pipelined arm needs per-member arrival times (the
+                // trsm gates on them), which the ring helper does not
+                // return — same shared-link arithmetic, hand-issued.
+                let recv = ltt_members.len();
+                for &m in &ltt_members {
+                    let tcopy = ctx.node.topology().copy_time(diag, m, ltt_bytes) / recv as f64;
+                    let done = tl.copy(diag).issue_after(potf2_done, tcopy);
+                    tl.note_busy(diag, tcopy);
+                    ltt_arrival[m] = done;
+                    ctx.node.metrics().add_peer(ltt_bytes as u64);
+                }
+                ctx.node.metrics().add_grid_col_bytes((ltt_bytes * recv) as u64);
+            } else {
+                ctx.charge_col_ring_broadcast(diag, &ltt_members, ltt_bytes)?;
+            }
+        }
+
+        // 3. Panel solve, split across the P row owners: each trsm's
+        // only its own seg[r] rows (the 2D win over the 1D path's one
+        // whole-panel trsm on a single owner).
+        let mut trsm_done = vec![0.0f64; p];
+        for r in 0..p {
+            if seg[r] == 0 {
+                continue;
+            }
+            let src = comm.device(r, ct);
+            let fl = GpuCostModel::flops_trsm(S::DTYPE, seg[r], tk, tk);
+            if let Some(tl) = tl {
+                let arrive = if src == diag { potf2_done } else { ltt_arrival[src] };
+                let secs = ctx.model.panel_time(S::DTYPE, fl);
+                trsm_done[r] = issue(tl.panel(src), src, nb.max(arrive), secs, fl);
+            } else {
+                ctx.charge_panel(src, fl)?;
+            }
+        }
+        // Numerics: the exact 1D kernel call — one full-panel trsm.
+        let b = host.submatrix(k1, k0, below, tk);
+        let panel = ctx.kernels.trsm_rlhc(&b, &lkk)?;
+        host.set_submatrix(k1, k0, &panel);
+
+        // 4. Row rings: each row owner ships its solved row segment
+        // sideways to the grid columns owning trailing tiles.
+        let mut row_arrival = vec![0.0f64; ndev];
+        for r in 0..p {
+            if seg[r] == 0 {
+                continue;
+            }
+            let src = comm.device(r, ct);
+            let members: Vec<usize> =
+                (0..q).filter(|&c| c != ct && cols_of[c] > 0).map(|c| comm.device(r, c)).collect();
+            if members.is_empty() {
+                continue;
+            }
+            let bytes = seg[r] * tk * esize;
+            if let Some(tl) = tl {
+                let recv = members.len();
+                for &m in &members {
+                    let tcopy = ctx.node.topology().copy_time(src, m, bytes) / recv as f64;
+                    let done = tl.copy(src).issue_after(trsm_done[r], tcopy);
+                    tl.note_busy(src, tcopy);
+                    row_arrival[m] = done;
+                    ctx.node.metrics().add_peer(bytes as u64);
+                }
+                ctx.node.metrics().add_grid_row_bytes((bytes * recv) as u64);
+            } else {
+                ctx.charge_row_ring_broadcast(src, &members, bytes)?;
+            }
+        }
+
+        // 5. Column rings: the transposed panel blocks L[k,t]ᴴ flow
+        // down each trailing grid column from the grid row that owns
+        // them (locally for column ct, row-ring-delivered elsewhere).
+        let mut colt_arrival = vec![0.0f64; ndev];
+        for c in 0..q {
+            if cols_of[c] == 0 {
+                continue;
+            }
+            let mut blk = vec![0usize; p];
+            for k in (t + 1)..nt {
+                if cd.owner(k) == c {
+                    blk[rd.owner(k)] += cd.tile_len(k);
+                }
+            }
+            for rs in 0..p {
+                if blk[rs] == 0 {
+                    continue;
+                }
+                let src = comm.device(rs, c);
+                let members: Vec<usize> =
+                    (0..p).filter(|&r| r != rs && seg[r] > 0).map(|r| comm.device(r, c)).collect();
+                if members.is_empty() {
+                    continue;
+                }
+                let bytes = blk[rs] * tk * esize;
+                if let Some(tl) = tl {
+                    let recv = members.len();
+                    let src_ready = if c == ct { trsm_done[rs] } else { row_arrival[src] };
+                    for &m in &members {
+                        let tcopy = ctx.node.topology().copy_time(src, m, bytes) / recv as f64;
+                        let done = tl.copy(src).issue_after(src_ready, tcopy);
+                        tl.note_busy(src, tcopy);
+                        colt_arrival[m] = colt_arrival[m].max(done);
+                        ctx.node.metrics().add_peer(bytes as u64);
+                    }
+                    ctx.node.metrics().add_grid_col_bytes((bytes * recv) as u64);
+                } else {
+                    ctx.charge_col_ring_broadcast(src, &members, bytes)?;
+                }
+            }
+        }
+
+        // 6. Trailing updates. Numerics: the exact 1D per-tile-column
+        // GEMM sequence. Charges: fused local GEMMs per device, split
+        // **lookahead-first** — each device updates its piece of the
+        // NEXT panel column (tile column t+1) as its own launch before
+        // the rest of its local trailing block (the classic lookahead
+        // split), so the next panel factors while the bulk update is
+        // still in flight.
+        for j in (t + 1)..nt {
+            let j0 = cd.tile_start(j);
+            let tj = cd.tile_len(j);
+            let height = n - j0;
+            let pr0 = j0 - k1;
+            let pj = panel.submatrix(pr0, 0, height, tk);
+            let pj_hat = panel.submatrix(pr0, 0, tj, tk);
+            let mut cmat = host.submatrix(j0, j0, height, tj);
+            ctx.kernels.gemm_nh(&mut cmat, &pj, &pj_hat, -S::one())?;
+            host.set_submatrix(j0, j0, &cmat);
+        }
+        let mut fl_next = vec![0u64; ndev];
+        let mut fl_rest = vec![0u64; ndev];
+        for j in (t + 1)..nt {
+            let r = rd.owner(j);
+            for k in (t + 1)..=j {
+                let c = cd.owner(k);
+                let f = GpuCostModel::flops_gemm(S::DTYPE, rd.tile_len(j), cd.tile_len(k), tk);
+                if k == t + 1 {
+                    fl_next[comm.device(r, c)] += f;
+                } else {
+                    fl_rest[comm.device(r, c)] += f;
+                }
+            }
+        }
+        let next_w = cd.tile_len(t + 1);
+        let cnext = cd.owner(t + 1);
+        let mut step_max = 0.0f64;
+        for r in 0..p {
+            for c in 0..q {
+                let d = comm.device(r, c);
+                if fl_next[d] == 0 && fl_rest[d] == 0 {
+                    continue;
+                }
+                let dep = if tl.is_some() {
+                    let panel_arr = if c == ct { trsm_done[r] } else { row_arrival[d] };
+                    panel_arr.max(colt_arrival[d])
+                } else {
+                    0.0
+                };
+                if fl_next[d] > 0 {
+                    let util = GpuCostModel::gemm_utilization(tk.min(seg[r]).min(next_w));
+                    let secs = ctx.model.launch_overhead
+                        + fl_next[d] as f64 / (ctx.model.rate(S::DTYPE) * util);
+                    if let Some(tl) = tl {
+                        let done = issue(tl.compute(d), d, dep, secs, fl_next[d]);
+                        if done > step_max {
+                            step_max = done;
+                        }
+                        if done > colgate[t + 1] {
+                            colgate[t + 1] = done;
+                        }
+                    } else {
+                        ctx.charge_device_time(d, secs, fl_next[d])?;
+                    }
+                }
+                if fl_rest[d] > 0 {
+                    let rest_w = cols_of[c] - if c == cnext { next_w } else { 0 };
+                    let util = GpuCostModel::gemm_utilization(tk.min(seg[r]).min(rest_w));
+                    let secs = ctx.model.launch_overhead
+                        + fl_rest[d] as f64 / (ctx.model.rate(S::DTYPE) * util);
+                    if let Some(tl) = tl {
+                        let done = issue(tl.compute(d), d, dep, secs, fl_rest[d]);
+                        if done > step_max {
+                            step_max = done;
+                        }
+                        for k in (t + 2)..nt {
+                            if cd.owner(k) != c {
+                                continue;
+                            }
+                            let touches = (k..nt).any(|j| rd.owner(j) == r);
+                            if touches && done > colgate[k] {
+                                colgate[k] = done;
+                            }
+                        }
+                    } else {
+                        ctx.charge_device_time(d, secs, fl_rest[d])?;
+                    }
+                }
+            }
+        }
+        step_done[t] = step_max;
+    }
+
+    a.write_back_host(&host)?;
     let _ = ctx.end_phase();
     Ok(())
 }

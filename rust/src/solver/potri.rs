@@ -18,17 +18,26 @@
 //! notes potri "require[s] significantly more workspace memory than
 //! potrs" — the capacity tables in the benches read this allocation.
 
-use super::Ctx;
+use super::{Ctx, GridComm, RingAxis};
 use crate::costmodel::GpuCostModel;
 use crate::error::{Error, Result};
+use crate::layout::{BlockCyclic2D, MatrixLayout};
 use crate::linalg::Matrix;
 use crate::scalar::Scalar;
 use crate::tile::DistMatrix;
 
 /// Invert in place: on entry `a` holds the distributed factor `L`
 /// (from [`super::potrf_dist`]); on return it holds `A⁻¹` (full
-/// Hermitian, both triangles).
+/// Hermitian, both triangles). Dispatches on the layout: columnar (and
+/// `P = 1` grids) run the owner-pipelined path; `P × Q` grids run
+/// grid-native ([`potri_dist_grid`]) with row-split trtri pipelines
+/// and row-ring lauum panel broadcasts.
 pub fn potri_dist<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<()> {
+    if a.layout().compat_1d(a.rows()).is_none() {
+        if let Some(grid) = a.layout().grid2d().copied() {
+            return potri_dist_grid(ctx, a, grid);
+        }
+    }
     // Compatibility path: a 1D block-cyclic handle, or a P=1 grid whose
     // storage is bitwise columnar (see `LayoutKind::compat_1d`).
     let lay = a
@@ -167,6 +176,189 @@ pub fn potri_dist<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
 fn lay_local_cols(lay: &crate::layout::BlockCyclic1D, d: usize) -> usize {
     use crate::layout::ColumnLayout;
     lay.local_cols(d)
+}
+
+/// Grid-native inverse over a `P × Q` factor: numerics are the exact
+/// 1D kernel sequence computed from a host mirror (bitwise identical
+/// results). The schedule un-binds both phases from single owners:
+/// phase 1's trtri column pipelines split each tail update across the
+/// `P` row owners of the current tile's grid column (solved blocks
+/// ride column rings to them, the running tail hands off along grid
+/// rows); phase 2's lauum rounds broadcast the panel as `P` parallel
+/// **row-ring** segments of `≈ rows/P` (instead of one devices-wide
+/// `O(rows·T)` broadcast) and reduce each result block's partial
+/// products up its column ring.
+fn potri_dist_grid<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    a: &mut DistMatrix<S>,
+    grid: BlockCyclic2D,
+) -> Result<()> {
+    let n = a.rows();
+    if grid.tile_r() != grid.tile_c() {
+        return Err(Error::layout(
+            "grid-native potri needs square tiles (tile_r == tile_c) — redistribute first",
+        ));
+    }
+    let (p, q) = grid.grid();
+    let comm = GridComm::new(p, q);
+    let rd = grid.row_dim();
+    let cd = grid.col_dim();
+    let nt = cd.num_tiles();
+    let esize = std::mem::size_of::<S>();
+    ctx.node.metrics().note_grid_solve(p as u64, q as u64);
+
+    ctx.begin_phase();
+    let amir = a.mirror_host()?;
+    // The device-side X workspace (the paper's §3 memory cost) is
+    // allocated for real so capacity accounting matches the 1D path;
+    // numerics evolve on its host mirror below.
+    let x_dev = DistMatrix::<S>::alloc(ctx.node, n, *a.layout())?;
+    let mut x = Matrix::<S>::zeros(n, n);
+
+    // ---- Phase 1: X = L⁻¹, one row-split pipeline per column tile.
+    for t in 0..nt {
+        let tk = cd.tile_len(t);
+        let k0 = cd.tile_start(t);
+
+        let mut tail = Matrix::<S>::zeros(n - k0, tk);
+        for c in 0..tk {
+            tail[(c, c)] = S::one();
+        }
+
+        for j in t..nt {
+            let tj = cd.tile_len(j);
+            let j0 = cd.tile_start(j);
+            let j1 = j0 + tj;
+            let rj = rd.owner(j);
+            let cj = cd.owner(j);
+            let djj = comm.device(rj, cj);
+
+            // Solve the diagonal block on tile (j, j)'s owner.
+            let ljj = amir.submatrix(j0, j0, tj, tj);
+            let bj = tail.submatrix(j0 - k0, 0, tj, tk);
+            let zj = ctx.kernels.trsm_llnn(&ljj, &bj)?;
+            ctx.charge_panel(djj, GpuCostModel::flops_trsm(S::DTYPE, tj, tk, tj))?;
+
+            // Store the solved block at X tile (j, t) — a hop along
+            // grid row rj when the columns differ.
+            x.set_submatrix(j0, k0, &zj);
+            let x_owner = comm.device(rj, cd.owner(t));
+            ctx.charge_ring_p2p(RingAxis::Row, djj, x_owner, tj * tk * esize)?;
+
+            // Update the running tail below, split across grid rows.
+            let below = n - j1;
+            if below > 0 {
+                let mut segb = vec![0usize; p];
+                for jj in (j + 1)..nt {
+                    segb[rd.owner(jj)] += rd.tile_len(jj);
+                }
+                let members: Vec<usize> = (0..p)
+                    .filter(|&r| r != rj && segb[r] > 0)
+                    .map(|r| comm.device(r, cj))
+                    .collect();
+                ctx.charge_col_ring_broadcast(djj, &members, tj * tk * esize)?;
+                let panel = amir.submatrix(j1, j0, below, tj);
+                let mut lower = tail.submatrix(j1 - k0, 0, below, tk);
+                ctx.kernels.gemm_nn(&mut lower, &panel, &zj, -S::one())?;
+                for r in 0..p {
+                    if segb[r] > 0 {
+                        ctx.charge_gemm(comm.device(r, cj), segb[r], tk, tj)?;
+                    }
+                }
+                tail.set_submatrix(j1 - k0, 0, &lower);
+                let cnext = cd.owner(j + 1);
+                if cnext != cj {
+                    for r in 0..p {
+                        if segb[r] > 0 {
+                            ctx.charge_ring_p2p(
+                                RingAxis::Row,
+                                comm.device(r, cj),
+                                comm.device(r, cnext),
+                                segb[r] * tk * esize,
+                            )?;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- Phase 2: A⁻¹ = Xᴴ·X in place over the mirror.
+    for ti in 0..nt {
+        let tki = cd.tile_len(ti);
+        let k0i = cd.tile_start(ti);
+        let pi_rows = n - k0i;
+        let ri = rd.owner(ti);
+        let ci = cd.owner(ti);
+
+        // Snapshot the panel BEFORE any round-ti writes (the in-place
+        // correctness argument of the 1D path), then broadcast it as P
+        // parallel row-ring segments.
+        let pi = x.submatrix(k0i, k0i, pi_rows, tki);
+        let mut segi = vec![0usize; p];
+        for j in ti..nt {
+            segi[rd.owner(j)] += rd.tile_len(j);
+        }
+        for r in 0..p {
+            if segi[r] == 0 {
+                continue;
+            }
+            let members: Vec<usize> =
+                (0..q).filter(|&c| c != ci).map(|c| comm.device(r, c)).collect();
+            ctx.charge_row_ring_broadcast(comm.device(r, ci), &members, segi[r] * tki * esize)?;
+        }
+
+        for tj in 0..nt {
+            let tkj = cd.tile_len(tj);
+            let k0j = cd.tile_start(tj);
+            let cj = cd.owner(tj);
+            let kmax = k0i.max(k0j);
+            let height = n - kmax;
+            let tmax = ti.max(tj);
+
+            let a_blk = pi.submatrix(kmax - k0i, 0, height, tki);
+            let b_blk = x.submatrix(kmax, k0j, height, tkj);
+            let mut c = Matrix::<S>::zeros(tki, tkj);
+            ctx.kernels.gemm_hn(&mut c, &a_blk, &b_blk, S::one())?;
+            // Partial products on the grid rows holding the
+            // contraction, reduced up column cj to the result block's
+            // owner (tile (ti, tj)).
+            let mut segm = vec![0usize; p];
+            for jj in tmax..nt {
+                segm[rd.owner(jj)] += rd.tile_len(jj);
+            }
+            for r in 0..p {
+                if segm[r] > 0 {
+                    ctx.charge_gemm(comm.device(r, cj), tki, tkj, segm[r])?;
+                }
+            }
+            for r in 0..p {
+                if r != ri && segm[r] > 0 {
+                    ctx.charge_ring_p2p(
+                        RingAxis::Col,
+                        comm.device(r, cj),
+                        comm.device(ri, cj),
+                        tki * tkj * esize,
+                    )?;
+                }
+            }
+            x.set_submatrix(k0i, k0j, &c);
+        }
+    }
+
+    // Copy the inverse into `a` (local device copies, charged at the
+    // link model's local bandwidth).
+    for d in 0..ctx.node.num_devices() {
+        let bytes = grid.local_elems(d) * esize;
+        if bytes == 0 {
+            continue;
+        }
+        ctx.charge_device_time(d, ctx.node.topology().copy_time(d, d, bytes), 0)?;
+    }
+    a.write_back_host(&x)?;
+    x_dev.free()?;
+    let _ = ctx.end_phase();
+    Ok(())
 }
 
 #[cfg(test)]

@@ -13,19 +13,28 @@
 //! end so every device's replica of `x` is consistent, matching the
 //! replicated output spec.
 
-use super::Ctx;
+use super::{Ctx, GridComm, RingAxis};
 use crate::costmodel::GpuCostModel;
 use crate::error::{Error, Result};
+use crate::layout::{BlockCyclic2D, MatrixLayout};
 use crate::linalg::Matrix;
 use crate::scalar::Scalar;
 use crate::tile::DistMatrix;
 
 /// Solve `L·Lᴴ·X = B` for replicated `B` (host-mirrored `n × nrhs`).
+/// Dispatches on the factor's layout: columnar (and `P = 1` grids) run
+/// the owner-to-owner software pipeline; `P × Q` grids run grid-native
+/// ([`potrs_dist_grid`]) with the tail updates split across grid rows.
 pub fn potrs_dist<S: Scalar>(
     ctx: &Ctx<'_, S>,
     l: &DistMatrix<S>,
     b: &Matrix<S>,
 ) -> Result<Matrix<S>> {
+    if l.layout().compat_1d(l.rows()).is_none() {
+        if let Some(grid) = l.layout().grid2d().copied() {
+            return potrs_dist_grid(ctx, l, b, grid);
+        }
+    }
     // Compatibility path: a 1D block-cyclic handle, or a P=1 grid whose
     // storage is bitwise columnar (see `LayoutKind::compat_1d`).
     let lay = l
@@ -108,6 +117,173 @@ pub fn potrs_dist<S: Scalar>(
         // tail hand-off above — so pipelined contexts keep it off the
         // critical path (see `Ctx::charge_fanout`).
         ctx.charge_fanout(owner, tk * nrhs * esize)?;
+    }
+    let _ = ctx.end_phase();
+    Ok(x)
+}
+
+/// Grid-native two-sweep solve over a `P × Q` factor: numerics are the
+/// exact 1D kernel sequence computed from a host mirror of `L`
+/// (bitwise identical results); the schedule splits every tail update
+/// across the `P` row owners of the current tile's grid column, the
+/// solved diagonal blocks ride **column rings** to those owners, the
+/// running tail hands off **along grid rows** in `P` parallel
+/// segments (instead of one `O(n·nrhs)` transfer between single
+/// owners), and the backward sweep reduces its partial products up the
+/// column ring before each diagonal solve.
+fn potrs_dist_grid<S: Scalar>(
+    ctx: &Ctx<'_, S>,
+    l: &DistMatrix<S>,
+    b: &Matrix<S>,
+    grid: BlockCyclic2D,
+) -> Result<Matrix<S>> {
+    let n = l.rows();
+    if b.rows() != n {
+        return Err(Error::shape(format!("rhs has {} rows, matrix is {n}x{n}", b.rows())));
+    }
+    if grid.tile_r() != grid.tile_c() {
+        return Err(Error::layout(
+            "grid-native potrs needs square tiles (tile_r == tile_c) — redistribute first",
+        ));
+    }
+    let nrhs = b.cols();
+    let (p, q) = grid.grid();
+    let comm = GridComm::new(p, q);
+    let rd = grid.row_dim();
+    let cd = grid.col_dim();
+    let nt = cd.num_tiles();
+    let esize = std::mem::size_of::<S>();
+    ctx.node.metrics().note_grid_solve(p as u64, q as u64);
+
+    ctx.begin_phase();
+    let lmir = l.mirror_host()?;
+    let mut y = b.clone();
+
+    // Panel rows below tile t owned by grid row r.
+    let seg_below = |t: usize| -> Vec<usize> {
+        let mut seg = vec![0usize; p];
+        for j in (t + 1)..nt {
+            seg[rd.owner(j)] += rd.tile_len(j);
+        }
+        seg
+    };
+
+    // ---- Forward sweep: L·Y = B.
+    for t in 0..nt {
+        let tk = cd.tile_len(t);
+        let k0 = cd.tile_start(t);
+        let k1 = k0 + tk;
+        let rt = rd.owner(t);
+        let ct = cd.owner(t);
+        let diag = comm.device(rt, ct);
+
+        let lkk = lmir.submatrix(k0, k0, tk, tk);
+        let yk = y.submatrix(k0, 0, tk, nrhs);
+        let solved = ctx.kernels.trsm_llnn(&lkk, &yk)?;
+        ctx.charge_panel(diag, GpuCostModel::flops_trsm(S::DTYPE, tk, nrhs, tk))?;
+        y.set_submatrix(k0, 0, &solved);
+
+        let below = n - k1;
+        if below > 0 {
+            let seg = seg_below(t);
+            // The solved block flows down the column ring to the row
+            // owners updating their tail segments.
+            let members: Vec<usize> =
+                (0..p).filter(|&r| r != rt && seg[r] > 0).map(|r| comm.device(r, ct)).collect();
+            ctx.charge_col_ring_broadcast(diag, &members, tk * nrhs * esize)?;
+            // Tail update, split across the grid rows (numerics: the
+            // exact 1D full-tail GEMM).
+            let panel = lmir.submatrix(k1, k0, below, tk);
+            let mut tail = y.submatrix(k1, 0, below, nrhs);
+            ctx.kernels.gemm_nn(&mut tail, &panel, &solved, -S::one())?;
+            for r in 0..p {
+                if seg[r] > 0 {
+                    ctx.charge_gemm(comm.device(r, ct), seg[r], nrhs, tk)?;
+                }
+            }
+            y.set_submatrix(k1, 0, &tail);
+            // Hand the running tail to the next tile's grid column — P
+            // parallel row-segment hops instead of one O(n·nrhs) move.
+            let cn = cd.owner(t + 1);
+            if cn != ct {
+                for r in 0..p {
+                    if seg[r] > 0 {
+                        ctx.charge_ring_p2p(
+                            RingAxis::Row,
+                            comm.device(r, ct),
+                            comm.device(r, cn),
+                            seg[r] * nrhs * esize,
+                        )?;
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- Backward sweep: Lᴴ·X = Y.
+    let mut x = y;
+    for t in (0..nt).rev() {
+        let tk = cd.tile_len(t);
+        let k0 = cd.tile_start(t);
+        let k1 = k0 + tk;
+        let rt = rd.owner(t);
+        let ct = cd.owner(t);
+        let diag = comm.device(rt, ct);
+        let below = n - k1;
+
+        let mut xk = x.submatrix(k0, 0, tk, nrhs);
+        if below > 0 {
+            let seg = seg_below(t);
+            // Partial products on the row owners, reduced up the
+            // column ring to the diagonal owner.
+            let panel = lmir.submatrix(k1, k0, below, tk);
+            let xtail = x.submatrix(k1, 0, below, nrhs);
+            ctx.kernels.gemm_hn(&mut xk, &panel, &xtail, -S::one())?;
+            for r in 0..p {
+                if seg[r] > 0 {
+                    ctx.charge_gemm(comm.device(r, ct), tk, nrhs, seg[r])?;
+                }
+            }
+            for r in 0..p {
+                if r != rt && seg[r] > 0 {
+                    ctx.charge_ring_p2p(
+                        RingAxis::Col,
+                        comm.device(r, ct),
+                        diag,
+                        tk * nrhs * esize,
+                    )?;
+                }
+            }
+        }
+        let lkk = lmir.submatrix(k0, k0, tk, tk);
+        let solved = ctx.kernels.trsm_llhn(&lkk, &xk)?;
+        ctx.charge_panel(diag, GpuCostModel::flops_trsm(S::DTYPE, tk, nrhs, tk))?;
+        x.set_submatrix(k0, 0, &solved);
+
+        if t > 0 {
+            // The solved tail x[k0..] hands off to the previous tile's
+            // grid column as P parallel row segments.
+            let cprev = cd.owner(t - 1);
+            if cprev != ct {
+                let mut rows_ge = vec![0usize; p];
+                for j in t..nt {
+                    rows_ge[rd.owner(j)] += rd.tile_len(j);
+                }
+                for r in 0..p {
+                    if rows_ge[r] > 0 {
+                        ctx.charge_ring_p2p(
+                            RingAxis::Row,
+                            comm.device(r, ct),
+                            comm.device(r, cprev),
+                            rows_ge[r] * nrhs * esize,
+                        )?;
+                    }
+                }
+            }
+        }
+        // Replicated output: a pure fan-out, off the critical path
+        // under the pipelined schedule (see `Ctx::charge_fanout`).
+        ctx.charge_fanout(diag, tk * nrhs * esize)?;
     }
     let _ = ctx.end_phase();
     Ok(x)

@@ -35,6 +35,72 @@ use std::sync::Mutex;
 /// Default panel lookahead depth used by the pipelined solvers.
 pub const DEFAULT_LOOKAHEAD: usize = 2;
 
+/// Which ring a grid collective travels along — grid **rows** carry
+/// panel segments sideways (one ring per grid row, disjoint source
+/// links), grid **columns** carry diagonal blocks, transposed panels
+/// and partial-result reductions up/down. The split is what shrinks
+/// per-panel broadcast volume from `O(n)` devices-wide (the 1D layout)
+/// to `O(n/P)` per ring; the two byte counters
+/// (`grid_row_bytes`/`grid_col_bytes` in [`crate::metrics::Metrics`])
+/// record it.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum RingAxis {
+    /// Along a grid row (between grid columns).
+    Row,
+    /// Along a grid column (between grid rows).
+    Col,
+}
+
+/// Row/column communicator over a `P × Q` device grid (row-major
+/// device ordinals, as [`crate::layout::MatrixLayout`] lays them out):
+/// the membership arithmetic behind the per-row / per-column ring
+/// collectives of the grid-native solvers. Purely coordinate math — no
+/// device state — so it is freely `Copy` into schedule loops.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct GridComm {
+    p: usize,
+    q: usize,
+}
+
+impl GridComm {
+    /// Communicator over a `p × q` grid.
+    pub fn new(p: usize, q: usize) -> Self {
+        debug_assert!(p > 0 && q > 0, "grid dimensions must be positive");
+        GridComm { p, q }
+    }
+
+    /// Grid rows `P`.
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Grid columns `Q`.
+    pub fn q(&self) -> usize {
+        self.q
+    }
+
+    /// Device ordinal of grid coordinate `(r, c)`.
+    pub fn device(&self, r: usize, c: usize) -> usize {
+        debug_assert!(r < self.p && c < self.q);
+        r * self.q + c
+    }
+
+    /// Grid coordinate of device ordinal `d`.
+    pub fn coords(&self, d: usize) -> (usize, usize) {
+        (d / self.q, d % self.q)
+    }
+
+    /// The devices of grid row `r` (the row ring's members).
+    pub fn row_members(&self, r: usize) -> Vec<usize> {
+        (0..self.q).map(|c| self.device(r, c)).collect()
+    }
+
+    /// The devices of grid column `c` (the column ring's members).
+    pub fn col_members(&self, c: usize) -> Vec<usize> {
+        (0..self.p).map(|r| self.device(r, c)).collect()
+    }
+}
+
 /// How a solver run is scheduled onto the simulated device timelines.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub struct PipelineConfig {
@@ -238,6 +304,18 @@ impl PipelineTimeline {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn grid_comm_membership() {
+        let gc = GridComm::new(2, 3);
+        assert_eq!(gc.device(1, 2), 5);
+        assert_eq!(gc.coords(5), (1, 2));
+        assert_eq!(gc.row_members(0), vec![0, 1, 2]);
+        assert_eq!(gc.row_members(1), vec![3, 4, 5]);
+        assert_eq!(gc.col_members(1), vec![1, 4]);
+        assert_eq!(gc.p(), 2);
+        assert_eq!(gc.q(), 3);
+    }
 
     #[test]
     fn config_defaults_and_modes() {

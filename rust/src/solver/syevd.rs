@@ -37,7 +37,7 @@
 //! device's timeline, and reflector broadcasts / all-reduces are
 //! charged to the NVLink model. See DESIGN.md §Hardware substitution.
 
-use super::Ctx;
+use super::{Ctx, RingAxis};
 use crate::error::{Error, Result};
 use crate::layout::{BlockCyclic2D, MatrixLayout};
 use crate::linalg::{tql2, Matrix, Tridiagonal};
@@ -292,6 +292,7 @@ fn syevd_dist_grid<S: Scalar>(
     let (p, q) = grid.grid();
     let ndev = ctx.node.num_devices();
     let esize = std::mem::size_of::<S>();
+    ctx.node.metrics().note_grid_solve(p as u64, q as u64);
 
     ctx.begin_phase();
 
@@ -371,7 +372,7 @@ fn syevd_dist_grid<S: Scalar>(
         // parallel group collectives of ≈ n/P words (vs one owner
         // pushing n words in 1D).
         for r in 0..p {
-            ctx.charge_group_broadcast(dev(r, ck), &row_members[r], seg_rows[r] * esize)?;
+            ctx.charge_row_ring_broadcast(dev(r, ck), &row_members[r], seg_rows[r] * esize)?;
         }
 
         // Distributed matvec A·u: each device contracts its block;
@@ -398,7 +399,7 @@ fn syevd_dist_grid<S: Scalar>(
                     (2 * blk) as u64,
                 )?;
                 if c != ck {
-                    ctx.charge_p2p(dev(r, c), dev(r, ck), seg_rows[r] * esize)?;
+                    ctx.charge_ring_p2p(RingAxis::Row, dev(r, c), dev(r, ck), seg_rows[r] * esize)?;
                 }
             }
             for i in 0..n {
@@ -407,7 +408,7 @@ fn syevd_dist_grid<S: Scalar>(
         }
         // w fans back out the same way: P parallel row-group segments.
         for r in 0..p {
-            ctx.charge_group_broadcast(dev(r, ck), &row_members[r], seg_rows[r] * esize)?;
+            ctx.charge_row_ring_broadcast(dev(r, ck), &row_members[r], seg_rows[r] * esize)?;
         }
 
         let mut uhau = S::zero();
@@ -513,7 +514,7 @@ fn syevd_dist_grid<S: Scalar>(
             let blocks = nrefl.div_ceil(grid.tile_c().max(1));
             for r in 1..p {
                 for _ in 0..blocks {
-                    ctx.charge_p2p(dev(r, c), dev(0, c), loc_cols[c] * esize)?;
+                    ctx.charge_ring_p2p(RingAxis::Col, dev(r, c), dev(0, c), loc_cols[c] * esize)?;
                 }
             }
         }

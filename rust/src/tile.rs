@@ -110,6 +110,17 @@ impl LayoutKind {
         }
     }
 
+    /// The `(P, Q)` process-grid shape of the layout: `(1, ndev)` for
+    /// the columnar kinds (they are `1 × Q` deals), the grid shape for
+    /// tile-grid kinds — what the serving fronts report per solve.
+    pub fn grid_shape(&self) -> (usize, usize) {
+        match self {
+            LayoutKind::Contiguous(_) | LayoutKind::BlockCyclic(_) => (1, self.num_devices()),
+            LayoutKind::Grid(l) => l.grid(),
+            LayoutKind::GridContig(l) => l.grid(),
+        }
+    }
+
     /// The 1D block-cyclic *compatibility view* for a matrix with
     /// `rows` rows: the layout the 1D solvers (`potrf`/`potrs`/`potri`
     /// and `syevd`'s 1D path) run on. Covers the native 1D kind and any
@@ -177,8 +188,12 @@ impl LayoutKind {
 /// order — the shard a worker process stages **locally** in MPMD mode
 /// (each worker builds and uploads only its own panel; the single
 /// caller assembles the pointers via [`DistMatrix::from_panels`]).
-/// [`DistMatrix::scatter`] uses the same function, so worker-staged
-/// panels are bitwise identical to single-caller scatters.
+/// Layout-generic: columnar kinds yield the 1D column panels, grid
+/// kinds the tile-major 2D shards — which is what lets MPMD workers
+/// stage and IPC-export 2D tiles for grid-native solves with the same
+/// code path. [`DistMatrix::scatter`] uses the same function, so
+/// worker-staged panels are bitwise identical to single-caller
+/// scatters.
 pub fn build_panel<S: Scalar>(
     layout: &LayoutKind,
     rows: usize,
@@ -586,6 +601,22 @@ mod tests {
         dm.write_back_host(&b).unwrap();
         assert_eq!(dm.gather().unwrap(), b);
         assert!(dm.write_back_host(&Matrix::<f64>::zeros(3, 3)).is_err());
+    }
+
+    #[test]
+    fn grid_shape_reports_process_grids() {
+        assert_eq!(
+            LayoutKind::BlockCyclic(BlockCyclic1D::new(12, 3, 4).unwrap()).grid_shape(),
+            (1, 4)
+        );
+        assert_eq!(
+            LayoutKind::Grid(BlockCyclic2D::new(12, 12, 3, 3, 2, 2).unwrap()).grid_shape(),
+            (2, 2)
+        );
+        assert_eq!(
+            LayoutKind::GridContig(ContiguousGrid2D::new(12, 12, 3, 3, 4, 1).unwrap()).grid_shape(),
+            (4, 1)
+        );
     }
 
     #[test]

@@ -1,0 +1,329 @@
+#!/usr/bin/env python3
+"""Offline generator for `potrf2d_timelines.txt`.
+
+This container has no Rust toolchain, so the golden snapshot of the
+grid-native potrf schedule is produced by an exact integer-nanosecond
+replication of the simulator's arithmetic: the same H200 cost-model
+constants, the same `SimClock`/`Stream` u64-ns state transitions
+(`round(seconds * 1e9)` half-away-from-zero), and the same charge
+sequence as `solver::potrf::potrf_dist_grid` under both the barrier and
+lookahead(2) schedules. The sibling `replicate_1d` methodology was
+validated byte-for-byte against the committed `potrf_timelines.txt`
+before this generator was trusted.
+
+Timing depends only on shapes and model constants — never on matrix
+values — so no numerics are replicated here.
+
+Regenerate (with a Rust toolchain) via
+`UPDATE_GOLDEN=1 cargo test --test golden_timeline`, or (without one)
+`python3 gen_potrf2d.py > potrf2d_timelines.txt`.
+"""
+import math
+
+# ---- GpuCostModel::h200 (f64 dtype) ----
+F64_FLOPS = 30e12
+PANEL_EFF = 0.25
+LAUNCH = 8e-6
+NVLINK_BW = 450e9
+COPY_LAT = 5e-6
+ESIZE = 8  # f64
+
+
+def rnd(x):
+    """Rust `f64::round` (half away from zero) for non-negative x."""
+    return int(math.floor(x + 0.5))
+
+
+def flops_potf2(n):
+    return int((float(n) * float(n) * float(n)) / 3.0)
+
+
+def flops_trsm(m, n, tri):
+    return int(float(m) * float(n) * float(tri))
+
+
+def flops_gemm(m, n, k):
+    return int(2.0 * float(m) * float(n) * float(k))
+
+
+def panel_time(fl):
+    return LAUNCH + float(fl) / (F64_FLOPS * PANEL_EFF)
+
+
+def gemm_util(d):
+    d = float(d)
+    return d / (d + 192.0)
+
+
+def copy_time(bytes_):
+    return COPY_LAT + float(bytes_) / NVLINK_BW
+
+
+class Stream:
+    """`device::Stream`: u64-ns horizon, issue_after = max+add."""
+
+    def __init__(self):
+        self.h = 0
+
+    def horizon(self):
+        return self.h * 1e-9
+
+    def issue_after(self, not_before, secs):
+        nb = rnd(not_before * 1e9)
+        dur = rnd(secs * 1e9)
+        self.h = max(self.h, nb) + dur
+        return self.h * 1e-9
+
+
+class Clock:
+    """`device::SimClock`: u64-ns accumulator."""
+
+    def __init__(self):
+        self.ns = 0
+
+    def now(self):
+        return self.ns * 1e-9
+
+    def advance(self, secs):
+        self.ns += rnd(secs * 1e9)
+
+    def sync_to(self, sec):
+        self.ns = max(self.ns, rnd(sec * 1e9))
+
+
+def tile_len(tt, n, t):
+    return min(t, n - tt * t)
+
+
+def run_grid_potrf(p, q, tile, n, lookahead):
+    """Replicates `potrf_dist_grid`'s charges. lookahead=0 → barrier.
+
+    Returns (makespan_seconds, snapshot or None) where snapshot is a
+    list of (dev, compute_h, panel_h, copy_h, busy_s).
+    """
+    nt = (n + tile - 1) // tile
+    ndev = p * q
+    dev = lambda r, c: r * q + c
+    pipelined = lookahead > 0
+    if pipelined:
+        compute = [Stream() for _ in range(ndev)]
+        panelst = [Stream() for _ in range(ndev)]
+        copyst = [Stream() for _ in range(ndev)]
+        busy = [0] * ndev
+    else:
+        clk = [Clock() for _ in range(ndev)]
+    colgate = [0.0] * nt
+    step_done = [0.0] * nt
+
+    for t in range(nt):
+        tk = tile_len(t, n, tile)
+        k1 = t * tile + tk
+        rt = t % p
+        ct = t % q
+        diag = dev(rt, ct)
+
+        # 1. potf2 on the diagonal owner.
+        nb = colgate[t]
+        if t > lookahead:
+            nb = max(nb, step_done[t - 1 - lookahead])
+        secs = panel_time(flops_potf2(tk))
+        potf2_done = 0.0
+        if pipelined:
+            potf2_done = panelst[diag].issue_after(nb, secs)
+            busy[diag] += rnd(secs * 1e9)
+        else:
+            clk[diag].advance(secs)
+
+        below = n - k1
+        if below == 0:
+            continue
+
+        seg = [0] * p
+        for j in range(t + 1, nt):
+            seg[j % p] += tile_len(j, n, tile)
+        cols_of = [0] * q
+        for k in range(t + 1, nt):
+            cols_of[k % q] += tile_len(k, n, tile)
+
+        # 2. L_tt column ring.
+        ltt_members = [dev(r, ct) for r in range(p) if r != rt and seg[r] > 0]
+        ltt_arrival = [0.0] * ndev
+        ltt_bytes = tk * tk * ESIZE
+        if ltt_members:
+            recv = len(ltt_members)
+            for m in ltt_members:
+                tcopy = copy_time(ltt_bytes) / recv
+                if pipelined:
+                    done = copyst[diag].issue_after(potf2_done, tcopy)
+                    busy[diag] += rnd(tcopy * 1e9)
+                    ltt_arrival[m] = done
+                else:
+                    clk[diag].advance(tcopy)
+                    clk[m].sync_to(clk[diag].now())
+
+        # 3. Panel trsm split across the P row owners.
+        trsm_done = [0.0] * p
+        for r in range(p):
+            if seg[r] == 0:
+                continue
+            src = dev(r, ct)
+            fl = flops_trsm(seg[r], tk, tk)
+            secs = panel_time(fl)
+            if pipelined:
+                arrive = potf2_done if src == diag else ltt_arrival[src]
+                trsm_done[r] = panelst[src].issue_after(max(nb, arrive), secs)
+                busy[src] += rnd(secs * 1e9)
+            else:
+                clk[src].advance(secs)
+
+        # 4. Row rings.
+        row_arrival = [0.0] * ndev
+        for r in range(p):
+            if seg[r] == 0:
+                continue
+            src = dev(r, ct)
+            members = [dev(r, c) for c in range(q) if c != ct and cols_of[c] > 0]
+            if not members:
+                continue
+            bytes_ = seg[r] * tk * ESIZE
+            recv = len(members)
+            for m in members:
+                tcopy = copy_time(bytes_) / recv
+                if pipelined:
+                    done = copyst[src].issue_after(trsm_done[r], tcopy)
+                    busy[src] += rnd(tcopy * 1e9)
+                    row_arrival[m] = done
+                else:
+                    clk[src].advance(tcopy)
+                    clk[m].sync_to(clk[src].now())
+
+        # 5. Column rings (transposed panel blocks).
+        colt_arrival = [0.0] * ndev
+        for c in range(q):
+            if cols_of[c] == 0:
+                continue
+            blk = [0] * p
+            for k in range(t + 1, nt):
+                if k % q == c:
+                    blk[k % p] += tile_len(k, n, tile)
+            for rs in range(p):
+                if blk[rs] == 0:
+                    continue
+                src = dev(rs, c)
+                members = [dev(r, c) for r in range(p) if r != rs and seg[r] > 0]
+                if not members:
+                    continue
+                bytes_ = blk[rs] * tk * ESIZE
+                recv = len(members)
+                src_ready = trsm_done[rs] if c == ct else row_arrival[src]
+                for m in members:
+                    tcopy = copy_time(bytes_) / recv
+                    if pipelined:
+                        done = copyst[src].issue_after(src_ready, tcopy)
+                        busy[src] += rnd(tcopy * 1e9)
+                        colt_arrival[m] = max(colt_arrival[m], done)
+                    else:
+                        clk[src].advance(tcopy)
+                        clk[m].sync_to(clk[src].now())
+
+        # 6. Fused local trailing GEMMs, split lookahead-first: each
+        # device updates its piece of the NEXT panel column (tile
+        # column t+1) as its own launch before the rest of its local
+        # trailing block, so the next panel factors while the bulk
+        # update is still in flight (the classic lookahead split).
+        fl_next = [0] * ndev
+        fl_rest = [0] * ndev
+        for j in range(t + 1, nt):
+            r = j % p
+            for k in range(t + 1, j + 1):
+                f = flops_gemm(tile_len(j, n, tile), tile_len(k, n, tile), tk)
+                if k == t + 1:
+                    fl_next[dev(r, k % q)] += f
+                else:
+                    fl_rest[dev(r, k % q)] += f
+        next_w = tile_len(t + 1, n, tile)
+        cnext = (t + 1) % q
+        step_max = 0.0
+        for r in range(p):
+            for c in range(q):
+                d = dev(r, c)
+                if fl_next[d] == 0 and fl_rest[d] == 0:
+                    continue
+                if pipelined:
+                    panel_arr = trsm_done[r] if c == ct else row_arrival[d]
+                    dep = max(panel_arr, colt_arrival[d])
+                if fl_next[d] > 0:
+                    util = gemm_util(min(tk, seg[r], next_w))
+                    secs = LAUNCH + float(fl_next[d]) / (F64_FLOPS * util)
+                    if pipelined:
+                        done = compute[d].issue_after(dep, secs)
+                        busy[d] += rnd(secs * 1e9)
+                        if done > step_max:
+                            step_max = done
+                        if done > colgate[t + 1]:
+                            colgate[t + 1] = done
+                    else:
+                        clk[d].advance(secs)
+                if fl_rest[d] > 0:
+                    rest_w = cols_of[c] - (next_w if c == cnext else 0)
+                    util = gemm_util(min(tk, seg[r], rest_w))
+                    secs = LAUNCH + float(fl_rest[d]) / (F64_FLOPS * util)
+                    if pipelined:
+                        done = compute[d].issue_after(dep, secs)
+                        busy[d] += rnd(secs * 1e9)
+                        if done > step_max:
+                            step_max = done
+                        for k in range(t + 2, nt):
+                            if k % q != c:
+                                continue
+                            touches = any(j % p == r for j in range(k, nt))
+                            if touches and done > colgate[k]:
+                                colgate[k] = done
+                    else:
+                        clk[d].advance(secs)
+        step_done[t] = step_max
+
+    if pipelined:
+        makespan = 0.0
+        snap = []
+        for d in range(ndev):
+            h = max(compute[d].h, panelst[d].h, copyst[d].h) * 1e-9
+            makespan = max(makespan, h)
+            snap.append((d, compute[d].horizon(), panelst[d].horizon(),
+                         copyst[d].horizon(), busy[d] * 1e-9))
+        return makespan, snap
+    return max(c.now() for c in clk), None
+
+
+GRID2D = [(2, 2, 4, 32), (2, 2, 8, 64), (2, 4, 8, 128)]
+
+
+def render():
+    out = []
+    out.append("# golden grid potrf timelines (µs) — regenerate with UPDATE_GOLDEN=1")
+    for (p, q, tile, n) in GRID2D:
+        tb, _ = run_grid_potrf(p, q, tile, n, 0)
+        tl, snap = run_grid_potrf(p, q, tile, n, 2)
+        out.append(f"config p={p} q={q} tile={tile} n={n}")
+        out.append(f"  barrier_makespan_us   {tb * 1e6:.3f}")
+        out.append(f"  lookahead_makespan_us {tl * 1e6:.3f}")
+        for (d, c, pa, cp, b) in snap:
+            out.append(
+                f"  dev {d} compute {c * 1e6:.3f} panel {pa * 1e6:.3f} "
+                f"copy {cp * 1e6:.3f} busy {b * 1e6:.3f}"
+            )
+    return "\n".join(out) + "\n"
+
+
+if __name__ == "__main__":
+    import sys
+    text = render()
+    sys.stdout.write(text)
+    for (p, q, tile, n) in GRID2D:
+        tb, _ = run_grid_potrf(p, q, tile, n, 0)
+        tl, _ = run_grid_potrf(p, q, tile, n, 2)
+        assert tl < tb, f"lookahead must strictly beat barrier at {(p, q, tile, n)}"
+        sys.stderr.write(
+            f"(p={p} q={q} tile={tile} n={n}) barrier {tb*1e6:.3f}us "
+            f"lookahead {tl*1e6:.3f}us  win {(1 - tl/tb)*100:.1f}%\n"
+        )

@@ -25,10 +25,10 @@
 
 use jaxmg::costmodel::GpuCostModel;
 use jaxmg::device::SimNode;
-use jaxmg::layout::BlockCyclic1D;
+use jaxmg::layout::{BlockCyclic1D, BlockCyclic2D};
 use jaxmg::linalg::Matrix;
 use jaxmg::solver::{potrf_dist, potrs_dist, Ctx, DeviceTimeline, PipelineConfig, SolverBackend};
-use jaxmg::tile::{DistMatrix, Layout1D};
+use jaxmg::tile::{DistMatrix, Layout1D, LayoutKind};
 use std::fmt::Write as _;
 
 /// `(ndev, tile, n)` — every entry satisfies ndev >= 4 and n >= 4*tile.
@@ -50,7 +50,11 @@ fn run_potrf(
     let ctx = Ctx::with_pipeline(&node, &model, &backend, cfg);
     potrf_dist(&ctx, &mut dm).unwrap();
     let snap = ctx.timeline_snapshot();
-    (dm.gather().unwrap(), node.sim_time(), snap)
+    // Capture the makespan BEFORE the verification gather: the
+    // snapshot pins the factorization schedule, and the gather's H2D
+    // charges are not part of it.
+    let makespan = node.sim_time();
+    (dm.gather().unwrap(), makespan, snap)
 }
 
 #[test]
@@ -211,4 +215,85 @@ fn render_potrs_snapshot() -> String {
 #[test]
 fn potrs_timelines_match_golden_snapshot() {
     check_golden("potrs_timelines.txt", render_potrs_snapshot());
+}
+
+// ---------------------------------------------------------------------------
+// grid-native potrf: the 2D execution schedule
+// ---------------------------------------------------------------------------
+
+/// `(p, q, tile, n)` grid-native configurations. The committed
+/// snapshot was generated offline by `tests/golden/gen_potrf2d.py`
+/// (an exact integer-ns replication of this schedule); this test
+/// verifies the live scheduler against it.
+const GRID2D: &[(usize, usize, usize, usize)] = &[(2, 2, 4, 32), (2, 2, 8, 64), (2, 4, 8, 128)];
+
+fn run_potrf2d(
+    p: usize,
+    q: usize,
+    tile: usize,
+    n: usize,
+    cfg: PipelineConfig,
+) -> (Matrix<f64>, f64, Option<Vec<DeviceTimeline>>) {
+    let node = SimNode::new_uniform(p * q, 1 << 27);
+    let model = GpuCostModel::h200();
+    let backend = SolverBackend::<f64>::Native;
+    let a = Matrix::<f64>::spd_random(n, 0xD15C0 + n as u64);
+    let lay = LayoutKind::Grid(BlockCyclic2D::new(n, n, tile, tile, p, q).unwrap());
+    let mut dm = DistMatrix::scatter(&node, &a, lay).unwrap();
+    node.reset_accounting();
+    let ctx = Ctx::with_pipeline(&node, &model, &backend, cfg);
+    potrf_dist(&ctx, &mut dm).unwrap();
+    let snap = ctx.timeline_snapshot();
+    // As in `run_potrf`: the gather's H2D charges are not part of the
+    // factorization schedule the snapshot pins.
+    let makespan = node.sim_time();
+    (dm.gather().unwrap(), makespan, snap)
+}
+
+#[test]
+fn grid_lookahead_beats_barrier_on_every_grid_config() {
+    for &(p, q, tile, n) in GRID2D {
+        let (l_barrier, t_barrier, _) = run_potrf2d(p, q, tile, n, PipelineConfig::barrier());
+        let (l_look, t_look, _) = run_potrf2d(p, q, tile, n, PipelineConfig::lookahead(2));
+        assert_eq!(
+            l_barrier.as_slice(),
+            l_look.as_slice(),
+            "schedule changed grid numerics (p={p} q={q} tile={tile} n={n})"
+        );
+        assert!(
+            t_look < t_barrier,
+            "grid lookahead {t_look} !< barrier {t_barrier} (p={p} q={q} tile={tile} n={n})"
+        );
+    }
+}
+
+fn render_potrf2d_snapshot() -> String {
+    let mut out = String::new();
+    out.push_str("# golden grid potrf timelines (µs) — regenerate with UPDATE_GOLDEN=1\n");
+    for &(p, q, tile, n) in GRID2D {
+        let (_, t_barrier, _) = run_potrf2d(p, q, tile, n, PipelineConfig::barrier());
+        let (_, t_look, snap) = run_potrf2d(p, q, tile, n, PipelineConfig::lookahead(2));
+        let snap = snap.expect("pipelined run has a timeline");
+        writeln!(out, "config p={p} q={q} tile={tile} n={n}").unwrap();
+        writeln!(out, "  barrier_makespan_us   {:.3}", t_barrier * 1e6).unwrap();
+        writeln!(out, "  lookahead_makespan_us {:.3}", t_look * 1e6).unwrap();
+        for d in &snap {
+            writeln!(
+                out,
+                "  dev {} compute {:.3} panel {:.3} copy {:.3} busy {:.3}",
+                d.device,
+                d.compute_horizon * 1e6,
+                d.panel_horizon * 1e6,
+                d.copy_horizon * 1e6,
+                d.busy * 1e6
+            )
+            .unwrap();
+        }
+    }
+    out
+}
+
+#[test]
+fn potrf2d_timelines_match_golden_snapshot() {
+    check_golden("potrf2d_timelines.txt", render_potrf2d_snapshot());
 }

@@ -16,7 +16,9 @@ use jaxmg::layout::{
 use jaxmg::linalg::Matrix;
 use jaxmg::rng::Rng;
 use jaxmg::scalar::{c32, c64, Scalar};
-use jaxmg::solver::{potrf_dist, potrs_dist, syevd_dist, Ctx, PipelineConfig, SolverBackend};
+use jaxmg::solver::{
+    potrf_dist, potri_dist, potrs_dist, syevd_dist, Ctx, PipelineConfig, SolverBackend,
+};
 use jaxmg::tile::{DistMatrix, LayoutKind};
 
 const CASES: u64 = 25;
@@ -188,6 +190,148 @@ fn p1_grid_potrf_potrs_bitwise_match_1d() {
     assert_eq!(l1.as_slice(), l2.as_slice(), "P=1 grid changed the factor");
     assert_eq!(x1.as_slice(), x2.as_slice(), "P=1 grid changed the solution");
     assert_eq!(t1, t2, "P=1 grid changed the simulated schedule");
+}
+
+/// Run the whole Cholesky chain (factor → solve → inverse) on one
+/// layout under `cfg`, returning the gathered factor, solution and
+/// inverse plus the simulated makespan.
+fn chol_chain<S: Scalar>(
+    lay: LayoutKind,
+    a: &Matrix<S>,
+    b: &Matrix<S>,
+    cfg: PipelineConfig,
+) -> (Matrix<S>, Matrix<S>, Matrix<S>, f64) {
+    let node = SimNode::new_uniform(lay.num_devices(), 1 << 26);
+    let model = GpuCostModel::h200();
+    let backend = SolverBackend::<S>::Native;
+    let mut dm = DistMatrix::scatter(&node, a, lay).unwrap();
+    node.reset_accounting();
+    let ctx = Ctx::with_pipeline(&node, &model, &backend, cfg);
+    potrf_dist(&ctx, &mut dm).unwrap();
+    let l = dm.gather().unwrap();
+    let x = potrs_dist(&ctx, &dm, b).unwrap();
+    potri_dist(&ctx, &mut dm).unwrap();
+    let inv = dm.gather().unwrap();
+    (l, x, inv, node.sim_time())
+}
+
+/// Acceptance: `potrf/potrs/potri_dist` executing grid-natively on
+/// `P × Q` grids (ragged edge tiles included) produce **bitwise** the
+/// 1D path's factor, solution and inverse — for grid-native `P = 1`
+/// (`1 × Q`, square tiles) and `P > 1` alike.
+fn grid_native_cholesky_matches_1d<S: Scalar>(seed: u64) {
+    let (n, tile, nrhs) = (21usize, 4usize, 2usize); // ragged: 21 % 4 != 0
+    let a = Matrix::<S>::spd_random(n, seed);
+    let b = Matrix::<S>::random(n, nrhs, seed + 50);
+    let (l1, x1, i1, _) = chol_chain::<S>(
+        LayoutKind::BlockCyclic(BlockCyclic1D::new(n, tile, 4).unwrap()),
+        &a,
+        &b,
+        PipelineConfig::barrier(),
+    );
+    for (p, q) in [(2usize, 2usize), (4, 1), (1, 4)] {
+        let lay = LayoutKind::Grid(BlockCyclic2D::new(n, n, tile, tile, p, q).unwrap());
+        let (l2, x2, i2, _) = chol_chain::<S>(lay, &a, &b, PipelineConfig::barrier());
+        assert_eq!(l1.as_slice(), l2.as_slice(), "{p}x{q} factor diverges ({:?})", S::DTYPE);
+        assert_eq!(x1.as_slice(), x2.as_slice(), "{p}x{q} solution diverges ({:?})", S::DTYPE);
+        assert_eq!(i1.as_slice(), i2.as_slice(), "{p}x{q} inverse diverges ({:?})", S::DTYPE);
+    }
+}
+
+#[test]
+fn grid_native_cholesky_bitwise_f32() {
+    grid_native_cholesky_matches_1d::<f32>(0x61D1);
+}
+
+#[test]
+fn grid_native_cholesky_bitwise_f64() {
+    grid_native_cholesky_matches_1d::<f64>(0x61D2);
+}
+
+#[test]
+fn grid_native_cholesky_bitwise_c64() {
+    grid_native_cholesky_matches_1d::<c32>(0x61D3);
+}
+
+#[test]
+fn grid_native_cholesky_bitwise_c128() {
+    grid_native_cholesky_matches_1d::<c64>(0x61D4);
+}
+
+#[test]
+fn grid_chain_pipelined_matches_barrier_bitwise() {
+    // The lookahead schedule is a timing overlay on the grid paths too:
+    // identical numerics, and the full pipelined chain never runs
+    // slower than the barrier one.
+    let n = 24usize;
+    let a = Matrix::<f64>::spd_random(n, 0x61D5);
+    let b = Matrix::<f64>::random(n, 2, 0x61D6);
+    let lay = LayoutKind::Grid(BlockCyclic2D::new(n, n, 4, 4, 2, 2).unwrap());
+    let (l_b, x_b, i_b, t_b) = chol_chain::<f64>(lay, &a, &b, PipelineConfig::barrier());
+    let (l_l, x_l, i_l, t_l) = chol_chain::<f64>(lay, &a, &b, PipelineConfig::lookahead(2));
+    assert_eq!(l_b.as_slice(), l_l.as_slice(), "schedule changed the grid factor");
+    assert_eq!(x_b.as_slice(), x_l.as_slice(), "schedule changed the grid solution");
+    assert_eq!(i_b.as_slice(), i_l.as_slice(), "schedule changed the grid inverse");
+    assert!(t_l <= t_b, "grid pipelined chain {t_l} slower than barrier {t_b}");
+}
+
+#[test]
+fn grid_native_potrf_rides_rings_and_counts_metrics() {
+    let n = 32usize;
+    let node = SimNode::new_uniform(4, 1 << 26);
+    let model = GpuCostModel::h200();
+    let backend = SolverBackend::<f64>::Native;
+    let ctx = Ctx::new(&node, &model, &backend);
+    let a = Matrix::<f64>::spd_random(n, 0x61D7);
+    let b = Matrix::<f64>::ones(n, 1);
+    let lay = LayoutKind::Grid(BlockCyclic2D::new(n, n, 4, 4, 2, 2).unwrap());
+    let mut dm = DistMatrix::scatter(&node, &a, lay).unwrap();
+    node.reset_accounting();
+    potrf_dist(&ctx, &mut dm).unwrap();
+    let _ = potrs_dist(&ctx, &dm, &b).unwrap();
+    let m = node.metrics().snapshot();
+    assert_eq!(m.grid_solves, 2, "potrf + potrs must both record a grid-native solve");
+    assert_eq!(m.grid_peak_p, 2);
+    assert_eq!(m.grid_peak_q, 2);
+    assert!(m.grid_row_bytes > 0, "row rings must carry panel segments");
+    assert!(m.grid_col_bytes > 0, "column rings must carry blocks/reductions");
+    assert!(m.peer_bytes >= m.grid_row_bytes + m.grid_col_bytes);
+    for d in 0..4 {
+        assert!(node.device(d).unwrap().clock().now() > 0.0, "device {d} idle");
+    }
+}
+
+#[test]
+fn grid_native_rejects_rectangular_tiles() {
+    let node = SimNode::new_uniform(4, 1 << 24);
+    let model = GpuCostModel::h200();
+    let backend = SolverBackend::<f64>::Native;
+    let ctx = Ctx::new(&node, &model, &backend);
+    let a = Matrix::<f64>::spd_random(12, 0x61D8);
+    let lay = LayoutKind::Grid(BlockCyclic2D::new(12, 12, 4, 3, 2, 2).unwrap());
+    let mut dm = DistMatrix::scatter(&node, &a, lay).unwrap();
+    assert!(matches!(potrf_dist(&ctx, &mut dm), Err(jaxmg::Error::Layout(_))));
+}
+
+#[test]
+fn grid_native_potri_frees_its_workspace() {
+    let n = 16usize;
+    let node = SimNode::new_uniform(4, 1 << 24);
+    let model = GpuCostModel::h200();
+    let backend = SolverBackend::<f64>::Native;
+    let ctx = Ctx::new(&node, &model, &backend);
+    let a = Matrix::<f64>::spd_random(n, 0x61D9);
+    let lay = LayoutKind::Grid(BlockCyclic2D::new(n, n, 4, 4, 2, 2).unwrap());
+    let mut dm = DistMatrix::scatter(&node, &a, lay).unwrap();
+    potrf_dist(&ctx, &mut dm).unwrap();
+    potri_dist(&ctx, &mut dm).unwrap();
+    for rep in node.memory_reports() {
+        assert_eq!(rep.allocations, 1, "grid potri leaked its X workspace");
+    }
+    // And the inverse is right.
+    use jaxmg::linalg::{tol_for, FrobNorm};
+    let inv = dm.gather().unwrap();
+    assert!(a.matmul(&inv).rel_err(&Matrix::eye(n)) < tol_for::<f64>(n) * 10.0);
 }
 
 #[test]

@@ -87,6 +87,76 @@ fn mpmd_matches_spmd_bitwise_c128() {
     mpmd_matches_spmd_bitwise::<c64>(14);
 }
 
+/// The 2D regression the frontend's old 1D-only routing guard made
+/// impossible: a solve pinned to a 2×2 grid — workers stage and
+/// IPC-export **2D tile shards** — round-trips bitwise against the
+/// SPMD `SolveService` on the same grid AND against the plain 1D path.
+fn mpmd_2d_matches_spmd<S: Scalar>(seed: u64) {
+    let n = 24;
+    let a = Matrix::<S>::spd_random(n, seed);
+    let b = Matrix::<S>::random(n, 2, seed + 100);
+
+    // SPMD reference on the same forced 2×2 grid.
+    let spmd_node = SimNode::new_uniform(NDEV, 1 << 24);
+    let mut scfg = jaxmg::coordinator::SmallConfig::with_tile(TILE);
+    scfg.grid = Some((2, 2));
+    let spmd = SolveService::with_small_config(spmd_node.clone(), 2, scfg);
+    let (x_spmd, st_spmd) = spmd
+        .submit_dist(jaxmg::coordinator::DistRoutine::Potrs, a.clone(), Some(b.clone()))
+        .unwrap()
+        .wait();
+    assert_eq!(st_spmd.grid, (2, 2));
+    spmd.drain();
+    assert!(spmd_node.metrics().snapshot().grid_solves >= 2);
+
+    // MPMD on the same forced grid: workers stage 2D tile shards.
+    let mpmd_node = SimNode::new_uniform(NDEV, 1 << 24);
+    let mut mcfg = MpmdConfig::with_tile(TILE);
+    mcfg.grid = Some((2, 2));
+    let svc = MpmdService::with_config(mpmd_node.clone(), mcfg);
+    let (x_mpmd, st_mpmd) = svc.submit_potrs(a.clone(), b.clone()).unwrap().wait();
+    assert_eq!(st_mpmd.grid, (2, 2));
+    svc.drain();
+    let m = mpmd_node.metrics().snapshot();
+    assert_eq!(m.ipc_exports, (NDEV - 1) as u64, "every non-caller worker exports its 2D shard");
+    assert_eq!(m.ipc_open_balance(), 0, "caller leaked ipc mappings");
+    assert!(m.grid_solves >= 2, "the MPMD solve must run grid-native");
+    assert!(m.grid_row_bytes > 0 && m.grid_col_bytes > 0);
+    assert_eq!(svc.reserved(), vec![0; NDEV]);
+    for rep in mpmd_node.memory_reports() {
+        assert_eq!(rep.used, 0, "worker leaked device memory");
+    }
+
+    assert_eq!(
+        x_spmd.as_slice(),
+        x_mpmd.as_slice(),
+        "MPMD 2D-grid numerics diverge from SPMD"
+    );
+    // And the 2D result is bitwise the 1D (autotuned small-shape) one.
+    let x_1d = spmd_potrs(&a, &b);
+    assert_eq!(x_spmd.as_slice(), x_1d.as_slice(), "2D grid numerics diverge from 1D");
+}
+
+#[test]
+fn mpmd_2d_grid_matches_spmd_bitwise_f32() {
+    mpmd_2d_matches_spmd::<f32>(61);
+}
+
+#[test]
+fn mpmd_2d_grid_matches_spmd_bitwise_f64() {
+    mpmd_2d_matches_spmd::<f64>(62);
+}
+
+#[test]
+fn mpmd_2d_grid_matches_spmd_bitwise_c64() {
+    mpmd_2d_matches_spmd::<c32>(63);
+}
+
+#[test]
+fn mpmd_2d_grid_matches_spmd_bitwise_c128() {
+    mpmd_2d_matches_spmd::<c64>(64);
+}
+
 #[test]
 fn mpmd_potri_and_syevd_end_to_end() {
     let node = SimNode::new_uniform(3, 1 << 24);
