@@ -21,11 +21,16 @@
 #                      analytic ladder, and 2D-aware serving — then
 #                      drives examples/syevd_grid (CI-friendly, part
 #                      of `make check`)
+#   make bench-traffic scheduler bench in smoke/test mode: one bursty
+#                      GP/VMC trace under FIFO vs EDF/SJF (asserts the
+#                      interactive p99 win, no batch starvation, zero
+#                      lost requests — CI-friendly, part of
+#                      `make check`)
 
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test check clippy fmt python-tests test-xla bench bench-redist bench-batch bench-serve bench-grid e2e artifacts clean
+.PHONY: build test check clippy fmt python-tests test-xla bench bench-redist bench-batch bench-serve bench-grid bench-traffic e2e artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -48,7 +53,7 @@ python-tests:
 		echo "skipping python tests (pytest/jax/hypothesis not importable)"; \
 	fi
 
-check: build test clippy fmt python-tests bench-serve bench-grid
+check: build test clippy fmt python-tests bench-serve bench-grid bench-traffic
 
 # Artifact-gated XLA integration tests (fail with a pointed message
 # when artifacts are absent — that failure mode is itself under test).
@@ -89,6 +94,12 @@ bench-serve:
 bench-grid:
 	GRID_BENCH_SMOKE=1 $(CARGO) bench --bench grid
 	$(CARGO) run --release --example syevd_grid
+
+# The traffic bench is the scheduler acceptance harness: one bursty
+# GP/VMC open-loop trace replayed under FIFO and EDF/SJF; asserts the
+# strict interactive-p99 win, batch completion, and zero lost requests.
+bench-traffic:
+	TRAFFIC_BENCH_SMOKE=1 $(CARGO) bench --bench traffic
 
 e2e:
 	$(CARGO) run --release --example e2e_driver

@@ -79,8 +79,8 @@ fn run_mixed(small_dim: usize) -> (f64, jaxmg::metrics::MetricsSnapshot) {
     println!(
         "  small_dim={small_dim:>3}: {coalesced}/{SMALL} tiny solves coalesced, big solve \
          queued {:.1} ms / ran {:.1} ms",
-        big_stats.queue_wait.as_secs_f64() * 1e3,
-        big_stats.exec.as_secs_f64() * 1e3
+        big_stats.queue_wait_secs() * 1e3,
+        big_stats.exec_secs() * 1e3
     );
     (node.sim_time(), node.metrics().snapshot())
 }

@@ -159,8 +159,8 @@ fn main() -> Result<()> {
             let ((n, err), stats) = h.wait();
             println!(
                 "{i:>4} {n:>6} {:>12.2} {:>12.2} {err:>12.3e}",
-                stats.queue_wait.as_secs_f64() * 1e3,
-                stats.exec.as_secs_f64() * 1e3
+                stats.queue_wait_secs() * 1e3,
+                stats.exec_secs() * 1e3
             );
         }
         let m = node.metrics().snapshot();

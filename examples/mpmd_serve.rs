@@ -49,8 +49,8 @@ fn main() {
     );
     println!(
         "potrs n={N}: MPMD == SPMD bitwise; queued {:.2} ms, ran {:.2} ms",
-        stats.queue_wait.as_secs_f64() * 1e3,
-        stats.exec.as_secs_f64() * 1e3
+        stats.queue_wait_secs() * 1e3,
+        stats.exec_secs() * 1e3
     );
     let p = Predictor {
         model: jaxmg::costmodel::GpuCostModel::h200(),

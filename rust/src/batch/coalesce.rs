@@ -106,6 +106,17 @@ impl Default for BatchPolicy {
     }
 }
 
+/// Background-ticker interval for a wall-dwell backstop: half the
+/// dwell bound for responsiveness, clamped to a 5 ms floor (a
+/// zero/tiny dwell policy polls instead of busy-spinning the CPU) and
+/// a 250 ms cap (a huge dwell still reacts within a quarter second).
+/// Shared by the SPMD background dwell flusher and the MPMD
+/// dispatcher's idle wait so neither front re-grows the spin bug.
+pub fn flusher_tick(max_wall_dwell: std::time::Duration) -> std::time::Duration {
+    (max_wall_dwell / 2)
+        .clamp(std::time::Duration::from_millis(5), std::time::Duration::from_millis(250))
+}
+
 /// One bucket ready to sweep: the request ids in FIFO order and each
 /// request's coalesce wait (cost-model ns) at flush time.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -277,6 +288,18 @@ mod tests {
         let mut p = BatchPlanner::new(policy);
         p.push(key(8), 0);
         assert_eq!(p.due(0), vec![key(8)], "zero wall bound is due immediately");
+    }
+
+    #[test]
+    fn flusher_tick_clamps_to_a_poll_floor_and_cap() {
+        use std::time::Duration;
+        // Zero/tiny dwell must not busy-spin: floor at 5 ms.
+        assert_eq!(flusher_tick(Duration::ZERO), Duration::from_millis(5));
+        assert_eq!(flusher_tick(Duration::from_micros(1)), Duration::from_millis(5));
+        // Mid-range: half the dwell.
+        assert_eq!(flusher_tick(Duration::from_millis(100)), Duration::from_millis(50));
+        // Huge dwell still reacts within a quarter second.
+        assert_eq!(flusher_tick(Duration::from_secs(60)), Duration::from_millis(250));
     }
 
     #[test]

@@ -47,7 +47,7 @@ mod pod;
 pub mod sweep;
 
 pub use coalesce::{
-    size_class, BatchPlanner, BatchPolicy, BucketKey, FlushedBucket, SmallRoutine,
+    flusher_tick, size_class, BatchPlanner, BatchPolicy, BucketKey, FlushedBucket, SmallRoutine,
 };
 pub use pod::PackedPod;
 pub use sweep::{potrf_batched, potri_batched, potrs_batched, run_bucket, SweepReport};

@@ -38,6 +38,22 @@ use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
+/// Convert cost-model seconds to integer nanoseconds — THE conversion
+/// every scheduler estimate and clock charge uses, so EDF/SJF ordering
+/// can be compared bitwise against [`Predictor`] makespans.
+#[inline]
+pub fn secs_to_ns(seconds: f64) -> u64 {
+    debug_assert!(seconds >= 0.0, "negative cost-model duration");
+    (seconds * 1e9).round() as u64
+}
+
+/// Saturating wall-`Duration` → u64 nanoseconds (replaces the lossy
+/// `as_nanos() as u64` casts on wall-clock backstop paths).
+#[inline]
+pub fn duration_to_ns(d: Duration) -> u64 {
+    u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+}
+
 /// The distributed routines the serving fronts route.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub enum DistRoutine {
@@ -74,6 +90,11 @@ pub struct DistPlan {
     pub kind: LayoutKind,
     /// Exact per-device workspace bytes on that layout.
     pub footprint: Footprint,
+    /// Predicted makespan of the solve on the chosen grid, in
+    /// cost-model nanoseconds — [`Predictor::dist_makespan`] through
+    /// [`secs_to_ns`], so EDF/SJF queue ordering compares bitwise
+    /// against the autotuner's own replayed numbers.
+    pub est_ns: u64,
 }
 
 /// Plan a distributed solve over `ndev` devices: pick the grid shape
@@ -95,6 +116,7 @@ pub fn plan_dist(
     topo: &NodeTopology,
     force: Option<(usize, usize)>,
 ) -> Result<DistPlan> {
+    let predictor = Predictor { model: model.clone(), topo: topo.clone(), dtype };
     let (p, q) = match force {
         Some((p, q)) => {
             if p == 0 || q == 0 || p * q != ndev {
@@ -104,23 +126,38 @@ pub fn plan_dist(
             }
             (p, q)
         }
-        None => {
-            let predictor = Predictor { model: model.clone(), topo: topo.clone(), dtype };
-            predictor.best_grid(routine, n, nrhs, tile, ndev)
-        }
+        None => predictor.best_grid(routine, n, nrhs, tile, ndev),
     };
+    let est_ns = secs_to_ns(predictor.dist_makespan(routine, n, nrhs, tile, p, q));
+    build_plan(routine, n, nrhs, tile, ndev, dtype, (p, q), est_ns)
+}
+
+/// Build the layout + footprint for an already-selected grid shape and
+/// makespan estimate (no predictor replay — the cache-hit path).
+fn build_plan(
+    routine: &str,
+    n: usize,
+    nrhs: usize,
+    tile: usize,
+    ndev: usize,
+    dtype: DType,
+    (p, q): (usize, usize),
+    est_ns: u64,
+) -> Result<DistPlan> {
     if p > 1 {
         let g = BlockCyclic2D::new(n, n, tile, tile, p, q)?;
         Ok(DistPlan {
             grid: (p, q),
             kind: LayoutKind::Grid(g),
             footprint: Footprint::for_grid(routine, &g, nrhs, dtype)?,
+            est_ns,
         })
     } else {
         Ok(DistPlan {
             grid: (1, ndev),
             kind: LayoutKind::BlockCyclic(BlockCyclic1D::new(n, tile, ndev)?),
             footprint: Footprint::for_routine(routine, n, nrhs, tile, ndev, dtype)?,
+            est_ns,
         })
     }
 }
@@ -264,7 +301,8 @@ impl Footprint {
 /// shrunk MPMD live set re-plans correctly.
 #[derive(Debug, Default)]
 pub struct GridPlanCache {
-    shapes: Mutex<HashMap<(&'static str, DType, usize, usize, usize, usize), (usize, usize)>>,
+    #[allow(clippy::type_complexity)]
+    shapes: Mutex<HashMap<(&'static str, DType, usize, usize, usize, usize), ((usize, usize), u64)>>,
 }
 
 impl GridPlanCache {
@@ -292,12 +330,358 @@ impl GridPlanCache {
         }
         let key = (routine, dtype, n, nrhs, tile, ndev);
         let cached = self.shapes.lock().unwrap().get(&key).copied();
-        if let Some(g) = cached {
-            return plan_dist(routine, n, nrhs, tile, ndev, dtype, model, topo, Some(g));
+        if let Some((g, est_ns)) = cached {
+            return build_plan(routine, n, nrhs, tile, ndev, dtype, g, est_ns);
         }
         let plan = plan_dist(routine, n, nrhs, tile, ndev, dtype, model, topo, None)?;
-        self.shapes.lock().unwrap().insert(key, plan.grid);
+        self.shapes.lock().unwrap().insert(key, (plan.grid, plan.est_ns));
         Ok(plan)
+    }
+}
+
+// ---- SLO-aware scheduling ------------------------------------------------
+
+/// Request priority class, ordered most- to least-latency-sensitive.
+/// Lower discriminant schedules first under [`SchedPolicy::EdfSjf`].
+#[derive(Copy, Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SloClass {
+    /// Latency-sensitive foreground traffic (a user is waiting).
+    Interactive = 0,
+    /// Default class for unremarkable traffic.
+    Standard = 1,
+    /// Throughput-oriented background work (offline GP refits, sweeps).
+    Batch = 2,
+}
+
+impl SloClass {
+    /// All classes, scheduling order.
+    pub const ALL: [SloClass; 3] = [SloClass::Interactive, SloClass::Standard, SloClass::Batch];
+
+    /// Dense index (0..3) for per-class metric arrays.
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Human-readable name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Standard => "standard",
+            SloClass::Batch => "batch",
+        }
+    }
+}
+
+/// The service-level objective a request carries into the queue.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct Slo {
+    /// Priority class.
+    pub class: SloClass,
+    /// Optional absolute completion deadline, cost-model ns on the
+    /// node's simulated timeline. `None` ranks after every concrete
+    /// deadline within the class.
+    pub deadline_ns: Option<u64>,
+    /// Tenant id for per-tenant admission quotas.
+    pub tenant: u32,
+}
+
+impl Slo {
+    /// Interactive-class SLO, no deadline, tenant 0.
+    pub fn interactive() -> Self {
+        Slo { class: SloClass::Interactive, deadline_ns: None, tenant: 0 }
+    }
+
+    /// Standard-class SLO, no deadline, tenant 0 — what legacy submit
+    /// paths default to.
+    pub fn standard() -> Self {
+        Slo { class: SloClass::Standard, deadline_ns: None, tenant: 0 }
+    }
+
+    /// Batch-class SLO, no deadline, tenant 0.
+    pub fn batch() -> Self {
+        Slo { class: SloClass::Batch, deadline_ns: None, tenant: 0 }
+    }
+
+    /// Attach an absolute deadline (cost-model ns).
+    pub fn with_deadline_ns(mut self, deadline_ns: u64) -> Self {
+        self.deadline_ns = Some(deadline_ns);
+        self
+    }
+
+    /// Attach a tenant id.
+    pub fn with_tenant(mut self, tenant: u32) -> Self {
+        self.tenant = tenant;
+        self
+    }
+}
+
+impl Default for Slo {
+    fn default() -> Self {
+        Slo::standard()
+    }
+}
+
+/// Queue-ordering policy of a serving front.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
+pub enum SchedPolicy {
+    /// Strict arrival order, head-of-line admission only — the seed
+    /// behavior, and the baseline the benches compare against.
+    #[default]
+    Fifo,
+    /// Earliest deadline first with shortest-job-first tie-break:
+    /// rank = `(class, deadline, est_ns, seq)`. FIFO within equal rank,
+    /// and an anti-starvation barrier (see [`SchedConfig::max_skips`])
+    /// bounds how often any request can be bypassed.
+    EdfSjf,
+}
+
+/// Scheduler configuration shared by both serving fronts.
+#[derive(Copy, Clone, Debug)]
+pub struct SchedConfig {
+    /// Queue-ordering policy.
+    pub policy: SchedPolicy,
+    /// Per-tenant cap on *admitted* footprint bytes (summed over
+    /// devices). `None` disables quotas.
+    pub tenant_quota: Option<usize>,
+    /// Anti-starvation bound: once a queued request has been bypassed
+    /// by `max_skips` younger requests, it becomes an urgent barrier —
+    /// nothing else is admitted until it fits.
+    pub max_skips: u32,
+    /// Degraded-mode SLO relaxation under straggler injection: a front
+    /// running with stragglers multiplies deadline-miss accounting by
+    /// this factor (≥ 1.0). Scheduling order is unchanged — a uniform
+    /// deadline scale preserves EDF order.
+    pub degrade_factor: f64,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            policy: SchedPolicy::default(),
+            tenant_quota: None,
+            max_skips: 16,
+            degrade_factor: 2.0,
+        }
+    }
+}
+
+/// The scheduling envelope a queued request carries: its SLO, the
+/// Predictor makespan estimate, enqueue timestamp, arrival sequence
+/// number, and how many younger requests have bypassed it.
+#[derive(Copy, Clone, Debug)]
+pub struct SloTicket {
+    /// The request's service-level objective.
+    pub slo: Slo,
+    /// Predictor-estimated makespan, cost-model ns ([`DistPlan::est_ns`]).
+    pub est_ns: u64,
+    /// Cost-model enqueue timestamp (node sim time at submit).
+    pub enq_ns: u64,
+    /// Arrival sequence number — the FIFO total order.
+    pub seq: u64,
+    /// Times a younger request was admitted past this one.
+    pub skips: u32,
+}
+
+impl SloTicket {
+    /// Scheduling rank under [`SchedPolicy::EdfSjf`]: class, then
+    /// deadline (none sorts last), then estimated makespan, then
+    /// arrival order. Smaller ranks schedule first.
+    fn rank(&self) -> (usize, u64, u64, u64) {
+        (
+            self.slo.class.index(),
+            self.slo.deadline_ns.unwrap_or(u64::MAX),
+            self.est_ns,
+            self.seq,
+        )
+    }
+}
+
+/// The SLO-aware queue both fronts route through. Holds `(ticket,
+/// item)` pairs; candidate selection depends on the policy:
+///
+/// * [`SchedPolicy::Fifo`] — only the oldest entry is ever a
+///   candidate (exact seed head-of-line semantics);
+/// * [`SchedPolicy::EdfSjf`] — entries are tried in rank order, so a
+///   small latency-sensitive solve can be admitted past a large batch
+///   solve the capacity predicate rejects (backfill). Every admission
+///   past an older entry increments that entry's skip count; once any
+///   entry reaches `max_skips` it becomes an **urgent barrier**: the
+///   oldest such entry is the only candidate until it is admitted,
+///   which restores the FIFO no-starvation guarantee.
+#[derive(Debug)]
+pub(crate) struct SloQueue<T> {
+    entries: Vec<(SloTicket, T)>,
+    next_seq: u64,
+    policy: SchedPolicy,
+    max_skips: u32,
+}
+
+impl<T> SloQueue<T> {
+    pub(crate) fn new(policy: SchedPolicy, max_skips: u32) -> Self {
+        SloQueue { entries: Vec::new(), next_seq: 0, policy, max_skips: max_skips.max(1) }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Enqueue a fresh request; assigns the next arrival sequence.
+    pub(crate) fn push_back(&mut self, slo: Slo, est_ns: u64, enq_ns: u64, item: T) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.entries.push((SloTicket { slo, est_ns, enq_ns, seq, skips: 0 }, item));
+    }
+
+    /// Re-insert a previously popped entry, keeping its original
+    /// sequence number and skip count (MPMD requeue-after-failure and
+    /// admission-rollback paths: the request keeps its queue age).
+    pub(crate) fn restore(&mut self, ticket: SloTicket, item: T) {
+        debug_assert!(ticket.seq < self.next_seq, "restored ticket from a different queue");
+        self.entries.push((ticket, item));
+    }
+
+    /// Indices of admission candidates, in scheduling order.
+    fn candidates(&self) -> Vec<usize> {
+        if self.entries.is_empty() {
+            return Vec::new();
+        }
+        // Urgent barrier: the oldest over-skipped entry (if any) is the
+        // only candidate, under either policy.
+        if let Some(urgent) = self
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, (t, _))| t.skips >= self.max_skips)
+            .min_by_key(|(_, (t, _))| t.seq)
+            .map(|(i, _)| i)
+        {
+            return vec![urgent];
+        }
+        match self.policy {
+            SchedPolicy::Fifo => {
+                // Head-of-line only: exact seed admission semantics.
+                let head = self
+                    .entries
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, (t, _))| t.seq)
+                    .map(|(i, _)| i)
+                    .unwrap();
+                vec![head]
+            }
+            SchedPolicy::EdfSjf => {
+                let mut idx: Vec<usize> = (0..self.entries.len()).collect();
+                idx.sort_by_key(|&i| self.entries[i].0.rank());
+                idx
+            }
+        }
+    }
+
+    /// Pop the best-ranked entry the `fits` predicate admits, aging
+    /// every older entry it was admitted past. Returns `None` when no
+    /// candidate fits — the caller waits for capacity.
+    pub(crate) fn pop_admissible(
+        &mut self,
+        mut fits: impl FnMut(&SloTicket, &T) -> bool,
+    ) -> Option<(SloTicket, T)> {
+        let pick = self
+            .candidates()
+            .into_iter()
+            .find(|&i| fits(&self.entries[i].0, &self.entries[i].1))?;
+        let (ticket, item) = self.entries.swap_remove(pick);
+        for (t, _) in &mut self.entries {
+            if t.seq < ticket.seq {
+                t.skips += 1;
+            }
+        }
+        Some((ticket, item))
+    }
+
+    /// Pop the best-ranked entry unconditionally (admission happens
+    /// outside the queue lock — the MPMD dispatcher path).
+    pub(crate) fn pop_next(&mut self) -> Option<(SloTicket, T)> {
+        self.pop_admissible(|_, _| true)
+    }
+
+    /// Sequence numbers in current scheduling order (test inspection).
+    #[cfg(test)]
+    pub(crate) fn order(&self) -> Vec<u64> {
+        self.candidates().into_iter().map(|i| self.entries[i].0.seq).collect()
+    }
+}
+
+/// Per-tenant admitted-footprint accounting. All methods take `&self`;
+/// callers serialize check-then-admit under their own scheduler lock,
+/// this mutex only guards interior mutability.
+#[derive(Debug)]
+pub(crate) struct TenantQuotas {
+    quota: Option<usize>,
+    state: Mutex<HashMap<u32, TenantUsage>>,
+}
+
+#[derive(Debug, Default, Copy, Clone)]
+struct TenantUsage {
+    admitted: usize,
+    peak: usize,
+}
+
+impl TenantQuotas {
+    pub(crate) fn new(quota: Option<usize>) -> Self {
+        TenantQuotas { quota, state: Mutex::new(HashMap::new()) }
+    }
+
+    /// Would admitting `bytes` more for `tenant` stay within quota?
+    pub(crate) fn would_admit(&self, tenant: u32, bytes: usize) -> bool {
+        match self.quota {
+            None => true,
+            Some(q) => {
+                let st = self.state.lock().unwrap();
+                let cur = st.get(&tenant).map(|u| u.admitted).unwrap_or(0);
+                cur + bytes <= q
+            }
+        }
+    }
+
+    /// Record an admission (caller already checked [`Self::would_admit`]
+    /// under its scheduler lock).
+    pub(crate) fn admit(&self, tenant: u32, bytes: usize) {
+        if self.quota.is_none() {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        let u = st.entry(tenant).or_default();
+        u.admitted += bytes;
+        u.peak = u.peak.max(u.admitted);
+    }
+
+    /// Release a completed request's footprint.
+    pub(crate) fn release(&self, tenant: u32, bytes: usize) {
+        if self.quota.is_none() {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        if let Some(u) = st.get_mut(&tenant) {
+            u.admitted = u.admitted.saturating_sub(bytes);
+        }
+    }
+
+    /// Currently admitted bytes for `tenant`.
+    pub(crate) fn admitted(&self, tenant: u32) -> usize {
+        self.state.lock().unwrap().get(&tenant).map(|u| u.admitted).unwrap_or(0)
+    }
+
+    /// High-water mark for `tenant` — the over-admission proof.
+    pub(crate) fn peak(&self, tenant: u32) -> usize {
+        self.state.lock().unwrap().get(&tenant).map(|u| u.peak).unwrap_or(0)
+    }
+
+    /// The configured quota, if any.
+    pub(crate) fn quota(&self) -> Option<usize> {
+        self.quota
     }
 }
 
@@ -373,12 +757,20 @@ impl DeviceAdmission {
 }
 
 /// Per-solve service metrics, returned with the result.
+///
+/// Every duration is **cost-model (simulated) nanoseconds** on the
+/// node's integer-ns timeline — the same clock the golden timelines and
+/// the projected wall-clock columns use. Host wall time never leaks in:
+/// mixing `Instant::elapsed()` with simulated nanoseconds made latency
+/// stats depend on the simulator's CPU speed instead of the modeled
+/// machine's.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub struct SolveStats {
-    /// Real time spent queued before the accountant admitted the solve.
-    pub queue_wait: Duration,
-    /// Real execution time after admission.
-    pub exec: Duration,
+    /// Simulated ns spent queued before the scheduler admitted the
+    /// solve (enqueue timestamp → admission timestamp).
+    pub queue_wait_ns: u64,
+    /// Simulated ns from admission to completion.
+    pub exec_ns: u64,
     /// Solves that shared this solve's admitted job — the coalesced
     /// bucket occupancy on the batched small-solve path, `1` otherwise.
     pub batch_size: usize,
@@ -391,9 +783,50 @@ pub struct SolveStats {
     pub grid: (usize, usize),
 }
 
-/// `Ok((result, stats))`, or the panic message of a solve that
-/// unwound inside a worker.
-pub(crate) type SolveOutcome<T> = std::result::Result<(T, SolveStats), String>;
+impl SolveStats {
+    /// Queue wait in seconds (convenience for reporting).
+    pub fn queue_wait_secs(&self) -> f64 {
+        self.queue_wait_ns as f64 * 1e-9
+    }
+
+    /// Execution time in seconds (convenience for reporting).
+    pub fn exec_secs(&self) -> f64 {
+        self.exec_ns as f64 * 1e-9
+    }
+}
+
+/// Why a service solve did not produce a result — the typed error a
+/// [`ServiceHandle`] resolves to. `Clone` so one failure can fan out to
+/// every waiter of a coalesced batch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Every worker in the MPMD deployment is dead: no live device
+    /// subset remains, so re-queueing would spin forever. Surfaced to
+    /// the submitter instead.
+    NoLiveWorkers {
+        /// Total workers the deployment started with.
+        total: usize,
+    },
+    /// The solve panicked (or failed terminally) inside a worker; the
+    /// worker survived and this carries the panic/failure message.
+    Failed(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::NoLiveWorkers { total } => {
+                write!(f, "no live workers left (all {total} dead); request cannot be served")
+            }
+            ServeError::Failed(msg) => write!(f, "service solve panicked: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// `Ok((result, stats))`, or the typed reason the solve failed.
+pub(crate) type SolveOutcome<T> = std::result::Result<(T, SolveStats), ServeError>;
 
 /// The shared completion slot a [`ServiceHandle`] waits on.
 pub(crate) type Slot<T> = Arc<(Mutex<Option<SolveOutcome<T>>>, Condvar)>;
@@ -411,10 +844,15 @@ pub(crate) fn publish_one<T>(slot: &Slot<T>, outcome: SolveOutcome<T>) {
     cv.notify_all();
 }
 
-/// Publish the same failure to a whole batch of waiters.
+/// Publish the same panic/failure message to a whole batch of waiters.
 pub(crate) fn publish_failure<T>(slots: &[Slot<T>], msg: String) {
+    publish_error(slots, ServeError::Failed(msg));
+}
+
+/// Publish the same typed error to a whole batch of waiters.
+pub(crate) fn publish_error<T>(slots: &[Slot<T>], err: ServeError) {
     for slot in slots {
-        publish_one(slot, Err(msg.clone()));
+        publish_one(slot, Err(err.clone()));
     }
 }
 
@@ -437,17 +875,25 @@ pub struct ServiceHandle<T> {
 impl<T> ServiceHandle<T> {
     /// Block until the solve completes; returns `(result, stats)`.
     /// Re-raises the solve's panic if it unwound inside a worker
-    /// (the worker itself survives and the reservation is released).
+    /// (the worker itself survives and the reservation is released),
+    /// and panics on typed serve errors too — use
+    /// [`ServiceHandle::wait_result`] to handle those gracefully.
     pub fn wait(self) -> (T, SolveStats) {
+        match self.wait_result() {
+            Ok(out) => out,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Block until the solve completes; returns the typed outcome. An
+    /// all-workers-dead MPMD deployment resolves every waiter with
+    /// [`ServeError::NoLiveWorkers`] instead of panicking the caller.
+    pub fn wait_result(self) -> std::result::Result<(T, SolveStats), ServeError> {
         let (lock, cv) = &*self.slot;
         let mut guard = lock.lock().unwrap();
         loop {
             if let Some(v) = guard.take() {
-                drop(guard);
-                match v {
-                    Ok(out) => return out,
-                    Err(msg) => panic!("service solve panicked: {msg}"),
-                }
+                return v;
             }
             guard = cv.wait(guard).unwrap();
         }
@@ -546,8 +992,8 @@ mod tests {
         let (h, slot) = handle_pair::<u32>();
         assert!(!h.is_ready());
         let stats = SolveStats {
-            queue_wait: Duration::ZERO,
-            exec: Duration::ZERO,
+            queue_wait_ns: 0,
+            exec_ns: 0,
             batch_size: 1,
             coalesce_wait_ns: 0,
             grid: (1, 1),
@@ -555,5 +1001,123 @@ mod tests {
         publish_one(&slot, Ok((7, stats)));
         assert!(h.is_ready());
         assert_eq!(h.wait().0, 7);
+    }
+
+    #[test]
+    fn typed_errors_resolve_without_panicking() {
+        let (h, slot) = handle_pair::<u32>();
+        publish_error(&[slot], ServeError::NoLiveWorkers { total: 4 });
+        match h.wait_result() {
+            Err(ServeError::NoLiveWorkers { total }) => assert_eq!(total, 4),
+            other => panic!("expected NoLiveWorkers, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn plan_estimates_match_the_predictor_bitwise() {
+        let model = GpuCostModel::h200();
+        let topo = NodeTopology::nvlink_all_to_all(4);
+        let pred = Predictor { model: model.clone(), topo: topo.clone(), dtype: DType::F64 };
+        let plan = plan_dist("potrs", 192, 1, 32, 4, DType::F64, &model, &topo, None).unwrap();
+        let (p, q) = plan.grid;
+        assert_eq!(plan.est_ns, secs_to_ns(pred.dist_makespan("potrs", 192, 1, 32, p, q)));
+        assert!(plan.est_ns > 0);
+        // Cache hits carry the identical estimate.
+        let cache = GridPlanCache::new();
+        let a = cache.plan("potrs", 192, 1, 32, 4, DType::F64, &model, &topo, None).unwrap();
+        let b = cache.plan("potrs", 192, 1, 32, 4, DType::F64, &model, &topo, None).unwrap();
+        assert_eq!(a.est_ns, plan.est_ns);
+        assert_eq!(b.est_ns, plan.est_ns);
+    }
+
+    fn slo_ticket_queue() -> SloQueue<u32> {
+        SloQueue::new(SchedPolicy::EdfSjf, 16)
+    }
+
+    #[test]
+    fn fifo_policy_only_offers_the_head() {
+        let mut q = SloQueue::new(SchedPolicy::Fifo, 16);
+        q.push_back(Slo::batch(), 50, 0, 0);
+        q.push_back(Slo::interactive(), 1, 0, 1);
+        assert_eq!(q.order(), vec![0]);
+        // Head does not fit -> nothing pops, even though entry 1 would.
+        assert!(q.pop_admissible(|_, &item| item == 1).is_none());
+        let (t, item) = q.pop_next().unwrap();
+        assert_eq!((t.seq, item), (0, 0));
+        assert_eq!(q.pop_next().unwrap().1, 1);
+    }
+
+    #[test]
+    fn edf_sjf_ranks_class_then_deadline_then_estimate() {
+        let mut q = slo_ticket_queue();
+        q.push_back(Slo::batch(), 10, 0, 0);
+        q.push_back(Slo::standard().with_deadline_ns(900), 10, 0, 1);
+        q.push_back(Slo::standard().with_deadline_ns(500), 10, 0, 2);
+        q.push_back(Slo::interactive(), 7, 0, 3);
+        q.push_back(Slo::interactive(), 3, 0, 4);
+        // interactive first (SJF within: est 3 before 7), then standard
+        // by deadline, batch last.
+        assert_eq!(q.order(), vec![4, 3, 2, 1, 0]);
+        // Backfill: if the best candidate does not fit, the next does.
+        let (t, _) = q.pop_admissible(|t, _| t.est_ns != 3).unwrap();
+        assert_eq!(t.seq, 3);
+    }
+
+    #[test]
+    fn over_skipped_entry_becomes_an_urgent_barrier() {
+        let mut q = SloQueue::new(SchedPolicy::EdfSjf, 2);
+        q.push_back(Slo::batch(), 100, 0, 0); // the starvation victim
+        q.push_back(Slo::interactive(), 1, 0, 1);
+        q.push_back(Slo::interactive(), 1, 0, 2);
+        q.push_back(Slo::interactive(), 1, 0, 3);
+        assert_eq!(q.pop_next().unwrap().1, 1);
+        assert_eq!(q.pop_next().unwrap().1, 2);
+        // Two skips recorded: the batch entry is now the sole candidate.
+        assert_eq!(q.order(), vec![0]);
+        // Even a fit-everything predicate must take the barrier entry.
+        assert_eq!(q.pop_next().unwrap().1, 0);
+        assert_eq!(q.pop_next().unwrap().1, 3);
+        assert!(q.pop_next().is_none());
+    }
+
+    #[test]
+    fn restore_keeps_queue_age() {
+        let mut q = slo_ticket_queue();
+        q.push_back(Slo::interactive(), 1, 0, 10);
+        q.push_back(Slo::interactive(), 2, 0, 11);
+        let (t, item) = q.pop_next().unwrap();
+        assert_eq!(item, 10);
+        q.restore(t, item);
+        // Restored entry keeps seq 0 and still ranks first (same est).
+        assert_eq!(q.pop_next().unwrap().1, 10);
+    }
+
+    #[test]
+    fn tenant_quotas_never_over_admit() {
+        let quotas = TenantQuotas::new(Some(100));
+        assert!(quotas.would_admit(7, 60));
+        quotas.admit(7, 60);
+        assert!(!quotas.would_admit(7, 50));
+        assert!(quotas.would_admit(7, 40));
+        // A different tenant has its own budget.
+        assert!(quotas.would_admit(8, 100));
+        quotas.admit(7, 40);
+        assert_eq!(quotas.admitted(7), 100);
+        assert_eq!(quotas.peak(7), 100);
+        quotas.release(7, 60);
+        assert_eq!(quotas.admitted(7), 40);
+        assert_eq!(quotas.peak(7), 100);
+        // No quota configured -> everything admits, nothing tracked.
+        let open = TenantQuotas::new(None);
+        assert!(open.would_admit(1, usize::MAX));
+        assert_eq!(open.quota(), None);
+    }
+
+    #[test]
+    fn conversions_round_and_saturate() {
+        assert_eq!(secs_to_ns(1.5e-3), 1_500_000);
+        assert_eq!(secs_to_ns(0.0), 0);
+        assert_eq!(duration_to_ns(Duration::from_nanos(42)), 42);
+        assert_eq!(duration_to_ns(Duration::from_secs(u64::MAX / 2)), u64::MAX);
     }
 }

@@ -45,17 +45,45 @@
 //! ## Concurrent solve service
 //!
 //! [`SolveService`] runs **multiple solves in flight** on one shared
-//! node: strict-FIFO admission gated on a per-device VRAM
+//! node: policy-driven admission gated on a per-device VRAM
 //! [`Footprint`] accountant, a worker pool, and per-solve
-//! [`SolveStats`] (queue wait, execution time, chosen process grid) on
-//! every [`ServiceHandle`]. See `examples/e2e_driver.rs` for the
-//! end-to-end serving shape and `rust/tests/properties.rs` for the
-//! concurrent-equals-serial and never-over-admit properties. Small
-//! solves take [`SolveService::submit_small`], which coalesces them
-//! into fused batched sweeps (`crate::batch`) when the cost model says
-//! batching wins — see `examples/batch_serve.rs`. A background dwell
-//! flusher guarantees coalescer buckets honour their latency bound
-//! even when traffic stops entirely.
+//! [`SolveStats`] (queue wait, execution time, chosen process grid —
+//! all cost-model nanoseconds) on every [`ServiceHandle`]. See
+//! `examples/e2e_driver.rs` for the end-to-end serving shape and
+//! `rust/tests/properties.rs` for the concurrent-equals-serial and
+//! never-over-admit properties. Small solves take
+//! [`SolveService::submit_small`], which coalesces them into fused
+//! batched sweeps (`crate::batch`) when the cost model says batching
+//! wins — see `examples/batch_serve.rs`. A background dwell flusher
+//! guarantees coalescer buckets honour their latency bound even when
+//! traffic stops entirely.
+//!
+//! ## SLO-aware scheduling: how the queue orders work
+//!
+//! Both fronts share one scheduler (the internal `SloQueue`,
+//! configured by [`SchedConfig`]). Every request carries an [`Slo`]
+//! (priority [`SloClass`], optional absolute deadline, tenant id) and
+//! a [`Predictor`](crate::costmodel::Predictor) makespan estimate
+//! ([`DistPlan::est_ns`] — bitwise the autotuner's own replayed cost).
+//! The decision table, evaluated each time a worker looks for work:
+//!
+//! | condition | candidate set | rationale |
+//! |---|---|---|
+//! | any entry bypassed ≥ [`SchedConfig::max_skips`] times | the **oldest** such entry, alone | anti-starvation barrier: nothing passes a starving request; admission waits until it fits (restores the FIFO guarantee) |
+//! | [`SchedPolicy::Fifo`] (default) | the oldest entry, alone | the seed head-of-line semantics, bitwise-preserved baseline |
+//! | [`SchedPolicy::EdfSjf`] | all entries, ranked `(class, deadline, est_ns, seq)` | interactive before standard before batch; earliest deadline first within a class (`None` last); shortest predicted makespan breaks ties; arrival order breaks *those* ties (FIFO within equal rank) |
+//!
+//! A ranked candidate that does not fit (VRAM footprint or
+//! [`SchedConfig::tenant_quota`]) is skipped and the next candidate is
+//! tried — small latency-sensitive solves backfill past a blocked
+//! batch solve. Every such bypass of an older entry increments that
+//! entry's skip count, feeding the barrier row above. Large SPMD
+//! solves additionally expose **panel-boundary preemption points**:
+//! between `potrf` panels a non-interactive solve yields its devices
+//! to one queued interactive request (numerics are untouched —
+//! pinned bitwise in `rust/tests/scheduler.rs`). Per-class p50/p99
+//! latency histograms land in [`crate::metrics::Metrics`], computed
+//! on the corrected cost-model clock.
 //!
 //! ## 2D-aware scheduling: how a solve picks its process grid
 //!
@@ -110,14 +138,18 @@ mod service;
 mod spmd;
 
 pub use admit::{
-    plan_dist, DeviceAdmission, DistPlan, DistRoutine, Footprint, GridPlanCache, ServiceHandle,
+    duration_to_ns, plan_dist, secs_to_ns, DeviceAdmission, DistPlan, DistRoutine, Footprint,
+    GridPlanCache, SchedConfig, SchedPolicy, ServeError, ServiceHandle, Slo, SloClass, SloTicket,
     SolveStats,
 };
 pub use mpmd::gather_pointers_mpmd;
 pub use service::{JobQueue, SmallConfig, SolveHandle, SolveService};
 pub use spmd::gather_pointers_spmd;
 
-pub(crate) use admit::{handle_pair, panic_message, publish_failure, publish_one, Slot};
+pub(crate) use admit::{
+    handle_pair, panic_message, publish_error, publish_failure, publish_one, Slot, SloQueue,
+    TenantQuotas,
+};
 
 use crate::costmodel::GpuCostModel;
 use crate::device::SimNode;

@@ -8,19 +8,30 @@
 //! async syntax).
 //!
 //! [`SolveService`] is the throughput-oriented front: multiple solves
-//! are in flight on one shared [`SimNode`] at a time, admitted in
-//! strict FIFO order but only when their declared per-device workspace
-//! [`Footprint`] fits against every device's VRAM capacity — the
-//! cuSOLVERMg workspace-query-then-allocate discipline. The service
-//! assumes it owns the node's VRAM (admission is against capacity, not
-//! live free bytes), and the byte-accurate device allocator remains
-//! the hard backstop: a solve that outgrows its declared footprint
-//! still fails with `DeviceOom` rather than corrupting a neighbour.
-//! Per-solve queue-wait and execution times are returned on
+//! are in flight on one shared [`SimNode`] at a time, ordered by the
+//! SLO-aware scheduler (see the [`crate::coordinator`] module docs —
+//! [`SchedPolicy::Fifo`], the default, is exact seed head-of-line
+//! admission; [`SchedPolicy::EdfSjf`] ranks by class, deadline, and
+//! [`crate::costmodel::Predictor`] makespan with backfill and an
+//! anti-starvation barrier) and admitted only when their declared
+//! per-device workspace [`Footprint`] fits against every device's VRAM
+//! capacity — the cuSOLVERMg workspace-query-then-allocate discipline —
+//! and, when [`SchedConfig::tenant_quota`] is set, within the
+//! submitting tenant's admitted-bytes quota. The service assumes it
+//! owns the node's VRAM (admission is against capacity, not live free
+//! bytes), and the byte-accurate device allocator remains the hard
+//! backstop: a solve that outgrows its declared footprint still fails
+//! with `DeviceOom` rather than corrupting a neighbour. Per-solve
+//! queue-wait and execution times — **cost-model nanoseconds** on the
+//! node's simulated timeline, never host wall time — are returned on
 //! the [`ServiceHandle`] and aggregated into
-//! [`crate::metrics::Metrics`] (`service_*` counters; pipelined solves
-//! additionally feed the overlap-efficiency counters through their
-//! [`crate::solver::Ctx`] phases).
+//! [`crate::metrics::Metrics`] (`service_*` counters and per-class
+//! latency histograms; pipelined solves additionally feed the
+//! overlap-efficiency counters through their [`crate::solver::Ctx`]
+//! phases). Under [`SchedPolicy::EdfSjf`], non-interactive distributed
+//! solves yield at panel boundaries ([`crate::solver::Ctx::preempt_point`])
+//! so a queued interactive solve runs between panels instead of behind
+//! the whole factorization.
 
 //! ## The batched small-solve path: admission → coalesce → sweep
 //!
@@ -54,11 +65,14 @@
 //! [`Predictor::batched_wins`]: crate::costmodel::Predictor::batched_wins
 
 use super::admit::{
-    handle_pair, panic_message, publish_failure, publish_one, DistRoutine, GridPlanCache, Slot,
+    handle_pair, panic_message, publish_failure, publish_one, DistRoutine, GridPlanCache,
+    ServeError, Slot, SloQueue, SloTicket, TenantQuotas,
 };
-pub use super::admit::{Footprint, ServiceHandle, SolveStats};
+pub use super::admit::{
+    Footprint, SchedConfig, SchedPolicy, ServiceHandle, Slo, SloClass, SolveStats,
+};
 use crate::batch::{
-    run_bucket, BatchPlanner, BatchPolicy, BucketKey, FlushedBucket, SmallRoutine,
+    flusher_tick, run_bucket, BatchPlanner, BatchPolicy, BucketKey, FlushedBucket, SmallRoutine,
 };
 use crate::costmodel::{GpuCostModel, Predictor};
 use crate::device::SimNode;
@@ -70,8 +84,9 @@ use crate::solver::{potrf_dist, potri_dist, potrs_dist, syevd_dist, Ctx, SolverB
 use crate::tile::DistMatrix;
 use std::any::Any;
 use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -214,16 +229,25 @@ impl<T> SolveHandle<T> {
 /// the solve's reservation, so a resolved [`ServiceHandle`] implies
 /// the capacity is already free (no wait()/release race).
 type PublishFn = Box<dyn FnOnce() + Send + 'static>;
-type AdmittedJob = Box<dyn FnOnce(Duration) -> PublishFn + Send + 'static>;
+/// An admitted solve body: receives its scheduling ticket and the
+/// queue wait the scheduler measured (cost-model ns, enqueue →
+/// admission on the node's simulated timeline).
+type AdmittedJob = Box<dyn FnOnce(SloTicket, u64) -> PublishFn + Send + 'static>;
 
 struct QueuedSolve {
     footprint: Vec<usize>,
     job: AdmittedJob,
-    enqueued: Instant,
+}
+
+impl QueuedSolve {
+    /// Bytes summed over devices — the tenant-quota unit.
+    fn total_bytes(&self) -> usize {
+        self.footprint.iter().sum()
+    }
 }
 
 struct ServiceState {
-    queue: VecDeque<QueuedSolve>,
+    queue: SloQueue<QueuedSolve>,
     reserved: Vec<usize>,
     peak_reserved: Vec<usize>,
     in_flight: usize,
@@ -233,17 +257,23 @@ struct ServiceState {
 struct ServiceInner {
     node: SimNode,
     capacity: Vec<usize>,
+    sched: SchedConfig,
+    quotas: TenantQuotas,
     state: Mutex<ServiceState>,
     cv: Condvar,
+    /// Monotonicity watermark for [`ServiceInner::sim_now_ns`]: the
+    /// service's view of the simulated clock never runs backwards.
+    last_seen_ns: AtomicU64,
 }
 
 impl ServiceInner {
     /// Shared enqueue path behind [`SolveService::submit`] and the
-    /// batched-bucket flusher: fail-fast footprint checks, the FIFO
-    /// push, and submission metrics. The job's returned [`PublishFn`]
-    /// runs only after the worker has released the reservation, so
-    /// result publication always implies the capacity is free again.
-    fn enqueue_job(&self, footprint: Footprint, job: AdmittedJob) -> Result<()> {
+    /// batched-bucket flusher: fail-fast footprint/quota checks, the
+    /// scheduler push, and submission metrics. The job's returned
+    /// [`PublishFn`] runs only after the worker has released the
+    /// reservation, so result publication always implies the capacity
+    /// is free again.
+    fn enqueue_job(&self, footprint: Footprint, slo: Slo, est_ns: u64, job: AdmittedJob) -> Result<()> {
         if footprint.devices() != self.capacity.len() {
             return Err(Error::config(format!(
                 "footprint spans {} devices but the service node has {}",
@@ -258,13 +288,23 @@ impl ServiceInner {
                 return Err(Error::DeviceOom { device: d, requested: need, free: cap, capacity: cap });
             }
         }
+        let total: usize = footprint.as_slice().iter().sum();
+        if let Some(quota) = self.quotas.quota() {
+            if total > quota {
+                return Err(Error::config(format!(
+                    "request needs {total} B but tenant {} is capped at {quota} B — \
+                     it could never be admitted",
+                    slo.tenant
+                )));
+            }
+        }
+        let enq_ns = self.sim_now_ns();
         {
             let mut st = self.state.lock().unwrap();
             assert!(!st.shutdown, "service is shut down");
-            st.queue.push_back(QueuedSolve {
+            st.queue.push_back(slo, est_ns, enq_ns, QueuedSolve {
                 footprint: footprint.into_per_device(),
                 job,
-                enqueued: Instant::now(),
             });
         }
         self.node.metrics().add_service_submission();
@@ -272,11 +312,97 @@ impl ServiceInner {
         Ok(())
     }
 
-    /// The simulated clock in integer nanoseconds — the timebase of
-    /// the coalescer's dwell bound.
+    /// The simulated clock in integer nanoseconds — the timebase of the
+    /// scheduler's queue waits and the coalescer's dwell bound. Taken
+    /// straight off the devices' integer-ns [`crate::device::SimClock`]s
+    /// (no float round-trip), and clamped through a monotonic watermark:
+    /// the service's clock never runs backwards even if the underlying
+    /// node is reset out from under it.
     fn sim_now_ns(&self) -> u64 {
-        (self.node.sim_time() * 1e9).round() as u64
+        let now = self.node.sim_time_ns();
+        let prev = self.last_seen_ns.fetch_max(now, Ordering::AcqRel);
+        now.max(prev)
     }
+
+    /// True when any device clock runs with straggler drag — the
+    /// degraded-mode signal that relaxes deadline accounting by
+    /// [`SchedConfig::degrade_factor`].
+    fn degraded(&self) -> bool {
+        (0..self.capacity.len())
+            .any(|d| self.node.device(d).map(|g| g.clock().drag() > 1.0).unwrap_or(false))
+    }
+
+    /// Completion-side accounting: the `service_*` aggregates plus the
+    /// per-class latency histogram and deadline-miss counter, all in
+    /// cost-model ns. A deadline is judged against the *latency budget*
+    /// it implied at enqueue (`deadline − enqueue`), scaled by the
+    /// degrade factor when stragglers are active, so a drag-slowed
+    /// deployment reports against its relaxed SLO rather than drowning
+    /// every class in misses.
+    fn note_completion(&self, ticket: &SloTicket, queue_wait_ns: u64, exec_ns: u64) {
+        let m = self.node.metrics();
+        m.add_service_completion(queue_wait_ns, exec_ns);
+        let latency_ns = queue_wait_ns.saturating_add(exec_ns);
+        let missed = match ticket.slo.deadline_ns {
+            Some(d) => {
+                let budget = d.saturating_sub(ticket.enq_ns);
+                let scale = if self.degraded() { self.sched.degrade_factor } else { 1.0 };
+                latency_ns as f64 > budget as f64 * scale
+            }
+            None => false,
+        };
+        m.record_class_latency(ticket.slo.class, latency_ns, missed);
+    }
+}
+
+/// Pop-and-run one queued **interactive** solve if capacity and quota
+/// admit it right now — the panel-boundary preemption body. Called by
+/// the [`crate::solver::Ctx::preempt_point`] hook installed on
+/// non-interactive distributed solves under [`SchedPolicy::EdfSjf`]:
+/// the large solve's own worker thread runs the interactive solve
+/// inline between two of its panels (its reservation stays held, so
+/// the preemptor is admitted only against the remaining capacity).
+fn try_run_interactive(inner: &Arc<ServiceInner>) {
+    let popped = {
+        let mut st = inner.state.lock().unwrap();
+        if st.shutdown {
+            return;
+        }
+        let ServiceState { queue, reserved, peak_reserved, in_flight, .. } = &mut *st;
+        let picked = queue.pop_admissible(|t, q| {
+            t.slo.class == SloClass::Interactive
+                && (0..reserved.len()).all(|d| reserved[d] + q.footprint[d] <= inner.capacity[d])
+                && inner.quotas.would_admit(t.slo.tenant, q.total_bytes())
+        });
+        if let Some((ticket, q)) = picked {
+            for d in 0..reserved.len() {
+                reserved[d] += q.footprint[d];
+                if reserved[d] > peak_reserved[d] {
+                    peak_reserved[d] = reserved[d];
+                }
+            }
+            inner.quotas.admit(ticket.slo.tenant, q.total_bytes());
+            *in_flight += 1;
+            Some((ticket, q))
+        } else {
+            None
+        }
+    };
+    let Some((ticket, q)) = popped else { return };
+    let QueuedSolve { footprint, job } = q;
+    inner.node.metrics().note_preemption();
+    let queue_wait_ns = inner.sim_now_ns().saturating_sub(ticket.enq_ns);
+    let publish = job(ticket, queue_wait_ns);
+    {
+        let mut st = inner.state.lock().unwrap();
+        for d in 0..inner.capacity.len() {
+            st.reserved[d] -= footprint[d];
+        }
+        st.in_flight -= 1;
+    }
+    inner.quotas.release(ticket.slo.tenant, footprint.iter().sum());
+    inner.cv.notify_all();
+    publish();
 }
 
 /// Configuration of the batched small-solve path.
@@ -327,6 +453,7 @@ type SmallFlusher =
 struct SmallJob<S: Scalar> {
     a: Matrix<S>,
     rhs: Option<Matrix<S>>,
+    slo: Slo,
     slot: SmallSlot<S>,
 }
 
@@ -371,47 +498,64 @@ impl SolveService {
         Self::with_small_config(node, n_workers, SmallConfig::default())
     }
 
-    /// Start a service with an explicit small-solve configuration.
+    /// Start a service with an explicit small-solve configuration and
+    /// the default (seed-FIFO) scheduler.
     pub fn with_small_config(node: SimNode, n_workers: usize, cfg: SmallConfig) -> Self {
+        Self::with_config(node, n_workers, cfg, SchedConfig::default())
+    }
+
+    /// Start a service with explicit small-solve and scheduler
+    /// configurations.
+    pub fn with_config(
+        node: SimNode,
+        n_workers: usize,
+        cfg: SmallConfig,
+        sched: SchedConfig,
+    ) -> Self {
         let capacity: Vec<usize> = node.memory_reports().iter().map(|r| r.capacity).collect();
         let ndev = capacity.len();
         let inner = Arc::new(ServiceInner {
             node,
             capacity,
+            sched,
+            quotas: TenantQuotas::new(sched.tenant_quota),
             state: Mutex::new(ServiceState {
-                queue: VecDeque::new(),
+                queue: SloQueue::new(sched.policy, sched.max_skips),
                 reserved: vec![0; ndev],
                 peak_reserved: vec![0; ndev],
                 in_flight: 0,
                 shutdown: false,
             }),
             cv: Condvar::new(),
+            last_seen_ns: AtomicU64::new(0),
         });
         let workers = (0..n_workers.max(1))
             .map(|_| {
                 let inner = inner.clone();
                 std::thread::spawn(move || loop {
-                    // Admit the head solve once it fits, or exit on
-                    // shutdown with an empty queue.
+                    // Admit the scheduler's best-ranked fitting solve
+                    // (under FIFO only the head is ever a candidate),
+                    // or exit on shutdown with an empty queue.
                     let admitted = {
                         let mut st = inner.state.lock().unwrap();
                         loop {
-                            let fits = match st.queue.front() {
-                                Some(head) => (0..inner.capacity.len()).all(|d| {
-                                    st.reserved[d] + head.footprint[d] <= inner.capacity[d]
-                                }),
-                                None => false,
-                            };
-                            if fits {
-                                let q = st.queue.pop_front().unwrap();
-                                for d in 0..inner.capacity.len() {
-                                    st.reserved[d] += q.footprint[d];
-                                    if st.reserved[d] > st.peak_reserved[d] {
-                                        st.peak_reserved[d] = st.reserved[d];
+                            let ServiceState { queue, reserved, peak_reserved, in_flight, .. } =
+                                &mut *st;
+                            let picked = queue.pop_admissible(|t, q| {
+                                (0..reserved.len())
+                                    .all(|d| reserved[d] + q.footprint[d] <= inner.capacity[d])
+                                    && inner.quotas.would_admit(t.slo.tenant, q.total_bytes())
+                            });
+                            if let Some((ticket, q)) = picked {
+                                for d in 0..reserved.len() {
+                                    reserved[d] += q.footprint[d];
+                                    if reserved[d] > peak_reserved[d] {
+                                        peak_reserved[d] = reserved[d];
                                     }
                                 }
-                                st.in_flight += 1;
-                                break Some(q);
+                                inner.quotas.admit(ticket.slo.tenant, q.total_bytes());
+                                *in_flight += 1;
+                                break Some((ticket, q));
                             }
                             if st.shutdown && st.queue.is_empty() {
                                 break None;
@@ -419,19 +563,21 @@ impl SolveService {
                             st = inner.cv.wait(st).unwrap();
                         }
                     };
-                    let q = match admitted {
-                        Some(q) => q,
+                    let (ticket, q) = match admitted {
+                        Some(adm) => adm,
                         None => return,
                     };
-                    let wait = q.enqueued.elapsed();
-                    let publish = (q.job)(wait);
+                    let QueuedSolve { footprint, job } = q;
+                    let queue_wait_ns = inner.sim_now_ns().saturating_sub(ticket.enq_ns);
+                    let publish = job(ticket, queue_wait_ns);
                     {
                         let mut st = inner.state.lock().unwrap();
                         for d in 0..inner.capacity.len() {
-                            st.reserved[d] -= q.footprint[d];
+                            st.reserved[d] -= footprint[d];
                         }
                         st.in_flight -= 1;
                     }
+                    inner.quotas.release(ticket.slo.tenant, footprint.iter().sum());
                     inner.cv.notify_all();
                     // Only now may the waiter observe completion.
                     publish();
@@ -455,8 +601,7 @@ impl SolveService {
             let inner = inner.clone();
             let small = small.clone();
             let stop = flusher_stop.clone();
-            let tick = (cfg.policy.max_wall_dwell / 2)
-                .clamp(Duration::from_millis(5), Duration::from_millis(250));
+            let tick = flusher_tick(cfg.policy.max_wall_dwell);
             Some(std::thread::spawn(move || loop {
                 {
                     let (lock, cv) = &*stop;
@@ -479,48 +624,68 @@ impl SolveService {
         SolveService { inner, cfg, plans: GridPlanCache::new(), small, workers, flusher, flusher_stop }
     }
 
-    /// Submit a solve with its declared workspace footprint. Fails fast
-    /// if the footprint can never be admitted (exceeds some device's
-    /// total capacity) or spans the wrong device count.
+    /// Submit a solve with its declared workspace footprint under the
+    /// default standard-class SLO. Fails fast if the footprint can
+    /// never be admitted (exceeds some device's total capacity or the
+    /// whole tenant quota) or spans the wrong device count.
     pub fn submit<T: Send + 'static>(
         &self,
         footprint: Footprint,
         f: impl FnOnce() -> T + Send + 'static,
     ) -> Result<ServiceHandle<T>> {
-        self.submit_with_grid(footprint, (1, 1), f)
+        self.submit_slo(footprint, Slo::standard(), f)
     }
 
-    /// [`SolveService::submit`] with an explicit process-grid stamp for
-    /// the returned [`SolveStats`] — the planned-distributed paths pass
-    /// their selector's `(P, Q)` through here.
+    /// [`SolveService::submit`] with an explicit [`Slo`] (class,
+    /// optional deadline, tenant). Opaque closures carry no cost-model
+    /// estimate, so under [`SchedPolicy::EdfSjf`] they rank as
+    /// zero-length jobs within their class; the planned distributed
+    /// paths attach their [`crate::costmodel::Predictor`] makespans.
+    pub fn submit_slo<T: Send + 'static>(
+        &self,
+        footprint: Footprint,
+        slo: Slo,
+        f: impl FnOnce() -> T + Send + 'static,
+    ) -> Result<ServiceHandle<T>> {
+        self.submit_with_grid(footprint, (1, 1), slo, 0, f)
+    }
+
+    /// [`SolveService::submit_slo`] with an explicit process-grid stamp
+    /// and makespan estimate — the planned-distributed paths pass their
+    /// selector's `(P, Q)` and [`DistPlan::est_ns`] through here.
+    ///
+    /// [`DistPlan::est_ns`]: super::admit::DistPlan::est_ns
     fn submit_with_grid<T: Send + 'static>(
         &self,
         footprint: Footprint,
         grid: (usize, usize),
+        slo: Slo,
+        est_ns: u64,
         f: impl FnOnce() -> T + Send + 'static,
     ) -> Result<ServiceHandle<T>> {
         let (handle, slot2) = handle_pair::<T>();
-        let metrics = self.inner.node.metrics().clone();
-        let job: AdmittedJob = Box::new(move |queue_wait| {
-            let t0 = Instant::now();
+        let inner = self.inner.clone();
+        let job: AdmittedJob = Box::new(move |ticket, queue_wait_ns| {
+            let t0_ns = inner.sim_now_ns();
             // A panicking solve must not kill the worker: the unwinding
             // is contained here so the reservation release in the worker
             // loop always runs, and the panic is re-raised on the waiter
             // (JoinHandle semantics).
             let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
-            let exec = t0.elapsed();
-            metrics.add_service_completion(queue_wait.as_nanos() as u64, exec.as_nanos() as u64);
-            let stats = SolveStats { queue_wait, exec, batch_size: 1, coalesce_wait_ns: 0, grid };
+            let exec_ns = inner.sim_now_ns().saturating_sub(t0_ns);
+            inner.note_completion(&ticket, queue_wait_ns, exec_ns);
+            let stats =
+                SolveStats { queue_wait_ns, exec_ns, batch_size: 1, coalesce_wait_ns: 0, grid };
             let outcome = match out {
                 Ok(v) => Ok((v, stats)),
-                Err(p) => Err(panic_message(p)),
+                Err(p) => Err(ServeError::Failed(panic_message(p))),
             };
             let publish: PublishFn = Box::new(move || {
                 publish_one(&slot2, outcome);
             });
             publish
         });
-        self.inner.enqueue_job(footprint, job)?;
+        self.inner.enqueue_job(footprint, slo, est_ns, job)?;
         Ok(handle)
     }
 
@@ -541,6 +706,24 @@ impl SolveService {
         routine: DistRoutine,
         a: Matrix<S>,
         rhs: Option<Matrix<S>>,
+    ) -> Result<ServiceHandle<Matrix<S>>> {
+        self.submit_dist_slo(routine, a, rhs, Slo::standard())
+    }
+
+    /// [`SolveService::submit_dist`] with an explicit [`Slo`]. The
+    /// plan's [`Predictor`] makespan rides into the queue as the
+    /// request's EDF/SJF estimate, and — under [`SchedPolicy::EdfSjf`],
+    /// for non-interactive requests — a panel-boundary preemption hook
+    /// is installed so queued interactive solves run between this
+    /// solve's panels.
+    ///
+    /// [`Predictor`]: crate::costmodel::Predictor
+    pub fn submit_dist_slo<S: Scalar>(
+        &self,
+        routine: DistRoutine,
+        a: Matrix<S>,
+        rhs: Option<Matrix<S>>,
+        slo: Slo,
     ) -> Result<ServiceHandle<Matrix<S>>> {
         let n = a.require_square()?;
         if n == 0 {
@@ -580,10 +763,14 @@ impl SolveService {
         let node = self.inner.node.clone();
         let model = self.cfg.model.clone();
         let kind = plan.kind;
-        self.submit_with_grid(plan.footprint, plan.grid, move || -> Matrix<S> {
+        let hook = self.preempt_hook(slo);
+        self.submit_with_grid(plan.footprint, plan.grid, slo, plan.est_ns, move || -> Matrix<S> {
             let run = || -> Result<Matrix<S>> {
                 let backend = SolverBackend::<S>::Native;
-                let ctx = Ctx::new(&node, &model, &backend);
+                let mut ctx = Ctx::new(&node, &model, &backend);
+                if let Some(h) = hook {
+                    ctx = ctx.with_preempt_hook(h);
+                }
                 let mut dm = DistMatrix::scatter(&node, &a, kind)?;
                 potrf_dist(&ctx, &mut dm)?;
                 match routine {
@@ -606,11 +793,32 @@ impl SolveService {
         })
     }
 
+    /// The panel-boundary preemption hook for a non-interactive solve
+    /// under [`SchedPolicy::EdfSjf`]; `None` otherwise (FIFO never
+    /// reorders, and an interactive solve must not preempt itself).
+    fn preempt_hook(&self, slo: Slo) -> Option<Arc<dyn Fn() + Send + Sync>> {
+        if self.inner.sched.policy == SchedPolicy::EdfSjf && slo.class != SloClass::Interactive {
+            let inner = self.inner.clone();
+            Some(Arc::new(move || try_run_interactive(&inner)))
+        } else {
+            None
+        }
+    }
+
     /// Distributed eigendecomposition through the same grid planner:
     /// ascending eigenvalues + eigenvector columns.
     pub fn submit_syevd<S: Scalar>(
         &self,
         a: Matrix<S>,
+    ) -> Result<ServiceHandle<(Vec<S::Real>, Matrix<S>)>> {
+        self.submit_syevd_slo(a, Slo::standard())
+    }
+
+    /// [`SolveService::submit_syevd`] with an explicit [`Slo`].
+    pub fn submit_syevd_slo<S: Scalar>(
+        &self,
+        a: Matrix<S>,
+        slo: Slo,
     ) -> Result<ServiceHandle<(Vec<S::Real>, Matrix<S>)>> {
         let n = a.require_square()?;
         if n == 0 {
@@ -631,7 +839,7 @@ impl SolveService {
         let node = self.inner.node.clone();
         let model = self.cfg.model.clone();
         let kind = plan.kind;
-        self.submit_with_grid(plan.footprint, plan.grid, move || -> (Vec<S::Real>, Matrix<S>) {
+        self.submit_with_grid(plan.footprint, plan.grid, slo, plan.est_ns, move || -> (Vec<S::Real>, Matrix<S>) {
             let run = || -> Result<(Vec<S::Real>, Matrix<S>)> {
                 let backend = SolverBackend::<S>::Native;
                 let ctx = Ctx::new(&node, &model, &backend);
@@ -676,6 +884,20 @@ impl SolveService {
         a: Matrix<S>,
         rhs: Option<Matrix<S>>,
     ) -> Result<ServiceHandle<Matrix<S>>> {
+        self.submit_small_slo(routine, a, rhs, Slo::standard())
+    }
+
+    /// [`SolveService::submit_small`] with an explicit [`Slo`]. A
+    /// coalesced bucket is enqueued under its **most urgent** member's
+    /// class and earliest member deadline (tenant quotas bill the
+    /// distributed path only — a shared pod has no single owner).
+    pub fn submit_small_slo<S: Scalar>(
+        &self,
+        routine: SmallRoutine,
+        a: Matrix<S>,
+        rhs: Option<Matrix<S>>,
+        slo: Slo,
+    ) -> Result<ServiceHandle<Matrix<S>>> {
         let n = a.require_square()?;
         if n == 0 {
             return Err(Error::shape("cannot solve an empty system"));
@@ -717,13 +939,13 @@ impl SolveService {
             // requests left behind flush here even though this request
             // never touches the coalescer.
             self.flush_due_small();
-            return self.submit_small_distributed(routine, a, rhs);
+            return self.submit_small_distributed(routine, a, rhs, slo);
         }
 
         let (handle, slot) = handle_pair::<Matrix<S>>();
         let key = BucketKey::new(routine, S::DTYPE, n);
         let now_ns = self.sim_now_ns();
-        let job = SmallJob { a, rhs, slot };
+        let job = SmallJob { a, rhs, slo, slot };
         let model = self.cfg.model.clone();
         run_flushes(&self.inner, &self.small, |st, ready| {
             st.flushers.entry(key).or_insert_with(|| small_flusher::<S>(routine, model));
@@ -783,13 +1005,14 @@ impl SolveService {
         routine: SmallRoutine,
         a: Matrix<S>,
         rhs: Option<Matrix<S>>,
+        slo: Slo,
     ) -> Result<ServiceHandle<Matrix<S>>> {
         let dist = match routine {
             SmallRoutine::Potrf => DistRoutine::Potrf,
             SmallRoutine::Potrs => DistRoutine::Potrs,
             SmallRoutine::Potri => DistRoutine::Potri,
         };
-        self.submit_dist(dist, a, rhs)
+        self.submit_dist_slo(dist, a, rhs, slo)
     }
 
     /// Flush the buckets whose oldest request has dwelled past the
@@ -850,6 +1073,23 @@ impl SolveService {
     /// proof it never over-admitted.
     pub fn peak_reserved(&self) -> Vec<usize> {
         self.inner.state.lock().unwrap().peak_reserved.clone()
+    }
+
+    /// The scheduler configuration this service runs under.
+    pub fn sched_config(&self) -> SchedConfig {
+        self.inner.sched
+    }
+
+    /// Bytes currently admitted for `tenant` (0 when quotas are off or
+    /// the tenant has nothing in flight).
+    pub fn tenant_admitted(&self, tenant: u32) -> usize {
+        self.inner.quotas.admitted(tenant)
+    }
+
+    /// High-water mark of admitted bytes for `tenant` — the quota
+    /// accountant's proof it never over-admitted.
+    pub fn tenant_peak(&self, tenant: u32) -> usize {
+        self.inner.quotas.peak(tenant)
     }
 
     /// Block until every submitted solve has finished executing and
@@ -949,12 +1189,22 @@ fn small_flusher<S: Scalar>(routine: SmallRoutine, model: GpuCostModel) -> Arc<S
         let mut systems = Vec::with_capacity(payloads.len());
         let mut rhss = Vec::with_capacity(payloads.len());
         let mut slots = Vec::with_capacity(payloads.len());
+        let mut slos = Vec::with_capacity(payloads.len());
         for p in payloads {
             let job = *p.downcast::<SmallJob<S>>().expect("bucket key pins the dtype");
             systems.push(job.a);
             rhss.push(job.rhs);
+            slos.push(job.slo);
             slots.push(job.slot);
         }
+        // The pod schedules as its most urgent member: best class,
+        // earliest concrete deadline. Tenant 0 — a shared pod has no
+        // single quota owner.
+        let pod_slo = Slo {
+            class: slos.iter().map(|s| s.class).min().unwrap_or(SloClass::Standard),
+            deadline_ns: slos.iter().filter_map(|s| s.deadline_ns).min(),
+            tenant: 0,
+        };
         let occupancy = systems.len();
         let dims: Vec<(usize, usize)> = systems
             .iter()
@@ -967,6 +1217,7 @@ fn small_flusher<S: Scalar>(routine: SmallRoutine, model: GpuCostModel) -> Arc<S
             Err(e) => return publish_failure(&slots, format!("pod footprint failed: {e}")),
         };
         let node = inner.node.clone();
+        let svc_inner = inner.clone();
         let model = model.clone();
         let total_wait: u64 = bucket.waits_ns.iter().sum();
         let waits = bucket.waits_ns.clone();
@@ -975,22 +1226,22 @@ fn small_flusher<S: Scalar>(routine: SmallRoutine, model: GpuCostModel) -> Arc<S
         // per-request publications ride the deferred PublishFn, so —
         // exactly like a non-batched solve — a resolved handle implies
         // the pod's reservation is already released.
-        let job: AdmittedJob = Box::new(move |queue_wait| {
-            let t0 = Instant::now();
+        let job: AdmittedJob = Box::new(move |ticket, queue_wait_ns| {
+            let t0_ns = svc_inner.sim_now_ns();
             let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 run_bucket::<S>(routine, &node, &model, &systems, &rhss, None)
             }));
             let publish: PublishFn = match out {
                 Ok(Ok((results, makespan_ns))) => {
                     node.metrics().add_batch_bucket(occupancy as u64, total_wait, makespan_ns);
-                    let exec = t0.elapsed();
+                    let exec_ns = svc_inner.sim_now_ns().saturating_sub(t0_ns);
                     Box::new(move || {
                         for ((slot, x), wait_ns) in
                             job_slots.iter().zip(results).zip(waits.iter().copied())
                         {
                             let stats = SolveStats {
-                                queue_wait,
-                                exec,
+                                queue_wait_ns,
+                                exec_ns,
                                 batch_size: occupancy,
                                 coalesce_wait_ns: wait_ns,
                                 grid: (1, 1),
@@ -1027,7 +1278,7 @@ fn small_flusher<S: Scalar>(routine: SmallRoutine, model: GpuCostModel) -> Arc<S
                             })
                         })
                         .collect();
-                    let exec = t0.elapsed();
+                    let exec_ns = svc_inner.sim_now_ns().saturating_sub(t0_ns);
                     Box::new(move || {
                         for ((slot, out), wait_ns) in
                             job_slots.iter().zip(outcomes).zip(waits.iter().copied())
@@ -1035,25 +1286,25 @@ fn small_flusher<S: Scalar>(routine: SmallRoutine, model: GpuCostModel) -> Arc<S
                             match out {
                                 Ok(x) => {
                                     let stats = SolveStats {
-                                        queue_wait,
-                                        exec,
+                                        queue_wait_ns,
+                                        exec_ns,
                                         batch_size: 1,
                                         coalesce_wait_ns: wait_ns,
                                         grid: (1, 1),
                                     };
                                     publish_one(slot, Ok((x, stats)));
                                 }
-                                Err(msg) => publish_one(slot, Err(msg)),
+                                Err(msg) => publish_one(slot, Err(ServeError::Failed(msg))),
                             }
                         }
                     })
                 }
             };
-            node.metrics()
-                .add_service_completion(queue_wait.as_nanos() as u64, t0.elapsed().as_nanos() as u64);
+            let exec_ns = svc_inner.sim_now_ns().saturating_sub(t0_ns);
+            svc_inner.note_completion(&ticket, queue_wait_ns, exec_ns);
             publish
         });
-        if let Err(e) = inner.enqueue_job(fp, job) {
+        if let Err(e) = inner.enqueue_job(fp, pod_slo, 0, job) {
             publish_failure(&slots, format!("pod admission failed: {e}"));
         }
     })
@@ -1117,7 +1368,10 @@ mod tests {
         let h = svc.submit(Footprint::uniform(2, 1024), || 7usize).unwrap();
         let (v, stats) = h.wait();
         assert_eq!(v, 7);
-        assert!(stats.exec >= Duration::ZERO);
+        // An uncharged closure spans no simulated time; the stats are
+        // cost-model ns, not host wall time.
+        assert_eq!(stats.exec_ns, 0);
+        assert_eq!(stats.exec_secs(), 0.0);
         svc.drain();
         assert_eq!(svc.reserved(), vec![0, 0]);
         let m = node.metrics().snapshot();
@@ -1555,6 +1809,133 @@ mod tests {
         bad.grid = Some((3, 2));
         let svc_bad = SolveService::with_small_config(SimNode::new_uniform(4, 1 << 22), 1, bad);
         assert!(svc_bad.submit_dist(DistRoutine::Potrf, Matrix::<f64>::spd_random(16, 1), None).is_err());
+    }
+
+    #[test]
+    fn edf_sjf_backfills_past_a_blocked_head() {
+        // Worker 1 holds 900 of 1000 B behind a gate. The queue then
+        // holds [batch 900 B (can never fit now), interactive 100 B].
+        // FIFO would wall everyone behind the batch head; EdfSjf must
+        // backfill the interactive solve past it.
+        let node = SimNode::new_uniform(1, 1000);
+        let sched = SchedConfig { policy: SchedPolicy::EdfSjf, ..SchedConfig::default() };
+        let svc = SolveService::with_config(node, 2, SmallConfig::default(), sched);
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let g = gate.clone();
+        let o = order.clone();
+        let h_hold = svc
+            .submit_slo(Footprint::uniform(1, 900), Slo::batch(), move || {
+                let (lock, cv) = &*g;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+                o.lock().unwrap().push("hold");
+            })
+            .unwrap();
+        // Wait for the holder to be admitted before queueing the rest.
+        while svc.in_flight() == 0 {
+            std::thread::yield_now();
+        }
+        let o = order.clone();
+        let h_batch = svc
+            .submit_slo(Footprint::uniform(1, 900), Slo::batch(), move || {
+                o.lock().unwrap().push("batch");
+            })
+            .unwrap();
+        let o = order.clone();
+        let h_int = svc
+            .submit_slo(Footprint::uniform(1, 100), Slo::interactive(), move || {
+                o.lock().unwrap().push("interactive");
+            })
+            .unwrap();
+        // The interactive solve completes while the gate is still shut —
+        // proof it was admitted past the blocked batch head.
+        h_int.wait();
+        assert_eq!(order.lock().unwrap().as_slice(), ["interactive"]);
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        h_hold.wait();
+        h_batch.wait();
+        assert_eq!(
+            order.lock().unwrap().as_slice(),
+            ["interactive", "hold", "batch"],
+            "the batch solve must still run once capacity frees (no starvation)"
+        );
+    }
+
+    #[test]
+    fn tenant_quotas_gate_admission_and_fail_fast() {
+        let node = SimNode::new_uniform(1, 10_000);
+        let sched = SchedConfig {
+            policy: SchedPolicy::EdfSjf,
+            tenant_quota: Some(1000),
+            ..SchedConfig::default()
+        };
+        let svc = SolveService::with_config(node, 4, SmallConfig::default(), sched);
+        // A single request over the whole quota can never be admitted.
+        let err = svc
+            .submit_slo(Footprint::uniform(1, 1500), Slo::standard().with_tenant(7), || ())
+            .unwrap_err();
+        assert!(matches!(err, Error::Config(_)));
+        // Six 600 B solves from one tenant: the quota admits them one
+        // at a time even though device capacity could hold two.
+        let handles: Vec<_> = (0..6)
+            .map(|_| {
+                svc.submit_slo(Footprint::uniform(1, 600), Slo::standard().with_tenant(7), || {
+                    std::thread::sleep(Duration::from_millis(2));
+                })
+                .unwrap()
+            })
+            .collect();
+        for h in handles {
+            h.wait();
+        }
+        assert!(
+            svc.tenant_peak(7) <= 1000,
+            "quota accountant over-admitted: {}",
+            svc.tenant_peak(7)
+        );
+        assert_eq!(svc.tenant_admitted(7), 0, "all quota bytes released");
+    }
+
+    #[test]
+    fn class_latency_lands_in_metrics() {
+        let node = SimNode::new_uniform(2, 1 << 22);
+        let svc = SolveService::new(node.clone(), 1);
+        // A distributed solve charges the simulated clock, so its class
+        // histogram entry is non-zero ns.
+        let h = svc.submit_dist(DistRoutine::Potrf, Matrix::<f64>::spd_random(64, 3), None).unwrap();
+        h.wait();
+        svc.drain();
+        let m = node.metrics().snapshot();
+        assert_eq!(m.class_completed[SloClass::Standard.index()], 1);
+        assert_eq!(m.class_deadline_misses[SloClass::Standard.index()], 0);
+        assert!(m.class_p99_ns[SloClass::Standard.index()] > 0);
+    }
+
+    #[test]
+    fn zero_wall_dwell_polls_instead_of_spinning() {
+        // A zero wall-dwell policy used to make the background flusher
+        // tick at `0 / 2 = 0` — a busy spin. The clamped tick must both
+        // keep the CPU sane and still flush the stranded bucket.
+        let node = SimNode::new_uniform(2, 1 << 22);
+        let mut cfg = SmallConfig::with_tile(64);
+        cfg.policy.max_batch = 32;
+        cfg.policy.max_dwell_ns = u64::MAX;
+        cfg.policy.max_wall_dwell = Duration::ZERO;
+        assert_eq!(flusher_tick(cfg.policy.max_wall_dwell), Duration::from_millis(5));
+        let svc = SolveService::with_small_config(node, 1, cfg);
+        let h = svc
+            .submit_small(SmallRoutine::Potrf, Matrix::<f64>::spd_random(8, 1), None)
+            .unwrap();
+        let (l, _) = h.wait();
+        assert_eq!(l.rows(), 8);
+        assert_eq!(svc.pending_small(), 0);
     }
 
     #[test]

@@ -711,25 +711,41 @@ impl Predictor {
     /// map to the native 1D layout so existing paths are bitwise
     /// untouched. At paper scale the selector favors tall grids: the
     /// per-step panel trsm is the serial term and splits across `P`.
+    /// Replayed makespan of `routine` on a `(p, q)` process grid — the
+    /// exact per-candidate cost [`Predictor::best_grid`] minimizes,
+    /// exposed so scheduler makespan estimates (EDF/SJF ordering) are
+    /// **bitwise** the autotuner's own numbers. `p == 1` is the 1D
+    /// block-cyclic path over `q` devices.
+    pub fn dist_makespan(
+        &self,
+        routine: &str,
+        n: usize,
+        nrhs: usize,
+        t: usize,
+        p: usize,
+        q: usize,
+    ) -> f64 {
+        let ndev = p * q;
+        match routine {
+            "potrf" => self.redistribute(n, ndev) + self.potrf2d(n, t, p, q),
+            "potrs" => self.potrs2d(n, t, p, q, nrhs.max(1)),
+            "potri" => self.potri2d(n, t, p, q),
+            "syevd" => {
+                if p == 1 {
+                    self.syevd(n, t, ndev)
+                } else {
+                    self.syevd2d(n, t, p, q)
+                }
+            }
+            _ => f64::INFINITY,
+        }
+    }
+
     pub fn best_grid(&self, routine: &str, n: usize, nrhs: usize, t: usize, ndev: usize) -> (usize, usize) {
         if ndev <= 1 {
             return (1, ndev.max(1));
         }
-        let cost = |p: usize, q: usize| -> f64 {
-            match routine {
-                "potrf" => self.redistribute(n, ndev) + self.potrf2d(n, t, p, q),
-                "potrs" => self.potrs2d(n, t, p, q, nrhs.max(1)),
-                "potri" => self.potri2d(n, t, p, q),
-                "syevd" => {
-                    if p == 1 {
-                        self.syevd(n, t, ndev)
-                    } else {
-                        self.syevd2d(n, t, p, q)
-                    }
-                }
-                _ => f64::INFINITY,
-            }
-        };
+        let cost = |p: usize, q: usize| -> f64 { self.dist_makespan(routine, n, nrhs, t, p, q) };
         let mut best = (1usize, ndev);
         let mut best_cost = cost(1, ndev);
         for p in 2..=ndev {

@@ -9,15 +9,25 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Monotone simulated clock, nanosecond resolution, thread-safe.
+///
+/// Time is stored as **integer nanoseconds**; `now_ns`/`sync_to_ns`
+/// expose the exact integer timeline (the serve-layer coalescer clock
+/// reads this path so its timestamps never regress under float
+/// rounding), while `now`/`advance` keep the f64-seconds interface the
+/// cost model speaks.
 #[derive(Debug, Default)]
 pub struct SimClock {
     nanos: AtomicU64,
+    /// Straggler drag: busy-time charges are multiplied by this factor
+    /// (f64 bit-pattern, 1.0 = healthy). The MPMD straggler drill sets
+    /// it > 1 to slow one device without killing it.
+    drag_bits: AtomicU64,
 }
 
 impl SimClock {
     /// New clock at t = 0.
     pub fn new() -> Self {
-        SimClock { nanos: AtomicU64::new(0) }
+        SimClock { nanos: AtomicU64::new(0), drag_bits: AtomicU64::new(1.0f64.to_bits()) }
     }
 
     /// Current time in seconds.
@@ -25,10 +35,16 @@ impl SimClock {
         self.nanos.load(Ordering::Relaxed) as f64 * 1e-9
     }
 
-    /// Advance by `seconds` of busy time.
+    /// Current time in exact integer nanoseconds.
+    pub fn now_ns(&self) -> u64 {
+        self.nanos.load(Ordering::Relaxed)
+    }
+
+    /// Advance by `seconds` of busy time (scaled by the drag factor).
     pub fn advance(&self, seconds: f64) {
         debug_assert!(seconds >= 0.0, "cannot advance clock backwards");
-        let ns = (seconds * 1e9).round() as u64;
+        let drag = f64::from_bits(self.drag_bits.load(Ordering::Relaxed));
+        let ns = (seconds * drag * 1e9).round() as u64;
         self.nanos.fetch_add(ns, Ordering::Relaxed);
     }
 
@@ -40,7 +56,24 @@ impl SimClock {
         self.nanos.fetch_max(target, Ordering::Relaxed);
     }
 
-    /// Reset to t = 0.
+    /// Integer-ns variant of [`SimClock::sync_to`] — no float round-trip.
+    pub fn sync_to_ns(&self, target_ns: u64) {
+        self.nanos.fetch_max(target_ns, Ordering::Relaxed);
+    }
+
+    /// Set the straggler drag factor (1.0 = healthy, 3.0 = 3× slower).
+    /// Affects subsequent `advance` charges only, never recorded time.
+    pub fn set_drag(&self, factor: f64) {
+        assert!(factor.is_finite() && factor >= 1.0, "drag factor must be >= 1.0");
+        self.drag_bits.store(factor.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current drag factor.
+    pub fn drag(&self) -> f64 {
+        f64::from_bits(self.drag_bits.load(Ordering::Relaxed))
+    }
+
+    /// Reset to t = 0 (drag factor is preserved).
     pub fn reset(&self) {
         self.nanos.store(0, Ordering::Relaxed);
     }
@@ -76,5 +109,28 @@ mod tests {
         c.advance(1.0);
         c.reset();
         assert_eq!(c.now(), 0.0);
+    }
+
+    #[test]
+    fn integer_ns_path_is_exact() {
+        let c = SimClock::new();
+        c.sync_to_ns(1_000_000_007);
+        assert_eq!(c.now_ns(), 1_000_000_007);
+        c.sync_to_ns(999); // earlier: no-op
+        assert_eq!(c.now_ns(), 1_000_000_007);
+        c.advance(1e-9);
+        assert_eq!(c.now_ns(), 1_000_000_008);
+    }
+
+    #[test]
+    fn drag_scales_advances() {
+        let c = SimClock::new();
+        assert_eq!(c.drag(), 1.0);
+        c.set_drag(4.0);
+        c.advance(1e-6);
+        assert_eq!(c.now_ns(), 4_000);
+        c.set_drag(1.0);
+        c.advance(1e-6);
+        assert_eq!(c.now_ns(), 5_000);
     }
 }

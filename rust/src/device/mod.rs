@@ -262,6 +262,23 @@ impl SimNode {
         self.inner.gpus.iter().map(|g| g.clock.now()).fold(0.0, f64::max)
     }
 
+    /// [`SimNode::sim_time`] on the exact integer-ns timeline. The serve
+    /// layers' coalescer clocks read this: no float round-trip, so the
+    /// value can never regress under accumulated rounding.
+    pub fn sim_time_ns(&self) -> u64 {
+        self.inner.gpus.iter().map(|g| g.clock.now_ns()).max().unwrap_or(0)
+    }
+
+    /// Synchronize **all** device timelines forward to at least
+    /// `target_ns`. The open-loop traffic driver uses this to pace
+    /// arrivals: a request arriving at t advances the idle fleet to t so
+    /// cost-model queue waits are measured from the arrival instant.
+    pub fn sync_clocks_to_ns(&self, target_ns: u64) {
+        for g in &self.inner.gpus {
+            g.clock.sync_to_ns(target_ns);
+        }
+    }
+
     /// Reset all device timelines and metrics (between bench reps).
     pub fn reset_accounting(&self) {
         for g in &self.inner.gpus {

@@ -60,6 +60,11 @@ pub enum Error {
     /// Configuration errors from the builder / CLI.
     Config(String),
 
+    /// Every worker in an MPMD deployment is dead: there is no live
+    /// device subset left to run the request on. Surfaced to the
+    /// submitter instead of re-queueing forever.
+    NoLiveWorkers { total: usize },
+
     /// Underlying XLA crate error.
     Xla(xla::Error),
 
@@ -98,6 +103,9 @@ impl fmt::Display for Error {
             Error::Shape(msg) => write!(f, "shape mismatch: {msg}"),
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
             Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::NoLiveWorkers { total } => {
+                write!(f, "no live workers left (all {total} dead); request cannot be served")
+            }
             Error::Xla(e) => write!(f, "xla: {e}"),
             Error::Io(e) => write!(f, "io: {e}"),
         }

@@ -55,6 +55,7 @@ pub mod scalar;
 pub mod serve;
 pub mod solver;
 pub mod tile;
+pub mod workload;
 
 /// Convenient re-exports for the common API surface.
 pub mod prelude {
@@ -69,6 +70,7 @@ pub mod prelude {
     pub use crate::scalar::{c32, c64, Complex, Scalar};
     pub use crate::serve::{MpmdConfig, MpmdService};
     pub use crate::solver::{PipelineConfig, SolverBackend};
+    pub use crate::workload::{ArrivalProcess, ClosedLoop, OpenLoop, Population};
 }
 
 pub use error::{Error, Result};

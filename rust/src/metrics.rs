@@ -5,7 +5,66 @@
 //! [`Metrics`]. Counters are lock-free atomics so SPMD worker threads
 //! can bump them concurrently without serializing the hot path.
 
+use crate::coordinator::SloClass;
 use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log-bucketed latency histogram for one SLO class: bucket `k` counts
+/// completions with latency in `[2^k, 2^(k+1))` cost-model ns (bucket 0
+/// also holds zero-latency completions). 64 buckets span all of `u64`,
+/// updates are a single `fetch_add`, and percentile reads resolve to
+/// the bucket's inclusive upper bound — a conservative (never
+/// under-reported) estimate.
+#[derive(Debug)]
+pub struct ClassLatency {
+    completed: AtomicU64,
+    deadline_misses: AtomicU64,
+    buckets: [AtomicU64; 64],
+}
+
+impl Default for ClassLatency {
+    fn default() -> Self {
+        ClassLatency {
+            completed: AtomicU64::new(0),
+            deadline_misses: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+impl ClassLatency {
+    fn bucket(latency_ns: u64) -> usize {
+        (63 - latency_ns.max(1).leading_zeros()) as usize
+    }
+
+    fn record(&self, latency_ns: u64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.buckets[Self::bucket(latency_ns)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn percentile(&self, q: f64) -> u64 {
+        let total = self.completed.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (k, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                return if k >= 63 { u64::MAX } else { (1u64 << (k + 1)) - 1 };
+            }
+        }
+        u64::MAX
+    }
+
+    fn reset(&self) {
+        self.completed.store(0, Ordering::Relaxed);
+        self.deadline_misses.store(0, Ordering::Relaxed);
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+    }
+}
 
 /// Shared counters; cloned cheaply via `Arc` by every subsystem.
 #[derive(Debug, Default)]
@@ -36,10 +95,17 @@ pub struct Metrics {
     pub service_submitted: AtomicU64,
     /// Solve requests completed by the concurrent solve service.
     pub service_completed: AtomicU64,
-    /// Total real time solves spent queued before admission, ns.
+    /// Total **cost-model (simulated)** ns solves spent queued before
+    /// admission — same integer-ns timeline as the golden timelines.
     pub service_queue_wait_ns: AtomicU64,
-    /// Total real execution time of admitted solves, ns.
+    /// Total cost-model ns from admission to completion.
     pub service_exec_ns: AtomicU64,
+    /// Large solves preempted at a panel boundary so a
+    /// latency-sensitive request could run.
+    pub service_preemptions: AtomicU64,
+    /// Per-SLO-class latency histograms (queue wait + exec, cost-model
+    /// ns), indexed by [`SloClass::index`].
+    pub class_latency: [ClassLatency; 3],
     /// Busy stream-seconds issued by pipelined phases, ns
     /// (overlap-efficiency numerator).
     pub overlap_busy_ns: AtomicU64,
@@ -143,6 +209,30 @@ impl Metrics {
         self.service_exec_ns.fetch_add(exec_ns, Ordering::Relaxed);
     }
 
+    /// Record one completed request's end-to-end latency (queue wait +
+    /// exec, cost-model ns) against its SLO class; `missed_deadline`
+    /// marks it against the class's deadline-miss count too.
+    #[inline]
+    pub fn record_class_latency(&self, class: SloClass, latency_ns: u64, missed_deadline: bool) {
+        let h = &self.class_latency[class.index()];
+        h.record(latency_ns);
+        if missed_deadline {
+            h.deadline_misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one panel-boundary preemption.
+    #[inline]
+    pub fn note_preemption(&self) {
+        self.service_preemptions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Latency percentile (`q` in `[0, 1]`) for one SLO class, from
+    /// the live histogram — `0` when the class has no completions.
+    pub fn latency_percentile(&self, class: SloClass, q: f64) -> u64 {
+        self.class_latency[class.index()].percentile(q)
+    }
+
     #[inline]
     pub fn add_overlap(&self, busy_ns: u64, span_ns: u64) {
         self.overlap_busy_ns.fetch_add(busy_ns, Ordering::Relaxed);
@@ -237,6 +327,15 @@ impl Metrics {
             service_completed: self.service_completed.load(Ordering::Relaxed),
             service_queue_wait_ns: self.service_queue_wait_ns.load(Ordering::Relaxed),
             service_exec_ns: self.service_exec_ns.load(Ordering::Relaxed),
+            service_preemptions: self.service_preemptions.load(Ordering::Relaxed),
+            class_completed: std::array::from_fn(|i| {
+                self.class_latency[i].completed.load(Ordering::Relaxed)
+            }),
+            class_deadline_misses: std::array::from_fn(|i| {
+                self.class_latency[i].deadline_misses.load(Ordering::Relaxed)
+            }),
+            class_p50_ns: std::array::from_fn(|i| self.class_latency[i].percentile(0.50)),
+            class_p99_ns: std::array::from_fn(|i| self.class_latency[i].percentile(0.99)),
             overlap_busy_ns: self.overlap_busy_ns.load(Ordering::Relaxed),
             overlap_span_ns: self.overlap_span_ns.load(Ordering::Relaxed),
             batch_buckets: self.batch_buckets.load(Ordering::Relaxed),
@@ -278,6 +377,7 @@ impl Metrics {
             &self.service_completed,
             &self.service_queue_wait_ns,
             &self.service_exec_ns,
+            &self.service_preemptions,
             &self.overlap_busy_ns,
             &self.overlap_span_ns,
             &self.batch_buckets,
@@ -301,6 +401,9 @@ impl Metrics {
         ] {
             c.store(0, Ordering::Relaxed);
         }
+        for h in &self.class_latency {
+            h.reset();
+        }
     }
 }
 
@@ -322,6 +425,16 @@ pub struct MetricsSnapshot {
     pub service_completed: u64,
     pub service_queue_wait_ns: u64,
     pub service_exec_ns: u64,
+    pub service_preemptions: u64,
+    /// Completions per SLO class, indexed by [`SloClass::index`].
+    pub class_completed: [u64; 3],
+    /// Deadline misses per SLO class (degraded-mode-adjusted).
+    pub class_deadline_misses: [u64; 3],
+    /// p50 end-to-end latency per class at snapshot time, cost-model
+    /// ns (log-bucket upper bound; `0` = no completions).
+    pub class_p50_ns: [u64; 3],
+    /// p99 end-to-end latency per class at snapshot time, cost-model ns.
+    pub class_p99_ns: [u64; 3],
     pub overlap_busy_ns: u64,
     pub overlap_span_ns: u64,
     pub batch_buckets: u64,
@@ -417,6 +530,16 @@ impl MetricsSnapshot {
             service_completed: self.service_completed - earlier.service_completed,
             service_queue_wait_ns: self.service_queue_wait_ns - earlier.service_queue_wait_ns,
             service_exec_ns: self.service_exec_ns - earlier.service_exec_ns,
+            service_preemptions: self.service_preemptions - earlier.service_preemptions,
+            class_completed: std::array::from_fn(|i| {
+                self.class_completed[i] - earlier.class_completed[i]
+            }),
+            class_deadline_misses: std::array::from_fn(|i| {
+                self.class_deadline_misses[i] - earlier.class_deadline_misses[i]
+            }),
+            // Distribution stats, not flows: the later values stand.
+            class_p50_ns: self.class_p50_ns,
+            class_p99_ns: self.class_p99_ns,
             overlap_busy_ns: self.overlap_busy_ns - earlier.overlap_busy_ns,
             overlap_span_ns: self.overlap_span_ns - earlier.overlap_span_ns,
             batch_buckets: self.batch_buckets - earlier.batch_buckets,
@@ -559,6 +682,35 @@ mod tests {
         assert_eq!(s.grid_peak_q, 4);
         assert_eq!(s.grid_row_bytes, 1000);
         assert_eq!(s.grid_col_bytes, 500);
+        m.reset();
+        assert_eq!(m.snapshot(), MetricsSnapshot::default());
+    }
+
+    #[test]
+    fn class_latency_percentiles() {
+        let m = Metrics::new();
+        // 99 fast interactive completions in [64, 128) ns, one slow
+        // outlier in [65536, 131072) ns.
+        for _ in 0..99 {
+            m.record_class_latency(SloClass::Interactive, 100, false);
+        }
+        m.record_class_latency(SloClass::Interactive, 100_000, true);
+        let s = m.snapshot();
+        assert_eq!(s.class_completed[SloClass::Interactive.index()], 100);
+        assert_eq!(s.class_deadline_misses[SloClass::Interactive.index()], 1);
+        // p50 lands in the fast bucket, p99 falls on the 99th
+        // completion (still fast), p100 would hit the outlier.
+        assert_eq!(s.class_p50_ns[SloClass::Interactive.index()], 127);
+        assert_eq!(s.class_p99_ns[SloClass::Interactive.index()], 127);
+        assert_eq!(m.latency_percentile(SloClass::Interactive, 1.0), 131_071);
+        // Untouched classes stay empty.
+        assert_eq!(s.class_completed[SloClass::Batch.index()], 0);
+        assert_eq!(s.class_p99_ns[SloClass::Batch.index()], 0);
+        // Zero latency is representable (bucket 0).
+        m.record_class_latency(SloClass::Batch, 0, false);
+        assert_eq!(m.latency_percentile(SloClass::Batch, 0.5), 1);
+        m.note_preemption();
+        assert_eq!(m.snapshot().service_preemptions, 1);
         m.reset();
         assert_eq!(m.snapshot(), MetricsSnapshot::default());
     }

@@ -1,11 +1,14 @@
 //! The rank-0 frontend: request queue, failure-aware routing, and the
 //! single-caller solve path.
 //!
-//! [`MpmdService`] owns the FIFO request queue. A dispatcher thread
-//! admits the queue head against the **workers' own** per-device
-//! accountants (all-or-rollback across the live set for distributed
-//! solves, a single least-loaded worker for pinned pods), then hands
-//! execution off:
+//! [`MpmdService`] owns the SLO-aware request queue (an
+//! [`SloQueue`] shared with the SPMD front — FIFO by default, EDF/SJF
+//! under [`SchedPolicy::EdfSjf`](crate::coordinator::SchedPolicy),
+//! with the same anti-starvation barrier and per-tenant quotas). A
+//! dispatcher thread admits the scheduled head against the **workers'
+//! own** per-device accountants (all-or-rollback across the live set
+//! for distributed solves, a single least-loaded worker for pinned
+//! pods), then hands execution off:
 //!
 //! * **distributed solves** run on a router pool as the single caller —
 //!   live workers stage their shards locally and export them, rank 0
@@ -35,20 +38,30 @@
 //!
 //! Retries shrink the live set monotonically (excluded devices
 //! accumulate), so routing terminates: either a retry completes on the
-//! remaining devices or the request fails with "no live workers".
+//! remaining devices or the request resolves with the typed
+//! [`ServeError::NoLiveWorkers`] — re-queueing against an empty live
+//! set would spin forever, so the dispatcher surfaces it instead.
+//!
+//! Straggler injection ([`MpmdService::inject_straggler`]) generalizes
+//! the kill drill: a dragged device clock slows every charge it hosts,
+//! and deadline-miss accounting relaxes by
+//! [`SchedConfig::degrade_factor`] while any straggler is active.
 //!
 //! [`Predictor::mpmd_overhead`]: crate::costmodel::Predictor::mpmd_overhead
 //! [`BatchPlanner`]: crate::batch::BatchPlanner
 
 use super::worker::{spawn_worker, StagedAlloc, WorkerCtx, WorkerJob, WorkerLink};
 use crate::batch::{
-    run_bucket, size_class, BatchPlanner, BatchPolicy, BucketKey, FlushedBucket, SmallRoutine,
+    flusher_tick, run_bucket, size_class, BatchPlanner, BatchPolicy, BucketKey, FlushedBucket,
+    SmallRoutine,
 };
 use crate::coordinator::{
-    handle_pair, panic_message, publish_failure, publish_one, DistPlan, Footprint, GridPlanCache,
-    JobQueue, ServiceHandle, Slot, SolveStats,
+    handle_pair, publish_error, publish_one, DistPlan, Footprint, GridPlanCache, JobQueue,
+    SchedConfig, ServeError, ServiceHandle, Slo, SloClass, Slot, SloQueue, SloTicket, SolveStats,
+    TenantQuotas,
 };
 pub use crate::coordinator::DistRoutine;
+use crate::coordinator::panic_message;
 use crate::costmodel::{GpuCostModel, Predictor};
 use crate::device::{DevPtr, SimNode};
 use crate::error::{Error, Result};
@@ -60,9 +73,10 @@ use crate::solver::{
 };
 use crate::tile::{build_panel, DistMatrix, LayoutKind};
 use std::any::Any;
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Configuration of the MPMD serving subsystem.
 #[derive(Clone, Debug)]
@@ -86,6 +100,9 @@ pub struct MpmdConfig {
     /// worker set — a shrunk set is re-planned); `Some((p, q))` pins
     /// it (p·q must equal the live worker count at dispatch).
     pub grid: Option<(usize, usize)>,
+    /// Scheduling policy of the frontend queue — the same
+    /// [`SchedConfig`] the SPMD front takes (FIFO by default).
+    pub sched: SchedConfig,
 }
 
 impl MpmdConfig {
@@ -99,6 +116,7 @@ impl MpmdConfig {
             policy,
             routers: 2,
             grid: None,
+            sched: SchedConfig::default(),
         }
     }
 }
@@ -117,24 +135,24 @@ impl Default for MpmdConfig {
 // ---------------------------------------------------------------------------
 
 struct FrontState {
-    queue: VecDeque<QueuedWork>,
+    queue: SloQueue<QueuedWork>,
     in_flight: usize,
     shutdown: bool,
 }
 
 /// The rank-0 frontend state workers and routers wake each other
-/// through: the FIFO request queue, the in-flight count, and the one
-/// condvar behind every release/completion/death notification.
+/// through: the SLO-aware request queue, the in-flight count, and the
+/// one condvar behind every release/completion/death notification.
 pub(crate) struct FrontShared {
     state: Mutex<FrontState>,
     cv: Condvar,
 }
 
 impl FrontShared {
-    fn new() -> Self {
+    fn new(sched: SchedConfig) -> Self {
         FrontShared {
             state: Mutex::new(FrontState {
-                queue: VecDeque::new(),
+                queue: SloQueue::new(sched.policy, sched.max_skips),
                 in_flight: 0,
                 shutdown: false,
             }),
@@ -156,29 +174,34 @@ impl FrontShared {
     }
 
     /// A dispatched work item failed on dead devices: exclude them and
-    /// put it back at the queue head for re-routing.
-    pub(crate) fn requeue(&self, mut work: QueuedWork, dead: &[usize]) {
+    /// restore it under its original ticket for re-routing — the
+    /// request keeps its queue age (sequence number and skip count).
+    pub(crate) fn requeue(&self, ticket: SloTicket, mut work: QueuedWork, dead: &[usize]) {
         for &d in dead {
             if !work.excluded.contains(&d) {
                 work.excluded.push(d);
             }
         }
-        work.attempts += 1;
         let mut st = self.state.lock().unwrap();
-        st.queue.push_front(work);
+        st.queue.restore(ticket, work);
         st.in_flight -= 1;
         drop(st);
         self.cv.notify_all();
     }
 
-    /// Enqueue new work; hands the work back when the service is
-    /// already shut down (the caller fails its waiters).
-    pub(crate) fn enqueue(&self, work: QueuedWork) -> std::result::Result<(), QueuedWork> {
+    /// Enqueue new work at cost-model time `now_ns`; hands the work
+    /// back when the service is already shut down (the caller fails
+    /// its waiters).
+    pub(crate) fn enqueue(
+        &self,
+        work: QueuedWork,
+        now_ns: u64,
+    ) -> std::result::Result<(), QueuedWork> {
         let mut st = self.state.lock().unwrap();
         if st.shutdown {
             return Err(work);
         }
-        st.queue.push_back(work);
+        st.queue.push_back(work.slo, work.est_ns, now_ns, work);
         drop(st);
         self.cv.notify_all();
         Ok(())
@@ -213,17 +236,17 @@ pub(crate) trait DistWork: Send + Sync {
         shared: &Shared,
         live: &[usize],
         plan: &DistPlan,
-        queue_wait: Duration,
+        ticket: &SloTicket,
     ) -> ExecResult;
-    fn fail(&self, msg: String);
+    fn fail(&self, err: ServeError);
 }
 
 /// A coalesced pod pinned to one worker (type-erased over dtype).
 pub(crate) trait PodWork: Send + Sync {
     /// Arena bytes the pod needs on its single target device.
     fn bytes(&self) -> usize;
-    fn run(&self, ctx: &WorkerCtx, queue_wait: Duration) -> PodOutcome;
-    fn fail(&self, msg: String);
+    fn run(&self, ctx: &WorkerCtx, ticket: &SloTicket, sched: SchedConfig) -> PodOutcome;
+    fn fail(&self, err: ServeError);
 }
 
 pub(crate) enum WorkKind {
@@ -231,28 +254,62 @@ pub(crate) enum WorkKind {
     Pod(Arc<dyn PodWork>),
 }
 
-/// One queued request plus its routing state.
+/// One queued request plus its routing state. The enqueue timestamp
+/// lives on the [`SloTicket`] the queue mints (cost-model ns — the
+/// wall-clock `Instant` it replaced mixed time bases with the
+/// simulated solve clock).
 pub(crate) struct QueuedWork {
     kind: WorkKind,
     /// Devices excluded by prior failures (grows monotonically).
     excluded: Vec<usize>,
-    /// Dispatch attempts so far (diagnostics in terminal failures).
-    attempts: u32,
-    enqueued: Instant,
+    /// SLO the queue ticket is minted from.
+    slo: Slo,
+    /// Predictor makespan estimate for SJF ordering (0 = unknown).
+    est_ns: u64,
 }
 
 impl QueuedWork {
-    fn fresh(kind: WorkKind) -> Self {
-        QueuedWork { kind, excluded: Vec::new(), attempts: 0, enqueued: Instant::now() }
+    fn fresh(kind: WorkKind, slo: Slo, est_ns: u64) -> Self {
+        QueuedWork { kind, excluded: Vec::new(), slo, est_ns }
     }
 }
 
 /// Fail every waiter of a work item that can no longer be routed.
-fn fail_work(work: QueuedWork, msg: String) {
+fn fail_work(work: QueuedWork, err: ServeError) {
     match work.kind {
-        WorkKind::Dist(req) => req.fail(msg),
-        WorkKind::Pod(pod) => pod.fail(msg),
+        WorkKind::Dist(req) => req.fail(err),
+        WorkKind::Pod(pod) => pod.fail(err),
     }
+}
+
+/// Completion-side accounting shared by routers and worker pods: the
+/// `service_*` aggregates plus the per-class latency histogram and
+/// deadline-miss counter, all in cost-model ns. A deadline is judged
+/// against the latency budget it implied at enqueue
+/// (`deadline − enqueue`), scaled by [`SchedConfig::degrade_factor`]
+/// while any device clock runs with straggler drag — mirrors the SPMD
+/// front's accounting exactly.
+fn note_completion(
+    node: &SimNode,
+    sched: &SchedConfig,
+    ticket: &SloTicket,
+    queue_wait_ns: u64,
+    exec_ns: u64,
+) {
+    let m = node.metrics();
+    m.add_service_completion(queue_wait_ns, exec_ns);
+    let latency_ns = queue_wait_ns.saturating_add(exec_ns);
+    let missed = match ticket.slo.deadline_ns {
+        Some(d) => {
+            let degraded = (0..node.num_devices())
+                .any(|dev| node.device(dev).map(|g| g.clock().drag() > 1.0).unwrap_or(false));
+            let budget = d.saturating_sub(ticket.enq_ns);
+            let scale = if degraded { sched.degrade_factor } else { 1.0 };
+            latency_ns as f64 > budget as f64 * scale
+        }
+        None => false,
+    };
+    m.record_class_latency(ticket.slo.class, latency_ns, missed);
 }
 
 // ---------------------------------------------------------------------------
@@ -272,6 +329,13 @@ pub(crate) struct Shared {
     /// The frontend's (rank 0's) address space: worker 0 is a thread of
     /// this process, so its shard needs no IPC export.
     caller: AddressSpace,
+    /// Per-tenant admitted-footprint quotas ([`SchedConfig::tenant_quota`]).
+    quotas: TenantQuotas,
+    /// Monotonic watermark over [`SimNode::sim_time_ns`]: concurrent
+    /// device-clock advances may briefly lower the max-over-clocks
+    /// reading between two calls, and queue-age arithmetic needs a
+    /// non-decreasing clock.
+    last_seen_ns: AtomicU64,
 }
 
 impl Shared {
@@ -281,8 +345,13 @@ impl Shared {
             .collect()
     }
 
+    /// Integer cost-model nanoseconds, monotone non-decreasing. (The
+    /// float round-trip this replaced — `(sim_time() * 1e9).round()` —
+    /// lost precision above 2^53 ns and could regress between calls.)
     fn sim_now_ns(&self) -> u64 {
-        (self.node.sim_time() * 1e9).round() as u64
+        let now = self.node.sim_time_ns();
+        let prev = self.last_seen_ns.fetch_max(now, Ordering::AcqRel);
+        now.max(prev)
     }
 }
 
@@ -386,9 +455,10 @@ impl<S: Scalar> DistWork for DistReq<S> {
         shared: &Shared,
         live: &[usize],
         plan: &DistPlan,
-        queue_wait: Duration,
+        ticket: &SloTicket,
     ) -> ExecResult {
-        let t0 = Instant::now();
+        let t0_ns = shared.sim_now_ns();
+        let queue_wait_ns = t0_ns.saturating_sub(ticket.enq_ns);
         let caller = shared.caller;
         let fp = &plan.footprint;
         let metrics = shared.node.metrics().clone();
@@ -526,16 +596,16 @@ impl<S: Scalar> DistWork for DistReq<S> {
             }
             wctx.admission.release(fp.bytes(i));
         }
+        shared.quotas.release(ticket.slo.tenant, fp.as_slice().iter().sum());
         shared.front.notify();
 
         match result {
             Ok(out) => {
-                let exec = t0.elapsed();
-                metrics
-                    .add_service_completion(queue_wait.as_nanos() as u64, exec.as_nanos() as u64);
+                let exec_ns = shared.sim_now_ns().saturating_sub(t0_ns);
+                note_completion(&shared.node, &shared.cfg.sched, ticket, queue_wait_ns, exec_ns);
                 let stats = SolveStats {
-                    queue_wait,
-                    exec,
+                    queue_wait_ns,
+                    exec_ns,
                     batch_size: 1,
                     coalesce_wait_ns: 0,
                     grid: plan.grid,
@@ -549,11 +619,18 @@ impl<S: Scalar> DistWork for DistReq<S> {
                 if dead.is_empty() {
                     // Terminal failure: counts as a completion, exactly
                     // like a failed solve on the SPMD front.
-                    metrics.add_service_completion(
-                        queue_wait.as_nanos() as u64,
-                        t0.elapsed().as_nanos() as u64,
+                    let exec_ns = shared.sim_now_ns().saturating_sub(t0_ns);
+                    note_completion(
+                        &shared.node,
+                        &shared.cfg.sched,
+                        ticket,
+                        queue_wait_ns,
+                        exec_ns,
                     );
-                    self.fail(format!("mpmd {} failed: {e}", self.routine.name()));
+                    self.fail(ServeError::Failed(format!(
+                        "mpmd {} failed: {e}",
+                        self.routine.name()
+                    )));
                     ExecResult::Published
                 } else {
                     ExecResult::Requeue(dead)
@@ -562,10 +639,10 @@ impl<S: Scalar> DistWork for DistReq<S> {
         }
     }
 
-    fn fail(&self, msg: String) {
+    fn fail(&self, err: ServeError) {
         match &self.slot {
-            DistSlot::Mat(slot) => publish_one(slot, Err(msg)),
-            DistSlot::Eig(slot) => publish_one(slot, Err(msg)),
+            DistSlot::Mat(slot) => publish_one(slot, Err(err)),
+            DistSlot::Eig(slot) => publish_one(slot, Err(err)),
         }
     }
 }
@@ -598,8 +675,9 @@ impl<S: Scalar> PodWork for PodReq<S> {
             .bytes(0)
     }
 
-    fn run(&self, ctx: &WorkerCtx, queue_wait: Duration) -> PodOutcome {
-        let t0 = Instant::now();
+    fn run(&self, ctx: &WorkerCtx, ticket: &SloTicket, sched: SchedConfig) -> PodOutcome {
+        let t0_ns = ctx.node.sim_time_ns();
+        let queue_wait_ns = t0_ns.saturating_sub(ticket.enq_ns);
         let occupancy = self.systems.len();
         let swept = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             run_bucket::<S>(
@@ -613,18 +691,16 @@ impl<S: Scalar> PodWork for PodReq<S> {
         }));
         match swept {
             Ok(Ok((results, makespan_ns))) => {
-                let exec = t0.elapsed();
+                let exec_ns = ctx.node.sim_time_ns().saturating_sub(t0_ns);
                 let total_wait: u64 = self.waits.iter().sum();
                 ctx.node.metrics().add_batch_bucket(occupancy as u64, total_wait, makespan_ns);
-                ctx.node
-                    .metrics()
-                    .add_service_completion(queue_wait.as_nanos() as u64, exec.as_nanos() as u64);
+                note_completion(&ctx.node, &sched, ticket, queue_wait_ns, exec_ns);
                 for ((slot, x), wait_ns) in
                     self.slots.iter().zip(results).zip(self.waits.iter().copied())
                 {
                     let stats = SolveStats {
-                        queue_wait,
-                        exec,
+                        queue_wait_ns,
+                        exec_ns,
                         batch_size: occupancy,
                         coalesce_wait_ns: wait_ns,
                         grid: (1, 1),
@@ -652,11 +728,16 @@ impl<S: Scalar> PodWork for PodReq<S> {
                             waits: self.waits[i..].to_vec(),
                         };
                         ctx.node.metrics().add_mpmd_requeue();
-                        let mut work = QueuedWork::fresh(WorkKind::Pod(Arc::new(tail)));
+                        let mut work =
+                            QueuedWork::fresh(WorkKind::Pod(Arc::new(tail)), ticket.slo, 0);
                         work.excluded.push(ctx.device);
-                        work.attempts = 1;
-                        if let Err(w) = ctx.front.enqueue(work) {
-                            fail_work(w, "mpmd service shut down during retry".to_string());
+                        if let Err(w) = ctx.front.enqueue(work, ctx.node.sim_time_ns()) {
+                            fail_work(
+                                w,
+                                ServeError::Failed(
+                                    "mpmd service shut down during retry".to_string(),
+                                ),
+                            );
                         } else {
                             ctx.node.metrics().add_service_submission();
                         }
@@ -672,35 +753,34 @@ impl<S: Scalar> PodWork for PodReq<S> {
                             Some(ctx.device),
                         )
                     }));
-                    let exec = t0.elapsed();
+                    let exec_ns = ctx.node.sim_time_ns().saturating_sub(t0_ns);
                     let outcome = match one {
                         Ok(Ok((mut v, _))) => Ok((
                             v.pop().expect("batch of one"),
                             SolveStats {
-                                queue_wait,
-                                exec,
+                                queue_wait_ns,
+                                exec_ns,
                                 batch_size: 1,
                                 coalesce_wait_ns: self.waits[i],
                                 grid: (1, 1),
                             },
                         )),
-                        Ok(Err(e)) => Err(format!("small solve failed: {e}")),
-                        Err(p) => Err(panic_message(p)),
+                        Ok(Err(e)) => Err(ServeError::Failed(format!("small solve failed: {e}"))),
+                        Err(p) => Err(ServeError::Failed(panic_message(p))),
                     };
                     publish_one(&self.slots[i], outcome);
                 }
                 // One admitted pod, one completion — whichever path
                 // resolved it (parity with the SPMD bucket flusher).
-                ctx.node
-                    .metrics()
-                    .add_service_completion(queue_wait.as_nanos() as u64, t0.elapsed().as_nanos() as u64);
+                let exec_ns = ctx.node.sim_time_ns().saturating_sub(t0_ns);
+                note_completion(&ctx.node, &sched, ticket, queue_wait_ns, exec_ns);
                 PodOutcome::Published
             }
         }
     }
 
-    fn fail(&self, msg: String) {
-        publish_failure(&self.slots, msg);
+    fn fail(&self, err: ServeError) {
+        publish_error(&self.slots, err);
     }
 }
 
@@ -720,19 +800,22 @@ fn reserve_all(shared: &Shared, live: &[usize], fp: &Footprint) -> bool {
     true
 }
 
-/// Route one popped work item. Returns `false` when the head could not
-/// be admitted yet (it is back at the head; the dispatcher waits for a
-/// release before retrying — strict FIFO, no starvation).
-fn dispatch(shared: &Arc<Shared>, routers: &Arc<JobQueue>, work: QueuedWork) -> bool {
+/// Route one popped work item. Returns `false` when the pick could not
+/// be admitted yet (it is restored under its original ticket; the
+/// dispatcher waits for a release before retrying — the queue's skip
+/// aging preserves the no-starvation guarantee under either policy).
+fn dispatch(
+    shared: &Arc<Shared>,
+    routers: &Arc<JobQueue>,
+    ticket: SloTicket,
+    work: QueuedWork,
+) -> bool {
     let live = shared.live_workers(&work.excluded);
     let metrics = shared.node.metrics().clone();
     if live.is_empty() {
-        let msg = format!(
-            "no live workers left after {} attempt(s) (excluded: {:?})",
-            work.attempts + 1,
-            work.excluded
-        );
-        fail_work(work, msg);
+        // Typed terminal failure: re-queueing against an empty live
+        // set would loop forever (nothing can ever admit the work).
+        fail_work(work, ServeError::NoLiveWorkers { total: shared.workers.len() });
         shared.front.complete();
         return true;
     }
@@ -754,7 +837,7 @@ fn dispatch(shared: &Arc<Shared>, routers: &Arc<JobQueue>, work: QueuedWork) -> 
             let plan = match req.plan(shared, live.len()) {
                 Ok(plan) => plan,
                 Err(e) => {
-                    req.fail(format!("solve planning failed: {e}"));
+                    req.fail(ServeError::Failed(format!("solve planning failed: {e}")));
                     shared.front.complete();
                     return true;
                 }
@@ -763,29 +846,41 @@ fn dispatch(shared: &Arc<Shared>, routers: &Arc<JobQueue>, work: QueuedWork) -> 
             // waiting for releases would deadlock the queue head.
             for (i, &dev) in live.iter().enumerate() {
                 if plan.footprint.bytes(i) > shared.workers[dev].ctx.admission.capacity() {
-                    req.fail(format!(
+                    req.fail(ServeError::Failed(format!(
                         "declared footprint ({} B) exceeds device {dev}'s capacity",
                         plan.footprint.bytes(i)
-                    ));
+                    )));
                     shared.front.complete();
                     return true;
                 }
             }
             if !reserve_all(shared, &live, &plan.footprint) {
                 let mut st = shared.front.state.lock().unwrap();
-                st.queue.push_front(work);
+                st.queue.restore(ticket, work);
                 st.in_flight -= 1;
                 return false;
             }
-            metrics.add_mpmd_routed(work.enqueued.elapsed().as_nanos() as u64);
+            // Tenant quota: admitted footprint summed over the live
+            // set, the same accountant the SPMD front charges.
+            let fp_total: usize = plan.footprint.as_slice().iter().sum();
+            if !shared.quotas.would_admit(ticket.slo.tenant, fp_total) {
+                for (i, &dev) in live.iter().enumerate() {
+                    shared.workers[dev].ctx.admission.release(plan.footprint.bytes(i));
+                }
+                let mut st = shared.front.state.lock().unwrap();
+                st.queue.restore(ticket, work);
+                st.in_flight -= 1;
+                return false;
+            }
+            shared.quotas.admit(ticket.slo.tenant, fp_total);
+            metrics.add_mpmd_routed(shared.sim_now_ns().saturating_sub(ticket.enq_ns));
             let shared2 = shared.clone();
             let _ = routers.submit(move || {
-                let queue_wait = work.enqueued.elapsed();
-                match req.execute(&shared2, &live, &plan, queue_wait) {
+                match req.execute(&shared2, &live, &plan, &ticket) {
                     ExecResult::Published => shared2.front.complete(),
                     ExecResult::Requeue(dead) => {
                         shared2.node.metrics().add_mpmd_requeue();
-                        shared2.front.requeue(work, &dead);
+                        shared2.front.requeue(ticket, work, &dead);
                     }
                 }
             });
@@ -799,7 +894,9 @@ fn dispatch(shared: &Arc<Shared>, routers: &Arc<JobQueue>, work: QueuedWork) -> 
                 .filter(|&d| bytes <= shared.workers[d].ctx.admission.capacity())
                 .collect();
             if cands.is_empty() {
-                pod.fail(format!("pod of {bytes} B exceeds every live device's capacity"));
+                pod.fail(ServeError::Failed(format!(
+                    "pod of {bytes} B exceeds every live device's capacity"
+                )));
                 shared.front.complete();
                 return true;
             }
@@ -814,29 +911,41 @@ fn dispatch(shared: &Arc<Shared>, routers: &Arc<JobQueue>, work: QueuedWork) -> 
             }
             let Some(dev) = target else {
                 let mut st = shared.front.state.lock().unwrap();
-                st.queue.push_front(work);
+                st.queue.restore(ticket, work);
                 st.in_flight -= 1;
                 return false;
             };
-            metrics.add_mpmd_routed(work.enqueued.elapsed().as_nanos() as u64);
+            if !shared.quotas.would_admit(ticket.slo.tenant, bytes) {
+                shared.workers[dev].ctx.admission.release(bytes);
+                let mut st = shared.front.state.lock().unwrap();
+                st.queue.restore(ticket, work);
+                st.in_flight -= 1;
+                return false;
+            }
+            shared.quotas.admit(ticket.slo.tenant, bytes);
+            metrics.add_mpmd_routed(shared.sim_now_ns().saturating_sub(ticket.enq_ns));
+            let shared2 = shared.clone();
+            let sched = shared.cfg.sched;
             let job: WorkerJob = Box::new(move |ctx| {
                 if !ctx.alive() {
                     // Draining a dead worker: hand the pod back.
                     ctx.admission.release(bytes);
+                    shared2.quotas.release(ticket.slo.tenant, bytes);
                     ctx.node.metrics().add_mpmd_requeue();
-                    ctx.front.requeue(work, &[ctx.device]);
+                    ctx.front.requeue(ticket, work, &[ctx.device]);
                     return;
                 }
-                let queue_wait = work.enqueued.elapsed();
-                match pod.run(ctx, queue_wait) {
+                match pod.run(ctx, &ticket, sched) {
                     PodOutcome::Published => {
                         ctx.admission.release(bytes);
+                        shared2.quotas.release(ticket.slo.tenant, bytes);
                         ctx.front.complete();
                     }
                     PodOutcome::WorkerDead => {
                         ctx.admission.release(bytes);
+                        shared2.quotas.release(ticket.slo.tenant, bytes);
                         ctx.node.metrics().add_mpmd_requeue();
-                        ctx.front.requeue(work, &[ctx.device]);
+                        ctx.front.requeue(ticket, work, &[ctx.device]);
                     }
                 }
             });
@@ -852,6 +961,10 @@ fn dispatch(shared: &Arc<Shared>, routers: &Arc<JobQueue>, work: QueuedWork) -> 
 }
 
 fn dispatcher_loop(shared: Arc<Shared>, small: Arc<Mutex<MpmdSmall>>, routers: Arc<JobQueue>) {
+    // Idle poll cadence derived from the wall-dwell bound through
+    // `flusher_tick`, whose floor clamp keeps a zero-dwell policy
+    // polling instead of busy-spinning (the SPMD flusher's fix, shared).
+    let tick = flusher_tick(shared.cfg.policy.max_wall_dwell);
     loop {
         // Frontend-driven coalescer tick: dwell-expired buckets flush
         // even when no further submit arrives (the serve-loop twin of
@@ -862,20 +975,19 @@ fn dispatcher_loop(shared: Arc<Shared>, small: Arc<Mutex<MpmdSmall>>, routers: A
             if st.shutdown && st.queue.is_empty() && st.in_flight == 0 {
                 return;
             }
-            match st.queue.pop_front() {
-                Some(w) => {
+            match st.queue.pop_next() {
+                Some((ticket, w)) => {
                     st.in_flight += 1;
-                    Some(w)
+                    Some((ticket, w))
                 }
                 None => {
-                    let _unused =
-                        shared.front.cv.wait_timeout(st, Duration::from_millis(10)).unwrap();
+                    let _unused = shared.front.cv.wait_timeout(st, tick).unwrap();
                     None
                 }
             }
         };
-        let Some(work) = popped else { continue };
-        if !dispatch(&shared, &routers, work) {
+        let Some((ticket, work)) = popped else { continue };
+        if !dispatch(&shared, &routers, ticket, work) {
             // Head-of-line wait: capacity frees when something
             // completes; the release paths notify this condvar.
             let st = shared.front.state.lock().unwrap();
@@ -899,6 +1011,7 @@ struct MpmdSmallJob<S: Scalar> {
     a: Matrix<S>,
     rhs: Option<Matrix<S>>,
     slot: Slot<Matrix<S>>,
+    slo: Slo,
 }
 
 struct MpmdSmall {
@@ -914,19 +1027,34 @@ fn pod_builder<S: Scalar>(routine: SmallRoutine) -> Arc<PodBuilder> {
         let mut systems = Vec::with_capacity(payloads.len());
         let mut rhss = Vec::with_capacity(payloads.len());
         let mut slots = Vec::with_capacity(payloads.len());
+        // The pod inherits the strictest SLO of its members: the most
+        // latency-sensitive class and the earliest deadline (same
+        // aggregation as the SPMD small-flusher).
+        let mut class: Option<SloClass> = None;
+        let mut deadline: Option<u64> = None;
         for p in payloads {
             let job = *p.downcast::<MpmdSmallJob<S>>().expect("bucket key pins the dtype");
+            class = Some(class.map_or(job.slo.class, |c| c.min(job.slo.class)));
+            if let Some(d) = job.slo.deadline_ns {
+                deadline = Some(deadline.map_or(d, |x| x.min(d)));
+            }
             systems.push(job.a);
             rhss.push(job.rhs);
             slots.push(job.slot);
         }
-        QueuedWork::fresh(WorkKind::Pod(Arc::new(PodReq::<S> {
-            routine,
-            systems,
-            rhss,
-            slots,
-            waits: bucket.waits_ns,
-        })))
+        let pod_slo =
+            Slo { class: class.unwrap_or(SloClass::Standard), deadline_ns: deadline, tenant: 0 };
+        QueuedWork::fresh(
+            WorkKind::Pod(Arc::new(PodReq::<S> {
+                routine,
+                systems,
+                rhss,
+                slots,
+                waits: bucket.waits_ns,
+            })),
+            pod_slo,
+            0,
+        )
     })
 }
 
@@ -949,8 +1077,8 @@ fn flush_due_buckets(shared: &Shared, small: &Mutex<MpmdSmall>) {
         }
     }
     for w in ready {
-        if let Err(w) = shared.front.enqueue(w) {
-            fail_work(w, "mpmd service is shut down".to_string());
+        if let Err(w) = shared.front.enqueue(w, now_ns) {
+            fail_work(w, ServeError::Failed("mpmd service is shut down".to_string()));
         } else {
             shared.node.metrics().add_service_submission();
         }
@@ -981,7 +1109,7 @@ impl MpmdService {
     /// pool, and the rank-0 dispatcher.
     pub fn with_config(node: SimNode, cfg: MpmdConfig) -> Self {
         let registry = Arc::new(IpcRegistry::new());
-        let front = Arc::new(FrontShared::new());
+        let front = Arc::new(FrontShared::new(cfg.sched));
         let mut workers = Vec::new();
         let mut worker_threads = Vec::new();
         for d in 0..node.num_devices() {
@@ -998,6 +1126,7 @@ impl MpmdService {
         }
         let policy = cfg.policy;
         let routers_n = cfg.routers.max(1);
+        let quotas = TenantQuotas::new(cfg.sched.tenant_quota);
         let shared = Arc::new(Shared {
             node,
             registry,
@@ -1006,6 +1135,8 @@ impl MpmdService {
             front,
             plans: GridPlanCache::new(),
             caller: AddressSpace(0),
+            quotas,
+            last_seen_ns: AtomicU64::new(0),
         });
         let small = Arc::new(Mutex::new(MpmdSmall {
             planner: BatchPlanner::new(policy),
@@ -1029,10 +1160,17 @@ impl MpmdService {
         }
     }
 
-    fn enqueue_dist<S: Scalar>(&self, req: DistReq<S>) -> Result<()> {
-        let work = QueuedWork::fresh(WorkKind::Dist(Arc::new(req)));
-        if let Err(w) = self.shared.front.enqueue(work) {
-            fail_work(w, "mpmd service is shut down".to_string());
+    fn enqueue_dist<S: Scalar>(&self, req: DistReq<S>, slo: Slo) -> Result<()> {
+        // SJF/EDF ranks off the same Predictor makespan the planner
+        // mints (estimated over the full worker set; a degraded-mode
+        // dispatch re-plans, but the ticket keeps its submit-time
+        // estimate). A failed estimate degrades to 0 — FIFO within
+        // rank — rather than failing the submit.
+        let est_ns =
+            req.plan(&self.shared, self.shared.workers.len()).map(|p| p.est_ns).unwrap_or(0);
+        let work = QueuedWork::fresh(WorkKind::Dist(Arc::new(req)), slo, est_ns);
+        if let Err(w) = self.shared.front.enqueue(work, self.shared.sim_now_ns()) {
+            fail_work(w, ServeError::Failed("mpmd service is shut down".to_string()));
             return Err(Error::config("mpmd service is shut down"));
         }
         self.shared.node.metrics().add_service_submission();
@@ -1049,14 +1187,26 @@ impl MpmdService {
 
     /// Distributed Cholesky factor: returns the factored matrix.
     pub fn submit_potrf<S: Scalar>(&self, a: Matrix<S>) -> Result<ServiceHandle<Matrix<S>>> {
+        self.submit_potrf_slo(a, Slo::standard())
+    }
+
+    /// [`Self::submit_potrf`] with an explicit SLO.
+    pub fn submit_potrf_slo<S: Scalar>(
+        &self,
+        a: Matrix<S>,
+        slo: Slo,
+    ) -> Result<ServiceHandle<Matrix<S>>> {
         Self::validate_square(&a)?;
         let (handle, slot) = handle_pair::<Matrix<S>>();
-        self.enqueue_dist(DistReq {
-            routine: DistRoutine::Potrf,
-            a: Arc::new(a),
-            rhs: None,
-            slot: DistSlot::Mat(slot),
-        })?;
+        self.enqueue_dist(
+            DistReq {
+                routine: DistRoutine::Potrf,
+                a: Arc::new(a),
+                rhs: None,
+                slot: DistSlot::Mat(slot),
+            },
+            slo,
+        )?;
         Ok(handle)
     }
 
@@ -1066,30 +1216,55 @@ impl MpmdService {
         a: Matrix<S>,
         b: Matrix<S>,
     ) -> Result<ServiceHandle<Matrix<S>>> {
+        self.submit_potrs_slo(a, b, Slo::standard())
+    }
+
+    /// [`Self::submit_potrs`] with an explicit SLO.
+    pub fn submit_potrs_slo<S: Scalar>(
+        &self,
+        a: Matrix<S>,
+        b: Matrix<S>,
+        slo: Slo,
+    ) -> Result<ServiceHandle<Matrix<S>>> {
         let n = Self::validate_square(&a)?;
         if b.rows() != n {
             return Err(Error::shape(format!("rhs has {} rows, matrix is {n}x{n}", b.rows())));
         }
         let (handle, slot) = handle_pair::<Matrix<S>>();
-        self.enqueue_dist(DistReq {
-            routine: DistRoutine::Potrs,
-            a: Arc::new(a),
-            rhs: Some(b),
-            slot: DistSlot::Mat(slot),
-        })?;
+        self.enqueue_dist(
+            DistReq {
+                routine: DistRoutine::Potrs,
+                a: Arc::new(a),
+                rhs: Some(b),
+                slot: DistSlot::Mat(slot),
+            },
+            slo,
+        )?;
         Ok(handle)
     }
 
     /// Distributed SPD/HPD inverse.
     pub fn submit_potri<S: Scalar>(&self, a: Matrix<S>) -> Result<ServiceHandle<Matrix<S>>> {
+        self.submit_potri_slo(a, Slo::standard())
+    }
+
+    /// [`Self::submit_potri`] with an explicit SLO.
+    pub fn submit_potri_slo<S: Scalar>(
+        &self,
+        a: Matrix<S>,
+        slo: Slo,
+    ) -> Result<ServiceHandle<Matrix<S>>> {
         Self::validate_square(&a)?;
         let (handle, slot) = handle_pair::<Matrix<S>>();
-        self.enqueue_dist(DistReq {
-            routine: DistRoutine::Potri,
-            a: Arc::new(a),
-            rhs: None,
-            slot: DistSlot::Mat(slot),
-        })?;
+        self.enqueue_dist(
+            DistReq {
+                routine: DistRoutine::Potri,
+                a: Arc::new(a),
+                rhs: None,
+                slot: DistSlot::Mat(slot),
+            },
+            slo,
+        )?;
         Ok(handle)
     }
 
@@ -1099,14 +1274,26 @@ impl MpmdService {
         &self,
         a: Matrix<S>,
     ) -> Result<ServiceHandle<(Vec<S::Real>, Matrix<S>)>> {
+        self.submit_syevd_slo(a, Slo::standard())
+    }
+
+    /// [`Self::submit_syevd`] with an explicit SLO.
+    pub fn submit_syevd_slo<S: Scalar>(
+        &self,
+        a: Matrix<S>,
+        slo: Slo,
+    ) -> Result<ServiceHandle<(Vec<S::Real>, Matrix<S>)>> {
         Self::validate_square(&a)?;
         let (handle, slot) = handle_pair::<(Vec<S::Real>, Matrix<S>)>();
-        self.enqueue_dist(DistReq {
-            routine: DistRoutine::Syevd,
-            a: Arc::new(a),
-            rhs: None,
-            slot: DistSlot::Eig(slot),
-        })?;
+        self.enqueue_dist(
+            DistReq {
+                routine: DistRoutine::Syevd,
+                a: Arc::new(a),
+                rhs: None,
+                slot: DistSlot::Eig(slot),
+            },
+            slo,
+        )?;
         Ok(handle)
     }
 
@@ -1118,6 +1305,18 @@ impl MpmdService {
         routine: SmallRoutine,
         a: Matrix<S>,
         rhs: Option<Matrix<S>>,
+    ) -> Result<ServiceHandle<Matrix<S>>> {
+        self.submit_small_slo(routine, a, rhs, Slo::standard())
+    }
+
+    /// [`Self::submit_small`] with an explicit SLO. A coalesced pod
+    /// inherits the strictest SLO among its members.
+    pub fn submit_small_slo<S: Scalar>(
+        &self,
+        routine: SmallRoutine,
+        a: Matrix<S>,
+        rhs: Option<Matrix<S>>,
+        slo: Slo,
     ) -> Result<ServiceHandle<Matrix<S>>> {
         let n = Self::validate_square(&a)?;
         match (routine, &rhs) {
@@ -1165,12 +1364,10 @@ impl MpmdService {
                 SmallRoutine::Potri => DistRoutine::Potri,
             };
             let (handle, slot) = handle_pair::<Matrix<S>>();
-            self.enqueue_dist(DistReq {
-                routine: dist,
-                a: Arc::new(a),
-                rhs,
-                slot: DistSlot::Mat(slot),
-            })?;
+            self.enqueue_dist(
+                DistReq { routine: dist, a: Arc::new(a), rhs, slot: DistSlot::Mat(slot) },
+                slo,
+            )?;
             return Ok(handle);
         }
 
@@ -1182,7 +1379,7 @@ impl MpmdService {
             let mut st = self.small.lock().unwrap();
             st.builders.entry(key).or_insert_with(|| pod_builder::<S>(routine));
             let (id, flushed) = st.planner.push(key, now_ns);
-            st.payloads.insert(id, Box::new(MpmdSmallJob::<S> { a, rhs, slot }));
+            st.payloads.insert(id, Box::new(MpmdSmallJob::<S> { a, rhs, slot, slo }));
             if let Some(bucket) = flushed {
                 collect_ready(&mut st, bucket, &mut ready);
             }
@@ -1195,8 +1392,8 @@ impl MpmdService {
         for w in ready {
             // Submission accounting is pod-granular, matching the SPMD
             // flusher's one-enqueue-per-bucket semantics.
-            if let Err(w) = self.shared.front.enqueue(w) {
-                fail_work(w, "mpmd service is shut down".to_string());
+            if let Err(w) = self.shared.front.enqueue(w, now_ns) {
+                fail_work(w, ServeError::Failed("mpmd service is shut down".to_string()));
             } else {
                 self.shared.node.metrics().add_service_submission();
             }
@@ -1243,8 +1440,8 @@ impl MpmdService {
             }
         }
         for w in ready {
-            if let Err(w) = self.shared.front.enqueue(w) {
-                fail_work(w, "mpmd service is shut down".to_string());
+            if let Err(w) = self.shared.front.enqueue(w, now_ns) {
+                fail_work(w, ServeError::Failed("mpmd service is shut down".to_string()));
             } else {
                 self.shared.node.metrics().add_service_submission();
             }
@@ -1280,6 +1477,47 @@ impl MpmdService {
             .ok_or(Error::InvalidDevice { device: d, count: self.shared.workers.len() })?;
         link.ctx.arm_fault();
         Ok(())
+    }
+
+    /// Inject a straggler: device `d`'s clock runs `factor`× slower
+    /// from now on (every charge it hosts stretches), generalizing the
+    /// kill drill to *slow* rather than dead hardware. The worker stays
+    /// alive and keeps serving — no request is lost — while
+    /// deadline-miss accounting relaxes by
+    /// [`SchedConfig::degrade_factor`] for as long as any straggler is
+    /// active. `factor` is clamped to ≥ 1.0.
+    pub fn inject_straggler(&self, d: usize, factor: f64) -> Result<()> {
+        self.shared.node.device(d)?.clock().set_drag(factor.max(1.0));
+        Ok(())
+    }
+
+    /// Restore device `d`'s clock to nominal speed.
+    pub fn clear_straggler(&self, d: usize) -> Result<()> {
+        self.shared.node.device(d)?.clock().set_drag(1.0);
+        Ok(())
+    }
+
+    /// True while any device clock runs with straggler drag.
+    pub fn degraded(&self) -> bool {
+        (0..self.shared.node.num_devices()).any(|d| {
+            self.shared.node.device(d).map(|g| g.clock().drag() > 1.0).unwrap_or(false)
+        })
+    }
+
+    /// The active scheduler configuration.
+    pub fn sched_config(&self) -> SchedConfig {
+        self.shared.cfg.sched
+    }
+
+    /// Bytes currently admitted for `tenant` (0 without quotas).
+    pub fn tenant_admitted(&self, tenant: u32) -> usize {
+        self.shared.quotas.admitted(tenant)
+    }
+
+    /// High-water mark of admitted bytes for `tenant` — the
+    /// over-admission proof the quota property test pins.
+    pub fn tenant_peak(&self, tenant: u32) -> usize {
+        self.shared.quotas.peak(tenant)
     }
 
     /// Devices whose worker process is alive.

@@ -131,6 +131,11 @@ pub struct Ctx<'a, S: Scalar> {
     /// The timing schedule (barrier or lookahead pipelining).
     pub pipeline: PipelineConfig,
     timeline: Option<Arc<PipelineTimeline>>,
+    /// Cooperative-preemption hook: called at panel boundaries of the
+    /// distributed factorizations ([`Ctx::preempt_point`]). The solve
+    /// service installs it so a queued latency-sensitive solve can run
+    /// between a large solve's panels instead of behind them.
+    preempt: Option<Arc<dyn Fn() + Send + Sync>>,
 }
 
 impl<'a, S: Scalar> Ctx<'a, S> {
@@ -160,7 +165,24 @@ impl<'a, S: Scalar> Ctx<'a, S> {
         } else {
             None
         };
-        Ctx { node, model, kernels: backend.kernels(), pipeline, timeline }
+        Ctx { node, model, kernels: backend.kernels(), pipeline, timeline, preempt: None }
+    }
+
+    /// Install a cooperative-preemption hook, invoked at every
+    /// [`Ctx::preempt_point`] (the panel boundaries of the distributed
+    /// factorizations). The hook must not re-enter this context.
+    pub fn with_preempt_hook(mut self, hook: Arc<dyn Fn() + Send + Sync>) -> Self {
+        self.preempt = Some(hook);
+        self
+    }
+
+    /// A panel-boundary yield point: runs the installed preemption hook
+    /// (if any). The distributed factor loops call this once per column
+    /// tile, so preemption granularity is one panel, never mid-kernel.
+    pub fn preempt_point(&self) {
+        if let Some(hook) = &self.preempt {
+            hook();
+        }
     }
 
     /// The stream timeline, when pipelining is enabled.

@@ -110,6 +110,8 @@ pub fn potrf_dist<S: Scalar>(ctx: &Ctx<'_, S>, a: &mut DistMatrix<S>) -> Result<
     let mut step_updates_done = vec![0.0f64; ntiles];
 
     for t in 0..ntiles {
+        // Panel boundary: a queued latency-sensitive solve may run here.
+        ctx.preempt_point();
         let owner = lay.owner_of_tile(t);
         let k0 = lay.tile_start(t);
         let tk = lay.tile_cols(t);
@@ -294,6 +296,8 @@ fn potrf_dist_grid<S: Scalar>(
     let mut step_done = vec![0.0f64; nt];
 
     for t in 0..nt {
+        // Panel boundary: a queued latency-sensitive solve may run here.
+        ctx.preempt_point();
         let tk = cd.tile_len(t);
         let k0 = cd.tile_start(t);
         let k1 = k0 + tk;

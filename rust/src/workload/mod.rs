@@ -1,0 +1,635 @@
+//! Fleet-scale traffic generation for the serving fronts.
+//!
+//! The scheduler work in `coordinator::admit` (SLO classes, EDF/SJF,
+//! quotas, preemption) is only as good as the traffic that exercises
+//! it. This module carries deterministic **open-loop** and
+//! **closed-loop** generators over mixed request populations drawn from
+//! the domain examples — the GP posterior pipeline (`gp_inverse.rs`)
+//! and the VMC stochastic-reconfiguration loop (`vmc_sr.rs`) — plus the
+//! tiny-solve stream and nightly refactorizations of the batch demos.
+//!
+//! Three arrival processes ([`ArrivalProcess`]):
+//!
+//! * **Poisson** — memoryless arrivals at a fixed rate; the steady-state
+//!   baseline.
+//! * **Diurnal** — a sinusoidally rate-modulated Poisson process
+//!   (base → peak over a period); stresses admission under slow load
+//!   swings.
+//! * **Bursty** — a two-point mixture of burst-rate and idle-rate
+//!   exponential gaps; produces the head-of-line pileups that separate
+//!   FIFO from EDF/SJF on tail latency.
+//!
+//! Everything is driven by the crate's [`Rng`] (xoshiro256**): one
+//! 64-bit seed reproduces the whole trace — arrival instants, request
+//! mix, and every input matrix (each request carries its own derived
+//! matrix seed).
+//!
+//! The open-loop driver paces the **simulated** clock with
+//! [`SimNode::sync_clocks_to_ns`]: a request arriving at `t` advances
+//! an idle fleet to `t`, so cost-model queue waits are measured from
+//! the arrival instant — wall time never enters the accounting.
+
+use crate::batch::SmallRoutine;
+use crate::coordinator::{
+    DistRoutine, ServeError, ServiceHandle, Slo, SloClass, SolveService, SolveStats,
+};
+use crate::device::SimNode;
+use crate::error::Result;
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use crate::scalar::{c32, c64, DType, Scalar};
+use std::collections::VecDeque;
+
+// ---------------------------------------------------------------------------
+// Arrival processes
+// ---------------------------------------------------------------------------
+
+/// How request arrival instants are spaced. All three draw exponential
+/// gaps; they differ in how the instantaneous rate is chosen.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at a constant `rate_hz`.
+    Poisson {
+        /// Mean arrival rate (requests per simulated second).
+        rate_hz: f64,
+    },
+    /// Sinusoidally rate-modulated Poisson:
+    /// `rate(t) = base + (peak − base) · (1 + sin(2πt/period)) / 2`.
+    Diurnal {
+        /// Trough arrival rate.
+        base_hz: f64,
+        /// Crest arrival rate.
+        peak_hz: f64,
+        /// Modulation period in simulated seconds.
+        period_s: f64,
+    },
+    /// Two-point mixture: each gap is drawn at `burst_hz` with
+    /// probability `burst_prob`, else at `idle_hz`. With a large rate
+    /// ratio this yields tight arrival clusters separated by lulls —
+    /// the pileups that expose FIFO head-of-line blocking.
+    Bursty {
+        /// Background arrival rate between bursts.
+        idle_hz: f64,
+        /// In-burst arrival rate.
+        burst_hz: f64,
+        /// Probability a given gap is drawn at the burst rate.
+        burst_prob: f64,
+    },
+}
+
+/// One exponential gap at `rate` (inverse-CDF; `1 − u` keeps the
+/// argument of `ln` strictly positive since `u ∈ [0, 1)`).
+fn exp_gap_s(rate_hz: f64, rng: &mut Rng) -> f64 {
+    let u = rng.next_f64();
+    -(1.0 - u).ln() / rate_hz.max(1e-12)
+}
+
+impl ArrivalProcess {
+    /// Draw the gap (simulated seconds) to the next arrival, given the
+    /// current simulated time `t_s` (only [`ArrivalProcess::Diurnal`]
+    /// reads it).
+    pub fn next_gap_s(&self, t_s: f64, rng: &mut Rng) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate_hz } => exp_gap_s(rate_hz, rng),
+            ArrivalProcess::Diurnal { base_hz, peak_hz, period_s } => {
+                let phase = t_s / period_s.max(1e-12) * std::f64::consts::TAU;
+                let rate = base_hz + (peak_hz - base_hz) * 0.5 * (1.0 + phase.sin());
+                exp_gap_s(rate, rng)
+            }
+            ArrivalProcess::Bursty { idle_hz, burst_hz, burst_prob } => {
+                if rng.next_f64() < burst_prob {
+                    exp_gap_s(burst_hz, rng)
+                } else {
+                    exp_gap_s(idle_hz, rng)
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Request population
+// ---------------------------------------------------------------------------
+
+/// Which serving path a generated request takes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// The batched small-solve path (`submit_small_slo`).
+    Small(SmallRoutine),
+    /// The planned distributed path (`submit_dist_slo`, or
+    /// `submit_syevd_slo` for [`DistRoutine::Syevd`]).
+    Dist(DistRoutine),
+}
+
+/// One generated request: route, problem shape, dtype, and SLO terms.
+/// `Copy` so populations are plain value tables.
+#[derive(Clone, Copy, Debug)]
+pub struct RequestSpec {
+    /// Serving path and routine.
+    pub route: Route,
+    /// Matrix order.
+    pub n: usize,
+    /// Right-hand-side columns (read only by `potrs` routes).
+    pub nrhs: usize,
+    /// Element type; the driver monomorphizes the submit on this.
+    pub dtype: DType,
+    /// Scheduling class.
+    pub class: SloClass,
+    /// Deadline **budget** in cost-model ns from the arrival instant
+    /// (`None` = no deadline). The driver turns it into the absolute
+    /// [`Slo::deadline_ns`] at submit time.
+    pub deadline_budget_ns: Option<u64>,
+    /// Owning tenant for quota accounting.
+    pub tenant: u32,
+    /// Seed for this request's input matrices; [`Population::sample`]
+    /// re-derives it per draw so every request gets fresh inputs.
+    pub seed: u64,
+}
+
+impl RequestSpec {
+    /// The absolute [`Slo`] for a request arriving at `now_ns`.
+    pub fn slo_at(&self, now_ns: u64) -> Slo {
+        Slo {
+            class: self.class,
+            deadline_ns: self.deadline_budget_ns.map(|b| now_ns.saturating_add(b)),
+            tenant: self.tenant,
+        }
+    }
+}
+
+/// A weighted mixture of [`RequestSpec`] templates.
+#[derive(Clone, Debug)]
+pub struct Population {
+    entries: Vec<(f64, RequestSpec)>,
+    total: f64,
+}
+
+impl Population {
+    /// Build from `(weight, template)` pairs. Weights are relative
+    /// (they need not sum to 1); non-positive weights are rejected.
+    pub fn new(entries: Vec<(f64, RequestSpec)>) -> Self {
+        assert!(!entries.is_empty(), "population must have at least one entry");
+        assert!(entries.iter().all(|&(w, _)| w > 0.0), "weights must be positive");
+        let total = entries.iter().map(|&(w, _)| w).sum();
+        Population { entries, total }
+    }
+
+    /// Draw one request: weighted template pick, then a fresh matrix
+    /// seed from the same stream (so traces stay reproducible).
+    pub fn sample(&self, rng: &mut Rng) -> RequestSpec {
+        let mut x = rng.next_f64() * self.total;
+        let mut spec = self.entries.last().expect("population is non-empty").1;
+        for &(w, s) in &self.entries {
+            if x < w {
+                spec = s;
+                break;
+            }
+            x -= w;
+        }
+        spec.seed = rng.next_u64();
+        spec
+    }
+
+    /// The template table (for reporting / assertions).
+    pub fn entries(&self) -> &[(f64, RequestSpec)] {
+        &self.entries
+    }
+
+    /// The fleet mix drawn from the domain examples:
+    ///
+    /// * **VMC SR solves** (`vmc_sr.rs`): `potrs` on the `n = 96`
+    ///   quantum geometric tensor, one RHS — the inner loop of an
+    ///   optimizer, so interactive with a tight deadline.
+    /// * **GP posterior solves** (`gp_inverse.rs`): `potrs` against the
+    ///   `n = 256` RBF kernel — interactive, looser deadline.
+    /// * **GP kernel inversions**: the same kernel through `potri`
+    ///   (real analogue of Fig. 3b's complex128 inversion), plus a
+    ///   complex128 `potri` at `n = 192` — standard class.
+    /// * **Tiny solves** (`batch_serve.rs`): `potrs` at `n ∈ {12, 21,
+    ///   30}` — the coalescer's bread and butter, standard class.
+    /// * **Nightly refactorizations**: `potrf` at `n = 384`, float32 —
+    ///   batch class, no deadline; the preemptible background work.
+    pub fn gp_vmc_mix() -> Self {
+        let dist = |r, n, nrhs, dtype, class, budget: Option<u64>, tenant| RequestSpec {
+            route: Route::Dist(r),
+            n,
+            nrhs,
+            dtype,
+            class,
+            deadline_budget_ns: budget,
+            tenant,
+            seed: 0,
+        };
+        let small = |n, tenant| RequestSpec {
+            route: Route::Small(SmallRoutine::Potrs),
+            n,
+            nrhs: 1,
+            dtype: DType::F64,
+            class: SloClass::Standard,
+            deadline_budget_ns: None,
+            tenant,
+            seed: 0,
+        };
+        Population::new(vec![
+            // VMC stochastic reconfiguration: (S + λI)δ = g, n_params = 96.
+            (
+                0.30,
+                dist(
+                    DistRoutine::Potrs,
+                    96,
+                    1,
+                    DType::F64,
+                    SloClass::Interactive,
+                    Some(25_000_000),
+                    1,
+                ),
+            ),
+            // GP posterior mean: K⁻¹y against the 256-point RBF kernel.
+            (
+                0.20,
+                dist(
+                    DistRoutine::Potrs,
+                    256,
+                    1,
+                    DType::F64,
+                    SloClass::Interactive,
+                    Some(80_000_000),
+                    2,
+                ),
+            ),
+            // GP kernel inversion (posterior variance needs all of K⁻¹).
+            (0.12, dist(DistRoutine::Potri, 256, 0, DType::F64, SloClass::Standard, None, 2)),
+            // Fig. 3b's dtype: complex128 Cholesky inverse.
+            (0.05, dist(DistRoutine::Potri, 192, 0, DType::C128, SloClass::Standard, None, 2)),
+            // The tiny-solve stream (three size-classes, as batch_serve.rs).
+            (0.08, small(12, 1)),
+            (0.08, small(21, 1)),
+            (0.07, small(30, 1)),
+            // Nightly refactorization: big, float32, happy to wait.
+            (0.10, dist(DistRoutine::Potrf, 384, 0, DType::F32, SloClass::Batch, None, 3)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Submission (type-erased completion)
+// ---------------------------------------------------------------------------
+
+/// A submitted request whose caller only cares about scheduling
+/// outcomes: blocks for completion and yields the [`SolveStats`] (or
+/// the typed [`ServeError`]), erasing the solve's result type so mixed
+/// dtype/routine traffic collects into one `Vec`.
+pub struct Pending {
+    wait: Box<dyn FnOnce() -> std::result::Result<SolveStats, ServeError> + Send>,
+}
+
+impl Pending {
+    /// Wrap any service handle.
+    pub fn from_handle<T: Send + 'static>(h: ServiceHandle<T>) -> Self {
+        Pending { wait: Box::new(move || h.wait_result().map(|(_, stats)| stats)) }
+    }
+
+    /// Block until the request resolves.
+    pub fn wait(self) -> std::result::Result<SolveStats, ServeError> {
+        (self.wait)()
+    }
+}
+
+/// Submit one generated request to the SPMD front at simulated time
+/// `now_ns` (the arrival instant: deadlines are `now + budget`).
+pub fn submit_spec(svc: &SolveService, spec: &RequestSpec, now_ns: u64) -> Result<Pending> {
+    match spec.dtype {
+        DType::F32 => submit_typed::<f32>(svc, spec, now_ns),
+        DType::F64 => submit_typed::<f64>(svc, spec, now_ns),
+        DType::C64 => submit_typed::<c32>(svc, spec, now_ns),
+        DType::C128 => submit_typed::<c64>(svc, spec, now_ns),
+    }
+}
+
+fn submit_typed<S: Scalar>(svc: &SolveService, spec: &RequestSpec, now_ns: u64) -> Result<Pending> {
+    let slo = spec.slo_at(now_ns);
+    let a = Matrix::<S>::spd_random(spec.n, spec.seed);
+    let rhs_seed = spec.seed ^ 0x9E37_79B9_7F4A_7C15;
+    match spec.route {
+        Route::Small(r) => {
+            let rhs = matches!(r, SmallRoutine::Potrs)
+                .then(|| Matrix::<S>::random(spec.n, spec.nrhs.max(1), rhs_seed));
+            svc.submit_small_slo(r, a, rhs, slo).map(Pending::from_handle)
+        }
+        Route::Dist(DistRoutine::Syevd) => svc.submit_syevd_slo(a, slo).map(Pending::from_handle),
+        Route::Dist(r) => {
+            let rhs = matches!(r, DistRoutine::Potrs)
+                .then(|| Matrix::<S>::random(spec.n, spec.nrhs.max(1), rhs_seed));
+            svc.submit_dist_slo(r, a, rhs, slo).map(Pending::from_handle)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Open loop
+// ---------------------------------------------------------------------------
+
+/// One scheduled arrival of an open-loop trace.
+#[derive(Clone, Copy, Debug)]
+pub struct Arrival {
+    /// Arrival instant on the simulated timeline.
+    pub at_ns: u64,
+    /// What arrives.
+    pub spec: RequestSpec,
+}
+
+/// Open-loop generator: arrivals are scheduled by the
+/// [`ArrivalProcess`] regardless of completions, so queues grow when
+/// the fleet falls behind — the regime where scheduling policy shows
+/// up in tail latency.
+#[derive(Clone, Debug)]
+pub struct OpenLoop {
+    /// Gap distribution.
+    pub arrivals: ArrivalProcess,
+    /// Request mixture.
+    pub population: Population,
+    /// Seed for the whole trace.
+    pub seed: u64,
+    /// Timeline offset of the first gap (ns).
+    pub start_ns: u64,
+}
+
+impl OpenLoop {
+    /// A generator starting at the timeline origin.
+    pub fn new(arrivals: ArrivalProcess, population: Population, seed: u64) -> Self {
+        OpenLoop { arrivals, population, seed, start_ns: 0 }
+    }
+
+    /// Materialize the first `count` arrivals. Deterministic in the
+    /// seed; arrival instants are strictly increasing integer ns (the
+    /// per-gap float draw is rounded once, floored at 1 ns — the
+    /// accumulated timeline itself never re-enters float).
+    pub fn trace(&self, count: usize) -> Vec<Arrival> {
+        let mut rng = Rng::new(self.seed);
+        let mut at_ns = self.start_ns;
+        (0..count)
+            .map(|_| {
+                let gap_s = self.arrivals.next_gap_s(at_ns as f64 * 1e-9, &mut rng);
+                let gap_ns = ((gap_s * 1e9).round() as u64).max(1);
+                at_ns = at_ns.saturating_add(gap_ns);
+                Arrival { at_ns, spec: self.population.sample(&mut rng) }
+            })
+            .collect()
+    }
+
+    /// Generate and submit `count` arrivals against the SPMD front,
+    /// pacing the simulated clock to each arrival instant
+    /// ([`SimNode::sync_clocks_to_ns`] only moves clocks forward, so a
+    /// fleet already past `t` just takes the arrival immediately).
+    /// Returns the pending completions in arrival order.
+    pub fn drive(&self, node: &SimNode, svc: &SolveService, count: usize) -> Result<Vec<Pending>> {
+        let mut out = Vec::with_capacity(count);
+        for arrival in self.trace(count) {
+            node.sync_clocks_to_ns(arrival.at_ns);
+            out.push(submit_spec(svc, &arrival.spec, node.sim_time_ns())?);
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Closed loop
+// ---------------------------------------------------------------------------
+
+/// Closed-loop generator: a fixed window of `concurrency` outstanding
+/// requests; each completion (reaped oldest-first) triggers a think
+/// pause and one replacement submit. Load self-limits to fleet speed —
+/// the throughput-probe counterpart to [`OpenLoop`].
+#[derive(Clone, Debug)]
+pub struct ClosedLoop {
+    /// Request mixture.
+    pub population: Population,
+    /// Outstanding-request window.
+    pub concurrency: usize,
+    /// Simulated think time between a completion and its replacement.
+    pub think_ns: u64,
+    /// Seed for the whole run.
+    pub seed: u64,
+}
+
+impl ClosedLoop {
+    /// Run `total` requests; returns each request's outcome in
+    /// submission order.
+    pub fn run(
+        &self,
+        node: &SimNode,
+        svc: &SolveService,
+        total: usize,
+    ) -> Result<Vec<std::result::Result<SolveStats, ServeError>>> {
+        let mut rng = Rng::new(self.seed);
+        let mut window: VecDeque<Pending> = VecDeque::new();
+        let mut results = Vec::with_capacity(total);
+        let mut submitted = 0usize;
+        let mut submit_next =
+            |rng: &mut Rng, window: &mut VecDeque<Pending>, submitted: &mut usize| -> Result<()> {
+                let spec = self.population.sample(rng);
+                window.push_back(submit_spec(svc, &spec, node.sim_time_ns())?);
+                *submitted += 1;
+                Ok(())
+            };
+        while submitted < total && window.len() < self.concurrency.max(1) {
+            submit_next(&mut rng, &mut window, &mut submitted)?;
+        }
+        while let Some(pending) = window.pop_front() {
+            results.push(pending.wait());
+            if submitted < total {
+                if self.think_ns > 0 {
+                    node.sync_clocks_to_ns(node.sim_time_ns().saturating_add(self.think_ns));
+                }
+                submit_next(&mut rng, &mut window, &mut submitted)?;
+            }
+        }
+        Ok(results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn poisson(rate_hz: f64) -> ArrivalProcess {
+        ArrivalProcess::Poisson { rate_hz }
+    }
+
+    #[test]
+    fn traces_are_deterministic_in_the_seed() {
+        let gen = OpenLoop::new(poisson(500.0), Population::gp_vmc_mix(), 42);
+        let a = gen.trace(200);
+        let b = gen.trace(200);
+        assert_eq!(a.len(), 200);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_ns, y.at_ns);
+            assert_eq!(x.spec.seed, y.spec.seed);
+            assert_eq!(x.spec.n, y.spec.n);
+        }
+        let other = OpenLoop::new(poisson(500.0), Population::gp_vmc_mix(), 43);
+        let c = other.trace(200);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.at_ns != y.at_ns || x.spec.seed != y.spec.seed));
+    }
+
+    #[test]
+    fn arrivals_strictly_increase() {
+        for proc in [
+            poisson(1e6),
+            ArrivalProcess::Diurnal { base_hz: 1e5, peak_hz: 1e7, period_s: 1e-3 },
+            ArrivalProcess::Bursty { idle_hz: 1e3, burst_hz: 1e8, burst_prob: 0.5 },
+        ] {
+            let gen = OpenLoop::new(proc, Population::gp_vmc_mix(), 7);
+            let trace = gen.trace(500);
+            for w in trace.windows(2) {
+                assert!(w[1].at_ns > w[0].at_ns, "arrival instants must strictly increase");
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_mean_gap_matches_rate() {
+        let gen = OpenLoop::new(poisson(100.0), Population::gp_vmc_mix(), 11);
+        let trace = gen.trace(4000);
+        let span_s = trace.last().unwrap().at_ns as f64 * 1e-9;
+        let mean_gap = span_s / trace.len() as f64;
+        assert!(
+            (mean_gap - 0.01).abs() < 0.002,
+            "mean gap {mean_gap} strays from 10 ms at rate 100 Hz"
+        );
+    }
+
+    #[test]
+    fn diurnal_mean_rate_sits_between_base_and_peak() {
+        let count = 4000;
+        let diurnal = OpenLoop::new(
+            ArrivalProcess::Diurnal { base_hz: 50.0, peak_hz: 500.0, period_s: 2.0 },
+            Population::gp_vmc_mix(),
+            13,
+        );
+        let span_s = diurnal.trace(count).last().unwrap().at_ns as f64 * 1e-9;
+        let mean_hz = count as f64 / span_s;
+        assert!(
+            mean_hz > 60.0 && mean_hz < 490.0,
+            "diurnal mean rate {mean_hz} Hz should sit between trough and crest"
+        );
+    }
+
+    #[test]
+    fn bursty_gaps_are_bimodal() {
+        let gen = OpenLoop::new(
+            ArrivalProcess::Bursty { idle_hz: 1.0, burst_hz: 10_000.0, burst_prob: 0.5 },
+            Population::gp_vmc_mix(),
+            17,
+        );
+        let trace = gen.trace(2000);
+        let mut prev = 0u64;
+        let mut short = 0usize;
+        for a in &trace {
+            // Bursts at 10 kHz give ~0.1 ms gaps; idle at 1 Hz gives ~1 s.
+            if a.at_ns - prev < 10_000_000 {
+                short += 1;
+            }
+            prev = a.at_ns;
+        }
+        let frac = short as f64 / trace.len() as f64;
+        assert!((0.35..0.65).contains(&frac), "burst fraction {frac} strays from burst_prob 0.5");
+    }
+
+    #[test]
+    fn gp_vmc_mix_covers_routes_classes_and_dtypes() {
+        let pop = Population::gp_vmc_mix();
+        let mut rng = Rng::new(23);
+        let mut interactive = 0usize;
+        let mut batch = 0usize;
+        let mut small = 0usize;
+        let mut dist = 0usize;
+        let mut dtypes = std::collections::HashSet::new();
+        let draws = 2000;
+        for _ in 0..draws {
+            let s = pop.sample(&mut rng);
+            match s.route {
+                Route::Small(_) => small += 1,
+                Route::Dist(_) => dist += 1,
+            }
+            match s.class {
+                SloClass::Interactive => {
+                    interactive += 1;
+                    assert!(s.deadline_budget_ns.is_some(), "interactive work carries a deadline");
+                }
+                SloClass::Batch => batch += 1,
+                SloClass::Standard => {}
+            }
+            dtypes.insert(s.dtype);
+        }
+        assert!(small > 0 && dist > 0, "both serving paths must appear");
+        assert!(batch > 0, "batch-class background work must appear");
+        let frac = interactive as f64 / draws as f64;
+        assert!((0.35..0.65).contains(&frac), "interactive fraction {frac} strays from 0.5");
+        assert!(dtypes.len() >= 3, "the mix spans f32/f64/c128, got {dtypes:?}");
+    }
+
+    #[test]
+    fn sampled_seeds_differ_per_request() {
+        let pop = Population::gp_vmc_mix();
+        let mut rng = Rng::new(29);
+        let a = pop.sample(&mut rng);
+        let b = pop.sample(&mut rng);
+        assert_ne!(a.seed, b.seed, "each draw must get fresh matrix inputs");
+    }
+
+    #[test]
+    fn deadline_budget_becomes_absolute_at_submit() {
+        let spec = RequestSpec {
+            route: Route::Dist(DistRoutine::Potrs),
+            n: 96,
+            nrhs: 1,
+            dtype: DType::F64,
+            class: SloClass::Interactive,
+            deadline_budget_ns: Some(1_000),
+            tenant: 1,
+            seed: 0,
+        };
+        let slo = spec.slo_at(5_000);
+        assert_eq!(slo.deadline_ns, Some(6_000));
+        assert_eq!(slo.class, SloClass::Interactive);
+        assert_eq!(slo.tenant, 1);
+    }
+
+    #[test]
+    fn open_loop_drives_the_spmd_front() {
+        let node = SimNode::new_uniform(2, 1 << 30);
+        let svc = SolveService::new(node.clone(), 2);
+        let gen = OpenLoop::new(poisson(50_000.0), Population::gp_vmc_mix(), 31);
+        let last_arrival = gen.trace(6).last().unwrap().at_ns;
+        let pending = gen.drive(&node, &svc, 6).unwrap();
+        svc.flush_small();
+        for p in pending {
+            let stats = p.wait().expect("open-loop request failed");
+            assert!(stats.batch_size >= 1);
+        }
+        svc.drain();
+        assert!(
+            node.sim_time_ns() >= last_arrival,
+            "pacing must advance the fleet to the last arrival"
+        );
+    }
+
+    #[test]
+    fn closed_loop_completes_the_requested_total() {
+        let node = SimNode::new_uniform(2, 1 << 30);
+        let svc = SolveService::new(node.clone(), 2);
+        let lp = ClosedLoop {
+            population: Population::gp_vmc_mix(),
+            concurrency: 3,
+            think_ns: 1_000,
+            seed: 37,
+        };
+        let results = lp.run(&node, &svc, 8).unwrap();
+        svc.drain();
+        assert_eq!(results.len(), 8);
+        for r in results {
+            r.expect("closed-loop request failed");
+        }
+    }
+}

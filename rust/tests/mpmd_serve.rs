@@ -13,7 +13,7 @@
 //!   typed `Error::Ipc`.
 
 use jaxmg::batch::SmallRoutine;
-use jaxmg::coordinator::{SmallConfig, SolveService};
+use jaxmg::coordinator::{ServeError, Slo, SloClass, SmallConfig, SolveService};
 use jaxmg::ipc::{AddressSpace, IpcRegistry};
 use jaxmg::linalg::{tol_for, FrobNorm, Matrix};
 use jaxmg::prelude::*;
@@ -323,6 +323,107 @@ fn frontend_tick_flushes_idle_mpmd_buckets() {
     cfg.policy.max_batch = 32;
     cfg.policy.max_dwell_ns = u64::MAX;
     cfg.policy.max_wall_dwell = Duration::from_millis(10);
+    let svc = MpmdService::with_config(node, cfg);
+    let h = svc.submit_small(SmallRoutine::Potrf, Matrix::<f64>::spd_random(8, 1), None).unwrap();
+    let (l, stats) = h.wait();
+    assert_eq!(l.rows(), 8);
+    assert_eq!(stats.batch_size, 1);
+    assert_eq!(svc.pending_small(), 0);
+}
+
+#[test]
+fn all_workers_dead_surfaces_typed_no_live_workers() {
+    // The requeue loop's terminal case: with every worker dead there is
+    // no live subset left, so the dispatcher must resolve the waiter
+    // with the typed error instead of spinning the request forever.
+    let node = SimNode::new_uniform(2, 1 << 24);
+    let svc = MpmdService::with_config(node, MpmdConfig::with_tile(TILE));
+    svc.kill_worker(0).unwrap();
+    svc.kill_worker(1).unwrap();
+    assert!(svc.alive_workers().is_empty());
+    let n = 16;
+    let a = Matrix::<f64>::spd_random(n, 9);
+    let b = Matrix::<f64>::ones(n, 1);
+    match svc.submit_potrs(a, b).unwrap().wait_result() {
+        Err(ServeError::NoLiveWorkers { total }) => assert_eq!(total, 2),
+        Err(other) => panic!("expected NoLiveWorkers, got {other:?}"),
+        Ok(_) => panic!("solve must not succeed with every worker dead"),
+    }
+    svc.drain();
+}
+
+#[test]
+fn killing_every_worker_resolves_all_pending_requests() {
+    // Kill the whole fleet with a workload queued and in flight: every
+    // handle must resolve — success for solves that raced ahead of the
+    // kill, `NoLiveWorkers` for the rest. No hang, no untyped failure.
+    let node = SimNode::new_uniform(2, 1 << 26);
+    let svc = MpmdService::with_config(node, MpmdConfig::with_tile(TILE));
+    let n = 48;
+    let a = Matrix::<f64>::spd_random(n, 33);
+    let xt = Matrix::<f64>::random(n, 2, 34);
+    let b = a.matmul(&xt);
+    let handles: Vec<_> =
+        (0..4).map(|_| svc.submit_potrs(a.clone(), b.clone()).unwrap()).collect();
+    svc.kill_worker(0).unwrap();
+    svc.kill_worker(1).unwrap();
+    for h in handles {
+        match h.wait_result() {
+            Ok((x, _)) => assert!(x.rel_err(&xt) < tol_for::<f64>(n) * 10.0),
+            Err(ServeError::NoLiveWorkers { total }) => assert_eq!(total, 2),
+            Err(ServeError::Failed(msg)) => {
+                panic!("expected typed NoLiveWorkers, got Failed({msg})")
+            }
+        }
+    }
+    svc.drain();
+}
+
+#[test]
+fn straggler_injection_loses_no_requests() {
+    // The kill drill generalized to slow-but-alive hardware: a dragged
+    // device clock stretches every charge it hosts, yet every request
+    // completes with correct numerics — zero loss under stragglers.
+    let node = SimNode::new_uniform(NDEV, 1 << 26);
+    let svc = MpmdService::with_config(node.clone(), MpmdConfig::with_tile(TILE));
+    let n = 64;
+    let a = Matrix::<f64>::spd_random(n, 90);
+    let xt = Matrix::<f64>::random(n, 1, 91);
+    let b = a.matmul(&xt);
+    let handles: Vec<_> =
+        (0..6).map(|_| svc.submit_potrs(a.clone(), b.clone()).unwrap()).collect();
+    svc.inject_straggler(1, 4.0).unwrap();
+    assert!(svc.degraded(), "drag on device 1 must flip the degraded signal");
+    for h in handles {
+        let (x, _) = h.wait();
+        assert!(x.rel_err(&xt) < tol_for::<f64>(n) * 10.0, "request lost under straggler");
+    }
+    // Degraded-mode SLO accounting: an already-expired deadline is a
+    // miss even against the relaxed (degrade_factor-scaled) budget.
+    let slo = Slo::interactive().with_deadline_ns(1);
+    let (x, _) = svc.submit_potrs_slo(a.clone(), b.clone(), slo).unwrap().wait();
+    assert!(x.rel_err(&xt) < tol_for::<f64>(n) * 10.0);
+    svc.drain();
+    let m = node.metrics().snapshot();
+    let i = SloClass::Interactive.index();
+    assert_eq!(m.class_completed[i], 1);
+    assert_eq!(m.class_deadline_misses[i], 1);
+    svc.clear_straggler(1).unwrap();
+    assert!(!svc.degraded());
+    assert_eq!(svc.alive_workers().len(), NDEV, "stragglers are slow, not dead");
+    assert_eq!(svc.reserved(), vec![0; NDEV]);
+}
+
+#[test]
+fn zero_wall_dwell_mpmd_front_polls_instead_of_spinning() {
+    // A zero wall-dwell policy used to drive the dispatcher's flush
+    // cadence to zero (busy-spin); `flusher_tick`'s floor clamp keeps
+    // it polling, and the stranded bucket still flushes.
+    let node = SimNode::new_uniform(2, 1 << 22);
+    let mut cfg = MpmdConfig::with_tile(16);
+    cfg.policy.max_batch = 32;
+    cfg.policy.max_dwell_ns = u64::MAX;
+    cfg.policy.max_wall_dwell = Duration::ZERO;
     let svc = MpmdService::with_config(node, cfg);
     let h = svc.submit_small(SmallRoutine::Potrf, Matrix::<f64>::spd_random(8, 1), None).unwrap();
     let (l, stats) = h.wait();

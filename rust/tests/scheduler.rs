@@ -1,0 +1,218 @@
+//! Scheduler property suite: the SLO-aware queue's guarantees hold
+//! end-to-end through the SPMD front — no starvation under continuous
+//! interactive pressure, policy choice never changes numerics,
+//! panel-boundary preemption is bitwise invisible to the preempted
+//! solve (all four dtypes), and tenant quotas never over-admit.
+
+use jaxmg::coordinator::{
+    DistRoutine, Footprint, SchedConfig, SchedPolicy, Slo, SloClass, SmallConfig, SolveService,
+};
+use jaxmg::device::SimNode;
+use jaxmg::linalg::Matrix;
+use jaxmg::scalar::{c32, c64, DType, Scalar};
+
+fn edf_config() -> SchedConfig {
+    SchedConfig { policy: SchedPolicy::EdfSjf, ..SchedConfig::default() }
+}
+
+/// Continuous interactive pressure on a single worker must not starve
+/// a queued batch-class solve: every pass-over ages it, and past
+/// `max_skips` it becomes an urgent barrier the scheduler must clear.
+#[test]
+fn batch_class_work_survives_interactive_pressure() {
+    let node = SimNode::new_uniform(2, 1 << 26);
+    let mut sched = edf_config();
+    sched.max_skips = 3;
+    let svc = SolveService::with_config(node.clone(), 1, SmallConfig::with_tile(16), sched);
+
+    let a = Matrix::<f64>::spd_random(64, 1);
+    let b = Matrix::<f64>::random(64, 1, 2);
+    let batch = svc
+        .submit_dist_slo(DistRoutine::Potrs, a.clone(), Some(b.clone()), Slo::batch())
+        .unwrap();
+
+    // Keep three interactive solves outstanding at all times, so the
+    // lone worker always has a better-ranked candidate than the batch
+    // solve; only the anti-starvation barrier can let it through.
+    let submit_interactive = |i: u64| {
+        let ia = Matrix::<f64>::spd_random(32, 100 + i);
+        let ib = Matrix::<f64>::random(32, 1, 200 + i);
+        svc.submit_dist_slo(DistRoutine::Potrs, ia, Some(ib), Slo::interactive()).unwrap()
+    };
+    let mut window: std::collections::VecDeque<_> = (0..3).map(submit_interactive).collect();
+    let mut rounds = 0usize;
+    while !batch.is_ready() && rounds < 40 {
+        window.pop_front().unwrap().wait();
+        window.push_back(submit_interactive(10 + rounds as u64));
+        rounds += 1;
+    }
+    assert!(
+        batch.is_ready(),
+        "batch-class solve starved behind {rounds} rounds of interactive traffic"
+    );
+    batch.wait();
+    for h in window {
+        h.wait();
+    }
+    svc.drain();
+    let m = node.metrics().snapshot();
+    assert_eq!(m.class_completed[SloClass::Batch.index()], 1);
+    assert!(m.class_completed[SloClass::Interactive.index()] >= 3);
+}
+
+/// The same submissions under FIFO and EDF/SJF must produce bitwise
+/// identical solutions: scheduling reorders execution, never math.
+#[test]
+fn policy_choice_never_changes_numerics() {
+    let run = |sched: SchedConfig| -> Vec<Vec<f64>> {
+        let node = SimNode::new_uniform(4, 1 << 26);
+        let svc = SolveService::with_config(node, 2, SmallConfig::with_tile(16), sched);
+        let handles: Vec<_> = (0..6)
+            .map(|i| {
+                let n = 48 + 16 * (i % 3);
+                let a = Matrix::<f64>::spd_random(n, i as u64);
+                let b = Matrix::<f64>::random(n, 1, 50 + i as u64);
+                let slo = match i % 3 {
+                    0 => Slo::interactive().with_deadline_ns(5_000_000),
+                    1 => Slo::standard(),
+                    _ => Slo::batch(),
+                };
+                svc.submit_dist_slo(DistRoutine::Potrs, a, Some(b), slo).unwrap()
+            })
+            .collect();
+        let out = handles.into_iter().map(|h| h.wait().0.as_slice().to_vec()).collect();
+        svc.drain();
+        out
+    };
+    let fifo = run(SchedConfig::default());
+    let edf = run(edf_config());
+    for (i, (f, e)) in fifo.iter().zip(&edf).enumerate() {
+        assert_eq!(f, e, "solve {i} differs between FIFO and EDF/SJF");
+    }
+}
+
+/// A solve preempted at panel boundaries must produce bitwise the same
+/// result as an undisturbed run — for every dtype the paper serves.
+#[test]
+fn preempted_solves_are_bitwise_identical_across_dtypes() {
+    fn check<S: Scalar>() {
+        let n = 192;
+        let a = Matrix::<S>::spd_random(n, 7);
+        let b = Matrix::<S>::random(n, 1, 8);
+
+        // Reference: FIFO service, nothing else in flight, no hook.
+        let node_ref = SimNode::new_uniform(4, 1 << 26);
+        let svc_ref = SolveService::with_config(
+            node_ref,
+            1,
+            SmallConfig::with_tile(16),
+            SchedConfig::default(),
+        );
+        let (x_ref, _) = svc_ref
+            .submit_dist_slo(DistRoutine::Potrs, a.clone(), Some(b.clone()), Slo::standard())
+            .unwrap()
+            .wait();
+        svc_ref.drain();
+
+        // Same solve as preemptible batch work, with interactive
+        // traffic submitted behind it on the same lone worker.
+        let node = SimNode::new_uniform(4, 1 << 26);
+        let svc = SolveService::with_config(node, 1, SmallConfig::with_tile(16), edf_config());
+        let batch = svc
+            .submit_dist_slo(DistRoutine::Potrs, a, Some(b), Slo::batch())
+            .unwrap();
+        let inters: Vec<_> = (0..3)
+            .map(|i| {
+                let ia = Matrix::<S>::spd_random(32, 300 + i);
+                let ib = Matrix::<S>::random(32, 1, 400 + i);
+                svc.submit_dist_slo(DistRoutine::Potrs, ia, Some(ib), Slo::interactive()).unwrap()
+            })
+            .collect();
+        let (x, _) = batch.wait();
+        for h in inters {
+            h.wait();
+        }
+        svc.drain();
+        assert!(
+            x.as_slice() == x_ref.as_slice(),
+            "{}: preemption changed the preempted solve's bits",
+            S::DTYPE.name()
+        );
+    }
+    check::<f32>();
+    check::<f64>();
+    check::<c32>();
+    check::<c64>();
+}
+
+/// An interactive solve queued behind a long batch-class factorization
+/// on a single worker completes via panel-boundary preemption — the
+/// worker yields inside the batch solve rather than after it.
+#[test]
+fn interactive_work_preempts_at_panel_boundaries() {
+    let node = SimNode::new_uniform(4, 1 << 27);
+    let svc = SolveService::with_config(node.clone(), 1, SmallConfig::with_tile(16), edf_config());
+
+    // 48 panels: plenty of preemption points after the poll below.
+    let n = 768;
+    let a = Matrix::<f64>::spd_diag(n);
+    let b = Matrix::<f64>::ones(n, 1);
+    let batch = svc.submit_dist_slo(DistRoutine::Potrs, a, Some(b), Slo::batch()).unwrap();
+    while svc.in_flight() == 0 {
+        std::thread::yield_now();
+    }
+
+    let ia = Matrix::<f64>::spd_random(32, 5);
+    let ib = Matrix::<f64>::random(32, 1, 6);
+    let inter =
+        svc.submit_dist_slo(DistRoutine::Potrs, ia, Some(ib), Slo::interactive()).unwrap();
+    inter.wait();
+    let (x, _) = batch.wait();
+    assert!((x[(n - 1, 0)] - 1.0 / n as f64).abs() < 1e-10, "batch solve corrupted");
+    svc.drain();
+    let m = node.metrics().snapshot();
+    assert!(
+        m.service_preemptions >= 1,
+        "interactive solve should have run at a panel boundary, preemptions = {}",
+        m.service_preemptions
+    );
+    assert_eq!(m.class_completed[SloClass::Interactive.index()], 1);
+}
+
+/// Tenant quotas bound the *peak* admitted footprint under concurrent
+/// load, and fully drain afterwards.
+#[test]
+fn tenant_quota_never_over_admits() {
+    let node = SimNode::new_uniform(2, 1 << 26);
+    let fp = Footprint::for_routine("potrf", 96, 0, 16, 2, DType::F64).unwrap();
+    let per_solve: usize = (0..2).map(|d| fp.bytes(d)).sum();
+    // Room for exactly two concurrent solves of this tenant.
+    let quota = 2 * per_solve;
+    let sched = SchedConfig { tenant_quota: Some(quota), ..edf_config() };
+    let svc = SolveService::with_config(node, 4, SmallConfig::with_tile(16), sched);
+
+    let tenant = 9u32;
+    let handles: Vec<_> = (0..10)
+        .map(|i| {
+            let a = Matrix::<f64>::spd_random(96, i as u64);
+            svc.submit_dist_slo(
+                DistRoutine::Potrf,
+                a,
+                None,
+                Slo::standard().with_tenant(tenant),
+            )
+            .unwrap()
+        })
+        .collect();
+    for h in handles {
+        h.wait();
+    }
+    svc.drain();
+    assert!(
+        svc.tenant_peak(tenant) <= quota,
+        "peak admitted {} exceeded quota {quota}",
+        svc.tenant_peak(tenant)
+    );
+    assert!(svc.tenant_peak(tenant) > 0, "nothing was ever admitted");
+    assert_eq!(svc.tenant_admitted(tenant), 0, "quota accounting leaked");
+}
