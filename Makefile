@@ -26,11 +26,16 @@
 #                      interactive p99 win, no batch starvation, zero
 #                      lost requests — CI-friendly, part of
 #                      `make check`)
+#   make bench-cache   factor-cache bench in smoke/test mode: repeated
+#                      potrs against a resident factor (asserts the
+#                      >=10x throughput bar), the fused solve DAG vs
+#                      separate submits, and a reuse-correlated fleet
+#                      trace (CI-friendly, part of `make check`)
 
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test check clippy fmt python-tests test-xla bench bench-redist bench-batch bench-serve bench-grid bench-traffic e2e artifacts clean
+.PHONY: build test check clippy fmt python-tests test-xla bench bench-redist bench-batch bench-serve bench-grid bench-traffic bench-cache e2e artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -53,7 +58,7 @@ python-tests:
 		echo "skipping python tests (pytest/jax/hypothesis not importable)"; \
 	fi
 
-check: build test clippy fmt python-tests bench-serve bench-grid bench-traffic
+check: build test clippy fmt python-tests bench-serve bench-grid bench-traffic bench-cache
 
 # Artifact-gated XLA integration tests (fail with a pointed message
 # when artifacts are absent — that failure mode is itself under test).
@@ -100,6 +105,13 @@ bench-grid:
 # strict interactive-p99 win, batch completion, and zero lost requests.
 bench-traffic:
 	TRAFFIC_BENCH_SMOKE=1 $(CARGO) bench --bench traffic
+
+# The cache bench is the factor-cache acceptance harness: the repeated
+# potrs hit ladder (asserts the >=10x throughput bar), the fused-DAG
+# win over three separate submits, and the reuse-correlated fleet
+# trace under cache off/on. Smoke mode shrinks rungs, keeps assertions.
+bench-cache:
+	CACHE_BENCH_SMOKE=1 $(CARGO) bench --bench cache
 
 e2e:
 	$(CARGO) run --release --example e2e_driver

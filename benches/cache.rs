@@ -1,0 +1,226 @@
+//! Repeated-solve throughput: cold factorization vs resident-factor
+//! hits vs the fused solve DAG.
+//!
+//! Three sections, all on integer-ns simulated clocks:
+//!
+//! 1. **Hit ladder** — the same `potrs` resubmitted against one SPD
+//!    matrix, once through a cache-off service (every repeat pays
+//!    scatter + potrf) and once through a warmed cache-on service
+//!    (every repeat runs only the triangular stages on the resident
+//!    shards). Requests are submitted directly — never through
+//!    [`OpenLoop::drive`], whose arrival pacing would advance the
+//!    clocks to the trace gaps and bury the compute ratio. Asserts the
+//!    PR's acceptance bar: **≥ 10×** end-to-end throughput at the top
+//!    rung.
+//! 2. **Fusion** — `potrf→potrs→potri` as three separate submits vs
+//!    one [`SolveDag`]; the fused chain must be strictly faster (the
+//!    intermediate gathers, re-scatters and re-factorizations vanish).
+//! 3. **Reuse trace** — the fleet mix under
+//!    [`Population::gp_vmc_mix_reuse`] (K hot matrices, 10% churn)
+//!    replayed bitwise-identically through a cache-off and a cache-on
+//!    service; the cached replay must finish in strictly less
+//!    simulated time and report a non-zero hit count.
+//!
+//! `CACHE_BENCH_SMOKE=1` shrinks the rungs and repeat counts for
+//! `make bench-cache` (CI test mode); every asserted invariant is
+//! identical. Results are recorded in EXPERIMENTS.md.
+
+use jaxmg::coordinator::{DistRoutine, SmallConfig, SolveDag, SolveService};
+use jaxmg::linalg::Matrix;
+use jaxmg::prelude::*;
+use jaxmg::workload::{submit_spec, OpenLoop, Population};
+
+const NDEV: usize = 4;
+const TILE: usize = 16;
+const SEED: u64 = 2026;
+
+fn service(node: &SimNode, cached: bool) -> SolveService {
+    let mut cfg = SmallConfig::with_tile(TILE);
+    cfg.factor_cache = cached;
+    SolveService::with_small_config(node.clone(), 1, cfg)
+}
+
+/// Submit `reps` identical `potrs` solves back-to-back and return the
+/// simulated ns the batch occupied (measured from `from_ns`, so a
+/// warmed service excludes its seeding factorization).
+fn run_repeats(
+    node: &SimNode,
+    svc: &SolveService,
+    a: &Matrix<f64>,
+    b: &Matrix<f64>,
+    reps: usize,
+    from_ns: u64,
+) -> (u64, usize) {
+    let handles: Vec<_> = (0..reps)
+        .map(|_| svc.submit_dist(DistRoutine::Potrs, a.clone(), Some(b.clone())).expect("submit"))
+        .collect();
+    let mut hits = 0usize;
+    for h in handles {
+        let (_, stats) = h.wait();
+        if stats.cache_hit {
+            hits += 1;
+        }
+    }
+    (node.sim_time_ns() - from_ns, hits)
+}
+
+/// One ladder rung: cold vs warmed-cache throughput for order `n`.
+/// Returns `(cold_ns, hot_ns)` for `reps` solves each.
+fn rung(n: usize, reps: usize) -> (u64, u64) {
+    let a = Matrix::<f64>::spd_random(n, SEED ^ n as u64);
+    let b = Matrix::<f64>::random(n, 1, SEED + 7);
+
+    let cold_node = SimNode::new_uniform(NDEV, 1 << 28);
+    let cold_svc = service(&cold_node, false);
+    let (cold_ns, cold_hits) = run_repeats(&cold_node, &cold_svc, &a, &b, reps, 0);
+    assert_eq!(cold_hits, 0, "a cache-off service can never report hits");
+    cold_svc.drain();
+
+    let hot_node = SimNode::new_uniform(NDEV, 1 << 28);
+    let hot_svc = service(&hot_node, true);
+    // Warm: the first sight of A factors cold and seeds the cache.
+    let (_, warm) = hot_svc
+        .submit_dist(DistRoutine::Potrs, a.clone(), Some(b.clone()))
+        .expect("warm")
+        .wait();
+    assert!(!warm.cache_hit, "first sight of A cannot hit");
+    assert_eq!(hot_svc.cached_factors(), 1, "the warm solve must leave L resident");
+    let warm_ns = hot_node.sim_time_ns();
+    let (hot_ns, hot_hits) = run_repeats(&hot_node, &hot_svc, &a, &b, reps, warm_ns);
+    assert_eq!(hot_hits, reps, "every repeat against the warm cache must hit");
+    hot_svc.drain();
+
+    (cold_ns, hot_ns)
+}
+
+fn main() {
+    let smoke = std::env::var_os("CACHE_BENCH_SMOKE").is_some();
+
+    // ---- 1. hit ladder -----------------------------------------------------
+    let rungs: &[usize] = if smoke { &[96, 192] } else { &[128, 256, 512] };
+    let reps = if smoke { 6 } else { 24 };
+    println!(
+        "== hit ladder: {reps}x repeated f64 potrs (nrhs 1) on {NDEV} devices, \
+         cold service vs warmed factor cache ==\n"
+    );
+    println!(
+        "{:>6} {:>14} {:>14} {:>16} {:>16} {:>8}",
+        "n", "cold[ms]", "cached[ms]", "cold[req/s]", "cached[req/s]", "speedup"
+    );
+    let mut best_ratio = 0.0f64;
+    for &n in rungs {
+        let (cold_ns, hot_ns) = rung(n, reps);
+        assert!(hot_ns > 0, "hit path must still consume simulated time");
+        let ratio = cold_ns as f64 / hot_ns as f64;
+        best_ratio = best_ratio.max(ratio);
+        println!(
+            "{:>6} {:>14.3} {:>14.3} {:>16.1} {:>16.1} {:>7.1}x",
+            n,
+            cold_ns as f64 * 1e-6,
+            hot_ns as f64 * 1e-6,
+            reps as f64 / (cold_ns as f64 * 1e-9),
+            reps as f64 / (hot_ns as f64 * 1e-9),
+            ratio
+        );
+        assert!(ratio > 1.0, "n={n}: the hit path must beat re-factorizing");
+    }
+    assert!(
+        best_ratio >= 10.0,
+        "resident-factor hits must deliver >=10x repeated-solve throughput \
+         over cold factorization; best rung reached {best_ratio:.1}x"
+    );
+
+    // ---- 2. fusion: three submits vs one DAG -------------------------------
+    let n = if smoke { 128 } else { 256 };
+    let a = Matrix::<f64>::spd_random(n, SEED + 11);
+    let b = Matrix::<f64>::random(n, 2, SEED + 13);
+
+    let sep_node = SimNode::new_uniform(NDEV, 1 << 28);
+    let sep_svc = service(&sep_node, false);
+    let _ = sep_svc.submit_dist(DistRoutine::Potrf, a.clone(), None).expect("potrf").wait();
+    let _ = sep_svc
+        .submit_dist(DistRoutine::Potrs, a.clone(), Some(b.clone()))
+        .expect("potrs")
+        .wait();
+    let _ = sep_svc.submit_dist(DistRoutine::Potri, a.clone(), None).expect("potri").wait();
+    let sep_ns = sep_node.sim_time_ns();
+    sep_svc.drain();
+
+    let dag_node = SimNode::new_uniform(NDEV, 1 << 28);
+    let dag_svc = service(&dag_node, false);
+    let chain = SolveDag::new(a.clone()).factor().solve(b.clone()).inverse();
+    let handles = dag_svc.submit_dag(chain).expect("dag");
+    for h in handles {
+        let (_, stats) = h.wait();
+        assert_eq!(stats.fused_stages, 3, "each stage result must report the chain length");
+    }
+    let dag_ns = dag_node.sim_time_ns();
+    let fused = dag_node.metrics().snapshot().dag_fused_stages;
+    dag_svc.drain();
+
+    println!(
+        "\n== fusion: potrf -> potrs -> potri at n={n} ==\n\n\
+         separate submits {:>10.3} ms | fused DAG {:>10.3} ms | {:.2}x \
+         ({fused} stages fused)",
+        sep_ns as f64 * 1e-6,
+        dag_ns as f64 * 1e-6,
+        sep_ns as f64 / dag_ns as f64
+    );
+    assert!(
+        dag_ns < sep_ns,
+        "the fused chain ({dag_ns} ns) must beat three separate submits ({sep_ns} ns)"
+    );
+
+    // ---- 3. reuse-correlated fleet trace -----------------------------------
+    // Long enough that the 4-matrix hot pool must repeat (pigeonhole on
+    // the 30%-weight VMC template alone), so the hit assertions below
+    // are structural, not a property of one lucky trace seed.
+    let count = if smoke { 48 } else { 160 };
+    let trace = OpenLoop::new(
+        ArrivalProcess::Poisson { rate_hz: 50.0 },
+        Population::gp_vmc_mix_reuse(4, 0.10),
+        SEED + 17,
+    )
+    .trace(count);
+
+    let mut times = [0u64; 2];
+    let mut hit_rate = 0.0;
+    for (i, cached) in [false, true].into_iter().enumerate() {
+        let node = SimNode::new_uniform(NDEV, 1 << 28);
+        let svc = service(&node, cached);
+        // Replay the identical arrivals back-to-back — no clock pacing.
+        let pending: Vec<_> = trace
+            .iter()
+            .map(|arr| submit_spec(&svc, &arr.spec, node.sim_time_ns()).expect("trace submit"))
+            .collect();
+        svc.flush_small();
+        for p in pending {
+            p.wait().expect("trace request failed");
+        }
+        svc.drain();
+        times[i] = node.sim_time_ns();
+        let m = node.metrics().snapshot();
+        if cached {
+            assert!(m.cache_hits > 0, "a 4-hot / 10%-churn trace must produce repeat hits");
+            hit_rate = m.cache_hit_rate();
+        } else {
+            assert_eq!(m.cache_hits + m.cache_misses, 0, "cache off means no probes");
+        }
+    }
+    println!(
+        "\n== reuse trace: {count} arrivals of gp_vmc_mix_reuse(hot=4, churn=0.10) ==\n\n\
+         cache off {:>10.3} ms | cache on {:>10.3} ms | {:.2}x ; hit rate {:.0}%",
+        times[0] as f64 * 1e-6,
+        times[1] as f64 * 1e-6,
+        times[0] as f64 / times[1] as f64,
+        hit_rate * 100.0
+    );
+    assert!(
+        times[1] < times[0],
+        "the cached replay ({} ns) must finish before the cold one ({} ns)",
+        times[1],
+        times[0]
+    );
+
+    println!("\ncache bench OK");
+}

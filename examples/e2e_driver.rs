@@ -172,6 +172,50 @@ fn main() -> Result<()> {
         );
     }
 
+    // ---- factor cache: repeat solves skip the potrf -------------------
+    println!("\n== factor cache: 6 repeat potrs against one matrix + a fused DAG ==");
+    {
+        use jaxmg::coordinator::{DistRoutine, SmallConfig, SolveDag};
+        let node = SimNode::new_uniform(8, 1 << 28);
+        let mut cfg = SmallConfig::with_tile(16);
+        cfg.factor_cache = true;
+        let svc = SolveService::with_small_config(node.clone(), 2, cfg);
+        let n = 192;
+        let a = Matrix::<f64>::spd_diag(n);
+        println!("{:>4} {:>6} {:>6} {:>12}", "req", "N", "path", "exec[ms]");
+        for i in 0..6u64 {
+            let b = Matrix::<f64>::random(n, 1, 77 + i);
+            let (_, stats) = svc.submit_dist(DistRoutine::Potrs, a.clone(), Some(b))?.wait();
+            assert_eq!(stats.cache_hit, i > 0, "only the first solve may factor cold");
+            println!(
+                "{i:>4} {n:>6} {:>6} {:>12.3}",
+                if stats.cache_hit { "hit" } else { "cold" },
+                stats.exec_secs() * 1e3
+            );
+        }
+        // A fused potrf→potrs→potri chain on a second matrix: one
+        // admission, one resident layout, three stage results.
+        let a2 = Matrix::<f64>::spd_random(n, 31);
+        let b2 = Matrix::<f64>::random(n, 1, 32);
+        let chain = SolveDag::new(a2).factor().solve(b2).inverse();
+        for h in svc.submit_dag(chain)? {
+            let (_, stats) = h.wait();
+            assert_eq!(stats.fused_stages, 3);
+        }
+        let m = node.metrics().snapshot();
+        println!(
+            "cache: {} hits / {} misses (hit rate {:.0}%), {} evictions, \
+             {} B resident, {} DAG stages fused",
+            m.cache_hits,
+            m.cache_misses,
+            m.cache_hit_rate() * 100.0,
+            m.cache_evictions,
+            m.cache_resident_bytes,
+            m.dag_fused_stages
+        );
+        svc.drain();
+    }
+
     // ---- potri + syevd spot checks (paper dtypes) ---------------------
     println!("\n-- potri complex128 / syevd float64 (native backend, spmd) --");
     {

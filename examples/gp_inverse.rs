@@ -6,8 +6,16 @@
 //! the natural real-valued analogue with a full downstream use of the
 //! inverse: posterior mean *and* variance).
 //!
+//! The serving path shows both halves of the repeat-solve story:
+//! `α = K⁻¹y` and `K⁻¹` come out of **one fused solve DAG** (a single
+//! factorization feeds the `potrs` and the `potri`), and the online
+//! refits that follow — new targets against the same kernel — hit the
+//! resident factor cache and skip the `potrf` entirely.
+//!
 //! Run: `cargo run --release --example gp_inverse`
 
+use jaxmg::coordinator::{DistRoutine, SmallConfig, SolveDag, SolveService};
+use jaxmg::linalg::{tol_for, FrobNorm};
 use jaxmg::prelude::*;
 
 fn rbf(x: f64, y: f64, ell: f64) -> f64 {
@@ -32,16 +40,26 @@ fn main() -> Result<()> {
     }
 
     let node = SimNode::new_uniform(4, 1 << 30);
-    let ctx = JaxMg::builder().mesh(Mesh::new_1d(node, "x")).tile_size(32).build()?;
+    let mut cfg = SmallConfig::with_tile(32);
+    cfg.factor_cache = true;
+    let svc = SolveService::with_small_config(node.clone(), 2, cfg);
 
     println!("GP posterior: {n_train} training points, RBF ℓ={ell}");
-    let t0 = std::time::Instant::now();
-    let k_inv = ctx.potri(&k)?; // distributed Cholesky inverse
-    println!("distributed potri: {:.2} s wall (simulator)", t0.elapsed().as_secs_f64());
 
-    // α = K⁻¹ y.
+    // α = K⁻¹y and K⁻¹ from one fused chain: the factorization is paid
+    // once, the intermediate gather/re-scatter/re-factor of two
+    // separate submits vanishes.
     let yv = Matrix::<f64>::from_vec(n_train, 1, ys.clone());
-    let alpha = k_inv.matmul(&yv);
+    let t0 = std::time::Instant::now();
+    let chain = SolveDag::new(k.clone()).solve(yv.clone()).inverse();
+    let mut stages = svc.submit_dag(chain)?.into_iter();
+    let (alpha, _) = stages.next().expect("solve stage").wait();
+    let (k_inv, s_inv) = stages.next().expect("inverse stage").wait();
+    println!(
+        "fused potrs+potri chain ({} stages, one factorization): {:.2} s wall (simulator)",
+        s_inv.fused_stages,
+        t0.elapsed().as_secs_f64()
+    );
 
     // Posterior mean + variance on test points; compare mean to truth.
     println!("\n{:>6} {:>10} {:>10} {:>10}", "x*", "mean", "truth", "std");
@@ -59,10 +77,44 @@ fn main() -> Result<()> {
     assert!(max_err < 0.05, "posterior mean strayed from the truth: {max_err}");
     println!("\nmax |mean − truth| = {max_err:.4}  (interpolation regime)");
 
+    // Online refits: fresh targets against the same kernel. The first
+    // solve factors cold and leaves L resident; every later one hits
+    // the cache and runs only the triangular stages.
+    println!("\nonline refits against the cached kernel factor:");
+    for step in 0..5u64 {
+        let y2: Vec<f64> =
+            xs.iter().map(|&x| (4.0 * x).sin() + 0.05 * ((step as f64 + 1.0) * x).cos()).collect();
+        let b = Matrix::<f64>::from_vec(n_train, 1, y2);
+        let (x, stats) =
+            svc.submit_dist(DistRoutine::Potrs, k.clone(), Some(b.clone()))?.wait();
+        let resid = k.matmul(&x).rel_err(&b);
+        assert!(resid < tol_for::<f64>(n_train) * 10.0, "refit {step} residual {resid}");
+        assert_eq!(
+            stats.cache_hit,
+            step > 0,
+            "refit 0 must factor cold and seed the cache; later refits must hit"
+        );
+        println!(
+            "  step {step}: {:<4} potrf, {:>8.3} ms exec",
+            if stats.cache_hit { "skip" } else { "cold" },
+            stats.exec_secs() * 1e3
+        );
+    }
+
     // Consistency: K · K⁻¹ ≈ I.
-    use jaxmg::linalg::FrobNorm;
     let resid = k.matmul(&k_inv).rel_err(&Matrix::eye(n_train));
     println!("‖K·K⁻¹ − I‖/‖I‖ = {resid:.3e}");
-    println!("projected H200 time {:.2} ms", ctx.projected_time() * 1e3);
+
+    let m = node.metrics().snapshot();
+    println!(
+        "cache: {} hits / {} misses (hit rate {:.0}%), {} resident bytes, {} DAG stages fused",
+        m.cache_hits,
+        m.cache_misses,
+        m.cache_hit_rate() * 100.0,
+        m.cache_resident_bytes,
+        m.dag_fused_stages
+    );
+    println!("projected H200 time {:.2} ms", node.sim_time() * 1e3);
+    svc.drain();
     Ok(())
 }

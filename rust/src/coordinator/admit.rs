@@ -270,6 +270,22 @@ impl Footprint {
         Ok(Self::per_device(per_device))
     }
 
+    /// Footprint of a **cached Cholesky factor** kept resident in
+    /// device memory: exactly the factor's own distributed shards —
+    /// `local_elems` per device for the entry's layout — with no
+    /// broadcast-panel, workspace, or RHS terms (a resident factor
+    /// runs no kernels; the consuming solve declares its own scratch).
+    /// Charged against the same [`DeviceAdmission`] accountant as
+    /// in-flight solves so resident factors and live work share one
+    /// VRAM budget.
+    pub fn for_cached_factor(kind: &crate::tile::LayoutKind, n: usize, dtype: DType) -> Self {
+        let e = dtype.size_of();
+        let ndev = kind.num_devices();
+        Footprint {
+            per_device: (0..ndev).map(|d| kind.local_elems(n, d) * e).collect(),
+        }
+    }
+
     /// Number of devices covered.
     pub fn devices(&self) -> usize {
         self.per_device.len()
@@ -781,6 +797,14 @@ pub struct SolveStats {
     /// for 1D distributed solves, the selector's shape for grid-native
     /// ones, `(1, 1)` for single-device / batched-pod work.
     pub grid: (usize, usize),
+    /// Whether this solve ran against a resident cached factor (the
+    /// scatter + potrf skipped entirely); always `false` with the
+    /// factor cache disabled.
+    pub cache_hit: bool,
+    /// Stages of the fused solve DAG this request executed as part of
+    /// (`1` for a standalone solve; a fused `potrf→potrs→potri` chain
+    /// reports `3` on each of its per-stage results).
+    pub fused_stages: usize,
 }
 
 impl SolveStats {
@@ -997,6 +1021,8 @@ mod tests {
             batch_size: 1,
             coalesce_wait_ns: 0,
             grid: (1, 1),
+            cache_hit: false,
+            fused_stages: 1,
         };
         publish_one(&slot, Ok((7, stats)));
         assert!(h.is_ready());

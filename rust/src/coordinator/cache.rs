@@ -1,0 +1,404 @@
+//! Content-addressed factor cache: resident Cholesky factors as
+//! first-class admitted footprint.
+//!
+//! The flagship workloads (GP posterior inverses, VMC stochastic
+//! reconfiguration) re-solve against the same or slowly-varying SPD
+//! matrix. A [`FactorCache`] keys each distributed factor `L` by a
+//! content hash of `A`'s bytes plus the shape parameters that pin the
+//! resident layout — dtype, `n`, tile, `(P, Q)` grid — and keeps the
+//! factor's shards resident in device memory, so a repeat
+//! `potrs`/`potri`/`potrf` skips the scatter and the factorization
+//! entirely and runs only the triangular tail on the resident shards
+//! (bitwise-identical to the cold path: the shards *are* the cold
+//! path's bytes).
+//!
+//! The cache is deliberately a pure bookkeeping structure:
+//!
+//! * **Admission** stays with the caller's accountant. Resident bytes
+//!   ([`Footprint::for_cached_factor`]) are charged against the same
+//!   budget as in-flight solves — the SPMD service's central
+//!   reservation table, the MPMD workers' per-device
+//!   [`DeviceAdmission`] accountants — so factors and live work share
+//!   one VRAM budget and the accountant never over-admits. When an
+//!   admission fails, the caller pops victims ([`pop_victim`]) and
+//!   frees/releases them itself, then retries.
+//! * **Eviction order** is scored here:
+//!   `recompute_ns × (hits + 1)` — the `Predictor`-estimated cost to
+//!   rebuild the entry times its observed reuse — lowest score first,
+//!   oldest-touch tiebreak. Pinned entries (a hit in flight) are never
+//!   victims.
+//! * **Invalidation** ([`invalidate`]) removes unpinned matching
+//!   entries immediately and *dooms* pinned ones: a doomed entry stops
+//!   matching probes and is handed back for teardown by the final
+//!   [`unpin`] — resolving the invalidate-during-in-flight-hit race
+//!   without blocking either side.
+//!
+//! The payload type `P` is generic because the two serving fronts keep
+//! different things resident: the SPMD service holds the factor's
+//! device panels (`Vec<DevPtr>`), the MPMD frontend holds per-worker
+//! staged shards plus their IPC export handles.
+//!
+//! [`Footprint::for_cached_factor`]: super::Footprint::for_cached_factor
+//! [`DeviceAdmission`]: super::DeviceAdmission
+//! [`pop_victim`]: FactorCache::pop_victim
+//! [`invalidate`]: FactorCache::invalidate
+//! [`unpin`]: FactorCache::unpin
+
+use std::collections::HashMap;
+
+use crate::linalg::Matrix;
+use crate::scalar::{DType, Scalar};
+use crate::tile::LayoutKind;
+
+/// FNV-1a over a byte stream — stable, dependency-free, and fast
+/// enough that hashing a service-scale matrix is noise next to its
+/// scatter.
+fn fnv1a(bytes: &[u8], mut h: u64) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01B3;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+
+/// Content hash of a host matrix: FNV-1a over its column-major bytes,
+/// seeded with the dimensions and dtype tag so equal byte patterns of
+/// different shapes cannot collide structurally.
+pub fn content_hash<S: Scalar>(a: &Matrix<S>) -> u64 {
+    let mut h = fnv1a(&(a.rows() as u64).to_le_bytes(), FNV_OFFSET);
+    h = fnv1a(&(a.cols() as u64).to_le_bytes(), h);
+    h = fnv1a(&[S::DTYPE.size_of() as u8, S::DTYPE.is_complex() as u8], h);
+    fnv1a(crate::device::as_bytes(a.as_slice()), h)
+}
+
+/// Identity of a cached factor: the content hash of `A` plus every
+/// parameter that determines the resident shards' bytes and layout.
+/// The consuming *routine* is deliberately excluded — a factor seeded
+/// by a cold `potrf` or `potrs` serves later `potrs`/`potri`/`potrf`
+/// repeats alike, because all three share the identical
+/// scatter+factor prefix.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub struct FactorKey {
+    /// [`content_hash`] of the submitted `A`.
+    pub content: u64,
+    pub dtype: DType,
+    pub n: usize,
+    pub tile: usize,
+    /// The `(P, Q)` process grid of the resident layout.
+    pub grid: (usize, usize),
+}
+
+impl FactorKey {
+    /// Key for `a` factored with `tile` on `grid`.
+    pub fn of<S: Scalar>(a: &Matrix<S>, tile: usize, grid: (usize, usize)) -> Self {
+        FactorKey { content: content_hash(a), dtype: S::DTYPE, n: a.rows(), tile, grid }
+    }
+}
+
+/// One resident factor.
+#[derive(Debug)]
+pub struct FactorEntry<P> {
+    /// Front-specific handle to the resident shards.
+    pub payload: P,
+    /// The layout the shards are stored in (what a hit reconstructs
+    /// its [`crate::tile::DistMatrix`] view from).
+    pub kind: LayoutKind,
+    /// Bytes charged per device for the resident shards.
+    pub resident: Vec<usize>,
+    /// Predicted cost to rebuild this factor (scatter + potrf), in
+    /// cost-model ns — [`crate::costmodel::Predictor::recompute_ns`].
+    pub recompute_ns: u64,
+    /// Hits observed since insert.
+    pub hits: u64,
+    pins: u32,
+    doomed: bool,
+    stamp: u64,
+}
+
+impl<P> FactorEntry<P> {
+    /// Total resident bytes across devices.
+    pub fn resident_bytes(&self) -> usize {
+        self.resident.iter().sum()
+    }
+
+    /// Eviction score: predicted recompute cost × observed reuse
+    /// (`hits + 1` so a fresh entry is worth one rebuild). Lowest
+    /// score evicts first.
+    pub fn score(&self) -> u64 {
+        self.recompute_ns.saturating_mul(self.hits + 1)
+    }
+}
+
+/// The cache proper. All methods take `&mut self`; both fronts wrap it
+/// in a `Mutex` (lock order: cache before the admission state, and
+/// never held across a solve).
+#[derive(Debug)]
+pub struct FactorCache<P> {
+    entries: HashMap<FactorKey, FactorEntry<P>>,
+    clock: u64,
+}
+
+impl<P> Default for FactorCache<P> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<P> FactorCache<P> {
+    pub fn new() -> Self {
+        FactorCache { entries: HashMap::new(), clock: 0 }
+    }
+
+    /// Live (non-doomed) entries.
+    pub fn len(&self) -> usize {
+        self.entries.values().filter(|e| !e.doomed).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total resident bytes across live entries.
+    pub fn resident_bytes(&self) -> usize {
+        self.entries.values().filter(|e| !e.doomed).map(|e| e.resident_bytes()).sum()
+    }
+
+    /// Whether a live entry exists for `key`.
+    pub fn contains(&self, key: &FactorKey) -> bool {
+        self.entries.get(key).is_some_and(|e| !e.doomed)
+    }
+
+    /// Probe for `key`: on a live entry, pin it (it cannot be evicted
+    /// until [`Self::unpin`]), count a hit, touch its LRU stamp, and
+    /// return a clone of the payload plus the resident layout. Doomed
+    /// entries never match.
+    pub fn probe(&mut self, key: &FactorKey) -> Option<(P, LayoutKind)>
+    where
+        P: Clone,
+    {
+        self.clock += 1;
+        let clock = self.clock;
+        let e = self.entries.get_mut(key).filter(|e| !e.doomed)?;
+        e.pins += 1;
+        e.hits += 1;
+        e.stamp = clock;
+        Some((e.payload.clone(), e.kind))
+    }
+
+    /// Drop one pin taken by [`Self::probe`]. If the entry was doomed
+    /// while pinned and this was the last pin, it is removed and
+    /// returned for teardown (the caller frees the shards and releases
+    /// the admission charge).
+    pub fn unpin(&mut self, key: &FactorKey) -> Option<FactorEntry<P>> {
+        let e = self.entries.get_mut(key)?;
+        e.pins = e.pins.saturating_sub(1);
+        if e.doomed && e.pins == 0 {
+            return self.entries.remove(key);
+        }
+        None
+    }
+
+    /// Insert a freshly factored entry (unpinned, zero hits). The
+    /// caller has already charged `resident` against its accountant.
+    ///
+    /// First insert wins: if the key is already occupied — two
+    /// identical requests raced cold, or a doomed entry is still
+    /// awaiting its last unpin — the duplicate is refused and handed
+    /// back as a [`FactorEntry`] for the caller to tear down (free the
+    /// shards, release the charge). Displacing in place would orphan
+    /// any pin held on the resident entry.
+    pub fn insert(
+        &mut self,
+        key: FactorKey,
+        payload: P,
+        kind: LayoutKind,
+        resident: Vec<usize>,
+        recompute_ns: u64,
+    ) -> Option<FactorEntry<P>> {
+        self.clock += 1;
+        let entry = FactorEntry {
+            payload,
+            kind,
+            resident,
+            recompute_ns,
+            hits: 0,
+            pins: 0,
+            doomed: false,
+            stamp: self.clock,
+        };
+        if self.entries.contains_key(&key) {
+            return Some(entry);
+        }
+        self.entries.insert(key, entry);
+        None
+    }
+
+    /// Pop the eviction victim: the unpinned live entry with the
+    /// lowest `score()`, oldest stamp on ties. `None` when everything
+    /// is pinned (or the cache is empty) — the caller then gives up on
+    /// making room rather than blocking.
+    pub fn pop_victim(&mut self) -> Option<(FactorKey, FactorEntry<P>)> {
+        let key = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.pins == 0 && !e.doomed)
+            .min_by_key(|(_, e)| (e.score(), e.stamp))
+            .map(|(k, _)| *k)?;
+        let e = self.entries.remove(&key).expect("victim just selected");
+        Some((key, e))
+    }
+
+    /// Invalidate every entry matching `pred` (e.g. "touches device
+    /// `d`" after a worker death, or "resident on a now-degraded
+    /// subset view"). Unpinned matches are removed and returned for
+    /// teardown; pinned matches are doomed — they stop matching
+    /// probes, and the in-flight hit's final [`Self::unpin`] returns
+    /// them for teardown instead.
+    pub fn invalidate<F>(&mut self, mut pred: F) -> Vec<(FactorKey, FactorEntry<P>)>
+    where
+        F: FnMut(&FactorKey, &FactorEntry<P>) -> bool,
+    {
+        let keys: Vec<FactorKey> = self
+            .entries
+            .iter()
+            .filter(|(k, e)| !e.doomed && pred(k, e))
+            .map(|(k, _)| *k)
+            .collect();
+        let mut out = Vec::new();
+        for k in keys {
+            let pinned = self.entries.get(&k).map(|e| e.pins > 0).unwrap_or(false);
+            if pinned {
+                self.entries.get_mut(&k).expect("present").doomed = true;
+            } else if let Some(e) = self.entries.remove(&k) {
+                out.push((k, e));
+            }
+        }
+        out
+    }
+
+    /// Remove everything removable (shutdown): every unpinned entry,
+    /// doomed or not. Pinned entries are doomed and left for their
+    /// unpins.
+    pub fn drain(&mut self) -> Vec<(FactorKey, FactorEntry<P>)> {
+        let keys: Vec<FactorKey> = self.entries.keys().copied().collect();
+        let mut out = Vec::new();
+        for k in keys {
+            let pinned = self.entries.get(&k).map(|e| e.pins > 0).unwrap_or(false);
+            if pinned {
+                self.entries.get_mut(&k).expect("present").doomed = true;
+            } else if let Some(e) = self.entries.remove(&k) {
+                out.push((k, e));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::BlockCyclic1D;
+
+    fn kind() -> LayoutKind {
+        LayoutKind::BlockCyclic(BlockCyclic1D::new(64, 16, 4).unwrap())
+    }
+
+    fn key(content: u64) -> FactorKey {
+        FactorKey { content, dtype: DType::F64, n: 64, tile: 16, grid: (1, 4) }
+    }
+
+    #[test]
+    fn content_hash_is_content_addressed() {
+        let a = Matrix::<f64>::spd_random(32, 7);
+        let b = Matrix::<f64>::spd_random(32, 7);
+        let c = Matrix::<f64>::spd_random(32, 8);
+        assert_eq!(content_hash(&a), content_hash(&b), "equal bytes must hash equal");
+        assert_ne!(content_hash(&a), content_hash(&c), "different seeds must split");
+        // dtype participates even when the byte pattern could agree.
+        let f = Matrix::<f32>::zeros(8, 8);
+        let d = Matrix::<f64>::zeros(4, 8);
+        assert_ne!(content_hash(&f), content_hash(&d));
+    }
+
+    #[test]
+    fn probe_pins_and_counts_hits() {
+        let mut c: FactorCache<u32> = FactorCache::new();
+        assert!(c.probe(&key(1)).is_none());
+        c.insert(key(1), 10, kind(), vec![8; 4], 1000);
+        assert_eq!(c.resident_bytes(), 32);
+        let (p, _) = c.probe(&key(1)).expect("hit");
+        assert_eq!(p, 10);
+        // Pinned: not a victim.
+        assert!(c.pop_victim().is_none());
+        assert!(c.unpin(&key(1)).is_none());
+        let (k, e) = c.pop_victim().expect("unpinned now");
+        assert_eq!(k, key(1));
+        assert_eq!(e.hits, 1);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn eviction_honors_recompute_times_reuse() {
+        let mut c: FactorCache<u32> = FactorCache::new();
+        // cheap-to-rebuild, never reused → lowest score, first victim.
+        c.insert(key(1), 1, kind(), vec![1; 4], 100);
+        // expensive, never reused.
+        c.insert(key(2), 2, kind(), vec![1; 4], 10_000);
+        // cheap but hot: 100 × (3+1) > 100 × 1 and < 10_000.
+        c.insert(key(3), 3, kind(), vec![1; 4], 100);
+        for _ in 0..3 {
+            c.probe(&key(3)).expect("hit");
+            c.unpin(&key(3));
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| c.pop_victim().map(|(_, e)| e.payload))
+            .collect();
+        assert_eq!(order, vec![1, 3, 2], "victims must leave in score order");
+    }
+
+    #[test]
+    fn lru_breaks_score_ties_and_first_insert_wins() {
+        let mut c: FactorCache<u32> = FactorCache::new();
+        c.insert(key(1), 1, kind(), vec![1; 4], 500);
+        c.insert(key(2), 2, kind(), vec![1; 4], 500);
+        // Equal scores: the earlier-stamped entry is the victim.
+        let (_, first) = c.pop_victim().expect("victim");
+        assert_eq!(first.payload, 1, "equal scores: older stamp evicts first");
+        // A raced duplicate insert is refused and handed back intact.
+        let dup = c.insert(key(2), 22, kind(), vec![3; 4], 500).expect("refused");
+        assert_eq!(dup.payload, 22);
+        assert_eq!(dup.resident_bytes(), 12);
+        let (_, kept) = c.pop_victim().expect("original stays");
+        assert_eq!(kept.payload, 2);
+    }
+
+    #[test]
+    fn invalidate_dooms_pinned_entries_until_unpin() {
+        let mut c: FactorCache<u32> = FactorCache::new();
+        c.insert(key(1), 1, kind(), vec![4; 4], 100);
+        c.insert(key(2), 2, kind(), vec![4; 4], 100);
+        c.probe(&key(1)).expect("hit");
+        let gone = c.invalidate(|_, _| true);
+        assert_eq!(gone.len(), 1, "unpinned entry removed immediately");
+        assert_eq!(gone[0].1.payload, 2);
+        // Doomed entry no longer matches probes or victims.
+        assert!(c.probe(&key(1)).is_none());
+        assert!(c.pop_victim().is_none());
+        assert_eq!(c.len(), 0);
+        // The in-flight hit's unpin hands it back for teardown.
+        let e = c.unpin(&key(1)).expect("doomed entry returned at last unpin");
+        assert_eq!(e.payload, 1);
+        assert!(c.entries.is_empty());
+    }
+
+    #[test]
+    fn drain_empties_the_cache() {
+        let mut c: FactorCache<u32> = FactorCache::new();
+        c.insert(key(1), 1, kind(), vec![1; 4], 1);
+        c.insert(key(2), 2, kind(), vec![1; 4], 1);
+        assert_eq!(c.drain().len(), 2);
+        assert!(c.is_empty());
+    }
+}

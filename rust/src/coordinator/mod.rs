@@ -108,6 +108,39 @@
 //! without changing results. The chosen shape is reported in
 //! [`SolveStats::grid`] and in the `grid_*` metrics counters.
 //!
+//! ## Factor caching + solve-DAG fusion: what a repeat solve pays
+//!
+//! With [`SmallConfig::factor_cache`] (SPMD) or
+//! `MpmdConfig::factor_cache` (MPMD) enabled, both fronts keep the
+//! Cholesky factor `L` of a completed solve **resident on the
+//! devices**, keyed by a content hash of `A`'s shards + dtype + tile +
+//! grid ([`FactorKey`]). Resident factors are charged against the same
+//! per-device admission accountant as in-flight solves (one VRAM
+//! budget — the accountant never over-admits), and eviction removes
+//! the entry with the lowest `Predictor`-estimated recompute cost ×
+//! observed reuse first, LRU on ties. Chains submitted as a
+//! [`SolveDag`] fuse into **one** admitted request sharing one
+//! resident layout. The decision table, per submitted routine:
+//!
+//! | path | scatter | `potrf` | triangular stages | seeds the cache? |
+//! |---|---|---|---|---|
+//! | **cold** `potrf`/`potrs` (miss) | yes | yes | `potrs` runs | yes — `L` stays resident, bytes move from the solve's reservation to the cache's charge |
+//! | **cold** `potri` (miss) | yes | yes | `potri` destroys `L` in place | no — nothing left to keep |
+//! | **hit** `potrs` | skipped | skipped | runs on the resident shards | already resident (entry pinned for the solve's duration) |
+//! | **hit** `potri` | skipped | skipped | runs on a scratch copy of `L` (gather → re-scatter), the resident entry survives | already resident |
+//! | `syevd` | yes | — | — | bypasses the cache entirely (no `potrf` prefix to reuse) |
+//! | **fused** [`SolveDag`] chain | once | once (or skipped on a hit) | all stages on one resident layout — intermediate gathers/re-scatters vanish | yes, when the chain does not end in [`DagStage::Inverse`] |
+//!
+//! Hits are **bitwise identical** to the cold path (pinned for all
+//! four dtypes, 1D and 2D grids, in `rust/tests/cache.rs`): the cache
+//! skips work, never changes it. Staleness is structural — a worker
+//! death, straggler injection, or degraded live-set view invalidates
+//! every entry staged on the affected device, and a re-queued solve
+//! re-plans (and re-factors) on the shrunk set. Hit/miss/eviction
+//! counts land in [`crate::metrics::Metrics`] and on
+//! [`SolveStats::cache_hit`] / [`SolveStats::fused_stages`];
+//! `benches/cache.rs` holds the ≥10× repeated-solve throughput bar.
+//!
 //! ## SPMD vs MPMD: which front to serve from
 //!
 //! Figure 2 of the paper describes both deployment shapes; this crate
@@ -133,6 +166,7 @@
 //! `tile::build_panel` path) and how pointers reach the single caller.
 
 mod admit;
+mod cache;
 mod mpmd;
 mod service;
 mod spmd;
@@ -142,8 +176,9 @@ pub use admit::{
     GridPlanCache, SchedConfig, SchedPolicy, ServeError, ServiceHandle, Slo, SloClass, SloTicket,
     SolveStats,
 };
+pub use cache::{content_hash, FactorCache, FactorEntry, FactorKey};
 pub use mpmd::gather_pointers_mpmd;
-pub use service::{JobQueue, SmallConfig, SolveHandle, SolveService};
+pub use service::{DagStage, JobQueue, SmallConfig, SolveDag, SolveHandle, SolveService};
 pub use spmd::gather_pointers_spmd;
 
 pub(crate) use admit::{

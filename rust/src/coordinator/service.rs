@@ -68,6 +68,7 @@ use super::admit::{
     handle_pair, panic_message, publish_failure, publish_one, DistRoutine, GridPlanCache,
     ServeError, Slot, SloQueue, SloTicket, TenantQuotas,
 };
+use super::cache::{FactorCache, FactorEntry, FactorKey};
 pub use super::admit::{
     Footprint, SchedConfig, SchedPolicy, ServiceHandle, Slo, SloClass, SolveStats,
 };
@@ -75,13 +76,13 @@ use crate::batch::{
     flusher_tick, run_bucket, BatchPlanner, BatchPolicy, BucketKey, FlushedBucket, SmallRoutine,
 };
 use crate::costmodel::{GpuCostModel, Predictor};
-use crate::device::SimNode;
+use crate::device::{DevPtr, SimNode};
 use crate::error::{Error, Result};
 use crate::layout::TileDim;
 use crate::linalg::Matrix;
 use crate::scalar::{DType, Scalar};
 use crate::solver::{potrf_dist, potri_dist, potrs_dist, syevd_dist, Ctx, SolverBackend};
-use crate::tile::DistMatrix;
+use crate::tile::{DistMatrix, LayoutKind};
 use std::any::Any;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -264,6 +265,12 @@ struct ServiceInner {
     /// Monotonicity watermark for [`ServiceInner::sim_now_ns`]: the
     /// service's view of the simulated clock never runs backwards.
     last_seen_ns: AtomicU64,
+    /// Resident Cholesky factors ([`SmallConfig::factor_cache`]): each
+    /// entry's shards stay allocated on the devices with their bytes
+    /// charged into `ServiceState::reserved`, so factors and in-flight
+    /// solves share the one capacity budget. Lock order: cache before
+    /// `state`, and never held across a solve.
+    cache: Mutex<FactorCache<Vec<DevPtr>>>,
 }
 
 impl ServiceInner {
@@ -353,6 +360,187 @@ impl ServiceInner {
         };
         m.record_class_latency(ticket.slo.class, latency_ns, missed);
     }
+
+    /// Probe the factor cache, validating that the entry's shards still
+    /// exist on the node — an entry whose pointers were freed out from
+    /// under the cache (a solve that unwound mid-hit) is discarded and
+    /// reported as a miss. A returned hit is **pinned** until the
+    /// matching [`PinGuard`] drops.
+    fn probe_factor(&self, key: &FactorKey) -> Option<(Vec<DevPtr>, LayoutKind)> {
+        let mut cache = self.cache.lock().unwrap();
+        let (ptrs, kind) = cache.probe(key)?;
+        if ptrs.iter().all(|&p| self.node.ptr_exists(p)) {
+            return Some((ptrs, kind));
+        }
+        // Stale: doom it (we hold its pin), then unpin to extract it.
+        cache.invalidate(|k, _| k == key);
+        let e = cache.unpin(key);
+        drop(cache);
+        if let Some(e) = e {
+            self.free_entry(&e);
+        }
+        None
+    }
+
+    /// Drop a [`probe_factor`](Self::probe_factor) pin; tears the entry
+    /// down if it was invalidated while the hit was in flight.
+    fn unpin_factor(&self, key: &FactorKey) {
+        let e = self.cache.lock().unwrap().unpin(key);
+        if let Some(e) = e {
+            self.free_entry(&e);
+        }
+    }
+
+    /// Admit and insert a freshly factored `L`'s shards. If the bytes
+    /// cannot be charged even after evicting every unpinned entry — or
+    /// an identical entry raced in first — the shards are freed again
+    /// and the solve simply completes uncached.
+    fn insert_factor(
+        &self,
+        key: FactorKey,
+        kind: LayoutKind,
+        panels: Vec<DevPtr>,
+        recompute_ns: u64,
+    ) {
+        let resident =
+            Footprint::for_cached_factor(&kind, key.n, key.dtype).into_per_device();
+        if !self.reserve_resident(&resident) {
+            for &p in &panels {
+                let _ = self.node.free(p);
+            }
+            return;
+        }
+        let bytes: usize = resident.iter().sum();
+        let refused = self.cache.lock().unwrap().insert(key, panels, kind, resident, recompute_ns);
+        match refused {
+            Some(e) => self.free_entry(&e),
+            None => self.node.metrics().add_cache_resident_bytes(bytes as i64),
+        }
+    }
+
+    /// Charge `resident` bytes of factor residency against the central
+    /// accountant, evicting victims (lowest recompute-cost × reuse
+    /// score first) to make room. Leaves reservations untouched and
+    /// returns `false` if the bytes cannot fit regardless.
+    fn reserve_resident(&self, resident: &[usize]) -> bool {
+        loop {
+            {
+                let mut st = self.state.lock().unwrap();
+                let fits = (0..self.capacity.len())
+                    .all(|d| st.reserved[d] + resident[d] <= self.capacity[d]);
+                if fits {
+                    for d in 0..self.capacity.len() {
+                        st.reserved[d] += resident[d];
+                        if st.reserved[d] > st.peak_reserved[d] {
+                            st.peak_reserved[d] = st.reserved[d];
+                        }
+                    }
+                    return true;
+                }
+            }
+            if !self.evict_one() {
+                return false;
+            }
+        }
+    }
+
+    /// Give back factor residency (eviction, invalidation, shutdown)
+    /// and wake the queue — freed bytes may admit a blocked solve.
+    fn release_resident(&self, resident: &[usize]) {
+        {
+            let mut st = self.state.lock().unwrap();
+            for d in 0..self.capacity.len() {
+                st.reserved[d] -= resident[d];
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    /// Evict the lowest-scored unpinned entry: free its shards and
+    /// release its charge. `false` when nothing is evictable.
+    fn evict_one(&self) -> bool {
+        let victim = self.cache.lock().unwrap().pop_victim();
+        let Some((_, e)) = victim else { return false };
+        self.free_entry(&e);
+        self.node.metrics().add_cache_eviction();
+        true
+    }
+
+    /// Free a detached cache entry's device shards and give back its
+    /// admission charge. Shards already freed out from under the cache
+    /// are skipped rather than double-freed.
+    fn free_entry(&self, e: &FactorEntry<Vec<DevPtr>>) {
+        for &p in &e.payload {
+            if self.node.ptr_exists(p) {
+                let _ = self.node.free(p);
+            }
+        }
+        self.release_resident(&e.resident);
+        self.node.metrics().add_cache_resident_bytes(-(e.resident_bytes() as i64));
+    }
+}
+
+/// Unpins a probed factor-cache entry when its hit solve finishes — or
+/// unwinds: dropping the guard is what allows eviction again (and what
+/// tears down an entry invalidated mid-hit), so it must run on every
+/// exit path.
+struct PinGuard {
+    inner: Arc<ServiceInner>,
+    key: FactorKey,
+}
+
+impl Drop for PinGuard {
+    fn drop(&mut self) {
+        self.inner.unpin_factor(&self.key);
+    }
+}
+
+/// A chain of Cholesky-family routines against **one** matrix `A`,
+/// submitted as a single fused job ([`SolveService::submit_dag`]): `A`
+/// is scattered and factored once and every stage runs on the
+/// predecessor's resident layout, so the intermediate gather → re-submit
+/// → re-scatter → re-factor of chaining the stages as separate requests
+/// vanishes. Each stage still resolves on its own [`ServiceHandle`]
+/// with its own result matrix.
+pub struct SolveDag<S: Scalar> {
+    a: Matrix<S>,
+    stages: Vec<DagStage<S>>,
+}
+
+/// One stage of a [`SolveDag`].
+pub enum DagStage<S: Scalar> {
+    /// Gather the Cholesky factor `L` itself (a `potrf` result).
+    Factor,
+    /// Triangular solve against a right-hand side (a `potrs` result).
+    Solve(Matrix<S>),
+    /// Cholesky-based inverse (a `potri` result). Runs in place and
+    /// destroys the resident factor, so it must be the last stage.
+    Inverse,
+}
+
+impl<S: Scalar> SolveDag<S> {
+    /// Start a chain against `a`.
+    pub fn new(a: Matrix<S>) -> Self {
+        SolveDag { a, stages: Vec::new() }
+    }
+
+    /// Append a `potrf` stage (the factor itself).
+    pub fn factor(mut self) -> Self {
+        self.stages.push(DagStage::Factor);
+        self
+    }
+
+    /// Append a `potrs` stage against `rhs`.
+    pub fn solve(mut self, rhs: Matrix<S>) -> Self {
+        self.stages.push(DagStage::Solve(rhs));
+        self
+    }
+
+    /// Append the (final) `potri` stage.
+    pub fn inverse(mut self) -> Self {
+        self.stages.push(DagStage::Inverse);
+        self
+    }
 }
 
 /// Pop-and-run one queued **interactive** solve if capacity and quota
@@ -423,13 +611,23 @@ pub struct SmallConfig {
     ///
     /// [`Predictor::best_grid`]: crate::costmodel::Predictor::best_grid
     pub grid: Option<(usize, usize)>,
+    /// Enable the resident factor cache: a cold `potrf`/`potrs` keeps
+    /// `L`'s distributed shards resident in device memory (charged
+    /// against the same admission budget as in-flight solves, evicted
+    /// by recompute-cost × reuse score under pressure), and a repeat
+    /// solve against a byte-identical `A` skips the scatter and the
+    /// factorization entirely — only the triangular tail runs, on the
+    /// resident shards. Off by default: residency shows up in
+    /// [`SolveService::reserved`], which cold-only callers may not
+    /// expect.
+    pub factor_cache: bool,
 }
 
 impl SmallConfig {
     /// Defaults anchored at tile size `tile` (`small_dim = 4·tile`).
     pub fn with_tile(tile: usize) -> Self {
         let policy = BatchPolicy { small_dim: 4 * tile, ..BatchPolicy::default() };
-        SmallConfig { tile, policy, model: GpuCostModel::h200(), grid: None }
+        SmallConfig { tile, policy, model: GpuCostModel::h200(), grid: None, factor_cache: false }
     }
 }
 
@@ -528,6 +726,7 @@ impl SolveService {
             }),
             cv: Condvar::new(),
             last_seen_ns: AtomicU64::new(0),
+            cache: Mutex::new(FactorCache::new()),
         });
         let workers = (0..n_workers.max(1))
             .map(|_| {
@@ -559,6 +758,19 @@ impl SolveService {
                             }
                             if st.shutdown && st.queue.is_empty() {
                                 break None;
+                            }
+                            // A queued solve may be starved by resident
+                            // factors rather than in-flight work: give
+                            // one back (lowest score first) before
+                            // sleeping. Lock order forbids evicting
+                            // under the state lock.
+                            if !st.queue.is_empty() {
+                                drop(st);
+                                let evicted = inner.evict_one();
+                                st = inner.state.lock().unwrap();
+                                if evicted {
+                                    continue;
+                                }
                             }
                             st = inner.cv.wait(st).unwrap();
                         }
@@ -647,7 +859,7 @@ impl SolveService {
         slo: Slo,
         f: impl FnOnce() -> T + Send + 'static,
     ) -> Result<ServiceHandle<T>> {
-        self.submit_with_grid(footprint, (1, 1), slo, 0, f)
+        self.submit_with_grid(footprint, (1, 1), slo, 0, false, f)
     }
 
     /// [`SolveService::submit_slo`] with an explicit process-grid stamp
@@ -661,6 +873,7 @@ impl SolveService {
         grid: (usize, usize),
         slo: Slo,
         est_ns: u64,
+        cache_hit: bool,
         f: impl FnOnce() -> T + Send + 'static,
     ) -> Result<ServiceHandle<T>> {
         let (handle, slot2) = handle_pair::<T>();
@@ -674,8 +887,15 @@ impl SolveService {
             let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
             let exec_ns = inner.sim_now_ns().saturating_sub(t0_ns);
             inner.note_completion(&ticket, queue_wait_ns, exec_ns);
-            let stats =
-                SolveStats { queue_wait_ns, exec_ns, batch_size: 1, coalesce_wait_ns: 0, grid };
+            let stats = SolveStats {
+                queue_wait_ns,
+                exec_ns,
+                batch_size: 1,
+                coalesce_wait_ns: 0,
+                grid,
+                cache_hit,
+                fused_stages: 1,
+            };
             let outcome = match out {
                 Ok(v) => Ok((v, stats)),
                 Err(p) => Err(ServeError::Failed(panic_message(p))),
@@ -764,16 +984,75 @@ impl SolveService {
         let model = self.cfg.model.clone();
         let kind = plan.kind;
         let hook = self.preempt_hook(slo);
-        self.submit_with_grid(plan.footprint, plan.grid, slo, plan.est_ns, move || -> Matrix<S> {
+        // Factor-cache probe: a resident L for this exact A (content
+        // hash) on this exact layout lets the solve skip the scatter
+        // and the factorization — only the triangular tail runs, and
+        // its EDF/SJF estimate shrinks by the same scatter+potrf
+        // prefix the eviction scorer prices (`Predictor::recompute_ns`).
+        let cache_cfg = if self.cfg.factor_cache {
+            let key = FactorKey::of(&a, self.cfg.tile, plan.grid);
+            let re_ns = Predictor {
+                model: model.clone(),
+                topo: self.inner.node.topology().clone(),
+                dtype: S::DTYPE,
+            }
+            .recompute_ns(n, self.cfg.tile, plan.grid.0, plan.grid.1);
+            Some((key, re_ns))
+        } else {
+            None
+        };
+        let mut est_ns = plan.est_ns;
+        let mut cached_ptrs: Option<Vec<DevPtr>> = None;
+        if let Some((key, re_ns)) = cache_cfg {
+            match self.inner.probe_factor(&key) {
+                Some((ptrs, _kind)) => {
+                    self.inner.node.metrics().add_cache_hit();
+                    est_ns = est_ns.saturating_sub(re_ns);
+                    cached_ptrs = Some(ptrs);
+                }
+                None => self.inner.node.metrics().add_cache_miss(),
+            }
+        }
+        let cache_hit = cached_ptrs.is_some();
+        let inner = self.inner.clone();
+        self.submit_with_grid(plan.footprint, plan.grid, slo, est_ns, cache_hit, move || -> Matrix<S> {
             let run = || -> Result<Matrix<S>> {
                 let backend = SolverBackend::<S>::Native;
                 let mut ctx = Ctx::new(&node, &model, &backend);
                 if let Some(h) = hook {
                     ctx = ctx.with_preempt_hook(h);
                 }
+                if let Some(ptrs) = cached_ptrs {
+                    // HIT: view the resident shards (the guard keeps
+                    // the entry pinned — and tears it down if it was
+                    // invalidated mid-flight — on every exit path).
+                    let (key, _) = cache_cfg.expect("a hit implies the cache is on");
+                    let _guard = PinGuard { inner, key };
+                    let dm = DistMatrix::<S>::from_panels(&node, n, kind, ptrs)?;
+                    let out = match routine {
+                        DistRoutine::Potrf => dm.gather(),
+                        DistRoutine::Potrs => {
+                            potrs_dist(&ctx, &dm, rhs.as_ref().expect("validated above"))
+                        }
+                        DistRoutine::Potri => {
+                            // potri destroys its input: run it on a
+                            // bitwise round-tripped copy so L stays
+                            // resident for the next hit.
+                            let l = dm.gather()?;
+                            let mut copy = DistMatrix::scatter(&node, &l, kind)?;
+                            potri_dist(&ctx, &mut copy)?;
+                            copy.gather()
+                        }
+                        DistRoutine::Syevd => unreachable!("rejected at submit"),
+                    };
+                    // Give the panels back to the cache un-freed.
+                    let _ = dm.into_panels();
+                    return out;
+                }
+                // COLD: bitwise the uncached route.
                 let mut dm = DistMatrix::scatter(&node, &a, kind)?;
                 potrf_dist(&ctx, &mut dm)?;
-                match routine {
+                let out = match routine {
                     DistRoutine::Potrf => dm.gather(),
                     DistRoutine::Potrs => {
                         potrs_dist(&ctx, &dm, rhs.as_ref().expect("validated above"))
@@ -783,7 +1062,15 @@ impl SolveService {
                         dm.gather()
                     }
                     DistRoutine::Syevd => unreachable!("rejected at submit"),
+                }?;
+                // Seed the cache with the still-resident L. potri ran
+                // in place and destroyed it — nothing to keep.
+                if let Some((key, re_ns)) = cache_cfg {
+                    if routine != DistRoutine::Potri {
+                        inner.insert_factor(key, kind, dm.into_panels(), re_ns);
+                    }
                 }
+                Ok(out)
             };
             match run() {
                 Ok(x) => x,
@@ -839,7 +1126,9 @@ impl SolveService {
         let node = self.inner.node.clone();
         let model = self.cfg.model.clone();
         let kind = plan.kind;
-        self.submit_with_grid(plan.footprint, plan.grid, slo, plan.est_ns, move || -> (Vec<S::Real>, Matrix<S>) {
+        // syevd shares no potrf prefix with the Cholesky family, so it
+        // bypasses the factor cache entirely.
+        self.submit_with_grid(plan.footprint, plan.grid, slo, plan.est_ns, false, move || -> (Vec<S::Real>, Matrix<S>) {
             let run = || -> Result<(Vec<S::Real>, Matrix<S>)> {
                 let backend = SolverBackend::<S>::Native;
                 let ctx = Ctx::new(&node, &model, &backend);
@@ -852,6 +1141,244 @@ impl SolveService {
                 Err(e) => panic!("distributed syevd failed: {e}"),
             }
         })
+    }
+
+    /// Submit a fused [`SolveDag`] under the default standard-class SLO.
+    pub fn submit_dag<S: Scalar>(&self, dag: SolveDag<S>) -> Result<Vec<ServiceHandle<Matrix<S>>>> {
+        self.submit_dag_slo(dag, Slo::standard())
+    }
+
+    /// Submit a chain of routines against one matrix as a **single
+    /// fused job**: the chain is planned once — on the heaviest stage's
+    /// preferred grid, so every stage shares one resident layout — `A`
+    /// is scattered and factored once, and the stages run back-to-back
+    /// on the resident shards. Each stage resolves on its own handle
+    /// (in submission order) with [`SolveStats::fused_stages`] set to
+    /// the chain length. The fused EDF/SJF estimate is the first
+    /// stage's full makespan plus only the *tails* of the rest (each
+    /// stage's plan minus the shared scatter+potrf prefix), and the
+    /// fused footprint is the elementwise max of the stage footprints
+    /// — the stages execute sequentially in one reservation.
+    ///
+    /// With [`SmallConfig::factor_cache`] on, the chain probes the
+    /// cache like any distributed solve: a hit skips the scatter and
+    /// factorization for the whole chain, and a cold chain without an
+    /// [`DagStage::Inverse`] seeds the cache on completion.
+    pub fn submit_dag_slo<S: Scalar>(
+        &self,
+        dag: SolveDag<S>,
+        slo: Slo,
+    ) -> Result<Vec<ServiceHandle<Matrix<S>>>> {
+        let SolveDag { a, stages } = dag;
+        let n = a.require_square()?;
+        if n == 0 {
+            return Err(Error::shape("cannot solve an empty system"));
+        }
+        if stages.is_empty() {
+            return Err(Error::config("a solve DAG needs at least one stage"));
+        }
+        for (i, s) in stages.iter().enumerate() {
+            match s {
+                DagStage::Inverse if i + 1 != stages.len() => {
+                    return Err(Error::config(
+                        "potri destroys the factor — Inverse must be the last stage",
+                    ));
+                }
+                DagStage::Solve(b) if b.rows() != n => {
+                    return Err(Error::shape(format!(
+                        "rhs has {} rows, matrix is {n}x{n}",
+                        b.rows()
+                    )));
+                }
+                _ => {}
+            }
+        }
+        let ndev = self.inner.capacity.len();
+        // Plan the chain on the heaviest stage's preferred grid (potri
+        // > potrs > potrf by workspace and tail weight), then re-plan
+        // every stage with that shape forced so the whole chain shares
+        // one resident layout.
+        let (lead_name, lead_nrhs) = if stages.iter().any(|s| matches!(s, DagStage::Inverse)) {
+            ("potri", 0)
+        } else if let Some(max_rhs) = stages
+            .iter()
+            .filter_map(|s| match s {
+                DagStage::Solve(b) => Some(b.cols()),
+                _ => None,
+            })
+            .max()
+        {
+            ("potrs", max_rhs)
+        } else {
+            ("potrf", 0)
+        };
+        let lead = self.plans.plan(
+            lead_name,
+            n,
+            lead_nrhs,
+            self.cfg.tile,
+            ndev,
+            S::DTYPE,
+            &self.cfg.model,
+            self.inner.node.topology(),
+            self.cfg.grid,
+        )?;
+        let grid = lead.grid;
+        let kind = lead.kind;
+        let re_ns = Predictor {
+            model: self.cfg.model.clone(),
+            topo: self.inner.node.topology().clone(),
+            dtype: S::DTYPE,
+        }
+        .recompute_ns(n, self.cfg.tile, grid.0, grid.1);
+        let mut per_dev = vec![0usize; ndev];
+        let mut est_ns: u64 = 0;
+        for (i, s) in stages.iter().enumerate() {
+            let (name, nrhs) = match s {
+                DagStage::Factor => ("potrf", 0),
+                DagStage::Solve(b) => ("potrs", b.cols()),
+                DagStage::Inverse => ("potri", 0),
+            };
+            let plan = self.plans.plan(
+                name,
+                n,
+                nrhs,
+                self.cfg.tile,
+                ndev,
+                S::DTYPE,
+                &self.cfg.model,
+                self.inner.node.topology(),
+                Some(grid),
+            )?;
+            for (d, &b) in plan.footprint.as_slice().iter().enumerate() {
+                per_dev[d] = per_dev[d].max(b);
+            }
+            // The scatter+potrf prefix is paid once, by the first stage.
+            let cost = if i == 0 { plan.est_ns } else { plan.est_ns.saturating_sub(re_ns) };
+            est_ns = est_ns.saturating_add(cost);
+        }
+        let footprint = Footprint::per_device(per_dev);
+        // Factor-cache probe, exactly as in `submit_dist_slo`: a hit
+        // drops the shared prefix from the whole chain's estimate.
+        let cache_cfg = if self.cfg.factor_cache {
+            Some((FactorKey::of(&a, self.cfg.tile, grid), re_ns))
+        } else {
+            None
+        };
+        let mut cached_ptrs: Option<Vec<DevPtr>> = None;
+        if let Some((key, re)) = cache_cfg {
+            match self.inner.probe_factor(&key) {
+                Some((ptrs, _kind)) => {
+                    self.inner.node.metrics().add_cache_hit();
+                    est_ns = est_ns.saturating_sub(re);
+                    cached_ptrs = Some(ptrs);
+                }
+                None => self.inner.node.metrics().add_cache_miss(),
+            }
+        }
+        let cache_hit = cached_ptrs.is_some();
+        let total = stages.len();
+        let mut handles = Vec::with_capacity(total);
+        let mut slots = Vec::with_capacity(total);
+        for _ in 0..total {
+            let (h, s) = handle_pair::<Matrix<S>>();
+            handles.push(h);
+            slots.push(s);
+        }
+        let has_inverse = matches!(stages.last(), Some(DagStage::Inverse));
+        let node = self.inner.node.clone();
+        let model = self.cfg.model.clone();
+        let hook = self.preempt_hook(slo);
+        let inner = self.inner.clone();
+        let job: AdmittedJob = Box::new(move |ticket, queue_wait_ns| {
+            let t0_ns = inner.sim_now_ns();
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || -> Result<Vec<Matrix<S>>> {
+                    let backend = SolverBackend::<S>::Native;
+                    let mut ctx = Ctx::new(&node, &model, &backend);
+                    if let Some(h) = hook {
+                        ctx = ctx.with_preempt_hook(h);
+                    }
+                    // `owned` ⇔ Drop may free dm's panels (they are the
+                    // job's own, not the cache's residents).
+                    let mut owned = true;
+                    let mut guard: Option<PinGuard> = None;
+                    let mut dm = match cached_ptrs {
+                        Some(ptrs) => {
+                            let (key, _) = cache_cfg.expect("a hit implies the cache is on");
+                            let g = PinGuard { inner: inner.clone(), key };
+                            let view = DistMatrix::<S>::from_panels(&node, n, kind, ptrs)?;
+                            if has_inverse {
+                                // potri will destroy the factor: run
+                                // the whole chain on a bitwise
+                                // round-tripped copy and release the
+                                // pin right away.
+                                let l = view.gather()?;
+                                let _ = view.into_panels();
+                                drop(g);
+                                DistMatrix::scatter(&node, &l, kind)?
+                            } else {
+                                owned = false;
+                                guard = Some(g);
+                                view
+                            }
+                        }
+                        None => {
+                            let mut dm = DistMatrix::scatter(&node, &a, kind)?;
+                            potrf_dist(&ctx, &mut dm)?;
+                            dm
+                        }
+                    };
+                    let mut results = Vec::with_capacity(stages.len());
+                    for s in &stages {
+                        match s {
+                            DagStage::Factor => results.push(dm.gather()?),
+                            DagStage::Solve(b) => results.push(potrs_dist(&ctx, &dm, b)?),
+                            DagStage::Inverse => {
+                                potri_dist(&ctx, &mut dm)?;
+                                results.push(dm.gather()?);
+                            }
+                        }
+                    }
+                    if !owned {
+                        // Give the panels back to the cache un-freed.
+                        let _ = dm.into_panels();
+                        drop(guard);
+                    } else if let Some((key, re)) = cache_cfg {
+                        if !has_inverse {
+                            inner.insert_factor(key, kind, dm.into_panels(), re);
+                        }
+                    }
+                    Ok(results)
+                },
+            ));
+            let exec_ns = inner.sim_now_ns().saturating_sub(t0_ns);
+            inner.note_completion(&ticket, queue_wait_ns, exec_ns);
+            if total > 1 {
+                inner.node.metrics().add_dag_fused_stages((total - 1) as u64);
+            }
+            let stats = SolveStats {
+                queue_wait_ns,
+                exec_ns,
+                batch_size: 1,
+                coalesce_wait_ns: 0,
+                grid,
+                cache_hit,
+                fused_stages: total,
+            };
+            let publish: PublishFn = Box::new(move || match out {
+                Ok(Ok(results)) => {
+                    for (slot, m) in slots.iter().zip(results) {
+                        publish_one(slot, Ok((m, stats)));
+                    }
+                }
+                Ok(Err(e)) => publish_failure(&slots, format!("fused solve failed: {e}")),
+                Err(p) => publish_failure(&slots, panic_message(p)),
+            });
+            publish
+        });
+        self.inner.enqueue_job(footprint, slo, est_ns, job)?;
+        Ok(handles)
     }
 
     /// Submit a **small** solve through the admission → coalesce →
@@ -1092,6 +1619,29 @@ impl SolveService {
         self.inner.quotas.peak(tenant)
     }
 
+    /// Live entries in the resident factor cache (0 with
+    /// [`SmallConfig::factor_cache`] off).
+    pub fn cached_factors(&self) -> usize {
+        self.inner.cache.lock().unwrap().len()
+    }
+
+    /// Total device bytes held by resident cached factors — charged
+    /// inside [`SolveService::reserved`], never in addition to it.
+    pub fn cached_factor_bytes(&self) -> usize {
+        self.inner.cache.lock().unwrap().resident_bytes()
+    }
+
+    /// Evict every evictable cached factor, freeing its shards and
+    /// releasing its reservation. Entries pinned by in-flight hits
+    /// survive. Returns the number evicted.
+    pub fn evict_cached_factors(&self) -> usize {
+        let mut n = 0;
+        while self.inner.evict_one() {
+            n += 1;
+        }
+        n
+    }
+
     /// Block until every submitted solve has finished executing and
     /// released its reservation. Result *publication* to the handles
     /// happens immediately after release, so a freshly drained
@@ -1131,6 +1681,12 @@ impl Drop for SolveService {
         self.inner.cv.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+        // With the workers gone no pins remain: free every resident
+        // factor and give back its reservation.
+        let drained = self.inner.cache.lock().unwrap().drain();
+        for (_, e) in drained {
+            self.inner.free_entry(&e);
         }
     }
 }
@@ -1245,6 +1801,8 @@ fn small_flusher<S: Scalar>(routine: SmallRoutine, model: GpuCostModel) -> Arc<S
                                 batch_size: occupancy,
                                 coalesce_wait_ns: wait_ns,
                                 grid: (1, 1),
+                                cache_hit: false,
+                                fused_stages: 1,
                             };
                             publish_one(slot, Ok((x, stats)));
                         }
@@ -1291,6 +1849,8 @@ fn small_flusher<S: Scalar>(routine: SmallRoutine, model: GpuCostModel) -> Arc<S
                                         batch_size: 1,
                                         coalesce_wait_ns: wait_ns,
                                         grid: (1, 1),
+                                        cache_hit: false,
+                                        fused_stages: 1,
                                     };
                                     publish_one(slot, Ok((x, stats)));
                                 }

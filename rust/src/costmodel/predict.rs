@@ -741,6 +741,27 @@ impl Predictor {
         }
     }
 
+    /// The **recompute cost** of a cached Cholesky factor: §2.1
+    /// redistribution + the grid-native factorization on a `(p, q)`
+    /// grid. This is the exact additive prefix shared by every
+    /// factor-consuming makespan — `potrs2d`/`potri2d` (and their
+    /// `p == 1` degenerate 1D forms) are all
+    /// `redistribute + potrf + <routine tail>` — so a cache **hit**'s
+    /// remaining work is `dist_makespan(...) - recompute(...)`
+    /// bitwise, and the eviction scorer charges exactly what a miss
+    /// would pay to rebuild the entry.
+    pub fn recompute(&self, n: usize, t: usize, p: usize, q: usize) -> f64 {
+        self.redistribute(n, p * q) + self.potrf2d(n, t, p, q)
+    }
+
+    /// [`Predictor::recompute`] in integer cost-model nanoseconds —
+    /// the unit the `SloQueue` estimates and the factor-cache eviction
+    /// scores are kept in (rounded and saturated exactly like the
+    /// planner's `est_ns`).
+    pub fn recompute_ns(&self, n: usize, t: usize, p: usize, q: usize) -> u64 {
+        crate::coordinator::secs_to_ns(self.recompute(n, t, p, q))
+    }
+
     pub fn best_grid(&self, routine: &str, n: usize, nrhs: usize, t: usize, ndev: usize) -> (usize, usize) {
         if ndev <= 1 {
             return (1, ndev.max(1));
@@ -1195,6 +1216,44 @@ mod tests {
         // batched-vs-distributed routing already encodes.
         assert!(eight < p.potrs(131072, 1024, 8, 1) * 1e-3);
         assert!(eight > p.pod_sweep("potrs", 64, 1, 8, 32));
+    }
+
+    #[test]
+    fn recompute_is_the_exact_additive_factor_prefix() {
+        // The factor-cache invariant: every factor-consuming makespan
+        // is `recompute + <routine tail>` *bitwise*, so a hit's
+        // remaining-work estimate (`dist_makespan - recompute`) never
+        // goes negative and the eviction scorer charges exactly the
+        // rebuild cost. Checked on 1D and 2×2 grids across dtypes.
+        for dtype in [DType::F32, DType::F64, DType::C64, DType::C128] {
+            let p = Predictor::h200(4, dtype);
+            for &(pp, qq) in &[(1usize, 4usize), (2, 2)] {
+                for &(n, t) in &[(256usize, 32usize), (4096, 256)] {
+                    let re = p.recompute(n, t, pp, qq);
+                    assert!(re > 0.0 && re.is_finite());
+                    for routine in ["potrf", "potrs", "potri"] {
+                        let full = p.dist_makespan(routine, n, 1, t, pp, qq);
+                        assert!(
+                            full >= re,
+                            "{routine} {dtype:?} ({pp},{qq}) n={n}: full {full} < recompute {re}"
+                        );
+                    }
+                    // potrf *is* the recompute prefix, bitwise.
+                    assert_eq!(p.dist_makespan("potrf", n, 1, t, pp, qq), re);
+                }
+            }
+            // p = 1 degenerates to the 1D formula bitwise.
+            assert_eq!(
+                p.recompute(1024, 64, 1, 4),
+                p.redistribute(1024, 4) + p.potrf(1024, 64, 4)
+            );
+        }
+        // The ns form rounds exactly like the planner's est_ns.
+        let p = Predictor::h200(4, DType::F64);
+        assert_eq!(
+            p.recompute_ns(1024, 64, 1, 4),
+            crate::coordinator::secs_to_ns(p.recompute(1024, 64, 1, 4))
+        );
     }
 
     #[test]

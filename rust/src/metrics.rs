@@ -162,6 +162,22 @@ pub struct Metrics {
     /// transposed panels and partial-result reductions moving along
     /// grid columns).
     pub grid_col_bytes: AtomicU64,
+    /// Distributed solves served from a resident cached factor (the
+    /// potrf — and its scatter — skipped entirely).
+    pub cache_hits: AtomicU64,
+    /// Cache probes that found no usable entry (cold factorizations
+    /// with the cache enabled).
+    pub cache_misses: AtomicU64,
+    /// Resident factors evicted to make room (scored by predicted
+    /// recompute cost × observed reuse).
+    pub cache_evictions: AtomicU64,
+    /// Bytes of factor shards currently resident in device memory
+    /// across the cache (a gauge, not a flow).
+    pub cache_resident_bytes: AtomicU64,
+    /// Extra stages executed inside fused solve DAGs: a fused
+    /// `potrf→potrs→potri` chain counts its stages beyond the first
+    /// (each one skipped a scatter/factor round-trip).
+    pub dag_fused_stages: AtomicU64,
 }
 
 impl Metrics {
@@ -309,6 +325,42 @@ impl Metrics {
         self.grid_col_bytes.fetch_add(bytes, Ordering::Relaxed);
     }
 
+    /// Record one factor-cache hit.
+    #[inline]
+    pub fn add_cache_hit(&self) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one factor-cache miss (cold factorization, cache on).
+    #[inline]
+    pub fn add_cache_miss(&self) {
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one factor eviction.
+    #[inline]
+    pub fn add_cache_eviction(&self) {
+        self.cache_evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Adjust the resident-factor-bytes gauge by `delta` (positive on
+    /// insert, negative on eviction/invalidation).
+    #[inline]
+    pub fn add_cache_resident_bytes(&self, delta: i64) {
+        if delta >= 0 {
+            self.cache_resident_bytes.fetch_add(delta as u64, Ordering::Relaxed);
+        } else {
+            self.cache_resident_bytes.fetch_sub((-delta) as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Record the extra stages of one fused solve DAG (`stages - 1`
+    /// for a chain of `stages` routines).
+    #[inline]
+    pub fn add_dag_fused_stages(&self, extra: u64) {
+        self.dag_fused_stages.fetch_add(extra, Ordering::Relaxed);
+    }
+
     /// Snapshot all counters (for reports; not atomic across fields).
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
@@ -356,6 +408,11 @@ impl Metrics {
             grid_peak_q: self.grid_peak_q.load(Ordering::Relaxed),
             grid_row_bytes: self.grid_row_bytes.load(Ordering::Relaxed),
             grid_col_bytes: self.grid_col_bytes.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
+            cache_resident_bytes: self.cache_resident_bytes.load(Ordering::Relaxed),
+            dag_fused_stages: self.dag_fused_stages.load(Ordering::Relaxed),
         }
     }
 
@@ -398,6 +455,11 @@ impl Metrics {
             &self.grid_peak_q,
             &self.grid_row_bytes,
             &self.grid_col_bytes,
+            &self.cache_hits,
+            &self.cache_misses,
+            &self.cache_evictions,
+            &self.cache_resident_bytes,
+            &self.dag_fused_stages,
         ] {
             c.store(0, Ordering::Relaxed);
         }
@@ -455,6 +517,12 @@ pub struct MetricsSnapshot {
     pub grid_peak_q: u64,
     pub grid_row_bytes: u64,
     pub grid_col_bytes: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    /// A gauge (bytes resident at snapshot time), not a flow.
+    pub cache_resident_bytes: u64,
+    pub dag_fused_stages: u64,
 }
 
 impl MetricsSnapshot {
@@ -512,6 +580,16 @@ impl MetricsSnapshot {
         self.ipc_opens as i64 - self.ipc_closes as i64
     }
 
+    /// Factor-cache hit rate over all probes (`0` before any probe).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let probes = self.cache_hits + self.cache_misses;
+        if probes == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / probes as f64
+        }
+    }
+
     /// Difference against an earlier snapshot (per-phase accounting).
     pub fn delta(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
         MetricsSnapshot {
@@ -563,6 +641,12 @@ impl MetricsSnapshot {
             grid_peak_q: self.grid_peak_q,
             grid_row_bytes: self.grid_row_bytes - earlier.grid_row_bytes,
             grid_col_bytes: self.grid_col_bytes - earlier.grid_col_bytes,
+            cache_hits: self.cache_hits - earlier.cache_hits,
+            cache_misses: self.cache_misses - earlier.cache_misses,
+            cache_evictions: self.cache_evictions - earlier.cache_evictions,
+            // A gauge, not a flow: the later residency stands.
+            cache_resident_bytes: self.cache_resident_bytes,
+            dag_fused_stages: self.dag_fused_stages - earlier.dag_fused_stages,
         }
     }
 }

@@ -56,9 +56,9 @@ use crate::batch::{
     SmallRoutine,
 };
 use crate::coordinator::{
-    handle_pair, publish_error, publish_one, DistPlan, Footprint, GridPlanCache, JobQueue,
-    SchedConfig, ServeError, ServiceHandle, Slo, SloClass, Slot, SloQueue, SloTicket, SolveStats,
-    TenantQuotas,
+    handle_pair, publish_error, publish_one, DistPlan, FactorCache, FactorEntry, FactorKey,
+    Footprint, GridPlanCache, JobQueue, SchedConfig, ServeError, ServiceHandle, Slo, SloClass,
+    Slot, SloQueue, SloTicket, SolveStats, TenantQuotas,
 };
 pub use crate::coordinator::DistRoutine;
 use crate::coordinator::panic_message;
@@ -103,6 +103,15 @@ pub struct MpmdConfig {
     /// Scheduling policy of the frontend queue — the same
     /// [`SchedConfig`] the SPMD front takes (FIFO by default).
     pub sched: SchedConfig,
+    /// Keep Cholesky factors resident on the workers that computed
+    /// them: a repeat `potrf/potrs/potri` against the same `A` skips
+    /// staging and factorization and runs only the triangular tail on
+    /// the resident shards (the MPMD twin of
+    /// [`SmallConfig::factor_cache`](crate::coordinator::SmallConfig)).
+    /// Resident bytes stay charged against the owning workers'
+    /// accountants; admission pressure evicts by recompute-cost ×
+    /// reuse. Off by default.
+    pub factor_cache: bool,
 }
 
 impl MpmdConfig {
@@ -117,6 +126,7 @@ impl MpmdConfig {
             routers: 2,
             grid: None,
             sched: SchedConfig::default(),
+            factor_cache: false,
         }
     }
 }
@@ -336,6 +346,25 @@ pub(crate) struct Shared {
     /// reading between two calls, and queue-age arithmetic needs a
     /// non-decreasing clock.
     last_seen_ns: AtomicU64,
+    /// Resident Cholesky factors ([`MpmdConfig::factor_cache`]): L's
+    /// shards stay in the workers' staged ledgers, their bytes stay
+    /// reserved under the owning workers' accountants, and rank 0
+    /// re-opens the stored IPC handles on a hit. Lock order: cache
+    /// before `front.state`, never held across a solve.
+    cache: Mutex<FactorCache<MpmdFactor>>,
+}
+
+/// A resident distributed factor. Layout position `i` of the cached
+/// [`LayoutKind`] lives on device `devices[i]`: `ptrs[i]` is the
+/// worker-staged shard (still in that worker's ledger — teardown goes
+/// through `release_staged`, revoke-on-free included) and `handles[i]`
+/// the export rank 0 re-opens on a hit (`None` for the caller's own
+/// worker 0).
+#[derive(Clone, Debug)]
+struct MpmdFactor {
+    devices: Vec<usize>,
+    ptrs: Vec<DevPtr>,
+    handles: Vec<Option<IpcHandle>>,
 }
 
 impl Shared {
@@ -352,6 +381,111 @@ impl Shared {
         let now = self.node.sim_time_ns();
         let prev = self.last_seen_ns.fetch_max(now, Ordering::AcqRel);
         now.max(prev)
+    }
+
+    /// Probe the factor cache for a resident L staged over exactly
+    /// `live`. The entry is pinned until [`Self::unpin_factor`].
+    /// Staleness — a participant died, the live set shifted, or a
+    /// shard was reclaimed — is validated lazily here: a stale entry
+    /// is doomed and torn down, and the probe reports a miss.
+    fn probe_factor(&self, key: &FactorKey, live: &[usize]) -> Option<MpmdFactor> {
+        let (fac, _) = self.cache.lock().unwrap().probe(key)?;
+        // `DevPtr`s are view-relative: the shards were allocated
+        // through a subset view over `live`, so liveness is checked
+        // through an identical view, never the full node.
+        let valid = fac.devices == live
+            && fac.devices.iter().all(|&d| self.workers[d].alive())
+            && self
+                .node
+                .subset(live)
+                .map(|sub| fac.ptrs.iter().all(|&p| sub.ptr_exists(p)))
+                .unwrap_or(false);
+        if valid {
+            return Some(fac);
+        }
+        let doomed = {
+            let mut cache = self.cache.lock().unwrap();
+            cache.invalidate(|k, _| k == key);
+            cache.unpin(key)
+        };
+        if let Some(e) = doomed {
+            self.teardown_factor(&e);
+        }
+        None
+    }
+
+    /// Drop the pin taken by [`Self::probe_factor`]; an entry doomed
+    /// while the hit was in flight is torn down here.
+    fn unpin_factor(&self, key: &FactorKey) {
+        let doomed = self.cache.lock().unwrap().unpin(key);
+        if let Some(e) = doomed {
+            self.teardown_factor(&e);
+        }
+    }
+
+    /// Admit a just-computed factor into residency. The shards stay in
+    /// their workers' staged ledgers; their bytes move from the solve's
+    /// footprint reservation to the cache's resident charge, so the
+    /// caller releases only `footprint − resident` per device. Returns
+    /// the per-position resident bytes when kept, `None` when refused
+    /// (first insert wins — a racing duplicate tears down normally).
+    fn insert_factor(
+        &self,
+        key: FactorKey,
+        kind: LayoutKind,
+        fac: MpmdFactor,
+        recompute_ns: u64,
+    ) -> Option<Vec<usize>> {
+        let resident = Footprint::for_cached_factor(&kind, key.n, key.dtype).into_per_device();
+        let bytes: usize = resident.iter().sum();
+        let refused =
+            self.cache.lock().unwrap().insert(key, fac, kind, resident.clone(), recompute_ns);
+        if refused.is_some() {
+            return None;
+        }
+        self.node.metrics().add_cache_resident_bytes(bytes as i64);
+        Some(resident)
+    }
+
+    /// Tear down a doomed/evicted/drained entry: hand each shard back
+    /// to its worker's staged ledger (revoke-on-free; idempotent when
+    /// death already reclaimed it) and release the resident charge
+    /// from that worker's accountant.
+    fn teardown_factor(&self, e: &FactorEntry<MpmdFactor>) {
+        let fac = &e.payload;
+        for (i, &dev) in fac.devices.iter().enumerate() {
+            if let Some(w) = self.workers.get(dev) {
+                w.ctx.release_staged(fac.ptrs[i]);
+                w.ctx.admission.release(e.resident[i]);
+            }
+        }
+        self.node.metrics().add_cache_resident_bytes(-(e.resident_bytes() as i64));
+        self.front.notify();
+    }
+
+    /// Evict the lowest-value resident factor (recompute-cost × reuse,
+    /// LRU on ties). Returns whether a victim's bytes were released.
+    fn evict_factor(&self) -> bool {
+        let victim = self.cache.lock().unwrap().pop_victim();
+        match victim {
+            Some((_, e)) => {
+                self.teardown_factor(&e);
+                self.node.metrics().add_cache_eviction();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop every cached factor with a shard on device `d` — worker
+    /// death or a straggler-degraded view invalidates its residency.
+    /// Pinned entries (a hit in flight) are doomed and torn down at
+    /// unpin instead.
+    fn invalidate_factors_on(&self, d: usize) {
+        let dead = self.cache.lock().unwrap().invalidate(|_, e| e.payload.devices.contains(&d));
+        for (_, e) in dead {
+            self.teardown_factor(&e);
+        }
     }
 }
 
@@ -462,6 +596,35 @@ impl<S: Scalar> DistWork for DistReq<S> {
         let caller = shared.caller;
         let fp = &plan.footprint;
         let metrics = shared.node.metrics().clone();
+        // Factor-cache probe: a resident L staged over exactly this
+        // live set lets the solve skip both the staging fan-out and
+        // the factorization — rank 0 re-opens the stored handles and
+        // runs only the triangular tail on the resident shards. syevd
+        // shares no potrf prefix, so it bypasses the cache.
+        let cache_key = if shared.cfg.factor_cache && self.routine != DistRoutine::Syevd {
+            Some(FactorKey::of(self.a.as_ref(), shared.cfg.tile, plan.grid))
+        } else {
+            None
+        };
+        let mut cached: Option<MpmdFactor> = None;
+        if let Some(key) = &cache_key {
+            cached = shared.probe_factor(key, live);
+            if cached.is_some() {
+                metrics.add_cache_hit();
+            } else {
+                metrics.add_cache_miss();
+            }
+        }
+        let cache_hit = cached.is_some();
+        let recompute_ns = match &cache_key {
+            Some(key) => Predictor {
+                model: shared.cfg.model.clone(),
+                topo: shared.node.topology().clone(),
+                dtype: S::DTYPE,
+            }
+            .recompute_ns(key.n, key.tile, key.grid.0, key.grid.1),
+            None => 0,
+        };
         let mut opened: Vec<IpcHandle> = Vec::new();
         // (`StagedShard` is not `Clone`, hence no `vec![None; n]`.)
         let mut staged: Vec<Option<StagedShard>> = (0..live.len()).map(|_| None).collect();
@@ -477,43 +640,53 @@ impl<S: Scalar> DistWork for DistReq<S> {
             let kind = plan.kind;
 
             // 1. Every live worker stages its own shard in its own
-            // process and ships a pointer (rank 0) or handle (others).
-            let (tx, rx) = mpsc::channel::<(usize, Result<StagedShard>)>();
-            for (i, &dev) in live.iter().enumerate() {
-                let tx = tx.clone();
-                let a = self.a.clone();
-                let sub = sub.clone();
-                let job: WorkerJob = Box::new(move |ctx| {
-                    if !ctx.alive() {
-                        // Dead process: dropping `tx` is the disconnect
-                        // rank 0 observes.
-                        return;
-                    }
-                    let res = stage_shard::<S>(ctx, &sub, i, kind, &a, caller);
-                    let _ = tx.send((i, res));
-                });
-                // A closed mailbox drops the job (and its `tx`): the
-                // missing reply is detected below.
-                let _ = shared.workers[dev].send(job);
-            }
-            drop(tx);
+            // process and ships a pointer (rank 0) or handle (others) —
+            // unless the factor is already resident, in which case the
+            // cached shards (still owned by the workers' staged
+            // ledgers; nothing below may free them) stand in and no
+            // upload happens at all.
+            if let Some(fac) = &cached {
+                for (i, &ptr) in fac.ptrs.iter().enumerate() {
+                    staged[i] = Some(StagedShard { ptr, handle: fac.handles[i] });
+                }
+            } else {
+                let (tx, rx) = mpsc::channel::<(usize, Result<StagedShard>)>();
+                for (i, &dev) in live.iter().enumerate() {
+                    let tx = tx.clone();
+                    let a = self.a.clone();
+                    let sub = sub.clone();
+                    let job: WorkerJob = Box::new(move |ctx| {
+                        if !ctx.alive() {
+                            // Dead process: dropping `tx` is the disconnect
+                            // rank 0 observes.
+                            return;
+                        }
+                        let res = stage_shard::<S>(ctx, &sub, i, kind, &a, caller);
+                        let _ = tx.send((i, res));
+                    });
+                    // A closed mailbox drops the job (and its `tx`): the
+                    // missing reply is detected below.
+                    let _ = shared.workers[dev].send(job);
+                }
+                drop(tx);
 
-            // Drain EVERY reply before acting on errors: a successfully
-            // staged shard must land in `staged` so the teardown below
-            // can hand it back to its worker even when a sibling failed.
-            let mut stage_err: Option<Error> = None;
-            for (i, res) in rx {
-                match res {
-                    Ok(sh) => staged[i] = Some(sh),
-                    Err(e) => {
-                        if stage_err.is_none() {
-                            stage_err = Some(e);
+                // Drain EVERY reply before acting on errors: a successfully
+                // staged shard must land in `staged` so the teardown below
+                // can hand it back to its worker even when a sibling failed.
+                let mut stage_err: Option<Error> = None;
+                for (i, res) in rx {
+                    match res {
+                        Ok(sh) => staged[i] = Some(sh),
+                        Err(e) => {
+                            if stage_err.is_none() {
+                                stage_err = Some(e);
+                            }
                         }
                     }
                 }
-            }
-            if let Some(e) = stage_err {
-                return Err(e);
+                if let Some(e) = stage_err {
+                    return Err(e);
+                }
             }
 
             // 2. Rank 0 opens every foreign handle in its own space,
@@ -553,7 +726,12 @@ impl<S: Scalar> DistWork for DistReq<S> {
                     let vals = syevd_dist(&ctx, &mut dm)?;
                     return Ok(DistOut::Eig(vals, dm.gather()?));
                 }
-                potrf_dist(&ctx, &mut dm)?;
+                // The resident shards already hold L — the hit runs
+                // only the triangular tail, bit-for-bit what the cold
+                // path would compute from the same factor.
+                if !cache_hit {
+                    potrf_dist(&ctx, &mut dm)?;
+                }
                 match self.routine {
                     DistRoutine::Potrf => Ok(DistOut::Mat(dm.gather()?)),
                     DistRoutine::Potrs => {
@@ -561,8 +739,18 @@ impl<S: Scalar> DistWork for DistReq<S> {
                         Ok(DistOut::Mat(potrs_dist(&ctx, &dm, b)?))
                     }
                     DistRoutine::Potri => {
-                        potri_dist(&ctx, &mut dm)?;
-                        Ok(DistOut::Mat(dm.gather()?))
+                        if cache_hit {
+                            // potri destroys L in place — run it on a
+                            // scatter round-trip copy so the resident
+                            // factor survives the hit unchanged.
+                            let l = dm.gather()?;
+                            let mut copy = DistMatrix::<S>::scatter(&sub, &l, kind)?;
+                            potri_dist(&ctx, &mut copy)?;
+                            Ok(DistOut::Mat(copy.gather()?))
+                        } else {
+                            potri_dist(&ctx, &mut dm)?;
+                            Ok(DistOut::Mat(dm.gather()?))
+                        }
                     }
                     DistRoutine::Syevd => unreachable!("handled above"),
                 }
@@ -582,8 +770,35 @@ impl<S: Scalar> DistWork for DistReq<S> {
                 }
             };
 
+        // Keep a cold success resident: potrf left L in the staged
+        // shards in place, so residency costs nothing to create — the
+        // shards stay in the workers' ledgers and their bytes move
+        // from this solve's reservation to the cache's resident
+        // charge (the footprint always covers at least one matrix
+        // copy per device, so the difference released below is
+        // non-negative). potri destroyed L in place, so it never
+        // seeds the cache.
+        let mut kept: Option<Vec<usize>> = None;
+        if result.is_ok() && !cache_hit && self.routine != DistRoutine::Potri {
+            if let Some(key) = &cache_key {
+                let mut ptrs = Vec::with_capacity(live.len());
+                let mut handles = Vec::with_capacity(live.len());
+                for sh in staged.iter().flatten() {
+                    ptrs.push(sh.ptr);
+                    handles.push(sh.handle);
+                }
+                if ptrs.len() == live.len() {
+                    let fac = MpmdFactor { devices: live.to_vec(), ptrs, handles };
+                    kept = shared.insert_factor(*key, plan.kind, fac, recompute_ns);
+                }
+            }
+        }
+
         // 4. Teardown on every path: close the caller's mappings, tear
         // down staged shards (revoke-on-free), release reservations.
+        // Resident shards — a hit's source or a kept insert — stay
+        // staged; a kept insert's factor bytes stay reserved under the
+        // cache's name.
         for h in &opened {
             if shared.registry.close(caller, *h).is_ok() {
                 metrics.add_ipc_close();
@@ -591,10 +806,16 @@ impl<S: Scalar> DistWork for DistReq<S> {
         }
         for (i, &dev) in live.iter().enumerate() {
             let wctx = &shared.workers[dev].ctx;
-            if let Some(sh) = &staged[i] {
-                wctx.release_staged(sh.ptr);
+            if !cache_hit && kept.is_none() {
+                if let Some(sh) = &staged[i] {
+                    wctx.release_staged(sh.ptr);
+                }
             }
-            wctx.admission.release(fp.bytes(i));
+            let retained = kept.as_ref().map(|r| r[i]).unwrap_or(0);
+            wctx.admission.release(fp.bytes(i).saturating_sub(retained));
+        }
+        if let (true, Some(key)) = (cache_hit, &cache_key) {
+            shared.unpin_factor(key);
         }
         shared.quotas.release(ticket.slo.tenant, fp.as_slice().iter().sum());
         shared.front.notify();
@@ -609,6 +830,8 @@ impl<S: Scalar> DistWork for DistReq<S> {
                     batch_size: 1,
                     coalesce_wait_ns: 0,
                     grid: plan.grid,
+                    cache_hit,
+                    fused_stages: 1,
                 };
                 self.publish_ok(out, stats);
                 ExecResult::Published
@@ -633,6 +856,14 @@ impl<S: Scalar> DistWork for DistReq<S> {
                     )));
                     ExecResult::Published
                 } else {
+                    // A dead participant invalidates every factor
+                    // staged on it (panic deaths never pass through
+                    // `kill_worker`, so this is the only hook). The
+                    // retry re-plans over the shrunk live set and runs
+                    // cold — no request is lost to a stale hit.
+                    for &d in &dead {
+                        shared.invalidate_factors_on(d);
+                    }
                     ExecResult::Requeue(dead)
                 }
             }
@@ -704,6 +935,8 @@ impl<S: Scalar> PodWork for PodReq<S> {
                         batch_size: occupancy,
                         coalesce_wait_ns: wait_ns,
                         grid: (1, 1),
+                        cache_hit: false,
+                        fused_stages: 1,
                     };
                     publish_one(slot, Ok((x, stats)));
                 }
@@ -763,6 +996,8 @@ impl<S: Scalar> PodWork for PodReq<S> {
                                 batch_size: 1,
                                 coalesce_wait_ns: self.waits[i],
                                 grid: (1, 1),
+                                cache_hit: false,
+                                fused_stages: 1,
                             },
                         )),
                         Ok(Err(e)) => Err(ServeError::Failed(format!("small solve failed: {e}"))),
@@ -854,7 +1089,14 @@ fn dispatch(
                     return true;
                 }
             }
-            if !reserve_all(shared, &live, &plan.footprint) {
+            // Resident factors yield to admission pressure: each
+            // eviction frees the lowest-value entry's bytes, so the
+            // retry loop terminates when the cache runs dry.
+            let mut admitted = reserve_all(shared, &live, &plan.footprint);
+            while !admitted && shared.evict_factor() {
+                admitted = reserve_all(shared, &live, &plan.footprint);
+            }
+            if !admitted {
                 let mut st = shared.front.state.lock().unwrap();
                 st.queue.restore(ticket, work);
                 st.in_flight -= 1;
@@ -901,11 +1143,18 @@ fn dispatch(
                 return true;
             }
             // Pin to the least-loaded live worker that admits the pod.
+            // Resident factors yield here too: a device filled with
+            // cached factors must not starve the small-solve path.
             cands.sort_by_key(|&d| (shared.workers[d].queue_depth(), d));
             let mut target = None;
-            for &d in &cands {
-                if shared.workers[d].ctx.admission.try_reserve(bytes).is_ok() {
-                    target = Some(d);
+            'admit: loop {
+                for &d in &cands {
+                    if shared.workers[d].ctx.admission.try_reserve(bytes).is_ok() {
+                        target = Some(d);
+                        break 'admit;
+                    }
+                }
+                if !shared.evict_factor() {
                     break;
                 }
             }
@@ -1137,6 +1386,7 @@ impl MpmdService {
             caller: AddressSpace(0),
             quotas,
             last_seen_ns: AtomicU64::new(0),
+            cache: Mutex::new(FactorCache::new()),
         });
         let small = Arc::new(Mutex::new(MpmdSmall {
             planner: BatchPlanner::new(policy),
@@ -1165,9 +1415,28 @@ impl MpmdService {
         // mints (estimated over the full worker set; a degraded-mode
         // dispatch re-plans, but the ticket keeps its submit-time
         // estimate). A failed estimate degrades to 0 — FIFO within
-        // rank — rather than failing the submit.
-        let est_ns =
-            req.plan(&self.shared, self.shared.workers.len()).map(|p| p.est_ns).unwrap_or(0);
+        // rank — rather than failing the submit. When the factor is
+        // resident the potrf prefix is deducted: the ticket ranks by
+        // the tail the hit will actually run.
+        let est_ns = match req.plan(&self.shared, self.shared.workers.len()) {
+            Ok(p) => {
+                let mut est = p.est_ns;
+                if self.shared.cfg.factor_cache && req.routine != DistRoutine::Syevd {
+                    let key = FactorKey::of(req.a.as_ref(), self.shared.cfg.tile, p.grid);
+                    if self.shared.cache.lock().unwrap().contains(&key) {
+                        let re = Predictor {
+                            model: self.shared.cfg.model.clone(),
+                            topo: self.shared.node.topology().clone(),
+                            dtype: S::DTYPE,
+                        }
+                        .recompute_ns(key.n, key.tile, key.grid.0, key.grid.1);
+                        est = est.saturating_sub(re);
+                    }
+                }
+                est
+            }
+            Err(_) => 0,
+        };
         let work = QueuedWork::fresh(WorkKind::Dist(Arc::new(req)), slo, est_ns);
         if let Err(w) = self.shared.front.enqueue(work, self.shared.sim_now_ns()) {
             fail_work(w, ServeError::Failed("mpmd service is shut down".to_string()));
@@ -1464,6 +1733,10 @@ impl MpmdService {
             .get(d)
             .ok_or(Error::InvalidDevice { device: d, count: self.shared.workers.len() })?;
         link.kill();
+        // The dead process's staged shards are gone — every factor
+        // with a shard on `d` loses its residency (pinned entries are
+        // doomed; the in-flight hit's own death handling re-queues).
+        self.shared.invalidate_factors_on(d);
         Ok(())
     }
 
@@ -1488,6 +1761,10 @@ impl MpmdService {
     /// active. `factor` is clamped to ≥ 1.0.
     pub fn inject_straggler(&self, d: usize, factor: f64) -> Result<()> {
         self.shared.node.device(d)?.clock().set_drag(factor.max(1.0));
+        // A dragged device degrades every hit its shards would serve —
+        // cached factors touching it lose residency and repeat solves
+        // refactor cold over the degraded view.
+        self.shared.invalidate_factors_on(d);
         Ok(())
     }
 
@@ -1523,6 +1800,25 @@ impl MpmdService {
     /// Devices whose worker process is alive.
     pub fn alive_workers(&self) -> Vec<usize> {
         self.shared.live_workers(&[])
+    }
+
+    /// Resident factors currently cached (live entries).
+    pub fn cached_factors(&self) -> usize {
+        self.shared.cache.lock().unwrap().len()
+    }
+
+    /// Device bytes held by resident factors across workers.
+    pub fn cached_factor_bytes(&self) -> usize {
+        self.shared.cache.lock().unwrap().resident_bytes()
+    }
+
+    /// Evict every resident factor; returns how many were dropped.
+    pub fn evict_cached_factors(&self) -> usize {
+        let mut n = 0;
+        while self.shared.evict_factor() {
+            n += 1;
+        }
+        n
     }
 
     /// Per-worker mailbox depths (the queue-depth gauge behind the
@@ -1592,6 +1888,12 @@ impl Drop for MpmdService {
         self.shared.front.cv.notify_all();
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
+        }
+        // Resident factors die with the service: tear them down while
+        // the workers can still revoke + free their staged shards.
+        let drained = self.shared.cache.lock().unwrap().drain();
+        for (_, e) in drained {
+            self.shared.teardown_factor(&e);
         }
         // Routers next (their jobs need live workers), workers last.
         self.routers = None;

@@ -157,12 +157,37 @@ impl RequestSpec {
     }
 }
 
+/// Reuse correlation of sampled matrix seeds
+/// ([`Population::with_reuse`]): real fleets re-solve against the same
+/// operator — a GP posterior queried many times between kernel
+/// refits, a VMC geometric tensor shared across an optimizer sweep —
+/// so repeat draws land on a small hot set of matrices instead of a
+/// fresh one per request. This is the traffic shape the factor cache
+/// ([`crate::coordinator::SmallConfig::factor_cache`]) is built for.
+#[derive(Clone, Copy, Debug)]
+pub struct ReusePolicy {
+    /// Size of the hot working set: a repeat draw lands on one of
+    /// `hot` fixed seeds (shared across templates; the matrix itself
+    /// still differs per template's `n`/dtype).
+    pub hot: usize,
+    /// Probability a draw churns to a fresh never-repeated seed
+    /// instead of a hot one (`0.0` = pure reuse, `1.0` = the default
+    /// fresh-per-request behavior).
+    pub churn: f64,
+}
+
 /// A weighted mixture of [`RequestSpec`] templates.
 #[derive(Clone, Debug)]
 pub struct Population {
     entries: Vec<(f64, RequestSpec)>,
     total: f64,
+    reuse: Option<ReusePolicy>,
 }
+
+/// Base of the hot-seed pool: hot seed `k` is this xor a golden-ratio
+/// multiple of `k`, so the pool is fixed across runs and disjoint
+/// draws of `k` decorrelate.
+const HOT_SEED_BASE: u64 = 0x9D5C_41C3_1E5F_7A26;
 
 impl Population {
     /// Build from `(weight, template)` pairs. Weights are relative
@@ -171,11 +196,26 @@ impl Population {
         assert!(!entries.is_empty(), "population must have at least one entry");
         assert!(entries.iter().all(|&(w, _)| w > 0.0), "weights must be positive");
         let total = entries.iter().map(|&(w, _)| w).sum();
-        Population { entries, total }
+        Population { entries, total, reuse: None }
     }
 
-    /// Draw one request: weighted template pick, then a fresh matrix
-    /// seed from the same stream (so traces stay reproducible).
+    /// Correlate matrix seeds across draws: with probability
+    /// `1 − churn` a request re-solves one of `hot` fixed matrices.
+    /// Sampling stays deterministic under the trace seed — the reuse
+    /// decisions ride the same xoshiro stream as everything else.
+    pub fn with_reuse(mut self, hot: usize, churn: f64) -> Self {
+        self.reuse = Some(ReusePolicy { hot: hot.max(1), churn: churn.clamp(0.0, 1.0) });
+        self
+    }
+
+    /// The active reuse policy, if any.
+    pub fn reuse(&self) -> Option<ReusePolicy> {
+        self.reuse
+    }
+
+    /// Draw one request: weighted template pick, then the matrix seed —
+    /// fresh from the stream by default; under [`Self::with_reuse`], a
+    /// hot-set seed with probability `1 − churn`.
     pub fn sample(&self, rng: &mut Rng) -> RequestSpec {
         let mut x = rng.next_f64() * self.total;
         let mut spec = self.entries.last().expect("population is non-empty").1;
@@ -186,7 +226,17 @@ impl Population {
             }
             x -= w;
         }
-        spec.seed = rng.next_u64();
+        spec.seed = match self.reuse {
+            None => rng.next_u64(),
+            Some(r) => {
+                if rng.next_f64() < r.churn {
+                    rng.next_u64()
+                } else {
+                    let k = rng.next_u64() % r.hot as u64;
+                    HOT_SEED_BASE ^ k.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                }
+            }
+        };
         spec
     }
 
@@ -268,6 +318,13 @@ impl Population {
             // Nightly refactorization: big, float32, happy to wait.
             (0.10, dist(DistRoutine::Potrf, 384, 0, DType::F32, SloClass::Batch, None, 3)),
         ])
+    }
+
+    /// [`Self::gp_vmc_mix`] with reuse-correlated inputs: `hot` hot
+    /// matrices, `churn` probability of a fresh one — the repeat-solve
+    /// regime where the factor cache converts potrf time into hits.
+    pub fn gp_vmc_mix_reuse(hot: usize, churn: f64) -> Self {
+        Self::gp_vmc_mix().with_reuse(hot, churn)
     }
 }
 
@@ -576,6 +633,49 @@ mod tests {
         let a = pop.sample(&mut rng);
         let b = pop.sample(&mut rng);
         assert_ne!(a.seed, b.seed, "each draw must get fresh matrix inputs");
+    }
+
+    #[test]
+    fn zero_churn_reuse_draws_only_hot_seeds() {
+        let pop = Population::gp_vmc_mix_reuse(3, 0.0);
+        let mut rng = Rng::new(41);
+        let mut seeds = std::collections::HashSet::new();
+        for _ in 0..300 {
+            seeds.insert(pop.sample(&mut rng).seed);
+        }
+        assert!(seeds.len() <= 3, "hot=3, churn=0 must confine seeds to the pool: {seeds:?}");
+        assert!(seeds.len() > 1, "draws should spread over the hot pool");
+    }
+
+    #[test]
+    fn full_churn_reuse_matches_fresh_sampling_diversity() {
+        let pop = Population::gp_vmc_mix_reuse(3, 1.0);
+        let mut rng = Rng::new(43);
+        let mut seeds = std::collections::HashSet::new();
+        let draws = 300;
+        for _ in 0..draws {
+            seeds.insert(pop.sample(&mut rng).seed);
+        }
+        assert_eq!(seeds.len(), draws, "churn=1.0 must never repeat a seed");
+    }
+
+    #[test]
+    fn reuse_traces_are_deterministic_and_mostly_hot() {
+        let gen =
+            OpenLoop::new(poisson(500.0), Population::gp_vmc_mix_reuse(4, 0.2), 47);
+        let a = gen.trace(400);
+        let b = gen.trace(400);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.spec.seed, y.spec.seed, "reuse traces must replay under one seed");
+        }
+        let mut counts: std::collections::HashMap<u64, usize> = std::collections::HashMap::new();
+        for arr in &a {
+            *counts.entry(arr.spec.seed).or_default() += 1;
+        }
+        let repeated: usize =
+            counts.values().filter(|&&c| c > 1).sum();
+        let frac = repeated as f64 / a.len() as f64;
+        assert!(frac > 0.6, "hot=4, churn=0.2 should make most draws repeats, got {frac}");
     }
 
     #[test]

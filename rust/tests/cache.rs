@@ -1,0 +1,283 @@
+//! Factor-cache + solve-DAG property suite.
+//!
+//! Pins the acceptance criteria of the caching layer:
+//! * a repeat solve against the same `A` hits the resident factor and
+//!   is **bitwise identical** to the cold path, for all four dtypes on
+//!   both a 1D layout and a pinned 2×2 grid;
+//! * a fused `potrf→potrs→potri` DAG matches three separate cold
+//!   submits bitwise, for all four dtypes;
+//! * resident factors and in-flight solves share one admission budget:
+//!   the per-device accountant never passes capacity under concurrent
+//!   repeat traffic, and pressure evicts rather than blocks;
+//! * eviction leaves lowest recompute-cost × reuse first, LRU on ties;
+//! * on the MPMD front, killing a worker drops every factor staged on
+//!   it and loses zero requests; straggler injection invalidates too.
+
+use jaxmg::coordinator::{
+    DistRoutine, FactorCache, FactorKey, SmallConfig, SolveDag, SolveService,
+};
+use jaxmg::layout::BlockCyclic1D;
+use jaxmg::linalg::{tol_for, FrobNorm, Matrix};
+use jaxmg::prelude::*;
+use jaxmg::scalar::{c32, c64, DType};
+use jaxmg::serve::{MpmdConfig, MpmdService};
+use jaxmg::tile::LayoutKind;
+
+const TILE: usize = 8;
+const NDEV: usize = 4;
+
+fn cached_service(node: &SimNode, grid: Option<(usize, usize)>) -> SolveService {
+    let mut cfg = SmallConfig::with_tile(TILE);
+    cfg.factor_cache = true;
+    cfg.grid = grid;
+    SolveService::with_small_config(node.clone(), 2, cfg)
+}
+
+// ---------------------------------------------------------------------------
+// Bitwise-identical hits, 4 dtypes × {1D, 2×2}
+// ---------------------------------------------------------------------------
+
+fn hit_matches_cold_bitwise<S: Scalar>(seed: u64, grid: Option<(usize, usize)>) {
+    let node = SimNode::new_uniform(NDEV, 1 << 24);
+    let svc = cached_service(&node, grid);
+    let n = 24;
+    let a = Matrix::<S>::spd_random(n, seed);
+    let b = Matrix::<S>::random(n, 2, seed + 9);
+    let (cold, s0) =
+        svc.submit_dist(DistRoutine::Potrs, a.clone(), Some(b.clone())).unwrap().wait();
+    assert!(!s0.cache_hit, "first sight of A cannot hit");
+    assert_eq!(svc.cached_factors(), 1, "the cold factor must become resident");
+    let (hot, s1) =
+        svc.submit_dist(DistRoutine::Potrs, a.clone(), Some(b.clone())).unwrap().wait();
+    assert!(s1.cache_hit, "repeat solve must hit the resident factor");
+    assert_eq!(cold.as_slice(), hot.as_slice(), "cached solve diverges from cold");
+    // potri rides the same resident L; its cold reference runs on a
+    // fresh service so nothing is cached there.
+    let (inv_hot, s2) = svc.submit_dist(DistRoutine::Potri, a.clone(), None).unwrap().wait();
+    assert!(s2.cache_hit, "potri must reuse the cached factor");
+    let node2 = SimNode::new_uniform(NDEV, 1 << 24);
+    let svc2 = cached_service(&node2, grid);
+    let (inv_cold, s3) = svc2.submit_dist(DistRoutine::Potri, a.clone(), None).unwrap().wait();
+    assert!(!s3.cache_hit);
+    assert_eq!(inv_cold.as_slice(), inv_hot.as_slice(), "cached potri diverges from cold");
+    assert_eq!(svc2.cached_factors(), 0, "potri destroys L and must not seed the cache");
+    let m = node.metrics().snapshot();
+    assert!(m.cache_hits >= 2 && m.cache_misses >= 1, "probes must be visible in metrics");
+    svc.drain();
+    svc2.drain();
+}
+
+#[test]
+fn hits_are_bitwise_identical_f32() {
+    hit_matches_cold_bitwise::<f32>(101, None);
+    hit_matches_cold_bitwise::<f32>(102, Some((2, 2)));
+}
+
+#[test]
+fn hits_are_bitwise_identical_f64() {
+    hit_matches_cold_bitwise::<f64>(103, None);
+    hit_matches_cold_bitwise::<f64>(104, Some((2, 2)));
+}
+
+#[test]
+fn hits_are_bitwise_identical_c64() {
+    hit_matches_cold_bitwise::<c32>(105, None);
+    hit_matches_cold_bitwise::<c32>(106, Some((2, 2)));
+}
+
+#[test]
+fn hits_are_bitwise_identical_c128() {
+    hit_matches_cold_bitwise::<c64>(107, None);
+    hit_matches_cold_bitwise::<c64>(108, Some((2, 2)));
+}
+
+#[test]
+fn syevd_bypasses_the_cache() {
+    let node = SimNode::new_uniform(NDEV, 1 << 24);
+    let svc = cached_service(&node, None);
+    let a = Matrix::<f64>::spd_random(24, 55);
+    let _ = svc.submit_syevd(a).unwrap().wait();
+    assert_eq!(svc.cached_factors(), 0, "syevd shares no potrf prefix");
+    let m = node.metrics().snapshot();
+    assert_eq!(m.cache_hits + m.cache_misses, 0, "syevd must not even probe");
+    svc.drain();
+}
+
+// ---------------------------------------------------------------------------
+// Fused DAGs, 4 dtypes (grid pinned so cold references share the layout)
+// ---------------------------------------------------------------------------
+
+fn fused_dag_matches_cold<S: Scalar>(seed: u64) {
+    let node = SimNode::new_uniform(NDEV, 1 << 24);
+    let svc = cached_service(&node, Some((2, 2)));
+    let n = 24;
+    let a = Matrix::<S>::spd_random(n, seed);
+    let b = Matrix::<S>::random(n, 3, seed + 5);
+    let handles = svc
+        .submit_dag(SolveDag::new(a.clone()).factor().solve(b.clone()).inverse())
+        .unwrap();
+    assert_eq!(handles.len(), 3, "one handle per stage");
+    let mut fused = Vec::new();
+    for h in handles {
+        let (x, s) = h.wait();
+        assert_eq!(s.fused_stages, 3, "every stage publishes the fused stage count");
+        fused.push(x);
+    }
+    // Cold references: three separate submits on a fresh uncached
+    // service with the same pinned grid.
+    let node2 = SimNode::new_uniform(NDEV, 1 << 24);
+    let mut cfg = SmallConfig::with_tile(TILE);
+    cfg.grid = Some((2, 2));
+    let svc2 = SolveService::with_small_config(node2, 2, cfg);
+    let (l, _) = svc2.submit_dist(DistRoutine::Potrf, a.clone(), None).unwrap().wait();
+    let (x, _) = svc2.submit_dist(DistRoutine::Potrs, a.clone(), Some(b.clone())).unwrap().wait();
+    let (inv, _) = svc2.submit_dist(DistRoutine::Potri, a.clone(), None).unwrap().wait();
+    assert_eq!(fused[0].as_slice(), l.as_slice(), "fused factor diverges from cold");
+    assert_eq!(fused[1].as_slice(), x.as_slice(), "fused solve diverges from cold");
+    assert_eq!(fused[2].as_slice(), inv.as_slice(), "fused inverse diverges from cold");
+    let m = node.metrics().snapshot();
+    assert!(m.dag_fused_stages >= 2, "fusion must be visible in metrics");
+    svc.drain();
+    svc2.drain();
+}
+
+#[test]
+fn fused_dag_matches_cold_f32() {
+    fused_dag_matches_cold::<f32>(201);
+}
+
+#[test]
+fn fused_dag_matches_cold_f64() {
+    fused_dag_matches_cold::<f64>(202);
+}
+
+#[test]
+fn fused_dag_matches_cold_c64() {
+    fused_dag_matches_cold::<c32>(203);
+}
+
+#[test]
+fn fused_dag_matches_cold_c128() {
+    fused_dag_matches_cold::<c64>(204);
+}
+
+// ---------------------------------------------------------------------------
+// Shared admission budget
+// ---------------------------------------------------------------------------
+
+#[test]
+fn resident_factors_share_the_admission_budget() {
+    // VRAM small enough that ten resident factors cannot coexist with
+    // in-flight solves: residency must yield (evictions), and the
+    // per-device accountant must never pass capacity.
+    let cap = 1 << 14;
+    let node = SimNode::new_uniform(NDEV, cap);
+    let svc = cached_service(&node, None);
+    let n = 32;
+    let mats: Vec<Matrix<f64>> =
+        (0..10).map(|i| Matrix::<f64>::spd_random(n, 200 + i as u64)).collect();
+    let mut handles = Vec::new();
+    for round in 0..3u64 {
+        for (i, a) in mats.iter().enumerate() {
+            let b = Matrix::<f64>::random(n, 1, 300 + round * 10 + i as u64);
+            handles.push(svc.submit_dist(DistRoutine::Potrs, a.clone(), Some(b)).unwrap());
+        }
+    }
+    for h in handles {
+        h.wait_result().expect("repeat traffic under pressure must not fail");
+    }
+    svc.drain();
+    for (d, peak) in svc.peak_reserved().iter().enumerate() {
+        assert!(*peak <= cap, "device {d} over-admitted: {peak} > {cap}");
+    }
+    let m = node.metrics().snapshot();
+    assert!(m.cache_evictions > 0, "ten factors cannot all stay resident in {cap} B");
+    // What stays reserved after the queue drains is exactly the
+    // resident factors; evicting them all returns the accountant to 0.
+    assert_eq!(svc.reserved().iter().sum::<usize>(), svc.cached_factor_bytes());
+    svc.evict_cached_factors();
+    assert_eq!(svc.reserved(), vec![0; NDEV], "eviction must release every resident byte");
+    assert_eq!(svc.cached_factors(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// Eviction order
+// ---------------------------------------------------------------------------
+
+#[test]
+fn eviction_order_follows_recompute_times_reuse() {
+    let kind = LayoutKind::BlockCyclic(BlockCyclic1D::new(64, 16, 4).unwrap());
+    let key = |content: u64| FactorKey { content, dtype: DType::F64, n: 64, tile: 16, grid: (1, 4) };
+    let mut cache: FactorCache<u64> = FactorCache::new();
+    // Recompute costs 100 / 10 / 40 ns.
+    assert!(cache.insert(key(1), 1, kind, vec![8; 4], 100).is_none());
+    assert!(cache.insert(key(2), 2, kind, vec![8; 4], 10).is_none());
+    assert!(cache.insert(key(3), 3, kind, vec![8; 4], 40).is_none());
+    // Reuse pumps entry 2's score past entry 3: 10·(4+1) = 50 > 40.
+    for _ in 0..4 {
+        assert!(cache.probe(&key(2)).is_some());
+        assert!(cache.unpin(&key(2)).is_none());
+    }
+    let order: Vec<u64> =
+        std::iter::from_fn(|| cache.pop_victim().map(|(_, e)| e.payload)).collect();
+    assert_eq!(order, vec![3, 2, 1], "victims must leave lowest recompute×reuse first");
+}
+
+// ---------------------------------------------------------------------------
+// MPMD: invalidation under failure, zero requests lost
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mpmd_kill_invalidates_residency_and_loses_nothing() {
+    let node = SimNode::new_uniform(NDEV, 1 << 26);
+    let mut cfg = MpmdConfig::with_tile(TILE);
+    cfg.factor_cache = true;
+    let svc = MpmdService::with_config(node.clone(), cfg);
+    let n = 64;
+    let a = Matrix::<f64>::spd_random(n, 91);
+    let xt = Matrix::<f64>::random(n, 1, 92);
+    let b = a.matmul(&xt);
+    let (cold, s0) = svc.submit_potrs(a.clone(), b.clone()).unwrap().wait();
+    assert!(!s0.cache_hit);
+    assert_eq!(svc.cached_factors(), 1, "the mpmd cold factor must become resident");
+    let (hot, s1) = svc.submit_potrs(a.clone(), b.clone()).unwrap().wait();
+    assert!(s1.cache_hit, "mpmd repeat solve must hit");
+    assert_eq!(cold.as_slice(), hot.as_slice(), "mpmd cached solve diverges from cold");
+    // A burst of repeats in flight when a participant dies: residency
+    // dies with the worker, every request still completes on the
+    // survivors.
+    let handles: Vec<_> =
+        (0..6).map(|_| svc.submit_potrs(a.clone(), b.clone()).unwrap()).collect();
+    svc.kill_worker(2).unwrap();
+    assert_eq!(svc.cached_factors(), 0, "kill must drop factors staged on the dead worker");
+    for h in handles {
+        let (x, _) = h.wait();
+        assert!(x.rel_err(&xt) < tol_for::<f64>(n) * 10.0, "request lost/corrupted by the kill");
+    }
+    // Post-kill traffic keeps flowing (and may re-cache on the shrunk
+    // live set).
+    let (x2, _) = svc.submit_potrs(a.clone(), b.clone()).unwrap().wait();
+    assert!(x2.rel_err(&xt) < tol_for::<f64>(n) * 10.0);
+    svc.drain();
+    drop(svc);
+    for rep in node.memory_reports() {
+        assert_eq!(rep.used, 0, "cached shards must be freed at shutdown");
+    }
+}
+
+#[test]
+fn mpmd_straggler_injection_drops_residency() {
+    let node = SimNode::new_uniform(NDEV, 1 << 26);
+    let mut cfg = MpmdConfig::with_tile(TILE);
+    cfg.factor_cache = true;
+    let svc = MpmdService::with_config(node, cfg);
+    let a = Matrix::<f64>::spd_random(32, 7);
+    let b = Matrix::<f64>::random(32, 1, 8);
+    let _ = svc.submit_potrs(a.clone(), b.clone()).unwrap().wait();
+    assert_eq!(svc.cached_factors(), 1);
+    svc.inject_straggler(1, 4.0).unwrap();
+    assert_eq!(svc.cached_factors(), 0, "a degraded view invalidates resident factors");
+    let (_, s) = svc.submit_potrs(a, b).unwrap().wait();
+    assert!(!s.cache_hit, "the degraded repeat must refactor cold");
+    svc.drain();
+}
