@@ -31,11 +31,20 @@
 #                      >=10x throughput bar), the fused solve DAG vs
 #                      separate submits, and a reuse-correlated fleet
 #                      trace (CI-friendly, part of `make check`)
+#   make bench-obs     observability bench in smoke/test mode: tracing
+#                      on vs off must be bitwise on the sim clock with
+#                      bounded host overhead, and drift correction must
+#                      tighten the lookahead queue estimates (part of
+#                      `make check`)
+#   make trace         e2e driver + MPMD kill drill with JAXMG_TRACE
+#                      set: exports validated Chrome-trace JSON,
+#                      Prometheus text, and JSONL decision logs under
+#                      trace_out/
 
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test check clippy fmt python-tests test-xla bench bench-redist bench-batch bench-serve bench-grid bench-traffic bench-cache e2e artifacts clean
+.PHONY: build test check clippy fmt python-tests test-xla bench bench-redist bench-batch bench-serve bench-grid bench-traffic bench-cache bench-obs trace e2e artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -58,7 +67,7 @@ python-tests:
 		echo "skipping python tests (pytest/jax/hypothesis not importable)"; \
 	fi
 
-check: build test clippy fmt python-tests bench-serve bench-grid bench-traffic bench-cache
+check: build test clippy fmt python-tests bench-serve bench-grid bench-traffic bench-cache bench-obs
 
 # Artifact-gated XLA integration tests (fail with a pointed message
 # when artifacts are absent — that failure mode is itself under test).
@@ -113,8 +122,24 @@ bench-traffic:
 bench-cache:
 	CACHE_BENCH_SMOKE=1 $(CARGO) bench --bench cache
 
+# The observability bench is the tracing acceptance harness: an
+# identical fleet trace with the tracer off and on must land on the
+# same simulated nanosecond (tracing is passive), and drift-corrected
+# queue estimates must beat the raw Predictor figures on a pipelined
+# repeat-solve stream.
+bench-obs:
+	OBS_BENCH_SMOKE=1 $(CARGO) bench --bench obs
+
 e2e:
 	$(CARGO) run --release --example e2e_driver
+
+# Traced runs: the e2e driver and the MPMD kill drill export validated
+# Chrome-trace JSON (load in chrome://tracing or ui.perfetto.dev),
+# Prometheus-style metrics text, and a JSONL scheduler decision log.
+trace:
+	JAXMG_TRACE=trace_out $(CARGO) run --release --example e2e_driver
+	JAXMG_TRACE=trace_out $(CARGO) run --release --example mpmd_serve
+	@ls -l trace_out
 
 clean:
 	$(CARGO) clean

@@ -1,0 +1,146 @@
+//! Observability overhead + drift-correction payoff.
+//!
+//! Two sections, both on integer-ns simulated clocks:
+//!
+//! 1. **Passivity** — the identical SPMD fleet trace replayed through
+//!    a tracer-off and a tracer-on service. The simulated makespans
+//!    must be **bitwise equal** (the tracer charges zero cost-model
+//!    nanoseconds) and the tracer-on wall time must stay within a
+//!    generous constant factor of the tracer-off wall time (bounded
+//!    host overhead — span records are plain pushes under a mutex).
+//! 2. **Drift correction** — a repeat-`potrs` stream through a
+//!    lookahead-pipelined MPMD front, once with raw Predictor queue
+//!    estimates and once with [`MpmdConfig::drift_correction`] on.
+//!    The barrier-modeled estimate systematically overshoots the
+//!    pipelined execution; after `min_samples` the corrected estimates
+//!    lock onto the observed makespan, so the accumulated
+//!    `|observed - used-estimate|` error must shrink strictly.
+//!
+//! `OBS_BENCH_SMOKE=1` shrinks the trace and repeat counts for
+//! `make bench-obs` (CI test mode); every asserted invariant is
+//! identical. Results are recorded in EXPERIMENTS.md.
+
+use jaxmg::coordinator::{SmallConfig, SolveService};
+use jaxmg::linalg::Matrix;
+use jaxmg::prelude::*;
+use jaxmg::solver::PipelineConfig;
+use jaxmg::workload::{submit_spec, OpenLoop, Population};
+use std::time::Instant;
+
+const NDEV: usize = 4;
+const TILE: usize = 16;
+const SEED: u64 = 2027;
+
+fn main() {
+    let smoke = std::env::var_os("OBS_BENCH_SMOKE").is_some();
+
+    // ---- 1. passivity: tracing on vs off, bitwise ---------------------------
+    let count = if smoke { 32 } else { 128 };
+    let trace = OpenLoop::new(
+        ArrivalProcess::Poisson { rate_hz: 50.0 },
+        Population::gp_vmc_mix_reuse(4, 0.10),
+        SEED,
+    )
+    .trace(count);
+
+    let mut sim_ns = [0u64; 2];
+    let mut wall_s = [0f64; 2];
+    let mut span_count = [0usize; 2];
+    for (i, tracing) in [false, true].into_iter().enumerate() {
+        let node = SimNode::new_uniform(NDEV, 1 << 28);
+        if tracing {
+            node.tracer().enable();
+        }
+        let svc = SolveService::with_small_config(node.clone(), 1, SmallConfig::with_tile(TILE));
+        let wall = Instant::now();
+        // Replay the identical arrivals back-to-back — no clock pacing.
+        let pending: Vec<_> = trace
+            .iter()
+            .map(|arr| submit_spec(&svc, &arr.spec, node.sim_time_ns()).expect("trace submit"))
+            .collect();
+        svc.flush_small();
+        for p in pending {
+            p.wait().expect("trace request failed");
+        }
+        svc.drain();
+        wall_s[i] = wall.elapsed().as_secs_f64();
+        sim_ns[i] = node.sim_time_ns();
+        span_count[i] = node.tracer().spans().len();
+    }
+    println!(
+        "== passivity: {count} arrivals of gp_vmc_mix_reuse(hot=4, churn=0.10) ==\n\n\
+         tracer off {:>10.3} ms sim, {:>7.1} ms wall, {:>6} spans\n\
+         tracer on  {:>10.3} ms sim, {:>7.1} ms wall, {:>6} spans",
+        sim_ns[0] as f64 * 1e-6,
+        wall_s[0] * 1e3,
+        span_count[0],
+        sim_ns[1] as f64 * 1e-6,
+        wall_s[1] * 1e3,
+        span_count[1],
+    );
+    assert_eq!(
+        sim_ns[0], sim_ns[1],
+        "tracing must charge zero cost-model ns — makespans diverged"
+    );
+    assert_eq!(span_count[0], 0, "a disabled tracer must record nothing");
+    assert!(span_count[1] > 0, "an enabled tracer must record spans");
+    assert!(
+        wall_s[1] < wall_s[0] * 20.0 + 0.25,
+        "tracing host overhead out of bounds: {:.3}s on vs {:.3}s off",
+        wall_s[1],
+        wall_s[0]
+    );
+
+    // ---- 2. drift correction on a lookahead reuse stream --------------------
+    let n = if smoke { 128 } else { 256 };
+    let reps = if smoke { 8 } else { 16 };
+    let a = Matrix::<f64>::spd_random(n, SEED + 3);
+    let b = Matrix::<f64>::random(n, 1, SEED + 5);
+
+    // (total |obs - est_used| ns, total |obs - est_model| ns, samples)
+    let run_arm = |correction: bool| -> (u128, u128, u64) {
+        let node = SimNode::new_uniform(NDEV, 1 << 28);
+        let mut cfg = MpmdConfig::with_tile(32);
+        cfg.pipeline = PipelineConfig::lookahead(2);
+        cfg.drift_correction = correction;
+        let svc = MpmdService::with_config(node.clone(), cfg);
+        svc.tracer().enable();
+        // Serial submit -> wait: every solve re-plans (no factor cache),
+        // so each repeat contributes one drift sample for the same
+        // (routine, dtype, n, grid) key.
+        for _ in 0..reps {
+            let _ = svc.submit_potrs(a.clone(), b.clone()).expect("potrs").wait();
+        }
+        svc.drain();
+        let d = svc.tracer().drift();
+        let samples: u64 = d.stats().iter().map(|(_, st)| st.samples).sum();
+        (d.total_abs_err_used(), d.total_abs_err_model(), samples)
+    };
+
+    let (err_off, model_off, samples_off) = run_arm(false);
+    let (err_on, model_on, samples_on) = run_arm(true);
+    println!(
+        "\n== drift correction: {reps}x lookahead potrs at n={n} ==\n\n\
+         correction off: sum|obs-est| {:>12} ns over {samples_off} samples\n\
+         correction on:  sum|obs-est| {:>12} ns over {samples_on} samples \
+         (model error unchanged: {})",
+        err_off,
+        err_on,
+        model_on == model_off,
+    );
+    assert_eq!(samples_off, samples_on, "both arms must record the same sample count");
+    assert_eq!(
+        model_off, model_on,
+        "correction must not touch the raw model-drift accounting"
+    );
+    assert!(
+        err_off > 0,
+        "the barrier-modeled estimate must drift on a pipelined schedule"
+    );
+    assert!(
+        err_on < err_off,
+        "drift correction must tighten the queue estimates: {err_on} !< {err_off}"
+    );
+
+    println!("\nobs bench OK");
+}

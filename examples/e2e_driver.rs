@@ -287,6 +287,64 @@ fn main() -> Result<()> {
         );
         n *= 4;
     }
+    // ---- optional: end-to-end trace export (JAXMG_TRACE=<dir>) --------
+    // `make trace` runs this with tracing on: an open-loop mixed
+    // workload on the SPMD front with every span/decision recorded,
+    // exported as Chrome-trace JSON (chrome://tracing / Perfetto), a
+    // Prometheus text exposition, and the decision log as JSONL — all
+    // validated before they land on disk. See OBSERVABILITY.md.
+    if let Ok(dir) = std::env::var("JAXMG_TRACE") {
+        use jaxmg::coordinator::SloClass;
+        use jaxmg::obs::{
+            chrome_trace_json, decisions_jsonl, prometheus_text, validate_chrome_json,
+        };
+        use jaxmg::workload::{ArrivalProcess, OpenLoop, Population};
+        println!("\n== trace export: open-loop gp/vmc mix, tracer enabled ==");
+        let node = SimNode::new_uniform(4, 1 << 30);
+        let svc = SolveService::new(node.clone(), 2);
+        node.tracer().enable();
+        let gen = OpenLoop::new(
+            ArrivalProcess::Poisson { rate_hz: 50_000.0 },
+            Population::gp_vmc_mix(),
+            31,
+        );
+        let pending = gen.drive(&node, &svc, 24)?;
+        svc.flush_small();
+        for p in pending {
+            let _ = p.wait();
+        }
+        svc.drain();
+        let tracer = node.tracer();
+        let spans = tracer.spans();
+        let json = chrome_trace_json(&spans);
+        let events = validate_chrome_json(&json).expect("exported chrome trace must validate");
+        let hists: Vec<(String, Vec<(u64, u64)>)> =
+            [SloClass::Interactive, SloClass::Standard, SloClass::Batch]
+                .iter()
+                .map(|&c| (c.name().to_string(), node.metrics().class_histogram(c)))
+                .collect();
+        let prom = prometheus_text(&node.metrics().snapshot(), &hists);
+        let decisions = tracer.decisions();
+        let jsonl = decisions_jsonl(&decisions);
+        std::fs::create_dir_all(&dir).expect("create trace output dir");
+        let dir = std::path::Path::new(&dir);
+        std::fs::write(dir.join("e2e_trace.json"), &json).expect("write chrome trace");
+        std::fs::write(dir.join("e2e_metrics.prom"), &prom).expect("write prometheus text");
+        std::fs::write(dir.join("e2e_decisions.jsonl"), &jsonl).expect("write decision log");
+        println!(
+            "wrote {} span events, {} decisions, drift keys: {} -> {}",
+            events,
+            decisions.len(),
+            tracer.drift().stats().len(),
+            dir.display()
+        );
+        assert!(events > 0, "a traced workload must produce spans");
+        assert!(
+            decisions.iter().any(|d| d.kind == "arrival"),
+            "the open-loop driver must log arrivals"
+        );
+    }
+
     println!("\nend-to-end driver complete.");
     Ok(())
 }

@@ -41,6 +41,15 @@ fn main() {
 
     let mpmd_node = SimNode::new_uniform(NDEV, 1 << 30);
     let svc = MpmdService::with_config(mpmd_node.clone(), MpmdConfig::with_tile(TILE));
+    // With JAXMG_TRACE=<dir> the whole demo — including the kill drill
+    // below — records request spans and scheduler decisions, exported
+    // at the end as one downloadable trace artifact. The tracer is
+    // passive: every number this demo prints (and the SPMD-vs-MPMD
+    // bitwise assert) is identical with tracing on or off.
+    let trace_dir = std::env::var("JAXMG_TRACE").ok();
+    if trace_dir.is_some() {
+        svc.tracer().enable();
+    }
     let (mpmd_x, stats) = svc.submit_potrs(a.clone(), b.clone()).unwrap().wait();
     assert_eq!(
         spmd_x.as_slice(),
@@ -115,6 +124,34 @@ fn main() {
     println!("peak worker mailbox depth: {}", m.mpmd_peak_worker_queue);
     assert_eq!(m.ipc_open_balance(), 0, "rank 0 leaked ipc mappings");
     assert_eq!(svc.reserved(), vec![0; NDEV], "reservations must drain to zero");
+
+    // ---- trace artifact: the kill drill as one downloadable trace ----
+    if let Some(dir) = &trace_dir {
+        use jaxmg::obs::{chrome_trace_json, decisions_jsonl, validate_chrome_json};
+        let tracer = svc.tracer();
+        let spans = tracer.spans();
+        let json = chrome_trace_json(&spans);
+        let events = validate_chrome_json(&json).expect("kill-drill trace must validate");
+        let decisions = tracer.decisions();
+        let jsonl = decisions_jsonl(&decisions);
+        std::fs::create_dir_all(dir).expect("create trace output dir");
+        let dir = std::path::Path::new(dir);
+        std::fs::write(dir.join("mpmd_kill_drill.json"), &json).expect("write chrome trace");
+        std::fs::write(dir.join("mpmd_kill_drill_decisions.jsonl"), &jsonl)
+            .expect("write decision log");
+        assert!(
+            decisions.iter().any(|d| d.kind == "kill"),
+            "the kill drill must log its kill decision"
+        );
+        let requeues = decisions.iter().filter(|d| d.kind == "requeue").count();
+        println!(
+            "trace artifact: {} span events, {} decisions ({} requeue) -> {}",
+            events,
+            decisions.len(),
+            requeues,
+            dir.display()
+        );
+    }
 
     // ---- the overhead ladder -----------------------------------------
     println!("\n== Predictor::mpmd_overhead (per distributed solve) ==\n");

@@ -164,6 +164,21 @@
 //! mode only changes who stages shards (MPMD workers build and
 //! IPC-export 1D panels or 2D tile shards with the same
 //! `tile::build_panel` path) and how pointers reach the single caller.
+//!
+//! ## Observability
+//!
+//! Both fronts are instrumented end to end by [`crate::obs`]: every
+//! submission mints a [`crate::obs::TraceId`], spans cover queue wait /
+//! cache probes / pipeline stages / collectives on the integer-ns sim
+//! clock, scheduler and cache decisions land in a JSONL decision log,
+//! and a [`crate::obs::DriftMonitor`] compares
+//! [`Predictor`](crate::costmodel::Predictor) estimates against
+//! observed makespans per (routine, dtype, n, grid) — feeding back as
+//! an [`SmallConfig::drift_correction`] /
+//! `MpmdConfig::drift_correction` rescaling of queue estimates when
+//! enabled. The tracer is purely passive (off by default, and charging
+//! no simulated time when on). See `OBSERVABILITY.md` at the repo root
+//! for the full trace model and export formats.
 
 mod admit;
 mod cache;

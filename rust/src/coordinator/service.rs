@@ -80,6 +80,7 @@ use crate::device::{DevPtr, SimNode};
 use crate::error::{Error, Result};
 use crate::layout::TileDim;
 use crate::linalg::Matrix;
+use crate::obs::{DriftKey, SpanId, TraceId};
 use crate::scalar::{DType, Scalar};
 use crate::solver::{potrf_dist, potri_dist, potrs_dist, syevd_dist, Ctx, SolverBackend};
 use crate::tile::{DistMatrix, LayoutKind};
@@ -461,8 +462,18 @@ impl ServiceInner {
     fn evict_one(&self) -> bool {
         let victim = self.cache.lock().unwrap().pop_victim();
         let Some((_, e)) = victim else { return false };
+        let bytes = e.resident_bytes();
         self.free_entry(&e);
         self.node.metrics().add_cache_eviction();
+        let tr = self.node.tracer();
+        if tr.enabled() {
+            tr.decision(
+                TraceId(0),
+                self.sim_now_ns(),
+                "evict",
+                format!("factor evicted, {bytes} B released"),
+            );
+        }
         true
     }
 
@@ -493,6 +504,20 @@ impl Drop for PinGuard {
     fn drop(&mut self) {
         self.inner.unpin_factor(&self.key);
     }
+}
+
+/// Predictor-drift probe riding a planned distributed submission: when
+/// the job finishes, its observed makespan (cost-model ns) is recorded
+/// against the plan's estimates in the node tracer's
+/// [`DriftMonitor`](crate::obs::DriftMonitor) under this key. Cache
+/// hits carry no probe — a hit skips the modeled scatter+potrf prefix,
+/// so its makespan would poison the per-key statistics.
+struct DriftProbe {
+    key: DriftKey,
+    /// The raw cost-model makespan (no cache or drift adjustments).
+    est_model_ns: u64,
+    /// The estimate actually queued (after drift correction, if on).
+    est_used_ns: u64,
 }
 
 /// A chain of Cholesky-family routines against **one** matrix `A`,
@@ -579,6 +604,18 @@ fn try_run_interactive(inner: &Arc<ServiceInner>) {
     let Some((ticket, q)) = popped else { return };
     let QueuedSolve { footprint, job } = q;
     inner.node.metrics().note_preemption();
+    let tr = inner.node.tracer();
+    if tr.enabled() {
+        tr.decision(
+            TraceId(0),
+            inner.sim_now_ns(),
+            "preempt",
+            format!(
+                "interactive solve admitted at a panel boundary, tenant {}",
+                ticket.slo.tenant
+            ),
+        );
+    }
     let queue_wait_ns = inner.sim_now_ns().saturating_sub(ticket.enq_ns);
     let publish = job(ticket, queue_wait_ns);
     {
@@ -621,13 +658,30 @@ pub struct SmallConfig {
     /// [`SolveService::reserved`], which cold-only callers may not
     /// expect.
     pub factor_cache: bool,
+    /// Feed observed predictor drift back into admission estimates:
+    /// once the node tracer's [`DriftMonitor`] holds enough samples
+    /// for a (routine, dtype, n, grid) key, planned makespans are
+    /// rescaled by the observed/predicted ratio before entering the
+    /// scheduler queue. Barrier-scheduled runs have zero drift by
+    /// construction (the plan *is* the model), so this is off by
+    /// default and changes nothing until drift actually accumulates.
+    ///
+    /// [`DriftMonitor`]: crate::obs::DriftMonitor
+    pub drift_correction: bool,
 }
 
 impl SmallConfig {
     /// Defaults anchored at tile size `tile` (`small_dim = 4·tile`).
     pub fn with_tile(tile: usize) -> Self {
         let policy = BatchPolicy { small_dim: 4 * tile, ..BatchPolicy::default() };
-        SmallConfig { tile, policy, model: GpuCostModel::h200(), grid: None, factor_cache: false }
+        SmallConfig {
+            tile,
+            policy,
+            model: GpuCostModel::h200(),
+            grid: None,
+            factor_cache: false,
+            drift_correction: false,
+        }
     }
 }
 
@@ -859,14 +913,18 @@ impl SolveService {
         slo: Slo,
         f: impl FnOnce() -> T + Send + 'static,
     ) -> Result<ServiceHandle<T>> {
-        self.submit_with_grid(footprint, (1, 1), slo, 0, false, f)
+        let (trace, root) = self.inner.node.tracer().new_trace();
+        self.submit_with_grid(footprint, (1, 1), slo, 0, false, "opaque", trace, root, None, f)
     }
 
     /// [`SolveService::submit_slo`] with an explicit process-grid stamp
     /// and makespan estimate — the planned-distributed paths pass their
-    /// selector's `(P, Q)` and [`DistPlan::est_ns`] through here.
+    /// selector's `(P, Q)` and [`DistPlan::est_ns`] through here —
+    /// plus the request's pre-minted trace identity and an optional
+    /// predictor-drift probe (see [`crate::obs`]).
     ///
     /// [`DistPlan::est_ns`]: super::admit::DistPlan::est_ns
+    #[allow(clippy::too_many_arguments)]
     fn submit_with_grid<T: Send + 'static>(
         &self,
         footprint: Footprint,
@@ -874,18 +932,54 @@ impl SolveService {
         slo: Slo,
         est_ns: u64,
         cache_hit: bool,
+        req: &'static str,
+        trace: TraceId,
+        root: SpanId,
+        drift: Option<DriftProbe>,
         f: impl FnOnce() -> T + Send + 'static,
     ) -> Result<ServiceHandle<T>> {
         let (handle, slot2) = handle_pair::<T>();
         let inner = self.inner.clone();
         let job: AdmittedJob = Box::new(move |ticket, queue_wait_ns| {
+            let tracer = inner.node.tracer().clone();
             let t0_ns = inner.sim_now_ns();
+            if trace.0 != 0 {
+                tracer.span(
+                    trace,
+                    root,
+                    "queue-wait",
+                    "sched",
+                    0,
+                    "requests",
+                    ticket.enq_ns,
+                    ticket.enq_ns.saturating_add(queue_wait_ns),
+                    0,
+                    0,
+                );
+            }
             // A panicking solve must not kill the worker: the unwinding
             // is contained here so the reservation release in the worker
             // loop always runs, and the panic is re-raised on the waiter
             // (JoinHandle semantics).
             let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
-            let exec_ns = inner.sim_now_ns().saturating_sub(t0_ns);
+            let end_ns = inner.sim_now_ns();
+            let exec_ns = end_ns.saturating_sub(t0_ns);
+            if trace.0 != 0 {
+                tracer.span(trace, root, "exec", "exec", 0, "requests", t0_ns, end_ns, 0, 0);
+                tracer.close_root(
+                    trace,
+                    root,
+                    &format!("request:{req}"),
+                    0,
+                    ticket.enq_ns,
+                    end_ns,
+                    0,
+                    0,
+                );
+            }
+            if let Some(p) = drift {
+                tracer.drift().record(p.key, p.est_model_ns, p.est_used_ns, exec_ns);
+            }
             inner.note_completion(&ticket, queue_wait_ns, exec_ns);
             let stats = SolveStats {
                 queue_wait_ns,
@@ -906,6 +1000,18 @@ impl SolveService {
             publish
         });
         self.inner.enqueue_job(footprint, slo, est_ns, job)?;
+        let tr = self.inner.node.tracer();
+        if tr.enabled() && trace.0 != 0 {
+            tr.decision(
+                trace,
+                self.inner.sim_now_ns(),
+                "admit",
+                format!(
+                    "req={req} grid={}x{} est_ns={est_ns} cache_hit={cache_hit}",
+                    grid.0, grid.1
+                ),
+            );
+        }
         Ok(handle)
     }
 
@@ -984,6 +1090,7 @@ impl SolveService {
         let model = self.cfg.model.clone();
         let kind = plan.kind;
         let hook = self.preempt_hook(slo);
+        let (trace, root) = node.tracer().new_trace();
         // Factor-cache probe: a resident L for this exact A (content
         // hash) on this exact layout lets the solve skip the scatter
         // and the factorization — only the triangular tail runs, and
@@ -1004,80 +1111,125 @@ impl SolveService {
         let mut est_ns = plan.est_ns;
         let mut cached_ptrs: Option<Vec<DevPtr>> = None;
         if let Some((key, re_ns)) = cache_cfg {
+            let tr = self.inner.node.tracer();
             match self.inner.probe_factor(&key) {
                 Some((ptrs, _kind)) => {
                     self.inner.node.metrics().add_cache_hit();
                     est_ns = est_ns.saturating_sub(re_ns);
                     cached_ptrs = Some(ptrs);
+                    if tr.enabled() {
+                        tr.decision(
+                            trace,
+                            self.inner.sim_now_ns(),
+                            "cache-hit",
+                            format!("resident factor skips {re_ns} ns of scatter+potrf"),
+                        );
+                    }
                 }
-                None => self.inner.node.metrics().add_cache_miss(),
+                None => {
+                    self.inner.node.metrics().add_cache_miss();
+                    if tr.enabled() {
+                        tr.decision(
+                            trace,
+                            self.inner.sim_now_ns(),
+                            "cache-miss",
+                            format!("n={n} grid={}x{}", plan.grid.0, plan.grid.1),
+                        );
+                    }
+                }
             }
         }
         let cache_hit = cached_ptrs.is_some();
+        let tracer = self.inner.node.tracer();
+        let drift_key = DriftKey {
+            routine: routine.name().to_string(),
+            dtype: S::DTYPE.name().to_string(),
+            n: n as u64,
+            grid: (plan.grid.0 as u32, plan.grid.1 as u32),
+        };
+        if self.cfg.drift_correction && !cache_hit {
+            est_ns = tracer.drift().corrected_est(&drift_key, est_ns);
+        }
+        let drift = if !cache_hit && (tracer.enabled() || self.cfg.drift_correction) {
+            Some(DriftProbe { key: drift_key, est_model_ns: plan.est_ns, est_used_ns: est_ns })
+        } else {
+            None
+        };
         let inner = self.inner.clone();
-        self.submit_with_grid(plan.footprint, plan.grid, slo, est_ns, cache_hit, move || -> Matrix<S> {
-            let run = || -> Result<Matrix<S>> {
-                let backend = SolverBackend::<S>::Native;
-                let mut ctx = Ctx::new(&node, &model, &backend);
-                if let Some(h) = hook {
-                    ctx = ctx.with_preempt_hook(h);
-                }
-                if let Some(ptrs) = cached_ptrs {
-                    // HIT: view the resident shards (the guard keeps
-                    // the entry pinned — and tears it down if it was
-                    // invalidated mid-flight — on every exit path).
-                    let (key, _) = cache_cfg.expect("a hit implies the cache is on");
-                    let _guard = PinGuard { inner, key };
-                    let dm = DistMatrix::<S>::from_panels(&node, n, kind, ptrs)?;
+        self.submit_with_grid(
+            plan.footprint,
+            plan.grid,
+            slo,
+            est_ns,
+            cache_hit,
+            routine.name(),
+            trace,
+            root,
+            drift,
+            move || -> Matrix<S> {
+                let run = || -> Result<Matrix<S>> {
+                    let backend = SolverBackend::<S>::Native;
+                    let mut ctx = Ctx::new(&node, &model, &backend).with_trace(trace, root);
+                    if let Some(h) = hook {
+                        ctx = ctx.with_preempt_hook(h);
+                    }
+                    if let Some(ptrs) = cached_ptrs {
+                        // HIT: view the resident shards (the guard keeps
+                        // the entry pinned — and tears it down if it was
+                        // invalidated mid-flight — on every exit path).
+                        let (key, _) = cache_cfg.expect("a hit implies the cache is on");
+                        let _guard = PinGuard { inner, key };
+                        let dm = DistMatrix::<S>::from_panels(&node, n, kind, ptrs)?;
+                        let out = match routine {
+                            DistRoutine::Potrf => dm.gather(),
+                            DistRoutine::Potrs => {
+                                potrs_dist(&ctx, &dm, rhs.as_ref().expect("validated above"))
+                            }
+                            DistRoutine::Potri => {
+                                // potri destroys its input: run it on a
+                                // bitwise round-tripped copy so L stays
+                                // resident for the next hit.
+                                let l = dm.gather()?;
+                                let mut copy = DistMatrix::scatter(&node, &l, kind)?;
+                                potri_dist(&ctx, &mut copy)?;
+                                copy.gather()
+                            }
+                            DistRoutine::Syevd => unreachable!("rejected at submit"),
+                        };
+                        // Give the panels back to the cache un-freed.
+                        let _ = dm.into_panels();
+                        return out;
+                    }
+                    // COLD: bitwise the uncached route.
+                    let mut dm = DistMatrix::scatter(&node, &a, kind)?;
+                    potrf_dist(&ctx, &mut dm)?;
                     let out = match routine {
                         DistRoutine::Potrf => dm.gather(),
                         DistRoutine::Potrs => {
                             potrs_dist(&ctx, &dm, rhs.as_ref().expect("validated above"))
                         }
                         DistRoutine::Potri => {
-                            // potri destroys its input: run it on a
-                            // bitwise round-tripped copy so L stays
-                            // resident for the next hit.
-                            let l = dm.gather()?;
-                            let mut copy = DistMatrix::scatter(&node, &l, kind)?;
-                            potri_dist(&ctx, &mut copy)?;
-                            copy.gather()
+                            potri_dist(&ctx, &mut dm)?;
+                            dm.gather()
                         }
                         DistRoutine::Syevd => unreachable!("rejected at submit"),
-                    };
-                    // Give the panels back to the cache un-freed.
-                    let _ = dm.into_panels();
-                    return out;
+                    }?;
+                    // Seed the cache with the still-resident L. potri ran
+                    // in place and destroyed it — nothing to keep.
+                    if let Some((key, re_ns)) = cache_cfg {
+                        if routine != DistRoutine::Potri {
+                            inner.insert_factor(key, kind, dm.into_panels(), re_ns);
+                        }
+                    }
+                    Ok(out)
+                };
+                match run() {
+                    Ok(x) => x,
+                    // Surfaces on the waiter, like any panicking solve.
+                    Err(e) => panic!("distributed solve failed: {e}"),
                 }
-                // COLD: bitwise the uncached route.
-                let mut dm = DistMatrix::scatter(&node, &a, kind)?;
-                potrf_dist(&ctx, &mut dm)?;
-                let out = match routine {
-                    DistRoutine::Potrf => dm.gather(),
-                    DistRoutine::Potrs => {
-                        potrs_dist(&ctx, &dm, rhs.as_ref().expect("validated above"))
-                    }
-                    DistRoutine::Potri => {
-                        potri_dist(&ctx, &mut dm)?;
-                        dm.gather()
-                    }
-                    DistRoutine::Syevd => unreachable!("rejected at submit"),
-                }?;
-                // Seed the cache with the still-resident L. potri ran
-                // in place and destroyed it — nothing to keep.
-                if let Some((key, re_ns)) = cache_cfg {
-                    if routine != DistRoutine::Potri {
-                        inner.insert_factor(key, kind, dm.into_panels(), re_ns);
-                    }
-                }
-                Ok(out)
-            };
-            match run() {
-                Ok(x) => x,
-                // Surfaces on the waiter, like any panicking solve.
-                Err(e) => panic!("distributed solve failed: {e}"),
-            }
-        })
+            },
+        )
     }
 
     /// The panel-boundary preemption hook for a non-interactive solve
@@ -1126,21 +1278,49 @@ impl SolveService {
         let node = self.inner.node.clone();
         let model = self.cfg.model.clone();
         let kind = plan.kind;
+        let (trace, root) = node.tracer().new_trace();
+        let tracer = self.inner.node.tracer();
+        let drift_key = DriftKey {
+            routine: "syevd".to_string(),
+            dtype: S::DTYPE.name().to_string(),
+            n: n as u64,
+            grid: (plan.grid.0 as u32, plan.grid.1 as u32),
+        };
+        let mut est_ns = plan.est_ns;
+        if self.cfg.drift_correction {
+            est_ns = tracer.drift().corrected_est(&drift_key, est_ns);
+        }
+        let drift = if tracer.enabled() || self.cfg.drift_correction {
+            Some(DriftProbe { key: drift_key, est_model_ns: plan.est_ns, est_used_ns: est_ns })
+        } else {
+            None
+        };
         // syevd shares no potrf prefix with the Cholesky family, so it
         // bypasses the factor cache entirely.
-        self.submit_with_grid(plan.footprint, plan.grid, slo, plan.est_ns, false, move || -> (Vec<S::Real>, Matrix<S>) {
-            let run = || -> Result<(Vec<S::Real>, Matrix<S>)> {
-                let backend = SolverBackend::<S>::Native;
-                let ctx = Ctx::new(&node, &model, &backend);
-                let mut dm = DistMatrix::scatter(&node, &a, kind)?;
-                let vals = syevd_dist(&ctx, &mut dm)?;
-                Ok((vals, dm.gather()?))
-            };
-            match run() {
-                Ok(out) => out,
-                Err(e) => panic!("distributed syevd failed: {e}"),
-            }
-        })
+        self.submit_with_grid(
+            plan.footprint,
+            plan.grid,
+            slo,
+            est_ns,
+            false,
+            "syevd",
+            trace,
+            root,
+            drift,
+            move || -> (Vec<S::Real>, Matrix<S>) {
+                let run = || -> Result<(Vec<S::Real>, Matrix<S>)> {
+                    let backend = SolverBackend::<S>::Native;
+                    let ctx = Ctx::new(&node, &model, &backend).with_trace(trace, root);
+                    let mut dm = DistMatrix::scatter(&node, &a, kind)?;
+                    let vals = syevd_dist(&ctx, &mut dm)?;
+                    Ok((vals, dm.gather()?))
+                };
+                match run() {
+                    Ok(out) => out,
+                    Err(e) => panic!("distributed syevd failed: {e}"),
+                }
+            },
+        )
     }
 
     /// Submit a fused [`SolveDag`] under the default standard-class SLO.
@@ -1258,6 +1438,7 @@ impl SolveService {
             est_ns = est_ns.saturating_add(cost);
         }
         let footprint = Footprint::per_device(per_dev);
+        let (trace, root) = self.inner.node.tracer().new_trace();
         // Factor-cache probe, exactly as in `submit_dist_slo`: a hit
         // drops the shared prefix from the whole chain's estimate.
         let cache_cfg = if self.cfg.factor_cache {
@@ -1267,13 +1448,32 @@ impl SolveService {
         };
         let mut cached_ptrs: Option<Vec<DevPtr>> = None;
         if let Some((key, re)) = cache_cfg {
+            let tr = self.inner.node.tracer();
             match self.inner.probe_factor(&key) {
                 Some((ptrs, _kind)) => {
                     self.inner.node.metrics().add_cache_hit();
                     est_ns = est_ns.saturating_sub(re);
                     cached_ptrs = Some(ptrs);
+                    if tr.enabled() {
+                        tr.decision(
+                            trace,
+                            self.inner.sim_now_ns(),
+                            "cache-hit",
+                            format!("resident factor skips {re} ns of the fused chain"),
+                        );
+                    }
                 }
-                None => self.inner.node.metrics().add_cache_miss(),
+                None => {
+                    self.inner.node.metrics().add_cache_miss();
+                    if tr.enabled() {
+                        tr.decision(
+                            trace,
+                            self.inner.sim_now_ns(),
+                            "cache-miss",
+                            format!("n={n} grid={}x{}", grid.0, grid.1),
+                        );
+                    }
+                }
             }
         }
         let cache_hit = cached_ptrs.is_some();
@@ -1290,12 +1490,27 @@ impl SolveService {
         let model = self.cfg.model.clone();
         let hook = self.preempt_hook(slo);
         let inner = self.inner.clone();
+        let tracer = self.inner.node.tracer().clone();
         let job: AdmittedJob = Box::new(move |ticket, queue_wait_ns| {
             let t0_ns = inner.sim_now_ns();
+            if trace.0 != 0 {
+                tracer.span(
+                    trace,
+                    root,
+                    "queue-wait",
+                    "sched",
+                    0,
+                    "requests",
+                    ticket.enq_ns,
+                    ticket.enq_ns.saturating_add(queue_wait_ns),
+                    0,
+                    0,
+                );
+            }
             let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
                 || -> Result<Vec<Matrix<S>>> {
                     let backend = SolverBackend::<S>::Native;
-                    let mut ctx = Ctx::new(&node, &model, &backend);
+                    let mut ctx = Ctx::new(&node, &model, &backend).with_trace(trace, root);
                     if let Some(h) = hook {
                         ctx = ctx.with_preempt_hook(h);
                     }
@@ -1352,7 +1567,12 @@ impl SolveService {
                     Ok(results)
                 },
             ));
-            let exec_ns = inner.sim_now_ns().saturating_sub(t0_ns);
+            let end_ns = inner.sim_now_ns();
+            let exec_ns = end_ns.saturating_sub(t0_ns);
+            if trace.0 != 0 {
+                tracer.span(trace, root, "exec", "exec", 0, "requests", t0_ns, end_ns, 0, 0);
+                tracer.close_root(trace, root, "request:dag", 0, ticket.enq_ns, end_ns, 0, 0);
+            }
             inner.note_completion(&ticket, queue_wait_ns, exec_ns);
             if total > 1 {
                 inner.node.metrics().add_dag_fused_stages((total - 1) as u64);
@@ -1378,6 +1598,15 @@ impl SolveService {
             publish
         });
         self.inner.enqueue_job(footprint, slo, est_ns, job)?;
+        let tr = self.inner.node.tracer();
+        if tr.enabled() && trace.0 != 0 {
+            tr.decision(
+                trace,
+                self.inner.sim_now_ns(),
+                "admit",
+                format!("req=dag stages={total} est_ns={est_ns} cache_hit={cache_hit}"),
+            );
+        }
         Ok(handles)
     }
 
@@ -1778,12 +2007,31 @@ fn small_flusher<S: Scalar>(routine: SmallRoutine, model: GpuCostModel) -> Arc<S
         let total_wait: u64 = bucket.waits_ns.iter().sum();
         let waits = bucket.waits_ns.clone();
         let job_slots = slots.clone();
+        // The pod is one submission on the service queue: one trace
+        // covers the whole fused sweep (its members coalesced before
+        // admission, so they share the pod's span tree).
+        let (trace, root) = node.tracer().new_trace();
+        let tracer = node.tracer().clone();
         // An AdmittedJob rather than a plain submit closure: the
         // per-request publications ride the deferred PublishFn, so —
         // exactly like a non-batched solve — a resolved handle implies
         // the pod's reservation is already released.
         let job: AdmittedJob = Box::new(move |ticket, queue_wait_ns| {
             let t0_ns = svc_inner.sim_now_ns();
+            if trace.0 != 0 {
+                tracer.span(
+                    trace,
+                    root,
+                    "queue-wait",
+                    "sched",
+                    0,
+                    "requests",
+                    ticket.enq_ns,
+                    ticket.enq_ns.saturating_add(queue_wait_ns),
+                    0,
+                    0,
+                );
+            }
             let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 run_bucket::<S>(routine, &node, &model, &systems, &rhss, None)
             }));
@@ -1860,12 +2108,54 @@ fn small_flusher<S: Scalar>(routine: SmallRoutine, model: GpuCostModel) -> Arc<S
                     })
                 }
             };
-            let exec_ns = svc_inner.sim_now_ns().saturating_sub(t0_ns);
+            let end_ns = svc_inner.sim_now_ns();
+            let exec_ns = end_ns.saturating_sub(t0_ns);
+            if trace.0 != 0 {
+                tracer.span(trace, root, "exec", "exec", 0, "requests", t0_ns, end_ns, 0, 0);
+                tracer.close_root(
+                    trace,
+                    root,
+                    &format!("request:pod:{}", routine.name()),
+                    0,
+                    ticket.enq_ns,
+                    end_ns,
+                    0,
+                    0,
+                );
+            }
             svc_inner.note_completion(&ticket, queue_wait_ns, exec_ns);
             publish
         });
-        if let Err(e) = inner.enqueue_job(fp, pod_slo, 0, job) {
-            publish_failure(&slots, format!("pod admission failed: {e}"));
+        match inner.enqueue_job(fp, pod_slo, 0, job) {
+            Ok(()) => {
+                let tr = inner.node.tracer();
+                if tr.enabled() && trace.0 != 0 {
+                    tr.decision(
+                        trace,
+                        inner.sim_now_ns(),
+                        "admit",
+                        format!("req=pod:{} occupancy={occupancy}", routine.name()),
+                    );
+                }
+            }
+            Err(e) => {
+                // The job never ran: close the pod's root here so every
+                // minted trace still resolves to exactly one span tree.
+                if trace.0 != 0 {
+                    let now = inner.sim_now_ns();
+                    inner.node.tracer().close_root(
+                        trace,
+                        root,
+                        "request:pod-rejected",
+                        0,
+                        now,
+                        now,
+                        0,
+                        0,
+                    );
+                }
+                publish_failure(&slots, format!("pod admission failed: {e}"));
+            }
         }
     })
 }

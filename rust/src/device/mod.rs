@@ -32,6 +32,7 @@ pub use topology::{LinkKind, NodeTopology};
 
 use crate::error::{Error, Result};
 use crate::metrics::Metrics;
+use crate::obs::Tracer;
 use crate::scalar::Scalar;
 use std::sync::{Arc, Mutex};
 
@@ -80,6 +81,9 @@ struct NodeInner {
     gpus: Vec<Arc<SimGpu>>,
     topology: NodeTopology,
     metrics: Arc<Metrics>,
+    /// Request-scoped tracing sink (`crate::obs`); disabled by default
+    /// and purely passive — it never advances a simulated clock.
+    tracer: Arc<Tracer>,
 }
 
 impl SimNode {
@@ -100,7 +104,14 @@ impl SimNode {
         assert!(n > 0, "node needs at least one device");
         assert_eq!(topology.num_devices(), n, "topology size mismatch");
         let gpus = (0..n).map(|i| Arc::new(SimGpu::new(i, vram_bytes))).collect();
-        SimNode { inner: Arc::new(NodeInner { gpus, topology, metrics: Arc::new(Metrics::new()) }) }
+        SimNode {
+            inner: Arc::new(NodeInner {
+                gpus,
+                topology,
+                metrics: Arc::new(Metrics::new()),
+                tracer: Arc::new(Tracer::new()),
+            }),
+        }
     }
 
     /// A node view over a subset of this node's devices, **sharing**
@@ -126,7 +137,12 @@ impl SimNode {
         }
         let topology = self.inner.topology.subset(devices)?;
         Ok(SimNode {
-            inner: Arc::new(NodeInner { gpus, topology, metrics: self.inner.metrics.clone() }),
+            inner: Arc::new(NodeInner {
+                gpus,
+                topology,
+                metrics: self.inner.metrics.clone(),
+                tracer: self.inner.tracer.clone(),
+            }),
         })
     }
 
@@ -162,6 +178,12 @@ impl SimNode {
     /// Shared metrics sink.
     pub fn metrics(&self) -> &Arc<Metrics> {
         &self.inner.metrics
+    }
+
+    /// Shared tracing sink — subset views trace into their parent's
+    /// tracer, so degraded-mode retries land in the same trace store.
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.inner.tracer
     }
 
     /// Allocate `bytes` on device `dev`.
@@ -410,8 +432,9 @@ mod tests {
         sub.free(p).unwrap();
         assert_eq!(node.memory_reports()[1].used, 0);
         assert!(!sub.ptr_exists(p));
-        // Metrics sink is the parent's.
+        // Metrics sink is the parent's, and so is the tracer.
         assert_eq!(node.metrics().snapshot().allocs, 1);
+        assert!(Arc::ptr_eq(node.tracer(), sub.tracer()));
         // Invalid subsets are rejected.
         assert!(node.subset(&[]).is_err());
         assert!(node.subset(&[0, 7]).is_err());

@@ -49,6 +49,13 @@ impl Stream {
         self.horizon.load(Ordering::Relaxed) as f64 * 1e-9
     }
 
+    /// [`Stream::horizon`] on the exact integer-ns timeline — what the
+    /// tracing layer snapshots for span endpoints, so span bounds are
+    /// bitwise the cost model's charges with no float round-trip.
+    pub fn horizon_ns(&self) -> u64 {
+        self.horizon.load(Ordering::Relaxed)
+    }
+
     /// Issue `seconds` of work; returns its completion time.
     /// The work starts when the stream is free.
     pub fn issue(&self, seconds: f64) -> f64 {

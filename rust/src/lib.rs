@@ -49,6 +49,7 @@ pub mod ipc;
 pub mod layout;
 pub mod linalg;
 pub mod metrics;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod scalar;

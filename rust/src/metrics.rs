@@ -64,6 +64,24 @@ impl ClassLatency {
             b.store(0, Ordering::Relaxed);
         }
     }
+
+    /// Non-empty buckets as `(inclusive_upper_bound_ns, count)` pairs,
+    /// in increasing bound order (bucket 63's bound saturates at
+    /// `u64::MAX`). The shape Prometheus histogram exposition wants.
+    fn histogram(&self) -> Vec<(u64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(k, b)| {
+                let n = b.load(Ordering::Relaxed);
+                if n == 0 {
+                    return None;
+                }
+                let bound = if k >= 63 { u64::MAX } else { (1u64 << (k + 1)) - 1 };
+                Some((bound, n))
+            })
+            .collect()
+    }
 }
 
 /// Shared counters; cloned cheaply via `Arc` by every subsystem.
@@ -247,6 +265,14 @@ impl Metrics {
     /// the live histogram — `0` when the class has no completions.
     pub fn latency_percentile(&self, class: SloClass, q: f64) -> u64 {
         self.class_latency[class.index()].percentile(q)
+    }
+
+    /// One class's latency histogram as `(inclusive_upper_bound_ns,
+    /// count)` pairs over the non-empty log buckets — empty classes
+    /// yield an empty vec. Feeds the Prometheus text exposition in
+    /// `obs::export`.
+    pub fn class_histogram(&self, class: SloClass) -> Vec<(u64, u64)> {
+        self.class_latency[class.index()].histogram()
     }
 
     #[inline]
@@ -622,8 +648,10 @@ impl MetricsSnapshot {
             overlap_span_ns: self.overlap_span_ns - earlier.overlap_span_ns,
             batch_buckets: self.batch_buckets - earlier.batch_buckets,
             batch_solves: self.batch_solves - earlier.batch_solves,
-            // A high-water mark, not a flow: the later peak stands.
-            batch_peak_occupancy: self.batch_peak_occupancy,
+            // A high-water mark, not a flow: deltas take the max so a
+            // stale `earlier` (or cross-source compare) can't report a
+            // peak below either snapshot's.
+            batch_peak_occupancy: self.batch_peak_occupancy.max(earlier.batch_peak_occupancy),
             batch_coalesce_wait_ns: self.batch_coalesce_wait_ns - earlier.batch_coalesce_wait_ns,
             batch_makespan_ns: self.batch_makespan_ns - earlier.batch_makespan_ns,
             ipc_exports: self.ipc_exports - earlier.ipc_exports,
@@ -634,11 +662,13 @@ impl MetricsSnapshot {
             mpmd_routing_ns: self.mpmd_routing_ns - earlier.mpmd_routing_ns,
             mpmd_requeues: self.mpmd_requeues - earlier.mpmd_requeues,
             // A high-water mark, like batch_peak_occupancy.
-            mpmd_peak_worker_queue: self.mpmd_peak_worker_queue,
+            mpmd_peak_worker_queue: self
+                .mpmd_peak_worker_queue
+                .max(earlier.mpmd_peak_worker_queue),
             grid_solves: self.grid_solves - earlier.grid_solves,
-            // High-water marks: the later peaks stand.
-            grid_peak_p: self.grid_peak_p,
-            grid_peak_q: self.grid_peak_q,
+            // High-water marks: max of the two snapshots.
+            grid_peak_p: self.grid_peak_p.max(earlier.grid_peak_p),
+            grid_peak_q: self.grid_peak_q.max(earlier.grid_peak_q),
             grid_row_bytes: self.grid_row_bytes - earlier.grid_row_bytes,
             grid_col_bytes: self.grid_col_bytes - earlier.grid_col_bytes,
             cache_hits: self.cache_hits - earlier.cache_hits,
@@ -797,6 +827,84 @@ mod tests {
         assert_eq!(m.snapshot().service_preemptions, 1);
         m.reset();
         assert_eq!(m.snapshot(), MetricsSnapshot::default());
+    }
+
+    #[test]
+    fn delta_gauges_are_last_value_and_peaks_are_max() {
+        let m = Metrics::new();
+        m.add_batch_bucket(8, 0, 0);
+        m.note_worker_queue_depth(5);
+        m.note_grid_solve(4, 2);
+        m.add_cache_resident_bytes(1000);
+        let a = m.snapshot();
+        // Later phase: residency shrinks, no new peaks.
+        m.add_cache_resident_bytes(-400);
+        m.add_batch_bucket(3, 0, 0);
+        m.note_worker_queue_depth(2);
+        m.note_grid_solve(2, 2);
+        let b = m.snapshot();
+        let d = b.delta(&a);
+        // Gauge: last value, never `later - earlier` (which would be a
+        // bogus 600-1000 underflow-style number).
+        assert_eq!(d.cache_resident_bytes, 600);
+        // Peaks: max across both snapshots, even though the second
+        // phase alone never reached them.
+        assert_eq!(d.batch_peak_occupancy, 8);
+        assert_eq!(d.mpmd_peak_worker_queue, 5);
+        assert_eq!(d.grid_peak_p, 4);
+        assert_eq!(d.grid_peak_q, 2);
+        // Cross-source compare (earlier holds a peak the later metrics
+        // instance never saw) still reports the true high-water mark.
+        let fresh = Metrics::new();
+        fresh.note_grid_solve(2, 2);
+        let d2 = fresh.snapshot().delta(&a);
+        assert_eq!(d2.grid_peak_p, 4);
+        assert_eq!(d2.batch_peak_occupancy, 8);
+        // Flows still subtract.
+        assert_eq!(d.batch_buckets, 1);
+        assert_eq!(d.batch_solves, 3);
+    }
+
+    #[test]
+    fn percentiles_and_averages_are_total_per_class() {
+        let m = Metrics::new();
+        // Empty histograms: every class and quantile returns 0, never
+        // NaN or a panic.
+        for class in [SloClass::Interactive, SloClass::Standard, SloClass::Batch] {
+            for q in [0.0, 0.5, 0.99, 1.0] {
+                assert_eq!(m.latency_percentile(class, q), 0);
+            }
+            assert!(m.class_histogram(class).is_empty());
+        }
+        // Zero-valued snapshot: all avg helpers are exactly 0.0.
+        let s = MetricsSnapshot::default();
+        assert_eq!(s.avg_queue_wait(), 0.0);
+        assert_eq!(s.avg_batch_occupancy(), 0.0);
+        assert_eq!(s.avg_coalesce_wait(), 0.0);
+        assert_eq!(s.avg_routing_latency(), 0.0);
+        assert_eq!(s.overlap_efficiency(), 0.0);
+        assert_eq!(s.cache_hit_rate(), 0.0);
+        assert!(s.avg_queue_wait().is_finite());
+        // One zero-latency completion per class is representable and
+        // keeps everything finite.
+        for class in [SloClass::Interactive, SloClass::Standard, SloClass::Batch] {
+            m.record_class_latency(class, 0, false);
+            assert_eq!(m.latency_percentile(class, 0.5), 1);
+            assert_eq!(m.class_histogram(class), vec![(1, 1)]);
+        }
+    }
+
+    #[test]
+    fn class_histogram_matches_recordings() {
+        let m = Metrics::new();
+        m.record_class_latency(SloClass::Standard, 100, false); // [64,128)
+        m.record_class_latency(SloClass::Standard, 100, false);
+        m.record_class_latency(SloClass::Standard, 5_000, false); // [4096,8192)
+        let h = m.class_histogram(SloClass::Standard);
+        assert_eq!(h, vec![(127, 2), (8_191, 1)]);
+        // Counts across buckets equal completions.
+        let total: u64 = h.iter().map(|&(_, n)| n).sum();
+        assert_eq!(total, m.snapshot().class_completed[SloClass::Standard.index()]);
     }
 
     #[test]

@@ -1,0 +1,251 @@
+//! Predictor-drift monitoring: estimated vs observed makespans.
+//!
+//! Every traced distributed solve records three numbers under its
+//! `(routine, dtype, n, grid)` key:
+//!
+//! * `est_model_ns` — the planner's uncorrected estimate, which on
+//!   barrier schedules is **bitwise** `secs_to_ns(Predictor::
+//!   dist_makespan(...))` (asserted by `plan_estimates_match_the_
+//!   predictor_bitwise` and the golden obs tests);
+//! * `est_used_ns` — the estimate the `SloQueue` actually scheduled
+//!   with (equal to the model estimate unless drift correction or a
+//!   cache deduction adjusted it);
+//! * `obs_ns` — the observed exec makespan of the request.
+//!
+//! Lookahead pipelining, cache hits, IPC charges, and degraded-mode
+//! runs all make `obs_ns` diverge from the barrier model; the per-key
+//! ratio `obs_sum / est_model_sum` becomes a multiplicative correction
+//! factor that the serving fronts can opt into
+//! (`drift_correction: true`), tightening future `SloQueue` estimates.
+//! All arithmetic is integer (u128 sums, ratio applied in u128), so
+//! the correction is deterministic and bit-stable.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Key a drift sample is accumulated under.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct DriftKey {
+    pub routine: String,
+    pub dtype: String,
+    pub n: u64,
+    pub grid: (u32, u32),
+}
+
+/// Accumulated drift statistics for one key.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DriftStat {
+    pub samples: u64,
+    /// Sum of uncorrected model estimates (ns).
+    pub est_model_sum: u128,
+    /// Sum of estimates the scheduler actually used (ns).
+    pub est_used_sum: u128,
+    /// Sum of observed exec makespans (ns).
+    pub obs_sum: u128,
+    /// Sum of |obs - est_model| per sample (ns).
+    pub abs_err_model_sum: u128,
+    /// Sum of |obs - est_used| per sample (ns).
+    pub abs_err_used_sum: u128,
+}
+
+impl DriftStat {
+    /// Signed mean drift of observation vs the raw model, in ns:
+    /// positive means the model underestimates.
+    pub fn mean_drift_ns(&self) -> i128 {
+        if self.samples == 0 {
+            return 0;
+        }
+        (self.obs_sum as i128 - self.est_model_sum as i128) / self.samples as i128
+    }
+}
+
+/// Thread-safe per-key drift accumulator with an integer-ratio
+/// correction factor. Keys live in a `BTreeMap` so every snapshot and
+/// rendered table is deterministically ordered.
+pub struct DriftMonitor {
+    stats: Mutex<BTreeMap<DriftKey, DriftStat>>,
+    /// Minimum samples under a key before `corrected_est` starts
+    /// adjusting estimates (avoids correcting off one noisy point).
+    min_samples: u64,
+}
+
+impl Default for DriftMonitor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DriftMonitor {
+    pub fn new() -> Self {
+        DriftMonitor {
+            stats: Mutex::new(BTreeMap::new()),
+            min_samples: 2,
+        }
+    }
+
+    /// Record one completed solve under `key`.
+    pub fn record(&self, key: DriftKey, est_model_ns: u64, est_used_ns: u64, obs_ns: u64) {
+        let mut map = self.stats.lock().unwrap();
+        let st = map.entry(key).or_default();
+        st.samples += 1;
+        st.est_model_sum += est_model_ns as u128;
+        st.est_used_sum += est_used_ns as u128;
+        st.obs_sum += obs_ns as u128;
+        st.abs_err_model_sum += est_model_ns.abs_diff(obs_ns) as u128;
+        st.abs_err_used_sum += est_used_ns.abs_diff(obs_ns) as u128;
+    }
+
+    /// Apply the accumulated correction for `key` to a fresh model
+    /// estimate. Returns `est_ns` unchanged until the key has
+    /// `min_samples` observations; afterwards scales by the integer
+    /// ratio `obs_sum / est_model_sum` (computed in u128, saturating).
+    pub fn corrected_est(&self, key: &DriftKey, est_ns: u64) -> u64 {
+        let map = self.stats.lock().unwrap();
+        match map.get(key) {
+            Some(st) if st.samples >= self.min_samples && st.est_model_sum > 0 => {
+                let scaled = est_ns as u128 * st.obs_sum / st.est_model_sum;
+                scaled.min(u64::MAX as u128) as u64
+            }
+            _ => est_ns,
+        }
+    }
+
+    /// Deterministic snapshot of all keys and their stats.
+    pub fn stats(&self) -> Vec<(DriftKey, DriftStat)> {
+        self.stats
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+
+    /// Total |obs - est_used| across every key: the headline "how
+    /// wrong were the estimates the scheduler ran with" number.
+    pub fn total_abs_err_used(&self) -> u128 {
+        self.stats
+            .lock()
+            .unwrap()
+            .values()
+            .map(|s| s.abs_err_used_sum)
+            .sum()
+    }
+
+    /// Total |obs - est_model| across every key (correction-blind).
+    pub fn total_abs_err_model(&self) -> u128 {
+        self.stats
+            .lock()
+            .unwrap()
+            .values()
+            .map(|s| s.abs_err_model_sum)
+            .sum()
+    }
+
+    /// Total samples across every key.
+    pub fn total_samples(&self) -> u64 {
+        self.stats.lock().unwrap().values().map(|s| s.samples).sum()
+    }
+
+    pub fn clear(&self) {
+        self.stats.lock().unwrap().clear();
+    }
+
+    /// Human-readable drift table (deterministic order).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            "routine dtype     n  grid   samples   est_model_ns      obs_ns   mean_drift_ns\n",
+        );
+        for (k, s) in self.stats() {
+            out.push_str(&format!(
+                "{:<7} {:<5} {:>6}  {}x{}  {:>8}  {:>13}  {:>10}  {:>14}\n",
+                k.routine,
+                k.dtype,
+                k.n,
+                k.grid.0,
+                k.grid.1,
+                s.samples,
+                s.est_model_sum,
+                s.obs_sum,
+                s.mean_drift_ns(),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(routine: &str, n: u64) -> DriftKey {
+        DriftKey {
+            routine: routine.into(),
+            dtype: "f64".into(),
+            n,
+            grid: (2, 2),
+        }
+    }
+
+    #[test]
+    fn zero_drift_keeps_estimates_exact() {
+        let m = DriftMonitor::new();
+        for _ in 0..5 {
+            m.record(key("potrf", 128), 1000, 1000, 1000);
+        }
+        assert_eq!(m.corrected_est(&key("potrf", 128), 1000), 1000);
+        assert_eq!(m.corrected_est(&key("potrf", 128), 777), 777);
+        assert_eq!(m.total_abs_err_model(), 0);
+        assert_eq!(m.total_abs_err_used(), 0);
+        let stats = m.stats();
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].1.mean_drift_ns(), 0);
+    }
+
+    #[test]
+    fn correction_waits_for_min_samples_then_scales() {
+        let m = DriftMonitor::new();
+        // One sample: no correction yet.
+        m.record(key("potrs", 64), 1000, 1000, 1500);
+        assert_eq!(m.corrected_est(&key("potrs", 64), 1000), 1000);
+        // Second sample crosses min_samples: ratio = 3000/2000 = 1.5x.
+        m.record(key("potrs", 64), 1000, 1000, 1500);
+        assert_eq!(m.corrected_est(&key("potrs", 64), 1000), 1500);
+        assert_eq!(m.corrected_est(&key("potrs", 64), 2000), 3000);
+        // Unknown key untouched.
+        assert_eq!(m.corrected_est(&key("potrs", 65), 1000), 1000);
+    }
+
+    #[test]
+    fn integer_ratio_is_deterministic_and_saturating() {
+        let m = DriftMonitor::new();
+        m.record(key("syevd", 32), 3, 3, 10);
+        m.record(key("syevd", 32), 3, 3, 10);
+        // ratio 20/6 applied in u128: 9 * 20 / 6 = 30 exactly.
+        assert_eq!(m.corrected_est(&key("syevd", 32), 9), 30);
+        // 7 * 20 / 6 = 23 (floor), not a float round.
+        assert_eq!(m.corrected_est(&key("syevd", 32), 7), 23);
+        // Saturation instead of overflow.
+        let m2 = DriftMonitor::new();
+        m2.record(key("potrf", 8), 1, 1, u64::MAX);
+        m2.record(key("potrf", 8), 1, 1, u64::MAX);
+        assert_eq!(m2.corrected_est(&key("potrf", 8), u64::MAX), u64::MAX);
+    }
+
+    #[test]
+    fn keys_snapshot_in_sorted_order() {
+        let m = DriftMonitor::new();
+        m.record(key("syevd", 128), 1, 1, 1);
+        m.record(key("potrf", 64), 1, 1, 1);
+        m.record(key("potrf", 128), 1, 1, 1);
+        let keys: Vec<String> = m
+            .stats()
+            .iter()
+            .map(|(k, _)| format!("{}-{}", k.routine, k.n))
+            .collect();
+        assert_eq!(keys, vec!["potrf-64", "potrf-128", "syevd-128"]);
+        let table = m.render();
+        assert!(table.contains("potrf"));
+        assert!(table.contains("syevd"));
+    }
+}

@@ -1,0 +1,468 @@
+//! Deterministic renderers for recorded traces and metrics.
+//!
+//! Everything here is a pure function of its inputs — no clocks, no
+//! randomness, no hash-map iteration order — so every export is
+//! byte-stable and golden-pinnable. No external JSON/serde crates are
+//! used; the formats are small enough to emit (and validate) by hand.
+
+use super::trace::{DecisionRec, SpanRec};
+use crate::metrics::MetricsSnapshot;
+
+/// SLO class labels in `SloClass::index()` order; kept as plain
+/// strings so the exporter has no coordinator dependency.
+const CLASS_LABELS: [&str; 3] = ["interactive", "standard", "batch"];
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Integer nanoseconds rendered as exact decimal microseconds — the
+/// unit Chrome-trace `ts`/`dur` fields use. Emitting the text
+/// ourselves (never via f64) keeps the export bit-stable.
+fn ns_as_us(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1000, ns % 1000)
+}
+
+/// Track (tid) a stream name maps to within its device's pid:
+/// `requests`=0, `compute`=1, `panel`=2, `copy`=3, anything else 9.
+pub fn stream_tid(stream: &str) -> u64 {
+    match stream {
+        "requests" => 0,
+        "compute" => 1,
+        "panel" => 2,
+        "copy" => 3,
+        _ => 9,
+    }
+}
+
+/// Render spans as Chrome-trace/Perfetto JSON (`chrome://tracing` or
+/// <https://ui.perfetto.dev> loadable).
+///
+/// One process (`pid`) per device, one thread (`tid`) per stream, with
+/// `thread_name` metadata events naming each track. Spans are
+/// complete (`"ph":"X"`) events whose `args` carry the trace/span/
+/// parent ids and the byte/flop attribution, so a loaded trace can be
+/// filtered per request.
+pub fn chrome_trace_json(spans: &[SpanRec]) -> String {
+    // Collect the (pid, tid, name) tracks actually used, sorted.
+    let mut tracks: Vec<(u64, u64, &str)> = spans
+        .iter()
+        .map(|s| (s.device as u64, stream_tid(s.stream), s.stream))
+        .collect();
+    tracks.sort_unstable();
+    tracks.dedup();
+
+    let mut out = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    for (pid, tid, stream) in &tracks {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&format!(
+            "\n{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{},\"tid\":{},\
+             \"args\":{{\"name\":\"dev{}/{}\"}}}}",
+            pid, tid, pid, stream
+        ));
+    }
+    for s in spans {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&format!(
+            "\n{{\"name\":\"{}\",\"ph\":\"X\",\"cat\":\"{}\",\"pid\":{},\"tid\":{},\
+             \"ts\":{},\"dur\":{},\"args\":{{\"trace\":{},\"span\":{},\"parent\":{},\
+             \"bytes\":{},\"flops\":{}}}}}",
+            json_escape(&s.name),
+            s.cat,
+            s.device,
+            stream_tid(s.stream),
+            ns_as_us(s.t0_ns),
+            ns_as_us(s.t1_ns - s.t0_ns),
+            s.trace.0,
+            s.span.0,
+            s.parent.0,
+            s.bytes,
+            s.flops
+        ));
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// Validate a Chrome-trace export: overall JSON shape (balanced
+/// braces/brackets outside strings, the `traceEvents` array wrapper)
+/// plus per-event schema completeness — every `"ph":"X"` event must
+/// carry name/cat/pid/tid/ts/dur/args keys. Returns the number of `X`
+/// (span) events on success.
+pub fn validate_chrome_json(json: &str) -> Result<usize, String> {
+    let body = json.trim();
+    if !body.starts_with("{\"traceEvents\":[") || !body.ends_with("]}") {
+        return Err("missing {\"traceEvents\":[...]} wrapper".into());
+    }
+    // Balance check, string-aware.
+    let (mut depth_obj, mut depth_arr) = (0i64, 0i64);
+    let mut in_str = false;
+    let mut esc = false;
+    let mut events: Vec<String> = Vec::new();
+    let mut cur = String::new();
+    for c in body.chars() {
+        if in_str {
+            cur.push(c);
+            if esc {
+                esc = false;
+            } else if c == '\\' {
+                esc = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+            continue;
+        }
+        match c {
+            '"' => {
+                in_str = true;
+                cur.push(c);
+            }
+            '{' => {
+                depth_obj += 1;
+                cur.push(c);
+            }
+            '}' => {
+                depth_obj -= 1;
+                cur.push(c);
+                if depth_obj < 0 {
+                    return Err("unbalanced '}'".into());
+                }
+                // An event object closes at depth 1 (inside the root
+                // object's traceEvents array).
+                if depth_obj == 1 && depth_arr == 1 {
+                    events.push(std::mem::take(&mut cur));
+                }
+            }
+            '[' => {
+                depth_arr += 1;
+                cur.push(c);
+            }
+            ']' => {
+                depth_arr -= 1;
+                if depth_arr < 0 {
+                    return Err("unbalanced ']'".into());
+                }
+            }
+            ',' | '\n' | ' ' if depth_obj == 1 && depth_arr == 1 => {
+                // Separators between events; start collecting fresh.
+                if cur.trim() == "{\"traceEvents\":[" || cur.trim().is_empty() {
+                    cur.clear();
+                }
+            }
+            c => cur.push(c),
+        }
+        if depth_obj == 1 && depth_arr == 1 && cur.trim_start().starts_with("{\"traceEvents\":[") {
+            cur = cur.trim_start()["{\"traceEvents\":[".len()..].to_string();
+        }
+    }
+    if in_str {
+        return Err("unterminated string".into());
+    }
+    if depth_obj != 0 || depth_arr != 0 {
+        return Err(format!(
+            "unbalanced document (obj depth {depth_obj}, arr depth {depth_arr})"
+        ));
+    }
+    let mut x_events = 0usize;
+    for (i, ev) in events.iter().enumerate() {
+        let ev = ev.trim();
+        if !ev.starts_with('{') || !ev.ends_with('}') {
+            return Err(format!("event {i} is not an object: {ev:.60}"));
+        }
+        if ev.contains("\"ph\":\"X\"") {
+            for key in [
+                "\"name\":", "\"cat\":", "\"pid\":", "\"tid\":", "\"ts\":", "\"dur\":",
+                "\"args\":",
+            ] {
+                if !ev.contains(key) {
+                    return Err(format!("X event {i} missing {key}"));
+                }
+            }
+            for arg in ["\"trace\":", "\"span\":", "\"parent\":", "\"bytes\":", "\"flops\":"] {
+                if !ev.contains(arg) {
+                    return Err(format!("X event {i} args missing {arg}"));
+                }
+            }
+            x_events += 1;
+        } else if ev.contains("\"ph\":\"M\"") {
+            if !ev.contains("\"thread_name\"") {
+                return Err(format!("metadata event {i} is not a thread_name record"));
+            }
+        } else {
+            return Err(format!("event {i} has unknown ph: {ev:.60}"));
+        }
+    }
+    Ok(x_events)
+}
+
+/// Render a [`MetricsSnapshot`] (plus per-class latency histograms
+/// from [`Metrics::class_histogram`]) in the Prometheus text
+/// exposition format. `hists` pairs a class label with its non-empty
+/// `(upper_bound_ns, count)` buckets; pass labels in class-index
+/// order for a deterministic export.
+///
+/// [`Metrics::class_histogram`]: crate::metrics::Metrics::class_histogram
+pub fn prometheus_text(snap: &MetricsSnapshot, hists: &[(String, Vec<(u64, u64)>)]) -> String {
+    let mut out = String::new();
+    let mut counter = |name: &str, help: &str, v: u64| {
+        out.push_str(&format!(
+            "# HELP jaxmg_{name} {help}\n# TYPE jaxmg_{name} counter\njaxmg_{name} {v}\n"
+        ));
+    };
+    counter("peer_bytes_total", "Bytes moved device to device.", snap.peer_bytes);
+    counter("peer_copies_total", "Peer-to-peer copy operations.", snap.peer_copies);
+    counter("h2d_bytes_total", "Bytes moved host to device.", snap.h2d_bytes);
+    counter("d2h_bytes_total", "Bytes moved device to host.", snap.d2h_bytes);
+    counter("local_bytes_total", "Bytes copied within one device.", snap.local_bytes);
+    counter("kernel_launches_total", "Tile-kernel launches.", snap.kernel_launches);
+    counter("flops_total", "Floating-point operations charged.", snap.flops);
+    counter("redist_cycles_total", "Redistribution permutation cycles.", snap.redist_cycles);
+    counter(
+        "service_submitted_total",
+        "Solve requests submitted to the SPMD service.",
+        snap.service_submitted,
+    );
+    counter(
+        "service_completed_total",
+        "Solve requests completed by the SPMD service.",
+        snap.service_completed,
+    );
+    counter(
+        "service_queue_wait_ns_total",
+        "Cost-model ns spent queued before admission.",
+        snap.service_queue_wait_ns,
+    );
+    counter(
+        "service_exec_ns_total",
+        "Cost-model ns from admission to completion.",
+        snap.service_exec_ns,
+    );
+    counter(
+        "service_preemptions_total",
+        "Panel-boundary preemptions of batch solves.",
+        snap.service_preemptions,
+    );
+    counter("batch_buckets_total", "Coalesced small-solve buckets swept.", snap.batch_buckets);
+    counter("batch_solves_total", "Small solves served batched.", snap.batch_solves);
+    counter("ipc_exports_total", "IPC memory-handle exports.", snap.ipc_exports);
+    counter("ipc_opens_total", "IPC memory-handle opens.", snap.ipc_opens);
+    counter("ipc_closes_total", "IPC memory-handle closes.", snap.ipc_closes);
+    counter("mpmd_routed_total", "Requests routed by the MPMD frontend.", snap.mpmd_routed);
+    counter("mpmd_requeues_total", "Failure-driven MPMD requeues.", snap.mpmd_requeues);
+    counter("grid_solves_total", "Grid-native (P>1) distributed solves.", snap.grid_solves);
+    counter("grid_row_bytes_total", "Bytes carried by row-ring collectives.", snap.grid_row_bytes);
+    counter(
+        "grid_col_bytes_total",
+        "Bytes carried by column-ring collectives.",
+        snap.grid_col_bytes,
+    );
+    counter("cache_hits_total", "Factor-cache hits.", snap.cache_hits);
+    counter("cache_misses_total", "Factor-cache misses.", snap.cache_misses);
+    counter("cache_evictions_total", "Factor-cache evictions.", snap.cache_evictions);
+    counter("dag_fused_stages_total", "Extra stages fused into solve DAGs.", snap.dag_fused_stages);
+
+    let mut gauge = |name: &str, help: &str, v: u64| {
+        out.push_str(&format!(
+            "# HELP jaxmg_{name} {help}\n# TYPE jaxmg_{name} gauge\njaxmg_{name} {v}\n"
+        ));
+    };
+    gauge(
+        "cache_resident_bytes",
+        "Factor bytes currently resident in device memory.",
+        snap.cache_resident_bytes,
+    );
+    gauge("batch_peak_occupancy", "Largest bucket occupancy seen.", snap.batch_peak_occupancy);
+    gauge(
+        "mpmd_peak_worker_queue",
+        "Deepest worker mailbox observed.",
+        snap.mpmd_peak_worker_queue,
+    );
+    gauge("grid_peak_p", "Largest grid-row count P chosen.", snap.grid_peak_p);
+    gauge("grid_peak_q", "Largest grid-column count Q chosen.", snap.grid_peak_q);
+
+    // Per-class counters.
+    out.push_str(
+        "# HELP jaxmg_class_completed_total Completions per SLO class.\n\
+         # TYPE jaxmg_class_completed_total counter\n",
+    );
+    for (i, label) in CLASS_LABELS.iter().enumerate() {
+        out.push_str(&format!(
+            "jaxmg_class_completed_total{{class=\"{label}\"}} {}\n",
+            snap.class_completed[i]
+        ));
+    }
+    out.push_str(
+        "# HELP jaxmg_class_deadline_misses_total Deadline misses per SLO class.\n\
+         # TYPE jaxmg_class_deadline_misses_total counter\n",
+    );
+    for (i, label) in CLASS_LABELS.iter().enumerate() {
+        out.push_str(&format!(
+            "jaxmg_class_deadline_misses_total{{class=\"{label}\"}} {}\n",
+            snap.class_deadline_misses[i]
+        ));
+    }
+
+    // Per-class latency histograms, cumulative le buckets.
+    out.push_str(
+        "# HELP jaxmg_class_latency_ns End-to-end latency per SLO class, cost-model ns \
+         (log-bucket upper bounds; sum is bucket-bound weighted, conservative).\n\
+         # TYPE jaxmg_class_latency_ns histogram\n",
+    );
+    for (label, buckets) in hists {
+        let mut cum = 0u64;
+        let mut sum = 0u128;
+        for &(bound, n) in buckets {
+            cum += n;
+            sum += bound as u128 * n as u128;
+            out.push_str(&format!(
+                "jaxmg_class_latency_ns_bucket{{class=\"{label}\",le=\"{bound}\"}} {cum}\n"
+            ));
+        }
+        out.push_str(&format!(
+            "jaxmg_class_latency_ns_bucket{{class=\"{label}\",le=\"+Inf\"}} {cum}\n\
+             jaxmg_class_latency_ns_sum{{class=\"{label}\"}} {sum}\n\
+             jaxmg_class_latency_ns_count{{class=\"{label}\"}} {cum}\n"
+        ));
+    }
+    out
+}
+
+/// Render the decision log as JSONL — one object per line, in the
+/// deterministic order `Tracer::decisions` returns.
+pub fn decisions_jsonl(decisions: &[DecisionRec]) -> String {
+    let mut out = String::new();
+    for d in decisions {
+        out.push_str(&format!(
+            "{{\"t_ns\":{},\"trace\":{},\"kind\":\"{}\",\"detail\":\"{}\"}}\n",
+            d.t_ns,
+            d.trace.0,
+            json_escape(d.kind),
+            json_escape(&d.detail)
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{SpanId, TraceId};
+
+    fn span(trace: u64, id: u64, parent: u64, dev: usize, stream: &'static str) -> SpanRec {
+        SpanRec {
+            trace: TraceId(trace),
+            span: SpanId(id),
+            parent: SpanId(parent),
+            name: format!("s{id}"),
+            cat: "compute",
+            device: dev,
+            stream,
+            t0_ns: 1_500,
+            t1_ns: 3_750,
+            bytes: 64,
+            flops: 128,
+        }
+    }
+
+    #[test]
+    fn chrome_trace_is_deterministic_and_valid() {
+        let spans = vec![
+            span(1, 1, 0, 0, "requests"),
+            span(1, 2, 1, 0, "compute"),
+            span(1, 3, 1, 1, "copy"),
+        ];
+        let a = chrome_trace_json(&spans);
+        let b = chrome_trace_json(&spans);
+        assert_eq!(a, b);
+        // Exact microsecond text, not float formatting.
+        assert!(a.contains("\"ts\":1.500"), "{a}");
+        assert!(a.contains("\"dur\":2.250"), "{a}");
+        assert!(a.contains("\"name\":\"dev1/copy\""));
+        assert_eq!(validate_chrome_json(&a).unwrap(), 3);
+    }
+
+    #[test]
+    fn validator_rejects_malformed_documents() {
+        assert!(validate_chrome_json("not json").is_err());
+        assert!(validate_chrome_json("{\"traceEvents\":[").is_err());
+        // An X event missing required keys fails schema validation.
+        let bad = "{\"traceEvents\":[\n{\"name\":\"x\",\"ph\":\"X\",\"pid\":0}\n]}";
+        assert!(validate_chrome_json(bad).is_err());
+        // Empty event list is fine (0 spans).
+        assert_eq!(validate_chrome_json("{\"traceEvents\":[\n]}").unwrap(), 0);
+    }
+
+    #[test]
+    fn prometheus_text_renders_counters_gauges_histograms() {
+        let snap = MetricsSnapshot {
+            peer_bytes: 42,
+            cache_resident_bytes: 1024,
+            class_completed: [3, 0, 0],
+            ..Default::default()
+        };
+        let hists = vec![
+            ("interactive".to_string(), vec![(127u64, 2u64), (8191, 1)]),
+            ("standard".to_string(), vec![]),
+            ("batch".to_string(), vec![]),
+        ];
+        let text = prometheus_text(&snap, &hists);
+        assert!(text.contains("# TYPE jaxmg_peer_bytes_total counter"));
+        assert!(text.contains("jaxmg_peer_bytes_total 42"));
+        assert!(text.contains("# TYPE jaxmg_cache_resident_bytes gauge"));
+        assert!(text.contains("jaxmg_cache_resident_bytes 1024"));
+        assert!(text.contains("jaxmg_class_completed_total{class=\"interactive\"} 3"));
+        // Cumulative buckets: le=8191 counts both buckets.
+        assert!(text.contains("jaxmg_class_latency_ns_bucket{class=\"interactive\",le=\"127\"} 2"));
+        assert!(
+            text.contains("jaxmg_class_latency_ns_bucket{class=\"interactive\",le=\"8191\"} 3")
+        );
+        assert!(
+            text.contains("jaxmg_class_latency_ns_bucket{class=\"interactive\",le=\"+Inf\"} 3")
+        );
+        assert!(text.contains("jaxmg_class_latency_ns_count{class=\"interactive\"} 3"));
+        // Empty classes still expose a zero +Inf bucket and count.
+        assert!(text.contains("jaxmg_class_latency_ns_bucket{class=\"batch\",le=\"+Inf\"} 0"));
+        // Deterministic.
+        assert_eq!(text, prometheus_text(&snap, &hists));
+    }
+
+    #[test]
+    fn decisions_jsonl_escapes_and_orders() {
+        let decisions = vec![
+            DecisionRec {
+                t_ns: 5,
+                trace: TraceId(1),
+                kind: "admit",
+                detail: "potrf n=64 \"quoted\"\npath".into(),
+            },
+            DecisionRec { t_ns: 9, trace: TraceId(0), kind: "kill", detail: "worker 2".into() },
+        ];
+        let text = decisions_jsonl(&decisions);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\\\"quoted\\\""));
+        assert!(lines[0].contains("\\n"));
+        assert!(lines[1].contains("\"kind\":\"kill\""));
+        assert!(lines[1].starts_with('{') && lines[1].ends_with('}'));
+    }
+}

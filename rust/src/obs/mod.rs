@@ -1,0 +1,49 @@
+//! End-to-end observability: request-scoped tracing, deterministic
+//! exports, and predictor-drift monitoring.
+//!
+//! See `OBSERVABILITY.md` at the repo root for the trace model, the
+//! span taxonomy, how to load exports in Perfetto, and how to read the
+//! drift monitor.
+//!
+//! The subsystem has three parts:
+//!
+//! * [`Tracer`] ([`trace`]) — a passive, request-scoped span and
+//!   decision recorder on the **existing integer-ns simulated clock**.
+//!   Every submission on either serving front mints a [`TraceId`];
+//!   spans (queue wait, cache probe, scatter/stage, pipeline stages,
+//!   collectives, publish) and scheduler/cache/failure decisions
+//!   (admit, skip-barrier, preempt, evict, invalidate, requeue, kill,
+//!   straggler) attach to it. The tracer **never charges simulated
+//!   time**: with tracing on or off, every golden timeline is
+//!   bit-identical — it only reads clocks and stream horizons that the
+//!   cost model already advanced. Disabled (the default) it is a
+//!   handful of relaxed atomic loads.
+//! * [`export`] — deterministic renderers: Chrome-trace/Perfetto JSON
+//!   ([`chrome_trace_json`], loadable in `chrome://tracing` or
+//!   <https://ui.perfetto.dev>, one track per device×stream),
+//!   Prometheus text exposition of a
+//!   [`MetricsSnapshot`](crate::metrics::MetricsSnapshot) including the
+//!   per-class latency histograms ([`prometheus_text`]), and a JSONL
+//!   decision log ([`decisions_jsonl`]). All three are pure functions
+//!   of the recorded data — byte-stable, golden-pinnable.
+//! * [`DriftMonitor`] ([`drift`]) — per-`(routine, dtype, n, grid)`
+//!   accounting of `Predictor` estimates vs observed makespans. On
+//!   barrier schedules the planner's `est_ns` **is** the model's
+//!   replayed makespan bitwise (asserted on golden runs); lookahead
+//!   and degraded-mode runs accumulate real drift, which feeds back as
+//!   an integer-ratio correction factor into the `SloQueue` estimates
+//!   when [`SmallConfig::drift_correction`] /
+//!   [`MpmdConfig::drift_correction`] is enabled.
+//!
+//! [`SmallConfig::drift_correction`]: crate::coordinator::SmallConfig
+//! [`MpmdConfig::drift_correction`]: crate::serve::MpmdConfig
+
+pub mod drift;
+pub mod export;
+pub mod trace;
+
+pub use drift::{DriftKey, DriftMonitor, DriftStat};
+pub use export::{
+    chrome_trace_json, decisions_jsonl, prometheus_text, stream_tid, validate_chrome_json,
+};
+pub use trace::{DecisionRec, SpanId, SpanRec, TraceId, Tracer};

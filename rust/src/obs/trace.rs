@@ -1,0 +1,309 @@
+//! Request-scoped span and decision recording on the sim clock.
+//!
+//! A [`Tracer`] is purely passive: it never charges simulated time and
+//! never takes a lock when disabled, so enabling tracing changes no
+//! golden timeline by a single nanosecond. All timestamps are the
+//! integer cost-model nanoseconds already maintained by
+//! `SimClock`/`Stream`; the tracer just snapshots them.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::drift::DriftMonitor;
+
+/// Identifies one end-to-end request (one submission on a serving
+/// front, one pod flush, one fused DAG). `TraceId(0)` means "tracing
+/// disabled / no trace" and is never recorded.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TraceId(pub u64);
+
+/// Identifies one span within a trace. `SpanId(0)` doubles as "no
+/// parent" on root spans and as the null span when tracing is off.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SpanId(pub u64);
+
+/// One completed span: a named interval `[t0_ns, t1_ns]` of simulated
+/// time attributed to a device×stream track.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpanRec {
+    pub trace: TraceId,
+    pub span: SpanId,
+    /// `SpanId(0)` marks a root span.
+    pub parent: SpanId,
+    pub name: String,
+    /// Coarse category: "request", "sched", "cache", "xfer",
+    /// "compute", "collective", ...
+    pub cat: &'static str,
+    /// Device index the span is attributed to (track pid). Service-
+    /// level spans that belong to no single device use device 0 with
+    /// the "requests" stream.
+    pub device: usize,
+    /// Stream/track name: "requests", "compute", "panel", "copy".
+    pub stream: &'static str,
+    pub t0_ns: u64,
+    pub t1_ns: u64,
+    /// Bytes moved (transfers/collectives), 0 otherwise.
+    pub bytes: u64,
+    /// Floating-point ops charged (compute spans), 0 otherwise.
+    pub flops: u64,
+}
+
+/// One scheduler/cache/failure decision, timestamped on the sim clock.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DecisionRec {
+    pub t_ns: u64,
+    /// Trace the decision concerns; `TraceId(0)` for global events
+    /// (worker kill, straggler injection) not tied to one request.
+    pub trace: TraceId,
+    /// "admit", "skip-barrier", "preempt", "evict", "invalidate",
+    /// "requeue", "kill", "straggler", "cache-hit", "cache-miss",
+    /// "arrival", ...
+    pub kind: &'static str,
+    pub detail: String,
+}
+
+/// Passive span/decision recorder shared by every layer of a node.
+///
+/// Disabled by default. `enable()` turns on recording; every recording
+/// entry point first checks the flag with one relaxed atomic load, so
+/// the disabled cost is negligible and — more importantly — the tracer
+/// never advances any simulated clock either way.
+pub struct Tracer {
+    enabled: AtomicBool,
+    next_trace: AtomicU64,
+    next_span: AtomicU64,
+    spans: Mutex<Vec<SpanRec>>,
+    decisions: Mutex<Vec<DecisionRec>>,
+    drift: DriftMonitor,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer").field("enabled", &self.enabled()).finish()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Self {
+        Tracer {
+            enabled: AtomicBool::new(false),
+            next_trace: AtomicU64::new(1),
+            next_span: AtomicU64::new(1),
+            spans: Mutex::new(Vec::new()),
+            decisions: Mutex::new(Vec::new()),
+            drift: DriftMonitor::new(),
+        }
+    }
+
+    pub fn enable(&self) {
+        self.enabled.store(true, Ordering::Relaxed);
+    }
+
+    pub fn disable(&self) {
+        self.enabled.store(false, Ordering::Relaxed);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Mint a fresh trace id plus the pre-assigned id of its root
+    /// span. The root span *record* is emitted exactly once, by
+    /// whichever attempt publishes (or terminally fails) the request;
+    /// pre-minting the id lets child spans reference the root before
+    /// the request resolves. Returns zeros when disabled.
+    pub fn new_trace(&self) -> (TraceId, SpanId) {
+        if !self.enabled() {
+            return (TraceId(0), SpanId(0));
+        }
+        let t = TraceId(self.next_trace.fetch_add(1, Ordering::Relaxed));
+        let s = SpanId(self.next_span.fetch_add(1, Ordering::Relaxed));
+        (t, s)
+    }
+
+    /// Record a completed span. No-op (returning `SpanId(0)`) when
+    /// disabled or when `trace` is the null trace.
+    #[allow(clippy::too_many_arguments)]
+    pub fn span(
+        &self,
+        trace: TraceId,
+        parent: SpanId,
+        name: &str,
+        cat: &'static str,
+        device: usize,
+        stream: &'static str,
+        t0_ns: u64,
+        t1_ns: u64,
+        bytes: u64,
+        flops: u64,
+    ) -> SpanId {
+        if !self.enabled() || trace.0 == 0 {
+            return SpanId(0);
+        }
+        let id = SpanId(self.next_span.fetch_add(1, Ordering::Relaxed));
+        self.spans.lock().unwrap().push(SpanRec {
+            trace,
+            span: id,
+            parent,
+            name: name.to_string(),
+            cat,
+            device,
+            stream,
+            t0_ns,
+            t1_ns: t1_ns.max(t0_ns),
+            bytes,
+            flops,
+        });
+        id
+    }
+
+    /// Record a span whose id was pre-minted by [`new_trace`]; used to
+    /// close out root spans. No-op when disabled or `trace`/`span` is
+    /// null.
+    ///
+    /// [`new_trace`]: Tracer::new_trace
+    #[allow(clippy::too_many_arguments)]
+    pub fn close_root(
+        &self,
+        trace: TraceId,
+        span: SpanId,
+        name: &str,
+        device: usize,
+        t0_ns: u64,
+        t1_ns: u64,
+        bytes: u64,
+        flops: u64,
+    ) {
+        if !self.enabled() || trace.0 == 0 || span.0 == 0 {
+            return;
+        }
+        self.spans.lock().unwrap().push(SpanRec {
+            trace,
+            span,
+            parent: SpanId(0),
+            name: name.to_string(),
+            cat: "request",
+            device,
+            stream: "requests",
+            t0_ns,
+            t1_ns: t1_ns.max(t0_ns),
+            bytes,
+            flops,
+        });
+    }
+
+    /// Record a decision event. No-op when disabled. `TraceId(0)` is
+    /// allowed here (global events: kill, straggler).
+    pub fn decision(&self, trace: TraceId, t_ns: u64, kind: &'static str, detail: String) {
+        if !self.enabled() {
+            return;
+        }
+        self.decisions.lock().unwrap().push(DecisionRec {
+            t_ns,
+            trace,
+            kind,
+            detail,
+        });
+    }
+
+    /// Snapshot of all recorded spans, sorted by (trace, span) for a
+    /// deterministic order regardless of recording interleaving.
+    pub fn spans(&self) -> Vec<SpanRec> {
+        let mut v = self.spans.lock().unwrap().clone();
+        v.sort_by_key(|s| (s.trace, s.span));
+        v
+    }
+
+    /// Snapshot of all recorded decisions, sorted by (t_ns, trace,
+    /// kind) for determinism.
+    pub fn decisions(&self) -> Vec<DecisionRec> {
+        let mut v = self.decisions.lock().unwrap().clone();
+        v.sort_by(|a, b| {
+            (a.t_ns, a.trace, a.kind, &a.detail).cmp(&(b.t_ns, b.trace, b.kind, &b.detail))
+        });
+        v
+    }
+
+    /// Drop all recorded spans/decisions and reset drift stats. Id
+    /// counters are *not* reset, so ids stay unique across clears.
+    pub fn clear(&self) {
+        self.spans.lock().unwrap().clear();
+        self.decisions.lock().unwrap().clear();
+        self.drift.clear();
+    }
+
+    /// The predictor-drift monitor owned by this tracer.
+    pub fn drift(&self) -> &DriftMonitor {
+        &self.drift
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::new();
+        assert!(!t.enabled());
+        let (tr, root) = t.new_trace();
+        assert_eq!(tr, TraceId(0));
+        assert_eq!(root, SpanId(0));
+        let s = t.span(TraceId(7), SpanId(0), "x", "request", 0, "requests", 0, 1, 0, 0);
+        assert_eq!(s, SpanId(0));
+        t.decision(TraceId(7), 5, "admit", "x".into());
+        assert!(t.spans().is_empty());
+        assert!(t.decisions().is_empty());
+    }
+
+    #[test]
+    fn spans_sorted_and_ids_unique() {
+        let t = Tracer::new();
+        t.enable();
+        let (tr1, r1) = t.new_trace();
+        let (tr2, r2) = t.new_trace();
+        assert_ne!(tr1, tr2);
+        assert_ne!(r1, r2);
+        // Record out of order; snapshot must sort by (trace, span).
+        let c2 = t.span(tr2, r2, "b", "compute", 1, "compute", 10, 20, 0, 5);
+        let c1 = t.span(tr1, r1, "a", "compute", 0, "compute", 0, 10, 0, 5);
+        t.close_root(tr2, r2, "req", 0, 0, 20, 0, 0);
+        t.close_root(tr1, r1, "req", 0, 0, 10, 0, 0);
+        let spans = t.spans();
+        assert_eq!(spans.len(), 4);
+        let traces: Vec<u64> = spans.iter().map(|s| s.trace.0).collect();
+        let mut sorted = traces.clone();
+        sorted.sort_unstable();
+        assert_eq!(traces, sorted);
+        assert_ne!(c1, c2);
+        // Exactly one root per trace.
+        for tr in [tr1, tr2] {
+            let roots = spans
+                .iter()
+                .filter(|s| s.trace == tr && s.parent == SpanId(0))
+                .count();
+            assert_eq!(roots, 1);
+        }
+    }
+
+    #[test]
+    fn clamp_and_clear() {
+        let t = Tracer::new();
+        t.enable();
+        let (tr, root) = t.new_trace();
+        t.span(tr, root, "neg", "compute", 0, "compute", 10, 4, 0, 0);
+        assert_eq!(t.spans()[0].t1_ns, 10); // clamped to t0
+        t.decision(TraceId(0), 1, "kill", "worker 2".into());
+        assert_eq!(t.decisions().len(), 1);
+        t.clear();
+        assert!(t.spans().is_empty() && t.decisions().is_empty());
+        let (tr2, _) = t.new_trace();
+        assert!(tr2.0 > tr.0); // ids keep advancing across clear
+    }
+}

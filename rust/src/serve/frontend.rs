@@ -47,6 +47,17 @@
 //! and deadline-miss accounting relaxes by
 //! [`SchedConfig::degrade_factor`] while any straggler is active.
 //!
+//! ## Observability
+//!
+//! Every submission carries a [`TraceId`](crate::obs::TraceId): spans
+//! cover queue-wait, staging, `cudaIpc` opens, solver stages, and the
+//! request root; admissions, cache probes, requeues, kills, and
+//! stragglers land in the decision log. The tracer is passive (no
+//! simulated clock moves) and off by default; observed-vs-predicted
+//! drift optionally feeds back into the queue estimates via
+//! [`MpmdConfig::drift_correction`]. See `crate::obs` and
+//! `OBSERVABILITY.md`.
+//!
 //! [`Predictor::mpmd_overhead`]: crate::costmodel::Predictor::mpmd_overhead
 //! [`BatchPlanner`]: crate::batch::BatchPlanner
 
@@ -67,9 +78,11 @@ use crate::device::{DevPtr, SimNode};
 use crate::error::{Error, Result};
 use crate::ipc::{AddressSpace, IpcHandle, IpcRegistry};
 use crate::linalg::Matrix;
+use crate::obs::{DriftKey, SpanId, TraceId, Tracer};
 use crate::scalar::{DType, Scalar};
 use crate::solver::{
-    potrf_dist, potri_dist, potrs_dist, syevd_dist, Ctx, PipelineConfig, SolverBackend,
+    lift_timeline_spans, potrf_dist, potri_dist, potrs_dist, syevd_dist, Ctx, PipelineConfig,
+    SolverBackend,
 };
 use crate::tile::{build_panel, DistMatrix, LayoutKind};
 use std::any::Any;
@@ -112,6 +125,15 @@ pub struct MpmdConfig {
     /// accountants; admission pressure evicts by recompute-cost ×
     /// reuse. Off by default.
     pub factor_cache: bool,
+    /// Feed observed-vs-predicted drift back into the queue estimates:
+    /// once a `(routine, dtype, n, grid)` key has accumulated enough
+    /// samples in the node's [`DriftMonitor`](crate::obs::DriftMonitor),
+    /// new submissions rank by the drift-corrected makespan instead of
+    /// the raw Predictor figure. Lookahead-pipelined fronts benefit
+    /// most — the barrier-modeled estimate systematically overshoots
+    /// the pipelined execution. Off by default (bitwise parity with
+    /// the uncorrected queue order).
+    pub drift_correction: bool,
 }
 
 impl MpmdConfig {
@@ -127,6 +149,7 @@ impl MpmdConfig {
             grid: None,
             sched: SchedConfig::default(),
             factor_cache: false,
+            drift_correction: false,
         }
     }
 }
@@ -249,6 +272,8 @@ pub(crate) trait DistWork: Send + Sync {
         ticket: &SloTicket,
     ) -> ExecResult;
     fn fail(&self, err: ServeError);
+    /// The request's trace identity (nulls when tracing is off).
+    fn ids(&self) -> (TraceId, SpanId);
 }
 
 /// A coalesced pod pinned to one worker (type-erased over dtype).
@@ -257,6 +282,8 @@ pub(crate) trait PodWork: Send + Sync {
     fn bytes(&self) -> usize;
     fn run(&self, ctx: &WorkerCtx, ticket: &SloTicket, sched: SchedConfig) -> PodOutcome;
     fn fail(&self, err: ServeError);
+    /// The request's trace identity (nulls when tracing is off).
+    fn ids(&self) -> (TraceId, SpanId);
 }
 
 pub(crate) enum WorkKind {
@@ -284,8 +311,22 @@ impl QueuedWork {
     }
 }
 
+/// Close a request's root span on a terminal failure path, so every
+/// submission — even one that never dispatched — yields exactly one
+/// complete span tree. No-op for a null trace.
+fn close_failed_root(tracer: &Tracer, trace: TraceId, root: SpanId, now_ns: u64) {
+    if trace.0 != 0 {
+        tracer.close_root(trace, root, "request:failed", 0, now_ns, now_ns, 0, 0);
+    }
+}
+
 /// Fail every waiter of a work item that can no longer be routed.
-fn fail_work(work: QueuedWork, err: ServeError) {
+fn fail_work(work: QueuedWork, err: ServeError, tracer: &Tracer, now_ns: u64) {
+    let (trace, root) = match &work.kind {
+        WorkKind::Dist(req) => req.ids(),
+        WorkKind::Pod(pod) => pod.ids(),
+    };
+    close_failed_root(tracer, trace, root, now_ns);
     match work.kind {
         WorkKind::Dist(req) => req.fail(err),
         WorkKind::Pod(pod) => pod.fail(err),
@@ -469,8 +510,18 @@ impl Shared {
         let victim = self.cache.lock().unwrap().pop_victim();
         match victim {
             Some((_, e)) => {
+                let bytes = e.resident_bytes();
                 self.teardown_factor(&e);
                 self.node.metrics().add_cache_eviction();
+                let tr = self.node.tracer();
+                if tr.enabled() {
+                    tr.decision(
+                        TraceId(0),
+                        self.sim_now_ns(),
+                        "evict",
+                        format!("admission pressure freed {bytes} B of resident factor"),
+                    );
+                }
                 true
             }
             None => false,
@@ -483,6 +534,15 @@ impl Shared {
     /// unpin instead.
     fn invalidate_factors_on(&self, d: usize) {
         let dead = self.cache.lock().unwrap().invalidate(|_, e| e.payload.devices.contains(&d));
+        let tr = self.node.tracer();
+        if tr.enabled() && !dead.is_empty() {
+            tr.decision(
+                TraceId(0),
+                self.sim_now_ns(),
+                "invalidate",
+                format!("{} resident factor(s) touching device {d} dropped", dead.len()),
+            );
+        }
         for (_, e) in dead {
             self.teardown_factor(&e);
         }
@@ -508,6 +568,12 @@ struct DistReq<S: Scalar> {
     a: Arc<Matrix<S>>,
     rhs: Option<Matrix<S>>,
     slot: DistSlot<S>,
+    /// Trace identity, minted in `enqueue_dist` (nulls when tracing is
+    /// off). Degraded-mode retries re-execute the same `DistReq`, so
+    /// every attempt lands in one span tree and the root closes exactly
+    /// once — at publish or terminal failure.
+    trace: TraceId,
+    root: SpanId,
 }
 
 impl<S: Scalar> DistReq<S> {
@@ -596,6 +662,35 @@ impl<S: Scalar> DistWork for DistReq<S> {
         let caller = shared.caller;
         let fp = &plan.footprint;
         let metrics = shared.node.metrics().clone();
+        let tracer = shared.node.tracer().clone();
+        let trace = self.trace;
+        if trace.0 != 0 {
+            // One queue-wait span per attempt: a requeued request waits
+            // again, and both waits belong to the same span tree.
+            tracer.span(
+                trace,
+                self.root,
+                "queue-wait",
+                "sched",
+                0,
+                "requests",
+                ticket.enq_ns,
+                t0_ns,
+                0,
+                0,
+            );
+            if shared.cfg.pipeline.is_pipelined() {
+                tracer.decision(
+                    trace,
+                    t0_ns,
+                    "skip-barrier",
+                    format!(
+                        "lookahead depth {} pipelines panel/update stages",
+                        shared.cfg.pipeline.lookahead
+                    ),
+                );
+            }
+        }
         // Factor-cache probe: a resident L staged over exactly this
         // live set lets the solve skip both the staging fan-out and
         // the factorization — rank 0 re-opens the stored handles and
@@ -625,6 +720,25 @@ impl<S: Scalar> DistWork for DistReq<S> {
             .recompute_ns(key.n, key.tile, key.grid.0, key.grid.1),
             None => 0,
         };
+        if trace.0 != 0 {
+            if let Some(key) = &cache_key {
+                if cache_hit {
+                    tracer.decision(
+                        trace,
+                        t0_ns,
+                        "cache-hit",
+                        format!("resident factor skips {recompute_ns} ns of staging+potrf"),
+                    );
+                } else {
+                    tracer.decision(
+                        trace,
+                        t0_ns,
+                        "cache-miss",
+                        format!("n={} grid={}x{}", key.n, key.grid.0, key.grid.1),
+                    );
+                }
+            }
+        }
         let mut opened: Vec<IpcHandle> = Vec::new();
         // (`StagedShard` is not `Clone`, hence no `vec![None; n]`.)
         let mut staged: Vec<Option<StagedShard>> = (0..live.len()).map(|_| None).collect();
@@ -706,7 +820,23 @@ impl<S: Scalar> DistWork for DistReq<S> {
                         opened.push(h);
                         metrics.add_ipc_open();
                         // The caller's process runs next to device 0.
-                        shared.node.device(0)?.clock().advance(per_handle);
+                        let dev0 = shared.node.device(0)?;
+                        let o0 = dev0.clock().now_ns();
+                        dev0.clock().advance(per_handle);
+                        if trace.0 != 0 {
+                            tracer.span(
+                                trace,
+                                self.root,
+                                "ipc-open",
+                                "xfer",
+                                0,
+                                "copy",
+                                o0,
+                                dev0.clock().now_ns(),
+                                64,
+                                0,
+                            );
+                        }
                         panels.push(ptr);
                     }
                     None => panels.push(sh.ptr),
@@ -715,8 +845,8 @@ impl<S: Scalar> DistWork for DistReq<S> {
 
             // 3. The single caller assembles the view and solves.
             let backend = SolverBackend::<S>::Native;
-            let ctx =
-                Ctx::with_pipeline(&sub, &shared.cfg.model, &backend, shared.cfg.pipeline);
+            let ctx = Ctx::with_pipeline(&sub, &shared.cfg.model, &backend, shared.cfg.pipeline)
+                .with_trace(self.trace, self.root);
             let mut dm = DistMatrix::<S>::from_panels(&sub, n, kind, panels)?;
             let solved = (|| -> Result<DistOut<S>> {
                 // syevd runs on A directly — only the Cholesky family
@@ -755,6 +885,14 @@ impl<S: Scalar> DistWork for DistReq<S> {
                     DistRoutine::Syevd => unreachable!("handled above"),
                 }
             })();
+            // Lookahead schedules issue panel/copy work directly onto
+            // their streams, bypassing the per-charge span helpers —
+            // lift the stream horizons into summary stage spans.
+            if trace.0 != 0 {
+                if let Some(snap) = ctx.timeline_snapshot() {
+                    lift_timeline_spans(&tracer, trace, self.root, &snap);
+                }
+            }
             // The workers own the panels — never free them here.
             let _ = dm.into_panels();
             solved
@@ -822,8 +960,42 @@ impl<S: Scalar> DistWork for DistReq<S> {
 
         match result {
             Ok(out) => {
-                let exec_ns = shared.sim_now_ns().saturating_sub(t0_ns);
+                let end_ns = shared.sim_now_ns();
+                let exec_ns = end_ns.saturating_sub(t0_ns);
                 note_completion(&shared.node, &shared.cfg.sched, ticket, queue_wait_ns, exec_ns);
+                if trace.0 != 0 {
+                    tracer.span(
+                        trace, self.root, "exec", "exec", 0, "requests", t0_ns, end_ns, 0, 0,
+                    );
+                    tracer.close_root(
+                        trace,
+                        self.root,
+                        &format!("request:{}", self.routine.name()),
+                        0,
+                        ticket.enq_ns,
+                        end_ns,
+                        0,
+                        0,
+                    );
+                }
+                // Feed the drift monitor: model estimate (this plan's
+                // Predictor makespan), the estimate the queue actually
+                // ranked with (post-correction, post-cache-deduction),
+                // and the observed makespan. Cache hits run a different
+                // program than the estimate models, so they stay out.
+                if !cache_hit && (tracer.enabled() || shared.cfg.drift_correction) {
+                    tracer.drift().record(
+                        DriftKey {
+                            routine: self.routine.name().to_string(),
+                            dtype: S::DTYPE.name().to_string(),
+                            n: self.a.rows() as u64,
+                            grid: (plan.grid.0 as u32, plan.grid.1 as u32),
+                        },
+                        plan.est_ns,
+                        ticket.est_ns,
+                        exec_ns,
+                    );
+                }
                 let stats = SolveStats {
                     queue_wait_ns,
                     exec_ns,
@@ -842,7 +1014,8 @@ impl<S: Scalar> DistWork for DistReq<S> {
                 if dead.is_empty() {
                     // Terminal failure: counts as a completion, exactly
                     // like a failed solve on the SPMD front.
-                    let exec_ns = shared.sim_now_ns().saturating_sub(t0_ns);
+                    let end_ns = shared.sim_now_ns();
+                    let exec_ns = end_ns.saturating_sub(t0_ns);
                     note_completion(
                         &shared.node,
                         &shared.cfg.sched,
@@ -850,6 +1023,18 @@ impl<S: Scalar> DistWork for DistReq<S> {
                         queue_wait_ns,
                         exec_ns,
                     );
+                    if trace.0 != 0 {
+                        tracer.close_root(
+                            trace,
+                            self.root,
+                            &format!("request:{}:failed", self.routine.name()),
+                            0,
+                            ticket.enq_ns,
+                            end_ns,
+                            0,
+                            0,
+                        );
+                    }
                     self.fail(ServeError::Failed(format!(
                         "mpmd {} failed: {e}",
                         self.routine.name()
@@ -864,6 +1049,14 @@ impl<S: Scalar> DistWork for DistReq<S> {
                     for &d in &dead {
                         shared.invalidate_factors_on(d);
                     }
+                    if trace.0 != 0 {
+                        tracer.decision(
+                            trace,
+                            shared.sim_now_ns(),
+                            "requeue",
+                            format!("worker(s) {dead:?} died mid-solve; retry on live set"),
+                        );
+                    }
                     ExecResult::Requeue(dead)
                 }
             }
@@ -875,6 +1068,10 @@ impl<S: Scalar> DistWork for DistReq<S> {
             DistSlot::Mat(slot) => publish_one(slot, Err(err)),
             DistSlot::Eig(slot) => publish_one(slot, Err(err)),
         }
+    }
+
+    fn ids(&self) -> (TraceId, SpanId) {
+        (self.trace, self.root)
     }
 }
 
@@ -888,6 +1085,13 @@ struct PodReq<S: Scalar> {
     rhss: Vec<Option<Matrix<S>>>,
     slots: Vec<Slot<Matrix<S>>>,
     waits: Vec<u64>,
+    /// Trace identity, minted in the pod builder (nulls when tracing
+    /// is off). A dead-worker re-route keeps this identity; the
+    /// unpublished *tail* of a degraded rerun becomes a fresh pod and
+    /// mints a fresh trace (the original root closed with the pod that
+    /// spawned it), linked by a "requeue" decision.
+    trace: TraceId,
+    root: SpanId,
 }
 
 impl<S: Scalar> PodWork for PodReq<S> {
@@ -910,6 +1114,22 @@ impl<S: Scalar> PodWork for PodReq<S> {
         let t0_ns = ctx.node.sim_time_ns();
         let queue_wait_ns = t0_ns.saturating_sub(ticket.enq_ns);
         let occupancy = self.systems.len();
+        let tracer = ctx.node.tracer().clone();
+        let trace = self.trace;
+        if trace.0 != 0 {
+            tracer.span(
+                trace,
+                self.root,
+                "queue-wait",
+                "sched",
+                ctx.device,
+                "requests",
+                ticket.enq_ns,
+                t0_ns,
+                0,
+                0,
+            );
+        }
         let swept = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             run_bucket::<S>(
                 self.routine,
@@ -926,6 +1146,31 @@ impl<S: Scalar> PodWork for PodReq<S> {
                 let total_wait: u64 = self.waits.iter().sum();
                 ctx.node.metrics().add_batch_bucket(occupancy as u64, total_wait, makespan_ns);
                 note_completion(&ctx.node, &sched, ticket, queue_wait_ns, exec_ns);
+                if trace.0 != 0 {
+                    let end_ns = t0_ns.saturating_add(exec_ns);
+                    tracer.span(
+                        trace,
+                        self.root,
+                        "exec",
+                        "exec",
+                        ctx.device,
+                        "requests",
+                        t0_ns,
+                        end_ns,
+                        0,
+                        0,
+                    );
+                    tracer.close_root(
+                        trace,
+                        self.root,
+                        &format!("request:pod:{}", self.routine.name()),
+                        ctx.device,
+                        ticket.enq_ns,
+                        end_ns,
+                        0,
+                        0,
+                    );
+                }
                 for ((slot, x), wait_ns) in
                     self.slots.iter().zip(results).zip(self.waits.iter().copied())
                 {
@@ -953,14 +1198,34 @@ impl<S: Scalar> PodWork for PodReq<S> {
                 // frontend queue as a fresh pod on the other devices.
                 for i in 0..occupancy {
                     if !ctx.alive() {
+                        // The tail is a *new* submission: it mints its
+                        // own trace (this pod's root closes below with
+                        // the members already resolved) and the link
+                        // between the two trees is the decision record.
+                        let (tail_trace, tail_root) = tracer.new_trace();
                         let tail = PodReq::<S> {
                             routine: self.routine,
                             systems: self.systems[i..].to_vec(),
                             rhss: self.rhss[i..].to_vec(),
                             slots: self.slots[i..].to_vec(),
                             waits: self.waits[i..].to_vec(),
+                            trace: tail_trace,
+                            root: tail_root,
                         };
                         ctx.node.metrics().add_mpmd_requeue();
+                        if tracer.enabled() {
+                            tracer.decision(
+                                trace,
+                                ctx.node.sim_time_ns(),
+                                "requeue",
+                                format!(
+                                    "worker {} died mid-rerun; {} solve(s) re-enter as trace {}",
+                                    ctx.device,
+                                    occupancy - i,
+                                    tail_trace.0
+                                ),
+                            );
+                        }
                         let mut work =
                             QueuedWork::fresh(WorkKind::Pod(Arc::new(tail)), ticket.slo, 0);
                         work.excluded.push(ctx.device);
@@ -970,6 +1235,8 @@ impl<S: Scalar> PodWork for PodReq<S> {
                                 ServeError::Failed(
                                     "mpmd service shut down during retry".to_string(),
                                 ),
+                                &tracer,
+                                ctx.node.sim_time_ns(),
                             );
                         } else {
                             ctx.node.metrics().add_service_submission();
@@ -1009,6 +1276,31 @@ impl<S: Scalar> PodWork for PodReq<S> {
                 // resolved it (parity with the SPMD bucket flusher).
                 let exec_ns = ctx.node.sim_time_ns().saturating_sub(t0_ns);
                 note_completion(&ctx.node, &sched, ticket, queue_wait_ns, exec_ns);
+                if trace.0 != 0 {
+                    let end_ns = t0_ns.saturating_add(exec_ns);
+                    tracer.span(
+                        trace,
+                        self.root,
+                        "exec",
+                        "exec",
+                        ctx.device,
+                        "requests",
+                        t0_ns,
+                        end_ns,
+                        0,
+                        0,
+                    );
+                    tracer.close_root(
+                        trace,
+                        self.root,
+                        &format!("request:pod:{}", self.routine.name()),
+                        ctx.device,
+                        ticket.enq_ns,
+                        end_ns,
+                        0,
+                        0,
+                    );
+                }
                 PodOutcome::Published
             }
         }
@@ -1016,6 +1308,10 @@ impl<S: Scalar> PodWork for PodReq<S> {
 
     fn fail(&self, err: ServeError) {
         publish_error(&self.slots, err);
+    }
+
+    fn ids(&self) -> (TraceId, SpanId) {
+        (self.trace, self.root)
     }
 }
 
@@ -1050,7 +1346,12 @@ fn dispatch(
     if live.is_empty() {
         // Typed terminal failure: re-queueing against an empty live
         // set would loop forever (nothing can ever admit the work).
-        fail_work(work, ServeError::NoLiveWorkers { total: shared.workers.len() });
+        fail_work(
+            work,
+            ServeError::NoLiveWorkers { total: shared.workers.len() },
+            shared.node.tracer(),
+            shared.sim_now_ns(),
+        );
         shared.front.complete();
         return true;
     }
@@ -1072,6 +1373,8 @@ fn dispatch(
             let plan = match req.plan(shared, live.len()) {
                 Ok(plan) => plan,
                 Err(e) => {
+                    let (trace, root) = req.ids();
+                    close_failed_root(shared.node.tracer(), trace, root, shared.sim_now_ns());
                     req.fail(ServeError::Failed(format!("solve planning failed: {e}")));
                     shared.front.complete();
                     return true;
@@ -1081,6 +1384,8 @@ fn dispatch(
             // waiting for releases would deadlock the queue head.
             for (i, &dev) in live.iter().enumerate() {
                 if plan.footprint.bytes(i) > shared.workers[dev].ctx.admission.capacity() {
+                    let (trace, root) = req.ids();
+                    close_failed_root(shared.node.tracer(), trace, root, shared.sim_now_ns());
                     req.fail(ServeError::Failed(format!(
                         "declared footprint ({} B) exceeds device {dev}'s capacity",
                         plan.footprint.bytes(i)
@@ -1116,6 +1421,22 @@ fn dispatch(
             }
             shared.quotas.admit(ticket.slo.tenant, fp_total);
             metrics.add_mpmd_routed(shared.sim_now_ns().saturating_sub(ticket.enq_ns));
+            let tr = shared.node.tracer();
+            if tr.enabled() {
+                let (trace, _) = req.ids();
+                tr.decision(
+                    trace,
+                    shared.sim_now_ns(),
+                    "admit",
+                    format!(
+                        "dist grid={}x{} live={} est_ns={}",
+                        plan.grid.0,
+                        plan.grid.1,
+                        live.len(),
+                        ticket.est_ns
+                    ),
+                );
+            }
             let shared2 = shared.clone();
             let _ = routers.submit(move || {
                 match req.execute(&shared2, &live, &plan, &ticket) {
@@ -1136,6 +1457,8 @@ fn dispatch(
                 .filter(|&d| bytes <= shared.workers[d].ctx.admission.capacity())
                 .collect();
             if cands.is_empty() {
+                let (trace, root) = pod.ids();
+                close_failed_root(shared.node.tracer(), trace, root, shared.sim_now_ns());
                 pod.fail(ServeError::Failed(format!(
                     "pod of {bytes} B exceeds every live device's capacity"
                 )));
@@ -1173,14 +1496,37 @@ fn dispatch(
             }
             shared.quotas.admit(ticket.slo.tenant, bytes);
             metrics.add_mpmd_routed(shared.sim_now_ns().saturating_sub(ticket.enq_ns));
+            let tr = shared.node.tracer();
+            if tr.enabled() {
+                let (trace, _) = pod.ids();
+                tr.decision(
+                    trace,
+                    shared.sim_now_ns(),
+                    "admit",
+                    format!("pod pinned to worker {dev} bytes={bytes}"),
+                );
+            }
             let shared2 = shared.clone();
             let sched = shared.cfg.sched;
             let job: WorkerJob = Box::new(move |ctx| {
+                let note_requeue = |ctx: &WorkerCtx| {
+                    let tr = ctx.node.tracer();
+                    if tr.enabled() {
+                        let (trace, _) = pod.ids();
+                        tr.decision(
+                            trace,
+                            ctx.node.sim_time_ns(),
+                            "requeue",
+                            format!("worker {} dead; pod re-routed", ctx.device),
+                        );
+                    }
+                };
                 if !ctx.alive() {
                     // Draining a dead worker: hand the pod back.
                     ctx.admission.release(bytes);
                     shared2.quotas.release(ticket.slo.tenant, bytes);
                     ctx.node.metrics().add_mpmd_requeue();
+                    note_requeue(ctx);
                     ctx.front.requeue(ticket, work, &[ctx.device]);
                     return;
                 }
@@ -1194,6 +1540,7 @@ fn dispatch(
                         ctx.admission.release(bytes);
                         shared2.quotas.release(ticket.slo.tenant, bytes);
                         ctx.node.metrics().add_mpmd_requeue();
+                        note_requeue(ctx);
                         ctx.front.requeue(ticket, work, &[ctx.device]);
                     }
                 }
@@ -1271,7 +1618,7 @@ struct MpmdSmall {
     decisions: HashMap<(SmallRoutine, DType, u32), bool>,
 }
 
-fn pod_builder<S: Scalar>(routine: SmallRoutine) -> Arc<PodBuilder> {
+fn pod_builder<S: Scalar>(routine: SmallRoutine, tracer: Arc<Tracer>) -> Arc<PodBuilder> {
     Arc::new(move |bucket: FlushedBucket, payloads: Vec<SmallPayload>| {
         let mut systems = Vec::with_capacity(payloads.len());
         let mut rhss = Vec::with_capacity(payloads.len());
@@ -1293,6 +1640,9 @@ fn pod_builder<S: Scalar>(routine: SmallRoutine) -> Arc<PodBuilder> {
         }
         let pod_slo =
             Slo { class: class.unwrap_or(SloClass::Standard), deadline_ns: deadline, tenant: 0 };
+        // One flushed bucket = one submission on the frontend queue =
+        // one trace (mirrors the SPMD small-flusher's accounting).
+        let (trace, root) = tracer.new_trace();
         QueuedWork::fresh(
             WorkKind::Pod(Arc::new(PodReq::<S> {
                 routine,
@@ -1300,6 +1650,8 @@ fn pod_builder<S: Scalar>(routine: SmallRoutine) -> Arc<PodBuilder> {
                 rhss,
                 slots,
                 waits: bucket.waits_ns,
+                trace,
+                root,
             })),
             pod_slo,
             0,
@@ -1327,7 +1679,12 @@ fn flush_due_buckets(shared: &Shared, small: &Mutex<MpmdSmall>) {
     }
     for w in ready {
         if let Err(w) = shared.front.enqueue(w, now_ns) {
-            fail_work(w, ServeError::Failed("mpmd service is shut down".to_string()));
+            fail_work(
+                w,
+                ServeError::Failed("mpmd service is shut down".to_string()),
+                shared.node.tracer(),
+                now_ns,
+            );
         } else {
             shared.node.metrics().add_service_submission();
         }
@@ -1410,14 +1767,20 @@ impl MpmdService {
         }
     }
 
-    fn enqueue_dist<S: Scalar>(&self, req: DistReq<S>, slo: Slo) -> Result<()> {
+    fn enqueue_dist<S: Scalar>(&self, mut req: DistReq<S>, slo: Slo) -> Result<()> {
+        let tracer = self.shared.node.tracer();
+        let (trace, root) = tracer.new_trace();
+        req.trace = trace;
+        req.root = root;
         // SJF/EDF ranks off the same Predictor makespan the planner
         // mints (estimated over the full worker set; a degraded-mode
         // dispatch re-plans, but the ticket keeps its submit-time
         // estimate). A failed estimate degrades to 0 — FIFO within
         // rank — rather than failing the submit. When the factor is
         // resident the potrf prefix is deducted: the ticket ranks by
-        // the tail the hit will actually run.
+        // the tail the hit will actually run. With drift correction on,
+        // the estimate is further scaled by the observed/predicted
+        // ratio the drift monitor accumulated for this key.
         let est_ns = match req.plan(&self.shared, self.shared.workers.len()) {
             Ok(p) => {
                 let mut est = p.est_ns;
@@ -1433,13 +1796,27 @@ impl MpmdService {
                         est = est.saturating_sub(re);
                     }
                 }
+                if self.shared.cfg.drift_correction {
+                    let key = DriftKey {
+                        routine: req.routine.name().to_string(),
+                        dtype: S::DTYPE.name().to_string(),
+                        n: req.a.rows() as u64,
+                        grid: (p.grid.0 as u32, p.grid.1 as u32),
+                    };
+                    est = tracer.drift().corrected_est(&key, est);
+                }
                 est
             }
             Err(_) => 0,
         };
         let work = QueuedWork::fresh(WorkKind::Dist(Arc::new(req)), slo, est_ns);
         if let Err(w) = self.shared.front.enqueue(work, self.shared.sim_now_ns()) {
-            fail_work(w, ServeError::Failed("mpmd service is shut down".to_string()));
+            fail_work(
+                w,
+                ServeError::Failed("mpmd service is shut down".to_string()),
+                tracer,
+                self.shared.sim_now_ns(),
+            );
             return Err(Error::config("mpmd service is shut down"));
         }
         self.shared.node.metrics().add_service_submission();
@@ -1473,6 +1850,8 @@ impl MpmdService {
                 a: Arc::new(a),
                 rhs: None,
                 slot: DistSlot::Mat(slot),
+                trace: TraceId(0),
+                root: SpanId(0),
             },
             slo,
         )?;
@@ -1506,6 +1885,8 @@ impl MpmdService {
                 a: Arc::new(a),
                 rhs: Some(b),
                 slot: DistSlot::Mat(slot),
+                trace: TraceId(0),
+                root: SpanId(0),
             },
             slo,
         )?;
@@ -1531,6 +1912,8 @@ impl MpmdService {
                 a: Arc::new(a),
                 rhs: None,
                 slot: DistSlot::Mat(slot),
+                trace: TraceId(0),
+                root: SpanId(0),
             },
             slo,
         )?;
@@ -1560,6 +1943,8 @@ impl MpmdService {
                 a: Arc::new(a),
                 rhs: None,
                 slot: DistSlot::Eig(slot),
+                trace: TraceId(0),
+                root: SpanId(0),
             },
             slo,
         )?;
@@ -1634,7 +2019,14 @@ impl MpmdService {
             };
             let (handle, slot) = handle_pair::<Matrix<S>>();
             self.enqueue_dist(
-                DistReq { routine: dist, a: Arc::new(a), rhs, slot: DistSlot::Mat(slot) },
+                DistReq {
+                    routine: dist,
+                    a: Arc::new(a),
+                    rhs,
+                    slot: DistSlot::Mat(slot),
+                    trace: TraceId(0),
+                    root: SpanId(0),
+                },
                 slo,
             )?;
             return Ok(handle);
@@ -1646,7 +2038,9 @@ impl MpmdService {
         let mut ready = Vec::new();
         {
             let mut st = self.small.lock().unwrap();
-            st.builders.entry(key).or_insert_with(|| pod_builder::<S>(routine));
+            st.builders
+                .entry(key)
+                .or_insert_with(|| pod_builder::<S>(routine, self.shared.node.tracer().clone()));
             let (id, flushed) = st.planner.push(key, now_ns);
             st.payloads.insert(id, Box::new(MpmdSmallJob::<S> { a, rhs, slot, slo }));
             if let Some(bucket) = flushed {
@@ -1662,7 +2056,12 @@ impl MpmdService {
             // Submission accounting is pod-granular, matching the SPMD
             // flusher's one-enqueue-per-bucket semantics.
             if let Err(w) = self.shared.front.enqueue(w, now_ns) {
-                fail_work(w, ServeError::Failed("mpmd service is shut down".to_string()));
+                fail_work(
+                    w,
+                    ServeError::Failed("mpmd service is shut down".to_string()),
+                    self.shared.node.tracer(),
+                    now_ns,
+                );
             } else {
                 self.shared.node.metrics().add_service_submission();
             }
@@ -1710,7 +2109,12 @@ impl MpmdService {
         }
         for w in ready {
             if let Err(w) = self.shared.front.enqueue(w, now_ns) {
-                fail_work(w, ServeError::Failed("mpmd service is shut down".to_string()));
+                fail_work(
+                    w,
+                    ServeError::Failed("mpmd service is shut down".to_string()),
+                    self.shared.node.tracer(),
+                    now_ns,
+                );
             } else {
                 self.shared.node.metrics().add_service_submission();
             }
@@ -1733,6 +2137,15 @@ impl MpmdService {
             .get(d)
             .ok_or(Error::InvalidDevice { device: d, count: self.shared.workers.len() })?;
         link.kill();
+        let tr = self.shared.node.tracer();
+        if tr.enabled() {
+            tr.decision(
+                TraceId(0),
+                self.shared.sim_now_ns(),
+                "kill",
+                format!("worker {d} killed; staged shards revoked, resident factors invalidated"),
+            );
+        }
         // The dead process's staged shards are gone — every factor
         // with a shard on `d` loses its residency (pinned entries are
         // doomed; the in-flight hit's own death handling re-queues).
@@ -1761,6 +2174,15 @@ impl MpmdService {
     /// active. `factor` is clamped to ≥ 1.0.
     pub fn inject_straggler(&self, d: usize, factor: f64) -> Result<()> {
         self.shared.node.device(d)?.clock().set_drag(factor.max(1.0));
+        let tr = self.shared.node.tracer();
+        if tr.enabled() {
+            tr.decision(
+                TraceId(0),
+                self.shared.sim_now_ns(),
+                "straggler",
+                format!("device {d} dragged {:.2}x; deadline accounting degraded", factor.max(1.0)),
+            );
+        }
         // A dragged device degrades every hit its shards would serve —
         // cached factors touching it lose residency and repeat solves
         // refactor cold over the degraded view.
@@ -1850,6 +2272,13 @@ impl MpmdService {
     /// The node this service serves.
     pub fn node(&self) -> &SimNode {
         &self.shared.node
+    }
+
+    /// The node-wide tracer (request spans, decision log, drift
+    /// monitor — see `crate::obs` and `OBSERVABILITY.md`). Enable it
+    /// *before* submitting to capture complete span trees.
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        self.shared.node.tracer()
     }
 
     /// The active configuration.

@@ -70,6 +70,18 @@
 //! * [`Ctx::end_phase`] returns a [`PhaseReport`] with the phase's
 //!   busy/span/utilization; aggregates flow into
 //!   [`crate::metrics::Metrics`] (`overlap_busy_ns`/`overlap_span_ns`).
+//!
+//! ## Observability
+//!
+//! A context built with [`Ctx::with_trace`] emits request-scoped spans
+//! (`crate::obs`) for every charge — kernels, p2p hops, broadcasts,
+//! ring collectives, panel copies — and [`lift_timeline_spans`] turns a
+//! pipelined routine's [`DeviceTimeline`] snapshot into per-
+//! device×stream stage spans. Tracing is purely passive (span bounds
+//! are read from the clocks/streams the cost model already advanced),
+//! so enabling it changes no golden timeline by a single ns. See
+//! `OBSERVABILITY.md` at the repo root for the span taxonomy and how
+//! to load the exports in Perfetto.
 
 mod kernels;
 mod potrf;
@@ -90,6 +102,7 @@ pub use syevd::syevd_dist;
 
 use crate::costmodel::GpuCostModel;
 use crate::device::{DevPtr, Event, SimNode};
+use crate::obs::{SpanId, TraceId, Tracer};
 use crate::scalar::Scalar;
 use std::sync::Arc;
 
@@ -136,6 +149,17 @@ pub struct Ctx<'a, S: Scalar> {
     /// service installs it so a queued latency-sensitive solve can run
     /// between a large solve's panels instead of behind them.
     preempt: Option<Arc<dyn Fn() + Send + Sync>>,
+    /// Request-scoped tracing context ([`Ctx::with_trace`]); `None`
+    /// when tracing is off, so the charge helpers pay nothing.
+    trace: Option<TraceCtx>,
+}
+
+/// The (tracer, trace, root-span) triple a serving front hands a `Ctx`
+/// so the solver's charges attach to the request's span tree.
+struct TraceCtx {
+    tracer: Arc<Tracer>,
+    trace: TraceId,
+    root: SpanId,
 }
 
 impl<'a, S: Scalar> Ctx<'a, S> {
@@ -165,7 +189,36 @@ impl<'a, S: Scalar> Ctx<'a, S> {
         } else {
             None
         };
-        Ctx { node, model, kernels: backend.kernels(), pipeline, timeline, preempt: None }
+        Ctx { node, model, kernels: backend.kernels(), pipeline, timeline, preempt: None, trace: None }
+    }
+
+    /// Attach a request trace: subsequent charges emit spans under
+    /// `root` in the node tracer. A null trace (or a disabled tracer)
+    /// leaves the context untraced — charge helpers stay zero-cost.
+    pub fn with_trace(mut self, trace: TraceId, root: SpanId) -> Self {
+        let tracer = self.node.tracer();
+        if tracer.enabled() && trace != TraceId(0) {
+            self.trace = Some(TraceCtx { tracer: tracer.clone(), trace, root });
+        }
+        self
+    }
+
+    /// Emit one span under the request's root, if tracing is attached.
+    #[allow(clippy::too_many_arguments)]
+    fn trace_span(
+        &self,
+        name: &str,
+        cat: &'static str,
+        device: usize,
+        stream: &'static str,
+        t0_ns: u64,
+        t1_ns: u64,
+        bytes: u64,
+        flops: u64,
+    ) {
+        if let Some(tc) = &self.trace {
+            tc.tracer.span(tc.trace, tc.root, name, cat, device, stream, t0_ns, t1_ns, bytes, flops);
+        }
     }
 
     /// Install a cooperative-preemption hook, invoked at every
@@ -221,15 +274,33 @@ impl<'a, S: Scalar> Ctx<'a, S> {
     /// compute stream (serialized with that device's other updates,
     /// overlapping its panel and copy streams).
     pub fn charge_device_time(&self, dev: usize, seconds: f64, flops: u64) -> crate::Result<()> {
+        let traced = self.trace.is_some();
         match &self.timeline {
             Some(tl) => {
                 self.node.device(dev)?; // validate the ordinal
+                let t0 = if traced { tl.compute(dev).horizon_ns() } else { 0 };
                 tl.compute(dev).issue(seconds);
                 tl.note_busy(dev, seconds);
                 self.node.metrics().add_kernel(flops);
+                if traced {
+                    self.trace_span(
+                        "kernel", "compute", dev, "compute", t0,
+                        tl.compute(dev).horizon_ns(), 0, flops,
+                    );
+                }
                 Ok(())
             }
-            None => self.node.charge_kernel(dev, seconds, flops),
+            None => {
+                let t0 = if traced { self.node.device(dev)?.clock().now_ns() } else { 0 };
+                self.node.charge_kernel(dev, seconds, flops)?;
+                if traced {
+                    self.trace_span(
+                        "kernel", "compute", dev, "compute", t0,
+                        self.node.device(dev)?.clock().now_ns(), 0, flops,
+                    );
+                }
+                Ok(())
+            }
         }
     }
 
@@ -254,6 +325,7 @@ impl<'a, S: Scalar> Ctx<'a, S> {
             return Ok(());
         }
         let t = self.node.topology().copy_time(from, to, bytes);
+        let traced = self.trace.is_some();
         match &self.timeline {
             Some(tl) => {
                 self.node.device(from)?;
@@ -262,13 +334,25 @@ impl<'a, S: Scalar> Ctx<'a, S> {
                 tl.compute(to).wait_event(Event::at(done));
                 tl.note_busy(from, t);
                 self.node.metrics().add_peer(bytes as u64);
+                if traced {
+                    let t1 = tl.copy(from).horizon_ns();
+                    let dur = (t * 1e9).round() as u64;
+                    self.trace_span(
+                        "p2p", "xfer", from, "copy", t1.saturating_sub(dur), t1,
+                        bytes as u64, 0,
+                    );
+                }
                 Ok(())
             }
             None => {
                 let src_clock = self.node.device(from)?.clock();
+                let t0 = if traced { src_clock.now_ns() } else { 0 };
                 src_clock.advance(t);
                 self.node.metrics().add_peer(bytes as u64);
                 self.node.device(to)?.clock().sync_to(src_clock.now());
+                if traced {
+                    self.trace_span("p2p", "xfer", from, "copy", t0, src_clock.now_ns(), bytes as u64, 0);
+                }
                 Ok(())
             }
         }
@@ -313,10 +397,22 @@ impl<'a, S: Scalar> Ctx<'a, S> {
     /// the sender's copy stream with the same shared-link arithmetic.
     pub fn charge_broadcast(&self, from: usize, bytes: usize) -> crate::Result<()> {
         let nd = self.node.num_devices();
+        let traced = self.trace.is_some();
         match &self.timeline {
-            Some(tl) => self.pipelined_fanout(tl, from, bytes, true),
+            Some(tl) => {
+                let t0 = if traced { tl.copy(from).horizon_ns() } else { 0 };
+                self.pipelined_fanout(tl, from, bytes, true)?;
+                if traced {
+                    self.trace_span(
+                        "bcast", "collective", from, "copy", t0, tl.copy(from).horizon_ns(),
+                        (bytes * (nd.saturating_sub(1))) as u64, 0,
+                    );
+                }
+                Ok(())
+            }
             None => {
                 let src_clock = self.node.device(from)?.clock();
+                let t0 = if traced { src_clock.now_ns() } else { 0 };
                 for d in 0..nd {
                     if d == from {
                         continue;
@@ -325,6 +421,12 @@ impl<'a, S: Scalar> Ctx<'a, S> {
                     src_clock.advance(t / (nd.max(2) - 1) as f64); // link shared across fan-out
                     self.node.metrics().add_peer(bytes as u64);
                     self.node.device(d)?.clock().sync_to(src_clock.now());
+                }
+                if traced {
+                    self.trace_span(
+                        "bcast", "collective", from, "copy", t0, src_clock.now_ns(),
+                        (bytes * (nd.saturating_sub(1))) as u64, 0,
+                    );
                 }
                 Ok(())
             }
@@ -347,7 +449,19 @@ impl<'a, S: Scalar> Ctx<'a, S> {
     /// with the substitution chain.
     pub fn charge_fanout(&self, from: usize, bytes: usize) -> crate::Result<()> {
         match &self.timeline {
-            Some(tl) => self.pipelined_fanout(tl, from, bytes, false),
+            Some(tl) => {
+                let traced = self.trace.is_some();
+                let t0 = if traced { tl.copy(from).horizon_ns() } else { 0 };
+                self.pipelined_fanout(tl, from, bytes, false)?;
+                if traced {
+                    let nd = self.node.num_devices();
+                    self.trace_span(
+                        "fanout", "collective", from, "copy", t0, tl.copy(from).horizon_ns(),
+                        (bytes * (nd.saturating_sub(1))) as u64, 0,
+                    );
+                }
+                Ok(())
+            }
             None => self.charge_broadcast(from, bytes),
         }
     }
@@ -361,14 +475,28 @@ impl<'a, S: Scalar> Ctx<'a, S> {
     /// or a singleton group charge nothing extra beyond the listed
     /// receivers.
     pub fn charge_group_broadcast(&self, from: usize, members: &[usize], bytes: usize) -> crate::Result<()> {
+        self.group_broadcast_impl("group_bcast", from, members, bytes)
+    }
+
+    /// [`Ctx::charge_group_broadcast`]'s body, with the span name the
+    /// caller wants ("group_bcast" or the ring collectives' axis name).
+    fn group_broadcast_impl(
+        &self,
+        span_name: &'static str,
+        from: usize,
+        members: &[usize],
+        bytes: usize,
+    ) -> crate::Result<()> {
         let receivers = members.iter().filter(|&&d| d != from).count();
         if receivers == 0 || bytes == 0 {
             return Ok(());
         }
+        let traced = self.trace.is_some();
         match &self.timeline {
             Some(tl) => {
                 self.node.device(from)?;
                 let nb = tl.compute(from).horizon();
+                let t0 = if traced { tl.copy(from).horizon_ns() } else { 0 };
                 for &d in members {
                     if d == from {
                         continue;
@@ -379,10 +507,17 @@ impl<'a, S: Scalar> Ctx<'a, S> {
                     self.node.metrics().add_peer(bytes as u64);
                     tl.compute(d).wait_event(Event::at(done));
                 }
+                if traced {
+                    self.trace_span(
+                        span_name, "collective", from, "copy", t0, tl.copy(from).horizon_ns(),
+                        (bytes * receivers) as u64, 0,
+                    );
+                }
                 Ok(())
             }
             None => {
                 let src_clock = self.node.device(from)?.clock();
+                let t0 = if traced { src_clock.now_ns() } else { 0 };
                 for &d in members {
                     if d == from {
                         continue;
@@ -391,6 +526,12 @@ impl<'a, S: Scalar> Ctx<'a, S> {
                     src_clock.advance(t);
                     self.node.metrics().add_peer(bytes as u64);
                     self.node.device(d)?.clock().sync_to(src_clock.now());
+                }
+                if traced {
+                    self.trace_span(
+                        span_name, "collective", from, "copy", t0, src_clock.now_ns(),
+                        (bytes * receivers) as u64, 0,
+                    );
                 }
                 Ok(())
             }
@@ -426,7 +567,11 @@ impl<'a, S: Scalar> Ctx<'a, S> {
         if receivers > 0 && bytes > 0 {
             self.note_ring_bytes(axis, (bytes * receivers) as u64);
         }
-        self.charge_group_broadcast(from, members, bytes)
+        let name = match axis {
+            RingAxis::Row => "ring-row",
+            RingAxis::Col => "ring-col",
+        };
+        self.group_broadcast_impl(name, from, members, bytes)
     }
 
     /// Row-ring broadcast: `bytes` from `from` to its grid-row peers.
@@ -483,6 +628,7 @@ impl<'a, S: Scalar> Ctx<'a, S> {
         bytes: usize,
         not_before: f64,
     ) -> crate::Result<f64> {
+        let traced = self.trace.is_some();
         match &self.timeline {
             Some(tl) => {
                 self.node.peer_copy_untimed(src, 0, dst, 0, bytes)?;
@@ -490,12 +636,75 @@ impl<'a, S: Scalar> Ctx<'a, S> {
                 let done = tl.copy(src.device).issue_after(not_before, t);
                 tl.note_busy(src.device, t);
                 tl.compute(dst.device).wait_event(Event::at(done));
+                if traced {
+                    let t1 = tl.copy(src.device).horizon_ns();
+                    let dur = (t * 1e9).round() as u64;
+                    self.trace_span(
+                        "panel_copy", "xfer", src.device, "copy",
+                        t1.saturating_sub(dur), t1, bytes as u64, 0,
+                    );
+                }
                 Ok(done)
             }
             None => {
+                let t0 = if traced {
+                    self.node.device(src.device)?.clock().now_ns()
+                } else {
+                    0
+                };
                 self.node.peer_copy(src, 0, dst, 0, bytes)?;
+                if traced {
+                    self.trace_span(
+                        "panel_copy", "xfer", src.device, "copy", t0,
+                        self.node.device(src.device)?.clock().now_ns(), bytes as u64, 0,
+                    );
+                }
                 Ok(0.0)
             }
+        }
+    }
+}
+
+/// Lift a pipelined routine's per-device×stream horizons
+/// ([`PipelineTimeline::snapshot`]) into summary spans under `parent`.
+///
+/// The lookahead schedules issue panel/copy work directly onto their
+/// streams (bypassing the per-charge helpers), so this is how a traced
+/// request captures those stages: one `stage:<stream>` span per
+/// device×stream covering `[0, horizon]` on the exact integer-ns
+/// timeline the streams already carry. No-op for empty horizons or a
+/// null/disabled trace.
+pub fn lift_timeline_spans(
+    tracer: &Tracer,
+    trace: TraceId,
+    parent: SpanId,
+    snap: &[DeviceTimeline],
+) {
+    if !tracer.enabled() || trace == TraceId(0) {
+        return;
+    }
+    for tl in snap {
+        for (stream, horizon) in [
+            ("compute", tl.compute_horizon),
+            ("panel", tl.panel_horizon),
+            ("copy", tl.copy_horizon),
+        ] {
+            let t1 = (horizon * 1e9).round() as u64;
+            if t1 == 0 {
+                continue;
+            }
+            tracer.span(
+                trace,
+                parent,
+                &format!("stage:{stream}"),
+                "stage",
+                tl.device,
+                stream,
+                0,
+                t1,
+                0,
+                0,
+            );
         }
     }
 }

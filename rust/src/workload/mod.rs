@@ -36,6 +36,7 @@ use crate::coordinator::{
 use crate::device::SimNode;
 use crate::error::Result;
 use crate::linalg::Matrix;
+use crate::obs::TraceId;
 use crate::rng::Rng;
 use crate::scalar::{c32, c64, DType, Scalar};
 use std::collections::VecDeque;
@@ -441,8 +442,27 @@ impl OpenLoop {
     /// Returns the pending completions in arrival order.
     pub fn drive(&self, node: &SimNode, svc: &SolveService, count: usize) -> Result<Vec<Pending>> {
         let mut out = Vec::with_capacity(count);
+        let tracer = node.tracer().clone();
         for arrival in self.trace(count) {
             node.sync_clocks_to_ns(arrival.at_ns);
+            // Arrival events are global (the service mints the request's
+            // TraceId at submit): the decision log records the traffic
+            // shape the spans were generated under.
+            if tracer.enabled() {
+                tracer.decision(
+                    TraceId(0),
+                    arrival.at_ns,
+                    "arrival",
+                    format!(
+                        "{:?} n={} dtype={} class={} tenant={}",
+                        arrival.spec.route,
+                        arrival.spec.n,
+                        arrival.spec.dtype.name(),
+                        arrival.spec.class.name(),
+                        arrival.spec.tenant
+                    ),
+                );
+            }
             out.push(submit_spec(svc, &arrival.spec, node.sim_time_ns())?);
         }
         Ok(out)
@@ -482,10 +502,27 @@ impl ClosedLoop {
         let mut window: VecDeque<Pending> = VecDeque::new();
         let mut results = Vec::with_capacity(total);
         let mut submitted = 0usize;
+        let tracer = node.tracer().clone();
         let mut submit_next =
             |rng: &mut Rng, window: &mut VecDeque<Pending>, submitted: &mut usize| -> Result<()> {
                 let spec = self.population.sample(rng);
-                window.push_back(submit_spec(svc, &spec, node.sim_time_ns())?);
+                let now_ns = node.sim_time_ns();
+                if tracer.enabled() {
+                    tracer.decision(
+                        TraceId(0),
+                        now_ns,
+                        "arrival",
+                        format!(
+                            "{:?} n={} dtype={} class={} tenant={}",
+                            spec.route,
+                            spec.n,
+                            spec.dtype.name(),
+                            spec.class.name(),
+                            spec.tenant
+                        ),
+                    );
+                }
+                window.push_back(submit_spec(svc, &spec, now_ns)?);
                 *submitted += 1;
                 Ok(())
             };

@@ -1,0 +1,306 @@
+//! End-to-end tracing regression suite.
+//!
+//! Four guarantees the observability subsystem makes, each pinned
+//! here:
+//!
+//! 1. **Determinism** — the Chrome-trace export of the `(2, 2, 4, 32)`
+//!    grid-native lookahead potrf run is byte-pinned in
+//!    `tests/golden/potrf2d_trace.json`, the same discipline as
+//!    `tests/golden/potrf2d_timelines.txt`. Any change to span
+//!    content, ordering, or the JSON encoder fails loudly; regenerate
+//!    intentionally with `UPDATE_GOLDEN=1 cargo test --test obs_trace`.
+//! 2. **Passivity** — enabling the tracer changes no timeline by a
+//!    single nanosecond and no factor by a single bit.
+//! 3. **Complete span trees** — every submitted request, including
+//!    pod-coalesced smalls, killed-worker requeues, and preempted
+//!    solves, yields exactly one root span and no orphaned parents.
+//! 4. **Zero drift on barrier schedules** — the planner estimates the
+//!    [`DriftMonitor`](jaxmg::obs::DriftMonitor) records are bitwise
+//!    [`Predictor::dist_makespan`] through [`secs_to_ns`].
+
+use jaxmg::batch::SmallRoutine;
+use jaxmg::coordinator::{plan_dist, secs_to_ns, DistRoutine, Slo, SmallConfig, SolveService};
+use jaxmg::costmodel::{GpuCostModel, Predictor};
+use jaxmg::device::SimNode;
+use jaxmg::layout::BlockCyclic2D;
+use jaxmg::linalg::Matrix;
+use jaxmg::obs::{chrome_trace_json, validate_chrome_json, SpanId, SpanRec, TraceId};
+use jaxmg::scalar::DType;
+use jaxmg::serve::{MpmdConfig, MpmdService};
+use jaxmg::solver::{lift_timeline_spans, potrf_dist, Ctx, PipelineConfig, SolverBackend};
+use jaxmg::tile::{DistMatrix, LayoutKind};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// The offline grid-native potrf run of `golden_timeline::run_potrf2d`,
+/// optionally traced: one minted trace, per-charge spans via
+/// [`Ctx::with_trace`], lifted stage spans, and a closed root.
+fn traced_potrf2d(
+    p: usize,
+    q: usize,
+    tile: usize,
+    n: usize,
+    cfg: PipelineConfig,
+    trace_on: bool,
+) -> (Matrix<f64>, u64, Vec<SpanRec>) {
+    let node = SimNode::new_uniform(p * q, 1 << 27);
+    let model = GpuCostModel::h200();
+    let backend = SolverBackend::<f64>::Native;
+    let a = Matrix::<f64>::spd_random(n, 0xD15C0 + n as u64);
+    let lay = LayoutKind::Grid(BlockCyclic2D::new(n, n, tile, tile, p, q).unwrap());
+    let mut dm = DistMatrix::scatter(&node, &a, lay).unwrap();
+    node.reset_accounting();
+    let tracer = node.tracer().clone();
+    let (trace, root) = if trace_on {
+        tracer.enable();
+        tracer.new_trace()
+    } else {
+        (TraceId(0), SpanId(0))
+    };
+    let ctx = Ctx::with_pipeline(&node, &model, &backend, cfg).with_trace(trace, root);
+    potrf_dist(&ctx, &mut dm).unwrap();
+    // Capture the makespan BEFORE the verification gather, exactly as
+    // the golden-timeline suite does.
+    let end_ns = node.sim_time_ns();
+    if trace_on {
+        if let Some(snap) = ctx.timeline_snapshot() {
+            lift_timeline_spans(&tracer, trace, root, &snap);
+        }
+        tracer.close_root(trace, root, "request:potrf", 0, 0, end_ns, 0, 0);
+    }
+    (dm.gather().unwrap(), end_ns, tracer.spans())
+}
+
+/// Exact-compare a rendered artifact against its checked-in golden
+/// file, bootstrapping (or regenerating under `UPDATE_GOLDEN=1`) it.
+fn check_golden(file: &str, rendered: String) {
+    let golden_dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden");
+    let golden_path = golden_dir.join(file);
+    let update = std::env::var_os("UPDATE_GOLDEN").is_some();
+    if update || !golden_path.exists() {
+        std::fs::create_dir_all(&golden_dir).unwrap();
+        std::fs::write(&golden_path, &rendered).unwrap();
+        eprintln!("golden trace written to {golden_path:?}");
+        return;
+    }
+    let golden = std::fs::read_to_string(&golden_path).unwrap();
+    assert_eq!(
+        golden, rendered,
+        "trace export drifted from {golden_path:?} — spans, ordering, or the JSON \
+         encoder changed (intentional: rerun with UPDATE_GOLDEN=1 and review the diff)"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 1. byte-pinned Chrome-trace export
+// ---------------------------------------------------------------------------
+
+#[test]
+fn potrf2d_lookahead_trace_matches_golden_chrome_json() {
+    let (_, _, spans) = traced_potrf2d(2, 2, 4, 32, PipelineConfig::lookahead(2), true);
+    assert!(!spans.is_empty(), "traced run recorded no spans");
+    let json = chrome_trace_json(&spans);
+    let events = validate_chrome_json(&json).expect("export must be valid chrome JSON");
+    assert!(events > 0, "trace has no complete events");
+    check_golden("potrf2d_trace.json", json);
+}
+
+// ---------------------------------------------------------------------------
+// 2. passivity: tracing never charges simulated time
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tracing_changes_no_timeline_by_a_single_ns() {
+    let (l_off, t_off, s_off) = traced_potrf2d(2, 2, 4, 32, PipelineConfig::lookahead(2), false);
+    let (l_on, t_on, s_on) = traced_potrf2d(2, 2, 4, 32, PipelineConfig::lookahead(2), true);
+    assert!(s_off.is_empty(), "disabled tracer must record nothing");
+    assert!(!s_on.is_empty(), "enabled tracer must record spans");
+    assert_eq!(t_off, t_on, "tracing shifted the lookahead makespan");
+    assert_eq!(l_off.as_slice(), l_on.as_slice(), "tracing changed the factor");
+
+    let (l_off, t_off, _) = traced_potrf2d(2, 2, 4, 32, PipelineConfig::barrier(), false);
+    let (l_on, t_on, _) = traced_potrf2d(2, 2, 4, 32, PipelineConfig::barrier(), true);
+    assert_eq!(t_off, t_on, "tracing shifted the barrier makespan");
+    assert_eq!(l_off.as_slice(), l_on.as_slice(), "tracing changed the factor");
+}
+
+// ---------------------------------------------------------------------------
+// 3. span-tree completeness under load (and under a worker kill)
+// ---------------------------------------------------------------------------
+
+/// Every trace id in `spans` must form exactly one rooted tree:
+/// one span with `parent == SpanId(0)`, every other parent resolving
+/// to a span id recorded in the same trace, and no inverted clocks.
+/// Returns the number of distinct traces (== number of roots).
+fn assert_span_forest(spans: &[SpanRec]) -> usize {
+    let mut by_trace: BTreeMap<u64, Vec<&SpanRec>> = BTreeMap::new();
+    for s in spans {
+        assert_ne!(s.trace.0, 0, "recorded span without a trace id: {s:?}");
+        by_trace.entry(s.trace.0).or_default().push(s);
+    }
+    for (trace, ss) in &by_trace {
+        let ids: BTreeSet<u64> = ss.iter().map(|s| s.span.0).collect();
+        let roots = ss.iter().filter(|s| s.parent == SpanId(0)).count();
+        assert_eq!(roots, 1, "trace {trace} has {roots} root spans (want exactly 1)");
+        for s in ss {
+            if s.parent != SpanId(0) {
+                assert!(
+                    ids.contains(&s.parent.0),
+                    "trace {trace}: span {} '{}' has orphan parent {}",
+                    s.span.0,
+                    s.name,
+                    s.parent.0
+                );
+            }
+            assert!(s.t1_ns >= s.t0_ns, "span '{}' ends before it starts", s.name);
+        }
+    }
+    by_trace.len()
+}
+
+#[test]
+fn every_spmd_request_yields_one_complete_span_tree() {
+    let node = SimNode::new_uniform(4, 1 << 30);
+    node.tracer().enable();
+    let svc = SolveService::with_small_config(node.clone(), 2, SmallConfig::with_tile(16));
+
+    let a = Matrix::<f64>::spd_random(96, 7);
+    let b = a.matmul(&Matrix::<f64>::random(96, 1, 8));
+    let d1 = svc.submit_dist(DistRoutine::Potrf, a.clone(), None).unwrap();
+    let d2 = svc
+        .submit_dist_slo(DistRoutine::Potrs, a.clone(), Some(b.clone()), Slo::interactive())
+        .unwrap();
+    let smalls: Vec<_> = (0..12)
+        .map(|i| {
+            let n = 12 + (i % 3) * 9;
+            let sa = Matrix::<f64>::spd_random(n, 100 + i as u64);
+            let sb = Matrix::<f64>::random(n, 1, 200 + i as u64);
+            svc.submit_small(SmallRoutine::Potrs, sa, Some(sb)).unwrap()
+        })
+        .collect();
+    let _ = d1.wait();
+    let _ = d2.wait();
+    svc.flush_small();
+    for h in smalls {
+        let _ = h.wait();
+    }
+    svc.drain();
+
+    let spans = node.tracer().spans();
+    let traces = assert_span_forest(&spans);
+    // Two distributed requests plus at least one flushed pod bucket.
+    assert!(traces >= 3, "expected >= 3 span trees, got {traces}");
+    let decisions = node.tracer().decisions();
+    assert!(
+        decisions.iter().any(|d| d.kind == "admit"),
+        "the SPMD service must log admit decisions"
+    );
+}
+
+#[test]
+fn mpmd_kill_drill_yields_complete_span_trees() {
+    let node = SimNode::new_uniform(4, 1 << 30);
+    let svc = MpmdService::with_config(node.clone(), MpmdConfig::with_tile(32));
+    svc.tracer().enable();
+
+    let a = Matrix::<f64>::spd_random(128, 1);
+    let b = a.matmul(&Matrix::<f64>::random(128, 1, 2));
+    let dist: Vec<_> = (0..4).map(|_| svc.submit_potrs(a.clone(), b.clone()).unwrap()).collect();
+    let smalls: Vec<_> = (0..24)
+        .map(|i| {
+            let n = 12 + (i % 3) * 9;
+            let sa = Matrix::<f64>::spd_random(n, 300 + i as u64);
+            let sb = Matrix::<f64>::random(n, 1, 400 + i as u64);
+            svc.submit_small(SmallRoutine::Potrs, sa, Some(sb)).unwrap()
+        })
+        .collect();
+    svc.kill_worker(2).unwrap();
+    for h in dist {
+        let _ = h.wait();
+    }
+    svc.flush_small();
+    for h in smalls {
+        let _ = h.wait();
+    }
+    svc.drain();
+
+    let spans = svc.tracer().spans();
+    let traces = assert_span_forest(&spans);
+    assert!(traces >= 5, "expected >= 5 span trees, got {traces}");
+    let decisions = svc.tracer().decisions();
+    assert!(
+        decisions.iter().any(|d| d.kind == "kill"),
+        "the kill must be in the decision log"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 4. zero drift against the Predictor on barrier schedules
+// ---------------------------------------------------------------------------
+
+#[test]
+fn barrier_drift_is_bitwise_zero_against_the_predictor() {
+    const N: usize = 128;
+    const TILE: usize = 32;
+    let node = SimNode::new_uniform(4, 1 << 30);
+    // Barrier pipeline, no factor cache, no correction: every
+    // submission re-plans and the ticket estimate IS the plan estimate.
+    let svc = MpmdService::with_config(node.clone(), MpmdConfig::with_tile(TILE));
+    svc.tracer().enable();
+    for seed in 1..=3u64 {
+        let a = Matrix::<f64>::spd_random(N, seed);
+        let _ = svc.submit_potrf(a).unwrap().wait();
+    }
+    svc.drain();
+
+    let stats = svc.tracer().drift().stats();
+    assert!(!stats.is_empty(), "barrier potrf runs must record drift samples");
+    let pred = Predictor {
+        model: GpuCostModel::h200(),
+        topo: node.topology().clone(),
+        dtype: DType::F64,
+    };
+    for (key, st) in &stats {
+        assert_eq!(key.routine, "potrf");
+        assert_eq!(key.dtype, "float64");
+        assert_eq!(key.n, N as u64);
+        let model_ns = secs_to_ns(pred.dist_makespan(
+            &key.routine,
+            key.n as usize,
+            0,
+            TILE,
+            key.grid.0 as usize,
+            key.grid.1 as usize,
+        ));
+        // The recorded plan estimates are the Predictor's own numbers,
+        // bitwise: model drift on a barrier schedule is exactly zero.
+        assert_eq!(
+            st.est_model_sum,
+            st.samples as u128 * model_ns as u128,
+            "plan estimates drifted from the Predictor for {key:?}"
+        );
+        // Uncorrected queue estimates equal the plan estimates.
+        assert_eq!(
+            st.est_used_sum, st.est_model_sum,
+            "queue estimate diverged without correction for {key:?}"
+        );
+    }
+
+    // And the planner's claim directly, without the service in between.
+    let plan = plan_dist(
+        "potrf",
+        N,
+        0,
+        TILE,
+        4,
+        DType::F64,
+        &GpuCostModel::h200(),
+        node.topology(),
+        None,
+    )
+    .unwrap();
+    assert_eq!(
+        plan.est_ns,
+        secs_to_ns(pred.dist_makespan("potrf", N, 0, TILE, plan.grid.0, plan.grid.1)),
+        "plan_dist estimate is not the Predictor makespan bitwise"
+    );
+}
