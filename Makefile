@@ -36,6 +36,12 @@
 #                      bounded host overhead, and drift correction must
 #                      tighten the lookahead queue estimates (part of
 #                      `make check`)
+#   make bench-fabric  multi-node fabric bench in smoke/test mode:
+#                      hierarchical ring-of-rings vs flat collectives
+#                      (bitwise numerics + the payload-bound win), the
+#                      1-node-vs-2-node plan_dist crossover, and
+#                      island-confined serving (CI-friendly, part of
+#                      `make check`)
 #   make trace         e2e driver + MPMD kill drill with JAXMG_TRACE
 #                      set: exports validated Chrome-trace JSON,
 #                      Prometheus text, and JSONL decision logs under
@@ -44,7 +50,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test check clippy fmt python-tests test-xla bench bench-redist bench-batch bench-serve bench-grid bench-traffic bench-cache bench-obs trace e2e artifacts clean
+.PHONY: build test check clippy fmt python-tests test-xla bench bench-redist bench-batch bench-serve bench-grid bench-traffic bench-cache bench-obs bench-fabric trace e2e artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -67,7 +73,7 @@ python-tests:
 		echo "skipping python tests (pytest/jax/hypothesis not importable)"; \
 	fi
 
-check: build test clippy fmt python-tests bench-serve bench-grid bench-traffic bench-cache bench-obs
+check: build test clippy fmt python-tests bench-serve bench-grid bench-traffic bench-cache bench-obs bench-fabric
 
 # Artifact-gated XLA integration tests (fail with a pointed message
 # when artifacts are absent — that failure mode is itself under test).
@@ -129,6 +135,13 @@ bench-cache:
 # repeat-solve stream.
 bench-obs:
 	OBS_BENCH_SMOKE=1 $(CARGO) bench --bench obs
+
+# The fabric bench is the multi-node acceptance harness: hierarchical
+# ring-of-rings collectives vs flat dispatch (bitwise factors, strict
+# win at the payload-bound rung), the 1-node-vs-2-node routing
+# crossover through plan_dist, and island-confined serving.
+bench-fabric:
+	FABRIC_BENCH_SMOKE=1 $(CARGO) bench --bench fabric
 
 e2e:
 	$(CARGO) run --release --example e2e_driver

@@ -1,0 +1,161 @@
+//! The multi-node fabric bench: hierarchical ring-of-rings collectives
+//! vs flat dispatch on a 2×8 two-tier fabric, and the 1-node-vs-2-node
+//! routing crossover end-to-end through the planner and the service.
+//!
+//! Three sections, each asserting the invariants it prints:
+//!
+//! 1. **ring-of-rings vs flat dispatch** — the same grid-native potrf
+//!    under hierarchical and `with_flat_collectives()` pricing:
+//!    bitwise-identical factors, and the latency→payload crossover —
+//!    flat's fan-out-amortized inter latency wins tiny rings, the
+//!    hierarchical O(islands) payload discipline wins once rings carry
+//!    real bytes (strictly, at the pinned top rung).
+//! 2. **planner routing** — `plan_dist` on the fabric topology: small
+//!    and mid shapes confine to one island's device prefix (narrow
+//!    plan, zero-byte admission on the idle island), shapes past the
+//!    crossover span both islands on an island-aligned grid.
+//! 3. **island-confined serving** — a `SolveService` on the 16-device
+//!    fabric routes a small potrs onto one 8-device island and returns
+//!    bitwise the answer an 8-device single-node service computes.
+//!
+//! `FABRIC_BENCH_SMOKE=1` shrinks the shapes for `make bench-fabric`
+//! (CI test mode); every asserted invariant is identical.
+
+use jaxmg::coordinator::{plan_dist, DistRoutine, SmallConfig, SolveService};
+use jaxmg::costmodel::{GpuCostModel, Predictor};
+use jaxmg::prelude::*;
+use jaxmg::scalar::DType;
+use jaxmg::solver::{potrf_dist, Ctx};
+use jaxmg::tile::{DistMatrix, LayoutKind};
+
+fn main() {
+    let smoke = std::env::var_os("FABRIC_BENCH_SMOKE").is_some();
+    let model = GpuCostModel::h200();
+
+    // ---- 1. ring-of-rings vs flat dispatch ----------------------------
+    println!("== hierarchical vs flat collectives: grid potrf (8x2, tile 256), 2x8 fabric ==\n");
+    println!(
+        "{:>8} {:>6} {:>14} {:>14} {:>8} {:>12} {:>12} {:>8}",
+        "N", "tile", "hier[µs]", "flat[µs]", "win[%]", "inter[KiB]", "intra[KiB]", "bcasts"
+    );
+    let (p, q, tile) = (8usize, 2usize, 256usize);
+    let ladder: &[usize] = if smoke { &[2048] } else { &[2048, 4096] };
+    let top = *ladder.last().unwrap();
+    for &n in ladder {
+        let run = |flat: bool| -> (Matrix<f64>, f64, u64, u64, u64) {
+            let fab = Fabric::h200(2);
+            let node = fab.node();
+            let backend = SolverBackend::<f64>::Native;
+            let a = Matrix::<f64>::spd_random(n, 0xFAB + n as u64);
+            let lay = LayoutKind::Grid(BlockCyclic2D::new(n, n, tile, tile, p, q).unwrap());
+            let mut dm = DistMatrix::scatter(node, &a, lay).unwrap();
+            node.reset_accounting();
+            let mut ctx =
+                Ctx::with_pipeline(node, &model, &backend, PipelineConfig::lookahead(2));
+            if flat {
+                ctx = ctx.with_flat_collectives();
+            }
+            potrf_dist(&ctx, &mut dm).unwrap();
+            let t = node.sim_time();
+            let m = node.metrics().snapshot();
+            (dm.gather().unwrap(), t, m.fabric_inter_bytes, m.fabric_intra_bytes, m.fabric_bcasts)
+        };
+        let (l_hier, t_hier, inter, intra, bcasts) = run(false);
+        let (l_flat, t_flat, _, _, flat_bcasts) = run(true);
+        println!(
+            "{n:>8} {tile:>6} {:>14.1} {:>14.1} {:>8.2} {:>12.1} {:>12.1} {bcasts:>8}",
+            t_hier * 1e6,
+            t_flat * 1e6,
+            (1.0 - t_hier / t_flat) * 100.0,
+            inter as f64 / 1024.0,
+            intra as f64 / 1024.0,
+        );
+        assert_eq!(
+            l_hier.as_slice(),
+            l_flat.as_slice(),
+            "collective dispatch changed numerics at n={n}"
+        );
+        assert!(inter > 0 && intra > 0 && bcasts > 0, "hierarchical rings must be staged");
+        assert_eq!(flat_bcasts, 0, "flat dispatch staged a hierarchical bcast");
+        if n == top {
+            assert!(
+                t_hier < t_flat,
+                "hierarchical {t_hier} !< flat {t_flat} at the payload-bound rung n={n}"
+            );
+        }
+    }
+    println!("\n(tiny rings are latency-bound — flat's fan-out-amortized inter latency wins;");
+    println!(" fat rings are payload-bound — one fabric crossing per island wins decisively)");
+
+    // ---- 2. planner routing: 1 node vs 2 nodes ------------------------
+    println!("\n== fabric routing: plan_dist on the 2x8 topology (f64) ==\n");
+    println!(
+        "{:>8} {:>8} {:>6} {:>8} {:>8} {:>12}",
+        "routine", "N", "tile", "devices", "grid", "est[ms]"
+    );
+    let fab = Fabric::h200(2);
+    let topo = fab.node().topology();
+    let ndev = fab.num_devices();
+    let route = |routine: &str, n: usize, nrhs: usize, tile: usize| -> (usize, (usize, usize)) {
+        let plan = plan_dist(routine, n, nrhs, tile, ndev, DType::F64, &model, topo, None).unwrap();
+        println!(
+            "{routine:>8} {n:>8} {tile:>6} {:>8} {:>5}x{:<2} {:>12.3}",
+            plan.ndev,
+            plan.grid.0,
+            plan.grid.1,
+            plan.est_ns as f64 / 1e6
+        );
+        // Narrow plans still admit node-wide: zero bytes on the idle island.
+        assert_eq!(plan.footprint.devices(), ndev, "footprint must stay node-wide");
+        if plan.ndev < ndev {
+            for d in plan.ndev..ndev {
+                assert_eq!(plan.footprint.bytes(d), 0, "idle island must reserve nothing");
+            }
+        }
+        (plan.ndev, plan.grid)
+    };
+    let (d0, g0) = route("potrs", 96, 1, 8);
+    assert_eq!((d0, g0), (8, (1, 8)), "small potrs must confine to one island, 1D");
+    let (d1, _) = route("potrf", 16384, 0, 1024);
+    assert_eq!(d1, 8, "mid potrf must confine to one island");
+    let (d2, g2) = route("potrf", 65536, 0, 1024);
+    assert_eq!(d2, 16, "large potrf must span the fabric");
+    assert_eq!(g2.0 * g2.1, 16);
+    let (d3, _) = route("syevd", 4096, 0, 256);
+    assert_eq!(d3, 16, "syevd's bandwidth-hungry sweeps span early");
+    // The crossover is the predictor's own strict win, not a tie-break.
+    let pf = Predictor { model: model.clone(), topo: topo.clone(), dtype: DType::F64 };
+    let island: Vec<usize> = (0..8).collect();
+    let sub = Predictor {
+        model: model.clone(),
+        topo: topo.subset(&island).unwrap(),
+        dtype: DType::F64,
+    };
+    let (full, confined) = (
+        pf.dist_makespan("potrf", 65536, 0, 1024, g2.0, g2.1),
+        sub.dist_makespan("potrf", 65536, 0, 1024, 4, 2),
+    );
+    println!("\nspanning 65536: fabric {:.1} ms vs best island {:.1} ms", full * 1e3, confined * 1e3);
+    assert!(full < confined, "the spanning plan must be a strict predictor win");
+
+    // ---- 3. island-confined serving -----------------------------------
+    println!("\n== island-confined serving: 16-device fabric vs one 8-device node ==\n");
+    let (sn, stile) = (96usize, 8usize);
+    let sa = Matrix::<f64>::spd_random(sn, 7);
+    let sb = Matrix::<f64>::random(sn, 1, 8);
+    let run_svc = |node: SimNode| -> (Matrix<f64>, (usize, usize)) {
+        let svc = SolveService::with_small_config(node, 2, SmallConfig::with_tile(stile));
+        let (x, stats) =
+            svc.submit_dist(DistRoutine::Potrs, sa.clone(), Some(sb.clone())).unwrap().wait();
+        svc.drain();
+        (x, stats.grid)
+    };
+    let (x_fab, g_fab) = run_svc(fab.node().clone());
+    let (x_one, g_one) = run_svc(SimNode::new_uniform(8, 1 << 28));
+    println!("fabric-routed grid {g_fab:?}   single-island grid {g_one:?}   bitwise-equal: true");
+    assert_eq!(g_fab, (1, 8), "the fabric service must confine the small solve to one island");
+    assert_eq!(g_one, (1, 8));
+    assert_eq!(x_fab.as_slice(), x_one.as_slice(), "island confinement changed numerics");
+
+    println!("\nfabric bench OK");
+}

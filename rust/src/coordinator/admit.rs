@@ -86,6 +86,11 @@ impl DistRoutine {
 pub struct DistPlan {
     /// The chosen `(P, Q)` grid ( `(1, ndev)` is the 1D path).
     pub grid: (usize, usize),
+    /// Devices the plan actually occupies (`grid.0 * grid.1`) — fewer
+    /// than the node width when the fabric router confines a solve to
+    /// one island. The footprint is still node-wide (zero bytes on the
+    /// idle islands) so both admission accountants stay full-width.
+    pub ndev: usize,
     /// The layout solves scatter/stage into.
     pub kind: LayoutKind,
     /// Exact per-device workspace bytes on that layout.
@@ -104,6 +109,16 @@ pub struct DistPlan {
 /// layout, keeping small solves bitwise on the seed path; `P > 1`
 /// builds a square-tiled [`BlockCyclic2D`] grid admitted via
 /// [`Footprint::for_grid`].
+///
+/// On a multi-island fabric (`topo.num_islands() > 1`) the planner
+/// routes **1-node-vs-2-node per request** through
+/// [`Predictor::best_fabric_plan`]: a solve whose replayed makespan is
+/// best on one island gets a plan over that island's device prefix
+/// (fewer devices than the node — [`DistPlan::ndev`] records how
+/// many), priced by the island-subset predictor so the estimate is
+/// bitwise the flat single-node replay; only solves past the
+/// crossover span the inter-node links. Forced grids keep the flat
+/// semantics — they must cover every live device.
 #[allow(clippy::too_many_arguments)]
 pub fn plan_dist(
     routine: &str,
@@ -117,6 +132,22 @@ pub fn plan_dist(
     force: Option<(usize, usize)>,
 ) -> Result<DistPlan> {
     let predictor = Predictor { model: model.clone(), topo: topo.clone(), dtype };
+    if force.is_none() && topo.num_islands() > 1 && topo.num_devices() == ndev {
+        let (used, (p, q)) = predictor.best_fabric_plan(routine, n, nrhs, tile);
+        // Price the plan with the predictor that owns the chosen span:
+        // the island-subset replay for a confined solve (bitwise the
+        // flat single-node estimate), the fabric replay for a spanning
+        // one — exactly the costs `best_fabric_plan` compared.
+        let est = if used < ndev {
+            let island = topo.island_devices(0);
+            let sub = Predictor { model: model.clone(), topo: topo.subset(&island)?, dtype };
+            sub.dist_makespan(routine, n, nrhs, tile, p, q)
+        } else {
+            predictor.dist_makespan(routine, n, nrhs, tile, p, q)
+        };
+        let plan = build_plan(routine, n, nrhs, tile, used, dtype, (p, q), secs_to_ns(est))?;
+        return Ok(plan.pad_to(ndev));
+    }
     let (p, q) = match force {
         Some((p, q)) => {
             if p == 0 || q == 0 || p * q != ndev {
@@ -148,6 +179,7 @@ fn build_plan(
         let g = BlockCyclic2D::new(n, n, tile, tile, p, q)?;
         Ok(DistPlan {
             grid: (p, q),
+            ndev: p * q,
             kind: LayoutKind::Grid(g),
             footprint: Footprint::for_grid(routine, &g, nrhs, dtype)?,
             est_ns,
@@ -155,10 +187,22 @@ fn build_plan(
     } else {
         Ok(DistPlan {
             grid: (1, ndev),
+            ndev,
             kind: LayoutKind::BlockCyclic(BlockCyclic1D::new(n, tile, ndev)?),
             footprint: Footprint::for_routine(routine, n, nrhs, tile, ndev, dtype)?,
             est_ns,
         })
+    }
+}
+
+impl DistPlan {
+    /// Widen the admission footprint to `total` devices (zero bytes on
+    /// the devices the plan does not occupy) without touching the grid
+    /// or layout — how an island-confined plan passes the node-wide
+    /// `footprint.devices() == capacity.len()` admission check.
+    fn pad_to(mut self, total: usize) -> Self {
+        self.footprint = self.footprint.padded(total);
+        self
     }
 }
 
@@ -286,6 +330,17 @@ impl Footprint {
         }
     }
 
+    /// Widen to `total` devices by appending zero-byte entries — a
+    /// narrow (island-confined) plan admitted against a full-width
+    /// capacity table. Reserving zero bytes on a device is free, so
+    /// padding never changes what fits. No-op if already that wide.
+    pub fn padded(mut self, total: usize) -> Self {
+        if self.per_device.len() < total {
+            self.per_device.resize(total, 0);
+        }
+        self
+    }
+
     /// Number of devices covered.
     pub fn devices(&self) -> usize {
         self.per_device.len()
@@ -318,7 +373,8 @@ impl Footprint {
 #[derive(Debug, Default)]
 pub struct GridPlanCache {
     #[allow(clippy::type_complexity)]
-    shapes: Mutex<HashMap<(&'static str, DType, usize, usize, usize, usize), ((usize, usize), u64)>>,
+    shapes:
+        Mutex<HashMap<(&'static str, DType, usize, usize, usize, usize), ((usize, usize), usize, u64)>>,
 }
 
 impl GridPlanCache {
@@ -346,11 +402,11 @@ impl GridPlanCache {
         }
         let key = (routine, dtype, n, nrhs, tile, ndev);
         let cached = self.shapes.lock().unwrap().get(&key).copied();
-        if let Some((g, est_ns)) = cached {
-            return build_plan(routine, n, nrhs, tile, ndev, dtype, g, est_ns);
+        if let Some((g, used, est_ns)) = cached {
+            return Ok(build_plan(routine, n, nrhs, tile, used, dtype, g, est_ns)?.pad_to(ndev));
         }
         let plan = plan_dist(routine, n, nrhs, tile, ndev, dtype, model, topo, None)?;
-        self.shapes.lock().unwrap().insert(key, (plan.grid, plan.est_ns));
+        self.shapes.lock().unwrap().insert(key, (plan.grid, plan.ndev, plan.est_ns));
         Ok(plan)
     }
 }

@@ -320,6 +320,27 @@ impl ServiceInner {
         Ok(())
     }
 
+    /// Fold the current per-device reservations into per-island sums
+    /// and record the fabric high-water marks
+    /// ([`crate::metrics::Metrics::note_island_admitted`]). A no-op on
+    /// a flat (1-island) node, so the single-node fronts pay nothing.
+    fn note_island_reserved(&self, reserved: &[usize]) {
+        let topo = self.node.topology();
+        if topo.num_islands() <= 1 {
+            return;
+        }
+        let mut sums = [0u64; 8];
+        for (d, &b) in reserved.iter().enumerate() {
+            sums[topo.island_of(d).min(sums.len() - 1)] += b as u64;
+        }
+        let m = self.node.metrics();
+        for (i, &s) in sums.iter().enumerate() {
+            if s > 0 {
+                m.note_island_admitted(i, s);
+            }
+        }
+    }
+
     /// The simulated clock in integer nanoseconds — the timebase of the
     /// scheduler's queue waits and the coalescer's dwell bound. Taken
     /// straight off the devices' integer-ns [`crate::device::SimClock`]s
@@ -436,6 +457,7 @@ impl ServiceInner {
                             st.peak_reserved[d] = st.reserved[d];
                         }
                     }
+                    self.note_island_reserved(&st.reserved);
                     return true;
                 }
             }
@@ -594,6 +616,7 @@ fn try_run_interactive(inner: &Arc<ServiceInner>) {
                     peak_reserved[d] = reserved[d];
                 }
             }
+            inner.note_island_reserved(reserved);
             inner.quotas.admit(ticket.slo.tenant, q.total_bytes());
             *in_flight += 1;
             Some((ticket, q))
@@ -806,6 +829,7 @@ impl SolveService {
                                         peak_reserved[d] = reserved[d];
                                     }
                                 }
+                                inner.note_island_reserved(reserved);
                                 inner.quotas.admit(ticket.slo.tenant, q.total_bytes());
                                 *in_flight += 1;
                                 break Some((ticket, q));

@@ -54,8 +54,140 @@ impl Predictor {
         }
     }
 
+    /// Two-tier fabric predictor: `islands × per_island` H200 devices
+    /// joined by the inter-node interconnect
+    /// ([`NodeTopology::two_tier`]) — the replay twin of
+    /// `fabric::Fabric::h200`.
+    pub fn fabric(islands: usize, per_island: usize, dtype: DType) -> Self {
+        Predictor {
+            model: GpuCostModel::h200(),
+            topo: NodeTopology::two_tier(islands, per_island),
+            dtype,
+        }
+    }
+
     fn esize(&self) -> usize {
         self.dtype.size_of()
+    }
+
+    /// Number of distinct islands among devices `0..ndev` (1 on a flat
+    /// node — the gate every fabric pricing term hides behind, keeping
+    /// the flat replays bitwise the historical arithmetic).
+    fn islands_spanned(&self, ndev: usize) -> usize {
+        let nd = ndev.min(self.topo.num_devices());
+        let mut seen: Vec<usize> = Vec::new();
+        for d in 0..nd {
+            let isl = self.topo.island_of(d);
+            if !seen.contains(&isl) {
+                seen.push(isl);
+            }
+        }
+        seen.len().max(1)
+    }
+
+    /// First cross-island device pair within `0..ndev`, if any.
+    fn cross_pair(&self, ndev: usize) -> Option<(usize, usize)> {
+        let nd = ndev.min(self.topo.num_devices());
+        (1..nd)
+            .find(|&d| self.topo.island_of(d) != self.topo.island_of(0))
+            .map(|d| (0, d))
+    }
+
+    /// Representative link time for a devices-wide collective over
+    /// `0..ndev`: the inter-node link when the span crosses islands
+    /// (the fabric's shared pipe bounds every such step), otherwise
+    /// bitwise `copy_time(0, 1, bytes)` — the flat formula.
+    fn step_link_time(&self, ndev: usize, bytes: usize) -> f64 {
+        match self.cross_pair(ndev) {
+            Some((i, j)) => self.topo.copy_time(i, j, bytes),
+            None => self.topo.copy_time(0, 1, bytes),
+        }
+    }
+
+    /// Does any grid row group (`q` consecutive devices under the
+    /// row-major `dev(r, c) = r·q + c` map) straddle an island
+    /// boundary? Row-group collectives stay island-local exactly when
+    /// `q` divides the island width — the alignment
+    /// [`Predictor::best_grid`] rewards on a fabric.
+    fn row_groups_cross(&self, p: usize, q: usize) -> bool {
+        let nd = self.topo.num_devices();
+        (0..p).any(|r| {
+            (1..q).any(|c| {
+                let a = r * q;
+                let b = r * q + c;
+                a < nd && b < nd && self.topo.island_of(a) != self.topo.island_of(b)
+            })
+        })
+    }
+
+    /// Barrier ring-broadcast replay: the exact arithmetic of the
+    /// simulator's barrier group broadcast, on analytic clocks. A flat
+    /// span pays per-receiver link shares serialized on the sender
+    /// (`concurrent == 1` is bitwise the historical
+    /// `copy_time / recv` form); a span crossing islands runs the
+    /// hierarchical ring-of-rings — one representative per remote
+    /// island crosses the inter-node link at full (contended) cost,
+    /// the home island takes flat shares, then each remote island
+    /// fans out in parallel on its representative's clock.
+    fn ring_bcast_replay(
+        &self,
+        clk: &mut Clocks,
+        from: usize,
+        members: &[usize],
+        bytes: usize,
+        concurrent: usize,
+    ) {
+        let recv = members.iter().filter(|&&d| d != from).count();
+        if recv == 0 || bytes == 0 {
+            return;
+        }
+        let mut locals: Vec<usize> = Vec::new();
+        let mut remotes: Vec<(usize, Vec<usize>)> = Vec::new();
+        if self.topo.num_islands() > 1 {
+            let home = self.topo.island_of(from);
+            let mut islands: Vec<usize> = Vec::new();
+            for &d in members {
+                if d == from {
+                    continue;
+                }
+                let isl = self.topo.island_of(d);
+                if isl == home {
+                    locals.push(d);
+                } else {
+                    match islands.iter().position(|&x| x == isl) {
+                        Some(i) => remotes[i].1.push(d),
+                        None => {
+                            islands.push(isl);
+                            remotes.push((d, Vec::new()));
+                        }
+                    }
+                }
+            }
+        }
+        if remotes.is_empty() {
+            for &d in members {
+                if d == from {
+                    continue;
+                }
+                clk.advance(from, self.topo.ring_share_time(from, d, bytes, recv, concurrent));
+                clk.sync(d, from);
+            }
+            return;
+        }
+        for (rep, _) in &remotes {
+            clk.advance(from, self.topo.contended_time(from, *rep, bytes, concurrent));
+            clk.sync(*rep, from);
+        }
+        for &d in &locals {
+            clk.advance(from, self.topo.ring_share_time(from, d, bytes, locals.len(), concurrent));
+            clk.sync(d, from);
+        }
+        for (rep, rest) in &remotes {
+            for &d in rest {
+                clk.advance(*rep, self.topo.ring_share_time(*rep, d, bytes, rest.len(), concurrent));
+                clk.sync(d, *rep);
+            }
+        }
     }
 
     /// §2.1 redistribution: every column moves once, peer-to-peer.
@@ -68,7 +200,18 @@ impl Predictor {
         // copy count (save + forward per slot).
         let moves = 2.0 * n as f64 * (ndev as f64 - 1.0) / ndev as f64;
         let per_link = moves / ndev as f64; // links run in parallel
-        per_link * self.topo.copy_time(0, 1, col_bytes)
+        match self.cross_pair(ndev) {
+            Some((i, j)) => {
+                // Columns target devices uniformly, so on a span of
+                // `s` islands (s-1)/s of the moves cross the fabric.
+                let s = self.islands_spanned(ndev) as f64;
+                let cf = (s - 1.0) / s;
+                per_link
+                    * ((1.0 - cf) * self.topo.copy_time(0, 1, col_bytes)
+                        + cf * self.topo.copy_time(i, j, col_bytes))
+            }
+            None => per_link * self.topo.copy_time(0, 1, col_bytes),
+        }
     }
 
     /// Distributed right-looking Cholesky (the potrf schedule).
@@ -86,15 +229,12 @@ impl Predictor {
                 continue;
             }
             clk.advance(owner, self.model.panel_time(self.dtype, GpuCostModel::flops_trsm(self.dtype, below, tk, tk)));
-            // Broadcast packed panel to the other devices.
+            // Broadcast packed panel to the other devices
+            // (hierarchical on a fabric; bitwise the flat per-receiver
+            // `copy_time / (ndev-1)` shares on one island).
             let panel_bytes = below * tk * self.esize();
-            let bc = self.topo.copy_time(0, 1, panel_bytes);
-            for d in 0..ndev {
-                if d != owner && ndev > 1 {
-                    clk.advance(owner, bc / (ndev - 1) as f64);
-                    clk.sync(d, owner);
-                }
-            }
+            let members: Vec<usize> = (0..ndev).collect();
+            self.ring_bcast_replay(&mut clk, owner, &members, panel_bytes, 1);
             // Trailing updates in parallel across owners.
             for j in (tt + 1)..ntiles {
                 let d = lay.owner_of_tile(j);
@@ -210,7 +350,7 @@ impl Predictor {
                     let next = lay.owner_of_tile(tiles[i + 1]);
                     if next != owner {
                         let tail = (n - lay.tile_start(tt).min(k1)) * nrhs * self.esize();
-                        clk.advance(owner, self.topo.copy_time(0, 1, tail));
+                        clk.advance(owner, self.topo.copy_time(owner, next, tail));
                         clk.sync(next, owner);
                     }
                 }
@@ -240,14 +380,14 @@ impl Predictor {
                 let below = n - j1;
                 clk.advance(j_owner, self.model.panel_time(self.dtype, GpuCostModel::flops_trsm(self.dtype, tj, tk, tj)));
                 if j_owner != t_owner {
-                    clk.advance(j_owner, self.topo.copy_time(0, 1, tj * tk * self.esize()));
+                    clk.advance(j_owner, self.topo.copy_time(j_owner, t_owner, tj * tk * self.esize()));
                     clk.sync(t_owner, j_owner);
                 }
                 if below > 0 {
                     clk.advance(j_owner, self.model.gemm_time(self.dtype, below, tk, tj));
                     let next = lay.owner_of_tile(j + 1);
                     if next != j_owner {
-                        clk.advance(j_owner, self.topo.copy_time(0, 1, below * tk * self.esize()));
+                        clk.advance(j_owner, self.topo.copy_time(j_owner, next, below * tk * self.esize()));
                         clk.sync(next, j_owner);
                     }
                 }
@@ -259,13 +399,8 @@ impl Predictor {
             let tki = lay.tile_cols(ti);
             let k0i = lay.tile_start(ti);
             let pi_rows = n - k0i;
-            let bc = self.topo.copy_time(0, 1, pi_rows * tki * self.esize());
-            for d in 0..ndev {
-                if d != i_owner && ndev > 1 {
-                    clk.advance(i_owner, bc / (ndev - 1) as f64);
-                    clk.sync(d, i_owner);
-                }
-            }
+            let members: Vec<usize> = (0..ndev).collect();
+            self.ring_bcast_replay(&mut clk, i_owner, &members, pi_rows * tki * self.esize(), 1);
             for tj in 0..ntiles {
                 let j_owner = lay.owner_of_tile(tj);
                 let tkj = lay.tile_cols(tj);
@@ -291,12 +426,13 @@ impl Predictor {
         // matvec (n·lc·e bytes per device), reduce+broadcast (2n·e),
         // rank-2 update (2n·lc·e per device). Devices run in parallel.
         let per_step_compute = (3.0 * nf * lc * e) / bw + 3.0 * ov;
-        let per_step_comm = 3.0 * self.topo.copy_time(0, 1, n * self.esize());
+        let per_step_comm = 3.0 * self.step_link_time(ndev, n * self.esize());
         let stage1 = steps * (per_step_compute + per_step_comm);
 
         // Stage 2: QL with eigenvectors on the lead device, ~6n³
         // bandwidth-bound flops (T_A-independent — the Fig. 3c flatness).
-        let stage2 = (6.0 * nf * nf * nf * e / 8.0) / bw / 8.0 + self.topo.copy_time(0, 1, (nf * lc) as usize * self.esize());
+        let stage2 = (6.0 * nf * nf * nf * e / 8.0) / bw / 8.0
+            + self.step_link_time(ndev, (nf * lc) as usize * self.esize());
 
         // Stage 3: back-transform, 4n·lc flops per reflector per device.
         let stage3 = steps * ((4.0 * nf * lc * e / 8.0) / bw + ov / 64.0);
@@ -326,23 +462,57 @@ impl Predictor {
         let steps = nf - 2.0;
 
         // Stage 1: same three bandwidth-bound passes over each device's
-        // block; collectives carry row segments.
+        // block; collectives carry row segments. Row groups are `q`
+        // consecutive devices, so when `q` divides the island width
+        // they never touch the fabric — the island-alignment the
+        // selector rewards; a straddling row group is bounded by the
+        // inter-node pipe instead.
         let per_step_compute = (3.0 * nf * lc * e) / bw + 3.0 * ov;
-        let per_step_comm = 3.0 * self.topo.copy_time(0, 1, n.div_ceil(p) * self.esize());
+        let seg_bytes = n.div_ceil(p) * self.esize();
+        let per_step_comm = 3.0
+            * if self.row_groups_cross(p, q) {
+                self.step_link_time(ndev, seg_bytes)
+            } else {
+                self.topo.copy_time(0, 1, seg_bytes)
+            };
         let stage1 = steps * (per_step_compute + per_step_comm);
 
-        // Stage 2: lead-device QL, layout-independent.
+        // Stage 2: lead-device QL, layout-independent (the gather
+        // crosses the fabric when the grid spans islands).
         let stage2 = (6.0 * nf * nf * nf * e / 8.0) / bw / 8.0
-            + self.topo.copy_time(0, 1, (nf * lc) as usize * self.esize());
+            + self.step_link_time(ndev, (nf * lc) as usize * self.esize());
 
         // Stage 3: back-transform; the row split adds blocked
-        // column-group reductions of the uᴴv partials.
+        // column-group reductions of the uᴴv partials. A column group
+        // is one device per grid row — on a fabric its p−1 hops split
+        // into intra-island hops plus one fabric crossing per extra
+        // island spanned.
         let mut stage3 = steps * ((4.0 * nf * lc * e / 8.0) / bw + ov / 64.0);
         if p > 1 {
             let blocks = (nf / t.max(1) as f64).ceil();
-            stage3 += blocks
-                * (p - 1) as f64
-                * self.topo.copy_time(0, 1, n.div_ceil(q) * self.esize());
+            let bseg = n.div_ceil(q) * self.esize();
+            let nd = self.topo.num_devices();
+            let mut col_islands: Vec<usize> = Vec::new();
+            for r in 0..p {
+                if r * q < nd {
+                    let isl = self.topo.island_of(r * q);
+                    if !col_islands.contains(&isl) {
+                        col_islands.push(isl);
+                    }
+                }
+            }
+            let s = col_islands.len().max(1);
+            if s > 1 {
+                let cross = self
+                    .cross_pair(ndev)
+                    .map(|(i, j)| self.topo.copy_time(i, j, bseg))
+                    .unwrap_or_else(|| self.topo.copy_time(0, 1, bseg));
+                stage3 += blocks
+                    * ((p - s) as f64 * self.topo.copy_time(0, 1, bseg)
+                        + (s - 1) as f64 * cross);
+            } else {
+                stage3 += blocks * (p - 1) as f64 * self.topo.copy_time(0, 1, bseg);
+            }
         }
 
         self.redistribute(n, ndev) + stage1 + stage2 + stage3
@@ -385,16 +555,12 @@ impl Predictor {
             for k in (tt + 1)..nt {
                 cols_of[k % q] += tile_len(k);
             }
-            // L_tt column ring to the panel's row owners.
+            // L_tt column ring to the panel's row owners
+            // (hierarchical on a fabric, bitwise the flat shares on
+            // one island).
             let members: Vec<usize> =
                 (0..p).filter(|&r| r != rt && seg[r] > 0).map(|r| dev(r, ct)).collect();
-            if !members.is_empty() {
-                let recv = members.len();
-                for &m in &members {
-                    clk.advance(diag, self.topo.copy_time(diag, m, tk * tk * e) / recv as f64);
-                    clk.sync(m, diag);
-                }
-            }
+            self.ring_bcast_replay(&mut clk, diag, &members, tk * tk * e, 1);
             // Panel trsm split across the P row owners.
             for r in 0..p {
                 if seg[r] > 0 {
@@ -417,11 +583,7 @@ impl Predictor {
                     continue;
                 }
                 let bytes = seg[r] * tk * e;
-                let recv = members.len();
-                for &m in &members {
-                    clk.advance(src, self.topo.copy_time(src, m, bytes) / recv as f64);
-                    clk.sync(m, src);
-                }
+                self.ring_bcast_replay(&mut clk, src, &members, bytes, 1);
             }
             // Column rings: transposed panel blocks move down.
             for c in 0..q {
@@ -434,6 +596,13 @@ impl Predictor {
                         blk[k % p] += tile_len(k);
                     }
                 }
+                // Contention: every source row with a nonzero block
+                // broadcasts down this column at once, so each
+                // receiver's link carries `conc` concurrent transfers
+                // — the per-link sharing term tall grids (large P) pay
+                // and wide grids do not. Mirrors the simulator's grid
+                // potrf stage 5 exactly.
+                let conc = blk.iter().filter(|&&b| b > 0).count();
                 for (rs, &b) in blk.iter().enumerate() {
                     if b == 0 {
                         continue;
@@ -445,11 +614,7 @@ impl Predictor {
                         continue;
                     }
                     let bytes = b * tk * e;
-                    let recv = members.len();
-                    for &m in &members {
-                        clk.advance(src, self.topo.copy_time(src, m, bytes) / recv as f64);
-                        clk.sync(m, src);
-                    }
+                    self.ring_bcast_replay(&mut clk, src, &members, bytes, conc);
                 }
             }
             // Fused local trailing GEMMs, split lookahead-first (the
@@ -529,13 +694,7 @@ impl Predictor {
             let seg = seg_below(tt);
             let members: Vec<usize> =
                 (0..p).filter(|&r| r != rt && seg[r] > 0).map(|r| dev(r, ct)).collect();
-            if !members.is_empty() {
-                let recv = members.len();
-                for &m in &members {
-                    clk.advance(diag, self.topo.copy_time(diag, m, tk * nrhs * e) / recv as f64);
-                    clk.sync(m, diag);
-                }
-            }
+            self.ring_bcast_replay(&mut clk, diag, &members, tk * nrhs * e, 1);
             for r in 0..p {
                 if seg[r] > 0 {
                     clk.advance(dev(r, ct), self.model.gemm_time(self.dtype, seg[r], nrhs, tk));
@@ -631,13 +790,7 @@ impl Predictor {
                     }
                     let members: Vec<usize> =
                         (0..p).filter(|&r| r != rj && segb[r] > 0).map(|r| dev(r, cj)).collect();
-                    if !members.is_empty() {
-                        let recv = members.len();
-                        for &m in &members {
-                            clk.advance(djj, self.topo.copy_time(djj, m, tj * tk * e) / recv as f64);
-                            clk.sync(m, djj);
-                        }
-                    }
+                    self.ring_bcast_replay(&mut clk, djj, &members, tj * tk * e, 1);
                     for r in 0..p {
                         if segb[r] > 0 {
                             clk.advance(dev(r, cj), self.model.gemm_time(self.dtype, segb[r], tk, tj));
@@ -672,11 +825,7 @@ impl Predictor {
                 if members.is_empty() {
                     continue;
                 }
-                let recv = members.len();
-                for &m in &members {
-                    clk.advance(dev(r, ci), self.topo.copy_time(dev(r, ci), m, segi[r] * tki * e) / recv as f64);
-                    clk.sync(m, dev(r, ci));
-                }
+                self.ring_bcast_replay(&mut clk, dev(r, ci), &members, segi[r] * tki * e, 1);
             }
             for tj in 0..nt {
                 let tkj = tile_len(tj);
@@ -709,8 +858,11 @@ impl Predictor {
     /// Ties, unknown routines, and small problems (where ring latency
     /// dominates) keep the 1D `(1, ndev)` shape, which the services
     /// map to the native 1D layout so existing paths are bitwise
-    /// untouched. At paper scale the selector favors tall grids: the
-    /// per-step panel trsm is the serial term and splits across `P`.
+    /// untouched. At paper scale the selector favors tall grids — the
+    /// per-step panel trsm is the serial term and splits across `P` —
+    /// tempered by the column-ring contention term (`P` concurrent
+    /// senders share each receiver link), which hands moderate shapes
+    /// to squarer grids.
     /// Replayed makespan of `routine` on a `(p, q)` process grid — the
     /// exact per-candidate cost [`Predictor::best_grid`] minimizes,
     /// exposed so scheduler makespan estimates (EDF/SJF ordering) are
@@ -760,6 +912,58 @@ impl Predictor {
     /// planner's `est_ns`).
     pub fn recompute_ns(&self, n: usize, t: usize, p: usize, q: usize) -> u64 {
         crate::coordinator::secs_to_ns(self.recompute(n, t, p, q))
+    }
+
+    /// [`Predictor::potrf2d`] on a two-tier fabric topology — the
+    /// named hierarchical replay. The topology itself carries the
+    /// fabric structure (Lineax-style dispatch by operator structure),
+    /// so this is the same arithmetic `potrf2d` runs once
+    /// `self.topo` spans islands; the named form documents intent at
+    /// call sites and is what the fabric benches pin.
+    pub fn potrf2d_fabric(&self, n: usize, t: usize, p: usize, q: usize) -> f64 {
+        self.potrf2d(n, t, p, q)
+    }
+
+    /// [`Predictor::syevd2d`] on a two-tier fabric topology — the
+    /// named hierarchical replay (see [`Predictor::potrf2d_fabric`]).
+    pub fn syevd2d_fabric(&self, n: usize, t: usize, p: usize, q: usize) -> f64 {
+        self.syevd2d(n, t, p, q)
+    }
+
+    /// The 1-node-vs-2-node router: compare the best grid confined to
+    /// one island (its subset topology is flat, so every collective
+    /// prices at NVLink rates) against the best grid spanning the
+    /// whole fabric (hierarchical collectives, inter-node crossings),
+    /// and return `(devices_used, (p, q))` for the cheaper one. Ties
+    /// stay on one island — spanning must pay for itself. On a flat
+    /// node this is exactly `best_grid` over all devices.
+    pub fn best_fabric_plan(
+        &self,
+        routine: &str,
+        n: usize,
+        nrhs: usize,
+        t: usize,
+    ) -> (usize, (usize, usize)) {
+        let ndev = self.topo.num_devices();
+        if self.topo.num_islands() <= 1 {
+            return (ndev, self.best_grid(routine, n, nrhs, t, ndev));
+        }
+        let island = self.topo.island_devices(0);
+        let sub = Predictor {
+            model: self.model.clone(),
+            topo: self.topo.subset(&island).expect("island devices are in range"),
+            dtype: self.dtype,
+        };
+        let k = island.len();
+        let sg = sub.best_grid(routine, n, nrhs, t, k);
+        let sub_cost = sub.dist_makespan(routine, n, nrhs, t, sg.0, sg.1);
+        let fg = self.best_grid(routine, n, nrhs, t, ndev);
+        let full_cost = self.dist_makespan(routine, n, nrhs, t, fg.0, fg.1);
+        if full_cost < sub_cost {
+            (ndev, fg)
+        } else {
+            (k, sg)
+        }
     }
 
     pub fn best_grid(&self, routine: &str, n: usize, nrhs: usize, t: usize, ndev: usize) -> (usize, usize) {
@@ -1115,12 +1319,15 @@ mod tests {
         assert_eq!(p.best_grid("potrs", 192, 1, 32, 4), (1, 4));
         assert_eq!(p.best_grid("potrs", 24, 2, 8, 4), (1, 4));
         assert_eq!(p.best_grid("potrf", 1024, 0, 256, 4), (1, 4));
-        // Paper scale flips 2D; the selector favors tall grids (the
-        // panel trsm is the serial term and splits across P).
+        // Paper scale flips 2D. The row split shortens the serial
+        // panel trsm, but the column-ring contention term (P
+        // concurrent senders per receiver link) taxes the fully tall
+        // (4, 1) shape, so the moderate shape wins here; at larger N
+        // (potrs below) the trsm term dominates and tall returns.
         let big = p.best_grid("potrf", 16384, 0, 256, 4);
         assert_eq!(big.0 * big.1, 4);
         assert!(big.0 > 1, "paper-scale potrf must select a 2D grid, got {big:?}");
-        assert_eq!(big, (4, 1));
+        assert_eq!(big, (2, 2));
         let bs = p.best_grid("potrs", 65536, 1, 1024, 4);
         assert!(bs.0 > 1);
         // syevd's selector rides the existing replay pair.
@@ -1271,5 +1478,81 @@ mod tests {
                 assert!(v.is_finite() && v > 0.0);
             }
         }
+    }
+
+    #[test]
+    fn fabric_one_island_predictor_is_bitwise_flat() {
+        // A 1-island fabric topology is the flat node: identical link
+        // map, identical island gate, so every replay — hierarchical
+        // code paths included — returns the flat number bitwise, and
+        // the router degenerates to plain best_grid over all devices.
+        let flat = Predictor::h200(8, DType::F64);
+        let fab = Predictor::fabric(1, 8, DType::F64);
+        for &n in &[1024usize, 16384] {
+            assert_eq!(fab.potrf2d_fabric(n, 256, 2, 4), flat.potrf2d(n, 256, 2, 4));
+            assert_eq!(fab.syevd2d_fabric(n, 256, 2, 4), flat.syevd2d(n, 256, 2, 4));
+            assert_eq!(fab.potrs2d(n, 256, 2, 4, 1), flat.potrs2d(n, 256, 2, 4, 1));
+        }
+        let (used, grid) = fab.best_fabric_plan("potrf", 16384, 0, 1024);
+        assert_eq!(used, 8);
+        assert_eq!(grid, flat.best_grid("potrf", 16384, 0, 1024, 8));
+    }
+
+    #[test]
+    fn fabric_router_pins_the_two_node_crossover() {
+        // The 1-node-vs-2-node decision on a 2×8 H200 fabric, f64.
+        // potrf T=1024: at N=16384 the inter-node collectives cost
+        // more than the second island's compute saves — the router
+        // confines the solve to one island (8 devices, flat NVLink
+        // pricing). By N=65536 the trailing-update flops dominate and
+        // spanning all 16 devices wins strictly. syevd's stage-1 is
+        // compute-bound from tiny N (its collectives carry row
+        // segments, not panels), so the fabric pays for itself by
+        // N=4096 already.
+        let pf = Predictor::fabric(2, 8, DType::F64);
+        let (used_small, grid_small) = pf.best_fabric_plan("potrf", 16384, 0, 1024);
+        assert_eq!(used_small, 8, "N=16384 potrf must stay on one island, got {grid_small:?}");
+        let (used_big, grid_big) = pf.best_fabric_plan("potrf", 65536, 0, 1024);
+        assert_eq!(used_big, 16, "N=65536 potrf must span the fabric");
+        assert_eq!(grid_big.0 * grid_big.1, 16);
+        let (used_sy, grid_sy) = pf.best_fabric_plan("syevd", 4096, 0, 256);
+        assert_eq!(used_sy, 16, "N=4096 syevd must span the fabric, got {grid_sy:?}");
+        // The spanning decision is a strict win, not a tie-break: the
+        // router keeps ties on one island.
+        let island = pf.topo.island_devices(0);
+        let sub = Predictor {
+            model: pf.model.clone(),
+            topo: pf.topo.subset(&island).unwrap(),
+            dtype: pf.dtype,
+        };
+        let sg = sub.best_grid("potrf", 65536, 0, 1024, 8);
+        let fg = pf.best_grid("potrf", 65536, 0, 1024, 16);
+        assert!(
+            pf.dist_makespan("potrf", 65536, 0, 1024, fg.0, fg.1)
+                < sub.dist_makespan("potrf", 65536, 0, 1024, sg.0, sg.1)
+        );
+    }
+
+    #[test]
+    fn fabric_island_alignment_beats_straddling_rows() {
+        // Grid-shape pricing on the fabric: row groups are `q`
+        // consecutive devices, so they stay island-local exactly when
+        // `q` divides the island width. On a 2×8 fabric every proper
+        // factorization of 16 aligns (q ∈ {1, 2, 4, 8}); only the 1D
+        // (1, 16) row spans both islands. A 2×6 fabric exposes a true
+        // straddle: q = 4 does not divide 6.
+        let pf = Predictor::fabric(2, 8, DType::F64);
+        assert!(!pf.row_groups_cross(2, 8));
+        assert!(!pf.row_groups_cross(4, 4));
+        assert!(pf.row_groups_cross(1, 16));
+        let pf26 = Predictor::fabric(2, 6, DType::F64);
+        assert!(!pf26.row_groups_cross(2, 6));
+        assert!(pf26.row_groups_cross(3, 4));
+        // Hierarchical collectives price the inter-node pipe: the same
+        // spanning grid is strictly slower on the fabric than on a
+        // flat 16-device node.
+        let flat = Predictor::h200(16, DType::F64);
+        assert!(pf.potrf2d_fabric(16384, 1024, 4, 4) > flat.potrf2d(16384, 1024, 4, 4));
+        assert!(pf.syevd2d_fabric(16384, 256, 4, 4) > flat.syevd2d(16384, 256, 4, 4));
     }
 }

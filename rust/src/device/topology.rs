@@ -1,10 +1,43 @@
-//! Node link topology and transfer cost model.
+//! Node and fabric link topology and the two-tier transfer cost model.
 //!
-//! Encodes the paper's testbed: 8 GPUs fully connected over NVLink.
-//! Transfer times are `latency + bytes / bandwidth` per link class.
-//! Numbers are H200/NVLink-class defaults; the cost model only needs to
-//! preserve the *relative* structure (NVLink ≫ PCIe ≫ host link) for
-//! the benchmark shapes to match the paper.
+//! **Tier 1 — inside an island.** Encodes the paper's testbed: up to 8
+//! GPUs fully connected over NVLink. Transfer times are
+//! `latency + bytes / bandwidth` per link class.
+//!
+//! **Tier 2 — across islands.** A [`NodeTopology`] built with
+//! [`NodeTopology::two_tier`] composes several NVLink islands over an
+//! inter-node interconnect ([`LinkKind::InterNode`]) with its own
+//! bandwidth/latency terms. The fabric link is a *shared pipe*: a
+//! fan-out across it does not amortize the payload term the way an
+//! NVLink switch does ([`NodeTopology::copy_time_shared`]), and
+//! concurrent transfers into one endpoint share the link
+//! ([`NodeTopology::contended_time`]).
+//!
+//! Numbers are H200/NVLink/NDR-class defaults; the cost model only
+//! needs to preserve the *relative* structure
+//! (HBM ≫ NVLink ≫ PCIe ≈ inter-node ≫ host link) for the benchmark
+//! shapes to match the paper.
+//!
+//! ## Two-tier cost model
+//!
+//! | term                    | intra-island (NVLink)            | inter-island (fabric)                |
+//! |-------------------------|----------------------------------|--------------------------------------|
+//! | point-to-point          | `5 µs + B / 450 GB/s`            | `10 µs + B / 50 GB/s`                |
+//! | fan-out to `f` peers    | `(5 µs + B / 450 GB/s) / f`      | `10 µs / f + B / 50 GB/s` (serial)   |
+//! | `c`-way contended       | `5 µs + c·B / 450 GB/s`          | `10 µs + c·B / 50 GB/s`              |
+//!
+//! ## 1-node vs 2-node decision table
+//!
+//! The planner (`coordinator::plan_dist` via the fabric-aware
+//! `Predictor::best_grid`) prices both placements per request; the
+//! regimes it resolves to:
+//!
+//! | regime                            | placement  | why                                          |
+//! |-----------------------------------|------------|----------------------------------------------|
+//! | small N (ring latency dominates)  | 1 island   | every collective pays the fabric latency     |
+//! | paper N (comm ≈ compute)          | 1 island   | N² fabric bytes eat the 2× compute win       |
+//! | super-paper N (compute dominates) | 2 islands  | N³ flops split 2×, N² fabric bytes amortize  |
+//! | per-island VRAM exceeded          | 2 islands  | capacity forces the spill across the fabric  |
 
 /// Link classes between two endpoints.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
@@ -15,6 +48,9 @@ pub enum LinkKind {
     NvLink,
     /// PCIe fallback peer connection.
     Pcie,
+    /// Inter-island fabric link (NIC-class: RDMA over the node
+    /// interconnect). A shared pipe — see the module docs.
+    InterNode,
 }
 
 /// All-pairs link map plus bandwidth/latency constants.
@@ -23,13 +59,20 @@ pub struct NodeTopology {
     n: usize,
     /// links[i][j] — link class between devices i and j.
     links: Vec<Vec<LinkKind>>,
+    /// island_of[d] — dense island ordinal of device d (all 0 on a
+    /// flat single-island node).
+    island_of: Vec<usize>,
     /// Effective bandwidths in bytes/second.
     pub local_bw: f64,
     pub nvlink_bw: f64,
     pub pcie_bw: f64,
     pub h2d_bw: f64,
+    /// Inter-island fabric bandwidth, bytes/second.
+    pub inter_bw: f64,
     /// Per-operation latencies in seconds.
     pub copy_latency: f64,
+    /// Per-operation latency of an inter-island transfer, seconds.
+    pub inter_latency: f64,
 }
 
 impl NodeTopology {
@@ -41,13 +84,17 @@ impl NodeTopology {
         NodeTopology {
             n,
             links,
+            island_of: vec![0; n],
             // H200: ~4.8 TB/s HBM3e; NVLink4: ~450 GB/s effective per pair;
-            // PCIe gen5 x16: ~50 GB/s; host link: ~55 GB/s.
+            // PCIe gen5 x16: ~50 GB/s; host link: ~55 GB/s;
+            // inter-node fabric (NDR-class RDMA): ~50 GB/s, ~10 µs.
             local_bw: 4.8e12,
             nvlink_bw: 450e9,
             pcie_bw: 50e9,
             h2d_bw: 55e9,
+            inter_bw: 50e9,
             copy_latency: 5e-6,
+            inter_latency: 10e-6,
         }
     }
 
@@ -64,9 +111,45 @@ impl NodeTopology {
         t
     }
 
+    /// Two-tier fabric: `islands` NVLink islands of `per_island`
+    /// devices each, joined by [`LinkKind::InterNode`] fabric links.
+    /// Device `d` lives on island `d / per_island`; islands are
+    /// contiguous device ranges. `islands == 1` produces the exact
+    /// flat [`NodeTopology::nvlink_all_to_all`] link map, so a 1-island
+    /// fabric is bitwise the single-node topology.
+    pub fn two_tier(islands: usize, per_island: usize) -> Self {
+        assert!(islands > 0 && per_island > 0, "fabric needs at least one device");
+        let n = islands * per_island;
+        let mut t = Self::nvlink_all_to_all(n);
+        for i in 0..n {
+            for j in 0..n {
+                if i != j && i / per_island != j / per_island {
+                    t.links[i][j] = LinkKind::InterNode;
+                }
+            }
+            t.island_of[i] = i / per_island;
+        }
+        t
+    }
+
     /// Number of devices covered by this topology.
     pub fn num_devices(&self) -> usize {
         self.n
+    }
+
+    /// Number of islands (1 on a flat node).
+    pub fn num_islands(&self) -> usize {
+        self.island_of.iter().copied().max().map_or(1, |m| m + 1)
+    }
+
+    /// Island ordinal of device `d`.
+    pub fn island_of(&self, d: usize) -> usize {
+        self.island_of[d]
+    }
+
+    /// Devices on island `i`, in device order.
+    pub fn island_devices(&self, i: usize) -> Vec<usize> {
+        (0..self.n).filter(|&d| self.island_of[d] == i).collect()
     }
 
     /// Link class between two devices.
@@ -80,12 +163,67 @@ impl NodeTopology {
             LinkKind::Local => self.local_bw,
             LinkKind::NvLink => self.nvlink_bw,
             LinkKind::Pcie => self.pcie_bw,
+            LinkKind::InterNode => self.inter_bw,
+        }
+    }
+
+    /// Per-operation latency of the link between two devices, seconds.
+    pub fn link_latency(&self, i: usize, j: usize) -> f64 {
+        match self.link(i, j) {
+            LinkKind::InterNode => self.inter_latency,
+            _ => self.copy_latency,
         }
     }
 
     /// Modeled duration of a `bytes`-sized copy between two devices.
     pub fn copy_time(&self, i: usize, j: usize, bytes: usize) -> f64 {
-        self.copy_latency + bytes as f64 / self.bandwidth(i, j)
+        self.link_latency(i, j) + bytes as f64 / self.bandwidth(i, j)
+    }
+
+    /// Per-receiver cost of a `fanout`-way fan-out of `bytes` from `i`
+    /// to `j`. Intra-island links amortize the full transfer across
+    /// the fan-out (the NVLink switch serves receivers in parallel) —
+    /// exactly `copy_time / fanout`, bitwise the flat-node arithmetic.
+    /// The inter-island fabric is a shared pipe: only the latency
+    /// amortizes, every receiver's payload is serialized.
+    pub fn copy_time_shared(&self, i: usize, j: usize, bytes: usize, fanout: usize) -> f64 {
+        self.ring_share_time(i, j, bytes, fanout, 1)
+    }
+
+    /// The per-receiver share of a ring collective: a `fanout`-way
+    /// fan-out of `bytes` from `i` to `j` with `concurrent` transfers
+    /// sharing the destination link. This is THE arithmetic both the
+    /// simulator's collective charges and the `Predictor` replays call,
+    /// so est == obs by construction. `fanout == 1, concurrent == 1`
+    /// is bitwise [`NodeTopology::copy_time`]; intra-island links with
+    /// `concurrent == 1` are bitwise the flat `copy_time / fanout`
+    /// single-node arithmetic.
+    pub fn ring_share_time(
+        &self,
+        i: usize,
+        j: usize,
+        bytes: usize,
+        fanout: usize,
+        concurrent: usize,
+    ) -> f64 {
+        let f = fanout.max(1) as f64;
+        match self.link(i, j) {
+            LinkKind::InterNode => {
+                self.inter_latency / f
+                    + bytes as f64 * concurrent.max(1) as f64 / self.inter_bw
+            }
+            _ => self.contended_time(i, j, bytes, concurrent) / f,
+        }
+    }
+
+    /// Modeled duration of a `bytes`-sized copy when `concurrent`
+    /// transfers share the `i → j` link (receiver-ingress sharing:
+    /// the per-link concurrent-transfer term the grid selectors
+    /// price). `concurrent == 1` is bitwise
+    /// [`NodeTopology::copy_time`].
+    pub fn contended_time(&self, i: usize, j: usize, bytes: usize, concurrent: usize) -> f64 {
+        self.link_latency(i, j)
+            + bytes as f64 * concurrent.max(1) as f64 / self.bandwidth(i, j)
     }
 
     /// Modeled duration of a host↔device transfer.
@@ -94,8 +232,12 @@ impl NodeTopology {
     }
 
     /// Topology restricted to a device subset (the MPMD serve layer's
-    /// degraded-mode view after a worker dies): device `i` of the
-    /// subset is `devices[i]` here, links and constants are inherited.
+    /// degraded-mode view after a worker dies, and the fabric's
+    /// per-island view): device `i` of the subset is `devices[i]`
+    /// here, links and constants are inherited. Island ordinals are
+    /// re-densified in order of first appearance, so a subset drawn
+    /// from one island is a flat (1-island) topology and prices every
+    /// collective with the exact single-node arithmetic.
     pub fn subset(&self, devices: &[usize]) -> crate::error::Result<Self> {
         for &d in devices {
             if d >= self.n {
@@ -106,14 +248,31 @@ impl NodeTopology {
             .iter()
             .map(|&i| devices.iter().map(|&j| self.links[i][j]).collect())
             .collect();
+        let mut dense: Vec<usize> = Vec::new();
+        let island_of = devices
+            .iter()
+            .map(|&d| {
+                let isl = self.island_of[d];
+                match dense.iter().position(|&x| x == isl) {
+                    Some(i) => i,
+                    None => {
+                        dense.push(isl);
+                        dense.len() - 1
+                    }
+                }
+            })
+            .collect();
         Ok(NodeTopology {
             n: devices.len(),
             links,
+            island_of,
             local_bw: self.local_bw,
             nvlink_bw: self.nvlink_bw,
             pcie_bw: self.pcie_bw,
             h2d_bw: self.h2d_bw,
+            inter_bw: self.inter_bw,
             copy_latency: self.copy_latency,
+            inter_latency: self.inter_latency,
         })
     }
 }
@@ -129,6 +288,8 @@ mod tests {
         assert_eq!(t.link(0, 0), LinkKind::Local);
         assert_eq!(t.link(0, 3), LinkKind::NvLink);
         assert_eq!(t.link(3, 0), LinkKind::NvLink);
+        assert_eq!(t.num_islands(), 1);
+        assert_eq!(t.island_devices(0), vec![0, 1, 2, 3]);
     }
 
     #[test]
@@ -151,5 +312,80 @@ mod tests {
         let t = NodeTopology::nvlink_all_to_all(2);
         let tiny = t.copy_time(0, 1, 8);
         assert!((tiny - t.copy_latency) / t.copy_latency < 0.01);
+    }
+
+    #[test]
+    fn two_tier_links_and_islands() {
+        let t = NodeTopology::two_tier(2, 4);
+        assert_eq!(t.num_devices(), 8);
+        assert_eq!(t.num_islands(), 2);
+        assert_eq!(t.island_of(0), 0);
+        assert_eq!(t.island_of(3), 0);
+        assert_eq!(t.island_of(4), 1);
+        assert_eq!(t.island_devices(1), vec![4, 5, 6, 7]);
+        assert_eq!(t.link(0, 3), LinkKind::NvLink);
+        assert_eq!(t.link(0, 4), LinkKind::InterNode);
+        assert_eq!(t.link(4, 0), LinkKind::InterNode);
+        assert_eq!(t.link(5, 5), LinkKind::Local);
+        // The fabric link is strictly slower than NVLink.
+        assert!(t.copy_time(0, 4, 1 << 30) > t.copy_time(0, 1, 1 << 30));
+        assert!(t.link_latency(0, 4) > t.link_latency(0, 1));
+    }
+
+    #[test]
+    fn one_island_fabric_is_bitwise_flat() {
+        let fab = NodeTopology::two_tier(1, 4);
+        let flat = NodeTopology::nvlink_all_to_all(4);
+        assert_eq!(fab.num_islands(), 1);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(fab.link(i, j), flat.link(i, j));
+                assert_eq!(fab.copy_time(i, j, 12345).to_bits(), flat.copy_time(i, j, 12345).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn shared_and_contended_degenerate_to_copy_time() {
+        let t = NodeTopology::two_tier(2, 2);
+        // fanout 1 / concurrency 1 are bitwise the plain copy on every
+        // link class.
+        for (i, j) in [(0usize, 1usize), (0, 2), (1, 3)] {
+            assert_eq!(t.copy_time_shared(i, j, 4096, 1).to_bits(), t.copy_time(i, j, 4096).to_bits());
+            assert_eq!(t.contended_time(i, j, 4096, 1).to_bits(), t.copy_time(i, j, 4096).to_bits());
+        }
+        // NVLink fan-out amortizes the payload; the fabric pipe does not.
+        let b = 1 << 24;
+        assert_eq!(
+            t.copy_time_shared(0, 1, b, 4).to_bits(),
+            (t.copy_time(0, 1, b) / 4.0).to_bits()
+        );
+        assert!(t.copy_time_shared(0, 2, b, 4) > t.copy_time(0, 2, b) / 2.0);
+        // Contention scales the payload term linearly.
+        let c3 = t.contended_time(0, 1, b, 3);
+        assert!(c3 > t.copy_time(0, 1, b) * 2.0 && c3 < t.copy_time(0, 1, b) * 3.0 + 1e-9);
+    }
+
+    #[test]
+    fn subset_redensifies_islands() {
+        let t = NodeTopology::two_tier(2, 4);
+        // One island's worth of devices -> flat single-island view.
+        let sub = t.subset(&[4, 5, 6, 7]).unwrap();
+        assert_eq!(sub.num_islands(), 1);
+        assert_eq!(sub.link(0, 1), LinkKind::NvLink);
+        let flat = NodeTopology::nvlink_all_to_all(4);
+        assert_eq!(
+            sub.copy_time(0, 1, 9999).to_bits(),
+            flat.copy_time(0, 1, 9999).to_bits()
+        );
+        // A straddling subset keeps two dense islands.
+        let mix = t.subset(&[6, 7, 0]).unwrap();
+        assert_eq!(mix.num_islands(), 2);
+        assert_eq!(mix.island_of(0), 0);
+        assert_eq!(mix.island_of(1), 0);
+        assert_eq!(mix.island_of(2), 1);
+        assert_eq!(mix.link(0, 2), LinkKind::InterNode);
+        // Out-of-range devices are rejected.
+        assert!(t.subset(&[0, 99]).is_err());
     }
 }

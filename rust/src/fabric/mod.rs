@@ -1,0 +1,200 @@
+//! # Two-tier multi-node fabric
+//!
+//! The paper's testbed stops at one 8×H200 NVLink node; this module is
+//! the next regime — `N` NVLink **islands** joined by a slower
+//! inter-node interconnect. Following JetSCI's hybrid
+//! single-program/distributed-runtime split, the fabric is *not* a
+//! fork of the solver stack: a [`Fabric`] is one [`SimNode`] whose
+//! [`NodeTopology::two_tier`] link table marks cross-island pairs
+//! [`LinkKind::InterNode`], so every existing solver, scheduler, and
+//! serving front runs unchanged and **numerics stay bitwise-identical
+//! to the single-node path** — only transfer pricing and collective
+//! *shape* respond to the topology (Lineax-style dispatch by operator
+//! structure, where the operator structure is the machine itself).
+//!
+//! ## Two-tier cost model
+//!
+//! | tier | link | bandwidth | latency | fan-out sharing |
+//! |---|---|---|---|---|
+//! | intra-island | NVLink | 450 GB/s | 5 µs | full: `copy_time / fanout` (switch serves receivers in parallel) |
+//! | inter-island | InterNode (NDR-class RDMA) | 50 GB/s | 10 µs | latency only: payloads serialize on the shared pipe |
+//!
+//! Hierarchical (ring-of-rings) collectives follow from the table:
+//! a broadcast sends **one representative copy per remote island**
+//! across the fabric, fans out to the home island in parallel, and
+//! each representative relays island-locally on its own copy stream —
+//! so an island-crossing broadcast pays `O(islands)` fabric transfers
+//! instead of `O(devices)`. The `Ctx::charge_*` collective layer
+//! (`solver`) prices both tiers on the integer-ns clock, and
+//! `Predictor`'s replays mirror the same arithmetic through
+//! [`NodeTopology::ring_share_time`], so est == obs by construction.
+//!
+//! ## 1-node vs 2-node decision table
+//!
+//! The planner's per-request routing (`Predictor::best_fabric_plan`,
+//! used by `coordinator::plan_dist`) reduces to:
+//!
+//! | regime | dominant term | winner |
+//! |---|---|---|
+//! | small `N` (ring latency bound) | per-step collective latency | 1 island, 1D grid |
+//! | mid `N` (panel/comm bound) | NVLink ring bytes | 1 island, island-local 2D grid |
+//! | `N ≥ N*` (trailing GEMMs bound) | per-device flops `n³/P` | 2 islands, island-aligned grid (`Q` divides island width) |
+//! | VRAM wall (`n²·e >` island VRAM) | capacity | 2 islands regardless |
+//!
+//! `N*` is pinned by `benches/fabric.rs` end-to-end through the
+//! service; EXPERIMENTS.md records the crossover ladder.
+
+use crate::device::{NodeTopology, SimNode};
+use crate::error::{Error, Result};
+
+/// A two-tier fabric: `islands` × `per_island` devices over one shared
+/// integer-ns clock domain. Internally a single [`SimNode`] carrying
+/// the [`NodeTopology::two_tier`] link table — which is exactly why
+/// every solver runs on it unchanged (see the module docs).
+#[derive(Clone, Debug)]
+pub struct Fabric {
+    node: SimNode,
+    islands: usize,
+    per_island: usize,
+}
+
+impl Fabric {
+    /// A fabric of `islands` × `per_island` identical devices with
+    /// `vram_bytes` each, NVLink all-to-all within an island,
+    /// inter-node links across.
+    pub fn new(islands: usize, per_island: usize, vram_bytes: usize) -> Self {
+        assert!(islands > 0 && per_island > 0, "fabric needs at least one device");
+        let node = SimNode::with_topology(
+            islands * per_island,
+            vram_bytes,
+            NodeTopology::two_tier(islands, per_island),
+        );
+        Fabric { node, islands, per_island }
+    }
+
+    /// The paper's testbed island, multiplied: `islands` × 8 H200s
+    /// (143 GB each) over the inter-node fabric.
+    pub fn h200(islands: usize) -> Self {
+        Self::new(islands, 8, 143 * 1000 * 1000 * 1000)
+    }
+
+    /// The composed node spanning every island. Solvers, services, and
+    /// schedulers take this exactly like a flat node; with one island
+    /// it *is* a flat node (the topology carries no `InterNode` links
+    /// and every timeline is bitwise `SimNode::new_uniform`'s).
+    pub fn node(&self) -> &SimNode {
+        &self.node
+    }
+
+    /// Number of islands.
+    pub fn num_islands(&self) -> usize {
+        self.islands
+    }
+
+    /// Devices per island.
+    pub fn devices_per_island(&self) -> usize {
+        self.per_island
+    }
+
+    /// Total devices across the fabric.
+    pub fn num_devices(&self) -> usize {
+        self.islands * self.per_island
+    }
+
+    /// Island ordinal of a global device index.
+    pub fn island_of(&self, device: usize) -> usize {
+        device / self.per_island
+    }
+
+    /// Global device indices of island `i`, in device order.
+    pub fn island_devices(&self, i: usize) -> Result<Vec<usize>> {
+        if i >= self.islands {
+            return Err(Error::config(format!(
+                "island {i} out of range (fabric has {})",
+                self.islands
+            )));
+        }
+        Ok((i * self.per_island..(i + 1) * self.per_island).collect())
+    }
+
+    /// A [`SimNode`] view of island `i`, **sharing** its devices'
+    /// VRAM tables, clocks, and metrics with the fabric. The subset
+    /// topology re-densifies island ordinals, so the view is a flat
+    /// 1-island node and everything scheduled through it prices at
+    /// NVLink rates — the substrate for one-worker-set-per-island
+    /// serving placements.
+    pub fn island(&self, i: usize) -> Result<SimNode> {
+        self.node.subset(&self.island_devices(i)?)
+    }
+
+    /// Split a device budget across islands for admission control:
+    /// `per_device[d]` grouped into per-island sums, in island order.
+    pub fn per_island_bytes(&self, per_device: &[usize]) -> Vec<u64> {
+        let mut out = vec![0u64; self.islands];
+        for (d, &b) in per_device.iter().enumerate() {
+            let isl = (d / self.per_island).min(self.islands - 1);
+            out[isl] += b as u64;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::LinkKind;
+
+    #[test]
+    fn fabric_composes_islands_over_internode_links() {
+        let f = Fabric::new(2, 4, 1 << 28);
+        assert_eq!(f.num_devices(), 8);
+        assert_eq!(f.num_islands(), 2);
+        assert_eq!(f.devices_per_island(), 4);
+        let topo = f.node().topology();
+        assert_eq!(topo.num_islands(), 2);
+        assert!(matches!(topo.link(0, 3), LinkKind::NvLink));
+        assert!(matches!(topo.link(0, 4), LinkKind::InterNode));
+        assert_eq!(f.island_of(3), 0);
+        assert_eq!(f.island_of(4), 1);
+        assert_eq!(f.island_devices(1).unwrap(), vec![4, 5, 6, 7]);
+        assert!(f.island_devices(2).is_err());
+    }
+
+    #[test]
+    fn island_view_is_flat_and_shares_accounting() {
+        let f = Fabric::new(2, 4, 1 << 28);
+        let isl = f.island(1).unwrap();
+        assert_eq!(isl.num_devices(), 4);
+        // Re-densified: the view is a 1-island (flat) topology.
+        assert_eq!(isl.topology().num_islands(), 1);
+        assert!(matches!(isl.topology().link(0, 3), LinkKind::NvLink));
+        // Shared metrics sink: charges through the view land on the
+        // fabric's counters.
+        isl.metrics().add_fabric_intra(64);
+        assert_eq!(f.node().metrics().snapshot().fabric_intra_bytes, 64);
+    }
+
+    #[test]
+    fn one_island_fabric_is_a_flat_node() {
+        let f = Fabric::new(1, 4, 1 << 28);
+        let topo = f.node().topology();
+        assert_eq!(topo.num_islands(), 1);
+        for i in 0..4 {
+            for j in 0..4 {
+                if i != j {
+                    assert!(matches!(topo.link(i, j), LinkKind::NvLink));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn per_island_bytes_groups_device_budgets() {
+        let f = Fabric::new(2, 2, 1 << 28);
+        assert_eq!(f.per_island_bytes(&[1, 2, 3, 4]), vec![3, 7]);
+        // Short budgets cover a prefix; extra devices clamp to the
+        // last island rather than panicking.
+        assert_eq!(f.per_island_bytes(&[5]), vec![5, 0]);
+        assert_eq!(f.per_island_bytes(&[1, 1, 1, 1, 9]), vec![2, 11]);
+    }
+}

@@ -45,6 +45,7 @@ pub mod coordinator;
 pub mod costmodel;
 pub mod device;
 pub mod error;
+pub mod fabric;
 pub mod ipc;
 pub mod layout;
 pub mod linalg;
@@ -66,6 +67,7 @@ pub mod prelude {
     };
     pub use crate::device::{SimGpu, SimNode};
     pub use crate::error::{Error, Result};
+    pub use crate::fabric::Fabric;
     pub use crate::layout::{BlockCyclic1D, BlockCyclic2D};
     pub use crate::linalg::Matrix;
     pub use crate::scalar::{c32, c64, Complex, Scalar};

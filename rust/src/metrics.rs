@@ -196,6 +196,22 @@ pub struct Metrics {
     /// `potrf→potrs→potri` chain counts its stages beyond the first
     /// (each one skipped a scatter/factor round-trip).
     pub dag_fused_stages: AtomicU64,
+    /// Bytes that crossed the inter-node fabric (island-crossing
+    /// transfers: hierarchical-broadcast representative hops and
+    /// direct cross-island peer copies).
+    pub fabric_inter_bytes: AtomicU64,
+    /// Bytes moved island-locally by hierarchical collectives (home
+    /// fan-out shares plus representative relays).
+    pub fabric_intra_bytes: AtomicU64,
+    /// Hierarchical (ring-of-rings) broadcasts executed.
+    pub fabric_bcasts: AtomicU64,
+    /// Total stages across hierarchical broadcasts (fabric crossing +
+    /// home fan-out + one relay per remote island with members beyond
+    /// its representative); `/ fabric_bcasts` is the mean depth.
+    pub fabric_bcast_stages: AtomicU64,
+    /// Peak admitted bytes per island (high-water marks, one slot per
+    /// island; islands beyond slot 7 share the last slot).
+    pub fabric_island_peak_bytes: [AtomicU64; 8],
 }
 
 impl Metrics {
@@ -387,6 +403,32 @@ impl Metrics {
         self.dag_fused_stages.fetch_add(extra, Ordering::Relaxed);
     }
 
+    /// Count bytes that crossed the inter-node fabric.
+    #[inline]
+    pub fn add_fabric_inter(&self, bytes: u64) {
+        self.fabric_inter_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Count bytes a hierarchical collective moved island-locally.
+    #[inline]
+    pub fn add_fabric_intra(&self, bytes: u64) {
+        self.fabric_intra_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Record one hierarchical broadcast and its stage count.
+    #[inline]
+    pub fn add_fabric_bcast(&self, stages: u64) {
+        self.fabric_bcasts.fetch_add(1, Ordering::Relaxed);
+        self.fabric_bcast_stages.fetch_add(stages, Ordering::Relaxed);
+    }
+
+    /// Raise island `island`'s peak-admitted-bytes high-water mark.
+    #[inline]
+    pub fn note_island_admitted(&self, island: usize, bytes: u64) {
+        let slot = island.min(self.fabric_island_peak_bytes.len() - 1);
+        self.fabric_island_peak_bytes[slot].fetch_max(bytes, Ordering::Relaxed);
+    }
+
     /// Snapshot all counters (for reports; not atomic across fields).
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
@@ -439,6 +481,13 @@ impl Metrics {
             cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
             cache_resident_bytes: self.cache_resident_bytes.load(Ordering::Relaxed),
             dag_fused_stages: self.dag_fused_stages.load(Ordering::Relaxed),
+            fabric_inter_bytes: self.fabric_inter_bytes.load(Ordering::Relaxed),
+            fabric_intra_bytes: self.fabric_intra_bytes.load(Ordering::Relaxed),
+            fabric_bcasts: self.fabric_bcasts.load(Ordering::Relaxed),
+            fabric_bcast_stages: self.fabric_bcast_stages.load(Ordering::Relaxed),
+            fabric_island_peak_bytes: std::array::from_fn(|i| {
+                self.fabric_island_peak_bytes[i].load(Ordering::Relaxed)
+            }),
         }
     }
 
@@ -486,7 +535,14 @@ impl Metrics {
             &self.cache_evictions,
             &self.cache_resident_bytes,
             &self.dag_fused_stages,
+            &self.fabric_inter_bytes,
+            &self.fabric_intra_bytes,
+            &self.fabric_bcasts,
+            &self.fabric_bcast_stages,
         ] {
+            c.store(0, Ordering::Relaxed);
+        }
+        for c in &self.fabric_island_peak_bytes {
             c.store(0, Ordering::Relaxed);
         }
         for h in &self.class_latency {
@@ -549,6 +605,12 @@ pub struct MetricsSnapshot {
     /// A gauge (bytes resident at snapshot time), not a flow.
     pub cache_resident_bytes: u64,
     pub dag_fused_stages: u64,
+    pub fabric_inter_bytes: u64,
+    pub fabric_intra_bytes: u64,
+    pub fabric_bcasts: u64,
+    pub fabric_bcast_stages: u64,
+    /// Peak admitted bytes per island (high-water marks).
+    pub fabric_island_peak_bytes: [u64; 8],
 }
 
 impl MetricsSnapshot {
@@ -677,6 +739,14 @@ impl MetricsSnapshot {
             // A gauge, not a flow: the later residency stands.
             cache_resident_bytes: self.cache_resident_bytes,
             dag_fused_stages: self.dag_fused_stages - earlier.dag_fused_stages,
+            fabric_inter_bytes: self.fabric_inter_bytes - earlier.fabric_inter_bytes,
+            fabric_intra_bytes: self.fabric_intra_bytes - earlier.fabric_intra_bytes,
+            fabric_bcasts: self.fabric_bcasts - earlier.fabric_bcasts,
+            fabric_bcast_stages: self.fabric_bcast_stages - earlier.fabric_bcast_stages,
+            // High-water marks, like the other peaks.
+            fabric_island_peak_bytes: std::array::from_fn(|i| {
+                self.fabric_island_peak_bytes[i].max(earlier.fabric_island_peak_bytes[i])
+            }),
         }
     }
 }
@@ -702,6 +772,34 @@ mod tests {
     fn reset_zeroes() {
         let m = Metrics::new();
         m.add_h2d(7);
+        m.reset();
+        assert_eq!(m.snapshot(), MetricsSnapshot::default());
+    }
+
+    #[test]
+    fn fabric_counters_accumulate_and_peak() {
+        let m = Metrics::new();
+        m.add_fabric_inter(100);
+        m.add_fabric_intra(40);
+        m.add_fabric_intra(10);
+        m.add_fabric_bcast(3);
+        m.add_fabric_bcast(2);
+        m.note_island_admitted(0, 500);
+        m.note_island_admitted(0, 300);
+        m.note_island_admitted(1, 700);
+        m.note_island_admitted(63, 9); // clamps into the last slot
+        let s = m.snapshot();
+        assert_eq!(s.fabric_inter_bytes, 100);
+        assert_eq!(s.fabric_intra_bytes, 50);
+        assert_eq!(s.fabric_bcasts, 2);
+        assert_eq!(s.fabric_bcast_stages, 5);
+        assert_eq!(s.fabric_island_peak_bytes[0], 500);
+        assert_eq!(s.fabric_island_peak_bytes[1], 700);
+        assert_eq!(s.fabric_island_peak_bytes[7], 9);
+        // Peaks are high-water marks across deltas; flows zero out.
+        let d = m.snapshot().delta(&s);
+        assert_eq!(d.fabric_inter_bytes, 0);
+        assert_eq!(d.fabric_island_peak_bytes[1], 700);
         m.reset();
         assert_eq!(m.snapshot(), MetricsSnapshot::default());
     }

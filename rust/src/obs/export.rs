@@ -37,13 +37,15 @@ fn ns_as_us(ns: u64) -> String {
 }
 
 /// Track (tid) a stream name maps to within its device's pid:
-/// `requests`=0, `compute`=1, `panel`=2, `copy`=3, anything else 9.
+/// `requests`=0, `compute`=1, `panel`=2, `copy`=3, `fabric`=4
+/// (inter-node hops get their own track), anything else 9.
 pub fn stream_tid(stream: &str) -> u64 {
     match stream {
         "requests" => 0,
         "compute" => 1,
         "panel" => 2,
         "copy" => 3,
+        "fabric" => 4,
         _ => 9,
     }
 }
@@ -57,6 +59,20 @@ pub fn stream_tid(stream: &str) -> u64 {
 /// parent ids and the byte/flop attribution, so a loaded trace can be
 /// filtered per request.
 pub fn chrome_trace_json(spans: &[SpanRec]) -> String {
+    chrome_trace_impl(spans, &[])
+}
+
+/// [`chrome_trace_json`] with a fabric island map: `island_of[d]` is
+/// device `d`'s island ordinal, and every track label gains the
+/// `node{i}.dev{d}` prefix plus a `process_name` metadata event per
+/// pid, so Perfetto groups the timeline by island. Devices beyond the
+/// map (or an empty map — what [`chrome_trace_json`] delegates with)
+/// keep the flat `dev{d}` labels byte-for-byte.
+pub fn chrome_trace_with_islands(spans: &[SpanRec], island_of: &[usize]) -> String {
+    chrome_trace_impl(spans, island_of)
+}
+
+fn chrome_trace_impl(spans: &[SpanRec], island_of: &[usize]) -> String {
     // Collect the (pid, tid, name) tracks actually used, sorted.
     let mut tracks: Vec<(u64, u64, &str)> = spans
         .iter()
@@ -67,15 +83,34 @@ pub fn chrome_trace_json(spans: &[SpanRec]) -> String {
 
     let mut out = String::from("{\"traceEvents\":[");
     let mut first = true;
+    let mut last_pid = None;
     for (pid, tid, stream) in &tracks {
+        if let Some(&isl) = island_of.get(*pid as usize) {
+            if last_pid != Some(*pid) {
+                last_pid = Some(*pid);
+                if !first {
+                    out.push(',');
+                }
+                first = false;
+                out.push_str(&format!(
+                    "\n{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{},\
+                     \"args\":{{\"name\":\"node{}.dev{}\"}}}}",
+                    pid, isl, pid
+                ));
+            }
+        }
         if !first {
             out.push(',');
         }
         first = false;
+        let label = match island_of.get(*pid as usize) {
+            Some(&isl) => format!("node{}.dev{}/{}", isl, pid, stream),
+            None => format!("dev{}/{}", pid, stream),
+        };
         out.push_str(&format!(
             "\n{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{},\"tid\":{},\
-             \"args\":{{\"name\":\"dev{}/{}\"}}}}",
-            pid, tid, pid, stream
+             \"args\":{{\"name\":\"{}\"}}}}",
+            pid, tid, label
         ));
     }
     for s in spans {
@@ -280,6 +315,26 @@ pub fn prometheus_text(snap: &MetricsSnapshot, hists: &[(String, Vec<(u64, u64)>
     counter("cache_misses_total", "Factor-cache misses.", snap.cache_misses);
     counter("cache_evictions_total", "Factor-cache evictions.", snap.cache_evictions);
     counter("dag_fused_stages_total", "Extra stages fused into solve DAGs.", snap.dag_fused_stages);
+    counter(
+        "fabric_inter_bytes_total",
+        "Bytes carried over inter-island fabric links.",
+        snap.fabric_inter_bytes,
+    );
+    counter(
+        "fabric_intra_bytes_total",
+        "Bytes relayed island-locally by hierarchical collectives.",
+        snap.fabric_intra_bytes,
+    );
+    counter(
+        "fabric_bcasts_total",
+        "Hierarchical (ring-of-rings) broadcasts issued.",
+        snap.fabric_bcasts,
+    );
+    counter(
+        "fabric_bcast_stages_total",
+        "Stages executed across hierarchical broadcasts.",
+        snap.fabric_bcast_stages,
+    );
 
     let mut gauge = |name: &str, help: &str, v: u64| {
         out.push_str(&format!(
@@ -299,6 +354,23 @@ pub fn prometheus_text(snap: &MetricsSnapshot, hists: &[(String, Vec<(u64, u64)>
     );
     gauge("grid_peak_p", "Largest grid-row count P chosen.", snap.grid_peak_p);
     gauge("grid_peak_q", "Largest grid-column count Q chosen.", snap.grid_peak_q);
+
+    // Per-island admission high-water marks — the labeled series
+    // appears only when a fabric actually admitted bytes, so flat
+    // nodes never expose phantom islands.
+    if snap.fabric_island_peak_bytes.iter().any(|&b| b > 0) {
+        out.push_str(
+            "# HELP jaxmg_fabric_island_peak_admitted_bytes Peak admitted bytes per island.\n\
+             # TYPE jaxmg_fabric_island_peak_admitted_bytes gauge\n",
+        );
+        for (i, &b) in snap.fabric_island_peak_bytes.iter().enumerate() {
+            if b > 0 {
+                out.push_str(&format!(
+                    "jaxmg_fabric_island_peak_admitted_bytes{{island=\"{i}\"}} {b}\n"
+                ));
+            }
+        }
+    }
 
     // Per-class counters.
     out.push_str(
@@ -399,6 +471,27 @@ mod tests {
         assert!(a.contains("\"dur\":2.250"), "{a}");
         assert!(a.contains("\"name\":\"dev1/copy\""));
         assert_eq!(validate_chrome_json(&a).unwrap(), 3);
+    }
+
+    #[test]
+    fn island_trace_groups_pids_and_keeps_flat_output() {
+        let spans = vec![
+            span(1, 1, 0, 0, "compute"),
+            span(1, 2, 1, 0, "fabric"),
+            span(1, 3, 1, 2, "copy"),
+        ];
+        // An empty island map is the flat exporter, byte for byte.
+        assert_eq!(chrome_trace_with_islands(&spans, &[]), chrome_trace_json(&spans));
+        let t = chrome_trace_with_islands(&spans, &[0, 0, 1, 1]);
+        // pid grouping: process_name metadata plus node-prefixed tracks.
+        assert!(t.contains("\"name\":\"process_name\""), "{t}");
+        assert!(t.contains("\"name\":\"node0.dev0\""), "{t}");
+        assert!(t.contains("\"name\":\"node0.dev0/compute\""), "{t}");
+        assert!(t.contains("\"name\":\"node1.dev2/copy\""), "{t}");
+        // Inter-node hops ride their own track within the pid.
+        assert_eq!(stream_tid("fabric"), 4);
+        assert!(t.contains("\"name\":\"node0.dev0/fabric\""), "{t}");
+        assert_eq!(validate_chrome_json(&t).unwrap(), 3);
     }
 
     #[test]

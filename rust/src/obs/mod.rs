@@ -44,6 +44,7 @@ pub mod trace;
 
 pub use drift::{DriftKey, DriftMonitor, DriftStat};
 pub use export::{
-    chrome_trace_json, decisions_jsonl, prometheus_text, stream_tid, validate_chrome_json,
+    chrome_trace_json, chrome_trace_with_islands, decisions_jsonl, prometheus_text, stream_tid,
+    validate_chrome_json,
 };
 pub use trace::{DecisionRec, SpanId, SpanRec, TraceId, Tracer};

@@ -660,6 +660,12 @@ impl<S: Scalar> DistWork for DistReq<S> {
         let t0_ns = shared.sim_now_ns();
         let queue_wait_ns = t0_ns.saturating_sub(ticket.enq_ns);
         let caller = shared.caller;
+        // The fabric router may confine the plan to one island: it
+        // spans `plan.ndev` devices (a prefix of the live set) with
+        // zero-byte footprint padding on the rest. Stage and solve on
+        // that prefix only — the padded entries reserved nothing, so
+        // skipping their release below is also exact.
+        let live: &[usize] = &live[..plan.ndev.min(live.len())];
         let fp = &plan.footprint;
         let metrics = shared.node.metrics().clone();
         let tracer = shared.node.tracer().clone();
@@ -1331,6 +1337,27 @@ fn reserve_all(shared: &Shared, live: &[usize], fp: &Footprint) -> bool {
     true
 }
 
+/// Fold the workers' current reservations into per-island sums and
+/// record the fabric high-water marks
+/// ([`crate::metrics::Metrics::note_island_admitted`]) — the MPMD
+/// half of per-island admission accounting. No-op on a flat node.
+fn note_island_reserved(shared: &Shared) {
+    let topo = shared.node.topology();
+    if topo.num_islands() <= 1 {
+        return;
+    }
+    let mut sums = [0u64; 8];
+    for (d, w) in shared.workers.iter().enumerate() {
+        sums[topo.island_of(d).min(sums.len() - 1)] += w.ctx.admission.reserved() as u64;
+    }
+    let m = shared.node.metrics();
+    for (i, &s) in sums.iter().enumerate() {
+        if s > 0 {
+            m.note_island_admitted(i, s);
+        }
+    }
+}
+
 /// Route one popped work item. Returns `false` when the pick could not
 /// be admitted yet (it is restored under its original ticket; the
 /// dispatcher waits for a release before retrying — the queue's skip
@@ -1420,6 +1447,7 @@ fn dispatch(
                 return false;
             }
             shared.quotas.admit(ticket.slo.tenant, fp_total);
+            note_island_reserved(shared);
             metrics.add_mpmd_routed(shared.sim_now_ns().saturating_sub(ticket.enq_ns));
             let tr = shared.node.tracer();
             if tr.enabled() {
@@ -1495,6 +1523,7 @@ fn dispatch(
                 return false;
             }
             shared.quotas.admit(ticket.slo.tenant, bytes);
+            note_island_reserved(shared);
             metrics.add_mpmd_routed(shared.sim_now_ns().saturating_sub(ticket.enq_ns));
             let tr = shared.node.tracer();
             if tr.enabled() {

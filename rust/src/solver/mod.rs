@@ -101,7 +101,7 @@ pub use schedule::{
 pub use syevd::syevd_dist;
 
 use crate::costmodel::GpuCostModel;
-use crate::device::{DevPtr, Event, SimNode};
+use crate::device::{DevPtr, Event, LinkKind, SimNode};
 use crate::obs::{SpanId, TraceId, Tracer};
 use crate::scalar::Scalar;
 use std::sync::Arc;
@@ -152,6 +152,11 @@ pub struct Ctx<'a, S: Scalar> {
     /// Request-scoped tracing context ([`Ctx::with_trace`]); `None`
     /// when tracing is off, so the charge helpers pay nothing.
     trace: Option<TraceCtx>,
+    /// Price multi-island collectives with the naive flat arithmetic
+    /// instead of the hierarchical ring-of-rings dispatch — the bench
+    /// baseline ([`Ctx::with_flat_collectives`]). Irrelevant on a
+    /// single-island node.
+    flat_collectives: bool,
 }
 
 /// The (tracer, trace, root-span) triple a serving front hands a `Ctx`
@@ -189,7 +194,79 @@ impl<'a, S: Scalar> Ctx<'a, S> {
         } else {
             None
         };
-        Ctx { node, model, kernels: backend.kernels(), pipeline, timeline, preempt: None, trace: None }
+        Ctx {
+            node,
+            model,
+            kernels: backend.kernels(),
+            pipeline,
+            timeline,
+            preempt: None,
+            trace: None,
+            flat_collectives: false,
+        }
+    }
+
+    /// Disable the hierarchical ring-of-rings dispatch on multi-island
+    /// fabrics: every collective prices each receiver individually over
+    /// its (possibly inter-island) link, serialized on the sender —
+    /// the naive baseline `benches/fabric.rs` compares against. No-op
+    /// on a flat single-island node, where the two paths are the same
+    /// arithmetic.
+    pub fn with_flat_collectives(mut self) -> Self {
+        self.flat_collectives = true;
+        self
+    }
+
+    /// Whether collectives should dispatch hierarchically: a
+    /// multi-island fabric with the ring-of-rings path enabled.
+    fn hier_active(&self) -> bool {
+        !self.flat_collectives && self.node.topology().num_islands() > 1
+    }
+
+    /// Partition a collective's receivers by island, relative to the
+    /// sender: `(locals, remotes)` where `locals` are `from`'s
+    /// co-island members (in member order) and each remote island
+    /// contributes `(representative, rest)` — the first member seen on
+    /// that island crosses the fabric, the rest receive from it.
+    /// `None` when the fabric dispatch is off, the node is flat, or no
+    /// member lives on a remote island (then the flat arithmetic *is*
+    /// the hierarchical one).
+    #[allow(clippy::type_complexity)]
+    fn hier_split(
+        &self,
+        from: usize,
+        members: &[usize],
+    ) -> Option<(Vec<usize>, Vec<(usize, Vec<usize>)>)> {
+        if !self.hier_active() {
+            return None;
+        }
+        let topo = self.node.topology();
+        let home = topo.island_of(from);
+        let mut locals = Vec::new();
+        let mut islands: Vec<usize> = Vec::new();
+        let mut remotes: Vec<(usize, Vec<usize>)> = Vec::new();
+        for &d in members {
+            if d == from {
+                continue;
+            }
+            let isl = topo.island_of(d);
+            if isl == home {
+                locals.push(d);
+            } else {
+                match islands.iter().position(|&x| x == isl) {
+                    Some(i) => remotes[i].1.push(d),
+                    None => {
+                        islands.push(isl);
+                        remotes.push((d, Vec::new()));
+                    }
+                }
+            }
+        }
+        if remotes.is_empty() {
+            None
+        } else {
+            Some((locals, remotes))
+        }
     }
 
     /// Attach a request trace: subsequent charges emit spans under
@@ -325,6 +402,9 @@ impl<'a, S: Scalar> Ctx<'a, S> {
             return Ok(());
         }
         let t = self.node.topology().copy_time(from, to, bytes);
+        if matches!(self.node.topology().link(from, to), LinkKind::InterNode) {
+            self.node.metrics().add_fabric_inter(bytes as u64);
+        }
         let traced = self.trace.is_some();
         match &self.timeline {
             Some(tl) => {
@@ -397,6 +477,13 @@ impl<'a, S: Scalar> Ctx<'a, S> {
     /// the sender's copy stream with the same shared-link arithmetic.
     pub fn charge_broadcast(&self, from: usize, bytes: usize) -> crate::Result<()> {
         let nd = self.node.num_devices();
+        if self.hier_active() {
+            // Ring-of-rings on the fabric: one representative per
+            // remote island crosses the inter-node link, then fans out
+            // locally — instead of every receiver paying the fabric.
+            let members: Vec<usize> = (0..nd).collect();
+            return self.group_broadcast_contended("bcast", from, &members, bytes, 1);
+        }
         let traced = self.trace.is_some();
         match &self.timeline {
             Some(tl) => {
@@ -450,6 +537,22 @@ impl<'a, S: Scalar> Ctx<'a, S> {
     pub fn charge_fanout(&self, from: usize, bytes: usize) -> crate::Result<()> {
         match &self.timeline {
             Some(tl) => {
+                if self.hier_active() {
+                    // Hierarchical output fan-out: the ring-of-rings
+                    // schedule, with receiver fences omitted exactly
+                    // like the flat pipelined path.
+                    self.node.device(from)?;
+                    let nd = self.node.num_devices();
+                    if nd <= 1 || bytes == 0 {
+                        return Ok(());
+                    }
+                    let members: Vec<usize> = (0..nd).collect();
+                    let nb = tl.compute(from).horizon();
+                    self.pipelined_group_broadcast(
+                        tl, "fanout", from, &members, bytes, nb, false, 1,
+                    )?;
+                    return Ok(());
+                }
                 let traced = self.trace.is_some();
                 let t0 = if traced { tl.copy(from).horizon_ns() } else { 0 };
                 self.pipelined_fanout(tl, from, bytes, false)?;
@@ -487,55 +590,224 @@ impl<'a, S: Scalar> Ctx<'a, S> {
         members: &[usize],
         bytes: usize,
     ) -> crate::Result<()> {
+        self.group_broadcast_contended(span_name, from, members, bytes, 1)
+    }
+
+    /// Group broadcast with `concurrent` transfers sharing each
+    /// receiver's link (the grid column rings' per-link contention
+    /// term — `concurrent == 1` is bitwise the uncontended path). On a
+    /// multi-island fabric this dispatches to the hierarchical
+    /// ring-of-rings schedule; on a flat node (or when every member is
+    /// co-island with `from`) it is the exact single-node arithmetic.
+    fn group_broadcast_contended(
+        &self,
+        span_name: &'static str,
+        from: usize,
+        members: &[usize],
+        bytes: usize,
+        concurrent: usize,
+    ) -> crate::Result<()> {
         let receivers = members.iter().filter(|&&d| d != from).count();
         if receivers == 0 || bytes == 0 {
             return Ok(());
         }
-        let traced = self.trace.is_some();
         match &self.timeline {
             Some(tl) => {
                 self.node.device(from)?;
                 let nb = tl.compute(from).horizon();
-                let t0 = if traced { tl.copy(from).horizon_ns() } else { 0 };
-                for &d in members {
-                    if d == from {
-                        continue;
-                    }
-                    let t = self.node.topology().copy_time(from, d, bytes) / receivers as f64;
-                    let done = tl.copy(from).issue_after(nb, t);
-                    tl.note_busy(from, t);
-                    self.node.metrics().add_peer(bytes as u64);
-                    tl.compute(d).wait_event(Event::at(done));
-                }
-                if traced {
-                    self.trace_span(
-                        span_name, "collective", from, "copy", t0, tl.copy(from).horizon_ns(),
-                        (bytes * receivers) as u64, 0,
-                    );
-                }
+                self.pipelined_group_broadcast(
+                    tl, span_name, from, members, bytes, nb, true, concurrent,
+                )?;
                 Ok(())
             }
+            None => self.barrier_group_broadcast(span_name, from, members, bytes, concurrent),
+        }
+    }
+
+    /// The pipelined group-broadcast schedule: per-receiver shares on
+    /// the sender's copy stream gated on `not_before`, hierarchical on
+    /// a fabric (crossings first so remote islands fan out in parallel
+    /// with the local shares, each remote island relaying on its
+    /// representative's copy stream). Returns each member's delivery
+    /// time so ring callers (the grid potrf) can gate per-tile work;
+    /// `fence` additionally fences each receiver's compute stream on
+    /// delivery (the `charge_*` data-broadcast semantics).
+    #[allow(clippy::too_many_arguments)]
+    fn pipelined_group_broadcast(
+        &self,
+        tl: &PipelineTimeline,
+        span_name: &'static str,
+        from: usize,
+        members: &[usize],
+        bytes: usize,
+        not_before: f64,
+        fence: bool,
+        concurrent: usize,
+    ) -> crate::Result<Vec<(usize, f64)>> {
+        self.node.device(from)?;
+        let topo = self.node.topology();
+        let traced = self.trace.is_some();
+        let t0 = if traced { tl.copy(from).horizon_ns() } else { 0 };
+        let receivers = members.iter().filter(|&&d| d != from).count();
+        let mut arrivals = Vec::with_capacity(receivers);
+        match self.hier_split(from, members) {
+            Some((locals, remotes)) => {
+                let m = self.node.metrics();
+                // Stage B: fabric crossings, serialized on the
+                // sender's copy stream (the inter-node pipe is shared).
+                let mut rep_done = Vec::with_capacity(remotes.len());
+                for (rep, _) in &remotes {
+                    let tb = topo.contended_time(from, *rep, bytes, concurrent);
+                    let done = tl.copy(from).issue_after(not_before, tb);
+                    tl.note_busy(from, tb);
+                    m.add_peer(bytes as u64);
+                    m.add_fabric_inter(bytes as u64);
+                    if fence {
+                        tl.compute(*rep).wait_event(Event::at(done));
+                    }
+                    arrivals.push((*rep, done));
+                    rep_done.push(done);
+                    if traced {
+                        let t1 = tl.copy(from).horizon_ns();
+                        let dur = (tb * 1e9).round() as u64;
+                        self.trace_span(
+                            "fabric-hop", "collective", from, "fabric",
+                            t1.saturating_sub(dur), t1, bytes as u64, 0,
+                        );
+                    }
+                }
+                // Stage A: the sender's own island, flat shares.
+                for &d in &locals {
+                    let ta = topo.ring_share_time(from, d, bytes, locals.len(), concurrent);
+                    let done = tl.copy(from).issue_after(not_before, ta);
+                    tl.note_busy(from, ta);
+                    m.add_peer(bytes as u64);
+                    m.add_fabric_intra(bytes as u64);
+                    if fence {
+                        tl.compute(d).wait_event(Event::at(done));
+                    }
+                    arrivals.push((d, done));
+                }
+                // Stage C: each representative relays island-locally on
+                // its own copy stream — islands fan out in parallel.
+                for ((rep, rest), rdone) in remotes.iter().zip(rep_done) {
+                    for &d in rest {
+                        let tc = topo.ring_share_time(*rep, d, bytes, rest.len(), concurrent);
+                        let done = tl.copy(*rep).issue_after(rdone, tc);
+                        tl.note_busy(*rep, tc);
+                        m.add_peer(bytes as u64);
+                        m.add_fabric_intra(bytes as u64);
+                        if fence {
+                            tl.compute(d).wait_event(Event::at(done));
+                        }
+                        arrivals.push((d, done));
+                    }
+                }
+                m.add_fabric_bcast(
+                    1 + u64::from(!locals.is_empty())
+                        + remotes.iter().filter(|(_, rest)| !rest.is_empty()).count() as u64,
+                );
+            }
             None => {
-                let src_clock = self.node.device(from)?.clock();
-                let t0 = if traced { src_clock.now_ns() } else { 0 };
                 for &d in members {
                     if d == from {
                         continue;
                     }
-                    let t = self.node.topology().copy_time(from, d, bytes) / receivers as f64;
+                    let t = topo.ring_share_time(from, d, bytes, receivers, concurrent);
+                    let done = tl.copy(from).issue_after(not_before, t);
+                    tl.note_busy(from, t);
+                    self.node.metrics().add_peer(bytes as u64);
+                    if fence {
+                        tl.compute(d).wait_event(Event::at(done));
+                    }
+                    arrivals.push((d, done));
+                }
+            }
+        }
+        if traced {
+            self.trace_span(
+                span_name, "collective", from, "copy", t0, tl.copy(from).horizon_ns(),
+                (bytes * receivers) as u64, 0,
+            );
+        }
+        Ok(arrivals)
+    }
+
+    /// The barrier group-broadcast schedule: the same hierarchical
+    /// dispatch on clocks instead of streams (crossings advance the
+    /// sender, representatives relay on their own clocks).
+    fn barrier_group_broadcast(
+        &self,
+        span_name: &'static str,
+        from: usize,
+        members: &[usize],
+        bytes: usize,
+        concurrent: usize,
+    ) -> crate::Result<()> {
+        let topo = self.node.topology();
+        let traced = self.trace.is_some();
+        let src_clock = self.node.device(from)?.clock();
+        let t0 = if traced { src_clock.now_ns() } else { 0 };
+        match self.hier_split(from, members) {
+            Some((locals, remotes)) => {
+                let m = self.node.metrics();
+                for (rep, _) in &remotes {
+                    let tb = topo.contended_time(from, *rep, bytes, concurrent);
+                    let f0 = if traced { src_clock.now_ns() } else { 0 };
+                    src_clock.advance(tb);
+                    m.add_peer(bytes as u64);
+                    m.add_fabric_inter(bytes as u64);
+                    self.node.device(*rep)?.clock().sync_to(src_clock.now());
+                    if traced {
+                        self.trace_span(
+                            "fabric-hop", "collective", from, "fabric",
+                            f0, src_clock.now_ns(), bytes as u64, 0,
+                        );
+                    }
+                }
+                for &d in &locals {
+                    let ta = topo.ring_share_time(from, d, bytes, locals.len(), concurrent);
+                    src_clock.advance(ta);
+                    m.add_peer(bytes as u64);
+                    m.add_fabric_intra(bytes as u64);
+                    self.node.device(d)?.clock().sync_to(src_clock.now());
+                }
+                for (rep, rest) in &remotes {
+                    let rep_clock = self.node.device(*rep)?.clock();
+                    for &d in rest {
+                        let tc = topo.ring_share_time(*rep, d, bytes, rest.len(), concurrent);
+                        rep_clock.advance(tc);
+                        m.add_peer(bytes as u64);
+                        m.add_fabric_intra(bytes as u64);
+                        self.node.device(d)?.clock().sync_to(rep_clock.now());
+                    }
+                }
+                m.add_fabric_bcast(
+                    1 + u64::from(!locals.is_empty())
+                        + remotes.iter().filter(|(_, rest)| !rest.is_empty()).count() as u64,
+                );
+            }
+            None => {
+                let receivers = members.iter().filter(|&&d| d != from).count();
+                for &d in members {
+                    if d == from {
+                        continue;
+                    }
+                    let t = topo.ring_share_time(from, d, bytes, receivers, concurrent);
                     src_clock.advance(t);
                     self.node.metrics().add_peer(bytes as u64);
                     self.node.device(d)?.clock().sync_to(src_clock.now());
                 }
-                if traced {
-                    self.trace_span(
-                        span_name, "collective", from, "copy", t0, src_clock.now_ns(),
-                        (bytes * receivers) as u64, 0,
-                    );
-                }
-                Ok(())
             }
         }
+        if traced {
+            let receivers = members.iter().filter(|&&d| d != from).count();
+            self.trace_span(
+                span_name, "collective", from, "copy", t0, src_clock.now_ns(),
+                (bytes * receivers) as u64, 0,
+            );
+        }
+        Ok(())
     }
 
     /// Tally `bytes` onto the per-axis grid collective counter.
@@ -572,6 +844,61 @@ impl<'a, S: Scalar> Ctx<'a, S> {
             RingAxis::Col => "ring-col",
         };
         self.group_broadcast_impl(name, from, members, bytes)
+    }
+
+    /// [`Ctx::charge_ring_broadcast`] with an explicit per-link
+    /// contention factor: `concurrent` simultaneous transfers share
+    /// each receiver's link (the grid column rings at a pivot step,
+    /// where every source row broadcasts down its column at once).
+    /// `concurrent == 1` is bitwise [`Ctx::charge_ring_broadcast`].
+    pub fn charge_ring_broadcast_contended(
+        &self,
+        axis: RingAxis,
+        from: usize,
+        members: &[usize],
+        bytes: usize,
+        concurrent: usize,
+    ) -> crate::Result<()> {
+        let receivers = members.iter().filter(|&&d| d != from).count();
+        if receivers > 0 && bytes > 0 {
+            self.note_ring_bytes(axis, (bytes * receivers) as u64);
+        }
+        let name = match axis {
+            RingAxis::Row => "ring-row",
+            RingAxis::Col => "ring-col",
+        };
+        self.group_broadcast_contended(name, from, members, bytes, concurrent)
+    }
+
+    /// The pipelined ring broadcast the grid potrf hand-schedules: the
+    /// same schedule as [`Ctx::charge_ring_broadcast_contended`]'s
+    /// pipelined arm, but gated on an explicit `not_before` horizon
+    /// (the producing kernel's completion, not the sender's compute
+    /// horizon) and **without** the receiver compute fence — the caller
+    /// gates per-tile work on the returned `(device, delivery)` pairs
+    /// instead. Errors under the barrier scheduler (no timeline).
+    pub fn pipelined_ring_arrivals(
+        &self,
+        axis: RingAxis,
+        from: usize,
+        members: &[usize],
+        bytes: usize,
+        not_before: f64,
+        concurrent: usize,
+    ) -> crate::Result<Vec<(usize, f64)>> {
+        let tl = self.timeline.as_ref().ok_or_else(|| {
+            crate::Error::config("pipelined_ring_arrivals requires the pipelined scheduler")
+        })?;
+        let receivers = members.iter().filter(|&&d| d != from).count();
+        if receivers == 0 || bytes == 0 {
+            return Ok(Vec::new());
+        }
+        self.note_ring_bytes(axis, (bytes * receivers) as u64);
+        let name = match axis {
+            RingAxis::Row => "ring-row",
+            RingAxis::Col => "ring-col",
+        };
+        self.pipelined_group_broadcast(tl, name, from, members, bytes, not_before, false, concurrent)
     }
 
     /// Row-ring broadcast: `bytes` from `from` to its grid-row peers.

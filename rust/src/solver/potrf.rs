@@ -55,7 +55,7 @@
 //! same kernel sequence (full-panel `trsm`, per-tile-column trailing
 //! GEMMs); only ownership, and therefore the timeline, changes.
 
-use super::{Ctx, GridComm};
+use super::{Ctx, GridComm, RingAxis};
 use crate::costmodel::GpuCostModel;
 use crate::error::{Error, Result};
 use crate::layout::{BlockCyclic2D, MatrixLayout};
@@ -356,19 +356,15 @@ fn potrf_dist_grid<S: Scalar>(
         let mut ltt_arrival = vec![0.0f64; ndev];
         let ltt_bytes = tk * tk * esize;
         if !ltt_members.is_empty() {
-            if let Some(tl) = tl {
+            if tl.is_some() {
                 // The pipelined arm needs per-member arrival times (the
-                // trsm gates on them), which the ring helper does not
-                // return — same shared-link arithmetic, hand-issued.
-                let recv = ltt_members.len();
-                for &m in &ltt_members {
-                    let tcopy = ctx.node.topology().copy_time(diag, m, ltt_bytes) / recv as f64;
-                    let done = tl.copy(diag).issue_after(potf2_done, tcopy);
-                    tl.note_busy(diag, tcopy);
+                // trsm gates on them) — the fabric-aware ring helper
+                // returns delivery pairs, gated on the potf2.
+                for (m, done) in ctx.pipelined_ring_arrivals(
+                    RingAxis::Col, diag, &ltt_members, ltt_bytes, potf2_done, 1,
+                )? {
                     ltt_arrival[m] = done;
-                    ctx.node.metrics().add_peer(ltt_bytes as u64);
                 }
-                ctx.node.metrics().add_grid_col_bytes((ltt_bytes * recv) as u64);
             } else {
                 ctx.charge_col_ring_broadcast(diag, &ltt_members, ltt_bytes)?;
             }
@@ -411,16 +407,12 @@ fn potrf_dist_grid<S: Scalar>(
                 continue;
             }
             let bytes = seg[r] * tk * esize;
-            if let Some(tl) = tl {
-                let recv = members.len();
-                for &m in &members {
-                    let tcopy = ctx.node.topology().copy_time(src, m, bytes) / recv as f64;
-                    let done = tl.copy(src).issue_after(trsm_done[r], tcopy);
-                    tl.note_busy(src, tcopy);
+            if tl.is_some() {
+                for (m, done) in ctx.pipelined_ring_arrivals(
+                    RingAxis::Row, src, &members, bytes, trsm_done[r], 1,
+                )? {
                     row_arrival[m] = done;
-                    ctx.node.metrics().add_peer(bytes as u64);
                 }
-                ctx.node.metrics().add_grid_row_bytes((bytes * recv) as u64);
             } else {
                 ctx.charge_row_ring_broadcast(src, &members, bytes)?;
             }
@@ -440,6 +432,12 @@ fn potrf_dist_grid<S: Scalar>(
                     blk[rd.owner(k)] += cd.tile_len(k);
                 }
             }
+            // Contention: every source row with a nonzero block
+            // broadcasts down this column at once, so each receiver's
+            // link carries `conc` concurrent transfers — the per-link
+            // sharing term tall grids (large P) pay for and wide grids
+            // do not (the PR 5 ladder's missing cost).
+            let conc = blk.iter().filter(|&&b| b > 0).count();
             for rs in 0..p {
                 if blk[rs] == 0 {
                     continue;
@@ -451,19 +449,17 @@ fn potrf_dist_grid<S: Scalar>(
                     continue;
                 }
                 let bytes = blk[rs] * tk * esize;
-                if let Some(tl) = tl {
-                    let recv = members.len();
+                if tl.is_some() {
                     let src_ready = if c == ct { trsm_done[rs] } else { row_arrival[src] };
-                    for &m in &members {
-                        let tcopy = ctx.node.topology().copy_time(src, m, bytes) / recv as f64;
-                        let done = tl.copy(src).issue_after(src_ready, tcopy);
-                        tl.note_busy(src, tcopy);
+                    for (m, done) in ctx.pipelined_ring_arrivals(
+                        RingAxis::Col, src, &members, bytes, src_ready, conc,
+                    )? {
                         colt_arrival[m] = colt_arrival[m].max(done);
-                        ctx.node.metrics().add_peer(bytes as u64);
                     }
-                    ctx.node.metrics().add_grid_col_bytes((bytes * recv) as u64);
                 } else {
-                    ctx.charge_col_ring_broadcast(src, &members, bytes)?;
+                    ctx.charge_ring_broadcast_contended(
+                        RingAxis::Col, src, &members, bytes, conc,
+                    )?;
                 }
             }
         }

@@ -327,6 +327,96 @@ impl Population {
     pub fn gp_vmc_mix_reuse(hot: usize, churn: f64) -> Self {
         Self::gp_vmc_mix().with_reuse(hot, churn)
     }
+
+    /// The two-tier-fabric fleet mix ([`crate::fabric::Fabric`]):
+    /// [`Self::gp_vmc_mix`]'s request classes rebalanced toward the
+    /// mid-size distributed solves a multi-island deployment actually
+    /// serves, across four tenants. Every template sits **below** the
+    /// planner's 1-node-vs-2-node crossover, so on a 2×8 fabric the
+    /// router confines each solve to one island's device prefix —
+    /// both islands stay independently busy, and what this mix
+    /// exercises is per-island admission and narrow-plan scheduling,
+    /// not the inter-node links. Spanning solves are the offline
+    /// crossover-ladder regime (`benches/fabric.rs`, EXPERIMENTS.md),
+    /// not fleet traffic.
+    pub fn fabric_mix() -> Self {
+        let dist = |r, n, nrhs, dtype, class, budget: Option<u64>, tenant| RequestSpec {
+            route: Route::Dist(r),
+            n,
+            nrhs,
+            dtype,
+            class,
+            deadline_budget_ns: budget,
+            tenant,
+            seed: 0,
+        };
+        Population::new(vec![
+            // The VMC inner loop, unchanged from `gp_vmc_mix`.
+            (
+                0.25,
+                dist(
+                    DistRoutine::Potrs,
+                    96,
+                    1,
+                    DType::F64,
+                    SloClass::Interactive,
+                    Some(25_000_000),
+                    1,
+                ),
+            ),
+            // GP posterior mean against a larger kernel.
+            (
+                0.20,
+                dist(
+                    DistRoutine::Potrs,
+                    256,
+                    1,
+                    DType::F64,
+                    SloClass::Interactive,
+                    Some(80_000_000),
+                    2,
+                ),
+            ),
+            // Posterior sweeps: one factor amortized over a block of RHS.
+            (0.15, dist(DistRoutine::Potrs, 192, 4, DType::F64, SloClass::Standard, None, 2)),
+            // Kernel inversion for a compact posterior covariance. Kept
+            // deliberately small: potri's trmm/lauum tail is flop-dense
+            // enough that even mid sizes profit from spanning both
+            // islands, so only the small end stays island-confined.
+            (0.10, dist(DistRoutine::Potri, 64, 0, DType::F64, SloClass::Standard, None, 3)),
+            // Spectral preconditioner refresh.
+            (0.10, dist(DistRoutine::Syevd, 256, 0, DType::F64, SloClass::Standard, None, 3)),
+            // The coalescer's tiny-solve stream.
+            (
+                0.05,
+                RequestSpec {
+                    route: Route::Small(SmallRoutine::Potrs),
+                    n: 12,
+                    nrhs: 1,
+                    dtype: DType::F64,
+                    class: SloClass::Standard,
+                    deadline_budget_ns: None,
+                    tenant: 1,
+                    seed: 0,
+                },
+            ),
+            (
+                0.05,
+                RequestSpec {
+                    route: Route::Small(SmallRoutine::Potrs),
+                    n: 30,
+                    nrhs: 1,
+                    dtype: DType::F64,
+                    class: SloClass::Standard,
+                    deadline_budget_ns: None,
+                    tenant: 1,
+                    seed: 0,
+                },
+            ),
+            // Nightly refactorization: big, float32, happy to wait.
+            (0.10, dist(DistRoutine::Potrf, 768, 0, DType::F32, SloClass::Batch, None, 4)),
+        ])
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -670,6 +760,48 @@ mod tests {
         let a = pop.sample(&mut rng);
         let b = pop.sample(&mut rng);
         assert_ne!(a.seed, b.seed, "each draw must get fresh matrix inputs");
+    }
+
+    #[test]
+    fn fabric_mix_stays_island_confined_on_a_two_island_fabric() {
+        // The mix's contract: every distributed template sits below the
+        // 1-node-vs-2-node crossover, so the fabric planner confines it
+        // to one island's 8-device prefix (both islands serve
+        // independently; nothing in fleet traffic crosses the fabric).
+        let fab = crate::fabric::Fabric::h200(2);
+        let topo = fab.node().topology();
+        let model = crate::costmodel::GpuCostModel::h200();
+        let pop = Population::fabric_mix();
+        let mut tenants = std::collections::HashSet::new();
+        for &(_, spec) in pop.entries() {
+            tenants.insert(spec.tenant);
+            let Route::Dist(r) = spec.route else { continue };
+            let plan = crate::coordinator::plan_dist(
+                r.name(),
+                spec.n,
+                spec.nrhs,
+                8,
+                fab.num_devices(),
+                spec.dtype,
+                &model,
+                topo,
+                None,
+            )
+            .unwrap();
+            assert_eq!(
+                plan.ndev, 8,
+                "{} n={} must confine to one island, planned {:?}",
+                r.name(),
+                spec.n,
+                plan.grid
+            );
+            assert_eq!(plan.footprint.devices(), 16, "admission must stay node-wide");
+            assert!(
+                (8..16).all(|d| plan.footprint.bytes(d) == 0),
+                "the idle island must reserve nothing"
+            );
+        }
+        assert!(tenants.len() >= 4, "the fabric mix is multi-tenant: {tenants:?}");
     }
 
     #[test]

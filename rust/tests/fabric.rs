@@ -1,0 +1,321 @@
+//! Acceptance tests for the two-tier multi-node fabric.
+//!
+//! The fabric's core contract is that it is a *pricing* overlay, never
+//! a numerics fork: every solver runs on a [`Fabric`] exactly as on a
+//! flat [`SimNode`], hierarchical (ring-of-rings) collectives change
+//! only when bytes move, and a one-island fabric is bitwise a flat
+//! node — results, makespans, and per-device stream horizons alike.
+//!
+//! The grid-native potrf schedule on the fabric is additionally pinned
+//! against `tests/golden/potrf_fabric_timelines.txt`. The committed
+//! snapshot was generated offline by `tests/golden/gen_potrf_fabric.py`
+//! (an exact integer-ns replication of the hierarchical dispatch); this
+//! suite verifies the live scheduler against it, bootstrapping or
+//! regenerating under `UPDATE_GOLDEN=1` as `golden_timeline.rs` does.
+
+use jaxmg::costmodel::GpuCostModel;
+use jaxmg::device::SimNode;
+use jaxmg::fabric::Fabric;
+use jaxmg::layout::{BlockCyclic1D, BlockCyclic2D};
+use jaxmg::linalg::Matrix;
+use jaxmg::scalar::{c32, c64, Scalar};
+use jaxmg::solver::{
+    potrf_dist, potri_dist, potrs_dist, syevd_dist, Ctx, DeviceTimeline, PipelineConfig,
+    SolverBackend,
+};
+use jaxmg::tile::{DistMatrix, LayoutKind};
+use std::fmt::Write as _;
+
+/// Run the full Cholesky chain (factor → solve → inverse) on `node`
+/// under `cfg`, optionally forcing flat (non-hierarchical) collective
+/// dispatch, returning the gathered factor, solution, inverse, and the
+/// simulated makespan.
+fn chol_chain_on<S: Scalar>(
+    node: &SimNode,
+    lay: LayoutKind,
+    a: &Matrix<S>,
+    b: &Matrix<S>,
+    cfg: PipelineConfig,
+    flat: bool,
+) -> (Matrix<S>, Matrix<S>, Matrix<S>, f64) {
+    let model = GpuCostModel::h200();
+    let backend = SolverBackend::<S>::Native;
+    let mut dm = DistMatrix::scatter(node, a, lay).unwrap();
+    node.reset_accounting();
+    let mut ctx = Ctx::with_pipeline(node, &model, &backend, cfg);
+    if flat {
+        ctx = ctx.with_flat_collectives();
+    }
+    potrf_dist(&ctx, &mut dm).unwrap();
+    let l = dm.gather().unwrap();
+    let x = potrs_dist(&ctx, &dm, b).unwrap();
+    potri_dist(&ctx, &mut dm).unwrap();
+    let inv = dm.gather().unwrap();
+    (l, x, inv, node.sim_time())
+}
+
+/// The whole Cholesky chain on a 2×8 fabric — 1D, island-aligned and
+/// island-crossing grids, hierarchical and flat dispatch — is bitwise
+/// the flat 16-device node's, ragged edge tiles included.
+fn fabric_cholesky_matches_flat_node<S: Scalar>(seed: u64) {
+    let (n, tile, nrhs) = (67usize, 4usize, 2usize); // ragged: 67 % 4 != 0
+    let a = Matrix::<S>::spd_random(n, seed);
+    let b = Matrix::<S>::random(n, nrhs, seed + 50);
+    let lay_1d = LayoutKind::BlockCyclic(BlockCyclic1D::new(n, tile, 16).unwrap());
+    let flat_node = SimNode::new_uniform(16, 1 << 26);
+    let (l1, x1, i1, _) =
+        chol_chain_on::<S>(&flat_node, lay_1d, &a, &b, PipelineConfig::barrier(), false);
+    let fab = Fabric::h200(2);
+    let grids: Vec<LayoutKind> = vec![
+        lay_1d,
+        LayoutKind::Grid(BlockCyclic2D::new(n, n, tile, tile, 4, 4).unwrap()),
+        LayoutKind::Grid(BlockCyclic2D::new(n, n, tile, tile, 2, 8).unwrap()),
+    ];
+    for lay in grids {
+        for flat in [false, true] {
+            let (l2, x2, i2, _) =
+                chol_chain_on::<S>(fab.node(), lay, &a, &b, PipelineConfig::barrier(), flat);
+            let tag = if flat { "flat" } else { "hier" };
+            assert_eq!(l1.as_slice(), l2.as_slice(), "{tag} factor diverges ({:?})", S::DTYPE);
+            assert_eq!(x1.as_slice(), x2.as_slice(), "{tag} solution diverges ({:?})", S::DTYPE);
+            assert_eq!(i1.as_slice(), i2.as_slice(), "{tag} inverse diverges ({:?})", S::DTYPE);
+        }
+    }
+}
+
+#[test]
+fn fabric_cholesky_bitwise_f32() {
+    fabric_cholesky_matches_flat_node::<f32>(0xFAB1);
+}
+
+#[test]
+fn fabric_cholesky_bitwise_f64() {
+    fabric_cholesky_matches_flat_node::<f64>(0xFAB2);
+}
+
+#[test]
+fn fabric_cholesky_bitwise_c64() {
+    fabric_cholesky_matches_flat_node::<c32>(0xFAB3);
+}
+
+#[test]
+fn fabric_cholesky_bitwise_c128() {
+    fabric_cholesky_matches_flat_node::<c64>(0xFAB4);
+}
+
+/// syevd on the fabric: eigenvalues and eigenvectors bitwise the flat
+/// node's.
+fn fabric_syevd_matches_flat_node<S: Scalar>(seed: u64) {
+    let (n, tile) = (67usize, 4usize);
+    let a = Matrix::<S>::spd_random(n, seed);
+    let lay = LayoutKind::BlockCyclic(BlockCyclic1D::new(n, tile, 16).unwrap());
+    let model = GpuCostModel::h200();
+    let backend = SolverBackend::<S>::Native;
+    let run = |node: &SimNode| -> (Vec<S::Real>, Matrix<S>) {
+        let mut dm = DistMatrix::scatter(node, &a, lay).unwrap();
+        node.reset_accounting();
+        let ctx = Ctx::new(node, &model, &backend);
+        let w = syevd_dist(&ctx, &mut dm).unwrap();
+        (w, dm.gather().unwrap())
+    };
+    let flat_node = SimNode::new_uniform(16, 1 << 26);
+    let fab = Fabric::h200(2);
+    let (w1, v1) = run(&flat_node);
+    let (w2, v2) = run(fab.node());
+    assert_eq!(w1, w2, "fabric changed syevd eigenvalues ({:?})", S::DTYPE);
+    assert_eq!(v1.as_slice(), v2.as_slice(), "fabric changed syevd eigenvectors ({:?})", S::DTYPE);
+}
+
+#[test]
+fn fabric_syevd_bitwise_f64() {
+    fabric_syevd_matches_flat_node::<f64>(0xFAB5);
+}
+
+#[test]
+fn fabric_syevd_bitwise_c128() {
+    fabric_syevd_matches_flat_node::<c64>(0xFAB6);
+}
+
+/// A one-island fabric IS a flat node: factor, makespan, and every
+/// per-device stream horizon are bitwise `SimNode::new_uniform`'s, and
+/// no fabric traffic is recorded.
+#[test]
+fn one_island_fabric_timelines_are_bitwise_flat() {
+    let (ndev, tile, n) = (8usize, 8usize, 64usize);
+    let a = Matrix::<f64>::spd_random(n, 0xFAB7);
+    let lay = LayoutKind::BlockCyclic(BlockCyclic1D::new(n, tile, ndev).unwrap());
+    let model = GpuCostModel::h200();
+    let backend = SolverBackend::<f64>::Native;
+    let run = |node: &SimNode| -> (Matrix<f64>, f64, Vec<DeviceTimeline>) {
+        let mut dm = DistMatrix::scatter(node, &a, lay).unwrap();
+        node.reset_accounting();
+        let ctx = Ctx::with_pipeline(node, &model, &backend, PipelineConfig::lookahead(2));
+        potrf_dist(&ctx, &mut dm).unwrap();
+        let snap = ctx.timeline_snapshot().unwrap();
+        (dm.gather().unwrap(), node.sim_time(), snap)
+    };
+    let flat_node = SimNode::new_uniform(ndev, 1 << 26);
+    let fab = Fabric::new(1, ndev, 1 << 26);
+    let (l1, t1, s1) = run(&flat_node);
+    let (l2, t2, s2) = run(fab.node());
+    assert_eq!(l1.as_slice(), l2.as_slice(), "1-island fabric changed the factor");
+    assert_eq!(t1, t2, "1-island fabric changed the makespan");
+    assert_eq!(s1.len(), s2.len());
+    for (a, b) in s1.iter().zip(&s2) {
+        assert_eq!(a.device, b.device);
+        assert_eq!(a.compute_horizon, b.compute_horizon, "dev {} compute drifted", a.device);
+        assert_eq!(a.panel_horizon, b.panel_horizon, "dev {} panel drifted", a.device);
+        assert_eq!(a.copy_horizon, b.copy_horizon, "dev {} copy drifted", a.device);
+        assert_eq!(a.busy, b.busy, "dev {} busy drifted", a.device);
+    }
+    let m = fab.node().metrics().snapshot();
+    assert_eq!(m.fabric_bcasts, 0, "1-island fabric must never stage a hierarchical bcast");
+    assert_eq!(m.fabric_inter_bytes, 0);
+}
+
+/// Hierarchical dispatch on a 2-island fabric records fabric traffic
+/// (inter + intra bytes, staged broadcasts), flat dispatch records no
+/// staged broadcasts, and the numerics agree bitwise either way. The
+/// lookahead schedule stays a strict win over the barrier one on the
+/// fabric, with identical factors.
+#[test]
+fn hierarchical_dispatch_counts_fabric_traffic_and_keeps_numerics() {
+    let (n, tile) = (64usize, 4usize);
+    let a = Matrix::<f64>::spd_random(n, 0xFAB8);
+    let lay = LayoutKind::Grid(BlockCyclic2D::new(n, n, tile, tile, 4, 4).unwrap());
+    let model = GpuCostModel::h200();
+    let backend = SolverBackend::<f64>::Native;
+    let run = |cfg: PipelineConfig, flat: bool| -> (Matrix<f64>, f64, u64, u64, u64) {
+        let fab = Fabric::h200(2);
+        let node = fab.node();
+        let mut dm = DistMatrix::scatter(node, &a, lay).unwrap();
+        node.reset_accounting();
+        let mut ctx = Ctx::with_pipeline(node, &model, &backend, cfg);
+        if flat {
+            ctx = ctx.with_flat_collectives();
+        }
+        potrf_dist(&ctx, &mut dm).unwrap();
+        let t = node.sim_time();
+        let m = node.metrics().snapshot();
+        (dm.gather().unwrap(), t, m.fabric_inter_bytes, m.fabric_intra_bytes, m.fabric_bcasts)
+    };
+    let (l_hier, t_look, inter, intra, bcasts) = run(PipelineConfig::lookahead(2), false);
+    assert!(inter > 0, "island-crossing rings must cross the fabric");
+    assert!(intra > 0, "hierarchical stages must fan out island-locally");
+    assert!(bcasts > 0, "hierarchical broadcasts must be counted");
+    let (l_flat, _, _, _, flat_bcasts) = run(PipelineConfig::lookahead(2), true);
+    assert_eq!(flat_bcasts, 0, "flat dispatch must never stage a hierarchical bcast");
+    assert_eq!(l_hier.as_slice(), l_flat.as_slice(), "collective dispatch changed numerics");
+    let (l_barrier, t_barrier, _, _, _) = run(PipelineConfig::barrier(), false);
+    assert_eq!(l_hier.as_slice(), l_barrier.as_slice(), "schedule changed fabric numerics");
+    assert!(
+        t_look < t_barrier,
+        "fabric lookahead {t_look} !< barrier {t_barrier} (p=4 q=4 tile={tile} n={n})"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// golden snapshot: the grid-native potrf schedule on the fabric
+// ---------------------------------------------------------------------------
+
+/// `(p, q, tile, n)` grid-native configurations on the 2×8 fabric —
+/// `p·q = 16` always. The committed snapshot was generated offline by
+/// `tests/golden/gen_potrf_fabric.py`.
+const FABRIC_GRID: &[(usize, usize, usize, usize)] =
+    &[(2, 8, 4, 64), (4, 4, 4, 64), (4, 4, 8, 128)];
+
+fn run_potrf2d_fabric(
+    p: usize,
+    q: usize,
+    tile: usize,
+    n: usize,
+    cfg: PipelineConfig,
+) -> (Matrix<f64>, f64, Option<Vec<DeviceTimeline>>) {
+    let fab = Fabric::h200(2);
+    let node = fab.node();
+    let model = GpuCostModel::h200();
+    let backend = SolverBackend::<f64>::Native;
+    let a = Matrix::<f64>::spd_random(n, 0xD15C0 + n as u64);
+    let lay = LayoutKind::Grid(BlockCyclic2D::new(n, n, tile, tile, p, q).unwrap());
+    let mut dm = DistMatrix::scatter(node, &a, lay).unwrap();
+    node.reset_accounting();
+    let ctx = Ctx::with_pipeline(node, &model, &backend, cfg);
+    potrf_dist(&ctx, &mut dm).unwrap();
+    let snap = ctx.timeline_snapshot();
+    // As in `golden_timeline.rs`: the makespan is captured before the
+    // verification gather, whose H2D charges are not part of the
+    // factorization schedule the snapshot pins.
+    let makespan = node.sim_time();
+    (dm.gather().unwrap(), makespan, snap)
+}
+
+#[test]
+fn fabric_lookahead_beats_barrier_on_every_config() {
+    for &(p, q, tile, n) in FABRIC_GRID {
+        let (l_barrier, t_barrier, _) = run_potrf2d_fabric(p, q, tile, n, PipelineConfig::barrier());
+        let (l_look, t_look, _) = run_potrf2d_fabric(p, q, tile, n, PipelineConfig::lookahead(2));
+        assert_eq!(
+            l_barrier.as_slice(),
+            l_look.as_slice(),
+            "schedule changed fabric numerics (p={p} q={q} tile={tile} n={n})"
+        );
+        assert!(
+            t_look < t_barrier,
+            "fabric lookahead {t_look} !< barrier {t_barrier} (p={p} q={q} tile={tile} n={n})"
+        );
+    }
+}
+
+fn render_fabric_snapshot() -> String {
+    let mut out = String::new();
+    out.push_str(
+        "# golden fabric potrf timelines (µs, 2x8 two-tier fabric) — \
+         regenerate with UPDATE_GOLDEN=1\n",
+    );
+    for &(p, q, tile, n) in FABRIC_GRID {
+        let (_, t_barrier, _) = run_potrf2d_fabric(p, q, tile, n, PipelineConfig::barrier());
+        let (_, t_look, snap) = run_potrf2d_fabric(p, q, tile, n, PipelineConfig::lookahead(2));
+        let snap = snap.expect("pipelined run has a timeline");
+        writeln!(out, "config islands=2 per_island=8 p={p} q={q} tile={tile} n={n}").unwrap();
+        writeln!(out, "  barrier_makespan_us   {:.3}", t_barrier * 1e6).unwrap();
+        writeln!(out, "  lookahead_makespan_us {:.3}", t_look * 1e6).unwrap();
+        for d in &snap {
+            writeln!(
+                out,
+                "  dev {} compute {:.3} panel {:.3} copy {:.3} busy {:.3}",
+                d.device,
+                d.compute_horizon * 1e6,
+                d.panel_horizon * 1e6,
+                d.copy_horizon * 1e6,
+                d.busy * 1e6
+            )
+            .unwrap();
+        }
+    }
+    out
+}
+
+/// Exact-compare a rendered snapshot against its checked-in golden
+/// file, bootstrapping (or regenerating under `UPDATE_GOLDEN=1`) it.
+fn check_golden(file: &str, rendered: String) {
+    let golden_dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden");
+    let golden_path = golden_dir.join(file);
+    let update = std::env::var_os("UPDATE_GOLDEN").is_some();
+    if update || !golden_path.exists() {
+        std::fs::create_dir_all(&golden_dir).unwrap();
+        std::fs::write(&golden_path, &rendered).unwrap();
+        eprintln!("golden timeline snapshot written to {golden_path:?}");
+        return;
+    }
+    let golden = std::fs::read_to_string(&golden_path).unwrap();
+    assert_eq!(
+        golden, rendered,
+        "per-device fabric timelines drifted from {golden_path:?} — a perf regression (or an \
+         intentional scheduler/cost-model change: rerun with UPDATE_GOLDEN=1 and review the diff)"
+    );
+}
+
+#[test]
+fn fabric_potrf2d_timelines_match_golden_snapshot() {
+    check_golden("potrf_fabric_timelines.txt", render_fabric_snapshot());
+}

@@ -1,22 +1,31 @@
 #!/usr/bin/env python3
-"""Offline generator for `potrf2d_timelines.txt`.
+"""Offline generator for `potrf_fabric_timelines.txt`.
 
 This container has no Rust toolchain, so the golden snapshot of the
-grid-native potrf schedule is produced by an exact integer-nanosecond
-replication of the simulator's arithmetic: the same H200 cost-model
-constants, the same `SimClock`/`Stream` u64-ns state transitions
-(`round(seconds * 1e9)` half-away-from-zero), and the same charge
-sequence as `solver::potrf::potrf_dist_grid` under both the barrier and
-lookahead(2) schedules. The sibling `replicate_1d` methodology was
-validated byte-for-byte against the committed `potrf_timelines.txt`
-before this generator was trusted.
+grid-native potrf schedule **on a two-tier fabric** is produced by an
+exact integer-nanosecond replication of the simulator's arithmetic —
+the same methodology as the sibling `gen_potrf2d.py` (validated
+byte-for-byte against the committed flat snapshots), extended with the
+hierarchical ring-of-rings dispatch of `Ctx::pipelined_group_broadcast`
+/ `Ctx::barrier_group_broadcast`:
 
+* a broadcast whose receivers span islands splits into stage B (one
+  representative per remote island crosses the inter-node link at full
+  contended cost, serialized on the sender's copy stream / clock),
+  stage A (the sender's own island takes flat `ring_share_time`
+  shares), and stage C (each representative relays island-locally on
+  its *own* copy stream / clock, islands fanning out in parallel);
+* an island-local broadcast is bitwise the flat single-node
+  arithmetic (`NodeTopology::ring_share_time` over NVLink).
+
+The topology is `NodeTopology::two_tier(2, 8)`: NVLink (450 GB/s,
+5 µs) within an island, the inter-node fabric (50 GB/s, 10 µs) across.
 Timing depends only on shapes and model constants — never on matrix
 values — so no numerics are replicated here.
 
 Regenerate (with a Rust toolchain) via
-`UPDATE_GOLDEN=1 cargo test --test golden_timeline`, or (without one)
-`python3 gen_potrf2d.py > potrf2d_timelines.txt`.
+`UPDATE_GOLDEN=1 cargo test --test fabric`, or (without one)
+`python3 gen_potrf_fabric.py > potrf_fabric_timelines.txt`.
 """
 import math
 
@@ -24,9 +33,37 @@ import math
 F64_FLOPS = 30e12
 PANEL_EFF = 0.25
 LAUNCH = 8e-6
+ESIZE = 8  # f64
+
+# ---- NodeTopology::two_tier ----
 NVLINK_BW = 450e9
 COPY_LAT = 5e-6
-ESIZE = 8  # f64
+INTER_BW = 50e9
+INTER_LAT = 10e-6
+
+ISLANDS = 2
+PER_ISLAND = 8
+
+
+def island_of(d):
+    return d // PER_ISLAND
+
+
+def link_is_inter(i, j):
+    return i != j and island_of(i) != island_of(j)
+
+
+def contended_time(i, j, bytes_, conc):
+    if link_is_inter(i, j):
+        return INTER_LAT + float(bytes_) * float(max(conc, 1)) / INTER_BW
+    return COPY_LAT + float(bytes_) * float(max(conc, 1)) / NVLINK_BW
+
+
+def ring_share_time(i, j, bytes_, fanout, conc):
+    f = float(max(fanout, 1))
+    if link_is_inter(i, j):
+        return INTER_LAT / f + float(bytes_) * float(max(conc, 1)) / INTER_BW
+    return contended_time(i, j, bytes_, conc) / f
 
 
 def rnd(x):
@@ -35,7 +72,7 @@ def rnd(x):
 
 
 def flops_potf2(n):
-    return int((float(n) * float(n) * float(n)) / 3.0)
+    return int((float(n) ** 3) / 3.0)
 
 
 def flops_trsm(m, n, tri):
@@ -53,10 +90,6 @@ def panel_time(fl):
 def gemm_util(d):
     d = float(d)
     return d / (d + 192.0)
-
-
-def copy_time(bytes_):
-    return COPY_LAT + float(bytes_) / NVLINK_BW
 
 
 class Stream:
@@ -91,18 +124,105 @@ class Clock:
         self.ns = max(self.ns, rnd(sec * 1e9))
 
 
+def hier_split(frm, members):
+    """`Ctx::hier_split`: (locals, [(rep, rest)]) or None if island-local."""
+    home = island_of(frm)
+    locals_, islands, remotes = [], [], []
+    for d in members:
+        if d == frm:
+            continue
+        isl = island_of(d)
+        if isl == home:
+            locals_.append(d)
+        else:
+            if isl in islands:
+                remotes[islands.index(isl)][1].append(d)
+            else:
+                islands.append(isl)
+                remotes.append((d, []))
+    if not remotes:
+        return None
+    return locals_, remotes
+
+
+def pipelined_ring(copyst, busy, frm, members, bytes_, not_before, conc):
+    """`Ctx::pipelined_group_broadcast` (fence-free ring form): returns
+    (device, delivery) pairs."""
+    receivers = sum(1 for d in members if d != frm)
+    if receivers == 0 or bytes_ == 0:
+        return []
+    arrivals = []
+    split = hier_split(frm, members)
+    if split is not None:
+        locals_, remotes = split
+        rep_done = []
+        # Stage B: fabric crossings, serialized on the sender.
+        for rep, _ in remotes:
+            tb = contended_time(frm, rep, bytes_, conc)
+            done = copyst[frm].issue_after(not_before, tb)
+            busy[frm] += rnd(tb * 1e9)
+            arrivals.append((rep, done))
+            rep_done.append(done)
+        # Stage A: the sender's own island, flat shares.
+        for d in locals_:
+            ta = ring_share_time(frm, d, bytes_, len(locals_), conc)
+            done = copyst[frm].issue_after(not_before, ta)
+            busy[frm] += rnd(ta * 1e9)
+            arrivals.append((d, done))
+        # Stage C: representatives relay island-locally in parallel.
+        for (rep, rest), rdone in zip(remotes, rep_done):
+            for d in rest:
+                tc = ring_share_time(rep, d, bytes_, len(rest), conc)
+                done = copyst[rep].issue_after(rdone, tc)
+                busy[rep] += rnd(tc * 1e9)
+                arrivals.append((d, done))
+    else:
+        for d in members:
+            if d == frm:
+                continue
+            t = ring_share_time(frm, d, bytes_, receivers, conc)
+            done = copyst[frm].issue_after(not_before, t)
+            busy[frm] += rnd(t * 1e9)
+            arrivals.append((d, done))
+    return arrivals
+
+
+def barrier_ring(clk, frm, members, bytes_, conc):
+    """`Ctx::barrier_group_broadcast`: the same dispatch on clocks."""
+    receivers = sum(1 for d in members if d != frm)
+    if receivers == 0 or bytes_ == 0:
+        return
+    split = hier_split(frm, members)
+    if split is not None:
+        locals_, remotes = split
+        for rep, _ in remotes:
+            clk[frm].advance(contended_time(frm, rep, bytes_, conc))
+            clk[rep].sync_to(clk[frm].now())
+        for d in locals_:
+            clk[frm].advance(ring_share_time(frm, d, bytes_, len(locals_), conc))
+            clk[d].sync_to(clk[frm].now())
+        for rep, rest in remotes:
+            for d in rest:
+                clk[rep].advance(ring_share_time(rep, d, bytes_, len(rest), conc))
+                clk[d].sync_to(clk[rep].now())
+    else:
+        for d in members:
+            if d == frm:
+                continue
+            clk[frm].advance(ring_share_time(frm, d, bytes_, receivers, conc))
+            clk[d].sync_to(clk[frm].now())
+
+
 def tile_len(tt, n, t):
     return min(t, n - tt * t)
 
 
 def run_grid_potrf(p, q, tile, n, lookahead):
-    """Replicates `potrf_dist_grid`'s charges. lookahead=0 → barrier.
-
-    Returns (makespan_seconds, snapshot or None) where snapshot is a
-    list of (dev, compute_h, panel_h, copy_h, busy_s).
-    """
+    """Replicates `potrf_dist_grid`'s charges on the 2×8 fabric.
+    lookahead=0 → barrier. Returns (makespan_seconds, snapshot or None)."""
     nt = (n + tile - 1) // tile
     ndev = p * q
+    assert ndev == ISLANDS * PER_ISLAND
     dev = lambda r, c: r * q + c
     pipelined = lookahead > 0
     if pipelined:
@@ -145,21 +265,17 @@ def run_grid_potrf(p, q, tile, n, lookahead):
         for k in range(t + 1, nt):
             cols_of[k % q] += tile_len(k, n, tile)
 
-        # 2. L_tt column ring.
+        # 2. L_tt column ring (hierarchical when column ct spans islands).
         ltt_members = [dev(r, ct) for r in range(p) if r != rt and seg[r] > 0]
         ltt_arrival = [0.0] * ndev
         ltt_bytes = tk * tk * ESIZE
         if ltt_members:
-            recv = len(ltt_members)
-            for m in ltt_members:
-                tcopy = copy_time(ltt_bytes) / recv
-                if pipelined:
-                    done = copyst[diag].issue_after(potf2_done, tcopy)
-                    busy[diag] += rnd(tcopy * 1e9)
+            if pipelined:
+                for m, done in pipelined_ring(copyst, busy, diag, ltt_members,
+                                              ltt_bytes, potf2_done, 1):
                     ltt_arrival[m] = done
-                else:
-                    clk[diag].advance(tcopy)
-                    clk[m].sync_to(clk[diag].now())
+            else:
+                barrier_ring(clk, diag, ltt_members, ltt_bytes, 1)
 
         # 3. Panel trsm split across the P row owners.
         trsm_done = [0.0] * p
@@ -176,7 +292,7 @@ def run_grid_potrf(p, q, tile, n, lookahead):
             else:
                 clk[src].advance(secs)
 
-        # 4. Row rings.
+        # 4. Row rings (island-local when q divides the island width).
         row_arrival = [0.0] * ndev
         for r in range(p):
             if seg[r] == 0:
@@ -186,22 +302,14 @@ def run_grid_potrf(p, q, tile, n, lookahead):
             if not members:
                 continue
             bytes_ = seg[r] * tk * ESIZE
-            recv = len(members)
-            for m in members:
-                tcopy = copy_time(bytes_) / recv
-                if pipelined:
-                    done = copyst[src].issue_after(trsm_done[r], tcopy)
-                    busy[src] += rnd(tcopy * 1e9)
+            if pipelined:
+                for m, done in pipelined_ring(copyst, busy, src, members,
+                                              bytes_, trsm_done[r], 1):
                     row_arrival[m] = done
-                else:
-                    clk[src].advance(tcopy)
-                    clk[m].sync_to(clk[src].now())
+            else:
+                barrier_ring(clk, src, members, bytes_, 1)
 
-        # 5. Column rings (transposed panel blocks). Every source row
-        # with a nonzero block fans into the same column receivers
-        # concurrently, so each transfer carries the per-link
-        # concurrent-transfer share (`NodeTopology::ring_share_time`
-        # with `concurrent = conc`): (lat + bytes*conc/bw) / recv.
+        # 5. Column rings with the per-link contention share.
         colt_arrival = [0.0] * ndev
         for c in range(q):
             if cols_of[c] == 0:
@@ -219,23 +327,15 @@ def run_grid_potrf(p, q, tile, n, lookahead):
                 if not members:
                     continue
                 bytes_ = blk[rs] * tk * ESIZE
-                recv = len(members)
-                src_ready = trsm_done[rs] if c == ct else row_arrival[src]
-                for m in members:
-                    tcopy = (COPY_LAT + float(bytes_) * float(conc) / NVLINK_BW) / recv
-                    if pipelined:
-                        done = copyst[src].issue_after(src_ready, tcopy)
-                        busy[src] += rnd(tcopy * 1e9)
+                if pipelined:
+                    src_ready = trsm_done[rs] if c == ct else row_arrival[src]
+                    for m, done in pipelined_ring(copyst, busy, src, members,
+                                                  bytes_, src_ready, conc):
                         colt_arrival[m] = max(colt_arrival[m], done)
-                    else:
-                        clk[src].advance(tcopy)
-                        clk[m].sync_to(clk[src].now())
+                else:
+                    barrier_ring(clk, src, members, bytes_, conc)
 
-        # 6. Fused local trailing GEMMs, split lookahead-first: each
-        # device updates its piece of the NEXT panel column (tile
-        # column t+1) as its own launch before the rest of its local
-        # trailing block, so the next panel factors while the bulk
-        # update is still in flight (the classic lookahead split).
+        # 6. Fused local trailing GEMMs, split lookahead-first.
         fl_next = [0] * ndev
         fl_rest = [0] * ndev
         for j in range(t + 1, nt):
@@ -300,16 +400,19 @@ def run_grid_potrf(p, q, tile, n, lookahead):
     return max(c.now() for c in clk), None
 
 
-GRID2D = [(2, 2, 4, 32), (2, 2, 8, 64), (2, 4, 8, 128)]
+# (p, q, tile, n) on the 2×8 fabric — p·q = 16 always.
+GRID_FAB = [(2, 8, 4, 64), (4, 4, 4, 64), (4, 4, 8, 128)]
 
 
 def render():
     out = []
-    out.append("# golden grid potrf timelines (µs) — regenerate with UPDATE_GOLDEN=1")
-    for (p, q, tile, n) in GRID2D:
+    out.append("# golden fabric potrf timelines (µs, 2x8 two-tier fabric) — "
+               "regenerate with UPDATE_GOLDEN=1")
+    for (p, q, tile, n) in GRID_FAB:
         tb, _ = run_grid_potrf(p, q, tile, n, 0)
         tl, snap = run_grid_potrf(p, q, tile, n, 2)
-        out.append(f"config p={p} q={q} tile={tile} n={n}")
+        out.append(f"config islands={ISLANDS} per_island={PER_ISLAND} "
+                   f"p={p} q={q} tile={tile} n={n}")
         out.append(f"  barrier_makespan_us   {tb * 1e6:.3f}")
         out.append(f"  lookahead_makespan_us {tl * 1e6:.3f}")
         for (d, c, pa, cp, b) in snap:
@@ -324,7 +427,7 @@ if __name__ == "__main__":
     import sys
     text = render()
     sys.stdout.write(text)
-    for (p, q, tile, n) in GRID2D:
+    for (p, q, tile, n) in GRID_FAB:
         tb, _ = run_grid_potrf(p, q, tile, n, 0)
         tl, _ = run_grid_potrf(p, q, tile, n, 2)
         assert tl < tb, f"lookahead must strictly beat barrier at {(p, q, tile, n)}"
