@@ -42,6 +42,12 @@
 #                      1-node-vs-2-node plan_dist crossover, and
 #                      island-confined serving (CI-friendly, part of
 #                      `make check`)
+#   make bench-mixed   mixed-precision bench in smoke/test mode: the
+#                      modeled full-vs-mixed potrs ladder (asserts the
+#                      >=25% win at N>=16384 on 8 devices), the
+#                      router's (tol, kappa) decision table, and a
+#                      simulated end-to-end mixed-vs-full service run
+#                      (CI-friendly, part of `make check`)
 #   make trace         e2e driver + MPMD kill drill with JAXMG_TRACE
 #                      set: exports validated Chrome-trace JSON,
 #                      Prometheus text, and JSONL decision logs under
@@ -50,7 +56,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test check clippy fmt python-tests test-xla bench bench-redist bench-batch bench-serve bench-grid bench-traffic bench-cache bench-obs bench-fabric trace e2e artifacts clean
+.PHONY: build test check clippy fmt python-tests test-xla bench bench-redist bench-batch bench-serve bench-grid bench-traffic bench-cache bench-obs bench-fabric bench-mixed trace e2e artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -73,7 +79,7 @@ python-tests:
 		echo "skipping python tests (pytest/jax/hypothesis not importable)"; \
 	fi
 
-check: build test clippy fmt python-tests bench-serve bench-grid bench-traffic bench-cache bench-obs bench-fabric
+check: build test clippy fmt python-tests bench-serve bench-grid bench-traffic bench-cache bench-obs bench-fabric bench-mixed
 
 # Artifact-gated XLA integration tests (fail with a pointed message
 # when artifacts are absent — that failure mode is itself under test).
@@ -142,6 +148,14 @@ bench-obs:
 # crossover through plan_dist, and island-confined serving.
 bench-fabric:
 	FABRIC_BENCH_SMOKE=1 $(CARGO) bench --bench fabric
+
+# The mixed bench is the mixed-precision acceptance harness: the
+# modeled full-vs-mixed ladder under the real H200 constants (asserts
+# the >=25% makespan win at N>=16384), the cost-model router's
+# decision table, and a genuinely-refining end-to-end comparison on a
+# flop-slowed model. Smoke mode shrinks the ladder, keeps assertions.
+bench-mixed:
+	MIXED_BENCH_SMOKE=1 $(CARGO) bench --bench mixed
 
 e2e:
 	$(CARGO) run --release --example e2e_driver

@@ -1,0 +1,208 @@
+//! Mixed-precision solve ladder: modeled makespans under the real
+//! H200 constants, the router's decision table, and a simulated
+//! end-to-end comparison through the SPMD service.
+//!
+//! Three sections, all deterministic:
+//!
+//! 1. **Modeled ladder** — [`Predictor::mixed_potrs`] (demotion cast +
+//!    working-dtype factor + refinement loop) against the
+//!    full-precision [`Predictor::dist_makespan`] replay for f64 potrs
+//!    on 8 devices, `tol = 1e-10` at `κ = 1e3`. Asserts the PR's
+//!    acceptance bar: the mixed tier wins **≥ 25%** of modeled
+//!    makespan at every `N ≥ 16384`.
+//! 2. **Decision table** — [`plan_dist_prec`] over a (tol, κ) grid at
+//!    N = 16384: Mixed where the replay wins and `κ·ε_f32 < 0.25`,
+//!    Full where refinement cannot contract (κ = 1e9) or the caller
+//!    states no tolerance. The same table is documented in
+//!    `coordinator/admit.rs` and EXPERIMENTS.md.
+//! 3. **End-to-end (simulated)** — the identical request stream through
+//!    two `SolveService`s on a flop-slowed model (crossover pulled
+//!    below test sizes, numerics untouched): one with a tolerance SLO
+//!    (routed Mixed, genuinely refines in f32) and one without (Full).
+//!    The mixed service must finish in strictly less simulated time and
+//!    meet the requested residual.
+//!
+//! `MIXED_BENCH_SMOKE=1` shrinks the ladder for `make bench-mixed`
+//! (CI test mode); the ≥ 25% bar at N = 16384 is asserted in both
+//! modes. Results are recorded in EXPERIMENTS.md.
+
+use jaxmg::coordinator::{plan_dist_prec, DistRoutine, NumericPolicy, Slo, SmallConfig, SolveService};
+use jaxmg::costmodel::{GpuCostModel, Predictor};
+use jaxmg::linalg::Matrix;
+use jaxmg::prelude::*;
+use jaxmg::scalar::DType;
+use jaxmg::solver::Precision;
+
+const NDEV: usize = 8;
+const TILE: usize = 1024;
+const TOL: f64 = 1e-10;
+const COND: f64 = 1e3;
+
+fn h200_predictor(topo: &jaxmg::device::NodeTopology) -> Predictor {
+    Predictor { model: GpuCostModel::h200(), topo: topo.clone(), dtype: DType::F64 }
+}
+
+fn main() {
+    let smoke = std::env::var_os("MIXED_BENCH_SMOKE").is_some();
+    let node = SimNode::new_uniform(NDEV, 1 << 30);
+    let topo = node.topology();
+    let pred = h200_predictor(topo);
+
+    // ---- 1. modeled ladder -------------------------------------------------
+    let ladder: &[usize] =
+        if smoke { &[8192, 16384] } else { &[4096, 8192, 16384, 32768, 65536] };
+    let iters = pred
+        .est_refine_iters(TOL, COND)
+        .expect("kappa*eps_f32 ~ 1e-4 is well inside the contraction bound");
+    println!(
+        "== modeled f64 potrs ladder on {NDEV} devices (tile {TILE}, nrhs 1, \
+         tol {TOL:.0e} at kappa {COND:.0e} -> {iters} refine iters) ==\n"
+    );
+    println!(
+        "{:>8} {:>6} {:>14} {:>14} {:>12} {:>10}",
+        "n", "grid", "full[ms]", "mixed[ms]", "win", "saved[GB]"
+    );
+    for &n in ladder {
+        // The planner's own grid choice for this width, full precision.
+        let plan = plan_dist_prec(
+            "potrs",
+            n,
+            1,
+            TILE,
+            NDEV,
+            DType::F64,
+            &pred.model,
+            topo,
+            None,
+            None,
+        )
+        .expect("plan");
+        let (p, q) = plan.grid;
+        let full = pred.dist_makespan("potrs", n, 1, TILE, p, q);
+        let mixed = pred.mixed_potrs(n, TILE, p, q, 1, iters);
+        let win = 1.0 - mixed / full;
+        // f64 -> f32 halves the factor's bytes; refinement round-trips
+        // the RHS (iters + 1) times at the saved width.
+        let saved = 4.0 * (n as f64 * n as f64 + n as f64 * (iters + 1) as f64) / 1e9;
+        println!(
+            "{:>8} {:>6} {:>14.3} {:>14.3} {:>11.1}% {:>10.2}",
+            n,
+            format!("{p}x{q}"),
+            full * 1e3,
+            mixed * 1e3,
+            win * 100.0,
+            saved
+        );
+        if n >= 16384 {
+            assert!(
+                win >= 0.25,
+                "mixed must win >=25% of modeled makespan at n={n}; got {:.1}%",
+                win * 100.0
+            );
+        }
+    }
+
+    // ---- 2. the router's decision table ------------------------------------
+    println!("\n== routing at n=16384 (tol, kappa) -> precision ==\n");
+    let cases: &[(Option<(f64, f64)>, &str)] = &[
+        (Some((1e-6, 1e3)), "loose tol, mild kappa"),
+        (Some((1e-10, 1e3)), "tight tol, mild kappa"),
+        (Some((1e-15, 1e4)), "refinement-floor tol"),
+        (Some((1e-6, 1e9)), "kappa*eps >= 0.25: cannot contract"),
+        (None, "no tolerance stated"),
+    ];
+    for (numeric, label) in cases {
+        let plan = plan_dist_prec(
+            "potrs",
+            16384,
+            1,
+            TILE,
+            NDEV,
+            DType::F64,
+            &pred.model,
+            topo,
+            None,
+            numeric.map(|(t, c)| NumericPolicy::new(t, c)),
+        )
+        .expect("plan");
+        let tag = match plan.precision {
+            Precision::Mixed(w) => format!("Mixed({})", w.name()),
+            Precision::Full => "Full".to_string(),
+        };
+        let col = match numeric {
+            Some((t, c)) => format!("tol {t:.0e} kappa {c:.0e}"),
+            None => "—".to_string(),
+        };
+        println!("  {col:<24} -> {tag:<12} ({label})");
+        match numeric {
+            Some((_, c)) if *c >= 1e9 => assert!(
+                !plan.precision.is_mixed(),
+                "kappa 1e9 must route Full (refinement cannot contract)"
+            ),
+            None => assert!(!plan.precision.is_mixed(), "no tolerance must route Full"),
+            Some(_) => assert!(
+                plan.precision.is_mixed(),
+                "{label}: the replay wins at n=16384, expected Mixed"
+            ),
+        }
+    }
+
+    // ---- 3. simulated end-to-end through the service -----------------------
+    // Flop rates cut 1e5x (f64:f32 ratio kept) pull the crossover below
+    // n ~ 100 so the real refinement loop runs at test sizes.
+    let mut slow = GpuCostModel::h200();
+    slow.f64_flops /= 1e5;
+    slow.f32_flops /= 1e5;
+    let n = if smoke { 128 } else { 256 };
+    let reqs = if smoke { 4 } else { 12 };
+    let a = Matrix::<f64>::spd_random_cond(n, 0x31ED, COND);
+    let b = Matrix::<f64>::random(n, 1, 0x31EE);
+
+    let mut times = [0u64; 2];
+    for (i, with_tol) in [false, true].into_iter().enumerate() {
+        let node = SimNode::new_uniform(4, 1 << 28);
+        let mut cfg = SmallConfig::with_tile(16);
+        cfg.model = slow.clone();
+        let svc = SolveService::with_small_config(node.clone(), 1, cfg);
+        let slo = if with_tol {
+            Slo::standard().with_tolerance(TOL, COND)
+        } else {
+            Slo::standard()
+        };
+        let pending: Vec<_> = (0..reqs)
+            .map(|_| {
+                svc.submit_dist_slo(DistRoutine::Potrs, a.clone(), Some(b.clone()), slo)
+                    .expect("submit")
+            })
+            .collect();
+        for h in pending {
+            let (x, _) = h.wait();
+            let res = b.sub(&a.matmul(&x)).norm_fro() / b.norm_fro();
+            assert!(res <= TOL, "residual {res} > {TOL}");
+        }
+        svc.drain();
+        times[i] = node.sim_time_ns();
+        let m = node.metrics().snapshot();
+        if with_tol {
+            assert_eq!(m.mixed_solves, reqs as u64, "every SLO request must run mixed");
+            assert_eq!(m.mixed_fallbacks, 0);
+        } else {
+            assert_eq!(m.mixed_solves, 0, "no tolerance, no mixed tier");
+        }
+    }
+    println!(
+        "\n== end-to-end (simulated, slowed model): {reqs}x f64 potrs n={n} ==\n\n\
+         full {:>10.3} ms | mixed {:>10.3} ms | {:.1}% faster",
+        times[0] as f64 * 1e-6,
+        times[1] as f64 * 1e-6,
+        (1.0 - times[1] as f64 / times[0] as f64) * 100.0
+    );
+    assert!(
+        times[1] < times[0],
+        "the mixed service ({} ns) must beat the full one ({} ns)",
+        times[1],
+        times[0]
+    );
+
+    println!("\nmixed bench OK");
+}

@@ -33,6 +33,7 @@ use crate::device::NodeTopology;
 use crate::error::{Error, Result};
 use crate::layout::{BlockCyclic1D, BlockCyclic2D, TileDim};
 use crate::scalar::DType;
+use crate::solver::Precision;
 use crate::tile::LayoutKind;
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
@@ -97,9 +98,15 @@ pub struct DistPlan {
     pub footprint: Footprint,
     /// Predicted makespan of the solve on the chosen grid, in
     /// cost-model nanoseconds — [`Predictor::dist_makespan`] through
-    /// [`secs_to_ns`], so EDF/SJF queue ordering compares bitwise
-    /// against the autotuner's own replayed numbers.
+    /// [`secs_to_ns`] (or [`Predictor::mixed_potrs`] when the plan is
+    /// routed [`Precision::Mixed`]), so EDF/SJF queue ordering compares
+    /// bitwise against the autotuner's own replayed numbers for the
+    /// tier that will actually run.
     pub est_ns: u64,
+    /// The numeric tier the router chose: [`Precision::Full`] unless
+    /// the request carried a [`NumericPolicy`] whose tolerance and
+    /// condition budget let the mixed-precision replay win.
+    pub precision: Precision,
 }
 
 /// Plan a distributed solve over `ndev` devices: pick the grid shape
@@ -131,21 +138,52 @@ pub fn plan_dist(
     topo: &NodeTopology,
     force: Option<(usize, usize)>,
 ) -> Result<DistPlan> {
+    plan_dist_prec(routine, n, nrhs, tile, ndev, dtype, model, topo, force, None)
+}
+
+/// [`plan_dist`] with a numeric policy: after the grid shape is chosen
+/// the plan is routed Full-vs-Mixed. A request that carries a
+/// [`NumericPolicy`] is eligible for [`Precision::Mixed`] when the
+/// routine has a refinement path (`potrf`/`potrs`), the dtype has a
+/// narrower working dtype, [`Predictor::est_refine_iters`] predicts
+/// convergence under the condition budget, and the replayed mixed
+/// schedule ([`Predictor::mixed_potrs`] /
+/// [`Predictor::potrf2d_mixed`]) beats the full one on the same grid.
+/// The returned [`DistPlan::est_ns`] prices whichever tier was chosen.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_dist_prec(
+    routine: &str,
+    n: usize,
+    nrhs: usize,
+    tile: usize,
+    ndev: usize,
+    dtype: DType,
+    model: &GpuCostModel,
+    topo: &NodeTopology,
+    force: Option<(usize, usize)>,
+    numeric: Option<NumericPolicy>,
+) -> Result<DistPlan> {
     let predictor = Predictor { model: model.clone(), topo: topo.clone(), dtype };
     if force.is_none() && topo.num_islands() > 1 && topo.num_devices() == ndev {
         let (used, (p, q)) = predictor.best_fabric_plan(routine, n, nrhs, tile);
         // Price the plan with the predictor that owns the chosen span:
         // the island-subset replay for a confined solve (bitwise the
         // flat single-node estimate), the fabric replay for a spanning
-        // one — exactly the costs `best_fabric_plan` compared.
-        let est = if used < ndev {
+        // one — exactly the costs `best_fabric_plan` compared. The
+        // same owner prices the mixed tier, so an island-confined
+        // mixed solve replays island-local refinement traffic.
+        let (owner, est) = if used < ndev {
             let island = topo.island_devices(0);
             let sub = Predictor { model: model.clone(), topo: topo.subset(&island)?, dtype };
-            sub.dist_makespan(routine, n, nrhs, tile, p, q)
+            let est = sub.dist_makespan(routine, n, nrhs, tile, p, q);
+            (sub, est)
         } else {
-            predictor.dist_makespan(routine, n, nrhs, tile, p, q)
+            let est = predictor.dist_makespan(routine, n, nrhs, tile, p, q);
+            (predictor, est)
         };
-        let plan = build_plan(routine, n, nrhs, tile, used, dtype, (p, q), secs_to_ns(est))?;
+        let (precision, est_ns) =
+            route_precision(&owner, routine, n, nrhs, tile, (p, q), numeric, est);
+        let plan = build_plan(routine, n, nrhs, tile, used, dtype, (p, q), est_ns, precision)?;
         return Ok(plan.pad_to(ndev));
     }
     let (p, q) = match force {
@@ -159,12 +197,57 @@ pub fn plan_dist(
         }
         None => predictor.best_grid(routine, n, nrhs, tile, ndev),
     };
-    let est_ns = secs_to_ns(predictor.dist_makespan(routine, n, nrhs, tile, p, q));
-    build_plan(routine, n, nrhs, tile, ndev, dtype, (p, q), est_ns)
+    let full = predictor.dist_makespan(routine, n, nrhs, tile, p, q);
+    let (precision, est_ns) =
+        route_precision(&predictor, routine, n, nrhs, tile, (p, q), numeric, full);
+    build_plan(routine, n, nrhs, tile, ndev, dtype, (p, q), est_ns, precision)
+}
+
+/// The Full-vs-Mixed routing decision for one already-shaped plan.
+/// Returns the chosen tier plus the matching makespan estimate so the
+/// queue prices the schedule that will actually run. Every gate that
+/// fails falls back to the full tier with the unmodified estimate:
+///
+/// | gate                         | why it routes Full                |
+/// |------------------------------|-----------------------------------|
+/// | no [`NumericPolicy`]         | caller never stated a tolerance   |
+/// | routine not potrf/potrs      | no refinement path (potri, syevd) |
+/// | dtype has no working dtype   | f32/c64 are already narrow        |
+/// | `est_refine_iters` → `None`  | κ·ε_working too close to 1        |
+/// | mixed replay ≥ full replay   | below the crossover, no win       |
+fn route_precision(
+    pred: &Predictor,
+    routine: &str,
+    n: usize,
+    nrhs: usize,
+    tile: usize,
+    (p, q): (usize, usize),
+    numeric: Option<NumericPolicy>,
+    full_secs: f64,
+) -> (Precision, u64) {
+    let full = (Precision::Full, secs_to_ns(full_secs));
+    let Some(policy) = numeric else { return full };
+    if routine != "potrf" && routine != "potrs" {
+        return full;
+    }
+    let Some(working) = pred.dtype.working_dtype() else { return full };
+    let Some(iters) = pred.est_refine_iters(policy.tol(), policy.cond()) else {
+        return full;
+    };
+    let mixed_secs = match routine {
+        "potrs" => pred.mixed_potrs(n, tile, p, q, nrhs.max(1), iters),
+        _ => pred.potrf2d_mixed(n, tile, p, q),
+    };
+    if mixed_secs < full_secs {
+        (Precision::Mixed(working), secs_to_ns(mixed_secs))
+    } else {
+        full
+    }
 }
 
 /// Build the layout + footprint for an already-selected grid shape and
 /// makespan estimate (no predictor replay — the cache-hit path).
+#[allow(clippy::too_many_arguments)]
 fn build_plan(
     routine: &str,
     n: usize,
@@ -174,6 +257,7 @@ fn build_plan(
     dtype: DType,
     (p, q): (usize, usize),
     est_ns: u64,
+    precision: Precision,
 ) -> Result<DistPlan> {
     if p > 1 {
         let g = BlockCyclic2D::new(n, n, tile, tile, p, q)?;
@@ -183,6 +267,7 @@ fn build_plan(
             kind: LayoutKind::Grid(g),
             footprint: Footprint::for_grid(routine, &g, nrhs, dtype)?,
             est_ns,
+            precision,
         })
     } else {
         Ok(DistPlan {
@@ -191,6 +276,7 @@ fn build_plan(
             kind: LayoutKind::BlockCyclic(BlockCyclic1D::new(n, tile, ndev)?),
             footprint: Footprint::for_routine(routine, n, nrhs, tile, ndev, dtype)?,
             est_ns,
+            precision,
         })
     }
 }
@@ -365,16 +451,22 @@ impl Footprint {
 /// Memoized grid-shape selections. [`Predictor::best_grid`] replays
 /// full `O(nt²)`–`O(nt³)` schedules per candidate factorization, so
 /// the serving fronts cache the chosen shape per
-/// `(routine, dtype, n, nrhs, tile, ndev)` — repeat traffic (the
-/// serving common case) pays one map lookup on the dispatch path
-/// instead of re-running the replays. Forced grids bypass the cache
-/// (they cost nothing to "select"), and `ndev` is part of the key so a
-/// shrunk MPMD live set re-plans correctly.
+/// `(routine, dtype, n, nrhs, tile, ndev, numeric)` — repeat traffic
+/// (the serving common case) pays one map lookup on the dispatch path
+/// instead of re-running the replays. The numeric policy is part of
+/// the key because it changes the routed [`Precision`] and therefore
+/// the estimate; forced grids bypass the cache (they cost nothing to
+/// "select"), and `ndev` is part of the key so a shrunk MPMD live set
+/// re-plans correctly.
 #[derive(Debug, Default)]
 pub struct GridPlanCache {
     #[allow(clippy::type_complexity)]
-    shapes:
-        Mutex<HashMap<(&'static str, DType, usize, usize, usize, usize), ((usize, usize), usize, u64)>>,
+    shapes: Mutex<
+        HashMap<
+            (&'static str, DType, usize, usize, usize, usize, Option<NumericPolicy>),
+            ((usize, usize), usize, u64, Precision),
+        >,
+    >,
 }
 
 impl GridPlanCache {
@@ -397,16 +489,42 @@ impl GridPlanCache {
         topo: &NodeTopology,
         force: Option<(usize, usize)>,
     ) -> Result<DistPlan> {
+        self.plan_numeric(routine, n, nrhs, tile, ndev, dtype, model, topo, force, None)
+    }
+
+    /// [`plan_dist_prec`] with the selector memoized — the routed
+    /// precision and its estimate are cached alongside the shape, so a
+    /// repeat request with the same policy replays nothing.
+    #[allow(clippy::too_many_arguments)]
+    pub fn plan_numeric(
+        &self,
+        routine: &'static str,
+        n: usize,
+        nrhs: usize,
+        tile: usize,
+        ndev: usize,
+        dtype: DType,
+        model: &GpuCostModel,
+        topo: &NodeTopology,
+        force: Option<(usize, usize)>,
+        numeric: Option<NumericPolicy>,
+    ) -> Result<DistPlan> {
         if force.is_some() {
-            return plan_dist(routine, n, nrhs, tile, ndev, dtype, model, topo, force);
+            return plan_dist_prec(routine, n, nrhs, tile, ndev, dtype, model, topo, force, numeric);
         }
-        let key = (routine, dtype, n, nrhs, tile, ndev);
+        let key = (routine, dtype, n, nrhs, tile, ndev, numeric);
         let cached = self.shapes.lock().unwrap().get(&key).copied();
-        if let Some((g, used, est_ns)) = cached {
-            return Ok(build_plan(routine, n, nrhs, tile, used, dtype, g, est_ns)?.pad_to(ndev));
+        if let Some((g, used, est_ns, precision)) = cached {
+            return Ok(
+                build_plan(routine, n, nrhs, tile, used, dtype, g, est_ns, precision)?
+                    .pad_to(ndev),
+            );
         }
-        let plan = plan_dist(routine, n, nrhs, tile, ndev, dtype, model, topo, None)?;
-        self.shapes.lock().unwrap().insert(key, (plan.grid, plan.ndev, plan.est_ns));
+        let plan = plan_dist_prec(routine, n, nrhs, tile, ndev, dtype, model, topo, None, numeric)?;
+        self.shapes
+            .lock()
+            .unwrap()
+            .insert(key, (plan.grid, plan.ndev, plan.est_ns, plan.precision));
         Ok(plan)
     }
 }
@@ -444,6 +562,38 @@ impl SloClass {
     }
 }
 
+/// Numeric-accuracy policy a request carries: the relative-residual
+/// tolerance its answer must meet and the condition-number budget the
+/// router may assume when predicting refinement convergence. Carried
+/// on the [`Slo`] so the planner can route the solve
+/// [`Precision::Mixed`] when the mixed-precision replay wins under
+/// that budget. Stored as f64 bit patterns so SLOs and plan-cache
+/// keys stay `Eq + Hash`.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub struct NumericPolicy {
+    tol_bits: u64,
+    cond_bits: u64,
+}
+
+impl NumericPolicy {
+    /// Policy from a relative-residual tolerance and a condition-number
+    /// estimate κ(A) (use an upper bound when the exact value is
+    /// unknown — an over-estimate only makes routing conservative).
+    pub fn new(tol: f64, cond: f64) -> Self {
+        NumericPolicy { tol_bits: tol.to_bits(), cond_bits: cond.to_bits() }
+    }
+
+    /// Relative-residual target: ‖b − A·x‖_F / ‖b‖_F ≤ tol.
+    pub fn tol(self) -> f64 {
+        f64::from_bits(self.tol_bits)
+    }
+
+    /// Condition-number budget the router prices refinement with.
+    pub fn cond(self) -> f64 {
+        f64::from_bits(self.cond_bits)
+    }
+}
+
 /// The service-level objective a request carries into the queue.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub struct Slo {
@@ -455,23 +605,27 @@ pub struct Slo {
     pub deadline_ns: Option<u64>,
     /// Tenant id for per-tenant admission quotas.
     pub tenant: u32,
+    /// Optional numeric policy: a tolerance plus condition budget that
+    /// makes the request eligible for mixed-precision routing. `None`
+    /// always runs the full-precision path.
+    pub numeric: Option<NumericPolicy>,
 }
 
 impl Slo {
     /// Interactive-class SLO, no deadline, tenant 0.
     pub fn interactive() -> Self {
-        Slo { class: SloClass::Interactive, deadline_ns: None, tenant: 0 }
+        Slo { class: SloClass::Interactive, deadline_ns: None, tenant: 0, numeric: None }
     }
 
     /// Standard-class SLO, no deadline, tenant 0 — what legacy submit
     /// paths default to.
     pub fn standard() -> Self {
-        Slo { class: SloClass::Standard, deadline_ns: None, tenant: 0 }
+        Slo { class: SloClass::Standard, deadline_ns: None, tenant: 0, numeric: None }
     }
 
     /// Batch-class SLO, no deadline, tenant 0.
     pub fn batch() -> Self {
-        Slo { class: SloClass::Batch, deadline_ns: None, tenant: 0 }
+        Slo { class: SloClass::Batch, deadline_ns: None, tenant: 0, numeric: None }
     }
 
     /// Attach an absolute deadline (cost-model ns).
@@ -483,6 +637,13 @@ impl Slo {
     /// Attach a tenant id.
     pub fn with_tenant(mut self, tenant: u32) -> Self {
         self.tenant = tenant;
+        self
+    }
+
+    /// Attach a numeric policy (tolerance + condition budget), opting
+    /// the request into mixed-precision routing.
+    pub fn with_tolerance(mut self, tol: f64, cond: f64) -> Self {
+        self.numeric = Some(NumericPolicy::new(tol, cond));
         self
     }
 }
@@ -1193,6 +1354,94 @@ mod tests {
         let open = TenantQuotas::new(None);
         assert!(open.would_admit(1, usize::MAX));
         assert_eq!(open.quota(), None);
+    }
+
+    #[test]
+    fn numeric_policy_routes_mixed_above_the_crossover() {
+        let model = GpuCostModel::h200();
+        let topo = NodeTopology::nvlink_all_to_all(8);
+        let pol = NumericPolicy::new(1e-10, 1e3);
+        // Paper scale: the mixed replay wins, the estimate shrinks, and
+        // the grid shape is the same one the full planner chose.
+        let full = plan_dist("potrs", 16384, 1, 1024, 8, DType::F64, &model, &topo, None).unwrap();
+        let mixed =
+            plan_dist_prec("potrs", 16384, 1, 1024, 8, DType::F64, &model, &topo, None, Some(pol))
+                .unwrap();
+        assert_eq!(full.precision, Precision::Full);
+        assert_eq!(mixed.precision, Precision::Mixed(DType::F32));
+        assert_eq!(mixed.grid, full.grid);
+        assert!(
+            mixed.est_ns < full.est_ns,
+            "mixed estimate {} not below full {}",
+            mixed.est_ns,
+            full.est_ns
+        );
+        // Below the crossover the launch-bound refinement tail loses:
+        // the router keeps the full tier and the full estimate.
+        let small =
+            plan_dist_prec("potrs", 192, 1, 32, 8, DType::F64, &model, &topo, None, Some(pol))
+                .unwrap();
+        assert_eq!(small.precision, Precision::Full);
+        // A condition budget past the convergence bound routes Full
+        // even at scale.
+        let ill = plan_dist_prec(
+            "potrs", 16384, 1, 1024, 8, DType::F64, &model, &topo, None,
+            Some(NumericPolicy::new(1e-10, 1e9)),
+        )
+        .unwrap();
+        assert_eq!(ill.precision, Precision::Full);
+        assert_eq!(ill.est_ns, full.est_ns);
+        // Narrow dtypes have no working tier; syevd has no refinement
+        // path — both stay Full under the same policy.
+        let narrow =
+            plan_dist_prec("potrs", 16384, 1, 1024, 8, DType::F32, &model, &topo, None, Some(pol))
+                .unwrap();
+        assert_eq!(narrow.precision, Precision::Full);
+        let ev =
+            plan_dist_prec("syevd", 4096, 0, 256, 8, DType::F64, &model, &topo, None, Some(pol))
+                .unwrap();
+        assert_eq!(ev.precision, Precision::Full);
+    }
+
+    #[test]
+    fn grid_plan_cache_keys_on_the_numeric_policy() {
+        let model = GpuCostModel::h200();
+        let topo = NodeTopology::nvlink_all_to_all(8);
+        let cache = GridPlanCache::new();
+        let pol = NumericPolicy::new(1e-10, 1e3);
+        let plain = cache
+            .plan("potrs", 16384, 1, 1024, 8, DType::F64, &model, &topo, None)
+            .unwrap();
+        let routed = cache
+            .plan_numeric("potrs", 16384, 1, 1024, 8, DType::F64, &model, &topo, None, Some(pol))
+            .unwrap();
+        assert_eq!(plain.precision, Precision::Full);
+        assert!(routed.precision.is_mixed());
+        // Cache hits replay nothing and carry the routed tier bitwise.
+        let hit = cache
+            .plan_numeric("potrs", 16384, 1, 1024, 8, DType::F64, &model, &topo, None, Some(pol))
+            .unwrap();
+        assert_eq!(hit.precision, routed.precision);
+        assert_eq!(hit.est_ns, routed.est_ns);
+        assert_eq!(hit.grid, routed.grid);
+        // The memo matches the uncached planner exactly.
+        let fresh =
+            plan_dist_prec("potrs", 16384, 1, 1024, 8, DType::F64, &model, &topo, None, Some(pol))
+                .unwrap();
+        assert_eq!(hit.est_ns, fresh.est_ns);
+        assert_eq!(hit.precision, fresh.precision);
+    }
+
+    #[test]
+    fn slo_carries_the_numeric_policy() {
+        let slo = Slo::interactive().with_tolerance(1e-9, 1e4);
+        let pol = slo.numeric.unwrap();
+        assert_eq!(pol.tol(), 1e-9);
+        assert_eq!(pol.cond(), 1e4);
+        assert_eq!(Slo::standard().numeric, None);
+        // Policies are value-keyed: same inputs compare equal.
+        assert_eq!(pol, NumericPolicy::new(1e-9, 1e4));
+        assert_ne!(pol, NumericPolicy::new(1e-8, 1e4));
     }
 
     #[test]

@@ -187,9 +187,9 @@ mod service;
 mod spmd;
 
 pub use admit::{
-    duration_to_ns, plan_dist, secs_to_ns, DeviceAdmission, DistPlan, DistRoutine, Footprint,
-    GridPlanCache, SchedConfig, SchedPolicy, ServeError, ServiceHandle, Slo, SloClass, SloTicket,
-    SolveStats,
+    duration_to_ns, plan_dist, plan_dist_prec, secs_to_ns, DeviceAdmission, DistPlan, DistRoutine,
+    Footprint, GridPlanCache, NumericPolicy, SchedConfig, SchedPolicy, ServeError, ServiceHandle,
+    Slo, SloClass, SloTicket, SolveStats,
 };
 pub use cache::{content_hash, FactorCache, FactorEntry, FactorKey};
 pub use mpmd::gather_pointers_mpmd;

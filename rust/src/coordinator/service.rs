@@ -65,8 +65,8 @@
 //! [`Predictor::batched_wins`]: crate::costmodel::Predictor::batched_wins
 
 use super::admit::{
-    handle_pair, panic_message, publish_failure, publish_one, DistRoutine, GridPlanCache,
-    ServeError, Slot, SloQueue, SloTicket, TenantQuotas,
+    handle_pair, panic_message, publish_failure, publish_one, secs_to_ns, DistRoutine,
+    GridPlanCache, ServeError, Slot, SloQueue, SloTicket, TenantQuotas,
 };
 use super::cache::{FactorCache, FactorEntry, FactorKey};
 pub use super::admit::{
@@ -82,7 +82,10 @@ use crate::layout::TileDim;
 use crate::linalg::Matrix;
 use crate::obs::{DriftKey, SpanId, TraceId};
 use crate::scalar::{DType, Scalar};
-use crate::solver::{potrf_dist, potri_dist, potrs_dist, syevd_dist, Ctx, SolverBackend};
+use crate::solver::{
+    potrf_dist, potri_dist, potrs_dist, syevd_dist, Ctx, MixedCapable, MixedRun, PipelineConfig,
+    Precision, RefineOptions, SolverBackend, DEFAULT_REFINE_CAP, DEFAULT_REFINE_TOL,
+};
 use crate::tile::{DistMatrix, LayoutKind};
 use std::any::Any;
 use std::collections::{HashMap, VecDeque};
@@ -1051,7 +1054,7 @@ impl SolveService {
     /// differs).
     ///
     /// [`Predictor::best_grid`]: crate::costmodel::Predictor::best_grid
-    pub fn submit_dist<S: Scalar>(
+    pub fn submit_dist<S: Scalar + MixedCapable>(
         &self,
         routine: DistRoutine,
         a: Matrix<S>,
@@ -1068,7 +1071,7 @@ impl SolveService {
     /// solve's panels.
     ///
     /// [`Predictor`]: crate::costmodel::Predictor
-    pub fn submit_dist_slo<S: Scalar>(
+    pub fn submit_dist_slo<S: Scalar + MixedCapable>(
         &self,
         routine: DistRoutine,
         a: Matrix<S>,
@@ -1099,7 +1102,10 @@ impl SolveService {
         }
         let ndev = self.inner.capacity.len();
         let nrhs = rhs.as_ref().map(|b| b.cols()).unwrap_or(0);
-        let plan = self.plans.plan(
+        // Mixed precision only pays off when there is a right-hand side
+        // to refine against; potrf/potri callers get the full factor.
+        let numeric = if routine == DistRoutine::Potrs { slo.numeric } else { None };
+        let plan = self.plans.plan_numeric(
             routine.name(),
             n,
             nrhs,
@@ -1109,7 +1115,13 @@ impl SolveService {
             &self.cfg.model,
             self.inner.node.topology(),
             self.cfg.grid,
+            numeric,
         )?;
+        let mixed = plan.precision.is_mixed();
+        let refine_opts = RefineOptions {
+            tol: numeric.map(|p| p.tol()).unwrap_or(DEFAULT_REFINE_TOL),
+            max_iters: DEFAULT_REFINE_CAP,
+        };
         let node = self.inner.node.clone();
         let model = self.cfg.model.clone();
         let kind = plan.kind;
@@ -1120,14 +1132,51 @@ impl SolveService {
         // and the factorization — only the triangular tail runs, and
         // its EDF/SJF estimate shrinks by the same scatter+potrf
         // prefix the eviction scorer prices (`Predictor::recompute_ns`).
-        let cache_cfg = if self.cfg.factor_cache {
-            let key = FactorKey::of(&a, self.cfg.tile, plan.grid);
-            let re_ns = Predictor {
-                model: model.clone(),
-                topo: self.inner.node.topology().clone(),
-                dtype: S::DTYPE,
+        let pred = Predictor {
+            model: model.clone(),
+            topo: self.inner.node.topology().clone(),
+            dtype: S::DTYPE,
+        };
+        if mixed {
+            let tr = self.inner.node.tracer();
+            if tr.enabled() {
+                let full_ns = secs_to_ns(pred.dist_makespan(
+                    routine.name(),
+                    n,
+                    nrhs,
+                    self.cfg.tile,
+                    plan.grid.0,
+                    plan.grid.1,
+                ));
+                tr.decision(
+                    trace,
+                    self.inner.sim_now_ns(),
+                    "mixed-route",
+                    format!(
+                        "precision={} est_ns={} full_ns={} win_ns={}",
+                        plan.precision.name(),
+                        plan.est_ns,
+                        full_ns,
+                        full_ns.saturating_sub(plan.est_ns)
+                    ),
+                );
             }
-            .recompute_ns(n, self.cfg.tile, plan.grid.0, plan.grid.1);
+        }
+        let cache_cfg = if self.cfg.factor_cache {
+            // A mixed solve factors (and caches) in the working dtype:
+            // key the entry on that dtype so a full-precision factor of
+            // the same bytes can never alias it, and price a hit as the
+            // mixed scatter+potrf prefix it skips.
+            let mut key = FactorKey::of(&a, self.cfg.tile, plan.grid);
+            let re_ns = match plan.precision {
+                Precision::Mixed(w) => {
+                    key.dtype = w;
+                    secs_to_ns(pred.potrf2d_mixed(n, self.cfg.tile, plan.grid.0, plan.grid.1))
+                }
+                Precision::Full => {
+                    pred.recompute_ns(n, self.cfg.tile, plan.grid.0, plan.grid.1)
+                }
+            };
             Some((key, re_ns))
         } else {
             None
@@ -1191,13 +1240,79 @@ impl SolveService {
             root,
             drift,
             move || -> Matrix<S> {
+                let mut cached_ptrs = cached_ptrs;
                 let run = || -> Result<Matrix<S>> {
+                    if mixed {
+                        let b = rhs.as_ref().expect("validated above");
+                        let mrun = MixedRun {
+                            node: &node,
+                            model: &model,
+                            pipeline: PipelineConfig::barrier(),
+                            layout: kind,
+                            trace: (trace, root),
+                            preempt: hook.clone(),
+                        };
+                        let fallback = |why: String| {
+                            node.metrics().add_mixed_fallback();
+                            let tr = node.tracer();
+                            if tr.enabled() {
+                                tr.decision(trace, node.sim_time_ns(), "mixed-fallback", why);
+                            }
+                        };
+                        let attempt: Result<Matrix<S>> = if let Some(ptrs) = cached_ptrs.take() {
+                            // HIT: the resident factor is already in the
+                            // working dtype — only the refinement loop
+                            // runs, against the full-precision rhs.
+                            let (key, _) = cache_cfg.expect("a hit implies the cache is on");
+                            let _guard = PinGuard { inner: inner.clone(), key };
+                            let dm = DistMatrix::<S::Working>::from_panels(&node, n, kind, ptrs)?;
+                            let out = S::mixed_refine(&mrun, &dm, &a, b, refine_opts);
+                            // Give the panels back to the cache un-freed.
+                            let _ = dm.into_panels();
+                            out.map(|(x, _)| x)
+                        } else {
+                            match S::mixed_factor(&mrun, &a) {
+                                Ok(l) => {
+                                    let out = S::mixed_refine(&mrun, &l, &a, b, refine_opts);
+                                    match (&out, cache_cfg) {
+                                        (Ok(_), Some((key, re_ns))) => {
+                                            inner.insert_factor(key, kind, l.into_panels(), re_ns)
+                                        }
+                                        _ => l.free()?,
+                                    }
+                                    out.map(|(x, _)| x)
+                                }
+                                Err(e) => Err(e),
+                            }
+                        };
+                        match attempt {
+                            Ok(x) => return Ok(x),
+                            Err(Error::RefineStalled { iters, residual, tol }) => fallback(format!(
+                                "refine stalled: iters={iters} residual={residual:.3e} tol={tol:.1e}"
+                            )),
+                            Err(Error::NotPositiveDefinite { minor }) => fallback(format!(
+                                "demoted matrix lost definiteness at minor {minor}"
+                            )),
+                            Err(e) => return Err(e),
+                        }
+                        // Typed fallback: recover at full precision, cold,
+                        // and never seed the cache — the key above carries
+                        // the working dtype and must not alias this factor.
+                        let backend = SolverBackend::<S>::Native;
+                        let mut ctx = Ctx::new(&node, &model, &backend).with_trace(trace, root);
+                        if let Some(h) = hook.clone() {
+                            ctx = ctx.with_preempt_hook(h);
+                        }
+                        let mut dm = DistMatrix::scatter(&node, &a, kind)?;
+                        potrf_dist(&ctx, &mut dm)?;
+                        return potrs_dist(&ctx, &dm, b);
+                    }
                     let backend = SolverBackend::<S>::Native;
                     let mut ctx = Ctx::new(&node, &model, &backend).with_trace(trace, root);
                     if let Some(h) = hook {
                         ctx = ctx.with_preempt_hook(h);
                     }
-                    if let Some(ptrs) = cached_ptrs {
+                    if let Some(ptrs) = cached_ptrs.take() {
                         // HIT: view the resident shards (the guard keeps
                         // the entry pinned — and tears it down if it was
                         // invalidated mid-flight — on every exit path).
@@ -1658,7 +1773,7 @@ impl SolveService {
     /// follow-up call.
     ///
     /// [`Predictor::batched_wins`]: crate::costmodel::Predictor::batched_wins
-    pub fn submit_small<S: Scalar>(
+    pub fn submit_small<S: Scalar + MixedCapable>(
         &self,
         routine: SmallRoutine,
         a: Matrix<S>,
@@ -1671,7 +1786,7 @@ impl SolveService {
     /// coalesced bucket is enqueued under its **most urgent** member's
     /// class and earliest member deadline (tenant quotas bill the
     /// distributed path only — a shared pod has no single owner).
-    pub fn submit_small_slo<S: Scalar>(
+    pub fn submit_small_slo<S: Scalar + MixedCapable>(
         &self,
         routine: SmallRoutine,
         a: Matrix<S>,
@@ -1780,7 +1895,7 @@ impl SolveService {
     /// the planner-routed distributed path ([`SolveService::submit_dist`]
     /// — for small shapes the selector keeps the 1D layout, so this is
     /// bitwise the seed route).
-    fn submit_small_distributed<S: Scalar>(
+    fn submit_small_distributed<S: Scalar + MixedCapable>(
         &self,
         routine: SmallRoutine,
         a: Matrix<S>,
@@ -2013,6 +2128,7 @@ fn small_flusher<S: Scalar>(routine: SmallRoutine, model: GpuCostModel) -> Arc<S
             class: slos.iter().map(|s| s.class).min().unwrap_or(SloClass::Standard),
             deadline_ns: slos.iter().filter_map(|s| s.deadline_ns).min(),
             tenant: 0,
+            numeric: None,
         };
         let occupancy = systems.len();
         let dims: Vec<(usize, usize)> = systems

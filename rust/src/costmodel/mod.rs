@@ -19,7 +19,7 @@
 
 pub mod predict;
 
-pub use predict::Predictor;
+pub use predict::{plan_memo_stats, Predictor};
 
 use crate::scalar::DType;
 

@@ -231,6 +231,51 @@ impl NodeTopology {
         self.copy_latency + bytes as f64 / self.h2d_bw
     }
 
+    /// Structural fingerprint of this topology: FNV-1a over the link
+    /// map, island assignment, and the bit patterns of every
+    /// bandwidth/latency constant. Two topologies with equal signatures
+    /// price every transfer identically, which is what the planner's
+    /// replay memo keys on (`Predictor::best_grid` et al.) —
+    /// [`NodeTopology`] deliberately carries no `Eq`/`Hash` (f64
+    /// fields), so this is its hashable stand-in.
+    pub fn signature(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        let mut eat = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        };
+        eat(self.n as u64);
+        for row in &self.links {
+            for &l in row {
+                eat(match l {
+                    LinkKind::Local => 0,
+                    LinkKind::NvLink => 1,
+                    LinkKind::Pcie => 2,
+                    LinkKind::InterNode => 3,
+                });
+            }
+        }
+        for &isl in &self.island_of {
+            eat(isl as u64);
+        }
+        for v in [
+            self.local_bw,
+            self.nvlink_bw,
+            self.pcie_bw,
+            self.h2d_bw,
+            self.inter_bw,
+            self.copy_latency,
+            self.inter_latency,
+        ] {
+            eat(v.to_bits());
+        }
+        h
+    }
+
     /// Topology restricted to a device subset (the MPMD serve layer's
     /// degraded-mode view after a worker dies, and the fabric's
     /// per-island view): device `i` of the subset is `devices[i]`
@@ -364,6 +409,25 @@ mod tests {
         // Contention scales the payload term linearly.
         let c3 = t.contended_time(0, 1, b, 3);
         assert!(c3 > t.copy_time(0, 1, b) * 2.0 && c3 < t.copy_time(0, 1, b) * 3.0 + 1e-9);
+    }
+
+    #[test]
+    fn signature_separates_structures_and_constants() {
+        let a = NodeTopology::nvlink_all_to_all(8);
+        let b = NodeTopology::nvlink_all_to_all(8);
+        assert_eq!(a.signature(), b.signature());
+        // Device count, link classes, islands, and constants all move
+        // the fingerprint.
+        assert_ne!(a.signature(), NodeTopology::nvlink_all_to_all(4).signature());
+        assert_ne!(a.signature(), NodeTopology::pcie_all_to_all(8).signature());
+        assert_ne!(a.signature(), NodeTopology::two_tier(2, 4).signature());
+        let mut c = NodeTopology::nvlink_all_to_all(8);
+        c.nvlink_bw *= 2.0;
+        assert_ne!(a.signature(), c.signature());
+        // A one-island subset of a fabric prices like the flat node and
+        // fingerprints like it too.
+        let sub = NodeTopology::two_tier(2, 4).subset(&[0, 1, 2, 3]).unwrap();
+        assert_eq!(sub.signature(), NodeTopology::nvlink_all_to_all(4).signature());
     }
 
     #[test]

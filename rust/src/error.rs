@@ -51,6 +51,12 @@ pub enum Error {
     /// Eigensolver failed to converge within the iteration budget.
     NoConvergence { index: usize, iters: usize },
 
+    /// Mixed-precision iterative refinement hit its iteration cap (or
+    /// stagnated) before reaching the requested tolerance. The caller
+    /// falls back to the full-precision path; the residual reached is
+    /// carried for the decision log.
+    RefineStalled { iters: usize, residual: f64, tol: f64 },
+
     /// Shape mismatch on a public API boundary.
     Shape(String),
 
@@ -99,6 +105,10 @@ impl fmt::Display for Error {
             Error::NoConvergence { index, iters } => write!(
                 f,
                 "eigensolver failed to converge at eigenvalue {index} after {iters} iterations"
+            ),
+            Error::RefineStalled { iters, residual, tol } => write!(
+                f,
+                "iterative refinement stalled after {iters} iterations: residual {residual:.3e} > tol {tol:.3e}"
             ),
             Error::Shape(msg) => write!(f, "shape mismatch: {msg}"),
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),

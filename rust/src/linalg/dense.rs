@@ -78,6 +78,50 @@ impl<S: Scalar> Matrix<S> {
         a
     }
 
+    /// Random Hermitian positive-definite matrix with a prescribed
+    /// 2-norm condition number: `A = Q D Qᴴ` for a random Householder
+    /// reflector `Q = I − 2wwᴴ` and a log-spaced diagonal running from
+    /// `cond` down to 1. `Q` is exactly unitary, so the eigenvalues of
+    /// `A` are exactly `D` and κ₂(A) = `cond` up to rounding. Built from
+    /// rank-1 updates in O(n²); deterministic in `seed`. This is the
+    /// generator the mixed-precision refinement tests use to place
+    /// requests on either side of the κ·ε_f32 convergence guard.
+    pub fn spd_random_cond(n: usize, seed: u64, cond: f64) -> Self {
+        assert!(cond >= 1.0, "condition number must be >= 1");
+        let mut rng = Rng::new(seed);
+        let mut v = vec![S::zero(); n];
+        rng.fill(&mut v);
+        let norm = v.iter().map(|z| z.abs_sqr().to_f64()).sum::<f64>().sqrt();
+        // w = v/‖v‖ (e₀ for the degenerate all-zero draw).
+        let w: Vec<S> = if norm > 0.0 {
+            v.iter().map(|&z| z * S::from_f64(1.0 / norm)).collect()
+        } else {
+            (0..n).map(|i| if i == 0 { S::one() } else { S::zero() }).collect()
+        };
+        let d: Vec<f64> = (0..n)
+            .map(|i| {
+                let t = if n > 1 { i as f64 / (n - 1) as f64 } else { 0.0 };
+                cond.powf(1.0 - t)
+            })
+            .collect();
+        // QDQ = D − 2·w(wᴴD) − 2·(Dw)wᴴ + 4·(wᴴDw)·wwᴴ.
+        let dw: Vec<S> = w.iter().zip(&d).map(|(&wi, &di)| wi * S::from_f64(di)).collect();
+        let wdw: f64 =
+            w.iter().zip(&dw).map(|(&wi, &dwi)| (wi.conj() * dwi).re().to_f64()).sum();
+        let mut a = Self::zeros(n, n);
+        for j in 0..n {
+            for i in 0..n {
+                let mut val = if i == j { S::from_f64(d[i]) } else { S::zero() };
+                val += (w[i] * dw[j].conj()) * S::from_f64(-2.0);
+                val += (dw[i] * w[j].conj()) * S::from_f64(-2.0);
+                val += (w[i] * w[j].conj()) * S::from_f64(4.0 * wdw);
+                a[(i, j)] = val;
+            }
+        }
+        a.hermitianize();
+        a
+    }
+
     /// Random Hermitian (not necessarily definite) matrix.
     pub fn hermitian_random(n: usize, seed: u64) -> Self {
         let mut rng = Rng::new(seed);
@@ -438,6 +482,23 @@ mod tests {
             assert!(a[(i, i)].re > 0.0);
             assert_eq!(a[(i, i)].im, 0.0);
         }
+    }
+
+    #[test]
+    fn spd_random_cond_has_prescribed_spectrum() {
+        // trace(QDQᴴ) = trace(D) exactly; Hermitian with real diagonal.
+        let cond = 1e4;
+        let n = 16;
+        let a = Matrix::<c64>::spd_random_cond(n, 11, cond);
+        assert!(a.rel_err(&a.adjoint()) < 1e-14);
+        let want: f64 = (0..n)
+            .map(|i| cond.powf(1.0 - i as f64 / (n - 1) as f64))
+            .sum();
+        let got: f64 = (0..n).map(|i| a[(i, i)].re).sum();
+        assert!((got - want).abs() / want < 1e-12, "trace {got} vs {want}");
+        // cond = 1 collapses to the identity.
+        let i4 = Matrix::<f64>::spd_random_cond(4, 3, 1.0);
+        assert!(i4.rel_err(&Matrix::<f64>::eye(4)) < 1e-14);
     }
 
     #[test]

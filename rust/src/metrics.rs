@@ -212,6 +212,20 @@ pub struct Metrics {
     /// Peak admitted bytes per island (high-water marks, one slot per
     /// island; islands beyond slot 7 share the last slot).
     pub fabric_island_peak_bytes: [AtomicU64; 8],
+    /// Distributed solves completed through the mixed-precision tier
+    /// (working-dtype factor + f64 iterative refinement).
+    pub mixed_solves: AtomicU64,
+    /// Mixed attempts that hit the refinement cap (or stalled, or lost
+    /// definiteness when demoted) and fell back to full precision.
+    pub mixed_fallbacks: AtomicU64,
+    /// Modeled bytes the working dtype saved vs running the same
+    /// solves at full precision (factor storage/traffic + RHS round
+    /// trips at half the element size).
+    pub mixed_bytes_saved: AtomicU64,
+    /// Histogram of refinement iteration counts per successful mixed
+    /// solve: bucket `k` counts solves that needed `k` correction
+    /// solves; bucket 15 holds `>= 15`.
+    pub refine_iters: [AtomicU64; 16],
 }
 
 impl Metrics {
@@ -429,6 +443,31 @@ impl Metrics {
         self.fabric_island_peak_bytes[slot].fetch_max(bytes, Ordering::Relaxed);
     }
 
+    /// Record one completed mixed-precision solve.
+    #[inline]
+    pub fn add_mixed_solve(&self) {
+        self.mixed_solves.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one mixed attempt that fell back to full precision.
+    #[inline]
+    pub fn add_mixed_fallback(&self) {
+        self.mixed_fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count modeled bytes saved by a mixed solve's working dtype.
+    #[inline]
+    pub fn add_mixed_bytes_saved(&self, bytes: u64) {
+        self.mixed_bytes_saved.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Record a successful mixed solve's refinement iteration count.
+    #[inline]
+    pub fn record_refine_iters(&self, iters: u64) {
+        let slot = (iters as usize).min(self.refine_iters.len() - 1);
+        self.refine_iters[slot].fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Snapshot all counters (for reports; not atomic across fields).
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
@@ -488,6 +527,10 @@ impl Metrics {
             fabric_island_peak_bytes: std::array::from_fn(|i| {
                 self.fabric_island_peak_bytes[i].load(Ordering::Relaxed)
             }),
+            mixed_solves: self.mixed_solves.load(Ordering::Relaxed),
+            mixed_fallbacks: self.mixed_fallbacks.load(Ordering::Relaxed),
+            mixed_bytes_saved: self.mixed_bytes_saved.load(Ordering::Relaxed),
+            refine_iters: std::array::from_fn(|i| self.refine_iters[i].load(Ordering::Relaxed)),
         }
     }
 
@@ -539,10 +582,16 @@ impl Metrics {
             &self.fabric_intra_bytes,
             &self.fabric_bcasts,
             &self.fabric_bcast_stages,
+            &self.mixed_solves,
+            &self.mixed_fallbacks,
+            &self.mixed_bytes_saved,
         ] {
             c.store(0, Ordering::Relaxed);
         }
         for c in &self.fabric_island_peak_bytes {
+            c.store(0, Ordering::Relaxed);
+        }
+        for c in &self.refine_iters {
             c.store(0, Ordering::Relaxed);
         }
         for h in &self.class_latency {
@@ -611,6 +660,12 @@ pub struct MetricsSnapshot {
     pub fabric_bcast_stages: u64,
     /// Peak admitted bytes per island (high-water marks).
     pub fabric_island_peak_bytes: [u64; 8],
+    pub mixed_solves: u64,
+    pub mixed_fallbacks: u64,
+    pub mixed_bytes_saved: u64,
+    /// Refinement iteration histogram: slot `k` counts successful
+    /// mixed solves that needed `k` correction solves (slot 15 = ≥15).
+    pub refine_iters: [u64; 16],
 }
 
 impl MetricsSnapshot {
@@ -747,6 +802,10 @@ impl MetricsSnapshot {
             fabric_island_peak_bytes: std::array::from_fn(|i| {
                 self.fabric_island_peak_bytes[i].max(earlier.fabric_island_peak_bytes[i])
             }),
+            mixed_solves: self.mixed_solves - earlier.mixed_solves,
+            mixed_fallbacks: self.mixed_fallbacks - earlier.mixed_fallbacks,
+            mixed_bytes_saved: self.mixed_bytes_saved - earlier.mixed_bytes_saved,
+            refine_iters: std::array::from_fn(|i| self.refine_iters[i] - earlier.refine_iters[i]),
         }
     }
 }
@@ -1003,6 +1062,35 @@ mod tests {
         // Counts across buckets equal completions.
         let total: u64 = h.iter().map(|&(_, n)| n).sum();
         assert_eq!(total, m.snapshot().class_completed[SloClass::Standard.index()]);
+    }
+
+    #[test]
+    fn mixed_counters_and_refine_histogram() {
+        let m = Metrics::new();
+        m.add_mixed_solve();
+        m.add_mixed_solve();
+        m.add_mixed_fallback();
+        m.add_mixed_bytes_saved(1_000);
+        m.add_mixed_bytes_saved(500);
+        m.record_refine_iters(0);
+        m.record_refine_iters(3);
+        m.record_refine_iters(99); // clamps into the last slot
+        let s = m.snapshot();
+        assert_eq!(s.mixed_solves, 2);
+        assert_eq!(s.mixed_fallbacks, 1);
+        assert_eq!(s.mixed_bytes_saved, 1_500);
+        assert_eq!(s.refine_iters[0], 1);
+        assert_eq!(s.refine_iters[3], 1);
+        assert_eq!(s.refine_iters[15], 1);
+        // Flows subtract across deltas.
+        m.add_mixed_solve();
+        m.record_refine_iters(3);
+        let d = m.snapshot().delta(&s);
+        assert_eq!(d.mixed_solves, 1);
+        assert_eq!(d.refine_iters[3], 1);
+        assert_eq!(d.refine_iters[0], 0);
+        m.reset();
+        assert_eq!(m.snapshot(), MetricsSnapshot::default());
     }
 
     #[test]

@@ -335,6 +335,21 @@ pub fn prometheus_text(snap: &MetricsSnapshot, hists: &[(String, Vec<(u64, u64)>
         "Stages executed across hierarchical broadcasts.",
         snap.fabric_bcast_stages,
     );
+    counter(
+        "mixed_solves_total",
+        "Distributed solves completed through the mixed-precision tier.",
+        snap.mixed_solves,
+    );
+    counter(
+        "mixed_fallbacks_total",
+        "Mixed attempts recovered at full precision.",
+        snap.mixed_fallbacks,
+    );
+    counter(
+        "mixed_bytes_saved_total",
+        "Modeled bytes the working dtype saved vs full precision.",
+        snap.mixed_bytes_saved,
+    );
 
     let mut gauge = |name: &str, help: &str, v: u64| {
         out.push_str(&format!(
@@ -416,6 +431,30 @@ pub fn prometheus_text(snap: &MetricsSnapshot, hists: &[(String, Vec<(u64, u64)>
              jaxmg_class_latency_ns_count{{class=\"{label}\"}} {cum}\n"
         ));
     }
+
+    // Refinement-iteration histogram: correction solves per successful
+    // mixed solve. The slot array clamps at 15, so the last slot feeds
+    // only the +Inf bucket and its sum contribution is the clamped
+    // value (a conservative lower bound).
+    out.push_str(
+        "# HELP jaxmg_refine_iterations Correction solves per successful mixed solve \
+         (last slot clamps at 15+; sum is clamped, conservative).\n\
+         # TYPE jaxmg_refine_iterations histogram\n",
+    );
+    let mut cum = 0u64;
+    let mut sum = 0u128;
+    for (i, &n) in snap.refine_iters.iter().enumerate() {
+        cum += n;
+        sum += i as u128 * n as u128;
+        if i < snap.refine_iters.len() - 1 {
+            out.push_str(&format!("jaxmg_refine_iterations_bucket{{le=\"{i}\"}} {cum}\n"));
+        }
+    }
+    out.push_str(&format!(
+        "jaxmg_refine_iterations_bucket{{le=\"+Inf\"}} {cum}\n\
+         jaxmg_refine_iterations_sum {sum}\n\
+         jaxmg_refine_iterations_count {cum}\n"
+    ));
     out
 }
 
@@ -507,10 +546,18 @@ mod tests {
 
     #[test]
     fn prometheus_text_renders_counters_gauges_histograms() {
+        let mut refine_iters = [0u64; 16];
+        refine_iters[0] = 2;
+        refine_iters[3] = 1;
+        refine_iters[15] = 1;
         let snap = MetricsSnapshot {
             peer_bytes: 42,
             cache_resident_bytes: 1024,
             class_completed: [3, 0, 0],
+            mixed_solves: 4,
+            mixed_fallbacks: 1,
+            mixed_bytes_saved: 9_000,
+            refine_iters,
             ..Default::default()
         };
         let hists = vec![
@@ -535,6 +582,19 @@ mod tests {
         assert!(text.contains("jaxmg_class_latency_ns_count{class=\"interactive\"} 3"));
         // Empty classes still expose a zero +Inf bucket and count.
         assert!(text.contains("jaxmg_class_latency_ns_bucket{class=\"batch\",le=\"+Inf\"} 0"));
+        // Mixed-precision tier counters.
+        assert!(text.contains("# TYPE jaxmg_mixed_solves_total counter"));
+        assert!(text.contains("jaxmg_mixed_solves_total 4"));
+        assert!(text.contains("jaxmg_mixed_fallbacks_total 1"));
+        assert!(text.contains("jaxmg_mixed_bytes_saved_total 9000"));
+        // Refinement histogram: cumulative buckets, clamped-slot sum.
+        assert!(text.contains("# TYPE jaxmg_refine_iterations histogram"));
+        assert!(text.contains("jaxmg_refine_iterations_bucket{le=\"0\"} 2"));
+        assert!(text.contains("jaxmg_refine_iterations_bucket{le=\"3\"} 3"));
+        assert!(text.contains("jaxmg_refine_iterations_bucket{le=\"14\"} 3"));
+        assert!(text.contains("jaxmg_refine_iterations_bucket{le=\"+Inf\"} 4"));
+        assert!(text.contains("jaxmg_refine_iterations_sum 18"));
+        assert!(text.contains("jaxmg_refine_iterations_count 4"));
         // Deterministic.
         assert_eq!(text, prometheus_text(&snap, &hists));
     }

@@ -296,6 +296,16 @@ impl DType {
         }
     }
 
+    /// The working dtype the mixed-precision tier factors in, if this
+    /// dtype has one (f64→f32, c128→c64; the narrow dtypes have none).
+    pub fn working_dtype(self) -> Option<DType> {
+        match self {
+            DType::F64 => Some(DType::F32),
+            DType::C128 => Some(DType::C64),
+            DType::F32 | DType::C64 => None,
+        }
+    }
+
     /// Parse a JAX-style dtype name.
     pub fn parse(s: &str) -> Option<DType> {
         match s {
@@ -577,6 +587,90 @@ macro_rules! impl_scalar_complex {
 impl_scalar_complex!(f32, DType::C64);
 impl_scalar_complex!(f64, DType::C128);
 
+/// Demotion to the narrower working dtype used by the mixed-precision
+/// tier: `f64 → f32` and `c128 → c64` (elementwise plane rounding).
+///
+/// Conversion is the deterministic IEEE round-to-nearest-even cast; any
+/// value already representable in the working dtype round-trips
+/// **bitwise** through [`Promote::promote`]. The narrow dtypes do not
+/// implement this trait, which is what makes the mixed tier statically
+/// ineligible for f32/c64 requests.
+pub trait Demote: Scalar {
+    /// The working (narrow) scalar.
+    type Lo: Scalar<Real = f32> + Promote<Hi = Self>;
+
+    /// Elementwise narrowing cast.
+    fn demote(self) -> Self::Lo;
+}
+
+/// Promotion from a working dtype back to its full-precision parent
+/// (`f32 → f64`, `c64 → c128`). Always exact.
+pub trait Promote: Scalar {
+    /// The full-precision (wide) scalar.
+    type Hi: Scalar<Real = f64> + Demote<Lo = Self>;
+
+    /// Elementwise exact widening cast.
+    fn promote(self) -> Self::Hi;
+}
+
+impl Demote for f64 {
+    type Lo = f32;
+    #[inline]
+    fn demote(self) -> f32 {
+        self as f32
+    }
+}
+
+impl Promote for f32 {
+    type Hi = f64;
+    #[inline]
+    fn promote(self) -> f64 {
+        self as f64
+    }
+}
+
+impl Demote for c64 {
+    type Lo = c32;
+    #[inline]
+    fn demote(self) -> c32 {
+        Complex::new(self.re as f32, self.im as f32)
+    }
+}
+
+impl Promote for c32 {
+    type Hi = c64;
+    #[inline]
+    fn promote(self) -> c64 {
+        Complex::new(self.re as f64, self.im as f64)
+    }
+}
+
+/// Demote a shard into a freshly allocated working-dtype buffer.
+pub fn demote_slice<S: Demote>(src: &[S]) -> Vec<S::Lo> {
+    src.iter().map(|&v| v.demote()).collect()
+}
+
+/// Demote a shard into an existing working-dtype buffer (lengths must match).
+pub fn demote_into<S: Demote>(src: &[S], dst: &mut [S::Lo]) {
+    assert_eq!(src.len(), dst.len(), "demote_into: length mismatch");
+    for (d, &s) in dst.iter_mut().zip(src.iter()) {
+        *d = s.demote();
+    }
+}
+
+/// Promote a working-dtype shard back to full precision (always exact).
+pub fn promote_slice<L: Promote>(src: &[L]) -> Vec<L::Hi> {
+    src.iter().map(|&v| v.promote()).collect()
+}
+
+/// Promote a shard into an existing full-precision buffer (lengths must match).
+pub fn promote_into<L: Promote>(src: &[L], dst: &mut [L::Hi]) {
+    assert_eq!(src.len(), dst.len(), "promote_into: length mismatch");
+    for (d, &s) in dst.iter_mut().zip(src.iter()) {
+        *d = s.promote();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -659,5 +753,94 @@ mod tests {
         let p = c64::new(4.0, 0.0);
         assert_eq!(p.sqrt_real(), c64::new(2.0, 0.0));
         assert_eq!(9.0f64.sqrt_real(), 3.0);
+    }
+
+    /// Deterministic pseudo-random f32 stream (splitmix-style) so the
+    /// round-trip property runs over a spread of exponents/signs.
+    fn prop_f32s(n: usize, mut state: u64) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                state = state.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1);
+                let z = (state >> 33) as u32;
+                // Map to a finite float in a wide range, including negatives.
+                let v = (z as f64 / u32::MAX as f64 - 0.5) * 2.0;
+                (v * 1e12f64.powf(v)) as f32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn demote_promote_roundtrip_f32_representable() {
+        // Values that originate in f32 survive f64 → f32 → f64 bitwise.
+        let lo = prop_f32s(512, 0xD15C0);
+        let hi: Vec<f64> = promote_slice(&lo);
+        let back = demote_slice(&hi);
+        for (a, b) in lo.iter().zip(back.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "f32 round-trip must be bitwise");
+        }
+        // And the promoted values re-promote identically (promotion exact).
+        let hi2: Vec<f64> = promote_slice(&back);
+        for (a, b) in hi.iter().zip(hi2.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn demote_promote_roundtrip_complex() {
+        let re = prop_f32s(256, 0xABCD);
+        let im = prop_f32s(256, 0x1234);
+        let lo: Vec<c32> = re
+            .iter()
+            .zip(im.iter())
+            .map(|(&r, &i)| c32::new(r, i))
+            .collect();
+        let hi: Vec<c64> = promote_slice(&lo);
+        let back: Vec<c32> = demote_slice(&hi);
+        for (a, b) in lo.iter().zip(back.iter()) {
+            assert_eq!(a.re.to_bits(), b.re.to_bits());
+            assert_eq!(a.im.to_bits(), b.im.to_bits());
+        }
+    }
+
+    #[test]
+    fn demote_is_deterministic_elementwise() {
+        // Slice conversion must equal per-element conversion, in order.
+        let hi: Vec<f64> = (0..257).map(|i| (i as f64) * 0.1 + 1.0 / 3.0).collect();
+        let a = demote_slice(&hi);
+        let b: Vec<f32> = hi.iter().map(|&v| v.demote()).collect();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // Repeated runs are identical (pure function of input).
+        let again = demote_slice(&hi);
+        for (x, y) in a.iter().zip(again.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // In-place variants agree with the allocating ones.
+        let mut dst = vec![0.0f32; hi.len()];
+        demote_into(&hi, &mut dst);
+        assert_eq!(dst, a);
+        let mut up = vec![0.0f64; hi.len()];
+        promote_into(&a, &mut up);
+        assert_eq!(up, promote_slice(&a));
+    }
+
+    #[test]
+    fn demote_rounds_to_nearest() {
+        // 1 + 2^-40 is not representable in f32; rounds to 1.0 exactly.
+        let v: f64 = 1.0 + 2.0f64.powi(-40);
+        assert_eq!(v.demote(), 1.0f32);
+        // Overflow saturates to infinity deterministically.
+        assert_eq!(1e60f64.demote(), f32::INFINITY);
+        assert_eq!((-1e60f64).demote(), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn working_dtype_mapping() {
+        assert_eq!(DType::F64.working_dtype(), Some(DType::F32));
+        assert_eq!(DType::C128.working_dtype(), Some(DType::C64));
+        assert_eq!(DType::F32.working_dtype(), None);
+        assert_eq!(DType::C64.working_dtype(), None);
     }
 }

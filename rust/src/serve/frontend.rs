@@ -67,9 +67,9 @@ use crate::batch::{
     SmallRoutine,
 };
 use crate::coordinator::{
-    handle_pair, publish_error, publish_one, DistPlan, FactorCache, FactorEntry, FactorKey,
-    Footprint, GridPlanCache, JobQueue, SchedConfig, ServeError, ServiceHandle, Slo, SloClass,
-    Slot, SloQueue, SloTicket, SolveStats, TenantQuotas,
+    handle_pair, publish_error, publish_one, secs_to_ns, DistPlan, FactorCache, FactorEntry,
+    FactorKey, Footprint, GridPlanCache, JobQueue, NumericPolicy, SchedConfig, ServeError,
+    ServiceHandle, Slo, SloClass, Slot, SloQueue, SloTicket, SolveStats, TenantQuotas,
 };
 pub use crate::coordinator::DistRoutine;
 use crate::coordinator::panic_message;
@@ -81,8 +81,9 @@ use crate::linalg::Matrix;
 use crate::obs::{DriftKey, SpanId, TraceId, Tracer};
 use crate::scalar::{DType, Scalar};
 use crate::solver::{
-    lift_timeline_spans, potrf_dist, potri_dist, potrs_dist, syevd_dist, Ctx, PipelineConfig,
-    SolverBackend,
+    lift_timeline_spans, potrf_dist, potri_dist, potrs_dist, syevd_dist, Ctx, MixedCapable,
+    MixedRun, PipelineConfig, Precision, RefineOptions, SolverBackend, DEFAULT_REFINE_CAP,
+    DEFAULT_REFINE_TOL,
 };
 use crate::tile::{build_panel, DistMatrix, LayoutKind};
 use std::any::Any;
@@ -568,6 +569,10 @@ struct DistReq<S: Scalar> {
     a: Arc<Matrix<S>>,
     rhs: Option<Matrix<S>>,
     slot: DistSlot<S>,
+    /// Tolerance/condition budget carried from the submit [`Slo`];
+    /// `Some` routes potrs through [`Precision::Mixed`] when the cost
+    /// model predicts a win. Retries re-plan with the same policy.
+    numeric: Option<NumericPolicy>,
     /// Trace identity, minted in `enqueue_dist` (nulls when tracing is
     /// off). Degraded-mode retries re-execute the same `DistReq`, so
     /// every attempt lands in one span tree and the root closes exactly
@@ -633,11 +638,11 @@ fn stage_shard<S: Scalar>(
     }
 }
 
-impl<S: Scalar> DistWork for DistReq<S> {
+impl<S: Scalar + MixedCapable> DistWork for DistReq<S> {
     fn plan(&self, shared: &Shared, ndev: usize) -> Result<DistPlan> {
         let n = self.a.rows();
         let nrhs = self.rhs.as_ref().map(|b| b.cols()).unwrap_or(0);
-        shared.plans.plan(
+        shared.plans.plan_numeric(
             self.routine.name(),
             n,
             nrhs,
@@ -647,6 +652,7 @@ impl<S: Scalar> DistWork for DistReq<S> {
             &shared.cfg.model,
             shared.node.topology(),
             shared.cfg.grid,
+            if self.routine == DistRoutine::Potrs { self.numeric } else { None },
         )
     }
 
@@ -697,13 +703,51 @@ impl<S: Scalar> DistWork for DistReq<S> {
                 );
             }
         }
+        let mixed = plan.precision.is_mixed();
+        let refine_opts = RefineOptions {
+            tol: ticket.slo.numeric.map(|p| p.tol()).unwrap_or(DEFAULT_REFINE_TOL),
+            max_iters: DEFAULT_REFINE_CAP,
+        };
+        let pred = Predictor {
+            model: shared.cfg.model.clone(),
+            topo: shared.node.topology().clone(),
+            dtype: S::DTYPE,
+        };
+        if mixed && trace.0 != 0 {
+            let full_ns = secs_to_ns(pred.dist_makespan(
+                self.routine.name(),
+                self.a.rows(),
+                self.rhs.as_ref().map(|b| b.cols()).unwrap_or(0),
+                shared.cfg.tile,
+                plan.grid.0,
+                plan.grid.1,
+            ));
+            tracer.decision(
+                trace,
+                t0_ns,
+                "mixed-route",
+                format!(
+                    "precision={} est_ns={} full_ns={} win_ns={}",
+                    plan.precision.name(),
+                    plan.est_ns,
+                    full_ns,
+                    full_ns.saturating_sub(plan.est_ns)
+                ),
+            );
+        }
         // Factor-cache probe: a resident L staged over exactly this
         // live set lets the solve skip both the staging fan-out and
         // the factorization — rank 0 re-opens the stored handles and
         // runs only the triangular tail on the resident shards. syevd
-        // shares no potrf prefix, so it bypasses the cache.
+        // shares no potrf prefix, so it bypasses the cache. A mixed
+        // solve factors in the working dtype: its entries are keyed on
+        // that dtype so a full factor of the same bytes never aliases.
         let cache_key = if shared.cfg.factor_cache && self.routine != DistRoutine::Syevd {
-            Some(FactorKey::of(self.a.as_ref(), shared.cfg.tile, plan.grid))
+            let mut key = FactorKey::of(self.a.as_ref(), shared.cfg.tile, plan.grid);
+            if let Precision::Mixed(w) = plan.precision {
+                key.dtype = w;
+            }
+            Some(key)
         } else {
             None
         };
@@ -718,12 +762,10 @@ impl<S: Scalar> DistWork for DistReq<S> {
         }
         let cache_hit = cached.is_some();
         let recompute_ns = match &cache_key {
-            Some(key) => Predictor {
-                model: shared.cfg.model.clone(),
-                topo: shared.node.topology().clone(),
-                dtype: S::DTYPE,
+            Some(key) if mixed => {
+                secs_to_ns(pred.potrf2d_mixed(key.n, key.tile, key.grid.0, key.grid.1))
             }
-            .recompute_ns(key.n, key.tile, key.grid.0, key.grid.1),
+            Some(key) => pred.recompute_ns(key.n, key.tile, key.grid.0, key.grid.1),
             None => 0,
         };
         if trace.0 != 0 {
@@ -748,6 +790,9 @@ impl<S: Scalar> DistWork for DistReq<S> {
         let mut opened: Vec<IpcHandle> = Vec::new();
         // (`StagedShard` is not `Clone`, hence no `vec![None; n]`.)
         let mut staged: Vec<Option<StagedShard>> = (0..live.len()).map(|_| None).collect();
+        // Set when a mixed attempt fell back to full precision: the
+        // staged working-dtype shards must not seed the cache then.
+        let fell_back = std::cell::Cell::new(false);
         let attempt = (|| -> Result<DistOut<S>> {
             let n = self.a.rows();
             let ndev = live.len();
@@ -770,10 +815,16 @@ impl<S: Scalar> DistWork for DistReq<S> {
                     staged[i] = Some(StagedShard { ptr, handle: fac.handles[i] });
                 }
             } else {
+                // Mixed plans demote once on the host; every staged
+                // shard (and its cudaIpc traffic) then moves
+                // working-dtype bytes — half the fan-out volume.
+                let aw: Option<Arc<Matrix<<S as MixedCapable>::Working>>> =
+                    if mixed { Some(Arc::new(S::demote_host(self.a.as_ref())?)) } else { None };
                 let (tx, rx) = mpsc::channel::<(usize, Result<StagedShard>)>();
                 for (i, &dev) in live.iter().enumerate() {
                     let tx = tx.clone();
                     let a = self.a.clone();
+                    let aw = aw.clone();
                     let sub = sub.clone();
                     let job: WorkerJob = Box::new(move |ctx| {
                         if !ctx.alive() {
@@ -781,7 +832,14 @@ impl<S: Scalar> DistWork for DistReq<S> {
                             // rank 0 observes.
                             return;
                         }
-                        let res = stage_shard::<S>(ctx, &sub, i, kind, &a, caller);
+                        let res = match &aw {
+                            Some(aw) => {
+                                stage_shard::<<S as MixedCapable>::Working>(
+                                    ctx, &sub, i, kind, aw, caller,
+                                )
+                            }
+                            None => stage_shard::<S>(ctx, &sub, i, kind, &a, caller),
+                        };
                         let _ = tx.send((i, res));
                     });
                     // A closed mailbox drops the job (and its `tx`): the
@@ -849,7 +907,70 @@ impl<S: Scalar> DistWork for DistReq<S> {
                 }
             }
 
-            // 3. The single caller assembles the view and solves.
+            // 3. The single caller assembles the view and solves. A
+            // mixed plan assembles the working-dtype view, factors and
+            // solves narrow, and refines against the full-precision
+            // A/b; a refinement stall or lost definiteness falls back
+            // to a full-precision solve on the same subset — the
+            // request never fails on precision grounds.
+            if mixed {
+                let b = self.rhs.as_ref().expect("validated at submit");
+                let backend = SolverBackend::<<S as MixedCapable>::Working>::Native;
+                let ctx =
+                    Ctx::with_pipeline(&sub, &shared.cfg.model, &backend, shared.cfg.pipeline)
+                        .with_trace(self.trace, self.root);
+                let mut dm = DistMatrix::<<S as MixedCapable>::Working>::from_panels(
+                    &sub, n, kind, panels,
+                )?;
+                let solved = (|| -> Result<Matrix<S>> {
+                    if !cache_hit {
+                        potrf_dist(&ctx, &mut dm)?;
+                    }
+                    let mrun = MixedRun {
+                        node: &sub,
+                        model: &shared.cfg.model,
+                        pipeline: shared.cfg.pipeline,
+                        layout: kind,
+                        trace: (self.trace, self.root),
+                        preempt: None,
+                    };
+                    S::mixed_refine(&mrun, &dm, &self.a, b, refine_opts).map(|(x, _)| x)
+                })();
+                if trace.0 != 0 {
+                    if let Some(snap) = ctx.timeline_snapshot() {
+                        lift_timeline_spans(&tracer, trace, self.root, &snap);
+                    }
+                }
+                // The workers (or the cache) own the panels.
+                let _ = dm.into_panels();
+                let why = match solved {
+                    Ok(x) => return Ok(DistOut::Mat(x)),
+                    Err(Error::RefineStalled { iters, residual, tol }) => format!(
+                        "refine stalled: iters={iters} residual={residual:.3e} tol={tol:.1e}"
+                    ),
+                    Err(Error::NotPositiveDefinite { minor }) => {
+                        format!("demoted matrix lost definiteness at minor {minor}")
+                    }
+                    Err(e) => return Err(e),
+                };
+                fell_back.set(true);
+                metrics.add_mixed_fallback();
+                if trace.0 != 0 {
+                    tracer.decision(trace, shared.sim_now_ns(), "mixed-fallback", why);
+                }
+                // Typed fallback: rank 0 recovers at full precision on
+                // the same live subset; the staged working shards are
+                // torn down by the common teardown and never cached.
+                let backend = SolverBackend::<S>::Native;
+                let ctx =
+                    Ctx::with_pipeline(&sub, &shared.cfg.model, &backend, shared.cfg.pipeline)
+                        .with_trace(self.trace, self.root);
+                let mut dmf = DistMatrix::<S>::scatter(&sub, &self.a, kind)?;
+                potrf_dist(&ctx, &mut dmf)?;
+                let x = potrs_dist(&ctx, &dmf, b)?;
+                dmf.free()?;
+                return Ok(DistOut::Mat(x));
+            }
             let backend = SolverBackend::<S>::Native;
             let ctx = Ctx::with_pipeline(&sub, &shared.cfg.model, &backend, shared.cfg.pipeline)
                 .with_trace(self.trace, self.root);
@@ -923,7 +1044,7 @@ impl<S: Scalar> DistWork for DistReq<S> {
         // non-negative). potri destroyed L in place, so it never
         // seeds the cache.
         let mut kept: Option<Vec<usize>> = None;
-        if result.is_ok() && !cache_hit && self.routine != DistRoutine::Potri {
+        if result.is_ok() && !cache_hit && !fell_back.get() && self.routine != DistRoutine::Potri {
             if let Some(key) = &cache_key {
                 let mut ptrs = Vec::with_capacity(live.len());
                 let mut handles = Vec::with_capacity(live.len());
@@ -1667,8 +1788,12 @@ fn pod_builder<S: Scalar>(routine: SmallRoutine, tracer: Arc<Tracer>) -> Arc<Pod
             rhss.push(job.rhs);
             slots.push(job.slot);
         }
-        let pod_slo =
-            Slo { class: class.unwrap_or(SloClass::Standard), deadline_ns: deadline, tenant: 0 };
+        let pod_slo = Slo {
+            class: class.unwrap_or(SloClass::Standard),
+            deadline_ns: deadline,
+            tenant: 0,
+            numeric: None,
+        };
         // One flushed bucket = one submission on the frontend queue =
         // one trace (mirrors the SPMD small-flusher's accounting).
         let (trace, root) = tracer.new_trace();
@@ -1796,7 +1921,7 @@ impl MpmdService {
         }
     }
 
-    fn enqueue_dist<S: Scalar>(&self, mut req: DistReq<S>, slo: Slo) -> Result<()> {
+    fn enqueue_dist<S: Scalar + MixedCapable>(&self, mut req: DistReq<S>, slo: Slo) -> Result<()> {
         let tracer = self.shared.node.tracer();
         let (trace, root) = tracer.new_trace();
         req.trace = trace;
@@ -1814,14 +1939,30 @@ impl MpmdService {
             Ok(p) => {
                 let mut est = p.est_ns;
                 if self.shared.cfg.factor_cache && req.routine != DistRoutine::Syevd {
-                    let key = FactorKey::of(req.a.as_ref(), self.shared.cfg.tile, p.grid);
-                    if self.shared.cache.lock().unwrap().contains(&key) {
-                        let re = Predictor {
-                            model: self.shared.cfg.model.clone(),
-                            topo: self.shared.node.topology().clone(),
-                            dtype: S::DTYPE,
+                    // A mixed plan factors (and caches) in the working
+                    // dtype — probe under that key and deduct the mixed
+                    // prefix a hit would skip.
+                    let mut key = FactorKey::of(req.a.as_ref(), self.shared.cfg.tile, p.grid);
+                    let pred = Predictor {
+                        model: self.shared.cfg.model.clone(),
+                        topo: self.shared.node.topology().clone(),
+                        dtype: S::DTYPE,
+                    };
+                    let re = match p.precision {
+                        Precision::Mixed(w) => {
+                            key.dtype = w;
+                            secs_to_ns(pred.potrf2d_mixed(
+                                key.n,
+                                key.tile,
+                                key.grid.0,
+                                key.grid.1,
+                            ))
                         }
-                        .recompute_ns(key.n, key.tile, key.grid.0, key.grid.1);
+                        Precision::Full => {
+                            pred.recompute_ns(key.n, key.tile, key.grid.0, key.grid.1)
+                        }
+                    };
+                    if self.shared.cache.lock().unwrap().contains(&key) {
                         est = est.saturating_sub(re);
                     }
                 }
@@ -1861,12 +2002,15 @@ impl MpmdService {
     }
 
     /// Distributed Cholesky factor: returns the factored matrix.
-    pub fn submit_potrf<S: Scalar>(&self, a: Matrix<S>) -> Result<ServiceHandle<Matrix<S>>> {
+    pub fn submit_potrf<S: Scalar + MixedCapable>(
+        &self,
+        a: Matrix<S>,
+    ) -> Result<ServiceHandle<Matrix<S>>> {
         self.submit_potrf_slo(a, Slo::standard())
     }
 
     /// [`Self::submit_potrf`] with an explicit SLO.
-    pub fn submit_potrf_slo<S: Scalar>(
+    pub fn submit_potrf_slo<S: Scalar + MixedCapable>(
         &self,
         a: Matrix<S>,
         slo: Slo,
@@ -1879,6 +2023,7 @@ impl MpmdService {
                 a: Arc::new(a),
                 rhs: None,
                 slot: DistSlot::Mat(slot),
+                numeric: None,
                 trace: TraceId(0),
                 root: SpanId(0),
             },
@@ -1888,7 +2033,7 @@ impl MpmdService {
     }
 
     /// Distributed solve `A·X = B` (factor + two-sweep solve).
-    pub fn submit_potrs<S: Scalar>(
+    pub fn submit_potrs<S: Scalar + MixedCapable>(
         &self,
         a: Matrix<S>,
         b: Matrix<S>,
@@ -1896,8 +2041,12 @@ impl MpmdService {
         self.submit_potrs_slo(a, b, Slo::standard())
     }
 
-    /// [`Self::submit_potrs`] with an explicit SLO.
-    pub fn submit_potrs_slo<S: Scalar>(
+    /// [`Self::submit_potrs`] with an explicit SLO. An
+    /// [`Slo::with_tolerance`] policy routes the solve through the
+    /// mixed tier when the cost model predicts a win; a refinement
+    /// stall falls back to full precision — the request never fails
+    /// on precision grounds.
+    pub fn submit_potrs_slo<S: Scalar + MixedCapable>(
         &self,
         a: Matrix<S>,
         b: Matrix<S>,
@@ -1914,6 +2063,7 @@ impl MpmdService {
                 a: Arc::new(a),
                 rhs: Some(b),
                 slot: DistSlot::Mat(slot),
+                numeric: slo.numeric,
                 trace: TraceId(0),
                 root: SpanId(0),
             },
@@ -1923,12 +2073,15 @@ impl MpmdService {
     }
 
     /// Distributed SPD/HPD inverse.
-    pub fn submit_potri<S: Scalar>(&self, a: Matrix<S>) -> Result<ServiceHandle<Matrix<S>>> {
+    pub fn submit_potri<S: Scalar + MixedCapable>(
+        &self,
+        a: Matrix<S>,
+    ) -> Result<ServiceHandle<Matrix<S>>> {
         self.submit_potri_slo(a, Slo::standard())
     }
 
     /// [`Self::submit_potri`] with an explicit SLO.
-    pub fn submit_potri_slo<S: Scalar>(
+    pub fn submit_potri_slo<S: Scalar + MixedCapable>(
         &self,
         a: Matrix<S>,
         slo: Slo,
@@ -1941,6 +2094,7 @@ impl MpmdService {
                 a: Arc::new(a),
                 rhs: None,
                 slot: DistSlot::Mat(slot),
+                numeric: None,
                 trace: TraceId(0),
                 root: SpanId(0),
             },
@@ -1951,7 +2105,7 @@ impl MpmdService {
 
     /// Distributed eigendecomposition: ascending eigenvalues +
     /// eigenvector columns.
-    pub fn submit_syevd<S: Scalar>(
+    pub fn submit_syevd<S: Scalar + MixedCapable>(
         &self,
         a: Matrix<S>,
     ) -> Result<ServiceHandle<(Vec<S::Real>, Matrix<S>)>> {
@@ -1959,7 +2113,7 @@ impl MpmdService {
     }
 
     /// [`Self::submit_syevd`] with an explicit SLO.
-    pub fn submit_syevd_slo<S: Scalar>(
+    pub fn submit_syevd_slo<S: Scalar + MixedCapable>(
         &self,
         a: Matrix<S>,
         slo: Slo,
@@ -1972,6 +2126,7 @@ impl MpmdService {
                 a: Arc::new(a),
                 rhs: None,
                 slot: DistSlot::Eig(slot),
+                numeric: None,
                 trace: TraceId(0),
                 root: SpanId(0),
             },
@@ -1983,7 +2138,7 @@ impl MpmdService {
     /// Submit a small solve: coalesced into a worker-pinned pod when
     /// the cost model says batching wins, routed distributed otherwise
     /// — the MPMD twin of `SolveService::submit_small`.
-    pub fn submit_small<S: Scalar>(
+    pub fn submit_small<S: Scalar + MixedCapable>(
         &self,
         routine: SmallRoutine,
         a: Matrix<S>,
@@ -1994,7 +2149,7 @@ impl MpmdService {
 
     /// [`Self::submit_small`] with an explicit SLO. A coalesced pod
     /// inherits the strictest SLO among its members.
-    pub fn submit_small_slo<S: Scalar>(
+    pub fn submit_small_slo<S: Scalar + MixedCapable>(
         &self,
         routine: SmallRoutine,
         a: Matrix<S>,
@@ -2053,6 +2208,7 @@ impl MpmdService {
                     a: Arc::new(a),
                     rhs,
                     slot: DistSlot::Mat(slot),
+                    numeric: if dist == DistRoutine::Potrs { slo.numeric } else { None },
                     trace: TraceId(0),
                     root: SpanId(0),
                 },

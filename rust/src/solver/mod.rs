@@ -84,6 +84,7 @@
 //! to load the exports in Perfetto.
 
 mod kernels;
+mod mixed;
 mod potrf;
 mod potri;
 mod potrs;
@@ -91,6 +92,10 @@ mod schedule;
 mod syevd;
 
 pub use kernels::{NativeKernels, TileKernels};
+pub use mixed::{
+    demote_matrix, promote_matrix, solve_dist_prec, MixedCapable, MixedReport, MixedRun,
+    Precision, RefineOptions, SolveOutcome, DEFAULT_REFINE_CAP, DEFAULT_REFINE_TOL,
+};
 pub use potrf::potrf_dist;
 pub use potri::potri_dist;
 pub use potrs::potrs_dist;

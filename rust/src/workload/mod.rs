@@ -39,6 +39,7 @@ use crate::linalg::Matrix;
 use crate::obs::TraceId;
 use crate::rng::Rng;
 use crate::scalar::{c32, c64, DType, Scalar};
+use crate::solver::MixedCapable;
 use std::collections::VecDeque;
 
 // ---------------------------------------------------------------------------
@@ -142,6 +143,16 @@ pub struct RequestSpec {
     pub deadline_budget_ns: Option<u64>,
     /// Owning tenant for quota accounting.
     pub tenant: u32,
+    /// Residual tolerance carried to the service
+    /// ([`Slo::with_tolerance`]): `Some` lets the planner route the
+    /// solve through [`crate::solver::Precision::Mixed`] when the cost
+    /// model predicts a win.
+    pub tol: Option<f64>,
+    /// Condition-number target of the generated SPD input (`1.0`
+    /// keeps the default well-conditioned `spd_random` draw); when
+    /// `tol` is set this is also the κ budget the router prices the
+    /// refinement iteration count with.
+    pub cond: f64,
     /// Seed for this request's input matrices; [`Population::sample`]
     /// re-derives it per draw so every request gets fresh inputs.
     pub seed: u64,
@@ -150,10 +161,15 @@ pub struct RequestSpec {
 impl RequestSpec {
     /// The absolute [`Slo`] for a request arriving at `now_ns`.
     pub fn slo_at(&self, now_ns: u64) -> Slo {
-        Slo {
+        let slo = Slo {
             class: self.class,
             deadline_ns: self.deadline_budget_ns.map(|b| now_ns.saturating_add(b)),
             tenant: self.tenant,
+            numeric: None,
+        };
+        match self.tol {
+            Some(tol) => slo.with_tolerance(tol, self.cond.max(1.0)),
+            None => slo,
         }
     }
 }
@@ -269,6 +285,8 @@ impl Population {
             class,
             deadline_budget_ns: budget,
             tenant,
+            tol: None,
+            cond: 1.0,
             seed: 0,
         };
         let small = |n, tenant| RequestSpec {
@@ -279,6 +297,8 @@ impl Population {
             class: SloClass::Standard,
             deadline_budget_ns: None,
             tenant,
+            tol: None,
+            cond: 1.0,
             seed: 0,
         };
         Population::new(vec![
@@ -348,6 +368,8 @@ impl Population {
             class,
             deadline_budget_ns: budget,
             tenant,
+            tol: None,
+            cond: 1.0,
             seed: 0,
         };
         Population::new(vec![
@@ -397,6 +419,8 @@ impl Population {
                     class: SloClass::Standard,
                     deadline_budget_ns: None,
                     tenant: 1,
+                    tol: None,
+                    cond: 1.0,
                     seed: 0,
                 },
             ),
@@ -410,11 +434,77 @@ impl Population {
                     class: SloClass::Standard,
                     deadline_budget_ns: None,
                     tenant: 1,
+                    tol: None,
+                    cond: 1.0,
                     seed: 0,
                 },
             ),
             // Nightly refactorization: big, float32, happy to wait.
             (0.10, dist(DistRoutine::Potrf, 768, 0, DType::F32, SloClass::Batch, None, 4)),
+        ])
+    }
+
+    /// The mixed-precision regime sweep: `potrs` templates carrying a
+    /// residual tolerance and a condition-number budget, spanning the
+    /// three behaviors of the tier —
+    ///
+    /// * **convergence** — well-conditioned f64 and c128 systems whose
+    ///   refinement meets the requested tolerance in a few iterations;
+    /// * **the iteration cap** — a system whose *declared* κ budget
+    ///   prices a handful of iterations but whose tolerance sits below
+    ///   the f64 residual floor `κ·ε`, so the refinement plateaus and
+    ///   trips the stall check → typed full-precision fallback;
+    /// * **the routing decline** — a κ budget beyond the f32 headroom
+    ///   (`κ·ε_f32 ≥ 1/4`), which the router prices as un-refinable
+    ///   and keeps at [`crate::solver::Precision::Full`].
+    ///
+    /// Sizes stay test-small (numerics run on host), so the *cost*
+    /// crossover routes these Full through the service — the numeric
+    /// regimes are exercised by forcing the mixed tier at the solver
+    /// layer (`tests` below and `rust/tests/mixed.rs`); the fleet
+    /// trace exercises tolerance-carrying SLOs end to end with zero
+    /// lost requests.
+    pub fn mixed_mix() -> Self {
+        let prec = |n, nrhs, dtype, tol, cond, class, budget: Option<u64>, tenant| RequestSpec {
+            route: Route::Dist(DistRoutine::Potrs),
+            n,
+            nrhs,
+            dtype,
+            class,
+            deadline_budget_ns: budget,
+            tenant,
+            tol: Some(tol),
+            cond,
+            seed: 0,
+        };
+        Population::new(vec![
+            // Converging f64 refinement: κ=1e3, loose tolerance.
+            (
+                0.35,
+                prec(192, 2, DType::F64, 1e-10, 1e3, SloClass::Interactive, Some(80_000_000), 1),
+            ),
+            // Converging complex128 refinement.
+            (0.20, prec(128, 1, DType::C128, 1e-8, 1e2, SloClass::Standard, None, 2)),
+            // Stall bait: tolerance below the f64 floor κ·ε ≈ 2e-12 —
+            // refinement plateaus, the cap/stall check fires, and the
+            // request recovers through the full-precision fallback.
+            (0.15, prec(96, 1, DType::F64, 1e-15, 1e4, SloClass::Standard, None, 2)),
+            // Router decline: κ=1e9 blows the f32 headroom, so the
+            // planner keeps this Full regardless of the predicted win.
+            (0.15, prec(256, 1, DType::F64, 1e-6, 1e9, SloClass::Standard, None, 3)),
+            // Plain full-precision background work rides along.
+            (0.15, RequestSpec {
+                route: Route::Dist(DistRoutine::Potrf),
+                n: 384,
+                nrhs: 0,
+                dtype: DType::F32,
+                class: SloClass::Batch,
+                deadline_budget_ns: None,
+                tenant: 3,
+                tol: None,
+                cond: 1.0,
+                seed: 0,
+            }),
         ])
     }
 }
@@ -454,9 +544,19 @@ pub fn submit_spec(svc: &SolveService, spec: &RequestSpec, now_ns: u64) -> Resul
     }
 }
 
-fn submit_typed<S: Scalar>(svc: &SolveService, spec: &RequestSpec, now_ns: u64) -> Result<Pending> {
+fn submit_typed<S: Scalar + MixedCapable>(
+    svc: &SolveService,
+    spec: &RequestSpec,
+    now_ns: u64,
+) -> Result<Pending> {
     let slo = spec.slo_at(now_ns);
-    let a = Matrix::<S>::spd_random(spec.n, spec.seed);
+    // Condition-carrying templates draw an input with that spectrum so
+    // the refinement behavior matches what the router was told.
+    let a = if spec.cond > 1.0 {
+        Matrix::<S>::spd_random_cond(spec.n, spec.seed, spec.cond)
+    } else {
+        Matrix::<S>::spd_random(spec.n, spec.seed)
+    };
     let rhs_seed = spec.seed ^ 0x9E37_79B9_7F4A_7C15;
     match spec.route {
         Route::Small(r) => {
@@ -754,6 +854,122 @@ mod tests {
     }
 
     #[test]
+    fn mixed_mix_spans_tolerance_regimes_and_declines_high_kappa() {
+        use crate::coordinator::{plan_dist_prec, NumericPolicy};
+        use crate::costmodel::GpuCostModel;
+        use crate::solver::Precision;
+        let pop = Population::mixed_mix();
+        let mut tols = 0usize;
+        let mut conds = std::collections::HashSet::new();
+        for &(_, spec) in pop.entries() {
+            if spec.tol.is_some() {
+                tols += 1;
+                assert!(spec.cond >= 1.0, "tolerance templates declare a κ budget");
+            }
+            conds.insert(spec.cond.to_bits());
+        }
+        assert!(tols >= 3, "most templates carry a tolerance");
+        assert!(conds.len() >= 3, "condition budgets must spread across regimes");
+        // The κ=1e9 budget is beyond the f32 headroom: even at a scale
+        // where the mixed tier wins on cost, the router keeps it Full.
+        let node = SimNode::new_uniform(8, 1 << 30);
+        let model = GpuCostModel::h200();
+        let well = plan_dist_prec(
+            "potrs",
+            16384,
+            1,
+            1024,
+            8,
+            DType::F64,
+            &model,
+            node.topology(),
+            None,
+            Some(NumericPolicy::new(1e-6, 1e3)),
+        )
+        .unwrap();
+        assert_eq!(well.precision, Precision::Mixed(DType::F32));
+        let ill = plan_dist_prec(
+            "potrs",
+            16384,
+            1,
+            1024,
+            8,
+            DType::F64,
+            &model,
+            node.topology(),
+            None,
+            Some(NumericPolicy::new(1e-6, 1e9)),
+        )
+        .unwrap();
+        assert_eq!(ill.precision, Precision::Full);
+    }
+
+    #[test]
+    fn mixed_mix_exercises_convergence_cap_and_fallback() {
+        use crate::costmodel::GpuCostModel;
+        use crate::layout::BlockCyclic1D;
+        use crate::solver::{
+            solve_dist_prec, MixedRun, PipelineConfig, Precision, DEFAULT_REFINE_CAP,
+        };
+        use crate::tile::LayoutKind;
+        let node = SimNode::new_uniform(4, 1 << 26);
+        let model = GpuCostModel::h200();
+        let pop = Population::mixed_mix();
+        let mut converged = 0usize;
+        let mut fell_back = 0usize;
+        for &(_, spec) in pop.entries() {
+            let Some(tol) = spec.tol else { continue };
+            if spec.dtype != DType::F64 {
+                continue;
+            }
+            // The κ=1e9 template is the router-decline regime; the
+            // solver would refuse it the same way, so skip it here.
+            if spec.cond * f32::EPSILON as f64 >= 0.25 {
+                continue;
+            }
+            let a = Matrix::<f64>::spd_random_cond(spec.n, 5, spec.cond);
+            let b = Matrix::<f64>::random(spec.n, spec.nrhs.max(1), 6);
+            let kind = LayoutKind::BlockCyclic(BlockCyclic1D::new(spec.n, 16, 4).unwrap());
+            let run = MixedRun::new(&node, &model, PipelineConfig::barrier(), kind);
+            let (x, out) = solve_dist_prec::<f64>(
+                &run,
+                Precision::Mixed(DType::F32),
+                &a,
+                &b,
+                crate::solver::RefineOptions { tol, max_iters: DEFAULT_REFINE_CAP },
+            )
+            .expect("a routed-Mixed request must always yield a result");
+            assert_eq!(x.rows(), spec.n);
+            assert!(x.as_slice().iter().all(|v| v.is_finite()));
+            if out.fell_back {
+                fell_back += 1;
+            } else {
+                assert!(out.mixed);
+                assert!(
+                    out.report.residual <= tol,
+                    "refined residual {} exceeds tol {tol}",
+                    out.report.residual
+                );
+                converged += 1;
+            }
+        }
+        assert!(converged >= 1, "a converging template must meet its tolerance in mixed");
+        assert!(fell_back >= 1, "the stall-bait template must trip the cap and fall back");
+    }
+
+    #[test]
+    fn mixed_mix_drives_the_service_with_zero_lost_requests() {
+        let node = SimNode::new_uniform(2, 1 << 30);
+        let svc = SolveService::new(node.clone(), 2);
+        let gen = OpenLoop::new(poisson(50_000.0), Population::mixed_mix(), 53);
+        let pending = gen.drive(&node, &svc, 8).unwrap();
+        for p in pending {
+            p.wait().expect("mixed-mix request failed");
+        }
+        svc.drain();
+    }
+
+    #[test]
     fn sampled_seeds_differ_per_request() {
         let pop = Population::gp_vmc_mix();
         let mut rng = Rng::new(29);
@@ -857,6 +1073,8 @@ mod tests {
             class: SloClass::Interactive,
             deadline_budget_ns: Some(1_000),
             tenant: 1,
+            tol: None,
+            cond: 1.0,
             seed: 0,
         };
         let slo = spec.slo_at(5_000);

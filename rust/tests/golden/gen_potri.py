@@ -1,0 +1,246 @@
+#!/usr/bin/env python3
+"""Offline generator for `potri_timelines.txt`.
+
+This container has no Rust toolchain, so the golden snapshot of the
+distributed inverse's schedule is produced by an exact integer-ns
+replication of the simulator's arithmetic: the same H200 cost-model
+constants, the same `SimClock`/`Stream` u64-ns state transitions
+(`round(seconds * 1e9)` half-away-from-zero), and the same charge
+sequence as `solver::potri::potri_dist` (the 1D columnar path) under
+both the barrier and pipelined schedules. The factorization is excluded
+— the test factors under a barrier context and resets the accounting,
+so the snapshot isolates potri's two phases: the trtri column pipelines
+(phase 1) and the lauum panel-broadcast rounds (phase 2), plus the
+final local write-back of the inverse.
+
+Timing depends only on shapes and model constants — never on matrix
+values — so no numerics are replicated here. The charge sequence per
+(t, j) of phase 1 is: trsm panel charge on tile j's owner, a p2p of the
+solved block to tile t's owner, the tail GEMM on j's owner, and a p2p
+tail hand-off to tile j+1's owner. Phase 2 per round ti: the packed
+panel rides the owner's copy stream to every other device (fencing
+their compute streams), then each tile column's owner runs its GEMM_HN
+contraction. The write-back is a same-device copy at local (HBM)
+bandwidth.
+
+Regenerate (with a Rust toolchain) via
+`UPDATE_GOLDEN=1 cargo test --test golden_timeline`, or (without one)
+`python3 gen_potri.py > potri_timelines.txt`.
+"""
+import math
+
+# ---- GpuCostModel::h200 (f64 dtype) / NodeTopology uniform node ----
+F64_FLOPS = 30e12
+PANEL_EFF = 0.25
+LAUNCH = 8e-6
+NVLINK_BW = 450e9
+LOCAL_BW = 4.8e12
+COPY_LAT = 5e-6
+ESIZE = 8  # f64
+
+
+def rnd(x):
+    """Rust `f64::round` (half away from zero) for non-negative x."""
+    return int(math.floor(x + 0.5))
+
+
+def flops_trsm(m, n, tri):
+    return int(float(m) * float(n) * float(tri))
+
+
+def flops_gemm(m, n, k):
+    return int(2.0 * float(m) * float(n) * float(k))
+
+
+def panel_time(fl):
+    return LAUNCH + float(fl) / (F64_FLOPS * PANEL_EFF)
+
+
+def gemm_time(m, n, k):
+    d = float(min(m, n, k))
+    util = d / (d + 192.0)
+    return LAUNCH + float(flops_gemm(m, n, k)) / (F64_FLOPS * util)
+
+
+def copy_time(bytes_, local=False):
+    bw = LOCAL_BW if local else NVLINK_BW
+    return COPY_LAT + float(bytes_) / bw
+
+
+class Stream:
+    """`device::Stream`: u64-ns horizon, issue_after = max+add."""
+
+    def __init__(self):
+        self.h = 0
+
+    def horizon(self):
+        return self.h * 1e-9
+
+    def issue(self, secs):
+        self.h += rnd(secs * 1e9)
+        return self.h * 1e-9
+
+    def issue_after(self, not_before, secs):
+        nb = rnd(not_before * 1e9)
+        dur = rnd(secs * 1e9)
+        self.h = max(self.h, nb) + dur
+        return self.h * 1e-9
+
+    def wait_event(self, sec):
+        self.h = max(self.h, rnd(sec * 1e9))
+
+
+class Clock:
+    """`device::SimClock`: u64-ns accumulator."""
+
+    def __init__(self):
+        self.ns = 0
+
+    def now(self):
+        return self.ns * 1e-9
+
+    def advance(self, secs):
+        self.ns += rnd(secs * 1e9)
+
+    def sync_to(self, sec):
+        self.ns = max(self.ns, rnd(sec * 1e9))
+
+
+def tile_len(t, n, tile):
+    return min(tile, n - t * tile)
+
+
+def run_potri(ndev, tile, n, pipelined):
+    """Replicates `potri_dist`'s 1D charges, post-factor isolated.
+
+    Returns (makespan_seconds, snapshot or None) where snapshot is a
+    list of (dev, compute_h, panel_h, copy_h, busy_s).
+    """
+    nt = (n + tile - 1) // tile
+    owner = lambda t: t % ndev
+    if pipelined:
+        compute = [Stream() for _ in range(ndev)]
+        copyst = [Stream() for _ in range(ndev)]
+        busy = [0] * ndev
+    else:
+        clk = [Clock() for _ in range(ndev)]
+
+    def p2p(src, dst, bytes_):
+        """`Ctx::charge_p2p`: sender copy stream gated on its compute
+        horizon, receiver compute fenced (barrier: clock advance+sync)."""
+        if src == dst or bytes_ == 0:
+            return
+        t = copy_time(bytes_)
+        if pipelined:
+            done = copyst[src].issue_after(compute[src].horizon(), t)
+            compute[dst].wait_event(done)
+            busy[src] += rnd(t * 1e9)
+        else:
+            clk[src].advance(t)
+            clk[dst].sync_to(clk[src].now())
+
+    def kernel(dev, secs):
+        """`Ctx::charge_device_time`: compute stream (or the clock)."""
+        if pipelined:
+            compute[dev].issue(secs)
+            busy[dev] += rnd(secs * 1e9)
+        else:
+            clk[dev].advance(secs)
+
+    def panel_copy(src, dst, bytes_):
+        """`Ctx::panel_copy` gated on `device_ready(src)` (the sender's
+        compute horizon); barrier is `SimNode::peer_copy`."""
+        t = copy_time(bytes_, local=(src == dst))
+        if pipelined:
+            done = copyst[src].issue_after(compute[src].horizon(), t)
+            busy[src] += rnd(t * 1e9)
+            compute[dst].wait_event(done)
+        else:
+            if src == dst:
+                clk[src].advance(t)
+            else:
+                clk[src].advance(t)
+                clk[dst].sync_to(clk[src].now())
+
+    # ---- Phase 1: X = L^-1, one pipeline per column tile.
+    for t in range(nt):
+        tk = tile_len(t, n, tile)
+        for j in range(t, nt):
+            tj = tile_len(j, n, tile)
+            j1 = j * tile + tj
+            # trsm of the diagonal block on j's owner.
+            kernel(owner(j), panel_time(flops_trsm(tj, tk, tj)))
+            # Solved block ships to the column's owner.
+            p2p(owner(j), owner(t), tj * tk * ESIZE)
+            below = n - j1
+            if below > 0:
+                # Tail update, then hand the running tail downstream.
+                kernel(owner(j), gemm_time(below, tk, tj))
+                p2p(owner(j), owner(j + 1), below * tk * ESIZE)
+
+    # ---- Phase 2: A^-1 = X^H * X, panel-broadcast rounds.
+    for ti in range(nt):
+        tki = tile_len(ti, n, tile)
+        pi_rows = n - ti * tile
+        panel_bytes = pi_rows * tki * ESIZE
+        for d in range(ndev):
+            if d == owner(ti):
+                continue
+            panel_copy(owner(ti), d, panel_bytes)
+        for tj in range(nt):
+            tkj = tile_len(tj, n, tile)
+            kmax = max(ti * tile, tj * tile)
+            kernel(owner(tj), gemm_time(tki, tkj, n - kmax))
+
+    # ---- Write the inverse back into `a` (local device copies).
+    for d in range(ndev):
+        lc = sum(tile_len(t, n, tile) for t in range(nt) if owner(t) == d)
+        if lc == 0:
+            continue
+        panel_copy(d, d, n * lc * ESIZE)
+
+    if pipelined:
+        makespan = 0.0
+        snap = []
+        for d in range(ndev):
+            h = max(compute[d].h, copyst[d].h) * 1e-9
+            makespan = max(makespan, h)
+            # The panel (priority) stream is never used by potri.
+            snap.append((d, compute[d].horizon(), 0.0,
+                         copyst[d].horizon(), busy[d] * 1e-9))
+        return makespan, snap
+    return max(c.now() for c in clk), None
+
+
+GRID = [(4, 4, 32), (4, 8, 64), (8, 8, 128)]
+
+
+def render():
+    out = []
+    out.append("# golden potri timelines (µs) — regenerate with UPDATE_GOLDEN=1")
+    for (ndev, tile, n) in GRID:
+        tb, _ = run_potri(ndev, tile, n, False)
+        tl, snap = run_potri(ndev, tile, n, True)
+        out.append(f"config ndev={ndev} tile={tile} n={n}")
+        out.append(f"  barrier_makespan_us   {tb * 1e6:.3f}")
+        out.append(f"  lookahead_makespan_us {tl * 1e6:.3f}")
+        for (d, c, pa, cp, b) in snap:
+            out.append(
+                f"  dev {d} compute {c * 1e6:.3f} panel {pa * 1e6:.3f} "
+                f"copy {cp * 1e6:.3f} busy {b * 1e6:.3f}"
+            )
+    return "\n".join(out) + "\n"
+
+
+if __name__ == "__main__":
+    import sys
+    text = render()
+    sys.stdout.write(text)
+    for (ndev, tile, n) in GRID:
+        tb, _ = run_potri(ndev, tile, n, False)
+        tl, _ = run_potri(ndev, tile, n, True)
+        assert tl < tb, f"pipelined must strictly beat barrier at {(ndev, tile, n)}"
+        sys.stderr.write(
+            f"(ndev={ndev} tile={tile} n={n}) barrier {tb*1e6:.3f}us "
+            f"pipelined {tl*1e6:.3f}us  win {(1 - tl/tb)*100:.1f}%\n"
+        )

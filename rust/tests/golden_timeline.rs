@@ -27,7 +27,9 @@ use jaxmg::costmodel::GpuCostModel;
 use jaxmg::device::SimNode;
 use jaxmg::layout::{BlockCyclic1D, BlockCyclic2D};
 use jaxmg::linalg::Matrix;
-use jaxmg::solver::{potrf_dist, potrs_dist, Ctx, DeviceTimeline, PipelineConfig, SolverBackend};
+use jaxmg::solver::{
+    potrf_dist, potri_dist, potrs_dist, Ctx, DeviceTimeline, PipelineConfig, SolverBackend,
+};
 use jaxmg::tile::{DistMatrix, Layout1D, LayoutKind};
 use std::fmt::Write as _;
 
@@ -296,4 +298,87 @@ fn render_potrf2d_snapshot() -> String {
 #[test]
 fn potrf2d_timelines_match_golden_snapshot() {
     check_golden("potrf2d_timelines.txt", render_potrf2d_snapshot());
+}
+
+// ---------------------------------------------------------------------------
+// potri: the two-phase inverse schedule, isolated from the factorization
+// ---------------------------------------------------------------------------
+
+/// Factor under a barrier context, reset the accounting, then run
+/// `potri` alone under `cfg` — the snapshot captures the trtri column
+/// pipelines (phase 1), the lauum panel-broadcast rounds (phase 2) and
+/// the local write-back, not the factorization. The committed snapshot
+/// was generated offline by `tests/golden/gen_potri.py` (an exact
+/// integer-ns replication of this schedule); this test verifies the
+/// live scheduler against it.
+fn run_potri(
+    ndev: usize,
+    tile: usize,
+    n: usize,
+    cfg: PipelineConfig,
+) -> (Matrix<f64>, f64, Option<Vec<DeviceTimeline>>) {
+    let node = SimNode::new_uniform(ndev, 1 << 27);
+    let model = GpuCostModel::h200();
+    let backend = SolverBackend::<f64>::Native;
+    let a = Matrix::<f64>::spd_random(n, 0xD15C0 + n as u64);
+    let lay = Layout1D::BlockCyclic(BlockCyclic1D::new(n, tile, ndev).unwrap());
+    let mut dm = DistMatrix::scatter(&node, &a, lay).unwrap();
+    {
+        let fctx = Ctx::new(&node, &model, &backend);
+        potrf_dist(&fctx, &mut dm).unwrap();
+    }
+    node.reset_accounting();
+    let ctx = Ctx::with_pipeline(&node, &model, &backend, cfg);
+    potri_dist(&ctx, &mut dm).unwrap();
+    let snap = ctx.timeline_snapshot();
+    let makespan = node.sim_time();
+    (dm.gather().unwrap(), makespan, snap)
+}
+
+#[test]
+fn potri_pipelined_beats_barrier_on_every_grid_config() {
+    for &(ndev, tile, n) in GRID {
+        let (inv_barrier, t_barrier, _) = run_potri(ndev, tile, n, PipelineConfig::barrier());
+        let (inv_look, t_look, _) = run_potri(ndev, tile, n, PipelineConfig::lookahead(2));
+        assert_eq!(
+            inv_barrier.as_slice(),
+            inv_look.as_slice(),
+            "schedule changed potri numerics (ndev={ndev} tile={tile} n={n})"
+        );
+        assert!(
+            t_look < t_barrier,
+            "potri pipelined {t_look} !< barrier {t_barrier} (ndev={ndev} tile={tile} n={n})"
+        );
+    }
+}
+
+fn render_potri_snapshot() -> String {
+    let mut out = String::new();
+    out.push_str("# golden potri timelines (µs) — regenerate with UPDATE_GOLDEN=1\n");
+    for &(ndev, tile, n) in GRID {
+        let (_, t_barrier, _) = run_potri(ndev, tile, n, PipelineConfig::barrier());
+        let (_, t_look, snap) = run_potri(ndev, tile, n, PipelineConfig::lookahead(2));
+        let snap = snap.expect("pipelined run has a timeline");
+        writeln!(out, "config ndev={ndev} tile={tile} n={n}").unwrap();
+        writeln!(out, "  barrier_makespan_us   {:.3}", t_barrier * 1e6).unwrap();
+        writeln!(out, "  lookahead_makespan_us {:.3}", t_look * 1e6).unwrap();
+        for d in &snap {
+            writeln!(
+                out,
+                "  dev {} compute {:.3} panel {:.3} copy {:.3} busy {:.3}",
+                d.device,
+                d.compute_horizon * 1e6,
+                d.panel_horizon * 1e6,
+                d.copy_horizon * 1e6,
+                d.busy * 1e6
+            )
+            .unwrap();
+        }
+    }
+    out
+}
+
+#[test]
+fn potri_timelines_match_golden_snapshot() {
+    check_golden("potri_timelines.txt", render_potri_snapshot());
 }

@@ -1,0 +1,318 @@
+//! Acceptance tests for the mixed-precision tier.
+//!
+//! Pins the issue's acceptance criteria end to end:
+//! * refined residuals meet the requested tolerance for both
+//!   f64→f32 and c128→c64 across the 1D, 2×2-grid and two-tier
+//!   fabric layouts;
+//! * mixed results are bitwise deterministic across schedules
+//!   (barrier vs lookahead) and across fabric vs flat nodes;
+//! * a stalled refinement falls back typed to the full-precision
+//!   path and still returns a correct answer — through the raw
+//!   solver entry point and through both serving fronts, with zero
+//!   lost requests;
+//! * the cost-model router picks Mixed when the replay says it wins
+//!   and the serving fronts then execute genuinely mixed (metrics
+//!   move, refinement histogram fills);
+//! * the factor cache keys mixed factors under the *working* dtype —
+//!   repeat solves hit, and a fallback never seeds the cache.
+//!
+//! The router's crossover under the real H200 constants sits far
+//! above test-sized systems (launch overhead dominates small n), so
+//! the serving-front tests run a slowed clone of the cost model —
+//! flop rates cut by 1e5 with the f64:f32 ratio preserved — which
+//! moves the crossover below n ≈ 100 without touching numerics.
+
+use jaxmg::coordinator::{DistRoutine, Slo, SmallConfig, SolveService};
+use jaxmg::costmodel::GpuCostModel;
+use jaxmg::device::SimNode;
+use jaxmg::fabric::Fabric;
+use jaxmg::layout::{BlockCyclic1D, BlockCyclic2D};
+use jaxmg::linalg::Matrix;
+use jaxmg::scalar::{c64, DType, Scalar};
+use jaxmg::serve::{MpmdConfig, MpmdService};
+use jaxmg::solver::{
+    solve_dist_prec, MixedRun, PipelineConfig, Precision, RefineOptions, DEFAULT_REFINE_CAP,
+};
+use jaxmg::tile::LayoutKind;
+
+/// ‖b − A·x‖_F / ‖b‖_F — the same residual the refinement loop
+/// reports, recomputed independently from the returned iterate.
+fn rel_residual<S: Scalar>(a: &Matrix<S>, x: &Matrix<S>, b: &Matrix<S>) -> f64 {
+    b.sub(&a.matmul(x)).norm_fro() / b.norm_fro()
+}
+
+/// H200 with the flop rates slowed 1e5× (ratio preserved): compute
+/// dominates launch overhead at test sizes, so the router's replay
+/// sees the same Mixed-wins shape it sees at n ≥ 16384 for real.
+fn slow_model() -> GpuCostModel {
+    let mut m = GpuCostModel::h200();
+    m.f64_flops /= 1e5;
+    m.f32_flops /= 1e5;
+    m
+}
+
+fn lay1d(n: usize, tile: usize, ndev: usize) -> LayoutKind {
+    LayoutKind::BlockCyclic(BlockCyclic1D::new(n, tile, ndev).unwrap())
+}
+
+fn grid2d(n: usize, tile: usize, p: usize, q: usize) -> LayoutKind {
+    LayoutKind::Grid(BlockCyclic2D::new(n, n, tile, tile, p, q).unwrap())
+}
+
+/// Forced-Mixed solve on `node`/`layout`; asserts convergence at
+/// `tol` and returns the verified solution.
+fn converge_on<S: jaxmg::solver::MixedCapable>(
+    node: &SimNode,
+    layout: LayoutKind,
+    working: DType,
+    seed: u64,
+    cond: f64,
+    tol: f64,
+) -> Matrix<S> {
+    let model = GpuCostModel::h200();
+    let n = 67; // ragged: 67 % 4 != 0 exercises edge tiles
+    let a = Matrix::<S>::spd_random_cond(n, seed, cond);
+    let b = Matrix::<S>::random(n, 2, seed + 100);
+    let run = MixedRun::new(node, &model, PipelineConfig::barrier(), layout);
+    let opts = RefineOptions { tol, max_iters: DEFAULT_REFINE_CAP };
+    let (x, out) =
+        solve_dist_prec::<S>(&run, Precision::Mixed(working), &a, &b, opts).unwrap();
+    assert!(out.mixed, "refinement should converge at cond {cond}");
+    assert!(!out.fell_back);
+    assert!(
+        out.report.residual <= tol,
+        "reported residual {} > tol {tol}",
+        out.report.residual
+    );
+    assert!(out.report.iters >= 1, "a working-dtype factor cannot meet {tol} unrefined");
+    assert!(out.report.bytes_saved > 0);
+    let res = rel_residual(&a, &x, &b);
+    assert!(res <= tol, "independent residual {res} > tol {tol} ({:?})", S::DTYPE);
+    x
+}
+
+#[test]
+fn mixed_residual_meets_tolerance_f64_all_layouts() {
+    let node = SimNode::new_uniform(4, 1 << 26);
+    converge_on::<f64>(&node, lay1d(67, 4, 4), DType::F32, 0xA1, 1e3, 1e-10);
+    converge_on::<f64>(&node, grid2d(67, 4, 2, 2), DType::F32, 0xA2, 1e3, 1e-10);
+    let fab = Fabric::h200(2); // 2 islands × 8 devices
+    converge_on::<f64>(fab.node(), lay1d(67, 4, 16), DType::F32, 0xA3, 1e3, 1e-10);
+    converge_on::<f64>(fab.node(), grid2d(67, 4, 2, 8), DType::F32, 0xA4, 1e3, 1e-10);
+    assert!(node.metrics().snapshot().mixed_solves >= 2);
+}
+
+#[test]
+fn mixed_residual_meets_tolerance_c128_all_layouts() {
+    let node = SimNode::new_uniform(4, 1 << 26);
+    converge_on::<c64>(&node, lay1d(67, 4, 4), DType::C64, 0xB1, 1e2, 1e-9);
+    converge_on::<c64>(&node, grid2d(67, 4, 2, 2), DType::C64, 0xB2, 1e2, 1e-9);
+    let fab = Fabric::h200(2);
+    converge_on::<c64>(fab.node(), lay1d(67, 4, 16), DType::C64, 0xB3, 1e2, 1e-9);
+    converge_on::<c64>(fab.node(), grid2d(67, 4, 2, 8), DType::C64, 0xB4, 1e2, 1e-9);
+}
+
+/// The refinement loop is host-side and schedule-independent: the
+/// same request solved under barrier and lookahead scheduling, and on
+/// a fabric vs a flat node, is bitwise one answer.
+#[test]
+fn mixed_solution_is_bitwise_identical_across_schedules_and_fabric() {
+    let n = 67;
+    let a = Matrix::<f64>::spd_random_cond(n, 0xC1, 1e3);
+    let b = Matrix::<f64>::random(n, 2, 0xC2);
+    let model = GpuCostModel::h200();
+    let opts = RefineOptions { tol: 1e-10, max_iters: DEFAULT_REFINE_CAP };
+    let solve = |node: &SimNode, ndev: usize, cfg: PipelineConfig| -> Vec<f64> {
+        let run = MixedRun::new(node, &model, cfg, lay1d(n, 4, ndev));
+        let (x, out) =
+            solve_dist_prec::<f64>(&run, Precision::Mixed(DType::F32), &a, &b, opts).unwrap();
+        assert!(out.mixed);
+        x.as_slice().to_vec()
+    };
+    let flat = SimNode::new_uniform(16, 1 << 26);
+    let reference = solve(&flat, 16, PipelineConfig::barrier());
+    assert_eq!(reference, solve(&flat, 16, PipelineConfig::lookahead(2)));
+    let fab = Fabric::h200(2);
+    assert_eq!(reference, solve(fab.node(), 16, PipelineConfig::barrier()));
+    assert_eq!(reference, solve(fab.node(), 16, PipelineConfig::lookahead(2)));
+}
+
+/// An unreachable tolerance (below the f64 refinement floor) stalls,
+/// and the typed fallback reruns the request at full precision on the
+/// same run — the caller still gets the right answer, and the metrics
+/// record the fallback rather than a mixed solve.
+#[test]
+fn mixed_cap_fallback_returns_full_precision_result() {
+    let node = SimNode::new_uniform(4, 1 << 26);
+    let model = GpuCostModel::h200();
+    let n = 67;
+    let a = Matrix::<f64>::spd_random_cond(n, 0xD1, 1e4);
+    let b = Matrix::<f64>::random(n, 2, 0xD2);
+    let run = MixedRun::new(&node, &model, PipelineConfig::barrier(), lay1d(n, 4, 4));
+    let opts = RefineOptions { tol: 1e-15, max_iters: DEFAULT_REFINE_CAP };
+    let (x, out) =
+        solve_dist_prec::<f64>(&run, Precision::Mixed(DType::F32), &a, &b, opts).unwrap();
+    assert!(out.fell_back, "1e-15 sits below the f64 refinement floor");
+    assert!(!out.mixed);
+    // The fallback is the plain full-precision path: bitwise the
+    // answer Precision::Full computes for the same request.
+    let (x_full, out_full) =
+        solve_dist_prec::<f64>(&run, Precision::Full, &a, &b, opts).unwrap();
+    assert!(!out_full.mixed && !out_full.fell_back);
+    assert_eq!(x.as_slice(), x_full.as_slice());
+    assert!(rel_residual(&a, &x, &b) <= 1e-12);
+    let m = node.metrics().snapshot();
+    assert!(m.mixed_fallbacks >= 1);
+    assert_eq!(m.mixed_solves, 0);
+}
+
+// ---------------------------------------------------------------
+// Serving fronts: the router picks Mixed off the slowed cost model
+// and the execution tier actually runs mixed (or falls back typed).
+// ---------------------------------------------------------------
+
+const TILE: usize = 16;
+const N: usize = 160;
+
+fn spd_case(seed: u64, cond: f64) -> (Matrix<f64>, Matrix<f64>) {
+    (Matrix::<f64>::spd_random_cond(N, seed, cond), Matrix::<f64>::random(N, 2, seed + 100))
+}
+
+#[test]
+fn spmd_front_routes_mixed_and_meets_tolerance() {
+    let node = SimNode::new_uniform(4, 1 << 28);
+    let mut cfg = SmallConfig::with_tile(TILE);
+    cfg.model = slow_model();
+    let svc = SolveService::with_small_config(node.clone(), 2, cfg);
+    let (a, b) = spd_case(0xE1, 1e3);
+    let slo = Slo::standard().with_tolerance(1e-8, 1e3);
+    let h = svc
+        .submit_dist_slo(DistRoutine::Potrs, a.clone(), Some(b.clone()), slo)
+        .unwrap();
+    let (x, _stats) = h.wait();
+    svc.drain();
+    assert!(rel_residual(&a, &x, &b) <= 1e-8);
+    let m = node.metrics().snapshot();
+    assert!(m.mixed_solves >= 1, "the slowed model must route this request Mixed");
+    assert_eq!(m.mixed_fallbacks, 0);
+    assert!(m.refine_iters.iter().sum::<u64>() >= 1);
+    assert!(m.mixed_bytes_saved > 0);
+}
+
+#[test]
+fn spmd_front_without_numeric_policy_stays_full_precision() {
+    let node = SimNode::new_uniform(4, 1 << 28);
+    let mut cfg = SmallConfig::with_tile(TILE);
+    cfg.model = slow_model();
+    let svc = SolveService::with_small_config(node.clone(), 2, cfg);
+    let (a, b) = spd_case(0xE2, 1e3);
+    let h = svc.submit_dist(DistRoutine::Potrs, a.clone(), Some(b.clone())).unwrap();
+    let (x, _) = h.wait();
+    svc.drain();
+    assert!(rel_residual(&a, &x, &b) <= 1e-12);
+    assert_eq!(node.metrics().snapshot().mixed_solves, 0, "no tolerance, no mixed tier");
+}
+
+#[test]
+fn spmd_front_cap_fallback_loses_no_requests() {
+    let node = SimNode::new_uniform(4, 1 << 28);
+    let mut cfg = SmallConfig::with_tile(TILE);
+    cfg.model = slow_model();
+    let svc = SolveService::with_small_config(node.clone(), 2, cfg);
+    // Stall bait: routed Mixed (κ·ε_f32 ≈ 1.2e-3 predicts ~5 iters)
+    // but 1e-15 is unreachable, so every request falls back typed.
+    let slo = Slo::standard().with_tolerance(1e-15, 1e4);
+    let mut pending = Vec::new();
+    let mut cases = Vec::new();
+    for i in 0..4u64 {
+        let (a, b) = spd_case(0xF0 + i, 1e4);
+        pending.push(
+            svc.submit_dist_slo(DistRoutine::Potrs, a.clone(), Some(b.clone()), slo)
+                .unwrap(),
+        );
+        cases.push((a, b));
+    }
+    for (h, (a, b)) in pending.into_iter().zip(&cases) {
+        let (x, _) = h.wait(); // panics on a lost request
+        assert!(rel_residual(a, &x, b) <= 1e-12, "fallback must serve full precision");
+    }
+    svc.drain();
+    let m = node.metrics().snapshot();
+    assert!(m.mixed_fallbacks >= 4);
+    assert_eq!(m.mixed_solves, 0);
+}
+
+#[test]
+fn mpmd_front_routes_mixed_and_falls_back_typed() {
+    let node = SimNode::new_uniform(4, 1 << 28);
+    let mut cfg = MpmdConfig::with_tile(TILE);
+    cfg.model = slow_model();
+    let svc = MpmdService::with_config(node.clone(), cfg);
+
+    // Converging request: genuinely mixed through the workers.
+    let (a, b) = spd_case(0x101, 1e3);
+    let slo = Slo::standard().with_tolerance(1e-8, 1e3);
+    let h = svc.submit_potrs_slo(a.clone(), b.clone(), slo).unwrap();
+    let (x, _) = h.wait();
+    assert!(rel_residual(&a, &x, &b) <= 1e-8);
+    assert!(node.metrics().snapshot().mixed_solves >= 1);
+
+    // Stall bait: typed fallback, request still served.
+    let (a2, b2) = spd_case(0x102, 1e4);
+    let slo2 = Slo::standard().with_tolerance(1e-15, 1e4);
+    let h2 = svc.submit_potrs_slo(a2.clone(), b2.clone(), slo2).unwrap();
+    let (x2, _) = h2.wait();
+    assert!(rel_residual(&a2, &x2, &b2) <= 1e-12);
+    svc.drain();
+    let m = node.metrics().snapshot();
+    assert!(m.mixed_fallbacks >= 1);
+    assert_eq!(svc.reserved(), vec![0; 4], "reservations must drain to zero");
+}
+
+#[test]
+fn mpmd_factor_cache_keys_mixed_under_working_dtype() {
+    let node = SimNode::new_uniform(4, 1 << 28);
+    let mut cfg = MpmdConfig::with_tile(TILE);
+    cfg.model = slow_model();
+    cfg.factor_cache = true;
+    let svc = MpmdService::with_config(node.clone(), cfg);
+    let (a, b) = spd_case(0x201, 1e3);
+    let slo = Slo::standard().with_tolerance(1e-8, 1e3);
+
+    let (x1, _) = svc.submit_potrs_slo(a.clone(), b.clone(), slo).unwrap().wait();
+    let after_first = node.metrics().snapshot();
+    assert_eq!(after_first.cache_hits, 0);
+    assert!(after_first.cache_misses >= 1);
+
+    // Same A, same grid: the resident working-dtype factor is reused
+    // and refinement still runs against the f64 operands.
+    let (x2, _) = svc.submit_potrs_slo(a.clone(), b.clone(), slo).unwrap().wait();
+    svc.drain();
+    let m = node.metrics().snapshot();
+    assert!(m.cache_hits >= 1, "repeat mixed solve must hit the working-dtype key");
+    assert!(m.mixed_solves >= 2);
+    assert!(rel_residual(&a, &x1, &b) <= 1e-8);
+    assert!(rel_residual(&a, &x2, &b) <= 1e-8);
+}
+
+#[test]
+fn mpmd_fallback_never_seeds_the_factor_cache() {
+    let node = SimNode::new_uniform(4, 1 << 28);
+    let mut cfg = MpmdConfig::with_tile(TILE);
+    cfg.model = slow_model();
+    cfg.factor_cache = true;
+    let svc = MpmdService::with_config(node.clone(), cfg);
+    let (a, b) = spd_case(0x301, 1e4);
+    let slo = Slo::standard().with_tolerance(1e-15, 1e4); // always stalls
+    for _ in 0..2 {
+        let (x, _) = svc.submit_potrs_slo(a.clone(), b.clone(), slo).unwrap().wait();
+        assert!(rel_residual(&a, &x, &b) <= 1e-12);
+    }
+    svc.drain();
+    let m = node.metrics().snapshot();
+    assert!(m.mixed_fallbacks >= 2);
+    assert_eq!(
+        m.cache_hits, 0,
+        "a fallen-back mixed attempt must not leave a working-dtype factor behind"
+    );
+}
