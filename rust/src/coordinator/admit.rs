@@ -213,7 +213,9 @@ pub fn plan_dist_prec(
 /// | no [`NumericPolicy`]         | caller never stated a tolerance   |
 /// | routine not potrf/potrs      | no refinement path (potri, syevd) |
 /// | dtype has no working dtype   | f32/c64 are already narrow        |
-/// | `est_refine_iters` → `None`  | κ·ε_working too close to 1        |
+/// | `est_refine_iters` → `None`  | κ·ε_working too close to 1, or    |
+/// |                              | tol below the f64 residual floor  |
+/// |                              | κ·ε_f64 (a guaranteed stall)      |
 /// | mixed replay ≥ full replay   | below the crossover, no win       |
 fn route_precision(
     pred: &Predictor,

@@ -1266,14 +1266,14 @@ impl SolveService {
                             let (key, _) = cache_cfg.expect("a hit implies the cache is on");
                             let _guard = PinGuard { inner: inner.clone(), key };
                             let dm = DistMatrix::<S::Working>::from_panels(&node, n, kind, ptrs)?;
-                            let out = S::mixed_refine(&mrun, &dm, &a, b, refine_opts);
+                            let out = S::mixed_refine(&mrun, &dm, &a, b, refine_opts, false);
                             // Give the panels back to the cache un-freed.
                             let _ = dm.into_panels();
                             out.map(|(x, _)| x)
                         } else {
                             match S::mixed_factor(&mrun, &a) {
                                 Ok(l) => {
-                                    let out = S::mixed_refine(&mrun, &l, &a, b, refine_opts);
+                                    let out = S::mixed_refine(&mrun, &l, &a, b, refine_opts, true);
                                     match (&out, cache_cfg) {
                                         (Ok(_), Some((key, re_ns))) => {
                                             inner.insert_factor(key, kind, l.into_panels(), re_ns)

@@ -40,7 +40,18 @@ const MEMO_BEST_GRID: u8 = 0;
 const MEMO_FABRIC_PLAN: u8 = 1;
 const MEMO_RECOMPUTE_NS: u8 = 2;
 
-static PLAN_MEMO: OnceLock<Mutex<HashMap<MemoKey, (usize, usize, usize)>>> = OnceLock::new();
+/// Upper bound on the replay memo: a long-lived service sweeping many
+/// (model, topo, shape) combinations must not grow it without bound.
+/// On overflow the whole table is dropped — misses then refill the
+/// live working set, which is the cheap epoch-style eviction a pure
+/// cache can afford (every entry is recomputable).
+const MEMO_CAP: usize = 1 << 16;
+
+/// Safety margin over the κ·ε_f64 residual floor below which
+/// [`Predictor::est_refine_iters`] refuses to route Mixed.
+const REFINE_FLOOR_SAFETY: f64 = 4.0;
+
+static PLAN_MEMO: OnceLock<Mutex<HashMap<MemoKey, (u64, u64, u64)>>> = OnceLock::new();
 static MEMO_HITS: AtomicU64 = AtomicU64::new(0);
 static MEMO_MISSES: AtomicU64 = AtomicU64::new(0);
 
@@ -75,7 +86,7 @@ fn model_sig(m: &GpuCostModel) -> u64 {
     h
 }
 
-fn memo_lookup(key: &MemoKey) -> Option<(usize, usize, usize)> {
+fn memo_lookup(key: &MemoKey) -> Option<(u64, u64, u64)> {
     let memo = PLAN_MEMO.get_or_init(|| Mutex::new(HashMap::new()));
     let found = memo.lock().unwrap_or_else(|e| e.into_inner()).get(key).copied();
     match found {
@@ -90,9 +101,13 @@ fn memo_lookup(key: &MemoKey) -> Option<(usize, usize, usize)> {
     }
 }
 
-fn memo_store(key: MemoKey, val: (usize, usize, usize)) {
+fn memo_store(key: MemoKey, val: (u64, u64, u64)) {
     let memo = PLAN_MEMO.get_or_init(|| Mutex::new(HashMap::new()));
-    memo.lock().unwrap_or_else(|e| e.into_inner()).insert(key, val);
+    let mut map = memo.lock().unwrap_or_else(|e| e.into_inner());
+    if map.len() >= MEMO_CAP {
+        map.clear();
+    }
+    map.insert(key, val);
 }
 
 /// `(hits, misses)` of the process-wide replay memo — the counters the
@@ -1013,10 +1028,10 @@ impl Predictor {
             q,
         };
         if let Some((ns, _, _)) = memo_lookup(&key) {
-            return ns as u64;
+            return ns;
         }
         let ns = crate::coordinator::secs_to_ns(self.recompute(n, t, p, q));
-        memo_store(key, (ns as usize, 0, 0));
+        memo_store(key, (ns, 0, 0));
         ns
     }
 
@@ -1150,13 +1165,25 @@ impl Predictor {
 
     /// Estimated correction-solve count for a condition-number budget:
     /// each iteration contracts the residual by ≈ κ·ε_working, so
-    /// `κ·ε^(k+1) ≤ tol` gives `k`. Returns `None` when the contraction
-    /// factor is not comfortably below the stall detector's 0.9 bound
-    /// (κ·ε ≥ 0.25) — the planner routes those requests Full.
+    /// `κ·ε^(k+1) ≤ tol` gives `k`. Returns `None` — the planner routes
+    /// those requests Full — when refinement cannot be trusted to reach
+    /// `tol` at all:
+    ///
+    /// * the contraction factor is not comfortably below the stall
+    ///   detector's 0.9 bound (κ·ε_working ≥ 0.25), or
+    /// * `tol` sits below the attainable full-precision residual floor
+    ///   ≈ κ·ε_f64 (residuals are computed in f64, so no amount of
+    ///   iteration pushes under it — the runtime would stall by
+    ///   construction, pay the mixed attempt *and* the full-precision
+    ///   fallback, and the queue would have priced only the cheaper
+    ///   mixed estimate).
     pub fn est_refine_iters(&self, tol: f64, cond: f64) -> Option<usize> {
         let eps = self.working_eps()?;
         let rho = cond.max(1.0) * eps;
         if !(rho < 0.25) {
+            return None;
+        }
+        if tol < REFINE_FLOOR_SAFETY * cond.max(1.0) * f64::EPSILON {
             return None;
         }
         let tol = tol.clamp(f64::MIN_POSITIVE, 0.5);
@@ -1210,12 +1237,12 @@ impl Predictor {
         });
         if let Some(k) = &key {
             if let Some((used, p, q)) = memo_lookup(k) {
-                return (used, (p, q));
+                return (used as usize, (p as usize, q as usize));
             }
         }
         let out = self.best_fabric_plan_replay(routine, n, nrhs, t);
         if let Some(k) = key {
-            memo_store(k, (out.0, out.1 .0, out.1 .1));
+            memo_store(k, (out.0 as u64, out.1 .0 as u64, out.1 .1 as u64));
         }
         out
     }
@@ -1266,12 +1293,12 @@ impl Predictor {
         });
         if let Some(k) = &key {
             if let Some((p, q, _)) = memo_lookup(k) {
-                return (p, q);
+                return (p as usize, q as usize);
             }
         }
         let out = self.best_grid_replay(routine, n, nrhs, t, ndev);
         if let Some(k) = key {
-            memo_store(k, (out.0, out.1, 0));
+            memo_store(k, (out.0 as u64, out.1 as u64, 0));
         }
         out
     }
@@ -1851,6 +1878,14 @@ mod tests {
         // κ·ε ≥ 0.25: refinement cannot be trusted to contract — refuse.
         assert_eq!(p.est_refine_iters(1e-10, 1e7), None);
         assert_eq!(p.est_refine_iters(1e-10, 1e12), None);
+        // Tolerance below the attainable f64 residual floor κ·ε_f64:
+        // the f32 contraction is fine, but the runtime would stall by
+        // construction — refuse so the queue never prices a guaranteed
+        // mixed-attempt + full-solve double makespan as the cheap tier.
+        assert_eq!(p.est_refine_iters(1e-15, 1e4), None);
+        // Just above the floor (4·κ·ε_f64 ≈ 8.9e-12 at κ=1e4) stays
+        // routable.
+        assert!(p.est_refine_iters(1e-11, 1e4).is_some());
         // Complex carries the same f32 working epsilon.
         let pc = Predictor::h200(8, DType::C128);
         assert_eq!(pc.est_refine_iters(1e-10, 1e3), Some(2));

@@ -934,7 +934,8 @@ impl<S: Scalar + MixedCapable> DistWork for DistReq<S> {
                         trace: (self.trace, self.root),
                         preempt: None,
                     };
-                    S::mixed_refine(&mrun, &dm, &self.a, b, refine_opts).map(|(x, _)| x)
+                    S::mixed_refine(&mrun, &dm, &self.a, b, refine_opts, !cache_hit)
+                        .map(|(x, _)| x)
                 })();
                 if trace.0 != 0 {
                     if let Some(snap) = ctx.timeline_snapshot() {

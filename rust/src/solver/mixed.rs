@@ -97,9 +97,11 @@ pub struct MixedReport {
     pub iters: usize,
     /// Final relative residual.
     pub residual: f64,
-    /// Modeled bytes the working dtype saved vs full precision: the
-    /// factor's storage/traffic plus each solve's RHS round trip, at
-    /// `size_of(hi) − size_of(lo)` per element.
+    /// Modeled bytes the working dtype saved vs full precision: each
+    /// solve's RHS round trip — plus the factor's storage/traffic when
+    /// this solve built the factor (cache-hit refines reuse a resident
+    /// one, so its n² term is credited only by the solve that factored)
+    /// — at `size_of(hi) − size_of(lo)` per element.
     pub bytes_saved: u64,
 }
 
@@ -195,8 +197,8 @@ fn factor_impl<S: Demote>(run: &MixedRun<'_>, a: &Matrix<S>) -> Result<DistMatri
 /// Charge one distributed residual GEMV: every device streams its
 /// full-precision shard of `A` once (BLAS-2, bandwidth-bound), then the
 /// updated iterate synchronizes node-wide from the root.
-fn charge_residual<S: Scalar>(
-    ctx: &Ctx<'_, impl Scalar>,
+fn charge_residual<S: Scalar, L: Scalar>(
+    ctx: &Ctx<'_, L>,
     layout: LayoutKind,
     n: usize,
     nrhs: usize,
@@ -217,12 +219,16 @@ fn charge_residual<S: Scalar>(
 /// resident working-dtype factor — also the path a mixed
 /// [`crate::coordinator::FactorCache`] hit takes (the factor is reused,
 /// the refinement still runs against the f64 right-hand side).
+/// `fresh_factor` records whether this solve built the factor: a
+/// cache hit reuses a resident one, so only the RHS round trips count
+/// toward `bytes_saved`, not the factor's n² term again.
 fn refine_impl<S: Demote>(
     run: &MixedRun<'_>,
     l: &DistMatrix<S::Lo>,
     a: &Matrix<S>,
     b: &Matrix<S>,
     opts: RefineOptions,
+    fresh_factor: bool,
 ) -> Result<(Matrix<S>, MixedReport)> {
     let n = a.rows();
     let nrhs = b.cols();
@@ -251,7 +257,7 @@ fn refine_impl<S: Demote>(
         // schedule-independent), charged as a distributed GEMV.
         let mut r = b.clone();
         dense_gemm_acc(&mut r, a, &x, -S::one());
-        charge_residual::<S>(&ctx, run.layout, n, nrhs)?;
+        charge_residual::<S, _>(&ctx, run.layout, n, nrhs)?;
         let res = r.norm_fro() / bnorm;
         run.decision(
             "refine",
@@ -275,8 +281,11 @@ fn refine_impl<S: Demote>(
 
     let esize_hi = std::mem::size_of::<S>() as u64;
     let esize_lo = std::mem::size_of::<<S as Demote>::Lo>() as u64;
-    let bytes_saved =
-        (esize_hi - esize_lo) * ((n * n) as u64 + (n * nrhs * (iters + 1)) as u64);
+    let mut saved_elems = (n * nrhs * (iters + 1)) as u64;
+    if fresh_factor {
+        saved_elems += (n * n) as u64;
+    }
+    let bytes_saved = (esize_hi - esize_lo) * saved_elems;
     let report = MixedReport { iters, residual, bytes_saved };
     let m = run.node.metrics();
     m.add_mixed_solve();
@@ -305,13 +314,16 @@ pub trait MixedCapable: Scalar {
     fn mixed_factor(run: &MixedRun<'_>, a: &Matrix<Self>) -> Result<DistMatrix<Self::Working>>;
 
     /// Solve + refine against full-precision `A`/`b` with a resident
-    /// working-dtype factor (the cache-hit path).
+    /// working-dtype factor. `fresh_factor` says whether this solve
+    /// built the factor (`false` on the cache-hit path, where the
+    /// report's `bytes_saved` must not re-credit the factor's n² term).
     fn mixed_refine(
         run: &MixedRun<'_>,
         l: &DistMatrix<Self::Working>,
         a: &Matrix<Self>,
         b: &Matrix<Self>,
         opts: RefineOptions,
+        fresh_factor: bool,
     ) -> Result<(Matrix<Self>, MixedReport)>;
 
     /// Factor, solve and refine in one call, freeing the factor.
@@ -322,7 +334,7 @@ pub trait MixedCapable: Scalar {
         opts: RefineOptions,
     ) -> Result<(Matrix<Self>, MixedReport)> {
         let l = Self::mixed_factor(run, a)?;
-        let out = Self::mixed_refine(run, &l, a, b, opts);
+        let out = Self::mixed_refine(run, &l, a, b, opts, true);
         l.free()?;
         out
     }
@@ -357,6 +369,7 @@ macro_rules! impl_mixed_incapable {
                 _a: &Matrix<Self>,
                 _b: &Matrix<Self>,
                 _opts: RefineOptions,
+                _fresh_factor: bool,
             ) -> Result<(Matrix<Self>, MixedReport)> {
                 Err(Error::config(concat!(
                     "mixed precision has no working dtype narrower than ",
@@ -390,8 +403,9 @@ macro_rules! impl_mixed_capable {
                 a: &Matrix<Self>,
                 b: &Matrix<Self>,
                 opts: RefineOptions,
+                fresh_factor: bool,
             ) -> Result<(Matrix<Self>, MixedReport)> {
-                refine_impl::<$t>(run, l, a, b, opts)
+                refine_impl::<$t>(run, l, a, b, opts, fresh_factor)
             }
         }
     };
@@ -480,6 +494,27 @@ mod tests {
         dense_gemm_acc(&mut r, &a, &x, -1.0);
         assert!(r.norm_fro() / b.norm_fro() <= opts.tol);
         assert_eq!(node.metrics().snapshot().mixed_solves, 1);
+    }
+
+    #[test]
+    fn cache_hit_refine_does_not_recredit_factor_bytes() {
+        let node = node4();
+        let model = GpuCostModel::h200();
+        let n = 48;
+        let a = Matrix::<f64>::spd_random_cond(n, 21, 1e3);
+        let b = Matrix::<f64>::random(n, 2, 22);
+        let run = MixedRun::new(&node, &model, PipelineConfig::barrier(), lay1d(n, 8, 4));
+        let opts = RefineOptions { tol: 1e-10, max_iters: 20 };
+        let l = f64::mixed_factor(&run, &a).unwrap();
+        let (_, fresh) = f64::mixed_refine(&run, &l, &a, &b, opts, true).unwrap();
+        let (_, hit) = f64::mixed_refine(&run, &l, &a, &b, opts, false).unwrap();
+        l.free().unwrap();
+        // Identical refinement either way; the hit just drops the
+        // factor's n² credit (4 bytes/elem saved at f64→f32).
+        assert_eq!(hit.iters, fresh.iters);
+        let factor_term = 4 * (n * n) as u64;
+        assert_eq!(fresh.bytes_saved, hit.bytes_saved + factor_term);
+        assert!(hit.bytes_saved > 0, "RHS round trips still count on a hit");
     }
 
     #[test]

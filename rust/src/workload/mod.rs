@@ -450,9 +450,10 @@ impl Population {
     ///
     /// * **convergence** — well-conditioned f64 and c128 systems whose
     ///   refinement meets the requested tolerance in a few iterations;
-    /// * **the iteration cap** — a system whose *declared* κ budget
-    ///   prices a handful of iterations but whose tolerance sits below
-    ///   the f64 residual floor `κ·ε`, so the refinement plateaus and
+    /// * **the iteration cap** — a tolerance below the f64 residual
+    ///   floor `κ·ε_f64`: the router declines it up front (a guaranteed
+    ///   stall is never priced as the cheap tier), and when the mixed
+    ///   tier is *forced* at the solver layer the refinement plateaus,
     ///   trips the stall check → typed full-precision fallback;
     /// * **the routing decline** — a κ budget beyond the f32 headroom
     ///   (`κ·ε_f32 ≥ 1/4`), which the router prices as un-refinable
@@ -485,9 +486,11 @@ impl Population {
             ),
             // Converging complex128 refinement.
             (0.20, prec(128, 1, DType::C128, 1e-8, 1e2, SloClass::Standard, None, 2)),
-            // Stall bait: tolerance below the f64 floor κ·ε ≈ 2e-12 —
-            // refinement plateaus, the cap/stall check fires, and the
-            // request recovers through the full-precision fallback.
+            // Floor bait: tolerance below the f64 floor κ·ε_f64 ≈
+            // 2e-12. The router declines it (routed Full through the
+            // service); forced Mixed at the solver layer (the tests
+            // below) it plateaus, trips the cap/stall check, and
+            // recovers through the typed full-precision fallback.
             (0.15, prec(96, 1, DType::F64, 1e-15, 1e4, SloClass::Standard, None, 2)),
             // Router decline: κ=1e9 blows the f32 headroom, so the
             // planner keeps this Full regardless of the predicted win.
